@@ -1,0 +1,172 @@
+//! Custom-data campaign: user CSV + random search + ablation slices.
+//!
+//! The paper claims Memento is "compatible with any type of machine-learning
+//! pipeline". This example brings your *own* data (a CSV generated here to
+//! stand in for one) and the beyond-grid sweep helpers:
+//!
+//! 1. load a CSV dataset (`ml::io`) with missing cells and string labels,
+//! 2. define a 2×3×7-combination matrix over it,
+//! 3. run a seeded **random subset** (random search) of the grid,
+//! 4. run an **ablation slice** (imputer pinned) of the same matrix,
+//! 5. compare against the full grid — all three share one result cache, so
+//!    the full run re-executes only the combinations the subset missed.
+//!
+//! Run: `cargo run --release --example custom_data`
+
+use memento::config::sweep;
+use memento::coordinator::memento::Memento;
+use memento::coordinator::results::ResultSet;
+use memento::prelude::*;
+use memento::util::rng::Rng;
+use std::sync::Arc;
+
+fn write_csv(path: &std::path::Path) {
+    // A 300-row, 6-feature, 3-class dataset with 2% missing cells.
+    let mut rng = Rng::new(2024);
+    let mut text = String::from("f0,f1,f2,f3,f4,f5,species\n");
+    let names = ["setosa", "versicolor", "virginica"];
+    for i in 0..300 {
+        let c = i % 3;
+        for f in 0..6 {
+            if rng.bool(0.02) {
+                text.push_str("NA,");
+            } else {
+                let mean = (c as f64 - 1.0) * 2.0 * ((f % 3) as f64 + 0.5);
+                text.push_str(&format!("{:.3},", mean + rng.normal()));
+            }
+        }
+        text.push_str(names[c]);
+        text.push('\n');
+    }
+    memento::util::fs::atomic_write(path, text.as_bytes()).unwrap();
+}
+
+fn main() -> Result<(), MementoError> {
+    let dir = std::path::PathBuf::from("target/custom_data");
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    let csv_path = dir.join("species.csv");
+    write_csv(&csv_path);
+
+    let matrix = ConfigMatrix::builder()
+        .param(
+            "feature_engineering",
+            vec![pv_str("DummyImputer"), pv_str("SimpleImputer")],
+        )
+        .param(
+            "preprocessing",
+            vec![
+                pv_str("DummyPreprocessor"),
+                pv_str("MinMaxScaler"),
+                pv_str("StandardScaler"),
+            ],
+        )
+        .param(
+            "model",
+            memento::ml::pipeline::MODEL_NAMES.iter().map(|n| pv_str(*n)).collect(),
+        )
+        .setting("n_fold", Json::int(3))
+        .setting("csv", Json::str(csv_path.to_string_lossy()))
+        .build()?;
+    println!(
+        "matrix: {} combinations over {} model families",
+        matrix.raw_count(),
+        memento::ml::pipeline::MODEL_NAMES.len()
+    );
+
+    let exp = |ctx: &TaskContext| -> Result<Json, MementoError> {
+        let csv = ctx
+            .setting("csv")
+            .and_then(|j| j.as_str())
+            .ok_or_else(|| MementoError::experiment("missing csv setting"))?;
+        let ds = memento::ml::io::dataset_from_csv_file(std::path::Path::new(csv), true)
+            .map_err(|e| MementoError::experiment(e.to_string()))?;
+        let scores = memento::ml::pipeline::cross_validate_named(
+            &ds,
+            ctx.param_str("feature_engineering")?,
+            ctx.param_str("preprocessing")?,
+            ctx.param_str("model")?,
+            ctx.setting_i64("n_fold", 3) as usize,
+            &mut Rng::new(ctx.seed),
+        )
+        .map_err(|e| MementoError::experiment(e.to_string()))?;
+        Ok(Json::obj(vec![
+            ("accuracy", Json::Num(scores.mean_accuracy)),
+            ("macro_f1", Json::Num(scores.mean_macro_f1)),
+        ]))
+    };
+
+    let cache = Arc::new(
+        memento::coordinator::cache::ResultCache::open(dir.join("cache")).unwrap(),
+    );
+    let runner = |label: &str, tasks: Vec<memento::coordinator::task::TaskSpec>| {
+        // run_tasks via a single-use matrix isn't needed — Memento::run
+        // expands matrices; for explicit task lists we use the scheduler
+        // through a filtered matrix: here we emulate by running the full
+        // facade on an overridden matrix when possible. For subsets, the
+        // cache makes re-execution of already-done combos free anyway, so
+        // we simply report what the subset *would* run.
+        println!("{label}: {} tasks", tasks.len());
+        tasks
+    };
+
+    // --- random search: 12 of 42 combinations ---------------------------
+    let subset = sweep::random_subset(&matrix, 12, 7);
+    runner("random search (seeded)", subset.clone());
+    // Execute the subset by pinning: run the full matrix but with a cache —
+    // first do the subset via per-task matrices.
+    let m_sub = Memento::new(exp).workers(4).seed(3).with_cache(Arc::clone(&cache));
+    let mut subset_outcomes = Vec::new();
+    for t in &subset {
+        let mini = ConfigMatrix {
+            parameters: t
+                .params
+                .iter()
+                .map(|(k, v)| (k.clone(), vec![v.clone()]))
+                .collect(),
+            settings: matrix.settings.clone(),
+            exclude: vec![],
+        };
+        let r = m_sub.run(&mini)?;
+        subset_outcomes.extend(r.outcomes().to_vec());
+    }
+    let subset_rs = ResultSet::new(subset_outcomes);
+    let best = subset_rs
+        .successes()
+        .max_by(|a, b| a.metric("accuracy").partial_cmp(&b.metric("accuracy")).unwrap())
+        .unwrap();
+    println!(
+        "random-search best: {} → {:.4}\n",
+        best.spec.label(),
+        best.metric("accuracy").unwrap()
+    );
+
+    // --- ablation slice: SimpleImputer pinned ----------------------------
+    let slice = sweep::with_overrides(&matrix, &[("feature_engineering", pv_str("SimpleImputer"))])?;
+    let r_slice = Memento::new(exp)
+        .workers(4)
+        .seed(3)
+        .with_cache(Arc::clone(&cache))
+        .run(&slice)?;
+    println!(
+        "ablation slice (SimpleImputer): {} tasks, {} from cache",
+        r_slice.len(),
+        r_slice.n_cached()
+    );
+    println!("{}", r_slice.pivot("model", "preprocessing", "accuracy").render());
+
+    // --- full grid: cache makes the overlap free -------------------------
+    let r_full = Memento::new(exp)
+        .workers(4)
+        .seed(3)
+        .with_cache(Arc::clone(&cache))
+        .run(&matrix)?;
+    println!(
+        "full grid: {} tasks, {} restored from cache (subset + slice overlap)",
+        r_full.len(),
+        r_full.n_cached()
+    );
+    println!("{}", r_full.pivot("model", "feature_engineering", "accuracy").render());
+    println!("{}", r_full.summary());
+    Ok(())
+}

@@ -1,0 +1,133 @@
+//! Hyperparameter sweep over the AOT MLP (heavy L2/L1 exercise).
+//!
+//! A 3×3×2 = 18-task sweep of (learning rate × epochs × dataset) where
+//! every task trains the PJRT-backed MLP — the Pallas dense kernel runs on
+//! every forward and backward step of every task, from multiple Memento
+//! workers concurrently. Reports the best configuration per dataset and
+//! train-step throughput.
+//!
+//! Run: `make artifacts && cargo run --release --example hyperparam_sweep`
+
+use memento::coordinator::memento::Memento;
+use memento::ml::impute::{SimpleImputer, Transformer};
+use memento::ml::metrics::accuracy;
+use memento::ml::scale::StandardScaler;
+use memento::ml::split::train_test_indices;
+use memento::prelude::*;
+use memento::runtime::artifact::shared_store;
+use memento::runtime::mlp::{MlpModel, MlpParams};
+use memento::util::rng::Rng;
+use std::sync::Arc;
+
+fn main() -> Result<(), MementoError> {
+    let store = shared_store().map_err(|e| {
+        MementoError::runtime(format!("{e}\nhint: run `make artifacts` first"))
+    })?;
+    println!(
+        "artifacts: {:?} (batch={}, features={}, hidden={}, classes={})",
+        store.names(),
+        store.meta.batch,
+        store.meta.features,
+        store.meta.hidden,
+        store.meta.classes
+    );
+
+    let matrix = ConfigMatrix::builder()
+        .param("lr", vec![pv_f64(0.02), pv_f64(0.1), pv_f64(0.3)])
+        .param("epochs", vec![pv_int(10), pv_int(25), pv_int(50)])
+        .param("dataset", vec![pv_str("wine"), pv_str("breast_cancer")])
+        .setting("test_frac", Json::Num(0.3))
+        .build()?;
+
+    let exp_store = Arc::clone(&store);
+    let exp = move |ctx: &TaskContext| -> Result<Json, MementoError> {
+        let mut ds = memento::ml::dataset::load_by_name(ctx.param_str("dataset")?, 0)
+            .ok_or_else(|| MementoError::experiment("unknown dataset"))?;
+        SimpleImputer::default().fit_transform(&mut ds);
+        StandardScaler::default().fit_transform(&mut ds);
+
+        let mut rng = Rng::new(ctx.seed);
+        let test_frac = ctx.setting_f64("test_frac", 0.3);
+        let (tr, te) = train_test_indices(&ds, test_frac, &mut rng);
+        let train = ds.subset(&tr);
+        let test = ds.subset(&te);
+
+        let params = MlpParams {
+            epochs: ctx.param_i64("epochs")? as usize,
+            lr: ctx.param_f64("lr")? as f32,
+        };
+        let epochs = params.epochs;
+        let mut mlp = MlpModel::new(Arc::clone(&exp_store), params);
+        let t0 = std::time::Instant::now();
+        let history = mlp.fit_with_history(&train, &mut rng)?;
+        let train_secs = t0.elapsed().as_secs_f64();
+        let steps = epochs * train.n_rows.div_ceil(exp_store.meta.batch);
+        let preds = mlp.try_predict(&test)?;
+
+        Ok(Json::obj(vec![
+            ("accuracy", Json::Num(accuracy(&test.y, &preds))),
+            ("final_loss", Json::Num(history.last().copied().unwrap_or(f32::NAN) as f64)),
+            ("first_loss", Json::Num(history.first().copied().unwrap_or(f32::NAN) as f64)),
+            ("steps_per_sec", Json::Num(steps as f64 / train_secs.max(1e-9))),
+        ]))
+    };
+
+    let m = Memento::new(exp)
+        .workers(4)
+        .seed(11)
+        .with_cache_dir("target/hyperparam_sweep/cache")
+        .with_notifier(Box::new(ConsoleNotificationProvider));
+    let results = m.run(&matrix)?;
+
+    println!("\n=== accuracy by (lr × epochs), wine ===");
+    let wine: Vec<_> = results.filter(&[("dataset", pv_str("wine"))]);
+    print_grid(&wine);
+    println!("\n=== accuracy by (lr × epochs), breast_cancer ===");
+    let bc: Vec<_> = results.filter(&[("dataset", pv_str("breast_cancer"))]);
+    print_grid(&bc);
+
+    for ds_name in ["wine", "breast_cancer"] {
+        let best = results
+            .filter(&[("dataset", pv_str(ds_name))])
+            .into_iter()
+            .filter(|o| o.succeeded())
+            .max_by(|a, b| {
+                a.metric("accuracy")
+                    .partial_cmp(&b.metric("accuracy"))
+                    .unwrap()
+            });
+        if let Some(best) = best {
+            println!(
+                "best {ds_name}: {} → accuracy {:.4}",
+                best.spec.label(),
+                best.metric("accuracy").unwrap()
+            );
+        }
+    }
+    let mean_throughput: f64 = results
+        .successes()
+        .filter_map(|o| o.metric("steps_per_sec"))
+        .sum::<f64>()
+        / results.successes().count().max(1) as f64;
+    println!("\nmean PJRT train-step throughput per task: {mean_throughput:.0} steps/s");
+    println!("{}", results.summary());
+    Ok(())
+}
+
+fn print_grid(outcomes: &[&memento::coordinator::results::TaskOutcome]) {
+    let mut rows: Vec<(f64, i64, f64)> = outcomes
+        .iter()
+        .filter_map(|o| {
+            Some((
+                o.spec.get("lr")?.as_f64()?,
+                o.spec.get("epochs")?.as_i64()?,
+                o.metric("accuracy")?,
+            ))
+        })
+        .collect();
+    rows.sort_by(|a, b| (a.0, a.1).partial_cmp(&(b.0, b.1)).unwrap());
+    println!("{:>6} {:>7} {:>9}", "lr", "epochs", "accuracy");
+    for (lr, ep, acc) in rows {
+        println!("{lr:>6} {ep:>7} {acc:>9.4}");
+    }
+}

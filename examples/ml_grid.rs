@@ -1,0 +1,105 @@
+//! End-to-end driver (E7): the full §3 grid, extended with the AOT MLP.
+//!
+//! Exercises all three layers on a real workload:
+//!   L3 — the Memento coordinator expands 3 datasets × 2 imputers × 3
+//!        preprocessors × 4 models = 72 combinations − 12 excluded = 60
+//!        tasks and runs them across all cores with caching, checkpointing,
+//!        and notifications;
+//!   L2 — the `MLP` model family executes the JAX-lowered `mlp_train_step`
+//!        / `mlp_predict` HLO through PJRT;
+//!   L1 — those artifacts contain the Pallas fused-dense kernel on both the
+//!        forward and backward paths.
+//!
+//! Prints the per-(dataset × model) accuracy grid, wallclock, and the
+//! sequential-vs-parallel comparison recorded in EXPERIMENTS.md E7.
+//!
+//! Run: `make artifacts && cargo run --release --example ml_grid`
+//! Flags: --workers N, --skip-mlp, --quick (3-fold, fewer tasks)
+
+use memento::coordinator::notify::ConsoleNotificationProvider;
+use memento::coordinator::memento::Memento;
+use memento::experiments::grid;
+use memento::runtime::artifact::shared_store;
+use memento::util::cli::CliSpec;
+use memento::util::time::Stopwatch;
+use std::time::Duration;
+
+fn main() {
+    let spec = CliSpec::new("ml_grid", "the §3 demonstration grid, end to end")
+        .opt("workers", "0", "worker threads (0 = all cores)")
+        .flag("skip-mlp", "run the 45-task paper grid without the AOT MLP")
+        .flag("quick", "toy-dataset variant (fast smoke run)");
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let a = match spec.parse(&args) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("{e}");
+            std::process::exit(2);
+        }
+    };
+
+    let (matrix, store) = if a.flag("quick") {
+        (grid::toy_matrix(), None)
+    } else if a.flag("skip-mlp") {
+        (grid::paper_matrix(), None)
+    } else {
+        match shared_store() {
+            Ok(s) => (grid::extended_matrix(), Some(s)),
+            Err(e) => {
+                eprintln!("cannot open artifacts ({e}); falling back to --skip-mlp");
+                (grid::paper_matrix(), None)
+            }
+        }
+    };
+
+    let raw = matrix.raw_count();
+    let tasks = memento::coordinator::expand::count_included(&matrix);
+    println!("config matrix: {raw} raw combinations, {} excluded, {tasks} tasks", raw - tasks);
+
+    let workers = match a.get_usize("workers") {
+        Ok(0) | Err(_) => memento::util::pool::num_cpus(),
+        Ok(n) => n,
+    };
+    println!("workers: {workers}\n");
+
+    let m = Memento::new(grid::grid_exp_fn(store))
+        .workers(workers)
+        .seed(0)
+        .with_cache_dir("target/ml_grid/cache")
+        .with_checkpoint_dir("target/ml_grid/run")
+        .with_notifier(Box::new(ConsoleNotificationProvider))
+        .progress_every(Duration::from_secs(2));
+    let metrics = m.metrics();
+
+    let sw = Stopwatch::start();
+    let results = match m.run(&matrix) {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("run failed: {e}");
+            std::process::exit(1);
+        }
+    };
+    let wall = sw.elapsed_secs();
+
+    println!("\n=== E7: accuracy grid (mean over 5-fold CV) ===");
+    println!("{}", results.pivot("dataset", "model", "accuracy").render());
+    println!("=== macro-F1 ===");
+    println!("{}", results.pivot("dataset", "model", "macro_f1").render());
+
+    for f in results.failures() {
+        if let Some(fail) = &f.failure {
+            println!("FAILED: {}", fail.summary());
+        }
+    }
+
+    let exec_total: f64 = results.iter().map(|o| o.duration_secs).sum();
+    println!("{}", results.summary());
+    print!("{}", metrics.render(wall));
+    println!(
+        "\nparallel efficiency: cumulative exec {:.1}s / (wall {:.1}s × {workers} workers) = {:.0}%",
+        exec_total,
+        wall,
+        100.0 * exec_total / (wall * workers as f64)
+    );
+    println!("(re-run this binary to see the warm-cache path: all tasks restore instantly)");
+}

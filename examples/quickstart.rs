@@ -1,0 +1,50 @@
+//! Quickstart: the paper's §3 workflow in ~40 lines.
+//!
+//! 1. define a configuration matrix,
+//! 2. define an experiment function,
+//! 3. `Memento::new(exp_func).run(&matrix)` — parallel execution, caching,
+//!    and notifications included.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use memento::prelude::*;
+
+fn main() -> Result<(), MementoError> {
+    // 1. The configuration matrix: 2 × 3 = 6 experiments, one excluded.
+    let matrix = ConfigMatrix::builder()
+        .param("dataset", vec![pv_str("toy"), pv_str("wine")])
+        .param(
+            "model",
+            vec![pv_str("SVC"), pv_str("RandomForest"), pv_str("AdaBoost")],
+        )
+        .setting("n_fold", Json::int(3))
+        .exclude(vec![("dataset", pv_str("wine")), ("model", pv_str("AdaBoost"))])
+        .build()?;
+
+    // 2. The experiment function: k-fold CV of a named model on a dataset.
+    let exp_func = |ctx: &TaskContext| -> Result<Json, MementoError> {
+        let dataset = memento::ml::dataset::load_by_name(ctx.param_str("dataset")?, 0)
+            .ok_or_else(|| MementoError::experiment("unknown dataset"))?;
+        let scores = memento::ml::pipeline::cross_validate_named(
+            &dataset,
+            "SimpleImputer",
+            "StandardScaler",
+            ctx.param_str("model")?,
+            ctx.setting_i64("n_fold", 3) as usize,
+            &mut memento::util::rng::Rng::new(ctx.seed),
+        )
+        .map_err(|e| MementoError::experiment(e.to_string()))?;
+        Ok(Json::obj(vec![("accuracy", Json::Num(scores.mean_accuracy))]))
+    };
+
+    // 3. Run it: parallel, cached, with console notifications.
+    let results = Memento::new(exp_func)
+        .workers(4)
+        .with_cache_dir("target/quickstart-cache")
+        .with_notifier(Box::new(ConsoleNotificationProvider))
+        .run(&matrix)?;
+
+    println!("\n{}", results.pivot("dataset", "model", "accuracy").render());
+    println!("{}", results.summary());
+    Ok(())
+}

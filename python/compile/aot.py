@@ -1,0 +1,101 @@
+"""AOT lowering: JAX → HLO **text** artifacts for the Rust runtime.
+
+HLO text — not serialized HloModuleProto — is the interchange format: the
+image's xla_extension 0.5.1 rejects jax≥0.5 protos (64-bit instruction
+ids), while the text parser reassigns ids and round-trips cleanly. See
+/opt/xla-example/README.md.
+
+Outputs (under --out-dir, default ../artifacts):
+    mlp_train_step.hlo.txt   one SGD minibatch step
+    mlp_predict.hlo.txt      masked logits
+    manifest.json            shapes/dtypes/ordering for the Rust loader
+
+Run via `make artifacts`; a no-op when outputs are newer than inputs
+(handled by make). Python never runs after this step.
+"""
+
+import argparse
+import hashlib
+import json
+import pathlib
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (return_tuple for rust)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(name, shape):
+    return {"name": name, "shape": list(shape), "dtype": "f32"}
+
+
+def build_manifest() -> dict:
+    b, f, h, c = model.BATCH, model.FEATURES, model.HIDDEN, model.CLASSES
+    param_specs = [
+        _spec("w1", (f, h)),
+        _spec("b1", (h,)),
+        _spec("w2", (h, c)),
+        _spec("b2", (c,)),
+    ]
+    return {
+        "meta": {"batch": b, "features": f, "hidden": h, "classes": c},
+        "artifacts": {
+            "mlp_train_step": {
+                "file": "mlp_train_step.hlo.txt",
+                "inputs": param_specs
+                + [
+                    _spec("x", (b, f)),
+                    _spec("y_onehot", (b, c)),
+                    _spec("class_mask", (c,)),
+                    _spec("lr", ()),
+                ],
+                "outputs": param_specs + [_spec("loss", ())],
+            },
+            "mlp_predict": {
+                "file": "mlp_predict.hlo.txt",
+                "inputs": param_specs
+                + [_spec("x", (b, f)), _spec("class_mask", (c,))],
+                "outputs": [_spec("logits", (b, c))],
+            },
+        },
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts", help="artifact directory")
+    args = ap.parse_args()
+    out_dir = pathlib.Path(args.out_dir)
+    out_dir.mkdir(parents=True, exist_ok=True)
+
+    jobs = {
+        "mlp_train_step.hlo.txt": (model.train_step, model.example_args()),
+        "mlp_predict.hlo.txt": (model.predict, model.example_predict_args()),
+    }
+    manifest = build_manifest()
+    for fname, (fn, spec_args) in jobs.items():
+        lowered = jax.jit(fn).lower(*spec_args)
+        text = to_hlo_text(lowered)
+        path = out_dir / fname
+        path.write_text(text)
+        digest = hashlib.sha256(text.encode()).hexdigest()[:16]
+        print(f"wrote {path} ({len(text)} chars, sha256 {digest})")
+        # record the digest so the rust runtime can detect stale artifacts
+        key = fname.replace(".hlo.txt", "")
+        manifest["artifacts"][key]["sha256_16"] = digest
+
+    (out_dir / "manifest.json").write_text(json.dumps(manifest, indent=2) + "\n")
+    print(f"wrote {out_dir / 'manifest.json'}")
+
+
+if __name__ == "__main__":
+    main()

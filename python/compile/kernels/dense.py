@@ -1,0 +1,131 @@
+"""Layer 1 — Pallas fused dense kernel.
+
+The experiment MLP's hot-spot is the dense layer (both layers of the MLP,
+forward and backward). It is written as a tiled Pallas matmul with fused
+bias + optional ReLU, plus a `custom_vjp` wrapper so the backward pass runs
+through the same Pallas matmul kernel (dx = g·Wᵀ, dW = xᵀ·g).
+
+TPU mapping (see DESIGN.md §Hardware-Adaptation): the grid tiles the output
+over (M/bm × N/bn) blocks; each program loads an (bm × K) strip of `x` and a
+(K × bn) strip of `w` into VMEM via BlockSpec and issues one MXU-shaped
+`jnp.dot` with f32 accumulation. With bm = bn = 128 and K ≤ 512, resident
+VMEM is ≤ (128·512 + 512·128 + 128·128)·4 B ≈ 580 KiB ≪ 16 MiB, leaving
+room for double-buffering. `interpret=True` everywhere: the CPU PJRT plugin
+cannot execute Mosaic custom-calls, so interpret mode is the correctness
+(and AOT-lowering) path; real-TPU efficiency is estimated from the BlockSpec
+in EXPERIMENTS.md §Perf-L1.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default output tile. 128 matches both the MXU systolic array edge and the
+# lane width; small shapes fall back to the full dimension.
+BLOCK_M = 128
+BLOCK_N = 128
+
+
+def _matmul_kernel(x_ref, w_ref, o_ref):
+    """One (bm × bn) output tile: full-K contraction on the MXU."""
+    o_ref[...] = jnp.dot(
+        x_ref[...], w_ref[...], preferred_element_type=jnp.float32
+    ).astype(o_ref.dtype)
+
+
+def _bias_act_matmul_kernel(x_ref, w_ref, b_ref, o_ref, *, activation):
+    """Fused tile: matmul + bias broadcast + optional ReLU, one VMEM pass."""
+    acc = jnp.dot(x_ref[...], w_ref[...], preferred_element_type=jnp.float32)
+    acc = acc + b_ref[...].astype(jnp.float32)[None, :]
+    if activation == "relu":
+        acc = jnp.maximum(acc, 0.0)
+    o_ref[...] = acc.astype(o_ref.dtype)
+
+
+def _tile(dim, block):
+    """Largest tile ≤ block that divides dim (dim is padded by callers to
+    make this non-degenerate for the shapes we AOT)."""
+    if dim <= block:
+        return dim
+    t = block
+    while dim % t != 0:
+        t -= 1
+    return t
+
+
+@functools.partial(jax.jit, static_argnames=("block_m", "block_n"))
+def matmul_pallas(x, w, *, block_m=BLOCK_M, block_n=BLOCK_N):
+    """Tiled Pallas matmul: (M × K) @ (K × N) → (M × N)."""
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2, f"contraction mismatch {k} vs {k2}"
+    bm, bn = _tile(m, block_m), _tile(n, block_n)
+    grid = (m // bm, n // bn)
+    return pl.pallas_call(
+        _matmul_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((k, bn), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), x.dtype),
+        interpret=True,
+    )(x, w)
+
+
+@functools.partial(jax.jit, static_argnames=("activation", "block_m", "block_n"))
+def dense_fused(x, w, b, *, activation="none", block_m=BLOCK_M, block_n=BLOCK_N):
+    """Fused dense forward: act(x @ w + b), one Pallas pass."""
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2 and b.shape == (n,)
+    bm, bn = _tile(m, block_m), _tile(n, block_n)
+    grid = (m // bm, n // bn)
+    kernel = functools.partial(_bias_act_matmul_kernel, activation=activation)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((k, bn), lambda i, j: (0, j)),
+            pl.BlockSpec((bn,), lambda i, j: (j,)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), x.dtype),
+        interpret=True,
+    )(x, w, b)
+
+
+# ---------------------------------------------------------------------------
+# custom_vjp dense layer: Pallas forward AND Pallas backward.
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3,))
+def dense(x, w, b, activation="none"):
+    """Differentiable fused dense layer (Pallas fwd + Pallas bwd)."""
+    return dense_fused(x, w, b, activation=activation)
+
+
+def _dense_fwd(x, w, b, activation):
+    out = dense_fused(x, w, b, activation=activation)
+    # Save `out` rather than pre-activation: for ReLU, (out > 0) is the mask.
+    return out, (x, w, out)
+
+
+def _dense_bwd(activation, res, g):
+    x, w, out = res
+    if activation == "relu":
+        g = g * (out > 0).astype(g.dtype)
+    # dx = g @ wᵀ ; dw = xᵀ @ g ; db = Σ_batch g — matmuls via the Pallas
+    # kernel so the backward hot path exercises L1 too.
+    dx = matmul_pallas(g, w.T)
+    dw = matmul_pallas(x.T, g)
+    db = jnp.sum(g, axis=0)
+    return dx, dw, db
+
+
+dense.defvjp(_dense_fwd, _dense_bwd)

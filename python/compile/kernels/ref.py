@@ -1,0 +1,25 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+Every Pallas kernel in this package has a reference implementation here;
+`python/tests/test_kernel.py` sweeps shapes/dtypes and asserts allclose
+between the two. The references are also used by `test_model.py` to verify
+the custom-VJP dense layer differentiates identically to plain jnp.
+"""
+
+import jax.numpy as jnp
+
+
+def matmul_ref(x, w):
+    """Plain matmul with f32 accumulation."""
+    return jnp.matmul(x, w, preferred_element_type=jnp.float32).astype(x.dtype)
+
+
+def dense_ref(x, w, b, activation="none"):
+    """Reference dense layer: x @ w + b with optional ReLU."""
+    out = jnp.matmul(x, w, preferred_element_type=jnp.float32) + b.astype(jnp.float32)
+    out = out.astype(x.dtype)
+    if activation == "relu":
+        out = jnp.maximum(out, 0)
+    elif activation != "none":
+        raise ValueError(f"unknown activation {activation!r}")
+    return out

@@ -1,0 +1,115 @@
+"""Layer 1 — fused masked softmax cross-entropy Pallas kernel.
+
+The MLP's loss is -mean(sum(y_onehot * log_softmax(logits))). Computing it
+naively materializes log-probabilities in HBM; this kernel fuses max /
+exp-sum / dot into one VMEM pass per batch tile, emitting only the per-row
+loss. The backward pass (softmax(logits) - y) / B is likewise one fused
+Pallas pass.
+
+Numerically stable: row max is subtracted before exponentiation. Masked
+class slots arrive as -1e9 logits from the model, so they vanish from both
+the normalizer (exp(-1e9 - max) == 0) and the gradient.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK_B = 128
+
+
+def _tile(dim, block):
+    if dim <= block:
+        return dim
+    t = block
+    while dim % t != 0:
+        t -= 1
+    return t
+
+
+def _xent_fwd_kernel(logits_ref, y_ref, loss_ref):
+    """Per-row CE loss for one batch tile (full class dim resident)."""
+    logits = logits_ref[...].astype(jnp.float32)
+    y = y_ref[...].astype(jnp.float32)
+    m = jnp.max(logits, axis=-1, keepdims=True)
+    shifted = logits - m
+    lse = jnp.log(jnp.sum(jnp.exp(shifted), axis=-1, keepdims=True))
+    logp = shifted - lse
+    loss_ref[...] = -jnp.sum(y * logp, axis=-1).astype(loss_ref.dtype)
+
+
+def _xent_bwd_kernel(logits_ref, y_ref, g_ref, dlogits_ref):
+    """d/dlogits of g·mean-CE for one tile: g * (softmax - y) (scaled by
+    1/B outside via g)."""
+    logits = logits_ref[...].astype(jnp.float32)
+    y = y_ref[...].astype(jnp.float32)
+    m = jnp.max(logits, axis=-1, keepdims=True)
+    e = jnp.exp(logits - m)
+    p = e / jnp.sum(e, axis=-1, keepdims=True)
+    dlogits_ref[...] = (g_ref[...].astype(jnp.float32)[:, None] * (p - y)).astype(
+        dlogits_ref.dtype
+    )
+
+
+@jax.jit
+def _per_row_loss(logits, y_onehot):
+    b, c = logits.shape
+    bb = _tile(b, BLOCK_B)
+    return pl.pallas_call(
+        _xent_fwd_kernel,
+        grid=(b // bb,),
+        in_specs=[
+            pl.BlockSpec((bb, c), lambda i: (i, 0)),
+            pl.BlockSpec((bb, c), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((bb,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((b,), jnp.float32),
+        interpret=True,
+    )(logits, y_onehot)
+
+
+@jax.jit
+def _per_row_grad(logits, y_onehot, g_rows):
+    b, c = logits.shape
+    bb = _tile(b, BLOCK_B)
+    return pl.pallas_call(
+        _xent_bwd_kernel,
+        grid=(b // bb,),
+        in_specs=[
+            pl.BlockSpec((bb, c), lambda i: (i, 0)),
+            pl.BlockSpec((bb, c), lambda i: (i, 0)),
+            pl.BlockSpec((bb,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((bb, c), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, c), logits.dtype),
+        interpret=True,
+    )(logits, y_onehot, g_rows)
+
+
+@jax.custom_vjp
+def softmax_xent_mean(logits, y_onehot):
+    """Mean softmax cross-entropy over the batch (fused Pallas fwd + bwd)."""
+    return jnp.mean(_per_row_loss(logits, y_onehot))
+
+
+def _fwd(logits, y_onehot):
+    return softmax_xent_mean(logits, y_onehot), (logits, y_onehot)
+
+
+def _bwd(res, g):
+    logits, y_onehot = res
+    b = logits.shape[0]
+    g_rows = jnp.full((b,), g / b, dtype=jnp.float32)
+    return _per_row_grad(logits, y_onehot, g_rows), None
+
+
+softmax_xent_mean.defvjp(_fwd, _bwd)
+
+
+@functools.partial(jax.jit, static_argnames=())
+def softmax_xent_mean_ref(logits, y_onehot):
+    """Pure-jnp oracle (also used by tests)."""
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    return -jnp.mean(jnp.sum(y_onehot * logp, axis=-1))

@@ -1,0 +1,107 @@
+"""Layer 2 — the experiment MLP in JAX, built on the Pallas dense kernel.
+
+One fixed-shape MLP serves every dataset in the §3 grid: features are
+zero-padded to `FEATURES`, labels one-hot into `CLASSES` slots, and a
+`class_mask` input marks which class slots are real (wine uses 3 of 10,
+breast_cancer 2 of 10). Masked logits are driven to -1e9 before softmax, so
+the padded classes receive ~zero probability and zero gradient.
+
+The two functions AOT-exported by `aot.py`:
+
+- ``train_step(w1, b1, w2, b2, x, y_onehot, class_mask, lr)``
+    → ``(w1', b1', w2', b2', loss)`` — one SGD minibatch step;
+- ``predict(w1, b1, w2, b2, x, class_mask)``
+    → ``logits`` — masked logits, argmax taken on the Rust side.
+
+Parameters are plain arrays (not a pytree) so the Rust runtime can pass
+them positionally without pytree knowledge.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.dense import dense
+from .kernels.softmax_xent import softmax_xent_mean
+
+# AOT-fixed shapes shared with the Rust runtime via artifacts/manifest.json.
+BATCH = 128
+FEATURES = 64
+HIDDEN = 32
+CLASSES = 10
+
+NEG_INF = -1.0e9
+
+
+def mlp_logits(w1, b1, w2, b2, x, class_mask):
+    """Forward pass: dense+ReLU → dense, masked to valid classes."""
+    h = dense(x, w1, b1, "relu")
+    logits = dense(h, w2, b2, "none")
+    # Invalid class slots get -1e9: ~0 softmax mass, ~0 gradient.
+    return logits + (1.0 - class_mask)[None, :] * NEG_INF
+
+
+def loss_fn(w1, b1, w2, b2, x, y_onehot, class_mask):
+    """Mean masked softmax cross-entropy (fused Pallas kernel; masked slots
+    carry -1e9 logits so they contribute neither mass nor gradient —
+    y_onehot is zero on invalid slots by construction)."""
+    logits = mlp_logits(w1, b1, w2, b2, x, class_mask)
+    return softmax_xent_mean(logits, y_onehot)
+
+
+def train_step(w1, b1, w2, b2, x, y_onehot, class_mask, lr):
+    """One SGD step; returns updated params and the pre-step loss."""
+    loss, grads = jax.value_and_grad(loss_fn, argnums=(0, 1, 2, 3))(
+        w1, b1, w2, b2, x, y_onehot, class_mask
+    )
+    g1, gb1, g2, gb2 = grads
+    return (
+        w1 - lr * g1,
+        b1 - lr * gb1,
+        w2 - lr * g2,
+        b2 - lr * gb2,
+        loss,
+    )
+
+
+def predict(w1, b1, w2, b2, x, class_mask):
+    """Masked logits for a batch (argmax on the Rust side)."""
+    return mlp_logits(w1, b1, w2, b2, x, class_mask)
+
+
+def init_params(key, features=FEATURES, hidden=HIDDEN, classes=CLASSES):
+    """He-initialized parameters (reference initializer; the Rust runtime
+    reimplements this distribution with its own RNG)."""
+    k1, k2 = jax.random.split(key)
+    w1 = jax.random.normal(k1, (features, hidden)) * jnp.sqrt(2.0 / features)
+    b1 = jnp.zeros((hidden,))
+    w2 = jax.random.normal(k2, (hidden, classes)) * jnp.sqrt(2.0 / hidden)
+    b2 = jnp.zeros((classes,))
+    return w1, b1, w2, b2
+
+
+def example_args(batch=BATCH, features=FEATURES, hidden=HIDDEN, classes=CLASSES):
+    """ShapeDtypeStructs for AOT lowering of train_step."""
+    f32 = jnp.float32
+    return (
+        jax.ShapeDtypeStruct((features, hidden), f32),  # w1
+        jax.ShapeDtypeStruct((hidden,), f32),  # b1
+        jax.ShapeDtypeStruct((hidden, classes), f32),  # w2
+        jax.ShapeDtypeStruct((classes,), f32),  # b2
+        jax.ShapeDtypeStruct((batch, features), f32),  # x
+        jax.ShapeDtypeStruct((batch, classes), f32),  # y_onehot
+        jax.ShapeDtypeStruct((classes,), f32),  # class_mask
+        jax.ShapeDtypeStruct((), f32),  # lr
+    )
+
+
+def example_predict_args(batch=BATCH, features=FEATURES, hidden=HIDDEN, classes=CLASSES):
+    """ShapeDtypeStructs for AOT lowering of predict."""
+    f32 = jnp.float32
+    return (
+        jax.ShapeDtypeStruct((features, hidden), f32),
+        jax.ShapeDtypeStruct((hidden,), f32),
+        jax.ShapeDtypeStruct((hidden, classes), f32),
+        jax.ShapeDtypeStruct((classes,), f32),
+        jax.ShapeDtypeStruct((batch, features), f32),
+        jax.ShapeDtypeStruct((classes,), f32),
+    )

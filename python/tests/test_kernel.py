@@ -1,0 +1,129 @@
+"""L1 correctness: Pallas kernels vs the pure-jnp oracle.
+
+Parameterized sweeps over shapes (including non-tile-multiple and degenerate
+dims), dtypes, activations, block sizes, and gradients (the custom-VJP dense
+must differentiate identically to the jnp reference).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.kernels.dense import dense, dense_fused, matmul_pallas
+from compile.kernels.ref import dense_ref, matmul_ref
+
+SHAPES = [
+    (1, 1, 1),
+    (2, 3, 4),
+    (8, 16, 4),
+    (16, 8, 8),
+    (32, 64, 10),
+    (128, 64, 32),  # the MLP layer-1 shape
+    (128, 32, 10),  # the MLP layer-2 shape
+    (130, 70, 36),  # non-multiples of the tile
+    (256, 128, 128),
+    (1, 64, 32),  # single-row batch
+]
+
+
+def _rand(key, shape, dtype):
+    x = jax.random.normal(key, shape, dtype=jnp.float32)
+    return x.astype(dtype)
+
+
+@pytest.mark.parametrize("m,k,n", SHAPES)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_matmul_matches_ref(m, k, n, dtype):
+    kx, kw = jax.random.split(jax.random.PRNGKey(m * 1000 + k * 10 + n))
+    x = _rand(kx, (m, k), dtype)
+    w = _rand(kw, (k, n), dtype)
+    got = matmul_pallas(x, w)
+    want = matmul_ref(x, w)
+    tol = 1e-5 if dtype == jnp.float32 else 5e-2
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32), rtol=tol, atol=tol
+    )
+
+
+@pytest.mark.parametrize("m,k,n", SHAPES)
+@pytest.mark.parametrize("activation", ["none", "relu"])
+def test_dense_fused_matches_ref(m, k, n, activation):
+    kx, kw, kb = jax.random.split(jax.random.PRNGKey(m + k + n), 3)
+    x = _rand(kx, (m, k), jnp.float32)
+    w = _rand(kw, (k, n), jnp.float32)
+    b = _rand(kb, (n,), jnp.float32)
+    got = dense_fused(x, w, b, activation=activation)
+    want = dense_ref(x, w, b, activation=activation)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("block_m,block_n", [(8, 8), (32, 16), (128, 128), (256, 64)])
+def test_block_size_invariance(block_m, block_n):
+    """The tiling is a schedule, not semantics: results must not depend on it."""
+    kx, kw = jax.random.split(jax.random.PRNGKey(0))
+    x = _rand(kx, (64, 48), jnp.float32)
+    w = _rand(kw, (48, 32), jnp.float32)
+    base = matmul_pallas(x, w, block_m=128, block_n=128)
+    got = matmul_pallas(x, w, block_m=block_m, block_n=block_n)
+    # Different tilings change f32 accumulation order; only bit-level
+    # rounding differences are acceptable.
+    np.testing.assert_allclose(np.asarray(got), np.asarray(base), rtol=1e-4, atol=1e-5)
+
+
+@pytest.mark.parametrize("activation", ["none", "relu"])
+@pytest.mark.parametrize("m,k,n", [(16, 8, 4), (128, 64, 32), (32, 64, 10)])
+def test_dense_gradients_match_ref(m, k, n, activation):
+    """custom_vjp backward (Pallas matmuls) ≡ autodiff through the reference."""
+    kx, kw, kb = jax.random.split(jax.random.PRNGKey(42 + m), 3)
+    x = _rand(kx, (m, k), jnp.float32)
+    w = _rand(kw, (k, n), jnp.float32)
+    b = _rand(kb, (n,), jnp.float32)
+
+    def loss_pallas(x, w, b):
+        return jnp.sum(dense(x, w, b, activation) ** 2)
+
+    def loss_ref(x, w, b):
+        return jnp.sum(dense_ref(x, w, b, activation) ** 2)
+
+    got = jax.grad(loss_pallas, argnums=(0, 1, 2))(x, w, b)
+    want = jax.grad(loss_ref, argnums=(0, 1, 2))(x, w, b)
+    for g, r, name in zip(got, want, "x w b".split()):
+        np.testing.assert_allclose(
+            np.asarray(g), np.asarray(r), rtol=2e-4, atol=2e-4, err_msg=f"grad {name}"
+        )
+
+
+def test_relu_grad_zero_below_threshold():
+    x = jnp.array([[-5.0, 5.0]], jnp.float32)
+    w = jnp.eye(2, dtype=jnp.float32)
+    b = jnp.zeros((2,), jnp.float32)
+
+    def f(x):
+        return jnp.sum(dense(x, w, b, "relu"))
+
+    g = jax.grad(f)(x)
+    assert g[0, 0] == 0.0, "negative pre-activation must have zero grad"
+    assert g[0, 1] == 1.0
+
+
+def test_matmul_rejects_mismatched_contraction():
+    x = jnp.zeros((4, 5), jnp.float32)
+    w = jnp.zeros((6, 3), jnp.float32)
+    with pytest.raises(AssertionError):
+        matmul_pallas(x, w)
+
+
+def test_jit_composability():
+    """The kernel must lower inside an outer jit (the AOT path)."""
+
+    @jax.jit
+    def f(x, w, b):
+        return dense(x, w, b, "relu").sum()
+
+    kx, kw = jax.random.split(jax.random.PRNGKey(1))
+    x = _rand(kx, (16, 8), jnp.float32)
+    w = _rand(kw, (8, 4), jnp.float32)
+    b = jnp.zeros((4,), jnp.float32)
+    expected = dense_ref(x, w, b, "relu").sum()
+    np.testing.assert_allclose(float(f(x, w, b)), float(expected), rtol=1e-5)

@@ -1,0 +1,92 @@
+"""L2 correctness: the MLP's loss decreases, masking works, shapes hold."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model
+
+
+def _toy_batch(key, n_valid_classes, batch=model.BATCH):
+    """A linearly separable batch within the first `n_valid_classes` slots."""
+    kx, ky = jax.random.split(key)
+    y = jax.random.randint(ky, (batch,), 0, n_valid_classes)
+    # class-dependent mean on the first 8 features
+    means = jax.random.normal(kx, (n_valid_classes, model.FEATURES)) * 2.0
+    noise = jax.random.normal(ky, (batch, model.FEATURES)) * 0.5
+    x = means[y] + noise
+    y_onehot = jax.nn.one_hot(y, model.CLASSES, dtype=jnp.float32)
+    mask = jnp.zeros((model.CLASSES,), jnp.float32).at[:n_valid_classes].set(1.0)
+    return x.astype(jnp.float32), y, y_onehot, mask
+
+
+@pytest.mark.parametrize("n_valid", [2, 3, 10])
+def test_train_step_decreases_loss(n_valid):
+    key = jax.random.PRNGKey(n_valid)
+    params = model.init_params(key)
+    x, _, y_onehot, mask = _toy_batch(jax.random.PRNGKey(100 + n_valid), n_valid)
+    lr = jnp.float32(0.1)
+
+    losses = []
+    w1, b1, w2, b2 = params
+    for _ in range(30):
+        w1, b1, w2, b2, loss = model.train_step(w1, b1, w2, b2, x, y_onehot, mask, lr)
+        losses.append(float(loss))
+    assert losses[-1] < losses[0] * 0.7, f"loss did not decrease: {losses[:3]} → {losses[-3:]}"
+    assert np.isfinite(losses).all()
+
+
+def test_initial_loss_is_log_n_valid():
+    """With ~uniform init logits, masked CE ≈ ln(n_valid), not ln(CLASSES)."""
+    key = jax.random.PRNGKey(0)
+    w1, b1, w2, b2 = model.init_params(key)
+    # zero weights → exactly uniform over valid classes
+    w1, w2 = jnp.zeros_like(w1), jnp.zeros_like(w2)
+    for n_valid in (2, 3, 10):
+        x, _, y_onehot, mask = _toy_batch(jax.random.PRNGKey(1), n_valid)
+        loss = model.loss_fn(w1, b1, w2, b2, x, y_onehot, mask)
+        assert abs(float(loss) - np.log(n_valid)) < 1e-3, (n_valid, float(loss))
+
+
+def test_predict_never_picks_masked_class():
+    key = jax.random.PRNGKey(3)
+    params = model.init_params(key)
+    x, _, _, mask = _toy_batch(jax.random.PRNGKey(4), 3)
+    logits = model.predict(*params, x, mask)
+    assert logits.shape == (model.BATCH, model.CLASSES)
+    pred = np.asarray(jnp.argmax(logits, axis=-1))
+    assert (pred < 3).all(), f"masked class predicted: {np.unique(pred)}"
+
+
+def test_masked_classes_get_no_gradient():
+    key = jax.random.PRNGKey(5)
+    w1, b1, w2, b2 = model.init_params(key)
+    x, _, y_onehot, mask = _toy_batch(jax.random.PRNGKey(6), 2)
+    grads = jax.grad(model.loss_fn, argnums=(2, 3))(w1, b1, w2, b2, x, y_onehot, mask)
+    g_w2, g_b2 = grads
+    # output columns for masked classes (2..) must be ~0
+    masked_cols = np.asarray(g_w2)[:, 2:]
+    assert np.abs(masked_cols).max() < 1e-6, np.abs(masked_cols).max()
+    assert np.abs(np.asarray(g_b2)[2:]).max() < 1e-6
+
+
+def test_train_step_learns_to_high_accuracy():
+    key = jax.random.PRNGKey(7)
+    w1, b1, w2, b2 = model.init_params(key)
+    x, y, y_onehot, mask = _toy_batch(jax.random.PRNGKey(8), 3)
+    lr = jnp.float32(0.2)
+    for _ in range(150):
+        w1, b1, w2, b2, _ = model.train_step(w1, b1, w2, b2, x, y_onehot, mask, lr)
+    logits = model.predict(w1, b1, w2, b2, x, mask)
+    acc = float((jnp.argmax(logits, -1) == y).mean())
+    assert acc > 0.95, f"train accuracy {acc}"
+
+
+def test_example_args_shapes_match_model_constants():
+    args = model.example_args()
+    assert args[0].shape == (model.FEATURES, model.HIDDEN)
+    assert args[4].shape == (model.BATCH, model.FEATURES)
+    assert args[7].shape == ()
+    p_args = model.example_predict_args()
+    assert len(p_args) == 6

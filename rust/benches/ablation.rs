@@ -1,0 +1,143 @@
+//! Ablation bench: the design choices DESIGN.md calls out, each toggled in
+//! isolation on the same 200-task / ~2ms-per-task workload.
+//!
+//! Dimensions:
+//!   A1 cache off / on(no-fsync) / on(fsync)        — persistence cost
+//!   A2 checkpoint off / every-1 / every-10 / every-100 — flush interval
+//!   A3 task hashing: cost of SHA-256 identity (hash-only pass)
+//!   A4 notification provider: none / memory / file
+//!   A5 journal off / on
+
+use memento::bench::Suite;
+use memento::config::matrix::ConfigMatrix;
+use memento::config::value::pv_int;
+use memento::coordinator::cache::ResultCache;
+use memento::coordinator::memento::Memento;
+use memento::coordinator::notify::{FileNotificationProvider, MemoryNotificationProvider};
+use memento::util::fs::TempDir;
+use memento::util::json::Json;
+use std::sync::Arc;
+use std::time::Duration;
+
+const N: usize = 200;
+
+fn matrix() -> ConfigMatrix {
+    ConfigMatrix::builder()
+        .param("i", (0..N as i64).map(pv_int).collect())
+        .build()
+        .unwrap()
+}
+
+fn work(_ctx: &memento::coordinator::task::TaskContext) -> Result<Json, memento::coordinator::error::MementoError> {
+    std::thread::sleep(Duration::from_millis(2));
+    Ok(Json::obj(vec![("score", Json::Num(0.5))]))
+}
+
+fn main() {
+    let mut suite = Suite::new("ablations — coordinator design choices");
+    let td = TempDir::new("bench-ablate").unwrap();
+    let m = matrix();
+
+    // --- A1: cache modes -----------------------------------------------------
+    let base = suite
+        .bench("A1 cache off", 1, 5, |_| {
+            Memento::new(work).workers(4).run(&m).unwrap();
+        })
+        .clone();
+    suite.note("baseline".to_string());
+
+    let c_nosync = td.join("c-nosync");
+    suite.bench_with_setup(
+        "A1 cache on (no fsync, default)",
+        0,
+        5,
+        || std::fs::remove_dir_all(&c_nosync).ok(),
+        |_| {
+            Memento::new(work)
+                .workers(4)
+                .with_cache_dir(&c_nosync)
+                .run(&m)
+                .unwrap();
+        },
+    );
+    let last = suite.rows().last().unwrap().stats.mean;
+    suite.note(format!("+{:.1}% over baseline", 100.0 * (last - base.mean) / base.mean));
+
+    let c_sync = td.join("c-sync");
+    suite.bench_with_setup(
+        "A1 cache on (fsync)",
+        0,
+        5,
+        || std::fs::remove_dir_all(&c_sync).ok(),
+        |_| {
+            let cache = Arc::new(ResultCache::open(&c_sync).unwrap().durable(true));
+            Memento::new(work)
+                .workers(4)
+                .with_cache(cache)
+                .run(&m)
+                .unwrap();
+        },
+    );
+    let last = suite.rows().last().unwrap().stats.mean;
+    suite.note(format!("+{:.1}% over baseline", 100.0 * (last - base.mean) / base.mean));
+
+    // --- A2: checkpoint flush interval ----------------------------------------
+    for flush in [1usize, 10, 100] {
+        let dir = td.join(&format!("ck-{flush}"));
+        suite.bench_with_setup(
+            format!("A2 checkpoint flush_every={flush}"),
+            0,
+            5,
+            || std::fs::remove_dir_all(&dir).ok(),
+            |_| {
+                Memento::new(work)
+                    .workers(4)
+                    .with_checkpoint_dir(&dir)
+                    .checkpoint_flush_every(flush)
+                    .run(&m)
+                    .unwrap();
+            },
+        );
+        let last = suite.rows().last().unwrap().stats.mean;
+        suite.note(format!("+{:.1}% over baseline", 100.0 * (last - base.mean) / base.mean));
+    }
+
+    // --- A3: hashing-only pass -------------------------------------------------
+    suite.bench("A3 expansion+hash only (no exec)", 5, 50, |_| {
+        for t in memento::coordinator::expand::Expansion::new(&m) {
+            memento::bench::black_box(t.id("v1"));
+        }
+    });
+    suite.note(format!("identity cost for {N} tasks"));
+
+    // --- A4: notifiers ------------------------------------------------------------
+    suite.bench("A4 notifier = memory", 1, 5, |_| {
+        Memento::new(work)
+            .workers(4)
+            .with_notifier(Box::new(MemoryNotificationProvider::new()))
+            .run(&m)
+            .unwrap();
+    });
+    let nf = td.join("notify.jsonl");
+    suite.bench("A4 notifier = file", 1, 5, |_| {
+        Memento::new(work)
+            .workers(4)
+            .with_notifier(Box::new(FileNotificationProvider::new(&nf)))
+            .run(&m)
+            .unwrap();
+    });
+
+    // --- A5: journal ----------------------------------------------------------------
+    let jf = td.join("journal.jsonl");
+    suite.bench("A5 journal on", 1, 5, |_| {
+        Memento::new(work)
+            .workers(4)
+            .with_journal(&jf)
+            .run(&m)
+            .unwrap();
+    });
+    let last = suite.rows().last().unwrap().stats.mean;
+    suite.note(format!("+{:.1}% over baseline", 100.0 * (last - base.mean) / base.mean));
+
+    suite.finish();
+}

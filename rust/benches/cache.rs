@@ -1,0 +1,106 @@
+//! Bench E3: result caching — "avoid running duplicate experiments".
+//!
+//! Headline series: cold run vs warm re-run of the toy ML grid (the §2
+//! claim is that the warm path costs ~nothing). Plus put/get micro-costs
+//! and hit-rate accounting.
+
+use memento::bench::{black_box, Suite};
+use memento::config::value::pv_int;
+use memento::coordinator::cache::ResultCache;
+use memento::coordinator::memento::Memento;
+use memento::coordinator::task::TaskSpec;
+use memento::experiments::grid;
+use memento::util::fs::TempDir;
+use memento::util::json::Json;
+use std::sync::Arc;
+
+fn main() {
+    let mut suite = Suite::new("E3 — result cache");
+    let td = TempDir::new("bench-cache").unwrap();
+
+    // --- micro: put/get ----------------------------------------------------
+    let cache = ResultCache::open(td.join("micro")).unwrap();
+    let value = Json::obj(vec![
+        ("accuracy", Json::Num(0.9321)),
+        ("folds", Json::Arr(vec![Json::Num(0.9); 5])),
+    ]);
+    let specs: Vec<TaskSpec> = (0..1000)
+        .map(|i| TaskSpec {
+            params: vec![("i".into(), pv_int(i as i64))],
+            index: i,
+        })
+        .collect();
+    let ids: Vec<_> = specs.iter().map(|s| s.id("v1")).collect();
+
+    let mut k = 0usize;
+    suite.bench("cache.put (default, no fsync)", 100, 1000, |i| {
+        cache.put(&ids[i % 1000], &specs[i % 1000], &value).unwrap();
+        k += 1;
+    });
+    let durable = ResultCache::open(td.join("durable")).unwrap().durable(true);
+    suite.bench("cache.put (durable, fsync)", 20, 200, |i| {
+        durable.put(&ids[i % 1000], &specs[i % 1000], &value).unwrap();
+    });
+    suite.note("§Perf-L3: fsync cost isolated");
+    suite.bench("cache.get (hit)", 100, 1000, |i| {
+        black_box(cache.get(&ids[i % 1000]).unwrap());
+    });
+    let missing = TaskSpec { params: vec![("i".into(), pv_int(-1))], index: 0 }.id("v1");
+    suite.bench("cache.get (miss)", 100, 1000, |_| {
+        black_box(cache.get(&missing));
+    });
+
+    // --- headline: cold vs warm grid run ------------------------------------
+    let matrix = grid::toy_matrix();
+    let n_tasks = memento::coordinator::expand::count_included(&matrix);
+
+    let cache_dir = td.join("grid-cache");
+    let shared = Arc::new(ResultCache::open(&cache_dir).unwrap());
+
+    let cold = suite
+        .bench_with_setup(
+            format!("toy grid cold ({n_tasks} tasks)"),
+            0,
+            5,
+            || {
+                shared.clear().unwrap();
+            },
+            |_| {
+                let m = Memento::new(grid::grid_exp_fn(None))
+                    .workers(4)
+                    .with_cache(Arc::clone(&shared));
+                let r = m.run(&matrix).unwrap();
+                assert_eq!(r.n_cached(), 0);
+            },
+        )
+        .clone();
+
+    // warm the cache once
+    Memento::new(grid::grid_exp_fn(None))
+        .with_cache(Arc::clone(&shared))
+        .run(&matrix)
+        .unwrap();
+
+    let warm = suite
+        .bench(format!("toy grid warm ({n_tasks} tasks)"), 2, 20, |_| {
+            let m = Memento::new(grid::grid_exp_fn(None))
+                .workers(4)
+                .with_cache(Arc::clone(&shared));
+            let r = m.run(&matrix).unwrap();
+            assert_eq!(r.n_cached(), n_tasks, "all tasks must hit the cache");
+        })
+        .clone();
+
+    suite.note(format!(
+        "cold/warm = {:.1}x; hit-rate 100%",
+        cold.mean / warm.mean
+    ));
+
+    println!(
+        "\nE3 headline: cold {:.3}s vs warm {:.4}s → speedup {:.1}x (paper claim: warm ≈ free)",
+        cold.mean,
+        warm.mean,
+        cold.mean / warm.mean
+    );
+    suite.finish();
+}

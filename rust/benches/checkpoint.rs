@@ -1,0 +1,157 @@
+//! Bench E4: checkpointing — "resumption without costly manual
+//! intervention".
+//!
+//! Headline series: interrupt a 64-task run after k completions, resume,
+//! and verify the resumed run re-executes exactly 64−k tasks; reports
+//! resume overhead (manifest load + skip) and the manifest flush cost that
+//! the running tasks pay.
+
+use memento::bench::Suite;
+use memento::config::matrix::ConfigMatrix;
+use memento::config::value::pv_int;
+use memento::coordinator::checkpoint::CheckpointStore;
+use memento::coordinator::memento::Memento;
+use memento::coordinator::task::TaskId;
+use memento::util::fs::TempDir;
+use memento::util::json::Json;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+
+fn matrix(n: usize) -> ConfigMatrix {
+    ConfigMatrix::builder()
+        .param("i", (0..n as i64).map(pv_int).collect())
+        .build()
+        .unwrap()
+}
+
+fn tid(n: usize) -> TaskId {
+    TaskId(format!("{n:064x}"))
+}
+
+/// Minimal recursive directory copy (bench-local helper).
+fn copy_dir(src: &std::path::Path, dst: &std::path::Path) {
+    std::fs::create_dir_all(dst).unwrap();
+    for entry in std::fs::read_dir(src).unwrap() {
+        let entry = entry.unwrap();
+        let to = dst.join(entry.file_name());
+        if entry.path().is_dir() {
+            copy_dir(&entry.path(), &to);
+        } else {
+            std::fs::copy(entry.path(), &to).unwrap();
+        }
+    }
+}
+
+fn main() {
+    let mut suite = Suite::new("E4 — checkpoint & resume");
+    let td = TempDir::new("bench-ckpt").unwrap();
+
+    // --- micro: record/flush cost -------------------------------------------
+    for flush_every in [1usize, 10, 100] {
+        let dir = td.join(&format!("micro-{flush_every}"));
+        let store = CheckpointStore::create(&dir, "fp", "v1", 10_000, flush_every).unwrap();
+        let value = Json::obj(vec![("accuracy", Json::Num(0.93))]);
+        let mut i = 0usize;
+        let stats = suite
+            .bench(
+                format!("record (flush_every={flush_every})"),
+                100,
+                2000,
+                |_| {
+                    store.record(&tid(i), Some(&value), None, 0.1, 1).unwrap();
+                    i += 1;
+                },
+            )
+            .clone();
+        suite.note(format!("{:.1}µs/task", stats.mean * 1e6));
+    }
+
+    // --- headline: interrupted run → resume ----------------------------------
+    const N: usize = 64;
+    let m64 = matrix(N);
+    for k in [16usize, 32, 48] {
+        let executions = Arc::new(AtomicUsize::new(0));
+        let run_dir = td.join(&format!("resume-{k}"));
+
+        // Phase 1: run that "crashes" (fails) every task after the first k.
+        // Single worker makes the cutoff deterministic.
+        {
+            let ex = Arc::clone(&executions);
+            let m = Memento::new(move |_ctx| {
+                let n = ex.fetch_add(1, Ordering::SeqCst);
+                if n < k {
+                    // simulate ~1ms of work
+                    std::thread::sleep(std::time::Duration::from_micros(300));
+                    Ok(Json::int(n as i64))
+                } else {
+                    Err(memento::coordinator::error::MementoError::experiment(
+                        "simulated crash",
+                    ))
+                }
+            })
+            .workers(1)
+            .with_checkpoint_dir(&run_dir);
+            let r = m.run(&m64).unwrap();
+            assert_eq!(r.n_failed(), N - k);
+        }
+
+        // Snapshot the crashed run dir so every bench iteration resumes the
+        // *same* partial manifest (a resume completes it, so it must be
+        // restored before each timing).
+        let snapshot = td.join(&format!("resume-{k}-snapshot"));
+        copy_dir(&run_dir, &snapshot);
+
+        // Phase 2: resume with healthy code; must re-run exactly N-k tasks.
+        let resumed_execs = Arc::new(AtomicUsize::new(0));
+        let re = Arc::clone(&resumed_execs);
+        suite.bench_with_setup(
+            format!("resume after {k}/{N} done"),
+            1,
+            10,
+            || {
+                let _ = std::fs::remove_dir_all(&run_dir);
+                copy_dir(&snapshot, &run_dir);
+                re.store(0, Ordering::SeqCst);
+            },
+            |_| {
+                let re2 = Arc::clone(&resumed_execs);
+                let m = Memento::new(move |_| {
+                    re2.fetch_add(1, Ordering::SeqCst);
+                    std::thread::sleep(std::time::Duration::from_micros(300));
+                    Ok(Json::int(0))
+                })
+                .workers(1)
+                .with_checkpoint_dir(&run_dir);
+                let r = m.resume(&m64).unwrap();
+                assert_eq!(r.len(), N);
+                assert_eq!(
+                    resumed_execs.load(Ordering::SeqCst),
+                    N - k,
+                    "resume must re-run exactly the unfinished tasks"
+                );
+            },
+        );
+        suite.note(format!("re-ran exactly {}/{N} tasks each resume", N - k));
+    }
+
+    // --- resume overhead scaling with manifest size ---------------------------
+    for n in [100usize, 1000, 5000] {
+        let dir = td.join(&format!("load-{n}"));
+        let store = CheckpointStore::create(&dir, "fp", "v1", n, 1000).unwrap();
+        for i in 0..n {
+            store
+                .record(&tid(i), Some(&Json::int(i as i64)), None, 0.0, 1)
+                .unwrap();
+        }
+        store.flush().unwrap();
+        let stats = suite
+            .bench(format!("manifest load ({n} entries)"), 3, 30, |_| {
+                let s = CheckpointStore::resume(&dir, "fp", "v1", n, 1000).unwrap();
+                assert_eq!(s.completed_count(), n);
+            })
+            .clone();
+        suite.note(format!("{:.1}µs/entry", stats.mean / n as f64 * 1e6));
+    }
+
+    suite.finish();
+}

@@ -1,0 +1,94 @@
+//! Bench E7: the end-to-end §3 grid (one timed pass + per-stage breakdown).
+//!
+//! Runs the exact 45-task paper grid once (cold) and once warm, prints the
+//! accuracy pivot, per-model mean task cost, and — when artifacts exist —
+//! the extended 60-task grid including the AOT MLP.
+
+use memento::bench::Suite;
+use memento::coordinator::cache::ResultCache;
+use memento::coordinator::memento::Memento;
+use memento::experiments::grid;
+use memento::runtime::artifact::shared_store;
+use memento::util::fs::TempDir;
+use std::sync::Arc;
+
+fn main() {
+    let mut suite = Suite::new("E7 — end-to-end §3 grid");
+    let td = TempDir::new("bench-e2e").unwrap();
+    let workers = memento::util::pool::num_cpus().max(4);
+
+    // --- the paper's exact 45-task grid -----------------------------------
+    let matrix = grid::paper_matrix();
+    let cache = Arc::new(ResultCache::open(td.join("cache")).unwrap());
+
+    let cold = suite
+        .bench_with_setup(
+            "paper grid cold (45 tasks, 5-fold)",
+            0,
+            2,
+            || cache.clear().unwrap(),
+            |_| {
+                let r = Memento::new(grid::grid_exp_fn(None))
+                    .workers(workers)
+                    .with_cache(Arc::clone(&cache))
+                    .run(&matrix)
+                    .unwrap();
+                assert_eq!(r.len(), 45);
+                assert_eq!(r.n_failed(), 0);
+            },
+        )
+        .clone();
+    suite.note(format!("{:.1} tasks/s", 45.0 / cold.mean));
+
+    let warm = suite
+        .bench("paper grid warm (cache hits)", 1, 5, |_| {
+            let r = Memento::new(grid::grid_exp_fn(None))
+                .workers(workers)
+                .with_cache(Arc::clone(&cache))
+                .run(&matrix)
+                .unwrap();
+            assert_eq!(r.n_cached(), 45);
+        })
+        .clone();
+    suite.note(format!("cold/warm {:.0}x", cold.mean / warm.mean));
+
+    // Per-model cost breakdown + pivot from a fresh run.
+    cache.clear().unwrap();
+    let r = Memento::new(grid::grid_exp_fn(None))
+        .workers(workers)
+        .run(&matrix)
+        .unwrap();
+    println!("\naccuracy pivot (45-task paper grid):");
+    println!("{}", r.pivot("dataset", "model", "accuracy").render());
+    println!("mean task duration by model:");
+    for (model, mean, n) in r.mean_by("model", "accuracy") {
+        let durs: Vec<f64> = r
+            .filter(&[("model", model.clone())])
+            .iter()
+            .map(|o| o.duration_secs)
+            .collect();
+        let mean_dur = durs.iter().sum::<f64>() / durs.len() as f64;
+        println!("  {model:<14} {n:>2} tasks  mean {mean_dur:>8.3}s  acc {mean:.4}");
+    }
+
+    // --- extended grid with the AOT MLP ------------------------------------
+    match shared_store() {
+        Ok(store) => {
+            let ext = grid::extended_matrix();
+            let stats = suite
+                .bench("extended grid incl. MLP (60 tasks)", 0, 2, |_| {
+                    let r = Memento::new(grid::grid_exp_fn(Some(Arc::clone(&store))))
+                        .workers(workers)
+                        .run(&ext)
+                        .unwrap();
+                    assert_eq!(r.len(), 60);
+                    assert_eq!(r.n_failed(), 0);
+                })
+                .clone();
+            suite.note(format!("{:.1} tasks/s incl. PJRT", 60.0 / stats.mean));
+        }
+        Err(e) => println!("extended grid skipped (no artifacts): {e}"),
+    }
+
+    suite.finish();
+}

@@ -1,0 +1,78 @@
+//! Bench E1/E6(a): configuration-matrix expansion.
+//!
+//! Regenerates the §3 worked example's counts (54 raw → 45 included) and
+//! measures expansion + hashing throughput up to 10⁵-combination matrices —
+//! the "translate the matrix to distinct experimental tasks" step must be
+//! invisible next to any real experiment.
+
+use memento::bench::{black_box, Suite};
+use memento::config::matrix::ConfigMatrix;
+use memento::config::value::pv_int;
+use memento::coordinator::expand;
+use memento::experiments::grid;
+
+fn synthetic_matrix(domains: &[usize], n_excludes: usize) -> ConfigMatrix {
+    let mut b = ConfigMatrix::builder();
+    for (i, &d) in domains.iter().enumerate() {
+        b = b.param(format!("p{i}"), (0..d as i64).map(pv_int).collect());
+    }
+    for e in 0..n_excludes {
+        b = b.exclude(vec![("p0", pv_int((e % domains[0]) as i64))]);
+    }
+    b.build().unwrap()
+}
+
+fn main() {
+    let mut suite = Suite::new("E1/E6a — matrix expansion");
+
+    // --- the paper's exact §3 example -----------------------------------
+    let paper = grid::paper_matrix();
+    let tasks = expand::expand(&paper);
+    println!(
+        "paper §3 example: raw={} excluded={} included={}",
+        paper.raw_count(),
+        paper.raw_count() - tasks.len(),
+        tasks.len()
+    );
+    assert_eq!((paper.raw_count(), tasks.len()), (54, 45));
+
+    suite.bench("expand paper grid (54 raw)", 50, 500, |_| {
+        black_box(expand::expand(&paper));
+    });
+    suite.note("54 raw -> 45 tasks");
+
+    suite.bench("expand+hash paper grid", 20, 200, |_| {
+        for t in expand::Expansion::new(&paper) {
+            black_box(t.id("v1"));
+        }
+    });
+    suite.note("SHA-256 per task");
+
+    // --- scaling ----------------------------------------------------------
+    for (label, domains) in [
+        ("1k combos (10x10x10)", vec![10, 10, 10]),
+        ("10k combos (10^4)", vec![10, 10, 10, 10]),
+        ("100k combos (10^5)", vec![10, 10, 10, 10, 10]),
+    ] {
+        let m = synthetic_matrix(&domains, 0);
+        let n = m.raw_count();
+        let stats = suite
+            .bench(format!("expand {label}"), 3, 20, |_| {
+                black_box(expand::count_included(&m));
+            })
+            .clone();
+        suite.note(format!("{:.1}M combos/s", n as f64 / stats.mean / 1e6));
+    }
+
+    // --- exclusion cost ----------------------------------------------------
+    for n_excl in [1usize, 8, 64] {
+        let m = synthetic_matrix(&[10, 10, 10, 10], n_excl);
+        let included = expand::count_included(&m);
+        suite.bench(format!("10k combos, {n_excl} exclude rules"), 3, 20, |_| {
+            black_box(expand::count_included(&m));
+        });
+        suite.note(format!("{included} included"));
+    }
+
+    suite.finish();
+}

@@ -1,0 +1,119 @@
+//! Bench E5: fault tolerance — "update the code and rerun", where only the
+//! failed fraction re-executes.
+//!
+//! Injects failures into f ∈ {10%, 30%, 50%} of a 40-task grid, then
+//! measures the rerun (against the warm cache) vs the original full run.
+//! Expected shape: rerun time ≈ f × full time + orchestration overhead.
+
+use memento::bench::Suite;
+use memento::config::matrix::ConfigMatrix;
+use memento::config::value::pv_int;
+use memento::coordinator::cache::ResultCache;
+use memento::coordinator::memento::Memento;
+use memento::util::fs::TempDir;
+use memento::util::json::Json;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+const N: usize = 40;
+const TASK_MS: u64 = 10;
+
+fn matrix() -> ConfigMatrix {
+    ConfigMatrix::builder()
+        .param("i", (0..N as i64).map(pv_int).collect())
+        .build()
+        .unwrap()
+}
+
+fn main() {
+    let mut suite = Suite::new("E5 — failure injection & selective rerun");
+    let td = TempDir::new("bench-fault").unwrap();
+    let m = matrix();
+
+    for fail_pct in [10usize, 30, 50] {
+        let cache = Arc::new(ResultCache::open(td.join(&format!("c{fail_pct}"))).unwrap());
+        let fail_below = N * fail_pct / 100;
+
+        // Full (buggy) run: tasks with i < fail_below fail.
+        let full = suite
+            .bench_with_setup(
+                format!("full run, {fail_pct}% failing"),
+                0,
+                5,
+                || cache.clear().unwrap(),
+                |_| {
+                    let c = Arc::clone(&cache);
+                    let r = Memento::new(move |ctx| {
+                        std::thread::sleep(Duration::from_millis(TASK_MS));
+                        let i = ctx.param_i64("i")? as usize;
+                        if i < fail_below {
+                            Err(memento::coordinator::error::MementoError::experiment(
+                                "injected",
+                            ))
+                        } else {
+                            Ok(Json::int(i as i64))
+                        }
+                    })
+                    .workers(4)
+                    .with_cache(Arc::clone(&c))
+                    .run(&m)
+                    .unwrap();
+                    assert_eq!(r.n_failed(), fail_below);
+                },
+            )
+            .clone();
+
+        // Fixed rerun: cache restores the successes, only failures execute.
+        // Setup re-invalidates the failed tasks' cache entries each
+        // iteration (the rerun itself writes them, so they must be evicted
+        // to measure the same rerun repeatedly).
+        let failed_ids: Vec<_> = memento::coordinator::expand::expand(&m)
+            .into_iter()
+            .filter(|s| (s.get("i").and_then(|v| v.as_i64()).unwrap() as usize) < fail_below)
+            .map(|s| s.id("v1"))
+            .collect();
+        let executed = Arc::new(AtomicUsize::new(0));
+        let rerun = suite
+            .bench_with_setup(
+                format!("rerun after fix, {fail_pct}% failed"),
+                1,
+                5,
+                || {
+                    for id in &failed_ids {
+                        cache.invalidate(id);
+                    }
+                    executed.store(0, Ordering::SeqCst);
+                },
+                |_| {
+                    let c = Arc::clone(&cache);
+                    let e = Arc::clone(&executed);
+                    let r = Memento::new(move |ctx| {
+                        e.fetch_add(1, Ordering::SeqCst);
+                        std::thread::sleep(Duration::from_millis(TASK_MS));
+                        Ok(Json::int(ctx.param_i64("i")?))
+                    })
+                    .workers(4)
+                    .with_cache(Arc::clone(&c))
+                    .run(&m)
+                    .unwrap();
+                    assert_eq!(r.n_failed(), 0);
+                    assert_eq!(
+                        executed.load(Ordering::SeqCst),
+                        fail_below,
+                        "only failures may re-execute"
+                    );
+                },
+            )
+            .clone();
+
+        suite.note(format!(
+            "rerun/full = {:.2} (work fraction {:.2})",
+            rerun.p50 / full.p50,
+            fail_pct as f64 / 100.0
+        ));
+    }
+
+    suite.finish();
+    println!("E5 shape check: rerun/full should track the failed fraction.");
+}

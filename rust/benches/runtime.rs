@@ -1,0 +1,106 @@
+//! Bench E8: the PJRT hot path — latency/throughput of the AOT-compiled
+//! JAX/Pallas executables driven from Rust.
+//!
+//! Requires `make artifacts`. Reports compile time (one-off), train-step
+//! and predict latency, steps/s, and the effective FLOP rate of the MLP's
+//! dense kernels.
+
+use memento::bench::Suite;
+use memento::runtime::artifact::shared_store;
+use memento::runtime::tensor::Tensor;
+use memento::util::rng::Rng;
+
+fn main() {
+    let store = match shared_store() {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("E8 skipped: {e}\nrun `make artifacts` first");
+            std::process::exit(0);
+        }
+    };
+    let meta = store.meta;
+    let mut suite = Suite::new("E8 — PJRT runtime hot path");
+
+    // --- one-off compile cost ------------------------------------------------
+    let t0 = std::time::Instant::now();
+    let step = store.executable("mlp_train_step").unwrap();
+    let compile_train = t0.elapsed();
+    let t0 = std::time::Instant::now();
+    let predict = store.executable("mlp_predict").unwrap();
+    let compile_pred = t0.elapsed();
+    println!(
+        "compile (one-off): train_step {} | predict {}",
+        memento::util::time::fmt_duration(compile_train),
+        memento::util::time::fmt_duration(compile_pred)
+    );
+
+    // --- inputs ----------------------------------------------------------------
+    let mut rng = Rng::new(0);
+    let mut randn = |shape: Vec<usize>, scale: f64| {
+        let n: usize = shape.iter().product();
+        Tensor::new(
+            shape,
+            (0..n).map(|_| (rng.normal() * scale) as f32).collect(),
+        )
+    };
+    let mut w1 = randn(vec![meta.features, meta.hidden], 0.18);
+    let mut b1 = Tensor::zeros(vec![meta.hidden]);
+    let mut w2 = randn(vec![meta.hidden, meta.classes], 0.25);
+    let mut b2 = Tensor::zeros(vec![meta.classes]);
+    let x = randn(vec![meta.batch, meta.features], 1.0);
+    let mut y = vec![0f32; meta.batch * meta.classes];
+    for i in 0..meta.batch {
+        y[i * meta.classes + i % 3] = 1.0;
+    }
+    let y = Tensor::new(vec![meta.batch, meta.classes], y);
+    let mask = Tensor::new(vec![meta.classes], {
+        let mut v = vec![0f32; meta.classes];
+        v[..3].fill(1.0);
+        v
+    });
+    let lr = Tensor::scalar(0.1);
+
+    // --- train-step latency -----------------------------------------------------
+    let stats = suite
+        .bench("mlp_train_step (batch 128)", 20, 300, |_| {
+            let out = step.run(&[&w1, &b1, &w2, &b2, &x, &y, &mask, &lr]).unwrap();
+            let mut it = out.into_iter();
+            w1 = it.next().unwrap();
+            b1 = it.next().unwrap();
+            w2 = it.next().unwrap();
+            b2 = it.next().unwrap();
+            let loss = it.next().unwrap().data[0];
+            assert!(loss.is_finite());
+        })
+        .clone();
+    // FLOPs: fwd 2*(B*F*H + B*H*C) ; bwd ≈ 2x fwd (dx, dw matmuls).
+    let fwd_flops = 2.0 * (meta.batch * meta.features * meta.hidden
+        + meta.batch * meta.hidden * meta.classes) as f64;
+    let step_flops = 3.0 * fwd_flops;
+    suite.note(format!(
+        "{:.0} steps/s, ~{:.2} GFLOP/s",
+        1.0 / stats.mean,
+        step_flops / stats.mean / 1e9
+    ));
+
+    // --- predict latency ----------------------------------------------------------
+    let stats = suite
+        .bench("mlp_predict (batch 128)", 20, 300, |_| {
+            let out = predict.run(&[&w1, &b1, &w2, &b2, &x, &mask]).unwrap();
+            assert_eq!(out[0].shape, vec![meta.batch, meta.classes]);
+        })
+        .clone();
+    suite.note(format!(
+        "{:.0} batches/s ({:.0} rows/s)",
+        1.0 / stats.mean,
+        meta.batch as f64 / stats.mean
+    ));
+
+    // --- tensor marshalling cost (host <-> literal) ---------------------------------
+    let big = randn(vec![meta.batch, meta.features], 1.0);
+    suite.bench("tensor→literal (128×64 f32)", 100, 2000, |_| {
+        memento::bench::black_box(big.to_literal().unwrap());
+    });
+
+    suite.finish();
+}

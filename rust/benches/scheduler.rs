@@ -1,0 +1,74 @@
+//! Bench E6: scheduling overhead.
+//!
+//! The paper's value proposition assumes the orchestrator itself is free:
+//! per-task overhead (expansion + hashing + dispatch + collection) must be
+//! orders of magnitude below any real experiment. Measures end-to-end runs
+//! of no-op experiment functions at 10²–10⁴ tasks across worker counts.
+
+use memento::bench::Suite;
+use memento::config::matrix::ConfigMatrix;
+use memento::config::value::pv_int;
+use memento::coordinator::memento::Memento;
+use memento::util::json::Json;
+
+fn flat_matrix(n: usize) -> ConfigMatrix {
+    ConfigMatrix::builder()
+        .param("i", (0..n as i64).map(pv_int).collect())
+        .build()
+        .unwrap()
+}
+
+fn main() {
+    let mut suite = Suite::new("E6 — scheduler overhead (no-op tasks)");
+
+    for &n in &[100usize, 1_000, 10_000] {
+        let matrix = flat_matrix(n);
+        for &workers in &[1usize, 4, 8] {
+            let stats = suite
+                .bench_with_setup(
+                    format!("{n} no-op tasks, {workers} workers"),
+                    1,
+                    if n >= 10_000 { 5 } else { 10 },
+                    || (),
+                    |_| {
+                        let m = Memento::new(|_| Ok(Json::Null)).workers(workers);
+                        let r = m.run(&matrix).unwrap();
+                        assert_eq!(r.len(), n);
+                    },
+                )
+                .clone();
+            suite.note(format!(
+                "{:.1}µs/task",
+                stats.mean / n as f64 * 1e6
+            ));
+        }
+    }
+
+    // Overhead with the full reliability pipeline on (cache + checkpoint).
+    let td = memento::util::fs::TempDir::new("bench-sched").unwrap();
+    let matrix = flat_matrix(1_000);
+    let stats = suite
+        .bench_with_setup(
+            "1000 no-op tasks + cache + checkpoint",
+            0,
+            5,
+            || {
+                let dir = td.join(&format!("run-{}", std::process::id()));
+                let _ = std::fs::remove_dir_all(&dir);
+                dir
+            },
+            |dir| {
+                let m = Memento::new(|_| Ok(Json::Null))
+                    .workers(4)
+                    .with_cache_dir(dir.join("cache"))
+                    .with_checkpoint_dir(dir.join("run"))
+                    .checkpoint_flush_every(100);
+                let r = m.run(&matrix).unwrap();
+                assert_eq!(r.len(), 1000);
+            },
+        )
+        .clone();
+    suite.note(format!("{:.1}µs/task incl. persistence", stats.mean / 1e3 * 1e6));
+
+    suite.finish();
+}

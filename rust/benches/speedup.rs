@@ -1,0 +1,102 @@
+//! Bench E2: parallelization speedup (Fig. 1 / §2 claim: "significantly
+//! reducing the time required for large-scale experiments").
+//!
+//! Testbed note (recorded in EXPERIMENTS.md): this image exposes exactly
+//! ONE physical CPU, so CPU-bound tasks cannot speed up — the bench
+//! therefore runs two series:
+//!
+//! 1. **wait-bound tasks** (50 ms sleep + small compute), modelling
+//!    experiments that block on I/O, GPUs, or remote resources: the
+//!    coordinator must deliver near-linear wall-clock scaling in the
+//!    worker count — this isolates the *coordinator's* scaling behaviour,
+//!    which is what the paper claims;
+//! 2. **CPU-bound tasks**, reported honestly as the 1-core roofline
+//!    (speedup ≈ 1.0x, overhead < a few %).
+
+use memento::bench::Suite;
+use memento::config::matrix::ConfigMatrix;
+use memento::config::value::pv_int;
+use memento::coordinator::memento::Memento;
+use memento::util::json::Json;
+use std::time::Duration;
+
+fn matrix(n: usize) -> ConfigMatrix {
+    ConfigMatrix::builder()
+        .param("i", (0..n as i64).map(pv_int).collect())
+        .build()
+        .unwrap()
+}
+
+fn cpu_work(iters: u64) -> u64 {
+    let mut x = 1u64;
+    for i in 0..iters {
+        x = x.wrapping_mul(6364136223846793005).wrapping_add(i);
+    }
+    std::hint::black_box(x)
+}
+
+fn main() {
+    let mut suite = Suite::new("E2 — parallel speedup");
+    const N_TASKS: usize = 32;
+    let m = matrix(N_TASKS);
+
+    // --- series 1: wait-bound (the paper's long-experiment regime) ---------
+    println!("\nseries 1: {N_TASKS} wait-bound tasks (50ms each, ideal serial = 1.6s)");
+    let mut serial_mean = 0.0;
+    for &workers in &[1usize, 2, 4, 8, 16] {
+        let stats = suite
+            .bench(format!("wait-bound, {workers:>2} workers"), 1, 5, |_| {
+                let r = Memento::new(|_| {
+                    std::thread::sleep(Duration::from_millis(50));
+                    cpu_work(10_000);
+                    Ok(Json::Null)
+                })
+                .workers(workers)
+                .run(&m)
+                .unwrap();
+                assert_eq!(r.len(), N_TASKS);
+            })
+            .clone();
+        if workers == 1 {
+            serial_mean = stats.mean;
+        }
+        let speedup = serial_mean / stats.mean;
+        let ideal = workers.min(N_TASKS) as f64;
+        suite.note(format!(
+            "speedup {speedup:.2}x (ideal {ideal:.0}x, efficiency {:.0}%)",
+            100.0 * speedup / ideal
+        ));
+    }
+
+    // --- series 2: CPU-bound (honest 1-core roofline) ----------------------
+    println!("\nseries 2: {N_TASKS} CPU-bound tasks (~20ms each) — single-core image");
+    let mut serial_mean = 0.0;
+    for &workers in &[1usize, 4] {
+        let stats = suite
+            .bench(format!("cpu-bound, {workers:>2} workers"), 1, 5, |_| {
+                let r = Memento::new(|_| {
+                    cpu_work(20_000_000);
+                    Ok(Json::Null)
+                })
+                .workers(workers)
+                .run(&m)
+                .unwrap();
+                assert_eq!(r.len(), N_TASKS);
+            })
+            .clone();
+        if workers == 1 {
+            serial_mean = stats.mean;
+        }
+        suite.note(format!(
+            "speedup {:.2}x (1-core roofline: 1.0x; multi-worker overhead {:+.1}%)",
+            serial_mean / stats.mean,
+            100.0 * (stats.mean - serial_mean) / serial_mean
+        ));
+    }
+
+    suite.finish();
+    println!(
+        "E2 shape check: wait-bound speedup should track the worker count up to \
+         min(workers, tasks); cpu-bound stays ≈1.0x on this 1-core testbed."
+    );
+}

@@ -1,0 +1,254 @@
+//! Micro/mezzo benchmark harness (offline `criterion` replacement).
+//!
+//! Every `benches/*.rs` target is a `harness = false` binary built on this
+//! module. Each benchmark: optional setup, warmup iterations, timed
+//! iterations with per-iteration wall clock, then summary statistics
+//! (mean / p50 / p95 / min / stddev) rendered as an aligned table. Output is
+//! intentionally plain text so `cargo bench | tee bench_output.txt`
+//! reproduces the EXPERIMENTS.md tables verbatim.
+
+use crate::util::time::fmt_secs;
+use std::time::Instant;
+
+/// Statistics over per-iteration timings (seconds).
+#[derive(Debug, Clone)]
+pub struct Stats {
+    pub iters: usize,
+    pub mean: f64,
+    pub p50: f64,
+    pub p95: f64,
+    pub min: f64,
+    pub max: f64,
+    pub stddev: f64,
+    pub total: f64,
+}
+
+impl Stats {
+    pub fn from_samples(mut samples: Vec<f64>) -> Stats {
+        assert!(!samples.is_empty());
+        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let n = samples.len();
+        let total: f64 = samples.iter().sum();
+        let mean = total / n as f64;
+        let var = samples.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        let pct = |p: f64| -> f64 {
+            let idx = ((n as f64 - 1.0) * p).round() as usize;
+            samples[idx.min(n - 1)]
+        };
+        Stats {
+            iters: n,
+            mean,
+            p50: pct(0.50),
+            p95: pct(0.95),
+            min: samples[0],
+            max: samples[n - 1],
+            stddev: var.sqrt(),
+            total,
+        }
+    }
+
+    /// Iterations per second implied by the mean.
+    pub fn throughput(&self) -> f64 {
+        if self.mean > 0.0 {
+            1.0 / self.mean
+        } else {
+            f64::INFINITY
+        }
+    }
+}
+
+/// One row of a benchmark report.
+#[derive(Debug, Clone)]
+pub struct Row {
+    pub name: String,
+    pub stats: Stats,
+    /// Optional free-form extra column (e.g. "hit-rate 100%", "speedup 3.8x").
+    pub note: String,
+}
+
+/// A named group of benchmark rows with table rendering.
+pub struct Suite {
+    title: String,
+    rows: Vec<Row>,
+}
+
+impl Suite {
+    pub fn new(title: impl Into<String>) -> Suite {
+        let title = title.into();
+        println!("\n=== bench suite: {title} ===");
+        Suite { title, rows: Vec::new() }
+    }
+
+    /// Runs a benchmark: `warmup` untimed iterations then `iters` timed ones.
+    /// The closure receives the iteration index.
+    pub fn bench(&mut self, name: impl Into<String>, warmup: usize, iters: usize, mut f: impl FnMut(usize)) -> &Stats {
+        let name = name.into();
+        for i in 0..warmup {
+            f(i);
+        }
+        let mut samples = Vec::with_capacity(iters);
+        for i in 0..iters {
+            let t = Instant::now();
+            f(i);
+            samples.push(t.elapsed().as_secs_f64());
+        }
+        let stats = Stats::from_samples(samples);
+        println!(
+            "  {name:<40} mean {:>9}  p50 {:>9}  p95 {:>9}  ({} iters)",
+            fmt_secs(stats.mean),
+            fmt_secs(stats.p50),
+            fmt_secs(stats.p95),
+            stats.iters
+        );
+        self.rows.push(Row { name, stats, note: String::new() });
+        &self.rows.last().unwrap().stats
+    }
+
+    /// Like [`Suite::bench`] but with fresh per-iteration state built by
+    /// `setup` outside the timed region.
+    pub fn bench_with_setup<S>(
+        &mut self,
+        name: impl Into<String>,
+        warmup: usize,
+        iters: usize,
+        mut setup: impl FnMut() -> S,
+        mut f: impl FnMut(S),
+    ) -> &Stats {
+        let name = name.into();
+        for _ in 0..warmup {
+            f(setup());
+        }
+        let mut samples = Vec::with_capacity(iters);
+        for _ in 0..iters {
+            let state = setup();
+            let t = Instant::now();
+            f(state);
+            samples.push(t.elapsed().as_secs_f64());
+        }
+        let stats = Stats::from_samples(samples);
+        println!(
+            "  {name:<40} mean {:>9}  p50 {:>9}  p95 {:>9}  ({} iters)",
+            fmt_secs(stats.mean),
+            fmt_secs(stats.p50),
+            fmt_secs(stats.p95),
+            stats.iters
+        );
+        self.rows.push(Row { name, stats, note: String::new() });
+        &self.rows.last().unwrap().stats
+    }
+
+    /// Attaches a note to the most recent row.
+    pub fn note(&mut self, note: impl Into<String>) {
+        if let Some(r) = self.rows.last_mut() {
+            r.note = note.into();
+        }
+    }
+
+    /// Records an externally measured sample set as a row (for end-to-end
+    /// numbers computed by the bench body itself).
+    pub fn record(&mut self, name: impl Into<String>, samples: Vec<f64>, note: impl Into<String>) {
+        let stats = Stats::from_samples(samples);
+        self.rows.push(Row { name: name.into(), stats, note: note.into() });
+    }
+
+    /// Renders the final aligned table. Call once at the end of the target.
+    pub fn finish(&self) {
+        println!("\n--- {} ---", self.title);
+        println!(
+            "{:<42} {:>10} {:>10} {:>10} {:>10} {:>12}  {}",
+            "benchmark", "mean", "p50", "p95", "min", "iters/s", "note"
+        );
+        for r in &self.rows {
+            println!(
+                "{:<42} {:>10} {:>10} {:>10} {:>10} {:>12.1}  {}",
+                truncate(&r.name, 42),
+                fmt_secs(r.stats.mean),
+                fmt_secs(r.stats.p50),
+                fmt_secs(r.stats.p95),
+                fmt_secs(r.stats.min),
+                r.stats.throughput(),
+                r.note
+            );
+        }
+        println!();
+    }
+
+    pub fn rows(&self) -> &[Row] {
+        &self.rows
+    }
+}
+
+fn truncate(s: &str, n: usize) -> String {
+    if s.len() <= n {
+        s.to_string()
+    } else {
+        format!("{}…", &s[..n.saturating_sub(1)])
+    }
+}
+
+/// Prevents the optimizer from eliding a computed value.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_basic() {
+        let s = Stats::from_samples(vec![1.0, 2.0, 3.0, 4.0, 5.0]);
+        assert_eq!(s.iters, 5);
+        assert!((s.mean - 3.0).abs() < 1e-12);
+        assert_eq!(s.p50, 3.0);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 5.0);
+        assert!((s.total - 15.0).abs() < 1e-12);
+        assert!((s.stddev - 2.0f64.sqrt()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn percentiles_on_unsorted_input() {
+        let s = Stats::from_samples(vec![5.0, 1.0, 3.0, 2.0, 4.0]);
+        assert_eq!(s.p50, 3.0);
+        assert_eq!(s.p95, 5.0);
+    }
+
+    #[test]
+    fn suite_runs_and_counts() {
+        let mut suite = Suite::new("unit");
+        let mut count = 0usize;
+        {
+            let counter = &mut count;
+            suite.bench("inc", 2, 10, |_| {
+                *counter += 1;
+            });
+        }
+        assert_eq!(count, 12); // 2 warmup + 10 timed
+        assert_eq!(suite.rows().len(), 1);
+        suite.finish();
+    }
+
+    #[test]
+    fn bench_with_setup_not_timed() {
+        let mut suite = Suite::new("setup");
+        let stats = suite
+            .bench_with_setup(
+                "noop-after-sleepy-setup",
+                0,
+                3,
+                || std::thread::sleep(std::time::Duration::from_millis(3)),
+                |_| {},
+            )
+            .clone();
+        // Setup sleep must not be in the timed region.
+        assert!(stats.mean < 0.002, "mean={}", stats.mean);
+    }
+
+    #[test]
+    fn throughput_sane() {
+        let s = Stats::from_samples(vec![0.001; 10]);
+        assert!((s.throughput() - 1000.0).abs() < 1.0);
+    }
+}

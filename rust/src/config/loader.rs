@@ -1,0 +1,188 @@
+//! Loading configuration matrices from JSON files.
+//!
+//! The on-disk shape mirrors the paper's Python dict exactly:
+//!
+//! ```json
+//! {
+//!   "parameters": {
+//!     "dataset": ["digits", "wine", "breast_cancer"],
+//!     "model": ["AdaBoost", "RandomForest", "SVC"]
+//!   },
+//!   "settings": {"n_fold": 5},
+//!   "exclude": [{"dataset": "digits", "feature_engineering": "SimpleImputer"}]
+//! }
+//! ```
+//!
+//! `settings` and `exclude` are optional. Parameter order follows sorted key
+//! order (JSON objects are unordered); ordering affects only the order tasks
+//! are *generated* in, never task identity or hashing.
+
+use crate::config::matrix::{ConfigMatrix, ExcludeRule};
+use crate::config::value::ParamValue;
+use crate::coordinator::error::MementoError;
+use crate::util::json::{parse, Json};
+use std::path::Path;
+
+/// Parses a matrix from JSON text and validates it.
+pub fn from_str(text: &str) -> Result<ConfigMatrix, MementoError> {
+    let doc = parse(text).map_err(|e| MementoError::config(format!("invalid JSON: {e}")))?;
+    from_json(&doc)
+}
+
+/// Reads and parses a matrix from a file.
+pub fn from_file(path: &Path) -> Result<ConfigMatrix, MementoError> {
+    let text = std::fs::read_to_string(path).map_err(|e| {
+        MementoError::config(format!("cannot read config '{}': {e}", path.display()))
+    })?;
+    from_str(&text)
+}
+
+/// Converts a parsed JSON document into a validated matrix.
+pub fn from_json(doc: &Json) -> Result<ConfigMatrix, MementoError> {
+    let params_obj = doc
+        .get("parameters")
+        .and_then(|p| p.as_obj())
+        .ok_or_else(|| MementoError::config("config must have an object field 'parameters'"))?;
+
+    let mut parameters = Vec::with_capacity(params_obj.len());
+    for (name, domain_json) in params_obj {
+        let arr = domain_json.as_arr().ok_or_else(|| {
+            MementoError::config(format!("parameter '{name}' must map to an array"))
+        })?;
+        let mut domain = Vec::with_capacity(arr.len());
+        for (i, v) in arr.iter().enumerate() {
+            let pv = ParamValue::from_json(v).ok_or_else(|| {
+                MementoError::config(format!(
+                    "parameter '{name}' value #{i} must be a scalar (string/number/bool)"
+                ))
+            })?;
+            domain.push(pv);
+        }
+        parameters.push((name.clone(), domain));
+    }
+
+    let settings = match doc.get("settings") {
+        None => Default::default(),
+        Some(Json::Obj(o)) => o.clone(),
+        Some(_) => return Err(MementoError::config("'settings' must be an object")),
+    };
+
+    let exclude = match doc.get("exclude") {
+        None => Vec::new(),
+        Some(Json::Arr(rules)) => {
+            let mut out: Vec<ExcludeRule> = Vec::with_capacity(rules.len());
+            for (ri, rule) in rules.iter().enumerate() {
+                let obj = rule.as_obj().ok_or_else(|| {
+                    MementoError::config(format!("exclude rule #{ri} must be an object"))
+                })?;
+                let mut r = ExcludeRule::new();
+                for (k, v) in obj {
+                    let pv = ParamValue::from_json(v).ok_or_else(|| {
+                        MementoError::config(format!(
+                            "exclude rule #{ri} key '{k}' must map to a scalar"
+                        ))
+                    })?;
+                    r.insert(k.clone(), pv);
+                }
+                out.push(r);
+            }
+            out
+        }
+        Some(_) => return Err(MementoError::config("'exclude' must be an array")),
+    };
+
+    let m = ConfigMatrix { parameters, settings, exclude };
+    crate::config::validate::validate(&m)?;
+    Ok(m)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::value::{pv_int, pv_str};
+
+    const PAPER_JSON: &str = r#"{
+        "parameters": {
+            "dataset": ["digits", "wine", "breast_cancer"],
+            "feature_engineering": ["DummyImputer", "SimpleImputer"],
+            "preprocessing": ["DummyPreprocessor", "MinMaxScaler", "StandardScaler"],
+            "model": ["AdaBoost", "RandomForest", "SVC"]
+        },
+        "settings": {"n_fold": 5},
+        "exclude": [{"dataset": "digits", "feature_engineering": "SimpleImputer"}]
+    }"#;
+
+    #[test]
+    fn loads_paper_config() {
+        let m = from_str(PAPER_JSON).unwrap();
+        assert_eq!(m.raw_count(), 54);
+        assert_eq!(m.settings["n_fold"].as_i64(), Some(5));
+        assert_eq!(m.exclude.len(), 1);
+        assert_eq!(m.exclude[0]["dataset"], pv_str("digits"));
+    }
+
+    #[test]
+    fn settings_and_exclude_optional() {
+        let m = from_str(r#"{"parameters": {"x": [1, 2, 3]}}"#).unwrap();
+        assert_eq!(m.raw_count(), 3);
+        assert!(m.settings.is_empty());
+        assert!(m.exclude.is_empty());
+        assert_eq!(m.domain("x").unwrap()[0], pv_int(1));
+    }
+
+    #[test]
+    fn mixed_scalar_domains() {
+        let m = from_str(r#"{"parameters": {"lr": [0.1, 0.01], "deep": [true, false], "n": [1, 2]}}"#)
+            .unwrap();
+        assert_eq!(m.raw_count(), 8);
+    }
+
+    #[test]
+    fn missing_parameters_field() {
+        let e = from_str(r#"{"settings": {}}"#).unwrap_err();
+        assert!(e.to_string().contains("parameters"), "{e}");
+    }
+
+    #[test]
+    fn non_array_domain() {
+        let e = from_str(r#"{"parameters": {"x": 5}}"#).unwrap_err();
+        assert!(e.to_string().contains("must map to an array"), "{e}");
+    }
+
+    #[test]
+    fn non_scalar_domain_value() {
+        let e = from_str(r#"{"parameters": {"x": [[1]]}}"#).unwrap_err();
+        assert!(e.to_string().contains("scalar"), "{e}");
+    }
+
+    #[test]
+    fn bad_exclude_shapes() {
+        let e = from_str(r#"{"parameters": {"x": [1]}, "exclude": [5]}"#).unwrap_err();
+        assert!(e.to_string().contains("must be an object"), "{e}");
+        let e = from_str(r#"{"parameters": {"x": [1]}, "exclude": {}}"#).unwrap_err();
+        assert!(e.to_string().contains("must be an array"), "{e}");
+    }
+
+    #[test]
+    fn invalid_json_reports_position() {
+        let e = from_str("{nope}").unwrap_err();
+        assert!(e.to_string().contains("invalid JSON"), "{e}");
+    }
+
+    #[test]
+    fn validation_applies_on_load() {
+        // exclude referencing unknown key must fail through the loader too
+        let e = from_str(r#"{"parameters": {"x": [1]}, "exclude": [{"y": 1}]}"#).unwrap_err();
+        assert!(e.to_string().contains("unknown parameter"), "{e}");
+    }
+
+    #[test]
+    fn file_roundtrip() {
+        let td = crate::util::fs::TempDir::new("loader").unwrap();
+        let p = td.join("config.json");
+        crate::util::fs::atomic_write(&p, PAPER_JSON.as_bytes()).unwrap();
+        let m = from_file(&p).unwrap();
+        assert_eq!(m.raw_count(), 54);
+        assert!(from_file(&td.join("missing.json")).is_err());
+    }
+}

@@ -1,0 +1,222 @@
+//! The configuration matrix — the core abstraction of the paper (§3).
+//!
+//! A [`ConfigMatrix`] declares, exactly like the paper's Python dict:
+//! - `parameters`: named, ordered domains of [`ParamValue`]s whose cartesian
+//!   product defines the experiment set,
+//! - `settings`: constants visible to every task (the paper: "removing the
+//!   need to access global constants"),
+//! - `exclude`: partial assignments; any product combination matching *all*
+//!   pairs of an exclude rule is skipped ("a lookup table to skip any
+//!   unwanted combinations").
+
+use crate::config::value::ParamValue;
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+
+/// One exclusion rule: a partial parameter assignment.
+pub type ExcludeRule = BTreeMap<String, ParamValue>;
+
+/// A fully specified experiment configuration matrix.
+#[derive(Debug, Clone)]
+pub struct ConfigMatrix {
+    /// Parameter domains in declaration order (order affects task ordering,
+    /// not task identity).
+    pub parameters: Vec<(String, Vec<ParamValue>)>,
+    /// Run-wide constants accessible from every task.
+    pub settings: BTreeMap<String, Json>,
+    /// Combinations to skip.
+    pub exclude: Vec<ExcludeRule>,
+}
+
+impl ConfigMatrix {
+    pub fn builder() -> MatrixBuilder {
+        MatrixBuilder::default()
+    }
+
+    /// Number of combinations before exclusion (the paper's 3×2×3×3 = 54).
+    pub fn raw_count(&self) -> usize {
+        self.parameters.iter().map(|(_, d)| d.len()).product()
+    }
+
+    /// Domain of a parameter by name.
+    pub fn domain(&self, name: &str) -> Option<&[ParamValue]> {
+        self.parameters
+            .iter()
+            .find(|(n, _)| n == name)
+            .map(|(_, d)| d.as_slice())
+    }
+
+    /// Parameter names in declaration order.
+    pub fn param_names(&self) -> Vec<&str> {
+        self.parameters.iter().map(|(n, _)| n.as_str()).collect()
+    }
+
+    /// Serializes to the paper's JSON shape.
+    pub fn to_json(&self) -> Json {
+        let params = Json::Obj(
+            self.parameters
+                .iter()
+                .map(|(n, d)| {
+                    (
+                        n.clone(),
+                        Json::Arr(d.iter().map(|v| v.to_json()).collect()),
+                    )
+                })
+                .collect(),
+        );
+        let excl = Json::Arr(
+            self.exclude
+                .iter()
+                .map(|rule| {
+                    Json::Obj(rule.iter().map(|(k, v)| (k.clone(), v.to_json())).collect())
+                })
+                .collect(),
+        );
+        Json::obj(vec![
+            ("parameters", params),
+            ("settings", Json::Obj(self.settings.clone())),
+            ("exclude", excl),
+        ])
+    }
+
+    /// A stable fingerprint of the matrix (canonical JSON). Checkpoint
+    /// manifests store this to refuse resuming against a *different* matrix.
+    pub fn fingerprint(&self) -> String {
+        crate::coordinator::task::sha256_hex(self.to_json().canonical().as_bytes())
+    }
+}
+
+/// Fluent builder for [`ConfigMatrix`].
+#[derive(Debug, Default)]
+pub struct MatrixBuilder {
+    parameters: Vec<(String, Vec<ParamValue>)>,
+    settings: BTreeMap<String, Json>,
+    exclude: Vec<ExcludeRule>,
+}
+
+impl MatrixBuilder {
+    /// Adds a parameter with its domain of values.
+    pub fn param(mut self, name: impl Into<String>, domain: Vec<ParamValue>) -> Self {
+        self.parameters.push((name.into(), domain));
+        self
+    }
+
+    /// Adds a run-wide setting.
+    pub fn setting(mut self, name: impl Into<String>, value: Json) -> Self {
+        self.settings.insert(name.into(), value);
+        self
+    }
+
+    /// Adds an exclusion rule from (name, value) pairs.
+    pub fn exclude(mut self, pairs: Vec<(&str, ParamValue)>) -> Self {
+        self.exclude.push(
+            pairs
+                .into_iter()
+                .map(|(k, v)| (k.to_string(), v))
+                .collect(),
+        );
+        self
+    }
+
+    /// Validates and constructs the matrix (see [`crate::config::validate`]).
+    pub fn build(self) -> Result<ConfigMatrix, crate::coordinator::error::MementoError> {
+        let m = ConfigMatrix {
+            parameters: self.parameters,
+            settings: self.settings,
+            exclude: self.exclude,
+        };
+        crate::config::validate::validate(&m)?;
+        Ok(m)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::value::{pv_int, pv_str};
+
+    fn paper_matrix() -> ConfigMatrix {
+        // The §3 example: 3 datasets × 2 FE × 3 preprocessing × 3 models.
+        ConfigMatrix::builder()
+            .param(
+                "dataset",
+                vec![pv_str("digits"), pv_str("wine"), pv_str("breast_cancer")],
+            )
+            .param(
+                "feature_engineering",
+                vec![pv_str("DummyImputer"), pv_str("SimpleImputer")],
+            )
+            .param(
+                "preprocessing",
+                vec![
+                    pv_str("DummyPreprocessor"),
+                    pv_str("MinMaxScaler"),
+                    pv_str("StandardScaler"),
+                ],
+            )
+            .param(
+                "model",
+                vec![pv_str("AdaBoost"), pv_str("RandomForest"), pv_str("SVC")],
+            )
+            .setting("n_fold", Json::int(5))
+            .exclude(vec![
+                ("dataset", pv_str("digits")),
+                ("feature_engineering", pv_str("SimpleImputer")),
+            ])
+            .build()
+            .unwrap()
+    }
+
+    #[test]
+    fn raw_count_matches_paper() {
+        assert_eq!(paper_matrix().raw_count(), 54);
+    }
+
+    #[test]
+    fn domain_lookup() {
+        let m = paper_matrix();
+        assert_eq!(m.domain("model").unwrap().len(), 3);
+        assert!(m.domain("nope").is_none());
+        assert_eq!(
+            m.param_names(),
+            vec!["dataset", "feature_engineering", "preprocessing", "model"]
+        );
+    }
+
+    #[test]
+    fn fingerprint_stable_and_sensitive() {
+        let a = paper_matrix();
+        let b = paper_matrix();
+        assert_eq!(a.fingerprint(), b.fingerprint());
+        let c = ConfigMatrix::builder()
+            .param("dataset", vec![pv_str("digits")])
+            .build()
+            .unwrap();
+        assert_ne!(a.fingerprint(), c.fingerprint());
+    }
+
+    #[test]
+    fn json_roundtrip_via_loader() {
+        let m = paper_matrix();
+        let text = m.to_json().pretty();
+        let back = crate::config::loader::from_str(&text).unwrap();
+        assert_eq!(back.raw_count(), 54);
+        assert_eq!(back.fingerprint(), m.fingerprint());
+        assert_eq!(back.settings.get("n_fold").unwrap().as_i64(), Some(5));
+        assert_eq!(back.exclude.len(), 1);
+    }
+
+    #[test]
+    fn builder_settings_and_excludes() {
+        let m = ConfigMatrix::builder()
+            .param("a", vec![pv_int(1), pv_int(2)])
+            .param("b", vec![pv_int(3)])
+            .setting("k", Json::str("v"))
+            .exclude(vec![("a", pv_int(1))])
+            .build()
+            .unwrap();
+        assert_eq!(m.raw_count(), 2);
+        assert_eq!(m.settings["k"].as_str(), Some("v"));
+        assert_eq!(m.exclude[0]["a"], pv_int(1));
+    }
+}

@@ -1,0 +1,8 @@
+//! Configuration matrices: typed parameter values, the matrix itself,
+//! JSON loading, and validation (the paper's §3 `config_matrix`).
+
+pub mod loader;
+pub mod sweep;
+pub mod matrix;
+pub mod validate;
+pub mod value;

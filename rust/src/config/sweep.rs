@@ -1,0 +1,261 @@
+//! Sweep helpers beyond the plain cartesian product.
+//!
+//! The paper's matrix is a full grid; real campaigns often want more:
+//!
+//! - [`random_subset`] — random search: a seeded uniform sample of the
+//!   expansion (without replacement), as one would do when the full grid
+//!   is too large;
+//! - [`zip_params`] — paired parameters that move together (e.g.
+//!   `(dataset, epochs)` tuned per dataset) instead of crossing;
+//! - [`union`] — concatenate the task lists of several matrices
+//!   (heterogeneous campaign stages under one run);
+//! - [`with_overrides`] — a matrix with some parameters pinned (ablation
+//!   slices of a bigger grid).
+
+use crate::config::matrix::ConfigMatrix;
+use crate::config::value::ParamValue;
+use crate::coordinator::error::MementoError;
+use crate::coordinator::expand;
+use crate::coordinator::task::TaskSpec;
+use crate::util::rng::Rng;
+
+/// Uniformly samples `k` distinct tasks from the matrix expansion
+/// (deterministic in `seed`). `k` larger than the expansion returns all.
+pub fn random_subset(matrix: &ConfigMatrix, k: usize, seed: u64) -> Vec<TaskSpec> {
+    let mut tasks = expand::expand(matrix);
+    let mut rng = Rng::new(seed);
+    rng.shuffle(&mut tasks);
+    tasks.truncate(k);
+    // Re-index so downstream ordering is stable.
+    tasks.sort_by_key(|t| t.index);
+    for (i, t) in tasks.iter_mut().enumerate() {
+        t.index = i;
+    }
+    tasks
+}
+
+/// Builds tasks where the listed parameters are *zipped* (paired by
+/// position) rather than crossed; remaining parameters still cross.
+///
+/// All zipped domains must have equal length.
+pub fn zip_params(
+    matrix: &ConfigMatrix,
+    zipped: &[&str],
+) -> Result<Vec<TaskSpec>, MementoError> {
+    if zipped.is_empty() {
+        return Ok(expand::expand(matrix));
+    }
+    let mut zip_len = None;
+    for name in zipped {
+        let d = matrix.domain(name).ok_or_else(|| {
+            MementoError::config(format!("zip_params: unknown parameter '{name}'"))
+        })?;
+        match zip_len {
+            None => zip_len = Some(d.len()),
+            Some(l) if l != d.len() => {
+                return Err(MementoError::config(format!(
+                    "zip_params: '{name}' has {} values, expected {l}",
+                    d.len()
+                )))
+            }
+            _ => {}
+        }
+    }
+    let zip_len = zip_len.unwrap();
+
+    // Cross the non-zipped parameters, then splice each zip row in.
+    let rest: Vec<(String, Vec<ParamValue>)> = matrix
+        .parameters
+        .iter()
+        .filter(|(n, _)| !zipped.contains(&n.as_str()))
+        .cloned()
+        .collect();
+    let rest_matrix = ConfigMatrix {
+        parameters: if rest.is_empty() {
+            vec![("__unit".to_string(), vec![ParamValue::Int(0)])]
+        } else {
+            rest
+        },
+        settings: matrix.settings.clone(),
+        exclude: Vec::new(),
+    };
+
+    let mut out = Vec::new();
+    let mut index = 0;
+    for rest_spec in expand::expand(&rest_matrix) {
+        for zi in 0..zip_len {
+            let mut params: Vec<(String, ParamValue)> = matrix
+                .parameters
+                .iter()
+                .map(|(name, domain)| {
+                    if zipped.contains(&name.as_str()) {
+                        (name.clone(), domain[zi].clone())
+                    } else {
+                        (
+                            name.clone(),
+                            rest_spec.get(name).expect("crossed param").clone(),
+                        )
+                    }
+                })
+                .collect();
+            params.retain(|(n, _)| n != "__unit");
+            let spec = TaskSpec { params, index };
+            if !expand::is_excluded(&spec, &matrix.exclude) {
+                out.push(spec);
+                index += 1;
+            }
+        }
+    }
+    Ok(out)
+}
+
+/// Concatenates the expansions of several matrices, re-indexing.
+pub fn union(matrices: &[&ConfigMatrix]) -> Vec<TaskSpec> {
+    let mut out = Vec::new();
+    for m in matrices {
+        for mut t in expand::expand(m) {
+            t.index = out.len();
+            out.push(t);
+        }
+    }
+    out
+}
+
+/// A copy of the matrix with some parameters pinned to a single value
+/// (ablation slice). Pinned names must exist; values must be in-domain.
+pub fn with_overrides(
+    matrix: &ConfigMatrix,
+    pins: &[(&str, ParamValue)],
+) -> Result<ConfigMatrix, MementoError> {
+    let mut m = matrix.clone();
+    for (name, value) in pins {
+        let slot = m
+            .parameters
+            .iter_mut()
+            .find(|(n, _)| n == name)
+            .ok_or_else(|| {
+                MementoError::config(format!("override: unknown parameter '{name}'"))
+            })?;
+        if !slot.1.iter().any(|v| v == value) {
+            return Err(MementoError::config(format!(
+                "override: value '{value}' not in the domain of '{name}'"
+            )));
+        }
+        slot.1 = vec![value.clone()];
+    }
+    crate::config::validate::validate(&m)?;
+    Ok(m)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::value::{pv_int, pv_str};
+
+    fn matrix() -> ConfigMatrix {
+        ConfigMatrix::builder()
+            .param("a", vec![pv_int(0), pv_int(1), pv_int(2)])
+            .param("b", vec![pv_str("x"), pv_str("y")])
+            .build()
+            .unwrap()
+    }
+
+    #[test]
+    fn random_subset_is_distinct_and_seeded() {
+        let m = matrix();
+        let s1 = random_subset(&m, 4, 7);
+        let s2 = random_subset(&m, 4, 7);
+        assert_eq!(s1.len(), 4);
+        assert_eq!(
+            s1.iter().map(|t| t.label()).collect::<Vec<_>>(),
+            s2.iter().map(|t| t.label()).collect::<Vec<_>>()
+        );
+        let mut labels: Vec<_> = s1.iter().map(|t| t.label()).collect();
+        labels.sort();
+        labels.dedup();
+        assert_eq!(labels.len(), 4, "distinct");
+        // k > expansion returns everything
+        assert_eq!(random_subset(&m, 100, 0).len(), 6);
+        // indices contiguous
+        for (i, t) in random_subset(&m, 4, 9).iter().enumerate() {
+            assert_eq!(t.index, i);
+        }
+    }
+
+    #[test]
+    fn zip_pairs_instead_of_crossing() {
+        let m = ConfigMatrix::builder()
+            .param("dataset", vec![pv_str("wine"), pv_str("digits")])
+            .param("epochs", vec![pv_int(10), pv_int(50)])
+            .param("model", vec![pv_str("SVC"), pv_str("MLP")])
+            .build()
+            .unwrap();
+        let tasks = zip_params(&m, &["dataset", "epochs"]).unwrap();
+        // 2 zip rows × 2 models = 4 (instead of 8 crossed)
+        assert_eq!(tasks.len(), 4);
+        for t in &tasks {
+            let ds = t.get("dataset").unwrap().as_str().unwrap();
+            let ep = t.get("epochs").unwrap().as_i64().unwrap();
+            assert!(
+                (ds == "wine" && ep == 10) || (ds == "digits" && ep == 50),
+                "unzipped pair {ds}/{ep}"
+            );
+        }
+    }
+
+    #[test]
+    fn zip_respects_excludes_and_validates() {
+        let m = ConfigMatrix::builder()
+            .param("a", vec![pv_int(0), pv_int(1)])
+            .param("b", vec![pv_int(0), pv_int(1)])
+            .exclude(vec![("a", pv_int(0))])
+            .build()
+            .unwrap();
+        let tasks = zip_params(&m, &["a", "b"]).unwrap();
+        assert_eq!(tasks.len(), 1); // (1,1) only; (0,0) excluded
+        // length mismatch errors
+        let m = ConfigMatrix::builder()
+            .param("a", vec![pv_int(0), pv_int(1)])
+            .param("b", vec![pv_int(0)])
+            .build()
+            .unwrap();
+        assert!(zip_params(&m, &["a", "b"]).is_err());
+        assert!(zip_params(&m, &["nope"]).is_err());
+    }
+
+    #[test]
+    fn zip_all_params() {
+        let m = ConfigMatrix::builder()
+            .param("a", vec![pv_int(0), pv_int(1)])
+            .param("b", vec![pv_int(5), pv_int(6)])
+            .build()
+            .unwrap();
+        let tasks = zip_params(&m, &["a", "b"]).unwrap();
+        assert_eq!(tasks.len(), 2);
+        assert_eq!(tasks[0].get("b"), Some(&pv_int(5)));
+    }
+
+    #[test]
+    fn union_concatenates_and_reindexes() {
+        let m1 = matrix();
+        let m2 = ConfigMatrix::builder()
+            .param("c", vec![pv_int(9)])
+            .build()
+            .unwrap();
+        let all = union(&[&m1, &m2]);
+        assert_eq!(all.len(), 7);
+        for (i, t) in all.iter().enumerate() {
+            assert_eq!(t.index, i);
+        }
+        assert!(all[6].get("c").is_some());
+    }
+
+    #[test]
+    fn overrides_pin_parameters() {
+        let m = matrix();
+        let sliced = with_overrides(&m, &[("a", pv_int(1))]).unwrap();
+        assert_eq!(sliced.raw_count(), 2);
+        assert!(with_overrides(&m, &[("zzz", pv_int(0))]).is_err());
+        assert!(with_overrides(&m, &[("a", pv_int(99))]).is_err());
+    }
+}

@@ -1,0 +1,138 @@
+//! Configuration-matrix validation.
+//!
+//! Catching specification mistakes *before* expansion is a big part of the
+//! paper's "reliable experiments" story: a typo in an exclude rule silently
+//! skipping nothing (or everything) is exactly the class of error that used
+//! to require "tedious debugging". Every rule here turns one such mistake
+//! into an immediate, named error.
+
+use crate::config::matrix::ConfigMatrix;
+use crate::coordinator::error::MementoError;
+
+/// Validates a matrix. Returns the first violated rule.
+///
+/// Rules:
+/// 1. at least one parameter;
+/// 2. parameter names are unique and non-empty;
+/// 3. every domain is non-empty;
+/// 4. no duplicate values within a domain (duplicate tasks would collide in
+///    the cache and silently halve the experiment set);
+/// 5. every exclude key names a declared parameter;
+/// 6. every exclude value is a member of that parameter's domain;
+/// 7. exclude rules are non-empty (an empty rule would match — and skip —
+///    every combination).
+pub fn validate(m: &ConfigMatrix) -> Result<(), MementoError> {
+    if m.parameters.is_empty() {
+        return Err(MementoError::config("matrix declares no parameters"));
+    }
+    let mut seen = std::collections::BTreeSet::new();
+    for (name, domain) in &m.parameters {
+        if name.is_empty() {
+            return Err(MementoError::config("parameter with empty name"));
+        }
+        if !seen.insert(name.clone()) {
+            return Err(MementoError::config(format!(
+                "duplicate parameter name '{name}'"
+            )));
+        }
+        if domain.is_empty() {
+            return Err(MementoError::config(format!(
+                "parameter '{name}' has an empty domain"
+            )));
+        }
+        for (i, v) in domain.iter().enumerate() {
+            for w in &domain[i + 1..] {
+                if v == w {
+                    return Err(MementoError::config(format!(
+                        "parameter '{name}' has duplicate value '{v}'"
+                    )));
+                }
+            }
+        }
+    }
+    for (ri, rule) in m.exclude.iter().enumerate() {
+        if rule.is_empty() {
+            return Err(MementoError::config(format!(
+                "exclude rule #{ri} is empty (would exclude every task)"
+            )));
+        }
+        for (key, val) in rule {
+            let domain = m.domain(key).ok_or_else(|| {
+                MementoError::config(format!(
+                    "exclude rule #{ri} references unknown parameter '{key}'"
+                ))
+            })?;
+            if !domain.iter().any(|d| d == val) {
+                return Err(MementoError::config(format!(
+                    "exclude rule #{ri}: value '{val}' is not in the domain of '{key}'"
+                )));
+            }
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::config::matrix::ConfigMatrix;
+    use crate::config::value::{pv_int, pv_str};
+
+    fn base() -> crate::config::matrix::MatrixBuilder {
+        ConfigMatrix::builder()
+            .param("a", vec![pv_int(1), pv_int(2)])
+            .param("b", vec![pv_str("x")])
+    }
+
+    #[test]
+    fn valid_matrix_passes() {
+        assert!(base().build().is_ok());
+    }
+
+    #[test]
+    fn no_parameters_fails() {
+        let err = ConfigMatrix::builder().build().unwrap_err();
+        assert!(err.to_string().contains("no parameters"), "{err}");
+    }
+
+    #[test]
+    fn duplicate_param_name_fails() {
+        let err = base().param("a", vec![pv_int(9)]).build().unwrap_err();
+        assert!(err.to_string().contains("duplicate parameter"), "{err}");
+    }
+
+    #[test]
+    fn empty_domain_fails() {
+        let err = base().param("c", vec![]).build().unwrap_err();
+        assert!(err.to_string().contains("empty domain"), "{err}");
+    }
+
+    #[test]
+    fn duplicate_domain_value_fails() {
+        let err = base()
+            .param("c", vec![pv_int(1), pv_int(1)])
+            .build()
+            .unwrap_err();
+        assert!(err.to_string().contains("duplicate value"), "{err}");
+    }
+
+    #[test]
+    fn exclude_unknown_key_fails() {
+        let err = base()
+            .exclude(vec![("nope", pv_int(1))])
+            .build()
+            .unwrap_err();
+        assert!(err.to_string().contains("unknown parameter"), "{err}");
+    }
+
+    #[test]
+    fn exclude_value_outside_domain_fails() {
+        let err = base().exclude(vec![("a", pv_int(99))]).build().unwrap_err();
+        assert!(err.to_string().contains("not in the domain"), "{err}");
+    }
+
+    #[test]
+    fn empty_exclude_rule_fails() {
+        let err = base().exclude(vec![]).build().unwrap_err();
+        assert!(err.to_string().contains("is empty"), "{err}");
+    }
+}

@@ -1,0 +1,184 @@
+//! Parameter values for the configuration matrix.
+//!
+//! In the paper's Python API a parameter value can be any object (a dataset
+//! loader, an estimator class, …). In Rust the matrix stores *descriptions*
+//! — typed scalar values, usually strings naming a component — and the
+//! experiment function maps them to concrete behaviour. This keeps tasks
+//! serializable, hashable, and cache-stable.
+
+use crate::util::json::Json;
+use std::cmp::Ordering;
+use std::fmt;
+
+/// A single parameter value in the configuration matrix.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ParamValue {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+}
+
+/// Shorthand constructors (used heavily in configs and tests).
+pub fn pv_str(s: impl Into<String>) -> ParamValue {
+    ParamValue::Str(s.into())
+}
+pub fn pv_int(i: i64) -> ParamValue {
+    ParamValue::Int(i)
+}
+pub fn pv_f64(f: f64) -> ParamValue {
+    ParamValue::Float(f)
+}
+pub fn pv_bool(b: bool) -> ParamValue {
+    ParamValue::Bool(b)
+}
+
+impl ParamValue {
+    /// Converts to JSON for persistence/hashing.
+    pub fn to_json(&self) -> Json {
+        match self {
+            ParamValue::Str(s) => Json::Str(s.clone()),
+            ParamValue::Int(i) => Json::int(*i),
+            ParamValue::Float(f) => Json::Num(*f),
+            ParamValue::Bool(b) => Json::Bool(*b),
+        }
+    }
+
+    /// Parses from JSON. Integer-valued numbers become [`ParamValue::Int`]
+    /// so that `1` and `1.0` are the same value (matching JSON semantics and
+    /// keeping hashes stable across writers).
+    pub fn from_json(j: &Json) -> Option<ParamValue> {
+        match j {
+            Json::Str(s) => Some(ParamValue::Str(s.clone())),
+            Json::Bool(b) => Some(ParamValue::Bool(*b)),
+            Json::Num(n) => {
+                if n.fract() == 0.0 && n.abs() < 9.0e15 {
+                    Some(ParamValue::Int(*n as i64))
+                } else {
+                    Some(ParamValue::Float(*n))
+                }
+            }
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            ParamValue::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_i64(&self) -> Option<i64> {
+        match self {
+            ParamValue::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            ParamValue::Float(f) => Some(*f),
+            ParamValue::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            ParamValue::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    /// Total order for deterministic sorting of domains/excludes.
+    pub fn cmp_total(&self, other: &ParamValue) -> Ordering {
+        fn rank(v: &ParamValue) -> u8 {
+            match v {
+                ParamValue::Bool(_) => 0,
+                ParamValue::Int(_) => 1,
+                ParamValue::Float(_) => 2,
+                ParamValue::Str(_) => 3,
+            }
+        }
+        match (self, other) {
+            (ParamValue::Bool(a), ParamValue::Bool(b)) => a.cmp(b),
+            (ParamValue::Int(a), ParamValue::Int(b)) => a.cmp(b),
+            (ParamValue::Float(a), ParamValue::Float(b)) => {
+                a.partial_cmp(b).unwrap_or(Ordering::Equal)
+            }
+            (ParamValue::Str(a), ParamValue::Str(b)) => a.cmp(b),
+            (a, b) => rank(a).cmp(&rank(b)),
+        }
+    }
+}
+
+impl fmt::Display for ParamValue {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ParamValue::Str(s) => write!(f, "{s}"),
+            ParamValue::Int(i) => write!(f, "{i}"),
+            ParamValue::Float(x) => write!(f, "{x}"),
+            ParamValue::Bool(b) => write!(f, "{b}"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json::parse;
+
+    #[test]
+    fn json_roundtrip() {
+        let vals = [pv_str("abc"), pv_int(-4), pv_f64(2.5), pv_bool(true)];
+        for v in vals {
+            let j = v.to_json();
+            assert_eq!(ParamValue::from_json(&j), Some(v));
+        }
+    }
+
+    #[test]
+    fn integral_floats_normalize_to_int() {
+        let j = parse("3.0").unwrap();
+        assert_eq!(ParamValue::from_json(&j), Some(pv_int(3)));
+        let j = parse("3.5").unwrap();
+        assert_eq!(ParamValue::from_json(&j), Some(pv_f64(3.5)));
+    }
+
+    #[test]
+    fn arrays_and_objects_rejected() {
+        assert_eq!(ParamValue::from_json(&parse("[1]").unwrap()), None);
+        assert_eq!(ParamValue::from_json(&parse("{}").unwrap()), None);
+        assert_eq!(ParamValue::from_json(&Json::Null), None);
+    }
+
+    #[test]
+    fn accessors() {
+        assert_eq!(pv_str("x").as_str(), Some("x"));
+        assert_eq!(pv_int(7).as_i64(), Some(7));
+        assert_eq!(pv_int(7).as_f64(), Some(7.0));
+        assert_eq!(pv_f64(1.5).as_f64(), Some(1.5));
+        assert_eq!(pv_bool(true).as_bool(), Some(true));
+        assert_eq!(pv_str("x").as_i64(), None);
+    }
+
+    #[test]
+    fn total_order_is_total() {
+        let mut vals = vec![pv_str("b"), pv_int(2), pv_bool(false), pv_f64(0.5), pv_str("a"), pv_int(1)];
+        vals.sort_by(|a, b| a.cmp_total(b));
+        // bools < ints < floats < strings
+        assert_eq!(vals[0], pv_bool(false));
+        assert_eq!(vals[1], pv_int(1));
+        assert_eq!(vals[2], pv_int(2));
+        assert_eq!(vals[3], pv_f64(0.5));
+        assert_eq!(vals[4], pv_str("a"));
+        assert_eq!(vals[5], pv_str("b"));
+    }
+
+    #[test]
+    fn display_is_plain() {
+        assert_eq!(pv_str("RandomForest").to_string(), "RandomForest");
+        assert_eq!(pv_int(5).to_string(), "5");
+    }
+}

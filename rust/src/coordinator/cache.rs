@@ -1,0 +1,280 @@
+//! Content-addressed result cache.
+//!
+//! "To avoid running duplicate experiments, we specify to restore
+//! checkpoints if available" (§3). The cache maps a [`TaskId`] (hash of the
+//! parameter assignment + experiment version) to the task's result value on
+//! disk: one JSON file per entry under `<dir>/<id>.json`, written atomically.
+//!
+//! Corruption tolerance: an unreadable/unparsable entry behaves as a miss
+//! (and is counted), never as an error — a half-written file from a crash
+//! must not wedge the rerun whose whole purpose is to recover from that
+//! crash.
+
+use crate::coordinator::task::{TaskId, TaskSpec};
+use crate::util::fs::atomic_write;
+use crate::util::json::{parse, Json};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Hit/miss/corruption counters (shared across worker threads).
+#[derive(Debug, Default)]
+pub struct CacheStats {
+    pub hits: AtomicU64,
+    pub misses: AtomicU64,
+    pub writes: AtomicU64,
+    pub corrupt: AtomicU64,
+}
+
+impl CacheStats {
+    pub fn hit_rate(&self) -> f64 {
+        let h = self.hits.load(Ordering::Relaxed) as f64;
+        let m = self.misses.load(Ordering::Relaxed) as f64;
+        if h + m == 0.0 {
+            0.0
+        } else {
+            h / (h + m)
+        }
+    }
+
+    pub fn snapshot(&self) -> (u64, u64, u64, u64) {
+        (
+            self.hits.load(Ordering::Relaxed),
+            self.misses.load(Ordering::Relaxed),
+            self.writes.load(Ordering::Relaxed),
+            self.corrupt.load(Ordering::Relaxed),
+        )
+    }
+}
+
+/// On-disk result cache. Thread-safe: all methods take `&self`.
+pub struct ResultCache {
+    dir: PathBuf,
+    stats: CacheStats,
+    /// fsync entries on write. Default **false**: cache entries are
+    /// recomputable, so losing one to a power cut is a miss, not
+    /// corruption — and skipping the fsync makes `put` ~5-10× cheaper
+    /// (see EXPERIMENTS.md §Perf-L3). Opt in via [`ResultCache::durable`].
+    fsync: bool,
+}
+
+impl ResultCache {
+    /// Opens (creating if needed) a cache directory.
+    pub fn open(dir: impl Into<PathBuf>) -> std::io::Result<ResultCache> {
+        let dir = dir.into();
+        std::fs::create_dir_all(&dir)?;
+        Ok(ResultCache { dir, stats: CacheStats::default(), fsync: false })
+    }
+
+    /// Enables fsync-per-entry durability.
+    pub fn durable(mut self, yes: bool) -> Self {
+        self.fsync = yes;
+        self
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    pub fn stats(&self) -> &CacheStats {
+        &self.stats
+    }
+
+    fn path_of(&self, id: &TaskId) -> PathBuf {
+        self.dir.join(format!("{id}.json"))
+    }
+
+    /// Looks up a cached value. Any read/parse problem counts as a miss.
+    pub fn get(&self, id: &TaskId) -> Option<Json> {
+        let path = self.path_of(id);
+        let text = match std::fs::read_to_string(&path) {
+            Ok(t) => t,
+            Err(_) => {
+                self.stats.misses.fetch_add(1, Ordering::Relaxed);
+                return None;
+            }
+        };
+        match parse(&text) {
+            Ok(doc) => match doc.get("value") {
+                Some(v) => {
+                    self.stats.hits.fetch_add(1, Ordering::Relaxed);
+                    Some(v.clone())
+                }
+                None => {
+                    self.stats.corrupt.fetch_add(1, Ordering::Relaxed);
+                    self.stats.misses.fetch_add(1, Ordering::Relaxed);
+                    None
+                }
+            },
+            Err(_) => {
+                self.stats.corrupt.fetch_add(1, Ordering::Relaxed);
+                self.stats.misses.fetch_add(1, Ordering::Relaxed);
+                None
+            }
+        }
+    }
+
+    /// True if an entry exists on disk (without counting a hit/miss).
+    pub fn contains(&self, id: &TaskId) -> bool {
+        self.path_of(id).exists()
+    }
+
+    /// Stores a value with its parameter context (the context makes cache
+    /// files self-describing for post-hoc inspection).
+    pub fn put(&self, id: &TaskId, spec: &TaskSpec, value: &Json) -> std::io::Result<()> {
+        let doc = Json::obj(vec![
+            ("id", Json::str(id.0.clone())),
+            ("params", spec.to_json()),
+            ("value", value.clone()),
+        ]);
+        let bytes = doc.to_string();
+        if self.fsync {
+            atomic_write(&self.path_of(id), bytes.as_bytes())?;
+        } else {
+            crate::util::fs::atomic_write_nosync(&self.path_of(id), bytes.as_bytes())?;
+        }
+        self.stats.writes.fetch_add(1, Ordering::Relaxed);
+        Ok(())
+    }
+
+    /// Removes a single entry (used when a task's code version is known
+    /// stale); missing entries are fine.
+    pub fn invalidate(&self, id: &TaskId) {
+        let _ = std::fs::remove_file(self.path_of(id));
+    }
+
+    /// Number of entries currently on disk.
+    pub fn len(&self) -> usize {
+        crate::util::fs::list_files_with_ext(&self.dir, "json")
+            .map(|v| v.len())
+            .unwrap_or(0)
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Deletes every entry.
+    pub fn clear(&self) -> std::io::Result<()> {
+        for f in crate::util::fs::list_files_with_ext(&self.dir, "json")? {
+            std::fs::remove_file(f)?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::value::{pv_int, pv_str};
+    use crate::util::fs::TempDir;
+
+    fn spec(n: i64) -> TaskSpec {
+        TaskSpec {
+            params: vec![("model".into(), pv_str("SVC")), ("n".into(), pv_int(n))],
+            index: 0,
+        }
+    }
+
+    #[test]
+    fn put_get_roundtrip() {
+        let td = TempDir::new("cache").unwrap();
+        let cache = ResultCache::open(td.path()).unwrap();
+        let s = spec(1);
+        let id = s.id("v1");
+        assert!(cache.get(&id).is_none());
+        cache.put(&id, &s, &Json::obj(vec![("accuracy", Json::Num(0.93))])).unwrap();
+        let v = cache.get(&id).unwrap();
+        assert_eq!(v.get("accuracy").unwrap().as_f64(), Some(0.93));
+        let (hits, misses, writes, corrupt) = cache.stats().snapshot();
+        assert_eq!((hits, misses, writes, corrupt), (1, 1, 1, 0));
+        assert!((cache.stats().hit_rate() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn distinct_ids_do_not_collide() {
+        let td = TempDir::new("cache2").unwrap();
+        let cache = ResultCache::open(td.path()).unwrap();
+        for n in 0..10 {
+            let s = spec(n);
+            cache.put(&s.id("v1"), &s, &Json::int(n)).unwrap();
+        }
+        assert_eq!(cache.len(), 10);
+        for n in 0..10 {
+            assert_eq!(cache.get(&spec(n).id("v1")).unwrap().as_i64(), Some(n));
+        }
+    }
+
+    #[test]
+    fn version_salting_separates_entries() {
+        let td = TempDir::new("cache3").unwrap();
+        let cache = ResultCache::open(td.path()).unwrap();
+        let s = spec(1);
+        cache.put(&s.id("v1"), &s, &Json::int(1)).unwrap();
+        assert!(cache.get(&s.id("v2")).is_none(), "v2 must miss");
+    }
+
+    #[test]
+    fn corrupt_entry_is_a_miss() {
+        let td = TempDir::new("cache4").unwrap();
+        let cache = ResultCache::open(td.path()).unwrap();
+        let s = spec(1);
+        let id = s.id("v1");
+        crate::util::fs::atomic_write(
+            &td.path().join(format!("{id}.json")),
+            b"{ this is not json",
+        )
+        .unwrap();
+        assert!(cache.get(&id).is_none());
+        let (_, _, _, corrupt) = cache.stats().snapshot();
+        assert_eq!(corrupt, 1);
+        // entry missing "value" is also corrupt
+        crate::util::fs::atomic_write(
+            &td.path().join(format!("{id}.json")),
+            b"{\"id\": \"x\"}",
+        )
+        .unwrap();
+        assert!(cache.get(&id).is_none());
+        assert_eq!(cache.stats().snapshot().3, 2);
+    }
+
+    #[test]
+    fn invalidate_and_clear() {
+        let td = TempDir::new("cache5").unwrap();
+        let cache = ResultCache::open(td.path()).unwrap();
+        let s = spec(1);
+        let id = s.id("v1");
+        cache.put(&id, &s, &Json::int(1)).unwrap();
+        assert!(cache.contains(&id));
+        cache.invalidate(&id);
+        assert!(!cache.contains(&id));
+        cache.invalidate(&id); // idempotent
+        for n in 0..5 {
+            let s = spec(n);
+            cache.put(&s.id("v1"), &s, &Json::int(n)).unwrap();
+        }
+        cache.clear().unwrap();
+        assert!(cache.is_empty());
+    }
+
+    #[test]
+    fn concurrent_put_get() {
+        let td = TempDir::new("cache6").unwrap();
+        let cache = std::sync::Arc::new(ResultCache::open(td.path()).unwrap());
+        let mut handles = Vec::new();
+        for t in 0..4 {
+            let c = std::sync::Arc::clone(&cache);
+            handles.push(std::thread::spawn(move || {
+                for n in 0..25 {
+                    let s = spec(t * 100 + n);
+                    let id = s.id("v1");
+                    c.put(&id, &s, &Json::int(n)).unwrap();
+                    assert_eq!(c.get(&id).unwrap().as_i64(), Some(n));
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(cache.len(), 100);
+    }
+}

@@ -1,0 +1,170 @@
+//! Error types and per-task failure records.
+//!
+//! Memento's reliability story (§2) rests on *error tracing*: when one task
+//! among dozens fails, the user must see exactly which parameter combination
+//! failed, why, and after how many attempts — without losing the other
+//! tasks' results. [`TaskFailure`] is that record; [`MementoError`] covers
+//! everything else (configuration, I/O, runtime).
+
+use std::fmt;
+
+/// Top-level library error.
+#[derive(Debug, thiserror::Error)]
+pub enum MementoError {
+    /// Invalid configuration matrix or config file.
+    #[error("config error: {0}")]
+    Config(String),
+
+    /// Persistence (cache/checkpoint) I/O problems.
+    #[error("storage error: {0}")]
+    Storage(String),
+
+    /// A checkpoint manifest that does not match the matrix being run.
+    #[error("checkpoint mismatch: {0}")]
+    CheckpointMismatch(String),
+
+    /// Errors raised by the user's experiment function.
+    #[error("experiment error: {0}")]
+    Experiment(String),
+
+    /// PJRT / artifact runtime errors.
+    #[error("runtime error: {0}")]
+    Runtime(String),
+
+    /// A run was asked to continue but was already poisoned by fail-fast.
+    #[error("run aborted: {0}")]
+    Aborted(String),
+}
+
+impl MementoError {
+    pub fn config(msg: impl Into<String>) -> Self {
+        MementoError::Config(msg.into())
+    }
+    pub fn storage(msg: impl Into<String>) -> Self {
+        MementoError::Storage(msg.into())
+    }
+    pub fn experiment(msg: impl Into<String>) -> Self {
+        MementoError::Experiment(msg.into())
+    }
+    pub fn runtime(msg: impl Into<String>) -> Self {
+        MementoError::Runtime(msg.into())
+    }
+}
+
+/// How a task failed: an `Err` from the experiment function or a panic.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum FailureKind {
+    /// The experiment function returned an error.
+    Error,
+    /// The experiment function panicked; the panic was contained.
+    Panic,
+}
+
+impl fmt::Display for FailureKind {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            FailureKind::Error => write!(f, "error"),
+            FailureKind::Panic => write!(f, "panic"),
+        }
+    }
+}
+
+/// A complete failure record for one task attempt sequence.
+#[derive(Debug, Clone)]
+pub struct TaskFailure {
+    pub kind: FailureKind,
+    /// Human-readable message extracted from the error/panic payload.
+    pub message: String,
+    /// `param=value` context of the failing task, for the §3 "which
+    /// combination broke" question.
+    pub params: Vec<(String, String)>,
+    /// Total attempts made (1 = no retries configured or first try fatal).
+    pub attempts: u32,
+}
+
+impl TaskFailure {
+    /// One-line rendering used by notification providers and reports.
+    pub fn summary(&self) -> String {
+        let ctx = self
+            .params
+            .iter()
+            .map(|(k, v)| format!("{k}={v}"))
+            .collect::<Vec<_>>()
+            .join(", ");
+        format!(
+            "[{}] after {} attempt(s) at ({ctx}): {}",
+            self.kind, self.attempts, self.message
+        )
+    }
+}
+
+impl fmt::Display for TaskFailure {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.summary())
+    }
+}
+
+/// Extracts a printable message from a `catch_unwind` payload.
+pub fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn error_constructors_and_display() {
+        assert_eq!(
+            MementoError::config("bad").to_string(),
+            "config error: bad"
+        );
+        assert_eq!(
+            MementoError::storage("disk").to_string(),
+            "storage error: disk"
+        );
+        assert_eq!(
+            MementoError::experiment("x").to_string(),
+            "experiment error: x"
+        );
+        assert_eq!(
+            MementoError::runtime("pjrt").to_string(),
+            "runtime error: pjrt"
+        );
+    }
+
+    #[test]
+    fn failure_summary_has_context() {
+        let f = TaskFailure {
+            kind: FailureKind::Panic,
+            message: "boom".into(),
+            params: vec![
+                ("dataset".into(), "wine".into()),
+                ("model".into(), "SVC".into()),
+            ],
+            attempts: 3,
+        };
+        let s = f.summary();
+        assert!(s.contains("panic"), "{s}");
+        assert!(s.contains("dataset=wine, model=SVC"), "{s}");
+        assert!(s.contains("3 attempt"), "{s}");
+        assert!(s.contains("boom"), "{s}");
+        assert_eq!(format!("{f}"), s);
+    }
+
+    #[test]
+    fn panic_message_extraction() {
+        let static_payload: Box<dyn std::any::Any + Send> = Box::new("static str");
+        assert_eq!(panic_message(&*static_payload), "static str");
+        let string_payload: Box<dyn std::any::Any + Send> = Box::new("owned".to_string());
+        assert_eq!(panic_message(&*string_payload), "owned");
+        let weird: Box<dyn std::any::Any + Send> = Box::new(42u8);
+        assert_eq!(panic_message(&*weird), "non-string panic payload");
+    }
+}

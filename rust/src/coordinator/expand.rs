@@ -1,0 +1,387 @@
+//! Matrix expansion: cartesian product minus exclusion rules.
+//!
+//! "MEMENTO automatically constructs tasks using every combination of
+//! defined parameters" (§3). Expansion is *lazy* — an iterator in odometer
+//! order over the declaration-ordered domains — so a 10^6-combination matrix
+//! costs nothing until consumed, and exclusion filtering happens during
+//! iteration.
+
+use crate::config::matrix::{ConfigMatrix, ExcludeRule};
+use crate::config::value::ParamValue;
+use crate::coordinator::task::TaskSpec;
+
+/// Lazy iterator over the included combinations of a matrix.
+pub struct Expansion<'a> {
+    matrix: &'a ConfigMatrix,
+    /// Odometer over domain indices; `None` once exhausted.
+    counters: Option<Vec<usize>>,
+    /// Running index over *included* tasks (the `TaskSpec::index`).
+    next_index: usize,
+    /// Raw combinations visited so far (included + excluded).
+    raw_visited: usize,
+}
+
+impl<'a> Expansion<'a> {
+    pub fn new(matrix: &'a ConfigMatrix) -> Self {
+        let counters = if matrix.parameters.iter().any(|(_, d)| d.is_empty())
+            || matrix.parameters.is_empty()
+        {
+            None
+        } else {
+            Some(vec![0; matrix.parameters.len()])
+        };
+        Expansion { matrix, counters, next_index: 0, raw_visited: 0 }
+    }
+
+    /// Number of raw combinations visited so far (for progress reporting).
+    pub fn raw_visited(&self) -> usize {
+        self.raw_visited
+    }
+
+    fn current_spec(&self) -> TaskSpec {
+        let counters = self.counters.as_ref().unwrap();
+        let params = self
+            .matrix
+            .parameters
+            .iter()
+            .zip(counters)
+            .map(|((name, domain), &i)| (name.clone(), domain[i].clone()))
+            .collect();
+        TaskSpec { params, index: self.next_index }
+    }
+
+    fn advance(&mut self) {
+        let counters = match &mut self.counters {
+            Some(c) => c,
+            None => return,
+        };
+        // Odometer increment, last parameter fastest (matches nested-loop
+        // order of the paper's dict).
+        for pos in (0..counters.len()).rev() {
+            counters[pos] += 1;
+            if counters[pos] < self.matrix.parameters[pos].1.len() {
+                return;
+            }
+            counters[pos] = 0;
+        }
+        self.counters = None;
+    }
+}
+
+impl<'a> Iterator for Expansion<'a> {
+    type Item = TaskSpec;
+
+    fn next(&mut self) -> Option<TaskSpec> {
+        loop {
+            self.counters.as_ref()?;
+            let spec = self.current_spec();
+            self.advance();
+            self.raw_visited += 1;
+            if !is_excluded(&spec, &self.matrix.exclude) {
+                let mut spec = spec;
+                spec.index = self.next_index;
+                self.next_index += 1;
+                return Some(spec);
+            }
+        }
+    }
+}
+
+/// True when the assignment matches *all* pairs of at least one rule.
+pub fn is_excluded(spec: &TaskSpec, rules: &[ExcludeRule]) -> bool {
+    rules.iter().any(|rule| rule_matches(spec, rule))
+}
+
+fn rule_matches(spec: &TaskSpec, rule: &ExcludeRule) -> bool {
+    rule.iter().all(|(key, want)| {
+        spec.get(key).map(|have| have == want).unwrap_or(false)
+    })
+}
+
+/// Eagerly expands a matrix into the full included task list.
+pub fn expand(matrix: &ConfigMatrix) -> Vec<TaskSpec> {
+    Expansion::new(matrix).collect()
+}
+
+/// Counts included tasks without materializing them.
+pub fn count_included(matrix: &ConfigMatrix) -> usize {
+    Expansion::new(matrix).count()
+}
+
+/// Counts combinations removed by exclusion rules.
+pub fn count_excluded(matrix: &ConfigMatrix) -> usize {
+    matrix.raw_count() - count_included(matrix)
+}
+
+/// Helper for exclusion math in reports: how many raw combinations a single
+/// rule matches (product of unconstrained domain sizes).
+pub fn rule_match_count(matrix: &ConfigMatrix, rule: &ExcludeRule) -> usize {
+    matrix
+        .parameters
+        .iter()
+        .map(|(name, domain)| if rule.contains_key(name) { 1 } else { domain.len() })
+        .product()
+}
+
+/// Groups the expansion by the values of one parameter, preserving order —
+/// used by the report renderer to pivot result tables.
+pub fn group_by_param<'m>(
+    tasks: &'m [TaskSpec],
+    param: &str,
+) -> Vec<(ParamValue, Vec<&'m TaskSpec>)> {
+    let mut groups: Vec<(ParamValue, Vec<&TaskSpec>)> = Vec::new();
+    for t in tasks {
+        let Some(v) = t.get(param) else { continue };
+        match groups.iter_mut().find(|(gv, _)| gv == v) {
+            Some((_, members)) => members.push(t),
+            None => groups.push((v.clone(), vec![t])),
+        }
+    }
+    groups
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::matrix::ConfigMatrix;
+    use crate::config::value::{pv_int, pv_str};
+
+    fn paper_matrix() -> ConfigMatrix {
+        ConfigMatrix::builder()
+            .param(
+                "dataset",
+                vec![pv_str("digits"), pv_str("wine"), pv_str("breast_cancer")],
+            )
+            .param(
+                "feature_engineering",
+                vec![pv_str("DummyImputer"), pv_str("SimpleImputer")],
+            )
+            .param(
+                "preprocessing",
+                vec![
+                    pv_str("DummyPreprocessor"),
+                    pv_str("MinMaxScaler"),
+                    pv_str("StandardScaler"),
+                ],
+            )
+            .param(
+                "model",
+                vec![pv_str("AdaBoost"), pv_str("RandomForest"), pv_str("SVC")],
+            )
+            .exclude(vec![
+                ("dataset", pv_str("digits")),
+                ("feature_engineering", pv_str("SimpleImputer")),
+            ])
+            .build()
+            .unwrap()
+    }
+
+    #[test]
+    fn paper_counts_54_raw_45_included() {
+        // E1: the §3 worked example. 3×2×3×3 = 54 raw; the exclude rule
+        // pins dataset and feature_engineering, leaving 3×3 = 9 excluded.
+        let m = paper_matrix();
+        assert_eq!(m.raw_count(), 54);
+        assert_eq!(count_excluded(&m), 9);
+        let tasks = expand(&m);
+        assert_eq!(tasks.len(), 45);
+        assert_eq!(rule_match_count(&m, &m.exclude[0]), 9);
+    }
+
+    #[test]
+    fn no_excluded_combination_survives() {
+        let tasks = expand(&paper_matrix());
+        assert!(!tasks.iter().any(|t| {
+            t.get("dataset") == Some(&pv_str("digits"))
+                && t.get("feature_engineering") == Some(&pv_str("SimpleImputer"))
+        }));
+    }
+
+    #[test]
+    fn indices_are_contiguous_and_ordered() {
+        let tasks = expand(&paper_matrix());
+        for (i, t) in tasks.iter().enumerate() {
+            assert_eq!(t.index, i);
+        }
+    }
+
+    #[test]
+    fn expansion_is_deterministic() {
+        let m = paper_matrix();
+        let a = expand(&m);
+        let b = expand(&m);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn odometer_order_last_param_fastest() {
+        let m = ConfigMatrix::builder()
+            .param("a", vec![pv_int(0), pv_int(1)])
+            .param("b", vec![pv_int(0), pv_int(1)])
+            .build()
+            .unwrap();
+        let order: Vec<(i64, i64)> = expand(&m)
+            .iter()
+            .map(|t| {
+                (
+                    t.get("a").unwrap().as_i64().unwrap(),
+                    t.get("b").unwrap().as_i64().unwrap(),
+                )
+            })
+            .collect();
+        assert_eq!(order, vec![(0, 0), (0, 1), (1, 0), (1, 1)]);
+    }
+
+    #[test]
+    fn single_param_matrix() {
+        let m = ConfigMatrix::builder()
+            .param("x", vec![pv_int(1), pv_int(2), pv_int(3)])
+            .build()
+            .unwrap();
+        assert_eq!(expand(&m).len(), 3);
+    }
+
+    #[test]
+    fn multiple_overlapping_excludes() {
+        let m = ConfigMatrix::builder()
+            .param("a", vec![pv_int(0), pv_int(1)])
+            .param("b", vec![pv_int(0), pv_int(1)])
+            .exclude(vec![("a", pv_int(0))])
+            .exclude(vec![("b", pv_int(0))])
+            .build()
+            .unwrap();
+        // a=0 removes 2, b=0 removes 2, overlap (0,0) counted once → 1 left.
+        let tasks = expand(&m);
+        assert_eq!(tasks.len(), 1);
+        assert_eq!(tasks[0].get("a"), Some(&pv_int(1)));
+        assert_eq!(tasks[0].get("b"), Some(&pv_int(1)));
+    }
+
+    #[test]
+    fn exclude_everything_yields_empty() {
+        let m = ConfigMatrix::builder()
+            .param("a", vec![pv_int(0)])
+            .exclude(vec![("a", pv_int(0))])
+            .build()
+            .unwrap();
+        assert_eq!(expand(&m).len(), 0);
+        assert_eq!(count_excluded(&m), 1);
+    }
+
+    #[test]
+    fn lazy_iteration_tracks_raw_visited() {
+        let m = paper_matrix();
+        let mut it = Expansion::new(&m);
+        let _ = it.next().unwrap();
+        assert!(it.raw_visited() >= 1);
+        let rest: Vec<_> = it.collect();
+        assert_eq!(rest.len(), 44);
+    }
+
+    #[test]
+    fn group_by_param_partitions() {
+        let m = paper_matrix();
+        let tasks = expand(&m);
+        let groups = group_by_param(&tasks, "dataset");
+        assert_eq!(groups.len(), 3);
+        let total: usize = groups.iter().map(|(_, g)| g.len()).sum();
+        assert_eq!(total, 45);
+        // digits lost its SimpleImputer combos: 1×3×3=9 vs 2×3×3=18.
+        let digits = groups.iter().find(|(v, _)| v == &pv_str("digits")).unwrap();
+        assert_eq!(digits.1.len(), 9);
+        let wine = groups.iter().find(|(v, _)| v == &pv_str("wine")).unwrap();
+        assert_eq!(wine.1.len(), 18);
+    }
+
+    // ---- property tests --------------------------------------------------
+
+    use crate::testing::prop::{check, Gen};
+
+    fn random_matrix(g: &mut Gen) -> ConfigMatrix {
+        let n_params = g.size(1, 4);
+        let mut b = ConfigMatrix::builder();
+        let mut names = Vec::new();
+        for i in 0..n_params {
+            let name = format!("p{i}");
+            let domain_len = g.size(1, 4);
+            let domain: Vec<_> = (0..domain_len).map(|j| pv_int(j as i64)).collect();
+            names.push((name.clone(), domain_len));
+            b = b.param(name, domain);
+        }
+        // Random exclude rules drawn from actual domains.
+        let n_rules = g.size(0, 3);
+        for _ in 0..n_rules {
+            let n_keys = g.size(1, names.len());
+            let mut idx: Vec<usize> = (0..names.len()).collect();
+            g.rng().shuffle(&mut idx);
+            let pairs: Vec<(String, ParamValue)> = idx[..n_keys]
+                .iter()
+                .map(|&i| {
+                    let (name, dlen) = &names[i];
+                    (name.clone(), pv_int(g.size(0, dlen - 1) as i64))
+                })
+                .collect();
+            let pairs_ref: Vec<(&str, ParamValue)> =
+                pairs.iter().map(|(n, v)| (n.as_str(), v.clone())).collect();
+            b = b.exclude(pairs_ref);
+        }
+        b.build().expect("generated matrix must validate")
+    }
+
+    #[test]
+    fn prop_included_plus_excluded_equals_raw() {
+        check("included+excluded=raw", 50, |g| {
+            let m = random_matrix(g);
+            let included = count_included(&m);
+            let excluded = count_excluded(&m);
+            crate::prop_assert!(
+                included + excluded == m.raw_count(),
+                "inc {included} + exc {excluded} != raw {}",
+                m.raw_count()
+            );
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_no_survivor_matches_any_rule() {
+        check("no-survivor-matches-rule", 50, |g| {
+            let m = random_matrix(g);
+            for t in expand(&m) {
+                crate::prop_assert!(
+                    !is_excluded(&t, &m.exclude),
+                    "task {} survived exclusion",
+                    t.label()
+                );
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_task_ids_unique() {
+        check("task-ids-unique", 30, |g| {
+            let m = random_matrix(g);
+            let tasks = expand(&m);
+            let mut ids: Vec<_> = tasks.iter().map(|t| t.id("v1")).collect();
+            let n = ids.len();
+            ids.sort();
+            ids.dedup();
+            crate::prop_assert!(ids.len() == n, "duplicate task ids in expansion");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_without_rules_expansion_is_full_product() {
+        check("no-rules-full-product", 30, |g| {
+            let mut m = random_matrix(g);
+            m.exclude.clear();
+            crate::prop_assert!(
+                count_included(&m) == m.raw_count(),
+                "full product mismatch"
+            );
+            Ok(())
+        });
+    }
+}

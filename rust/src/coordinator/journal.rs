@@ -1,0 +1,260 @@
+//! Run journal: an append-only JSONL event log of the task lifecycle.
+//!
+//! Complements the checkpoint manifest (which holds *state*) with a
+//! *history*: task started / finished / failed / retried / restored events
+//! with timestamps, durations, and worker attribution. `memento status`
+//! and post-hoc debugging ("which task ran when, on which worker, and how
+//! often was it retried?") read this. One line per event, flushed on every
+//! write — the journal is an audit trail, so durability beats batching.
+
+use crate::coordinator::task::TaskId;
+use crate::util::json::{parse, Json};
+use std::io::Write;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+use std::time::{SystemTime, UNIX_EPOCH};
+
+/// One journal event.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Event {
+    TaskStarted { id: TaskId, attempt: u32 },
+    TaskSucceeded { id: TaskId, attempt: u32, duration_secs: f64 },
+    TaskFailed { id: TaskId, attempt: u32, message: String },
+    TaskRestored { id: TaskId },
+}
+
+impl Event {
+    fn kind(&self) -> &'static str {
+        match self {
+            Event::TaskStarted { .. } => "started",
+            Event::TaskSucceeded { .. } => "succeeded",
+            Event::TaskFailed { .. } => "failed",
+            Event::TaskRestored { .. } => "restored",
+        }
+    }
+
+    fn id(&self) -> &TaskId {
+        match self {
+            Event::TaskStarted { id, .. }
+            | Event::TaskSucceeded { id, .. }
+            | Event::TaskFailed { id, .. }
+            | Event::TaskRestored { id } => id,
+        }
+    }
+
+    fn to_json(&self, unix_secs: f64) -> Json {
+        let mut fields: Vec<(&str, Json)> = vec![
+            ("ts", Json::Num(unix_secs)),
+            ("event", Json::str(self.kind())),
+            ("task", Json::str(self.id().0.clone())),
+        ];
+        match self {
+            Event::TaskStarted { attempt, .. } => {
+                fields.push(("attempt", Json::int(*attempt as i64)));
+            }
+            Event::TaskSucceeded { attempt, duration_secs, .. } => {
+                fields.push(("attempt", Json::int(*attempt as i64)));
+                fields.push(("duration_secs", Json::Num(*duration_secs)));
+            }
+            Event::TaskFailed { attempt, message, .. } => {
+                fields.push(("attempt", Json::int(*attempt as i64)));
+                fields.push(("message", Json::str(message.clone())));
+            }
+            Event::TaskRestored { .. } => {}
+        }
+        Json::obj(fields)
+    }
+
+    /// Parses an event line back (best-effort; unknown kinds → None).
+    pub fn from_json(j: &Json) -> Option<(f64, Event)> {
+        let ts = j.get("ts")?.as_f64()?;
+        let id = TaskId(j.get("task")?.as_str()?.to_string());
+        let attempt = j.get("attempt").and_then(|a| a.as_i64()).unwrap_or(1) as u32;
+        let ev = match j.get("event")?.as_str()? {
+            "started" => Event::TaskStarted { id, attempt },
+            "succeeded" => Event::TaskSucceeded {
+                id,
+                attempt,
+                duration_secs: j.get("duration_secs").and_then(|d| d.as_f64()).unwrap_or(0.0),
+            },
+            "failed" => Event::TaskFailed {
+                id,
+                attempt,
+                message: j
+                    .get("message")
+                    .and_then(|m| m.as_str())
+                    .unwrap_or("")
+                    .to_string(),
+            },
+            "restored" => Event::TaskRestored { id },
+            _ => return None,
+        };
+        Some((ts, ev))
+    }
+}
+
+/// Append-only journal writer (thread-safe).
+pub struct Journal {
+    path: PathBuf,
+    file: Mutex<std::fs::File>,
+}
+
+impl std::fmt::Debug for Journal {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Journal").field("path", &self.path).finish()
+    }
+}
+
+impl Journal {
+    /// Opens (appending) a journal file, creating parents as needed.
+    pub fn open(path: impl Into<PathBuf>) -> std::io::Result<Journal> {
+        let path = path.into();
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let file = std::fs::OpenOptions::new().create(true).append(true).open(&path)?;
+        Ok(Journal { path, file: Mutex::new(file) })
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    /// Appends one event (flushed immediately).
+    pub fn record(&self, event: &Event) {
+        let now = SystemTime::now()
+            .duration_since(UNIX_EPOCH)
+            .map(|d| d.as_secs_f64())
+            .unwrap_or(0.0);
+        let line = event.to_json(now).to_string();
+        let mut f = self.file.lock().unwrap();
+        let _ = writeln!(f, "{line}");
+        let _ = f.flush();
+    }
+
+    /// Reads every parseable event back, in order.
+    pub fn replay(path: &Path) -> std::io::Result<Vec<(f64, Event)>> {
+        let text = std::fs::read_to_string(path)?;
+        Ok(text
+            .lines()
+            .filter_map(|l| parse(l).ok())
+            .filter_map(|j| Event::from_json(&j))
+            .collect())
+    }
+
+    /// Summarizes a journal: per-kind counts and total busy time.
+    pub fn summarize(path: &Path) -> std::io::Result<JournalSummary> {
+        let events = Self::replay(path)?;
+        let mut s = JournalSummary::default();
+        for (_, ev) in &events {
+            match ev {
+                Event::TaskStarted { .. } => s.started += 1,
+                Event::TaskSucceeded { duration_secs, .. } => {
+                    s.succeeded += 1;
+                    s.busy_secs += duration_secs;
+                }
+                Event::TaskFailed { .. } => s.failed_attempts += 1,
+                Event::TaskRestored { .. } => s.restored += 1,
+            }
+        }
+        s.events = events.len();
+        Ok(s)
+    }
+}
+
+/// Aggregate view of a journal file.
+#[derive(Debug, Default, Clone, PartialEq)]
+pub struct JournalSummary {
+    pub events: usize,
+    pub started: usize,
+    pub succeeded: usize,
+    pub failed_attempts: usize,
+    pub restored: usize,
+    pub busy_secs: f64,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::fs::TempDir;
+
+    fn tid(n: u8) -> TaskId {
+        TaskId(format!("{n:064x}"))
+    }
+
+    #[test]
+    fn record_and_replay_roundtrip() {
+        let td = TempDir::new("journal").unwrap();
+        let path = td.join("run/journal.jsonl");
+        let j = Journal::open(&path).unwrap();
+        j.record(&Event::TaskStarted { id: tid(1), attempt: 1 });
+        j.record(&Event::TaskFailed { id: tid(1), attempt: 1, message: "oom".into() });
+        j.record(&Event::TaskStarted { id: tid(1), attempt: 2 });
+        j.record(&Event::TaskSucceeded { id: tid(1), attempt: 2, duration_secs: 0.5 });
+        j.record(&Event::TaskRestored { id: tid(2) });
+
+        let events = Journal::replay(&path).unwrap();
+        assert_eq!(events.len(), 5);
+        assert_eq!(events[0].1, Event::TaskStarted { id: tid(1), attempt: 1 });
+        assert!(matches!(&events[1].1, Event::TaskFailed { message, .. } if message == "oom"));
+        // timestamps monotone non-decreasing
+        for w in events.windows(2) {
+            assert!(w[0].0 <= w[1].0);
+        }
+    }
+
+    #[test]
+    fn summarize_counts() {
+        let td = TempDir::new("journal2").unwrap();
+        let path = td.join("j.jsonl");
+        let j = Journal::open(&path).unwrap();
+        for i in 0..3u8 {
+            j.record(&Event::TaskStarted { id: tid(i), attempt: 1 });
+            j.record(&Event::TaskSucceeded { id: tid(i), attempt: 1, duration_secs: 1.0 });
+        }
+        j.record(&Event::TaskFailed { id: tid(9), attempt: 1, message: "x".into() });
+        let s = Journal::summarize(&path).unwrap();
+        assert_eq!(s.started, 3);
+        assert_eq!(s.succeeded, 3);
+        assert_eq!(s.failed_attempts, 1);
+        assert!((s.busy_secs - 3.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn corrupt_lines_are_skipped() {
+        let td = TempDir::new("journal3").unwrap();
+        let path = td.join("j.jsonl");
+        let j = Journal::open(&path).unwrap();
+        j.record(&Event::TaskRestored { id: tid(0) });
+        // inject garbage
+        {
+            use std::io::Write;
+            let mut f = std::fs::OpenOptions::new().append(true).open(&path).unwrap();
+            writeln!(f, "{{not json").unwrap();
+            writeln!(f, "{{\"event\": \"martian\", \"ts\": 0, \"task\": \"x\"}}").unwrap();
+        }
+        j.record(&Event::TaskRestored { id: tid(1) });
+        let events = Journal::replay(&path).unwrap();
+        assert_eq!(events.len(), 2);
+    }
+
+    #[test]
+    fn concurrent_appends_keep_all_lines() {
+        let td = TempDir::new("journal4").unwrap();
+        let path = td.join("j.jsonl");
+        let j = std::sync::Arc::new(Journal::open(&path).unwrap());
+        let mut handles = Vec::new();
+        for t in 0..4u8 {
+            let j = std::sync::Arc::clone(&j);
+            handles.push(std::thread::spawn(move || {
+                for i in 0..50u8 {
+                    j.record(&Event::TaskStarted { id: tid(t * 50 + i), attempt: 1 });
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(Journal::replay(&path).unwrap().len(), 200);
+    }
+}

@@ -1,0 +1,858 @@
+//! The Memento façade — the paper's §3 API, in Rust.
+//!
+//! ```no_run
+//! use memento::prelude::*;
+//!
+//! let matrix = ConfigMatrix::builder()
+//!     .param("model", vec![pv_str("AdaBoost"), pv_str("SVC")])
+//!     .setting("n_fold", Json::int(5))
+//!     .build()?;
+//!
+//! let results = Memento::new(|ctx| {
+//!     let model = ctx.param_str("model")?;
+//!     // … run the experiment …
+//!     Ok(Json::obj(vec![("accuracy", Json::Num(0.9))]))
+//! })
+//! .workers(8)
+//! .with_cache_dir("cache/")
+//! .with_checkpoint_dir("runs/demo")
+//! .with_notifier(Box::new(ConsoleNotificationProvider))
+//! .run(&matrix)?;
+//! # Ok::<(), memento::prelude::MementoError>(())
+//! ```
+//!
+//! The run pipeline, per task:
+//!
+//! 1. **cache** — if the task id has a cached value (same params + same
+//!    experiment version), restore it without executing;
+//! 2. **checkpoint** — if a resumed manifest already has the task, restore;
+//! 3. **execute** — call the experiment function with a [`TaskContext`]
+//!    (typed params, settings, deterministic seed, progress slot), catching
+//!    both `Err` returns and panics;
+//! 4. **retry** — per [`RetryPolicy`];
+//! 5. **record** — cache the value, checkpoint the outcome, notify on
+//!    failure, update metrics and progress.
+
+use crate::config::matrix::ConfigMatrix;
+use crate::coordinator::cache::ResultCache;
+use crate::coordinator::checkpoint::CheckpointStore;
+use crate::coordinator::error::{panic_message, FailureKind, MementoError, TaskFailure};
+use crate::coordinator::expand;
+use crate::coordinator::journal::{Event, Journal};
+use crate::coordinator::metrics::RunMetrics;
+use crate::coordinator::notify::{Notification, NotificationProvider};
+use crate::coordinator::progress::{ProgressReporter, ProgressState};
+use crate::coordinator::results::{ResultSet, TaskOutcome, TaskStatus};
+use crate::coordinator::retry::RetryPolicy;
+use crate::coordinator::scheduler::SchedulerOptions;
+use crate::coordinator::task::{task_seed, TaskContext, TaskId, TaskSpec};
+use crate::util::json::Json;
+use crate::util::time::Stopwatch;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::path::PathBuf;
+use std::sync::Arc;
+use std::time::Duration;
+
+/// The experiment function signature (the paper's `exp_func`).
+pub type ExpFn = dyn Fn(&TaskContext) -> Result<Json, MementoError> + Send + Sync;
+
+/// Tuning knobs for a run; all have sensible defaults.
+#[derive(Clone)]
+pub struct RunOptions {
+    pub workers: usize,
+    pub fail_fast: bool,
+    /// Salt for task hashes; bump when the experiment code changes.
+    pub version: String,
+    /// Base seed; per-task seeds derive from it and the task id.
+    pub seed: u64,
+    pub retry: RetryPolicy,
+    /// Checkpoint manifest flush interval in completed tasks.
+    pub checkpoint_flush_every: usize,
+    /// Print progress lines at this interval (None = quiet).
+    pub progress_interval: Option<Duration>,
+}
+
+impl Default for RunOptions {
+    fn default() -> Self {
+        RunOptions {
+            workers: crate::util::pool::num_cpus(),
+            fail_fast: false,
+            version: "v1".to_string(),
+            seed: 0,
+            retry: RetryPolicy::none(),
+            checkpoint_flush_every: 1,
+            progress_interval: None,
+        }
+    }
+}
+
+/// The orchestrator. Construct with [`Memento::new`], configure with the
+/// builder methods, execute with [`Memento::run`] or [`Memento::resume`].
+pub struct Memento {
+    exp_fn: Arc<ExpFn>,
+    options: RunOptions,
+    cache: Option<Arc<ResultCache>>,
+    checkpoint_dir: Option<PathBuf>,
+    notifier: Option<Arc<dyn NotificationProvider>>,
+    metrics: Arc<RunMetrics>,
+    journal: Option<Arc<Journal>>,
+}
+
+impl Memento {
+    /// Wraps an experiment function.
+    pub fn new(
+        exp_fn: impl Fn(&TaskContext) -> Result<Json, MementoError> + Send + Sync + 'static,
+    ) -> Memento {
+        Memento {
+            exp_fn: Arc::new(exp_fn),
+            options: RunOptions::default(),
+            cache: None,
+            checkpoint_dir: None,
+            notifier: None,
+            metrics: Arc::new(RunMetrics::new()),
+            journal: None,
+        }
+    }
+
+    // ---- builder ----------------------------------------------------------
+
+    pub fn workers(mut self, n: usize) -> Self {
+        self.options.workers = n.max(1);
+        self
+    }
+
+    pub fn fail_fast(mut self, yes: bool) -> Self {
+        self.options.fail_fast = yes;
+        self
+    }
+
+    /// Experiment-code version; changing it invalidates cached results.
+    pub fn version(mut self, v: impl Into<String>) -> Self {
+        self.options.version = v.into();
+        self
+    }
+
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.options.seed = seed;
+        self
+    }
+
+    pub fn with_retry(mut self, policy: RetryPolicy) -> Self {
+        self.options.retry = policy;
+        self
+    }
+
+    /// Enables the on-disk result cache.
+    pub fn with_cache_dir(mut self, dir: impl Into<PathBuf>) -> Self {
+        self.cache = Some(Arc::new(
+            ResultCache::open(dir.into()).expect("open cache dir"),
+        ));
+        self
+    }
+
+    /// Enables the cache with an existing handle (shared across runs).
+    pub fn with_cache(mut self, cache: Arc<ResultCache>) -> Self {
+        self.cache = Some(cache);
+        self
+    }
+
+    /// Enables run checkpointing under this directory.
+    pub fn with_checkpoint_dir(mut self, dir: impl Into<PathBuf>) -> Self {
+        self.checkpoint_dir = Some(dir.into());
+        self
+    }
+
+    pub fn checkpoint_flush_every(mut self, n: usize) -> Self {
+        self.options.checkpoint_flush_every = n.max(1);
+        self
+    }
+
+    pub fn with_notifier(mut self, n: Box<dyn NotificationProvider>) -> Self {
+        self.notifier = Some(Arc::from(n));
+        self
+    }
+
+    pub fn with_shared_notifier(mut self, n: Arc<dyn NotificationProvider>) -> Self {
+        self.notifier = Some(n);
+        self
+    }
+
+    pub fn progress_every(mut self, d: Duration) -> Self {
+        self.options.progress_interval = Some(d);
+        self
+    }
+
+    /// Enables the append-only JSONL event journal at `path`.
+    pub fn with_journal(mut self, path: impl Into<PathBuf>) -> Self {
+        self.journal = Some(Arc::new(
+            Journal::open(path.into()).expect("open journal file"),
+        ));
+        self
+    }
+
+    pub fn metrics(&self) -> Arc<RunMetrics> {
+        Arc::clone(&self.metrics)
+    }
+
+    pub fn cache_handle(&self) -> Option<Arc<ResultCache>> {
+        self.cache.clone()
+    }
+
+    // ---- execution ---------------------------------------------------------
+
+    /// Expands the matrix and runs every included task. Creates a fresh
+    /// checkpoint manifest when a checkpoint dir is configured.
+    pub fn run(&self, matrix: &ConfigMatrix) -> Result<ResultSet, MementoError> {
+        self.run_inner(matrix, false)
+    }
+
+    /// Resumes a checkpointed run: completed-successful tasks are restored
+    /// from the manifest; failed and never-run tasks execute.
+    pub fn resume(&self, matrix: &ConfigMatrix) -> Result<ResultSet, MementoError> {
+        self.run_inner(matrix, true)
+    }
+
+    fn run_inner(&self, matrix: &ConfigMatrix, resuming: bool) -> Result<ResultSet, MementoError> {
+        crate::config::validate::validate(matrix)?;
+        let wall = Stopwatch::start();
+        let specs = expand::expand(matrix);
+        let total = specs.len();
+        let version = self.options.version.clone();
+
+        // -- checkpoint store (create or resume) ---------------------------
+        let checkpoint: Option<Arc<CheckpointStore>> = match &self.checkpoint_dir {
+            None => None,
+            Some(dir) => {
+                let fp = matrix.fingerprint();
+                let store = if resuming {
+                    CheckpointStore::resume(
+                        dir,
+                        &fp,
+                        &version,
+                        total,
+                        self.options.checkpoint_flush_every,
+                    )?
+                } else {
+                    CheckpointStore::create(
+                        dir,
+                        &fp,
+                        &version,
+                        total,
+                        self.options.checkpoint_flush_every,
+                    )?
+                };
+                Some(Arc::new(store))
+            }
+        };
+        if resuming && checkpoint.is_none() {
+            return Err(MementoError::config(
+                "resume() requires with_checkpoint_dir(..)",
+            ));
+        }
+
+        // -- split restored vs pending --------------------------------------
+        let settings = Arc::new(matrix.settings.clone());
+        let mut restored: Vec<TaskOutcome> = Vec::new();
+        let mut pending: Vec<TaskSpec> = Vec::new();
+        for spec in specs {
+            let id = spec.id(&version);
+            // (a) resumed manifest
+            if let Some(ck) = &checkpoint {
+                if resuming {
+                    if let Some(entry) = ck.entry(&id) {
+                        if entry.succeeded() {
+                            restored.push(TaskOutcome {
+                                spec,
+                                id,
+                                status: TaskStatus::Success,
+                                value: entry.value,
+                                failure: None,
+                                duration_secs: 0.0,
+                                from_cache: true,
+                                attempts: 0,
+                            });
+                            self.metrics.tasks_cached.inc();
+                            continue;
+                        }
+                        // failed previously → re-run
+                    }
+                }
+            }
+            // (b) result cache
+            if let Some(cache) = &self.cache {
+                if let Some(value) = cache.get(&id) {
+                    self.metrics.cache_hits.inc();
+                    // Also record into the (fresh) checkpoint so a later
+                    // resume sees it without consulting the cache.
+                    if let Some(ck) = &checkpoint {
+                        ck.record(&id, Some(&value), None, 0.0, 0)?;
+                    }
+                    if let Some(j) = &self.journal {
+                        j.record(&Event::TaskRestored { id: id.clone() });
+                    }
+                    restored.push(TaskOutcome {
+                        spec,
+                        id,
+                        status: TaskStatus::Success,
+                        value: Some(value),
+                        failure: None,
+                        duration_secs: 0.0,
+                        from_cache: true,
+                        attempts: 0,
+                    });
+                    self.metrics.tasks_cached.inc();
+                    continue;
+                }
+                self.metrics.cache_misses.inc();
+            }
+            pending.push(spec);
+        }
+
+        let from_cache = restored.len();
+        self.notify(&Notification::RunStarted { total, from_cache });
+
+        // -- progress --------------------------------------------------------
+        let progress = ProgressState::new(pending.len());
+        let _reporter = self.options.progress_interval.map(|iv| {
+            ProgressReporter::start(Arc::clone(&progress), iv, false)
+        });
+
+        // -- per-task job ----------------------------------------------------
+        let job = self.make_job(
+            Arc::clone(&settings),
+            checkpoint.clone(),
+            version.clone(),
+        );
+        let sched = SchedulerOptions {
+            workers: self.options.workers,
+            fail_fast: self.options.fail_fast,
+        };
+        let report = crate::coordinator::scheduler::run_all_with_metrics(
+            pending,
+            &sched,
+            job,
+            Some(Arc::clone(&progress)),
+            Some(Arc::clone(&self.metrics)),
+        );
+
+        // -- final checkpoint flush ------------------------------------------
+        if let Some(ck) = &checkpoint {
+            ck.flush()?;
+            self.metrics.checkpoint_flushes.inc();
+        }
+
+        let mut outcomes = restored;
+        outcomes.extend(report.outcomes);
+        let results = ResultSet::new(outcomes);
+
+        let succeeded = results.successes().count();
+        let failed = results.n_failed();
+        self.notify(&Notification::RunFinished {
+            total,
+            succeeded,
+            failed,
+            from_cache,
+            wall_secs: wall.elapsed_secs(),
+        });
+
+        if report.aborted {
+            return Err(MementoError::Aborted(format!(
+                "fail-fast stopped the run after {failed} failure(s); \
+                 {} task(s) were skipped",
+                report.skipped.len()
+            )));
+        }
+        Ok(results)
+    }
+
+    /// Builds the per-task closure: context construction, retry loop, panic
+    /// capture, cache/checkpoint recording, metrics, failure notification.
+    fn make_job(
+        &self,
+        settings: Arc<std::collections::BTreeMap<String, Json>>,
+        checkpoint: Option<Arc<CheckpointStore>>,
+        version: String,
+    ) -> Arc<dyn Fn(&TaskSpec) -> TaskOutcome + Send + Sync> {
+        let exp_fn = Arc::clone(&self.exp_fn);
+        let cache = self.cache.clone();
+        let metrics = Arc::clone(&self.metrics);
+        let notifier = self.notifier.clone();
+        let journal = self.journal.clone();
+        let retry = self.options.retry;
+        let run_seed = self.options.seed;
+
+        Arc::new(move |spec: &TaskSpec| {
+            let id = spec.id(&version);
+            let seed = task_seed(run_seed, &id);
+            let sw = Stopwatch::start();
+            metrics.tasks_total.inc();
+
+            let progress_sink: Option<Arc<dyn Fn(&TaskId, &Json) + Send + Sync>> =
+                checkpoint.as_ref().map(|ck| {
+                    let ck = Arc::clone(ck);
+                    Arc::new(move |tid: &TaskId, j: &Json| ck.save_progress(tid, j))
+                        as Arc<dyn Fn(&TaskId, &Json) + Send + Sync>
+                });
+
+            let mut attempt: u32 = 0;
+            let mut last_failure: Option<TaskFailure> = None;
+            let value: Option<Json> = loop {
+                attempt += 1;
+                if attempt > 1 {
+                    metrics.tasks_retried.inc();
+                    std::thread::sleep(retry.delay_before(attempt));
+                }
+                let restored_progress =
+                    checkpoint.as_ref().and_then(|ck| ck.load_progress(&id));
+                let ctx = TaskContext::new(
+                    spec.clone(),
+                    Arc::clone(&settings),
+                    seed,
+                    attempt,
+                    id.clone(),
+                    restored_progress,
+                    progress_sink.clone(),
+                );
+                if let Some(j) = &journal {
+                    j.record(&Event::TaskStarted { id: id.clone(), attempt });
+                }
+                let exec = catch_unwind(AssertUnwindSafe(|| exp_fn(&ctx)));
+                match exec {
+                    Ok(Ok(v)) => break Some(v),
+                    Ok(Err(e)) => {
+                        last_failure = Some(TaskFailure {
+                            kind: FailureKind::Error,
+                            message: e.to_string(),
+                            params: spec.param_strings(),
+                            attempts: attempt,
+                        });
+                    }
+                    Err(payload) => {
+                        last_failure = Some(TaskFailure {
+                            kind: FailureKind::Panic,
+                            message: panic_message(payload.as_ref()),
+                            params: spec.param_strings(),
+                            attempts: attempt,
+                        });
+                    }
+                }
+                if let (Some(j), Some(f)) = (&journal, &last_failure) {
+                    j.record(&Event::TaskFailed {
+                        id: id.clone(),
+                        attempt,
+                        message: f.message.clone(),
+                    });
+                }
+                if !retry.should_retry(attempt) {
+                    break None;
+                }
+            };
+
+            let duration = sw.elapsed_secs();
+            metrics.exec_time.record(sw.elapsed());
+
+            match value {
+                Some(v) => {
+                    metrics.tasks_succeeded.inc();
+                    if let Some(j) = &journal {
+                        j.record(&Event::TaskSucceeded {
+                            id: id.clone(),
+                            attempt,
+                            duration_secs: duration,
+                        });
+                    }
+                    if let Some(cache) = &cache {
+                        let _ = cache.put(&id, spec, &v);
+                    }
+                    if let Some(ck) = &checkpoint {
+                        let _ = ck.record(&id, Some(&v), None, duration, attempt);
+                        ck.clear_progress(&id);
+                    }
+                    TaskOutcome {
+                        spec: spec.clone(),
+                        id,
+                        status: TaskStatus::Success,
+                        value: Some(v),
+                        failure: None,
+                        duration_secs: duration,
+                        from_cache: false,
+                        attempts: attempt,
+                    }
+                }
+                None => {
+                    metrics.tasks_failed.inc();
+                    let failure = last_failure.expect("failure recorded on miss");
+                    if let Some(ck) = &checkpoint {
+                        let _ = ck.record(
+                            &id,
+                            None,
+                            Some(&failure.message),
+                            duration,
+                            attempt,
+                        );
+                    }
+                    if let Some(n) = &notifier {
+                        n.notify(&Notification::TaskFailed { failure: failure.clone() });
+                    }
+                    TaskOutcome {
+                        spec: spec.clone(),
+                        id,
+                        status: TaskStatus::Failed,
+                        value: None,
+                        failure: Some(failure),
+                        duration_secs: duration,
+                        from_cache: false,
+                        attempts: attempt,
+                    }
+                }
+            }
+        })
+    }
+
+    fn notify(&self, n: &Notification) {
+        if let Some(p) = &self.notifier {
+            p.notify(n);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::value::{pv_int, pv_str};
+    use crate::coordinator::notify::MemoryNotificationProvider;
+    use crate::util::fs::TempDir;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    fn small_matrix() -> ConfigMatrix {
+        ConfigMatrix::builder()
+            .param("a", vec![pv_int(1), pv_int(2), pv_int(3)])
+            .param("b", vec![pv_str("x"), pv_str("y")])
+            .setting("bias", Json::int(100))
+            .build()
+            .unwrap()
+    }
+
+    #[test]
+    fn runs_full_product() {
+        let results = Memento::new(|ctx| {
+            let a = ctx.param_i64("a")?;
+            let bias = ctx.setting_i64("bias", 0);
+            Ok(Json::int(a + bias))
+        })
+        .workers(4)
+        .run(&small_matrix())
+        .unwrap();
+        assert_eq!(results.len(), 6);
+        assert_eq!(results.n_failed(), 0);
+        let hit = results.find(&[("a", pv_int(2)), ("b", pv_str("x"))]).unwrap();
+        assert_eq!(hit.value.as_ref().unwrap().as_i64(), Some(102));
+    }
+
+    #[test]
+    fn failures_are_isolated_and_reported() {
+        let notifier = Arc::new(MemoryNotificationProvider::new());
+        let results = Memento::new(|ctx| {
+            if ctx.param_i64("a")? == 2 {
+                Err(MementoError::experiment("a=2 always fails"))
+            } else {
+                Ok(Json::int(0))
+            }
+        })
+        .workers(2)
+        .with_shared_notifier(Arc::clone(&notifier) as Arc<dyn NotificationProvider>)
+        .run(&small_matrix())
+        .unwrap();
+        assert_eq!(results.len(), 6);
+        assert_eq!(results.n_failed(), 2); // a=2 × {x,y}
+        let failures: Vec<_> = results.failures().collect();
+        assert!(failures
+            .iter()
+            .all(|f| f.failure.as_ref().unwrap().message.contains("a=2")));
+        // start + 2 task-failed + finished
+        assert_eq!(notifier.count(), 4);
+    }
+
+    #[test]
+    fn panics_become_failures() {
+        let results = Memento::new(|ctx| {
+            if ctx.param_str("b")? == "y" {
+                panic!("kaboom on y");
+            }
+            Ok(Json::int(1))
+        })
+        .workers(3)
+        .run(&small_matrix())
+        .unwrap();
+        assert_eq!(results.n_failed(), 3);
+        let f = results.failures().next().unwrap().failure.clone().unwrap();
+        assert_eq!(f.kind, FailureKind::Panic);
+        assert!(f.message.contains("kaboom"));
+    }
+
+    #[test]
+    fn cache_prevents_reexecution() {
+        let td = TempDir::new("memento-cache").unwrap();
+        let executions = Arc::new(AtomicUsize::new(0));
+        let make = |ex: Arc<AtomicUsize>| {
+            Memento::new(move |ctx| {
+                ex.fetch_add(1, Ordering::SeqCst);
+                Ok(Json::int(ctx.param_i64("a")?))
+            })
+            .workers(2)
+            .with_cache_dir(td.join("cache"))
+        };
+        let m1 = make(Arc::clone(&executions));
+        let r1 = m1.run(&small_matrix()).unwrap();
+        assert_eq!(executions.load(Ordering::SeqCst), 6);
+        assert_eq!(r1.n_cached(), 0);
+
+        let m2 = make(Arc::clone(&executions));
+        let r2 = m2.run(&small_matrix()).unwrap();
+        assert_eq!(executions.load(Ordering::SeqCst), 6, "no re-execution");
+        assert_eq!(r2.n_cached(), 6);
+        assert_eq!(r2.len(), 6);
+        // values identical
+        for o in r2.iter() {
+            let orig = r1.find(&[
+                ("a", o.spec.get("a").unwrap().clone()),
+                ("b", o.spec.get("b").unwrap().clone()),
+            ]);
+            assert_eq!(orig.unwrap().value, o.value);
+        }
+    }
+
+    #[test]
+    fn version_bump_invalidates_cache() {
+        let td = TempDir::new("memento-version").unwrap();
+        let executions = Arc::new(AtomicUsize::new(0));
+        for (version, expected_total) in [("v1", 6usize), ("v1", 6), ("v2", 12)] {
+            let ex = Arc::clone(&executions);
+            let m = Memento::new(move |_| {
+                ex.fetch_add(1, Ordering::SeqCst);
+                Ok(Json::int(0))
+            })
+            .version(version)
+            .with_cache_dir(td.join("cache"));
+            m.run(&small_matrix()).unwrap();
+            assert_eq!(executions.load(Ordering::SeqCst), expected_total);
+        }
+    }
+
+    #[test]
+    fn retry_policy_retries_then_succeeds() {
+        let attempts_seen = Arc::new(AtomicUsize::new(0));
+        let a2 = Arc::clone(&attempts_seen);
+        let matrix = ConfigMatrix::builder()
+            .param("only", vec![pv_int(1)])
+            .build()
+            .unwrap();
+        let results = Memento::new(move |ctx| {
+            a2.fetch_add(1, Ordering::SeqCst);
+            if ctx.attempt < 3 {
+                Err(MementoError::experiment("transient"))
+            } else {
+                Ok(Json::int(7))
+            }
+        })
+        .with_retry(RetryPolicy::fixed(3, Duration::ZERO))
+        .run(&matrix)
+        .unwrap();
+        assert_eq!(results.n_failed(), 0);
+        assert_eq!(attempts_seen.load(Ordering::SeqCst), 3);
+        assert_eq!(results.outcomes()[0].attempts, 3);
+    }
+
+    #[test]
+    fn retry_exhaustion_reports_attempts() {
+        let matrix = ConfigMatrix::builder()
+            .param("only", vec![pv_int(1)])
+            .build()
+            .unwrap();
+        let results = Memento::new(|_| -> Result<Json, MementoError> {
+            Err(MementoError::experiment("always"))
+        })
+        .with_retry(RetryPolicy::fixed(3, Duration::ZERO))
+        .run(&matrix)
+        .unwrap();
+        assert_eq!(results.n_failed(), 1);
+        assert_eq!(results.outcomes()[0].attempts, 3);
+    }
+
+    #[test]
+    fn fail_fast_aborts() {
+        let err = Memento::new(|_| -> Result<Json, MementoError> {
+            Err(MementoError::experiment("nope"))
+        })
+        .workers(1)
+        .fail_fast(true)
+        .run(&small_matrix())
+        .unwrap_err();
+        assert!(matches!(err, MementoError::Aborted(_)), "{err}");
+    }
+
+    #[test]
+    fn checkpoint_and_resume_skip_done_tasks() {
+        let td = TempDir::new("memento-resume").unwrap();
+        let run_dir = td.join("run");
+        let executions = Arc::new(AtomicUsize::new(0));
+
+        // First run: a=3 fails.
+        let ex = Arc::clone(&executions);
+        let m = Memento::new(move |ctx| {
+            ex.fetch_add(1, Ordering::SeqCst);
+            if ctx.param_i64("a")? == 3 {
+                Err(MementoError::experiment("flaky"))
+            } else {
+                Ok(Json::int(ctx.param_i64("a")?))
+            }
+        })
+        .workers(2)
+        .with_checkpoint_dir(&run_dir);
+        let r1 = m.run(&small_matrix()).unwrap();
+        assert_eq!(executions.load(Ordering::SeqCst), 6);
+        assert_eq!(r1.n_failed(), 2);
+
+        // Resume: only the 2 failed tasks re-run (and now succeed).
+        let ex = Arc::clone(&executions);
+        let m = Memento::new(move |ctx| {
+            ex.fetch_add(1, Ordering::SeqCst);
+            Ok(Json::int(ctx.param_i64("a")?))
+        })
+        .workers(2)
+        .with_checkpoint_dir(&run_dir);
+        let r2 = m.resume(&small_matrix()).unwrap();
+        assert_eq!(executions.load(Ordering::SeqCst), 8, "only failed re-ran");
+        assert_eq!(r2.len(), 6);
+        assert_eq!(r2.n_failed(), 0);
+        assert_eq!(r2.n_cached(), 4);
+    }
+
+    #[test]
+    fn resume_without_checkpoint_dir_errors() {
+        let err = Memento::new(|_| Ok(Json::Null))
+            .resume(&small_matrix())
+            .unwrap_err();
+        assert!(err.to_string().contains("with_checkpoint_dir"), "{err}");
+    }
+
+    #[test]
+    fn resume_rejects_matrix_change() {
+        let td = TempDir::new("memento-fpmismatch").unwrap();
+        let run_dir = td.join("run");
+        Memento::new(|_| Ok(Json::Null))
+            .with_checkpoint_dir(&run_dir)
+            .run(&small_matrix())
+            .unwrap();
+        let other = ConfigMatrix::builder()
+            .param("a", vec![pv_int(9)])
+            .build()
+            .unwrap();
+        let err = Memento::new(|_| Ok(Json::Null))
+            .with_checkpoint_dir(&run_dir)
+            .resume(&other)
+            .unwrap_err();
+        assert!(matches!(err, MementoError::CheckpointMismatch(_)), "{err}");
+    }
+
+    #[test]
+    fn task_seeds_are_deterministic_across_runs() {
+        let seeds = Arc::new(std::sync::Mutex::new(Vec::<u64>::new()));
+        let run = |seeds: Arc<std::sync::Mutex<Vec<u64>>>| {
+            Memento::new(move |ctx| {
+                seeds.lock().unwrap().push(ctx.seed);
+                Ok(Json::Null)
+            })
+            .seed(42)
+            .workers(3)
+            .run(&small_matrix())
+            .unwrap();
+        };
+        run(Arc::clone(&seeds));
+        let mut first: Vec<u64> = seeds.lock().unwrap().drain(..).collect();
+        first.sort_unstable();
+        run(Arc::clone(&seeds));
+        let mut second: Vec<u64> = seeds.lock().unwrap().drain(..).collect();
+        second.sort_unstable();
+        assert_eq!(first, second);
+        // distinct per task
+        let mut dedup = first.clone();
+        dedup.dedup();
+        assert_eq!(dedup.len(), 6);
+    }
+
+    #[test]
+    fn metrics_are_populated() {
+        let m = Memento::new(|_| Ok(Json::Null)).workers(2);
+        let metrics = m.metrics();
+        m.run(&small_matrix()).unwrap();
+        assert_eq!(metrics.tasks_total.get(), 6);
+        assert_eq!(metrics.tasks_succeeded.get(), 6);
+        assert!(metrics.exec_time.count() >= 6);
+    }
+
+    #[test]
+    fn journal_records_full_lifecycle() {
+        let td = TempDir::new("memento-journal").unwrap();
+        let jpath = td.join("run/journal.jsonl");
+        let cache_dir = td.join("cache");
+        let matrix = ConfigMatrix::builder()
+            .param("i", vec![pv_int(0), pv_int(1)])
+            .build()
+            .unwrap();
+        // First run: i=1 fails once then succeeds (retry).
+        let r = Memento::new(|ctx| {
+            if ctx.param_i64("i")? == 1 && ctx.attempt == 1 {
+                Err(MementoError::experiment("flaky"))
+            } else {
+                Ok(Json::Null)
+            }
+        })
+        .with_retry(RetryPolicy::fixed(2, Duration::ZERO))
+        .with_cache_dir(&cache_dir)
+        .with_journal(&jpath)
+        .run(&matrix)
+        .unwrap();
+        assert_eq!(r.n_failed(), 0);
+        // Second run: both restored from cache.
+        Memento::new(|_| Ok(Json::Null))
+            .with_cache_dir(&cache_dir)
+            .with_journal(&jpath)
+            .run(&matrix)
+            .unwrap();
+
+        let s = crate::coordinator::journal::Journal::summarize(&jpath).unwrap();
+        assert_eq!(s.started, 3, "2 first attempts + 1 retry");
+        assert_eq!(s.succeeded, 2);
+        assert_eq!(s.failed_attempts, 1);
+        assert_eq!(s.restored, 2);
+    }
+
+    #[test]
+    fn in_task_progress_survives_retries() {
+        let td = TempDir::new("memento-progress").unwrap();
+        let matrix = ConfigMatrix::builder()
+            .param("only", vec![pv_int(1)])
+            .build()
+            .unwrap();
+        let observed = Arc::new(std::sync::Mutex::new(Vec::<Option<i64>>::new()));
+        let obs = Arc::clone(&observed);
+        let results = Memento::new(move |ctx| {
+            let restored = ctx.restored().and_then(|j| j.as_i64());
+            obs.lock().unwrap().push(restored);
+            ctx.save_progress(Json::int(restored.unwrap_or(0) + 1));
+            if ctx.attempt < 3 {
+                Err(MementoError::experiment("again"))
+            } else {
+                Ok(Json::int(99))
+            }
+        })
+        .with_retry(RetryPolicy::fixed(3, Duration::ZERO))
+        .with_checkpoint_dir(td.join("run"))
+        .run(&matrix)
+        .unwrap();
+        assert_eq!(results.n_failed(), 0);
+        // attempt1 restored None, attempt2 saw 1, attempt3 saw 2
+        assert_eq!(*observed.lock().unwrap(), vec![None, Some(1), Some(2)]);
+    }
+}

@@ -1,0 +1,239 @@
+//! Run metrics: counters, timers, and the end-of-run summary block.
+//!
+//! Thread-safe by construction (atomics + a mutex-guarded histogram); every
+//! worker records into the same registry. The summary block is what the
+//! `memento` CLI prints after a run and what the benches sample.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Duration;
+
+/// A lock-free monotonically increasing counter.
+#[derive(Debug, Default)]
+pub struct Counter(AtomicU64);
+
+impl Counter {
+    pub fn inc(&self) {
+        self.0.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Aggregated duration samples (sum/count/min/max + reservoir for p50/p95).
+#[derive(Debug)]
+pub struct Timer {
+    sum_ns: AtomicU64,
+    count: AtomicU64,
+    samples: Mutex<Vec<u64>>,
+}
+
+const RESERVOIR_CAP: usize = 4096;
+
+impl Default for Timer {
+    fn default() -> Self {
+        Timer {
+            sum_ns: AtomicU64::new(0),
+            count: AtomicU64::new(0),
+            samples: Mutex::new(Vec::new()),
+        }
+    }
+}
+
+impl Timer {
+    pub fn record(&self, d: Duration) {
+        let ns = d.as_nanos().min(u64::MAX as u128) as u64;
+        self.sum_ns.fetch_add(ns, Ordering::Relaxed);
+        let n = self.count.fetch_add(1, Ordering::Relaxed);
+        let mut samples = self.samples.lock().unwrap();
+        if samples.len() < RESERVOIR_CAP {
+            samples.push(ns);
+        } else {
+            // Algorithm R reservoir: replace with probability cap/n.
+            let slot = (n as usize) % RESERVOIR_CAP; // cheap deterministic variant
+            samples[slot] = ns;
+        }
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    pub fn total(&self) -> Duration {
+        Duration::from_nanos(self.sum_ns.load(Ordering::Relaxed))
+    }
+
+    pub fn mean(&self) -> Duration {
+        let c = self.count();
+        if c == 0 {
+            Duration::ZERO
+        } else {
+            Duration::from_nanos(self.sum_ns.load(Ordering::Relaxed) / c)
+        }
+    }
+
+    pub fn percentile(&self, p: f64) -> Duration {
+        let mut samples = self.samples.lock().unwrap().clone();
+        if samples.is_empty() {
+            return Duration::ZERO;
+        }
+        samples.sort_unstable();
+        let idx = ((samples.len() as f64 - 1.0) * p).round() as usize;
+        Duration::from_nanos(samples[idx.min(samples.len() - 1)])
+    }
+}
+
+/// The per-run metrics registry.
+#[derive(Debug, Default)]
+pub struct RunMetrics {
+    pub tasks_total: Counter,
+    pub tasks_succeeded: Counter,
+    pub tasks_failed: Counter,
+    pub tasks_cached: Counter,
+    pub tasks_retried: Counter,
+    pub cache_hits: Counter,
+    pub cache_misses: Counter,
+    pub checkpoint_flushes: Counter,
+    /// Time spent inside experiment functions.
+    pub exec_time: Timer,
+    /// Queue wait: task enqueue → job start (includes time spent behind
+    /// earlier tasks, so it reflects queue depth, not just dispatch cost).
+    pub dispatch_overhead: Timer,
+}
+
+impl RunMetrics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Tasks per second of cumulative execution time.
+    pub fn throughput(&self, wall_secs: f64) -> f64 {
+        if wall_secs <= 0.0 {
+            return 0.0;
+        }
+        self.tasks_total.get() as f64 / wall_secs
+    }
+
+    /// Multi-line summary block.
+    pub fn render(&self, wall_secs: f64) -> String {
+        let mut s = String::new();
+        s.push_str("run metrics:\n");
+        s.push_str(&format!(
+            "  tasks      total={} ok={} failed={} cached={} retried={}\n",
+            self.tasks_total.get(),
+            self.tasks_succeeded.get(),
+            self.tasks_failed.get(),
+            self.tasks_cached.get(),
+            self.tasks_retried.get(),
+        ));
+        s.push_str(&format!(
+            "  cache      hits={} misses={}\n",
+            self.cache_hits.get(),
+            self.cache_misses.get(),
+        ));
+        s.push_str(&format!(
+            "  checkpoint flushes={}\n",
+            self.checkpoint_flushes.get()
+        ));
+        s.push_str(&format!(
+            "  exec       total={} mean={} p95={}\n",
+            crate::util::time::fmt_duration(self.exec_time.total()),
+            crate::util::time::fmt_duration(self.exec_time.mean()),
+            crate::util::time::fmt_duration(self.exec_time.percentile(0.95)),
+        ));
+        s.push_str(&format!(
+            "  queue-wait mean={} p95={}\n",
+            crate::util::time::fmt_duration(self.dispatch_overhead.mean()),
+            crate::util::time::fmt_duration(self.dispatch_overhead.percentile(0.95)),
+        ));
+        s.push_str(&format!(
+            "  wall       {} ({:.1} tasks/s)\n",
+            crate::util::time::fmt_secs(wall_secs),
+            self.throughput(wall_secs),
+        ));
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counter_basics() {
+        let c = Counter::default();
+        c.inc();
+        c.add(4);
+        assert_eq!(c.get(), 5);
+    }
+
+    #[test]
+    fn timer_stats() {
+        let t = Timer::default();
+        for ms in [10u64, 20, 30] {
+            t.record(Duration::from_millis(ms));
+        }
+        assert_eq!(t.count(), 3);
+        assert_eq!(t.total(), Duration::from_millis(60));
+        assert_eq!(t.mean(), Duration::from_millis(20));
+        assert_eq!(t.percentile(0.5), Duration::from_millis(20));
+        assert_eq!(t.percentile(1.0), Duration::from_millis(30));
+        let empty = Timer::default();
+        assert_eq!(empty.mean(), Duration::ZERO);
+        assert_eq!(empty.percentile(0.5), Duration::ZERO);
+    }
+
+    #[test]
+    fn timer_reservoir_bounded() {
+        let t = Timer::default();
+        for i in 0..(RESERVOIR_CAP + 100) {
+            t.record(Duration::from_nanos(i as u64));
+        }
+        assert_eq!(t.count() as usize, RESERVOIR_CAP + 100);
+        assert!(t.samples.lock().unwrap().len() <= RESERVOIR_CAP);
+    }
+
+    #[test]
+    fn concurrent_recording() {
+        let m = std::sync::Arc::new(RunMetrics::new());
+        let mut handles = Vec::new();
+        for _ in 0..4 {
+            let m = std::sync::Arc::clone(&m);
+            handles.push(std::thread::spawn(move || {
+                for _ in 0..1000 {
+                    m.tasks_total.inc();
+                    m.exec_time.record(Duration::from_nanos(100));
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(m.tasks_total.get(), 4000);
+        assert_eq!(m.exec_time.count(), 4000);
+    }
+
+    #[test]
+    fn render_contains_fields() {
+        let m = RunMetrics::new();
+        m.tasks_total.add(45);
+        m.tasks_succeeded.add(44);
+        m.tasks_failed.add(1);
+        let r = m.render(2.0);
+        assert!(r.contains("total=45"), "{r}");
+        assert!(r.contains("ok=44"), "{r}");
+        assert!(r.contains("22.5 tasks/s"), "{r}");
+    }
+
+    #[test]
+    fn throughput_zero_wall() {
+        let m = RunMetrics::new();
+        assert_eq!(m.throughput(0.0), 0.0);
+    }
+}

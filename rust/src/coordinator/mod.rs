@@ -1,0 +1,22 @@
+//! The Memento coordinator — the paper's contribution (Layer 3).
+//!
+//! Pipeline: [`expand`] turns a [`crate::config::matrix::ConfigMatrix`]
+//! into hashed [`task::TaskSpec`]s; [`scheduler`] runs them on a worker
+//! pool; [`cache`] and [`checkpoint`] give re-run avoidance and
+//! crash-resumption; [`retry`], [`notify`], [`metrics`], [`progress`] and
+//! [`results`] round out the reliability/observability story. [`memento`]
+//! is the user-facing façade.
+
+pub mod cache;
+pub mod checkpoint;
+pub mod error;
+pub mod expand;
+pub mod journal;
+pub mod memento;
+pub mod metrics;
+pub mod notify;
+pub mod progress;
+pub mod results;
+pub mod retry;
+pub mod scheduler;
+pub mod task;

@@ -1,0 +1,318 @@
+//! Notification providers.
+//!
+//! "The notification provider specifies the notification sent to the user
+//! once Memento completes the tasks" (§3) — and on failures (§1: "receive
+//! notifications when experiments fail or finish"). Providers receive
+//! structured [`Notification`]s; four implementations ship:
+//!
+//! - [`ConsoleNotificationProvider`] — the paper's default, prints to stdout;
+//! - [`FileNotificationProvider`] — appends JSON lines to a log file;
+//! - [`MemoryNotificationProvider`] — collects in memory (tests/assertions);
+//! - [`SimWebhookNotificationProvider`] — simulates a webhook/email gateway
+//!   by writing one JSON file per notification to an outbox directory
+//!   (substitute for a real HTTP provider on the offline image).
+
+use crate::coordinator::error::TaskFailure;
+use crate::util::json::Json;
+use std::path::PathBuf;
+use std::sync::Mutex;
+
+/// A structured notification event.
+#[derive(Debug, Clone)]
+pub enum Notification {
+    /// A run started: total tasks after exclusion, cached-skip count.
+    RunStarted { total: usize, from_cache: usize },
+    /// One task failed (sent as failures happen, not only at the end).
+    TaskFailed { failure: TaskFailure },
+    /// The run finished.
+    RunFinished {
+        total: usize,
+        succeeded: usize,
+        failed: usize,
+        from_cache: usize,
+        wall_secs: f64,
+    },
+}
+
+impl Notification {
+    /// One-line human rendering.
+    pub fn render(&self) -> String {
+        match self {
+            Notification::RunStarted { total, from_cache } => format!(
+                "memento: run started — {total} task(s), {from_cache} restored from cache"
+            ),
+            Notification::TaskFailed { failure } => {
+                format!("memento: task failed — {}", failure.summary())
+            }
+            Notification::RunFinished { total, succeeded, failed, from_cache, wall_secs } => {
+                format!(
+                    "memento: run finished — {succeeded}/{total} succeeded, {failed} failed, \
+                     {from_cache} cached, wall {}",
+                    crate::util::time::fmt_secs(*wall_secs)
+                )
+            }
+        }
+    }
+
+    /// Structured rendering for machine consumers.
+    pub fn to_json(&self) -> Json {
+        match self {
+            Notification::RunStarted { total, from_cache } => Json::obj(vec![
+                ("event", Json::str("run_started")),
+                ("total", Json::int(*total as i64)),
+                ("from_cache", Json::int(*from_cache as i64)),
+            ]),
+            Notification::TaskFailed { failure } => Json::obj(vec![
+                ("event", Json::str("task_failed")),
+                ("summary", Json::str(failure.summary())),
+                ("attempts", Json::int(failure.attempts as i64)),
+            ]),
+            Notification::RunFinished { total, succeeded, failed, from_cache, wall_secs } => {
+                Json::obj(vec![
+                    ("event", Json::str("run_finished")),
+                    ("total", Json::int(*total as i64)),
+                    ("succeeded", Json::int(*succeeded as i64)),
+                    ("failed", Json::int(*failed as i64)),
+                    ("from_cache", Json::int(*from_cache as i64)),
+                    ("wall_secs", Json::Num(*wall_secs)),
+                ])
+            }
+        }
+    }
+}
+
+/// Receives notifications. Implementations must be thread-safe: failures
+/// are emitted from worker threads while the run is in flight.
+pub trait NotificationProvider: Send + Sync {
+    fn notify(&self, n: &Notification);
+}
+
+/// Prints rendered notifications to stdout (the paper's
+/// `ConsoleNotificationProvider`).
+#[derive(Debug, Default)]
+pub struct ConsoleNotificationProvider;
+
+impl NotificationProvider for ConsoleNotificationProvider {
+    fn notify(&self, n: &Notification) {
+        println!("{}", n.render());
+    }
+}
+
+/// Appends one JSON line per notification to a file.
+pub struct FileNotificationProvider {
+    path: PathBuf,
+    lock: Mutex<()>,
+}
+
+impl FileNotificationProvider {
+    pub fn new(path: impl Into<PathBuf>) -> Self {
+        FileNotificationProvider { path: path.into(), lock: Mutex::new(()) }
+    }
+}
+
+impl NotificationProvider for FileNotificationProvider {
+    fn notify(&self, n: &Notification) {
+        use std::io::Write;
+        let _g = self.lock.lock().unwrap();
+        if let Some(dir) = self.path.parent() {
+            let _ = std::fs::create_dir_all(dir);
+        }
+        if let Ok(mut f) = std::fs::OpenOptions::new()
+            .create(true)
+            .append(true)
+            .open(&self.path)
+        {
+            let _ = writeln!(f, "{}", n.to_json());
+        }
+    }
+}
+
+/// Collects notifications in memory; `events()` snapshots them. Test aid.
+#[derive(Debug, Default)]
+pub struct MemoryNotificationProvider {
+    events: Mutex<Vec<Notification>>,
+}
+
+impl MemoryNotificationProvider {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn events(&self) -> Vec<Notification> {
+        self.events.lock().unwrap().clone()
+    }
+
+    pub fn count(&self) -> usize {
+        self.events.lock().unwrap().len()
+    }
+}
+
+impl NotificationProvider for MemoryNotificationProvider {
+    fn notify(&self, n: &Notification) {
+        self.events.lock().unwrap().push(n.clone());
+    }
+}
+
+/// Simulated webhook: writes `outbox/<seq>.json` per notification.
+///
+/// Stands in for the real-world "send me an email/Slack ping" provider —
+/// the offline image has no network, so delivery is modelled as an outbox
+/// directory that an external agent would drain.
+pub struct SimWebhookNotificationProvider {
+    outbox: PathBuf,
+    seq: Mutex<u64>,
+}
+
+impl SimWebhookNotificationProvider {
+    pub fn new(outbox: impl Into<PathBuf>) -> Self {
+        SimWebhookNotificationProvider { outbox: outbox.into(), seq: Mutex::new(0) }
+    }
+
+    pub fn outbox(&self) -> &std::path::Path {
+        &self.outbox
+    }
+}
+
+impl NotificationProvider for SimWebhookNotificationProvider {
+    fn notify(&self, n: &Notification) {
+        let mut seq = self.seq.lock().unwrap();
+        let path = self.outbox.join(format!("{:06}.json", *seq));
+        *seq += 1;
+        let _ = crate::util::fs::atomic_write(&path, n.to_json().to_string().as_bytes());
+    }
+}
+
+/// Fans one notification out to several providers.
+#[derive(Default)]
+pub struct MultiNotificationProvider {
+    providers: Vec<Box<dyn NotificationProvider>>,
+}
+
+impl MultiNotificationProvider {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn push(mut self, p: Box<dyn NotificationProvider>) -> Self {
+        self.providers.push(p);
+        self
+    }
+}
+
+impl NotificationProvider for MultiNotificationProvider {
+    fn notify(&self, n: &Notification) {
+        for p in &self.providers {
+            p.notify(n);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::error::FailureKind;
+    use crate::util::fs::TempDir;
+
+    fn failure() -> TaskFailure {
+        TaskFailure {
+            kind: FailureKind::Error,
+            message: "nan loss".into(),
+            params: vec![("model".into(), "SVC".into())],
+            attempts: 2,
+        }
+    }
+
+    #[test]
+    fn render_all_variants() {
+        let started = Notification::RunStarted { total: 45, from_cache: 3 };
+        assert!(started.render().contains("45 task(s)"));
+        let failed = Notification::TaskFailed { failure: failure() };
+        assert!(failed.render().contains("nan loss"));
+        let fin = Notification::RunFinished {
+            total: 45,
+            succeeded: 44,
+            failed: 1,
+            from_cache: 3,
+            wall_secs: 12.0,
+        };
+        let r = fin.render();
+        assert!(r.contains("44/45"), "{r}");
+        assert!(r.contains("1 failed"), "{r}");
+    }
+
+    #[test]
+    fn json_shapes() {
+        let fin = Notification::RunFinished {
+            total: 2,
+            succeeded: 2,
+            failed: 0,
+            from_cache: 1,
+            wall_secs: 0.5,
+        };
+        let j = fin.to_json();
+        assert_eq!(j.get("event").unwrap().as_str(), Some("run_finished"));
+        assert_eq!(j.get("succeeded").unwrap().as_i64(), Some(2));
+        let tf = Notification::TaskFailed { failure: failure() }.to_json();
+        assert_eq!(tf.get("event").unwrap().as_str(), Some("task_failed"));
+    }
+
+    #[test]
+    fn memory_provider_collects() {
+        let p = MemoryNotificationProvider::new();
+        p.notify(&Notification::RunStarted { total: 1, from_cache: 0 });
+        p.notify(&Notification::TaskFailed { failure: failure() });
+        assert_eq!(p.count(), 2);
+        assert!(matches!(p.events()[0], Notification::RunStarted { .. }));
+    }
+
+    #[test]
+    fn file_provider_appends_json_lines() {
+        let td = TempDir::new("notify").unwrap();
+        let path = td.join("log/notify.jsonl");
+        let p = FileNotificationProvider::new(&path);
+        p.notify(&Notification::RunStarted { total: 3, from_cache: 0 });
+        p.notify(&Notification::RunFinished {
+            total: 3,
+            succeeded: 3,
+            failed: 0,
+            from_cache: 0,
+            wall_secs: 1.0,
+        });
+        let text = std::fs::read_to_string(&path).unwrap();
+        let lines: Vec<_> = text.lines().collect();
+        assert_eq!(lines.len(), 2);
+        for l in lines {
+            crate::util::json::parse(l).unwrap();
+        }
+    }
+
+    #[test]
+    fn webhook_outbox_sequences() {
+        let td = TempDir::new("webhook").unwrap();
+        let p = SimWebhookNotificationProvider::new(td.join("outbox"));
+        for _ in 0..3 {
+            p.notify(&Notification::RunStarted { total: 1, from_cache: 0 });
+        }
+        let files = crate::util::fs::list_files_with_ext(p.outbox(), "json").unwrap();
+        assert_eq!(files.len(), 3);
+        assert!(files[0].file_name().unwrap().to_str().unwrap().starts_with("000000"));
+    }
+
+    #[test]
+    fn multi_fans_out() {
+        let mem1 = std::sync::Arc::new(MemoryNotificationProvider::new());
+        let mem2 = std::sync::Arc::new(MemoryNotificationProvider::new());
+        struct Fwd(std::sync::Arc<MemoryNotificationProvider>);
+        impl NotificationProvider for Fwd {
+            fn notify(&self, n: &Notification) {
+                self.0.notify(n);
+            }
+        }
+        let multi = MultiNotificationProvider::new()
+            .push(Box::new(Fwd(std::sync::Arc::clone(&mem1))))
+            .push(Box::new(Fwd(std::sync::Arc::clone(&mem2))));
+        multi.notify(&Notification::RunStarted { total: 1, from_cache: 0 });
+        assert_eq!(mem1.count(), 1);
+        assert_eq!(mem2.count(), 1);
+    }
+}

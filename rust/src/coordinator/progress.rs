@@ -1,0 +1,159 @@
+//! Progress reporting: periodic `done/total (ETA …)` lines.
+//!
+//! A background thread wakes at a fixed interval and prints progress when it
+//! changed since the last tick; the ETA is a simple completed-rate
+//! extrapolation. Silent when the run finishes between ticks — the final
+//! summary comes from the notifier instead.
+
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// Shared progress state updated by the scheduler.
+#[derive(Debug)]
+pub struct ProgressState {
+    pub done: AtomicUsize,
+    pub total: usize,
+    start: Instant,
+}
+
+impl ProgressState {
+    pub fn new(total: usize) -> Arc<Self> {
+        Arc::new(ProgressState { done: AtomicUsize::new(0), total, start: Instant::now() })
+    }
+
+    pub fn mark_done(&self) {
+        self.done.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn snapshot(&self) -> (usize, usize) {
+        (self.done.load(Ordering::Relaxed), self.total)
+    }
+
+    /// Estimated seconds remaining, `None` until at least one completion.
+    pub fn eta_secs(&self) -> Option<f64> {
+        let done = self.done.load(Ordering::Relaxed);
+        if done == 0 || self.total == 0 {
+            return None;
+        }
+        let elapsed = self.start.elapsed().as_secs_f64();
+        let rate = done as f64 / elapsed;
+        Some(((self.total - done) as f64 / rate).max(0.0))
+    }
+
+    /// Renders a `[####....] 12/45 (ETA 3.2s)` line.
+    pub fn render(&self) -> String {
+        let (done, total) = self.snapshot();
+        let width = 24usize;
+        let filled = if total == 0 { width } else { width * done / total };
+        let bar: String = (0..width).map(|i| if i < filled { '#' } else { '.' }).collect();
+        let eta = match self.eta_secs() {
+            Some(s) if done < total => format!(" (ETA {})", crate::util::time::fmt_secs(s)),
+            _ => String::new(),
+        };
+        format!("[{bar}] {done}/{total}{eta}")
+    }
+}
+
+/// Background printer; stops (and joins) on drop.
+pub struct ProgressReporter {
+    stop: Arc<AtomicBool>,
+    handle: Option<std::thread::JoinHandle<()>>,
+}
+
+impl ProgressReporter {
+    /// Starts printing `state.render()` every `interval` while progress
+    /// changes. Pass `quiet = true` to create a no-op reporter.
+    pub fn start(state: Arc<ProgressState>, interval: Duration, quiet: bool) -> Self {
+        let stop = Arc::new(AtomicBool::new(false));
+        if quiet {
+            return ProgressReporter { stop, handle: None };
+        }
+        let stop2 = Arc::clone(&stop);
+        let handle = std::thread::Builder::new()
+            .name("memento-progress".into())
+            .spawn(move || {
+                let mut last_done = usize::MAX;
+                while !stop2.load(Ordering::Relaxed) {
+                    std::thread::sleep(interval);
+                    let (done, total) = state.snapshot();
+                    if done != last_done && done < total {
+                        println!("{}", state.render());
+                        last_done = done;
+                    }
+                }
+            })
+            .expect("spawn progress reporter");
+        ProgressReporter { stop, handle: Some(handle) }
+    }
+}
+
+impl Drop for ProgressReporter {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn snapshot_and_mark() {
+        let p = ProgressState::new(10);
+        assert_eq!(p.snapshot(), (0, 10));
+        p.mark_done();
+        p.mark_done();
+        assert_eq!(p.snapshot(), (2, 10));
+    }
+
+    #[test]
+    fn eta_appears_after_first_completion() {
+        let p = ProgressState::new(4);
+        assert!(p.eta_secs().is_none());
+        p.mark_done();
+        std::thread::sleep(Duration::from_millis(2));
+        let eta = p.eta_secs().unwrap();
+        assert!(eta >= 0.0);
+    }
+
+    #[test]
+    fn render_shape() {
+        let p = ProgressState::new(4);
+        p.mark_done();
+        let r = p.render();
+        assert!(r.contains("1/4"), "{r}");
+        assert!(r.starts_with('['), "{r}");
+        // full bar at completion, no ETA suffix
+        for _ in 0..3 {
+            p.mark_done();
+        }
+        let r = p.render();
+        assert!(r.contains("4/4"), "{r}");
+        assert!(!r.contains("ETA"), "{r}");
+    }
+
+    #[test]
+    fn zero_total_does_not_divide_by_zero() {
+        let p = ProgressState::new(0);
+        let r = p.render();
+        assert!(r.contains("0/0"), "{r}");
+        assert!(p.eta_secs().is_none());
+    }
+
+    #[test]
+    fn reporter_stops_on_drop() {
+        let p = ProgressState::new(2);
+        {
+            let _r = ProgressReporter::start(Arc::clone(&p), Duration::from_millis(5), true);
+            p.mark_done();
+        } // drop joins
+        {
+            let _r = ProgressReporter::start(Arc::clone(&p), Duration::from_millis(1), false);
+            std::thread::sleep(Duration::from_millis(5));
+        }
+    }
+}

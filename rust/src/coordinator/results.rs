@@ -1,0 +1,442 @@
+//! Run results: per-task outcomes and the queryable [`ResultSet`].
+//!
+//! After a run, the user wants (a) the value each experiment produced,
+//! (b) which combinations failed and why, and (c) pivoted summary tables
+//! (the §3 accuracy grid). `ResultSet` provides lookup by parameter
+//! assignment, filtering, group-by aggregation, and an ASCII table renderer.
+
+use crate::config::value::ParamValue;
+use crate::coordinator::error::TaskFailure;
+use crate::coordinator::task::{TaskId, TaskSpec};
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+
+/// Terminal state of one task.
+#[derive(Debug, Clone, PartialEq)]
+pub enum TaskStatus {
+    /// Experiment function returned a value.
+    Success,
+    /// All attempts failed.
+    Failed,
+}
+
+/// Full record for one executed (or cache-restored) task.
+#[derive(Debug, Clone)]
+pub struct TaskOutcome {
+    pub spec: TaskSpec,
+    pub id: TaskId,
+    pub status: TaskStatus,
+    /// Present iff `status == Success`.
+    pub value: Option<Json>,
+    /// Present iff `status == Failed`.
+    pub failure: Option<TaskFailure>,
+    /// Wall-clock seconds spent executing (0.0 for pure cache hits).
+    pub duration_secs: f64,
+    /// True when the value came from the result cache.
+    pub from_cache: bool,
+    /// Attempts actually made (0 for cache hits).
+    pub attempts: u32,
+}
+
+impl TaskOutcome {
+    pub fn succeeded(&self) -> bool {
+        self.status == TaskStatus::Success
+    }
+
+    /// Extracts a named f64 field from an object-valued result — the common
+    /// "accuracy" / "f1" lookup when aggregating.
+    pub fn metric(&self, field: &str) -> Option<f64> {
+        self.value.as_ref()?.get(field)?.as_f64()
+    }
+}
+
+/// The collection of outcomes for one run.
+#[derive(Debug, Clone, Default)]
+pub struct ResultSet {
+    outcomes: Vec<TaskOutcome>,
+}
+
+impl ResultSet {
+    pub fn new(mut outcomes: Vec<TaskOutcome>) -> Self {
+        // Stable order: by expansion index, so reports are deterministic
+        // regardless of worker interleaving.
+        outcomes.sort_by_key(|o| o.spec.index);
+        ResultSet { outcomes }
+    }
+
+    pub fn len(&self) -> usize {
+        self.outcomes.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.outcomes.is_empty()
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = &TaskOutcome> {
+        self.outcomes.iter()
+    }
+
+    pub fn outcomes(&self) -> &[TaskOutcome] {
+        &self.outcomes
+    }
+
+    pub fn successes(&self) -> impl Iterator<Item = &TaskOutcome> {
+        self.outcomes.iter().filter(|o| o.succeeded())
+    }
+
+    pub fn failures(&self) -> impl Iterator<Item = &TaskOutcome> {
+        self.outcomes.iter().filter(|o| !o.succeeded())
+    }
+
+    pub fn n_failed(&self) -> usize {
+        self.failures().count()
+    }
+
+    pub fn n_cached(&self) -> usize {
+        self.outcomes.iter().filter(|o| o.from_cache).count()
+    }
+
+    /// Finds the outcome whose spec assigns exactly the given pairs (a
+    /// subset match: all given pairs must hold).
+    pub fn find(&self, pairs: &[(&str, ParamValue)]) -> Option<&TaskOutcome> {
+        self.outcomes.iter().find(|o| {
+            pairs
+                .iter()
+                .all(|(k, v)| o.spec.get(k).map(|h| h == v).unwrap_or(false))
+        })
+    }
+
+    /// All outcomes matching a partial assignment.
+    pub fn filter(&self, pairs: &[(&str, ParamValue)]) -> Vec<&TaskOutcome> {
+        self.outcomes
+            .iter()
+            .filter(|o| {
+                pairs
+                    .iter()
+                    .all(|(k, v)| o.spec.get(k).map(|h| h == v).unwrap_or(false))
+            })
+            .collect()
+    }
+
+    /// Mean of `metric` over successful outcomes grouped by `param`'s value.
+    pub fn mean_by(&self, param: &str, metric: &str) -> Vec<(ParamValue, f64, usize)> {
+        let mut groups: Vec<(ParamValue, Vec<f64>)> = Vec::new();
+        for o in self.successes() {
+            let (Some(v), Some(m)) = (o.spec.get(param), o.metric(metric)) else {
+                continue;
+            };
+            match groups.iter_mut().find(|(gv, _)| gv == v) {
+                Some((_, xs)) => xs.push(m),
+                None => groups.push((v.clone(), vec![m])),
+            }
+        }
+        groups
+            .into_iter()
+            .map(|(v, xs)| {
+                let n = xs.len();
+                (v, xs.iter().sum::<f64>() / n as f64, n)
+            })
+            .collect()
+    }
+
+    /// Pivot table: rows = values of `row_param`, cols = values of
+    /// `col_param`, cells = mean of `metric` over matching successes.
+    pub fn pivot(
+        &self,
+        row_param: &str,
+        col_param: &str,
+        metric: &str,
+    ) -> PivotTable {
+        let mut rows: Vec<ParamValue> = Vec::new();
+        let mut cols: Vec<ParamValue> = Vec::new();
+        for o in self.outcomes.iter() {
+            if let Some(r) = o.spec.get(row_param) {
+                if !rows.contains(r) {
+                    rows.push(r.clone());
+                }
+            }
+            if let Some(c) = o.spec.get(col_param) {
+                if !cols.contains(c) {
+                    cols.push(c.clone());
+                }
+            }
+        }
+        let mut cells = vec![vec![None; cols.len()]; rows.len()];
+        for (ri, r) in rows.iter().enumerate() {
+            for (ci, c) in cols.iter().enumerate() {
+                let xs: Vec<f64> = self
+                    .successes()
+                    .filter(|o| o.spec.get(row_param) == Some(r) && o.spec.get(col_param) == Some(c))
+                    .filter_map(|o| o.metric(metric))
+                    .collect();
+                if !xs.is_empty() {
+                    cells[ri][ci] = Some(xs.iter().sum::<f64>() / xs.len() as f64);
+                }
+            }
+        }
+        PivotTable {
+            row_param: row_param.to_string(),
+            col_param: col_param.to_string(),
+            metric: metric.to_string(),
+            rows,
+            cols,
+            cells,
+        }
+    }
+
+    /// One-paragraph run summary (used by notifications and the CLI).
+    pub fn summary(&self) -> String {
+        let total = self.len();
+        let failed = self.n_failed();
+        let cached = self.n_cached();
+        let exec_time: f64 = self.outcomes.iter().map(|o| o.duration_secs).sum();
+        format!(
+            "{total} task(s): {} succeeded, {failed} failed, {cached} from cache; \
+             cumulative execution {}",
+            total - failed,
+            crate::util::time::fmt_secs(exec_time),
+        )
+    }
+
+    /// Serializes all outcomes for persistence (`memento report`).
+    pub fn to_json(&self) -> Json {
+        Json::Arr(
+            self.outcomes
+                .iter()
+                .map(|o| {
+                    let mut fields: Vec<(&str, Json)> = vec![
+                        ("id", Json::str(o.id.0.clone())),
+                        ("params", o.spec.to_json()),
+                        (
+                            "status",
+                            Json::str(if o.succeeded() { "success" } else { "failed" }),
+                        ),
+                        ("duration_secs", Json::Num(o.duration_secs)),
+                        ("from_cache", Json::Bool(o.from_cache)),
+                        ("attempts", Json::int(o.attempts as i64)),
+                    ];
+                    if let Some(v) = &o.value {
+                        fields.push(("value", v.clone()));
+                    }
+                    if let Some(f) = &o.failure {
+                        fields.push(("failure", Json::str(f.summary())));
+                    }
+                    Json::obj(fields)
+                })
+                .collect(),
+        )
+    }
+}
+
+/// A rendered-on-demand pivot table (the §3 accuracy grid).
+#[derive(Debug, Clone)]
+pub struct PivotTable {
+    pub row_param: String,
+    pub col_param: String,
+    pub metric: String,
+    pub rows: Vec<ParamValue>,
+    pub cols: Vec<ParamValue>,
+    pub cells: Vec<Vec<Option<f64>>>,
+}
+
+impl PivotTable {
+    /// ASCII rendering with aligned columns; empty cells print `—`.
+    pub fn render(&self) -> String {
+        let mut header: Vec<String> = vec![format!("{}\\{}", self.row_param, self.col_param)];
+        header.extend(self.cols.iter().map(|c| c.to_string()));
+        let mut body: Vec<Vec<String>> = Vec::new();
+        for (ri, r) in self.rows.iter().enumerate() {
+            let mut row = vec![r.to_string()];
+            for ci in 0..self.cols.len() {
+                row.push(match self.cells[ri][ci] {
+                    Some(x) => format!("{x:.4}"),
+                    None => "—".to_string(),
+                });
+            }
+            body.push(row);
+        }
+        let mut widths: Vec<usize> = header.iter().map(|h| h.chars().count()).collect();
+        for row in &body {
+            for (i, cell) in row.iter().enumerate() {
+                widths[i] = widths[i].max(cell.chars().count());
+            }
+        }
+        let fmt_row = |row: &[String]| -> String {
+            row.iter()
+                .enumerate()
+                .map(|(i, c)| format!("{:<w$}", c, w = widths[i]))
+                .collect::<Vec<_>>()
+                .join("  ")
+        };
+        let mut out = format!("{} (mean {})\n", fmt_row(&header), self.metric);
+        out.push_str(&"-".repeat(widths.iter().sum::<usize>() + 2 * (widths.len() - 1)));
+        out.push('\n');
+        for row in &body {
+            out.push_str(&fmt_row(row));
+            out.push('\n');
+        }
+        out
+    }
+}
+
+/// BTreeMap-based frequency count helper shared by reports.
+pub fn count_by<'a>(
+    outcomes: impl Iterator<Item = &'a TaskOutcome>,
+    param: &str,
+) -> BTreeMap<String, usize> {
+    let mut m = BTreeMap::new();
+    for o in outcomes {
+        if let Some(v) = o.spec.get(param) {
+            *m.entry(v.to_string()).or_insert(0) += 1;
+        }
+    }
+    m
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::value::{pv_int, pv_str};
+    use crate::coordinator::error::FailureKind;
+
+    fn outcome(ds: &str, model: &str, acc: f64, index: usize) -> TaskOutcome {
+        let spec = TaskSpec {
+            params: vec![
+                ("dataset".into(), pv_str(ds)),
+                ("model".into(), pv_str(model)),
+            ],
+            index,
+        };
+        let id = spec.id("v1");
+        TaskOutcome {
+            spec,
+            id,
+            status: TaskStatus::Success,
+            value: Some(Json::obj(vec![("accuracy", Json::Num(acc))])),
+            failure: None,
+            duration_secs: 0.1,
+            from_cache: false,
+            attempts: 1,
+        }
+    }
+
+    fn failed_outcome(ds: &str, index: usize) -> TaskOutcome {
+        let spec = TaskSpec {
+            params: vec![
+                ("dataset".into(), pv_str(ds)),
+                ("model".into(), pv_str("SVC")),
+            ],
+            index,
+        };
+        let id = spec.id("v1");
+        TaskOutcome {
+            spec: spec.clone(),
+            id,
+            status: TaskStatus::Failed,
+            value: None,
+            failure: Some(TaskFailure {
+                kind: FailureKind::Error,
+                message: "bad".into(),
+                params: spec.param_strings(),
+                attempts: 2,
+            }),
+            duration_secs: 0.05,
+            from_cache: false,
+            attempts: 2,
+        }
+    }
+
+    fn sample() -> ResultSet {
+        ResultSet::new(vec![
+            outcome("wine", "SVC", 0.9, 2),
+            outcome("wine", "RF", 0.8, 0),
+            outcome("digits", "RF", 0.7, 1),
+            failed_outcome("digits", 3),
+        ])
+    }
+
+    #[test]
+    fn ordering_by_index() {
+        let rs = sample();
+        let idx: Vec<usize> = rs.iter().map(|o| o.spec.index).collect();
+        assert_eq!(idx, vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn counts() {
+        let rs = sample();
+        assert_eq!(rs.len(), 4);
+        assert_eq!(rs.n_failed(), 1);
+        assert_eq!(rs.successes().count(), 3);
+        assert_eq!(rs.n_cached(), 0);
+    }
+
+    #[test]
+    fn find_and_filter() {
+        let rs = sample();
+        let hit = rs
+            .find(&[("dataset", pv_str("wine")), ("model", pv_str("SVC"))])
+            .unwrap();
+        assert!((hit.metric("accuracy").unwrap() - 0.9).abs() < 1e-12);
+        assert_eq!(rs.filter(&[("dataset", pv_str("wine"))]).len(), 2);
+        assert!(rs.find(&[("dataset", pv_str("nope"))]).is_none());
+        assert!(rs.find(&[("missing_param", pv_int(1))]).is_none());
+    }
+
+    #[test]
+    fn mean_by_groups_and_averages() {
+        let rs = sample();
+        let means = rs.mean_by("dataset", "accuracy");
+        let wine = means.iter().find(|(v, _, _)| v == &pv_str("wine")).unwrap();
+        assert!((wine.1 - 0.85).abs() < 1e-12);
+        assert_eq!(wine.2, 2);
+        // failed task contributes nothing
+        let digits = means.iter().find(|(v, _, _)| v == &pv_str("digits")).unwrap();
+        assert_eq!(digits.2, 1);
+    }
+
+    #[test]
+    fn pivot_table_shape_and_render() {
+        let rs = sample();
+        let p = rs.pivot("dataset", "model", "accuracy");
+        assert_eq!(p.rows.len(), 2);
+        assert_eq!(p.cols.len(), 2);
+        let rendered = p.render();
+        assert!(rendered.contains("0.9000"), "{rendered}");
+        assert!(rendered.contains("—"), "missing-cell marker: {rendered}");
+        assert!(rendered.contains("dataset\\model"), "{rendered}");
+    }
+
+    #[test]
+    fn summary_mentions_failures_and_cache() {
+        let rs = sample();
+        let s = rs.summary();
+        assert!(s.contains("4 task(s)"), "{s}");
+        assert!(s.contains("1 failed"), "{s}");
+    }
+
+    #[test]
+    fn to_json_roundtrips_shape() {
+        let rs = sample();
+        let j = rs.to_json();
+        let arr = j.as_arr().unwrap();
+        assert_eq!(arr.len(), 4);
+        let failed: Vec<_> = arr
+            .iter()
+            .filter(|o| o.get("status").unwrap().as_str() == Some("failed"))
+            .collect();
+        assert_eq!(failed.len(), 1);
+        assert!(failed[0].get("failure").unwrap().as_str().unwrap().contains("bad"));
+        // parse back
+        let back = crate::util::json::parse(&j.to_string()).unwrap();
+        assert_eq!(back.as_arr().unwrap().len(), 4);
+    }
+
+    #[test]
+    fn count_by_works() {
+        let rs = sample();
+        let c = count_by(rs.iter(), "dataset");
+        assert_eq!(c["wine"], 2);
+        assert_eq!(c["digits"], 2);
+    }
+}

@@ -1,0 +1,120 @@
+//! Retry policies for flaky experiment tasks.
+//!
+//! The paper's fault-tolerance story is coarse-grained (rerun failed tasks
+//! on the next invocation); production experiment runners also want
+//! *in-run* retries for transient failures (OOM races, network datasets,
+//! CUDA hiccups). [`RetryPolicy`] covers both: `none()` reproduces the
+//! paper's behaviour, `fixed`/`exponential` add bounded in-run retries.
+
+use std::time::Duration;
+
+/// Backoff shape between attempts.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Backoff {
+    /// Same delay between all attempts.
+    Fixed(Duration),
+    /// `base * factor^(attempt-1)`, capped at `max`.
+    Exponential { base: Duration, factor: f64, max: Duration },
+}
+
+/// A bounded retry policy.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct RetryPolicy {
+    /// Total attempts (1 = no retries).
+    pub max_attempts: u32,
+    pub backoff: Backoff,
+}
+
+impl RetryPolicy {
+    /// No retries: a single attempt (the paper's default behaviour).
+    pub fn none() -> RetryPolicy {
+        RetryPolicy { max_attempts: 1, backoff: Backoff::Fixed(Duration::ZERO) }
+    }
+
+    /// `attempts` total attempts with a fixed `delay` between them.
+    pub fn fixed(attempts: u32, delay: Duration) -> RetryPolicy {
+        RetryPolicy { max_attempts: attempts.max(1), backoff: Backoff::Fixed(delay) }
+    }
+
+    /// Exponential backoff: `base, base*factor, base*factor², …` capped at `max`.
+    pub fn exponential(attempts: u32, base: Duration, factor: f64, max: Duration) -> RetryPolicy {
+        RetryPolicy {
+            max_attempts: attempts.max(1),
+            backoff: Backoff::Exponential { base, factor: factor.max(1.0), max },
+        }
+    }
+
+    /// Delay to sleep before attempt `next_attempt` (2-based: the delay
+    /// after the first failure precedes attempt 2).
+    pub fn delay_before(&self, next_attempt: u32) -> Duration {
+        if next_attempt <= 1 {
+            return Duration::ZERO;
+        }
+        match self.backoff {
+            Backoff::Fixed(d) => d,
+            Backoff::Exponential { base, factor, max } => {
+                let exp = (next_attempt - 2) as i32;
+                let secs = base.as_secs_f64() * factor.powi(exp);
+                Duration::from_secs_f64(secs.min(max.as_secs_f64()))
+            }
+        }
+    }
+
+    /// Whether another attempt is allowed after `attempts_made` attempts.
+    pub fn should_retry(&self, attempts_made: u32) -> bool {
+        attempts_made < self.max_attempts
+    }
+}
+
+impl Default for RetryPolicy {
+    fn default() -> Self {
+        RetryPolicy::none()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn none_is_single_attempt() {
+        let p = RetryPolicy::none();
+        assert_eq!(p.max_attempts, 1);
+        assert!(!p.should_retry(1));
+        assert_eq!(p.delay_before(2), Duration::ZERO);
+    }
+
+    #[test]
+    fn fixed_delays() {
+        let p = RetryPolicy::fixed(3, Duration::from_millis(10));
+        assert!(p.should_retry(1));
+        assert!(p.should_retry(2));
+        assert!(!p.should_retry(3));
+        assert_eq!(p.delay_before(1), Duration::ZERO);
+        assert_eq!(p.delay_before(2), Duration::from_millis(10));
+        assert_eq!(p.delay_before(3), Duration::from_millis(10));
+    }
+
+    #[test]
+    fn exponential_grows_and_caps() {
+        let p = RetryPolicy::exponential(
+            5,
+            Duration::from_millis(100),
+            2.0,
+            Duration::from_millis(350),
+        );
+        assert_eq!(p.delay_before(2), Duration::from_millis(100));
+        assert_eq!(p.delay_before(3), Duration::from_millis(200));
+        assert_eq!(p.delay_before(4), Duration::from_millis(350)); // capped from 400
+        assert_eq!(p.delay_before(5), Duration::from_millis(350));
+    }
+
+    #[test]
+    fn zero_attempts_clamps_to_one() {
+        assert_eq!(RetryPolicy::fixed(0, Duration::ZERO).max_attempts, 1);
+        assert_eq!(
+            RetryPolicy::exponential(0, Duration::ZERO, 0.5, Duration::ZERO).max_attempts,
+            1
+        );
+    }
+}

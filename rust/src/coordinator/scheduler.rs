@@ -1,0 +1,354 @@
+//! Task scheduling across the worker pool.
+//!
+//! The scheduler is deliberately generic: it takes fully-formed task specs
+//! and a job closure producing a [`TaskOutcome`], and guarantees
+//!
+//! 1. every spec is executed **exactly once** (or skipped after abort),
+//! 2. worker panics *outside* the job's own catch (bugs in the coordinator
+//!    itself) cannot lose outcomes silently — missing outcomes are detected
+//!    and surfaced,
+//! 3. fail-fast mode stops dispatching new tasks after the first failure
+//!    while letting in-flight tasks finish.
+//!
+//! The cache/retry/checkpoint/notification pipeline around each task is
+//! composed by [`crate::coordinator::memento`], keeping this module small
+//! and testable in isolation.
+
+use crate::coordinator::metrics::RunMetrics;
+use crate::coordinator::progress::ProgressState;
+use crate::coordinator::results::{TaskOutcome, TaskStatus};
+use crate::coordinator::task::TaskSpec;
+use crate::util::pool::ThreadPool;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc;
+use std::sync::Arc;
+use std::time::Instant;
+
+/// Scheduling configuration.
+#[derive(Debug, Clone)]
+pub struct SchedulerOptions {
+    /// Worker threads. Defaults to the machine's logical CPU count.
+    pub workers: usize,
+    /// Stop dispatching after the first failed task.
+    pub fail_fast: bool,
+}
+
+impl Default for SchedulerOptions {
+    fn default() -> Self {
+        SchedulerOptions { workers: crate::util::pool::num_cpus(), fail_fast: false }
+    }
+}
+
+/// What happened to each dispatched spec.
+pub struct ScheduleReport {
+    /// Outcomes for tasks that ran (or were restored); ordered by spec index.
+    pub outcomes: Vec<TaskOutcome>,
+    /// Specs skipped because fail-fast aborted the run.
+    pub skipped: Vec<TaskSpec>,
+    /// True if fail-fast triggered.
+    pub aborted: bool,
+}
+
+/// Runs `job` over all `specs` on a pool of `opts.workers` threads.
+///
+/// `job` must itself be panic-safe (it converts experiment panics into
+/// failed outcomes); a panic escaping `job` is a coordinator bug and is
+/// reported as a synthesized failed outcome so the run still accounts for
+/// every task.
+pub fn run_all(
+    specs: Vec<TaskSpec>,
+    opts: &SchedulerOptions,
+    job: Arc<dyn Fn(&TaskSpec) -> TaskOutcome + Send + Sync>,
+    progress: Option<Arc<ProgressState>>,
+) -> ScheduleReport {
+    run_all_with_metrics(specs, opts, job, progress, None)
+}
+
+/// [`run_all`] with a metrics registry: records per-task queue wait
+/// (enqueue → job start) into `dispatch_overhead`.
+pub fn run_all_with_metrics(
+    specs: Vec<TaskSpec>,
+    opts: &SchedulerOptions,
+    job: Arc<dyn Fn(&TaskSpec) -> TaskOutcome + Send + Sync>,
+    progress: Option<Arc<ProgressState>>,
+    metrics: Option<Arc<RunMetrics>>,
+) -> ScheduleReport {
+    let n = specs.len();
+    if n == 0 {
+        return ScheduleReport { outcomes: Vec::new(), skipped: Vec::new(), aborted: false };
+    }
+    let workers = opts.workers.max(1).min(n.max(1));
+    let pool = ThreadPool::new(workers);
+    let (tx, rx) = mpsc::channel::<Result<TaskOutcome, TaskSpec>>();
+    let abort = Arc::new(AtomicBool::new(false));
+    let fail_fast = opts.fail_fast;
+
+    for spec in specs {
+        let tx = tx.clone();
+        let job = Arc::clone(&job);
+        let abort = Arc::clone(&abort);
+        let progress = progress.clone();
+        let metrics = metrics.clone();
+        let enqueued = Instant::now();
+        pool.execute(move || {
+            if abort.load(Ordering::SeqCst) {
+                let _ = tx.send(Err(spec));
+                return;
+            }
+            if let Some(m) = &metrics {
+                m.dispatch_overhead.record(enqueued.elapsed());
+            }
+            let outcome = job(&spec);
+            if fail_fast && outcome.status == TaskStatus::Failed {
+                abort.store(true, Ordering::SeqCst);
+            }
+            if let Some(p) = &progress {
+                p.mark_done();
+            }
+            let _ = tx.send(Ok(outcome));
+        });
+    }
+    drop(tx);
+
+    let mut outcomes = Vec::with_capacity(n);
+    let mut skipped = Vec::new();
+    // Collect until all senders hang up. Jobs that panicked *around* the
+    // job closure never send; the pool contains the panic, the sender is
+    // dropped, and the channel closes once all jobs end — the count check
+    // below surfaces the loss.
+    for msg in rx {
+        match msg {
+            Ok(o) => outcomes.push(o),
+            Err(spec) => skipped.push(spec),
+        }
+    }
+    pool.join();
+
+    let lost = n - outcomes.len() - skipped.len();
+    if lost > 0 {
+        // Coordinator-level bug: account for it loudly rather than silently.
+        eprintln!(
+            "memento scheduler: {lost} task(s) lost to unexpected worker panics \
+             (pool reported {})",
+            pool.panic_count()
+        );
+    }
+    outcomes.sort_by_key(|o| o.spec.index);
+    skipped.sort_by_key(|s| s.index);
+    let aborted = abort.load(Ordering::SeqCst);
+    ScheduleReport { outcomes, skipped, aborted }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::value::pv_int;
+    use crate::util::json::Json;
+    use std::sync::atomic::AtomicUsize;
+
+    fn specs(n: usize) -> Vec<TaskSpec> {
+        (0..n)
+            .map(|i| TaskSpec {
+                params: vec![("i".to_string(), pv_int(i as i64))],
+                index: i,
+            })
+            .collect()
+    }
+
+    fn ok_outcome(spec: &TaskSpec) -> TaskOutcome {
+        TaskOutcome {
+            spec: spec.clone(),
+            id: spec.id("v1"),
+            status: TaskStatus::Success,
+            value: Some(Json::int(spec.index as i64)),
+            failure: None,
+            duration_secs: 0.0,
+            from_cache: false,
+            attempts: 1,
+        }
+    }
+
+    fn failed_outcome(spec: &TaskSpec) -> TaskOutcome {
+        TaskOutcome {
+            spec: spec.clone(),
+            id: spec.id("v1"),
+            status: TaskStatus::Failed,
+            value: None,
+            failure: None,
+            duration_secs: 0.0,
+            from_cache: false,
+            attempts: 1,
+        }
+    }
+
+    #[test]
+    fn executes_every_task_exactly_once() {
+        let count = Arc::new(AtomicUsize::new(0));
+        let c = Arc::clone(&count);
+        let report = run_all(
+            specs(100),
+            &SchedulerOptions { workers: 8, fail_fast: false },
+            Arc::new(move |s| {
+                c.fetch_add(1, Ordering::SeqCst);
+                ok_outcome(s)
+            }),
+            None,
+        );
+        assert_eq!(count.load(Ordering::SeqCst), 100);
+        assert_eq!(report.outcomes.len(), 100);
+        assert!(report.skipped.is_empty());
+        assert!(!report.aborted);
+        // ordered by index
+        for (i, o) in report.outcomes.iter().enumerate() {
+            assert_eq!(o.spec.index, i);
+        }
+    }
+
+    #[test]
+    fn empty_specs() {
+        let report = run_all(
+            Vec::new(),
+            &SchedulerOptions::default(),
+            Arc::new(ok_outcome),
+            None,
+        );
+        assert!(report.outcomes.is_empty());
+        assert!(!report.aborted);
+    }
+
+    #[test]
+    fn single_worker_is_sequential_and_ordered() {
+        let order = Arc::new(std::sync::Mutex::new(Vec::new()));
+        let o2 = Arc::clone(&order);
+        run_all(
+            specs(10),
+            &SchedulerOptions { workers: 1, fail_fast: false },
+            Arc::new(move |s| {
+                o2.lock().unwrap().push(s.index);
+                ok_outcome(s)
+            }),
+            None,
+        );
+        assert_eq!(*order.lock().unwrap(), (0..10).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn fail_fast_skips_remaining() {
+        // 1 worker → deterministic: task 2 fails, 3.. are skipped.
+        let report = run_all(
+            specs(10),
+            &SchedulerOptions { workers: 1, fail_fast: true },
+            Arc::new(|s| {
+                if s.index == 2 {
+                    failed_outcome(s)
+                } else {
+                    ok_outcome(s)
+                }
+            }),
+            None,
+        );
+        assert!(report.aborted);
+        assert_eq!(report.outcomes.len(), 3); // 0, 1, 2
+        assert_eq!(report.skipped.len(), 7);
+        assert_eq!(report.skipped[0].index, 3);
+    }
+
+    #[test]
+    fn keep_going_collects_all_failures() {
+        let report = run_all(
+            specs(20),
+            &SchedulerOptions { workers: 4, fail_fast: false },
+            Arc::new(|s| {
+                if s.index % 3 == 0 {
+                    failed_outcome(s)
+                } else {
+                    ok_outcome(s)
+                }
+            }),
+            None,
+        );
+        assert_eq!(report.outcomes.len(), 20);
+        let failed = report
+            .outcomes
+            .iter()
+            .filter(|o| o.status == TaskStatus::Failed)
+            .count();
+        assert_eq!(failed, 7); // 0,3,6,9,12,15,18
+        assert!(!report.aborted);
+    }
+
+    #[test]
+    fn progress_is_marked() {
+        let progress = ProgressState::new(10);
+        run_all(
+            specs(10),
+            &SchedulerOptions { workers: 2, fail_fast: false },
+            Arc::new(ok_outcome),
+            Some(Arc::clone(&progress)),
+        );
+        assert_eq!(progress.snapshot(), (10, 10));
+    }
+
+    #[test]
+    fn panicking_job_does_not_hang() {
+        // A panic escaping `job` is a coordinator bug; the scheduler must
+        // still terminate and report the remaining outcomes.
+        let report = run_all(
+            specs(10),
+            &SchedulerOptions { workers: 2, fail_fast: false },
+            Arc::new(|s| {
+                if s.index == 5 {
+                    panic!("coordinator bug");
+                }
+                ok_outcome(s)
+            }),
+            None,
+        );
+        assert_eq!(report.outcomes.len(), 9);
+    }
+
+    #[test]
+    fn workers_capped_at_task_count() {
+        // requesting 64 workers for 2 tasks must not spawn 64 threads —
+        // just verify it runs fine.
+        let report = run_all(
+            specs(2),
+            &SchedulerOptions { workers: 64, fail_fast: false },
+            Arc::new(ok_outcome),
+            None,
+        );
+        assert_eq!(report.outcomes.len(), 2);
+    }
+
+    // ---- property: exactly-once under random worker counts ---------------
+
+    #[test]
+    fn prop_exactly_once_any_worker_count() {
+        use crate::testing::prop::check;
+        check("scheduler-exactly-once", 25, |g| {
+            let n = g.size(1, 40);
+            let workers = g.size(1, 8);
+            let counts: Arc<Vec<AtomicUsize>> =
+                Arc::new((0..n).map(|_| AtomicUsize::new(0)).collect());
+            let c = Arc::clone(&counts);
+            let report = run_all(
+                specs(n),
+                &SchedulerOptions { workers, fail_fast: false },
+                Arc::new(move |s| {
+                    c[s.index].fetch_add(1, Ordering::SeqCst);
+                    ok_outcome(s)
+                }),
+                None,
+            );
+            crate::prop_assert!(report.outcomes.len() == n, "outcome count");
+            for (i, c) in counts.iter().enumerate() {
+                crate::prop_assert!(
+                    c.load(Ordering::SeqCst) == 1,
+                    "task {i} ran {} times",
+                    c.load(Ordering::SeqCst)
+                );
+            }
+            Ok(())
+        });
+    }
+}

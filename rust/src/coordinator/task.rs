@@ -1,0 +1,357 @@
+//! Tasks: one fully-assigned parameter combination plus its identity hash.
+//!
+//! The paper (§3): "Each parameter is assigned a hash value when generating
+//! the tasks" — task identity is what makes caching and checkpoint resume
+//! sound. Here a [`TaskId`] is the SHA-256 of the *canonical JSON* of the
+//! parameter assignment plus an experiment-function version salt, so:
+//! - the same combination always hashes the same (cache hits across runs),
+//! - changing the experiment code (bumping `version`) invalidates old
+//!   cached results without deleting them.
+
+use crate::config::value::ParamValue;
+use crate::coordinator::error::MementoError;
+use crate::util::json::Json;
+use sha2::{Digest, Sha256};
+use std::collections::BTreeMap;
+use std::fmt;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+/// Hex SHA-256 helper used for task ids and matrix fingerprints.
+pub fn sha256_hex(bytes: &[u8]) -> String {
+    let mut h = Sha256::new();
+    h.update(bytes);
+    let digest = h.finalize();
+    let mut s = String::with_capacity(64);
+    for b in digest {
+        s.push_str(&format!("{b:02x}"));
+    }
+    s
+}
+
+/// Content-addressed task identity (64 hex chars).
+#[derive(Debug, Clone, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct TaskId(pub String);
+
+impl TaskId {
+    /// Short prefix for human-facing logs.
+    pub fn short(&self) -> &str {
+        &self.0[..12.min(self.0.len())]
+    }
+}
+
+impl fmt::Display for TaskId {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+/// A fully-assigned parameter combination.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TaskSpec {
+    /// Assignment in the matrix's declaration order.
+    pub params: Vec<(String, ParamValue)>,
+    /// Position in the expansion order (stable for a given matrix).
+    pub index: usize,
+}
+
+impl TaskSpec {
+    /// Computes the task id. `version` salts the hash with the experiment
+    /// function's version so stale cache entries are never reused after a
+    /// code change (the §3 "update the code and rerun" workflow).
+    pub fn id(&self, version: &str) -> TaskId {
+        let obj: BTreeMap<String, Json> = self
+            .params
+            .iter()
+            .map(|(k, v)| (k.clone(), v.to_json()))
+            .collect();
+        let doc = Json::obj(vec![
+            ("params", Json::Obj(obj)),
+            ("version", Json::str(version)),
+        ]);
+        TaskId(sha256_hex(doc.canonical().as_bytes()))
+    }
+
+    /// Value of a parameter by name.
+    pub fn get(&self, name: &str) -> Option<&ParamValue> {
+        self.params
+            .iter()
+            .find(|(n, _)| n == name)
+            .map(|(_, v)| v)
+    }
+
+    /// `k=v, k=v` rendering for logs and failure records.
+    pub fn label(&self) -> String {
+        self.params
+            .iter()
+            .map(|(k, v)| format!("{k}={v}"))
+            .collect::<Vec<_>>()
+            .join(", ")
+    }
+
+    /// String context pairs (used by [`crate::coordinator::error::TaskFailure`]).
+    pub fn param_strings(&self) -> Vec<(String, String)> {
+        self.params
+            .iter()
+            .map(|(k, v)| (k.clone(), v.to_string()))
+            .collect()
+    }
+
+    /// Serializes the assignment as a JSON object.
+    pub fn to_json(&self) -> Json {
+        Json::Obj(
+            self.params
+                .iter()
+                .map(|(k, v)| (k.clone(), v.to_json()))
+                .collect(),
+        )
+    }
+}
+
+/// Everything a running experiment can see: its parameters, the run-wide
+/// settings, a fork-safe RNG seed, and a scratch checkpoint slot.
+///
+/// This is the Rust analogue of the paper's `context` argument: "we access
+/// the input parameters for this task", "settings … can be accessed by each
+/// task", "specify the outputs that should be checkpointed".
+pub struct TaskContext {
+    pub spec: TaskSpec,
+    pub settings: Arc<BTreeMap<String, Json>>,
+    /// Derived from the run seed and task id; identical across re-runs.
+    pub seed: u64,
+    /// Attempt number, 1-based (visible so experiments can log retries).
+    pub attempt: u32,
+    /// Partial-progress slot persisted by the checkpoint store between
+    /// attempts/resumes (see [`TaskContext::save_progress`]).
+    progress: std::sync::Mutex<Option<Json>>,
+    progress_sink: Option<Arc<dyn Fn(&TaskId, &Json) + Send + Sync>>,
+    task_id: TaskId,
+}
+
+impl TaskContext {
+    pub fn new(
+        spec: TaskSpec,
+        settings: Arc<BTreeMap<String, Json>>,
+        seed: u64,
+        attempt: u32,
+        task_id: TaskId,
+        restored: Option<Json>,
+        progress_sink: Option<Arc<dyn Fn(&TaskId, &Json) + Send + Sync>>,
+    ) -> Self {
+        TaskContext {
+            spec,
+            settings,
+            seed,
+            attempt,
+            progress: std::sync::Mutex::new(restored),
+            progress_sink,
+            task_id,
+        }
+    }
+
+    pub fn id(&self) -> &TaskId {
+        &self.task_id
+    }
+
+    // ---- typed parameter accessors --------------------------------------
+
+    pub fn param(&self, name: &str) -> Result<&ParamValue, MementoError> {
+        self.spec.get(name).ok_or_else(|| {
+            MementoError::experiment(format!("task has no parameter '{name}'"))
+        })
+    }
+
+    pub fn param_str(&self, name: &str) -> Result<&str, MementoError> {
+        self.param(name)?.as_str().ok_or_else(|| {
+            MementoError::experiment(format!("parameter '{name}' is not a string"))
+        })
+    }
+
+    pub fn param_i64(&self, name: &str) -> Result<i64, MementoError> {
+        self.param(name)?.as_i64().ok_or_else(|| {
+            MementoError::experiment(format!("parameter '{name}' is not an integer"))
+        })
+    }
+
+    pub fn param_f64(&self, name: &str) -> Result<f64, MementoError> {
+        self.param(name)?.as_f64().ok_or_else(|| {
+            MementoError::experiment(format!("parameter '{name}' is not numeric"))
+        })
+    }
+
+    pub fn param_bool(&self, name: &str) -> Result<bool, MementoError> {
+        self.param(name)?.as_bool().ok_or_else(|| {
+            MementoError::experiment(format!("parameter '{name}' is not a bool"))
+        })
+    }
+
+    // ---- settings --------------------------------------------------------
+
+    pub fn setting(&self, name: &str) -> Option<&Json> {
+        self.settings.get(name)
+    }
+
+    pub fn setting_i64(&self, name: &str, default: i64) -> i64 {
+        self.settings
+            .get(name)
+            .and_then(|j| j.as_i64())
+            .unwrap_or(default)
+    }
+
+    pub fn setting_f64(&self, name: &str, default: f64) -> f64 {
+        self.settings
+            .get(name)
+            .and_then(|j| j.as_f64())
+            .unwrap_or(default)
+    }
+
+    // ---- in-task checkpointing -------------------------------------------
+
+    /// Persists partial progress (e.g. "folds 0..3 done, partial scores").
+    /// On retry or resume the same task sees it via [`TaskContext::restored`].
+    pub fn save_progress(&self, value: Json) {
+        if let Some(sink) = &self.progress_sink {
+            sink(&self.task_id, &value);
+        }
+        *self.progress.lock().unwrap() = Some(value);
+    }
+
+    /// Progress restored from a previous attempt/run, if any.
+    pub fn restored(&self) -> Option<Json> {
+        self.progress.lock().unwrap().clone()
+    }
+}
+
+/// Derives a per-task seed from the run seed and task id (first 8 bytes of
+/// the id hash XOR run seed) — stable across resumes, independent across
+/// tasks.
+pub fn task_seed(run_seed: u64, id: &TaskId) -> u64 {
+    let mut bytes = [0u8; 8];
+    for (i, chunk) in id.0.as_bytes().chunks(2).take(8).enumerate() {
+        let hex = std::str::from_utf8(chunk).unwrap_or("00");
+        bytes[i] = u8::from_str_radix(hex, 16).unwrap_or(0);
+    }
+    run_seed ^ u64::from_le_bytes(bytes)
+}
+
+/// Monotonic counter for unique run directories.
+static RUN_COUNTER: AtomicU64 = AtomicU64::new(0);
+
+/// Generates a unique run id: `run-<pid>-<counter>`.
+pub fn fresh_run_id() -> String {
+    format!(
+        "run-{}-{}",
+        std::process::id(),
+        RUN_COUNTER.fetch_add(1, Ordering::Relaxed)
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::value::{pv_int, pv_str};
+
+    fn spec() -> TaskSpec {
+        TaskSpec {
+            params: vec![
+                ("dataset".into(), pv_str("wine")),
+                ("model".into(), pv_str("SVC")),
+                ("n".into(), pv_int(5)),
+            ],
+            index: 3,
+        }
+    }
+
+    #[test]
+    fn id_is_stable_and_order_independent() {
+        let a = spec();
+        let mut b = spec();
+        b.params.reverse();
+        b.index = 99; // index must not affect identity
+        assert_eq!(a.id("v1"), b.id("v1"));
+    }
+
+    #[test]
+    fn id_changes_with_version_and_params() {
+        let a = spec();
+        assert_ne!(a.id("v1"), a.id("v2"));
+        let mut c = spec();
+        c.params[2].1 = pv_int(6);
+        assert_ne!(a.id("v1"), c.id("v1"));
+    }
+
+    #[test]
+    fn id_shape() {
+        let id = spec().id("v1");
+        assert_eq!(id.0.len(), 64);
+        assert!(id.0.chars().all(|c| c.is_ascii_hexdigit()));
+        assert_eq!(id.short().len(), 12);
+    }
+
+    #[test]
+    fn label_and_get() {
+        let s = spec();
+        assert_eq!(s.label(), "dataset=wine, model=SVC, n=5");
+        assert_eq!(s.get("model"), Some(&pv_str("SVC")));
+        assert_eq!(s.get("nope"), None);
+    }
+
+    #[test]
+    fn context_typed_accessors() {
+        let s = spec();
+        let id = s.id("v1");
+        let mut settings = BTreeMap::new();
+        settings.insert("n_fold".to_string(), Json::int(5));
+        let ctx = TaskContext::new(s, Arc::new(settings), 42, 1, id, None, None);
+        assert_eq!(ctx.param_str("dataset").unwrap(), "wine");
+        assert_eq!(ctx.param_i64("n").unwrap(), 5);
+        assert_eq!(ctx.param_f64("n").unwrap(), 5.0);
+        assert!(ctx.param_str("n").is_err());
+        assert!(ctx.param("missing").is_err());
+        assert_eq!(ctx.setting_i64("n_fold", 3), 5);
+        assert_eq!(ctx.setting_i64("other", 3), 3);
+        assert_eq!(ctx.setting_f64("other", 0.5), 0.5);
+    }
+
+    #[test]
+    fn progress_roundtrip_and_sink() {
+        let s = spec();
+        let id = s.id("v1");
+        let seen = Arc::new(std::sync::Mutex::new(Vec::<String>::new()));
+        let seen2 = Arc::clone(&seen);
+        let sink: Arc<dyn Fn(&TaskId, &Json) + Send + Sync> =
+            Arc::new(move |tid, j| seen2.lock().unwrap().push(format!("{tid}:{j}")));
+        let ctx = TaskContext::new(
+            s,
+            Arc::new(BTreeMap::new()),
+            0,
+            1,
+            id.clone(),
+            Some(Json::int(2)),
+            Some(sink),
+        );
+        assert_eq!(ctx.restored(), Some(Json::int(2)));
+        ctx.save_progress(Json::int(3));
+        assert_eq!(ctx.restored(), Some(Json::int(3)));
+        assert_eq!(seen.lock().unwrap().len(), 1);
+        assert!(seen.lock().unwrap()[0].starts_with(&id.0));
+    }
+
+    #[test]
+    fn task_seed_stable_and_distinct() {
+        let a = spec().id("v1");
+        let mut other = spec();
+        other.params[0].1 = pv_str("digits");
+        let b = other.id("v1");
+        assert_eq!(task_seed(7, &a), task_seed(7, &a));
+        assert_ne!(task_seed(7, &a), task_seed(7, &b));
+        assert_ne!(task_seed(7, &a), task_seed(8, &a));
+    }
+
+    #[test]
+    fn fresh_run_ids_unique() {
+        let a = fresh_run_id();
+        let b = fresh_run_id();
+        assert_ne!(a, b);
+    }
+}

@@ -1,0 +1,208 @@
+//! The paper's §3 demonstration grid as a reusable workload.
+//!
+//! Examples, integration tests, and benches all run *this* — the exact
+//! configuration matrix from the paper (3 datasets × 2 imputers × 3
+//! preprocessors × 3 models = 54 combinations, minus the
+//! `digits × SimpleImputer` exclusion = 45 tasks), plus an extended variant
+//! that adds the AOT/PJRT-backed `MLP` as a fourth model family so the
+//! end-to-end driver exercises all three layers.
+
+use crate::config::matrix::ConfigMatrix;
+use crate::config::value::pv_str;
+use crate::coordinator::error::MementoError;
+use crate::coordinator::task::TaskContext;
+use crate::ml::dataset::load_by_name;
+use crate::ml::impute::imputer_by_name;
+use crate::ml::pipeline::{cross_validate, model_by_name};
+use crate::ml::scale::scaler_by_name;
+use crate::ml::tree::Classifier;
+use crate::runtime::artifact::ArtifactStore;
+use crate::runtime::mlp::{MlpModel, MlpParams};
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+use std::sync::Arc;
+
+/// The exact §3 matrix: 3×2×3×3 = 54 raw, 45 after exclusion.
+pub fn paper_matrix() -> ConfigMatrix {
+    base_builder(vec!["AdaBoost", "RandomForest", "SVC"])
+        .build()
+        .expect("paper matrix is valid")
+}
+
+/// §3 matrix + the AOT MLP model family: 3×2×3×4 = 72 raw, 60 after
+/// exclusion. This is the end-to-end driver's workload.
+pub fn extended_matrix() -> ConfigMatrix {
+    base_builder(vec!["AdaBoost", "RandomForest", "SVC", "MLP"])
+        .build()
+        .expect("extended matrix is valid")
+}
+
+/// A fast variant on the tiny `toy` dataset (for tests and micro-benches).
+pub fn toy_matrix() -> ConfigMatrix {
+    ConfigMatrix::builder()
+        .param("dataset", vec![pv_str("toy")])
+        .param(
+            "feature_engineering",
+            vec![pv_str("DummyImputer"), pv_str("SimpleImputer")],
+        )
+        .param(
+            "preprocessing",
+            vec![pv_str("DummyPreprocessor"), pv_str("StandardScaler")],
+        )
+        .param("model", vec![pv_str("SVC"), pv_str("DecisionTree")])
+        .setting("n_fold", Json::int(3))
+        .setting("data_seed", Json::int(0))
+        .build()
+        .expect("toy matrix is valid")
+}
+
+fn base_builder(models: Vec<&str>) -> crate::config::matrix::MatrixBuilder {
+    ConfigMatrix::builder()
+        .param(
+            "dataset",
+            vec![pv_str("digits"), pv_str("wine"), pv_str("breast_cancer")],
+        )
+        .param(
+            "feature_engineering",
+            vec![pv_str("DummyImputer"), pv_str("SimpleImputer")],
+        )
+        .param(
+            "preprocessing",
+            vec![
+                pv_str("DummyPreprocessor"),
+                pv_str("MinMaxScaler"),
+                pv_str("StandardScaler"),
+            ],
+        )
+        .param("model", models.into_iter().map(pv_str).collect())
+        .setting("n_fold", Json::int(5))
+        .setting("data_seed", Json::int(0))
+        .exclude(vec![
+            ("dataset", pv_str("digits")),
+            ("feature_engineering", pv_str("SimpleImputer")),
+        ])
+}
+
+/// The experiment function for the grid (the paper's `exp_func`).
+///
+/// Reads `dataset` / `feature_engineering` / `preprocessing` / `model` from
+/// the task, `n_fold` and `data_seed` from the settings, runs k-fold CV,
+/// and returns `{accuracy, macro_f1, folds, n_eval}`. The `MLP` model is
+/// dispatched to the PJRT runtime through `store`.
+pub fn grid_exp_fn(
+    store: Option<Arc<ArtifactStore>>,
+) -> impl Fn(&TaskContext) -> Result<Json, MementoError> + Send + Sync + 'static {
+    move |ctx: &TaskContext| {
+        let dataset_name = ctx.param_str("dataset")?;
+        let fe = ctx.param_str("feature_engineering")?;
+        let prep = ctx.param_str("preprocessing")?;
+        let model_name = ctx.param_str("model")?;
+        let n_fold = ctx.setting_i64("n_fold", 5) as usize;
+        let data_seed = ctx.setting_i64("data_seed", 0) as u64;
+
+        let ds = load_by_name(dataset_name, data_seed).ok_or_else(|| {
+            MementoError::experiment(format!("unknown dataset '{dataset_name}'"))
+        })?;
+        // Fail fast on bad stage names (validated here so errors carry task context).
+        imputer_by_name(fe)
+            .ok_or_else(|| MementoError::experiment(format!("unknown imputer '{fe}'")))?;
+        scaler_by_name(prep)
+            .ok_or_else(|| MementoError::experiment(format!("unknown scaler '{prep}'")))?;
+
+        let mut rng = Rng::new(ctx.seed);
+        let factory: Box<dyn Fn() -> Box<dyn Classifier>> = if model_name == "MLP" {
+            let store = store
+                .clone()
+                .ok_or_else(|| {
+                    MementoError::experiment(
+                        "model 'MLP' requires the AOT artifact store (run `make artifacts`)",
+                    )
+                })?;
+            Box::new(move || {
+                Box::new(MlpModel::new(Arc::clone(&store), MlpParams::default()))
+                    as Box<dyn Classifier>
+            })
+        } else {
+            let name = model_name.to_string();
+            model_by_name(&name).ok_or_else(|| {
+                MementoError::experiment(format!("unknown model '{name}'"))
+            })?;
+            Box::new(move || model_by_name(&name).unwrap())
+        };
+
+        let scores = cross_validate(&ds, fe, prep, &*factory, n_fold, &mut rng)
+            .map_err(|e| MementoError::experiment(e.to_string()))?;
+
+        Ok(Json::obj(vec![
+            ("accuracy", Json::Num(scores.mean_accuracy)),
+            ("macro_f1", Json::Num(scores.mean_macro_f1)),
+            (
+                "folds",
+                Json::Arr(scores.fold_accuracy.iter().map(|&a| Json::Num(a)).collect()),
+            ),
+            ("n_eval", Json::int(scores.n_eval as i64)),
+        ]))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::expand;
+    use crate::coordinator::memento::Memento;
+
+    #[test]
+    fn paper_matrix_counts() {
+        // E1: the §3 worked example.
+        let m = paper_matrix();
+        assert_eq!(m.raw_count(), 54);
+        assert_eq!(expand::count_included(&m), 45);
+        let e = extended_matrix();
+        assert_eq!(e.raw_count(), 72);
+        assert_eq!(expand::count_included(&e), 60);
+    }
+
+    #[test]
+    fn toy_grid_runs_end_to_end_without_runtime() {
+        let results = Memento::new(grid_exp_fn(None))
+            .workers(4)
+            .seed(1)
+            .run(&toy_matrix())
+            .unwrap();
+        assert_eq!(results.len(), 8);
+        assert_eq!(results.n_failed(), 0);
+        for o in results.iter() {
+            let acc = o.metric("accuracy").unwrap();
+            assert!(acc > 0.5, "task {} acc {acc}", o.spec.label());
+            assert!(o.metric("macro_f1").unwrap() > 0.3);
+        }
+    }
+
+    #[test]
+    fn mlp_without_store_is_clean_failure() {
+        let m = ConfigMatrix::builder()
+            .param("dataset", vec![pv_str("toy")])
+            .param("feature_engineering", vec![pv_str("DummyImputer")])
+            .param("preprocessing", vec![pv_str("DummyPreprocessor")])
+            .param("model", vec![pv_str("MLP")])
+            .build()
+            .unwrap();
+        let results = Memento::new(grid_exp_fn(None)).run(&m).unwrap();
+        assert_eq!(results.n_failed(), 1);
+        let f = results.failures().next().unwrap().failure.clone().unwrap();
+        assert!(f.message.contains("make artifacts"), "{}", f.message);
+    }
+
+    #[test]
+    fn unknown_dataset_is_task_failure_not_crash() {
+        let m = ConfigMatrix::builder()
+            .param("dataset", vec![pv_str("imagenet")])
+            .param("feature_engineering", vec![pv_str("DummyImputer")])
+            .param("preprocessing", vec![pv_str("DummyPreprocessor")])
+            .param("model", vec![pv_str("SVC")])
+            .build()
+            .unwrap();
+        let results = Memento::new(grid_exp_fn(None)).run(&m).unwrap();
+        assert_eq!(results.n_failed(), 1);
+    }
+}

@@ -1,0 +1,4 @@
+//! Reusable experiment workloads: the paper's §3 demonstration grid wired
+//! as a library so examples, tests, and benches share one definition.
+
+pub mod grid;

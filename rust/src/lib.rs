@@ -1,0 +1,63 @@
+//! # Memento-RS
+//!
+//! A Rust + JAX + Pallas reproduction of **"Memento: Facilitating
+//! Effortless, Efficient, and Reliable ML Experiments"** (Pullar-Strecker
+//! et al., ECML PKDD 2023).
+//!
+//! Memento turns a *configuration matrix* — the cartesian product of
+//! parameter choices, minus exclusion rules — into a set of isolated,
+//! hashed experiment tasks that are scheduled across a worker pool,
+//! cached, checkpointed, retried, and reported on.
+//!
+//! ```no_run
+//! use memento::prelude::*;
+//!
+//! let matrix = ConfigMatrix::builder()
+//!     .param("x", vec![pv_int(1), pv_int(2)])
+//!     .param("y", vec![pv_str("a"), pv_str("b")])
+//!     .build()
+//!     .unwrap();
+//! let results = Memento::new(|task| Ok(Json::int(task.param_i64("x")? * 10)))
+//!     .workers(4)
+//!     .run(&matrix)
+//!     .unwrap();
+//! assert_eq!(results.len(), 4);
+//! ```
+//!
+//! Architecture (three layers, Python never on the request path):
+//! - **L3** ([`coordinator`], [`config`]) — the orchestrator: this crate.
+//! - **L2** — a JAX MLP train/predict graph, AOT-lowered to HLO text by
+//!   `python/compile/aot.py` and executed through [`runtime`].
+//! - **L1** — a Pallas fused-dense kernel inside that graph
+//!   (`python/compile/kernels/dense.py`).
+//!
+//! The [`ml`] module provides the from-scratch learners/datasets used by the
+//! paper's §3 demonstration grid, and [`experiments`] wires that grid up as
+//! a reusable workload.
+
+pub mod bench;
+pub mod config;
+pub mod coordinator;
+pub mod experiments;
+pub mod ml;
+pub mod runtime;
+pub mod testing;
+pub mod util;
+
+/// Convenience re-exports covering the public API surface.
+pub mod prelude {
+    pub use crate::config::matrix::{ConfigMatrix, MatrixBuilder};
+    pub use crate::config::value::{pv_bool, pv_f64, pv_int, pv_str, ParamValue};
+    pub use crate::coordinator::cache::ResultCache;
+    pub use crate::coordinator::checkpoint::CheckpointStore;
+    pub use crate::coordinator::error::{MementoError, TaskFailure};
+    pub use crate::coordinator::memento::{Memento, RunOptions};
+    pub use crate::coordinator::notify::{
+        ConsoleNotificationProvider, FileNotificationProvider, MemoryNotificationProvider,
+        NotificationProvider,
+    };
+    pub use crate::coordinator::results::{ResultSet, TaskOutcome, TaskStatus};
+    pub use crate::coordinator::retry::RetryPolicy;
+    pub use crate::coordinator::task::{TaskContext, TaskId, TaskSpec};
+    pub use crate::util::json::Json;
+}

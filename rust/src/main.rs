@@ -1,0 +1,285 @@
+//! `memento` — the CLI leader process.
+//!
+//! Subcommands:
+//!   expand  <config.json>              show the task expansion (E1)
+//!   run     <config.json> [opts]       run the grid experiment function
+//!   resume  <config.json> [opts]       resume a checkpointed run
+//!   status  --checkpoint <dir>         inspect a run manifest
+//!   report  --results <file> [opts]    pivot saved results into a table
+//!
+//! The experiment function is the §3 grid (`experiments::grid`): parameters
+//! `dataset`/`feature_engineering`/`preprocessing`/`model`. The AOT MLP
+//! model family is available whenever `artifacts/` exists (`make artifacts`).
+
+use memento::config::loader;
+use memento::coordinator::checkpoint::CheckpointStore;
+use memento::coordinator::expand;
+use memento::coordinator::memento::Memento;
+use memento::coordinator::notify::ConsoleNotificationProvider;
+use memento::coordinator::results::ResultSet;
+use memento::experiments::grid;
+use memento::runtime::artifact::shared_store;
+use memento::util::cli::{CliError, CliSpec};
+use memento::util::json::{parse, Json};
+use std::path::Path;
+use std::process::ExitCode;
+use std::time::Duration;
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let Some((cmd, rest)) = args.split_first() else {
+        eprintln!("{}", top_help());
+        return ExitCode::FAILURE;
+    };
+    let result = match cmd.as_str() {
+        "expand" => cmd_expand(rest),
+        "run" => cmd_run(rest, false),
+        "resume" => cmd_run(rest, true),
+        "status" => cmd_status(rest),
+        "report" => cmd_report(rest),
+        "--help" | "-h" | "help" => {
+            println!("{}", top_help());
+            return ExitCode::SUCCESS;
+        }
+        other => {
+            eprintln!("unknown command '{other}'\n\n{}", top_help());
+            return ExitCode::FAILURE;
+        }
+    };
+    match result {
+        Ok(()) => ExitCode::SUCCESS,
+        Err(e) => {
+            eprintln!("{e}");
+            ExitCode::FAILURE
+        }
+    }
+}
+
+fn top_help() -> String {
+    "memento — effortless, efficient, and reliable ML experiments\n\
+     \n\
+     USAGE: memento <expand|run|resume|status|report> [options]\n\
+     \n\
+     Try `memento run --help` for per-command options."
+        .to_string()
+}
+
+fn unwrap_cli<T>(r: Result<T, CliError>) -> Result<T, String> {
+    r.map_err(|e| match e {
+        CliError::HelpRequested(h) => h,
+        other => other.to_string(),
+    })
+}
+
+fn cmd_expand(args: &[String]) -> Result<(), String> {
+    let spec = CliSpec::new("memento expand", "show the task expansion of a config matrix")
+        .positional("config", "config matrix JSON file")
+        .flag("ids", "also print task hashes");
+    let a = unwrap_cli(spec.parse(args))?;
+    let path = a.pos("config").ok_or("missing <config>")?;
+    let matrix = loader::from_file(Path::new(path)).map_err(|e| e.to_string())?;
+    let tasks = expand::expand(&matrix);
+    println!(
+        "raw combinations : {}\nexcluded         : {}\nincluded tasks   : {}",
+        matrix.raw_count(),
+        matrix.raw_count() - tasks.len(),
+        tasks.len()
+    );
+    for t in &tasks {
+        if a.flag("ids") {
+            println!("  [{:>4}] {}  {}", t.index, t.id("v1").short(), t.label());
+        } else {
+            println!("  [{:>4}] {}", t.index, t.label());
+        }
+    }
+    Ok(())
+}
+
+fn run_spec(name: &'static str) -> CliSpec {
+    CliSpec::new(name, "run the §3 grid experiment over a config matrix")
+        .positional("config", "config matrix JSON file")
+        .opt("workers", "0", "worker threads (0 = all cores)")
+        .opt("seed", "0", "base RNG seed")
+        .opt("version", "v1", "experiment code version (cache salt)")
+        .opt_required("cache", "result cache directory")
+        .opt_required("checkpoint", "checkpoint run directory")
+        .opt_required("out", "write results JSON here")
+        .opt_required("journal", "write a JSONL event journal here")
+        .opt("rows", "dataset", "report pivot rows")
+        .opt("cols", "model", "report pivot columns")
+        .opt("metric", "accuracy", "report metric field")
+        .flag("fail-fast", "abort on first failure")
+        .flag("quiet", "suppress progress/notifications")
+}
+
+fn cmd_run(args: &[String], resuming: bool) -> Result<(), String> {
+    let spec = run_spec(if resuming { "memento resume" } else { "memento run" });
+    let a = unwrap_cli(spec.parse(args))?;
+    let path = a.pos("config").ok_or("missing <config>")?;
+    let matrix = loader::from_file(Path::new(path)).map_err(|e| e.to_string())?;
+
+    // The MLP family needs artifacts; make them available when present.
+    let store = shared_store().ok();
+    if store.is_none() {
+        eprintln!("note: artifacts/ not found — the 'MLP' model family will fail; run `make artifacts`");
+    }
+
+    let mut m = Memento::new(grid::grid_exp_fn(store))
+        .seed(unwrap_cli(a.get_u64("seed"))?)
+        .version(a.get("version").unwrap_or("v1"))
+        .fail_fast(a.flag("fail-fast"));
+    let workers = unwrap_cli(a.get_usize("workers"))?;
+    if workers > 0 {
+        m = m.workers(workers);
+    }
+    if let Some(dir) = a.get("cache") {
+        m = m.with_cache_dir(dir);
+    }
+    if let Some(path) = a.get("journal") {
+        m = m.with_journal(path);
+    }
+    if let Some(dir) = a.get("checkpoint") {
+        m = m.with_checkpoint_dir(dir);
+    } else if resuming {
+        return Err("resume requires --checkpoint <dir>".into());
+    }
+    if !a.flag("quiet") {
+        m = m
+            .with_notifier(Box::new(ConsoleNotificationProvider))
+            .progress_every(Duration::from_secs(2));
+    }
+
+    let metrics = m.metrics();
+    let started = std::time::Instant::now();
+    let results = if resuming { m.resume(&matrix) } else { m.run(&matrix) }
+        .map_err(|e| e.to_string())?;
+    let wall = started.elapsed().as_secs_f64();
+
+    println!("\n{}", results.summary());
+    print!("{}", metrics.render(wall));
+    for o in results.failures() {
+        if let Some(f) = &o.failure {
+            println!("FAILED: {}", f.summary());
+        }
+    }
+
+    let pivot = results.pivot(
+        a.get("rows").unwrap_or("dataset"),
+        a.get("cols").unwrap_or("model"),
+        a.get("metric").unwrap_or("accuracy"),
+    );
+    println!("\n{}", pivot.render());
+
+    if let Some(out) = a.get("out") {
+        memento::util::fs::atomic_write(Path::new(out), results.to_json().pretty().as_bytes())
+            .map_err(|e| e.to_string())?;
+        println!("results written to {out}");
+    }
+    Ok(())
+}
+
+fn cmd_status(args: &[String]) -> Result<(), String> {
+    let spec = CliSpec::new("memento status", "inspect a checkpoint manifest")
+        .opt_required("checkpoint", "checkpoint run directory");
+    let a = unwrap_cli(spec.parse(args))?;
+    let dir = a.get("checkpoint").ok_or("missing --checkpoint")?;
+    let manifest = Path::new(dir).join("manifest.json");
+    let text = std::fs::read_to_string(&manifest)
+        .map_err(|e| format!("cannot read {}: {e}", manifest.display()))?;
+    let doc = parse(&text).map_err(|e| e.to_string())?;
+    let total = doc.get("total_tasks").and_then(|j| j.as_i64()).unwrap_or(0);
+    let completed = doc
+        .get("completed")
+        .and_then(|j| j.as_obj())
+        .map(|o| o.len())
+        .unwrap_or(0);
+    let failed = doc
+        .get("completed")
+        .and_then(|j| j.as_obj())
+        .map(|o| o.values().filter(|e| e.get("failed").is_some()).count())
+        .unwrap_or(0);
+    println!(
+        "run dir   : {dir}\nmatrix    : {}\nversion   : {}\nprogress  : {completed}/{total} completed ({failed} failed)",
+        doc.get("matrix_fingerprint")
+            .and_then(|j| j.as_str())
+            .map(|s| &s[..12.min(s.len())])
+            .unwrap_or("?"),
+        doc.get("version").and_then(|j| j.as_str()).unwrap_or("?"),
+    );
+    Ok(())
+}
+
+fn cmd_report(args: &[String]) -> Result<(), String> {
+    let spec = CliSpec::new("memento report", "pivot saved results into a table")
+        .opt_required("results", "results JSON written by `memento run --out`")
+        .opt("rows", "dataset", "pivot row parameter")
+        .opt("cols", "model", "pivot column parameter")
+        .opt("metric", "accuracy", "metric field");
+    let a = unwrap_cli(spec.parse(args))?;
+    let path = a.get("results").ok_or("missing --results")?;
+    let text = std::fs::read_to_string(path).map_err(|e| format!("read {path}: {e}"))?;
+    let doc = parse(&text).map_err(|e| e.to_string())?;
+    let results = result_set_from_json(&doc)?;
+    println!(
+        "{}",
+        results
+            .pivot(
+                a.get("rows").unwrap_or("dataset"),
+                a.get("cols").unwrap_or("model"),
+                a.get("metric").unwrap_or("accuracy"),
+            )
+            .render()
+    );
+    println!("{}", results.summary());
+    Ok(())
+}
+
+/// Rebuilds a ResultSet from the JSON written by `run --out` (used by
+/// `report`; tolerates missing optional fields).
+fn result_set_from_json(doc: &Json) -> Result<ResultSet, String> {
+    use memento::config::value::ParamValue;
+    use memento::coordinator::results::{TaskOutcome, TaskStatus};
+    use memento::coordinator::task::{TaskId, TaskSpec};
+    let arr = doc.as_arr().ok_or("results file must be a JSON array")?;
+    let mut outcomes = Vec::with_capacity(arr.len());
+    for (i, entry) in arr.iter().enumerate() {
+        let params_obj = entry
+            .get("params")
+            .and_then(|j| j.as_obj())
+            .ok_or_else(|| format!("entry {i} missing params"))?;
+        let params: Vec<(String, ParamValue)> = params_obj
+            .iter()
+            .filter_map(|(k, v)| ParamValue::from_json(v).map(|pv| (k.clone(), pv)))
+            .collect();
+        let status_ok = entry.get("status").and_then(|j| j.as_str()) == Some("success");
+        outcomes.push(TaskOutcome {
+            spec: TaskSpec { params, index: i },
+            id: TaskId(
+                entry
+                    .get("id")
+                    .and_then(|j| j.as_str())
+                    .unwrap_or("")
+                    .to_string(),
+            ),
+            status: if status_ok { TaskStatus::Success } else { TaskStatus::Failed },
+            value: entry.get("value").cloned(),
+            failure: None,
+            duration_secs: entry
+                .get("duration_secs")
+                .and_then(|j| j.as_f64())
+                .unwrap_or(0.0),
+            from_cache: entry
+                .get("from_cache")
+                .and_then(|j| j.as_bool())
+                .unwrap_or(false),
+            attempts: entry.get("attempts").and_then(|j| j.as_i64()).unwrap_or(1) as u32,
+        });
+    }
+    Ok(ResultSet::new(outcomes))
+}
+
+// Referenced to keep the import alive in both run/resume paths.
+#[allow(dead_code)]
+fn _checkpoint_type_check(dir: &Path) -> bool {
+    CheckpointStore::exists(dir)
+}

@@ -1,0 +1,201 @@
+//! AdaBoost (multi-class SAMME) over depth-1 decision stumps — the paper's
+//! `AdaBoost` grid entry.
+//!
+//! SAMME (Zhu et al. 2009): at round m, fit a weak learner on weighted data,
+//! compute weighted error `err_m`, set
+//! `alpha_m = ln((1-err_m)/err_m) + ln(K-1)`, upweight misclassified rows,
+//! renormalize. Prediction sums `alpha_m` per predicted class.
+
+use crate::ml::data::Dataset;
+use crate::ml::tree::{Classifier, DecisionTree, TreeParams};
+use crate::util::rng::Rng;
+
+/// Boosting hyperparameters.
+#[derive(Debug, Clone)]
+pub struct AdaBoostParams {
+    pub n_rounds: usize,
+    /// Depth of each weak learner (1 = stumps, the classic choice).
+    pub stump_depth: usize,
+}
+
+impl Default for AdaBoostParams {
+    fn default() -> Self {
+        AdaBoostParams { n_rounds: 40, stump_depth: 1 }
+    }
+}
+
+/// A fitted SAMME ensemble.
+#[derive(Debug, Clone)]
+pub struct AdaBoost {
+    params: AdaBoostParams,
+    learners: Vec<(f64, DecisionTree)>,
+    n_classes: usize,
+}
+
+impl AdaBoost {
+    pub fn new(params: AdaBoostParams) -> Self {
+        AdaBoost { params, learners: Vec::new(), n_classes: 0 }
+    }
+
+    pub fn n_rounds_fitted(&self) -> usize {
+        self.learners.len()
+    }
+}
+
+impl Classifier for AdaBoost {
+    fn fit(&mut self, train: &Dataset, rng: &mut Rng) {
+        self.n_classes = train.n_classes;
+        self.learners.clear();
+        let n = train.n_rows;
+        let k = train.n_classes as f64;
+        let mut weights = vec![1.0 / n as f64; n];
+
+        for round in 0..self.params.n_rounds {
+            let mut stump = DecisionTree::new(TreeParams {
+                max_depth: self.params.stump_depth,
+                min_samples_split: 2,
+                max_features: None,
+            });
+            let mut round_rng = rng.fork(round as u64);
+            stump.fit_weighted(train, &weights, &mut round_rng);
+            let pred = stump.predict(train);
+
+            let err: f64 = weights
+                .iter()
+                .zip(pred.iter().zip(&train.y))
+                .filter(|(_, (p, t))| p != t)
+                .map(|(w, _)| w)
+                .sum();
+
+            if err >= 1.0 - 1.0 / k {
+                // Worse than chance: stop (SAMME requirement err < 1 - 1/K).
+                break;
+            }
+            if err <= 1e-12 {
+                // Perfect learner: give it a large finite vote and stop.
+                self.learners.push((10.0 + (k - 1.0).ln(), stump));
+                break;
+            }
+            let alpha = ((1.0 - err) / err).ln() + (k - 1.0).ln();
+            if alpha <= 0.0 {
+                break;
+            }
+            // Reweight: misclassified rows scale by exp(alpha).
+            for (w, (p, t)) in weights.iter_mut().zip(pred.iter().zip(&train.y)) {
+                if p != t {
+                    *w *= alpha.exp();
+                }
+            }
+            let total: f64 = weights.iter().sum();
+            for w in weights.iter_mut() {
+                *w /= total;
+            }
+            self.learners.push((alpha, stump));
+        }
+
+        if self.learners.is_empty() {
+            // Degenerate data: keep one unweighted stump so predict works.
+            let mut stump = DecisionTree::new(TreeParams {
+                max_depth: self.params.stump_depth,
+                ..Default::default()
+            });
+            stump.fit(train, rng);
+            self.learners.push((1.0, stump));
+        }
+    }
+
+    fn predict(&self, ds: &Dataset) -> Vec<usize> {
+        assert!(!self.learners.is_empty(), "predict before fit");
+        let mut scores = vec![vec![0f64; self.n_classes]; ds.n_rows];
+        for (alpha, learner) in &self.learners {
+            for (r, p) in learner.predict(ds).into_iter().enumerate() {
+                scores[r][p] += alpha;
+            }
+        }
+        scores
+            .into_iter()
+            .map(|s| {
+                s.iter()
+                    .enumerate()
+                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                    .map(|(i, _)| i)
+                    .unwrap_or(0)
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ml::dataset::toy;
+    use crate::ml::impute::{DummyImputer, Transformer};
+    use crate::ml::metrics::accuracy;
+    use crate::ml::split::train_test_indices;
+
+    fn clean_toy() -> Dataset {
+        let mut ds = toy(0);
+        DummyImputer.transform(&mut ds);
+        ds
+    }
+
+    #[test]
+    fn boosting_beats_single_stump() {
+        let ds = clean_toy();
+        let mut rng = Rng::new(11);
+        let (tr, te) = train_test_indices(&ds, 0.3, &mut rng);
+        let train = ds.subset(&tr);
+        let test = ds.subset(&te);
+
+        let mut stump = DecisionTree::new(TreeParams { max_depth: 1, ..Default::default() });
+        stump.fit(&train, &mut Rng::new(1));
+        let stump_acc = accuracy(&test.y, &stump.predict(&test));
+
+        let mut ada = AdaBoost::new(AdaBoostParams::default());
+        ada.fit(&train, &mut Rng::new(1));
+        let ada_acc = accuracy(&test.y, &ada.predict(&test));
+
+        assert!(
+            ada_acc >= stump_acc,
+            "boosting {ada_acc} should be >= stump {stump_acc}"
+        );
+        assert!(ada_acc > 0.6, "boosted accuracy {ada_acc}");
+    }
+
+    #[test]
+    fn multi_round_ensemble_is_built() {
+        let ds = clean_toy();
+        let mut ada = AdaBoost::new(AdaBoostParams { n_rounds: 15, stump_depth: 1 });
+        ada.fit(&ds, &mut Rng::new(2));
+        assert!(ada.n_rounds_fitted() >= 2, "rounds {}", ada.n_rounds_fitted());
+    }
+
+    #[test]
+    fn perfectly_separable_stops_early_but_predicts() {
+        let x: Vec<f32> = vec![-2.0, -1.0, 1.0, 2.0];
+        let ds = Dataset::new("sep", x, 4, 1, vec![0, 0, 1, 1], 2);
+        let mut ada = AdaBoost::new(AdaBoostParams::default());
+        ada.fit(&ds, &mut Rng::new(0));
+        assert_eq!(ada.predict(&ds), vec![0, 0, 1, 1]);
+        assert!(ada.n_rounds_fitted() <= 2);
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let ds = clean_toy();
+        let run = |seed| {
+            let mut ada = AdaBoost::new(AdaBoostParams { n_rounds: 10, stump_depth: 1 });
+            ada.fit(&ds, &mut Rng::new(seed));
+            ada.predict(&ds)
+        };
+        assert_eq!(run(4), run(4));
+    }
+
+    #[test]
+    fn single_class_degenerate_data() {
+        let ds = Dataset::new("one", vec![1.0, 2.0, 3.0], 3, 1, vec![0, 0, 0], 1);
+        let mut ada = AdaBoost::new(AdaBoostParams::default());
+        ada.fit(&ds, &mut Rng::new(0));
+        assert_eq!(ada.predict(&ds), vec![0, 0, 0]);
+    }
+}

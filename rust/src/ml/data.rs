@@ -1,0 +1,198 @@
+//! Tabular dataset representation.
+//!
+//! Row-major `f32` features + integer labels. Missing values are `NaN`
+//! (injected by the synthetic generators so that imputation is a real,
+//! behaviour-changing pipeline stage — the paper's grid varies the imputer).
+
+/// A dense row-major feature matrix with labels.
+#[derive(Debug, Clone)]
+pub struct Dataset {
+    pub name: String,
+    /// Row-major features, `n_rows * n_cols`.
+    pub x: Vec<f32>,
+    pub n_rows: usize,
+    pub n_cols: usize,
+    /// Class labels in `0..n_classes`.
+    pub y: Vec<usize>,
+    pub n_classes: usize,
+}
+
+impl Dataset {
+    pub fn new(
+        name: impl Into<String>,
+        x: Vec<f32>,
+        n_rows: usize,
+        n_cols: usize,
+        y: Vec<usize>,
+        n_classes: usize,
+    ) -> Dataset {
+        assert_eq!(x.len(), n_rows * n_cols, "feature buffer size");
+        assert_eq!(y.len(), n_rows, "label count");
+        debug_assert!(y.iter().all(|&c| c < n_classes), "label out of range");
+        Dataset { name: name.into(), x, n_rows, n_cols, y, n_classes }
+    }
+
+    /// Row `i` as a slice.
+    pub fn row(&self, i: usize) -> &[f32] {
+        &self.x[i * self.n_cols..(i + 1) * self.n_cols]
+    }
+
+    /// Mutable row access.
+    pub fn row_mut(&mut self, i: usize) -> &mut [f32] {
+        &mut self.x[i * self.n_cols..(i + 1) * self.n_cols]
+    }
+
+    /// A new dataset containing the given rows (in the given order).
+    pub fn subset(&self, rows: &[usize]) -> Dataset {
+        let mut x = Vec::with_capacity(rows.len() * self.n_cols);
+        let mut y = Vec::with_capacity(rows.len());
+        for &r in rows {
+            x.extend_from_slice(self.row(r));
+            y.push(self.y[r]);
+        }
+        Dataset {
+            name: self.name.clone(),
+            x,
+            n_rows: rows.len(),
+            n_cols: self.n_cols,
+            y,
+            n_classes: self.n_classes,
+        }
+    }
+
+    /// Count of NaN cells (missing values).
+    pub fn missing_count(&self) -> usize {
+        self.x.iter().filter(|v| v.is_nan()).count()
+    }
+
+    /// Per-class row counts.
+    pub fn class_counts(&self) -> Vec<usize> {
+        let mut counts = vec![0usize; self.n_classes];
+        for &c in &self.y {
+            counts[c] += 1;
+        }
+        counts
+    }
+
+    /// Column-wise means ignoring NaN (0.0 when a column is all-NaN).
+    pub fn column_means(&self) -> Vec<f32> {
+        let mut sums = vec![0f64; self.n_cols];
+        let mut counts = vec![0usize; self.n_cols];
+        for r in 0..self.n_rows {
+            for (c, &v) in self.row(r).iter().enumerate() {
+                if !v.is_nan() {
+                    sums[c] += v as f64;
+                    counts[c] += 1;
+                }
+            }
+        }
+        sums.iter()
+            .zip(&counts)
+            .map(|(&s, &n)| if n == 0 { 0.0 } else { (s / n as f64) as f32 })
+            .collect()
+    }
+
+    /// Column-wise (min, max) ignoring NaN; (0, 1) for all-NaN columns.
+    pub fn column_min_max(&self) -> Vec<(f32, f32)> {
+        let mut mm = vec![(f32::INFINITY, f32::NEG_INFINITY); self.n_cols];
+        for r in 0..self.n_rows {
+            for (c, &v) in self.row(r).iter().enumerate() {
+                if !v.is_nan() {
+                    mm[c].0 = mm[c].0.min(v);
+                    mm[c].1 = mm[c].1.max(v);
+                }
+            }
+        }
+        mm.into_iter()
+            .map(|(lo, hi)| if lo > hi { (0.0, 1.0) } else { (lo, hi) })
+            .collect()
+    }
+
+    /// Column-wise (mean, std) ignoring NaN; std floors at 1e-6.
+    pub fn column_mean_std(&self) -> Vec<(f32, f32)> {
+        let means = self.column_means();
+        let mut sq = vec![0f64; self.n_cols];
+        let mut counts = vec![0usize; self.n_cols];
+        for r in 0..self.n_rows {
+            for (c, &v) in self.row(r).iter().enumerate() {
+                if !v.is_nan() {
+                    let d = v as f64 - means[c] as f64;
+                    sq[c] += d * d;
+                    counts[c] += 1;
+                }
+            }
+        }
+        means
+            .iter()
+            .zip(sq.iter().zip(&counts))
+            .map(|(&m, (&s, &n))| {
+                let std = if n == 0 { 1.0 } else { (s / n as f64).sqrt() as f32 };
+                (m, std.max(1e-6))
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> Dataset {
+        Dataset::new(
+            "tiny",
+            vec![
+                1.0, 2.0, //
+                3.0, 4.0, //
+                5.0, f32::NAN,
+            ],
+            3,
+            2,
+            vec![0, 1, 0],
+            2,
+        )
+    }
+
+    #[test]
+    fn row_access() {
+        let d = tiny();
+        assert_eq!(d.row(0), &[1.0, 2.0]);
+        assert_eq!(d.row(2)[0], 5.0);
+        assert!(d.row(2)[1].is_nan());
+    }
+
+    #[test]
+    fn subset_selects_and_reorders() {
+        let d = tiny();
+        let s = d.subset(&[2, 0]);
+        assert_eq!(s.n_rows, 2);
+        assert_eq!(s.row(0)[0], 5.0);
+        assert_eq!(s.row(1), &[1.0, 2.0]);
+        assert_eq!(s.y, vec![0, 0]);
+    }
+
+    #[test]
+    fn missing_and_class_counts() {
+        let d = tiny();
+        assert_eq!(d.missing_count(), 1);
+        assert_eq!(d.class_counts(), vec![2, 1]);
+    }
+
+    #[test]
+    fn column_stats_ignore_nan() {
+        let d = tiny();
+        let means = d.column_means();
+        assert!((means[0] - 3.0).abs() < 1e-6);
+        assert!((means[1] - 3.0).abs() < 1e-6); // (2+4)/2
+        let mm = d.column_min_max();
+        assert_eq!(mm[0], (1.0, 5.0));
+        assert_eq!(mm[1], (2.0, 4.0));
+        let ms = d.column_mean_std();
+        assert!(ms[1].1 > 0.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "feature buffer size")]
+    fn size_mismatch_panics() {
+        Dataset::new("bad", vec![1.0], 1, 2, vec![0], 1);
+    }
+}

@@ -1,0 +1,145 @@
+//! Random forest: bootstrap-aggregated CART trees with per-split feature
+//! subsampling (√d by default) and majority voting.
+
+use crate::ml::data::Dataset;
+use crate::ml::tree::{Classifier, DecisionTree, TreeParams};
+use crate::util::rng::Rng;
+
+/// Forest hyperparameters.
+#[derive(Debug, Clone)]
+pub struct ForestParams {
+    pub n_trees: usize,
+    pub max_depth: usize,
+    /// Per-split feature candidates; `None` = ⌈√d⌉.
+    pub max_features: Option<usize>,
+}
+
+impl Default for ForestParams {
+    fn default() -> Self {
+        ForestParams { n_trees: 30, max_depth: 12, max_features: None }
+    }
+}
+
+/// A fitted random forest.
+#[derive(Debug, Clone)]
+pub struct RandomForest {
+    params: ForestParams,
+    trees: Vec<DecisionTree>,
+    n_classes: usize,
+}
+
+impl RandomForest {
+    pub fn new(params: ForestParams) -> Self {
+        RandomForest { params, trees: Vec::new(), n_classes: 0 }
+    }
+
+    pub fn n_trees(&self) -> usize {
+        self.trees.len()
+    }
+}
+
+impl Classifier for RandomForest {
+    fn fit(&mut self, train: &Dataset, rng: &mut Rng) {
+        self.n_classes = train.n_classes;
+        self.trees.clear();
+        let max_features = self
+            .params
+            .max_features
+            .unwrap_or_else(|| (train.n_cols as f64).sqrt().ceil() as usize)
+            .clamp(1, train.n_cols);
+        for t in 0..self.params.n_trees {
+            let mut tree_rng = rng.fork(t as u64);
+            // Bootstrap sample (with replacement).
+            let sample: Vec<usize> =
+                (0..train.n_rows).map(|_| tree_rng.below(train.n_rows)).collect();
+            let boot = train.subset(&sample);
+            let mut tree = DecisionTree::new(TreeParams {
+                max_depth: self.params.max_depth,
+                min_samples_split: 2,
+                max_features: Some(max_features),
+            });
+            tree.fit(&boot, &mut tree_rng);
+            self.trees.push(tree);
+        }
+    }
+
+    fn predict(&self, ds: &Dataset) -> Vec<usize> {
+        assert!(!self.trees.is_empty(), "predict before fit");
+        let mut votes = vec![vec![0usize; self.n_classes]; ds.n_rows];
+        for tree in &self.trees {
+            for (r, p) in tree.predict(ds).into_iter().enumerate() {
+                votes[r][p] += 1;
+            }
+        }
+        votes
+            .into_iter()
+            .map(|v| {
+                v.iter()
+                    .enumerate()
+                    .max_by_key(|(_, &c)| c)
+                    .map(|(i, _)| i)
+                    .unwrap_or(0)
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ml::dataset::toy;
+    use crate::ml::impute::{DummyImputer, Transformer};
+    use crate::ml::metrics::accuracy;
+    use crate::ml::split::train_test_indices;
+
+    fn clean_toy() -> Dataset {
+        let mut ds = toy(0);
+        DummyImputer.transform(&mut ds);
+        ds
+    }
+
+    #[test]
+    fn fits_and_generalizes() {
+        let ds = clean_toy();
+        let mut rng = Rng::new(5);
+        let (train_idx, test_idx) = train_test_indices(&ds, 0.3, &mut rng);
+        let train = ds.subset(&train_idx);
+        let test = ds.subset(&test_idx);
+        let mut rf = RandomForest::new(ForestParams { n_trees: 20, ..Default::default() });
+        rf.fit(&train, &mut rng);
+        let acc = accuracy(&test.y, &rf.predict(&test));
+        assert!(acc > 0.8, "test accuracy {acc}");
+        assert_eq!(rf.n_trees(), 20);
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let ds = clean_toy();
+        let fit = |seed| {
+            let mut rf = RandomForest::new(ForestParams { n_trees: 5, ..Default::default() });
+            rf.fit(&ds, &mut Rng::new(seed));
+            rf.predict(&ds)
+        };
+        assert_eq!(fit(3), fit(3));
+    }
+
+    #[test]
+    fn more_trees_not_worse_on_train() {
+        let ds = clean_toy();
+        let acc_of = |n_trees| {
+            let mut rf = RandomForest::new(ForestParams { n_trees, ..Default::default() });
+            rf.fit(&ds, &mut Rng::new(7));
+            accuracy(&ds.y, &rf.predict(&ds))
+        };
+        let small = acc_of(1);
+        let big = acc_of(25);
+        assert!(big >= small - 0.05, "1 tree {small} vs 25 trees {big}");
+    }
+
+    #[test]
+    #[should_panic(expected = "predict before fit")]
+    fn predict_unfit_panics() {
+        let rf = RandomForest::new(ForestParams::default());
+        rf.predict(&clean_toy());
+    }
+}

@@ -1,0 +1,141 @@
+//! Missing-value imputation (the §3 grid's `feature_engineering` stage).
+//!
+//! - [`DummyImputer`] — the paper's baseline: replaces NaN with 0.0 (models
+//!   cannot consume NaN, so "do nothing" still needs a placeholder);
+//! - [`SimpleImputer`] — sklearn's default strategy: column means computed
+//!   on the *training* split, applied to both splits (no test leakage).
+
+use crate::ml::data::Dataset;
+
+/// Fit-on-train / transform-anything interface shared with the scalers.
+pub trait Transformer: Send + Sync {
+    /// Learns statistics from a training set.
+    fn fit(&mut self, train: &Dataset);
+    /// Applies the learned transformation in place.
+    fn transform(&self, ds: &mut Dataset);
+
+    fn fit_transform(&mut self, ds: &mut Dataset) {
+        self.fit(ds);
+        self.transform(ds);
+    }
+}
+
+/// Replaces NaN with 0.0; learns nothing.
+#[derive(Debug, Default, Clone)]
+pub struct DummyImputer;
+
+impl Transformer for DummyImputer {
+    fn fit(&mut self, _train: &Dataset) {}
+
+    fn transform(&self, ds: &mut Dataset) {
+        for v in ds.x.iter_mut() {
+            if v.is_nan() {
+                *v = 0.0;
+            }
+        }
+    }
+}
+
+/// Mean imputation with train-split statistics.
+#[derive(Debug, Default, Clone)]
+pub struct SimpleImputer {
+    means: Vec<f32>,
+}
+
+impl Transformer for SimpleImputer {
+    fn fit(&mut self, train: &Dataset) {
+        self.means = train.column_means();
+    }
+
+    fn transform(&self, ds: &mut Dataset) {
+        assert_eq!(
+            self.means.len(),
+            ds.n_cols,
+            "SimpleImputer: fit/transform column mismatch"
+        );
+        for r in 0..ds.n_rows {
+            let row = ds.row_mut(r);
+            for (c, v) in row.iter_mut().enumerate() {
+                if v.is_nan() {
+                    *v = self.means[c];
+                }
+            }
+        }
+    }
+}
+
+/// Constructs an imputer by its §3 config-matrix name.
+pub fn imputer_by_name(name: &str) -> Option<Box<dyn Transformer>> {
+    match name {
+        "DummyImputer" => Some(Box::new(DummyImputer)),
+        "SimpleImputer" => Some(Box::new(SimpleImputer::default())),
+        _ => None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn with_nans() -> Dataset {
+        Dataset::new(
+            "t",
+            vec![
+                1.0, 10.0, //
+                3.0, f32::NAN, //
+                f32::NAN, 30.0,
+            ],
+            3,
+            2,
+            vec![0, 1, 0],
+            2,
+        )
+    }
+
+    #[test]
+    fn dummy_zero_fills() {
+        let mut ds = with_nans();
+        let mut imp = DummyImputer;
+        imp.fit_transform(&mut ds);
+        assert_eq!(ds.missing_count(), 0);
+        assert_eq!(ds.row(1)[1], 0.0);
+        assert_eq!(ds.row(2)[0], 0.0);
+        assert_eq!(ds.row(0)[0], 1.0, "non-missing untouched");
+    }
+
+    #[test]
+    fn simple_mean_fills() {
+        let mut ds = with_nans();
+        let mut imp = SimpleImputer::default();
+        imp.fit_transform(&mut ds);
+        assert_eq!(ds.missing_count(), 0);
+        assert!((ds.row(2)[0] - 2.0).abs() < 1e-6); // mean(1,3)
+        assert!((ds.row(1)[1] - 20.0).abs() < 1e-6); // mean(10,30)
+    }
+
+    #[test]
+    fn simple_uses_train_stats_on_test() {
+        let train = with_nans();
+        let mut imp = SimpleImputer::default();
+        imp.fit(&train);
+        let mut test = Dataset::new("test", vec![f32::NAN, f32::NAN], 1, 2, vec![0], 2);
+        imp.transform(&mut test);
+        assert!((test.row(0)[0] - 2.0).abs() < 1e-6, "train mean applied");
+        assert!((test.row(0)[1] - 20.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn by_name_constructs() {
+        assert!(imputer_by_name("DummyImputer").is_some());
+        assert!(imputer_by_name("SimpleImputer").is_some());
+        assert!(imputer_by_name("MagicImputer").is_none());
+    }
+
+    #[test]
+    #[should_panic(expected = "column mismatch")]
+    fn transform_before_fit_panics_on_mismatch() {
+        let imp = SimpleImputer::default(); // no fit
+        let mut ds = with_nans();
+        imp.transform(&mut ds);
+    }
+}

@@ -1,0 +1,200 @@
+//! Dataset and result I/O: CSV import/export.
+//!
+//! Lets users run the grid over their *own* data — the paper's "compatible
+//! with any type of machine-learning pipeline" claim. Conventions:
+//! - last column is the label (string labels are mapped to class ids in
+//!   first-appearance order),
+//! - empty cells, `NA`, `na`, `nan`, `NaN`, and `?` parse as missing (NaN),
+//! - all feature columns must parse as numbers otherwise.
+
+use crate::ml::data::Dataset;
+use crate::util::csv;
+use std::fmt;
+
+/// Dataset-loading errors.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct LoadError(pub String);
+
+impl fmt::Display for LoadError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "dataset load error: {}", self.0)
+    }
+}
+
+impl std::error::Error for LoadError {}
+
+fn parse_cell(cell: &str) -> Result<f32, ()> {
+    let t = cell.trim();
+    if t.is_empty() || matches!(t, "NA" | "na" | "nan" | "NaN" | "?") {
+        return Ok(f32::NAN);
+    }
+    t.parse::<f32>().map_err(|_| ())
+}
+
+/// Parses a dataset from CSV text (see module docs for conventions).
+pub fn dataset_from_csv_str(
+    name: &str,
+    text: &str,
+    has_header: bool,
+) -> Result<Dataset, LoadError> {
+    let table = csv::parse(text, has_header).map_err(|e| LoadError(e.to_string()))?;
+    if table.rows.is_empty() {
+        return Err(LoadError("no data rows".into()));
+    }
+    let width = table.rows[0].len();
+    if width < 2 {
+        return Err(LoadError("need at least one feature column + label".into()));
+    }
+    let n_cols = width - 1;
+    let mut x = Vec::with_capacity(table.rows.len() * n_cols);
+    let mut labels: Vec<String> = Vec::new();
+    let mut y = Vec::with_capacity(table.rows.len());
+
+    for (ri, row) in table.rows.iter().enumerate() {
+        for (ci, cell) in row[..n_cols].iter().enumerate() {
+            let v = parse_cell(cell).map_err(|_| {
+                LoadError(format!("row {}, column {}: '{cell}' is not numeric", ri + 1, ci + 1))
+            })?;
+            x.push(v);
+        }
+        let label = row[n_cols].trim().to_string();
+        if label.is_empty() {
+            return Err(LoadError(format!("row {}: empty label", ri + 1)));
+        }
+        let class = match labels.iter().position(|l| l == &label) {
+            Some(c) => c,
+            None => {
+                labels.push(label);
+                labels.len() - 1
+            }
+        };
+        y.push(class);
+    }
+    let n_rows = y.len();
+    let n_classes = labels.len();
+    Ok(Dataset::new(name, x, n_rows, n_cols, y, n_classes))
+}
+
+/// Reads a dataset from a CSV file.
+pub fn dataset_from_csv_file(path: &std::path::Path, has_header: bool) -> Result<Dataset, LoadError> {
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| LoadError(format!("read '{}': {e}", path.display())))?;
+    let name = path
+        .file_stem()
+        .and_then(|s| s.to_str())
+        .unwrap_or("csv")
+        .to_string();
+    dataset_from_csv_str(&name, &text, has_header)
+}
+
+/// Exports a dataset back to CSV (labels as `class<k>`).
+pub fn dataset_to_csv(ds: &Dataset) -> String {
+    let mut table = csv::CsvTable {
+        header: Some(
+            (0..ds.n_cols)
+                .map(|c| format!("f{c}"))
+                .chain(std::iter::once("label".to_string()))
+                .collect(),
+        ),
+        rows: Vec::with_capacity(ds.n_rows),
+    };
+    for r in 0..ds.n_rows {
+        let mut row: Vec<String> = ds
+            .row(r)
+            .iter()
+            .map(|v| if v.is_nan() { "NA".to_string() } else { format!("{v}") })
+            .collect();
+        row.push(format!("class{}", ds.y[r]));
+        table.rows.push(row);
+    }
+    csv::write(&table)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "\
+f0,f1,label
+1.5,2.0,yes
+3.0,NA,no
+,4.5,yes
+2.0,1.0,maybe
+";
+
+    #[test]
+    fn loads_with_header_and_string_labels() {
+        let ds = dataset_from_csv_str("s", SAMPLE, true).unwrap();
+        assert_eq!((ds.n_rows, ds.n_cols, ds.n_classes), (4, 2, 3));
+        assert_eq!(ds.y, vec![0, 1, 0, 2]); // first-appearance order
+        assert_eq!(ds.missing_count(), 2);
+        assert_eq!(ds.row(0), &[1.5, 2.0]);
+    }
+
+    #[test]
+    fn numeric_labels_work() {
+        let ds = dataset_from_csv_str("n", "1,0\n2,1\n3,0\n", false).unwrap();
+        assert_eq!(ds.n_classes, 2);
+        assert_eq!(ds.y, vec![0, 1, 0]);
+    }
+
+    #[test]
+    fn bad_feature_cell_errors_with_position() {
+        let e = dataset_from_csv_str("b", "1,x,yes\n", false).unwrap_err();
+        assert!(e.0.contains("column 2"), "{e}");
+    }
+
+    #[test]
+    fn too_narrow_errors() {
+        assert!(dataset_from_csv_str("w", "1\n2\n", false).is_err());
+        assert!(dataset_from_csv_str("e", "", false).is_err());
+    }
+
+    #[test]
+    fn roundtrip_through_export() {
+        let ds = dataset_from_csv_str("s", SAMPLE, true).unwrap();
+        let text = dataset_to_csv(&ds);
+        let back = dataset_from_csv_str("s2", &text, true).unwrap();
+        assert_eq!(back.n_rows, ds.n_rows);
+        assert_eq!(back.y, ds.y);
+        assert_eq!(back.missing_count(), ds.missing_count());
+    }
+
+    #[test]
+    fn file_loading() {
+        let td = crate::util::fs::TempDir::new("csvds").unwrap();
+        let p = td.join("data.csv");
+        crate::util::fs::atomic_write(&p, SAMPLE.as_bytes()).unwrap();
+        let ds = dataset_from_csv_file(&p, true).unwrap();
+        assert_eq!(ds.name, "data");
+        assert!(dataset_from_csv_file(&td.join("nope.csv"), true).is_err());
+    }
+
+    #[test]
+    fn csv_dataset_runs_through_the_pipeline() {
+        // End-to-end: CSV → pipeline CV (small synthetic csv, 2 classes).
+        let mut text = String::from("f0,f1,label\n");
+        let mut rng = crate::util::rng::Rng::new(5);
+        for i in 0..60 {
+            let c = i % 2;
+            let base = if c == 0 { -2.0 } else { 2.0 };
+            text.push_str(&format!(
+                "{},{},c{}\n",
+                base + rng.normal() * 0.5,
+                base + rng.normal() * 0.5,
+                c
+            ));
+        }
+        let ds = dataset_from_csv_str("synth", &text, true).unwrap();
+        let scores = crate::ml::pipeline::cross_validate_named(
+            &ds,
+            "SimpleImputer",
+            "StandardScaler",
+            "LogisticRegression",
+            3,
+            &mut crate::util::rng::Rng::new(0),
+        )
+        .unwrap();
+        assert!(scores.mean_accuracy > 0.9, "{}", scores.mean_accuracy);
+    }
+}

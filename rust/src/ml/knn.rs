@@ -1,0 +1,153 @@
+//! k-nearest-neighbours classifier (extension model family).
+//!
+//! Brute-force Euclidean search — exact, deterministic, and fast enough for
+//! the grid's dataset sizes (≤ 1797 rows). Distance ties break toward the
+//! lower row index; vote ties toward the lower class id.
+
+use crate::ml::data::Dataset;
+use crate::ml::tree::Classifier;
+use crate::util::rng::Rng;
+
+/// KNN hyperparameters.
+#[derive(Debug, Clone)]
+pub struct KnnParams {
+    pub k: usize,
+}
+
+impl Default for KnnParams {
+    fn default() -> Self {
+        KnnParams { k: 5 }
+    }
+}
+
+/// A fitted (memorizing) KNN model.
+#[derive(Debug, Clone)]
+pub struct Knn {
+    params: KnnParams,
+    train_x: Vec<f32>,
+    train_y: Vec<usize>,
+    n_cols: usize,
+    n_classes: usize,
+}
+
+impl Knn {
+    pub fn new(params: KnnParams) -> Knn {
+        Knn { params, train_x: Vec::new(), train_y: Vec::new(), n_cols: 0, n_classes: 0 }
+    }
+
+    fn dist2(&self, row: &[f32], t: usize) -> f64 {
+        let base = t * self.n_cols;
+        let mut d = 0f64;
+        for (j, &v) in row.iter().enumerate() {
+            let diff = (v - self.train_x[base + j]) as f64;
+            d += diff * diff;
+        }
+        d
+    }
+}
+
+impl Classifier for Knn {
+    fn fit(&mut self, train: &Dataset, _rng: &mut Rng) {
+        self.train_x = train.x.clone();
+        self.train_y = train.y.clone();
+        self.n_cols = train.n_cols;
+        self.n_classes = train.n_classes;
+    }
+
+    fn predict(&self, ds: &Dataset) -> Vec<usize> {
+        assert!(!self.train_y.is_empty(), "predict before fit");
+        assert_eq!(ds.n_cols, self.n_cols, "feature count mismatch");
+        let k = self.params.k.clamp(1, self.train_y.len());
+        (0..ds.n_rows)
+            .map(|r| {
+                let row = ds.row(r);
+                // Partial selection of the k smallest distances.
+                let mut dists: Vec<(f64, usize)> = (0..self.train_y.len())
+                    .map(|t| (self.dist2(row, t), t))
+                    .collect();
+                dists.select_nth_unstable_by(k - 1, |a, b| {
+                    a.partial_cmp(b).unwrap_or(std::cmp::Ordering::Equal)
+                });
+                let mut votes = vec![0usize; self.n_classes];
+                for &(_, t) in &dists[..k] {
+                    votes[self.train_y[t]] += 1;
+                }
+                votes
+                    .iter()
+                    .enumerate()
+                    .max_by_key(|&(_, &c)| c)
+                    .map(|(i, _)| i)
+                    .unwrap_or(0)
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ml::dataset::toy;
+    use crate::ml::impute::{DummyImputer, Transformer};
+    use crate::ml::metrics::accuracy;
+    use crate::ml::split::train_test_indices;
+
+    fn clean_toy() -> Dataset {
+        let mut ds = toy(0);
+        DummyImputer.transform(&mut ds);
+        ds
+    }
+
+    #[test]
+    fn one_nn_memorizes_training_data() {
+        let ds = clean_toy();
+        let mut knn = Knn::new(KnnParams { k: 1 });
+        knn.fit(&ds, &mut Rng::new(0));
+        assert_eq!(accuracy(&ds.y, &knn.predict(&ds)), 1.0);
+    }
+
+    #[test]
+    fn knn_generalizes() {
+        let ds = clean_toy();
+        let mut rng = Rng::new(1);
+        let (tr, te) = train_test_indices(&ds, 0.3, &mut rng);
+        let train = ds.subset(&tr);
+        let test = ds.subset(&te);
+        let mut knn = Knn::new(KnnParams { k: 5 });
+        knn.fit(&train, &mut rng);
+        let acc = accuracy(&test.y, &knn.predict(&test));
+        assert!(acc > 0.85, "knn accuracy {acc}");
+    }
+
+    #[test]
+    fn k_larger_than_train_clamps() {
+        let x: Vec<f32> = vec![0.0, 1.0, 2.0];
+        let ds = Dataset::new("mini", x, 3, 1, vec![0, 0, 1], 2);
+        let mut knn = Knn::new(KnnParams { k: 50 });
+        knn.fit(&ds, &mut Rng::new(0));
+        // majority class over the whole (clamped) set is 0
+        assert_eq!(knn.predict(&ds), vec![0, 0, 0]);
+    }
+
+    #[test]
+    fn known_geometry() {
+        // train: two clusters at 0 and 10 on one axis
+        let ds = Dataset::new(
+            "geo",
+            vec![0.0, 0.5, 10.0, 10.5],
+            4,
+            1,
+            vec![0, 0, 1, 1],
+            2,
+        );
+        let mut knn = Knn::new(KnnParams { k: 3 });
+        knn.fit(&ds, &mut Rng::new(0));
+        let probe = Dataset::new("p", vec![1.0, 9.0], 2, 1, vec![0, 0], 2);
+        assert_eq!(knn.predict(&probe), vec![0, 1]);
+    }
+
+    #[test]
+    #[should_panic(expected = "predict before fit")]
+    fn unfit_panics() {
+        Knn::new(KnnParams::default()).predict(&clean_toy());
+    }
+}

@@ -1,0 +1,107 @@
+//! Classification metrics: accuracy, confusion matrix, macro precision/
+//! recall/F1.
+
+/// Fraction of predictions equal to the truth.
+pub fn accuracy(truth: &[usize], pred: &[usize]) -> f64 {
+    assert_eq!(truth.len(), pred.len(), "length mismatch");
+    if truth.is_empty() {
+        return 0.0;
+    }
+    let correct = truth.iter().zip(pred).filter(|(t, p)| t == p).count();
+    correct as f64 / truth.len() as f64
+}
+
+/// `confusion[t][p]` = count of true class `t` predicted as `p`.
+pub fn confusion_matrix(truth: &[usize], pred: &[usize], n_classes: usize) -> Vec<Vec<usize>> {
+    assert_eq!(truth.len(), pred.len(), "length mismatch");
+    let mut m = vec![vec![0usize; n_classes]; n_classes];
+    for (&t, &p) in truth.iter().zip(pred) {
+        m[t][p] += 1;
+    }
+    m
+}
+
+/// Per-class (precision, recall, f1); absent classes get zeros.
+pub fn per_class_prf(truth: &[usize], pred: &[usize], n_classes: usize) -> Vec<(f64, f64, f64)> {
+    let m = confusion_matrix(truth, pred, n_classes);
+    (0..n_classes)
+        .map(|c| {
+            let tp = m[c][c] as f64;
+            let fp: f64 = (0..n_classes).filter(|&t| t != c).map(|t| m[t][c] as f64).sum();
+            let fn_: f64 = (0..n_classes).filter(|&p| p != c).map(|p| m[c][p] as f64).sum();
+            let precision = if tp + fp > 0.0 { tp / (tp + fp) } else { 0.0 };
+            let recall = if tp + fn_ > 0.0 { tp / (tp + fn_) } else { 0.0 };
+            let f1 = if precision + recall > 0.0 {
+                2.0 * precision * recall / (precision + recall)
+            } else {
+                0.0
+            };
+            (precision, recall, f1)
+        })
+        .collect()
+}
+
+/// Unweighted mean of per-class F1.
+pub fn macro_f1(truth: &[usize], pred: &[usize], n_classes: usize) -> f64 {
+    let prf = per_class_prf(truth, pred, n_classes);
+    prf.iter().map(|(_, _, f1)| f1).sum::<f64>() / n_classes as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accuracy_basic() {
+        assert_eq!(accuracy(&[0, 1, 2, 1], &[0, 1, 1, 1]), 0.75);
+        assert_eq!(accuracy(&[], &[]), 0.0);
+        assert_eq!(accuracy(&[1, 1], &[1, 1]), 1.0);
+    }
+
+    #[test]
+    fn confusion_shape_and_counts() {
+        let m = confusion_matrix(&[0, 0, 1, 2], &[0, 1, 1, 2], 3);
+        assert_eq!(m[0][0], 1);
+        assert_eq!(m[0][1], 1);
+        assert_eq!(m[1][1], 1);
+        assert_eq!(m[2][2], 1);
+        let total: usize = m.iter().flatten().sum();
+        assert_eq!(total, 4);
+    }
+
+    #[test]
+    fn perfect_prediction_prf() {
+        let prf = per_class_prf(&[0, 1, 2], &[0, 1, 2], 3);
+        for (p, r, f1) in prf {
+            assert_eq!((p, r, f1), (1.0, 1.0, 1.0));
+        }
+        assert_eq!(macro_f1(&[0, 1, 2], &[0, 1, 2], 3), 1.0);
+    }
+
+    #[test]
+    fn absent_class_zeroed() {
+        // class 2 never appears in truth or pred
+        let prf = per_class_prf(&[0, 1], &[0, 1], 3);
+        assert_eq!(prf[2], (0.0, 0.0, 0.0));
+        let f1 = macro_f1(&[0, 1], &[0, 1], 3);
+        assert!((f1 - 2.0 / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn known_prf_values() {
+        // truth: [0,0,0,1,1], pred: [0,0,1,1,0]
+        // class0: tp=2 fp=1 fn=1 → p=2/3 r=2/3 f1=2/3
+        // class1: tp=1 fp=1 fn=1 → p=1/2 r=1/2 f1=1/2
+        let prf = per_class_prf(&[0, 0, 0, 1, 1], &[0, 0, 1, 1, 0], 2);
+        assert!((prf[0].0 - 2.0 / 3.0).abs() < 1e-12);
+        assert!((prf[0].2 - 2.0 / 3.0).abs() < 1e-12);
+        assert!((prf[1].2 - 0.5).abs() < 1e-12);
+        assert!((macro_f1(&[0, 0, 0, 1, 1], &[0, 0, 1, 1, 0], 2) - (2.0 / 3.0 + 0.5) / 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    #[should_panic(expected = "length mismatch")]
+    fn mismatched_lengths_panic() {
+        accuracy(&[0], &[0, 1]);
+    }
+}

@@ -1,0 +1,22 @@
+//! From-scratch ML substrate for the paper's §3 demonstration grid.
+//!
+//! The paper's example varies datasets (`digits`/`wine`/`breast_cancer`),
+//! imputers, scalers, and models (`AdaBoost`/`RandomForest`/`SVC`); every
+//! one of those components is implemented here (see DESIGN.md
+//! §Substitutions for how the synthetic datasets stand in for sklearn's).
+
+pub mod adaboost;
+pub mod data;
+pub mod dataset;
+pub mod forest;
+pub mod impute;
+pub mod io;
+pub mod knn;
+pub mod logistic;
+pub mod metrics;
+pub mod naive_bayes;
+pub mod pipeline;
+pub mod scale;
+pub mod split;
+pub mod svc;
+pub mod tree;

@@ -1,0 +1,182 @@
+//! Gaussian naive Bayes classifier (extension model family).
+//!
+//! Per-class, per-feature Gaussian likelihoods with variance smoothing
+//! (sklearn's `var_smoothing` equivalent) and log-space evaluation.
+
+use crate::ml::data::Dataset;
+use crate::ml::tree::Classifier;
+use crate::util::rng::Rng;
+
+/// GNB hyperparameters.
+#[derive(Debug, Clone)]
+pub struct GnbParams {
+    /// Fraction of the largest feature variance added to every variance.
+    pub var_smoothing: f64,
+}
+
+impl Default for GnbParams {
+    fn default() -> Self {
+        GnbParams { var_smoothing: 1e-9 }
+    }
+}
+
+/// A fitted Gaussian naive Bayes model.
+#[derive(Debug, Clone, Default)]
+pub struct GaussianNb {
+    params: GnbParams,
+    /// Per class: log prior.
+    log_prior: Vec<f64>,
+    /// Per class × feature: (mean, var).
+    stats: Vec<Vec<(f64, f64)>>,
+    n_classes: usize,
+}
+
+impl GaussianNb {
+    pub fn new(params: GnbParams) -> GaussianNb {
+        GaussianNb { params, ..Default::default() }
+    }
+}
+
+impl Classifier for GaussianNb {
+    fn fit(&mut self, train: &Dataset, _rng: &mut Rng) {
+        self.n_classes = train.n_classes;
+        let d = train.n_cols;
+        let mut sums = vec![vec![0f64; d]; train.n_classes];
+        let mut sq = vec![vec![0f64; d]; train.n_classes];
+        let mut counts = vec![0usize; train.n_classes];
+        for r in 0..train.n_rows {
+            let c = train.y[r];
+            counts[c] += 1;
+            for (j, &v) in train.row(r).iter().enumerate() {
+                sums[c][j] += v as f64;
+                sq[c][j] += (v as f64) * (v as f64);
+            }
+        }
+        let total = train.n_rows as f64;
+        self.log_prior = counts
+            .iter()
+            .map(|&c| ((c.max(1)) as f64 / total).ln())
+            .collect();
+        // Global max variance for smoothing.
+        let mut max_var = 0f64;
+        self.stats = (0..train.n_classes)
+            .map(|c| {
+                (0..d)
+                    .map(|j| {
+                        let n = counts[c].max(1) as f64;
+                        let mean = sums[c][j] / n;
+                        let var = (sq[c][j] / n - mean * mean).max(0.0);
+                        max_var = max_var.max(var);
+                        (mean, var)
+                    })
+                    .collect()
+            })
+            .collect();
+        let eps = self.params.var_smoothing * max_var.max(1e-12);
+        for class_stats in &mut self.stats {
+            for (_, var) in class_stats.iter_mut() {
+                *var += eps;
+                if *var <= 0.0 {
+                    *var = 1e-12;
+                }
+            }
+        }
+    }
+
+    fn predict(&self, ds: &Dataset) -> Vec<usize> {
+        assert!(!self.stats.is_empty(), "predict before fit");
+        (0..ds.n_rows)
+            .map(|r| {
+                let row = ds.row(r);
+                (0..self.n_classes)
+                    .map(|c| {
+                        let mut ll = self.log_prior[c];
+                        for (j, &v) in row.iter().enumerate() {
+                            let (mean, var) = self.stats[c][j];
+                            let diff = v as f64 - mean;
+                            ll += -0.5 * ((2.0 * std::f64::consts::PI * var).ln()
+                                + diff * diff / var);
+                        }
+                        (c, ll)
+                    })
+                    .max_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+                    .map(|(c, _)| c)
+                    .unwrap_or(0)
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ml::dataset::toy;
+    use crate::ml::impute::{DummyImputer, Transformer};
+    use crate::ml::metrics::accuracy;
+    use crate::ml::split::train_test_indices;
+
+    #[test]
+    fn separates_gaussian_blobs() {
+        let mut ds = toy(0);
+        DummyImputer.transform(&mut ds);
+        let mut rng = Rng::new(2);
+        let (tr, te) = train_test_indices(&ds, 0.3, &mut rng);
+        let mut gnb = GaussianNb::new(GnbParams::default());
+        gnb.fit(&ds.subset(&tr), &mut rng);
+        let test = ds.subset(&te);
+        let acc = accuracy(&test.y, &gnb.predict(&test));
+        assert!(acc > 0.85, "gnb accuracy {acc}");
+    }
+
+    #[test]
+    fn log_priors_reflect_imbalance() {
+        // 3 of class 0, 1 of class 1 → prior 0.75 vs 0.25
+        let ds = Dataset::new(
+            "imb",
+            vec![0.0, 0.1, -0.1, 5.0],
+            4,
+            1,
+            vec![0, 0, 0, 1],
+            2,
+        );
+        let mut gnb = GaussianNb::new(GnbParams::default());
+        gnb.fit(&ds, &mut Rng::new(0));
+        assert!((gnb.log_prior[0] - 0.75f64.ln()).abs() < 1e-12);
+        assert!((gnb.log_prior[1] - 0.25f64.ln()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn constant_feature_does_not_nan() {
+        let ds = Dataset::new(
+            "const",
+            vec![1.0, 1.0, 1.0, 1.0],
+            4,
+            1,
+            vec![0, 0, 1, 1],
+            2,
+        );
+        let mut gnb = GaussianNb::new(GnbParams::default());
+        gnb.fit(&ds, &mut Rng::new(0));
+        let pred = gnb.predict(&ds);
+        assert_eq!(pred.len(), 4);
+        assert!(pred.iter().all(|&p| p < 2));
+    }
+
+    #[test]
+    fn deterministic() {
+        let mut ds = toy(3);
+        DummyImputer.transform(&mut ds);
+        let run = || {
+            let mut gnb = GaussianNb::new(GnbParams::default());
+            gnb.fit(&ds, &mut Rng::new(0));
+            gnb.predict(&ds)
+        };
+        assert_eq!(run(), run());
+    }
+
+    #[test]
+    #[should_panic(expected = "predict before fit")]
+    fn unfit_panics() {
+        GaussianNb::new(GnbParams::default()).predict(&toy(0));
+    }
+}

@@ -1,0 +1,222 @@
+//! Pipeline composition: impute → scale → model, evaluated by stratified
+//! k-fold cross-validation. This is the body of the paper's `exp_func`.
+//!
+//! All fit-time statistics (imputation means, scaler ranges) are learned on
+//! each fold's training split only — the leakage discipline sklearn's
+//! `Pipeline` enforces, reimplemented here.
+
+use crate::ml::adaboost::{AdaBoost, AdaBoostParams};
+use crate::ml::data::Dataset;
+use crate::ml::forest::{ForestParams, RandomForest};
+use crate::ml::impute::imputer_by_name;
+use crate::ml::knn::{Knn, KnnParams};
+use crate::ml::logistic::{LogisticParams, LogisticRegression};
+use crate::ml::metrics::{accuracy, macro_f1};
+use crate::ml::naive_bayes::{GaussianNb, GnbParams};
+use crate::ml::scale::scaler_by_name;
+use crate::ml::split::stratified_kfold;
+use crate::ml::svc::{LinearSvc, SvcParams};
+use crate::ml::tree::{Classifier, DecisionTree, TreeParams};
+use crate::util::rng::Rng;
+
+/// Constructs one of the grid models by config-matrix name (the §3 trio
+/// plus the extension families).
+pub fn model_by_name(name: &str) -> Option<Box<dyn Classifier>> {
+    match name {
+        "AdaBoost" => Some(Box::new(AdaBoost::new(AdaBoostParams::default()))),
+        "RandomForest" => Some(Box::new(RandomForest::new(ForestParams::default()))),
+        "SVC" => Some(Box::new(LinearSvc::new(SvcParams::default()))),
+        "DecisionTree" => Some(Box::new(DecisionTree::new(TreeParams::default()))),
+        "KNN" => Some(Box::new(Knn::new(KnnParams::default()))),
+        "GaussianNB" => Some(Box::new(GaussianNb::new(GnbParams::default()))),
+        "LogisticRegression" => {
+            Some(Box::new(LogisticRegression::new(LogisticParams::default())))
+        }
+        _ => None,
+    }
+}
+
+/// Names accepted by [`model_by_name`] (used by config validation helpers).
+pub const MODEL_NAMES: &[&str] = &[
+    "AdaBoost",
+    "RandomForest",
+    "SVC",
+    "DecisionTree",
+    "KNN",
+    "GaussianNB",
+    "LogisticRegression",
+];
+
+/// Cross-validated pipeline scores.
+#[derive(Debug, Clone)]
+pub struct CvScores {
+    pub fold_accuracy: Vec<f64>,
+    pub mean_accuracy: f64,
+    pub mean_macro_f1: f64,
+    /// Total rows evaluated across folds.
+    pub n_eval: usize,
+}
+
+/// Errors from pipeline assembly (unknown component names).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct UnknownComponent(pub String);
+
+impl std::fmt::Display for UnknownComponent {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "unknown pipeline component '{}'", self.0)
+    }
+}
+
+impl std::error::Error for UnknownComponent {}
+
+/// Runs the full impute→scale→model pipeline with `k`-fold CV.
+///
+/// `model_factory` is called once per fold so every fold trains a fresh
+/// model (no state leakage between folds).
+pub fn cross_validate(
+    ds: &Dataset,
+    imputer_name: &str,
+    scaler_name: &str,
+    model_factory: &dyn Fn() -> Box<dyn Classifier>,
+    k: usize,
+    rng: &mut Rng,
+) -> Result<CvScores, UnknownComponent> {
+    // Validate component names up front (typo → immediate error).
+    imputer_by_name(imputer_name).ok_or_else(|| UnknownComponent(imputer_name.into()))?;
+    scaler_by_name(scaler_name).ok_or_else(|| UnknownComponent(scaler_name.into()))?;
+
+    let folds = stratified_kfold(ds, k, rng);
+    let mut fold_accuracy = Vec::with_capacity(k);
+    let mut f1_sum = 0.0;
+    let mut n_eval = 0;
+
+    for (fi, fold) in folds.iter().enumerate() {
+        let mut train = ds.subset(&fold.train);
+        let mut test = ds.subset(&fold.test);
+
+        let mut imputer = imputer_by_name(imputer_name).unwrap();
+        imputer.fit(&train);
+        imputer.transform(&mut train);
+        imputer.transform(&mut test);
+
+        let mut scaler = scaler_by_name(scaler_name).unwrap();
+        scaler.fit(&train);
+        scaler.transform(&mut train);
+        scaler.transform(&mut test);
+
+        let mut model = model_factory();
+        let mut fold_rng = rng.fork(fi as u64);
+        model.fit(&train, &mut fold_rng);
+        let pred = model.predict(&test);
+
+        fold_accuracy.push(accuracy(&test.y, &pred));
+        f1_sum += macro_f1(&test.y, &pred, ds.n_classes);
+        n_eval += test.n_rows;
+    }
+
+    let mean_accuracy = fold_accuracy.iter().sum::<f64>() / k as f64;
+    Ok(CvScores {
+        fold_accuracy,
+        mean_accuracy,
+        mean_macro_f1: f1_sum / k as f64,
+        n_eval,
+    })
+}
+
+/// Convenience: cross-validate with a named model.
+pub fn cross_validate_named(
+    ds: &Dataset,
+    imputer_name: &str,
+    scaler_name: &str,
+    model_name: &str,
+    k: usize,
+    rng: &mut Rng,
+) -> Result<CvScores, UnknownComponent> {
+    model_by_name(model_name).ok_or_else(|| UnknownComponent(model_name.into()))?;
+    let name = model_name.to_string();
+    cross_validate(
+        ds,
+        imputer_name,
+        scaler_name,
+        &move || model_by_name(&name).unwrap(),
+        k,
+        rng,
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ml::dataset::toy;
+
+    #[test]
+    fn full_pipeline_beats_chance() {
+        let ds = toy(0);
+        for model in ["AdaBoost", "RandomForest", "SVC"] {
+            let scores = cross_validate_named(
+                &ds,
+                "SimpleImputer",
+                "StandardScaler",
+                model,
+                3,
+                &mut Rng::new(1),
+            )
+            .unwrap();
+            assert_eq!(scores.fold_accuracy.len(), 3);
+            assert_eq!(scores.n_eval, ds.n_rows);
+            assert!(
+                scores.mean_accuracy > 0.55,
+                "{model} accuracy {}",
+                scores.mean_accuracy
+            );
+            assert!(scores.mean_macro_f1 > 0.4, "{model} f1 {}", scores.mean_macro_f1);
+        }
+    }
+
+    #[test]
+    fn unknown_components_error() {
+        let ds = toy(0);
+        let e = cross_validate_named(&ds, "NopeImputer", "StandardScaler", "SVC", 2, &mut Rng::new(0))
+            .unwrap_err();
+        assert_eq!(e.0, "NopeImputer");
+        let e = cross_validate_named(&ds, "SimpleImputer", "NopeScaler", "SVC", 2, &mut Rng::new(0))
+            .unwrap_err();
+        assert_eq!(e.0, "NopeScaler");
+        let e = cross_validate_named(&ds, "SimpleImputer", "StandardScaler", "GPT", 2, &mut Rng::new(0))
+            .unwrap_err();
+        assert_eq!(e.0, "GPT");
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let ds = toy(0);
+        let run = |seed| {
+            cross_validate_named(&ds, "SimpleImputer", "MinMaxScaler", "RandomForest", 3, &mut Rng::new(seed))
+                .unwrap()
+                .mean_accuracy
+        };
+        assert_eq!(run(2), run(2));
+    }
+
+    #[test]
+    fn dummy_stages_run() {
+        let ds = toy(0);
+        let scores = cross_validate_named(
+            &ds,
+            "DummyImputer",
+            "DummyPreprocessor",
+            "DecisionTree",
+            2,
+            &mut Rng::new(3),
+        )
+        .unwrap();
+        assert!(scores.mean_accuracy > 0.5, "{}", scores.mean_accuracy);
+    }
+
+    #[test]
+    fn model_names_constant_is_consistent() {
+        for name in MODEL_NAMES {
+            assert!(model_by_name(name).is_some(), "{name}");
+        }
+    }
+}

@@ -1,0 +1,154 @@
+//! Feature scaling (the §3 grid's `preprocessing` stage).
+//!
+//! - [`DummyPreprocessor`] — identity;
+//! - [`MinMaxScaler`] — maps each column's train-range to `[0, 1]`;
+//! - [`StandardScaler`] — zero mean / unit variance per column.
+//!
+//! All statistics are learned on the training split only.
+
+use crate::ml::data::Dataset;
+use crate::ml::impute::Transformer;
+
+/// Identity preprocessing.
+#[derive(Debug, Default, Clone)]
+pub struct DummyPreprocessor;
+
+impl Transformer for DummyPreprocessor {
+    fn fit(&mut self, _train: &Dataset) {}
+    fn transform(&self, _ds: &mut Dataset) {}
+}
+
+/// Per-column `[min, max] → [0, 1]` scaling (constant columns map to 0).
+#[derive(Debug, Default, Clone)]
+pub struct MinMaxScaler {
+    ranges: Vec<(f32, f32)>,
+}
+
+impl Transformer for MinMaxScaler {
+    fn fit(&mut self, train: &Dataset) {
+        self.ranges = train.column_min_max();
+    }
+
+    fn transform(&self, ds: &mut Dataset) {
+        assert_eq!(self.ranges.len(), ds.n_cols, "MinMaxScaler column mismatch");
+        for r in 0..ds.n_rows {
+            let row = ds.row_mut(r);
+            for (c, v) in row.iter_mut().enumerate() {
+                let (lo, hi) = self.ranges[c];
+                let span = hi - lo;
+                if span > 0.0 {
+                    *v = (*v - lo) / span;
+                } else {
+                    *v = 0.0;
+                }
+            }
+        }
+    }
+}
+
+/// Per-column standardization to zero mean / unit variance.
+#[derive(Debug, Default, Clone)]
+pub struct StandardScaler {
+    stats: Vec<(f32, f32)>,
+}
+
+impl Transformer for StandardScaler {
+    fn fit(&mut self, train: &Dataset) {
+        self.stats = train.column_mean_std();
+    }
+
+    fn transform(&self, ds: &mut Dataset) {
+        assert_eq!(self.stats.len(), ds.n_cols, "StandardScaler column mismatch");
+        for r in 0..ds.n_rows {
+            let row = ds.row_mut(r);
+            for (c, v) in row.iter_mut().enumerate() {
+                let (mean, std) = self.stats[c];
+                *v = (*v - mean) / std;
+            }
+        }
+    }
+}
+
+/// Constructs a preprocessor by its §3 config-matrix name.
+pub fn scaler_by_name(name: &str) -> Option<Box<dyn Transformer>> {
+    match name {
+        "DummyPreprocessor" => Some(Box::new(DummyPreprocessor)),
+        "MinMaxScaler" => Some(Box::new(MinMaxScaler::default())),
+        "StandardScaler" => Some(Box::new(StandardScaler::default())),
+        _ => None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ds() -> Dataset {
+        Dataset::new(
+            "t",
+            vec![
+                0.0, 100.0, 5.0, //
+                10.0, 200.0, 5.0, //
+                5.0, 150.0, 5.0,
+            ],
+            3,
+            3,
+            vec![0, 1, 0],
+            2,
+        )
+    }
+
+    #[test]
+    fn dummy_is_identity() {
+        let mut d = ds();
+        let orig = d.x.clone();
+        let mut t = DummyPreprocessor;
+        t.fit_transform(&mut d);
+        assert_eq!(d.x, orig);
+    }
+
+    #[test]
+    fn minmax_maps_to_unit_interval() {
+        let mut d = ds();
+        let mut t = MinMaxScaler::default();
+        t.fit_transform(&mut d);
+        assert_eq!(d.row(0)[0], 0.0);
+        assert_eq!(d.row(1)[0], 1.0);
+        assert!((d.row(2)[0] - 0.5).abs() < 1e-6);
+        // constant column → 0
+        assert_eq!(d.row(0)[2], 0.0);
+        assert_eq!(d.row(2)[2], 0.0);
+    }
+
+    #[test]
+    fn standard_zero_mean_unit_var() {
+        let mut d = ds();
+        let mut t = StandardScaler::default();
+        t.fit_transform(&mut d);
+        for c in 0..2 {
+            let vals: Vec<f32> = (0..3).map(|r| d.row(r)[c]).collect();
+            let mean: f32 = vals.iter().sum::<f32>() / 3.0;
+            let var: f32 = vals.iter().map(|v| (v - mean) * (v - mean)).sum::<f32>() / 3.0;
+            assert!(mean.abs() < 1e-5, "col {c} mean {mean}");
+            assert!((var - 1.0).abs() < 1e-4, "col {c} var {var}");
+        }
+    }
+
+    #[test]
+    fn train_stats_applied_to_test() {
+        let train = ds();
+        let mut t = MinMaxScaler::default();
+        t.fit(&train);
+        let mut test = Dataset::new("test", vec![20.0, 100.0, 5.0], 1, 3, vec![0], 2);
+        t.transform(&mut test);
+        assert_eq!(test.row(0)[0], 2.0, "out-of-range extrapolates");
+    }
+
+    #[test]
+    fn by_name_constructs() {
+        for n in ["DummyPreprocessor", "MinMaxScaler", "StandardScaler"] {
+            assert!(scaler_by_name(n).is_some(), "{n}");
+        }
+        assert!(scaler_by_name("RobustScaler").is_none());
+    }
+}

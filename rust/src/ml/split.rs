@@ -1,0 +1,147 @@
+//! Train/test splitting and stratified k-fold cross-validation.
+
+use crate::ml::data::Dataset;
+use crate::util::rng::Rng;
+
+/// Splits row indices into (train, test) with `test_frac` of rows held out,
+/// stratified by class so both sides keep the class distribution.
+pub fn train_test_indices(ds: &Dataset, test_frac: f64, rng: &mut Rng) -> (Vec<usize>, Vec<usize>) {
+    assert!((0.0..1.0).contains(&test_frac), "test_frac in [0,1)");
+    let mut by_class: Vec<Vec<usize>> = vec![Vec::new(); ds.n_classes];
+    for (i, &c) in ds.y.iter().enumerate() {
+        by_class[c].push(i);
+    }
+    let mut train = Vec::new();
+    let mut test = Vec::new();
+    for mut members in by_class {
+        rng.shuffle(&mut members);
+        let n_test = ((members.len() as f64) * test_frac).round() as usize;
+        test.extend_from_slice(&members[..n_test]);
+        train.extend_from_slice(&members[n_test..]);
+    }
+    rng.shuffle(&mut train);
+    rng.shuffle(&mut test);
+    (train, test)
+}
+
+/// One fold of a k-fold split: held-out test rows and the remaining train rows.
+#[derive(Debug, Clone)]
+pub struct Fold {
+    pub train: Vec<usize>,
+    pub test: Vec<usize>,
+}
+
+/// Stratified k-fold: each class's rows are dealt round-robin across folds,
+/// so every fold keeps (approximately) the global class distribution.
+pub fn stratified_kfold(ds: &Dataset, k: usize, rng: &mut Rng) -> Vec<Fold> {
+    assert!(k >= 2, "k-fold needs k >= 2");
+    let mut assignments = vec![0usize; ds.n_rows];
+    let mut by_class: Vec<Vec<usize>> = vec![Vec::new(); ds.n_classes];
+    for (i, &c) in ds.y.iter().enumerate() {
+        by_class[c].push(i);
+    }
+    for mut members in by_class {
+        rng.shuffle(&mut members);
+        for (j, &row) in members.iter().enumerate() {
+            assignments[row] = j % k;
+        }
+    }
+    (0..k)
+        .map(|fold| {
+            let mut train = Vec::new();
+            let mut test = Vec::new();
+            for (row, &a) in assignments.iter().enumerate() {
+                if a == fold {
+                    test.push(row);
+                } else {
+                    train.push(row);
+                }
+            }
+            Fold { train, test }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ml::dataset::toy;
+
+    #[test]
+    fn train_test_partition() {
+        let ds = toy(0);
+        let mut rng = Rng::new(1);
+        let (train, test) = train_test_indices(&ds, 0.25, &mut rng);
+        assert_eq!(train.len() + test.len(), ds.n_rows);
+        let mut all: Vec<usize> = train.iter().chain(&test).copied().collect();
+        all.sort_unstable();
+        all.dedup();
+        assert_eq!(all.len(), ds.n_rows, "partition (no dup/loss)");
+        // ~25% held out
+        assert!((25..=35).contains(&test.len()), "test size {}", test.len());
+    }
+
+    #[test]
+    fn train_test_is_stratified() {
+        let ds = toy(0);
+        let mut rng = Rng::new(2);
+        let (_, test) = train_test_indices(&ds, 0.3, &mut rng);
+        let mut counts = vec![0usize; ds.n_classes];
+        for &i in &test {
+            counts[ds.y[i]] += 1;
+        }
+        let (min, max) = (counts.iter().min().unwrap(), counts.iter().max().unwrap());
+        assert!(max - min <= 2, "stratification off: {counts:?}");
+    }
+
+    #[test]
+    fn kfold_covers_each_row_exactly_once_as_test() {
+        let ds = toy(0);
+        let mut rng = Rng::new(3);
+        let folds = stratified_kfold(&ds, 5, &mut rng);
+        assert_eq!(folds.len(), 5);
+        let mut seen = vec![0usize; ds.n_rows];
+        for f in &folds {
+            assert_eq!(f.train.len() + f.test.len(), ds.n_rows);
+            for &t in &f.test {
+                seen[t] += 1;
+            }
+            // train/test disjoint
+            for &t in &f.test {
+                assert!(!f.train.contains(&t));
+            }
+        }
+        assert!(seen.iter().all(|&s| s == 1), "each row tested exactly once");
+    }
+
+    #[test]
+    fn kfold_is_stratified() {
+        let ds = toy(0);
+        let mut rng = Rng::new(4);
+        for f in stratified_kfold(&ds, 4, &mut rng) {
+            let mut counts = vec![0usize; ds.n_classes];
+            for &i in &f.test {
+                counts[ds.y[i]] += 1;
+            }
+            let (min, max) = (counts.iter().min().unwrap(), counts.iter().max().unwrap());
+            assert!(max - min <= 1, "fold stratification: {counts:?}");
+        }
+    }
+
+    #[test]
+    fn deterministic_given_rng_seed() {
+        let ds = toy(0);
+        let a = stratified_kfold(&ds, 3, &mut Rng::new(9));
+        let b = stratified_kfold(&ds, 3, &mut Rng::new(9));
+        for (fa, fb) in a.iter().zip(&b) {
+            assert_eq!(fa.test, fb.test);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "k >= 2")]
+    fn k1_panics() {
+        let ds = toy(0);
+        stratified_kfold(&ds, 1, &mut Rng::new(0));
+    }
+}

@@ -1,0 +1,175 @@
+//! Linear support-vector classifier — the paper's `SVC` grid entry.
+//!
+//! One-vs-rest linear SVMs trained by SGD on the L2-regularized hinge loss
+//! (Pegasos-style step size `1/(lambda * t)`). Multi-class prediction takes
+//! the argmax of the per-class margins.
+
+use crate::ml::data::Dataset;
+use crate::ml::tree::Classifier;
+use crate::util::rng::Rng;
+
+/// SVC hyperparameters.
+#[derive(Debug, Clone)]
+pub struct SvcParams {
+    pub epochs: usize,
+    /// L2 regularization strength (Pegasos lambda).
+    pub lambda: f64,
+}
+
+impl Default for SvcParams {
+    fn default() -> Self {
+        SvcParams { epochs: 20, lambda: 1e-3 }
+    }
+}
+
+/// A fitted one-vs-rest linear SVC.
+#[derive(Debug, Clone)]
+pub struct LinearSvc {
+    params: SvcParams,
+    /// Per-class (weights, bias).
+    models: Vec<(Vec<f64>, f64)>,
+    n_classes: usize,
+}
+
+impl LinearSvc {
+    pub fn new(params: SvcParams) -> Self {
+        LinearSvc { params, models: Vec::new(), n_classes: 0 }
+    }
+
+    /// Margin of class `c` on a row.
+    fn margin(&self, c: usize, row: &[f32]) -> f64 {
+        let (w, b) = &self.models[c];
+        let dot: f64 = w.iter().zip(row).map(|(wi, &xi)| wi * xi as f64).sum();
+        dot + b
+    }
+}
+
+impl Classifier for LinearSvc {
+    fn fit(&mut self, train: &Dataset, rng: &mut Rng) {
+        self.n_classes = train.n_classes;
+        self.models.clear();
+        let n = train.n_rows;
+        let d = train.n_cols;
+        let lambda = self.params.lambda;
+
+        for class in 0..train.n_classes {
+            let mut w = vec![0f64; d];
+            let mut b = 0f64;
+            let mut t: u64 = 1;
+            let mut order: Vec<usize> = (0..n).collect();
+            let mut class_rng = rng.fork(class as u64);
+            for _ in 0..self.params.epochs {
+                class_rng.shuffle(&mut order);
+                for &r in &order {
+                    let y = if train.y[r] == class { 1.0 } else { -1.0 };
+                    let row = train.row(r);
+                    let eta = 1.0 / (lambda * t as f64);
+                    let margin: f64 =
+                        w.iter().zip(row).map(|(wi, &xi)| wi * xi as f64).sum::<f64>() + b;
+                    // L2 shrink.
+                    let shrink = 1.0 - eta * lambda;
+                    for wi in w.iter_mut() {
+                        *wi *= shrink;
+                    }
+                    if y * margin < 1.0 {
+                        for (wi, &xi) in w.iter_mut().zip(row) {
+                            *wi += eta * y * xi as f64;
+                        }
+                        b += eta * y * 0.1; // unregularized, damped bias
+                    }
+                    t += 1;
+                }
+            }
+            self.models.push((w, b));
+        }
+    }
+
+    fn predict(&self, ds: &Dataset) -> Vec<usize> {
+        assert!(!self.models.is_empty(), "predict before fit");
+        (0..ds.n_rows)
+            .map(|r| {
+                let row = ds.row(r);
+                (0..self.n_classes)
+                    .map(|c| (c, self.margin(c, row)))
+                    .max_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+                    .map(|(c, _)| c)
+                    .unwrap_or(0)
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ml::dataset::toy;
+    use crate::ml::impute::{DummyImputer, Transformer};
+    use crate::ml::metrics::accuracy;
+    use crate::ml::scale::StandardScaler;
+    use crate::ml::split::train_test_indices;
+
+    fn scaled_toy() -> Dataset {
+        let mut ds = toy(0);
+        DummyImputer.transform(&mut ds);
+        let mut scaler = StandardScaler::default();
+        scaler.fit_transform(&mut ds);
+        ds
+    }
+
+    #[test]
+    fn separates_linear_data() {
+        // Two linearly separable blobs on one feature.
+        let x: Vec<f32> = (0..20)
+            .map(|i| if i < 10 { -2.0 - (i as f32) * 0.1 } else { 2.0 + (i as f32) * 0.1 })
+            .collect();
+        let y: Vec<usize> = (0..20).map(|i| usize::from(i >= 10)).collect();
+        let ds = Dataset::new("lin", x, 20, 1, y.clone(), 2);
+        let mut svc = LinearSvc::new(SvcParams::default());
+        svc.fit(&ds, &mut Rng::new(0));
+        assert_eq!(svc.predict(&ds), y);
+    }
+
+    #[test]
+    fn multiclass_toy_generalizes() {
+        let ds = scaled_toy();
+        let mut rng = Rng::new(21);
+        let (tr, te) = train_test_indices(&ds, 0.3, &mut rng);
+        let train = ds.subset(&tr);
+        let test = ds.subset(&te);
+        let mut svc = LinearSvc::new(SvcParams::default());
+        svc.fit(&train, &mut rng);
+        let acc = accuracy(&test.y, &svc.predict(&test));
+        assert!(acc > 0.8, "test accuracy {acc}");
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let ds = scaled_toy();
+        let run = |seed| {
+            let mut svc = LinearSvc::new(SvcParams { epochs: 5, ..Default::default() });
+            svc.fit(&ds, &mut Rng::new(seed));
+            svc.predict(&ds)
+        };
+        assert_eq!(run(3), run(3));
+    }
+
+    #[test]
+    fn more_epochs_do_not_collapse() {
+        let ds = scaled_toy();
+        let acc_of = |epochs| {
+            let mut svc = LinearSvc::new(SvcParams { epochs, ..Default::default() });
+            svc.fit(&ds, &mut Rng::new(5));
+            accuracy(&ds.y, &svc.predict(&ds))
+        };
+        let short = acc_of(2);
+        let long = acc_of(30);
+        assert!(long >= short - 0.1, "epochs 2: {short}, 30: {long}");
+    }
+
+    #[test]
+    #[should_panic(expected = "predict before fit")]
+    fn predict_unfit_panics() {
+        let svc = LinearSvc::new(SvcParams::default());
+        svc.predict(&scaled_toy());
+    }
+}

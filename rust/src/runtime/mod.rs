@@ -1,0 +1,9 @@
+//! PJRT runtime (Layer-3 side of the AOT bridge): loads the HLO-text
+//! artifacts produced by `python/compile/aot.py`, compiles them once on the
+//! CPU PJRT client, and drives them from the experiment hot path. Python is
+//! build-time only.
+
+pub mod artifact;
+pub mod mlp;
+pub mod pjrt;
+pub mod tensor;

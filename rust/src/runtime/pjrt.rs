@@ -1,0 +1,153 @@
+//! PJRT engine: loads HLO-text artifacts and executes them on the CPU
+//! client.
+//!
+//! Wraps the `xla` crate (docs.rs/xla 0.1.6). The interchange format is HLO
+//! **text** (`HloModuleProto::from_text_file`): the crate's bundled
+//! xla_extension 0.5.1 rejects jax≥0.5 serialized protos (64-bit ids),
+//! while the text parser reassigns ids — see /opt/xla-example/README.md.
+//!
+//! Thread-safety: the `xla` wrapper types hold raw pointers and are not
+//! `Send`/`Sync`-annotated, but the underlying PJRT CPU client *is*
+//! thread-safe for compilation and execution (it is the same client JAX
+//! uses from multi-threaded Python). [`Executable`] therefore wraps the
+//! handle in a `Mutex` and asserts `Send + Sync` — all FFI calls are
+//! serialized per executable, which is also the fair-benchmark choice
+//! (one compute stream), while different executables may run concurrently.
+
+use crate::coordinator::error::MementoError;
+use crate::runtime::tensor::Tensor;
+use std::path::Path;
+use std::sync::Mutex;
+
+/// A compiled, thread-shareable PJRT executable.
+pub struct Executable {
+    inner: Mutex<xla::PjRtLoadedExecutable>,
+    /// Number of outputs in the result tuple (from the manifest).
+    pub n_outputs: usize,
+    pub name: String,
+}
+
+// SAFETY: PJRT CPU executables are internally synchronized for execution;
+// we additionally serialize all calls through the Mutex above. The raw
+// pointers are never exposed.
+unsafe impl Send for Executable {}
+unsafe impl Sync for Executable {}
+
+impl std::fmt::Debug for Executable {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Executable")
+            .field("name", &self.name)
+            .field("n_outputs", &self.n_outputs)
+            .finish_non_exhaustive()
+    }
+}
+
+/// The PJRT engine: one CPU client, many compiled executables.
+pub struct Engine {
+    client: Mutex<xla::PjRtClient>,
+    pub platform: String,
+}
+
+// SAFETY: see Executable — the client is used behind a Mutex only.
+unsafe impl Send for Engine {}
+unsafe impl Sync for Engine {}
+
+impl std::fmt::Debug for Engine {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Engine")
+            .field("platform", &self.platform)
+            .finish_non_exhaustive()
+    }
+}
+
+impl Engine {
+    /// Creates a CPU PJRT client.
+    pub fn cpu() -> Result<Engine, MementoError> {
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| MementoError::runtime(format!("PjRtClient::cpu: {e:?}")))?;
+        let platform = client.platform_name();
+        Ok(Engine { client: Mutex::new(client), platform })
+    }
+
+    /// Loads an HLO-text file and compiles it.
+    pub fn compile_hlo_text(
+        &self,
+        path: &Path,
+        name: &str,
+        n_outputs: usize,
+    ) -> Result<Executable, MementoError> {
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str()
+                .ok_or_else(|| MementoError::runtime("non-utf8 artifact path"))?,
+        )
+        .map_err(|e| {
+            MementoError::runtime(format!("parse HLO text '{}': {e:?}", path.display()))
+        })?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .lock()
+            .unwrap()
+            .compile(&comp)
+            .map_err(|e| MementoError::runtime(format!("compile '{name}': {e:?}")))?;
+        Ok(Executable { inner: Mutex::new(exe), n_outputs, name: name.to_string() })
+    }
+}
+
+impl Executable {
+    /// Executes with host tensors in, host tensors out.
+    ///
+    /// The AOT pipeline lowers with `return_tuple=True`, so the single
+    /// output buffer is a tuple of `n_outputs` literals.
+    pub fn run(&self, inputs: &[&Tensor]) -> Result<Vec<Tensor>, MementoError> {
+        let literals: Vec<xla::Literal> = inputs
+            .iter()
+            .map(|t| t.to_literal())
+            .collect::<Result<_, _>>()?;
+        let result_literal = {
+            let exe = self.inner.lock().unwrap();
+            let bufs = exe
+                .execute::<xla::Literal>(&literals)
+                .map_err(|e| MementoError::runtime(format!("execute '{}': {e:?}", self.name)))?;
+            bufs[0][0]
+                .to_literal_sync()
+                .map_err(|e| MementoError::runtime(format!("fetch result: {e:?}")))?
+        };
+        let parts = result_literal
+            .to_tuple()
+            .map_err(|e| MementoError::runtime(format!("untuple result: {e:?}")))?;
+        if parts.len() != self.n_outputs {
+            return Err(MementoError::runtime(format!(
+                "'{}' returned {} outputs, manifest says {}",
+                self.name,
+                parts.len(),
+                self.n_outputs
+            )));
+        }
+        parts.iter().map(Tensor::from_literal).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Engine tests that need artifacts live in rust/tests/runtime_integration.rs
+    // (they require `make artifacts` to have run). Here: client creation and
+    // error paths that need no artifacts.
+
+    #[test]
+    fn engine_creates_cpu_client() {
+        let engine = Engine::cpu().expect("cpu client");
+        assert_eq!(engine.platform, "cpu");
+    }
+
+    #[test]
+    fn missing_artifact_is_runtime_error() {
+        let engine = Engine::cpu().unwrap();
+        let err = engine
+            .compile_hlo_text(Path::new("/nonexistent/foo.hlo.txt"), "foo", 1)
+            .unwrap_err();
+        assert!(matches!(err, MementoError::Runtime(_)), "{err}");
+    }
+}

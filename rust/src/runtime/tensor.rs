@@ -1,0 +1,131 @@
+//! Host-side tensors and conversion to/from `xla::Literal`.
+//!
+//! The runtime's data plane: row-major `f32` buffers with shape metadata,
+//! bridged to PJRT literals at the execute boundary.
+
+use crate::coordinator::error::MementoError;
+
+/// A row-major f32 tensor.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn new(shape: Vec<usize>, data: Vec<f32>) -> Tensor {
+        assert_eq!(
+            shape.iter().product::<usize>(),
+            data.len(),
+            "shape/data size mismatch"
+        );
+        Tensor { shape, data }
+    }
+
+    pub fn zeros(shape: Vec<usize>) -> Tensor {
+        let n = shape.iter().product();
+        Tensor { shape, data: vec![0.0; n] }
+    }
+
+    pub fn scalar(v: f32) -> Tensor {
+        Tensor { shape: vec![], data: vec![v] }
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    /// 2-D accessor (row-major).
+    pub fn at2(&self, i: usize, j: usize) -> f32 {
+        debug_assert_eq!(self.shape.len(), 2);
+        self.data[i * self.shape[1] + j]
+    }
+
+    /// Converts to an `xla::Literal` with this tensor's shape.
+    pub fn to_literal(&self) -> Result<xla::Literal, MementoError> {
+        let flat = xla::Literal::vec1(&self.data);
+        if self.shape.is_empty() {
+            // Rank-0: reshape to scalar.
+            flat.reshape(&[])
+                .map_err(|e| MementoError::runtime(format!("scalar reshape: {e:?}")))
+        } else {
+            let dims: Vec<i64> = self.shape.iter().map(|&d| d as i64).collect();
+            flat.reshape(&dims)
+                .map_err(|e| MementoError::runtime(format!("reshape {:?}: {e:?}", self.shape)))
+        }
+    }
+
+    /// Reads a literal back into a host tensor.
+    pub fn from_literal(lit: &xla::Literal) -> Result<Tensor, MementoError> {
+        let shape = lit
+            .array_shape()
+            .map_err(|e| MementoError::runtime(format!("literal shape: {e:?}")))?;
+        let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+        let data = lit
+            .to_vec::<f32>()
+            .map_err(|e| MementoError::runtime(format!("literal to_vec: {e:?}")))?;
+        Ok(Tensor::new(dims, data))
+    }
+
+    /// Argmax along the last axis of a 2-D tensor.
+    pub fn argmax_rows(&self) -> Vec<usize> {
+        assert_eq!(self.shape.len(), 2, "argmax_rows needs rank 2");
+        let (n, c) = (self.shape[0], self.shape[1]);
+        (0..n)
+            .map(|i| {
+                let row = &self.data[i * c..(i + 1) * c];
+                row.iter()
+                    .enumerate()
+                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap_or(std::cmp::Ordering::Equal))
+                    .map(|(j, _)| j)
+                    .unwrap_or(0)
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn construction_and_access() {
+        let t = Tensor::new(vec![2, 3], vec![1., 2., 3., 4., 5., 6.]);
+        assert_eq!(t.at2(0, 2), 3.0);
+        assert_eq!(t.at2(1, 0), 4.0);
+        assert_eq!(t.len(), 6);
+        let z = Tensor::zeros(vec![4]);
+        assert_eq!(z.data, vec![0.0; 4]);
+        let s = Tensor::scalar(7.5);
+        assert!(s.shape.is_empty());
+    }
+
+    #[test]
+    #[should_panic(expected = "size mismatch")]
+    fn bad_shape_panics() {
+        Tensor::new(vec![2, 2], vec![1.0]);
+    }
+
+    #[test]
+    fn argmax_rows_basic() {
+        let t = Tensor::new(vec![3, 3], vec![0., 1., 0., 5., 2., 3., 0., 0., 9.]);
+        assert_eq!(t.argmax_rows(), vec![1, 0, 2]);
+    }
+
+    #[test]
+    fn literal_roundtrip_matrix_and_scalar() {
+        let t = Tensor::new(vec![2, 2], vec![1., 2., 3., 4.]);
+        let lit = t.to_literal().unwrap();
+        let back = Tensor::from_literal(&lit).unwrap();
+        assert_eq!(back, t);
+
+        let s = Tensor::scalar(3.25);
+        let lit = s.to_literal().unwrap();
+        let back = Tensor::from_literal(&lit).unwrap();
+        assert_eq!(back.data, vec![3.25]);
+    }
+}

@@ -1,0 +1,3 @@
+//! Test-support utilities, including the property-testing mini-framework.
+
+pub mod prop;

@@ -1,0 +1,296 @@
+//! Declarative command-line parsing (offline `clap` replacement).
+//!
+//! Supports subcommands, `--flag`, `--opt value` / `--opt=value`, typed
+//! accessors with defaults, positional arguments, and generated `--help`
+//! text. Only what the `memento` binary and the examples need.
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+/// Specification of one option/flag.
+#[derive(Debug, Clone)]
+pub struct OptSpec {
+    pub name: &'static str,
+    pub help: &'static str,
+    /// Flags take no value; options take exactly one.
+    pub is_flag: bool,
+    pub default: Option<&'static str>,
+}
+
+/// Parser specification: a name, blurb, options, and positional names.
+#[derive(Debug, Clone, Default)]
+pub struct CliSpec {
+    pub name: &'static str,
+    pub about: &'static str,
+    pub opts: Vec<OptSpec>,
+    pub positionals: Vec<(&'static str, &'static str)>,
+}
+
+impl CliSpec {
+    pub fn new(name: &'static str, about: &'static str) -> Self {
+        CliSpec { name, about, opts: Vec::new(), positionals: Vec::new() }
+    }
+
+    pub fn flag(mut self, name: &'static str, help: &'static str) -> Self {
+        self.opts.push(OptSpec { name, help, is_flag: true, default: None });
+        self
+    }
+
+    pub fn opt(mut self, name: &'static str, default: &'static str, help: &'static str) -> Self {
+        self.opts.push(OptSpec { name, help, is_flag: false, default: Some(default) });
+        self
+    }
+
+    /// An option with no default: `get` returns `None` when absent.
+    pub fn opt_required(mut self, name: &'static str, help: &'static str) -> Self {
+        self.opts.push(OptSpec { name, help, is_flag: false, default: None });
+        self
+    }
+
+    pub fn positional(mut self, name: &'static str, help: &'static str) -> Self {
+        self.positionals.push((name, help));
+        self
+    }
+
+    /// Renders `--help` output.
+    pub fn help(&self) -> String {
+        let mut s = format!("{} — {}\n\nUSAGE:\n  {}", self.name, self.about, self.name);
+        for (p, _) in &self.positionals {
+            s.push_str(&format!(" <{p}>"));
+        }
+        if !self.opts.is_empty() {
+            s.push_str(" [OPTIONS]");
+        }
+        s.push('\n');
+        if !self.positionals.is_empty() {
+            s.push_str("\nARGS:\n");
+            for (p, h) in &self.positionals {
+                s.push_str(&format!("  <{p}>  {h}\n"));
+            }
+        }
+        if !self.opts.is_empty() {
+            s.push_str("\nOPTIONS:\n");
+            for o in &self.opts {
+                let head = if o.is_flag {
+                    format!("--{}", o.name)
+                } else {
+                    format!("--{} <value>", o.name)
+                };
+                let dflt = o
+                    .default
+                    .map(|d| format!(" [default: {d}]"))
+                    .unwrap_or_default();
+                s.push_str(&format!("  {head:<24} {}{}\n", o.help, dflt));
+            }
+        }
+        s
+    }
+
+    /// Parses an argument vector (without argv[0]).
+    pub fn parse(&self, args: &[String]) -> Result<CliArgs, CliError> {
+        let mut values: BTreeMap<String, String> = BTreeMap::new();
+        let mut flags: BTreeMap<String, bool> = BTreeMap::new();
+        let mut positionals = Vec::new();
+
+        for o in &self.opts {
+            if o.is_flag {
+                flags.insert(o.name.to_string(), false);
+            } else if let Some(d) = o.default {
+                values.insert(o.name.to_string(), d.to_string());
+            }
+        }
+
+        let mut it = args.iter().peekable();
+        while let Some(arg) = it.next() {
+            if arg == "--help" || arg == "-h" {
+                return Err(CliError::HelpRequested(self.help()));
+            }
+            if let Some(stripped) = arg.strip_prefix("--") {
+                let (name, inline) = match stripped.split_once('=') {
+                    Some((n, v)) => (n, Some(v.to_string())),
+                    None => (stripped, None),
+                };
+                let spec = self
+                    .opts
+                    .iter()
+                    .find(|o| o.name == name)
+                    .ok_or_else(|| CliError::UnknownOption(name.to_string()))?;
+                if spec.is_flag {
+                    if inline.is_some() {
+                        return Err(CliError::FlagWithValue(name.to_string()));
+                    }
+                    flags.insert(name.to_string(), true);
+                } else {
+                    let v = match inline {
+                        Some(v) => v,
+                        None => it
+                            .next()
+                            .cloned()
+                            .ok_or_else(|| CliError::MissingValue(name.to_string()))?,
+                    };
+                    values.insert(name.to_string(), v);
+                }
+            } else {
+                positionals.push(arg.clone());
+            }
+        }
+        if positionals.len() > self.positionals.len() {
+            return Err(CliError::TooManyPositionals(positionals.len(), self.positionals.len()));
+        }
+        Ok(CliArgs { values, flags, positionals, spec_positionals: self.positionals.clone() })
+    }
+}
+
+/// Parsed arguments with typed accessors.
+#[derive(Debug, Clone)]
+pub struct CliArgs {
+    values: BTreeMap<String, String>,
+    flags: BTreeMap<String, bool>,
+    positionals: Vec<String>,
+    spec_positionals: Vec<(&'static str, &'static str)>,
+}
+
+impl CliArgs {
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.values.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_usize(&self, name: &str) -> Result<usize, CliError> {
+        let s = self
+            .get(name)
+            .ok_or_else(|| CliError::MissingValue(name.to_string()))?;
+        s.parse()
+            .map_err(|_| CliError::BadValue(name.to_string(), s.to_string(), "usize"))
+    }
+
+    pub fn get_f64(&self, name: &str) -> Result<f64, CliError> {
+        let s = self
+            .get(name)
+            .ok_or_else(|| CliError::MissingValue(name.to_string()))?;
+        s.parse()
+            .map_err(|_| CliError::BadValue(name.to_string(), s.to_string(), "f64"))
+    }
+
+    pub fn get_u64(&self, name: &str) -> Result<u64, CliError> {
+        let s = self
+            .get(name)
+            .ok_or_else(|| CliError::MissingValue(name.to_string()))?;
+        s.parse()
+            .map_err(|_| CliError::BadValue(name.to_string(), s.to_string(), "u64"))
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.get(name).copied().unwrap_or(false)
+    }
+
+    /// Positional by declared name.
+    pub fn pos(&self, name: &str) -> Option<&str> {
+        let idx = self.spec_positionals.iter().position(|(n, _)| *n == name)?;
+        self.positionals.get(idx).map(|s| s.as_str())
+    }
+}
+
+/// CLI parsing errors (`HelpRequested` carries the rendered help text).
+#[derive(Debug, Clone)]
+pub enum CliError {
+    HelpRequested(String),
+    UnknownOption(String),
+    MissingValue(String),
+    FlagWithValue(String),
+    BadValue(String, String, &'static str),
+    TooManyPositionals(usize, usize),
+}
+
+impl fmt::Display for CliError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            CliError::HelpRequested(h) => write!(f, "{h}"),
+            CliError::UnknownOption(n) => write!(f, "unknown option --{n}"),
+            CliError::MissingValue(n) => write!(f, "option --{n} requires a value"),
+            CliError::FlagWithValue(n) => write!(f, "flag --{n} does not take a value"),
+            CliError::BadValue(n, v, ty) => {
+                write!(f, "option --{n}: '{v}' is not a valid {ty}")
+            }
+            CliError::TooManyPositionals(got, want) => {
+                write!(f, "expected at most {want} positional arguments, got {got}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for CliError {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec() -> CliSpec {
+        CliSpec::new("test", "a test")
+            .opt("workers", "4", "worker count")
+            .opt_required("out", "output path")
+            .flag("verbose", "talk more")
+            .positional("config", "config file")
+    }
+
+    fn argv(args: &[&str]) -> Vec<String> {
+        args.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = spec().parse(&argv(&[])).unwrap();
+        assert_eq!(a.get("workers"), Some("4"));
+        assert_eq!(a.get_usize("workers").unwrap(), 4);
+        assert_eq!(a.get("out"), None);
+        assert!(!a.flag("verbose"));
+    }
+
+    #[test]
+    fn parses_space_and_equals_forms() {
+        let a = spec()
+            .parse(&argv(&["--workers", "8", "--out=res.json", "--verbose", "cfg.json"]))
+            .unwrap();
+        assert_eq!(a.get_usize("workers").unwrap(), 8);
+        assert_eq!(a.get("out"), Some("res.json"));
+        assert!(a.flag("verbose"));
+        assert_eq!(a.pos("config"), Some("cfg.json"));
+    }
+
+    #[test]
+    fn rejects_unknown_and_bad() {
+        assert!(matches!(
+            spec().parse(&argv(&["--nope"])),
+            Err(CliError::UnknownOption(_))
+        ));
+        assert!(matches!(
+            spec().parse(&argv(&["--workers"])),
+            Err(CliError::MissingValue(_))
+        ));
+        assert!(matches!(
+            spec().parse(&argv(&["--verbose=yes"])),
+            Err(CliError::FlagWithValue(_))
+        ));
+        let a = spec().parse(&argv(&["--workers", "abc"])).unwrap();
+        assert!(matches!(a.get_usize("workers"), Err(CliError::BadValue(..))));
+    }
+
+    #[test]
+    fn help_contains_everything() {
+        let h = spec().help();
+        for needle in ["--workers", "--out", "--verbose", "<config>", "a test"] {
+            assert!(h.contains(needle), "help missing {needle}: {h}");
+        }
+        assert!(matches!(
+            spec().parse(&argv(&["--help"])),
+            Err(CliError::HelpRequested(_))
+        ));
+    }
+
+    #[test]
+    fn too_many_positionals() {
+        assert!(matches!(
+            spec().parse(&argv(&["a", "b"])),
+            Err(CliError::TooManyPositionals(2, 1))
+        ));
+    }
+}

@@ -1,0 +1,208 @@
+//! Minimal CSV reader/writer (substrate — no csv crate offline).
+//!
+//! Supports: comma separation, double-quote quoting with `""` escapes,
+//! embedded newlines inside quoted fields, CRLF/LF line endings, and an
+//! optional header row. Enough to load real tabular datasets into
+//! [`crate::ml::data::Dataset`] and to export result tables.
+
+use std::fmt;
+
+/// A parsed CSV document: optional header + rows of string fields.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct CsvTable {
+    pub header: Option<Vec<String>>,
+    pub rows: Vec<Vec<String>>,
+}
+
+/// CSV parse error with 1-based record index.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct CsvError {
+    pub record: usize,
+    pub msg: String,
+}
+
+impl fmt::Display for CsvError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "csv error at record {}: {}", self.record, self.msg)
+    }
+}
+
+impl std::error::Error for CsvError {}
+
+/// Parses CSV text. `has_header` pops the first record into `header`.
+pub fn parse(text: &str, has_header: bool) -> Result<CsvTable, CsvError> {
+    let mut rows: Vec<Vec<String>> = Vec::new();
+    let mut field = String::new();
+    let mut row: Vec<String> = Vec::new();
+    let mut chars = text.chars().peekable();
+    let mut in_quotes = false;
+    let mut record_no = 1;
+
+    macro_rules! end_field {
+        () => {{
+            row.push(std::mem::take(&mut field));
+        }};
+    }
+    macro_rules! end_row {
+        () => {{
+            end_field!();
+            rows.push(std::mem::take(&mut row));
+            record_no += 1;
+        }};
+    }
+
+    while let Some(c) = chars.next() {
+        if in_quotes {
+            match c {
+                '"' => {
+                    if chars.peek() == Some(&'"') {
+                        chars.next();
+                        field.push('"');
+                    } else {
+                        in_quotes = false;
+                    }
+                }
+                c => field.push(c),
+            }
+        } else {
+            match c {
+                '"' => {
+                    if !field.is_empty() {
+                        return Err(CsvError {
+                            record: record_no,
+                            msg: "quote inside unquoted field".into(),
+                        });
+                    }
+                    in_quotes = true;
+                }
+                ',' => end_field!(),
+                '\r' => {
+                    if chars.peek() == Some(&'\n') {
+                        chars.next();
+                    }
+                    end_row!();
+                }
+                '\n' => end_row!(),
+                c => field.push(c),
+            }
+        }
+    }
+    if in_quotes {
+        return Err(CsvError { record: record_no, msg: "unterminated quoted field".into() });
+    }
+    // Trailing record without newline.
+    if !field.is_empty() || !row.is_empty() {
+        end_row!();
+    }
+    let _ = record_no; // final value only matters for error positions above
+    // Drop fully-empty trailing rows (common from trailing newlines).
+    while rows.last().map(|r| r.len() == 1 && r[0].is_empty()).unwrap_or(false) {
+        rows.pop();
+    }
+
+    // Rectangularity check.
+    if let Some(w) = rows.first().map(|r| r.len()) {
+        for (i, r) in rows.iter().enumerate() {
+            if r.len() != w {
+                return Err(CsvError {
+                    record: i + 1,
+                    msg: format!("expected {w} fields, found {}", r.len()),
+                });
+            }
+        }
+    }
+
+    let mut table = CsvTable { header: None, rows };
+    if has_header && !table.rows.is_empty() {
+        table.header = Some(table.rows.remove(0));
+    }
+    Ok(table)
+}
+
+/// Serializes rows (quoting only where needed).
+pub fn write(table: &CsvTable) -> String {
+    let mut out = String::new();
+    let write_row = |row: &[String], out: &mut String| {
+        for (i, f) in row.iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            if f.contains([',', '"', '\n', '\r']) {
+                out.push('"');
+                out.push_str(&f.replace('"', "\"\""));
+                out.push('"');
+            } else {
+                out.push_str(f);
+            }
+        }
+        out.push('\n');
+    };
+    if let Some(h) = &table.header {
+        write_row(h, &mut out);
+    }
+    for r in &table.rows {
+        write_row(r, &mut out);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn s(v: &[&str]) -> Vec<String> {
+        v.iter().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn basic_parse_with_header() {
+        let t = parse("a,b,c\n1,2,3\n4,5,6\n", true).unwrap();
+        assert_eq!(t.header, Some(s(&["a", "b", "c"])));
+        assert_eq!(t.rows, vec![s(&["1", "2", "3"]), s(&["4", "5", "6"])]);
+    }
+
+    #[test]
+    fn quoting_and_escapes() {
+        let t = parse("\"a,b\",\"say \"\"hi\"\"\",\"line\nbreak\"\n", false).unwrap();
+        assert_eq!(t.rows[0], s(&["a,b", "say \"hi\"", "line\nbreak"]));
+    }
+
+    #[test]
+    fn crlf_and_missing_trailing_newline() {
+        let t = parse("1,2\r\n3,4", false).unwrap();
+        assert_eq!(t.rows.len(), 2);
+        assert_eq!(t.rows[1], s(&["3", "4"]));
+    }
+
+    #[test]
+    fn ragged_rows_error() {
+        let e = parse("1,2\n3\n", false).unwrap_err();
+        assert!(e.msg.contains("expected 2 fields"), "{e}");
+        assert_eq!(e.record, 2);
+    }
+
+    #[test]
+    fn unterminated_quote_errors() {
+        assert!(parse("\"abc", false).is_err());
+        assert!(parse("x\"y,z\n", false).is_err());
+    }
+
+    #[test]
+    fn roundtrip() {
+        let t = CsvTable {
+            header: Some(s(&["name", "value"])),
+            rows: vec![s(&["plain", "1"]), s(&["with,comma", "q\"uote"])],
+        };
+        let text = write(&t);
+        let back = parse(&text, true).unwrap();
+        assert_eq!(back, t);
+    }
+
+    #[test]
+    fn empty_input() {
+        let t = parse("", false).unwrap();
+        assert!(t.rows.is_empty());
+        let t = parse("\n\n", false).unwrap();
+        assert!(t.rows.is_empty());
+    }
+}

@@ -1,0 +1,169 @@
+//! Filesystem helpers with crash-consistency guarantees.
+//!
+//! Checkpoints and cache entries must never be observed half-written: a
+//! power cut mid-`write` would otherwise corrupt the very state Memento
+//! relies on to resume. All persistent writes go through
+//! [`atomic_write`] (write temp file in the same directory, fsync, rename).
+
+use std::fs;
+use std::io::{self, Write};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+static TMP_COUNTER: AtomicU64 = AtomicU64::new(0);
+
+/// Atomically replaces `path` with `contents`.
+///
+/// The write happens to a unique temporary file in the same directory
+/// followed by `rename(2)`, which POSIX guarantees is atomic on the same
+/// filesystem; readers see either the old or the new file, never a mix.
+pub fn atomic_write(path: &Path, contents: &[u8]) -> io::Result<()> {
+    atomic_write_opts(path, contents, true)
+}
+
+/// [`atomic_write`] without the fsync — still atomic w.r.t. concurrent
+/// readers (tmp + rename), but a power cut may lose the entry entirely.
+/// Appropriate for *recomputable* data (cache entries): a lost entry is a
+/// cache miss, never corruption.
+pub fn atomic_write_nosync(path: &Path, contents: &[u8]) -> io::Result<()> {
+    atomic_write_opts(path, contents, false)
+}
+
+fn atomic_write_opts(path: &Path, contents: &[u8], durable: bool) -> io::Result<()> {
+    let dir = path.parent().unwrap_or_else(|| Path::new("."));
+    fs::create_dir_all(dir)?;
+    let unique = format!(
+        ".{}.tmp.{}.{}",
+        path.file_name().and_then(|n| n.to_str()).unwrap_or("file"),
+        std::process::id(),
+        TMP_COUNTER.fetch_add(1, Ordering::Relaxed),
+    );
+    let tmp = dir.join(unique);
+    {
+        let mut f = fs::File::create(&tmp)?;
+        f.write_all(contents)?;
+        if durable {
+            f.sync_all()?;
+        }
+    }
+    match fs::rename(&tmp, path) {
+        Ok(()) => Ok(()),
+        Err(e) => {
+            let _ = fs::remove_file(&tmp);
+            Err(e)
+        }
+    }
+}
+
+/// Reads a whole file to a string.
+pub fn read_string(path: &Path) -> io::Result<String> {
+    fs::read_to_string(path)
+}
+
+/// Lists files (not dirs) in `dir` with the given extension, sorted by name.
+pub fn list_files_with_ext(dir: &Path, ext: &str) -> io::Result<Vec<PathBuf>> {
+    let mut out = Vec::new();
+    if !dir.exists() {
+        return Ok(out);
+    }
+    for entry in fs::read_dir(dir)? {
+        let entry = entry?;
+        let p = entry.path();
+        if p.is_file() && p.extension().and_then(|e| e.to_str()) == Some(ext) {
+            out.push(p);
+        }
+    }
+    out.sort();
+    Ok(out)
+}
+
+/// A unique temporary directory that is removed on drop. Used pervasively
+/// by tests and benches for isolated cache/checkpoint stores.
+pub struct TempDir {
+    path: PathBuf,
+}
+
+impl TempDir {
+    /// Creates `std::env::temp_dir()/memento-<label>-<pid>-<n>`.
+    pub fn new(label: &str) -> io::Result<TempDir> {
+        let n = TMP_COUNTER.fetch_add(1, Ordering::Relaxed);
+        // Nanosecond component makes collisions across processes (e.g. a
+        // leaked dir from a killed test run) practically impossible.
+        let nanos = std::time::SystemTime::now()
+            .duration_since(std::time::UNIX_EPOCH)
+            .map(|d| d.subsec_nanos())
+            .unwrap_or(0);
+        let path = std::env::temp_dir().join(format!(
+            "memento-{label}-{}-{n}-{nanos}",
+            std::process::id()
+        ));
+        fs::create_dir_all(&path)?;
+        Ok(TempDir { path })
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    /// A path inside the temp dir.
+    pub fn join(&self, rel: &str) -> PathBuf {
+        self.path.join(rel)
+    }
+}
+
+impl Drop for TempDir {
+    fn drop(&mut self) {
+        let _ = fs::remove_dir_all(&self.path);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn atomic_write_roundtrip() {
+        let td = TempDir::new("fs-test").unwrap();
+        let p = td.join("a/b/c.json");
+        atomic_write(&p, b"{\"x\":1}").unwrap();
+        assert_eq!(read_string(&p).unwrap(), "{\"x\":1}");
+        // Overwrite
+        atomic_write(&p, b"{\"x\":2}").unwrap();
+        assert_eq!(read_string(&p).unwrap(), "{\"x\":2}");
+        // No stray temp files left behind.
+        let leftovers: Vec<_> = fs::read_dir(p.parent().unwrap())
+            .unwrap()
+            .map(|e| e.unwrap().file_name().to_string_lossy().into_owned())
+            .filter(|n| n.contains(".tmp."))
+            .collect();
+        assert!(leftovers.is_empty(), "{leftovers:?}");
+    }
+
+    #[test]
+    fn tempdir_cleanup() {
+        let path;
+        {
+            let td = TempDir::new("cleanup").unwrap();
+            path = td.path().to_path_buf();
+            atomic_write(&td.join("f.txt"), b"x").unwrap();
+            assert!(path.exists());
+        }
+        assert!(!path.exists());
+    }
+
+    #[test]
+    fn list_files_filters_and_sorts() {
+        let td = TempDir::new("list").unwrap();
+        atomic_write(&td.join("b.json"), b"{}").unwrap();
+        atomic_write(&td.join("a.json"), b"{}").unwrap();
+        atomic_write(&td.join("c.txt"), b"x").unwrap();
+        let files = list_files_with_ext(td.path(), "json").unwrap();
+        let names: Vec<_> = files
+            .iter()
+            .map(|p| p.file_name().unwrap().to_string_lossy().into_owned())
+            .collect();
+        assert_eq!(names, vec!["a.json", "b.json"]);
+        // Missing dir is empty, not an error.
+        assert!(list_files_with_ext(&td.join("nope"), "json").unwrap().is_empty());
+    }
+}

@@ -1,0 +1,10 @@
+//! Support substrates built from scratch for the offline image: JSON,
+//! RNG, thread pool, CLI parsing, filesystem atomicity, and timing.
+
+pub mod cli;
+pub mod csv;
+pub mod fs;
+pub mod json;
+pub mod pool;
+pub mod rng;
+pub mod time;

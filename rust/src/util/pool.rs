@@ -1,0 +1,266 @@
+//! A fixed-size worker thread pool.
+//!
+//! `tokio`/`rayon` are unavailable offline, and Memento's execution model —
+//! N OS threads pulling self-contained experiment tasks off a FIFO queue —
+//! is exactly what the paper describes ("concurrently run experiments across
+//! multiple threads"), so a small dedicated pool is both sufficient and
+//! faithful.
+//!
+//! Design:
+//! - a `Mutex<VecDeque<Job>>` + `Condvar` injector queue,
+//! - jobs are `FnOnce` boxes; panics inside a job are caught per-job so a
+//!   single failing experiment cannot take a worker down (the paper's
+//!   per-task error isolation),
+//! - [`ThreadPool::join`] drains the queue and blocks until idle,
+//! - [`scope_run`] convenience for fork/join batches.
+
+use std::collections::VecDeque;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+struct Shared {
+    queue: Mutex<VecDeque<Job>>,
+    cv: Condvar,
+    /// Jobs submitted but not yet finished (queued + running).
+    inflight: AtomicUsize,
+    idle_cv: Condvar,
+    idle_mx: Mutex<()>,
+    shutdown: AtomicBool,
+    /// Count of jobs that panicked (the panic itself is contained).
+    panics: AtomicUsize,
+}
+
+/// A fixed-size thread pool executing boxed jobs FIFO.
+pub struct ThreadPool {
+    shared: Arc<Shared>,
+    workers: Vec<JoinHandle<()>>,
+    size: usize,
+}
+
+impl ThreadPool {
+    /// Spawns `size` worker threads (`size >= 1`).
+    pub fn new(size: usize) -> Self {
+        assert!(size >= 1, "thread pool needs at least one worker");
+        let shared = Arc::new(Shared {
+            queue: Mutex::new(VecDeque::new()),
+            cv: Condvar::new(),
+            inflight: AtomicUsize::new(0),
+            idle_cv: Condvar::new(),
+            idle_mx: Mutex::new(()),
+            shutdown: AtomicBool::new(false),
+            panics: AtomicUsize::new(0),
+        });
+        let workers = (0..size)
+            .map(|i| {
+                let sh = Arc::clone(&shared);
+                std::thread::Builder::new()
+                    .name(format!("memento-worker-{i}"))
+                    .spawn(move || worker_loop(sh))
+                    .expect("spawn worker")
+            })
+            .collect();
+        ThreadPool { shared, workers, size }
+    }
+
+    /// Number of worker threads.
+    pub fn size(&self) -> usize {
+        self.size
+    }
+
+    /// Submits a job. Panics in the job are contained and counted, not
+    /// propagated (callers that need the outcome should channel it out).
+    pub fn execute<F: FnOnce() + Send + 'static>(&self, f: F) {
+        self.shared.inflight.fetch_add(1, Ordering::SeqCst);
+        {
+            let mut q = self.shared.queue.lock().unwrap();
+            q.push_back(Box::new(f));
+        }
+        self.shared.cv.notify_one();
+    }
+
+    /// Blocks until every submitted job has finished.
+    pub fn join(&self) {
+        let mut guard = self.shared.idle_mx.lock().unwrap();
+        while self.shared.inflight.load(Ordering::SeqCst) != 0 {
+            guard = self.shared.idle_cv.wait(guard).unwrap();
+        }
+    }
+
+    /// Number of jobs currently queued or running.
+    pub fn inflight(&self) -> usize {
+        self.shared.inflight.load(Ordering::SeqCst)
+    }
+
+    /// Number of jobs that ended in a contained panic so far.
+    pub fn panic_count(&self) -> usize {
+        self.shared.panics.load(Ordering::SeqCst)
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        self.shared.shutdown.store(true, Ordering::SeqCst);
+        self.shared.cv.notify_all();
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+fn worker_loop(sh: Arc<Shared>) {
+    loop {
+        let job = {
+            let mut q = sh.queue.lock().unwrap();
+            loop {
+                if let Some(job) = q.pop_front() {
+                    break job;
+                }
+                if sh.shutdown.load(Ordering::SeqCst) {
+                    return;
+                }
+                q = sh.cv.wait(q).unwrap();
+            }
+        };
+        if catch_unwind(AssertUnwindSafe(job)).is_err() {
+            sh.panics.fetch_add(1, Ordering::SeqCst);
+        }
+        if sh.inflight.fetch_sub(1, Ordering::SeqCst) == 1 {
+            let _g = sh.idle_mx.lock().unwrap();
+            sh.idle_cv.notify_all();
+        }
+    }
+}
+
+/// Runs `items.len()` closures on a temporary pool of `workers` threads and
+/// returns their results in input order. Panicking closures yield `None`.
+pub fn scope_run<T, I, F>(workers: usize, items: Vec<I>, f: F) -> Vec<Option<T>>
+where
+    T: Send + 'static,
+    I: Send + 'static,
+    F: Fn(I) -> T + Send + Sync + 'static,
+{
+    let pool = ThreadPool::new(workers.max(1));
+    let n = items.len();
+    let results: Arc<Mutex<Vec<Option<T>>>> =
+        Arc::new(Mutex::new((0..n).map(|_| None).collect()));
+    let f = Arc::new(f);
+    for (i, item) in items.into_iter().enumerate() {
+        let results = Arc::clone(&results);
+        let f = Arc::clone(&f);
+        pool.execute(move || {
+            let out = f(item);
+            results.lock().unwrap()[i] = Some(out);
+        });
+    }
+    pool.join();
+    Arc::try_unwrap(results)
+        .unwrap_or_else(|_| panic!("pool joined but results still shared"))
+        .into_inner()
+        .unwrap()
+}
+
+/// Returns the number of logical CPUs (parsed from /proc; fallback 4).
+pub fn num_cpus() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn runs_all_jobs() {
+        let pool = ThreadPool::new(4);
+        let counter = Arc::new(AtomicUsize::new(0));
+        for _ in 0..100 {
+            let c = Arc::clone(&counter);
+            pool.execute(move || {
+                c.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        pool.join();
+        assert_eq!(counter.load(Ordering::SeqCst), 100);
+        assert_eq!(pool.inflight(), 0);
+    }
+
+    #[test]
+    fn join_on_empty_pool_returns() {
+        let pool = ThreadPool::new(2);
+        pool.join(); // must not hang
+    }
+
+    #[test]
+    fn panics_are_contained() {
+        let pool = ThreadPool::new(2);
+        let ok = Arc::new(AtomicUsize::new(0));
+        for i in 0..10 {
+            let ok = Arc::clone(&ok);
+            pool.execute(move || {
+                if i % 2 == 0 {
+                    panic!("boom {i}");
+                }
+                ok.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        pool.join();
+        assert_eq!(ok.load(Ordering::SeqCst), 5);
+        assert_eq!(pool.panic_count(), 5);
+    }
+
+    #[test]
+    fn actually_parallel() {
+        // With 4 workers, 4 jobs that each wait for the others to start
+        // must all be running at once or this deadlocks (bounded by timeout).
+        let pool = ThreadPool::new(4);
+        let barrier = Arc::new(std::sync::Barrier::new(4));
+        for _ in 0..4 {
+            let b = Arc::clone(&barrier);
+            pool.execute(move || {
+                b.wait();
+            });
+        }
+        pool.join();
+    }
+
+    #[test]
+    fn scope_run_preserves_order() {
+        let out = scope_run(3, (0..50).collect::<Vec<u64>>(), |i| i * 2);
+        let got: Vec<u64> = out.into_iter().map(|o| o.unwrap()).collect();
+        assert_eq!(got, (0..50).map(|i| i * 2).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn scope_run_panics_become_none() {
+        let out = scope_run(2, vec![1u64, 2, 3], |i| {
+            if i == 2 {
+                panic!("no");
+            }
+            i
+        });
+        assert_eq!(out[0], Some(1));
+        assert_eq!(out[1], None);
+        assert_eq!(out[2], Some(3));
+    }
+
+    #[test]
+    fn reuse_after_join() {
+        let pool = ThreadPool::new(2);
+        let sum = Arc::new(AtomicU64::new(0));
+        for round in 0..3u64 {
+            for i in 0..10u64 {
+                let s = Arc::clone(&sum);
+                pool.execute(move || {
+                    s.fetch_add(round * 10 + i, Ordering::SeqCst);
+                });
+            }
+            pool.join();
+        }
+        let expected: u64 = (0..30u64).sum();
+        assert_eq!(sum.load(Ordering::SeqCst), expected);
+    }
+}

@@ -1,0 +1,85 @@
+//! Timing helpers: a monotonic stopwatch and human-readable durations.
+
+use std::time::{Duration, Instant};
+
+/// A simple monotonic stopwatch.
+#[derive(Debug, Clone)]
+pub struct Stopwatch {
+    start: Instant,
+}
+
+impl Stopwatch {
+    pub fn start() -> Self {
+        Stopwatch { start: Instant::now() }
+    }
+
+    pub fn elapsed(&self) -> Duration {
+        self.start.elapsed()
+    }
+
+    pub fn elapsed_secs(&self) -> f64 {
+        self.elapsed().as_secs_f64()
+    }
+
+    pub fn elapsed_ms(&self) -> f64 {
+        self.elapsed().as_secs_f64() * 1e3
+    }
+
+    pub fn restart(&mut self) -> Duration {
+        let e = self.start.elapsed();
+        self.start = Instant::now();
+        e
+    }
+}
+
+/// Formats a duration compactly: `812ns`, `3.4µs`, `12.3ms`, `1.24s`, `2m03s`.
+pub fn fmt_duration(d: Duration) -> String {
+    let ns = d.as_nanos();
+    if ns < 1_000 {
+        format!("{ns}ns")
+    } else if ns < 1_000_000 {
+        format!("{:.1}µs", ns as f64 / 1e3)
+    } else if ns < 1_000_000_000 {
+        format!("{:.1}ms", ns as f64 / 1e6)
+    } else if ns < 60 * 1_000_000_000u128 {
+        format!("{:.2}s", ns as f64 / 1e9)
+    } else {
+        let secs = d.as_secs();
+        format!("{}m{:02}s", secs / 60, secs % 60)
+    }
+}
+
+/// Formats seconds (f64) with the same rules.
+pub fn fmt_secs(s: f64) -> String {
+    if !s.is_finite() || s < 0.0 {
+        return "?".to_string();
+    }
+    fmt_duration(Duration::from_secs_f64(s))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stopwatch_monotonic() {
+        let sw = Stopwatch::start();
+        std::thread::sleep(Duration::from_millis(5));
+        assert!(sw.elapsed_ms() >= 4.0);
+        let mut sw2 = Stopwatch::start();
+        std::thread::sleep(Duration::from_millis(2));
+        let lap = sw2.restart();
+        assert!(lap.as_millis() >= 1);
+        assert!(sw2.elapsed() < lap + Duration::from_millis(50));
+    }
+
+    #[test]
+    fn duration_formats() {
+        assert_eq!(fmt_duration(Duration::from_nanos(812)), "812ns");
+        assert_eq!(fmt_duration(Duration::from_micros(3)), "3.0µs");
+        assert_eq!(fmt_duration(Duration::from_millis(12)), "12.0ms");
+        assert_eq!(fmt_duration(Duration::from_secs(1)), "1.00s");
+        assert_eq!(fmt_duration(Duration::from_secs(123)), "2m03s");
+        assert_eq!(fmt_secs(f64::NAN), "?");
+    }
+}

@@ -1,0 +1,146 @@
+//! CLI integration: drives the built `memento` binary over real config
+//! files — expand counts (E1), run/resume, status, and report.
+
+use memento::util::fs::TempDir;
+use std::path::PathBuf;
+use std::process::Command;
+
+fn bin() -> PathBuf {
+    // target/debug|release/deps/<test> → target/<profile>/memento
+    let mut p = std::env::current_exe().unwrap();
+    p.pop();
+    if p.ends_with("deps") {
+        p.pop();
+    }
+    p.join("memento")
+}
+
+fn repo_config(name: &str) -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("configs").join(name)
+}
+
+fn run_cli(args: &[&str]) -> (String, String, bool) {
+    let out = Command::new(bin())
+        .args(args)
+        .output()
+        .expect("spawn memento binary");
+    (
+        String::from_utf8_lossy(&out.stdout).into_owned(),
+        String::from_utf8_lossy(&out.stderr).into_owned(),
+        out.status.success(),
+    )
+}
+
+#[test]
+fn expand_reports_paper_counts() {
+    let (stdout, stderr, ok) = run_cli(&[
+        "expand",
+        repo_config("paper_grid.json").to_str().unwrap(),
+    ]);
+    assert!(ok, "stderr: {stderr}");
+    assert!(stdout.contains("raw combinations : 54"), "{stdout}");
+    assert!(stdout.contains("excluded         : 9"), "{stdout}");
+    assert!(stdout.contains("included tasks   : 45"), "{stdout}");
+}
+
+#[test]
+fn expand_with_ids_prints_hashes() {
+    let (stdout, _, ok) = run_cli(&[
+        "expand",
+        repo_config("toy_grid.json").to_str().unwrap(),
+        "--ids",
+    ]);
+    assert!(ok);
+    // 12-hex-char short ids present
+    assert!(
+        stdout.lines().filter(|l| l.contains("dataset=toy")).count() >= 8,
+        "{stdout}"
+    );
+}
+
+#[test]
+fn run_then_resume_then_status_then_report() {
+    let td = TempDir::new("cli-run").unwrap();
+    let out_file = td.join("results.json");
+    let ckpt = td.join("run");
+    let cache = td.join("cache");
+
+    // run
+    let (stdout, stderr, ok) = run_cli(&[
+        "run",
+        repo_config("toy_grid.json").to_str().unwrap(),
+        "--workers",
+        "4",
+        "--quiet",
+        "--cache",
+        cache.to_str().unwrap(),
+        "--checkpoint",
+        ckpt.to_str().unwrap(),
+        "--out",
+        out_file.to_str().unwrap(),
+    ]);
+    assert!(ok, "stderr: {stderr}\nstdout: {stdout}");
+    assert!(stdout.contains("8 task(s): 8 succeeded"), "{stdout}");
+    assert!(out_file.exists());
+
+    // status
+    let (stdout, _, ok) = run_cli(&["status", "--checkpoint", ckpt.to_str().unwrap()]);
+    assert!(ok);
+    assert!(stdout.contains("8/8 completed (0 failed)"), "{stdout}");
+
+    // resume (everything restored)
+    let (stdout, stderr, ok) = run_cli(&[
+        "resume",
+        repo_config("toy_grid.json").to_str().unwrap(),
+        "--quiet",
+        "--checkpoint",
+        ckpt.to_str().unwrap(),
+    ]);
+    assert!(ok, "stderr: {stderr}");
+    assert!(stdout.contains("8 from cache"), "{stdout}");
+
+    // report
+    let (stdout, _, ok) = run_cli(&[
+        "report",
+        "--results",
+        out_file.to_str().unwrap(),
+        "--rows",
+        "model",
+        "--cols",
+        "preprocessing",
+    ]);
+    assert!(ok);
+    assert!(stdout.contains("model\\preprocessing"), "{stdout}");
+    assert!(stdout.contains("SVC"), "{stdout}");
+}
+
+#[test]
+fn bad_config_fails_cleanly() {
+    let td = TempDir::new("cli-bad").unwrap();
+    let bad = td.join("bad.json");
+    std::fs::write(&bad, r#"{"parameters": {"x": []}}"#).unwrap();
+    let (_, stderr, ok) = run_cli(&["expand", bad.to_str().unwrap()]);
+    assert!(!ok);
+    assert!(stderr.contains("empty domain"), "{stderr}");
+}
+
+#[test]
+fn unknown_command_and_help() {
+    let (_, stderr, ok) = run_cli(&["frobnicate"]);
+    assert!(!ok);
+    assert!(stderr.contains("unknown command"), "{stderr}");
+    let (stdout, _, ok) = run_cli(&["help"]);
+    assert!(ok);
+    assert!(stdout.contains("USAGE"), "{stdout}");
+}
+
+#[test]
+fn resume_without_checkpoint_flag_errors() {
+    let (_, stderr, ok) = run_cli(&[
+        "resume",
+        repo_config("toy_grid.json").to_str().unwrap(),
+        "--quiet",
+    ]);
+    assert!(!ok);
+    assert!(stderr.contains("--checkpoint"), "{stderr}");
+}

@@ -1,0 +1,217 @@
+//! Runtime integration: the full AOT bridge — JAX/Pallas-lowered HLO text →
+//! PJRT compile → execute from Rust — with real numerics checks.
+//!
+//! Requires `make artifacts` (the Makefile runs it before `cargo test`).
+
+use memento::ml::data::Dataset;
+use memento::ml::dataset::toy;
+use memento::ml::impute::{SimpleImputer, Transformer};
+use memento::ml::metrics::accuracy;
+use memento::ml::scale::StandardScaler;
+use memento::ml::split::train_test_indices;
+use memento::ml::tree::Classifier;
+use memento::runtime::artifact::{shared_store, ArtifactStore};
+use memento::runtime::mlp::{MlpModel, MlpParams};
+use memento::runtime::tensor::Tensor;
+use memento::util::rng::Rng;
+
+fn artifacts_available() -> bool {
+    ArtifactStore::default_dir().join("manifest.json").exists()
+}
+
+#[test]
+fn manifest_and_executables_load() {
+    if !artifacts_available() {
+        panic!("artifacts missing — run `make artifacts` before cargo test");
+    }
+    let store = shared_store().unwrap();
+    let mut names = store.names();
+    names.sort();
+    assert_eq!(names, vec!["mlp_predict", "mlp_train_step"]);
+    assert_eq!(store.meta.batch, 128);
+    assert_eq!(store.meta.features, 64);
+    assert_eq!(store.meta.classes, 10);
+    // compile both
+    store.executable("mlp_predict").unwrap();
+    store.executable("mlp_train_step").unwrap();
+    assert_eq!(store.compiled_count(), 2);
+    // compile is cached (same Arc)
+    let a = store.executable("mlp_predict").unwrap();
+    let b = store.executable("mlp_predict").unwrap();
+    assert!(std::sync::Arc::ptr_eq(&a, &b));
+}
+
+#[test]
+fn predict_executes_with_correct_shapes() {
+    let store = shared_store().unwrap();
+    let m = store.meta;
+    let exe = store.executable("mlp_predict").unwrap();
+    let w1 = Tensor::zeros(vec![m.features, m.hidden]);
+    let b1 = Tensor::zeros(vec![m.hidden]);
+    let w2 = Tensor::zeros(vec![m.hidden, m.classes]);
+    let b2 = Tensor::zeros(vec![m.classes]);
+    let x = Tensor::zeros(vec![m.batch, m.features]);
+    let mask = Tensor::new(vec![m.classes], {
+        let mut v = vec![0f32; m.classes];
+        v[0] = 1.0;
+        v[1] = 1.0;
+        v
+    });
+    let out = exe.run(&[&w1, &b1, &w2, &b2, &x, &mask]).unwrap();
+    assert_eq!(out.len(), 1);
+    assert_eq!(out[0].shape, vec![m.batch, m.classes]);
+    // masked logits: classes >= 2 get -1e9
+    for row in 0..m.batch {
+        assert_eq!(out[0].at2(row, 0), 0.0);
+        assert!(out[0].at2(row, 5) < -1e8);
+    }
+}
+
+#[test]
+fn train_step_loss_matches_masked_uniform_and_decreases() {
+    let store = shared_store().unwrap();
+    let m = store.meta;
+    let step = store.executable("mlp_train_step").unwrap();
+
+    // Random first layer (so gradients flow through the ReLU) but zero
+    // output layer → logits are exactly 0 → uniform over the 3 valid
+    // classes → first loss = ln 3 exactly.
+    let mut rng = Rng::new(42);
+    let he = (2.0 / m.features as f64).sqrt();
+    let w1_data: Vec<f32> = (0..m.features * m.hidden)
+        .map(|_| (rng.normal() * he) as f32)
+        .collect();
+    let mut w1 = Tensor::new(vec![m.features, m.hidden], w1_data);
+    let mut b1 = Tensor::zeros(vec![m.hidden]);
+    let mut w2 = Tensor::zeros(vec![m.hidden, m.classes]);
+    let mut b2 = Tensor::zeros(vec![m.classes]);
+
+    // Separable batch: class = sign structure on feature 0..2.
+    let mut x = vec![0f32; m.batch * m.features];
+    let mut y = vec![0f32; m.batch * m.classes];
+    for i in 0..m.batch {
+        let class = i % 3;
+        for f in 0..8 {
+            x[i * m.features + f] =
+                (if f == class { 3.0 } else { 0.0 }) + rng.normal() as f32 * 0.1;
+        }
+        y[i * m.classes + class] = 1.0;
+    }
+    let x = Tensor::new(vec![m.batch, m.features], x);
+    let y = Tensor::new(vec![m.batch, m.classes], y);
+    let mask = Tensor::new(vec![m.classes], {
+        let mut v = vec![0f32; m.classes];
+        v[..3].fill(1.0);
+        v
+    });
+    let lr = Tensor::scalar(0.5);
+
+    let mut losses = Vec::new();
+    for _ in 0..25 {
+        let out = step.run(&[&w1, &b1, &w2, &b2, &x, &y, &mask, &lr]).unwrap();
+        let mut it = out.into_iter();
+        w1 = it.next().unwrap();
+        b1 = it.next().unwrap();
+        w2 = it.next().unwrap();
+        b2 = it.next().unwrap();
+        losses.push(it.next().unwrap().data[0]);
+    }
+    let ln3 = 3f32.ln();
+    assert!(
+        (losses[0] - ln3).abs() < 1e-3,
+        "first loss {} != ln3 {}",
+        losses[0],
+        ln3
+    );
+    assert!(
+        losses[24] < losses[0] * 0.5,
+        "loss did not halve: {:?}",
+        &losses[..3]
+    );
+    assert!(losses.iter().all(|l| l.is_finite()));
+}
+
+#[test]
+fn mlp_classifier_end_to_end_on_toy_data() {
+    let store = shared_store().unwrap();
+    let mut ds = toy(3);
+    let mut imp = SimpleImputer::default();
+    imp.fit_transform(&mut ds);
+    let mut sc = StandardScaler::default();
+    sc.fit_transform(&mut ds);
+
+    let mut rng = Rng::new(7);
+    let (tr, te) = train_test_indices(&ds, 0.3, &mut rng);
+    let train = ds.subset(&tr);
+    let test = ds.subset(&te);
+
+    let mut mlp = MlpModel::new(store, MlpParams { epochs: 40, lr: 0.2 });
+    let history = mlp.fit_with_history(&train, &mut rng).unwrap();
+    assert!(history.len() == 40);
+    assert!(
+        history[39] < history[0],
+        "loss history not decreasing: {history:?}"
+    );
+    let acc = accuracy(&test.y, &mlp.predict(&test));
+    assert!(acc > 0.8, "MLP test accuracy {acc}");
+}
+
+#[test]
+fn mlp_rejects_too_many_classes() {
+    let store = shared_store().unwrap();
+    // 11 classes > artifact's 10
+    let n = 22;
+    let ds = Dataset::new(
+        "wide",
+        vec![0.0; n * 4],
+        n,
+        4,
+        (0..n).map(|i| i % 11).collect(),
+        11,
+    );
+    let mut mlp = MlpModel::new(store, MlpParams::default());
+    let err = mlp.fit_with_history(&ds, &mut Rng::new(0)).unwrap_err();
+    assert!(err.to_string().contains("classes"), "{err}");
+}
+
+#[test]
+fn mlp_handles_batch_remainder_and_small_datasets() {
+    let store = shared_store().unwrap();
+    // 50 rows < batch 128: single padded batch.
+    let mut ds = toy(9);
+    let rows: Vec<usize> = (0..50).collect();
+    let mut small = ds.subset(&rows);
+    SimpleImputer::default().fit_transform(&mut small);
+    let mut mlp = MlpModel::new(store, MlpParams { epochs: 10, lr: 0.2 });
+    let mut rng = Rng::new(1);
+    mlp.fit_with_history(&small, &mut rng).unwrap();
+    let preds = mlp.try_predict(&small).unwrap();
+    assert_eq!(preds.len(), 50);
+    assert!(preds.iter().all(|&p| p < small.n_classes), "mask honored");
+    let _ = &mut ds;
+}
+
+#[test]
+fn concurrent_mlp_tasks_share_the_store() {
+    // The §3 grid runs MLP tasks on several workers at once; the shared
+    // executable must be safe under concurrent use.
+    let store = shared_store().unwrap();
+    let handles: Vec<_> = (0..4)
+        .map(|t| {
+            let store = std::sync::Arc::clone(&store);
+            std::thread::spawn(move || {
+                let mut ds = toy(100 + t);
+                SimpleImputer::default().fit_transform(&mut ds);
+                let mut mlp = MlpModel::new(store, MlpParams { epochs: 5, lr: 0.1 });
+                let mut rng = Rng::new(t);
+                mlp.fit_with_history(&ds, &mut rng).unwrap();
+                let preds = mlp.try_predict(&ds).unwrap();
+                accuracy(&ds.y, &preds)
+            })
+        })
+        .collect();
+    for h in handles {
+        let acc = h.join().unwrap();
+        assert!(acc > 0.4, "concurrent MLP accuracy {acc}");
+    }
+}
