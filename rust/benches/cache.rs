@@ -2,9 +2,12 @@
 //!
 //! Headline series: cold run vs warm re-run of the toy ML grid (the §2
 //! claim is that the warm path costs ~nothing). Plus put/get micro-costs
-//! and hit-rate accounting.
+//! and the two-tier split: a warm `get` served by the in-memory tier vs
+//! the same entry forced back to the disk tier (`drop_memory`), which is
+//! the before/after evidence for `BENCH_sched_cache.json` — the old cache
+//! paid the disk-tier cost on *every* hit.
 
-use memento::bench::{black_box, Suite};
+use memento::bench::{black_box, sched_cache_trajectory_path, Suite};
 use memento::config::value::pv_int;
 use memento::coordinator::cache::ResultCache;
 use memento::coordinator::memento::Memento;
@@ -17,6 +20,7 @@ use std::sync::Arc;
 fn main() {
     let mut suite = Suite::new("E3 — result cache");
     let td = TempDir::new("bench-cache").unwrap();
+    let mut extras: Vec<(String, Json)> = Vec::new();
 
     // --- micro: put/get ----------------------------------------------------
     let cache = ResultCache::open(td.join("micro")).unwrap();
@@ -42,12 +46,55 @@ fn main() {
         durable.put(&ids[i % 1000], &specs[i % 1000], &value).unwrap();
     });
     suite.note("§Perf-L3: fsync cost isolated");
-    suite.bench("cache.get (hit)", 100, 1000, |i| {
-        black_box(cache.get(&ids[i % 1000]).unwrap());
-    });
+
+    // Warm hit: memory tier, zero filesystem I/O (asserted via stats).
+    let (mem0, disk0) = cache.stats().tier_snapshot();
+    let warm_hit = suite
+        .bench("cache.get (hit, memory tier)", 100, 1000, |i| {
+            black_box(cache.get(&ids[i % 1000]).unwrap());
+        })
+        .clone();
+    let (mem1, disk1) = cache.stats().tier_snapshot();
+    assert_eq!(disk1, disk0, "warm hits must not read disk");
+    assert_eq!(mem1 - mem0, 1100, "warmup + timed iters all memory-tier");
+    suite.note(format!("{:.0}ns/get, 0 disk reads", warm_hit.mean * 1e9));
+
+    // Disk-tier hit: demote residency before each batch of gets, so every
+    // get re-reads and re-parses its on-disk entry (the pre-two-tier cost
+    // of *every* hit).
+    let disk_hit = suite
+        .bench("cache.get (hit, disk tier)", 1, 10, |_| {
+            cache.drop_memory();
+            for i in 0..1000 {
+                black_box(cache.get(&ids[i]).unwrap());
+            }
+        })
+        .clone();
+    let disk_per_get = disk_hit.mean / 1000.0;
+    suite.note(format!("{:.0}ns/get incl. read+parse", disk_per_get * 1e9));
+    let tier_ratio = disk_per_get / warm_hit.mean;
+    extras.push((
+        "warm_get".to_string(),
+        Json::obj(vec![
+            ("memory_tier_ns", Json::Num(warm_hit.mean * 1e9)),
+            ("disk_tier_ns", Json::Num(disk_per_get * 1e9)),
+            ("ratio", Json::Num(tier_ratio)),
+        ]),
+    ));
+    println!(
+        "E3 tier headline: warm get {:.0}ns (memory) vs {:.0}ns (disk) → {tier_ratio:.1}x",
+        warm_hit.mean * 1e9,
+        disk_per_get * 1e9,
+    );
+
     let missing = TaskSpec { params: vec![("i".into(), pv_int(-1))], index: 0 }.id("v1");
     suite.bench("cache.get (miss)", 100, 1000, |_| {
         black_box(cache.get(&missing));
+    });
+
+    // len() is now O(1) over the index — previously a full directory scan.
+    suite.bench("cache.len (indexed)", 100, 1000, |_| {
+        black_box(cache.len());
     });
 
     // --- headline: cold vs warm grid run ------------------------------------
@@ -95,6 +142,14 @@ fn main() {
         "cold/warm = {:.1}x; hit-rate 100%",
         cold.mean / warm.mean
     ));
+    extras.push((
+        "grid_cold_vs_warm".to_string(),
+        Json::obj(vec![
+            ("cold_s", Json::Num(cold.mean)),
+            ("warm_s", Json::Num(warm.mean)),
+            ("speedup", Json::Num(cold.mean / warm.mean)),
+        ]),
+    ));
 
     println!(
         "\nE3 headline: cold {:.3}s vs warm {:.4}s → speedup {:.1}x (paper claim: warm ≈ free)",
@@ -102,5 +157,6 @@ fn main() {
         warm.mean,
         cold.mean / warm.mean
     );
+    suite.write_trajectory(&sched_cache_trajectory_path(), extras);
     suite.finish();
 }

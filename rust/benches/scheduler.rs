@@ -1,15 +1,35 @@
-//! Bench E6: scheduling overhead.
+//! Bench E6: scheduling overhead — before/after the work-stealing rewrite.
 //!
 //! The paper's value proposition assumes the orchestrator itself is free:
 //! per-task overhead (expansion + hashing + dispatch + collection) must be
-//! orders of magnitude below any real experiment. Measures end-to-end runs
-//! of no-op experiment functions at 10²–10⁴ tasks across worker counts.
+//! orders of magnitude below any real experiment.
+//!
+//! Two layers of measurement:
+//!
+//! 1. **Scheduler-level A/B** — the retained `run_all_unbatched` reference
+//!    (one boxed closure + Arc clones + channel send per task) vs the
+//!    chunked `run_all`, on identical no-op specs. Both run on the current
+//!    work-stealing pool, so the delta isolates per-task dispatch overhead
+//!    (boxing/channel vs chunking); the old single-mutex queue's
+//!    contention was removed for both paths and is *not* part of this A/B
+//!    — recorded speedups are a lower bound on the improvement over the
+//!    seed design. The per-task delta is the headline number recorded in
+//!    `BENCH_sched_cache.json`.
+//! 2. **End-to-end** — full `Memento::run` of no-op experiment functions at
+//!    10²–10⁴ tasks across worker counts (hashing, context, metrics all
+//!    included), plus a run with the persistence pipeline on.
 
-use memento::bench::Suite;
+use memento::bench::{sched_cache_trajectory_path, Suite};
 use memento::config::matrix::ConfigMatrix;
 use memento::config::value::pv_int;
 use memento::coordinator::memento::Memento;
+use memento::coordinator::results::{TaskOutcome, TaskStatus};
+use memento::coordinator::scheduler::{
+    run_all, run_all_unbatched, SchedulerOptions,
+};
+use memento::coordinator::task::TaskSpec;
 use memento::util::json::Json;
+use std::sync::Arc;
 
 fn flat_matrix(n: usize) -> ConfigMatrix {
     ConfigMatrix::builder()
@@ -18,9 +38,87 @@ fn flat_matrix(n: usize) -> ConfigMatrix {
         .unwrap()
 }
 
+fn noop_specs(n: usize) -> Vec<TaskSpec> {
+    (0..n)
+        .map(|i| TaskSpec {
+            params: vec![("i".to_string(), pv_int(i as i64))],
+            index: i,
+        })
+        .collect()
+}
+
+fn noop_job() -> Arc<dyn Fn(&TaskSpec) -> TaskOutcome + Send + Sync> {
+    Arc::new(|spec: &TaskSpec| TaskOutcome {
+        spec: spec.clone(),
+        id: memento::coordinator::task::TaskId(String::new()),
+        status: TaskStatus::Success,
+        value: None,
+        failure: None,
+        duration_secs: 0.0,
+        from_cache: false,
+        attempts: 1,
+    })
+}
+
 fn main() {
     let mut suite = Suite::new("E6 — scheduler overhead (no-op tasks)");
+    let mut extras: Vec<(String, Json)> = Vec::new();
 
+    // --- scheduler-level A/B: per-task dispatch cost ----------------------
+    let ab_n = 10_000usize;
+    for &workers in &[1usize, 4, 8] {
+        let job = noop_job();
+        let opts = SchedulerOptions { workers, fail_fast: false };
+
+        let job2 = Arc::clone(&job);
+        let before = suite
+            .bench_with_setup(
+                format!("dispatch {ab_n} per-task-boxed, {workers}w"),
+                1,
+                5,
+                || noop_specs(ab_n),
+                |specs| {
+                    let r = run_all_unbatched(specs, &opts, Arc::clone(&job2), None, None);
+                    assert_eq!(r.outcomes.len(), ab_n);
+                },
+            )
+            .clone();
+        suite.note(format!("{:.2}µs/task", before.mean / ab_n as f64 * 1e6));
+
+        let job3 = Arc::clone(&job);
+        let after = suite
+            .bench_with_setup(
+                format!("dispatch {ab_n} chunked-stealing, {workers}w"),
+                1,
+                5,
+                || noop_specs(ab_n),
+                |specs| {
+                    let r = run_all(specs, &opts, Arc::clone(&job3), None);
+                    assert_eq!(r.outcomes.len(), ab_n);
+                },
+            )
+            .clone();
+        let speedup = before.mean / after.mean;
+        suite.note(format!(
+            "{:.2}µs/task, {speedup:.1}x vs per-task",
+            after.mean / ab_n as f64 * 1e6
+        ));
+        extras.push((
+            format!("dispatch_{workers}w_{ab_n}tasks"),
+            Json::obj(vec![
+                ("per_task_boxed_us", Json::Num(before.mean / ab_n as f64 * 1e6)),
+                ("chunked_us", Json::Num(after.mean / ab_n as f64 * 1e6)),
+                ("speedup", Json::Num(speedup)),
+            ]),
+        ));
+        println!(
+            "E6 headline ({workers}w): per-task dispatch {:.2}µs → {:.2}µs ({speedup:.1}x)",
+            before.mean / ab_n as f64 * 1e6,
+            after.mean / ab_n as f64 * 1e6,
+        );
+    }
+
+    // --- end-to-end: full Memento pipeline --------------------------------
     for &n in &[100usize, 1_000, 10_000] {
         let matrix = flat_matrix(n);
         for &workers in &[1usize, 4, 8] {
@@ -70,5 +168,6 @@ fn main() {
         .clone();
     suite.note(format!("{:.1}µs/task incl. persistence", stats.mean / 1e3 * 1e6));
 
+    suite.write_trajectory(&sched_cache_trajectory_path(), extras);
     suite.finish();
 }

@@ -7,7 +7,9 @@
 //! intentionally plain text so `cargo bench | tee bench_output.txt`
 //! reproduces the EXPERIMENTS.md tables verbatim.
 
+use crate::util::json::Json;
 use crate::util::time::fmt_secs;
+use std::path::Path;
 use std::time::Instant;
 
 /// Statistics over per-iteration timings (seconds).
@@ -176,6 +178,74 @@ impl Suite {
     pub fn rows(&self) -> &[Row] {
         &self.rows
     }
+
+    /// Appends this suite's results (plus free-form derived `extras`) to a
+    /// JSON trajectory file, creating it if absent. The file accumulates
+    /// one entry per bench invocation so perf history is diffable across
+    /// PRs (`BENCH_sched_cache.json` at the repo root is the first such
+    /// trajectory). Unreadable/corrupt files are replaced with a fresh
+    /// skeleton rather than erroring — a bench must never fail on
+    /// bookkeeping.
+    pub fn write_trajectory(&self, path: &Path, extras: Vec<(String, Json)>) {
+        let mut doc = std::fs::read_to_string(path)
+            .ok()
+            .and_then(|t| crate::util::json::parse(&t).ok())
+            .filter(|j| j.get("runs").and_then(|r| r.as_arr()).is_some())
+            .unwrap_or_else(|| {
+                Json::obj(vec![
+                    ("schema", Json::str("memento-bench-trajectory/v1")),
+                    ("runs", Json::Arr(Vec::new())),
+                ])
+            });
+
+        let rows: Vec<Json> = self
+            .rows
+            .iter()
+            .map(|r| {
+                Json::obj(vec![
+                    ("name", Json::str(r.name.clone())),
+                    ("mean_s", Json::Num(r.stats.mean)),
+                    ("p50_s", Json::Num(r.stats.p50)),
+                    ("p95_s", Json::Num(r.stats.p95)),
+                    ("min_s", Json::Num(r.stats.min)),
+                    ("iters", Json::int(r.stats.iters as i64)),
+                    ("note", Json::str(r.note.clone())),
+                ])
+            })
+            .collect();
+        let unix_secs = std::time::SystemTime::now()
+            .duration_since(std::time::UNIX_EPOCH)
+            .map(|d| d.as_secs())
+            .unwrap_or(0);
+        let entry = Json::obj(vec![
+            ("suite", Json::str(self.title.clone())),
+            ("unix_secs", Json::int(unix_secs as i64)),
+            ("rows", Json::Arr(rows)),
+            (
+                "extras",
+                Json::Obj(extras.into_iter().collect()),
+            ),
+        ]);
+        if let Json::Obj(map) = &mut doc {
+            if let Some(Json::Arr(runs)) = map.get_mut("runs") {
+                runs.push(entry);
+            }
+        }
+        if let Err(e) = crate::util::fs::atomic_write(path, doc.pretty().as_bytes()) {
+            eprintln!("bench: could not write trajectory {}: {e}", path.display());
+        } else {
+            println!("bench: trajectory appended to {}", path.display());
+        }
+    }
+}
+
+/// Resolves the shared scheduler/cache bench trajectory file: the
+/// `MEMENTO_BENCH_OUT` env var, or `../BENCH_sched_cache.json` (benches run
+/// with the package root `rust/` as cwd, the file lives at the repo root).
+pub fn sched_cache_trajectory_path() -> std::path::PathBuf {
+    std::env::var("MEMENTO_BENCH_OUT")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(|_| std::path::PathBuf::from("../BENCH_sched_cache.json"))
 }
 
 fn truncate(s: &str, n: usize) -> String {
@@ -250,5 +320,34 @@ mod tests {
     fn throughput_sane() {
         let s = Stats::from_samples(vec![0.001; 10]);
         assert!((s.throughput() - 1000.0).abs() < 1.0);
+    }
+
+    #[test]
+    fn trajectory_appends_and_survives_corruption() {
+        let td = crate::util::fs::TempDir::new("bench-traj").unwrap();
+        let path = td.join("traj.json");
+        let mut suite = Suite::new("traj-test");
+        suite.bench("noop", 0, 3, |_| {});
+        suite.write_trajectory(&path, vec![("k".to_string(), Json::int(7))]);
+        suite.write_trajectory(&path, Vec::new());
+        let doc = crate::util::json::parse(
+            &std::fs::read_to_string(&path).unwrap(),
+        )
+        .unwrap();
+        let runs = doc.get("runs").unwrap().as_arr().unwrap();
+        assert_eq!(runs.len(), 2);
+        assert_eq!(
+            runs[0].get("extras").unwrap().get("k").unwrap().as_i64(),
+            Some(7)
+        );
+        assert_eq!(runs[0].get("rows").unwrap().as_arr().unwrap().len(), 1);
+        // Corrupt file → fresh skeleton, no panic.
+        crate::util::fs::atomic_write(&path, b"not json").unwrap();
+        suite.write_trajectory(&path, Vec::new());
+        let doc = crate::util::json::parse(
+            &std::fs::read_to_string(&path).unwrap(),
+        )
+        .unwrap();
+        assert_eq!(doc.get("runs").unwrap().as_arr().unwrap().len(), 1);
     }
 }

@@ -1,20 +1,66 @@
-//! Content-addressed result cache.
+//! Content-addressed result cache — **two-tier**: a sharded in-memory
+//! index over the existing atomic on-disk store.
 //!
 //! "To avoid running duplicate experiments, we specify to restore
 //! checkpoints if available" (§3). The cache maps a [`TaskId`] (hash of the
-//! parameter assignment + experiment version) to the task's result value on
-//! disk: one JSON file per entry under `<dir>/<id>.json`, written atomically.
+//! parameter assignment + experiment version) to the task's result value.
 //!
-//! Corruption tolerance: an unreadable/unparsable entry behaves as a miss
-//! (and is counted), never as an error — a half-written file from a crash
-//! must not wedge the rerun whose whole purpose is to recover from that
-//! crash.
+//! # Tiers
+//!
+//! - **Memory** — `SHARDS` mutex-guarded hash maps keyed by id. A warm
+//!   `get` clones the value out of the map and never touches the
+//!   filesystem; `len`/`is_empty`/`contains` are O(1) map operations
+//!   instead of a directory scan per call. Sharding (by a hash of the id)
+//!   keeps worker threads on different locks.
+//! - **Disk** — one JSON file per entry under `<dir>/<id>.json`, written
+//!   atomically, exactly as before. `put` is write-through (disk first,
+//!   then memory), so crash behaviour is unchanged: the disk tier remains
+//!   the source of truth and the memory tier is a cache of it.
+//!
+//! Opening a cache over a pre-existing directory scans it **once** and
+//! indexes every entry as *present-on-disk-but-not-loaded*; the first `get`
+//! of such an entry reads and promotes it. Entries written behind the
+//! cache's back (another process, tests poking files in) are still found —
+//! an id missing from the index falls through to a disk probe — but they
+//! are never indexed or promoted by reads (a read racing `invalidate` must
+//! not resurrect an entry), so they stay on the disk path until the cache
+//! is reopened.
+//!
+//! Corruption tolerance is unchanged: an unreadable/unparsable entry
+//! behaves as a miss (and is counted), never as an error — a half-written
+//! file from a crash must not wedge the rerun whose whole purpose is to
+//! recover from that crash.
 
 use crate::coordinator::task::{TaskId, TaskSpec};
 use crate::util::fs::atomic_write;
 use crate::util::json::{parse, Json};
+use std::collections::{HashMap, VecDeque};
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+/// Number of independent memory-tier shards (power of two, small enough
+/// that an idle cache costs nothing, large enough that 8–32 workers rarely
+/// collide on a lock).
+const SHARDS: usize = 16;
+
+/// Default memory-tier budget per shard (16 MiB × 16 shards = 256 MiB
+/// total). Experiment results are usually small metric objects, so this
+/// keeps whole sweeps resident; runs with multi-MB results degrade
+/// gracefully to the disk tier instead of growing without bound. Tune with
+/// [`ResultCache::with_memory_budget`].
+const DEFAULT_MEM_BUDGET_PER_SHARD: usize = 16 << 20;
+
+/// Memory-tier slot for one id.
+enum Slot {
+    /// Value resident in memory (warm hits never touch disk); the `usize`
+    /// is the serialized entry size used for budget accounting.
+    Loaded(Json, usize),
+    /// Entry known to exist on disk but not read yet (pre-existing dir,
+    /// demoted under memory pressure, or too large to keep resident).
+    /// Counts toward `len()`.
+    OnDisk,
+}
 
 /// Hit/miss/corruption counters (shared across worker threads).
 #[derive(Debug, Default)]
@@ -23,6 +69,10 @@ pub struct CacheStats {
     pub misses: AtomicU64,
     pub writes: AtomicU64,
     pub corrupt: AtomicU64,
+    /// Hits served from the memory tier (no filesystem I/O at all).
+    pub mem_hits: AtomicU64,
+    /// Hits that had to read + parse the on-disk entry.
+    pub disk_hits: AtomicU64,
 }
 
 impl CacheStats {
@@ -44,9 +94,33 @@ impl CacheStats {
             self.corrupt.load(Ordering::Relaxed),
         )
     }
+
+    /// `(mem_hits, disk_hits)` — how warm the memory tier is.
+    pub fn tier_snapshot(&self) -> (u64, u64) {
+        (
+            self.mem_hits.load(Ordering::Relaxed),
+            self.disk_hits.load(Ordering::Relaxed),
+        )
+    }
 }
 
-/// On-disk result cache. Thread-safe: all methods take `&self`.
+/// One memory-tier shard: the slot map plus O(1) residency accounting and
+/// an insertion-ordered eviction queue, so neither the budget check nor
+/// victim selection ever scans the map.
+#[derive(Default)]
+struct Shard {
+    map: HashMap<String, Slot>,
+    /// Resident keys in insertion (≈ FIFO) order. Entries go stale when a
+    /// key is demoted/invalidated/re-inserted; eviction skips stale heads
+    /// lazily and the queue is compacted when it outgrows the residents.
+    eviction_queue: VecDeque<String>,
+    /// Number of `Slot::Loaded` entries in `map`.
+    resident: usize,
+    /// Sum of the serialized sizes of `Slot::Loaded` entries.
+    resident_bytes: usize,
+}
+
+/// Two-tier result cache. Thread-safe: all methods take `&self`.
 pub struct ResultCache {
     dir: PathBuf,
     stats: CacheStats,
@@ -55,19 +129,64 @@ pub struct ResultCache {
     /// corruption — and skipping the fsync makes `put` ~5-10× cheaper
     /// (see EXPERIMENTS.md §Perf-L3). Opt in via [`ResultCache::durable`].
     fsync: bool,
+    /// Memory tier: sharded id → slot maps.
+    shards: Vec<Mutex<Shard>>,
+    /// Byte budget per shard for resident values; exceeding it demotes the
+    /// oldest residents to [`Slot::OnDisk`] (safe: disk is the source of
+    /// truth), and a single value larger than the whole shard budget is
+    /// never kept resident at all.
+    mem_budget_per_shard: usize,
+}
+
+fn shard_of(key: &str) -> usize {
+    // FNV-1a; ids are uniform SHA-256 hex but this also handles any key.
+    let mut h = 0xcbf29ce484222325u64;
+    for b in key.bytes() {
+        h = (h ^ b as u64).wrapping_mul(0x100000001b3);
+    }
+    (h as usize) % SHARDS
 }
 
 impl ResultCache {
-    /// Opens (creating if needed) a cache directory.
+    /// Opens (creating if needed) a cache directory. Pre-existing entries
+    /// are indexed (one directory scan, ever) but not loaded into memory
+    /// until first touched.
     pub fn open(dir: impl Into<PathBuf>) -> std::io::Result<ResultCache> {
         let dir = dir.into();
         std::fs::create_dir_all(&dir)?;
-        Ok(ResultCache { dir, stats: CacheStats::default(), fsync: false })
+        let shards: Vec<Mutex<Shard>> =
+            (0..SHARDS).map(|_| Mutex::new(Shard::default())).collect();
+        for path in crate::util::fs::list_files_with_ext(&dir, "json")? {
+            if let Some(stem) = path.file_stem().and_then(|s| s.to_str()) {
+                shards[shard_of(stem)]
+                    .lock()
+                    .unwrap()
+                    .map
+                    .insert(stem.to_string(), Slot::OnDisk);
+            }
+        }
+        Ok(ResultCache {
+            dir,
+            stats: CacheStats::default(),
+            fsync: false,
+            shards,
+            mem_budget_per_shard: DEFAULT_MEM_BUDGET_PER_SHARD,
+        })
     }
 
     /// Enables fsync-per-entry durability.
     pub fn durable(mut self, yes: bool) -> Self {
         self.fsync = yes;
+        self
+    }
+
+    /// Bounds the memory tier to ~`total_bytes` of resident serialized
+    /// values (split across shards; default 256 MiB). Excess entries
+    /// demote to the disk tier oldest-first — they are never lost. Lower
+    /// this for runs whose result values are large, raise it to keep a
+    /// bigger working set warm.
+    pub fn with_memory_budget(mut self, total_bytes: usize) -> Self {
+        self.mem_budget_per_shard = (total_bytes / SHARDS).max(1);
         self
     }
 
@@ -83,12 +202,33 @@ impl ResultCache {
         self.dir.join(format!("{id}.json"))
     }
 
-    /// Looks up a cached value. Any read/parse problem counts as a miss.
+    /// Looks up a cached value. Warm entries are served from the memory
+    /// tier without any filesystem access; cold-but-indexed entries read
+    /// the disk tier once and promote. Any read/parse problem counts as a
+    /// miss.
     pub fn get(&self, id: &TaskId) -> Option<Json> {
+        let shard = &self.shards[shard_of(&id.0)];
+        {
+            let sh = shard.lock().unwrap();
+            if let Some(Slot::Loaded(v, _)) = sh.map.get(&id.0) {
+                self.stats.hits.fetch_add(1, Ordering::Relaxed);
+                self.stats.mem_hits.fetch_add(1, Ordering::Relaxed);
+                return Some(v.clone());
+            }
+        }
+        // Cold path: disk tier. Read outside the shard lock so a slow disk
+        // never blocks warm hits on the same shard.
         let path = self.path_of(id);
         let text = match std::fs::read_to_string(&path) {
             Ok(t) => t,
             Err(_) => {
+                // Entry gone from disk: drop a stale OnDisk marker if any
+                // so len() converges (a Loaded entry re-inserted by a
+                // concurrent put stays).
+                let mut sh = shard.lock().unwrap();
+                if matches!(sh.map.get(&id.0), Some(Slot::OnDisk)) {
+                    sh.map.remove(&id.0);
+                }
                 self.stats.misses.fetch_add(1, Ordering::Relaxed);
                 return None;
             }
@@ -97,6 +237,8 @@ impl ResultCache {
             Ok(doc) => match doc.get("value") {
                 Some(v) => {
                     self.stats.hits.fetch_add(1, Ordering::Relaxed);
+                    self.stats.disk_hits.fetch_add(1, Ordering::Relaxed);
+                    self.promote_if_on_disk(&id.0, v.clone(), text.len());
                     Some(v.clone())
                 }
                 None => {
@@ -113,13 +255,92 @@ impl ResultCache {
         }
     }
 
-    /// True if an entry exists on disk (without counting a hit/miss).
+    /// Inserts a resident value into a locked shard, then demotes
+    /// oldest-first until the shard is back under its byte budget. All
+    /// bookkeeping is O(1) amortized: the budget check reads a counter and
+    /// victims pop off the eviction queue (skipping stale entries lazily,
+    /// with periodic compaction bounding the queue).
+    fn insert_loaded_locked(&self, sh: &mut Shard, key: &str, value: Json, bytes: usize) {
+        // Retire accounting for a value being replaced in place.
+        if let Some(Slot::Loaded(_, old)) = sh.map.get(key) {
+            sh.resident -= 1;
+            sh.resident_bytes -= *old;
+        }
+        if bytes > self.mem_budget_per_shard {
+            // Too large to ever keep resident: index it, serve from disk.
+            sh.map.insert(key.to_string(), Slot::OnDisk);
+            return;
+        }
+        sh.map.insert(key.to_string(), Slot::Loaded(value, bytes));
+        sh.resident += 1;
+        sh.resident_bytes += bytes;
+        sh.eviction_queue.push_back(key.to_string());
+        // The just-inserted key sits at the back and fits the budget alone,
+        // so this loop always terminates before demoting it.
+        while sh.resident_bytes > self.mem_budget_per_shard {
+            let Some(victim) = sh.eviction_queue.pop_front() else { break };
+            let victim_bytes = match sh.map.get(&victim) {
+                Some(Slot::Loaded(_, b)) => *b,
+                _ => continue, // stale queue entry (demoted/invalidated)
+            };
+            sh.map.insert(victim, Slot::OnDisk);
+            sh.resident -= 1;
+            sh.resident_bytes -= victim_bytes;
+        }
+        // Compact the queue (drop demoted keys, dedup re-inserted ones to
+        // their newest position) once stale entries dominate; leaves
+        // exactly one entry per resident, amortized O(1) per insert.
+        if sh.eviction_queue.len() > 4 * sh.resident + 64 {
+            let mut seen = std::collections::HashSet::new();
+            let mut kept: VecDeque<String> = VecDeque::with_capacity(sh.resident);
+            while let Some(k) = sh.eviction_queue.pop_back() {
+                if matches!(sh.map.get(&k), Some(Slot::Loaded(_, _)))
+                    && seen.insert(k.clone())
+                {
+                    kept.push_front(k);
+                }
+            }
+            sh.eviction_queue = kept;
+        }
+    }
+
+    /// Write path: unconditionally (re)loads the entry.
+    fn insert_loaded(&self, key: &str, value: Json, bytes: usize) {
+        let mut sh = self.shards[shard_of(key)].lock().unwrap();
+        self.insert_loaded_locked(&mut sh, key, value, bytes);
+    }
+
+    /// Read-path promotion. Only upgrades a still-indexed [`Slot::OnDisk`]
+    /// entry: if a concurrent `put` already loaded a *newer* value, or a
+    /// concurrent `invalidate` removed the entry, the disk read this
+    /// promotion came from is stale and must not overwrite the index —
+    /// otherwise the memory tier would serve the stale value forever.
+    fn promote_if_on_disk(&self, key: &str, value: Json, bytes: usize) {
+        let mut sh = self.shards[shard_of(key)].lock().unwrap();
+        if matches!(sh.map.get(key), Some(Slot::OnDisk)) {
+            self.insert_loaded_locked(&mut sh, key, value, bytes);
+        }
+    }
+
+    /// True if an entry exists (without counting a hit/miss). O(1) for
+    /// indexed entries; falls back to a read-only disk probe for ids
+    /// written behind the cache's back (not indexed here — a probe racing
+    /// `invalidate` must not resurrect the entry).
     pub fn contains(&self, id: &TaskId) -> bool {
+        if self.shards[shard_of(&id.0)]
+            .lock()
+            .unwrap()
+            .map
+            .contains_key(&id.0)
+        {
+            return true;
+        }
         self.path_of(id).exists()
     }
 
     /// Stores a value with its parameter context (the context makes cache
-    /// files self-describing for post-hoc inspection).
+    /// files self-describing for post-hoc inspection). Write-through: the
+    /// disk entry lands first, then the memory tier picks it up.
     pub fn put(&self, id: &TaskId, spec: &TaskSpec, value: &Json) -> std::io::Result<()> {
         let doc = Json::obj(vec![
             ("id", Json::str(id.0.clone())),
@@ -132,31 +353,70 @@ impl ResultCache {
         } else {
             crate::util::fs::atomic_write_nosync(&self.path_of(id), bytes.as_bytes())?;
         }
+        self.insert_loaded(&id.0, value.clone(), bytes.len());
         self.stats.writes.fetch_add(1, Ordering::Relaxed);
         Ok(())
     }
 
-    /// Removes a single entry (used when a task's code version is known
-    /// stale); missing entries are fine.
+    /// Removes a single entry from both tiers (used when a task's code
+    /// version is known stale); missing entries are fine.
     pub fn invalidate(&self, id: &TaskId) {
         let _ = std::fs::remove_file(self.path_of(id));
+        let mut sh = self.shards[shard_of(&id.0)].lock().unwrap();
+        if let Some(Slot::Loaded(_, b)) = sh.map.remove(&id.0) {
+            sh.resident -= 1;
+            sh.resident_bytes -= b;
+        }
     }
 
-    /// Number of entries currently on disk.
+    /// Number of entries in the cache. O(1) over the in-memory index — no
+    /// directory listing (the index covers pre-existing entries via the
+    /// one-time scan in [`ResultCache::open`]).
     pub fn len(&self) -> usize {
-        crate::util::fs::list_files_with_ext(&self.dir, "json")
-            .map(|v| v.len())
-            .unwrap_or(0)
+        self.shards.iter().map(|s| s.lock().unwrap().map.len()).sum()
     }
 
     pub fn is_empty(&self) -> bool {
-        self.len() == 0
+        self.shards.iter().all(|s| s.lock().unwrap().map.is_empty())
     }
 
-    /// Deletes every entry.
+    /// Entries currently resident in the memory tier (diagnostics).
+    pub fn resident_len(&self) -> usize {
+        self.shards.iter().map(|s| s.lock().unwrap().resident).sum()
+    }
+
+    /// Serialized bytes currently resident in the memory tier.
+    pub fn resident_bytes(&self) -> usize {
+        self.shards.iter().map(|s| s.lock().unwrap().resident_bytes).sum()
+    }
+
+    /// Demotes every resident value to the disk tier, releasing the memory
+    /// without losing entries (they reload on next `get`).
+    pub fn drop_memory(&self) {
+        for shard in &self.shards {
+            let mut sh = shard.lock().unwrap();
+            for slot in sh.map.values_mut() {
+                if matches!(slot, Slot::Loaded(_, _)) {
+                    *slot = Slot::OnDisk;
+                }
+            }
+            sh.eviction_queue.clear();
+            sh.resident = 0;
+            sh.resident_bytes = 0;
+        }
+    }
+
+    /// Deletes every entry from both tiers.
     pub fn clear(&self) -> std::io::Result<()> {
         for f in crate::util::fs::list_files_with_ext(&self.dir, "json")? {
             std::fs::remove_file(f)?;
+        }
+        for shard in &self.shards {
+            let mut sh = shard.lock().unwrap();
+            sh.map.clear();
+            sh.eviction_queue.clear();
+            sh.resident = 0;
+            sh.resident_bytes = 0;
         }
         Ok(())
     }
@@ -188,6 +448,112 @@ mod tests {
         let (hits, misses, writes, corrupt) = cache.stats().snapshot();
         assert_eq!((hits, misses, writes, corrupt), (1, 1, 1, 0));
         assert!((cache.stats().hit_rate() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn warm_hits_never_touch_disk() {
+        // The acceptance check for the memory tier: after put, delete the
+        // backing file out from under the cache — the value must still be
+        // served (memory tier), with the hit attributed to mem_hits.
+        let td = TempDir::new("cache-mem").unwrap();
+        let cache = ResultCache::open(td.path()).unwrap();
+        let s = spec(1);
+        let id = s.id("v1");
+        cache.put(&id, &s, &Json::int(42)).unwrap();
+        std::fs::remove_file(td.path().join(format!("{id}.json"))).unwrap();
+        assert_eq!(cache.get(&id).unwrap().as_i64(), Some(42));
+        assert_eq!(cache.get(&id).unwrap().as_i64(), Some(42));
+        let (mem, disk) = cache.stats().tier_snapshot();
+        assert_eq!((mem, disk), (2, 0));
+    }
+
+    #[test]
+    fn preexisting_dir_is_indexed_once_and_promoted_on_get() {
+        let td = TempDir::new("cache-reopen").unwrap();
+        {
+            let cache = ResultCache::open(td.path()).unwrap();
+            for n in 0..10 {
+                let s = spec(n);
+                cache.put(&s.id("v1"), &s, &Json::int(n)).unwrap();
+            }
+        }
+        // Fresh handle over the same dir: len is right without any put.
+        let cache = ResultCache::open(td.path()).unwrap();
+        assert_eq!(cache.len(), 10);
+        assert_eq!(cache.resident_len(), 0, "indexed but not loaded");
+        // First get reads disk; second is a pure memory hit.
+        let id = spec(3).id("v1");
+        assert_eq!(cache.get(&id).unwrap().as_i64(), Some(3));
+        assert_eq!(cache.get(&id).unwrap().as_i64(), Some(3));
+        let (mem, disk) = cache.stats().tier_snapshot();
+        assert_eq!((mem, disk), (1, 1));
+        assert_eq!(cache.resident_len(), 1);
+    }
+
+    #[test]
+    fn drop_memory_demotes_without_losing_entries() {
+        let td = TempDir::new("cache-demote").unwrap();
+        let cache = ResultCache::open(td.path()).unwrap();
+        for n in 0..5 {
+            let s = spec(n);
+            cache.put(&s.id("v1"), &s, &Json::int(n)).unwrap();
+        }
+        assert_eq!(cache.resident_len(), 5);
+        cache.drop_memory();
+        assert_eq!(cache.resident_len(), 0);
+        assert_eq!(cache.len(), 5, "entries survive demotion");
+        assert_eq!(cache.get(&spec(2).id("v1")).unwrap().as_i64(), Some(2));
+        assert_eq!(cache.resident_len(), 1, "reloaded on get");
+    }
+
+    #[test]
+    fn memory_budget_bounds_residency() {
+        let td = TempDir::new("cache-budget").unwrap();
+        // ~2 KiB per shard: each serialized entry is a few hundred bytes,
+        // so only a handful stay resident per shard.
+        let budget = SHARDS * 2048;
+        let cache = ResultCache::open(td.path()).unwrap().with_memory_budget(budget);
+        for n in 0..200 {
+            let s = spec(n);
+            cache.put(&s.id("v1"), &s, &Json::int(n)).unwrap();
+        }
+        assert_eq!(cache.len(), 200, "all entries indexed");
+        assert!(
+            cache.resident_bytes() <= budget,
+            "resident_bytes {} exceeds budget {budget}",
+            cache.resident_bytes()
+        );
+        assert!(
+            cache.resident_len() < 200,
+            "budget must have demoted something (resident {})",
+            cache.resident_len()
+        );
+        // Demoted entries still readable (from disk), and re-promotion
+        // under the same budget stays bounded.
+        for n in 0..200 {
+            assert_eq!(cache.get(&spec(n).id("v1")).unwrap().as_i64(), Some(n));
+        }
+        assert!(cache.resident_bytes() <= budget);
+    }
+
+    #[test]
+    fn oversized_value_stays_on_disk_tier() {
+        let td = TempDir::new("cache-big").unwrap();
+        let cache = ResultCache::open(td.path()).unwrap().with_memory_budget(SHARDS * 512);
+        let s = spec(1);
+        let id = s.id("v1");
+        // Serialized entry far above the 512-byte shard budget.
+        let big = Json::Arr(vec![Json::Num(0.123456789); 1000]);
+        cache.put(&id, &s, &big).unwrap();
+        assert_eq!(cache.resident_len(), 0, "oversized value must not reside");
+        assert_eq!(cache.len(), 1, "still indexed");
+        // Served from disk, repeatedly, without ever promoting.
+        for _ in 0..2 {
+            assert_eq!(cache.get(&id).unwrap().as_arr().unwrap().len(), 1000);
+        }
+        let (mem, disk) = cache.stats().tier_snapshot();
+        assert_eq!(mem, 0);
+        assert_eq!(disk, 2);
     }
 
     #[test]
@@ -276,5 +642,9 @@ mod tests {
             h.join().unwrap();
         }
         assert_eq!(cache.len(), 100);
+        // All gets after a same-handle put are memory-tier hits.
+        let (mem, disk) = cache.stats().tier_snapshot();
+        assert_eq!(mem, 100);
+        assert_eq!(disk, 0);
     }
 }

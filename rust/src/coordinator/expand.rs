@@ -344,6 +344,47 @@ mod tests {
     }
 
     #[test]
+    fn prop_counts_match_bruteforce_enumeration() {
+        // Independent oracle: decode every raw combination index with plain
+        // div/mod arithmetic (no Expansion iterator involved) and apply the
+        // exclusion predicate directly. Catches odometer bugs that a
+        // self-referential count identity would miss.
+        check("counts-match-bruteforce", 40, |g| {
+            let m = random_matrix(g);
+            let dims: Vec<usize> = m.parameters.iter().map(|(_, d)| d.len()).collect();
+            let raw = m.raw_count();
+            let mut included = 0usize;
+            for mut k in 0..raw {
+                let mut assignment: Vec<(String, ParamValue)> =
+                    Vec::with_capacity(dims.len());
+                // Last parameter fastest, matching the documented order.
+                for (pi, &dlen) in dims.iter().enumerate().rev() {
+                    let (name, domain) = &m.parameters[pi];
+                    assignment.push((name.clone(), domain[k % dlen].clone()));
+                    k /= dlen;
+                }
+                assignment.reverse();
+                let spec = TaskSpec { params: assignment, index: 0 };
+                if !is_excluded(&spec, &m.exclude) {
+                    included += 1;
+                }
+            }
+            crate::prop_assert!(
+                included == count_included(&m),
+                "bruteforce {included} != count_included {}",
+                count_included(&m)
+            );
+            crate::prop_assert!(
+                raw - included == count_excluded(&m),
+                "bruteforce excluded {} != count_excluded {}",
+                raw - included,
+                count_excluded(&m)
+            );
+            Ok(())
+        });
+    }
+
+    #[test]
     fn prop_no_survivor_matches_any_rule() {
         check("no-survivor-matches-rule", 50, |g| {
             let m = random_matrix(g);

@@ -24,14 +24,20 @@
 //! The run pipeline, per task:
 //!
 //! 1. **cache** — if the task id has a cached value (same params + same
-//!    experiment version), restore it without executing;
+//!    experiment version), restore it without executing; warm entries are
+//!    served from the [`ResultCache`] memory tier without touching disk;
 //! 2. **checkpoint** — if a resumed manifest already has the task, restore;
 //! 3. **execute** — call the experiment function with a [`TaskContext`]
 //!    (typed params, settings, deterministic seed, progress slot), catching
 //!    both `Err` returns and panics;
 //! 4. **retry** — per [`RetryPolicy`];
-//! 5. **record** — cache the value, checkpoint the outcome, notify on
-//!    failure, update metrics and progress.
+//! 5. **record** — cache the value (write-through both tiers), checkpoint
+//!    the outcome, notify on failure, update metrics and progress.
+//!
+//! Pending tasks are dispatched in batched chunks over the work-stealing
+//! pool (see [`crate::coordinator::scheduler`]); steal/chunk/skip counters
+//! land in [`RunMetrics`] so `memento run`'s summary shows how the run was
+//! balanced.
 
 use crate::config::matrix::ConfigMatrix;
 use crate::coordinator::cache::ResultCache;
@@ -620,6 +626,40 @@ mod tests {
             ]);
             assert_eq!(orig.unwrap().value, o.value);
         }
+    }
+
+    #[test]
+    fn shared_cache_handle_serves_second_run_from_memory() {
+        // With a shared ResultCache handle, a re-run must restore every
+        // task from the memory tier — zero disk reads on the warm path.
+        let td = TempDir::new("memento-two-tier").unwrap();
+        let cache = Arc::new(ResultCache::open(td.join("cache")).unwrap());
+        let run = |cache: Arc<ResultCache>| {
+            Memento::new(|ctx| Ok(Json::int(ctx.param_i64("a")?)))
+                .workers(2)
+                .with_cache(cache)
+                .run(&small_matrix())
+                .unwrap()
+        };
+        let r1 = run(Arc::clone(&cache));
+        assert_eq!(r1.n_cached(), 0);
+        let (mem_before, _) = cache.stats().tier_snapshot();
+        let r2 = run(Arc::clone(&cache));
+        assert_eq!(r2.n_cached(), 6);
+        let (mem_after, disk_after) = cache.stats().tier_snapshot();
+        assert_eq!(mem_after - mem_before, 6, "all warm hits from memory");
+        assert_eq!(disk_after, 0, "no disk reads at any point");
+        assert_eq!(cache.len(), 6);
+    }
+
+    #[test]
+    fn dispatch_metrics_populated_by_run() {
+        let m = Memento::new(|_| Ok(Json::Null)).workers(3);
+        let metrics = m.metrics();
+        m.run(&small_matrix()).unwrap();
+        assert!(metrics.dispatch_chunks.get() > 0, "chunked dispatch used");
+        assert_eq!(metrics.tasks_skipped.get(), 0);
+        assert!(metrics.dispatch_overhead.count() > 0);
     }
 
     #[test]

@@ -97,13 +97,23 @@ pub struct RunMetrics {
     pub tasks_failed: Counter,
     pub tasks_cached: Counter,
     pub tasks_retried: Counter,
+    /// Specs abandoned by a fail-fast abort (never executed).
+    pub tasks_skipped: Counter,
     pub cache_hits: Counter,
     pub cache_misses: Counter,
     pub checkpoint_flushes: Counter,
+    /// Chunk jobs the scheduler submitted to the pool (batched dispatch).
+    pub dispatch_chunks: Counter,
+    /// Chunks a pool worker took from a sibling's queue — direct evidence
+    /// of load-balancing; high values mean uneven task durations, not a
+    /// problem per se.
+    pub steals: Counter,
     /// Time spent inside experiment functions.
     pub exec_time: Timer,
-    /// Queue wait: task enqueue → job start (includes time spent behind
-    /// earlier tasks, so it reflects queue depth, not just dispatch cost).
+    /// Queue wait: chunk submission → first task start, sampled once per
+    /// executed dispatch chunk (skipped chunks are excluded so fail-fast
+    /// aborts cannot pollute the distribution). Reflects queue depth plus
+    /// pool wake-up latency, not just dispatch cost.
     pub dispatch_overhead: Timer,
 }
 
@@ -125,17 +135,23 @@ impl RunMetrics {
         let mut s = String::new();
         s.push_str("run metrics:\n");
         s.push_str(&format!(
-            "  tasks      total={} ok={} failed={} cached={} retried={}\n",
+            "  tasks      total={} ok={} failed={} cached={} retried={} skipped={}\n",
             self.tasks_total.get(),
             self.tasks_succeeded.get(),
             self.tasks_failed.get(),
             self.tasks_cached.get(),
             self.tasks_retried.get(),
+            self.tasks_skipped.get(),
         ));
         s.push_str(&format!(
             "  cache      hits={} misses={}\n",
             self.cache_hits.get(),
             self.cache_misses.get(),
+        ));
+        s.push_str(&format!(
+            "  dispatch   chunks={} steals={}\n",
+            self.dispatch_chunks.get(),
+            self.steals.get(),
         ));
         s.push_str(&format!(
             "  checkpoint flushes={}\n",
@@ -229,6 +245,18 @@ mod tests {
         assert!(r.contains("total=45"), "{r}");
         assert!(r.contains("ok=44"), "{r}");
         assert!(r.contains("22.5 tasks/s"), "{r}");
+    }
+
+    #[test]
+    fn render_contains_dispatch_fields() {
+        let m = RunMetrics::new();
+        m.dispatch_chunks.add(12);
+        m.steals.add(3);
+        m.tasks_skipped.add(7);
+        let r = m.render(1.0);
+        assert!(r.contains("chunks=12"), "{r}");
+        assert!(r.contains("steals=3"), "{r}");
+        assert!(r.contains("skipped=7"), "{r}");
     }
 
     #[test]

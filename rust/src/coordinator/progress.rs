@@ -13,21 +13,45 @@ use std::time::{Duration, Instant};
 #[derive(Debug)]
 pub struct ProgressState {
     pub done: AtomicUsize,
+    /// Specs abandoned by a fail-fast abort. Tracked separately from `done`
+    /// so the bar still reaches a terminal state (`done + skipped == total`)
+    /// without pretending skipped work completed.
+    pub skipped: AtomicUsize,
     pub total: usize,
     start: Instant,
 }
 
 impl ProgressState {
     pub fn new(total: usize) -> Arc<Self> {
-        Arc::new(ProgressState { done: AtomicUsize::new(0), total, start: Instant::now() })
+        Arc::new(ProgressState {
+            done: AtomicUsize::new(0),
+            skipped: AtomicUsize::new(0),
+            total,
+            start: Instant::now(),
+        })
     }
 
     pub fn mark_done(&self) {
         self.done.fetch_add(1, Ordering::Relaxed);
     }
 
+    /// Records a spec the scheduler abandoned after a fail-fast abort.
+    pub fn mark_skipped(&self) {
+        self.skipped.fetch_add(1, Ordering::Relaxed);
+    }
+
     pub fn snapshot(&self) -> (usize, usize) {
         (self.done.load(Ordering::Relaxed), self.total)
+    }
+
+    /// `(done, skipped, total)`; on any terminal run state
+    /// `done + skipped == total`.
+    pub fn snapshot_full(&self) -> (usize, usize, usize) {
+        (
+            self.done.load(Ordering::Relaxed),
+            self.skipped.load(Ordering::Relaxed),
+            self.total,
+        )
     }
 
     /// Estimated seconds remaining, `None` until at least one completion.
@@ -41,17 +65,21 @@ impl ProgressState {
         Some(((self.total - done) as f64 / rate).max(0.0))
     }
 
-    /// Renders a `[####....] 12/45 (ETA 3.2s)` line.
+    /// Renders a `[####....] 12/45 (ETA 3.2s)` line; skipped specs append
+    /// a `(k skipped)` marker instead of inflating the done count.
     pub fn render(&self) -> String {
-        let (done, total) = self.snapshot();
+        let (done, skipped, total) = self.snapshot_full();
         let width = 24usize;
         let filled = if total == 0 { width } else { width * done / total };
         let bar: String = (0..width).map(|i| if i < filled { '#' } else { '.' }).collect();
         let eta = match self.eta_secs() {
-            Some(s) if done < total => format!(" (ETA {})", crate::util::time::fmt_secs(s)),
+            Some(s) if done + skipped < total => {
+                format!(" (ETA {})", crate::util::time::fmt_secs(s))
+            }
             _ => String::new(),
         };
-        format!("[{bar}] {done}/{total}{eta}")
+        let skip = if skipped > 0 { format!(" ({skipped} skipped)") } else { String::new() };
+        format!("[{bar}] {done}/{total}{skip}{eta}")
     }
 }
 
@@ -134,6 +162,21 @@ mod tests {
         let r = p.render();
         assert!(r.contains("4/4"), "{r}");
         assert!(!r.contains("ETA"), "{r}");
+    }
+
+    #[test]
+    fn skipped_reaches_terminal_state_without_eta() {
+        let p = ProgressState::new(4);
+        p.mark_done();
+        p.mark_skipped();
+        p.mark_skipped();
+        p.mark_skipped();
+        let (done, skipped, total) = p.snapshot_full();
+        assert_eq!((done, skipped, total), (1, 3, 4));
+        let r = p.render();
+        assert!(r.contains("1/4"), "{r}");
+        assert!(r.contains("(3 skipped)"), "{r}");
+        assert!(!r.contains("ETA"), "terminal state must not show ETA: {r}");
     }
 
     #[test]

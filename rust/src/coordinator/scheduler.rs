@@ -1,4 +1,4 @@
-//! Task scheduling across the worker pool.
+//! Task scheduling across the worker pool — batched, work-stealing.
 //!
 //! The scheduler is deliberately generic: it takes fully-formed task specs
 //! and a job closure producing a [`TaskOutcome`], and guarantees
@@ -7,8 +7,32 @@
 //! 2. worker panics *outside* the job's own catch (bugs in the coordinator
 //!    itself) cannot lose outcomes silently — missing outcomes are detected
 //!    and surfaced,
-//! 3. fail-fast mode stops dispatching new tasks after the first failure
-//!    while letting in-flight tasks finish.
+//! 3. fail-fast mode stops launching new tasks after the first failure
+//!    while letting in-flight tasks finish; skipped specs are returned,
+//!    marked on the progress bar, and **excluded** from timing metrics so
+//!    abort noise never pollutes dispatch-overhead numbers.
+//!
+//! # Dispatch design (why this is fast)
+//!
+//! The original implementation boxed one closure per spec and cloned four
+//! `Arc`s into it, then pushed every box through a single-mutex queue and
+//! collected outcomes over an `mpsc` channel — five allocations plus two
+//! contended queues *per task*. For 10k no-op tasks the orchestrator was
+//! the workload.
+//!
+//! Now the specs live in one shared `Arc<[TaskSpec]>` and are dispatched as
+//! **chunks**: each pool job owns a contiguous index range and one
+//! `Arc<ChunkCtx>` clone, walks its range, and merges its outcomes into the
+//! shared collection vector with a single lock acquisition per chunk.
+//! Chunks are striped across the pool's per-worker deques
+//! ([`crate::util::pool`]); a worker that drains its own chunks early
+//! *steals* chunks from busy siblings, so imbalance self-corrects at chunk
+//! granularity without any central queue. Per-task cost amortizes to
+//! `chunk_cost / chunk_len`: no per-task boxing, no per-task channel send,
+//! no per-task Arc traffic.
+//!
+//! Exactly-once follows from construction: chunk ranges partition
+//! `0..specs.len()` and the pool runs each submitted job exactly once.
 //!
 //! The cache/retry/checkpoint/notification pipeline around each task is
 //! composed by [`crate::coordinator::memento`], keeping this module small
@@ -19,9 +43,9 @@ use crate::coordinator::progress::ProgressState;
 use crate::coordinator::results::{TaskOutcome, TaskStatus};
 use crate::coordinator::task::TaskSpec;
 use crate::util::pool::ThreadPool;
-use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::mpsc;
-use std::sync::Arc;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
 use std::time::Instant;
 
 /// Scheduling configuration.
@@ -39,6 +63,21 @@ impl Default for SchedulerOptions {
     }
 }
 
+/// Load-balance evidence for one `run_all` invocation.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct DispatchStats {
+    /// Number of chunk jobs submitted to the pool.
+    pub chunks: usize,
+    /// Specs per chunk (last chunk may be shorter).
+    pub chunk_len: usize,
+    /// Chunks a worker took from a sibling's queue.
+    pub steals: usize,
+    /// Chunks a worker took from its own queue.
+    pub local_pops: usize,
+    /// Jobs whose `job` closure panicked (coordinator bugs; outcome lost).
+    pub job_panics: usize,
+}
+
 /// What happened to each dispatched spec.
 pub struct ScheduleReport {
     /// Outcomes for tasks that ran (or were restored); ordered by spec index.
@@ -47,14 +86,36 @@ pub struct ScheduleReport {
     pub skipped: Vec<TaskSpec>,
     /// True if fail-fast triggered.
     pub aborted: bool,
+    /// Dispatch/steal counters for this run.
+    pub stats: DispatchStats,
+}
+
+/// Everything a chunk job needs, shared once instead of cloned per task.
+struct ChunkCtx {
+    specs: Arc<[TaskSpec]>,
+    job: Arc<dyn Fn(&TaskSpec) -> TaskOutcome + Send + Sync>,
+    abort: AtomicBool,
+    fail_fast: bool,
+    progress: Option<Arc<ProgressState>>,
+    metrics: Option<Arc<RunMetrics>>,
+    outcomes: Mutex<Vec<TaskOutcome>>,
+    skipped: Mutex<Vec<TaskSpec>>,
+    job_panics: AtomicUsize,
+}
+
+/// Chunk length for `n` specs on `workers` threads: aim for ~8 chunks per
+/// worker so stealing has granules to balance with, capped so one chunk
+/// never monopolizes a worker's outcome buffer.
+fn chunk_len(n: usize, workers: usize) -> usize {
+    (n / (workers * 8)).clamp(1, 64)
 }
 
 /// Runs `job` over all `specs` on a pool of `opts.workers` threads.
 ///
 /// `job` must itself be panic-safe (it converts experiment panics into
 /// failed outcomes); a panic escaping `job` is a coordinator bug and is
-/// reported as a synthesized failed outcome so the run still accounts for
-/// every task.
+/// contained per-task, counted in [`DispatchStats::job_panics`], and
+/// surfaced loudly — the run still accounts for every other task.
 pub fn run_all(
     specs: Vec<TaskSpec>,
     opts: &SchedulerOptions,
@@ -64,8 +125,10 @@ pub fn run_all(
     run_all_with_metrics(specs, opts, job, progress, None)
 }
 
-/// [`run_all`] with a metrics registry: records per-task queue wait
-/// (enqueue → job start) into `dispatch_overhead`.
+/// [`run_all`] with a metrics registry: records per-chunk queue wait
+/// (submission → first task start) into `dispatch_overhead`, plus
+/// steal/skip counters at the end of the run. Skipped (fail-fast) specs
+/// never contribute dispatch samples.
 pub fn run_all_with_metrics(
     specs: Vec<TaskSpec>,
     opts: &SchedulerOptions,
@@ -75,9 +138,170 @@ pub fn run_all_with_metrics(
 ) -> ScheduleReport {
     let n = specs.len();
     if n == 0 {
-        return ScheduleReport { outcomes: Vec::new(), skipped: Vec::new(), aborted: false };
+        return ScheduleReport {
+            outcomes: Vec::new(),
+            skipped: Vec::new(),
+            aborted: false,
+            stats: DispatchStats::default(),
+        };
     }
-    let workers = opts.workers.max(1).min(n.max(1));
+    let workers = opts.workers.max(1).min(n);
+    let clen = chunk_len(n, workers);
+    let n_chunks = (n + clen - 1) / clen;
+
+    let ctx = Arc::new(ChunkCtx {
+        specs: specs.into(),
+        job,
+        abort: AtomicBool::new(false),
+        fail_fast: opts.fail_fast,
+        progress,
+        metrics: metrics.clone(),
+        outcomes: Mutex::new(Vec::with_capacity(n)),
+        skipped: Mutex::new(Vec::new()),
+        job_panics: AtomicUsize::new(0),
+    });
+
+    let pool = ThreadPool::new(workers);
+    let jobs: Vec<_> = (0..n_chunks)
+        .map(|c| {
+            let ctx = Arc::clone(&ctx);
+            let lo = c * clen;
+            let hi = (lo + clen).min(n);
+            let submitted = Instant::now();
+            move || run_chunk(&ctx, lo, hi, submitted)
+        })
+        .collect();
+    pool.execute_batch(jobs);
+    pool.join();
+    let pool_stats = pool.stats();
+    drop(pool);
+
+    let aborted = ctx.abort.load(Ordering::SeqCst);
+    // All chunk jobs are done and dropped, so this Arc is unique; the
+    // fallback drain covers the (theoretical) case of a job box not yet
+    // deallocated.
+    let (mut outcomes, mut skipped, job_panics) = match Arc::try_unwrap(ctx) {
+        Ok(ctx) => (
+            ctx.outcomes.into_inner().unwrap(),
+            ctx.skipped.into_inner().unwrap(),
+            ctx.job_panics.load(Ordering::SeqCst),
+        ),
+        Err(ctx) => (
+            std::mem::take(&mut *ctx.outcomes.lock().unwrap()),
+            std::mem::take(&mut *ctx.skipped.lock().unwrap()),
+            ctx.job_panics.load(Ordering::SeqCst),
+        ),
+    };
+
+    let lost = n - outcomes.len() - skipped.len();
+    if lost > 0 {
+        // Coordinator-level bug: account for it loudly rather than silently.
+        eprintln!(
+            "memento scheduler: {lost} task(s) lost to unexpected job panics \
+             ({job_panics} contained)"
+        );
+    }
+    outcomes.sort_by_key(|o| o.spec.index);
+    skipped.sort_by_key(|s| s.index);
+
+    let stats = DispatchStats {
+        chunks: n_chunks,
+        chunk_len: clen,
+        steals: pool_stats.steals,
+        local_pops: pool_stats.local_pops,
+        job_panics,
+    };
+    if let Some(m) = &metrics {
+        m.dispatch_chunks.add(n_chunks as u64);
+        m.steals.add(stats.steals as u64);
+        m.tasks_skipped.add(skipped.len() as u64);
+    }
+
+    ScheduleReport { outcomes, skipped, aborted, stats }
+}
+
+/// Executes specs `lo..hi`; called on a pool worker.
+fn run_chunk(ctx: &ChunkCtx, lo: usize, hi: usize, submitted: Instant) {
+    let mut done: Vec<TaskOutcome> = Vec::with_capacity(hi - lo);
+    let mut skip: Vec<TaskSpec> = Vec::new();
+    let mut recorded_wait = false;
+    for i in lo..hi {
+        let spec = &ctx.specs[i];
+        if ctx.abort.load(Ordering::SeqCst) {
+            skip.push(spec.clone());
+            if let Some(p) = &ctx.progress {
+                p.mark_skipped();
+            }
+            continue;
+        }
+        if !recorded_wait {
+            recorded_wait = true;
+            // One queue-wait sample per chunk, and only for chunks that
+            // actually execute work — skipped specs stay out of the timer.
+            if let Some(m) = &ctx.metrics {
+                m.dispatch_overhead.record(submitted.elapsed());
+            }
+        }
+        match catch_unwind(AssertUnwindSafe(|| (ctx.job)(spec))) {
+            Ok(outcome) => {
+                if ctx.fail_fast && outcome.status == TaskStatus::Failed {
+                    ctx.abort.store(true, Ordering::SeqCst);
+                }
+                if let Some(p) = &ctx.progress {
+                    p.mark_done();
+                }
+                done.push(outcome);
+            }
+            Err(_) => {
+                // Panic escaping `job` — contained so the rest of the chunk
+                // (and run) still completes; counted and surfaced above.
+                ctx.job_panics.fetch_add(1, Ordering::SeqCst);
+                if let Some(p) = &ctx.progress {
+                    p.mark_done();
+                }
+            }
+        }
+    }
+    if !done.is_empty() {
+        ctx.outcomes.lock().unwrap().extend(done);
+    }
+    if !skip.is_empty() {
+        ctx.skipped.lock().unwrap().extend(skip);
+    }
+}
+
+/// The pre-batching reference implementation: one boxed closure, four Arc
+/// clones, and one channel send **per task**.
+///
+/// Note what this baseline does and does not reproduce: it submits through
+/// the *current* work-stealing pool (the old single-`Mutex<VecDeque>` pool
+/// no longer exists in the build), so an A/B against [`run_all`] isolates
+/// the **per-task boxing + Arc + channel overhead vs chunked dispatch** —
+/// it does *not* include the old central-queue contention, which was
+/// removed for both paths by the pool rewrite. Treat recorded speedups as
+/// a lower bound on the full improvement over the seed design.
+///
+/// Semantically equivalent to [`run_all`] (exactly-once, fail-fast,
+/// panic containment) and retained so `benches/scheduler.rs` can measure
+/// the dispatch-overhead delta on the same build — the before/after
+/// evidence in `BENCH_sched_cache.json`.
+pub fn run_all_unbatched(
+    specs: Vec<TaskSpec>,
+    opts: &SchedulerOptions,
+    job: Arc<dyn Fn(&TaskSpec) -> TaskOutcome + Send + Sync>,
+    progress: Option<Arc<ProgressState>>,
+    metrics: Option<Arc<RunMetrics>>,
+) -> ScheduleReport {
+    let n = specs.len();
+    if n == 0 {
+        return ScheduleReport {
+            outcomes: Vec::new(),
+            skipped: Vec::new(),
+            aborted: false,
+            stats: DispatchStats::default(),
+        };
+    }
+    let workers = opts.workers.max(1).min(n);
     let pool = ThreadPool::new(workers);
     let (tx, rx) = mpsc::channel::<Result<TaskOutcome, TaskSpec>>();
     let abort = Arc::new(AtomicBool::new(false));
@@ -92,6 +316,9 @@ pub fn run_all_with_metrics(
         let enqueued = Instant::now();
         pool.execute(move || {
             if abort.load(Ordering::SeqCst) {
+                if let Some(p) = &progress {
+                    p.mark_skipped();
+                }
                 let _ = tx.send(Err(spec));
                 return;
             }
@@ -112,10 +339,6 @@ pub fn run_all_with_metrics(
 
     let mut outcomes = Vec::with_capacity(n);
     let mut skipped = Vec::new();
-    // Collect until all senders hang up. Jobs that panicked *around* the
-    // job closure never send; the pool contains the panic, the sender is
-    // dropped, and the channel closes once all jobs end — the count check
-    // below surfaces the loss.
     for msg in rx {
         match msg {
             Ok(o) => outcomes.push(o),
@@ -123,20 +346,28 @@ pub fn run_all_with_metrics(
         }
     }
     pool.join();
-
     let lost = n - outcomes.len() - skipped.len();
     if lost > 0 {
-        // Coordinator-level bug: account for it loudly rather than silently.
         eprintln!(
-            "memento scheduler: {lost} task(s) lost to unexpected worker panics \
-             (pool reported {})",
+            "memento scheduler (unbatched): {lost} task(s) lost to unexpected \
+             worker panics (pool reported {})",
             pool.panic_count()
         );
     }
     outcomes.sort_by_key(|o| o.spec.index);
     skipped.sort_by_key(|s| s.index);
     let aborted = abort.load(Ordering::SeqCst);
-    ScheduleReport { outcomes, skipped, aborted }
+    if let Some(m) = &metrics {
+        m.tasks_skipped.add(skipped.len() as u64);
+    }
+    let stats = DispatchStats {
+        chunks: n,
+        chunk_len: 1,
+        steals: pool.stats().steals,
+        local_pops: pool.stats().local_pops,
+        job_panics: pool.panic_count(),
+    };
+    ScheduleReport { outcomes, skipped, aborted, stats }
 }
 
 #[cfg(test)]
@@ -254,6 +485,30 @@ mod tests {
     }
 
     #[test]
+    fn fail_fast_abort_mid_chunk_skips_chunk_tail() {
+        // Large n on 1 worker → chunks longer than 1 spec; a failure inside
+        // a chunk must skip the *rest of that same chunk* too, not just
+        // later chunks.
+        let report = run_all(
+            specs(200),
+            &SchedulerOptions { workers: 1, fail_fast: true },
+            Arc::new(|s| {
+                if s.index == 10 {
+                    failed_outcome(s)
+                } else {
+                    ok_outcome(s)
+                }
+            }),
+            None,
+        );
+        assert!(report.aborted);
+        assert_eq!(report.outcomes.len(), 11); // 0..=10
+        assert_eq!(report.skipped.len(), 189);
+        assert_eq!(report.skipped[0].index, 11);
+        assert!(report.stats.chunk_len > 1, "test needs multi-spec chunks");
+    }
+
+    #[test]
     fn keep_going_collects_all_failures() {
         let report = run_all(
             specs(20),
@@ -290,6 +545,55 @@ mod tests {
     }
 
     #[test]
+    fn progress_accounts_for_skips_on_abort() {
+        // Abort path: every pending spec must end up either done or
+        // skipped on the progress state — the bar completes, no limbo.
+        let progress = ProgressState::new(50);
+        let report = run_all(
+            specs(50),
+            &SchedulerOptions { workers: 2, fail_fast: true },
+            Arc::new(|s| {
+                if s.index == 0 {
+                    failed_outcome(s)
+                } else {
+                    std::thread::sleep(std::time::Duration::from_micros(200));
+                    ok_outcome(s)
+                }
+            }),
+            Some(Arc::clone(&progress)),
+        );
+        let (done, skipped, total) = progress.snapshot_full();
+        assert_eq!(done + skipped, total);
+        assert_eq!(done, report.outcomes.len());
+        assert_eq!(skipped, report.skipped.len());
+    }
+
+    #[test]
+    fn abort_metrics_exclude_skipped_tasks() {
+        // dispatch_overhead must only sample chunks that executed work;
+        // tasks_skipped counts the rest. No mixing.
+        let metrics = Arc::new(RunMetrics::new());
+        let report = run_all_with_metrics(
+            specs(300),
+            &SchedulerOptions { workers: 1, fail_fast: true },
+            Arc::new(|s| {
+                if s.index == 0 {
+                    failed_outcome(s)
+                } else {
+                    ok_outcome(s)
+                }
+            }),
+            None,
+            Some(Arc::clone(&metrics)),
+        );
+        assert!(report.aborted);
+        assert_eq!(metrics.tasks_skipped.get() as usize, report.skipped.len());
+        // Only the first chunk executed anything → exactly one wait sample.
+        assert_eq!(metrics.dispatch_overhead.count(), 1);
+        assert!(metrics.dispatch_chunks.get() > 0);
+    }
+
+    #[test]
     fn panicking_job_does_not_hang() {
         // A panic escaping `job` is a coordinator bug; the scheduler must
         // still terminate and report the remaining outcomes.
@@ -305,6 +609,7 @@ mod tests {
             None,
         );
         assert_eq!(report.outcomes.len(), 9);
+        assert_eq!(report.stats.job_panics, 1);
     }
 
     #[test]
@@ -320,6 +625,64 @@ mod tests {
         assert_eq!(report.outcomes.len(), 2);
     }
 
+    #[test]
+    fn unbatched_reference_path_matches() {
+        // The retained A/B baseline must keep the same guarantees.
+        let count = Arc::new(AtomicUsize::new(0));
+        let c = Arc::clone(&count);
+        let report = run_all_unbatched(
+            specs(50),
+            &SchedulerOptions { workers: 4, fail_fast: false },
+            Arc::new(move |s| {
+                c.fetch_add(1, Ordering::SeqCst);
+                ok_outcome(s)
+            }),
+            None,
+            None,
+        );
+        assert_eq!(count.load(Ordering::SeqCst), 50);
+        assert_eq!(report.outcomes.len(), 50);
+        for (i, o) in report.outcomes.iter().enumerate() {
+            assert_eq!(o.spec.index, i);
+        }
+    }
+
+    // ---- stress: exactly-once at high worker counts under stealing -------
+
+    #[test]
+    fn stress_exactly_once_high_worker_count() {
+        // 24 workers (well above physical cores) over 3000 uneven tasks:
+        // chunks get stolen across workers and every task must still run
+        // exactly once, with all outcomes collected and ordered.
+        let n = 3000;
+        let counts: Arc<Vec<AtomicUsize>> =
+            Arc::new((0..n).map(|_| AtomicUsize::new(0)).collect());
+        let c = Arc::clone(&counts);
+        let report = run_all(
+            specs(n),
+            &SchedulerOptions { workers: 24, fail_fast: false },
+            Arc::new(move |s| {
+                // Uneven spin to force imbalance (and therefore stealing).
+                let spin = (s.index % 13) * 40;
+                for _ in 0..spin {
+                    std::hint::black_box(s.index);
+                }
+                c[s.index].fetch_add(1, Ordering::SeqCst);
+                ok_outcome(s)
+            }),
+            None,
+        );
+        assert_eq!(report.outcomes.len(), n);
+        assert!(report.skipped.is_empty());
+        for (i, cnt) in counts.iter().enumerate() {
+            assert_eq!(cnt.load(Ordering::SeqCst), 1, "task {i} ran != once");
+        }
+        for (i, o) in report.outcomes.iter().enumerate() {
+            assert_eq!(o.spec.index, i);
+        }
+        assert!(report.stats.chunks >= 24, "stats: {:?}", report.stats);
+    }
+
     // ---- property: exactly-once under random worker counts ---------------
 
     #[test]
@@ -327,7 +690,7 @@ mod tests {
         use crate::testing::prop::check;
         check("scheduler-exactly-once", 25, |g| {
             let n = g.size(1, 40);
-            let workers = g.size(1, 8);
+            let workers = g.size(1, 16);
             let counts: Arc<Vec<AtomicUsize>> =
                 Arc::new((0..n).map(|_| AtomicUsize::new(0)).collect());
             let c = Arc::clone(&counts);

@@ -11,22 +11,15 @@
 use crate::config::value::ParamValue;
 use crate::coordinator::error::MementoError;
 use crate::util::json::Json;
-use sha2::{Digest, Sha256};
 use std::collections::BTreeMap;
 use std::fmt;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 
-/// Hex SHA-256 helper used for task ids and matrix fingerprints.
+/// Hex SHA-256 helper used for task ids and matrix fingerprints
+/// (delegates to the in-tree [`crate::util::sha256`] implementation).
 pub fn sha256_hex(bytes: &[u8]) -> String {
-    let mut h = Sha256::new();
-    h.update(bytes);
-    let digest = h.finalize();
-    let mut s = String::with_capacity(64);
-    for b in digest {
-        s.push_str(&format!("{b:02x}"));
-    }
-    s
+    crate::util::sha256::sha256_hex(bytes)
 }
 
 /// Content-addressed task identity (64 hex chars).

@@ -1,10 +1,13 @@
 //! Support substrates built from scratch for the offline image: JSON,
-//! RNG, thread pool, CLI parsing, filesystem atomicity, and timing.
+//! RNG, SHA-256, work-stealing thread pool, CLI parsing, filesystem
+//! atomicity, and timing.
 
 pub mod cli;
 pub mod csv;
+pub mod deque;
 pub mod fs;
 pub mod json;
 pub mod pool;
 pub mod rng;
+pub mod sha256;
 pub mod time;

@@ -1,44 +1,78 @@
-//! A fixed-size worker thread pool.
+//! A fixed-size **work-stealing** worker thread pool.
 //!
 //! `tokio`/`rayon` are unavailable offline, and Memento's execution model —
-//! N OS threads pulling self-contained experiment tasks off a FIFO queue —
-//! is exactly what the paper describes ("concurrently run experiments across
-//! multiple threads"), so a small dedicated pool is both sufficient and
-//! faithful.
+//! N OS threads pulling self-contained experiment tasks — is exactly what
+//! the paper describes ("concurrently run experiments across multiple
+//! threads"), so a small dedicated pool is both sufficient and faithful.
 //!
-//! Design:
-//! - a `Mutex<VecDeque<Job>>` + `Condvar` injector queue,
+//! # Design
+//!
+//! - one [`WorkQueue`] per worker; submissions round-robin across the
+//!   worker queues so no single mutex serializes the hot path (the
+//!   previous design's single `Mutex<VecDeque>` queue was the bottleneck
+//!   at short task lengths — see `benches/scheduler.rs`);
+//! - a worker takes jobs in priority order: **own queue (FIFO) → steal
+//!   from a sibling (back end)**; see [`crate::util::deque`] for the
+//!   FIFO-fairness rationale;
 //! - jobs are `FnOnce` boxes; panics inside a job are caught per-job so a
 //!   single failing experiment cannot take a worker down (the paper's
-//!   per-task error isolation),
-//! - [`ThreadPool::join`] drains the queue and blocks until idle,
-//! - [`scope_run`] convenience for fork/join batches.
+//!   per-task error isolation);
+//! - [`ThreadPool::join`] blocks until every submitted job finished;
+//! - [`ThreadPool::execute_batch`] submits many jobs with one lock
+//!   acquisition per worker queue — the scheduler's batched dispatch path;
+//! - [`ThreadPool::stats`] exposes steal/pop counters so schedulers can
+//!   report load-balance behaviour ([`crate::coordinator::metrics`]).
+//!
+//! Sleeping workers park on a condvar with a short timeout; producers
+//! increment a `pending` count *before* pushing and notify under the sleep
+//! mutex, which rules out lost-wakeup hangs (the timeout is a second line
+//! of defence, not the correctness mechanism).
 
-use std::collections::VecDeque;
+use crate::util::deque::WorkQueue;
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
+use std::time::Duration;
 
 type Job = Box<dyn FnOnce() + Send + 'static>;
 
+/// Snapshot of the pool's load-balance counters.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct PoolStats {
+    /// Jobs a worker took from its own queue.
+    pub local_pops: usize,
+    /// Jobs taken from a *sibling's* queue (the steal path).
+    pub steals: usize,
+}
+
 struct Shared {
-    queue: Mutex<VecDeque<Job>>,
-    cv: Condvar,
+    /// Per-worker queues; owner pops the front, thieves the back.
+    locals: Vec<WorkQueue<Job>>,
+    /// Jobs pushed but not yet popped, across all queues. Incremented
+    /// *before* the push so a worker that observes 0 while holding
+    /// `sleep_mx` can safely wait.
+    pending: AtomicUsize,
+    sleep_mx: Mutex<()>,
+    wake_cv: Condvar,
     /// Jobs submitted but not yet finished (queued + running).
     inflight: AtomicUsize,
-    idle_cv: Condvar,
     idle_mx: Mutex<()>,
+    idle_cv: Condvar,
     shutdown: AtomicBool,
     /// Count of jobs that panicked (the panic itself is contained).
     panics: AtomicUsize,
+    local_pops: AtomicUsize,
+    steals: AtomicUsize,
 }
 
-/// A fixed-size thread pool executing boxed jobs FIFO.
+/// A fixed-size work-stealing thread pool.
 pub struct ThreadPool {
     shared: Arc<Shared>,
     workers: Vec<JoinHandle<()>>,
     size: usize,
+    /// Round-robin cursor for [`ThreadPool::execute`].
+    next: AtomicUsize,
 }
 
 impl ThreadPool {
@@ -46,24 +80,28 @@ impl ThreadPool {
     pub fn new(size: usize) -> Self {
         assert!(size >= 1, "thread pool needs at least one worker");
         let shared = Arc::new(Shared {
-            queue: Mutex::new(VecDeque::new()),
-            cv: Condvar::new(),
+            locals: (0..size).map(|_| WorkQueue::new()).collect(),
+            pending: AtomicUsize::new(0),
+            sleep_mx: Mutex::new(()),
+            wake_cv: Condvar::new(),
             inflight: AtomicUsize::new(0),
-            idle_cv: Condvar::new(),
             idle_mx: Mutex::new(()),
+            idle_cv: Condvar::new(),
             shutdown: AtomicBool::new(false),
             panics: AtomicUsize::new(0),
+            local_pops: AtomicUsize::new(0),
+            steals: AtomicUsize::new(0),
         });
         let workers = (0..size)
             .map(|i| {
                 let sh = Arc::clone(&shared);
                 std::thread::Builder::new()
                     .name(format!("memento-worker-{i}"))
-                    .spawn(move || worker_loop(sh))
+                    .spawn(move || worker_loop(sh, i))
                     .expect("spawn worker")
             })
             .collect();
-        ThreadPool { shared, workers, size }
+        ThreadPool { shared, workers, size, next: AtomicUsize::new(0) }
     }
 
     /// Number of worker threads.
@@ -71,15 +109,62 @@ impl ThreadPool {
         self.size
     }
 
-    /// Submits a job. Panics in the job are contained and counted, not
-    /// propagated (callers that need the outcome should channel it out).
+    /// Submits a job to the next worker queue (round-robin). Panics in the
+    /// job are contained and counted, not propagated (callers that need the
+    /// outcome should collect it themselves).
     pub fn execute<F: FnOnce() + Send + 'static>(&self, f: F) {
+        let idx = self.next.fetch_add(1, Ordering::Relaxed) % self.size;
+        self.submit_to(idx, Box::new(f));
+    }
+
+    /// Submits a job to a *specific* worker's queue. The job still runs
+    /// exactly once but may be stolen by a sibling if worker `idx` is busy —
+    /// this is a locality hint, not an affinity guarantee.
+    pub fn execute_pinned<F: FnOnce() + Send + 'static>(&self, idx: usize, f: F) {
+        self.submit_to(idx % self.size, Box::new(f));
+    }
+
+    fn submit_to(&self, idx: usize, job: Job) {
         self.shared.inflight.fetch_add(1, Ordering::SeqCst);
-        {
-            let mut q = self.shared.queue.lock().unwrap();
-            q.push_back(Box::new(f));
+        // pending must rise before the push (see Shared::pending).
+        self.shared.pending.fetch_add(1, Ordering::SeqCst);
+        self.shared.locals[idx].push(job);
+        self.wake(false);
+    }
+
+    /// Submits a batch of jobs, striping them round-robin across the worker
+    /// queues with one lock acquisition per queue. This is the scheduler's
+    /// dispatch path: for `k` jobs it costs `min(k, size)` locks instead of
+    /// `k`, and wakes all workers once.
+    pub fn execute_batch<F: FnOnce() + Send + 'static>(&self, jobs: Vec<F>) {
+        let k = jobs.len();
+        if k == 0 {
+            return;
         }
-        self.shared.cv.notify_one();
+        self.shared.inflight.fetch_add(k, Ordering::SeqCst);
+        self.shared.pending.fetch_add(k, Ordering::SeqCst);
+        let start = self.next.fetch_add(k, Ordering::Relaxed);
+        let mut striped: Vec<Vec<Job>> = (0..self.size).map(|_| Vec::new()).collect();
+        for (i, f) in jobs.into_iter().enumerate() {
+            striped[(start + i) % self.size].push(Box::new(f));
+        }
+        for (idx, stripe) in striped.into_iter().enumerate() {
+            if !stripe.is_empty() {
+                self.shared.locals[idx].push_batch(stripe);
+            }
+        }
+        self.wake(true);
+    }
+
+    fn wake(&self, all: bool) {
+        // Taking (and releasing) sleep_mx orders this wake-up after any
+        // in-progress "check pending, then wait" on the worker side.
+        drop(self.shared.sleep_mx.lock().unwrap());
+        if all {
+            self.shared.wake_cv.notify_all();
+        } else {
+            self.shared.wake_cv.notify_one();
+        }
     }
 
     /// Blocks until every submitted job has finished.
@@ -99,30 +184,68 @@ impl ThreadPool {
     pub fn panic_count(&self) -> usize {
         self.shared.panics.load(Ordering::SeqCst)
     }
+
+    /// Load-balance counters accumulated since construction.
+    pub fn stats(&self) -> PoolStats {
+        PoolStats {
+            local_pops: self.shared.local_pops.load(Ordering::Relaxed),
+            steals: self.shared.steals.load(Ordering::Relaxed),
+        }
+    }
 }
 
 impl Drop for ThreadPool {
     fn drop(&mut self) {
         self.shared.shutdown.store(true, Ordering::SeqCst);
-        self.shared.cv.notify_all();
+        drop(self.shared.sleep_mx.lock().unwrap());
+        self.shared.wake_cv.notify_all();
         for w in self.workers.drain(..) {
             let _ = w.join();
         }
     }
 }
 
-fn worker_loop(sh: Arc<Shared>) {
+/// Take the next job for worker `me`: own queue first, then steal.
+fn find_job(sh: &Shared, me: usize) -> Option<Job> {
+    if let Some(job) = sh.locals[me].pop() {
+        sh.pending.fetch_sub(1, Ordering::SeqCst);
+        sh.local_pops.fetch_add(1, Ordering::Relaxed);
+        return Some(job);
+    }
+    let n = sh.locals.len();
+    for k in 1..n {
+        let victim = (me + k) % n;
+        if let Some(job) = sh.locals[victim].steal() {
+            sh.pending.fetch_sub(1, Ordering::SeqCst);
+            sh.steals.fetch_add(1, Ordering::Relaxed);
+            return Some(job);
+        }
+    }
+    None
+}
+
+fn worker_loop(sh: Arc<Shared>, me: usize) {
     loop {
-        let job = {
-            let mut q = sh.queue.lock().unwrap();
-            loop {
-                if let Some(job) = q.pop_front() {
-                    break job;
-                }
+        let job = match find_job(&sh, me) {
+            Some(job) => job,
+            None => {
+                // Queues drained: exit on shutdown, otherwise park. The
+                // pending re-check under sleep_mx pairs with the producer's
+                // increment-then-lock ordering; the timeout only bounds the
+                // cost of pathological races, it is not load-bearing.
                 if sh.shutdown.load(Ordering::SeqCst) {
                     return;
                 }
-                q = sh.cv.wait(q).unwrap();
+                let guard = sh.sleep_mx.lock().unwrap();
+                if sh.pending.load(Ordering::SeqCst) == 0
+                    && !sh.shutdown.load(Ordering::SeqCst)
+                {
+                    let _ = sh
+                        .wake_cv
+                        .wait_timeout(guard, Duration::from_millis(10))
+                        .unwrap();
+                }
+                continue;
             }
         };
         if catch_unwind(AssertUnwindSafe(job)).is_err() {
@@ -148,14 +271,19 @@ where
     let results: Arc<Mutex<Vec<Option<T>>>> =
         Arc::new(Mutex::new((0..n).map(|_| None).collect()));
     let f = Arc::new(f);
-    for (i, item) in items.into_iter().enumerate() {
-        let results = Arc::clone(&results);
-        let f = Arc::clone(&f);
-        pool.execute(move || {
-            let out = f(item);
-            results.lock().unwrap()[i] = Some(out);
-        });
-    }
+    let jobs: Vec<_> = items
+        .into_iter()
+        .enumerate()
+        .map(|(i, item)| {
+            let results = Arc::clone(&results);
+            let f = Arc::clone(&f);
+            move || {
+                let out = f(item);
+                results.lock().unwrap()[i] = Some(out);
+            }
+        })
+        .collect();
+    pool.execute_batch(jobs);
     pool.join();
     Arc::try_unwrap(results)
         .unwrap_or_else(|_| panic!("pool joined but results still shared"))
@@ -228,6 +356,46 @@ mod tests {
     }
 
     #[test]
+    fn idle_workers_steal_pinned_backlog() {
+        // Two jobs pinned to worker 0; the first blocks until the second
+        // runs. Worker 0 is stuck inside job A, so job B can only run if a
+        // sibling steals it — completion proves the steal path works, and
+        // the counter must record it.
+        let pool = ThreadPool::new(4);
+        let barrier = Arc::new(std::sync::Barrier::new(2));
+        let b1 = Arc::clone(&barrier);
+        let b2 = Arc::clone(&barrier);
+        pool.execute_pinned(0, move || {
+            b1.wait();
+        });
+        pool.execute_pinned(0, move || {
+            b2.wait();
+        });
+        pool.join();
+        assert!(pool.stats().steals >= 1, "stats: {:?}", pool.stats());
+    }
+
+    #[test]
+    fn execute_batch_runs_everything() {
+        let pool = ThreadPool::new(3);
+        let counter = Arc::new(AtomicUsize::new(0));
+        let jobs: Vec<_> = (0..500)
+            .map(|_| {
+                let c = Arc::clone(&counter);
+                move || {
+                    c.fetch_add(1, Ordering::SeqCst);
+                }
+            })
+            .collect();
+        pool.execute_batch(jobs);
+        pool.execute_batch(Vec::<fn()>::new()); // empty batch is a no-op
+        pool.join();
+        assert_eq!(counter.load(Ordering::SeqCst), 500);
+        let s = pool.stats();
+        assert_eq!(s.local_pops + s.steals, 500);
+    }
+
+    #[test]
     fn scope_run_preserves_order() {
         let out = scope_run(3, (0..50).collect::<Vec<u64>>(), |i| i * 2);
         let got: Vec<u64> = out.into_iter().map(|o| o.unwrap()).collect();
@@ -262,5 +430,20 @@ mod tests {
         }
         let expected: u64 = (0..30u64).sum();
         assert_eq!(sum.load(Ordering::SeqCst), expected);
+    }
+
+    #[test]
+    fn single_worker_pool_runs_batch_in_order() {
+        let pool = ThreadPool::new(1);
+        let order = Arc::new(Mutex::new(Vec::new()));
+        let jobs: Vec<_> = (0..20)
+            .map(|i| {
+                let o = Arc::clone(&order);
+                move || o.lock().unwrap().push(i)
+            })
+            .collect();
+        pool.execute_batch(jobs);
+        pool.join();
+        assert_eq!(*order.lock().unwrap(), (0..20).collect::<Vec<_>>());
     }
 }
