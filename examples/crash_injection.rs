@@ -1,0 +1,55 @@
+//! Crash injection: process isolation surviving worker death.
+//!
+//! One task in this sweep calls `std::process::abort()` on its first
+//! attempt — an uncatchable, non-unwinding death, the same failure shape
+//! as a segfault or an OOM kill. Under the default thread backend that
+//! would take the whole run down; under `ExecBackend::Processes` only the
+//! worker process dies: the supervisor journals the crash, requeues the
+//! task under the retry policy, respawns the worker, and the run
+//! completes with every result intact.
+//!
+//! Note there is no worker-specific code here. The supervisor re-executes
+//! this binary with the worker environment set; when the re-execution
+//! reaches `Memento::run`, it notices that environment and serves tasks
+//! over the socket instead of starting a run of its own.
+//!
+//! Run with: `cargo run --release --example crash_injection`
+
+use memento::prelude::*;
+use std::time::Duration;
+
+fn main() -> Result<(), MementoError> {
+    let matrix = ConfigMatrix::builder()
+        .param("i", (0..8).map(pv_int).collect())
+        .build()?;
+
+    let m = Memento::new(|ctx| {
+        let i = ctx.param_i64("i")?;
+        if i == 3 && ctx.attempt == 1 {
+            eprintln!("task i=3 (pid {}): aborting the worker process!", std::process::id());
+            std::process::abort();
+        }
+        Ok(Json::obj(vec![("square", Json::int(i * i))]))
+    })
+    // 2 worker processes; a crashed slot may respawn up to 3 times.
+    .isolate_processes(2, 3)
+    // The crash consumes one attempt, so allow a second.
+    .with_retry(RetryPolicy::fixed(2, Duration::ZERO));
+
+    let results = m.run(&matrix)?;
+
+    println!("\n{} tasks, {} failed", results.len(), results.n_failed());
+    for o in results.iter() {
+        println!(
+            "  i={:<2} square={:<3} attempts={}",
+            o.spec.get("i").unwrap(),
+            o.value.as_ref().and_then(|v| v.get("square")).unwrap(),
+            o.attempts,
+        );
+    }
+    assert_eq!(results.n_failed(), 0, "the crash must not cost any result");
+    let victim = results.find(&[("i", pv_int(3))]).unwrap();
+    assert_eq!(victim.attempts, 2, "i=3 survived via a second attempt");
+    println!("\nworker died mid-task; the run did not.");
+    Ok(())
+}

@@ -1,0 +1,103 @@
+//! Bench E7: process-isolation overhead — thread vs process dispatch.
+//!
+//! The process backend buys crash isolation with one socket round-trip
+//! per attempt plus worker spawn amortized over the run. This bench
+//! quantifies that price on no-op tasks (the worst case: real experiment
+//! functions bury microseconds of dispatch under seconds of compute) and
+//! records a `ipc_dispatch_*` row next to the scheduler rows in
+//! `BENCH_sched_cache.json`.
+//!
+//! Run on a toolchain host from `rust/`:
+//! `cargo bench --bench ipc` (the tier-1 container has no cargo).
+
+#![cfg_attr(not(unix), allow(dead_code, unused_imports))]
+
+use memento::bench::{sched_cache_trajectory_path, Suite};
+use memento::config::matrix::ConfigMatrix;
+use memento::config::value::pv_int;
+use memento::coordinator::memento::Memento;
+use memento::prelude::{MementoError, TaskContext};
+use memento::util::json::Json;
+use std::sync::Arc;
+
+fn exp(ctx: &TaskContext) -> Result<Json, MementoError> {
+    Ok(Json::int(ctx.param_i64("i")?))
+}
+
+fn flat_matrix(n: usize) -> ConfigMatrix {
+    ConfigMatrix::builder()
+        .param("i", (0..n as i64).map(pv_int).collect())
+        .build()
+        .unwrap()
+}
+
+#[cfg(not(unix))]
+fn main() {
+    eprintln!("the ipc bench needs unix domain sockets; skipping on this platform");
+}
+
+#[cfg(unix)]
+fn main() {
+    // Re-executions of this bench binary are workers: serve and exit
+    // before any benching happens (and before argv parsing — the worker
+    // argv is whatever cargo passed us, e.g. `--bench`).
+    memento::ipc::worker::maybe_serve(Arc::new(exp));
+
+    let mut suite = Suite::new("E7 — process-isolation dispatch overhead");
+    let mut extras: Vec<(String, Json)> = Vec::new();
+
+    let n = 200usize;
+    for &workers in &[2usize, 4] {
+        let matrix = flat_matrix(n);
+        let thread = suite
+            .bench_with_setup(
+                format!("{n} no-op tasks, {workers} threads"),
+                1,
+                5,
+                || (),
+                |_| {
+                    let r = Memento::new(exp).workers(workers).run(&matrix).unwrap();
+                    assert_eq!(r.len(), n);
+                },
+            )
+            .clone();
+        suite.note(format!("{:.1}µs/task", thread.mean / n as f64 * 1e6));
+
+        let process = suite
+            .bench_with_setup(
+                format!("{n} no-op tasks, {workers} processes"),
+                1,
+                3,
+                || (),
+                |_| {
+                    let r = Memento::new(exp)
+                        .isolate_processes(workers, 1)
+                        .run(&matrix)
+                        .unwrap();
+                    assert_eq!(r.len(), n);
+                },
+            )
+            .clone();
+        let ratio = process.mean / thread.mean;
+        suite.note(format!(
+            "{:.1}µs/task, {ratio:.1}x thread dispatch (spawn amortized over {n})",
+            process.mean / n as f64 * 1e6
+        ));
+        extras.push((
+            format!("ipc_dispatch_{workers}w_{n}tasks"),
+            Json::obj(vec![
+                ("thread_us_per_task", Json::Num(thread.mean / n as f64 * 1e6)),
+                ("process_us_per_task", Json::Num(process.mean / n as f64 * 1e6)),
+                ("process_over_thread", Json::Num(ratio)),
+            ]),
+        ));
+        println!(
+            "E7 headline ({workers}w): dispatch {:.1}µs/task threads → {:.1}µs/task processes",
+            thread.mean / n as f64 * 1e6,
+            process.mean / n as f64 * 1e6,
+        );
+    }
+
+    suite.write_trajectory(&sched_cache_trajectory_path(), extras);
+    suite.finish();
+}

@@ -26,6 +26,20 @@
 //! not resurrect an entry), so they stay on the disk path until the cache
 //! is reopened.
 //!
+//! **Single-writer mode** ([`ResultCache::exclusive`]) drops that
+//! behind-the-back tolerance: when the handle's owner is known to be the
+//! only writer (e.g. the process-isolation supervisor — workers never
+//! touch the store), the index is authoritative and a cold miss returns
+//! without any filesystem probe at all.
+//!
+//! **Eviction is LRU**: residency under the byte budget is ordered by
+//! last *use* (touch-on-get), not insertion, so sweep workloads that
+//! revisit a parameter neighbourhood keep their hot working set resident.
+//! Recency is tracked by per-entry generation numbers in a lazy queue —
+//! a touch appends a fresh `(key, gen)` pair and stale pairs are skipped
+//! at eviction time and periodically compacted, keeping both `get` and
+//! `put` O(1) amortized with no linked-list juggling.
+//!
 //! Corruption tolerance is unchanged: an unreadable/unparsable entry
 //! behaves as a miss (and is counted), never as an error — a half-written
 //! file from a crash must not wedge the rerun whose whole purpose is to
@@ -36,7 +50,7 @@ use crate::util::fs::atomic_write;
 use crate::util::json::{parse, Json};
 use std::collections::{HashMap, VecDeque};
 use std::path::{Path, PathBuf};
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::Mutex;
 
 /// Number of independent memory-tier shards (power of two, small enough
@@ -53,9 +67,12 @@ const DEFAULT_MEM_BUDGET_PER_SHARD: usize = 16 << 20;
 
 /// Memory-tier slot for one id.
 enum Slot {
-    /// Value resident in memory (warm hits never touch disk); the `usize`
-    /// is the serialized entry size used for budget accounting.
-    Loaded(Json, usize),
+    /// Value resident in memory (warm hits never touch disk). The `usize`
+    /// is the serialized entry size used for budget accounting; the `u64`
+    /// is the recency generation — it matches exactly one entry in the
+    /// shard's eviction queue, which is what makes stale queue pairs
+    /// detectable in O(1).
+    Loaded(Json, usize, u64),
     /// Entry known to exist on disk but not read yet (pre-existing dir,
     /// demoted under memory pressure, or too large to keep resident).
     /// Counts toward `len()`.
@@ -105,15 +122,18 @@ impl CacheStats {
 }
 
 /// One memory-tier shard: the slot map plus O(1) residency accounting and
-/// an insertion-ordered eviction queue, so neither the budget check nor
+/// a recency-ordered eviction queue, so neither the budget check nor
 /// victim selection ever scans the map.
 #[derive(Default)]
 struct Shard {
     map: HashMap<String, Slot>,
-    /// Resident keys in insertion (≈ FIFO) order. Entries go stale when a
-    /// key is demoted/invalidated/re-inserted; eviction skips stale heads
-    /// lazily and the queue is compacted when it outgrows the residents.
-    eviction_queue: VecDeque<String>,
+    /// `(key, generation)` pairs in recency order (least recent at the
+    /// front). A pair is live iff its generation matches the slot's
+    /// current generation; touches/demotions/invalidations leave stale
+    /// pairs behind, which eviction skips lazily and compaction drops.
+    eviction_queue: VecDeque<(String, u64)>,
+    /// Monotonic recency counter; bumped on every insert and touch.
+    gen: u64,
     /// Number of `Slot::Loaded` entries in `map`.
     resident: usize,
     /// Sum of the serialized sizes of `Slot::Loaded` entries.
@@ -129,6 +149,10 @@ pub struct ResultCache {
     /// corruption — and skipping the fsync makes `put` ~5-10× cheaper
     /// (see EXPERIMENTS.md §Perf-L3). Opt in via [`ResultCache::durable`].
     fsync: bool,
+    /// Single-writer mode: the in-memory index is authoritative, so an id
+    /// absent from it misses without a disk probe. Sound only while no
+    /// other process writes the directory; see [`ResultCache::exclusive`].
+    exclusive: AtomicBool,
     /// Memory tier: sharded id → slot maps.
     shards: Vec<Mutex<Shard>>,
     /// Byte budget per shard for resident values; exceeding it demotes the
@@ -169,6 +193,7 @@ impl ResultCache {
             dir,
             stats: CacheStats::default(),
             fsync: false,
+            exclusive: AtomicBool::new(false),
             shards,
             mem_budget_per_shard: DEFAULT_MEM_BUDGET_PER_SHARD,
         })
@@ -178,6 +203,29 @@ impl ResultCache {
     pub fn durable(mut self, yes: bool) -> Self {
         self.fsync = yes;
         self
+    }
+
+    /// Declares this handle the **only writer** of the cache directory:
+    /// the in-memory index (seeded by the one-time scan in
+    /// [`ResultCache::open`] and kept current by `put`/`invalidate`)
+    /// becomes authoritative, and a cold miss returns without probing the
+    /// filesystem at all. Do not enable while another process writes the
+    /// same directory — its entries would be invisible until reopen.
+    pub fn exclusive(self) -> Self {
+        self.set_exclusive(true);
+        self
+    }
+
+    /// In-place variant of [`ResultCache::exclusive`] for shared handles
+    /// (the process-isolation supervisor enables it on the run's cache:
+    /// workers never write the store directly).
+    pub fn set_exclusive(&self, yes: bool) {
+        self.exclusive.store(yes, Ordering::Relaxed);
+    }
+
+    /// True when single-writer mode is on.
+    pub fn is_exclusive(&self) -> bool {
+        self.exclusive.load(Ordering::Relaxed)
     }
 
     /// Bounds the memory tier to ~`total_bytes` of resident serialized
@@ -203,17 +251,31 @@ impl ResultCache {
     }
 
     /// Looks up a cached value. Warm entries are served from the memory
-    /// tier without any filesystem access; cold-but-indexed entries read
-    /// the disk tier once and promote. Any read/parse problem counts as a
-    /// miss.
+    /// tier without any filesystem access (and are *touched*: LRU
+    /// eviction keeps recently-used entries resident); cold-but-indexed
+    /// entries read the disk tier once and promote. Any read/parse
+    /// problem counts as a miss. In [`ResultCache::exclusive`] mode an id
+    /// absent from the index misses with zero filesystem work.
     pub fn get(&self, id: &TaskId) -> Option<Json> {
         let shard = &self.shards[shard_of(&id.0)];
         {
-            let sh = shard.lock().unwrap();
-            if let Some(Slot::Loaded(v, _)) = sh.map.get(&id.0) {
+            let mut sh = shard.lock().unwrap();
+            let warm = match sh.map.get(&id.0) {
+                Some(Slot::Loaded(v, _, _)) => Some(v.clone()),
+                Some(Slot::OnDisk) => None,
+                None if self.exclusive.load(Ordering::Relaxed) => {
+                    // Single-writer mode: the index is authoritative, so
+                    // this is a definitive (allocation- and I/O-free) miss.
+                    self.stats.misses.fetch_add(1, Ordering::Relaxed);
+                    return None;
+                }
+                None => None,
+            };
+            if let Some(v) = warm {
+                self.touch_locked(&mut sh, &id.0);
                 self.stats.hits.fetch_add(1, Ordering::Relaxed);
                 self.stats.mem_hits.fetch_add(1, Ordering::Relaxed);
-                return Some(v.clone());
+                return Some(v);
             }
         }
         // Cold path: disk tier. Read outside the shard lock so a slow disk
@@ -255,14 +317,29 @@ impl ResultCache {
         }
     }
 
+    /// Marks a resident entry as just-used: bumps its generation and
+    /// appends a fresh queue pair, invalidating the old pair in place.
+    /// This is the "L" in LRU — eviction pops least-recent live pairs.
+    fn touch_locked(&self, sh: &mut Shard, key: &str) {
+        sh.gen += 1;
+        let g = sh.gen;
+        match sh.map.get_mut(key) {
+            Some(Slot::Loaded(_, _, slot_gen)) => *slot_gen = g,
+            _ => return,
+        }
+        sh.eviction_queue.push_back((key.to_string(), g));
+        self.maybe_compact(sh);
+    }
+
     /// Inserts a resident value into a locked shard, then demotes
-    /// oldest-first until the shard is back under its byte budget. All
-    /// bookkeeping is O(1) amortized: the budget check reads a counter and
-    /// victims pop off the eviction queue (skipping stale entries lazily,
-    /// with periodic compaction bounding the queue).
+    /// least-recently-used entries until the shard is back under its byte
+    /// budget. All bookkeeping is O(1) amortized: the budget check reads
+    /// a counter and victims pop off the recency queue (stale pairs —
+    /// touched, demoted, or invalidated since being queued — are detected
+    /// by a generation mismatch and skipped).
     fn insert_loaded_locked(&self, sh: &mut Shard, key: &str, value: Json, bytes: usize) {
         // Retire accounting for a value being replaced in place.
-        if let Some(Slot::Loaded(_, old)) = sh.map.get(key) {
+        if let Some(Slot::Loaded(_, old, _)) = sh.map.get(key) {
             sh.resident -= 1;
             sh.resident_bytes -= *old;
         }
@@ -271,33 +348,39 @@ impl ResultCache {
             sh.map.insert(key.to_string(), Slot::OnDisk);
             return;
         }
-        sh.map.insert(key.to_string(), Slot::Loaded(value, bytes));
+        sh.gen += 1;
+        let g = sh.gen;
+        sh.map.insert(key.to_string(), Slot::Loaded(value, bytes, g));
         sh.resident += 1;
         sh.resident_bytes += bytes;
-        sh.eviction_queue.push_back(key.to_string());
-        // The just-inserted key sits at the back and fits the budget alone,
-        // so this loop always terminates before demoting it.
+        sh.eviction_queue.push_back((key.to_string(), g));
+        // The just-inserted key holds the newest generation at the back
+        // and fits the budget alone, so this loop always terminates
+        // before demoting it.
         while sh.resident_bytes > self.mem_budget_per_shard {
-            let Some(victim) = sh.eviction_queue.pop_front() else { break };
+            let Some((victim, vg)) = sh.eviction_queue.pop_front() else { break };
             let victim_bytes = match sh.map.get(&victim) {
-                Some(Slot::Loaded(_, b)) => *b,
-                _ => continue, // stale queue entry (demoted/invalidated)
+                Some(Slot::Loaded(_, b, lg)) if *lg == vg => *b,
+                _ => continue, // stale pair (touched/demoted/invalidated)
             };
             sh.map.insert(victim, Slot::OnDisk);
             sh.resident -= 1;
             sh.resident_bytes -= victim_bytes;
         }
-        // Compact the queue (drop demoted keys, dedup re-inserted ones to
-        // their newest position) once stale entries dominate; leaves
-        // exactly one entry per resident, amortized O(1) per insert.
+        self.maybe_compact(sh);
+    }
+
+    /// Drops stale queue pairs once they dominate. Generations make this
+    /// trivial: a pair is live iff it matches its slot's current
+    /// generation, and each resident has exactly one live pair, so the
+    /// front-to-back sweep preserves recency order. Amortized O(1) per
+    /// insert/touch.
+    fn maybe_compact(&self, sh: &mut Shard) {
         if sh.eviction_queue.len() > 4 * sh.resident + 64 {
-            let mut seen = std::collections::HashSet::new();
-            let mut kept: VecDeque<String> = VecDeque::with_capacity(sh.resident);
-            while let Some(k) = sh.eviction_queue.pop_back() {
-                if matches!(sh.map.get(&k), Some(Slot::Loaded(_, _)))
-                    && seen.insert(k.clone())
-                {
-                    kept.push_front(k);
+            let mut kept: VecDeque<(String, u64)> = VecDeque::with_capacity(sh.resident);
+            while let Some((k, g)) = sh.eviction_queue.pop_front() {
+                if matches!(sh.map.get(&k), Some(Slot::Loaded(_, _, lg)) if *lg == g) {
+                    kept.push_back((k, g));
                 }
             }
             sh.eviction_queue = kept;
@@ -325,7 +408,8 @@ impl ResultCache {
     /// True if an entry exists (without counting a hit/miss). O(1) for
     /// indexed entries; falls back to a read-only disk probe for ids
     /// written behind the cache's back (not indexed here — a probe racing
-    /// `invalidate` must not resurrect the entry).
+    /// `invalidate` must not resurrect the entry). In
+    /// [`ResultCache::exclusive`] mode the index answer is final.
     pub fn contains(&self, id: &TaskId) -> bool {
         if self.shards[shard_of(&id.0)]
             .lock()
@@ -334,6 +418,9 @@ impl ResultCache {
             .contains_key(&id.0)
         {
             return true;
+        }
+        if self.exclusive.load(Ordering::Relaxed) {
+            return false;
         }
         self.path_of(id).exists()
     }
@@ -363,7 +450,7 @@ impl ResultCache {
     pub fn invalidate(&self, id: &TaskId) {
         let _ = std::fs::remove_file(self.path_of(id));
         let mut sh = self.shards[shard_of(&id.0)].lock().unwrap();
-        if let Some(Slot::Loaded(_, b)) = sh.map.remove(&id.0) {
+        if let Some(Slot::Loaded(_, b, _)) = sh.map.remove(&id.0) {
             sh.resident -= 1;
             sh.resident_bytes -= b;
         }
@@ -396,7 +483,7 @@ impl ResultCache {
         for shard in &self.shards {
             let mut sh = shard.lock().unwrap();
             for slot in sh.map.values_mut() {
-                if matches!(slot, Slot::Loaded(_, _)) {
+                if matches!(slot, Slot::Loaded(..)) {
                     *slot = Slot::OnDisk;
                 }
             }
@@ -554,6 +641,70 @@ mod tests {
         let (mem, disk) = cache.stats().tier_snapshot();
         assert_eq!(mem, 0);
         assert_eq!(disk, 2);
+    }
+
+    #[test]
+    fn lru_touch_keeps_hot_entry_resident_through_sweep() {
+        // A sweep inserts a long stream of entries under a tight budget
+        // while one "hot" id is re-read before every insert. Delete the
+        // hot entry's backing file: if eviction were FIFO the hot entry
+        // (oldest insert) would be demoted and the next get would miss
+        // (file gone); with LRU touch-on-get it must stay resident and be
+        // served from memory for the whole sweep.
+        let td = TempDir::new("cache-lru").unwrap();
+        let cache = ResultCache::open(td.path())
+            .unwrap()
+            .with_memory_budget(SHARDS * 1024);
+        let hot_spec = spec(9_999);
+        let hot = hot_spec.id("v1");
+        cache.put(&hot, &hot_spec, &Json::int(42)).unwrap();
+        std::fs::remove_file(td.path().join(format!("{hot}.json"))).unwrap();
+        for n in 0..320 {
+            assert_eq!(
+                cache.get(&hot).map(|v| v.as_i64()),
+                Some(Some(42)),
+                "hot entry evicted after {n} inserts (LRU broken)"
+            );
+            let s = spec(n);
+            cache.put(&s.id("v1"), &s, &Json::int(n)).unwrap();
+        }
+        // Budget still respected while the hot set stayed warm.
+        assert!(cache.resident_bytes() <= SHARDS * 1024);
+        let (_, disk) = cache.stats().tier_snapshot();
+        assert_eq!(disk, 0, "hot gets must never have touched disk");
+    }
+
+    #[test]
+    fn exclusive_mode_skips_disk_probe_on_cold_miss() {
+        let td = TempDir::new("cache-excl").unwrap();
+        let s = spec(1);
+        let id = s.id("v1");
+        // Two handles over the same (empty) dir: one shared, one
+        // exclusive. A third handle then writes behind both their backs.
+        let shared = ResultCache::open(td.path()).unwrap();
+        let excl = ResultCache::open(td.path()).unwrap().exclusive();
+        assert!(excl.is_exclusive());
+        ResultCache::open(td.path())
+            .unwrap()
+            .put(&id, &s, &Json::int(7))
+            .unwrap();
+        // The shared handle falls through to disk and finds the foreign
+        // entry; the exclusive handle trusts its (empty) index.
+        assert_eq!(shared.get(&id).unwrap().as_i64(), Some(7));
+        assert!(shared.contains(&id));
+        assert!(excl.get(&id).is_none(), "exclusive index is authoritative");
+        assert!(!excl.contains(&id));
+        let (hits, misses, _, _) = excl.stats().snapshot();
+        assert_eq!((hits, misses), (0, 1));
+        // The exclusive handle's own writes still hit normally.
+        excl.put(&id, &s, &Json::int(8)).unwrap();
+        assert_eq!(excl.get(&id).unwrap().as_i64(), Some(8));
+        assert!(excl.contains(&id));
+        // Entries indexed at open (pre-existing dir) are served even in
+        // exclusive mode.
+        let reopened = ResultCache::open(td.path()).unwrap().exclusive();
+        assert_eq!(reopened.len(), 1);
+        assert_eq!(reopened.get(&id).unwrap().as_i64(), Some(8));
     }
 
     #[test]

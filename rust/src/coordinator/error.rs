@@ -9,32 +9,48 @@
 use std::fmt;
 
 /// Top-level library error.
-#[derive(Debug, thiserror::Error)]
+///
+/// `Display`/`Error` are hand-implemented: the offline image has no
+/// crates.io access, so `thiserror` is not available.
+#[derive(Debug)]
 pub enum MementoError {
     /// Invalid configuration matrix or config file.
-    #[error("config error: {0}")]
     Config(String),
 
     /// Persistence (cache/checkpoint) I/O problems.
-    #[error("storage error: {0}")]
     Storage(String),
 
     /// A checkpoint manifest that does not match the matrix being run.
-    #[error("checkpoint mismatch: {0}")]
     CheckpointMismatch(String),
 
     /// Errors raised by the user's experiment function.
-    #[error("experiment error: {0}")]
     Experiment(String),
 
     /// PJRT / artifact runtime errors.
-    #[error("runtime error: {0}")]
     Runtime(String),
 
+    /// Inter-process execution errors (worker spawn/handshake/protocol).
+    Ipc(String),
+
     /// A run was asked to continue but was already poisoned by fail-fast.
-    #[error("run aborted: {0}")]
     Aborted(String),
 }
+
+impl fmt::Display for MementoError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            MementoError::Config(m) => write!(f, "config error: {m}"),
+            MementoError::Storage(m) => write!(f, "storage error: {m}"),
+            MementoError::CheckpointMismatch(m) => write!(f, "checkpoint mismatch: {m}"),
+            MementoError::Experiment(m) => write!(f, "experiment error: {m}"),
+            MementoError::Runtime(m) => write!(f, "runtime error: {m}"),
+            MementoError::Ipc(m) => write!(f, "ipc error: {m}"),
+            MementoError::Aborted(m) => write!(f, "run aborted: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for MementoError {}
 
 impl MementoError {
     pub fn config(msg: impl Into<String>) -> Self {
@@ -49,15 +65,24 @@ impl MementoError {
     pub fn runtime(msg: impl Into<String>) -> Self {
         MementoError::Runtime(msg.into())
     }
+    pub fn ipc(msg: impl Into<String>) -> Self {
+        MementoError::Ipc(msg.into())
+    }
 }
 
-/// How a task failed: an `Err` from the experiment function or a panic.
+/// How a task failed: an `Err` from the experiment function, a panic, or —
+/// under the process-isolated backend — the death of the worker process
+/// that was executing it.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub enum FailureKind {
     /// The experiment function returned an error.
     Error,
     /// The experiment function panicked; the panic was contained.
     Panic,
+    /// The worker process executing the task died (segfault, abort, OOM
+    /// kill, `kill -9`). Only produced by [`crate::ipc::supervisor`];
+    /// in-process threads cannot survive such a failure to report it.
+    Crash,
 }
 
 impl fmt::Display for FailureKind {
@@ -65,6 +90,7 @@ impl fmt::Display for FailureKind {
         match self {
             FailureKind::Error => write!(f, "error"),
             FailureKind::Panic => write!(f, "panic"),
+            FailureKind::Crash => write!(f, "crash"),
         }
     }
 }

@@ -50,7 +50,7 @@ use crate::coordinator::notify::{Notification, NotificationProvider};
 use crate::coordinator::progress::{ProgressReporter, ProgressState};
 use crate::coordinator::results::{ResultSet, TaskOutcome, TaskStatus};
 use crate::coordinator::retry::RetryPolicy;
-use crate::coordinator::scheduler::SchedulerOptions;
+use crate::coordinator::scheduler::{ExecBackend, SchedulerOptions};
 use crate::coordinator::task::{task_seed, TaskContext, TaskId, TaskSpec};
 use crate::util::json::Json;
 use crate::util::time::Stopwatch;
@@ -76,6 +76,9 @@ pub struct RunOptions {
     pub checkpoint_flush_every: usize,
     /// Print progress lines at this interval (None = quiet).
     pub progress_interval: Option<Duration>,
+    /// Execution tier: in-process threads (default) or isolated worker
+    /// processes (see [`crate::ipc`]).
+    pub backend: ExecBackend,
 }
 
 impl Default for RunOptions {
@@ -88,6 +91,7 @@ impl Default for RunOptions {
             retry: RetryPolicy::none(),
             checkpoint_flush_every: 1,
             progress_interval: None,
+            backend: ExecBackend::Threads,
         }
     }
 }
@@ -102,6 +106,9 @@ pub struct Memento {
     notifier: Option<Arc<dyn NotificationProvider>>,
     metrics: Arc<RunMetrics>,
     journal: Option<Arc<Journal>>,
+    /// Argv for spawned worker processes (process backend). `None` = the
+    /// current process's own arguments.
+    worker_args: Option<Vec<String>>,
 }
 
 impl Memento {
@@ -117,6 +124,7 @@ impl Memento {
             notifier: None,
             metrics: Arc::new(RunMetrics::new()),
             journal: None,
+            worker_args: None,
         }
     }
 
@@ -129,6 +137,31 @@ impl Memento {
 
     pub fn fail_fast(mut self, yes: bool) -> Self {
         self.options.fail_fast = yes;
+        self
+    }
+
+    /// Picks the execution tier (thread pool vs isolated worker
+    /// processes). See [`ExecBackend`] for the trade-off.
+    pub fn backend(mut self, backend: ExecBackend) -> Self {
+        self.options.backend = backend;
+        self
+    }
+
+    /// Shorthand for [`Memento::backend`] with
+    /// [`ExecBackend::Processes`]: run tasks in `workers` isolated
+    /// processes, respawning a crashed worker up to `crash_budget` times
+    /// per slot.
+    pub fn isolate_processes(self, workers: usize, crash_budget: u32) -> Self {
+        self.backend(ExecBackend::Processes { workers: workers.max(1), crash_budget })
+    }
+
+    /// Overrides the argument vector used to spawn worker processes
+    /// (process backend only). The default re-uses the current process's
+    /// own arguments, which is right for binaries whose `main` reaches
+    /// `Memento::run` again when re-executed; test binaries instead pass a
+    /// libtest filter selecting a worker-entry `#[test]` function.
+    pub fn worker_args(mut self, args: Vec<String>) -> Self {
+        self.worker_args = Some(args);
         self
     }
 
@@ -219,6 +252,19 @@ impl Memento {
     }
 
     fn run_inner(&self, matrix: &ConfigMatrix, resuming: bool) -> Result<ResultSet, MementoError> {
+        // Worker interception: when this process was spawned by a
+        // supervisor (see `crate::ipc`), `run` does not start a run of its
+        // own — it serves task attempts over the socket with this
+        // Memento's experiment function, then exits. This is what lets a
+        // binary opt into process isolation with a single builder call: a
+        // re-execution of itself flows back here and becomes a worker.
+        #[cfg(unix)]
+        {
+            if crate::ipc::worker::active() {
+                crate::ipc::worker::serve(Arc::clone(&self.exp_fn))?;
+                std::process::exit(0);
+            }
+        }
         crate::config::validate::validate(matrix)?;
         let wall = Stopwatch::start();
         let specs = expand::expand(matrix);
@@ -323,23 +369,37 @@ impl Memento {
             ProgressReporter::start(Arc::clone(&progress), iv, false)
         });
 
-        // -- per-task job ----------------------------------------------------
-        let job = self.make_job(
-            Arc::clone(&settings),
-            checkpoint.clone(),
-            version.clone(),
-        );
-        let sched = SchedulerOptions {
-            workers: self.options.workers,
-            fail_fast: self.options.fail_fast,
+        // -- dispatch over the selected backend ------------------------------
+        let (run_outcomes, skipped_count, aborted) = match self.options.backend {
+            ExecBackend::Threads => {
+                let job = self.make_job(
+                    Arc::clone(&settings),
+                    checkpoint.clone(),
+                    version.clone(),
+                );
+                let sched = SchedulerOptions {
+                    workers: self.options.workers,
+                    fail_fast: self.options.fail_fast,
+                };
+                let report = crate::coordinator::scheduler::run_all_with_metrics(
+                    pending,
+                    &sched,
+                    job,
+                    Some(Arc::clone(&progress)),
+                    Some(Arc::clone(&self.metrics)),
+                );
+                (report.outcomes, report.skipped.len(), report.aborted)
+            }
+            ExecBackend::Processes { workers, crash_budget } => self.run_processes(
+                pending,
+                &settings,
+                checkpoint.clone(),
+                version.clone(),
+                Arc::clone(&progress),
+                workers,
+                crash_budget,
+            )?,
         };
-        let report = crate::coordinator::scheduler::run_all_with_metrics(
-            pending,
-            &sched,
-            job,
-            Some(Arc::clone(&progress)),
-            Some(Arc::clone(&self.metrics)),
-        );
 
         // -- final checkpoint flush ------------------------------------------
         if let Some(ck) = &checkpoint {
@@ -348,7 +408,7 @@ impl Memento {
         }
 
         let mut outcomes = restored;
-        outcomes.extend(report.outcomes);
+        outcomes.extend(run_outcomes);
         let results = ResultSet::new(outcomes);
 
         let succeeded = results.successes().count();
@@ -361,14 +421,143 @@ impl Memento {
             wall_secs: wall.elapsed_secs(),
         });
 
-        if report.aborted {
+        if aborted {
             return Err(MementoError::Aborted(format!(
                 "fail-fast stopped the run after {failed} failure(s); \
-                 {} task(s) were skipped",
-                report.skipped.len()
+                 {skipped_count} task(s) were skipped"
             )));
         }
         Ok(results)
+    }
+
+    /// Dispatches the pending specs over isolated worker processes (the
+    /// [`ExecBackend::Processes`] tier; see [`crate::ipc`]). The
+    /// supervisor owns journal/metrics/progress accounting per attempt;
+    /// the `record` hook below owns the persistence pipeline (cache,
+    /// checkpoint, failure notification), mirroring the thread backend's
+    /// per-task job tail.
+    #[cfg(unix)]
+    #[allow(clippy::too_many_arguments)]
+    fn run_processes(
+        &self,
+        pending: Vec<TaskSpec>,
+        settings: &std::collections::BTreeMap<String, Json>,
+        checkpoint: Option<Arc<CheckpointStore>>,
+        version: String,
+        progress: Arc<ProgressState>,
+        workers: usize,
+        crash_budget: u32,
+    ) -> Result<(Vec<TaskOutcome>, usize, bool), MementoError> {
+        use crate::ipc::supervisor::{self, SupervisorHooks, SupervisorOptions};
+
+        // Workers never write the store directly — for the duration of
+        // this dispatch the supervisor is the single writer, so the cache
+        // index is authoritative and cold misses can skip their per-id
+        // disk probe. The previous mode is restored afterwards: a shared
+        // handle must not lose its documented multi-writer tolerance for
+        // later runs just because one run used process isolation.
+        let prev_exclusive = self.cache.as_ref().map(|c| {
+            let prev = c.is_exclusive();
+            c.set_exclusive(true);
+            prev
+        });
+
+        let mut opts = SupervisorOptions {
+            workers: workers.max(1),
+            crash_budget,
+            retry: self.options.retry,
+            fail_fast: self.options.fail_fast,
+            version,
+            run_seed: self.options.seed,
+            ..SupervisorOptions::default()
+        };
+        if let Some(args) = &self.worker_args {
+            opts.worker_args = args.clone();
+        }
+
+        let save_progress = checkpoint.as_ref().map(|ck| {
+            let ck = Arc::clone(ck);
+            Arc::new(move |tid: &TaskId, j: &Json| ck.save_progress(tid, j))
+                as Arc<dyn Fn(&TaskId, &Json) + Send + Sync>
+        });
+        let load_progress = checkpoint.as_ref().map(|ck| {
+            let ck = Arc::clone(ck);
+            Arc::new(move |tid: &TaskId| ck.load_progress(tid))
+                as Arc<dyn Fn(&TaskId) -> Option<Json> + Send + Sync>
+        });
+        let record = {
+            let cache = self.cache.clone();
+            let checkpoint = checkpoint.clone();
+            let notifier = self.notifier.clone();
+            Arc::new(move |o: &TaskOutcome| match (&o.status, &o.value) {
+                (TaskStatus::Success, Some(v)) => {
+                    if let Some(cache) = &cache {
+                        let _ = cache.put(&o.id, &o.spec, v);
+                    }
+                    if let Some(ck) = &checkpoint {
+                        let _ = ck.record(&o.id, Some(v), None, o.duration_secs, o.attempts);
+                        ck.clear_progress(&o.id);
+                    }
+                }
+                _ => {
+                    let message = o
+                        .failure
+                        .as_ref()
+                        .map(|f| f.message.clone())
+                        .unwrap_or_else(|| "unknown failure".to_string());
+                    if let Some(ck) = &checkpoint {
+                        let _ = ck.record(
+                            &o.id,
+                            None,
+                            Some(&message),
+                            o.duration_secs,
+                            o.attempts,
+                        );
+                    }
+                    if let (Some(n), Some(f)) = (&notifier, &o.failure) {
+                        n.notify(&Notification::TaskFailed { failure: f.clone() });
+                    }
+                }
+            }) as Arc<dyn Fn(&TaskOutcome) + Send + Sync>
+        };
+
+        let report = supervisor::run(
+            pending,
+            settings.clone(),
+            opts,
+            SupervisorHooks {
+                journal: self.journal.clone(),
+                metrics: Some(Arc::clone(&self.metrics)),
+                progress: Some(progress),
+                save_progress,
+                load_progress,
+                record: Some(record),
+            },
+        );
+        if let (Some(c), Some(prev)) = (&self.cache, prev_exclusive) {
+            c.set_exclusive(prev);
+        }
+        let report = report?;
+        Ok((report.outcomes, report.skipped.len(), report.aborted))
+    }
+
+    /// Process isolation needs Unix domain sockets and `fork`/`exec`
+    /// process spawning; other platforms fall back to a clear error.
+    #[cfg(not(unix))]
+    #[allow(clippy::too_many_arguments)]
+    fn run_processes(
+        &self,
+        _pending: Vec<TaskSpec>,
+        _settings: &std::collections::BTreeMap<String, Json>,
+        _checkpoint: Option<Arc<CheckpointStore>>,
+        _version: String,
+        _progress: Arc<ProgressState>,
+        _workers: usize,
+        _crash_budget: u32,
+    ) -> Result<(Vec<TaskOutcome>, usize, bool), MementoError> {
+        Err(MementoError::ipc(
+            "ExecBackend::Processes requires a unix platform",
+        ))
     }
 
     /// Builds the per-task closure: context construction, retry loop, panic

@@ -1,8 +1,9 @@
 //! Run metrics: counters, timers, and the end-of-run summary block.
 //!
-//! Thread-safe by construction (atomics + a mutex-guarded histogram); every
-//! worker records into the same registry. The summary block is what the
-//! `memento` CLI prints after a run and what the benches sample.
+//! Thread-safe by construction (atomics + per-worker reservoir stripes
+//! merged on read); every worker records into the same registry without
+//! contending on a shared lock. The summary block is what the `memento`
+//! CLI prints after a run and what the benches sample.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
@@ -26,22 +27,56 @@ impl Counter {
     }
 }
 
-/// Aggregated duration samples (sum/count/min/max + reservoir for p50/p95).
+/// Aggregated duration samples: lock-free sum/count plus a **striped**
+/// reservoir for p50/p95.
+///
+/// The reservoir used to be a single `Mutex<Vec<u64>>`, which serialized
+/// every worker on one lock — fine at one sample per dispatch chunk, but
+/// a real bottleneck for per-task timers (`exec_time`) at 10⁵+ tasks/s.
+/// Samples now land in per-worker stripes: each recording thread is
+/// assigned a stripe once (thread-local), so workers write disjoint locks
+/// with zero contention in the steady state, and readers merge the
+/// stripes on demand (`percentile` is a cold path — it runs once per
+/// run summary, not per task).
 #[derive(Debug)]
 pub struct Timer {
     sum_ns: AtomicU64,
     count: AtomicU64,
+    stripes: Vec<Stripe>,
+}
+
+/// One per-worker reservoir stripe.
+#[derive(Debug, Default)]
+struct Stripe {
+    /// Samples recorded through this stripe (drives slot replacement).
+    n: AtomicU64,
     samples: Mutex<Vec<u64>>,
 }
 
+/// Per-stripe sample capacity — the same as the old single-mutex
+/// reservoir, so a run recording from one thread retains exactly as many
+/// samples as before; fully-striped runs retain up to 16× (512 KiB per
+/// timer worst case, a non-issue for a per-run registry).
 const RESERVOIR_CAP: usize = 4096;
+const RESERVOIR_STRIPES: usize = 16;
+const STRIPE_CAP: usize = RESERVOIR_CAP;
+
+/// Stable per-thread stripe assignment: threads get consecutive indices
+/// on first use, so up to `RESERVOIR_STRIPES` workers never share a lock.
+fn stripe_index() -> usize {
+    static NEXT: std::sync::atomic::AtomicUsize = std::sync::atomic::AtomicUsize::new(0);
+    thread_local! {
+        static STRIPE: usize = NEXT.fetch_add(1, Ordering::Relaxed);
+    }
+    STRIPE.with(|s| *s % RESERVOIR_STRIPES)
+}
 
 impl Default for Timer {
     fn default() -> Self {
         Timer {
             sum_ns: AtomicU64::new(0),
             count: AtomicU64::new(0),
-            samples: Mutex::new(Vec::new()),
+            stripes: (0..RESERVOIR_STRIPES).map(|_| Stripe::default()).collect(),
         }
     }
 }
@@ -50,14 +85,15 @@ impl Timer {
     pub fn record(&self, d: Duration) {
         let ns = d.as_nanos().min(u64::MAX as u128) as u64;
         self.sum_ns.fetch_add(ns, Ordering::Relaxed);
-        let n = self.count.fetch_add(1, Ordering::Relaxed);
-        let mut samples = self.samples.lock().unwrap();
-        if samples.len() < RESERVOIR_CAP {
+        self.count.fetch_add(1, Ordering::Relaxed);
+        let stripe = &self.stripes[stripe_index()];
+        let n = stripe.n.fetch_add(1, Ordering::Relaxed);
+        let mut samples = stripe.samples.lock().unwrap();
+        if samples.len() < STRIPE_CAP {
             samples.push(ns);
         } else {
-            // Algorithm R reservoir: replace with probability cap/n.
-            let slot = (n as usize) % RESERVOIR_CAP; // cheap deterministic variant
-            samples[slot] = ns;
+            // Cheap deterministic reservoir variant: rotate through slots.
+            samples[(n as usize) % STRIPE_CAP] = ns;
         }
     }
 
@@ -78,14 +114,27 @@ impl Timer {
         }
     }
 
+    /// Merges every stripe's samples (read-side cost, paid once per
+    /// summary render — the write path never sees it).
     pub fn percentile(&self, p: f64) -> Duration {
-        let mut samples = self.samples.lock().unwrap().clone();
+        let mut samples: Vec<u64> = Vec::new();
+        for stripe in &self.stripes {
+            samples.extend(stripe.samples.lock().unwrap().iter().copied());
+        }
         if samples.is_empty() {
             return Duration::ZERO;
         }
         samples.sort_unstable();
         let idx = ((samples.len() as f64 - 1.0) * p).round() as usize;
         Duration::from_nanos(samples[idx.min(samples.len() - 1)])
+    }
+
+    /// Samples currently retained across all stripes (tests/diagnostics).
+    fn reservoir_len(&self) -> usize {
+        self.stripes
+            .iter()
+            .map(|s| s.samples.lock().unwrap().len())
+            .sum()
     }
 }
 
@@ -212,7 +261,39 @@ mod tests {
             t.record(Duration::from_nanos(i as u64));
         }
         assert_eq!(t.count() as usize, RESERVOIR_CAP + 100);
-        assert!(t.samples.lock().unwrap().len() <= RESERVOIR_CAP);
+        assert!(t.reservoir_len() <= RESERVOIR_CAP);
+        // percentile still answers from the retained samples
+        assert!(t.percentile(0.5) > Duration::ZERO);
+    }
+
+    #[test]
+    fn timer_stripes_merge_across_threads() {
+        // Samples recorded from many threads land in different stripes
+        // but merge into one distribution on read.
+        let t = std::sync::Arc::new(Timer::default());
+        let mut handles = Vec::new();
+        for w in 0..8u64 {
+            let t = std::sync::Arc::clone(&t);
+            handles.push(std::thread::spawn(move || {
+                for _ in 0..100 {
+                    t.record(Duration::from_nanos((w + 1) * 1000));
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(t.count(), 800);
+        // Stripe assignment is global across the process, so concurrent
+        // tests may make some of our threads share a stripe (bounded
+        // replacement) — the retained count is bounded, not exact.
+        assert!(t.reservoir_len() <= 800);
+        assert!(t.reservoir_len() >= STRIPE_CAP.min(800));
+        // The merged distribution spans multiple threads' values, proving
+        // the read side sees more than one stripe.
+        assert!(t.percentile(0.0) >= Duration::from_nanos(1000));
+        assert!(t.percentile(1.0) <= Duration::from_nanos(8000));
+        assert!(t.percentile(0.0) < t.percentile(1.0));
     }
 
     #[test]

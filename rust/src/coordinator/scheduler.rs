@@ -48,6 +48,37 @@ use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc, Mutex};
 use std::time::Instant;
 
+/// Which execution tier runs the tasks.
+///
+/// Chosen per run via `Memento::backend` (or `--isolation` on the CLI)
+/// and threaded from there through the scheduler layer:
+///
+/// - [`ExecBackend::Threads`] — the in-process work-stealing pool
+///   ([`run_all`]). Cheapest dispatch; contains `Err`s and panics, but a
+///   segfault/abort/OOM-kill in any task destroys the whole run.
+/// - [`ExecBackend::Processes`] — N isolated worker *processes* driven by
+///   [`crate::ipc::supervisor`]. A dying worker costs one attempt of one
+///   task: the supervisor requeues it under the run's `RetryPolicy` and
+///   respawns the worker, up to `crash_budget` respawns per slot.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ExecBackend {
+    /// In-process worker threads (the default).
+    Threads,
+    /// Isolated worker processes over the std-only IPC protocol.
+    Processes {
+        /// Worker processes to run concurrently.
+        workers: usize,
+        /// Worker respawns allowed per slot before it retires.
+        crash_budget: u32,
+    },
+}
+
+impl Default for ExecBackend {
+    fn default() -> Self {
+        ExecBackend::Threads
+    }
+}
+
 /// Scheduling configuration.
 #[derive(Debug, Clone)]
 pub struct SchedulerOptions {

@@ -1,0 +1,48 @@
+//! Process-isolated execution: multi-process task dispatch over a
+//! std-only IPC protocol.
+//!
+//! The thread backend ([`crate::util::pool`] + [`crate::coordinator::scheduler`])
+//! contains `Err` returns and panics, but a task that **segfaults, calls
+//! `abort`, leaks until the OOM killer arrives, or is `kill -9`'d** takes
+//! the whole run with it — checkpoint flushing included. This module adds
+//! the execution tier that survives those: a supervisor in the coordinator
+//! process and N single-task-at-a-time worker *processes*, connected by a
+//! Unix domain socket.
+//!
+//! - [`proto`] — the wire protocol: 4-byte big-endian length-prefixed
+//!   frames of compact JSON (via [`crate::util::json`]; no external
+//!   crates). Messages: `Ready`/`Hello` handshake, `Task` (one attempt),
+//!   `Progress`, `Heartbeat`, `Outcome`, `Shutdown`.
+//! - [`worker`] — the worker side: connect, handshake, execute attempts
+//!   via the registered experiment function, stream outcomes, heartbeat
+//!   from a side thread. Workers are re-executions of the current binary,
+//!   selected by the `MEMENTO_WORKER_SOCKET`/`MEMENTO_WORKER_ID`
+//!   environment; the `memento` CLI routes them through its hidden
+//!   `worker` subcommand, and library binaries are intercepted inside
+//!   `Memento::run` itself.
+//! - [`supervisor`] — spawn/respawn (crash budget per slot), heartbeat
+//!   monitoring, crash-requeue under the run's `RetryPolicy`, fail-fast,
+//!   and the bridge back into journal/metrics/progress/cache/checkpoint.
+//!
+//! # Choosing a backend
+//!
+//! `ExecBackend::Threads` (default): lowest overhead — a task dispatch is
+//! a queue push. Use it when experiment code is trusted not to bring the
+//! process down.
+//!
+//! `ExecBackend::Processes { workers, crash_budget }`: one spawn + one
+//! socket round-trip per attempt (~ms, amortized over experiment runtimes
+//! of seconds+), in exchange for full crash isolation: a dead worker costs
+//! one attempt of one task. Pick it for native-code experiments (FFI,
+//! PJRT), memory-hungry sweeps at the OOM boundary, or any run long
+//! enough that "one segfault loses everything" is unacceptable. On the
+//! CLI: `memento run --isolation process`.
+//!
+//! This tier is also the stepping stone to the ROADMAP's multi-machine
+//! sharding: the protocol already carries everything a remote worker
+//! needs (specs, settings, seeds, version), leaving only the transport to
+//! generalize.
+
+pub mod proto;
+pub mod supervisor;
+pub mod worker;

@@ -1,0 +1,411 @@
+//! The supervisor ↔ worker wire protocol.
+//!
+//! # Framing
+//!
+//! Every message is one **length-prefixed frame**: a 4-byte big-endian
+//! payload length followed by that many bytes of compact JSON (serialized
+//! via [`crate::util::json`], the same std-only codec the cache and
+//! checkpoints use). Frames are small (a task assignment or an outcome);
+//! a hard [`MAX_FRAME`] cap turns a corrupted length prefix into a clean
+//! protocol error instead of an attempted multi-GiB allocation.
+//!
+//! # Message flow
+//!
+//! ```text
+//! worker                                supervisor
+//!   | -- Ready{worker,pid} --------------> |   (handshake, routes the
+//!   | <------- Hello{version,seed,...} --- |    connection to its slot)
+//!   | <------- Task{index,attempt,...} --- |
+//!   | -- Progress{index,value} ----------> |   (0..n per task)
+//!   | -- Heartbeat{busy} ----------------> |   (every heartbeat interval)
+//!   | -- Outcome{index,attempt,result} --> |
+//!   | <------- Task | Shutdown ----------- |
+//! ```
+//!
+//! One `Task` frame is **one attempt**: the supervisor owns the retry
+//! policy (it must — a worker that dies mid-attempt cannot retry itself),
+//! so the worker executes exactly one attempt per assignment and reports
+//! the raw result. Parameters travel as an *array* of `[name, value]`
+//! pairs, not an object, so the matrix's declaration order survives the
+//! trip (task ids hash a sorted canonical form and are order-independent,
+//! but labels and reports are not).
+
+use crate::config::value::ParamValue;
+use crate::coordinator::task::TaskSpec;
+use crate::util::json::{parse, Json};
+use std::collections::BTreeMap;
+use std::io::{self, Read, Write};
+
+/// Bumped on any incompatible change; the worker refuses a mismatched
+/// supervisor rather than misinterpreting frames.
+pub const PROTOCOL_VERSION: u64 = 1;
+
+/// Upper bound on a single frame's payload (64 MiB). Experiment results
+/// are JSON metric objects; anything larger indicates a corrupted stream.
+pub const MAX_FRAME: usize = 64 << 20;
+
+/// Result of one task attempt, as reported by a worker.
+#[derive(Debug, Clone, PartialEq)]
+pub enum WireResult {
+    Ok { value: Json },
+    /// `panicked` distinguishes a contained panic from an `Err` return.
+    Err { message: String, panicked: bool },
+}
+
+/// One protocol message (either direction).
+#[derive(Debug, Clone, PartialEq)]
+pub enum Msg {
+    // ---- worker → supervisor -------------------------------------------
+    /// Handshake: first frame on a fresh connection. `spawn` echoes the
+    /// supervisor-assigned spawn generation so a connection from a stale
+    /// (crashed and replaced) incarnation of a slot can never be mistaken
+    /// for the replacement worker.
+    Ready { worker: u64, pid: u64, spawn: u64 },
+    /// Liveness signal; `busy` names the task index being executed, if any.
+    Heartbeat { worker: u64, busy: Option<u64> },
+    /// In-task partial progress (`TaskContext::save_progress` relay).
+    Progress { index: u64, value: Json },
+    /// Terminal report for one attempt.
+    Outcome { index: u64, attempt: u64, duration_secs: f64, result: WireResult },
+
+    // ---- supervisor → worker -------------------------------------------
+    /// Run-wide configuration; first frame after `Ready`.
+    Hello {
+        protocol: u64,
+        version: String,
+        run_seed: u64,
+        settings: BTreeMap<String, Json>,
+        heartbeat_ms: u64,
+    },
+    /// One attempt assignment.
+    Task {
+        index: u64,
+        attempt: u64,
+        params: Vec<(String, ParamValue)>,
+        /// Progress restored from a previous attempt, if any.
+        restored: Option<Json>,
+    },
+    /// Orderly termination; the worker drains and exits.
+    Shutdown,
+}
+
+impl Msg {
+    pub fn to_json(&self) -> Json {
+        match self {
+            Msg::Ready { worker, pid, spawn } => Json::obj(vec![
+                ("msg", Json::str("ready")),
+                ("worker", Json::int(*worker as i64)),
+                ("pid", Json::int(*pid as i64)),
+                ("spawn", Json::int(*spawn as i64)),
+            ]),
+            Msg::Heartbeat { worker, busy } => Json::obj(vec![
+                ("msg", Json::str("heartbeat")),
+                ("worker", Json::int(*worker as i64)),
+                (
+                    "busy",
+                    busy.map(|b| Json::int(b as i64)).unwrap_or(Json::Null),
+                ),
+            ]),
+            Msg::Progress { index, value } => Json::obj(vec![
+                ("msg", Json::str("progress")),
+                ("index", Json::int(*index as i64)),
+                ("value", value.clone()),
+            ]),
+            Msg::Outcome { index, attempt, duration_secs, result } => {
+                let mut fields = vec![
+                    ("msg", Json::str("outcome")),
+                    ("index", Json::int(*index as i64)),
+                    ("attempt", Json::int(*attempt as i64)),
+                    ("duration_secs", Json::Num(*duration_secs)),
+                ];
+                match result {
+                    WireResult::Ok { value } => {
+                        fields.push(("ok", Json::bool(true)));
+                        fields.push(("value", value.clone()));
+                    }
+                    WireResult::Err { message, panicked } => {
+                        fields.push(("ok", Json::bool(false)));
+                        fields.push(("message", Json::str(message.clone())));
+                        fields.push(("panicked", Json::bool(*panicked)));
+                    }
+                }
+                Json::obj(fields)
+            }
+            Msg::Hello { protocol, version, run_seed, settings, heartbeat_ms } => Json::obj(vec![
+                ("msg", Json::str("hello")),
+                ("protocol", Json::int(*protocol as i64)),
+                ("version", Json::str(version.clone())),
+                ("run_seed", Json::str(run_seed.to_string())), // u64 > 2^53-safe
+                ("settings", Json::Obj(settings.clone())),
+                ("heartbeat_ms", Json::int(*heartbeat_ms as i64)),
+            ]),
+            Msg::Task { index, attempt, params, restored } => Json::obj(vec![
+                ("msg", Json::str("task")),
+                ("index", Json::int(*index as i64)),
+                ("attempt", Json::int(*attempt as i64)),
+                (
+                    "params",
+                    Json::Arr(
+                        params
+                            .iter()
+                            .map(|(k, v)| Json::Arr(vec![Json::str(k.clone()), v.to_json()]))
+                            .collect(),
+                    ),
+                ),
+                (
+                    "restored",
+                    restored.clone().unwrap_or(Json::Null),
+                ),
+            ]),
+            Msg::Shutdown => Json::obj(vec![("msg", Json::str("shutdown"))]),
+        }
+    }
+
+    pub fn from_json(j: &Json) -> Option<Msg> {
+        let u64_field = |name: &str| j.get(name).and_then(|v| v.as_i64()).map(|v| v as u64);
+        match j.get("msg")?.as_str()? {
+            "ready" => Some(Msg::Ready {
+                worker: u64_field("worker")?,
+                pid: u64_field("pid")?,
+                spawn: u64_field("spawn").unwrap_or(0),
+            }),
+            "heartbeat" => Some(Msg::Heartbeat {
+                worker: u64_field("worker")?,
+                busy: j.get("busy").and_then(|b| b.as_i64()).map(|b| b as u64),
+            }),
+            "progress" => Some(Msg::Progress {
+                index: u64_field("index")?,
+                value: j.get("value")?.clone(),
+            }),
+            "outcome" => {
+                let result = if j.get("ok")?.as_bool()? {
+                    WireResult::Ok { value: j.get("value")?.clone() }
+                } else {
+                    WireResult::Err {
+                        message: j.get("message")?.as_str()?.to_string(),
+                        panicked: j.get("panicked").and_then(|p| p.as_bool()).unwrap_or(false),
+                    }
+                };
+                Some(Msg::Outcome {
+                    index: u64_field("index")?,
+                    attempt: u64_field("attempt")?,
+                    duration_secs: j.get("duration_secs")?.as_f64()?,
+                    result,
+                })
+            }
+            "hello" => Some(Msg::Hello {
+                protocol: u64_field("protocol")?,
+                version: j.get("version")?.as_str()?.to_string(),
+                run_seed: j.get("run_seed")?.as_str()?.parse().ok()?,
+                settings: j.get("settings")?.as_obj()?.clone(),
+                heartbeat_ms: u64_field("heartbeat_ms")?,
+            }),
+            "task" => {
+                let mut params = Vec::new();
+                for pair in j.get("params")?.as_arr()? {
+                    let name = pair.at(0)?.as_str()?.to_string();
+                    let value = ParamValue::from_json(pair.at(1)?)?;
+                    params.push((name, value));
+                }
+                let restored = match j.get("restored") {
+                    None | Some(Json::Null) => None,
+                    Some(v) => Some(v.clone()),
+                };
+                Some(Msg::Task {
+                    index: u64_field("index")?,
+                    attempt: u64_field("attempt")?,
+                    params,
+                    restored,
+                })
+            }
+            "shutdown" => Some(Msg::Shutdown),
+            _ => None,
+        }
+    }
+
+    /// Rebuilds the [`TaskSpec`] carried by a `Task` message.
+    pub fn task_spec(index: u64, params: &[(String, ParamValue)]) -> TaskSpec {
+        TaskSpec { params: params.to_vec(), index: index as usize }
+    }
+}
+
+/// Writes one frame. The caller is responsible for serializing access to
+/// the stream (frames must not interleave).
+pub fn write_frame(w: &mut impl Write, msg: &Msg) -> io::Result<()> {
+    let payload = msg.to_json().to_string();
+    let bytes = payload.as_bytes();
+    if bytes.len() > MAX_FRAME {
+        return Err(io::Error::new(
+            io::ErrorKind::InvalidData,
+            format!("frame of {} bytes exceeds MAX_FRAME", bytes.len()),
+        ));
+    }
+    let len = (bytes.len() as u32).to_be_bytes();
+    w.write_all(&len)?;
+    w.write_all(bytes)?;
+    w.flush()
+}
+
+/// Reads one frame. Returns `Ok(None)` on a clean EOF *before* the length
+/// prefix (the peer closed between messages); EOF mid-frame, an oversized
+/// length, or an unparseable payload are errors.
+pub fn read_frame(r: &mut impl Read) -> io::Result<Option<Msg>> {
+    let mut len_buf = [0u8; 4];
+    let mut filled = 0;
+    while filled < 4 {
+        match r.read(&mut len_buf[filled..]) {
+            Ok(0) => {
+                if filled == 0 {
+                    return Ok(None);
+                }
+                return Err(io::Error::new(
+                    io::ErrorKind::UnexpectedEof,
+                    "eof inside frame length",
+                ));
+            }
+            Ok(n) => filled += n,
+            Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+            Err(e) => return Err(e),
+        }
+    }
+    let len = u32::from_be_bytes(len_buf) as usize;
+    if len > MAX_FRAME {
+        return Err(io::Error::new(
+            io::ErrorKind::InvalidData,
+            format!("frame length {len} exceeds MAX_FRAME"),
+        ));
+    }
+    let mut payload = vec![0u8; len];
+    r.read_exact(&mut payload)?;
+    let text = std::str::from_utf8(&payload)
+        .map_err(|e| io::Error::new(io::ErrorKind::InvalidData, format!("frame not utf-8: {e}")))?;
+    let doc = parse(text)
+        .map_err(|e| io::Error::new(io::ErrorKind::InvalidData, format!("frame not json: {e}")))?;
+    Msg::from_json(&doc)
+        .map(Some)
+        .ok_or_else(|| io::Error::new(io::ErrorKind::InvalidData, "unknown message shape"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::value::{pv_f64, pv_int, pv_str};
+
+    fn roundtrip(msg: Msg) {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, &msg).unwrap();
+        let mut cursor = &buf[..];
+        let back = read_frame(&mut cursor).unwrap().unwrap();
+        assert_eq!(back, msg);
+        // stream fully consumed
+        assert!(read_frame(&mut cursor).unwrap().is_none());
+    }
+
+    #[test]
+    fn all_messages_roundtrip() {
+        roundtrip(Msg::Ready { worker: 3, pid: 4242, spawn: 7 });
+        roundtrip(Msg::Heartbeat { worker: 0, busy: Some(17) });
+        roundtrip(Msg::Heartbeat { worker: 1, busy: None });
+        roundtrip(Msg::Progress { index: 9, value: Json::int(5) });
+        roundtrip(Msg::Outcome {
+            index: 2,
+            attempt: 1,
+            duration_secs: 0.25,
+            result: WireResult::Ok { value: Json::obj(vec![("accuracy", Json::Num(0.9))]) },
+        });
+        roundtrip(Msg::Outcome {
+            index: 2,
+            attempt: 3,
+            duration_secs: 0.5,
+            result: WireResult::Err { message: "kaboom".into(), panicked: true },
+        });
+        let mut settings = BTreeMap::new();
+        settings.insert("n_fold".to_string(), Json::int(5));
+        roundtrip(Msg::Hello {
+            protocol: PROTOCOL_VERSION,
+            version: "v2".into(),
+            run_seed: u64::MAX, // exercises the string encoding
+            settings,
+            heartbeat_ms: 500,
+        });
+        roundtrip(Msg::Task {
+            index: 7,
+            attempt: 2,
+            params: vec![
+                ("model".into(), pv_str("SVC")),
+                ("n".into(), pv_int(5)),
+                ("lr".into(), pv_f64(0.5)),
+            ],
+            restored: Some(Json::int(3)),
+        });
+        roundtrip(Msg::Task { index: 0, attempt: 1, params: vec![], restored: None });
+        roundtrip(Msg::Shutdown);
+    }
+
+    #[test]
+    fn task_params_preserve_declaration_order() {
+        let msg = Msg::Task {
+            index: 0,
+            attempt: 1,
+            params: vec![("z".into(), pv_int(1)), ("a".into(), pv_int(2))],
+            restored: None,
+        };
+        let back = Msg::from_json(&msg.to_json()).unwrap();
+        let Msg::Task { params, .. } = back else { panic!("not a task") };
+        assert_eq!(params[0].0, "z");
+        assert_eq!(params[1].0, "a");
+    }
+
+    #[test]
+    fn multiple_frames_in_sequence() {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, &Msg::Shutdown).unwrap();
+        write_frame(&mut buf, &Msg::Ready { worker: 1, pid: 2, spawn: 0 }).unwrap();
+        let mut cursor = &buf[..];
+        assert_eq!(read_frame(&mut cursor).unwrap(), Some(Msg::Shutdown));
+        assert_eq!(
+            read_frame(&mut cursor).unwrap(),
+            Some(Msg::Ready { worker: 1, pid: 2, spawn: 0 })
+        );
+        assert_eq!(read_frame(&mut cursor).unwrap(), None);
+    }
+
+    #[test]
+    fn truncated_frame_is_an_error() {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, &Msg::Ready { worker: 1, pid: 2, spawn: 0 }).unwrap();
+        buf.truncate(buf.len() - 3);
+        let mut cursor = &buf[..];
+        assert!(read_frame(&mut cursor).is_err());
+        // eof inside the length prefix is also an error
+        let mut short: &[u8] = &[0u8, 0];
+        assert!(read_frame(&mut short).is_err());
+    }
+
+    #[test]
+    fn oversized_length_prefix_rejected_without_allocation() {
+        let mut buf = Vec::new();
+        buf.extend_from_slice(&(u32::MAX).to_be_bytes());
+        buf.extend_from_slice(b"xx");
+        let mut cursor = &buf[..];
+        let err = read_frame(&mut cursor).unwrap_err();
+        assert_eq!(err.kind(), io::ErrorKind::InvalidData);
+    }
+
+    #[test]
+    fn garbage_payload_rejected() {
+        let payload = b"{not json";
+        let mut buf = Vec::new();
+        buf.extend_from_slice(&(payload.len() as u32).to_be_bytes());
+        buf.extend_from_slice(payload);
+        let mut cursor = &buf[..];
+        assert!(read_frame(&mut cursor).is_err());
+        // valid json, unknown shape
+        let payload = b"{\"msg\":\"martian\"}";
+        let mut buf = Vec::new();
+        buf.extend_from_slice(&(payload.len() as u32).to_be_bytes());
+        buf.extend_from_slice(payload);
+        let mut cursor = &buf[..];
+        assert!(read_frame(&mut cursor).is_err());
+    }
+}

@@ -1,0 +1,756 @@
+//! Supervisor side of the process-isolated backend.
+//!
+//! The supervisor owns the run: it binds a Unix domain socket, spawns `N`
+//! worker processes (re-executions of the current binary, see
+//! [`crate::ipc::worker`]), hands out **one attempt at a time** over the
+//! wire, and folds the streamed outcomes back into the same
+//! journal/metrics/progress/record pipeline the thread backend uses.
+//!
+//! # Crash semantics
+//!
+//! A worker that dies mid-task (segfault, abort, OOM-kill, `kill -9`) is
+//! detected by connection EOF — or, for a wedged-but-alive worker, by a
+//! heartbeat silence longer than the heartbeat timeout, in which case the
+//! supervisor kills it. Either way the in-flight attempt is journaled as
+//! `TaskFailed` (kind [`FailureKind::Crash`]) and the task is requeued
+//! under the run's [`RetryPolicy`] exactly as an in-process failure would
+//! be: a policy allowing another attempt re-dispatches it (journaled
+//! `TaskStarted` again, `tasks_retried` incremented); an exhausted policy
+//! records a final failed outcome. The dead worker's slot respawns a fresh
+//! process, up to `crash_budget` respawns per slot. A slot that exhausts
+//! its budget retires; if **every** slot retires with work still pending,
+//! the remaining tasks become failed outcomes (never silently dropped),
+//! so a run always accounts for each spec exactly once.
+//!
+//! # What workers never do
+//!
+//! Workers execute the experiment function and nothing else. The result
+//! cache, checkpoint store, journal, and notifier live exclusively in the
+//! supervisor process — which is why the process backend can open the
+//! cache in single-writer mode ([`crate::coordinator::cache::ResultCache`]
+//! `::exclusive`) and skip per-miss disk probes.
+
+use crate::coordinator::error::{FailureKind, MementoError, TaskFailure};
+use crate::coordinator::journal::{Event, Journal};
+use crate::coordinator::metrics::RunMetrics;
+use crate::coordinator::progress::ProgressState;
+use crate::coordinator::results::{TaskOutcome, TaskStatus};
+use crate::coordinator::retry::RetryPolicy;
+use crate::coordinator::task::{TaskId, TaskSpec};
+use crate::ipc::proto::{read_frame, write_frame, Msg, WireResult, PROTOCOL_VERSION};
+use crate::ipc::worker::{ENV_SOCKET, ENV_WORKER_ID, ENV_WORKER_SPAWN};
+use crate::util::json::Json;
+use std::collections::{BTreeMap, VecDeque};
+use std::os::unix::net::{UnixListener, UnixStream};
+use std::path::PathBuf;
+use std::process::{Child, Command, Stdio};
+use std::sync::atomic::{AtomicBool, AtomicU32, Ordering};
+use std::sync::mpsc::{Receiver, RecvTimeoutError, Sender};
+use std::sync::{mpsc, Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+/// Supervisor configuration.
+#[derive(Debug, Clone)]
+pub struct SupervisorOptions {
+    /// Worker processes to run concurrently.
+    pub workers: usize,
+    /// Respawns allowed **per worker slot** before the slot retires.
+    pub crash_budget: u32,
+    /// Retry policy applied to failed attempts *and* worker crashes.
+    pub retry: RetryPolicy,
+    /// Stop dispatching after the first failed task.
+    pub fail_fast: bool,
+    /// Experiment version salt (must match the workers' task hashing).
+    pub version: String,
+    /// Base RNG seed forwarded to workers.
+    pub run_seed: u64,
+    /// Worker heartbeat interval.
+    pub heartbeat: Duration,
+    /// Silence longer than this kills the worker as hung. Must comfortably
+    /// exceed `heartbeat`; heartbeats flow *during* task execution, so
+    /// this does not bound task duration.
+    pub heartbeat_timeout: Duration,
+    /// Spawn → `Ready` handshake deadline per worker.
+    pub connect_timeout: Duration,
+    /// Program to execute for workers. `None` = the current executable.
+    pub worker_program: Option<PathBuf>,
+    /// Argument vector for worker processes. The default re-uses the
+    /// current process's own arguments, which is correct for binaries that
+    /// reach `Memento::run` again when re-executed (the run call notices
+    /// the worker environment and serves tasks instead). Test binaries
+    /// should pass a libtest filter selecting their worker-entry `#[test]`.
+    pub worker_args: Vec<String>,
+}
+
+impl Default for SupervisorOptions {
+    fn default() -> Self {
+        SupervisorOptions {
+            workers: crate::util::pool::num_cpus(),
+            crash_budget: 3,
+            retry: RetryPolicy::none(),
+            fail_fast: false,
+            version: "v1".to_string(),
+            run_seed: 0,
+            heartbeat: Duration::from_millis(200),
+            heartbeat_timeout: Duration::from_secs(10),
+            connect_timeout: Duration::from_secs(20),
+            worker_program: None,
+            worker_args: std::env::args().skip(1).collect(),
+        }
+    }
+}
+
+/// Callbacks wiring supervisor events into the coordinator pipeline. All
+/// optional; a bare supervisor still returns a correct report.
+#[derive(Default)]
+pub struct SupervisorHooks {
+    pub journal: Option<Arc<Journal>>,
+    pub metrics: Option<Arc<RunMetrics>>,
+    pub progress: Option<Arc<ProgressState>>,
+    /// Persist in-task partial progress (checkpoint `progress/` slot).
+    pub save_progress: Option<Arc<dyn Fn(&TaskId, &Json) + Send + Sync>>,
+    /// Load restored progress for a (re)dispatched attempt.
+    pub load_progress: Option<Arc<dyn Fn(&TaskId) -> Option<Json> + Send + Sync>>,
+    /// Record a terminal outcome (cache put / checkpoint / notification).
+    pub record: Option<Arc<dyn Fn(&TaskOutcome) + Send + Sync>>,
+}
+
+/// What happened across the whole process-backed run.
+#[derive(Debug)]
+pub struct ProcessReport {
+    /// Terminal outcome per executed spec, ordered by spec index.
+    pub outcomes: Vec<TaskOutcome>,
+    /// Specs abandoned by a fail-fast abort.
+    pub skipped: Vec<TaskSpec>,
+    pub aborted: bool,
+    /// Worker deaths observed (crashes + hang-kills + failed spawns).
+    pub crashes: u32,
+    /// Replacement workers spawned after a crash.
+    pub respawns: u32,
+}
+
+/// One queued attempt.
+#[derive(Debug, Clone, Copy)]
+struct Attempt {
+    index: usize,
+    attempt: u32,
+    /// Retry backoff: not dispatchable before this instant.
+    ready_at: Option<Instant>,
+}
+
+struct Queue {
+    pending: VecDeque<Attempt>,
+    in_flight: usize,
+    outcomes: Vec<TaskOutcome>,
+    skipped: Vec<TaskSpec>,
+    abort: bool,
+    live_slots: usize,
+}
+
+enum Next {
+    Run(Attempt),
+    Wait(Duration),
+    Done,
+}
+
+struct Shared {
+    specs: Arc<[TaskSpec]>,
+    /// Precomputed `spec.id(version)` per index.
+    ids: Vec<TaskId>,
+    settings: BTreeMap<String, Json>,
+    opts: SupervisorOptions,
+    hooks: SupervisorHooks,
+    socket_path: PathBuf,
+    q: Mutex<Queue>,
+    cv: Condvar,
+    crashes: AtomicU32,
+    respawns: AtomicU32,
+}
+
+/// A live worker: the child process plus both halves of its connection.
+struct Conn {
+    child: Child,
+    reader: UnixStream,
+    writer: UnixStream,
+}
+
+/// Runs every spec across `opts.workers` worker processes and returns the
+/// collected report. Blocks until all specs are accounted for and all
+/// children have exited.
+pub fn run(
+    specs: Vec<TaskSpec>,
+    settings: BTreeMap<String, Json>,
+    opts: SupervisorOptions,
+    hooks: SupervisorHooks,
+) -> Result<ProcessReport, MementoError> {
+    let n = specs.len();
+    if n == 0 {
+        return Ok(ProcessReport {
+            outcomes: Vec::new(),
+            skipped: Vec::new(),
+            aborted: false,
+            crashes: 0,
+            respawns: 0,
+        });
+    }
+    let workers = opts.workers.max(1).min(n);
+
+    let sock_dir = crate::util::fs::TempDir::new("ipc")
+        .map_err(|e| MementoError::ipc(format!("create socket dir: {e}")))?;
+    let socket_path = sock_dir.join("supervisor.sock");
+    let listener = UnixListener::bind(&socket_path)
+        .map_err(|e| MementoError::ipc(format!("bind {}: {e}", socket_path.display())))?;
+
+    let ids: Vec<TaskId> = specs.iter().map(|s| s.id(&opts.version)).collect();
+    let pending: VecDeque<Attempt> = (0..n)
+        .map(|index| Attempt { index, attempt: 1, ready_at: None })
+        .collect();
+    let shared = Arc::new(Shared {
+        specs: specs.into(),
+        ids,
+        settings,
+        opts,
+        hooks,
+        socket_path: socket_path.clone(),
+        q: Mutex::new(Queue {
+            pending,
+            in_flight: 0,
+            outcomes: Vec::with_capacity(n),
+            skipped: Vec::new(),
+            abort: false,
+            live_slots: workers,
+        }),
+        cv: Condvar::new(),
+        crashes: AtomicU32::new(0),
+        respawns: AtomicU32::new(0),
+    });
+
+    // Acceptor: routes each incoming connection to its slot by the worker
+    // id in the Ready handshake (respawns make "arrival order" unreliable),
+    // tagged with the handshake's spawn generation so a slot can discard
+    // connections from incarnations it has already given up on.
+    let mut routes: Vec<Sender<(UnixStream, u64)>> = Vec::with_capacity(workers);
+    let mut slot_rxs: Vec<Receiver<(UnixStream, u64)>> = Vec::with_capacity(workers);
+    for _ in 0..workers {
+        let (tx, rx) = mpsc::channel();
+        routes.push(tx);
+        slot_rxs.push(rx);
+    }
+    let accept_stop = Arc::new(AtomicBool::new(false));
+    let acceptor = {
+        let stop = Arc::clone(&accept_stop);
+        std::thread::Builder::new()
+            .name("memento-ipc-accept".into())
+            .spawn(move || accept_loop(listener, routes, stop))
+            .map_err(|e| MementoError::ipc(format!("spawn acceptor: {e}")))?
+    };
+
+    let slots: Vec<_> = slot_rxs
+        .into_iter()
+        .enumerate()
+        .map(|(slot, rx)| {
+            let sh = Arc::clone(&shared);
+            std::thread::Builder::new()
+                .name(format!("memento-ipc-slot-{slot}"))
+                .spawn(move || slot_loop(&sh, slot, rx))
+                .expect("spawn supervisor slot thread")
+        })
+        .collect();
+    for s in slots {
+        let _ = s.join();
+    }
+    accept_stop.store(true, Ordering::SeqCst);
+    let _ = acceptor.join();
+
+    // All slot threads are joined: the queue is ours, no copies needed.
+    let mut q = shared.q.lock().unwrap();
+    let mut outcomes: Vec<TaskOutcome> = std::mem::take(&mut q.outcomes);
+    let mut skipped: Vec<TaskSpec> = std::mem::take(&mut q.skipped);
+    let aborted = q.abort;
+    drop(q);
+    outcomes.sort_by_key(|o| o.spec.index);
+    skipped.sort_by_key(|s| s.index);
+
+    let crashes = shared.crashes.load(Ordering::SeqCst);
+    let respawns = shared.respawns.load(Ordering::SeqCst);
+    if let Some(m) = &shared.hooks.metrics {
+        m.tasks_skipped.add(skipped.len() as u64);
+    }
+    debug_assert_eq!(outcomes.len() + skipped.len(), n, "every spec accounted for");
+    Ok(ProcessReport { outcomes, skipped, aborted, crashes, respawns })
+}
+
+// ---- acceptor -----------------------------------------------------------
+
+fn accept_loop(
+    listener: UnixListener,
+    routes: Vec<Sender<(UnixStream, u64)>>,
+    stop: Arc<AtomicBool>,
+) {
+    listener
+        .set_nonblocking(true)
+        .expect("nonblocking listener");
+    // Poll interval backs off while nothing is connecting (steady state
+    // for a long run: all workers connected minutes ago) and snaps back
+    // to fast polling whenever a connection arrives (spawn bursts).
+    let mut idle_sleep = Duration::from_millis(2);
+    while !stop.load(Ordering::SeqCst) {
+        match listener.accept() {
+            Ok((stream, _addr)) => {
+                idle_sleep = Duration::from_millis(2);
+                let _ = stream.set_nonblocking(false);
+                // The handshake must arrive promptly; a silent connection
+                // is dropped rather than wedging the acceptor.
+                let _ = stream.set_read_timeout(Some(Duration::from_secs(5)));
+                match read_frame(&mut &stream) {
+                    Ok(Some(Msg::Ready { worker, spawn, .. })) => {
+                        if let Some(tx) = routes.get(worker as usize) {
+                            let _ = tx.send((stream, spawn));
+                        }
+                    }
+                    _ => drop(stream),
+                }
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(idle_sleep);
+                idle_sleep = (idle_sleep * 2).min(Duration::from_millis(100));
+            }
+            Err(_) => return,
+        }
+    }
+}
+
+// ---- slot state machine -------------------------------------------------
+
+fn slot_loop(sh: &Shared, slot: usize, rx: Receiver<(UnixStream, u64)>) {
+    let mut conn: Option<Conn> = None;
+    let mut crashes_used: u32 = 0;
+    // Bumped on every spawn; the worker echoes it in Ready, and
+    // spawn_worker discards routed connections from older generations.
+    let mut spawn_seq: u64 = 0;
+    loop {
+        let att = match sh.next_task() {
+            Next::Done => break,
+            Next::Wait(d) => {
+                sh.wait_for_work(d);
+                continue;
+            }
+            Next::Run(att) => att,
+        };
+        if conn.is_none() {
+            if crashes_used > sh.opts.crash_budget {
+                sh.give_back(att);
+                sh.retire_slot(slot, crashes_used);
+                return;
+            }
+            spawn_seq += 1;
+            match spawn_worker(sh, slot, &rx, spawn_seq, crashes_used > 0) {
+                Ok(c) => conn = Some(c),
+                Err(e) => {
+                    crashes_used += 1;
+                    sh.crashes.fetch_add(1, Ordering::SeqCst);
+                    eprintln!("memento supervisor: slot {slot} worker spawn failed: {e}");
+                    sh.give_back(att);
+                    continue;
+                }
+            }
+        }
+        match serve_attempt(sh, slot, conn.as_mut().unwrap(), att) {
+            Serve::Completed => {}
+            Serve::NotDelivered => {
+                // The Task frame never left this process: the worker died
+                // while idle. Reap and respawn, but return the attempt
+                // unconsumed — the task was never touched.
+                let mut dead = conn.take().unwrap();
+                let _ = reap(&mut dead);
+                crashes_used += 1;
+                sh.crashes.fetch_add(1, Ordering::SeqCst);
+                sh.give_back(att);
+            }
+            Serve::Crashed => {
+                // Worker died (or desynced) after taking the task: this
+                // attempt is consumed and goes through the retry policy.
+                let mut dead = conn.take().unwrap();
+                let status = reap(&mut dead);
+                crashes_used += 1;
+                sh.crashes.fetch_add(1, Ordering::SeqCst);
+                sh.attempt_failed(
+                    att,
+                    FailureKind::Crash,
+                    format!("worker process died mid-task ({status})"),
+                    0.0,
+                );
+            }
+        }
+    }
+    if let Some(mut c) = conn {
+        let _ = write_frame(&mut c.writer, &Msg::Shutdown);
+        // Close our read side before reaping: if the worker is blocked
+        // writing into a full (unread) socket buffer, this fails its
+        // write with EPIPE instead of letting `wait()` hang on a worker
+        // that can never finish shutting down. Our buffered Shutdown
+        // frame is still delivered first.
+        let _ = c.reader.shutdown(std::net::Shutdown::Read);
+        let _ = c.child.wait();
+    }
+    sh.retire_slot(slot, crashes_used);
+}
+
+/// How one dispatch attempt ended, from the slot's perspective.
+enum Serve {
+    /// An `Outcome` frame came back (success or contained failure).
+    Completed,
+    /// The `Task` frame could not even be written: the worker was already
+    /// dead and the task provably never reached it.
+    NotDelivered,
+    /// The worker died (EOF/timeout/desync) after taking the task.
+    Crashed,
+}
+
+/// Dispatches one attempt and pumps frames until its outcome.
+fn serve_attempt(sh: &Shared, slot: usize, conn: &mut Conn, att: Attempt) -> Serve {
+    let id = &sh.ids[att.index];
+    let spec = &sh.specs[att.index];
+    let restored = sh
+        .hooks
+        .load_progress
+        .as_ref()
+        .and_then(|load| load(id));
+
+    let task = Msg::Task {
+        index: att.index as u64,
+        attempt: att.attempt as u64,
+        params: spec.params.clone(),
+        restored,
+    };
+    let sent_at = Instant::now();
+    if write_frame(&mut conn.writer, &task).is_err() {
+        return Serve::NotDelivered;
+    }
+    // Journaled only after the frame was accepted for delivery: an
+    // undelivered dispatch is requeued without consuming an attempt and
+    // must not leave a started-but-never-finished entry in the log.
+    if let Some(j) = &sh.hooks.journal {
+        j.record(&Event::TaskStarted { id: id.clone(), attempt: att.attempt });
+    }
+    loop {
+        match read_frame(&mut conn.reader) {
+            Ok(Some(Msg::Heartbeat { .. })) => continue,
+            Ok(Some(Msg::Progress { index, value })) => {
+                if let (Some(save), Some(id)) =
+                    (&sh.hooks.save_progress, sh.ids.get(index as usize))
+                {
+                    save(id, &value);
+                }
+            }
+            Ok(Some(Msg::Outcome { index, attempt, duration_secs, result })) => {
+                if index as usize != att.index || attempt != att.attempt as u64 {
+                    eprintln!(
+                        "memento supervisor: slot {slot} answered task {index} (attempt \
+                         {attempt}) while {} (attempt {}) was in flight — treating as crash",
+                        att.index, att.attempt
+                    );
+                    return Serve::Crashed;
+                }
+                if let Some(m) = &sh.hooks.metrics {
+                    // IPC + queueing overhead: round-trip minus execution.
+                    let exec = Duration::from_secs_f64(duration_secs.max(0.0));
+                    m.dispatch_overhead
+                        .record(sent_at.elapsed().saturating_sub(exec));
+                }
+                match result {
+                    WireResult::Ok { value } => sh.attempt_succeeded(att, value, duration_secs),
+                    WireResult::Err { message, panicked } => sh.attempt_failed(
+                        att,
+                        if panicked { FailureKind::Panic } else { FailureKind::Error },
+                        message,
+                        duration_secs,
+                    ),
+                }
+                return Serve::Completed;
+            }
+            // EOF, heartbeat-timeout, unexpected frame, or stream error —
+            // all terminal for this worker.
+            Ok(Some(_)) | Ok(None) | Err(_) => return Serve::Crashed,
+        }
+    }
+}
+
+/// Kills (idempotently) and reaps a dead worker, describing how it ended.
+fn reap(conn: &mut Conn) -> String {
+    let _ = conn.child.kill();
+    match conn.child.wait() {
+        Ok(status) => status.to_string(),
+        Err(e) => format!("unwaitable: {e}"),
+    }
+}
+
+fn spawn_worker(
+    sh: &Shared,
+    slot: usize,
+    rx: &Receiver<(UnixStream, u64)>,
+    spawn_seq: u64,
+    is_respawn: bool,
+) -> Result<Conn, MementoError> {
+    let program = match &sh.opts.worker_program {
+        Some(p) => p.clone(),
+        None => std::env::current_exe()
+            .map_err(|e| MementoError::ipc(format!("current_exe: {e}")))?,
+    };
+    let mut child = Command::new(&program)
+        .args(&sh.opts.worker_args)
+        .env(ENV_SOCKET, &sh.socket_path)
+        .env(ENV_WORKER_ID, slot.to_string())
+        .env(ENV_WORKER_SPAWN, spawn_seq.to_string())
+        .stdin(Stdio::null())
+        .spawn()
+        .map_err(|e| MementoError::ipc(format!("spawn {}: {e}", program.display())))?;
+    if is_respawn {
+        sh.respawns.fetch_add(1, Ordering::SeqCst);
+    }
+
+    // Accept only the connection whose Ready echoed *this* spawn's
+    // generation: a previous incarnation that connected late (after its
+    // slot already gave up on it) is discarded here instead of being
+    // mistaken for the fresh worker.
+    let deadline = Instant::now() + sh.opts.connect_timeout;
+    let stream = loop {
+        let remaining = deadline.saturating_duration_since(Instant::now());
+        if remaining.is_zero() {
+            let _ = child.kill();
+            let _ = child.wait();
+            return Err(MementoError::ipc(format!(
+                "worker slot {slot} did not connect within {:?}",
+                sh.opts.connect_timeout
+            )));
+        }
+        match rx.recv_timeout(remaining) {
+            Ok((s, spawn)) if spawn == spawn_seq => break s,
+            Ok(_) => continue, // stale incarnation; drop its stream
+            Err(RecvTimeoutError::Timeout) | Err(RecvTimeoutError::Disconnected) => {
+                let _ = child.kill();
+                let _ = child.wait();
+                return Err(MementoError::ipc(format!(
+                    "worker slot {slot} did not connect within {:?}",
+                    sh.opts.connect_timeout
+                )));
+            }
+        }
+    };
+    stream
+        .set_read_timeout(Some(sh.opts.heartbeat_timeout))
+        .map_err(|e| MementoError::ipc(format!("set read timeout: {e}")))?;
+    let mut writer = stream
+        .try_clone()
+        .map_err(|e| MementoError::ipc(format!("clone stream: {e}")))?;
+    let hello = Msg::Hello {
+        protocol: PROTOCOL_VERSION,
+        version: sh.opts.version.clone(),
+        run_seed: sh.opts.run_seed,
+        settings: sh.settings.clone(),
+        heartbeat_ms: sh.opts.heartbeat.as_millis().max(1) as u64,
+    };
+    if let Err(e) = write_frame(&mut writer, &hello) {
+        let _ = child.kill();
+        let _ = child.wait();
+        return Err(MementoError::ipc(format!("send hello: {e}")));
+    }
+    Ok(Conn { child, reader: stream, writer })
+}
+
+// ---- shared queue operations -------------------------------------------
+
+impl Shared {
+    fn next_task(&self) -> Next {
+        let mut q = self.q.lock().unwrap();
+        if q.abort && !q.pending.is_empty() {
+            let drained: Vec<Attempt> = q.pending.drain(..).collect();
+            for att in drained {
+                q.skipped.push(self.specs[att.index].clone());
+                if let Some(p) = &self.hooks.progress {
+                    p.mark_skipped();
+                }
+            }
+            self.cv.notify_all();
+        }
+        let now = Instant::now();
+        let ready = q
+            .pending
+            .iter()
+            .position(|a| a.ready_at.map(|t| t <= now).unwrap_or(true));
+        if let Some(pos) = ready {
+            let att = q.pending.remove(pos).unwrap();
+            q.in_flight += 1;
+            return Next::Run(att);
+        }
+        if q.pending.is_empty() && q.in_flight == 0 {
+            return Next::Done;
+        }
+        // Everything pending is backing off (or other slots hold the
+        // remaining work): sleep until the earliest becomes ready.
+        let wait = q
+            .pending
+            .iter()
+            .filter_map(|a| a.ready_at)
+            .map(|t| t.saturating_duration_since(now))
+            .min()
+            .unwrap_or(Duration::from_millis(50));
+        Next::Wait(wait.clamp(Duration::from_millis(1), Duration::from_millis(250)))
+    }
+
+    fn wait_for_work(&self, d: Duration) {
+        let q = self.q.lock().unwrap();
+        let _ = self.cv.wait_timeout(q, d).unwrap();
+    }
+
+    /// Returns a popped-but-unstarted attempt to the queue (spawn failure
+    /// or slot retirement) without consuming a retry attempt.
+    fn give_back(&self, att: Attempt) {
+        let mut q = self.q.lock().unwrap();
+        q.pending.push_front(att);
+        q.in_flight -= 1;
+        self.cv.notify_all();
+    }
+
+    fn attempt_succeeded(&self, att: Attempt, value: Json, duration_secs: f64) {
+        if let Some(j) = &self.hooks.journal {
+            j.record(&Event::TaskSucceeded {
+                id: self.ids[att.index].clone(),
+                attempt: att.attempt,
+                duration_secs,
+            });
+        }
+        if let Some(m) = &self.hooks.metrics {
+            m.exec_time.record(Duration::from_secs_f64(duration_secs.max(0.0)));
+        }
+        let outcome = TaskOutcome {
+            spec: self.specs[att.index].clone(),
+            id: self.ids[att.index].clone(),
+            status: TaskStatus::Success,
+            value: Some(value),
+            failure: None,
+            duration_secs,
+            from_cache: false,
+            attempts: att.attempt,
+        };
+        self.finish(outcome, true);
+    }
+
+    /// One attempt failed (worker-reported error/panic, or a crash). The
+    /// retry policy decides between a delayed requeue and a final failure.
+    fn attempt_failed(&self, att: Attempt, kind: FailureKind, message: String, duration_secs: f64) {
+        if let Some(j) = &self.hooks.journal {
+            j.record(&Event::TaskFailed {
+                id: self.ids[att.index].clone(),
+                attempt: att.attempt,
+                message: message.clone(),
+            });
+        }
+        if self.opts.retry.should_retry(att.attempt) {
+            if let Some(m) = &self.hooks.metrics {
+                m.tasks_retried.inc();
+            }
+            let delay = self.opts.retry.delay_before(att.attempt + 1);
+            let mut q = self.q.lock().unwrap();
+            q.pending.push_back(Attempt {
+                index: att.index,
+                attempt: att.attempt + 1,
+                ready_at: (!delay.is_zero()).then(|| Instant::now() + delay),
+            });
+            q.in_flight -= 1;
+            self.cv.notify_all();
+            return;
+        }
+        if let Some(m) = &self.hooks.metrics {
+            m.exec_time.record(Duration::from_secs_f64(duration_secs.max(0.0)));
+        }
+        let outcome = self.failed_outcome(att.index, kind, message, duration_secs, att.attempt);
+        self.finish(outcome, true);
+    }
+
+    fn failed_outcome(
+        &self,
+        index: usize,
+        kind: FailureKind,
+        message: String,
+        duration_secs: f64,
+        attempts: u32,
+    ) -> TaskOutcome {
+        TaskOutcome {
+            spec: self.specs[index].clone(),
+            id: self.ids[index].clone(),
+            status: TaskStatus::Failed,
+            value: None,
+            failure: Some(TaskFailure {
+                kind,
+                message,
+                params: self.specs[index].param_strings(),
+                attempts,
+            }),
+            duration_secs,
+            from_cache: false,
+            attempts,
+        }
+    }
+
+    /// Records a terminal outcome — counters, persistence hook, progress,
+    /// fail-fast — and, for outcomes that came off the dispatch path,
+    /// releases their in-flight slot (`was_in_flight`; false only for
+    /// never-dispatched orphans failed at retirement).
+    fn finish(&self, outcome: TaskOutcome, was_in_flight: bool) {
+        let failed = outcome.status == TaskStatus::Failed;
+        if let Some(m) = &self.hooks.metrics {
+            m.tasks_total.inc();
+            if failed {
+                m.tasks_failed.inc();
+            } else {
+                m.tasks_succeeded.inc();
+            }
+        }
+        if let Some(record) = &self.hooks.record {
+            record(&outcome);
+        }
+        if let Some(p) = &self.hooks.progress {
+            p.mark_done();
+        }
+        let mut q = self.q.lock().unwrap();
+        if failed && self.opts.fail_fast {
+            q.abort = true;
+        }
+        q.outcomes.push(outcome);
+        if was_in_flight {
+            q.in_flight -= 1;
+        }
+        self.cv.notify_all();
+    }
+
+    /// A slot is done (queue drained, or crash budget exhausted). The last
+    /// slot out with work still pending fails that work explicitly —
+    /// nothing is ever dropped on the floor.
+    fn retire_slot(&self, slot: usize, crashes_used: u32) {
+        let mut q = self.q.lock().unwrap();
+        q.live_slots -= 1;
+        if crashes_used > self.opts.crash_budget {
+            eprintln!(
+                "memento supervisor: slot {slot} retired after {crashes_used} worker \
+                 crashes (budget {})",
+                self.opts.crash_budget
+            );
+        }
+        if q.live_slots == 0 && !q.pending.is_empty() && !q.abort {
+            let orphans: Vec<Attempt> = q.pending.drain(..).collect();
+            drop(q);
+            for att in orphans {
+                let outcome = self.failed_outcome(
+                    att.index,
+                    FailureKind::Crash,
+                    "no workers left: every slot exhausted its crash budget".to_string(),
+                    0.0,
+                    att.attempt.saturating_sub(1),
+                );
+                self.finish(outcome, false);
+            }
+        }
+        self.cv.notify_all();
+    }
+}

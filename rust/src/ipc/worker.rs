@@ -1,0 +1,252 @@
+//! Worker-process side of the process-isolated backend.
+//!
+//! A worker is the *same binary* as the supervisor, re-executed with two
+//! environment variables set: [`ENV_SOCKET`] (the supervisor's Unix domain
+//! socket) and [`ENV_WORKER_ID`] (this worker's slot number). Three entry
+//! points cover the three kinds of host binary:
+//!
+//! - the `memento` CLI dispatches its hidden `worker` subcommand here;
+//! - library binaries (examples, user programs) are intercepted inside
+//!   [`crate::coordinator::memento::Memento::run`]: when the env vars are
+//!   present, `run` serves tasks over the socket and exits instead of
+//!   starting a run of its own — so a binary that re-executes itself needs
+//!   no worker-specific code at all;
+//! - test binaries expose a dedicated libtest entry (a `#[test]` fn that
+//!   is a no-op without the env vars) and pass its name as the spawn argv.
+//!
+//! The worker executes **one attempt per `Task` frame** and reports the
+//! raw result; retries, requeues, and crash accounting belong to the
+//! supervisor. A heartbeat thread shares the write half of the socket so
+//! the supervisor can distinguish "long-running task" from "hung worker".
+
+use crate::coordinator::error::{panic_message, MementoError};
+use crate::coordinator::memento::ExpFn;
+use crate::coordinator::task::{task_seed, TaskContext, TaskId};
+use crate::ipc::proto::{read_frame, write_frame, Msg, WireResult, PROTOCOL_VERSION};
+use crate::util::json::Json;
+use crate::util::time::Stopwatch;
+use std::collections::BTreeMap;
+use std::os::unix::net::UnixStream;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicI64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+/// Socket path of the supervising process; presence of this variable is
+/// what makes a process a worker.
+pub const ENV_SOCKET: &str = "MEMENTO_WORKER_SOCKET";
+/// Slot id assigned by the supervisor (`0..workers`).
+pub const ENV_WORKER_ID: &str = "MEMENTO_WORKER_ID";
+/// Spawn generation within the slot; echoed back in the `Ready` handshake
+/// so the supervisor can tell a fresh worker's connection from a stale
+/// (already-replaced) incarnation's.
+pub const ENV_WORKER_SPAWN: &str = "MEMENTO_WORKER_SPAWN";
+
+/// True when this process was spawned as a worker by a supervisor.
+pub fn active() -> bool {
+    std::env::var_os(ENV_SOCKET).is_some()
+}
+
+/// If this process is a worker, serve tasks until shutdown and then
+/// **exit the process**; otherwise return immediately. Call this early in
+/// a binary that re-executes itself for process isolation.
+pub fn maybe_serve(exp_fn: Arc<ExpFn>) {
+    if !active() {
+        return;
+    }
+    match serve(exp_fn) {
+        Ok(()) => std::process::exit(0),
+        Err(e) => {
+            eprintln!("memento worker: {e}");
+            std::process::exit(70); // EX_SOFTWARE
+        }
+    }
+}
+
+/// Connects to the supervisor named by the environment and serves task
+/// attempts until it sends `Shutdown` (or closes the connection). Returns
+/// once the connection is drained; callers normally exit afterwards.
+pub fn serve(exp_fn: Arc<ExpFn>) -> Result<(), MementoError> {
+    let socket = std::env::var(ENV_SOCKET)
+        .map_err(|_| MementoError::ipc(format!("{ENV_SOCKET} not set")))?;
+    let worker_id: u64 = std::env::var(ENV_WORKER_ID)
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0);
+    let spawn: u64 = std::env::var(ENV_WORKER_SPAWN)
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0);
+
+    let stream = UnixStream::connect(&socket)
+        .map_err(|e| MementoError::ipc(format!("connect {socket}: {e}")))?;
+    let mut reader = stream
+        .try_clone()
+        .map_err(|e| MementoError::ipc(format!("clone stream: {e}")))?;
+    let writer = Arc::new(Mutex::new(stream));
+
+    send(
+        &writer,
+        &Msg::Ready { worker: worker_id, pid: std::process::id() as u64, spawn },
+    )?;
+
+    // First frame must be the run configuration.
+    let hello = read_frame(&mut reader)
+        .map_err(|e| MementoError::ipc(format!("read hello: {e}")))?
+        .ok_or_else(|| MementoError::ipc("supervisor closed before hello"))?;
+    let Msg::Hello { protocol, version, run_seed, settings, heartbeat_ms } = hello else {
+        return Err(MementoError::ipc("expected hello as first frame"));
+    };
+    if protocol != PROTOCOL_VERSION {
+        return Err(MementoError::ipc(format!(
+            "protocol mismatch: supervisor speaks v{protocol}, worker speaks v{PROTOCOL_VERSION}"
+        )));
+    }
+    let settings = Arc::new(settings);
+
+    // Heartbeat thread: shares the writer; `busy` mirrors the task index
+    // currently executing (-1 = idle) so the supervisor can tell a slow
+    // task from a wedged worker. Heartbeats flow **only while busy**: the
+    // supervisor reads the stream only while an attempt is in flight, so
+    // idle heartbeats would accumulate unread in the socket buffer — and
+    // a filled buffer would block this thread inside `write` holding the
+    // writer lock, wedging the worker (and the supervisor's final
+    // `child.wait()`) forever. Idle liveness needs no signal: a dead idle
+    // worker is detected by the next task dispatch failing.
+    let busy = Arc::new(AtomicI64::new(-1));
+    let stop = Arc::new(AtomicBool::new(false));
+    let hb_handle = spawn_heartbeat(
+        Arc::clone(&writer),
+        worker_id,
+        Arc::clone(&busy),
+        Arc::clone(&stop),
+        Duration::from_millis(heartbeat_ms.max(1)),
+    );
+
+    let served = serve_loop(
+        &mut reader,
+        &writer,
+        &exp_fn,
+        &settings,
+        &version,
+        run_seed,
+        &busy,
+    );
+
+    stop.store(true, Ordering::SeqCst);
+    let _ = hb_handle.join();
+    served
+}
+
+fn serve_loop(
+    reader: &mut UnixStream,
+    writer: &Arc<Mutex<UnixStream>>,
+    exp_fn: &Arc<ExpFn>,
+    settings: &Arc<BTreeMap<String, Json>>,
+    version: &str,
+    run_seed: u64,
+    busy: &Arc<AtomicI64>,
+) -> Result<(), MementoError> {
+    loop {
+        let msg = read_frame(reader).map_err(|e| MementoError::ipc(format!("read task: {e}")))?;
+        match msg {
+            None | Some(Msg::Shutdown) => return Ok(()),
+            Some(Msg::Task { index, attempt, params, restored }) => {
+                busy.store(index as i64, Ordering::SeqCst);
+                let outcome = run_attempt(
+                    writer, exp_fn, settings, version, run_seed, index, attempt, params, restored,
+                );
+                busy.store(-1, Ordering::SeqCst);
+                send(writer, &outcome)?;
+            }
+            Some(other) => {
+                return Err(MementoError::ipc(format!(
+                    "unexpected frame from supervisor: {other:?}"
+                )));
+            }
+        }
+    }
+}
+
+/// Executes one attempt and builds its `Outcome` frame. Panics in the
+/// experiment function are contained here, exactly as the thread backend
+/// contains them — only failures *of the process itself* reach the
+/// supervisor as crashes.
+#[allow(clippy::too_many_arguments)]
+fn run_attempt(
+    writer: &Arc<Mutex<UnixStream>>,
+    exp_fn: &Arc<ExpFn>,
+    settings: &Arc<BTreeMap<String, Json>>,
+    version: &str,
+    run_seed: u64,
+    index: u64,
+    attempt: u64,
+    params: Vec<(String, crate::config::value::ParamValue)>,
+    restored: Option<Json>,
+) -> Msg {
+    let spec = Msg::task_spec(index, &params);
+    let id = spec.id(version);
+    let seed = task_seed(run_seed, &id);
+
+    // Partial progress is relayed to the supervisor, which persists it in
+    // the checkpoint store — the worker never touches the store directly.
+    let w2 = Arc::clone(writer);
+    let sink: Arc<dyn Fn(&TaskId, &Json) + Send + Sync> = Arc::new(move |_tid, value| {
+        let _ = send(&w2, &Msg::Progress { index, value: value.clone() });
+    });
+
+    let ctx = TaskContext::new(
+        spec,
+        Arc::clone(settings),
+        seed,
+        attempt as u32,
+        id,
+        restored,
+        Some(sink),
+    );
+    let sw = Stopwatch::start();
+    let result = match catch_unwind(AssertUnwindSafe(|| exp_fn(&ctx))) {
+        Ok(Ok(value)) => WireResult::Ok { value },
+        Ok(Err(e)) => WireResult::Err { message: e.to_string(), panicked: false },
+        Err(payload) => WireResult::Err {
+            message: panic_message(payload.as_ref()),
+            panicked: true,
+        },
+    };
+    Msg::Outcome { index, attempt, duration_secs: sw.elapsed_secs(), result }
+}
+
+fn send(writer: &Arc<Mutex<UnixStream>>, msg: &Msg) -> Result<(), MementoError> {
+    let mut w = writer.lock().unwrap();
+    write_frame(&mut *w, msg).map_err(|e| MementoError::ipc(format!("write frame: {e}")))
+}
+
+fn spawn_heartbeat(
+    writer: Arc<Mutex<UnixStream>>,
+    worker: u64,
+    busy: Arc<AtomicI64>,
+    stop: Arc<AtomicBool>,
+    interval: Duration,
+) -> std::thread::JoinHandle<()> {
+    std::thread::Builder::new()
+        .name("memento-ipc-heartbeat".into())
+        .spawn(move || {
+            while !stop.load(Ordering::SeqCst) {
+                std::thread::sleep(interval);
+                if stop.load(Ordering::SeqCst) {
+                    return;
+                }
+                let b = busy.load(Ordering::SeqCst);
+                if b < 0 {
+                    continue; // idle: nobody is reading, don't fill the pipe
+                }
+                let msg = Msg::Heartbeat { worker, busy: Some(b as u64) };
+                if send(&writer, &msg).is_err() {
+                    // Supervisor is gone; the serve loop will notice on its
+                    // next read. Nothing useful left to do here.
+                    return;
+                }
+            }
+        })
+        .expect("spawn heartbeat thread")
+}

@@ -39,6 +39,8 @@ pub mod bench;
 pub mod config;
 pub mod coordinator;
 pub mod experiments;
+#[cfg(unix)]
+pub mod ipc;
 pub mod ml;
 pub mod runtime;
 pub mod testing;
@@ -50,7 +52,7 @@ pub mod prelude {
     pub use crate::config::value::{pv_bool, pv_f64, pv_int, pv_str, ParamValue};
     pub use crate::coordinator::cache::ResultCache;
     pub use crate::coordinator::checkpoint::CheckpointStore;
-    pub use crate::coordinator::error::{MementoError, TaskFailure};
+    pub use crate::coordinator::error::{FailureKind, MementoError, TaskFailure};
     pub use crate::coordinator::memento::{Memento, RunOptions};
     pub use crate::coordinator::notify::{
         ConsoleNotificationProvider, FileNotificationProvider, MemoryNotificationProvider,
@@ -58,6 +60,7 @@ pub mod prelude {
     };
     pub use crate::coordinator::results::{ResultSet, TaskOutcome, TaskStatus};
     pub use crate::coordinator::retry::RetryPolicy;
+    pub use crate::coordinator::scheduler::ExecBackend;
     pub use crate::coordinator::task::{TaskContext, TaskId, TaskSpec};
     pub use crate::util::json::Json;
 }

@@ -37,6 +37,10 @@ fn main() -> ExitCode {
         "resume" => cmd_run(rest, true),
         "status" => cmd_status(rest),
         "report" => cmd_report(rest),
+        // Hidden: the worker half of `--isolation process`. Spawned by the
+        // supervisor with MEMENTO_WORKER_SOCKET/MEMENTO_WORKER_ID set;
+        // never invoked by hand (and deliberately absent from the help).
+        "worker" => cmd_worker(),
         "--help" | "-h" | "help" => {
             println!("{}", top_help());
             return ExitCode::SUCCESS;
@@ -108,6 +112,12 @@ fn run_spec(name: &'static str) -> CliSpec {
         .opt("rows", "dataset", "report pivot rows")
         .opt("cols", "model", "report pivot columns")
         .opt("metric", "accuracy", "report metric field")
+        .opt("isolation", "thread", "execution tier: thread | process")
+        .opt(
+            "crash-budget",
+            "3",
+            "worker respawns per slot (process isolation)",
+        )
         .flag("fail-fast", "abort on first failure")
         .flag("quiet", "suppress progress/notifications")
 }
@@ -131,6 +141,19 @@ fn cmd_run(args: &[String], resuming: bool) -> Result<(), String> {
     let workers = unwrap_cli(a.get_usize("workers"))?;
     if workers > 0 {
         m = m.workers(workers);
+    }
+    match a.get("isolation").unwrap_or("thread") {
+        "thread" => {}
+        "process" => {
+            let n = if workers > 0 { workers } else { memento::util::pool::num_cpus() };
+            let budget = unwrap_cli(a.get_usize("crash-budget"))? as u32;
+            // Workers re-execute this binary via the hidden `worker`
+            // subcommand and run the same grid experiment function.
+            m = m
+                .isolate_processes(n, budget)
+                .worker_args(vec!["worker".to_string()]);
+        }
+        other => return Err(format!("--isolation must be 'thread' or 'process', got '{other}'")),
     }
     if let Some(dir) = a.get("cache") {
         m = m.with_cache_dir(dir);
@@ -176,6 +199,28 @@ fn cmd_run(args: &[String], resuming: bool) -> Result<(), String> {
         println!("results written to {out}");
     }
     Ok(())
+}
+
+/// The hidden worker mode behind `--isolation process`: connect to the
+/// supervisor socket named by the environment, execute grid tasks, exit.
+#[cfg(unix)]
+fn cmd_worker() -> Result<(), String> {
+    if !memento::ipc::worker::active() {
+        return Err(
+            "`memento worker` is internal: it is spawned by `memento run --isolation \
+             process` with the worker environment set"
+                .into(),
+        );
+    }
+    let store = shared_store().ok();
+    let exp_fn: std::sync::Arc<memento::coordinator::memento::ExpFn> =
+        std::sync::Arc::new(grid::grid_exp_fn(store));
+    memento::ipc::worker::serve(exp_fn).map_err(|e| e.to_string())
+}
+
+#[cfg(not(unix))]
+fn cmd_worker() -> Result<(), String> {
+    Err("process isolation requires a unix platform".into())
 }
 
 fn cmd_status(args: &[String]) -> Result<(), String> {

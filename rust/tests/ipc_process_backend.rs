@@ -1,0 +1,186 @@
+//! Integration tests for the process-isolated execution backend
+//! ([`memento::ipc`]): worker processes over the std-only IPC protocol,
+//! crash-requeue, and parity with the thread backend.
+//!
+//! # How workers spawn under libtest
+//!
+//! The supervisor re-executes the current binary — here, this very test
+//! binary — with the worker environment set and an argv we choose:
+//! `--exact ipc_worker_entry`. That runs exactly one "test",
+//! [`ipc_worker_entry`], which is a no-op in a normal `cargo test` pass
+//! (no worker environment) and otherwise serves task attempts over the
+//! socket with this file's experiment function. This is the documented
+//! pattern for using `ExecBackend::Processes` from a test binary.
+
+#![cfg(unix)]
+
+use memento::coordinator::journal::{Event, Journal};
+use memento::prelude::*;
+use memento::util::fs::TempDir;
+use std::sync::Arc;
+use std::time::Duration;
+
+/// The experiment function shared by the supervisor-side tests and the
+/// worker entry. Behaviour is keyed by the run's `mode` setting so one
+/// entry point serves every test.
+fn exp(ctx: &TaskContext) -> Result<Json, MementoError> {
+    let i = ctx.param_i64("i")?;
+    match ctx.setting("mode").and_then(|j| j.as_str()).unwrap_or("ok") {
+        // A worker crash, not a contained failure: the process dies
+        // instantly with no unwinding — from the supervisor's point of
+        // view this is indistinguishable from a segfault or `kill -9`.
+        "crash3" if i == 3 && ctx.attempt == 1 => std::process::abort(),
+        "fail2" if i == 2 => Err(MementoError::experiment("i=2 always fails")),
+        _ => Ok(Json::int(i * 10)),
+    }
+}
+
+/// Worker entry: spawned via `--exact ipc_worker_entry`. Does nothing in
+/// a normal test pass.
+#[test]
+fn ipc_worker_entry() {
+    if !memento::ipc::worker::active() {
+        return;
+    }
+    memento::ipc::worker::serve(Arc::new(exp)).expect("worker serve");
+    std::process::exit(0);
+}
+
+fn matrix(n: i64, mode: &str) -> ConfigMatrix {
+    ConfigMatrix::builder()
+        .param("i", (0..n).map(pv_int).collect())
+        .setting("mode", Json::str(mode))
+        .build()
+        .unwrap()
+}
+
+fn process_memento(workers: usize, crash_budget: u32) -> Memento {
+    Memento::new(exp)
+        .isolate_processes(workers, crash_budget)
+        .worker_args(vec!["--exact".to_string(), "ipc_worker_entry".to_string()])
+}
+
+#[test]
+fn process_backend_matches_thread_backend() {
+    let m = matrix(8, "ok");
+    let threads = Memento::new(exp).workers(3).run(&m).unwrap();
+    let procs = process_memento(3, 1).run(&m).unwrap();
+    assert_eq!(procs.len(), threads.len());
+    assert_eq!(procs.n_failed(), 0);
+    for (t, p) in threads.iter().zip(procs.iter()) {
+        assert_eq!(t.spec.get("i"), p.spec.get("i"));
+        assert_eq!(t.value, p.value, "i={:?}", t.spec.get("i"));
+        assert_eq!(t.id, p.id, "task identity must be backend-independent");
+    }
+}
+
+#[test]
+fn process_backend_reports_contained_failures() {
+    let results = process_memento(2, 1).run(&matrix(4, "fail2")).unwrap();
+    assert_eq!(results.len(), 4);
+    assert_eq!(results.n_failed(), 1);
+    let f = results
+        .failures()
+        .next()
+        .unwrap()
+        .failure
+        .clone()
+        .unwrap();
+    assert_eq!(f.kind, FailureKind::Error);
+    assert!(f.message.contains("i=2"), "{}", f.message);
+}
+
+/// The acceptance-criterion test: a worker dies (uncatchable `abort`,
+/// equivalent to `kill -9`) mid-task. The run must complete with
+/// exactly-once results identical to a thread run, correct retry/skip
+/// metrics, and a coherent journal for the victim:
+/// started → failed → started → succeeded.
+#[test]
+fn process_backend_survives_killed_worker() {
+    let td = TempDir::new("ipc-crash").unwrap();
+    let jpath = td.join("journal.jsonl");
+    let m = matrix(8, "crash3");
+
+    let builder = process_memento(2, 2)
+        .with_retry(RetryPolicy::fixed(2, Duration::ZERO))
+        .with_journal(&jpath)
+        .seed(7);
+    let metrics = builder.metrics();
+    let results = builder.run(&m).unwrap();
+
+    // Exactly-once, fully successful, values identical to a thread run.
+    assert_eq!(results.len(), 8);
+    assert_eq!(results.n_failed(), 0);
+    let reference = Memento::new(exp).workers(2).run(&matrix(8, "ok")).unwrap();
+    for (r, t) in results.iter().zip(reference.iter()) {
+        assert_eq!(r.spec.get("i"), t.spec.get("i"));
+        assert_eq!(r.value, t.value);
+    }
+    let victim = results.find(&[("i", pv_int(3))]).unwrap();
+    assert_eq!(victim.attempts, 2, "victim must have taken two attempts");
+
+    // Metrics: one crash-requeue, nothing skipped, everything counted.
+    assert_eq!(metrics.tasks_retried.get(), 1);
+    assert_eq!(metrics.tasks_skipped.get(), 0);
+    assert_eq!(metrics.tasks_total.get(), 8);
+    assert_eq!(metrics.tasks_succeeded.get(), 8);
+
+    // Journal: the victim's lifecycle is started(1) → failed(1, crash) →
+    // started(2) → succeeded(2); every other task succeeds exactly once,
+    // and no task records duplicate outcomes.
+    let events = Journal::replay(&jpath).unwrap();
+    let victim_events: Vec<&Event> = events
+        .iter()
+        .map(|(_, e)| e)
+        .filter(|e| match e {
+            Event::TaskStarted { id, .. }
+            | Event::TaskSucceeded { id, .. }
+            | Event::TaskFailed { id, .. } => *id == victim.id,
+            _ => false,
+        })
+        .collect();
+    assert_eq!(victim_events.len(), 4, "{victim_events:?}");
+    assert!(
+        matches!(victim_events[0], Event::TaskStarted { attempt: 1, .. }),
+        "{victim_events:?}"
+    );
+    match victim_events[1] {
+        Event::TaskFailed { attempt: 1, message, .. } => {
+            assert!(message.contains("died"), "crash message: {message}");
+        }
+        other => panic!("expected crash TaskFailed, got {other:?}"),
+    }
+    assert!(
+        matches!(victim_events[2], Event::TaskStarted { attempt: 2, .. }),
+        "{victim_events:?}"
+    );
+    assert!(
+        matches!(victim_events[3], Event::TaskSucceeded { attempt: 2, .. }),
+        "{victim_events:?}"
+    );
+
+    let mut succeeded_ids: Vec<String> = events
+        .iter()
+        .filter_map(|(_, e)| match e {
+            Event::TaskSucceeded { id, .. } => Some(id.0.clone()),
+            _ => None,
+        })
+        .collect();
+    succeeded_ids.sort();
+    let before = succeeded_ids.len();
+    succeeded_ids.dedup();
+    assert_eq!(before, 8, "8 success events, one per task");
+    assert_eq!(succeeded_ids.len(), 8, "no duplicate outcomes journaled");
+}
+
+/// Fail-fast must work across the process boundary too: after the first
+/// failure the supervisor stops dispatching and skips the remainder.
+#[test]
+fn process_backend_fail_fast_aborts_and_skips() {
+    let m = matrix(12, "fail2");
+    let err = process_memento(1, 1)
+        .fail_fast(true)
+        .run(&m)
+        .unwrap_err();
+    assert!(matches!(err, MementoError::Aborted(_)), "{err}");
+}
