@@ -9,7 +9,11 @@ use memento::bench::{black_box, Suite};
 use memento::config::matrix::ConfigMatrix;
 use memento::config::value::pv_int;
 use memento::coordinator::expand;
+use memento::coordinator::memento::Memento;
+use memento::coordinator::run::RunEvent;
 use memento::experiments::grid;
+use memento::util::json::Json;
+use std::time::Instant;
 
 fn synthetic_matrix(domains: &[usize], n_excludes: usize) -> ConfigMatrix {
     let mut b = ConfigMatrix::builder();
@@ -74,5 +78,72 @@ fn main() {
         suite.note(format!("{included} included"));
     }
 
+    // --- eager vs lazy throughput ------------------------------------------
+    // The eager oracle materializes every TaskSpec; the lazy stream visits
+    // the same combinations without allocating the product.
+    let big = synthetic_matrix(&[10, 10, 10, 10, 10], 0); // 100k combos
+    let eager = suite
+        .bench("eager expand 100k (materialize Vec)", 2, 10, |_| {
+            black_box(expand::expand(&big).len());
+        })
+        .clone();
+    let lazy = suite
+        .bench("lazy stream 100k (iterate only)", 2, 10, |_| {
+            black_box(expand::Expansion::new(&big).count());
+        })
+        .clone();
+    suite.note(format!("eager/lazy mean {:.2}x", eager.mean / lazy.mean.max(1e-12)));
+
+    // --- first-outcome latency on a 10^12-raw matrix -----------------------
+    // launch() → first TaskFinished event over a no-op experiment on a
+    // matrix the eager design could never materialize (32^8 ≈ 1.1e12 raw).
+    // This is the headline number for the streaming Run handle: it bounds
+    // how long *any* run waits before its first result regardless of
+    // matrix size.
+    let mut b = ConfigMatrix::builder();
+    for p in 0..8 {
+        b = b.param(format!("p{p}"), (0..32).map(pv_int).collect());
+    }
+    let huge = b.build().unwrap();
+    let mut first_event = Vec::new();
+    for _ in 0..5 {
+        let m = Memento::new(|_| Ok(Json::Null)).workers(2);
+        let t = Instant::now();
+        let run = m.launch(&huge).expect("launch");
+        for ev in run.events() {
+            if matches!(ev, RunEvent::TaskFinished(_)) {
+                first_event.push(t.elapsed().as_secs_f64());
+                break;
+            }
+        }
+        run.cancel();
+        // dropping the handle joins the (now cancelled) run thread
+    }
+    suite.record(
+        "first-outcome latency, 10^12-raw matrix",
+        first_event,
+        "launch -> first TaskFinished; eager expand would OOM",
+    );
+
     suite.finish();
+
+    suite.write_trajectory(
+        &memento::bench::sched_cache_trajectory_path(),
+        vec![
+            (
+                "expand_eager_vs_lazy_100k".to_string(),
+                Json::obj(vec![
+                    ("eager_mean_s", Json::Num(eager.mean)),
+                    ("lazy_mean_s", Json::Num(lazy.mean)),
+                ]),
+            ),
+            (
+                "first_outcome_latency_1e12_raw".to_string(),
+                Json::obj(vec![(
+                    "note",
+                    Json::str("see suite row 'first-outcome latency, 10^12-raw matrix'"),
+                )]),
+            ),
+        ],
+    );
 }

@@ -107,12 +107,19 @@ impl MatrixBuilder {
         self
     }
 
-    /// Adds an exclusion rule from (name, value) pairs.
-    pub fn exclude(mut self, pairs: Vec<(&str, ParamValue)>) -> Self {
+    /// Adds an exclusion rule from (name, value) pairs. Accepts any
+    /// iterable of pairs whose keys convert into `String` — the same
+    /// signature family as [`MatrixBuilder::param`]/[`MatrixBuilder::setting`]
+    /// — so `vec![("a", pv_int(1))]`, arrays, and owned `String` keys all
+    /// work without adapter code.
+    pub fn exclude<K: Into<String>>(
+        mut self,
+        pairs: impl IntoIterator<Item = (K, ParamValue)>,
+    ) -> Self {
         self.exclude.push(
             pairs
                 .into_iter()
-                .map(|(k, v)| (k.to_string(), v))
+                .map(|(k, v)| (k.into(), v))
                 .collect(),
         );
         self

@@ -21,17 +21,33 @@ use crate::util::rng::Rng;
 
 /// Uniformly samples `k` distinct tasks from the matrix expansion
 /// (deterministic in `seed`). `k` larger than the expansion returns all.
+///
+/// Reservoir sampling over the lazy [`expand::Expansion`] stream: memory
+/// is O(k) no matter how large the grid — exactly the "full grid is too
+/// large" situation random search exists for. (Time is still one pass
+/// over the included combinations; that's inherent to uniform sampling.)
 pub fn random_subset(matrix: &ConfigMatrix, k: usize, seed: u64) -> Vec<TaskSpec> {
-    let mut tasks = expand::expand(matrix);
+    let mut reservoir: Vec<TaskSpec> = Vec::new();
+    if k == 0 {
+        return reservoir;
+    }
     let mut rng = Rng::new(seed);
-    rng.shuffle(&mut tasks);
-    tasks.truncate(k);
+    for (seen, t) in expand::Expansion::new(matrix).enumerate() {
+        if reservoir.len() < k {
+            reservoir.push(t);
+        } else {
+            let j = rng.below(seen + 1);
+            if j < k {
+                reservoir[j] = t;
+            }
+        }
+    }
     // Re-index so downstream ordering is stable.
-    tasks.sort_by_key(|t| t.index);
-    for (i, t) in tasks.iter_mut().enumerate() {
+    reservoir.sort_by_key(|t| t.index);
+    for (i, t) in reservoir.iter_mut().enumerate() {
         t.index = i;
     }
-    tasks
+    reservoir
 }
 
 /// Builds tasks where the listed parameters are *zipped* (paired by
@@ -43,7 +59,7 @@ pub fn zip_params(
     zipped: &[&str],
 ) -> Result<Vec<TaskSpec>, MementoError> {
     if zipped.is_empty() {
-        return Ok(expand::expand(matrix));
+        return Ok(expand::Expansion::new(matrix).collect());
     }
     let mut zip_len = None;
     for name in zipped {
@@ -82,7 +98,7 @@ pub fn zip_params(
 
     let mut out = Vec::new();
     let mut index = 0;
-    for rest_spec in expand::expand(&rest_matrix) {
+    for rest_spec in expand::Expansion::new(&rest_matrix) {
         for zi in 0..zip_len {
             let mut params: Vec<(String, ParamValue)> = matrix
                 .parameters
@@ -113,7 +129,7 @@ pub fn zip_params(
 pub fn union(matrices: &[&ConfigMatrix]) -> Vec<TaskSpec> {
     let mut out = Vec::new();
     for m in matrices {
-        for mut t in expand::expand(m) {
+        for mut t in expand::Expansion::new(*m) {
             t.index = out.len();
             out.push(t);
         }

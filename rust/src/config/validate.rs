@@ -132,7 +132,11 @@ mod tests {
 
     #[test]
     fn empty_exclude_rule_fails() {
-        let err = base().exclude(vec![]).build().unwrap_err();
+        // The generic `exclude` needs a key type even for an empty rule.
+        let err = base()
+            .exclude(Vec::<(&str, crate::config::value::ParamValue)>::new())
+            .build()
+            .unwrap_err();
         assert!(err.to_string().contains("is empty"), "{err}");
     }
 }

@@ -54,7 +54,10 @@ pub struct CheckpointStore {
     run_dir: PathBuf,
     matrix_fingerprint: String,
     version: String,
-    total_tasks: usize,
+    /// Atomic because the streaming pipeline only learns the final total
+    /// once the lazy expansion is exhausted ([`CheckpointStore::set_total`])
+    /// — which can be after the first flushes have already happened.
+    total_tasks: std::sync::atomic::AtomicUsize,
     flush_every: usize,
     inner: Mutex<Inner>,
 }
@@ -75,7 +78,7 @@ impl CheckpointStore {
             run_dir,
             matrix_fingerprint: matrix_fingerprint.to_string(),
             version: version.to_string(),
-            total_tasks,
+            total_tasks: std::sync::atomic::AtomicUsize::new(total_tasks),
             flush_every: flush_every.max(1),
             inner: Mutex::new(Inner { entries: BTreeMap::new(), dirty_since_flush: 0 }),
         };
@@ -121,6 +124,19 @@ impl CheckpointStore {
             )));
         }
 
+        // Streaming resumes pass total 0 (the lazy expansion hasn't been
+        // counted yet); keep the manifest's stored total in that case so
+        // a crash or cancel before `set_total` fires never clobbers a
+        // previously-correct count with 0.
+        let total_tasks = if total_tasks == 0 {
+            doc.get("total_tasks")
+                .and_then(|j| j.as_i64())
+                .map(|v| v.max(0) as usize)
+                .unwrap_or(0)
+        } else {
+            total_tasks
+        };
+
         let mut entries = BTreeMap::new();
         if let Some(done) = doc.get("completed").and_then(|j| j.as_obj()) {
             for (id, entry) in done {
@@ -151,7 +167,7 @@ impl CheckpointStore {
             run_dir,
             matrix_fingerprint: matrix_fingerprint.to_string(),
             version: version.to_string(),
-            total_tasks,
+            total_tasks: std::sync::atomic::AtomicUsize::new(total_tasks),
             flush_every: flush_every.max(1),
             inner: Mutex::new(Inner { entries, dirty_since_flush: 0 }),
         })
@@ -160,6 +176,19 @@ impl CheckpointStore {
     /// True if a manifest exists under `run_dir`.
     pub fn exists(run_dir: &Path) -> bool {
         run_dir.join("manifest.json").exists()
+    }
+
+    /// Final task count, recorded once the lazy expansion is exhausted.
+    /// The next flush persists it; until then the manifest carries the
+    /// count known at creation time (0 for streaming runs).
+    pub fn set_total(&self, total: usize) {
+        self.total_tasks
+            .store(total, std::sync::atomic::Ordering::Relaxed);
+    }
+
+    /// The currently known task total.
+    pub fn total(&self) -> usize {
+        self.total_tasks.load(std::sync::atomic::Ordering::Relaxed)
     }
 
     pub fn run_dir(&self) -> &Path {
@@ -266,7 +295,10 @@ impl CheckpointStore {
             Json::obj(vec![
                 ("matrix_fingerprint", Json::str(self.matrix_fingerprint.clone())),
                 ("version", Json::str(self.version.clone())),
-                ("total_tasks", Json::int(self.total_tasks as i64)),
+                (
+                    "total_tasks",
+                    Json::int(self.total_tasks.load(std::sync::atomic::Ordering::Relaxed) as i64),
+                ),
                 ("completed", completed),
             ])
         };

@@ -9,28 +9,66 @@
 use crate::config::matrix::{ConfigMatrix, ExcludeRule};
 use crate::config::value::ParamValue;
 use crate::coordinator::task::TaskSpec;
+use std::borrow::Borrow;
 
 /// Lazy iterator over the included combinations of a matrix.
-pub struct Expansion<'a> {
-    matrix: &'a ConfigMatrix,
+///
+/// Generic over how the matrix is held: `Expansion::new(&matrix)` borrows
+/// (the common in-scope case), while `Expansion::new(matrix)` /
+/// `Expansion::new(arc)` own it — which is what lets the streaming run
+/// pipeline hand a `'static` expansion to worker threads without ever
+/// materializing the product.
+///
+/// Exclusion rules are applied **against the odometer counters** (no spec
+/// is allocated for an excluded combination), and a matching rule skips
+/// its whole remaining *block* in one step: every combination agreeing
+/// with the counters up to the rule's last constrained parameter is
+/// excluded too, so the odometer jumps straight past them. A rule pinning
+/// an early (slow-varying) parameter therefore skips its ~`raw/len`
+/// combinations in O(1) instead of iterating them — without this, a long
+/// excluded run would stall the first scheduler pull for hours while
+/// holding the source lock.
+pub struct Expansion<M: Borrow<ConfigMatrix> = ConfigMatrix> {
+    matrix: M,
     /// Odometer over domain indices; `None` once exhausted.
     counters: Option<Vec<usize>>,
+    /// Exclusion rules resolved to `(last constrained position, pairs of
+    /// (position, value))`. Rules naming unknown parameters can never
+    /// match a full assignment and are dropped (same semantics as
+    /// [`is_excluded`]).
+    rules: Vec<(usize, Vec<(usize, ParamValue)>)>,
     /// Running index over *included* tasks (the `TaskSpec::index`).
     next_index: usize,
-    /// Raw combinations visited so far (included + excluded).
+    /// Raw combinations visited so far (included + excluded, where
+    /// block-skipped exclusions count as visited).
     raw_visited: usize,
 }
 
-impl<'a> Expansion<'a> {
-    pub fn new(matrix: &'a ConfigMatrix) -> Self {
-        let counters = if matrix.parameters.iter().any(|(_, d)| d.is_empty())
-            || matrix.parameters.is_empty()
+impl<M: Borrow<ConfigMatrix>> Expansion<M> {
+    pub fn new(matrix: M) -> Self {
+        let m = matrix.borrow();
+        let counters = if m.parameters.iter().any(|(_, d)| d.is_empty())
+            || m.parameters.is_empty()
         {
             None
         } else {
-            Some(vec![0; matrix.parameters.len()])
+            Some(vec![0; m.parameters.len()])
         };
-        Expansion { matrix, counters, next_index: 0, raw_visited: 0 }
+        let rules = m
+            .exclude
+            .iter()
+            .filter_map(|rule| {
+                let mut pairs = Vec::with_capacity(rule.len());
+                let mut max_pos = 0usize;
+                for (key, want) in rule {
+                    let pos = m.parameters.iter().position(|(n, _)| n == key)?;
+                    max_pos = max_pos.max(pos);
+                    pairs.push((pos, want.clone()));
+                }
+                Some((max_pos, pairs))
+            })
+            .collect();
+        Expansion { matrix, counters, rules, next_index: 0, raw_visited: 0 }
     }
 
     /// Number of raw combinations visited so far (for progress reporting).
@@ -42,6 +80,7 @@ impl<'a> Expansion<'a> {
         let counters = self.counters.as_ref().unwrap();
         let params = self
             .matrix
+            .borrow()
             .parameters
             .iter()
             .zip(counters)
@@ -50,39 +89,83 @@ impl<'a> Expansion<'a> {
         TaskSpec { params, index: self.next_index }
     }
 
-    fn advance(&mut self) {
+    /// If the current counters match a rule, the last position that rule
+    /// constrains (the whole block sharing `counters[..=pos]` is excluded).
+    fn matched_rule_max_pos(&self) -> Option<usize> {
+        let counters = self.counters.as_ref()?;
+        let matrix = self.matrix.borrow();
+        self.rules.iter().find_map(|(max_pos, pairs)| {
+            pairs
+                .iter()
+                .all(|(pos, want)| &matrix.parameters[*pos].1[counters[*pos]] == want)
+                .then_some(*max_pos)
+        })
+    }
+
+    /// Raw combinations from the current position through the end of the
+    /// block that fixes `counters[..=m]` (inclusive of the current one).
+    fn remaining_in_block(&self, m: usize) -> usize {
+        let matrix = self.matrix.borrow();
+        let counters = self.counters.as_ref().unwrap();
+        let mut rem = 1usize;
+        let mut stride = 1usize;
+        for pos in (m + 1..counters.len()).rev() {
+            let len = matrix.parameters[pos].1.len();
+            rem += (len - 1 - counters[pos]) * stride;
+            stride *= len;
+        }
+        rem
+    }
+
+    /// Odometer increment at position `m`: positions after `m` reset to 0,
+    /// carry propagates toward position 0. Last parameter fastest (matches
+    /// nested-loop order of the paper's dict) when `m` is the last
+    /// position; block skips pass the matched rule's last position.
+    fn advance_at(&mut self, m: usize) {
+        let matrix = self.matrix.borrow();
         let counters = match &mut self.counters {
             Some(c) => c,
             None => return,
         };
-        // Odometer increment, last parameter fastest (matches nested-loop
-        // order of the paper's dict).
-        for pos in (0..counters.len()).rev() {
+        for c in counters.iter_mut().skip(m + 1) {
+            *c = 0;
+        }
+        for pos in (0..=m).rev() {
             counters[pos] += 1;
-            if counters[pos] < self.matrix.parameters[pos].1.len() {
+            if counters[pos] < matrix.parameters[pos].1.len() {
                 return;
             }
             counters[pos] = 0;
         }
         self.counters = None;
     }
+
+    fn advance(&mut self) {
+        if let Some(c) = &self.counters {
+            let last = c.len() - 1;
+            self.advance_at(last);
+        }
+    }
 }
 
-impl<'a> Iterator for Expansion<'a> {
+impl<M: Borrow<ConfigMatrix>> Iterator for Expansion<M> {
     type Item = TaskSpec;
 
     fn next(&mut self) -> Option<TaskSpec> {
         loop {
             self.counters.as_ref()?;
+            if let Some(m) = self.matched_rule_max_pos() {
+                // Everything sharing counters[..=m] is excluded: account
+                // for the block's remainder and leap straight past it.
+                self.raw_visited += self.remaining_in_block(m);
+                self.advance_at(m);
+                continue;
+            }
             let spec = self.current_spec();
             self.advance();
             self.raw_visited += 1;
-            if !is_excluded(&spec, &self.matrix.exclude) {
-                let mut spec = spec;
-                spec.index = self.next_index;
-                self.next_index += 1;
-                return Some(spec);
-            }
+            self.next_index += 1;
+            return Some(spec);
         }
     }
 }
@@ -99,6 +182,11 @@ fn rule_matches(spec: &TaskSpec, rule: &ExcludeRule) -> bool {
 }
 
 /// Eagerly expands a matrix into the full included task list.
+///
+/// **Materializes every included task.** The run pipeline never calls
+/// this — `Memento::launch` feeds the scheduler straight from a lazy
+/// [`Expansion`] — so it survives as the oracle for expansion tests and as
+/// a convenience for small, bounded matrices (sweep sampling, reports).
 pub fn expand(matrix: &ConfigMatrix) -> Vec<TaskSpec> {
     Expansion::new(matrix).collect()
 }
@@ -321,9 +409,7 @@ mod tests {
                     (name.clone(), pv_int(g.size(0, dlen - 1) as i64))
                 })
                 .collect();
-            let pairs_ref: Vec<(&str, ParamValue)> =
-                pairs.iter().map(|(n, v)| (n.as_str(), v.clone())).collect();
-            b = b.exclude(pairs_ref);
+            b = b.exclude(pairs);
         }
         b.build().expect("generated matrix must validate")
     }
@@ -411,6 +497,106 @@ mod tests {
             crate::prop_assert!(ids.len() == n, "duplicate task ids in expansion");
             Ok(())
         });
+    }
+
+    /// Independent *eager* oracle: decodes every raw combination by plain
+    /// div/mod arithmetic and filters with the exclusion predicate — no
+    /// `Expansion` involved. This is what "the old eager expand()" did,
+    /// kept alive here purely as a reference implementation.
+    fn eager_oracle(m: &ConfigMatrix) -> (Vec<TaskSpec>, usize) {
+        let dims: Vec<usize> = m.parameters.iter().map(|(_, d)| d.len()).collect();
+        let mut included = Vec::new();
+        let mut excluded = 0usize;
+        for mut k in 0..m.raw_count() {
+            let mut assignment: Vec<(String, ParamValue)> = Vec::with_capacity(dims.len());
+            for (pi, &dlen) in dims.iter().enumerate().rev() {
+                let (name, domain) = &m.parameters[pi];
+                assignment.push((name.clone(), domain[k % dlen].clone()));
+                k /= dlen;
+            }
+            assignment.reverse();
+            let spec = TaskSpec { params: assignment, index: included.len() };
+            if is_excluded(&spec, &m.exclude) {
+                excluded += 1;
+            } else {
+                included.push(spec);
+            }
+        }
+        (included, excluded)
+    }
+
+    #[test]
+    fn prop_lazy_expansion_matches_eager_oracle() {
+        // The lazy iterator must yield exactly the same task-id set (and
+        // order, and indices) as the eager oracle, with identical
+        // exclusion counts.
+        check("lazy-matches-eager-oracle", 40, |g| {
+            let m = random_matrix(g);
+            let (eager, eager_excluded) = eager_oracle(&m);
+            let lazy: Vec<TaskSpec> = Expansion::new(&m).collect();
+            crate::prop_assert!(
+                lazy.len() == eager.len(),
+                "lazy yielded {} tasks, eager oracle {}",
+                lazy.len(),
+                eager.len()
+            );
+            let eager_ids: Vec<_> = eager.iter().map(|t| t.id("v1")).collect();
+            let lazy_ids: Vec<_> = lazy.iter().map(|t| t.id("v1")).collect();
+            crate::prop_assert!(
+                lazy_ids == eager_ids,
+                "task-id streams diverge between lazy and eager expansion"
+            );
+            for (i, t) in lazy.iter().enumerate() {
+                crate::prop_assert!(t.index == i, "lazy index {i} -> {}", t.index);
+            }
+            crate::prop_assert!(
+                count_excluded(&m) == eager_excluded,
+                "exclusion counts diverge: lazy {} vs eager {}",
+                count_excluded(&m),
+                eager_excluded
+            );
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn huge_matrix_first_k_specs_return_instantly() {
+        // ~10^12 raw combinations (10^8)^... : 8 params × 32 values =
+        // 32^8 ≈ 1.1e12. Taking the first k specs must cost O(k), not
+        // O(raw): the product is never materialized (the old eager
+        // expand() would OOM long before returning).
+        let mut b = ConfigMatrix::builder();
+        for p in 0..8 {
+            b = b.param(format!("p{p}"), (0..32).map(|v| pv_int(v as i64)).collect());
+        }
+        // An exclusion rule so the lazy filter path is exercised too.
+        let m = b.exclude(vec![("p7", pv_int(0))]).build().unwrap();
+        assert!(m.raw_count() > 1_000_000_000_000usize, "raw={}", m.raw_count());
+
+        let started = std::time::Instant::now();
+        let mut it = Expansion::new(&m);
+        let k = 10_000;
+        let first_k: Vec<TaskSpec> = it.by_ref().take(k).collect();
+        assert_eq!(first_k.len(), k);
+        for (i, t) in first_k.iter().enumerate() {
+            assert_eq!(t.index, i);
+            assert_ne!(t.get("p7"), Some(&pv_int(0)), "excluded combo leaked");
+        }
+        // Visited raw combos stay proportional to k (k included plus the
+        // interleaved exclusions), nowhere near the full product.
+        assert!(
+            it.raw_visited() < 2 * k + 64,
+            "raw_visited {} suggests eager behavior",
+            it.raw_visited()
+        );
+        // Generous bound: laziness makes this micro/milliseconds; eager
+        // materialization would run for hours. Guards against regressions
+        // that quietly re-materialize the product.
+        assert!(
+            started.elapsed() < std::time::Duration::from_secs(10),
+            "first-k taking {:?} — expansion is no longer lazy",
+            started.elapsed()
+        );
     }
 
     #[test]

@@ -34,10 +34,19 @@
 //! 5. **record** — cache the value (write-through both tiers), checkpoint
 //!    the outcome, notify on failure, update metrics and progress.
 //!
-//! Pending tasks are dispatched in batched chunks over the work-stealing
-//! pool (see [`crate::coordinator::scheduler`]); steal/chunk/skip counters
-//! land in [`RunMetrics`] so `memento run`'s summary shows how the run was
-//! balanced.
+//! Pending tasks are pulled lazily from the expansion stream by the
+//! scheduler's workers (see [`crate::coordinator::scheduler::run_stream`]);
+//! pull/steal/skip counters land in [`RunMetrics`] so `memento run`'s
+//! summary shows how the run was balanced.
+//!
+//! Two entry points share that pipeline:
+//! - [`Memento::run`]/[`Memento::resume`] — the paper's blocking API,
+//!   returning a [`ResultSet`];
+//! - [`Memento::launch`]/[`Memento::launch_resume`] — the streaming API,
+//!   returning a live [`Run`] handle whose [`Run::events`] yields typed
+//!   [`RunEvent`]s (`TaskStarted`, `TaskFinished`, `Progress`,
+//!   `WorkerCrashed`, `RunComplete`) as they happen. `run()` is literally
+//!   `launch()?.collect()`.
 
 use crate::config::matrix::ConfigMatrix;
 use crate::coordinator::cache::ResultCache;
@@ -50,13 +59,15 @@ use crate::coordinator::notify::{Notification, NotificationProvider};
 use crate::coordinator::progress::{ProgressReporter, ProgressState};
 use crate::coordinator::results::{ResultSet, TaskOutcome, TaskStatus};
 use crate::coordinator::retry::RetryPolicy;
-use crate::coordinator::scheduler::{ExecBackend, SchedulerOptions};
+use crate::coordinator::run::{EventSink, GatedNotifier, Run, RunEvent, RunSummary};
+use crate::coordinator::scheduler::{ExecBackend, SchedulerOptions, SpecSource, StreamHooks};
 use crate::coordinator::task::{task_seed, TaskContext, TaskId, TaskSpec};
 use crate::util::json::Json;
 use crate::util::time::Stopwatch;
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::path::PathBuf;
-use std::sync::Arc;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
 use std::time::Duration;
 
 /// The experiment function signature (the paper's `exp_func`).
@@ -239,25 +250,47 @@ impl Memento {
 
     // ---- execution ---------------------------------------------------------
 
-    /// Expands the matrix and runs every included task. Creates a fresh
-    /// checkpoint manifest when a checkpoint dir is configured.
+    /// Expands the matrix and runs every included task, blocking until the
+    /// last outcome. Creates a fresh checkpoint manifest when a checkpoint
+    /// dir is configured.
+    ///
+    /// Preserved as a thin wrapper: `run()` ≡ `launch().collect()`.
     pub fn run(&self, matrix: &ConfigMatrix) -> Result<ResultSet, MementoError> {
-        self.run_inner(matrix, false)
+        self.launch_inner(matrix, false)?.collect()
     }
 
     /// Resumes a checkpointed run: completed-successful tasks are restored
-    /// from the manifest; failed and never-run tasks execute.
+    /// from the manifest; failed and never-run tasks execute. Blocking,
+    /// ≡ `launch_resume().collect()`.
     pub fn resume(&self, matrix: &ConfigMatrix) -> Result<ResultSet, MementoError> {
-        self.run_inner(matrix, true)
+        self.launch_inner(matrix, true)?.collect()
     }
 
-    fn run_inner(&self, matrix: &ConfigMatrix, resuming: bool) -> Result<ResultSet, MementoError> {
+    /// Starts the run and returns a live [`Run`] handle immediately.
+    ///
+    /// The matrix is expanded **lazily** on the run's own thread — the
+    /// full cartesian product is never materialized, so a 10¹²-combination
+    /// matrix launches instantly and the first outcomes stream while
+    /// expansion is still being consumed. Observe progress with
+    /// [`Run::events`], stop mid-flight with [`Run::cancel`], and obtain
+    /// the familiar [`ResultSet`] with [`Run::collect`].
+    pub fn launch(&self, matrix: &ConfigMatrix) -> Result<Run, MementoError> {
+        self.launch_inner(matrix, false)
+    }
+
+    /// [`Memento::launch`], but resuming from the configured checkpoint
+    /// directory (the streaming form of [`Memento::resume`]).
+    pub fn launch_resume(&self, matrix: &ConfigMatrix) -> Result<Run, MementoError> {
+        self.launch_inner(matrix, true)
+    }
+
+    fn launch_inner(&self, matrix: &ConfigMatrix, resuming: bool) -> Result<Run, MementoError> {
         // Worker interception: when this process was spawned by a
-        // supervisor (see `crate::ipc`), `run` does not start a run of its
-        // own — it serves task attempts over the socket with this
-        // Memento's experiment function, then exits. This is what lets a
-        // binary opt into process isolation with a single builder call: a
-        // re-execution of itself flows back here and becomes a worker.
+        // supervisor (see `crate::ipc`), `run`/`launch` do not start a run
+        // of their own — they serve task attempts over the socket with
+        // this Memento's experiment function, then exit. This is what lets
+        // a binary opt into process isolation with a single builder call:
+        // a re-execution of itself flows back here and becomes a worker.
         #[cfg(unix)]
         {
             if crate::ipc::worker::active() {
@@ -266,12 +299,12 @@ impl Memento {
             }
         }
         crate::config::validate::validate(matrix)?;
-        let wall = Stopwatch::start();
-        let specs = expand::expand(matrix);
-        let total = specs.len();
-        let version = self.options.version.clone();
 
-        // -- checkpoint store (create or resume) ---------------------------
+        // Checkpoint setup stays synchronous so configuration errors
+        // (missing dir, fingerprint/version mismatch) surface from
+        // `launch` itself, not from a later `collect`. The final task
+        // total is unknown until the lazy expansion is exhausted; the run
+        // thread fills it in via `CheckpointStore::set_total`.
         let checkpoint: Option<Arc<CheckpointStore>> = match &self.checkpoint_dir {
             None => None,
             Some(dir) => {
@@ -280,16 +313,16 @@ impl Memento {
                     CheckpointStore::resume(
                         dir,
                         &fp,
-                        &version,
-                        total,
+                        &self.options.version,
+                        0,
                         self.options.checkpoint_flush_every,
                     )?
                 } else {
                     CheckpointStore::create(
                         dir,
                         &fp,
-                        &version,
-                        total,
+                        &self.options.version,
+                        0,
                         self.options.checkpoint_flush_every,
                     )?
                 };
@@ -302,152 +335,389 @@ impl Memento {
             ));
         }
 
-        // -- split restored vs pending --------------------------------------
-        let settings = Arc::new(matrix.settings.clone());
-        let mut restored: Vec<TaskOutcome> = Vec::new();
-        let mut pending: Vec<TaskSpec> = Vec::new();
-        for spec in specs {
-            let id = spec.id(&version);
-            // (a) resumed manifest
-            if let Some(ck) = &checkpoint {
-                if resuming {
-                    if let Some(entry) = ck.entry(&id) {
-                        if entry.succeeded() {
-                            restored.push(TaskOutcome {
+        let (sink, rx) = Run::channel();
+        let cancel = Arc::new(AtomicBool::new(false));
+        let worker = RunWorker {
+            exp_fn: Arc::clone(&self.exp_fn),
+            options: self.options.clone(),
+            cache: self.cache.clone(),
+            notifier: self.notifier.clone(),
+            metrics: Arc::clone(&self.metrics),
+            journal: self.journal.clone(),
+            worker_args: self.worker_args.clone(),
+            checkpoint,
+            matrix: matrix.clone(),
+            resuming,
+            sink,
+            cancel: Arc::clone(&cancel),
+        };
+        let handle = std::thread::Builder::new()
+            .name("memento-run".into())
+            .spawn(move || worker.execute())
+            .map_err(|e| MementoError::config(format!("spawn run thread: {e}")))?;
+        Ok(Run::new(rx, cancel, handle))
+    }
+}
+
+/// One launched run, moved onto its own thread by [`Memento::launch`].
+///
+/// Owns clones of the `Memento` configuration so the builder, the [`Run`]
+/// handle, and the executing run are fully decoupled. Everything the run
+/// observes flows out through the event sink (typed [`RunEvent`]s), the
+/// gated notifier, and the shared metrics registry.
+struct RunWorker {
+    exp_fn: Arc<ExpFn>,
+    options: RunOptions,
+    cache: Option<Arc<ResultCache>>,
+    notifier: Option<Arc<dyn NotificationProvider>>,
+    metrics: Arc<RunMetrics>,
+    journal: Option<Arc<Journal>>,
+    worker_args: Option<Vec<String>>,
+    checkpoint: Option<Arc<CheckpointStore>>,
+    matrix: ConfigMatrix,
+    resuming: bool,
+    sink: EventSink,
+    cancel: Arc<AtomicBool>,
+}
+
+impl RunWorker {
+    /// The streaming run pipeline. Expansion, restore-probing, execution,
+    /// and observation are one lazy stream: the scheduler pulls specs from
+    /// the planner (which restores cache/checkpoint hits as it scans and
+    /// never materializes the product), outcomes are pushed out as typed
+    /// events the moment they complete, and totals are finalized when the
+    /// expansion is first exhausted.
+    fn execute(self) -> Result<ResultSet, MementoError> {
+        let wall = Stopwatch::start();
+        let version = self.options.version.clone();
+        let settings = Arc::new(self.matrix.settings.clone());
+
+        // Notification ordering gate: `RunStarted` carries exact totals,
+        // which a streaming run only knows once the expansion is
+        // exhausted. Task-level notifications raised before that moment
+        // are buffered behind it (see [`GatedNotifier`]).
+        let gate = self.notifier.clone().map(GatedNotifier::new);
+        let notifier: Option<Arc<dyn NotificationProvider>> = gate
+            .clone()
+            .map(|g| g as Arc<dyn NotificationProvider>);
+
+        let progress = ProgressState::streaming();
+        let _reporter = self
+            .options
+            .progress_interval
+            .map(|iv| ProgressReporter::start(Arc::clone(&progress), iv, false));
+
+        let outcomes: Arc<Mutex<Vec<TaskOutcome>>> = Arc::new(Mutex::new(Vec::new()));
+        let restored = Arc::new(AtomicUsize::new(0));
+        let finished = Arc::new(AtomicUsize::new(0));
+        let skipped_ctr = Arc::new(AtomicUsize::new(0));
+
+        let progress_event: Arc<dyn Fn() + Send + Sync> = {
+            let sink = self.sink.clone();
+            let progress = Arc::clone(&progress);
+            let restored = Arc::clone(&restored);
+            let finished = Arc::clone(&finished);
+            let skipped_ctr = Arc::clone(&skipped_ctr);
+            Arc::new(move || {
+                sink.emit(RunEvent::Progress {
+                    finished: finished.load(Ordering::SeqCst),
+                    restored: restored.load(Ordering::SeqCst),
+                    skipped: skipped_ctr.load(Ordering::SeqCst),
+                    planned: progress.total(),
+                    planning_complete: progress.planning_complete(),
+                });
+            })
+        };
+
+        // Terminal-outcome fan-in shared by both backends: accumulate for
+        // the final ResultSet, publish TaskFinished + Progress events.
+        let deliver: Arc<dyn Fn(TaskOutcome) + Send + Sync> = {
+            let outcomes = Arc::clone(&outcomes);
+            let finished = Arc::clone(&finished);
+            let sink = self.sink.clone();
+            let progress_event = Arc::clone(&progress_event);
+            Arc::new(move |o: TaskOutcome| {
+                finished.fetch_add(1, Ordering::SeqCst);
+                sink.emit(RunEvent::TaskFinished(o.clone()));
+                outcomes.lock().unwrap().push(o);
+                progress_event();
+            })
+        };
+        let deliver_restored: Arc<dyn Fn(TaskOutcome) + Send + Sync> = {
+            let outcomes = Arc::clone(&outcomes);
+            let restored = Arc::clone(&restored);
+            let sink = self.sink.clone();
+            let progress_event = Arc::clone(&progress_event);
+            Arc::new(move |o: TaskOutcome| {
+                restored.fetch_add(1, Ordering::SeqCst);
+                sink.emit(RunEvent::TaskFinished(o.clone()));
+                outcomes.lock().unwrap().push(o);
+                progress_event();
+            })
+        };
+
+        // The planner: the lazy expansion filtered against the resumed
+        // manifest and the result cache, restoring hits as it scans. It
+        // runs incrementally on the scheduler's pull path, so a restored
+        // task becomes a TaskFinished event without ever entering the
+        // execution queue.
+        // First storage error hit by the lazy planner (it runs inside an
+        // iterator and cannot propagate `?` directly); surfaced after
+        // dispatch so checkpoint write failures still fail the run, as
+        // the eager pipeline's `ck.record(..)?` did.
+        let planner_error: Arc<Mutex<Option<MementoError>>> = Arc::new(Mutex::new(None));
+        let source: SpecSource = {
+            let cache = self.cache.clone();
+            let checkpoint = self.checkpoint.clone();
+            let metrics = Arc::clone(&self.metrics);
+            let journal = self.journal.clone();
+            let progress = Arc::clone(&progress);
+            let version = version.clone();
+            let resuming = self.resuming;
+            let deliver_restored = Arc::clone(&deliver_restored);
+            let planner_error = Arc::clone(&planner_error);
+            Box::new(
+                expand::Expansion::new(self.matrix.clone()).filter_map(move |spec| {
+                    let id = spec.id(&version);
+                    // (a) resumed manifest
+                    if resuming {
+                        if let Some(entry) =
+                            checkpoint.as_ref().and_then(|ck| ck.entry(&id))
+                        {
+                            if entry.succeeded() {
+                                metrics.tasks_cached.inc();
+                                deliver_restored(TaskOutcome {
+                                    spec,
+                                    id,
+                                    status: TaskStatus::Success,
+                                    value: entry.value,
+                                    failure: None,
+                                    duration_secs: 0.0,
+                                    from_cache: true,
+                                    attempts: 0,
+                                });
+                                return None;
+                            }
+                            // failed previously -> re-run
+                        }
+                    }
+                    // (b) result cache
+                    if let Some(cache) = &cache {
+                        if let Some(value) = cache.get(&id) {
+                            metrics.cache_hits.inc();
+                            // Also record into the (fresh) checkpoint so a
+                            // later resume sees it without consulting the
+                            // cache.
+                            if let Some(ck) = &checkpoint {
+                                if let Err(e) = ck.record(&id, Some(&value), None, 0.0, 0) {
+                                    let mut slot = planner_error.lock().unwrap();
+                                    slot.get_or_insert(e);
+                                }
+                            }
+                            if let Some(j) = &journal {
+                                j.record(&Event::TaskRestored { id: id.clone() });
+                            }
+                            metrics.tasks_cached.inc();
+                            deliver_restored(TaskOutcome {
                                 spec,
                                 id,
                                 status: TaskStatus::Success,
-                                value: entry.value,
+                                value: Some(value),
                                 failure: None,
                                 duration_secs: 0.0,
                                 from_cache: true,
                                 attempts: 0,
                             });
-                            self.metrics.tasks_cached.inc();
-                            continue;
+                            return None;
                         }
-                        // failed previously → re-run
+                        metrics.cache_misses.inc();
                     }
+                    progress.add_planned(1);
+                    Some(spec)
+                }),
+            )
+        };
+
+        // Fires once, when the expansion stream is first exhausted: totals
+        // become final, the checkpoint learns them, and the gate releases
+        // `RunStarted` (with exact counts) ahead of any buffered failures.
+        let on_drained: Box<dyn FnOnce() + Send + Sync> = {
+            let progress = Arc::clone(&progress);
+            let restored = Arc::clone(&restored);
+            let checkpoint = self.checkpoint.clone();
+            let gate = gate.clone();
+            let progress_event = Arc::clone(&progress_event);
+            Box::new(move || {
+                progress.finish_planning();
+                let from_cache = restored.load(Ordering::SeqCst);
+                let total = progress.total() + from_cache;
+                if let Some(ck) = &checkpoint {
+                    ck.set_total(total);
                 }
-            }
-            // (b) result cache
-            if let Some(cache) = &self.cache {
-                if let Some(value) = cache.get(&id) {
-                    self.metrics.cache_hits.inc();
-                    // Also record into the (fresh) checkpoint so a later
-                    // resume sees it without consulting the cache.
-                    if let Some(ck) = &checkpoint {
-                        ck.record(&id, Some(&value), None, 0.0, 0)?;
-                    }
-                    if let Some(j) = &self.journal {
-                        j.record(&Event::TaskRestored { id: id.clone() });
-                    }
-                    restored.push(TaskOutcome {
-                        spec,
-                        id,
-                        status: TaskStatus::Success,
-                        value: Some(value),
-                        failure: None,
-                        duration_secs: 0.0,
-                        from_cache: true,
-                        attempts: 0,
-                    });
-                    self.metrics.tasks_cached.inc();
-                    continue;
+                if let Some(g) = &gate {
+                    g.open(total, from_cache);
                 }
-                self.metrics.cache_misses.inc();
-            }
-            pending.push(spec);
-        }
+                // A Progress event with final totals, so observers see
+                // `planning_complete` even if the last outcome landed
+                // before exhaustion was discovered.
+                progress_event();
+            })
+        };
 
-        let from_cache = restored.len();
-        self.notify(&Notification::RunStarted { total, from_cache });
-
-        // -- progress --------------------------------------------------------
-        let progress = ProgressState::new(pending.len());
-        let _reporter = self.options.progress_interval.map(|iv| {
-            ProgressReporter::start(Arc::clone(&progress), iv, false)
-        });
-
-        // -- dispatch over the selected backend ------------------------------
-        let (run_outcomes, skipped_count, aborted) = match self.options.backend {
+        // -- dispatch over the selected backend ----------------------------
+        let dispatched: Result<(bool, bool, usize, bool), MementoError> = match self
+            .options
+            .backend
+        {
             ExecBackend::Threads => {
                 let job = self.make_job(
                     Arc::clone(&settings),
-                    checkpoint.clone(),
+                    self.checkpoint.clone(),
                     version.clone(),
+                    notifier.clone(),
                 );
                 let sched = SchedulerOptions {
                     workers: self.options.workers,
                     fail_fast: self.options.fail_fast,
                 };
-                let report = crate::coordinator::scheduler::run_all_with_metrics(
-                    pending,
+                let report = crate::coordinator::scheduler::run_stream(
+                    source,
                     &sched,
                     job,
-                    Some(Arc::clone(&progress)),
-                    Some(Arc::clone(&self.metrics)),
+                    StreamHooks {
+                        on_outcome: Some(Arc::clone(&deliver)),
+                        on_skip: Some({
+                            let skipped_ctr = Arc::clone(&skipped_ctr);
+                            Arc::new(move |_s: TaskSpec| {
+                                skipped_ctr.fetch_add(1, Ordering::SeqCst);
+                            })
+                        }),
+                        on_source_drained: Some(on_drained),
+                        progress: Some(Arc::clone(&progress)),
+                        metrics: Some(Arc::clone(&self.metrics)),
+                        cancel: Some(Arc::clone(&self.cancel)),
+                    },
                 );
-                (report.outcomes, report.skipped.len(), report.aborted)
+                Ok((report.aborted, report.cancelled, report.skipped, report.drain_truncated))
             }
             ExecBackend::Processes { workers, crash_budget } => self.run_processes(
-                pending,
+                source,
                 &settings,
-                checkpoint.clone(),
                 version.clone(),
                 Arc::clone(&progress),
                 workers,
                 crash_budget,
-            )?,
+                Arc::clone(&deliver),
+                Arc::clone(&skipped_ctr),
+                on_drained,
+                notifier.clone(),
+            ),
+        };
+        let (aborted, cancelled, skipped_count, drain_truncated) = match dispatched {
+            Ok(t) => t,
+            Err(e) => {
+                // Backend setup failed (e.g. IPC socket/spawn errors).
+                // `RunComplete` is documented as always the terminal
+                // event, so emit a best-effort summary before erroring.
+                let results = outcomes.lock().unwrap();
+                let succeeded = results.iter().filter(|o| o.succeeded()).count();
+                let failed = results.len() - succeeded;
+                let from_cache = restored.load(Ordering::SeqCst);
+                self.sink.emit(RunEvent::RunComplete(RunSummary {
+                    total: progress.total() + from_cache,
+                    succeeded,
+                    failed,
+                    from_cache,
+                    skipped: skipped_ctr.load(Ordering::SeqCst),
+                    wall_secs: wall.elapsed_secs(),
+                    aborted: true,
+                    cancelled: false,
+                }));
+                return Err(e);
+            }
         };
 
-        // -- final checkpoint flush ------------------------------------------
-        if let Some(ck) = &checkpoint {
-            ck.flush()?;
-            self.metrics.checkpoint_flushes.inc();
-        }
+        // -- final checkpoint flush ----------------------------------------
+        // Storage failures (final flush, or a planner-side checkpoint
+        // record error) fail the run, but only after `RunComplete` is
+        // emitted below — it is documented as always the terminal event.
+        let storage_result: Result<(), MementoError> = (|| {
+            if let Some(ck) = &self.checkpoint {
+                ck.flush()?;
+                self.metrics.checkpoint_flushes.inc();
+            }
+            match planner_error.lock().unwrap().take() {
+                Some(e) => Err(e),
+                None => Ok(()),
+            }
+        })();
 
-        let mut outcomes = restored;
-        outcomes.extend(run_outcomes);
-        let results = ResultSet::new(outcomes);
-
+        let results = ResultSet::new(std::mem::take(&mut *outcomes.lock().unwrap()));
+        let from_cache = restored.load(Ordering::SeqCst);
+        let total = progress.total() + from_cache;
         let succeeded = results.successes().count();
         let failed = results.n_failed();
-        self.notify(&Notification::RunFinished {
+        if storage_result.is_ok() {
+            if let Some(g) = &gate {
+                // A run cancelled before planning finished never opened
+                // the gate; flush so buffered task notifications still
+                // land before the terminal one.
+                g.flush();
+                g.notify(&Notification::RunFinished {
+                    total,
+                    succeeded,
+                    failed,
+                    from_cache,
+                    wall_secs: wall.elapsed_secs(),
+                });
+            }
+        }
+        self.sink.emit(RunEvent::RunComplete(RunSummary {
             total,
             succeeded,
             failed,
             from_cache,
+            skipped: skipped_count,
             wall_secs: wall.elapsed_secs(),
-        });
+            aborted,
+            cancelled,
+        }));
 
+        storage_result?;
         if aborted {
+            // `drain_truncated` means the post-abort skip accounting gave
+            // up before enumerating the (astronomically large) remainder.
+            let at_least = if drain_truncated { "at least " } else { "" };
             return Err(MementoError::Aborted(format!(
                 "fail-fast stopped the run after {failed} failure(s); \
-                 {skipped_count} task(s) were skipped"
+                 {at_least}{skipped_count} task(s) were skipped"
             )));
         }
         Ok(results)
     }
 
-    /// Dispatches the pending specs over isolated worker processes (the
+    /// Dispatches the spec stream over isolated worker processes (the
     /// [`ExecBackend::Processes`] tier; see [`crate::ipc`]). The
-    /// supervisor owns journal/metrics/progress accounting per attempt;
+    /// supervisor owns journal/metrics/progress accounting per attempt and
+    /// pulls lazily from the same planner stream the thread backend uses;
     /// the `record` hook below owns the persistence pipeline (cache,
-    /// checkpoint, failure notification), mirroring the thread backend's
-    /// per-task job tail.
+    /// checkpoint, failure notification) and feeds every terminal outcome
+    /// into the run's event channel via `deliver`.
     #[cfg(unix)]
-    #[allow(clippy::too_many_arguments)]
+    #[allow(clippy::too_many_arguments, clippy::type_complexity)]
     fn run_processes(
         &self,
-        pending: Vec<TaskSpec>,
+        source: SpecSource,
         settings: &std::collections::BTreeMap<String, Json>,
-        checkpoint: Option<Arc<CheckpointStore>>,
         version: String,
         progress: Arc<ProgressState>,
         workers: usize,
         crash_budget: u32,
-    ) -> Result<(Vec<TaskOutcome>, usize, bool), MementoError> {
+        deliver: Arc<dyn Fn(TaskOutcome) + Send + Sync>,
+        skipped_ctr: Arc<AtomicUsize>,
+        on_drained: Box<dyn FnOnce() + Send + Sync>,
+        notifier: Option<Arc<dyn NotificationProvider>>,
+    ) -> Result<(bool, bool, usize, bool), MementoError> {
         use crate::ipc::supervisor::{self, SupervisorHooks, SupervisorOptions};
 
         // Workers never write the store directly — for the duration of
@@ -475,54 +745,59 @@ impl Memento {
             opts.worker_args = args.clone();
         }
 
-        let save_progress = checkpoint.as_ref().map(|ck| {
+        let save_progress = self.checkpoint.as_ref().map(|ck| {
             let ck = Arc::clone(ck);
             Arc::new(move |tid: &TaskId, j: &Json| ck.save_progress(tid, j))
                 as Arc<dyn Fn(&TaskId, &Json) + Send + Sync>
         });
-        let load_progress = checkpoint.as_ref().map(|ck| {
+        let load_progress = self.checkpoint.as_ref().map(|ck| {
             let ck = Arc::clone(ck);
             Arc::new(move |tid: &TaskId| ck.load_progress(tid))
                 as Arc<dyn Fn(&TaskId) -> Option<Json> + Send + Sync>
         });
         let record = {
             let cache = self.cache.clone();
-            let checkpoint = checkpoint.clone();
-            let notifier = self.notifier.clone();
-            Arc::new(move |o: &TaskOutcome| match (&o.status, &o.value) {
-                (TaskStatus::Success, Some(v)) => {
-                    if let Some(cache) = &cache {
-                        let _ = cache.put(&o.id, &o.spec, v);
+            let checkpoint = self.checkpoint.clone();
+            let notifier = notifier.clone();
+            let deliver = Arc::clone(&deliver);
+            Arc::new(move |o: &TaskOutcome| {
+                match (&o.status, &o.value) {
+                    (TaskStatus::Success, Some(v)) => {
+                        if let Some(cache) = &cache {
+                            let _ = cache.put(&o.id, &o.spec, v);
+                        }
+                        if let Some(ck) = &checkpoint {
+                            let _ =
+                                ck.record(&o.id, Some(v), None, o.duration_secs, o.attempts);
+                            ck.clear_progress(&o.id);
+                        }
                     }
-                    if let Some(ck) = &checkpoint {
-                        let _ = ck.record(&o.id, Some(v), None, o.duration_secs, o.attempts);
-                        ck.clear_progress(&o.id);
+                    _ => {
+                        let message = o
+                            .failure
+                            .as_ref()
+                            .map(|f| f.message.clone())
+                            .unwrap_or_else(|| "unknown failure".to_string());
+                        if let Some(ck) = &checkpoint {
+                            let _ = ck.record(
+                                &o.id,
+                                None,
+                                Some(&message),
+                                o.duration_secs,
+                                o.attempts,
+                            );
+                        }
+                        if let (Some(n), Some(f)) = (&notifier, &o.failure) {
+                            n.notify(&Notification::TaskFailed { failure: f.clone() });
+                        }
                     }
                 }
-                _ => {
-                    let message = o
-                        .failure
-                        .as_ref()
-                        .map(|f| f.message.clone())
-                        .unwrap_or_else(|| "unknown failure".to_string());
-                    if let Some(ck) = &checkpoint {
-                        let _ = ck.record(
-                            &o.id,
-                            None,
-                            Some(&message),
-                            o.duration_secs,
-                            o.attempts,
-                        );
-                    }
-                    if let (Some(n), Some(f)) = (&notifier, &o.failure) {
-                        n.notify(&Notification::TaskFailed { failure: f.clone() });
-                    }
-                }
+                deliver(o.clone());
             }) as Arc<dyn Fn(&TaskOutcome) + Send + Sync>
         };
 
         let report = supervisor::run(
-            pending,
+            source,
             settings.clone(),
             opts,
             SupervisorHooks {
@@ -532,49 +807,63 @@ impl Memento {
                 save_progress,
                 load_progress,
                 record: Some(record),
+                events: Some(self.sink.clone()),
+                cancel: Some(Arc::clone(&self.cancel)),
+                on_source_drained: Some(on_drained),
             },
         );
         if let (Some(c), Some(prev)) = (&self.cache, prev_exclusive) {
             c.set_exclusive(prev);
         }
         let report = report?;
-        Ok((report.outcomes, report.skipped.len(), report.aborted))
+        skipped_ctr.fetch_add(report.skipped.len(), Ordering::SeqCst);
+        Ok((
+            report.aborted,
+            report.cancelled,
+            report.skipped.len(),
+            report.drain_truncated,
+        ))
     }
 
     /// Process isolation needs Unix domain sockets and `fork`/`exec`
     /// process spawning; other platforms fall back to a clear error.
     #[cfg(not(unix))]
-    #[allow(clippy::too_many_arguments)]
+    #[allow(clippy::too_many_arguments, clippy::type_complexity)]
     fn run_processes(
         &self,
-        _pending: Vec<TaskSpec>,
+        _source: SpecSource,
         _settings: &std::collections::BTreeMap<String, Json>,
-        _checkpoint: Option<Arc<CheckpointStore>>,
         _version: String,
         _progress: Arc<ProgressState>,
         _workers: usize,
         _crash_budget: u32,
-    ) -> Result<(Vec<TaskOutcome>, usize, bool), MementoError> {
+        _deliver: Arc<dyn Fn(TaskOutcome) + Send + Sync>,
+        _skipped_ctr: Arc<AtomicUsize>,
+        _on_drained: Box<dyn FnOnce() + Send + Sync>,
+        _notifier: Option<Arc<dyn NotificationProvider>>,
+    ) -> Result<(bool, bool, usize, bool), MementoError> {
         Err(MementoError::ipc(
             "ExecBackend::Processes requires a unix platform",
         ))
     }
 
     /// Builds the per-task closure: context construction, retry loop, panic
-    /// capture, cache/checkpoint recording, metrics, failure notification.
+    /// capture, cache/checkpoint recording, metrics, failure notification,
+    /// and `TaskStarted` event emission per attempt.
     fn make_job(
         &self,
         settings: Arc<std::collections::BTreeMap<String, Json>>,
         checkpoint: Option<Arc<CheckpointStore>>,
         version: String,
-    ) -> Arc<dyn Fn(&TaskSpec) -> TaskOutcome + Send + Sync> {
+        notifier: Option<Arc<dyn NotificationProvider>>,
+    ) -> crate::coordinator::scheduler::Job {
         let exp_fn = Arc::clone(&self.exp_fn);
         let cache = self.cache.clone();
         let metrics = Arc::clone(&self.metrics);
-        let notifier = self.notifier.clone();
         let journal = self.journal.clone();
         let retry = self.options.retry;
         let run_seed = self.options.seed;
+        let sink = self.sink.clone();
 
         Arc::new(move |spec: &TaskSpec| {
             let id = spec.id(&version);
@@ -611,6 +900,11 @@ impl Memento {
                 if let Some(j) = &journal {
                     j.record(&Event::TaskStarted { id: id.clone(), attempt });
                 }
+                sink.emit(RunEvent::TaskStarted {
+                    index: spec.index,
+                    id: id.clone(),
+                    attempt,
+                });
                 let exec = catch_unwind(AssertUnwindSafe(|| exp_fn(&ctx)));
                 match exec {
                     Ok(Ok(v)) => break Some(v),
@@ -702,12 +996,6 @@ impl Memento {
                 }
             }
         })
-    }
-
-    fn notify(&self, n: &Notification) {
-        if let Some(p) = &self.notifier {
-            p.notify(n);
-        }
     }
 }
 

@@ -1,11 +1,13 @@
 //! The Memento coordinator — the paper's contribution (Layer 3).
 //!
-//! Pipeline: [`expand`] turns a [`crate::config::matrix::ConfigMatrix`]
-//! into hashed [`task::TaskSpec`]s; [`scheduler`] runs them on a worker
-//! pool; [`cache`] and [`checkpoint`] give re-run avoidance and
+//! Pipeline: [`expand`] lazily streams a
+//! [`crate::config::matrix::ConfigMatrix`] into hashed
+//! [`task::TaskSpec`]s; [`scheduler`] pulls them onto a worker pool;
+//! [`cache`] and [`checkpoint`] give re-run avoidance and
 //! crash-resumption; [`retry`], [`notify`], [`metrics`], [`progress`] and
 //! [`results`] round out the reliability/observability story. [`memento`]
-//! is the user-facing façade.
+//! is the user-facing façade, and [`run`] is its streaming session handle
+//! (`launch → events → collect/cancel`).
 
 pub mod cache;
 pub mod checkpoint;
@@ -18,5 +20,6 @@ pub mod notify;
 pub mod progress;
 pub mod results;
 pub mod retry;
+pub mod run;
 pub mod scheduler;
 pub mod task;

@@ -10,6 +10,14 @@ use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 /// Shared progress state updated by the scheduler.
+///
+/// Two construction modes:
+/// - [`ProgressState::new`] — the total is known up front (eager callers,
+///   tests); behavior is unchanged from the pre-streaming API.
+/// - [`ProgressState::streaming`] — the total *grows* as the lazy
+///   expansion discovers pending tasks ([`ProgressState::add_planned`])
+///   and becomes final once [`ProgressState::finish_planning`] runs; until
+///   then renders mark the total as still-counting (`12/45+`).
 #[derive(Debug)]
 pub struct ProgressState {
     pub done: AtomicUsize,
@@ -17,7 +25,9 @@ pub struct ProgressState {
     /// so the bar still reaches a terminal state (`done + skipped == total`)
     /// without pretending skipped work completed.
     pub skipped: AtomicUsize,
-    pub total: usize,
+    planned: AtomicUsize,
+    /// False while a streaming expansion may still grow `planned`.
+    planning_done: AtomicBool,
     start: Instant,
 }
 
@@ -26,9 +36,42 @@ impl ProgressState {
         Arc::new(ProgressState {
             done: AtomicUsize::new(0),
             skipped: AtomicUsize::new(0),
-            total,
+            planned: AtomicUsize::new(total),
+            planning_done: AtomicBool::new(true),
             start: Instant::now(),
         })
+    }
+
+    /// A state whose total is discovered incrementally by the lazy
+    /// expansion stream.
+    pub fn streaming() -> Arc<Self> {
+        Arc::new(ProgressState {
+            done: AtomicUsize::new(0),
+            skipped: AtomicUsize::new(0),
+            planned: AtomicUsize::new(0),
+            planning_done: AtomicBool::new(false),
+            start: Instant::now(),
+        })
+    }
+
+    /// Registers `n` newly discovered pending tasks.
+    pub fn add_planned(&self, n: usize) {
+        self.planned.fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// Marks the expansion stream exhausted: the total is now final.
+    pub fn finish_planning(&self) {
+        self.planning_done.store(true, Ordering::Relaxed);
+    }
+
+    /// True once the total can no longer grow.
+    pub fn planning_complete(&self) -> bool {
+        self.planning_done.load(Ordering::Relaxed)
+    }
+
+    /// The (possibly still growing) total.
+    pub fn total(&self) -> usize {
+        self.planned.load(Ordering::Relaxed)
     }
 
     pub fn mark_done(&self) {
@@ -41,7 +84,7 @@ impl ProgressState {
     }
 
     pub fn snapshot(&self) -> (usize, usize) {
-        (self.done.load(Ordering::Relaxed), self.total)
+        (self.done.load(Ordering::Relaxed), self.total())
     }
 
     /// `(done, skipped, total)`; on any terminal run state
@@ -50,27 +93,30 @@ impl ProgressState {
         (
             self.done.load(Ordering::Relaxed),
             self.skipped.load(Ordering::Relaxed),
-            self.total,
+            self.total(),
         )
     }
 
-    /// Estimated seconds remaining, `None` until at least one completion.
+    /// Estimated seconds remaining, `None` until at least one completion
+    /// (or while the streaming total is still being discovered).
     pub fn eta_secs(&self) -> Option<f64> {
         let done = self.done.load(Ordering::Relaxed);
-        if done == 0 || self.total == 0 {
+        let total = self.total();
+        if done == 0 || total == 0 || !self.planning_complete() {
             return None;
         }
         let elapsed = self.start.elapsed().as_secs_f64();
         let rate = done as f64 / elapsed;
-        Some(((self.total - done) as f64 / rate).max(0.0))
+        Some(((total.saturating_sub(done)) as f64 / rate).max(0.0))
     }
 
     /// Renders a `[####....] 12/45 (ETA 3.2s)` line; skipped specs append
-    /// a `(k skipped)` marker instead of inflating the done count.
+    /// a `(k skipped)` marker instead of inflating the done count, and a
+    /// still-streaming total renders with a trailing `+`.
     pub fn render(&self) -> String {
         let (done, skipped, total) = self.snapshot_full();
         let width = 24usize;
-        let filled = if total == 0 { width } else { width * done / total };
+        let filled = if total == 0 { width } else { (width * done / total).min(width) };
         let bar: String = (0..width).map(|i| if i < filled { '#' } else { '.' }).collect();
         let eta = match self.eta_secs() {
             Some(s) if done + skipped < total => {
@@ -78,8 +124,9 @@ impl ProgressState {
             }
             _ => String::new(),
         };
+        let plus = if self.planning_complete() { "" } else { "+" };
         let skip = if skipped > 0 { format!(" ({skipped} skipped)") } else { String::new() };
-        format!("[{bar}] {done}/{total}{skip}{eta}")
+        format!("[{bar}] {done}/{total}{plus}{skip}{eta}")
     }
 }
 
@@ -177,6 +224,27 @@ mod tests {
         assert!(r.contains("1/4"), "{r}");
         assert!(r.contains("(3 skipped)"), "{r}");
         assert!(!r.contains("ETA"), "terminal state must not show ETA: {r}");
+    }
+
+    #[test]
+    fn streaming_total_grows_then_finalizes() {
+        let p = ProgressState::streaming();
+        assert!(!p.planning_complete());
+        assert_eq!(p.total(), 0);
+        p.add_planned(3);
+        p.mark_done();
+        let r = p.render();
+        assert!(r.contains("1/3+"), "still-planning marker missing: {r}");
+        assert!(p.eta_secs().is_none(), "no ETA while total can grow");
+        p.add_planned(1);
+        p.finish_planning();
+        assert!(p.planning_complete());
+        assert_eq!(p.snapshot(), (1, 4));
+        let r = p.render();
+        assert!(r.contains("1/4"), "{r}");
+        assert!(!r.contains("4+"), "{r}");
+        std::thread::sleep(Duration::from_millis(2));
+        assert!(p.eta_secs().is_some());
     }
 
     #[test]

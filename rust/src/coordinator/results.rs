@@ -48,6 +48,29 @@ impl TaskOutcome {
     pub fn metric(&self, field: &str) -> Option<f64> {
         self.value.as_ref()?.get(field)?.as_f64()
     }
+
+    /// Serializes one outcome — the row shape used both by
+    /// [`ResultSet::to_json`] and the CLI's `--output ndjson` event stream.
+    pub fn to_json(&self) -> Json {
+        let mut fields: Vec<(&str, Json)> = vec![
+            ("id", Json::str(self.id.0.clone())),
+            ("params", self.spec.to_json()),
+            (
+                "status",
+                Json::str(if self.succeeded() { "success" } else { "failed" }),
+            ),
+            ("duration_secs", Json::Num(self.duration_secs)),
+            ("from_cache", Json::Bool(self.from_cache)),
+            ("attempts", Json::int(self.attempts as i64)),
+        ];
+        if let Some(v) = &self.value {
+            fields.push(("value", v.clone()));
+        }
+        if let Some(f) = &self.failure {
+            fields.push(("failure", Json::str(f.summary())));
+        }
+        Json::obj(fields)
+    }
 }
 
 /// The collection of outcomes for one run.
@@ -200,31 +223,7 @@ impl ResultSet {
 
     /// Serializes all outcomes for persistence (`memento report`).
     pub fn to_json(&self) -> Json {
-        Json::Arr(
-            self.outcomes
-                .iter()
-                .map(|o| {
-                    let mut fields: Vec<(&str, Json)> = vec![
-                        ("id", Json::str(o.id.0.clone())),
-                        ("params", o.spec.to_json()),
-                        (
-                            "status",
-                            Json::str(if o.succeeded() { "success" } else { "failed" }),
-                        ),
-                        ("duration_secs", Json::Num(o.duration_secs)),
-                        ("from_cache", Json::Bool(o.from_cache)),
-                        ("attempts", Json::int(o.attempts as i64)),
-                    ];
-                    if let Some(v) = &o.value {
-                        fields.push(("value", v.clone()));
-                    }
-                    if let Some(f) = &o.failure {
-                        fields.push(("failure", Json::str(f.summary())));
-                    }
-                    Json::obj(fields)
-                })
-                .collect(),
-        )
+        Json::Arr(self.outcomes.iter().map(TaskOutcome::to_json).collect())
     }
 }
 

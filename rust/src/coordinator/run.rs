@@ -1,0 +1,406 @@
+//! The streaming `Run` session handle.
+//!
+//! [`crate::coordinator::memento::Memento::launch`] returns a [`Run`]
+//! instead of blocking until the last task: expansion, execution, and
+//! observation are decoupled streams. The run executes on a background
+//! thread; every lifecycle transition is published as a typed [`RunEvent`]
+//! on an unbounded channel the caller drains at its own pace:
+//!
+//! ```text
+//! let run = memento.launch(&matrix)?;          // returns immediately
+//! for event in run.events() {                  // live, as they happen
+//!     if let RunEvent::TaskFinished(o) = event { … }
+//! }
+//! let results = run.collect()?;                // == what run() returns
+//! ```
+//!
+//! `Memento::run()` is preserved verbatim as `launch().collect()`;
+//! `Run::cancel()` stops a run mid-flight (in-flight tasks finish, nothing
+//! new is dispatched, `collect()` returns the partial [`ResultSet`]).
+//!
+//! Events are sent on an unbounded channel and never block the executing
+//! workers; a caller that only wants the final result can ignore them
+//! entirely ([`Run::collect`] drains the channel for free).
+
+use crate::coordinator::error::MementoError;
+use crate::coordinator::notify::{Notification, NotificationProvider};
+use crate::coordinator::results::{ResultSet, TaskOutcome};
+use crate::coordinator::task::TaskId;
+use crate::util::json::Json;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{Receiver, Sender, TryRecvError};
+use std::sync::{Arc, Mutex};
+
+/// One observable transition of a live run.
+#[derive(Debug, Clone)]
+pub enum RunEvent {
+    /// An attempt of a task began executing (one per attempt, so a retried
+    /// task starts more than once).
+    TaskStarted { index: usize, id: TaskId, attempt: u32 },
+    /// A task published in-task partial progress
+    /// ([`crate::coordinator::task::TaskContext::save_progress`]); on the
+    /// process backend this forwards the worker's `Progress` frames.
+    TaskProgress { index: usize, id: TaskId, value: Json },
+    /// A task reached a terminal state (executed, failed, or restored from
+    /// cache/checkpoint — `from_cache` distinguishes them).
+    TaskFinished(TaskOutcome),
+    /// Run-level progress counters; emitted after every terminal task.
+    /// `planned` grows while the lazy expansion is still being consumed
+    /// and is final once `planning_complete` is true.
+    Progress {
+        /// Executed (non-restored) tasks finished so far.
+        finished: usize,
+        /// Tasks restored from cache or a resumed checkpoint.
+        restored: usize,
+        /// Tasks abandoned by a fail-fast abort or `cancel()`.
+        skipped: usize,
+        /// Pending tasks discovered by the lazy expansion so far.
+        planned: usize,
+        /// True once the expansion stream is exhausted (totals are final).
+        planning_complete: bool,
+    },
+    /// A worker process died or was killed as hung (process backend only).
+    WorkerCrashed { slot: usize, message: String },
+    /// Terminal event: always the last event of a run.
+    RunComplete(RunSummary),
+}
+
+/// Final accounting carried by [`RunEvent::RunComplete`].
+#[derive(Debug, Clone, Default)]
+pub struct RunSummary {
+    pub total: usize,
+    pub succeeded: usize,
+    pub failed: usize,
+    pub from_cache: usize,
+    pub skipped: usize,
+    pub wall_secs: f64,
+    /// True when fail-fast stopped the run early.
+    pub aborted: bool,
+    /// True when [`Run::cancel`] stopped the run early.
+    pub cancelled: bool,
+}
+
+impl RunEvent {
+    /// Stable machine rendering — one object per event, used by the CLI's
+    /// `--output ndjson` mode.
+    pub fn to_json(&self) -> Json {
+        match self {
+            RunEvent::TaskStarted { index, id, attempt } => Json::obj(vec![
+                ("event", Json::str("task_started")),
+                ("index", Json::int(*index as i64)),
+                ("id", Json::str(id.0.clone())),
+                ("attempt", Json::int(*attempt as i64)),
+            ]),
+            RunEvent::TaskProgress { index, id, value } => Json::obj(vec![
+                ("event", Json::str("task_progress")),
+                ("index", Json::int(*index as i64)),
+                ("id", Json::str(id.0.clone())),
+                ("value", value.clone()),
+            ]),
+            RunEvent::TaskFinished(o) => {
+                let mut doc = match o.to_json() {
+                    Json::Obj(map) => map,
+                    _ => Default::default(),
+                };
+                doc.insert("event".to_string(), Json::str("task_finished"));
+                Json::Obj(doc)
+            }
+            RunEvent::Progress { finished, restored, skipped, planned, planning_complete } => {
+                Json::obj(vec![
+                    ("event", Json::str("progress")),
+                    ("finished", Json::int(*finished as i64)),
+                    ("restored", Json::int(*restored as i64)),
+                    ("skipped", Json::int(*skipped as i64)),
+                    ("planned", Json::int(*planned as i64)),
+                    ("planning_complete", Json::Bool(*planning_complete)),
+                ])
+            }
+            RunEvent::WorkerCrashed { slot, message } => Json::obj(vec![
+                ("event", Json::str("worker_crashed")),
+                ("slot", Json::int(*slot as i64)),
+                ("message", Json::str(message.clone())),
+            ]),
+            RunEvent::RunComplete(s) => Json::obj(vec![
+                ("event", Json::str("run_complete")),
+                ("total", Json::int(s.total as i64)),
+                ("succeeded", Json::int(s.succeeded as i64)),
+                ("failed", Json::int(s.failed as i64)),
+                ("from_cache", Json::int(s.from_cache as i64)),
+                ("skipped", Json::int(s.skipped as i64)),
+                ("wall_secs", Json::Num(s.wall_secs)),
+                ("aborted", Json::Bool(s.aborted)),
+                ("cancelled", Json::Bool(s.cancelled)),
+            ]),
+        }
+    }
+}
+
+/// Shared event publisher: cloneable, never blocks the run (unbounded
+/// channel), silently drops events once the receiver is gone (a caller
+/// that dropped its `Run` mid-stream must not wedge the workers).
+///
+/// The sender is mutex-wrapped so the sink is `Sync` on every supported
+/// toolchain (`mpsc::Sender` itself only became `Sync` in recent Rust);
+/// sends are tiny, so the lock is uncontended in practice.
+pub struct EventSink {
+    tx: Mutex<Sender<RunEvent>>,
+}
+
+impl Clone for EventSink {
+    fn clone(&self) -> Self {
+        EventSink { tx: Mutex::new(self.tx.lock().unwrap().clone()) }
+    }
+}
+
+impl EventSink {
+    pub fn emit(&self, event: RunEvent) {
+        let _ = self.tx.lock().unwrap().send(event);
+    }
+}
+
+/// Handle to a live run started by `Memento::launch`.
+///
+/// Lifecycle: `launch → events()/cancel() → collect()`. Dropping a `Run`
+/// without calling [`Run::collect`] waits for the run to finish (call
+/// [`Run::cancel`] first for a prompt stop) so no background thread
+/// outlives its artifacts (cache/checkpoint directories in tests).
+pub struct Run {
+    rx: Receiver<RunEvent>,
+    cancel: Arc<AtomicBool>,
+    handle: Option<std::thread::JoinHandle<Result<ResultSet, MementoError>>>,
+}
+
+impl Run {
+    /// Wires a new handle to its background thread. Internal — called by
+    /// `Memento::launch`.
+    pub(crate) fn new(
+        rx: Receiver<RunEvent>,
+        cancel: Arc<AtomicBool>,
+        handle: std::thread::JoinHandle<Result<ResultSet, MementoError>>,
+    ) -> Run {
+        Run { rx, cancel, handle: Some(handle) }
+    }
+
+    /// Creates the channel half used by the run thread.
+    pub(crate) fn channel() -> (EventSink, Receiver<RunEvent>) {
+        let (tx, rx) = std::sync::mpsc::channel();
+        (EventSink { tx: Mutex::new(tx) }, rx)
+    }
+
+    /// Requests a mid-flight stop: nothing new is dispatched, in-flight
+    /// tasks finish and are kept, the expansion stream is not consumed
+    /// further. `collect()` then returns the partial result set promptly.
+    pub fn cancel(&self) {
+        self.cancel.store(true, Ordering::SeqCst);
+    }
+
+    /// True once the handle has observed [`RunEvent::RunComplete`] being
+    /// the channel's end (the background thread has finished).
+    pub fn is_finished(&self) -> bool {
+        self.handle.as_ref().map(|h| h.is_finished()).unwrap_or(true)
+    }
+
+    /// Blocking: the next event, or `None` once the run is complete and
+    /// the stream is drained.
+    pub fn next_event(&self) -> Option<RunEvent> {
+        self.rx.recv().ok()
+    }
+
+    /// Non-blocking: an event if one is ready right now.
+    pub fn try_event(&self) -> Option<RunEvent> {
+        match self.rx.try_recv() {
+            Ok(e) => Some(e),
+            Err(TryRecvError::Empty) | Err(TryRecvError::Disconnected) => None,
+        }
+    }
+
+    /// Blocking iterator over the remaining events; ends after
+    /// [`RunEvent::RunComplete`].
+    pub fn events(&self) -> Events<'_> {
+        Events { run: self }
+    }
+
+    /// Drains any unread events and blocks until the run finishes,
+    /// returning the same `Result<ResultSet, _>` the blocking
+    /// `Memento::run()` API returns.
+    pub fn collect(mut self) -> Result<ResultSet, MementoError> {
+        for _ in self.events() {}
+        self.join()
+    }
+
+    fn join(&mut self) -> Result<ResultSet, MementoError> {
+        match self.handle.take() {
+            None => Err(MementoError::config("run already collected")),
+            Some(h) => h
+                .join()
+                .unwrap_or_else(|_| Err(MementoError::ipc("run thread panicked"))),
+        }
+    }
+}
+
+impl Drop for Run {
+    fn drop(&mut self) {
+        if let Some(h) = self.handle.take() {
+            // Drain while waiting (as `collect` does) so the rest of the
+            // run's events are consumed as they are produced instead of
+            // buffering unboundedly in the channel; callers wanting a
+            // prompt stop should `cancel()` before dropping.
+            while self.rx.recv().is_ok() {}
+            let _ = h.join();
+        }
+    }
+}
+
+/// Blocking event iterator borrowed from a [`Run`].
+pub struct Events<'r> {
+    run: &'r Run,
+}
+
+impl Iterator for Events<'_> {
+    type Item = RunEvent;
+
+    fn next(&mut self) -> Option<RunEvent> {
+        self.run.next_event()
+    }
+}
+
+/// Notification ordering gate for the streaming pipeline.
+///
+/// The eager pipeline emitted `RunStarted` (with exact totals) before any
+/// task ran. The streaming pipeline only knows the totals once the lazy
+/// expansion is exhausted — which can be *after* the first task fails. To
+/// keep the provider-visible ordering contract (`RunStarted` first, exact
+/// totals), task-level notifications are buffered until [`open`] runs with
+/// the final counts; from then on everything passes straight through. For
+/// any realistic matrix, planning completes long before the first outcome,
+/// so live behavior is unchanged.
+///
+/// [`open`]: GatedNotifier::open
+pub struct GatedNotifier {
+    inner: Arc<dyn NotificationProvider>,
+    state: Mutex<GateState>,
+}
+
+struct GateState {
+    open: bool,
+    buffered: Vec<Notification>,
+}
+
+impl GatedNotifier {
+    pub fn new(inner: Arc<dyn NotificationProvider>) -> Arc<GatedNotifier> {
+        Arc::new(GatedNotifier {
+            inner,
+            state: Mutex::new(GateState { open: false, buffered: Vec::new() }),
+        })
+    }
+
+    /// Emits `RunStarted` and flushes everything buffered behind it.
+    ///
+    /// All provider calls happen while the state lock is held (here and in
+    /// [`NotificationProvider::notify`]): releasing the lock between
+    /// marking the gate open and emitting `RunStarted` would let a
+    /// concurrent task notification slip through first, which is exactly
+    /// the inversion the gate exists to prevent. Providers must not call
+    /// back into the gate (none do — they are terminal sinks).
+    pub fn open(&self, total: usize, from_cache: usize) {
+        let mut st = self.state.lock().unwrap();
+        if st.open {
+            return;
+        }
+        st.open = true;
+        let drained = std::mem::take(&mut st.buffered);
+        self.inner.notify(&Notification::RunStarted { total, from_cache });
+        for n in drained {
+            self.inner.notify(&n);
+        }
+    }
+
+    /// Flushes without a `RunStarted` (aborted/cancelled before planning
+    /// finished) so terminal notifications are never lost.
+    pub fn flush(&self) {
+        let mut st = self.state.lock().unwrap();
+        st.open = true;
+        let drained = std::mem::take(&mut st.buffered);
+        for n in drained {
+            self.inner.notify(&n);
+        }
+    }
+}
+
+impl NotificationProvider for GatedNotifier {
+    fn notify(&self, n: &Notification) {
+        // Pass-through also happens under the lock, serializing against
+        // `open`/`flush` so provider-visible ordering is exactly the gate
+        // order.
+        let mut st = self.state.lock().unwrap();
+        if !st.open {
+            st.buffered.push(n.clone());
+            return;
+        }
+        self.inner.notify(n);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::notify::MemoryNotificationProvider;
+
+    #[test]
+    fn gate_buffers_until_open_then_passes_through() {
+        let mem = Arc::new(MemoryNotificationProvider::new());
+        let gate = GatedNotifier::new(mem.clone() as Arc<dyn NotificationProvider>);
+        let failure = crate::coordinator::error::TaskFailure {
+            kind: crate::coordinator::error::FailureKind::Error,
+            message: "x".into(),
+            params: vec![],
+            attempts: 1,
+        };
+        gate.notify(&Notification::TaskFailed { failure: failure.clone() });
+        assert_eq!(mem.count(), 0, "buffered before open");
+        gate.open(5, 2);
+        assert_eq!(mem.count(), 2, "RunStarted + flushed failure");
+        assert!(matches!(
+            mem.events()[0],
+            Notification::RunStarted { total: 5, from_cache: 2 }
+        ));
+        gate.notify(&Notification::TaskFailed { failure });
+        assert_eq!(mem.count(), 3, "live after open");
+        gate.open(9, 9);
+        assert_eq!(mem.count(), 3, "second open is a no-op");
+    }
+
+    #[test]
+    fn gate_flush_without_start_keeps_notifications() {
+        let mem = Arc::new(MemoryNotificationProvider::new());
+        let gate = GatedNotifier::new(mem.clone() as Arc<dyn NotificationProvider>);
+        gate.notify(&Notification::RunFinished {
+            total: 0,
+            succeeded: 0,
+            failed: 0,
+            from_cache: 0,
+            wall_secs: 0.0,
+        });
+        assert_eq!(mem.count(), 0);
+        gate.flush();
+        assert_eq!(mem.count(), 1);
+    }
+
+    #[test]
+    fn event_json_shapes() {
+        let e = RunEvent::Progress {
+            finished: 3,
+            restored: 1,
+            skipped: 0,
+            planned: 5,
+            planning_complete: true,
+        };
+        let j = e.to_json();
+        assert_eq!(j.get("event").unwrap().as_str(), Some("progress"));
+        assert_eq!(j.get("finished").unwrap().as_i64(), Some(3));
+        assert_eq!(j.get("planning_complete").unwrap().as_bool(), Some(true));
+
+        let c = RunEvent::WorkerCrashed { slot: 2, message: "died".into() };
+        assert_eq!(c.to_json().get("slot").unwrap().as_i64(), Some(2));
+    }
+}

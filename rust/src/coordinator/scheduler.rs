@@ -12,27 +12,35 @@
 //!    marked on the progress bar, and **excluded** from timing metrics so
 //!    abort noise never pollutes dispatch-overhead numbers.
 //!
-//! # Dispatch design (why this is fast)
+//! # Dispatch design (why this is fast *and* lazy)
 //!
 //! The original implementation boxed one closure per spec and cloned four
 //! `Arc`s into it, then pushed every box through a single-mutex queue and
 //! collected outcomes over an `mpsc` channel — five allocations plus two
 //! contended queues *per task*. For 10k no-op tasks the orchestrator was
-//! the workload.
+//! the workload. The second generation pre-chunked a materialized
+//! `Arc<[TaskSpec]>`, which fixed per-task overhead but still required the
+//! whole expansion in memory before the first task could start.
 //!
-//! Now the specs live in one shared `Arc<[TaskSpec]>` and are dispatched as
-//! **chunks**: each pool job owns a contiguous index range and one
-//! `Arc<ChunkCtx>` clone, walks its range, and merges its outcomes into the
-//! shared collection vector with a single lock acquisition per chunk.
-//! Chunks are striped across the pool's per-worker deques
-//! ([`crate::util::pool`]); a worker that drains its own chunks early
-//! *steals* chunks from busy siblings, so imbalance self-corrects at chunk
-//! granularity without any central queue. Per-task cost amortizes to
-//! `chunk_cost / chunk_len`: no per-task boxing, no per-task channel send,
-//! no per-task Arc traffic.
+//! The current core is [`run_stream`]: specs come from a **lazy iterator**
+//! (typically a [`crate::coordinator::expand::Expansion`] filtered against
+//! cache/checkpoint) and workers *pull* chunks from it on demand behind a
+//! single mutex. Chunk granules ramp from 1 (instant first dispatch,
+//! minimal first-outcome latency) up to [`STREAM_MAX_CHUNK`] (amortized
+//! lock traffic in steady state), so load balancing falls out of the pull
+//! discipline itself — a worker that finishes early simply pulls again.
+//! Outcomes are **pushed to a callback as they complete** instead of being
+//! accumulated in a `Vec`, which is what the streaming `Run` handle
+//! ([`crate::coordinator::run`]) builds its live event channel on. At no
+//! point does the scheduler hold more than `workers × granule` specs.
 //!
-//! Exactly-once follows from construction: chunk ranges partition
-//! `0..specs.len()` and the pool runs each submitted job exactly once.
+//! Exactly-once follows from construction: the source mutex hands every
+//! spec to exactly one puller, and each pulled spec is either executed or
+//! reported skipped.
+//!
+//! [`run_all`]/[`run_all_with_metrics`] survive as eager adapters (tests,
+//! benches, bounded workloads): they wrap a `Vec` in an iterator, collect
+//! the streamed outcomes, and return the familiar [`ScheduleReport`].
 //!
 //! The cache/retry/checkpoint/notification pipeline around each task is
 //! composed by [`crate::coordinator::memento`], keeping this module small
@@ -94,12 +102,12 @@ impl Default for SchedulerOptions {
     }
 }
 
-/// Load-balance evidence for one `run_all` invocation.
+/// Load-balance evidence for one [`run_stream`]/[`run_all`] invocation.
 #[derive(Debug, Clone, Copy, Default)]
 pub struct DispatchStats {
-    /// Number of chunk jobs submitted to the pool.
+    /// Chunk pulls taken from the spec source.
     pub chunks: usize,
-    /// Specs per chunk (last chunk may be shorter).
+    /// Largest granule pulled (pulls ramp 1 → [`STREAM_MAX_CHUNK`]).
     pub chunk_len: usize,
     /// Chunks a worker took from a sibling's queue.
     pub steals: usize,
@@ -121,24 +129,307 @@ pub struct ScheduleReport {
     pub stats: DispatchStats,
 }
 
-/// Everything a chunk job needs, shared once instead of cloned per task.
-struct ChunkCtx {
-    specs: Arc<[TaskSpec]>,
-    job: Arc<dyn Fn(&TaskSpec) -> TaskOutcome + Send + Sync>,
+/// The executing closure: spec in, terminal outcome out.
+pub type Job = Arc<dyn Fn(&TaskSpec) -> TaskOutcome + Send + Sync>;
+
+/// A lazy, possibly astronomically large stream of task specs. The
+/// scheduler never materializes it — at most `workers ×`
+/// [`STREAM_MAX_CHUNK`] specs are in flight at once.
+pub type SpecSource = Box<dyn Iterator<Item = TaskSpec> + Send>;
+
+/// Largest granule a worker pulls from the source in one lock
+/// acquisition. Granules ramp 1 → 2 → 4 → … → this cap per worker, so the
+/// first outcome is dispatched after a single pull of one spec.
+pub const STREAM_MAX_CHUNK: usize = 64;
+
+/// Upper bound on how many un-started specs a fail-fast abort will drain
+/// out of the source for skip accounting. Bounded so an abort returns
+/// promptly even on a 10¹²-combination matrix: beyond the limit the
+/// remainder is left un-enumerated and reported via
+/// [`StreamReport::drain_truncated`].
+pub const ABORT_DRAIN_LIMIT: usize = 100_000;
+
+/// Streaming callbacks for [`run_stream`]. Everything is optional; a bare
+/// `StreamHooks::default()` runs the stream for its side effects only.
+#[derive(Default)]
+#[allow(clippy::type_complexity)]
+pub struct StreamHooks {
+    /// Receives every terminal outcome the moment it completes, from the
+    /// executing worker's thread. This replaces the accumulated `Vec`.
+    pub on_outcome: Option<Arc<dyn Fn(TaskOutcome) + Send + Sync>>,
+    /// Receives every spec abandoned after a fail-fast abort.
+    pub on_skip: Option<Arc<dyn Fn(TaskSpec) + Send + Sync>>,
+    /// Fires exactly once, when the source iterator is first exhausted
+    /// (also during the post-abort drain). The streaming run layer uses it
+    /// to finalize totals and release the `RunStarted` notification.
+    pub on_source_drained: Option<Box<dyn FnOnce() + Send + Sync>>,
+    pub progress: Option<Arc<ProgressState>>,
+    pub metrics: Option<Arc<RunMetrics>>,
+    /// Cooperative cancellation: once set, workers stop pulling, in-flight
+    /// tasks finish, and the remaining source is *not* drained (a cancel
+    /// must return promptly even on a 10¹²-combination matrix).
+    pub cancel: Option<Arc<AtomicBool>>,
+}
+
+/// What happened across one [`run_stream`] invocation.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct StreamReport {
+    /// Outcomes delivered to `on_outcome` (executed tasks).
+    pub executed: usize,
+    /// Specs reported to `on_skip` after an abort.
+    pub skipped: usize,
+    /// True if fail-fast triggered.
+    pub aborted: bool,
+    /// True if the cancel flag stopped the run.
+    pub cancelled: bool,
+    /// True when the post-abort skip drain hit [`ABORT_DRAIN_LIMIT`]
+    /// before exhausting the source: `skipped` is then a lower bound.
+    pub drain_truncated: bool,
+    /// Pull/steal counters for this run.
+    pub stats: DispatchStats,
+}
+
+struct SourceState {
+    it: SpecSource,
+    exhausted: bool,
+    on_drained: Option<Box<dyn FnOnce() + Send + Sync>>,
+}
+
+/// Everything a pull-loop worker needs, shared once.
+struct StreamCtx {
+    source: Mutex<SourceState>,
+    job: Job,
     abort: AtomicBool,
     fail_fast: bool,
+    cancel: Option<Arc<AtomicBool>>,
+    on_outcome: Option<Arc<dyn Fn(TaskOutcome) + Send + Sync>>,
+    on_skip: Option<Arc<dyn Fn(TaskSpec) + Send + Sync>>,
     progress: Option<Arc<ProgressState>>,
     metrics: Option<Arc<RunMetrics>>,
-    outcomes: Mutex<Vec<TaskOutcome>>,
-    skipped: Mutex<Vec<TaskSpec>>,
+    executed: AtomicUsize,
+    skipped: AtomicUsize,
+    pulls: AtomicUsize,
+    max_granule: AtomicUsize,
     job_panics: AtomicUsize,
 }
 
-/// Chunk length for `n` specs on `workers` threads: aim for ~8 chunks per
-/// worker so stealing has granules to balance with, capped so one chunk
-/// never monopolizes a worker's outcome buffer.
-fn chunk_len(n: usize, workers: usize) -> usize {
-    (n / (workers * 8)).clamp(1, 64)
+impl StreamCtx {
+    fn cancelled(&self) -> bool {
+        self.cancel
+            .as_ref()
+            .map(|c| c.load(Ordering::SeqCst))
+            .unwrap_or(false)
+    }
+
+    fn stopped(&self) -> bool {
+        self.abort.load(Ordering::SeqCst) || self.cancelled()
+    }
+
+    /// Pulls up to `granule` specs; fires `on_drained` (outside the lock)
+    /// the first time the iterator runs dry.
+    fn pull(&self, granule: usize) -> Vec<TaskSpec> {
+        let mut chunk = Vec::new();
+        let drained = {
+            let mut src = self.source.lock().unwrap();
+            if src.exhausted {
+                return chunk;
+            }
+            chunk.reserve(granule);
+            while chunk.len() < granule {
+                match src.it.next() {
+                    Some(s) => chunk.push(s),
+                    None => {
+                        src.exhausted = true;
+                        break;
+                    }
+                }
+            }
+            if src.exhausted {
+                src.on_drained.take()
+            } else {
+                None
+            }
+        };
+        if let Some(cb) = drained {
+            cb();
+        }
+        chunk
+    }
+
+    fn skip(&self, spec: TaskSpec) {
+        self.skipped.fetch_add(1, Ordering::SeqCst);
+        if let Some(p) = &self.progress {
+            p.mark_skipped();
+        }
+        if let Some(cb) = &self.on_skip {
+            cb(spec);
+        }
+    }
+}
+
+/// One pool worker's pull loop.
+fn stream_worker(ctx: &StreamCtx) {
+    let mut granule = 1usize;
+    loop {
+        if ctx.stopped() {
+            return;
+        }
+        let pulled_at = Instant::now();
+        let chunk = ctx.pull(granule);
+        if chunk.is_empty() {
+            return;
+        }
+        ctx.pulls.fetch_add(1, Ordering::SeqCst);
+        ctx.max_granule.fetch_max(chunk.len(), Ordering::SeqCst);
+        let mut sampled = false;
+        for spec in chunk {
+            if ctx.stopped() {
+                // Abort raced in mid-chunk: the rest of this granule is
+                // skipped work, not lost work.
+                ctx.skip(spec);
+                continue;
+            }
+            if !sampled {
+                sampled = true;
+                // One dispatch-cost sample per chunk that executes work
+                // (lock acquisition + lazy-expansion pull); skipped specs
+                // stay out of the timer.
+                if let Some(m) = &ctx.metrics {
+                    m.dispatch_overhead.record(pulled_at.elapsed());
+                }
+            }
+            match catch_unwind(AssertUnwindSafe(|| (ctx.job)(&spec))) {
+                Ok(outcome) => {
+                    if ctx.fail_fast && outcome.status == TaskStatus::Failed {
+                        ctx.abort.store(true, Ordering::SeqCst);
+                    }
+                    if let Some(p) = &ctx.progress {
+                        p.mark_done();
+                    }
+                    ctx.executed.fetch_add(1, Ordering::SeqCst);
+                    if let Some(cb) = &ctx.on_outcome {
+                        cb(outcome);
+                    }
+                }
+                Err(_) => {
+                    // Panic escaping `job` — contained so the rest of the
+                    // stream still completes; counted and surfaced by the
+                    // caller.
+                    ctx.job_panics.fetch_add(1, Ordering::SeqCst);
+                    if let Some(p) = &ctx.progress {
+                        p.mark_done();
+                    }
+                }
+            }
+        }
+        granule = (granule * 2).min(STREAM_MAX_CHUNK);
+    }
+}
+
+/// The streaming core: runs `job` over every spec the lazy `source`
+/// yields, on `opts.workers` pull-loop threads, pushing each outcome
+/// through `hooks.on_outcome` the moment it completes.
+///
+/// Guarantees:
+/// 1. every yielded spec is executed **exactly once**, or reported via
+///    `on_skip` after a fail-fast abort (cancelled runs stop consuming
+///    the source instead);
+/// 2. the source is never materialized — peak held specs are
+///    `workers × STREAM_MAX_CHUNK`;
+/// 3. a panic escaping `job` is contained per-task and counted in
+///    [`DispatchStats::job_panics`].
+pub fn run_stream(
+    source: SpecSource,
+    opts: &SchedulerOptions,
+    job: Job,
+    hooks: StreamHooks,
+) -> StreamReport {
+    let workers = opts.workers.max(1);
+    let metrics = hooks.metrics.clone();
+    let ctx = Arc::new(StreamCtx {
+        source: Mutex::new(SourceState {
+            it: source,
+            exhausted: false,
+            on_drained: hooks.on_source_drained,
+        }),
+        job,
+        abort: AtomicBool::new(false),
+        fail_fast: opts.fail_fast,
+        cancel: hooks.cancel,
+        on_outcome: hooks.on_outcome,
+        on_skip: hooks.on_skip,
+        progress: hooks.progress,
+        metrics: hooks.metrics,
+        executed: AtomicUsize::new(0),
+        skipped: AtomicUsize::new(0),
+        pulls: AtomicUsize::new(0),
+        max_granule: AtomicUsize::new(0),
+        job_panics: AtomicUsize::new(0),
+    });
+
+    let pool = ThreadPool::new(workers);
+    let jobs: Vec<_> = (0..workers)
+        .map(|_| {
+            let ctx = Arc::clone(&ctx);
+            move || stream_worker(&ctx)
+        })
+        .collect();
+    pool.execute_batch(jobs);
+    pool.join();
+    let pool_stats = pool.stats();
+    drop(pool);
+
+    let aborted = ctx.abort.load(Ordering::SeqCst);
+    let cancelled = ctx.cancelled();
+    let mut drain_truncated = false;
+    if aborted && !cancelled {
+        // Account for the work the abort left behind: drain the rest of
+        // the source as skipped specs so every included task is either an
+        // outcome or a skip — but only up to ABORT_DRAIN_LIMIT, so a
+        // fail-fast abort returns promptly even on an astronomically
+        // large matrix (the remainder stays un-enumerated and is flagged
+        // as truncated). Cancelled runs skip the drain entirely.
+        let mut drained = 0usize;
+        loop {
+            if ctx.cancelled() {
+                break;
+            }
+            if drained >= ABORT_DRAIN_LIMIT {
+                drain_truncated = !ctx.source.lock().unwrap().exhausted;
+                break;
+            }
+            let chunk = ctx.pull(STREAM_MAX_CHUNK.min(ABORT_DRAIN_LIMIT - drained));
+            if chunk.is_empty() {
+                break;
+            }
+            drained += chunk.len();
+            for spec in chunk {
+                ctx.skip(spec);
+            }
+        }
+    }
+
+    let stats = DispatchStats {
+        chunks: ctx.pulls.load(Ordering::SeqCst),
+        chunk_len: ctx.max_granule.load(Ordering::SeqCst),
+        steals: pool_stats.steals,
+        local_pops: pool_stats.local_pops,
+        job_panics: ctx.job_panics.load(Ordering::SeqCst),
+    };
+    let report = StreamReport {
+        executed: ctx.executed.load(Ordering::SeqCst),
+        skipped: ctx.skipped.load(Ordering::SeqCst),
+        aborted,
+        cancelled: ctx.cancelled(),
+        drain_truncated,
+        stats,
+    };
+    if let Some(m) = &metrics {
+        m.dispatch_chunks.add(stats.chunks as u64);
+        m.steals.add(stats.steals as u64);
+        m.tasks_skipped.add(report.skipped as u64);
+    }
+    report
 }
 
 /// Runs `job` over all `specs` on a pool of `opts.workers` threads.
@@ -150,20 +441,23 @@ fn chunk_len(n: usize, workers: usize) -> usize {
 pub fn run_all(
     specs: Vec<TaskSpec>,
     opts: &SchedulerOptions,
-    job: Arc<dyn Fn(&TaskSpec) -> TaskOutcome + Send + Sync>,
+    job: Job,
     progress: Option<Arc<ProgressState>>,
 ) -> ScheduleReport {
     run_all_with_metrics(specs, opts, job, progress, None)
 }
 
-/// [`run_all`] with a metrics registry: records per-chunk queue wait
-/// (submission → first task start) into `dispatch_overhead`, plus
-/// steal/skip counters at the end of the run. Skipped (fail-fast) specs
-/// never contribute dispatch samples.
+/// [`run_all`] with a metrics registry: records per-chunk dispatch cost
+/// into `dispatch_overhead`, plus steal/skip counters at the end of the
+/// run. Skipped (fail-fast) specs never contribute dispatch samples.
+///
+/// This is the eager adapter over [`run_stream`]: it wraps the `Vec` in an
+/// iterator, collects the streamed outcomes, and returns them ordered by
+/// spec index.
 pub fn run_all_with_metrics(
     specs: Vec<TaskSpec>,
     opts: &SchedulerOptions,
-    job: Arc<dyn Fn(&TaskSpec) -> TaskOutcome + Send + Sync>,
+    job: Job,
     progress: Option<Arc<ProgressState>>,
     metrics: Option<Arc<RunMetrics>>,
 ) -> ScheduleReport {
@@ -176,128 +470,58 @@ pub fn run_all_with_metrics(
             stats: DispatchStats::default(),
         };
     }
-    let workers = opts.workers.max(1).min(n);
-    let clen = chunk_len(n, workers);
-    let n_chunks = (n + clen - 1) / clen;
-
-    let ctx = Arc::new(ChunkCtx {
-        specs: specs.into(),
-        job,
-        abort: AtomicBool::new(false),
+    let outcomes = Arc::new(Mutex::new(Vec::with_capacity(n)));
+    let skipped = Arc::new(Mutex::new(Vec::new()));
+    let sched = SchedulerOptions {
+        workers: opts.workers.max(1).min(n),
         fail_fast: opts.fail_fast,
-        progress,
-        metrics: metrics.clone(),
-        outcomes: Mutex::new(Vec::with_capacity(n)),
-        skipped: Mutex::new(Vec::new()),
-        job_panics: AtomicUsize::new(0),
-    });
-
-    let pool = ThreadPool::new(workers);
-    let jobs: Vec<_> = (0..n_chunks)
-        .map(|c| {
-            let ctx = Arc::clone(&ctx);
-            let lo = c * clen;
-            let hi = (lo + clen).min(n);
-            let submitted = Instant::now();
-            move || run_chunk(&ctx, lo, hi, submitted)
-        })
-        .collect();
-    pool.execute_batch(jobs);
-    pool.join();
-    let pool_stats = pool.stats();
-    drop(pool);
-
-    let aborted = ctx.abort.load(Ordering::SeqCst);
-    // All chunk jobs are done and dropped, so this Arc is unique; the
-    // fallback drain covers the (theoretical) case of a job box not yet
-    // deallocated.
-    let (mut outcomes, mut skipped, job_panics) = match Arc::try_unwrap(ctx) {
-        Ok(ctx) => (
-            ctx.outcomes.into_inner().unwrap(),
-            ctx.skipped.into_inner().unwrap(),
-            ctx.job_panics.load(Ordering::SeqCst),
-        ),
-        Err(ctx) => (
-            std::mem::take(&mut *ctx.outcomes.lock().unwrap()),
-            std::mem::take(&mut *ctx.skipped.lock().unwrap()),
-            ctx.job_panics.load(Ordering::SeqCst),
-        ),
     };
-
+    let report = run_stream(
+        Box::new(specs.into_iter()),
+        &sched,
+        job,
+        StreamHooks {
+            on_outcome: Some({
+                let outcomes = Arc::clone(&outcomes);
+                Arc::new(move |o: TaskOutcome| outcomes.lock().unwrap().push(o))
+            }),
+            on_skip: Some({
+                let skipped = Arc::clone(&skipped);
+                Arc::new(move |s: TaskSpec| skipped.lock().unwrap().push(s))
+            }),
+            progress,
+            metrics,
+            ..StreamHooks::default()
+        },
+    );
+    let mut outcomes = std::mem::take(&mut *outcomes.lock().unwrap());
+    let mut skipped = std::mem::take(&mut *skipped.lock().unwrap());
     let lost = n - outcomes.len() - skipped.len();
-    if lost > 0 {
+    if report.drain_truncated {
+        // Not lost work: the fail-fast skip drain stopped at
+        // ABORT_DRAIN_LIMIT, so the tail of this (very large) spec list
+        // is simply un-enumerated.
+        eprintln!(
+            "memento scheduler: fail-fast abort; {} spec(s) skipped, \
+             {lost} more not enumerated (drain limit {ABORT_DRAIN_LIMIT})",
+            skipped.len()
+        );
+    } else if lost > 0 {
         // Coordinator-level bug: account for it loudly rather than silently.
         eprintln!(
             "memento scheduler: {lost} task(s) lost to unexpected job panics \
-             ({job_panics} contained)"
+             ({} contained)",
+            report.stats.job_panics
         );
     }
     outcomes.sort_by_key(|o| o.spec.index);
     skipped.sort_by_key(|s| s.index);
 
-    let stats = DispatchStats {
-        chunks: n_chunks,
-        chunk_len: clen,
-        steals: pool_stats.steals,
-        local_pops: pool_stats.local_pops,
-        job_panics,
-    };
-    if let Some(m) = &metrics {
-        m.dispatch_chunks.add(n_chunks as u64);
-        m.steals.add(stats.steals as u64);
-        m.tasks_skipped.add(skipped.len() as u64);
-    }
-
-    ScheduleReport { outcomes, skipped, aborted, stats }
-}
-
-/// Executes specs `lo..hi`; called on a pool worker.
-fn run_chunk(ctx: &ChunkCtx, lo: usize, hi: usize, submitted: Instant) {
-    let mut done: Vec<TaskOutcome> = Vec::with_capacity(hi - lo);
-    let mut skip: Vec<TaskSpec> = Vec::new();
-    let mut recorded_wait = false;
-    for i in lo..hi {
-        let spec = &ctx.specs[i];
-        if ctx.abort.load(Ordering::SeqCst) {
-            skip.push(spec.clone());
-            if let Some(p) = &ctx.progress {
-                p.mark_skipped();
-            }
-            continue;
-        }
-        if !recorded_wait {
-            recorded_wait = true;
-            // One queue-wait sample per chunk, and only for chunks that
-            // actually execute work — skipped specs stay out of the timer.
-            if let Some(m) = &ctx.metrics {
-                m.dispatch_overhead.record(submitted.elapsed());
-            }
-        }
-        match catch_unwind(AssertUnwindSafe(|| (ctx.job)(spec))) {
-            Ok(outcome) => {
-                if ctx.fail_fast && outcome.status == TaskStatus::Failed {
-                    ctx.abort.store(true, Ordering::SeqCst);
-                }
-                if let Some(p) = &ctx.progress {
-                    p.mark_done();
-                }
-                done.push(outcome);
-            }
-            Err(_) => {
-                // Panic escaping `job` — contained so the rest of the chunk
-                // (and run) still completes; counted and surfaced above.
-                ctx.job_panics.fetch_add(1, Ordering::SeqCst);
-                if let Some(p) = &ctx.progress {
-                    p.mark_done();
-                }
-            }
-        }
-    }
-    if !done.is_empty() {
-        ctx.outcomes.lock().unwrap().extend(done);
-    }
-    if !skip.is_empty() {
-        ctx.skipped.lock().unwrap().extend(skip);
+    ScheduleReport {
+        outcomes,
+        skipped,
+        aborted: report.aborted,
+        stats: report.stats,
     }
 }
 
@@ -676,6 +900,132 @@ mod tests {
         for (i, o) in report.outcomes.iter().enumerate() {
             assert_eq!(o.spec.index, i);
         }
+    }
+
+    // ---- streaming core ---------------------------------------------------
+
+    #[test]
+    fn stream_pushes_outcomes_without_accumulating() {
+        let seen = Arc::new(std::sync::Mutex::new(Vec::new()));
+        let s2 = Arc::clone(&seen);
+        let drained = Arc::new(AtomicBool::new(false));
+        let d2 = Arc::clone(&drained);
+        let report = run_stream(
+            Box::new(specs(40).into_iter()),
+            &SchedulerOptions { workers: 4, fail_fast: false },
+            Arc::new(ok_outcome),
+            StreamHooks {
+                on_outcome: Some(Arc::new(move |o: TaskOutcome| {
+                    s2.lock().unwrap().push(o.spec.index)
+                })),
+                on_source_drained: Some(Box::new(move || {
+                    d2.store(true, Ordering::SeqCst);
+                })),
+                ..StreamHooks::default()
+            },
+        );
+        assert_eq!(report.executed, 40);
+        assert_eq!(report.skipped, 0);
+        assert!(!report.aborted && !report.cancelled);
+        assert!(drained.load(Ordering::SeqCst), "on_source_drained fired");
+        let mut idx = std::mem::take(&mut *seen.lock().unwrap());
+        idx.sort_unstable();
+        assert_eq!(idx, (0..40).collect::<Vec<_>>());
+        assert!(report.stats.chunks > 0);
+    }
+
+    #[test]
+    fn stream_is_lazy_first_pull_is_one_spec() {
+        // The source records how far it was consumed; with one worker the
+        // first task must execute after exactly one spec was pulled
+        // (granule ramp starts at 1), never after a full materialization.
+        let consumed = Arc::new(AtomicUsize::new(0));
+        let consumed_at_first_exec = Arc::new(AtomicUsize::new(usize::MAX));
+        let c2 = Arc::clone(&consumed);
+        let source = (0..10_000).map(move |i| {
+            c2.fetch_add(1, Ordering::SeqCst);
+            TaskSpec { params: vec![("i".to_string(), pv_int(i as i64))], index: i }
+        });
+        let c3 = Arc::clone(&consumed);
+        let cafe = Arc::clone(&consumed_at_first_exec);
+        run_stream(
+            Box::new(source),
+            &SchedulerOptions { workers: 1, fail_fast: false },
+            Arc::new(move |s| {
+                let _ = cafe.compare_exchange(
+                    usize::MAX,
+                    c3.load(Ordering::SeqCst),
+                    Ordering::SeqCst,
+                    Ordering::SeqCst,
+                );
+                ok_outcome(s)
+            }),
+            StreamHooks::default(),
+        );
+        assert_eq!(consumed.load(Ordering::SeqCst), 10_000, "all specs ran");
+        assert_eq!(
+            consumed_at_first_exec.load(Ordering::SeqCst),
+            1,
+            "first execution must happen after pulling exactly one spec"
+        );
+    }
+
+    #[test]
+    fn stream_cancel_stops_pulling_and_returns_promptly() {
+        // Cancelling mid-flight: in-flight work finishes, the source is
+        // not consumed further (no multi-hour drain on huge matrices).
+        let cancel = Arc::new(AtomicBool::new(false));
+        let c2 = Arc::clone(&cancel);
+        let executed = Arc::new(AtomicUsize::new(0));
+        let e2 = Arc::clone(&executed);
+        let report = run_stream(
+            Box::new(specs(100_000).into_iter()),
+            &SchedulerOptions { workers: 2, fail_fast: false },
+            Arc::new(move |s| {
+                if e2.fetch_add(1, Ordering::SeqCst) == 4 {
+                    c2.store(true, Ordering::SeqCst);
+                }
+                ok_outcome(s)
+            }),
+            StreamHooks { cancel: Some(Arc::clone(&cancel)), ..StreamHooks::default() },
+        );
+        assert!(report.cancelled);
+        assert!(!report.aborted);
+        assert!(report.executed >= 5, "executed {}", report.executed);
+        // Already-pulled chunk tails are accounted as skips, but the bulk
+        // of the source is simply never consumed.
+        assert!(
+            report.executed + report.skipped < 1000,
+            "executed {} + skipped {} — cancel did not stop the stream",
+            report.executed,
+            report.skipped
+        );
+    }
+
+    #[test]
+    fn stream_abort_drains_source_as_skips() {
+        let skipped = Arc::new(AtomicUsize::new(0));
+        let s2 = Arc::clone(&skipped);
+        let report = run_stream(
+            Box::new(specs(500).into_iter()),
+            &SchedulerOptions { workers: 1, fail_fast: true },
+            Arc::new(|s| {
+                if s.index == 3 {
+                    failed_outcome(s)
+                } else {
+                    ok_outcome(s)
+                }
+            }),
+            StreamHooks {
+                on_skip: Some(Arc::new(move |_: TaskSpec| {
+                    s2.fetch_add(1, Ordering::SeqCst);
+                })),
+                ..StreamHooks::default()
+            },
+        );
+        assert!(report.aborted);
+        assert_eq!(report.executed + report.skipped, 500, "exact accounting");
+        assert_eq!(skipped.load(Ordering::SeqCst), report.skipped);
     }
 
     // ---- stress: exactly-once at high worker counts under stealing -------

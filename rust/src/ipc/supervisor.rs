@@ -36,6 +36,8 @@ use crate::coordinator::metrics::RunMetrics;
 use crate::coordinator::progress::ProgressState;
 use crate::coordinator::results::{TaskOutcome, TaskStatus};
 use crate::coordinator::retry::RetryPolicy;
+use crate::coordinator::run::{EventSink, RunEvent};
+use crate::coordinator::scheduler::{SpecSource, ABORT_DRAIN_LIMIT};
 use crate::coordinator::task::{TaskId, TaskSpec};
 use crate::ipc::proto::{read_frame, write_frame, Msg, WireResult, PROTOCOL_VERSION};
 use crate::ipc::worker::{ENV_SOCKET, ENV_WORKER_ID, ENV_WORKER_SPAWN};
@@ -103,6 +105,7 @@ impl Default for SupervisorOptions {
 /// Callbacks wiring supervisor events into the coordinator pipeline. All
 /// optional; a bare supervisor still returns a correct report.
 #[derive(Default)]
+#[allow(clippy::type_complexity)]
 pub struct SupervisorHooks {
     pub journal: Option<Arc<Journal>>,
     pub metrics: Option<Arc<RunMetrics>>,
@@ -113,23 +116,44 @@ pub struct SupervisorHooks {
     pub load_progress: Option<Arc<dyn Fn(&TaskId) -> Option<Json> + Send + Sync>>,
     /// Record a terminal outcome (cache put / checkpoint / notification).
     pub record: Option<Arc<dyn Fn(&TaskOutcome) + Send + Sync>>,
+    /// Live event channel: `TaskStarted` per dispatched attempt, worker
+    /// `Progress` frames forwarded as `TaskProgress`, crash/hang kills as
+    /// `WorkerCrashed`. Terminal outcomes flow through `record`.
+    pub events: Option<EventSink>,
+    /// Cooperative cancellation: once set, nothing new is dispatched,
+    /// pending retries are skipped, in-flight attempts finish, and the
+    /// lazy source is not consumed further.
+    pub cancel: Option<Arc<std::sync::atomic::AtomicBool>>,
+    /// Fires exactly once, when the lazy spec source is first exhausted.
+    pub on_source_drained: Option<Box<dyn FnOnce() + Send + Sync>>,
 }
 
-/// What happened across the whole process-backed run.
+/// What happened across the whole process-backed run. Terminal outcomes
+/// are **streamed** through [`SupervisorHooks::record`] as they complete
+/// and are not re-accumulated here — on a huge lazy matrix the supervisor
+/// must not hold a second copy of every outcome.
 #[derive(Debug)]
 pub struct ProcessReport {
-    /// Terminal outcome per executed spec, ordered by spec index.
-    pub outcomes: Vec<TaskOutcome>,
-    /// Specs abandoned by a fail-fast abort.
+    /// Terminal outcomes delivered to the `record` hook.
+    pub completed: usize,
+    /// Specs abandoned by a fail-fast abort or a cancel.
     pub skipped: Vec<TaskSpec>,
     pub aborted: bool,
+    /// True when the cancel flag stopped the run early.
+    pub cancelled: bool,
+    /// True when an abort/retirement drain hit
+    /// [`ABORT_DRAIN_LIMIT`] before exhausting the lazy source:
+    /// `skipped`/failed-orphan accounting is then a lower bound.
+    pub drain_truncated: bool,
     /// Worker deaths observed (crashes + hang-kills + failed spawns).
     pub crashes: u32,
     /// Replacement workers spawned after a crash.
     pub respawns: u32,
 }
 
-/// One queued attempt.
+/// One queued attempt. `index` is the task's position in the pulled-task
+/// table (also the wire `Task.index` handle), not the spec's expansion
+/// index.
 #[derive(Debug, Clone, Copy)]
 struct Attempt {
     index: usize,
@@ -139,9 +163,11 @@ struct Attempt {
 }
 
 struct Queue {
+    /// Retry attempts waiting to be (re)dispatched. Fresh work is pulled
+    /// from the lazy source instead of being queued here.
     pending: VecDeque<Attempt>,
     in_flight: usize,
-    outcomes: Vec<TaskOutcome>,
+    completed: usize,
     skipped: Vec<TaskSpec>,
     abort: bool,
     live_slots: usize,
@@ -153,10 +179,25 @@ enum Next {
     Done,
 }
 
+/// One pulled spec plus its precomputed id.
+struct PulledTask {
+    spec: TaskSpec,
+    id: TaskId,
+}
+
+struct SrcState {
+    it: SpecSource,
+    exhausted: bool,
+    on_drained: Option<Box<dyn FnOnce() + Send + Sync>>,
+}
+
 struct Shared {
-    specs: Arc<[TaskSpec]>,
-    /// Precomputed `spec.id(version)` per index.
-    ids: Vec<TaskId>,
+    /// The lazy spec stream — pulled one task per dispatch, never
+    /// materialized.
+    source: Mutex<SrcState>,
+    /// Every spec pulled so far (grows with dispatch, not with the raw
+    /// matrix size). Leaf lock: never acquire another lock while held.
+    tasks: Mutex<Vec<PulledTask>>,
     settings: BTreeMap<String, Json>,
     opts: SupervisorOptions,
     hooks: SupervisorHooks,
@@ -165,6 +206,14 @@ struct Shared {
     cv: Condvar,
     crashes: AtomicU32,
     respawns: AtomicU32,
+    /// Set when a post-abort/retirement drain gave up before exhausting
+    /// the source (see [`ABORT_DRAIN_LIMIT`]).
+    drain_truncated: AtomicBool,
+    /// Ensures the post-abort skip drain runs at most once per run:
+    /// `next_task` is re-entered by every waiting slot until in-flight
+    /// work finishes, and re-draining up to the limit on each wakeup
+    /// would make the bound meaningless.
+    abort_drained: AtomicBool,
 }
 
 /// A live worker: the child process plus both halves of its connection.
@@ -174,26 +223,17 @@ struct Conn {
     writer: UnixStream,
 }
 
-/// Runs every spec across `opts.workers` worker processes and returns the
-/// collected report. Blocks until all specs are accounted for and all
-/// children have exited.
+/// Runs every spec the lazy `source` yields across `opts.workers` worker
+/// processes and returns the collected report. Blocks until all pulled
+/// specs are accounted for and all children have exited. The source is
+/// consumed one task per dispatch — never materialized.
 pub fn run(
-    specs: Vec<TaskSpec>,
+    source: SpecSource,
     settings: BTreeMap<String, Json>,
     opts: SupervisorOptions,
-    hooks: SupervisorHooks,
+    mut hooks: SupervisorHooks,
 ) -> Result<ProcessReport, MementoError> {
-    let n = specs.len();
-    if n == 0 {
-        return Ok(ProcessReport {
-            outcomes: Vec::new(),
-            skipped: Vec::new(),
-            aborted: false,
-            crashes: 0,
-            respawns: 0,
-        });
-    }
-    let workers = opts.workers.max(1).min(n);
+    let workers = opts.workers.max(1);
 
     let sock_dir = crate::util::fs::TempDir::new("ipc")
         .map_err(|e| MementoError::ipc(format!("create socket dir: {e}")))?;
@@ -201,21 +241,18 @@ pub fn run(
     let listener = UnixListener::bind(&socket_path)
         .map_err(|e| MementoError::ipc(format!("bind {}: {e}", socket_path.display())))?;
 
-    let ids: Vec<TaskId> = specs.iter().map(|s| s.id(&opts.version)).collect();
-    let pending: VecDeque<Attempt> = (0..n)
-        .map(|index| Attempt { index, attempt: 1, ready_at: None })
-        .collect();
+    let on_drained = hooks.on_source_drained.take();
     let shared = Arc::new(Shared {
-        specs: specs.into(),
-        ids,
+        source: Mutex::new(SrcState { it: source, exhausted: false, on_drained }),
+        tasks: Mutex::new(Vec::new()),
         settings,
         opts,
         hooks,
         socket_path: socket_path.clone(),
         q: Mutex::new(Queue {
-            pending,
+            pending: VecDeque::new(),
             in_flight: 0,
-            outcomes: Vec::with_capacity(n),
+            completed: 0,
             skipped: Vec::new(),
             abort: false,
             live_slots: workers,
@@ -223,6 +260,8 @@ pub fn run(
         cv: Condvar::new(),
         crashes: AtomicU32::new(0),
         respawns: AtomicU32::new(0),
+        drain_truncated: AtomicBool::new(false),
+        abort_drained: AtomicBool::new(false),
     });
 
     // Acceptor: routes each incoming connection to its slot by the worker
@@ -264,20 +303,35 @@ pub fn run(
 
     // All slot threads are joined: the queue is ours, no copies needed.
     let mut q = shared.q.lock().unwrap();
-    let mut outcomes: Vec<TaskOutcome> = std::mem::take(&mut q.outcomes);
+    let completed = q.completed;
     let mut skipped: Vec<TaskSpec> = std::mem::take(&mut q.skipped);
     let aborted = q.abort;
     drop(q);
-    outcomes.sort_by_key(|o| o.spec.index);
     skipped.sort_by_key(|s| s.index);
 
     let crashes = shared.crashes.load(Ordering::SeqCst);
     let respawns = shared.respawns.load(Ordering::SeqCst);
+    let cancelled = shared.cancelled();
+    let drain_truncated = shared.drain_truncated.load(Ordering::SeqCst);
     if let Some(m) = &shared.hooks.metrics {
         m.tasks_skipped.add(skipped.len() as u64);
     }
-    debug_assert_eq!(outcomes.len() + skipped.len(), n, "every spec accounted for");
-    Ok(ProcessReport { outcomes, skipped, aborted, crashes, respawns })
+    // Exactly-once accounting over everything actually pulled (skipped may
+    // exceed the remainder: an aborted run also drains the untouched rest
+    // of the source — see `drain_source_as_skipped`).
+    debug_assert!(
+        completed + skipped.len() >= shared.pulled_count(),
+        "every pulled spec accounted for"
+    );
+    Ok(ProcessReport {
+        completed,
+        skipped,
+        aborted,
+        cancelled,
+        drain_truncated,
+        crashes,
+        respawns,
+    })
 }
 
 // ---- acceptor -----------------------------------------------------------
@@ -350,6 +404,10 @@ fn slot_loop(sh: &Shared, slot: usize, rx: Receiver<(UnixStream, u64)>) {
                     crashes_used += 1;
                     sh.crashes.fetch_add(1, Ordering::SeqCst);
                     eprintln!("memento supervisor: slot {slot} worker spawn failed: {e}");
+                    sh.emit(RunEvent::WorkerCrashed {
+                        slot,
+                        message: format!("worker spawn failed: {e}"),
+                    });
                     sh.give_back(att);
                     continue;
                 }
@@ -362,9 +420,13 @@ fn slot_loop(sh: &Shared, slot: usize, rx: Receiver<(UnixStream, u64)>) {
                 // while idle. Reap and respawn, but return the attempt
                 // unconsumed — the task was never touched.
                 let mut dead = conn.take().unwrap();
-                let _ = reap(&mut dead);
+                let status = reap(&mut dead);
                 crashes_used += 1;
                 sh.crashes.fetch_add(1, Ordering::SeqCst);
+                sh.emit(RunEvent::WorkerCrashed {
+                    slot,
+                    message: format!("worker died while idle ({status})"),
+                });
                 sh.give_back(att);
             }
             Serve::Crashed => {
@@ -374,6 +436,10 @@ fn slot_loop(sh: &Shared, slot: usize, rx: Receiver<(UnixStream, u64)>) {
                 let status = reap(&mut dead);
                 crashes_used += 1;
                 sh.crashes.fetch_add(1, Ordering::SeqCst);
+                sh.emit(RunEvent::WorkerCrashed {
+                    slot,
+                    message: format!("worker process died mid-task ({status})"),
+                });
                 sh.attempt_failed(
                     att,
                     FailureKind::Crash,
@@ -409,13 +475,12 @@ enum Serve {
 
 /// Dispatches one attempt and pumps frames until its outcome.
 fn serve_attempt(sh: &Shared, slot: usize, conn: &mut Conn, att: Attempt) -> Serve {
-    let id = &sh.ids[att.index];
-    let spec = &sh.specs[att.index];
+    let (spec, id) = sh.task(att.index);
     let restored = sh
         .hooks
         .load_progress
         .as_ref()
-        .and_then(|load| load(id));
+        .and_then(|load| load(&id));
 
     let task = Msg::Task {
         index: att.index as u64,
@@ -433,14 +498,20 @@ fn serve_attempt(sh: &Shared, slot: usize, conn: &mut Conn, att: Attempt) -> Ser
     if let Some(j) = &sh.hooks.journal {
         j.record(&Event::TaskStarted { id: id.clone(), attempt: att.attempt });
     }
+    sh.emit(RunEvent::TaskStarted {
+        index: spec.index,
+        id: id.clone(),
+        attempt: att.attempt,
+    });
     loop {
         match read_frame(&mut conn.reader) {
             Ok(Some(Msg::Heartbeat { .. })) => continue,
             Ok(Some(Msg::Progress { index, value })) => {
-                if let (Some(save), Some(id)) =
-                    (&sh.hooks.save_progress, sh.ids.get(index as usize))
-                {
-                    save(id, &value);
+                if let Some((spec_index, pid)) = sh.task_brief(index as usize) {
+                    if let Some(save) = &sh.hooks.save_progress {
+                        save(&pid, &value);
+                    }
+                    sh.emit(RunEvent::TaskProgress { index: spec_index, id: pid, value });
                 }
             }
             Ok(Some(Msg::Outcome { index, attempt, duration_secs, result })) => {
@@ -561,33 +632,172 @@ fn spawn_worker(
 // ---- shared queue operations -------------------------------------------
 
 impl Shared {
-    fn next_task(&self) -> Next {
-        let mut q = self.q.lock().unwrap();
-        if q.abort && !q.pending.is_empty() {
-            let drained: Vec<Attempt> = q.pending.drain(..).collect();
-            for att in drained {
-                q.skipped.push(self.specs[att.index].clone());
-                if let Some(p) = &self.hooks.progress {
-                    p.mark_skipped();
+    fn cancelled(&self) -> bool {
+        self.hooks
+            .cancel
+            .as_ref()
+            .map(|c| c.load(Ordering::SeqCst))
+            .unwrap_or(false)
+    }
+
+    fn emit(&self, event: RunEvent) {
+        if let Some(s) = &self.hooks.events {
+            s.emit(event);
+        }
+    }
+
+    /// Spec + id of a pulled task (panics on an unknown index — internal
+    /// dispatch handles are always valid).
+    fn task(&self, index: usize) -> (TaskSpec, TaskId) {
+        let tasks = self.tasks.lock().unwrap();
+        let t = &tasks[index];
+        (t.spec.clone(), t.id.clone())
+    }
+
+    /// Expansion index + id of a pulled task without cloning the spec —
+    /// tolerant of garbage indices from a misbehaving worker frame.
+    fn task_brief(&self, index: usize) -> Option<(usize, TaskId)> {
+        let tasks = self.tasks.lock().unwrap();
+        tasks.get(index).map(|t| (t.spec.index, t.id.clone()))
+    }
+
+    fn pulled_count(&self) -> usize {
+        self.tasks.lock().unwrap().len()
+    }
+
+    fn source_exhausted(&self) -> bool {
+        self.source.lock().unwrap().exhausted
+    }
+
+    /// Pops one spec from the lazy source; marks exhaustion and fires
+    /// `on_source_drained` (outside the lock) exactly once. The single
+    /// place the exhaustion/on_drained invariant lives in this module.
+    fn pop_source(&self) -> Option<TaskSpec> {
+        let (spec, drained) = {
+            let mut src = self.source.lock().unwrap();
+            if src.exhausted {
+                (None, None)
+            } else {
+                match src.it.next() {
+                    Some(s) => (Some(s), None),
+                    None => {
+                        src.exhausted = true;
+                        (None, src.on_drained.take())
+                    }
                 }
             }
-            self.cv.notify_all();
+        };
+        if let Some(cb) = drained {
+            cb();
         }
-        let now = Instant::now();
-        let ready = q
-            .pending
-            .iter()
-            .position(|a| a.ready_at.map(|t| t <= now).unwrap_or(true));
-        if let Some(pos) = ready {
-            let att = q.pending.remove(pos).unwrap();
-            q.in_flight += 1;
-            return Next::Run(att);
+        spec
+    }
+
+    /// Pulls one fresh spec from the lazy source, registering it in the
+    /// pulled-task table.
+    fn pull_fresh(&self) -> Option<usize> {
+        let spec = self.pop_source()?;
+        let id = spec.id(&self.opts.version);
+        let mut tasks = self.tasks.lock().unwrap();
+        tasks.push(PulledTask { spec, id });
+        Some(tasks.len() - 1)
+    }
+
+    /// Frees a terminal task's (potentially large) parameter payload. The
+    /// slot keeps its id and expansion index so a late frame from a
+    /// desynced worker still resolves, but supervisor memory no longer
+    /// grows with the full parameter payload of every completed task.
+    fn release_task(&self, index: usize) {
+        if let Some(t) = self.tasks.lock().unwrap().get_mut(index) {
+            t.spec.params = Vec::new();
         }
-        if q.pending.is_empty() && q.in_flight == 0 {
+    }
+
+    /// After a fail-fast abort: account for the specs the run never
+    /// reached by draining the rest of the source as skips — bounded by
+    /// [`ABORT_DRAIN_LIMIT`] so the abort returns promptly on a huge
+    /// matrix (the un-enumerated remainder is flagged as truncated).
+    /// Cancel stops the drain immediately.
+    fn drain_source_as_skipped(&self) {
+        let mut drained_n = 0usize;
+        loop {
+            if self.cancelled() {
+                return;
+            }
+            if drained_n >= ABORT_DRAIN_LIMIT {
+                if !self.source.lock().unwrap().exhausted {
+                    self.drain_truncated.store(true, Ordering::SeqCst);
+                }
+                return;
+            }
+            let Some(spec) = self.pop_source() else { return };
+            drained_n += 1;
+            if let Some(p) = &self.hooks.progress {
+                p.mark_skipped();
+            }
+            self.q.lock().unwrap().skipped.push(spec);
+        }
+    }
+
+    fn next_task(&self) -> Next {
+        let stopping = {
+            let mut q = self.q.lock().unwrap();
+            let stop = q.abort || self.cancelled();
+            if stop && !q.pending.is_empty() {
+                let drained: Vec<Attempt> = q.pending.drain(..).collect();
+                {
+                    let tasks = self.tasks.lock().unwrap();
+                    for att in &drained {
+                        q.skipped.push(tasks[att.index].spec.clone());
+                    }
+                }
+                if let Some(p) = &self.hooks.progress {
+                    for _ in 0..drained.len() {
+                        p.mark_skipped();
+                    }
+                }
+                self.cv.notify_all();
+            }
+            if !stop {
+                // Retry attempts first — they are older work.
+                let now = Instant::now();
+                let ready = q
+                    .pending
+                    .iter()
+                    .position(|a| a.ready_at.map(|t| t <= now).unwrap_or(true));
+                if let Some(pos) = ready {
+                    let att = q.pending.remove(pos).unwrap();
+                    q.in_flight += 1;
+                    return Next::Run(att);
+                }
+            }
+            stop
+        };
+
+        if !stopping {
+            // Fresh work, pulled lazily from the expansion stream.
+            if let Some(index) = self.pull_fresh() {
+                let mut q = self.q.lock().unwrap();
+                q.in_flight += 1;
+                return Next::Run(Attempt { index, attempt: 1, ready_at: None });
+            }
+        } else if !self.cancelled()
+            && self.q.lock().unwrap().abort
+            && !self.abort_drained.swap(true, Ordering::SeqCst)
+        {
+            self.drain_source_as_skipped();
+        }
+
+        let q = self.q.lock().unwrap();
+        if q.pending.is_empty()
+            && q.in_flight == 0
+            && (stopping || self.source_exhausted())
+        {
             return Next::Done;
         }
         // Everything pending is backing off (or other slots hold the
         // remaining work): sleep until the earliest becomes ready.
+        let now = Instant::now();
         let wait = q
             .pending
             .iter()
@@ -613,9 +823,10 @@ impl Shared {
     }
 
     fn attempt_succeeded(&self, att: Attempt, value: Json, duration_secs: f64) {
+        let (spec, id) = self.task(att.index);
         if let Some(j) = &self.hooks.journal {
             j.record(&Event::TaskSucceeded {
-                id: self.ids[att.index].clone(),
+                id: id.clone(),
                 attempt: att.attempt,
                 duration_secs,
             });
@@ -624,8 +835,8 @@ impl Shared {
             m.exec_time.record(Duration::from_secs_f64(duration_secs.max(0.0)));
         }
         let outcome = TaskOutcome {
-            spec: self.specs[att.index].clone(),
-            id: self.ids[att.index].clone(),
+            spec,
+            id,
             status: TaskStatus::Success,
             value: Some(value),
             failure: None,
@@ -634,17 +845,20 @@ impl Shared {
             attempts: att.attempt,
         };
         self.finish(outcome, true);
+        self.release_task(att.index);
     }
 
     /// One attempt failed (worker-reported error/panic, or a crash). The
     /// retry policy decides between a delayed requeue and a final failure.
     fn attempt_failed(&self, att: Attempt, kind: FailureKind, message: String, duration_secs: f64) {
         if let Some(j) = &self.hooks.journal {
-            j.record(&Event::TaskFailed {
-                id: self.ids[att.index].clone(),
-                attempt: att.attempt,
-                message: message.clone(),
-            });
+            if let Some((_, id)) = self.task_brief(att.index) {
+                j.record(&Event::TaskFailed {
+                    id,
+                    attempt: att.attempt,
+                    message: message.clone(),
+                });
+            }
         }
         if self.opts.retry.should_retry(att.attempt) {
             if let Some(m) = &self.hooks.metrics {
@@ -666,6 +880,7 @@ impl Shared {
         }
         let outcome = self.failed_outcome(att.index, kind, message, duration_secs, att.attempt);
         self.finish(outcome, true);
+        self.release_task(att.index);
     }
 
     fn failed_outcome(
@@ -676,15 +891,17 @@ impl Shared {
         duration_secs: f64,
         attempts: u32,
     ) -> TaskOutcome {
+        let (spec, id) = self.task(index);
+        let params = spec.param_strings();
         TaskOutcome {
-            spec: self.specs[index].clone(),
-            id: self.ids[index].clone(),
+            spec,
+            id,
             status: TaskStatus::Failed,
             value: None,
             failure: Some(TaskFailure {
                 kind,
                 message,
-                params: self.specs[index].param_strings(),
+                params,
                 attempts,
             }),
             duration_secs,
@@ -717,10 +934,11 @@ impl Shared {
         if failed && self.opts.fail_fast {
             q.abort = true;
         }
-        q.outcomes.push(outcome);
+        q.completed += 1;
         if was_in_flight {
             q.in_flight -= 1;
         }
+        drop(q);
         self.cv.notify_all();
     }
 
@@ -737,7 +955,9 @@ impl Shared {
                 self.opts.crash_budget
             );
         }
-        if q.live_slots == 0 && !q.pending.is_empty() && !q.abort {
+        let all_retired = q.live_slots == 0;
+        let aborting = q.abort;
+        if all_retired && !aborting {
             let orphans: Vec<Attempt> = q.pending.drain(..).collect();
             drop(q);
             for att in orphans {
@@ -749,6 +969,32 @@ impl Shared {
                     att.attempt.saturating_sub(1),
                 );
                 self.finish(outcome, false);
+                self.release_task(att.index);
+            }
+            // Work the run never even pulled fails explicitly too —
+            // nothing is dropped on the floor — bounded by
+            // ABORT_DRAIN_LIMIT so total worker loss on a huge matrix
+            // still terminates promptly (remainder flagged truncated).
+            // Cancel stops this drain immediately.
+            let mut failed_n = 0usize;
+            while !self.cancelled() {
+                if failed_n >= ABORT_DRAIN_LIMIT {
+                    if !self.source.lock().unwrap().exhausted {
+                        self.drain_truncated.store(true, Ordering::SeqCst);
+                    }
+                    break;
+                }
+                let Some(index) = self.pull_fresh() else { break };
+                failed_n += 1;
+                let outcome = self.failed_outcome(
+                    index,
+                    FailureKind::Crash,
+                    "no workers left: every slot exhausted its crash budget".to_string(),
+                    0.0,
+                    0,
+                );
+                self.finish(outcome, false);
+                self.release_task(index);
             }
         }
         self.cv.notify_all();

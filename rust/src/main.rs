@@ -17,6 +17,7 @@ use memento::coordinator::expand;
 use memento::coordinator::memento::Memento;
 use memento::coordinator::notify::ConsoleNotificationProvider;
 use memento::coordinator::results::ResultSet;
+use memento::coordinator::run::RunEvent;
 use memento::experiments::grid;
 use memento::runtime::artifact::shared_store;
 use memento::util::cli::{CliError, CliSpec};
@@ -78,23 +79,43 @@ fn unwrap_cli<T>(r: Result<T, CliError>) -> Result<T, String> {
 fn cmd_expand(args: &[String]) -> Result<(), String> {
     let spec = CliSpec::new("memento expand", "show the task expansion of a config matrix")
         .positional("config", "config matrix JSON file")
+        .opt("limit", "0", "print at most N tasks without a full count (0 = all)")
         .flag("ids", "also print task hashes");
     let a = unwrap_cli(spec.parse(args))?;
     let path = a.pos("config").ok_or("missing <config>")?;
     let matrix = loader::from_file(Path::new(path)).map_err(|e| e.to_string())?;
-    let tasks = expand::expand(&matrix);
-    println!(
-        "raw combinations : {}\nexcluded         : {}\nincluded tasks   : {}",
-        matrix.raw_count(),
-        matrix.raw_count() - tasks.len(),
-        tasks.len()
-    );
-    for t in &tasks {
+    let limit = unwrap_cli(a.get_usize("limit"))?;
+
+    let print_task = |t: &memento::coordinator::task::TaskSpec| {
         if a.flag("ids") {
             println!("  [{:>4}] {}  {}", t.index, t.id("v1").short(), t.label());
         } else {
             println!("  [{:>4}] {}", t.index, t.label());
         }
+    };
+
+    if limit > 0 {
+        // Bounded preview: never walks (let alone materializes) the full
+        // product, so this works on matrices with 10¹²⁺ raw combinations.
+        println!("raw combinations : {}", matrix.raw_count());
+        println!("showing first    : {limit} included task(s)");
+        for t in expand::Expansion::new(&matrix).take(limit) {
+            print_task(&t);
+        }
+        return Ok(());
+    }
+
+    // Full listing, streamed — counts via a lazy pass, tasks printed as
+    // the second pass yields them; the task list is never held in memory.
+    let included = expand::count_included(&matrix);
+    println!(
+        "raw combinations : {}\nexcluded         : {}\nincluded tasks   : {}",
+        matrix.raw_count(),
+        matrix.raw_count() - included,
+        included
+    );
+    for t in expand::Expansion::new(&matrix) {
+        print_task(&t);
     }
     Ok(())
 }
@@ -117,6 +138,12 @@ fn run_spec(name: &'static str) -> CliSpec {
             "crash-budget",
             "3",
             "worker respawns per slot (process isolation)",
+        )
+        .opt(
+            "output",
+            "summary",
+            "output mode: summary (table at the end) | ndjson (one JSON \
+             line per task outcome, streamed live)",
         )
         .flag("fail-fast", "abort on first failure")
         .flag("quiet", "suppress progress/notifications")
@@ -166,7 +193,16 @@ fn cmd_run(args: &[String], resuming: bool) -> Result<(), String> {
     } else if resuming {
         return Err("resume requires --checkpoint <dir>".into());
     }
-    if !a.flag("quiet") {
+    let ndjson = match a.get("output").unwrap_or("summary") {
+        "summary" => false,
+        "ndjson" => true,
+        other => {
+            return Err(format!(
+                "--output must be 'summary' or 'ndjson', got '{other}'"
+            ))
+        }
+    };
+    if !a.flag("quiet") && !ndjson {
         m = m
             .with_notifier(Box::new(ConsoleNotificationProvider))
             .progress_every(Duration::from_secs(2));
@@ -174,29 +210,52 @@ fn cmd_run(args: &[String], resuming: bool) -> Result<(), String> {
 
     let metrics = m.metrics();
     let started = std::time::Instant::now();
-    let results = if resuming { m.resume(&matrix) } else { m.run(&matrix) }
-        .map_err(|e| e.to_string())?;
+    let results = if ndjson {
+        // Streaming mode: launch returns immediately; each task outcome is
+        // printed as one JSON line the moment it completes (restored tasks
+        // included), plus worker-crash and final run_complete lines.
+        // stdout stays machine-parseable; bookkeeping goes to stderr.
+        let run = if resuming { m.launch_resume(&matrix) } else { m.launch(&matrix) }
+            .map_err(|e| e.to_string())?;
+        for event in run.events() {
+            match &event {
+                RunEvent::TaskFinished(_)
+                | RunEvent::WorkerCrashed { .. }
+                | RunEvent::RunComplete(_) => println!("{}", event.to_json()),
+                _ => {}
+            }
+        }
+        run.collect().map_err(|e| e.to_string())?
+    } else {
+        if resuming { m.resume(&matrix) } else { m.run(&matrix) }.map_err(|e| e.to_string())?
+    };
     let wall = started.elapsed().as_secs_f64();
 
-    println!("\n{}", results.summary());
-    print!("{}", metrics.render(wall));
-    for o in results.failures() {
-        if let Some(f) = &o.failure {
-            println!("FAILED: {}", f.summary());
+    if !ndjson {
+        println!("\n{}", results.summary());
+        print!("{}", metrics.render(wall));
+        for o in results.failures() {
+            if let Some(f) = &o.failure {
+                println!("FAILED: {}", f.summary());
+            }
         }
-    }
 
-    let pivot = results.pivot(
-        a.get("rows").unwrap_or("dataset"),
-        a.get("cols").unwrap_or("model"),
-        a.get("metric").unwrap_or("accuracy"),
-    );
-    println!("\n{}", pivot.render());
+        let pivot = results.pivot(
+            a.get("rows").unwrap_or("dataset"),
+            a.get("cols").unwrap_or("model"),
+            a.get("metric").unwrap_or("accuracy"),
+        );
+        println!("\n{}", pivot.render());
+    }
 
     if let Some(out) = a.get("out") {
         memento::util::fs::atomic_write(Path::new(out), results.to_json().pretty().as_bytes())
             .map_err(|e| e.to_string())?;
-        println!("results written to {out}");
+        if ndjson {
+            eprintln!("results written to {out}");
+        } else {
+            println!("results written to {out}");
+        }
     }
     Ok(())
 }

@@ -115,6 +115,67 @@ fn run_then_resume_then_status_then_report() {
 }
 
 #[test]
+fn run_output_ndjson_streams_one_line_per_outcome() {
+    let td = TempDir::new("cli-ndjson").unwrap();
+    let (stdout, stderr, ok) = run_cli(&[
+        "run",
+        repo_config("toy_grid.json").to_str().unwrap(),
+        "--workers",
+        "2",
+        "--quiet",
+        "--output",
+        "ndjson",
+        "--cache",
+        td.join("cache").to_str().unwrap(),
+        "--checkpoint",
+        td.join("run").to_str().unwrap(),
+        "--out",
+        td.join("results.json").to_str().unwrap(),
+    ]);
+    assert!(ok, "stderr: {stderr}\nstdout: {stdout}");
+    // Every stdout line is one parseable JSON event; 8 task_finished
+    // lines (one per toy-grid task) plus the terminal run_complete.
+    let mut finished = 0usize;
+    let mut complete = 0usize;
+    for line in stdout.lines().filter(|l| !l.trim().is_empty()) {
+        let doc = memento::util::json::parse(line)
+            .unwrap_or_else(|e| panic!("non-JSON ndjson line: {e}\n{line}"));
+        match doc.get("event").and_then(|j| j.as_str()) {
+            Some("task_finished") => {
+                finished += 1;
+                assert!(doc.get("params").is_some(), "{line}");
+                assert_eq!(doc.get("status").and_then(|j| j.as_str()), Some("success"));
+            }
+            Some("run_complete") => complete += 1,
+            other => panic!("unexpected ndjson event {other:?}: {line}"),
+        }
+    }
+    assert_eq!(finished, 8, "{stdout}");
+    assert_eq!(complete, 1, "{stdout}");
+    // The summary table stays off stdout in ndjson mode.
+    assert!(!stdout.contains("task(s):"), "{stdout}");
+    assert!(td.join("results.json").exists());
+}
+
+#[test]
+fn expand_limit_previews_without_full_count() {
+    let (stdout, stderr, ok) = run_cli(&[
+        "expand",
+        repo_config("paper_grid.json").to_str().unwrap(),
+        "--limit",
+        "5",
+    ]);
+    assert!(ok, "stderr: {stderr}");
+    assert!(stdout.contains("raw combinations : 54"), "{stdout}");
+    assert!(stdout.contains("showing first    : 5"), "{stdout}");
+    assert_eq!(
+        stdout.lines().filter(|l| l.trim_start().starts_with('[')).count(),
+        5,
+        "{stdout}"
+    );
+}
+
+#[test]
 fn bad_config_fails_cleanly() {
     let td = TempDir::new("cli-bad").unwrap();
     let bad = td.join("bad.json");

@@ -1,0 +1,291 @@
+//! Integration tests for the streaming `Run` handle API
+//! (`Memento::launch` → `Run::events` → `Run::collect`/`Run::cancel`).
+//!
+//! The acceptance-criterion tests prove *causally* that a `TaskFinished`
+//! event is observable **before** the run completes, on both backends:
+//! every task except the first blocks until the test observer has
+//! actually received the first task's `TaskFinished` event (via a shared
+//! flag for the thread backend, via a filesystem flag for the process
+//! backend — workers are separate processes). If events were only
+//! delivered after the run finished, these tests would dead-end into
+//! their 30-second guard and fail.
+//!
+//! # How process-backend workers spawn under libtest
+//!
+//! Same pattern as `ipc_process_backend.rs`: the supervisor re-executes
+//! this test binary with `--exact ipc_stream_worker_entry`, which is a
+//! no-op in a normal test pass and a worker loop when the worker
+//! environment is set.
+
+use memento::prelude::*;
+use memento::util::fs::TempDir;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+fn int_matrix(n: i64) -> ConfigMatrix {
+    ConfigMatrix::builder()
+        .param("i", (0..n).map(pv_int).collect())
+        .build()
+        .unwrap()
+}
+
+// ---- thread backend -----------------------------------------------------
+
+#[test]
+fn thread_backend_emits_task_finished_before_run_completes() {
+    let release = Arc::new(AtomicBool::new(false));
+    let r2 = Arc::clone(&release);
+    let mem = Memento::new(move |ctx| {
+        let i = ctx.param_i64("i")?;
+        if i != 0 {
+            // Block until the observer has *received* a TaskFinished
+            // event. If events only flowed after run completion this
+            // would never release.
+            let start = std::time::Instant::now();
+            while !r2.load(Ordering::SeqCst) {
+                if start.elapsed() > Duration::from_secs(30) {
+                    return Err(MementoError::experiment(
+                        "no TaskFinished event observed while run in flight",
+                    ));
+                }
+                std::thread::sleep(Duration::from_millis(1));
+            }
+        }
+        Ok(Json::int(i * 10))
+    })
+    .workers(2);
+
+    let matrix = int_matrix(6);
+    let run = mem.launch(&matrix).unwrap();
+
+    let mut saw_finished_live = false;
+    let mut finished = 0usize;
+    let mut started_ids: Vec<TaskId> = Vec::new();
+    let mut summary: Option<RunSummary> = None;
+    let mut last_was_complete = false;
+    for event in run.events() {
+        last_was_complete = false;
+        match event {
+            RunEvent::TaskStarted { id, .. } => started_ids.push(id),
+            RunEvent::TaskFinished(o) => {
+                finished += 1;
+                if !release.load(Ordering::SeqCst) {
+                    // The run is still blocked on the release flag, so
+                    // this event provably arrived mid-run.
+                    saw_finished_live = true;
+                    assert_eq!(o.spec.get("i"), Some(&pv_int(0)), "first finisher is i=0");
+                }
+                assert!(
+                    started_ids.contains(&o.id),
+                    "TaskFinished for a task never reported started"
+                );
+                release.store(true, Ordering::SeqCst);
+            }
+            RunEvent::RunComplete(s) => {
+                summary = Some(s);
+                last_was_complete = true;
+            }
+            _ => {}
+        }
+    }
+    assert!(saw_finished_live, "TaskFinished must be observable mid-run");
+    assert!(last_was_complete, "RunComplete is the terminal event");
+    assert_eq!(finished, 6);
+    let summary = summary.unwrap();
+    assert_eq!(summary.total, 6);
+    assert_eq!(summary.succeeded, 6);
+    assert!(!summary.aborted && !summary.cancelled);
+
+    let results = run.collect().unwrap();
+    assert_eq!(results.len(), 6);
+    assert_eq!(results.n_failed(), 0);
+}
+
+#[test]
+fn run_is_equivalent_to_launch_collect() {
+    let exp = |ctx: &TaskContext| Ok(Json::int(ctx.param_i64("i")? * 3));
+    let matrix = int_matrix(8);
+    let blocking = Memento::new(exp).workers(3).run(&matrix).unwrap();
+    let streamed = Memento::new(exp)
+        .workers(3)
+        .launch(&matrix)
+        .unwrap()
+        .collect()
+        .unwrap();
+    assert_eq!(blocking.len(), streamed.len());
+    for (b, s) in blocking.iter().zip(streamed.iter()) {
+        assert_eq!(b.spec, s.spec);
+        assert_eq!(b.value, s.value);
+        assert_eq!(b.id, s.id);
+    }
+}
+
+#[test]
+fn cancel_stops_mid_flight_and_collect_returns_partial() {
+    let mem = Memento::new(|ctx| {
+        std::thread::sleep(Duration::from_millis(5));
+        Ok(Json::int(ctx.param_i64("i")?))
+    })
+    .workers(2);
+    let matrix = int_matrix(200);
+    let run = mem.launch(&matrix).unwrap();
+    for event in run.events() {
+        if matches!(event, RunEvent::TaskFinished(_)) {
+            run.cancel();
+            break;
+        }
+    }
+    let results = run.collect().unwrap();
+    assert!(!results.is_empty(), "in-flight work is kept");
+    assert!(
+        results.len() < 200,
+        "cancel did not stop the run: {} outcomes",
+        results.len()
+    );
+    assert_eq!(results.n_failed(), 0);
+}
+
+#[test]
+fn restored_tasks_stream_as_from_cache_events() {
+    let td = TempDir::new("stream-cache").unwrap();
+    let matrix = int_matrix(5);
+    let make = || {
+        Memento::new(|ctx| Ok(Json::int(ctx.param_i64("i")?)))
+            .workers(2)
+            .with_cache_dir(td.join("cache"))
+    };
+    make().run(&matrix).unwrap();
+
+    // Second run: everything restores from cache; the events still stream.
+    let run = make().launch(&matrix).unwrap();
+    let mut restored_events = 0usize;
+    let mut summary = None;
+    for event in run.events() {
+        match event {
+            RunEvent::TaskFinished(o) => {
+                assert!(o.from_cache, "second run must restore, not execute");
+                restored_events += 1;
+            }
+            RunEvent::RunComplete(s) => summary = Some(s),
+            _ => {}
+        }
+    }
+    assert_eq!(restored_events, 5);
+    let summary = summary.unwrap();
+    assert_eq!(summary.from_cache, 5);
+    assert_eq!(summary.total, 5);
+    let results = run.collect().unwrap();
+    assert_eq!(results.n_cached(), 5);
+}
+
+#[test]
+fn progress_events_report_final_totals() {
+    let mem = Memento::new(|ctx| Ok(Json::int(ctx.param_i64("i")?))).workers(2);
+    let matrix = int_matrix(10);
+    let run = mem.launch(&matrix).unwrap();
+    let mut last_progress = None;
+    for event in run.events() {
+        if let RunEvent::Progress { finished, restored, planned, planning_complete, .. } = event {
+            last_progress = Some((finished, restored, planned, planning_complete));
+        }
+    }
+    let (finished, restored, planned, planning_complete) =
+        last_progress.expect("at least one Progress event");
+    assert!(planning_complete);
+    assert_eq!(planned, 10);
+    assert_eq!(finished + restored, 10);
+    run.collect().unwrap();
+}
+
+// ---- process backend ----------------------------------------------------
+
+#[cfg(unix)]
+mod process_backend {
+    use super::*;
+    use std::path::Path;
+
+    /// The experiment function served by the worker entry: every task but
+    /// i=0 spins until the release file exists on disk (the cross-process
+    /// analogue of the thread test's AtomicBool).
+    fn exp(ctx: &TaskContext) -> Result<Json, MementoError> {
+        let i = ctx.param_i64("i")?;
+        if i != 0 {
+            let flag = ctx
+                .setting("release_file")
+                .and_then(|j| j.as_str())
+                .ok_or_else(|| MementoError::experiment("release_file setting missing"))?
+                .to_string();
+            let start = std::time::Instant::now();
+            while !Path::new(&flag).exists() {
+                if start.elapsed() > Duration::from_secs(30) {
+                    return Err(MementoError::experiment(
+                        "no TaskFinished event observed while run in flight",
+                    ));
+                }
+                std::thread::sleep(Duration::from_millis(2));
+            }
+        }
+        Ok(Json::int(i * 7))
+    }
+
+    /// Worker entry: spawned via `--exact ipc_stream_worker_entry`. A
+    /// no-op in a normal test pass.
+    #[test]
+    fn ipc_stream_worker_entry() {
+        if !memento::ipc::worker::active() {
+            return;
+        }
+        memento::ipc::worker::serve(Arc::new(exp)).expect("worker serve");
+        std::process::exit(0);
+    }
+
+    #[test]
+    fn process_backend_emits_task_finished_before_run_completes() {
+        let td = TempDir::new("stream-ipc").unwrap();
+        let flag = td.join("release.flag");
+        let matrix = ConfigMatrix::builder()
+            .param("i", (0..4).map(pv_int).collect())
+            .setting("release_file", Json::str(flag.to_string_lossy().to_string()))
+            .build()
+            .unwrap();
+        let mem = Memento::new(exp)
+            .isolate_processes(2, 1)
+            .worker_args(vec![
+                "--exact".to_string(),
+                "process_backend::ipc_stream_worker_entry".to_string(),
+            ]);
+        let run = mem.launch(&matrix).unwrap();
+
+        let mut saw_finished_live = false;
+        let mut finished = 0usize;
+        let mut summary = None;
+        for event in run.events() {
+            match event {
+                RunEvent::TaskFinished(o) => {
+                    finished += 1;
+                    if !flag.exists() {
+                        saw_finished_live = true;
+                        assert_eq!(o.spec.get("i"), Some(&pv_int(0)));
+                    }
+                    std::fs::write(&flag, b"go").unwrap();
+                }
+                RunEvent::RunComplete(s) => summary = Some(s),
+                _ => {}
+            }
+        }
+        assert!(
+            saw_finished_live,
+            "process backend must stream TaskFinished mid-run"
+        );
+        assert_eq!(finished, 4);
+        let summary = summary.unwrap();
+        assert_eq!(summary.succeeded, 4);
+
+        let results = run.collect().unwrap();
+        assert_eq!(results.len(), 4);
+        assert_eq!(results.n_failed(), 0);
+        let hit = results.find(&[("i", pv_int(2))]).unwrap();
+        assert_eq!(hit.value.as_ref().unwrap().as_i64(), Some(14));
+    }
+}
