@@ -1,0 +1,91 @@
+//! Bench E8: restore throughput on resume-heavy runs.
+//!
+//! The planner's restore stage (cache probe + checkpoint record for
+//! already-completed tasks) used to run *inside* the scheduler's source
+//! mutex, so a resume of a mostly-complete run restored single-threaded
+//! regardless of worker count. `DrainOnceSource` moved the filter outside
+//! the lock (raw expansion is the only locked work); this bench records
+//! restore throughput across worker counts so the before/after — and any
+//! regression back to serialized restores — is visible in
+//! `BENCH_sched_cache.json` as the `restore_<W>w_<N>tasks` rows.
+//!
+//! A fully warmed cache is the worst case for the old design (every spec
+//! is filter work, zero execution) and the best showcase for the new one:
+//! throughput should scale with workers until memory bandwidth, not stay
+//! flat at the 1-worker line.
+
+use memento::bench::{sched_cache_trajectory_path, Suite};
+use memento::config::matrix::ConfigMatrix;
+use memento::config::value::pv_int;
+use memento::coordinator::cache::ResultCache;
+use memento::coordinator::memento::Memento;
+use memento::util::json::Json;
+use std::sync::Arc;
+
+fn flat_matrix(n: usize) -> ConfigMatrix {
+    ConfigMatrix::builder()
+        .param("i", (0..n as i64).map(pv_int).collect())
+        .build()
+        .unwrap()
+}
+
+fn main() {
+    let mut suite = Suite::new("E8 — restore throughput (mostly-cached resume)");
+    let mut extras: Vec<(String, Json)> = Vec::new();
+
+    let n = 20_000usize;
+    let td = memento::util::fs::TempDir::new("bench-restore").unwrap();
+    let matrix = flat_matrix(n);
+    let cache = Arc::new(ResultCache::open(td.join("cache")).unwrap());
+
+    // Warm the cache once; subsequent runs are 100% restores.
+    let seeded = Memento::new(|_| Ok(Json::Null))
+        .workers(8)
+        .with_cache(Arc::clone(&cache))
+        .run(&matrix)
+        .unwrap();
+    assert_eq!(seeded.len(), n);
+
+    let mut single_worker_rate = 0.0f64;
+    for &workers in &[1usize, 2, 4, 8] {
+        let cache2 = Arc::clone(&cache);
+        let stats = suite
+            .bench_with_setup(
+                format!("restore {n} cached tasks, {workers}w"),
+                1,
+                5,
+                || (),
+                |_| {
+                    let m = Memento::new(|_| Ok(Json::Null))
+                        .workers(workers)
+                        .with_cache(Arc::clone(&cache2));
+                    let r = m.run(&matrix).unwrap();
+                    assert_eq!(r.n_cached(), n, "resume must restore everything");
+                },
+            )
+            .clone();
+        let rate = n as f64 / stats.mean;
+        if workers == 1 {
+            single_worker_rate = rate;
+        }
+        let scaling = rate / single_worker_rate;
+        suite.note(format!(
+            "{:.2}µs/restore, {rate:.0}/s ({scaling:.2}x vs 1w)",
+            stats.mean / n as f64 * 1e6
+        ));
+        extras.push((
+            format!("restore_{workers}w_{n}tasks"),
+            Json::obj(vec![
+                ("restore_us_per_task", Json::Num(stats.mean / n as f64 * 1e6)),
+                ("restores_per_sec", Json::Num(rate)),
+                ("scaling_vs_1w", Json::Num(scaling)),
+            ]),
+        ));
+        println!(
+            "E8 headline ({workers}w): {rate:.0} restores/s ({scaling:.2}x vs 1 worker)"
+        );
+    }
+
+    suite.write_trajectory(&sched_cache_trajectory_path(), extras);
+    suite.finish();
+}

@@ -196,6 +196,39 @@ pub fn count_included(matrix: &ConfigMatrix) -> usize {
     Expansion::new(matrix).count()
 }
 
+/// Uniform reservoir sample (Algorithm R) of `k` specs from a lazy stream,
+/// plus the total number of specs seen.
+///
+/// One pass, O(k) memory, every element kept with probability exactly
+/// `k / seen` — which is what makes `memento expand --sample` an
+/// *unbiased* preview of a huge matrix, where `--limit` only ever shows
+/// the matrix's first block. Deterministic for a given seeded
+/// [`Rng`](crate::util::rng::Rng). The sample is returned sorted by
+/// expansion index for stable display; sampling itself is order-uniform.
+pub fn reservoir_sample(
+    it: impl Iterator<Item = TaskSpec>,
+    k: usize,
+    rng: &mut crate::util::rng::Rng,
+) -> (Vec<TaskSpec>, usize) {
+    let mut sample: Vec<TaskSpec> = Vec::with_capacity(k.min(1024));
+    let mut seen = 0usize;
+    for spec in it {
+        seen += 1;
+        if sample.len() < k {
+            sample.push(spec);
+        } else {
+            // Keep the t-th element with probability k/t by overwriting a
+            // uniformly random reservoir slot iff the drawn index < k.
+            let j = rng.below(seen);
+            if j < k {
+                sample[j] = spec;
+            }
+        }
+    }
+    sample.sort_by_key(|s| s.index);
+    (sample, seen)
+}
+
 /// Counts combinations removed by exclusion rules.
 pub fn count_excluded(matrix: &ConfigMatrix) -> usize {
     matrix.raw_count() - count_included(matrix)
@@ -597,6 +630,75 @@ mod tests {
             "first-k taking {:?} — expansion is no longer lazy",
             started.elapsed()
         );
+    }
+
+    // ---- reservoir sampling ----------------------------------------------
+
+    #[test]
+    fn reservoir_keeps_everything_when_k_covers_stream() {
+        let m = paper_matrix();
+        let mut rng = crate::util::rng::Rng::new(7);
+        let (sample, seen) = reservoir_sample(Expansion::new(&m), 100, &mut rng);
+        assert_eq!(seen, 45);
+        assert_eq!(sample.len(), 45);
+        for (i, t) in sample.iter().enumerate() {
+            assert_eq!(t.index, i, "k >= n keeps the full ordered stream");
+        }
+    }
+
+    #[test]
+    fn reservoir_is_deterministic_per_seed() {
+        let m = paper_matrix();
+        let draw = |seed: u64| {
+            let mut rng = crate::util::rng::Rng::new(seed);
+            reservoir_sample(Expansion::new(&m), 10, &mut rng)
+                .0
+                .iter()
+                .map(|t| t.index)
+                .collect::<Vec<_>>()
+        };
+        assert_eq!(draw(42), draw(42), "same seed, same sample");
+        assert_ne!(draw(42), draw(43), "different seed, different sample");
+    }
+
+    #[test]
+    fn reservoir_sample_is_unbiased_across_blocks() {
+        // `--limit` previews are biased to the matrix's first block; the
+        // reservoir must not be. Sample 10 of 1000 across many seeds and
+        // check both halves of the stream are drawn from equally (a
+        // first-block-biased sampler would put everything in the first
+        // half), and that per-element inclusion is ~uniform.
+        let n = 1000usize;
+        let k = 10usize;
+        let trials = 400usize;
+        let mut first_half = 0usize;
+        let mut hits = vec![0usize; n];
+        for seed in 0..trials as u64 {
+            let mut rng = crate::util::rng::Rng::new(seed);
+            let it = (0..n).map(|i| TaskSpec { params: Vec::new(), index: i });
+            let (sample, seen) = reservoir_sample(it, k, &mut rng);
+            assert_eq!(seen, n);
+            assert_eq!(sample.len(), k);
+            let mut idx: Vec<usize> = sample.iter().map(|t| t.index).collect();
+            idx.dedup();
+            assert_eq!(idx.len(), k, "sample must hold distinct elements");
+            for i in idx {
+                hits[i] += 1;
+                if i < n / 2 {
+                    first_half += 1;
+                }
+            }
+        }
+        let total = trials * k;
+        let frac = first_half as f64 / total as f64;
+        assert!(
+            (frac - 0.5).abs() < 0.05,
+            "first-half fraction {frac} — sampler is block-biased"
+        );
+        // Expected hits per element: trials*k/n = 4. Loose 6σ-ish bound.
+        let expect = total as f64 / n as f64;
+        let max = *hits.iter().max().unwrap() as f64;
+        assert!(max < expect * 5.0, "element drawn {max} times vs expected {expect}");
     }
 
     #[test]

@@ -59,8 +59,10 @@ use crate::coordinator::notify::{Notification, NotificationProvider};
 use crate::coordinator::progress::{ProgressReporter, ProgressState};
 use crate::coordinator::results::{ResultSet, TaskOutcome, TaskStatus};
 use crate::coordinator::retry::RetryPolicy;
-use crate::coordinator::run::{EventSink, GatedNotifier, Run, RunEvent, RunSummary};
-use crate::coordinator::scheduler::{ExecBackend, SchedulerOptions, SpecSource, StreamHooks};
+use crate::coordinator::run::{ChannelPolicy, EventSink, GatedNotifier, Run, RunEvent, RunSummary};
+use crate::coordinator::scheduler::{
+    ExecBackend, SchedulerOptions, SpecFilter, SpecSource, StreamHooks,
+};
 use crate::coordinator::task::{task_seed, TaskContext, TaskId, TaskSpec};
 use crate::util::json::Json;
 use crate::util::time::Stopwatch;
@@ -90,6 +92,11 @@ pub struct RunOptions {
     /// Execution tier: in-process threads (default) or isolated worker
     /// processes (see [`crate::ipc`]).
     pub backend: ExecBackend,
+    /// Buffering policy for the [`Run`] event channel. The default is
+    /// unbounded (launch() behavior unchanged); a bounded policy caps
+    /// channel memory, coalescing intermediate progress events under
+    /// pressure and backpressuring terminal ones.
+    pub events: ChannelPolicy,
 }
 
 impl Default for RunOptions {
@@ -103,6 +110,7 @@ impl Default for RunOptions {
             checkpoint_flush_every: 1,
             progress_interval: None,
             backend: ExecBackend::Threads,
+            events: ChannelPolicy::Unbounded,
         }
     }
 }
@@ -174,6 +182,23 @@ impl Memento {
     pub fn worker_args(mut self, args: Vec<String>) -> Self {
         self.worker_args = Some(args);
         self
+    }
+
+    /// Picks the [`Run`] event-channel buffering policy. The default is
+    /// [`ChannelPolicy::Unbounded`] (the original `launch()` semantics).
+    pub fn event_channel(mut self, policy: ChannelPolicy) -> Self {
+        self.options.events = policy;
+        self
+    }
+
+    /// Shorthand for [`Memento::event_channel`] with
+    /// [`ChannelPolicy::Bounded`]: cap the live event buffer at
+    /// `capacity` undelivered events. Terminal events are never dropped
+    /// (their senders block under pressure); intermediate
+    /// `Progress`/`TaskProgress` events are coalesced and counted on
+    /// [`RunSummary::events_coalesced`].
+    pub fn event_capacity(self, capacity: usize) -> Self {
+        self.event_channel(ChannelPolicy::Bounded { capacity: capacity.max(1) })
     }
 
     /// Experiment-code version; changing it invalidates cached results.
@@ -335,7 +360,7 @@ impl Memento {
             ));
         }
 
-        let (sink, rx) = Run::channel();
+        let (sink, rx) = Run::channel(self.options.events);
         let cancel = Arc::new(AtomicBool::new(false));
         let worker = RunWorker {
             exp_fn: Arc::clone(&self.exp_fn),
@@ -447,26 +472,38 @@ impl RunWorker {
             let outcomes = Arc::clone(&outcomes);
             let restored = Arc::clone(&restored);
             let sink = self.sink.clone();
+            let progress = Arc::clone(&progress);
             let progress_event = Arc::clone(&progress_event);
             Arc::new(move |o: TaskOutcome| {
                 restored.fetch_add(1, Ordering::SeqCst);
+                progress.mark_restored();
                 sink.emit(RunEvent::TaskFinished(o.clone()));
                 outcomes.lock().unwrap().push(o);
                 progress_event();
             })
         };
 
-        // The planner: the lazy expansion filtered against the resumed
-        // manifest and the result cache, restoring hits as it scans. It
-        // runs incrementally on the scheduler's pull path, so a restored
-        // task becomes a TaskFinished event without ever entering the
-        // execution queue.
-        // First storage error hit by the lazy planner (it runs inside an
-        // iterator and cannot propagate `?` directly); surfaced after
+        // The planner, split into the two stages `DrainOnceSource` keeps
+        // apart so a resume of a mostly-complete run restores N-way
+        // parallel:
+        //
+        // - the **raw source** is the bare lazy expansion — the only code
+        //   that ever runs under the scheduler/supervisor source mutex;
+        // - the **restore filter** screens each pulled spec against the
+        //   resumed manifest and the result cache (cache probe, checkpoint
+        //   record, restored-outcome delivery — all I/O) on the pulling
+        //   worker's own thread, outside that mutex, merging restored
+        //   outcomes back through `deliver_restored` exactly once.
+        //
+        // A restored task becomes a TaskFinished event without ever
+        // entering the execution queue.
+        let raw_source: SpecSource = Box::new(expand::Expansion::new(self.matrix.clone()));
+        // First storage error hit by the restore filter (it runs inside
+        // the pull path and cannot propagate `?` directly); surfaced after
         // dispatch so checkpoint write failures still fail the run, as
         // the eager pipeline's `ck.record(..)?` did.
         let planner_error: Arc<Mutex<Option<MementoError>>> = Arc::new(Mutex::new(None));
-        let source: SpecSource = {
+        let restore_filter: SpecFilter = {
             let cache = self.cache.clone();
             let checkpoint = self.checkpoint.clone();
             let metrics = Arc::clone(&self.metrics);
@@ -476,53 +513,18 @@ impl RunWorker {
             let resuming = self.resuming;
             let deliver_restored = Arc::clone(&deliver_restored);
             let planner_error = Arc::clone(&planner_error);
-            Box::new(
-                expand::Expansion::new(self.matrix.clone()).filter_map(move |spec| {
-                    let id = spec.id(&version);
-                    // (a) resumed manifest
-                    if resuming {
-                        if let Some(entry) =
-                            checkpoint.as_ref().and_then(|ck| ck.entry(&id))
-                        {
-                            if entry.succeeded() {
-                                metrics.tasks_cached.inc();
-                                deliver_restored(TaskOutcome {
-                                    spec,
-                                    id,
-                                    status: TaskStatus::Success,
-                                    value: entry.value,
-                                    failure: None,
-                                    duration_secs: 0.0,
-                                    from_cache: true,
-                                    attempts: 0,
-                                });
-                                return None;
-                            }
-                            // failed previously -> re-run
-                        }
-                    }
-                    // (b) result cache
-                    if let Some(cache) = &cache {
-                        if let Some(value) = cache.get(&id) {
-                            metrics.cache_hits.inc();
-                            // Also record into the (fresh) checkpoint so a
-                            // later resume sees it without consulting the
-                            // cache.
-                            if let Some(ck) = &checkpoint {
-                                if let Err(e) = ck.record(&id, Some(&value), None, 0.0, 0) {
-                                    let mut slot = planner_error.lock().unwrap();
-                                    slot.get_or_insert(e);
-                                }
-                            }
-                            if let Some(j) = &journal {
-                                j.record(&Event::TaskRestored { id: id.clone() });
-                            }
+            Arc::new(move |spec: TaskSpec| {
+                let id = spec.id(&version);
+                // (a) resumed manifest
+                if resuming {
+                    if let Some(entry) = checkpoint.as_ref().and_then(|ck| ck.entry(&id)) {
+                        if entry.succeeded() {
                             metrics.tasks_cached.inc();
                             deliver_restored(TaskOutcome {
                                 spec,
                                 id,
                                 status: TaskStatus::Success,
-                                value: Some(value),
+                                value: entry.value,
                                 failure: None,
                                 duration_secs: 0.0,
                                 from_cache: true,
@@ -530,18 +532,51 @@ impl RunWorker {
                             });
                             return None;
                         }
-                        metrics.cache_misses.inc();
+                        // failed previously -> re-run
                     }
-                    progress.add_planned(1);
-                    Some(spec)
-                }),
-            )
+                }
+                // (b) result cache
+                if let Some(cache) = &cache {
+                    if let Some(value) = cache.get(&id) {
+                        metrics.cache_hits.inc();
+                        // Also record into the (fresh) checkpoint so a
+                        // later resume sees it without consulting the
+                        // cache.
+                        if let Some(ck) = &checkpoint {
+                            if let Err(e) = ck.record(&id, Some(&value), None, 0.0, 0) {
+                                let mut slot = planner_error.lock().unwrap();
+                                slot.get_or_insert(e);
+                            }
+                        }
+                        if let Some(j) = &journal {
+                            j.record(&Event::TaskRestored { id: id.clone() });
+                        }
+                        metrics.tasks_cached.inc();
+                        deliver_restored(TaskOutcome {
+                            spec,
+                            id,
+                            status: TaskStatus::Success,
+                            value: Some(value),
+                            failure: None,
+                            duration_secs: 0.0,
+                            from_cache: true,
+                            attempts: 0,
+                        });
+                        return None;
+                    }
+                    metrics.cache_misses.inc();
+                }
+                progress.add_planned(1);
+                Some(spec)
+            })
         };
 
-        // Fires once, when the expansion stream is first exhausted: totals
-        // become final, the checkpoint learns them, and the gate releases
-        // `RunStarted` (with exact counts) ahead of any buffered failures.
-        let on_drained: Box<dyn FnOnce() + Send + Sync> = {
+        // Fires once, when the raw expansion is exhausted AND every pulled
+        // spec has cleared the restore filter (the source's outstanding
+        // lease count guarantees the merge): totals become final, the
+        // checkpoint learns them, and the gate releases `RunStarted`
+        // (with exact counts) ahead of any buffered failures.
+        let drained_hook: Box<dyn FnOnce() + Send + Sync> = {
             let progress = Arc::clone(&progress);
             let restored = Arc::clone(&restored);
             let checkpoint = self.checkpoint.clone();
@@ -581,7 +616,7 @@ impl RunWorker {
                     fail_fast: self.options.fail_fast,
                 };
                 let report = crate::coordinator::scheduler::run_stream(
-                    source,
+                    raw_source,
                     &sched,
                     job,
                     StreamHooks {
@@ -592,7 +627,8 @@ impl RunWorker {
                                 skipped_ctr.fetch_add(1, Ordering::SeqCst);
                             })
                         }),
-                        on_source_drained: Some(on_drained),
+                        restore_filter: Some(restore_filter),
+                        on_source_drained: Some(drained_hook),
                         progress: Some(Arc::clone(&progress)),
                         metrics: Some(Arc::clone(&self.metrics)),
                         cancel: Some(Arc::clone(&self.cancel)),
@@ -601,7 +637,8 @@ impl RunWorker {
                 Ok((report.aborted, report.cancelled, report.skipped, report.drain_truncated))
             }
             ExecBackend::Processes { workers, crash_budget } => self.run_processes(
-                source,
+                raw_source,
+                restore_filter,
                 &settings,
                 version.clone(),
                 Arc::clone(&progress),
@@ -609,7 +646,7 @@ impl RunWorker {
                 crash_budget,
                 Arc::clone(&deliver),
                 Arc::clone(&skipped_ctr),
-                on_drained,
+                drained_hook,
                 notifier.clone(),
             ),
         };
@@ -630,6 +667,7 @@ impl RunWorker {
                     from_cache,
                     skipped: skipped_ctr.load(Ordering::SeqCst),
                     wall_secs: wall.elapsed_secs(),
+                    events_coalesced: self.sink.coalesced_count(),
                     aborted: true,
                     cancelled: false,
                 }));
@@ -672,6 +710,8 @@ impl RunWorker {
                 });
             }
         }
+        // All emitting workers are joined by now, so the coalesced count
+        // carried on the terminal event is exact.
         self.sink.emit(RunEvent::RunComplete(RunSummary {
             total,
             succeeded,
@@ -679,6 +719,7 @@ impl RunWorker {
             from_cache,
             skipped: skipped_count,
             wall_secs: wall.elapsed_secs(),
+            events_coalesced: self.sink.coalesced_count(),
             aborted,
             cancelled,
         }));
@@ -699,15 +740,17 @@ impl RunWorker {
     /// Dispatches the spec stream over isolated worker processes (the
     /// [`ExecBackend::Processes`] tier; see [`crate::ipc`]). The
     /// supervisor owns journal/metrics/progress accounting per attempt and
-    /// pulls lazily from the same planner stream the thread backend uses;
-    /// the `record` hook below owns the persistence pipeline (cache,
-    /// checkpoint, failure notification) and feeds every terminal outcome
-    /// into the run's event channel via `deliver`.
+    /// pulls lazily from the same raw expansion + restore filter the
+    /// thread backend uses (the filter runs on its slot threads, outside
+    /// the source mutex); the `record` hook below owns the persistence
+    /// pipeline (cache, checkpoint, failure notification) and feeds every
+    /// terminal outcome into the run's event channel via `deliver`.
     #[cfg(unix)]
     #[allow(clippy::too_many_arguments, clippy::type_complexity)]
     fn run_processes(
         &self,
         source: SpecSource,
+        restore_filter: SpecFilter,
         settings: &std::collections::BTreeMap<String, Json>,
         version: String,
         progress: Arc<ProgressState>,
@@ -715,7 +758,7 @@ impl RunWorker {
         crash_budget: u32,
         deliver: Arc<dyn Fn(TaskOutcome) + Send + Sync>,
         skipped_ctr: Arc<AtomicUsize>,
-        on_drained: Box<dyn FnOnce() + Send + Sync>,
+        drained_hook: Box<dyn FnOnce() + Send + Sync>,
         notifier: Option<Arc<dyn NotificationProvider>>,
     ) -> Result<(bool, bool, usize, bool), MementoError> {
         use crate::ipc::supervisor::{self, SupervisorHooks, SupervisorOptions};
@@ -809,7 +852,8 @@ impl RunWorker {
                 record: Some(record),
                 events: Some(self.sink.clone()),
                 cancel: Some(Arc::clone(&self.cancel)),
-                on_source_drained: Some(on_drained),
+                restore_filter: Some(restore_filter),
+                on_source_drained: Some(drained_hook),
             },
         );
         if let (Some(c), Some(prev)) = (&self.cache, prev_exclusive) {
@@ -832,6 +876,7 @@ impl RunWorker {
     fn run_processes(
         &self,
         _source: SpecSource,
+        _restore_filter: SpecFilter,
         _settings: &std::collections::BTreeMap<String, Json>,
         _version: String,
         _progress: Arc<ProgressState>,
@@ -839,7 +884,7 @@ impl RunWorker {
         _crash_budget: u32,
         _deliver: Arc<dyn Fn(TaskOutcome) + Send + Sync>,
         _skipped_ctr: Arc<AtomicUsize>,
-        _on_drained: Box<dyn FnOnce() + Send + Sync>,
+        _drained_hook: Box<dyn FnOnce() + Send + Sync>,
         _notifier: Option<Arc<dyn NotificationProvider>>,
     ) -> Result<(bool, bool, usize, bool), MementoError> {
         Err(MementoError::ipc(

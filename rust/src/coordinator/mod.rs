@@ -2,7 +2,9 @@
 //!
 //! Pipeline: [`expand`] lazily streams a
 //! [`crate::config::matrix::ConfigMatrix`] into hashed
-//! [`task::TaskSpec`]s; [`scheduler`] pulls them onto a worker pool;
+//! [`task::TaskSpec`]s; [`source`] wraps that stream in the shared
+//! pull/exhaustion/drain state machine both backends consume;
+//! [`scheduler`] pulls them onto a worker pool;
 //! [`cache`] and [`checkpoint`] give re-run avoidance and
 //! crash-resumption; [`retry`], [`notify`], [`metrics`], [`progress`] and
 //! [`results`] round out the reliability/observability story. [`memento`]
@@ -22,4 +24,5 @@ pub mod results;
 pub mod retry;
 pub mod run;
 pub mod scheduler;
+pub mod source;
 pub mod task;

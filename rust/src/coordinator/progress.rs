@@ -25,6 +25,13 @@ pub struct ProgressState {
     /// so the bar still reaches a terminal state (`done + skipped == total`)
     /// without pretending skipped work completed.
     pub skipped: AtomicUsize,
+    /// Tasks restored from cache/checkpoint. Tracked separately from
+    /// `done` (which counts *executed* completions) so restores are
+    /// visible in renders without polluting the execution rate the ETA
+    /// extrapolates from — a resume whose first completions are all
+    /// near-instant restores has no execution evidence yet and must show
+    /// no ETA rather than a garbage one.
+    restored: AtomicUsize,
     planned: AtomicUsize,
     /// False while a streaming expansion may still grow `planned`.
     planning_done: AtomicBool,
@@ -36,6 +43,7 @@ impl ProgressState {
         Arc::new(ProgressState {
             done: AtomicUsize::new(0),
             skipped: AtomicUsize::new(0),
+            restored: AtomicUsize::new(0),
             planned: AtomicUsize::new(total),
             planning_done: AtomicBool::new(true),
             start: Instant::now(),
@@ -48,6 +56,7 @@ impl ProgressState {
         Arc::new(ProgressState {
             done: AtomicUsize::new(0),
             skipped: AtomicUsize::new(0),
+            restored: AtomicUsize::new(0),
             planned: AtomicUsize::new(0),
             planning_done: AtomicBool::new(false),
             start: Instant::now(),
@@ -83,6 +92,18 @@ impl ProgressState {
         self.skipped.fetch_add(1, Ordering::Relaxed);
     }
 
+    /// Records a task restored from cache/checkpoint (never executed).
+    /// Restores render separately and are excluded from the ETA's
+    /// execution rate.
+    pub fn mark_restored(&self) {
+        self.restored.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Tasks restored so far.
+    pub fn restored_count(&self) -> usize {
+        self.restored.load(Ordering::Relaxed)
+    }
+
     pub fn snapshot(&self) -> (usize, usize) {
         (self.done.load(Ordering::Relaxed), self.total())
     }
@@ -97,24 +118,34 @@ impl ProgressState {
         )
     }
 
-    /// Estimated seconds remaining, `None` until at least one completion
-    /// (or while the streaming total is still being discovered).
+    /// Estimated seconds remaining, `None` until at least one **executed**
+    /// task has finished (or while the streaming total is still being
+    /// discovered). Restored tasks are near-instant and carry no
+    /// execution-rate evidence: a resume whose first completions are all
+    /// cache/checkpoint restores must show no ETA instead of
+    /// extrapolating `inf`/garbage from a zero observed rate — the rate
+    /// is additionally guarded to be finite and positive before dividing.
     pub fn eta_secs(&self) -> Option<f64> {
-        let done = self.done.load(Ordering::Relaxed);
+        let executed = self.done.load(Ordering::Relaxed);
         let total = self.total();
-        if done == 0 || total == 0 || !self.planning_complete() {
+        if executed == 0 || total == 0 || !self.planning_complete() {
             return None;
         }
         let elapsed = self.start.elapsed().as_secs_f64();
-        let rate = done as f64 / elapsed;
-        Some(((total.saturating_sub(done)) as f64 / rate).max(0.0))
+        let rate = executed as f64 / elapsed;
+        if !rate.is_finite() || rate <= 0.0 {
+            return None;
+        }
+        Some(((total.saturating_sub(executed)) as f64 / rate).max(0.0))
     }
 
     /// Renders a `[####....] 12/45 (ETA 3.2s)` line; skipped specs append
-    /// a `(k skipped)` marker instead of inflating the done count, and a
-    /// still-streaming total renders with a trailing `+`.
+    /// a `(k skipped)` marker instead of inflating the done count,
+    /// restored tasks append `(k restored)`, and a still-streaming total
+    /// renders with a trailing `+`.
     pub fn render(&self) -> String {
         let (done, skipped, total) = self.snapshot_full();
+        let restored = self.restored_count();
         let width = 24usize;
         let filled = if total == 0 { width } else { (width * done / total).min(width) };
         let bar: String = (0..width).map(|i| if i < filled { '#' } else { '.' }).collect();
@@ -126,7 +157,8 @@ impl ProgressState {
         };
         let plus = if self.planning_complete() { "" } else { "+" };
         let skip = if skipped > 0 { format!(" ({skipped} skipped)") } else { String::new() };
-        format!("[{bar}] {done}/{total}{plus}{skip}{eta}")
+        let rest = if restored > 0 { format!(" ({restored} restored)") } else { String::new() };
+        format!("[{bar}] {done}/{total}{plus}{rest}{skip}{eta}")
     }
 }
 
@@ -245,6 +277,36 @@ mod tests {
         assert!(!r.contains("4+"), "{r}");
         std::thread::sleep(Duration::from_millis(2));
         assert!(p.eta_secs().is_some());
+    }
+
+    #[test]
+    fn eta_is_none_while_only_restores_have_completed() {
+        // Regression: a resume whose first completions are all
+        // cache/checkpoint restores has zero executed-task rate. The old
+        // formula divided by the observed rate; the ETA must stay None
+        // until at least one *executed* task has finished, however many
+        // restores have landed.
+        let p = ProgressState::streaming();
+        p.add_planned(10);
+        p.finish_planning();
+        for _ in 0..1000 {
+            p.mark_restored();
+        }
+        std::thread::sleep(Duration::from_millis(2));
+        assert_eq!(p.restored_count(), 1000);
+        assert!(
+            p.eta_secs().is_none(),
+            "restores alone must not produce an ETA"
+        );
+        let r = p.render();
+        assert!(r.contains("(1000 restored)"), "{r}");
+        assert!(!r.contains("ETA"), "{r}");
+        assert!(!r.contains("inf"), "garbage ETA leaked into render: {r}");
+        // One executed completion unlocks a finite ETA.
+        p.mark_done();
+        std::thread::sleep(Duration::from_millis(2));
+        let eta = p.eta_secs().expect("executed completion yields an ETA");
+        assert!(eta.is_finite() && eta >= 0.0, "eta={eta}");
     }
 
     #[test]

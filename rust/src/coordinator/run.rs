@@ -15,21 +15,59 @@
 //! ```
 //!
 //! `Memento::run()` is preserved verbatim as `launch().collect()`;
-//! `Run::cancel()` stops a run mid-flight (in-flight tasks finish, nothing
-//! new is dispatched, `collect()` returns the partial [`ResultSet`]).
+//! `Run::cancel()` stops a run mid-flight (nothing new is dispatched and
+//! `collect()` returns the partial [`ResultSet`]; thread-backend in-flight
+//! tasks finish and are kept, process-backend in-flight attempts are
+//! interrupted — their workers are shut down and the interruption
+//! journaled — so cancel latency is bounded by a heartbeat, not an
+//! attempt).
 //!
-//! Events are sent on an unbounded channel and never block the executing
-//! workers; a caller that only wants the final result can ignore them
-//! entirely ([`Run::collect`] drains the channel for free).
+//! # Event-channel backpressure
+//!
+//! By default ([`ChannelPolicy::Unbounded`]) events ride an unbounded
+//! channel and never block the executing workers — but a caller that
+//! holds a `Run` without draining it buffers every outcome twice, which
+//! on a 10⁷-task run is an OOM. [`ChannelPolicy::Bounded`] (via
+//! `Memento::event_capacity`) caps the channel instead: **terminal
+//! events** (`TaskFinished`, `WorkerCrashed`, `RunComplete`, plus
+//! `TaskStarted`) are *never dropped* — under pressure their senders
+//! block until the consumer catches up (true backpressure) — while
+//! intermediate `Progress`/`TaskProgress` events are *coalesced*: a full
+//! buffer drops them and counts the drop, and because their payloads are
+//! cumulative counters the next one delivered carries the same
+//! information. The coalesced-drop count is surfaced on
+//! [`RunSummary::events_coalesced`].
 
 use crate::coordinator::error::MementoError;
 use crate::coordinator::notify::{Notification, NotificationProvider};
 use crate::coordinator::results::{ResultSet, TaskOutcome};
 use crate::coordinator::task::TaskId;
 use crate::util::json::Json;
-use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::mpsc::{Receiver, Sender, TryRecvError};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::mpsc::{Receiver, Sender, SyncSender, TryRecvError, TrySendError};
 use std::sync::{Arc, Mutex};
+
+/// Buffering policy for a run's live event channel.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ChannelPolicy {
+    /// Unbounded buffering (the default; `launch()` behavior is
+    /// unchanged): sends never block and nothing is ever dropped, at the
+    /// cost of unbounded memory if the caller never drains.
+    Unbounded,
+    /// At most `capacity` undelivered events. Terminal events block their
+    /// sender when full (backpressure); intermediate `Progress` /
+    /// `TaskProgress` events are coalesced (dropped + counted) instead.
+    Bounded {
+        /// Maximum undelivered events held by the channel (min 1).
+        capacity: usize,
+    },
+}
+
+impl Default for ChannelPolicy {
+    fn default() -> Self {
+        ChannelPolicy::Unbounded
+    }
+}
 
 /// One observable transition of a live run.
 #[derive(Debug, Clone)]
@@ -74,6 +112,10 @@ pub struct RunSummary {
     pub from_cache: usize,
     pub skipped: usize,
     pub wall_secs: f64,
+    /// Intermediate `Progress`/`TaskProgress` events coalesced (dropped
+    /// under pressure) by a bounded event channel. Always 0 with the
+    /// default unbounded policy; terminal events are never dropped.
+    pub events_coalesced: usize,
     /// True when fail-fast stopped the run early.
     pub aborted: bool,
     /// True when [`Run::cancel`] stopped the run early.
@@ -128,6 +170,7 @@ impl RunEvent {
                 ("from_cache", Json::int(s.from_cache as i64)),
                 ("skipped", Json::int(s.skipped as i64)),
                 ("wall_secs", Json::Num(s.wall_secs)),
+                ("events_coalesced", Json::int(s.events_coalesced as i64)),
                 ("aborted", Json::Bool(s.aborted)),
                 ("cancelled", Json::Bool(s.cancelled)),
             ]),
@@ -135,26 +178,74 @@ impl RunEvent {
     }
 }
 
-/// Shared event publisher: cloneable, never blocks the run (unbounded
-/// channel), silently drops events once the receiver is gone (a caller
-/// that dropped its `Run` mid-stream must not wedge the workers).
+/// Shared event publisher: cloneable, silently drops events once the
+/// receiver is gone (a caller that dropped its `Run` mid-stream must not
+/// wedge the workers).
+///
+/// Behavior under [`ChannelPolicy::Bounded`]: terminal events block the
+/// emitting worker while the buffer is full (backpressure — they are
+/// never dropped), intermediate `Progress`/`TaskProgress` events are
+/// coalesced instead (dropped and counted in `coalesced`; their cumulative
+/// payloads make the next delivered one equivalent). Channel memory is
+/// therefore capped regardless of how slowly the `Run` is drained.
 ///
 /// The sender is mutex-wrapped so the sink is `Sync` on every supported
-/// toolchain (`mpsc::Sender` itself only became `Sync` in recent Rust);
-/// sends are tiny, so the lock is uncontended in practice.
+/// toolchain (`mpsc::Sender` itself only became `Sync` in recent Rust).
+/// Each clone wraps its own mutex, so a clone blocked on a full bounded
+/// channel only serializes emitters sharing that clone.
 pub struct EventSink {
-    tx: Mutex<Sender<RunEvent>>,
+    tx: Mutex<SenderKind>,
+    /// Shared across clones: intermediate events dropped under pressure.
+    coalesced: Arc<AtomicUsize>,
+}
+
+#[derive(Clone)]
+enum SenderKind {
+    Unbounded(Sender<RunEvent>),
+    Bounded(SyncSender<RunEvent>),
 }
 
 impl Clone for EventSink {
     fn clone(&self) -> Self {
-        EventSink { tx: Mutex::new(self.tx.lock().unwrap().clone()) }
+        EventSink {
+            tx: Mutex::new(self.tx.lock().unwrap().clone()),
+            coalesced: Arc::clone(&self.coalesced),
+        }
     }
+}
+
+/// True for events a bounded channel may coalesce under pressure: their
+/// payloads are cumulative counters, so dropping one loses nothing the
+/// next delivered event doesn't carry.
+fn coalescable(event: &RunEvent) -> bool {
+    matches!(event, RunEvent::Progress { .. } | RunEvent::TaskProgress { .. })
 }
 
 impl EventSink {
     pub fn emit(&self, event: RunEvent) {
-        let _ = self.tx.lock().unwrap().send(event);
+        let tx = self.tx.lock().unwrap();
+        match &*tx {
+            SenderKind::Unbounded(s) => {
+                let _ = s.send(event);
+            }
+            SenderKind::Bounded(s) => {
+                if coalescable(&event) {
+                    if let Err(TrySendError::Full(_)) = s.try_send(event) {
+                        self.coalesced.fetch_add(1, Ordering::SeqCst);
+                    }
+                } else {
+                    // Terminal event: block until the consumer makes room
+                    // (Err means the receiver is gone — drop silently).
+                    let _ = s.send(event);
+                }
+            }
+        }
+    }
+
+    /// Intermediate events coalesced so far (0 under the unbounded
+    /// policy). Exact once all emitting workers have finished.
+    pub fn coalesced_count(&self) -> usize {
+        self.coalesced.load(Ordering::SeqCst)
     }
 }
 
@@ -181,15 +272,35 @@ impl Run {
         Run { rx, cancel, handle: Some(handle) }
     }
 
-    /// Creates the channel half used by the run thread.
-    pub(crate) fn channel() -> (EventSink, Receiver<RunEvent>) {
-        let (tx, rx) = std::sync::mpsc::channel();
-        (EventSink { tx: Mutex::new(tx) }, rx)
+    /// Creates the channel half used by the run thread, under the given
+    /// buffering policy.
+    pub(crate) fn channel(policy: ChannelPolicy) -> (EventSink, Receiver<RunEvent>) {
+        let (kind, rx) = match policy {
+            ChannelPolicy::Unbounded => {
+                let (tx, rx) = std::sync::mpsc::channel();
+                (SenderKind::Unbounded(tx), rx)
+            }
+            ChannelPolicy::Bounded { capacity } => {
+                let (tx, rx) = std::sync::mpsc::sync_channel(capacity.max(1));
+                (SenderKind::Bounded(tx), rx)
+            }
+        };
+        (
+            EventSink {
+                tx: Mutex::new(kind),
+                coalesced: Arc::new(AtomicUsize::new(0)),
+            },
+            rx,
+        )
     }
 
-    /// Requests a mid-flight stop: nothing new is dispatched, in-flight
-    /// tasks finish and are kept, the expansion stream is not consumed
-    /// further. `collect()` then returns the partial result set promptly.
+    /// Requests a mid-flight stop: nothing new is dispatched and the
+    /// expansion stream is not consumed further. On the thread backend
+    /// in-flight tasks finish and are kept; on the process backend busy
+    /// workers are shut down (then killed) and their in-flight attempt is
+    /// journaled as interrupted, bounding cancel latency by roughly one
+    /// heartbeat instead of one attempt. `collect()` then returns the
+    /// partial result set promptly.
     pub fn cancel(&self) {
         self.cancel.store(true, Ordering::SeqCst);
     }
@@ -384,6 +495,60 @@ mod tests {
         assert_eq!(mem.count(), 0);
         gate.flush();
         assert_eq!(mem.count(), 1);
+    }
+
+    fn progress_event(finished: usize) -> RunEvent {
+        RunEvent::Progress {
+            finished,
+            restored: 0,
+            skipped: 0,
+            planned: finished,
+            planning_complete: false,
+        }
+    }
+
+    #[test]
+    fn unbounded_sink_never_drops_or_counts() {
+        let (sink, rx) = Run::channel(ChannelPolicy::Unbounded);
+        for i in 0..100 {
+            sink.emit(progress_event(i));
+        }
+        drop(sink);
+        assert_eq!(rx.iter().count(), 100);
+    }
+
+    #[test]
+    fn bounded_sink_coalesces_progress_and_blocks_terminal() {
+        let (sink, rx) = Run::channel(ChannelPolicy::Bounded { capacity: 1 });
+        // Fill the single-slot buffer with a terminal event.
+        sink.emit(RunEvent::WorkerCrashed { slot: 0, message: "x".into() });
+        // Intermediate events under pressure are coalesced, not delivered.
+        sink.emit(progress_event(1));
+        sink.emit(progress_event(2));
+        assert_eq!(sink.coalesced_count(), 2);
+        // A terminal event blocks its sender until the consumer drains.
+        let s2 = sink.clone();
+        let t = std::thread::spawn(move || {
+            s2.emit(RunEvent::RunComplete(RunSummary::default()));
+        });
+        std::thread::sleep(std::time::Duration::from_millis(30));
+        assert!(!t.is_finished(), "terminal send must backpressure while full");
+        assert!(matches!(rx.recv().unwrap(), RunEvent::WorkerCrashed { .. }));
+        t.join().unwrap();
+        assert!(matches!(rx.recv().unwrap(), RunEvent::RunComplete(_)));
+        // Room again: intermediate events flow and the count stays put.
+        sink.emit(progress_event(3));
+        assert!(matches!(rx.recv().unwrap(), RunEvent::Progress { .. }));
+        assert_eq!(sink.coalesced_count(), 2);
+    }
+
+    #[test]
+    fn bounded_sink_drops_silently_when_receiver_gone() {
+        let (sink, rx) = Run::channel(ChannelPolicy::Bounded { capacity: 2 });
+        drop(rx);
+        // Neither blocks nor panics once the Run is gone.
+        sink.emit(RunEvent::RunComplete(RunSummary::default()));
+        sink.emit(progress_event(1));
     }
 
     #[test]

@@ -49,12 +49,18 @@
 use crate::coordinator::metrics::RunMetrics;
 use crate::coordinator::progress::ProgressState;
 use crate::coordinator::results::{TaskOutcome, TaskStatus};
+use crate::coordinator::source::DrainOnceSource;
 use crate::coordinator::task::TaskSpec;
 use crate::util::pool::ThreadPool;
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc, Mutex};
 use std::time::Instant;
+
+// The lazy-source vocabulary lives in [`crate::coordinator::source`]; these
+// re-exports keep the scheduler the conventional import site for callers
+// that only speak scheduler types.
+pub use crate::coordinator::source::{SpecFilter, SpecSource, ABORT_DRAIN_LIMIT};
 
 /// Which execution tier runs the tasks.
 ///
@@ -132,22 +138,10 @@ pub struct ScheduleReport {
 /// The executing closure: spec in, terminal outcome out.
 pub type Job = Arc<dyn Fn(&TaskSpec) -> TaskOutcome + Send + Sync>;
 
-/// A lazy, possibly astronomically large stream of task specs. The
-/// scheduler never materializes it — at most `workers ×`
-/// [`STREAM_MAX_CHUNK`] specs are in flight at once.
-pub type SpecSource = Box<dyn Iterator<Item = TaskSpec> + Send>;
-
 /// Largest granule a worker pulls from the source in one lock
 /// acquisition. Granules ramp 1 → 2 → 4 → … → this cap per worker, so the
 /// first outcome is dispatched after a single pull of one spec.
 pub const STREAM_MAX_CHUNK: usize = 64;
-
-/// Upper bound on how many un-started specs a fail-fast abort will drain
-/// out of the source for skip accounting. Bounded so an abort returns
-/// promptly even on a 10¹²-combination matrix: beyond the limit the
-/// remainder is left un-enumerated and reported via
-/// [`StreamReport::drain_truncated`].
-pub const ABORT_DRAIN_LIMIT: usize = 100_000;
 
 /// Streaming callbacks for [`run_stream`]. Everything is optional; a bare
 /// `StreamHooks::default()` runs the stream for its side effects only.
@@ -159,9 +153,16 @@ pub struct StreamHooks {
     pub on_outcome: Option<Arc<dyn Fn(TaskOutcome) + Send + Sync>>,
     /// Receives every spec abandoned after a fail-fast abort.
     pub on_skip: Option<Arc<dyn Fn(TaskSpec) + Send + Sync>>,
-    /// Fires exactly once, when the source iterator is first exhausted
-    /// (also during the post-abort drain). The streaming run layer uses it
-    /// to finalize totals and release the `RunStarted` notification.
+    /// The planner's restore stage: maps each raw spec to `Some` (still
+    /// pending) or `None` (restored from cache/checkpoint, delivered out
+    /// of band). Runs on the pulling worker's thread **outside** the
+    /// source mutex — see [`DrainOnceSource`] — so restores parallelize
+    /// across workers.
+    pub restore_filter: Option<SpecFilter>,
+    /// Fires exactly once, when the source iterator is exhausted and all
+    /// pulled specs have cleared the restore filter (also during the
+    /// post-abort drain). The streaming run layer uses it to finalize
+    /// totals and release the `RunStarted` notification.
     pub on_source_drained: Option<Box<dyn FnOnce() + Send + Sync>>,
     pub progress: Option<Arc<ProgressState>>,
     pub metrics: Option<Arc<RunMetrics>>,
@@ -189,15 +190,9 @@ pub struct StreamReport {
     pub stats: DispatchStats,
 }
 
-struct SourceState {
-    it: SpecSource,
-    exhausted: bool,
-    on_drained: Option<Box<dyn FnOnce() + Send + Sync>>,
-}
-
 /// Everything a pull-loop worker needs, shared once.
 struct StreamCtx {
-    source: Mutex<SourceState>,
+    source: DrainOnceSource,
     job: Job,
     abort: AtomicBool,
     fail_fast: bool,
@@ -225,37 +220,6 @@ impl StreamCtx {
         self.abort.load(Ordering::SeqCst) || self.cancelled()
     }
 
-    /// Pulls up to `granule` specs; fires `on_drained` (outside the lock)
-    /// the first time the iterator runs dry.
-    fn pull(&self, granule: usize) -> Vec<TaskSpec> {
-        let mut chunk = Vec::new();
-        let drained = {
-            let mut src = self.source.lock().unwrap();
-            if src.exhausted {
-                return chunk;
-            }
-            chunk.reserve(granule);
-            while chunk.len() < granule {
-                match src.it.next() {
-                    Some(s) => chunk.push(s),
-                    None => {
-                        src.exhausted = true;
-                        break;
-                    }
-                }
-            }
-            if src.exhausted {
-                src.on_drained.take()
-            } else {
-                None
-            }
-        };
-        if let Some(cb) = drained {
-            cb();
-        }
-        chunk
-    }
-
     fn skip(&self, spec: TaskSpec) {
         self.skipped.fetch_add(1, Ordering::SeqCst);
         if let Some(p) = &self.progress {
@@ -275,7 +239,7 @@ fn stream_worker(ctx: &StreamCtx) {
             return;
         }
         let pulled_at = Instant::now();
-        let chunk = ctx.pull(granule);
+        let chunk = ctx.source.pull(granule);
         if chunk.is_empty() {
             return;
         }
@@ -292,8 +256,9 @@ fn stream_worker(ctx: &StreamCtx) {
             if !sampled {
                 sampled = true;
                 // One dispatch-cost sample per chunk that executes work
-                // (lock acquisition + lazy-expansion pull); skipped specs
-                // stay out of the timer.
+                // (lock acquisition + lazy-expansion pull + this worker's
+                // share of restore filtering); skipped specs stay out of
+                // the timer.
                 if let Some(m) = &ctx.metrics {
                     m.dispatch_overhead.record(pulled_at.elapsed());
                 }
@@ -347,11 +312,7 @@ pub fn run_stream(
     let workers = opts.workers.max(1);
     let metrics = hooks.metrics.clone();
     let ctx = Arc::new(StreamCtx {
-        source: Mutex::new(SourceState {
-            it: source,
-            exhausted: false,
-            on_drained: hooks.on_source_drained,
-        }),
+        source: DrainOnceSource::new(source, hooks.restore_filter, hooks.on_source_drained),
         job,
         abort: AtomicBool::new(false),
         fail_fast: opts.fail_fast,
@@ -385,28 +346,15 @@ pub fn run_stream(
     if aborted && !cancelled {
         // Account for the work the abort left behind: drain the rest of
         // the source as skipped specs so every included task is either an
-        // outcome or a skip — but only up to ABORT_DRAIN_LIMIT, so a
-        // fail-fast abort returns promptly even on an astronomically
-        // large matrix (the remainder stays un-enumerated and is flagged
-        // as truncated). Cancelled runs skip the drain entirely.
-        let mut drained = 0usize;
-        loop {
-            if ctx.cancelled() {
-                break;
-            }
-            if drained >= ABORT_DRAIN_LIMIT {
-                drain_truncated = !ctx.source.lock().unwrap().exhausted;
-                break;
-            }
-            let chunk = ctx.pull(STREAM_MAX_CHUNK.min(ABORT_DRAIN_LIMIT - drained));
-            if chunk.is_empty() {
-                break;
-            }
-            drained += chunk.len();
-            for spec in chunk {
-                ctx.skip(spec);
-            }
-        }
+        // outcome or a skip. The drain is bounded by ABORT_DRAIN_LIMIT
+        // (fail-fast must return promptly even on an astronomically large
+        // matrix; the remainder stays un-enumerated and is flagged as
+        // truncated) and restorable specs still restore through the
+        // filter. Cancelled runs skip the drain entirely.
+        let report = ctx
+            .source
+            .drain(ABORT_DRAIN_LIMIT, &mut |spec| ctx.skip(spec), &|| ctx.cancelled());
+        drain_truncated = report.truncated;
     }
 
     let stats = DispatchStats {

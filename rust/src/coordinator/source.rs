@@ -1,0 +1,568 @@
+//! The shared lazy-spec-source state machine: [`DrainOnceSource`].
+//!
+//! Both execution backends consume the planner's lazy spec stream through
+//! the same protocol: pull specs on demand behind one mutex, notice
+//! exhaustion exactly once, fire a one-shot completion hook when the
+//! stream (and any in-flight filtering) is truly done, and — after a
+//! fail-fast abort — drain the un-started remainder for skip accounting,
+//! bounded so an abort returns promptly on an astronomically large matrix.
+//!
+//! Before this module existed, that state machine was hand-duplicated in
+//! `scheduler::SourceState` and the supervisor's `SrcState`/`pop_source` —
+//! a fire-once invariant maintained twice is a latent double-drain bug.
+//! `DrainOnceSource` is now the single place the exhausted latch, the
+//! `on_drained` hook, and the bounded drain live; the scheduler and the
+//! IPC supervisor are thin consumers.
+//!
+//! # The restore filter (why `outstanding` exists)
+//!
+//! The planner's restore stage (cache probe + checkpoint record for
+//! already-completed tasks) is I/O. Running it inside the source mutex —
+//! as the first streaming implementation did by fusing it into the
+//! iterator — serializes restores: a resume of a mostly-complete run
+//! restores single-threaded no matter how many workers pull. The source
+//! therefore takes the filter as a separate stage: the mutex protects
+//! **raw expansion only**, and each puller runs the filter on its own
+//! specs *outside* the lock, so N workers restore N-way parallel.
+//!
+//! Splitting the stages reopens a race the fused design never had: the
+//! iterator can run dry while another worker is still mid-filter, and
+//! firing `on_drained` at that moment would publish non-final totals
+//! (checkpoint `set_total`, the `RunStarted` notification gate). The
+//! source closes it with an `outstanding` lease count — raw specs handed
+//! out minus specs whose filter stage completed — and fires the hook only
+//! once `exhausted && outstanding == 0`, i.e. when every result has been
+//! merged back, exactly once.
+
+use crate::coordinator::task::TaskSpec;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// A lazy, possibly astronomically large stream of task specs. Consumers
+/// never materialize it.
+pub type SpecSource = Box<dyn Iterator<Item = TaskSpec> + Send>;
+
+/// The unlocked restore stage: maps a raw spec to `Some(spec)` when it
+/// still needs executing, or `None` when the filter consumed it (restored
+/// from cache/checkpoint and delivered through its own side channel).
+/// Runs on the pulling worker's thread, **outside** the source mutex, so
+/// its cache/checkpoint I/O parallelizes across pullers.
+pub type SpecFilter = Arc<dyn Fn(TaskSpec) -> Option<TaskSpec> + Send + Sync>;
+
+/// Fired exactly once, when the source is exhausted *and* every pulled
+/// spec has cleared the restore filter (totals are final).
+pub type DrainedHook = Box<dyn FnOnce() + Send + Sync>;
+
+/// Upper bound on how many raw specs a post-abort [`DrainOnceSource::drain`]
+/// will enumerate for skip accounting. Bounded so an abort returns
+/// promptly even on a 10¹²-combination matrix: beyond the limit the
+/// remainder is left un-enumerated and reported via
+/// [`DrainReport::truncated`].
+pub const ABORT_DRAIN_LIMIT: usize = 100_000;
+
+/// Largest granule [`DrainOnceSource::drain`] pulls per lock acquisition.
+const DRAIN_CHUNK: usize = 64;
+
+struct Inner {
+    it: SpecSource,
+    exhausted: bool,
+    on_drained: Option<DrainedHook>,
+}
+
+/// What a bounded [`DrainOnceSource::drain`] accomplished.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct DrainReport {
+    /// Specs handed to the `each` callback (post-filter).
+    pub skipped: usize,
+    /// True when the drain hit its limit with the source still not
+    /// exhausted: `skipped` is then a lower bound on the remainder.
+    pub truncated: bool,
+}
+
+/// A lazy spec source with a fire-once exhaustion hook, an optional
+/// unlocked restore filter, and a once-only bounded abort drain.
+///
+/// Guarantees, by construction:
+/// 1. every raw spec is handed to exactly one puller (the mutex);
+/// 2. `on_drained` fires exactly once, only after the iterator is dry
+///    *and* all handed-out specs have cleared the filter stage;
+/// 3. the filter runs outside the mutex — concurrent pullers filter
+///    their own specs in parallel;
+/// 4. [`DrainOnceSource::drain`] runs at most once per source, bounded
+///    by its limit (re-entry is a no-op, so callers re-entering a drain
+///    path cannot multiply the bound).
+pub struct DrainOnceSource {
+    inner: Mutex<Inner>,
+    filter: Option<SpecFilter>,
+    /// Raw specs handed out whose filter stage has not completed yet.
+    /// Always 0 when no filter is installed.
+    outstanding: AtomicUsize,
+    /// Lock-free mirror of `Inner::exhausted`.
+    exhausted: AtomicBool,
+    /// Latch: the bounded abort drain runs at most once.
+    drain_used: AtomicBool,
+}
+
+impl DrainOnceSource {
+    pub fn new(
+        source: SpecSource,
+        filter: Option<SpecFilter>,
+        on_drained: Option<DrainedHook>,
+    ) -> DrainOnceSource {
+        DrainOnceSource {
+            inner: Mutex::new(Inner { it: source, exhausted: false, on_drained }),
+            filter,
+            outstanding: AtomicUsize::new(0),
+            exhausted: AtomicBool::new(false),
+            drain_used: AtomicBool::new(false),
+        }
+    }
+
+    /// True once the underlying iterator has been seen to run dry. Note
+    /// that filters may still be in flight; use `on_drained` for the
+    /// "totals are final" moment.
+    pub fn is_exhausted(&self) -> bool {
+        self.exhausted.load(Ordering::SeqCst)
+    }
+
+    /// Pulls up to `granule` raw specs under the lock, marking exhaustion
+    /// and taking out filter leases while still holding it (so `exhausted
+    /// && outstanding == 0` can never be observed with specs in limbo).
+    fn pull_raw(&self, granule: usize) -> Vec<TaskSpec> {
+        let mut chunk = Vec::new();
+        let mut src = self.inner.lock().unwrap();
+        if src.exhausted {
+            return chunk;
+        }
+        chunk.reserve(granule);
+        while chunk.len() < granule {
+            match src.it.next() {
+                Some(s) => chunk.push(s),
+                None => {
+                    src.exhausted = true;
+                    self.exhausted.store(true, Ordering::SeqCst);
+                    break;
+                }
+            }
+        }
+        if self.filter.is_some() {
+            self.outstanding.fetch_add(chunk.len(), Ordering::SeqCst);
+        }
+        chunk
+    }
+
+    /// Marks `n` pulled specs as having cleared the filter stage.
+    fn settle(&self, n: usize) {
+        if n > 0 {
+            self.outstanding.fetch_sub(n, Ordering::SeqCst);
+        }
+    }
+
+    /// Fires `on_drained` if (and only if) the stream is finished: the
+    /// iterator dry and no filter work in flight. Safe to call
+    /// opportunistically — the hook is a fire-once `Option::take` under
+    /// the lock, and the callback itself runs outside it.
+    fn maybe_fire(&self) {
+        if !self.exhausted.load(Ordering::SeqCst)
+            || self.outstanding.load(Ordering::SeqCst) != 0
+        {
+            return;
+        }
+        let hook = {
+            let mut src = self.inner.lock().unwrap();
+            // Re-check under the lock: a racing puller may have taken new
+            // leases between the fast-path check and here (it cannot —
+            // exhausted sources hand out nothing — but a racing *settle*
+            // on another thread is what this serializes with).
+            if self.outstanding.load(Ordering::SeqCst) != 0 {
+                None
+            } else {
+                src.on_drained.take()
+            }
+        };
+        if let Some(hook) = hook {
+            hook();
+        }
+    }
+
+    /// Pulls up to `granule` pending specs: raw expansion under the lock,
+    /// restore filtering outside it. Keeps pulling while entire granules
+    /// are consumed by the filter (a resume over a mostly-complete run),
+    /// so a non-empty return always carries executable work. Returns empty
+    /// exactly when the source is exhausted.
+    pub fn pull(&self, granule: usize) -> Vec<TaskSpec> {
+        let granule = granule.max(1);
+        loop {
+            let raw = self.pull_raw(granule);
+            if raw.is_empty() {
+                self.maybe_fire();
+                return raw;
+            }
+            match &self.filter {
+                None => {
+                    self.maybe_fire();
+                    return raw;
+                }
+                Some(f) => {
+                    let mut pending = Vec::with_capacity(raw.len());
+                    for spec in raw {
+                        if let Some(s) = f(spec) {
+                            pending.push(s);
+                        }
+                        self.settle(1);
+                    }
+                    self.maybe_fire();
+                    if !pending.is_empty() {
+                        return pending;
+                    }
+                    // Whole granule restored; pull again for real work.
+                }
+            }
+        }
+    }
+
+    /// Pulls one pending spec (the process-backend dispatch shape).
+    /// `None` exactly when the source is exhausted.
+    pub fn pop(&self) -> Option<TaskSpec> {
+        self.pull(1).into_iter().next()
+    }
+
+    /// The once-only bounded abort drain: enumerates the un-started
+    /// remainder (up to `limit` **raw** specs) for skip accounting,
+    /// passing each still-pending spec to `each`. Restorable specs still
+    /// restore through the filter, exactly as they would have on the live
+    /// path. `cancelled` is polled between specs so a cancel stops the
+    /// drain immediately.
+    ///
+    /// A second call is a no-op (`drain_used` latch): abort paths that are
+    /// re-entered per worker/slot cannot multiply the bound.
+    pub fn drain(
+        &self,
+        limit: usize,
+        each: &mut dyn FnMut(TaskSpec),
+        cancelled: &dyn Fn() -> bool,
+    ) -> DrainReport {
+        if self.drain_used.swap(true, Ordering::SeqCst) {
+            return DrainReport::default();
+        }
+        let mut report = DrainReport::default();
+        let mut raw_seen = 0usize;
+        'outer: while !cancelled() {
+            if raw_seen >= limit {
+                report.truncated = !self.is_exhausted();
+                break;
+            }
+            let raw = self.pull_raw(DRAIN_CHUNK.min(limit - raw_seen));
+            if raw.is_empty() {
+                break;
+            }
+            raw_seen += raw.len();
+            let mut chunk = raw.into_iter();
+            while let Some(spec) = chunk.next() {
+                let pending = match &self.filter {
+                    None => Some(spec),
+                    Some(f) => {
+                        let kept = f(spec);
+                        self.settle(1);
+                        kept
+                    }
+                };
+                if let Some(s) = pending {
+                    report.skipped += 1;
+                    each(s);
+                }
+                if cancelled() {
+                    // Cancel forfeits the rest of this chunk's accounting,
+                    // but the leases must still be released — a leaked
+                    // lease would starve the fire-once hook forever.
+                    if self.filter.is_some() {
+                        self.settle(chunk.len());
+                    }
+                    break 'outer;
+                }
+            }
+        }
+        self.maybe_fire();
+        report
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::value::pv_int;
+    use std::sync::atomic::AtomicUsize;
+    use std::sync::Arc;
+
+    fn specs(n: usize) -> SpecSource {
+        Box::new((0..n).map(|i| TaskSpec {
+            params: vec![("i".to_string(), pv_int(i as i64))],
+            index: i,
+        }))
+    }
+
+    fn counter_hook(fired: &Arc<AtomicUsize>) -> DrainedHook {
+        let fired = Arc::clone(fired);
+        Box::new(move || {
+            fired.fetch_add(1, Ordering::SeqCst);
+        })
+    }
+
+    #[test]
+    fn pull_hands_out_every_spec_once_and_fires_once() {
+        let fired = Arc::new(AtomicUsize::new(0));
+        let src = DrainOnceSource::new(specs(100), None, Some(counter_hook(&fired)));
+        let mut seen = Vec::new();
+        loop {
+            let chunk = src.pull(7);
+            if chunk.is_empty() {
+                break;
+            }
+            seen.extend(chunk.into_iter().map(|s| s.index));
+        }
+        seen.sort_unstable();
+        assert_eq!(seen, (0..100).collect::<Vec<_>>());
+        assert_eq!(fired.load(Ordering::SeqCst), 1);
+        assert!(src.is_exhausted());
+        // Further pulls stay empty and never re-fire.
+        assert!(src.pull(8).is_empty());
+        assert_eq!(fired.load(Ordering::SeqCst), 1);
+    }
+
+    #[test]
+    fn filter_runs_outside_the_lock_and_consumes_specs() {
+        // Filter restores every even spec; pull must only return odd ones
+        // and still account for everything.
+        let restored = Arc::new(AtomicUsize::new(0));
+        let r2 = Arc::clone(&restored);
+        let filter: SpecFilter = Arc::new(move |s: TaskSpec| {
+            if s.index % 2 == 0 {
+                r2.fetch_add(1, Ordering::SeqCst);
+                None
+            } else {
+                Some(s)
+            }
+        });
+        let fired = Arc::new(AtomicUsize::new(0));
+        let src = DrainOnceSource::new(specs(50), Some(filter), Some(counter_hook(&fired)));
+        let mut pending = 0usize;
+        while let Some(s) = src.pop() {
+            assert_eq!(s.index % 2, 1);
+            pending += 1;
+        }
+        assert_eq!(pending, 25);
+        assert_eq!(restored.load(Ordering::SeqCst), 25);
+        assert_eq!(fired.load(Ordering::SeqCst), 1);
+    }
+
+    #[test]
+    fn all_restored_source_pulls_to_exhaustion_not_livelock() {
+        let filter: SpecFilter = Arc::new(|_s: TaskSpec| None);
+        let fired = Arc::new(AtomicUsize::new(0));
+        let src = DrainOnceSource::new(specs(500), Some(filter), Some(counter_hook(&fired)));
+        assert!(src.pull(16).is_empty(), "everything restored");
+        assert_eq!(fired.load(Ordering::SeqCst), 1);
+    }
+
+    #[test]
+    fn on_drained_waits_for_in_flight_filters() {
+        // Worker A holds a spec in its filter while worker B exhausts the
+        // source; the hook must not fire until A settles.
+        use std::sync::mpsc;
+        let (enter_tx, enter_rx) = mpsc::channel::<()>();
+        let (release_tx, release_rx) = mpsc::channel::<()>();
+        // Mutex-wrapped so the filter is Sync on every supported toolchain
+        // (mpsc endpoints only became Sync in recent Rust).
+        let enter_tx = std::sync::Mutex::new(enter_tx);
+        let release_rx = std::sync::Mutex::new(release_rx);
+        let filter: SpecFilter = Arc::new(move |s: TaskSpec| {
+            if s.index == 0 {
+                let _ = enter_tx.lock().unwrap().send(());
+                let _ = release_rx.lock().unwrap().recv();
+            }
+            Some(s)
+        });
+        let fired = Arc::new(AtomicUsize::new(0));
+        let src = Arc::new(DrainOnceSource::new(
+            specs(10),
+            Some(filter),
+            Some(counter_hook(&fired)),
+        ));
+        let a = {
+            let src = Arc::clone(&src);
+            std::thread::spawn(move || src.pull(1))
+        };
+        enter_rx.recv().unwrap(); // A is inside the filter, holding a lease
+        // B drains the rest of the source to exhaustion.
+        loop {
+            if src.pull(4).is_empty() {
+                break;
+            }
+        }
+        assert!(src.is_exhausted());
+        assert_eq!(
+            fired.load(Ordering::SeqCst),
+            0,
+            "hook must wait for the in-flight filter"
+        );
+        release_tx.send(()).unwrap();
+        let chunk = a.join().unwrap();
+        assert_eq!(chunk.len(), 1);
+        assert_eq!(fired.load(Ordering::SeqCst), 1, "fires after the last settle");
+    }
+
+    #[test]
+    fn drain_is_bounded_truncated_and_once_only() {
+        let src = DrainOnceSource::new(specs(10_000), None, None);
+        let mut seen = 0usize;
+        let r = src.drain(1_000, &mut |_s| seen += 1, &|| false);
+        assert_eq!(seen, 1_000);
+        assert_eq!(r.skipped, 1_000);
+        assert!(r.truncated, "limit hit before exhaustion");
+        // Second drain is a no-op: the once-latch keeps the bound global.
+        let r2 = src.drain(1_000, &mut |_s| seen += 1, &|| false);
+        assert_eq!(r2.skipped, 0);
+        assert!(!r2.truncated);
+        assert_eq!(seen, 1_000);
+    }
+
+    #[test]
+    fn drain_respects_cancel_and_fires_hook_on_full_drain() {
+        let fired = Arc::new(AtomicUsize::new(0));
+        let src = DrainOnceSource::new(specs(100), None, Some(counter_hook(&fired)));
+        let mut seen = 0usize;
+        let r = src.drain(ABORT_DRAIN_LIMIT, &mut |_s| seen += 1, &|| false);
+        assert_eq!(r.skipped, 100);
+        assert!(!r.truncated);
+        assert_eq!(fired.load(Ordering::SeqCst), 1, "full drain discovers exhaustion");
+    }
+
+    #[test]
+    fn cancelled_drain_releases_filter_leases() {
+        // Regression: a cancel mid-chunk forfeits the rest of the chunk's
+        // accounting, but the filter leases must still be released — a
+        // leaked lease would starve the fire-once hook forever.
+        let filter: SpecFilter = Arc::new(Some);
+        let fired = Arc::new(AtomicUsize::new(0));
+        let src = DrainOnceSource::new(specs(200), Some(filter), Some(counter_hook(&fired)));
+        let cancelled = AtomicBool::new(false);
+        let r = src.drain(
+            ABORT_DRAIN_LIMIT,
+            &mut |_s| cancelled.store(true, Ordering::SeqCst),
+            &|| cancelled.load(Ordering::SeqCst),
+        );
+        assert_eq!(r.skipped, 1, "cancel landed after the first spec");
+        // Consuming the rest of the stream must still fire the hook.
+        while !src.pull(64).is_empty() {}
+        assert_eq!(fired.load(Ordering::SeqCst), 1, "leaked lease starved the hook");
+    }
+
+    #[test]
+    fn drain_applies_restore_filter() {
+        // Restorable specs restore during the drain (parity with the live
+        // path); only still-pending ones are reported as skips.
+        let restored = Arc::new(AtomicUsize::new(0));
+        let r2 = Arc::clone(&restored);
+        let filter: SpecFilter = Arc::new(move |s: TaskSpec| {
+            if s.index < 30 {
+                r2.fetch_add(1, Ordering::SeqCst);
+                None
+            } else {
+                Some(s)
+            }
+        });
+        let src = DrainOnceSource::new(specs(100), Some(filter), None);
+        let mut skips = 0usize;
+        let r = src.drain(ABORT_DRAIN_LIMIT, &mut |_s| skips += 1, &|| false);
+        assert_eq!(restored.load(Ordering::SeqCst), 30);
+        assert_eq!(r.skipped, 70);
+        assert_eq!(skips, 70);
+    }
+
+    // ---- property: fire-once under concurrent pulls + drains --------------
+
+    #[test]
+    fn prop_on_drained_fires_exactly_once_under_concurrency() {
+        // Loom-style brute loop: varying worker counts, source sizes, and
+        // filter presence, with concurrent pullers plus one drainer racing
+        // each other — the hook must fire exactly once, after every lease
+        // has settled, every time.
+        use crate::testing::prop::check;
+        check("drain-once-fire-once", 40, |g| {
+            let n = g.size(0, 400);
+            let workers = g.size(1, 8);
+            let with_filter = g.size(0, 1) == 1;
+            let with_drainer = g.size(0, 1) == 1;
+            let handled = Arc::new(AtomicUsize::new(0));
+            let fired = Arc::new(AtomicUsize::new(0));
+            let fired_hook = Arc::clone(&fired);
+            let handled_at_fire = Arc::new(AtomicUsize::new(usize::MAX));
+            let hf = Arc::clone(&handled_at_fire);
+            let hh = Arc::clone(&handled);
+            let hook: DrainedHook = Box::new(move || {
+                fired_hook.fetch_add(1, Ordering::SeqCst);
+                hf.store(hh.load(Ordering::SeqCst), Ordering::SeqCst);
+            });
+            let filter: Option<SpecFilter> = with_filter.then(|| {
+                let handled = Arc::clone(&handled);
+                Arc::new(move |s: TaskSpec| {
+                    handled.fetch_add(1, Ordering::SeqCst);
+                    (s.index % 3 != 0).then_some(s)
+                }) as SpecFilter
+            });
+            let src = Arc::new(DrainOnceSource::new(specs(n), filter, Some(hook)));
+            let mut threads = Vec::new();
+            for w in 0..workers {
+                let src = Arc::clone(&src);
+                let handled = Arc::clone(&handled);
+                let track = !with_filter;
+                threads.push(std::thread::spawn(move || loop {
+                    let chunk = src.pull(1 + w % 5);
+                    if chunk.is_empty() {
+                        return;
+                    }
+                    if track {
+                        handled.fetch_add(chunk.len(), Ordering::SeqCst);
+                    }
+                }));
+            }
+            if with_drainer {
+                let src = Arc::clone(&src);
+                let handled = Arc::clone(&handled);
+                let track = !with_filter;
+                threads.push(std::thread::spawn(move || {
+                    src.drain(
+                        ABORT_DRAIN_LIMIT,
+                        &mut |_s| {
+                            if track {
+                                handled.fetch_add(1, Ordering::SeqCst);
+                            }
+                        },
+                        &|| false,
+                    );
+                }));
+            }
+            for t in threads {
+                t.join().unwrap();
+            }
+            crate::prop_assert!(
+                fired.load(Ordering::SeqCst) == 1,
+                "hook fired {} times (n={n}, workers={workers}, filter={with_filter})",
+                fired.load(Ordering::SeqCst)
+            );
+            crate::prop_assert!(src.is_exhausted(), "source fully consumed");
+            // When filtering, drains are counted at filter time, so by fire
+            // time every raw spec must have been handled. Without a filter
+            // the hook fires at exhaustion discovery (pre-settle parity
+            // with the fused design), so no such claim holds.
+            if with_filter {
+                let at_fire = handled_at_fire.load(Ordering::SeqCst);
+                crate::prop_assert!(
+                    at_fire == n,
+                    "hook fired with {at_fire}/{n} specs filtered"
+                );
+            }
+            Ok(())
+        });
+    }
+}

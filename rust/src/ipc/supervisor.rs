@@ -37,7 +37,7 @@ use crate::coordinator::progress::ProgressState;
 use crate::coordinator::results::{TaskOutcome, TaskStatus};
 use crate::coordinator::retry::RetryPolicy;
 use crate::coordinator::run::{EventSink, RunEvent};
-use crate::coordinator::scheduler::{SpecSource, ABORT_DRAIN_LIMIT};
+use crate::coordinator::source::{DrainOnceSource, SpecFilter, SpecSource, ABORT_DRAIN_LIMIT};
 use crate::coordinator::task::{TaskId, TaskSpec};
 use crate::ipc::proto::{read_frame, write_frame, Msg, WireResult, PROTOCOL_VERSION};
 use crate::ipc::worker::{ENV_SOCKET, ENV_WORKER_ID, ENV_WORKER_SPAWN};
@@ -121,10 +121,19 @@ pub struct SupervisorHooks {
     /// `WorkerCrashed`. Terminal outcomes flow through `record`.
     pub events: Option<EventSink>,
     /// Cooperative cancellation: once set, nothing new is dispatched,
-    /// pending retries are skipped, in-flight attempts finish, and the
-    /// lazy source is not consumed further.
+    /// pending retries are skipped, busy workers are asked to shut down
+    /// and then killed (their in-flight attempt is journaled as
+    /// interrupted and accounted as skipped), and the lazy source is not
+    /// consumed further — cancel latency is bounded by roughly one
+    /// heartbeat, not one attempt.
     pub cancel: Option<Arc<std::sync::atomic::AtomicBool>>,
-    /// Fires exactly once, when the lazy spec source is first exhausted.
+    /// The planner's restore stage, run on the dispatching slot's thread
+    /// **outside** the source mutex (see
+    /// [`crate::coordinator::source::DrainOnceSource`]): `None` means the
+    /// spec was restored from cache/checkpoint and delivered out of band.
+    pub restore_filter: Option<SpecFilter>,
+    /// Fires exactly once, when the lazy spec source is exhausted and all
+    /// pulled specs have cleared the restore filter.
     pub on_source_drained: Option<Box<dyn FnOnce() + Send + Sync>>,
 }
 
@@ -185,16 +194,12 @@ struct PulledTask {
     id: TaskId,
 }
 
-struct SrcState {
-    it: SpecSource,
-    exhausted: bool,
-    on_drained: Option<Box<dyn FnOnce() + Send + Sync>>,
-}
-
 struct Shared {
     /// The lazy spec stream — pulled one task per dispatch, never
-    /// materialized.
-    source: Mutex<SrcState>,
+    /// materialized. The exhaustion latch, fire-once completion hook,
+    /// restore filter, and bounded abort drain all live inside
+    /// [`DrainOnceSource`], shared with the thread scheduler.
+    source: DrainOnceSource,
     /// Every spec pulled so far (grows with dispatch, not with the raw
     /// matrix size). Leaf lock: never acquire another lock while held.
     tasks: Mutex<Vec<PulledTask>>,
@@ -207,13 +212,9 @@ struct Shared {
     crashes: AtomicU32,
     respawns: AtomicU32,
     /// Set when a post-abort/retirement drain gave up before exhausting
-    /// the source (see [`ABORT_DRAIN_LIMIT`]).
+    /// the source (see [`ABORT_DRAIN_LIMIT`]). The once-per-run latch for
+    /// the abort drain itself lives inside [`DrainOnceSource`].
     drain_truncated: AtomicBool,
-    /// Ensures the post-abort skip drain runs at most once per run:
-    /// `next_task` is re-entered by every waiting slot until in-flight
-    /// work finishes, and re-draining up to the limit on each wakeup
-    /// would make the bound meaningless.
-    abort_drained: AtomicBool,
 }
 
 /// A live worker: the child process plus both halves of its connection.
@@ -241,9 +242,10 @@ pub fn run(
     let listener = UnixListener::bind(&socket_path)
         .map_err(|e| MementoError::ipc(format!("bind {}: {e}", socket_path.display())))?;
 
-    let on_drained = hooks.on_source_drained.take();
+    let drained_hook = hooks.on_source_drained.take();
+    let restore_filter = hooks.restore_filter.take();
     let shared = Arc::new(Shared {
-        source: Mutex::new(SrcState { it: source, exhausted: false, on_drained }),
+        source: DrainOnceSource::new(source, restore_filter, drained_hook),
         tasks: Mutex::new(Vec::new()),
         settings,
         opts,
@@ -261,7 +263,6 @@ pub fn run(
         crashes: AtomicU32::new(0),
         respawns: AtomicU32::new(0),
         drain_truncated: AtomicBool::new(false),
-        abort_drained: AtomicBool::new(false),
     });
 
     // Acceptor: routes each incoming connection to its slot by the worker
@@ -447,6 +448,30 @@ fn slot_loop(sh: &Shared, slot: usize, rx: Receiver<(UnixStream, u64)>) {
                     0.0,
                 );
             }
+            Serve::Interrupted => {
+                // Cancel mid-attempt. The worker reads frames only between
+                // attempts, so Shutdown alone cannot interrupt it: send it
+                // anyway (a racing attempt that finishes inside the grace
+                // window lets the worker exit cleanly), give the process
+                // one heartbeat of grace, then kill it. The interruption
+                // is journaled and the spec accounted as skipped — cancel
+                // latency is bounded by heartbeats, not by the attempt's
+                // duration. Deliberate stops don't consume crash budget.
+                let mut dead = conn.take().unwrap();
+                let _ = write_frame(&mut dead.writer, &Msg::Shutdown);
+                let deadline = Instant::now() + sh.opts.heartbeat;
+                while Instant::now() < deadline {
+                    if matches!(dead.child.try_wait(), Ok(Some(_))) {
+                        break;
+                    }
+                    std::thread::sleep(Duration::from_millis(2));
+                }
+                let status = reap(&mut dead);
+                sh.interrupt_attempt(
+                    att,
+                    format!("interrupted: run cancelled mid-attempt; worker stopped ({status})"),
+                );
+            }
         }
     }
     if let Some(mut c) = conn {
@@ -471,6 +496,9 @@ enum Serve {
     NotDelivered,
     /// The worker died (EOF/timeout/desync) after taking the task.
     Crashed,
+    /// `Run::cancel` arrived while the attempt was executing: the slot
+    /// stops the worker instead of waiting for the attempt to finish.
+    Interrupted,
 }
 
 /// Dispatches one attempt and pumps frames until its outcome.
@@ -503,7 +531,26 @@ fn serve_attempt(sh: &Shared, slot: usize, conn: &mut Conn, att: Attempt) -> Ser
         id: id.clone(),
         attempt: att.attempt,
     });
+    // Once a cancel is noticed, the attempt gets one heartbeat of grace to
+    // deliver a racing `Outcome` (a result the worker already computed
+    // must not be thrown away and re-executed on resume) before the slot
+    // interrupts it.
+    let mut cancel_deadline: Option<Instant> = None;
     loop {
+        // Re-checked after every frame: a busy worker heartbeats at the
+        // heartbeat interval, so a cancel is noticed within roughly one
+        // heartbeat instead of after the whole attempt.
+        if cancel_deadline.is_none() && sh.cancelled() {
+            cancel_deadline = Some(Instant::now() + sh.opts.heartbeat);
+        }
+        if let Some(deadline) = cancel_deadline {
+            let remaining = deadline.saturating_duration_since(Instant::now());
+            if remaining.is_zero() {
+                return Serve::Interrupted;
+            }
+            // Shorten reads to the remaining grace so the wait is bounded.
+            let _ = conn.reader.set_read_timeout(Some(remaining));
+        }
         match read_frame(&mut conn.reader) {
             Ok(Some(Msg::Heartbeat { .. })) => continue,
             Ok(Some(Msg::Progress { index, value })) => {
@@ -541,8 +588,16 @@ fn serve_attempt(sh: &Shared, slot: usize, conn: &mut Conn, att: Attempt) -> Ser
                 return Serve::Completed;
             }
             // EOF, heartbeat-timeout, unexpected frame, or stream error —
-            // all terminal for this worker.
-            Ok(Some(_)) | Ok(None) | Err(_) => return Serve::Crashed,
+            // all terminal for this worker. During a cancel grace window
+            // the shortened read timing out (or the worker exiting early)
+            // is the expected interrupt path, not a crash.
+            Ok(Some(_)) | Ok(None) | Err(_) => {
+                return if cancel_deadline.is_some() {
+                    Serve::Interrupted
+                } else {
+                    Serve::Crashed
+                };
+            }
         }
     }
 }
@@ -665,38 +720,12 @@ impl Shared {
         self.tasks.lock().unwrap().len()
     }
 
-    fn source_exhausted(&self) -> bool {
-        self.source.lock().unwrap().exhausted
-    }
-
-    /// Pops one spec from the lazy source; marks exhaustion and fires
-    /// `on_source_drained` (outside the lock) exactly once. The single
-    /// place the exhaustion/on_drained invariant lives in this module.
-    fn pop_source(&self) -> Option<TaskSpec> {
-        let (spec, drained) = {
-            let mut src = self.source.lock().unwrap();
-            if src.exhausted {
-                (None, None)
-            } else {
-                match src.it.next() {
-                    Some(s) => (Some(s), None),
-                    None => {
-                        src.exhausted = true;
-                        (None, src.on_drained.take())
-                    }
-                }
-            }
-        };
-        if let Some(cb) = drained {
-            cb();
-        }
-        spec
-    }
-
-    /// Pulls one fresh spec from the lazy source, registering it in the
+    /// Pulls one fresh pending spec from the lazy source (restore
+    /// filtering happens inside [`DrainOnceSource::pop`], on this slot's
+    /// thread, outside the source mutex), registering it in the
     /// pulled-task table.
     fn pull_fresh(&self) -> Option<usize> {
-        let spec = self.pop_source()?;
+        let spec = self.source.pop()?;
         let id = spec.id(&self.opts.version);
         let mut tasks = self.tasks.lock().unwrap();
         tasks.push(PulledTask { spec, id });
@@ -716,26 +745,23 @@ impl Shared {
     /// After a fail-fast abort: account for the specs the run never
     /// reached by draining the rest of the source as skips — bounded by
     /// [`ABORT_DRAIN_LIMIT`] so the abort returns promptly on a huge
-    /// matrix (the un-enumerated remainder is flagged as truncated).
-    /// Cancel stops the drain immediately.
+    /// matrix (the un-enumerated remainder is flagged as truncated), and
+    /// once-only per run (the latch lives in [`DrainOnceSource`], so the
+    /// slots re-entering `next_task` cannot multiply the bound). Cancel
+    /// stops the drain immediately; restorable specs still restore.
     fn drain_source_as_skipped(&self) {
-        let mut drained_n = 0usize;
-        loop {
-            if self.cancelled() {
-                return;
-            }
-            if drained_n >= ABORT_DRAIN_LIMIT {
-                if !self.source.lock().unwrap().exhausted {
-                    self.drain_truncated.store(true, Ordering::SeqCst);
+        let report = self.source.drain(
+            ABORT_DRAIN_LIMIT,
+            &mut |spec| {
+                if let Some(p) = &self.hooks.progress {
+                    p.mark_skipped();
                 }
-                return;
-            }
-            let Some(spec) = self.pop_source() else { return };
-            drained_n += 1;
-            if let Some(p) = &self.hooks.progress {
-                p.mark_skipped();
-            }
-            self.q.lock().unwrap().skipped.push(spec);
+                self.q.lock().unwrap().skipped.push(spec);
+            },
+            &|| self.cancelled(),
+        );
+        if report.truncated {
+            self.drain_truncated.store(true, Ordering::SeqCst);
         }
     }
 
@@ -781,17 +807,16 @@ impl Shared {
                 q.in_flight += 1;
                 return Next::Run(Attempt { index, attempt: 1, ready_at: None });
             }
-        } else if !self.cancelled()
-            && self.q.lock().unwrap().abort
-            && !self.abort_drained.swap(true, Ordering::SeqCst)
-        {
+        } else if !self.cancelled() && self.q.lock().unwrap().abort {
+            // Idempotent: DrainOnceSource latches the drain, so waiting
+            // slots re-entering here cannot multiply the bound.
             self.drain_source_as_skipped();
         }
 
         let q = self.q.lock().unwrap();
         if q.pending.is_empty()
             && q.in_flight == 0
-            && (stopping || self.source_exhausted())
+            && (stopping || self.source.is_exhausted())
         {
             return Next::Done;
         }
@@ -880,6 +905,28 @@ impl Shared {
         }
         let outcome = self.failed_outcome(att.index, kind, message, duration_secs, att.attempt);
         self.finish(outcome, true);
+        self.release_task(att.index);
+    }
+
+    /// Cancel arrived while this attempt was executing and its worker was
+    /// stopped: journal the interruption and account the spec as skipped —
+    /// the task never reached a terminal outcome (no cache/checkpoint
+    /// record), so a later resume re-runs it from its last saved progress.
+    fn interrupt_attempt(&self, att: Attempt, message: String) {
+        if let Some(j) = &self.hooks.journal {
+            if let Some((_, id)) = self.task_brief(att.index) {
+                j.record(&Event::TaskFailed { id, attempt: att.attempt, message });
+            }
+        }
+        if let Some(p) = &self.hooks.progress {
+            p.mark_skipped();
+        }
+        let spec = self.task(att.index).0;
+        let mut q = self.q.lock().unwrap();
+        q.skipped.push(spec);
+        q.in_flight -= 1;
+        drop(q);
+        self.cv.notify_all();
         self.release_task(att.index);
     }
 
@@ -979,7 +1026,7 @@ impl Shared {
             let mut failed_n = 0usize;
             while !self.cancelled() {
                 if failed_n >= ABORT_DRAIN_LIMIT {
-                    if !self.source.lock().unwrap().exhausted {
+                    if !self.source.is_exhausted() {
                         self.drain_truncated.store(true, Ordering::SeqCst);
                     }
                     break;

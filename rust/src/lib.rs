@@ -60,7 +60,7 @@ pub mod prelude {
     };
     pub use crate::coordinator::results::{ResultSet, TaskOutcome, TaskStatus};
     pub use crate::coordinator::retry::RetryPolicy;
-    pub use crate::coordinator::run::{Run, RunEvent, RunSummary};
+    pub use crate::coordinator::run::{ChannelPolicy, Run, RunEvent, RunSummary};
     pub use crate::coordinator::scheduler::ExecBackend;
     pub use crate::coordinator::task::{TaskContext, TaskId, TaskSpec};
     pub use crate::util::json::Json;

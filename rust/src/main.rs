@@ -80,11 +80,20 @@ fn cmd_expand(args: &[String]) -> Result<(), String> {
     let spec = CliSpec::new("memento expand", "show the task expansion of a config matrix")
         .positional("config", "config matrix JSON file")
         .opt("limit", "0", "print at most N tasks without a full count (0 = all)")
+        .opt(
+            "sample",
+            "0",
+            "print N tasks drawn uniformly (reservoir) from the whole \
+             expansion — an unbiased preview where --limit only shows the \
+             matrix's first block (0 = off)",
+        )
+        .opt("seed", "0", "RNG seed for --sample (deterministic previews)")
         .flag("ids", "also print task hashes");
     let a = unwrap_cli(spec.parse(args))?;
     let path = a.pos("config").ok_or("missing <config>")?;
     let matrix = loader::from_file(Path::new(path)).map_err(|e| e.to_string())?;
     let limit = unwrap_cli(a.get_usize("limit"))?;
+    let sample = unwrap_cli(a.get_usize("sample"))?;
 
     let print_task = |t: &memento::coordinator::task::TaskSpec| {
         if a.flag("ids") {
@@ -93,6 +102,35 @@ fn cmd_expand(args: &[String]) -> Result<(), String> {
             println!("  [{:>4}] {}", t.index, t.label());
         }
     };
+
+    if sample > 0 && limit > 0 {
+        return Err(
+            "--limit and --sample are mutually exclusive: --limit bounds the walk to the \
+             matrix's first block, --sample walks the whole stream for an unbiased draw"
+                .into(),
+        );
+    }
+
+    if sample > 0 {
+        // Unbiased preview: one lazy pass, O(sample) memory. Costs a full
+        // stream walk (like the complete listing) but never materializes
+        // the task list, and — unlike --limit — every included task is
+        // equally likely to appear regardless of its position.
+        let seed = unwrap_cli(a.get_u64("seed"))?;
+        let mut rng = memento::util::rng::Rng::new(seed);
+        let (tasks, seen) =
+            expand::reservoir_sample(expand::Expansion::new(&matrix), sample, &mut rng);
+        println!("raw combinations : {}", matrix.raw_count());
+        println!("included tasks   : {seen}");
+        println!(
+            "sampled          : {} of {seen} task(s), uniform, seed {seed}",
+            tasks.len()
+        );
+        for t in &tasks {
+            print_task(t);
+        }
+        return Ok(());
+    }
 
     if limit > 0 {
         // Bounded preview: never walks (let alone materializes) the full
@@ -145,6 +183,13 @@ fn run_spec(name: &'static str) -> CliSpec {
             "output mode: summary (table at the end) | ndjson (one JSON \
              line per task outcome, streamed live)",
         )
+        .opt(
+            "event-cap",
+            "0",
+            "bound the live event channel at N undelivered events \
+             (0 = unbounded). Terminal events are never dropped; progress \
+             events coalesce under pressure",
+        )
         .flag("fail-fast", "abort on first failure")
         .flag("quiet", "suppress progress/notifications")
 }
@@ -192,6 +237,10 @@ fn cmd_run(args: &[String], resuming: bool) -> Result<(), String> {
         m = m.with_checkpoint_dir(dir);
     } else if resuming {
         return Err("resume requires --checkpoint <dir>".into());
+    }
+    let event_cap = unwrap_cli(a.get_usize("event-cap"))?;
+    if event_cap > 0 {
+        m = m.event_capacity(event_cap);
     }
     let ndjson = match a.get("output").unwrap_or("summary") {
         "summary" => false,

@@ -176,6 +176,35 @@ fn expand_limit_previews_without_full_count() {
 }
 
 #[test]
+fn expand_sample_is_unbiased_and_deterministic() {
+    // paper_grid has 45 included tasks; --sample 6 must draw 6 of them
+    // uniformly over the whole stream (not just the first block, which is
+    // --limit's bias) and identically for identical seeds.
+    let sample = |seed: &str| {
+        let (stdout, stderr, ok) = run_cli(&[
+            "expand",
+            repo_config("paper_grid.json").to_str().unwrap(),
+            "--sample",
+            "6",
+            "--seed",
+            seed,
+        ]);
+        assert!(ok, "stderr: {stderr}");
+        assert!(stdout.contains("included tasks   : 45"), "{stdout}");
+        assert!(stdout.contains("sampled          : 6 of 45"), "{stdout}");
+        let lines: Vec<String> = stdout
+            .lines()
+            .filter(|l| l.trim_start().starts_with('['))
+            .map(|l| l.to_string())
+            .collect();
+        assert_eq!(lines.len(), 6, "{stdout}");
+        lines
+    };
+    assert_eq!(sample("7"), sample("7"), "same seed, same preview");
+    assert_ne!(sample("7"), sample("8"), "different seed, different preview");
+}
+
+#[test]
 fn bad_config_fails_cleanly() {
     let td = TempDir::new("cli-bad").unwrap();
     let bad = td.join("bad.json");

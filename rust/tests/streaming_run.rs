@@ -180,6 +180,68 @@ fn restored_tasks_stream_as_from_cache_events() {
 }
 
 #[test]
+fn bounded_channel_undrained_run_delivers_every_terminal_event() {
+    // A Run left undrained while the run executes: with the default
+    // unbounded channel every outcome would buffer; with a 4-slot bounded
+    // channel the workers backpressure instead, and once the consumer
+    // finally drains it must still see every TaskFinished plus a correct
+    // RunSummary carrying the coalesced-drop count.
+    let n = 120usize;
+    let mem = Memento::new(|ctx| Ok(Json::int(ctx.param_i64("i")?)))
+        .workers(2)
+        .event_capacity(4);
+    let run = mem.launch(&int_matrix(n as i64)).unwrap();
+    // Leave the channel untouched while tasks execute against the full
+    // buffer.
+    std::thread::sleep(Duration::from_millis(100));
+
+    let mut finished = 0usize;
+    let mut progress_events = 0usize;
+    let mut summary: Option<RunSummary> = None;
+    for event in run.events() {
+        match event {
+            RunEvent::TaskFinished(_) => finished += 1,
+            RunEvent::Progress { .. } => progress_events += 1,
+            RunEvent::RunComplete(s) => summary = Some(s),
+            _ => {}
+        }
+        // Drain slower than the workers produce so the buffer stays under
+        // pressure (keeps intermediate events coalescing).
+        std::thread::sleep(Duration::from_millis(1));
+    }
+    let summary = summary.expect("terminal RunComplete always delivered");
+    assert_eq!(finished, n, "every TaskFinished delivered, none dropped");
+    assert_eq!(summary.total, n);
+    assert_eq!(summary.succeeded, n);
+    // Exactly one Progress event is emitted per terminal task plus one at
+    // planning-complete; coalescing may drop some, but delivered + counted
+    // drops must account for all of them — nothing vanishes silently.
+    assert_eq!(
+        progress_events + summary.events_coalesced,
+        n + 1,
+        "progress accounting: {progress_events} delivered + {} coalesced",
+        summary.events_coalesced
+    );
+    let results = run.collect().unwrap();
+    assert_eq!(results.len(), n);
+    assert_eq!(results.n_failed(), 0);
+}
+
+#[test]
+fn unbounded_default_reports_zero_coalesced() {
+    let mem = Memento::new(|ctx| Ok(Json::int(ctx.param_i64("i")?))).workers(2);
+    let run = mem.launch(&int_matrix(20)).unwrap();
+    let mut summary = None;
+    for event in run.events() {
+        if let RunEvent::RunComplete(s) = event {
+            summary = Some(s);
+        }
+    }
+    assert_eq!(summary.unwrap().events_coalesced, 0);
+    run.collect().unwrap();
+}
+
+#[test]
 fn progress_events_report_final_totals() {
     let mem = Memento::new(|ctx| Ok(Json::int(ctx.param_i64("i")?))).workers(2);
     let matrix = int_matrix(10);
@@ -238,6 +300,80 @@ mod process_backend {
         }
         memento::ipc::worker::serve(Arc::new(exp)).expect("worker serve");
         std::process::exit(0);
+    }
+
+    /// Experiment for the cancel test: i=0 returns immediately, every
+    /// other task sleeps far longer than the whole test budget — only an
+    /// interrupted (killed) worker lets the run finish promptly.
+    fn exp_cancel(ctx: &TaskContext) -> Result<Json, MementoError> {
+        let i = ctx.param_i64("i")?;
+        if i != 0 {
+            std::thread::sleep(Duration::from_secs(30));
+        }
+        Ok(Json::int(i))
+    }
+
+    /// Worker entry for the cancel test (no-op in a normal pass).
+    #[test]
+    fn ipc_cancel_worker_entry() {
+        if !memento::ipc::worker::active() {
+            return;
+        }
+        memento::ipc::worker::serve(Arc::new(exp_cancel)).expect("worker serve");
+        std::process::exit(0);
+    }
+
+    #[test]
+    fn cancel_interrupts_in_flight_process_attempt() {
+        // Before this fix, Run::cancel() on the process backend let the
+        // in-flight attempt run to completion — here a 30s sleep. Cancel
+        // must instead shut the busy worker down within heartbeats and
+        // journal the interruption.
+        let td = TempDir::new("stream-ipc-cancel").unwrap();
+        let jpath = td.join("journal.jsonl");
+        let matrix = int_matrix(4);
+        let mem = Memento::new(exp_cancel)
+            .isolate_processes(1, 1)
+            .with_journal(&jpath)
+            .worker_args(vec![
+                "--exact".to_string(),
+                "process_backend::ipc_cancel_worker_entry".to_string(),
+            ]);
+        let started_at = std::time::Instant::now();
+        let run = mem.launch(&matrix).unwrap();
+        // Cancel only once the second attempt (the 30s sleeper) has
+        // provably been dispatched — cancelling earlier would let the run
+        // end cleanly without ever having an attempt to interrupt.
+        let mut started = 0usize;
+        for event in run.events() {
+            if let RunEvent::TaskStarted { .. } = event {
+                started += 1;
+                if started == 2 {
+                    run.cancel();
+                    break;
+                }
+            }
+        }
+        let results = run.collect().unwrap();
+        let elapsed = started_at.elapsed();
+        assert!(
+            elapsed < Duration::from_secs(15),
+            "cancel took {elapsed:?} — latency bounded by the attempt, not a heartbeat"
+        );
+        assert_eq!(results.len(), 1, "only the quick task reached an outcome");
+        assert_eq!(results.n_failed(), 0);
+
+        // The interruption is journaled: i=0 succeeded, the in-flight
+        // victim has TaskStarted + a failed attempt explaining the cancel.
+        let journal = std::fs::read_to_string(&jpath).unwrap();
+        assert!(
+            journal.contains("interrupted: run cancelled"),
+            "journal missing interruption record:\n{journal}"
+        );
+        let s = memento::coordinator::journal::Journal::summarize(&jpath).unwrap();
+        assert_eq!(s.started, 2, "quick task + interrupted attempt");
+        assert_eq!(s.succeeded, 1);
+        assert!(s.failed_attempts >= 1, "interruption counted as failed attempt");
     }
 
     #[test]
