@@ -1,10 +1,13 @@
-//! Bench E7: process-isolation overhead — thread vs process dispatch.
+//! Bench E7: IPC dispatch overhead — thread vs process vs TCP-remote.
 //!
 //! The process backend buys crash isolation with one socket round-trip
-//! per attempt plus worker spawn amortized over the run. This bench
-//! quantifies that price on no-op tasks (the worst case: real experiment
-//! functions bury microseconds of dispatch under seconds of compute) and
-//! records a `ipc_dispatch_*` row next to the scheduler rows in
+//! per attempt plus worker spawn amortized over the run; the remote
+//! backend swaps the Unix socket for loopback TCP and a standing worker
+//! pool (spawn cost paid once, before the runs). This bench quantifies
+//! both prices on no-op tasks (the worst case: real experiment functions
+//! bury microseconds of dispatch under seconds of compute) and records
+//! `ipc_dispatch_*` (Unix-socket processes) and `ipc_dispatch_tcp_*`
+//! (TCP remote) rows next to the scheduler rows in
 //! `BENCH_sched_cache.json`.
 //!
 //! Run on a toolchain host from `rust/`:
@@ -96,6 +99,77 @@ fn main() {
             thread.mean / n as f64 * 1e6,
             process.mean / n as f64 * 1e6,
         );
+
+        // TCP-remote tier: a standing pool with in-process worker threads
+        // over loopback TCP. The pool (and its workers) persists across
+        // the bench iterations — exactly the many-small-runs reuse story —
+        // so this row measures framing + TCP round-trips + lease traffic,
+        // not worker startup.
+        use memento::ipc::pool::{PoolOptions, WorkerPool};
+        use memento::ipc::transport::Transport;
+        use memento::ipc::worker::{serve_remote, RemoteWorkerOptions};
+
+        let token = "bench-token";
+        let pool = WorkerPool::listen(
+            &Transport::Tcp { bind: "127.0.0.1:0".to_string() },
+            PoolOptions { token: Some(token.to_string()), ..PoolOptions::default() },
+        )
+        .expect("bind bench pool");
+        let worker_threads: Vec<_> = (0..workers)
+            .map(|_| {
+                let endpoint = pool.endpoint().clone();
+                std::thread::spawn(move || {
+                    let _ = serve_remote(
+                        Arc::new(exp),
+                        &endpoint,
+                        RemoteWorkerOptions {
+                            token: Some(token.to_string()),
+                            give_up_after: Some(std::time::Duration::from_secs(2)),
+                            quiet: true,
+                            ..RemoteWorkerOptions::default()
+                        },
+                    );
+                })
+            })
+            .collect();
+        let remote = suite
+            .bench_with_setup(
+                format!("{n} no-op tasks, {workers} tcp-remote workers"),
+                1,
+                3,
+                || (),
+                |_| {
+                    let r = Memento::new(exp)
+                        .with_worker_pool(Arc::clone(&pool))
+                        .remote_workers("unused: pool owns the listener", workers)
+                        .run(&matrix)
+                        .unwrap();
+                    assert_eq!(r.len(), n);
+                },
+            )
+            .clone();
+        let tcp_ratio = remote.mean / thread.mean;
+        suite.note(format!(
+            "{:.1}µs/task, {tcp_ratio:.1}x thread dispatch (standing pool, spawn amortized away)",
+            remote.mean / n as f64 * 1e6
+        ));
+        extras.push((
+            format!("ipc_dispatch_tcp_{workers}w_{n}tasks"),
+            Json::obj(vec![
+                ("thread_us_per_task", Json::Num(thread.mean / n as f64 * 1e6)),
+                ("remote_us_per_task", Json::Num(remote.mean / n as f64 * 1e6)),
+                ("remote_over_thread", Json::Num(tcp_ratio)),
+                ("remote_over_process", Json::Num(remote.mean / process.mean)),
+            ]),
+        ));
+        println!(
+            "E7 tcp ({workers}w): dispatch {:.1}µs/task over a standing loopback pool",
+            remote.mean / n as f64 * 1e6,
+        );
+        pool.shutdown();
+        for t in worker_threads {
+            let _ = t.join();
+        }
     }
 
     suite.write_trajectory(&sched_cache_trajectory_path(), extras);

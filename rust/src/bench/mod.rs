@@ -15,17 +15,26 @@ use std::time::Instant;
 /// Statistics over per-iteration timings (seconds).
 #[derive(Debug, Clone)]
 pub struct Stats {
+    /// Timed iterations.
     pub iters: usize,
+    /// Mean iteration time.
     pub mean: f64,
+    /// Median iteration time.
     pub p50: f64,
+    /// 95th-percentile iteration time.
     pub p95: f64,
+    /// Fastest iteration.
     pub min: f64,
+    /// Slowest iteration.
     pub max: f64,
+    /// Sample standard deviation.
     pub stddev: f64,
+    /// Sum of all iteration times.
     pub total: f64,
 }
 
 impl Stats {
+    /// Computes the summary statistics of per-iteration timings.
     pub fn from_samples(mut samples: Vec<f64>) -> Stats {
         assert!(!samples.is_empty());
         samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
@@ -62,7 +71,9 @@ impl Stats {
 /// One row of a benchmark report.
 #[derive(Debug, Clone)]
 pub struct Row {
+    /// Benchmark name shown in the table.
     pub name: String,
+    /// Timing statistics for the row.
     pub stats: Stats,
     /// Optional free-form extra column (e.g. "hit-rate 100%", "speedup 3.8x").
     pub note: String,
@@ -75,6 +86,7 @@ pub struct Suite {
 }
 
 impl Suite {
+    /// Starts a named suite (prints its header immediately).
     pub fn new(title: impl Into<String>) -> Suite {
         let title = title.into();
         println!("\n=== bench suite: {title} ===");
@@ -175,6 +187,7 @@ impl Suite {
         println!();
     }
 
+    /// The rows benchmarked so far.
     pub fn rows(&self) -> &[Row] {
         &self.rows
     }

@@ -29,6 +29,7 @@ pub struct ConfigMatrix {
 }
 
 impl ConfigMatrix {
+    /// A fresh [`MatrixBuilder`].
     pub fn builder() -> MatrixBuilder {
         MatrixBuilder::default()
     }

@@ -13,22 +13,29 @@ use std::fmt;
 /// A single parameter value in the configuration matrix.
 #[derive(Debug, Clone, PartialEq)]
 pub enum ParamValue {
+    /// A string (usually naming a component: a model, a dataset).
     Str(String),
+    /// An integer.
     Int(i64),
+    /// A float (non-integer numbers only; see [`ParamValue::from_json`]).
     Float(f64),
+    /// A boolean.
     Bool(bool),
 }
 
-/// Shorthand constructors (used heavily in configs and tests).
+/// Shorthand string constructor (used heavily in configs and tests).
 pub fn pv_str(s: impl Into<String>) -> ParamValue {
     ParamValue::Str(s.into())
 }
+/// Shorthand integer constructor.
 pub fn pv_int(i: i64) -> ParamValue {
     ParamValue::Int(i)
 }
+/// Shorthand float constructor.
 pub fn pv_f64(f: f64) -> ParamValue {
     ParamValue::Float(f)
 }
+/// Shorthand boolean constructor.
 pub fn pv_bool(b: bool) -> ParamValue {
     ParamValue::Bool(b)
 }
@@ -62,6 +69,7 @@ impl ParamValue {
         }
     }
 
+    /// The string value, if this is a `Str`.
     pub fn as_str(&self) -> Option<&str> {
         match self {
             ParamValue::Str(s) => Some(s),
@@ -69,6 +77,7 @@ impl ParamValue {
         }
     }
 
+    /// The integer value, if this is an `Int`.
     pub fn as_i64(&self) -> Option<i64> {
         match self {
             ParamValue::Int(i) => Some(*i),
@@ -76,6 +85,7 @@ impl ParamValue {
         }
     }
 
+    /// The numeric value (`Float`, or `Int` coerced).
     pub fn as_f64(&self) -> Option<f64> {
         match self {
             ParamValue::Float(f) => Some(*f),
@@ -84,6 +94,7 @@ impl ParamValue {
         }
     }
 
+    /// The boolean value, if this is a `Bool`.
     pub fn as_bool(&self) -> Option<bool> {
         match self {
             ParamValue::Bool(b) => Some(*b),

@@ -82,9 +82,13 @@ enum Slot {
 /// Hit/miss/corruption counters (shared across worker threads).
 #[derive(Debug, Default)]
 pub struct CacheStats {
+    /// Successful lookups (memory- and disk-tier combined).
     pub hits: AtomicU64,
+    /// Lookups that found nothing.
     pub misses: AtomicU64,
+    /// Entries written (both tiers, write-through).
     pub writes: AtomicU64,
+    /// On-disk entries that failed to parse (treated as misses).
     pub corrupt: AtomicU64,
     /// Hits served from the memory tier (no filesystem I/O at all).
     pub mem_hits: AtomicU64,
@@ -93,6 +97,7 @@ pub struct CacheStats {
 }
 
 impl CacheStats {
+    /// Fraction of lookups that hit (0.0 with no traffic).
     pub fn hit_rate(&self) -> f64 {
         let h = self.hits.load(Ordering::Relaxed) as f64;
         let m = self.misses.load(Ordering::Relaxed) as f64;
@@ -103,6 +108,7 @@ impl CacheStats {
         }
     }
 
+    /// `(hits, misses, writes, corrupt)` as of now.
     pub fn snapshot(&self) -> (u64, u64, u64, u64) {
         (
             self.hits.load(Ordering::Relaxed),
@@ -238,10 +244,12 @@ impl ResultCache {
         self
     }
 
+    /// The cache's on-disk directory.
     pub fn dir(&self) -> &Path {
         &self.dir
     }
 
+    /// Shared hit/miss/tier counters.
     pub fn stats(&self) -> &CacheStats {
         &self.stats
     }
@@ -463,6 +471,7 @@ impl ResultCache {
         self.shards.iter().map(|s| s.lock().unwrap().map.len()).sum()
     }
 
+    /// True when the cache indexes no entries.
     pub fn is_empty(&self) -> bool {
         self.shards.iter().all(|s| s.lock().unwrap().map.is_empty())
     }

@@ -28,15 +28,20 @@ use std::sync::Mutex;
 /// A completed task as stored in the manifest.
 #[derive(Debug, Clone)]
 pub struct CheckpointEntry {
+    /// The task's content-hash identity.
     pub id: TaskId,
     /// `Some(value)` for successes, `None` for recorded failures.
     pub value: Option<Json>,
+    /// The final failure message, for recorded failures.
     pub failed_message: Option<String>,
+    /// Wall-clock execution time of the recorded outcome.
     pub duration_secs: f64,
+    /// Attempts the recorded outcome took.
     pub attempts: u32,
 }
 
 impl CheckpointEntry {
+    /// True when the entry records a successful outcome.
     pub fn succeeded(&self) -> bool {
         self.value.is_some()
     }
@@ -191,6 +196,7 @@ impl CheckpointStore {
         self.total_tasks.load(std::sync::atomic::Ordering::Relaxed)
     }
 
+    /// The checkpoint's run directory.
     pub fn run_dir(&self) -> &Path {
         &self.run_dir
     }
@@ -224,6 +230,7 @@ impl CheckpointStore {
         self.inner.lock().unwrap().entries.get(id).cloned()
     }
 
+    /// Tasks recorded in the manifest so far.
     pub fn completed_count(&self) -> usize {
         self.inner.lock().unwrap().entries.len()
     }

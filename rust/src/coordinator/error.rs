@@ -53,26 +53,31 @@ impl fmt::Display for MementoError {
 impl std::error::Error for MementoError {}
 
 impl MementoError {
+    /// A [`MementoError::Config`] from any message.
     pub fn config(msg: impl Into<String>) -> Self {
         MementoError::Config(msg.into())
     }
+    /// A [`MementoError::Storage`] from any message.
     pub fn storage(msg: impl Into<String>) -> Self {
         MementoError::Storage(msg.into())
     }
+    /// A [`MementoError::Experiment`] from any message.
     pub fn experiment(msg: impl Into<String>) -> Self {
         MementoError::Experiment(msg.into())
     }
+    /// A [`MementoError::Runtime`] from any message.
     pub fn runtime(msg: impl Into<String>) -> Self {
         MementoError::Runtime(msg.into())
     }
+    /// A [`MementoError::Ipc`] from any message.
     pub fn ipc(msg: impl Into<String>) -> Self {
         MementoError::Ipc(msg.into())
     }
 }
 
 /// How a task failed: an `Err` from the experiment function, a panic, or —
-/// under the process-isolated backend — the death of the worker process
-/// that was executing it.
+/// under the process-isolated/distributed backends — the death of the
+/// worker executing it or a lapsed per-task wall-clock budget.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub enum FailureKind {
     /// The experiment function returned an error.
@@ -80,9 +85,15 @@ pub enum FailureKind {
     /// The experiment function panicked; the panic was contained.
     Panic,
     /// The worker process executing the task died (segfault, abort, OOM
-    /// kill, `kill -9`). Only produced by [`crate::ipc::supervisor`];
-    /// in-process threads cannot survive such a failure to report it.
+    /// kill, `kill -9`, dropped connection). Only produced by
+    /// [`crate::ipc::supervisor`]; in-process threads cannot survive such
+    /// a failure to report it.
     Crash,
+    /// The attempt exceeded the per-task wall-clock budget
+    /// (`--task-timeout`) and was stopped by the supervisor. Distinct
+    /// from [`FailureKind::Crash`]: a timeout is the task's fault, not
+    /// the worker's, and never consumes the worker crash budget.
+    Timeout,
 }
 
 impl fmt::Display for FailureKind {
@@ -91,6 +102,7 @@ impl fmt::Display for FailureKind {
             FailureKind::Error => write!(f, "error"),
             FailureKind::Panic => write!(f, "panic"),
             FailureKind::Crash => write!(f, "crash"),
+            FailureKind::Timeout => write!(f, "timeout"),
         }
     }
 }
@@ -98,6 +110,7 @@ impl fmt::Display for FailureKind {
 /// A complete failure record for one task attempt sequence.
 #[derive(Debug, Clone)]
 pub struct TaskFailure {
+    /// How the task failed.
     pub kind: FailureKind,
     /// Human-readable message extracted from the error/panic payload.
     pub message: String,

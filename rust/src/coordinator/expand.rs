@@ -45,6 +45,7 @@ pub struct Expansion<M: Borrow<ConfigMatrix> = ConfigMatrix> {
 }
 
 impl<M: Borrow<ConfigMatrix>> Expansion<M> {
+    /// A lazy expansion over the matrix (owned or borrowed).
     pub fn new(matrix: M) -> Self {
         let m = matrix.borrow();
         let counters = if m.parameters.iter().any(|(_, d)| d.is_empty())

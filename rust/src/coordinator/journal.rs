@@ -17,10 +17,51 @@ use std::time::{SystemTime, UNIX_EPOCH};
 /// One journal event.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Event {
-    TaskStarted { id: TaskId, attempt: u32 },
-    TaskSucceeded { id: TaskId, attempt: u32, duration_secs: f64 },
-    TaskFailed { id: TaskId, attempt: u32, message: String },
-    TaskRestored { id: TaskId },
+    /// An attempt was dispatched (one per attempt, so retries repeat it).
+    TaskStarted {
+        /// Task identity (content hash of params + version).
+        id: TaskId,
+        /// 1-based attempt number.
+        attempt: u32,
+    },
+    /// An attempt returned a successful result.
+    TaskSucceeded {
+        /// Task identity.
+        id: TaskId,
+        /// The attempt that succeeded.
+        attempt: u32,
+        /// Wall-clock execution time of the successful attempt.
+        duration_secs: f64,
+    },
+    /// An attempt failed (experiment error, contained panic, worker
+    /// crash, or a cancel interruption — the message distinguishes them).
+    TaskFailed {
+        /// Task identity.
+        id: TaskId,
+        /// The attempt that failed.
+        attempt: u32,
+        /// Human-readable failure description.
+        message: String,
+    },
+    /// An attempt was stopped for exceeding the per-task wall-clock
+    /// budget (`--task-timeout`). Recorded as its own kind — distinct
+    /// from `TaskFailed` — so post-hoc analysis can separate runaway
+    /// configurations from genuinely failing ones. The retry policy may
+    /// redispatch the task afterwards (a fresh `TaskStarted` follows).
+    TaskTimedOut {
+        /// Task identity.
+        id: TaskId,
+        /// The attempt that was stopped.
+        attempt: u32,
+        /// The budget the attempt exceeded, in seconds.
+        budget_secs: f64,
+    },
+    /// A task's result was restored from cache or a resumed checkpoint
+    /// without executing.
+    TaskRestored {
+        /// Task identity.
+        id: TaskId,
+    },
 }
 
 impl Event {
@@ -29,6 +70,7 @@ impl Event {
             Event::TaskStarted { .. } => "started",
             Event::TaskSucceeded { .. } => "succeeded",
             Event::TaskFailed { .. } => "failed",
+            Event::TaskTimedOut { .. } => "timed_out",
             Event::TaskRestored { .. } => "restored",
         }
     }
@@ -38,6 +80,7 @@ impl Event {
             Event::TaskStarted { id, .. }
             | Event::TaskSucceeded { id, .. }
             | Event::TaskFailed { id, .. }
+            | Event::TaskTimedOut { id, .. }
             | Event::TaskRestored { id } => id,
         }
     }
@@ -59,6 +102,10 @@ impl Event {
             Event::TaskFailed { attempt, message, .. } => {
                 fields.push(("attempt", Json::int(*attempt as i64)));
                 fields.push(("message", Json::str(message.clone())));
+            }
+            Event::TaskTimedOut { attempt, budget_secs, .. } => {
+                fields.push(("attempt", Json::int(*attempt as i64)));
+                fields.push(("budget_secs", Json::Num(*budget_secs)));
             }
             Event::TaskRestored { .. } => {}
         }
@@ -85,6 +132,14 @@ impl Event {
                     .and_then(|m| m.as_str())
                     .unwrap_or("")
                     .to_string(),
+            },
+            "timed_out" => Event::TaskTimedOut {
+                id,
+                attempt,
+                budget_secs: j
+                    .get("budget_secs")
+                    .and_then(|d| d.as_f64())
+                    .unwrap_or(0.0),
             },
             "restored" => Event::TaskRestored { id },
             _ => return None,
@@ -116,6 +171,7 @@ impl Journal {
         Ok(Journal { path, file: Mutex::new(file) })
     }
 
+    /// The journal file's path.
     pub fn path(&self) -> &Path {
         &self.path
     }
@@ -154,6 +210,7 @@ impl Journal {
                     s.busy_secs += duration_secs;
                 }
                 Event::TaskFailed { .. } => s.failed_attempts += 1,
+                Event::TaskTimedOut { .. } => s.timeouts += 1,
                 Event::TaskRestored { .. } => s.restored += 1,
             }
         }
@@ -165,11 +222,19 @@ impl Journal {
 /// Aggregate view of a journal file.
 #[derive(Debug, Default, Clone, PartialEq)]
 pub struct JournalSummary {
+    /// Parseable lines in the journal.
     pub events: usize,
+    /// `started` events (one per dispatched attempt, retries included).
     pub started: usize,
+    /// `succeeded` events (exactly one per successful task).
     pub succeeded: usize,
+    /// `failed` events (failed *attempts*, not final task failures).
     pub failed_attempts: usize,
+    /// `timed_out` events (attempts stopped at the per-task budget).
+    pub timeouts: usize,
+    /// `restored` events (cache/checkpoint restores).
     pub restored: usize,
+    /// Total execution time across successful attempts.
     pub busy_secs: f64,
 }
 
@@ -218,6 +283,28 @@ mod tests {
         assert_eq!(s.succeeded, 3);
         assert_eq!(s.failed_attempts, 1);
         assert!((s.busy_secs - 3.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn timeout_events_roundtrip_and_summarize() {
+        let td = TempDir::new("journal-timeout").unwrap();
+        let path = td.join("j.jsonl");
+        let j = Journal::open(&path).unwrap();
+        j.record(&Event::TaskStarted { id: tid(1), attempt: 1 });
+        j.record(&Event::TaskTimedOut { id: tid(1), attempt: 1, budget_secs: 0.5 });
+        j.record(&Event::TaskStarted { id: tid(1), attempt: 2 });
+        j.record(&Event::TaskSucceeded { id: tid(1), attempt: 2, duration_secs: 0.1 });
+
+        let events = Journal::replay(&path).unwrap();
+        assert_eq!(
+            events[1].1,
+            Event::TaskTimedOut { id: tid(1), attempt: 1, budget_secs: 0.5 }
+        );
+        let s = Journal::summarize(&path).unwrap();
+        assert_eq!(s.timeouts, 1);
+        assert_eq!(s.started, 2);
+        assert_eq!(s.succeeded, 1);
+        assert_eq!(s.failed_attempts, 0, "a timeout is not a failed attempt");
     }
 
     #[test]

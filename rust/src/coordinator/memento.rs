@@ -78,13 +78,24 @@ pub type ExpFn = dyn Fn(&TaskContext) -> Result<Json, MementoError> + Send + Syn
 /// Tuning knobs for a run; all have sensible defaults.
 #[derive(Clone)]
 pub struct RunOptions {
+    /// Worker threads (thread backend) — process/remote backends carry
+    /// their own worker counts in [`ExecBackend`].
     pub workers: usize,
+    /// Stop dispatching after the first failed task.
     pub fail_fast: bool,
     /// Salt for task hashes; bump when the experiment code changes.
     pub version: String,
     /// Base seed; per-task seeds derive from it and the task id.
     pub seed: u64,
+    /// In-run retry policy for failed attempts (and, on the IPC backends,
+    /// worker crashes and task timeouts).
     pub retry: RetryPolicy,
+    /// Per-task wall-clock budget for the process/remote backends: an
+    /// attempt still running after this long is stopped, journaled as a
+    /// timeout, and requeued under `retry`. `None` = unbounded. (The
+    /// thread backend cannot safely stop a running closure, so it
+    /// ignores this.)
+    pub task_timeout: Option<Duration>,
     /// Checkpoint manifest flush interval in completed tasks.
     pub checkpoint_flush_every: usize,
     /// Print progress lines at this interval (None = quiet).
@@ -107,6 +118,7 @@ impl Default for RunOptions {
             version: "v1".to_string(),
             seed: 0,
             retry: RetryPolicy::none(),
+            task_timeout: None,
             checkpoint_flush_every: 1,
             progress_interval: None,
             backend: ExecBackend::Threads,
@@ -128,6 +140,12 @@ pub struct Memento {
     /// Argv for spawned worker processes (process backend). `None` = the
     /// current process's own arguments.
     worker_args: Option<Vec<String>>,
+    /// Shared token remote workers must present (remote backend).
+    auth_token: Option<String>,
+    /// Standing worker pool to lease from (remote backend); when set, the
+    /// run reuses it instead of binding a fresh listener.
+    #[cfg(unix)]
+    pool: Option<Arc<crate::ipc::pool::WorkerPool>>,
 }
 
 impl Memento {
@@ -144,16 +162,21 @@ impl Memento {
             metrics: Arc::new(RunMetrics::new()),
             journal: None,
             worker_args: None,
+            auth_token: None,
+            #[cfg(unix)]
+            pool: None,
         }
     }
 
     // ---- builder ----------------------------------------------------------
 
+    /// Worker-thread count for the thread backend (min 1).
     pub fn workers(mut self, n: usize) -> Self {
         self.options.workers = n.max(1);
         self
     }
 
+    /// Aborts the run after the first failed task.
     pub fn fail_fast(mut self, yes: bool) -> Self {
         self.options.fail_fast = yes;
         self
@@ -184,6 +207,49 @@ impl Memento {
         self
     }
 
+    /// Shorthand for [`Memento::backend`] with [`ExecBackend::Remote`]:
+    /// listen for standing remote workers at `addr` (`host:port`) and run
+    /// tasks over up to `workers` concurrent leases. Requires
+    /// [`Memento::auth_token`] (or an existing pool via
+    /// [`Memento::with_worker_pool`], which owns its own token).
+    pub fn remote_workers(self, addr: impl Into<String>, workers: usize) -> Self {
+        self.backend(ExecBackend::Remote {
+            addr: addr.into(),
+            workers: workers.max(1),
+            task_timeout: None,
+        })
+    }
+
+    /// Sets the shared token remote workers must present when they
+    /// register (see [`crate::ipc::pool`] for the trust model). Only
+    /// meaningful with [`ExecBackend::Remote`].
+    pub fn auth_token(mut self, token: impl Into<String>) -> Self {
+        self.auth_token = Some(token.into());
+        self
+    }
+
+    /// Leases workers from an existing standing
+    /// [`crate::ipc::pool::WorkerPool`] instead of binding a fresh
+    /// listener. The pool outlives the run — hand the same handle to
+    /// consecutive runs and the registered worker processes are reused,
+    /// amortizing their spawn cost across many small runs.
+    #[cfg(unix)]
+    pub fn with_worker_pool(mut self, pool: Arc<crate::ipc::pool::WorkerPool>) -> Self {
+        self.pool = Some(pool);
+        self
+    }
+
+    /// Caps each task attempt's wall-clock time on the process/remote
+    /// backends: an attempt still running after `budget` is stopped,
+    /// journaled as a timeout ([`crate::coordinator::journal::Event::TaskTimedOut`]),
+    /// and requeued under the run's [`RetryPolicy`] — without consuming
+    /// worker crash budget. The thread backend ignores this (a running
+    /// closure cannot be stopped safely in-process).
+    pub fn task_timeout(mut self, budget: Duration) -> Self {
+        self.options.task_timeout = Some(budget);
+        self
+    }
+
     /// Picks the [`Run`] event-channel buffering policy. The default is
     /// [`ChannelPolicy::Unbounded`] (the original `launch()` semantics).
     pub fn event_channel(mut self, policy: ChannelPolicy) -> Self {
@@ -207,11 +273,14 @@ impl Memento {
         self
     }
 
+    /// Base RNG seed; per-task seeds derive from it and the task id.
     pub fn seed(mut self, seed: u64) -> Self {
         self.options.seed = seed;
         self
     }
 
+    /// In-run retry policy for failed attempts (and worker crashes /
+    /// task timeouts on the IPC backends).
     pub fn with_retry(mut self, policy: RetryPolicy) -> Self {
         self.options.retry = policy;
         self
@@ -237,21 +306,25 @@ impl Memento {
         self
     }
 
+    /// Manifest flush interval, in completed tasks (min 1).
     pub fn checkpoint_flush_every(mut self, n: usize) -> Self {
         self.options.checkpoint_flush_every = n.max(1);
         self
     }
 
+    /// Installs a notification provider (run started/finished, failures).
     pub fn with_notifier(mut self, n: Box<dyn NotificationProvider>) -> Self {
         self.notifier = Some(Arc::from(n));
         self
     }
 
+    /// Installs a shared notification provider handle.
     pub fn with_shared_notifier(mut self, n: Arc<dyn NotificationProvider>) -> Self {
         self.notifier = Some(n);
         self
     }
 
+    /// Prints progress lines at this interval.
     pub fn progress_every(mut self, d: Duration) -> Self {
         self.options.progress_interval = Some(d);
         self
@@ -265,10 +338,12 @@ impl Memento {
         self
     }
 
+    /// The run's shared metrics registry (readable during and after runs).
     pub fn metrics(&self) -> Arc<RunMetrics> {
         Arc::clone(&self.metrics)
     }
 
+    /// The configured result-cache handle, if any.
     pub fn cache_handle(&self) -> Option<Arc<ResultCache>> {
         self.cache.clone()
     }
@@ -370,6 +445,9 @@ impl Memento {
             metrics: Arc::clone(&self.metrics),
             journal: self.journal.clone(),
             worker_args: self.worker_args.clone(),
+            auth_token: self.auth_token.clone(),
+            #[cfg(unix)]
+            pool: self.pool.clone(),
             checkpoint,
             matrix: matrix.clone(),
             resuming,
@@ -398,11 +476,25 @@ struct RunWorker {
     metrics: Arc<RunMetrics>,
     journal: Option<Arc<Journal>>,
     worker_args: Option<Vec<String>>,
+    auth_token: Option<String>,
+    #[cfg(unix)]
+    pool: Option<Arc<crate::ipc::pool::WorkerPool>>,
     checkpoint: Option<Arc<CheckpointStore>>,
     matrix: ConfigMatrix,
     resuming: bool,
     sink: EventSink,
     cancel: Arc<AtomicBool>,
+}
+
+/// Which supervised (IPC) worker source a dispatch uses — the owned
+/// remainder of an [`ExecBackend::Processes`]/[`ExecBackend::Remote`]
+/// variant, threaded into [`RunWorker::run_supervised`].
+enum SupervisedKind {
+    /// Spawn `workers` local worker processes (crash budget per slot).
+    Spawn { workers: usize, crash_budget: u32 },
+    /// Lease up to `workers` standing remote workers (bind a listener at
+    /// `addr` unless an existing pool was installed).
+    Remote { addr: String, workers: usize, task_timeout: Option<Duration> },
 }
 
 impl RunWorker {
@@ -600,10 +692,10 @@ impl RunWorker {
         };
 
         // -- dispatch over the selected backend ----------------------------
-        let dispatched: Result<(bool, bool, usize, bool), MementoError> = match self
-            .options
-            .backend
-        {
+        // Cloned out so the match arms can consume the variant's fields
+        // (`Remote.addr`) while the arms' bodies still borrow `self`.
+        let backend = self.options.backend.clone();
+        let dispatched: Result<(bool, bool, usize, bool), MementoError> = match backend {
             ExecBackend::Threads => {
                 let job = self.make_job(
                     Arc::clone(&settings),
@@ -636,14 +728,25 @@ impl RunWorker {
                 );
                 Ok((report.aborted, report.cancelled, report.skipped, report.drain_truncated))
             }
-            ExecBackend::Processes { workers, crash_budget } => self.run_processes(
+            ExecBackend::Processes { workers, crash_budget } => self.run_supervised(
                 raw_source,
                 restore_filter,
                 &settings,
                 version.clone(),
                 Arc::clone(&progress),
-                workers,
-                crash_budget,
+                SupervisedKind::Spawn { workers, crash_budget },
+                Arc::clone(&deliver),
+                Arc::clone(&skipped_ctr),
+                drained_hook,
+                notifier.clone(),
+            ),
+            ExecBackend::Remote { addr, workers, task_timeout } => self.run_supervised(
+                raw_source,
+                restore_filter,
+                &settings,
+                version.clone(),
+                Arc::clone(&progress),
+                SupervisedKind::Remote { addr, workers, task_timeout },
                 Arc::clone(&deliver),
                 Arc::clone(&skipped_ctr),
                 drained_hook,
@@ -737,8 +840,9 @@ impl RunWorker {
         Ok(results)
     }
 
-    /// Dispatches the spec stream over isolated worker processes (the
-    /// [`ExecBackend::Processes`] tier; see [`crate::ipc`]). The
+    /// Dispatches the spec stream over supervised worker connections —
+    /// spawned processes ([`ExecBackend::Processes`]) or leased standing
+    /// remote workers ([`ExecBackend::Remote`]); see [`crate::ipc`]. The
     /// supervisor owns journal/metrics/progress accounting per attempt and
     /// pulls lazily from the same raw expansion + restore filter the
     /// thread backend uses (the filter runs on its slot threads, outside
@@ -747,21 +851,64 @@ impl RunWorker {
     /// terminal outcome into the run's event channel via `deliver`.
     #[cfg(unix)]
     #[allow(clippy::too_many_arguments, clippy::type_complexity)]
-    fn run_processes(
+    fn run_supervised(
         &self,
         source: SpecSource,
         restore_filter: SpecFilter,
         settings: &std::collections::BTreeMap<String, Json>,
         version: String,
         progress: Arc<ProgressState>,
-        workers: usize,
-        crash_budget: u32,
+        kind: SupervisedKind,
         deliver: Arc<dyn Fn(TaskOutcome) + Send + Sync>,
         skipped_ctr: Arc<AtomicUsize>,
         drained_hook: Box<dyn FnOnce() + Send + Sync>,
         notifier: Option<Arc<dyn NotificationProvider>>,
     ) -> Result<(bool, bool, usize, bool), MementoError> {
-        use crate::ipc::supervisor::{self, SupervisorHooks, SupervisorOptions};
+        use crate::ipc::pool::{PoolOptions, WorkerPool};
+        use crate::ipc::supervisor::{self, SupervisorHooks, SupervisorOptions, WorkerSource};
+        use crate::ipc::transport::Transport;
+
+        // Resolve the worker source first so configuration errors (e.g. a
+        // TCP bind failure, or a remote backend without a token) surface
+        // before the cache is switched into exclusive mode.
+        let (workers, crash_budget, task_timeout, worker_source) = match kind {
+            SupervisedKind::Spawn { workers, crash_budget } => (
+                workers,
+                crash_budget,
+                self.options.task_timeout,
+                WorkerSource::Spawn,
+            ),
+            SupervisedKind::Remote { addr, workers, task_timeout } => {
+                let pool = match &self.pool {
+                    Some(pool) => Arc::clone(pool),
+                    None => {
+                        if self.auth_token.is_none() {
+                            return Err(MementoError::config(
+                                "the remote backend requires auth_token(..) (or an \
+                                 existing pool via with_worker_pool(..)): TCP workers \
+                                 must authenticate",
+                            ));
+                        }
+                        WorkerPool::listen(
+                            &Transport::Tcp { bind: addr },
+                            PoolOptions {
+                                token: self.auth_token.clone(),
+                                ..PoolOptions::default()
+                            },
+                        )?
+                    }
+                };
+                (
+                    workers,
+                    // Pool budgets count *consecutive* losses per slot and
+                    // reset on progress (see the supervisor docs), so the
+                    // default depth is enough headroom for churn.
+                    SupervisorOptions::default().crash_budget,
+                    task_timeout.or(self.options.task_timeout),
+                    WorkerSource::Pool(pool),
+                )
+            }
+        };
 
         // Workers never write the store directly — for the duration of
         // this dispatch the supervisor is the single writer, so the cache
@@ -782,6 +929,7 @@ impl RunWorker {
             fail_fast: self.options.fail_fast,
             version,
             run_seed: self.options.seed,
+            task_timeout,
             ..SupervisorOptions::default()
         };
         if let Some(args) = &self.worker_args {
@@ -855,6 +1003,7 @@ impl RunWorker {
                 restore_filter: Some(restore_filter),
                 on_source_drained: Some(drained_hook),
             },
+            worker_source,
         );
         if let (Some(c), Some(prev)) = (&self.cache, prev_exclusive) {
             c.set_exclusive(prev);
@@ -869,26 +1018,25 @@ impl RunWorker {
         ))
     }
 
-    /// Process isolation needs Unix domain sockets and `fork`/`exec`
-    /// process spawning; other platforms fall back to a clear error.
+    /// The IPC tiers need Unix domain sockets and `fork`/`exec` process
+    /// spawning; other platforms fall back to a clear error.
     #[cfg(not(unix))]
     #[allow(clippy::too_many_arguments, clippy::type_complexity)]
-    fn run_processes(
+    fn run_supervised(
         &self,
         _source: SpecSource,
         _restore_filter: SpecFilter,
         _settings: &std::collections::BTreeMap<String, Json>,
         _version: String,
         _progress: Arc<ProgressState>,
-        _workers: usize,
-        _crash_budget: u32,
+        _kind: SupervisedKind,
         _deliver: Arc<dyn Fn(TaskOutcome) + Send + Sync>,
         _skipped_ctr: Arc<AtomicUsize>,
         _drained_hook: Box<dyn FnOnce() + Send + Sync>,
         _notifier: Option<Arc<dyn NotificationProvider>>,
     ) -> Result<(bool, bool, usize, bool), MementoError> {
         Err(MementoError::ipc(
-            "ExecBackend::Processes requires a unix platform",
+            "ExecBackend::Processes / ExecBackend::Remote require a unix platform",
         ))
     }
 

@@ -14,14 +14,17 @@ use std::time::Duration;
 pub struct Counter(AtomicU64);
 
 impl Counter {
+    /// Adds one.
     pub fn inc(&self) {
         self.0.fetch_add(1, Ordering::Relaxed);
     }
 
+    /// Adds `n`.
     pub fn add(&self, n: u64) {
         self.0.fetch_add(n, Ordering::Relaxed);
     }
 
+    /// Current value.
     pub fn get(&self) -> u64 {
         self.0.load(Ordering::Relaxed)
     }
@@ -82,6 +85,7 @@ impl Default for Timer {
 }
 
 impl Timer {
+    /// Records one duration sample.
     pub fn record(&self, d: Duration) {
         let ns = d.as_nanos().min(u64::MAX as u128) as u64;
         self.sum_ns.fetch_add(ns, Ordering::Relaxed);
@@ -97,14 +101,17 @@ impl Timer {
         }
     }
 
+    /// Samples recorded.
     pub fn count(&self) -> u64 {
         self.count.load(Ordering::Relaxed)
     }
 
+    /// Sum of all samples.
     pub fn total(&self) -> Duration {
         Duration::from_nanos(self.sum_ns.load(Ordering::Relaxed))
     }
 
+    /// Mean sample (zero with no samples).
     pub fn mean(&self) -> Duration {
         let c = self.count();
         if c == 0 {
@@ -141,15 +148,26 @@ impl Timer {
 /// The per-run metrics registry.
 #[derive(Debug, Default)]
 pub struct RunMetrics {
+    /// Tasks that reached a terminal outcome (executed, not restored).
     pub tasks_total: Counter,
+    /// Tasks whose final outcome succeeded.
     pub tasks_succeeded: Counter,
+    /// Tasks whose final outcome failed.
     pub tasks_failed: Counter,
+    /// Tasks restored from cache or a resumed checkpoint.
     pub tasks_cached: Counter,
+    /// Retry attempts dispatched beyond each task's first.
     pub tasks_retried: Counter,
+    /// Attempts stopped for exceeding the per-task wall-clock budget
+    /// (`--task-timeout`; process/remote backends only).
+    pub tasks_timed_out: Counter,
     /// Specs abandoned by a fail-fast abort (never executed).
     pub tasks_skipped: Counter,
+    /// Result-cache lookups that hit.
     pub cache_hits: Counter,
+    /// Result-cache lookups that missed.
     pub cache_misses: Counter,
+    /// Checkpoint manifest flushes performed.
     pub checkpoint_flushes: Counter,
     /// Chunk jobs the scheduler submitted to the pool (batched dispatch).
     pub dispatch_chunks: Counter,
@@ -167,6 +185,7 @@ pub struct RunMetrics {
 }
 
 impl RunMetrics {
+    /// A zeroed registry.
     pub fn new() -> Self {
         Self::default()
     }
@@ -184,12 +203,13 @@ impl RunMetrics {
         let mut s = String::new();
         s.push_str("run metrics:\n");
         s.push_str(&format!(
-            "  tasks      total={} ok={} failed={} cached={} retried={} skipped={}\n",
+            "  tasks      total={} ok={} failed={} cached={} retried={} timed-out={} skipped={}\n",
             self.tasks_total.get(),
             self.tasks_succeeded.get(),
             self.tasks_failed.get(),
             self.tasks_cached.get(),
             self.tasks_retried.get(),
+            self.tasks_timed_out.get(),
             self.tasks_skipped.get(),
         ));
         s.push_str(&format!(

@@ -21,15 +21,28 @@ use std::sync::Mutex;
 #[derive(Debug, Clone)]
 pub enum Notification {
     /// A run started: total tasks after exclusion, cached-skip count.
-    RunStarted { total: usize, from_cache: usize },
+    RunStarted {
+        /// Total tasks the run will account for.
+        total: usize,
+        /// Tasks already restored from cache/checkpoint.
+        from_cache: usize,
+    },
     /// One task failed (sent as failures happen, not only at the end).
-    TaskFailed { failure: TaskFailure },
+    TaskFailed {
+        /// The failure record (kind, message, params, attempts).
+        failure: TaskFailure,
+    },
     /// The run finished.
     RunFinished {
+        /// Total tasks accounted for.
         total: usize,
+        /// Successful tasks (restores included).
         succeeded: usize,
+        /// Finally-failed tasks.
         failed: usize,
+        /// Tasks restored without executing.
         from_cache: usize,
+        /// Wall-clock duration in seconds.
         wall_secs: f64,
     },
 }
@@ -84,6 +97,8 @@ impl Notification {
 /// Receives notifications. Implementations must be thread-safe: failures
 /// are emitted from worker threads while the run is in flight.
 pub trait NotificationProvider: Send + Sync {
+    /// Delivers one notification (called from run/worker threads; must
+    /// not block for long).
     fn notify(&self, n: &Notification);
 }
 
@@ -105,6 +120,7 @@ pub struct FileNotificationProvider {
 }
 
 impl FileNotificationProvider {
+    /// Appends to (creating if needed) the log file at `path`.
     pub fn new(path: impl Into<PathBuf>) -> Self {
         FileNotificationProvider { path: path.into(), lock: Mutex::new(()) }
     }
@@ -134,14 +150,17 @@ pub struct MemoryNotificationProvider {
 }
 
 impl MemoryNotificationProvider {
+    /// An empty collector.
     pub fn new() -> Self {
         Self::default()
     }
 
+    /// Snapshot of every notification received so far.
     pub fn events(&self) -> Vec<Notification> {
         self.events.lock().unwrap().clone()
     }
 
+    /// Notifications received so far.
     pub fn count(&self) -> usize {
         self.events.lock().unwrap().len()
     }
@@ -164,10 +183,12 @@ pub struct SimWebhookNotificationProvider {
 }
 
 impl SimWebhookNotificationProvider {
+    /// Delivers into the given outbox directory.
     pub fn new(outbox: impl Into<PathBuf>) -> Self {
         SimWebhookNotificationProvider { outbox: outbox.into(), seq: Mutex::new(0) }
     }
 
+    /// The outbox directory notifications are written into.
     pub fn outbox(&self) -> &std::path::Path {
         &self.outbox
     }
@@ -189,10 +210,12 @@ pub struct MultiNotificationProvider {
 }
 
 impl MultiNotificationProvider {
+    /// An empty fan-out.
     pub fn new() -> Self {
         Self::default()
     }
 
+    /// Adds a downstream provider.
     pub fn push(mut self, p: Box<dyn NotificationProvider>) -> Self {
         self.providers.push(p);
         self

@@ -20,6 +20,7 @@ use std::time::{Duration, Instant};
 ///   then renders mark the total as still-counting (`12/45+`).
 #[derive(Debug)]
 pub struct ProgressState {
+    /// Executed (non-restored) tasks completed so far.
     pub done: AtomicUsize,
     /// Specs abandoned by a fail-fast abort. Tracked separately from `done`
     /// so the bar still reaches a terminal state (`done + skipped == total`)
@@ -39,6 +40,7 @@ pub struct ProgressState {
 }
 
 impl ProgressState {
+    /// Progress over a total known up front (the eager API).
     pub fn new(total: usize) -> Arc<Self> {
         Arc::new(ProgressState {
             done: AtomicUsize::new(0),
@@ -83,6 +85,7 @@ impl ProgressState {
         self.planned.load(Ordering::Relaxed)
     }
 
+    /// Records one executed task completion.
     pub fn mark_done(&self) {
         self.done.fetch_add(1, Ordering::Relaxed);
     }
@@ -104,6 +107,7 @@ impl ProgressState {
         self.restored.load(Ordering::Relaxed)
     }
 
+    /// `(done, total)` as of now.
     pub fn snapshot(&self) -> (usize, usize) {
         (self.done.load(Ordering::Relaxed), self.total())
     }

@@ -23,8 +23,11 @@ pub enum TaskStatus {
 /// Full record for one executed (or cache-restored) task.
 #[derive(Debug, Clone)]
 pub struct TaskOutcome {
+    /// The task's parameter assignment.
     pub spec: TaskSpec,
+    /// The task's content-hash identity.
     pub id: TaskId,
+    /// Terminal status.
     pub status: TaskStatus,
     /// Present iff `status == Success`.
     pub value: Option<Json>,
@@ -39,6 +42,7 @@ pub struct TaskOutcome {
 }
 
 impl TaskOutcome {
+    /// True for successful outcomes (restores included).
     pub fn succeeded(&self) -> bool {
         self.status == TaskStatus::Success
     }
@@ -80,6 +84,7 @@ pub struct ResultSet {
 }
 
 impl ResultSet {
+    /// Collects outcomes into a deterministic result set.
     pub fn new(mut outcomes: Vec<TaskOutcome>) -> Self {
         // Stable order: by expansion index, so reports are deterministic
         // regardless of worker interleaving.
@@ -87,34 +92,42 @@ impl ResultSet {
         ResultSet { outcomes }
     }
 
+    /// Number of outcomes.
     pub fn len(&self) -> usize {
         self.outcomes.len()
     }
 
+    /// True when the set holds no outcomes.
     pub fn is_empty(&self) -> bool {
         self.outcomes.is_empty()
     }
 
+    /// Iterates every outcome in expansion order.
     pub fn iter(&self) -> impl Iterator<Item = &TaskOutcome> {
         self.outcomes.iter()
     }
 
+    /// The outcomes as a slice, in expansion order.
     pub fn outcomes(&self) -> &[TaskOutcome] {
         &self.outcomes
     }
 
+    /// Iterates the successful outcomes.
     pub fn successes(&self) -> impl Iterator<Item = &TaskOutcome> {
         self.outcomes.iter().filter(|o| o.succeeded())
     }
 
+    /// Iterates the failed outcomes.
     pub fn failures(&self) -> impl Iterator<Item = &TaskOutcome> {
         self.outcomes.iter().filter(|o| !o.succeeded())
     }
 
+    /// Number of failed outcomes.
     pub fn n_failed(&self) -> usize {
         self.failures().count()
     }
 
+    /// Number of outcomes restored from cache/checkpoint.
     pub fn n_cached(&self) -> usize {
         self.outcomes.iter().filter(|o| o.from_cache).count()
     }
@@ -230,11 +243,17 @@ impl ResultSet {
 /// A rendered-on-demand pivot table (the §3 accuracy grid).
 #[derive(Debug, Clone)]
 pub struct PivotTable {
+    /// Parameter whose values label the rows.
     pub row_param: String,
+    /// Parameter whose values label the columns.
     pub col_param: String,
+    /// Metric field averaged into each cell.
     pub metric: String,
+    /// Row labels, in first-seen order.
     pub rows: Vec<ParamValue>,
+    /// Column labels, in first-seen order.
     pub cols: Vec<ParamValue>,
+    /// Cell means (`None` = no outcome for that row/column pair).
     pub cells: Vec<Vec<Option<f64>>>,
 }
 

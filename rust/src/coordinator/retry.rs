@@ -5,6 +5,16 @@
 //! *in-run* retries for transient failures (OOM races, network datasets,
 //! CUDA hiccups). [`RetryPolicy`] covers both: `none()` reproduces the
 //! paper's behaviour, `fixed`/`exponential` add bounded in-run retries.
+//!
+//! One policy governs every way an attempt can end short of success:
+//! `Err` returns and contained panics (all backends), worker crashes
+//! (process/remote backends — the supervisor requeues the in-flight
+//! attempt when a worker dies), and per-task wall-clock **timeouts**
+//! (`--task-timeout`: a stuck attempt is stopped and requeued through
+//! this same policy, so `max_attempts` bounds runaway configurations
+//! exactly like flaky ones). The attempt counter is per *task*, shared
+//! across those causes — a task that crashes once and times out once has
+//! made two attempts.
 
 use std::time::Duration;
 
@@ -14,7 +24,14 @@ pub enum Backoff {
     /// Same delay between all attempts.
     Fixed(Duration),
     /// `base * factor^(attempt-1)`, capped at `max`.
-    Exponential { base: Duration, factor: f64, max: Duration },
+    Exponential {
+        /// Delay before the first retry.
+        base: Duration,
+        /// Multiplier applied per further retry (≥ 1).
+        factor: f64,
+        /// Upper bound on any single delay.
+        max: Duration,
+    },
 }
 
 /// A bounded retry policy.
@@ -22,6 +39,7 @@ pub enum Backoff {
 pub struct RetryPolicy {
     /// Total attempts (1 = no retries).
     pub max_attempts: u32,
+    /// Delay shape between attempts.
     pub backoff: Backoff,
 }
 

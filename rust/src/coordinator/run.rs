@@ -74,11 +74,25 @@ impl Default for ChannelPolicy {
 pub enum RunEvent {
     /// An attempt of a task began executing (one per attempt, so a retried
     /// task starts more than once).
-    TaskStarted { index: usize, id: TaskId, attempt: u32 },
+    TaskStarted {
+        /// The task's expansion index.
+        index: usize,
+        /// The task's content-hash identity.
+        id: TaskId,
+        /// 1-based attempt number.
+        attempt: u32,
+    },
     /// A task published in-task partial progress
     /// ([`crate::coordinator::task::TaskContext::save_progress`]); on the
     /// process backend this forwards the worker's `Progress` frames.
-    TaskProgress { index: usize, id: TaskId, value: Json },
+    TaskProgress {
+        /// The task's expansion index.
+        index: usize,
+        /// The task's content-hash identity.
+        id: TaskId,
+        /// The saved progress payload.
+        value: Json,
+    },
     /// A task reached a terminal state (executed, failed, or restored from
     /// cache/checkpoint — `from_cache` distinguishes them).
     TaskFinished(TaskOutcome),
@@ -97,8 +111,14 @@ pub enum RunEvent {
         /// True once the expansion stream is exhausted (totals are final).
         planning_complete: bool,
     },
-    /// A worker process died or was killed as hung (process backend only).
-    WorkerCrashed { slot: usize, message: String },
+    /// A worker died, was killed as hung, or was stopped at a task's
+    /// wall-clock budget (process/remote backends only).
+    WorkerCrashed {
+        /// The supervisor slot whose worker was lost.
+        slot: usize,
+        /// What happened, human-readable.
+        message: String,
+    },
     /// Terminal event: always the last event of a run.
     RunComplete(RunSummary),
 }
@@ -106,11 +126,17 @@ pub enum RunEvent {
 /// Final accounting carried by [`RunEvent::RunComplete`].
 #[derive(Debug, Clone, Default)]
 pub struct RunSummary {
+    /// Total tasks the run accounted for (executed + restored).
     pub total: usize,
+    /// Tasks that finished successfully (restores included).
     pub succeeded: usize,
+    /// Tasks whose final outcome was a failure.
     pub failed: usize,
+    /// Tasks restored from cache or a resumed checkpoint.
     pub from_cache: usize,
+    /// Tasks abandoned by a fail-fast abort or a cancel.
     pub skipped: usize,
+    /// Wall-clock duration of the whole run in seconds.
     pub wall_secs: f64,
     /// Intermediate `Progress`/`TaskProgress` events coalesced (dropped
     /// under pressure) by a bounded event channel. Always 0 with the
@@ -222,6 +248,7 @@ fn coalescable(event: &RunEvent) -> bool {
 }
 
 impl EventSink {
+    /// Publishes one event (see the type docs for the buffering rules).
     pub fn emit(&self, event: RunEvent) {
         let tx = self.tx.lock().unwrap();
         match &*tx {
@@ -398,6 +425,7 @@ struct GateState {
 }
 
 impl GatedNotifier {
+    /// Wraps a provider behind a closed gate.
     pub fn new(inner: Arc<dyn NotificationProvider>) -> Arc<GatedNotifier> {
         Arc::new(GatedNotifier {
             inner,

@@ -74,7 +74,14 @@ pub use crate::coordinator::source::{SpecFilter, SpecSource, ABORT_DRAIN_LIMIT};
 ///   [`crate::ipc::supervisor`]. A dying worker costs one attempt of one
 ///   task: the supervisor requeues it under the run's `RetryPolicy` and
 ///   respawns the worker, up to `crash_budget` respawns per slot.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+/// - [`ExecBackend::Remote`] — the distributed tier: the supervisor
+///   listens on TCP and leases **standing workers** (`memento serve`
+///   processes, on this machine or others) from a
+///   [`crate::ipc::pool::WorkerPool`] instead of spawning them. Same
+///   exactly-once accounting as `Processes`, plus shared-token auth,
+///   reconnect-with-backoff for dropped workers, and an optional
+///   per-task wall-clock budget.
+#[derive(Debug, Clone, PartialEq, Eq)]
 pub enum ExecBackend {
     /// In-process worker threads (the default).
     Threads,
@@ -84,6 +91,20 @@ pub enum ExecBackend {
         workers: usize,
         /// Worker respawns allowed per slot before it retires.
         crash_budget: u32,
+    },
+    /// Standing remote workers leased over TCP (see [`crate::ipc::pool`]).
+    Remote {
+        /// Bind address for the worker-registration listener, e.g.
+        /// `"0.0.0.0:7070"` (or `"127.0.0.1:0"` for an OS-assigned
+        /// loopback port). Ignored when the run is given an existing pool
+        /// via `Memento::with_worker_pool` — the standing pool's listener
+        /// is used instead.
+        addr: String,
+        /// Concurrent worker leases (max task attempts in flight).
+        workers: usize,
+        /// Per-task wall-clock budget for this backend; `None` falls back
+        /// to `Memento::task_timeout` (and `None` there means unbounded).
+        task_timeout: Option<std::time::Duration>,
     },
 }
 
@@ -164,7 +185,9 @@ pub struct StreamHooks {
     /// post-abort drain). The streaming run layer uses it to finalize
     /// totals and release the `RunStarted` notification.
     pub on_source_drained: Option<Box<dyn FnOnce() + Send + Sync>>,
+    /// Live progress counters (planned/done/skipped totals).
     pub progress: Option<Arc<ProgressState>>,
+    /// Shared metrics registry (dispatch counters, timers).
     pub metrics: Option<Arc<RunMetrics>>,
     /// Cooperative cancellation: once set, workers stop pulling, in-flight
     /// tasks finish, and the remaining source is *not* drained (a cancel

@@ -104,6 +104,8 @@ pub struct DrainOnceSource {
 }
 
 impl DrainOnceSource {
+    /// Wraps a lazy source with an optional restore filter and fire-once
+    /// exhaustion hook.
     pub fn new(
         source: SpecSource,
         filter: Option<SpecFilter>,

@@ -108,7 +108,9 @@ impl TaskSpec {
 /// the input parameters for this task", "settings … can be accessed by each
 /// task", "specify the outputs that should be checkpointed".
 pub struct TaskContext {
+    /// This task's parameter assignment.
     pub spec: TaskSpec,
+    /// The matrix's run-wide settings.
     pub settings: Arc<BTreeMap<String, Json>>,
     /// Derived from the run seed and task id; identical across re-runs.
     pub seed: u64,
@@ -122,6 +124,8 @@ pub struct TaskContext {
 }
 
 impl TaskContext {
+    /// Assembles a context for one attempt (normally done by the
+    /// scheduler/worker, not user code).
     pub fn new(
         spec: TaskSpec,
         settings: Arc<BTreeMap<String, Json>>,
@@ -142,36 +146,42 @@ impl TaskContext {
         }
     }
 
+    /// This task's content-hash identity.
     pub fn id(&self) -> &TaskId {
         &self.task_id
     }
 
     // ---- typed parameter accessors --------------------------------------
 
+    /// The raw parameter value; `Err` when the task has no such parameter.
     pub fn param(&self, name: &str) -> Result<&ParamValue, MementoError> {
         self.spec.get(name).ok_or_else(|| {
             MementoError::experiment(format!("task has no parameter '{name}'"))
         })
     }
 
+    /// The parameter as a string.
     pub fn param_str(&self, name: &str) -> Result<&str, MementoError> {
         self.param(name)?.as_str().ok_or_else(|| {
             MementoError::experiment(format!("parameter '{name}' is not a string"))
         })
     }
 
+    /// The parameter as an integer.
     pub fn param_i64(&self, name: &str) -> Result<i64, MementoError> {
         self.param(name)?.as_i64().ok_or_else(|| {
             MementoError::experiment(format!("parameter '{name}' is not an integer"))
         })
     }
 
+    /// The parameter as a float (integers coerce).
     pub fn param_f64(&self, name: &str) -> Result<f64, MementoError> {
         self.param(name)?.as_f64().ok_or_else(|| {
             MementoError::experiment(format!("parameter '{name}' is not numeric"))
         })
     }
 
+    /// The parameter as a boolean.
     pub fn param_bool(&self, name: &str) -> Result<bool, MementoError> {
         self.param(name)?.as_bool().ok_or_else(|| {
             MementoError::experiment(format!("parameter '{name}' is not a bool"))
@@ -180,10 +190,12 @@ impl TaskContext {
 
     // ---- settings --------------------------------------------------------
 
+    /// The raw run-wide setting, if present.
     pub fn setting(&self, name: &str) -> Option<&Json> {
         self.settings.get(name)
     }
 
+    /// The setting as an integer, with a default.
     pub fn setting_i64(&self, name: &str, default: i64) -> i64 {
         self.settings
             .get(name)
@@ -191,6 +203,7 @@ impl TaskContext {
             .unwrap_or(default)
     }
 
+    /// The setting as a float, with a default.
     pub fn setting_f64(&self, name: &str, default: f64) -> f64 {
         self.settings
             .get(name)

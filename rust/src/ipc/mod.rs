@@ -1,28 +1,37 @@
-//! Process-isolated execution: multi-process task dispatch over a
-//! std-only IPC protocol.
+//! Process-isolated and distributed execution: task dispatch over a
+//! std-only IPC protocol, across processes or machines.
 //!
 //! The thread backend ([`crate::util::pool`] + [`crate::coordinator::scheduler`])
 //! contains `Err` returns and panics, but a task that **segfaults, calls
 //! `abort`, leaks until the OOM killer arrives, or is `kill -9`'d** takes
 //! the whole run with it — checkpoint flushing included. This module adds
-//! the execution tier that survives those: a supervisor in the coordinator
-//! process and N single-task-at-a-time worker *processes*, connected by a
-//! Unix domain socket.
+//! the execution tiers that survive those: a supervisor in the
+//! coordinator process driving single-task-at-a-time worker *processes* —
+//! spawned locally over a Unix domain socket, or standing workers
+//! (possibly on other machines) that register over TCP.
 //!
 //! - [`proto`] — the wire protocol: 4-byte big-endian length-prefixed
 //!   frames of compact JSON (via [`crate::util::json`]; no external
-//!   crates). Messages: `Ready`/`Hello` handshake, `Task` (one attempt),
-//!   `Progress`, `Heartbeat`, `Outcome`, `Shutdown`.
-//! - [`worker`] — the worker side: connect, handshake, execute attempts
-//!   via the registered experiment function, stream outcomes, heartbeat
-//!   from a side thread. Workers are re-executions of the current binary,
-//!   selected by the `MEMENTO_WORKER_SOCKET`/`MEMENTO_WORKER_ID`
-//!   environment; the `memento` CLI routes them through its hidden
-//!   `worker` subcommand, and library binaries are intercepted inside
-//!   `Memento::run` itself.
-//! - [`supervisor`] — spawn/respawn (crash budget per slot), heartbeat
-//!   monitoring, crash-requeue under the run's `RetryPolicy`, fail-fast,
-//!   and the bridge back into journal/metrics/progress/cache/checkpoint.
+//!   crates). Messages: `Ready`/`Hello` handshake (with shared-token auth
+//!   for TCP peers), `Task` (one attempt), `Progress`, `Heartbeat`,
+//!   `Outcome`, `Goodbye`, `Reject`, `Shutdown`.
+//! - [`transport`] — the pluggable byte layer: `WireStream`/`WireListener`
+//!   trait pair with Unix-socket and TCP implementations, plus the
+//!   printable `Endpoint` addressing both.
+//! - [`pool`] — the standing [`pool::WorkerPool`]: authenticates inbound
+//!   TCP worker registrations and leases them to supervisor slots; it
+//!   outlives individual runs, so worker processes are reused across many
+//!   small runs.
+//! - [`worker`] — the worker side: connect (or reconnect with backoff),
+//!   handshake, execute attempts via the registered experiment function,
+//!   stream outcomes, heartbeat from a side thread. Spawned workers are
+//!   re-executions of the current binary, selected by the
+//!   `MEMENTO_WORKER_SOCKET`/`MEMENTO_WORKER_ID` environment; standing
+//!   remote workers run `memento serve` (or [`worker::serve_remote`]).
+//! - [`supervisor`] — spawn/respawn or lease (crash budget per slot),
+//!   heartbeat monitoring, per-task wall-clock timeouts, crash-requeue
+//!   under the run's `RetryPolicy`, fail-fast, and the bridge back into
+//!   journal/metrics/progress/cache/checkpoint.
 //!
 //! # Choosing a backend
 //!
@@ -38,11 +47,17 @@
 //! enough that "one segfault loses everything" is unacceptable. On the
 //! CLI: `memento run --isolation process`.
 //!
-//! This tier is also the stepping stone to the ROADMAP's multi-machine
-//! sharding: the protocol already carries everything a remote worker
-//! needs (specs, settings, seeds, version), leaving only the transport to
-//! generalize.
+//! `ExecBackend::Remote { addr, workers, task_timeout }`: the distributed
+//! tier. The supervisor listens on TCP; `memento serve` workers — on this
+//! machine or others — register with a shared token and are leased one
+//! run at a time. Same exactly-once accounting as the process tier, plus
+//! reconnect-with-backoff for dropped workers and an optional per-task
+//! wall-clock budget. On the CLI: `memento run --isolation remote
+//! --listen 0.0.0.0:7070 --token-file …`. See the README's *Distributed
+//! mode* section and `docs/ARCHITECTURE.md` for the full walkthrough.
 
+pub mod pool;
 pub mod proto;
 pub mod supervisor;
+pub mod transport;
 pub mod worker;

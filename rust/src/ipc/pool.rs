@@ -1,0 +1,425 @@
+//! The standing worker pool: inbound registration, auth, and leasing.
+//!
+//! The spawned-worker backend creates workers per run; the distributed
+//! backend inverts the arrow. A [`WorkerPool`] **listens** (normally on
+//! TCP — see [`crate::ipc::transport`]) and standing workers — `memento
+//! serve` processes on this or other machines, or
+//! [`crate::ipc::worker::serve_remote`] threads — *connect in* and
+//! register. The pool authenticates each registration (shared token +
+//! protocol version, checked against the worker's `Ready` frame, refused
+//! with a `Reject` frame), then parks the connection in a queue.
+//! Supervisor slots [`WorkerPool::lease`] registered workers one at a
+//! time; a leased worker serves task attempts until the run ends
+//! (`Shutdown`), after which a standing worker reconnects and re-registers
+//! for the next lease.
+//!
+//! Because the pool is just a listener plus a queue, it naturally
+//! **outlives a single run**: create it once
+//! ([`WorkerPool::listen`]), hand it to any number of consecutive
+//! `Memento` runs (`with_worker_pool`), and the same worker processes are
+//! reused — worker spawn cost is paid once, not per run, which is what
+//! makes many-small-runs workloads cheap.
+//!
+//! # Trust model
+//!
+//! A TCP listener is reachable by anything that can route to it, so a
+//! token is **required** for TCP pools: a registration whose `Ready`
+//! frame carries the wrong token (or an incompatible protocol version) is
+//! answered with `Reject{reason}` and dropped before it can observe
+//! anything about the run — settings, seeds, and the experiment version
+//! only travel in `Hello`, which is sent at lease time to authenticated
+//! workers. The token is a shared secret distributed out of band (the CLI
+//! reads it from `--token-file`); transport encryption is out of scope —
+//! run over a trusted network or a tunnel.
+
+use crate::coordinator::error::MementoError;
+use crate::ipc::proto::{read_frame, write_frame, Msg, PROTOCOL_VERSION};
+use crate::ipc::transport::{Endpoint, Transport, WireListener, WireStream};
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+/// Configuration for [`WorkerPool::listen`].
+#[derive(Debug, Clone)]
+pub struct PoolOptions {
+    /// Shared auth token workers must present. **Required** for
+    /// [`Transport::Tcp`] (listening without one is refused); optional
+    /// for [`Transport::Unix`], where filesystem permissions gate access.
+    pub token: Option<String>,
+    /// How long a fresh connection gets to deliver its `Ready` frame
+    /// before being dropped (a silent connection must not wedge the
+    /// acceptor).
+    pub handshake_timeout: Duration,
+}
+
+impl Default for PoolOptions {
+    fn default() -> Self {
+        PoolOptions {
+            token: None,
+            handshake_timeout: Duration::from_secs(5),
+        }
+    }
+}
+
+/// One authenticated, registered worker connection waiting for (or held
+/// by) a lease.
+pub struct Registration {
+    /// The connection, handshake already consumed (`Ready` read and
+    /// verified; `Hello` not yet sent — that happens at lease time, since
+    /// run configuration is per lease).
+    pub stream: Box<dyn WireStream>,
+    /// Pool-assigned registration sequence number (unique per pool).
+    pub member: u64,
+    /// The id the worker reported about itself (diagnostics only).
+    pub worker: u64,
+    /// The worker's OS process id, as self-reported.
+    pub pid: u64,
+}
+
+struct PoolState {
+    queue: VecDeque<Registration>,
+    /// Set once the acceptor thread exits; leases then fail fast instead
+    /// of waiting out their full deadline on a dead pool.
+    closed: bool,
+}
+
+/// Innards shared between the pool handle and its acceptor thread. Kept
+/// separate from [`WorkerPool`] so the acceptor never holds the public
+/// handle — otherwise the handle's `Drop` (which stops the acceptor)
+/// could never run.
+struct PoolShared {
+    state: Mutex<PoolState>,
+    cv: Condvar,
+    registered: AtomicU64,
+    rejected: AtomicU64,
+}
+
+/// A standing, authenticated pool of registered remote workers (see the
+/// [module docs](self) for the lifecycle).
+pub struct WorkerPool {
+    endpoint: Endpoint,
+    shared: Arc<PoolShared>,
+    stop: Arc<AtomicBool>,
+    acceptor: Mutex<Option<std::thread::JoinHandle<()>>>,
+}
+
+impl std::fmt::Debug for WorkerPool {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("WorkerPool")
+            .field("endpoint", &self.endpoint.to_string())
+            .field("registered", &self.registered_count())
+            .field("rejected", &self.rejected_count())
+            .finish()
+    }
+}
+
+impl WorkerPool {
+    /// Binds the transport and starts accepting worker registrations on a
+    /// background thread. The returned handle is shared (`Arc`) because
+    /// supervisor slots lease from it concurrently — and because keeping
+    /// it across `Memento` runs is exactly how worker processes get
+    /// reused.
+    pub fn listen(
+        transport: &Transport,
+        opts: PoolOptions,
+    ) -> Result<Arc<WorkerPool>, MementoError> {
+        if matches!(transport, Transport::Tcp { .. }) && opts.token.is_none() {
+            return Err(MementoError::config(
+                "a TCP worker pool requires a shared auth token (anyone who can \
+                 reach the port could otherwise register as a worker)",
+            ));
+        }
+        let (listener, sock_dir) = transport
+            .bind()
+            .map_err(|e| MementoError::ipc(format!("bind {transport:?}: {e}")))?;
+        let endpoint = listener.endpoint();
+        let shared = Arc::new(PoolShared {
+            state: Mutex::new(PoolState { queue: VecDeque::new(), closed: false }),
+            cv: Condvar::new(),
+            registered: AtomicU64::new(0),
+            rejected: AtomicU64::new(0),
+        });
+        let stop = Arc::new(AtomicBool::new(false));
+        let handle = {
+            let shared = Arc::clone(&shared);
+            let stop = Arc::clone(&stop);
+            std::thread::Builder::new()
+                .name("memento-pool-accept".into())
+                .spawn(move || {
+                    // The Unix socket's temp dir (if any) lives and dies
+                    // with the acceptor.
+                    let _sock_dir = sock_dir;
+                    shared.accept_loop(listener, opts, stop);
+                })
+                .map_err(|e| MementoError::ipc(format!("spawn pool acceptor: {e}")))?
+        };
+        Ok(Arc::new(WorkerPool {
+            endpoint,
+            shared,
+            stop,
+            acceptor: Mutex::new(Some(handle)),
+        }))
+    }
+
+    /// The address workers should connect to — with a `:0` bind request
+    /// this carries the OS-assigned port, so it is what a `memento serve
+    /// --connect` invocation (or [`crate::ipc::worker::serve_remote`])
+    /// needs.
+    pub fn endpoint(&self) -> &Endpoint {
+        &self.endpoint
+    }
+
+    /// Takes the next registered worker, waiting up to `timeout` for one
+    /// to register. `None` means no worker became available (or the pool
+    /// shut down) — callers treat that like a failed worker spawn.
+    pub fn lease(&self, timeout: Duration) -> Option<Registration> {
+        let deadline = Instant::now() + timeout;
+        let mut state = self.shared.state.lock().unwrap();
+        loop {
+            if let Some(reg) = state.queue.pop_front() {
+                return Some(reg);
+            }
+            if state.closed {
+                return None;
+            }
+            let remaining = deadline.saturating_duration_since(Instant::now());
+            if remaining.is_zero() {
+                return None;
+            }
+            let (st, _timeout) = self.shared.cv.wait_timeout(state, remaining).unwrap();
+            state = st;
+        }
+    }
+
+    /// Registered workers currently queued (not leased).
+    pub fn available(&self) -> usize {
+        self.shared.state.lock().unwrap().queue.len()
+    }
+
+    /// Total successful registrations over the pool's lifetime. A
+    /// standing worker counts once per (re)connection, so this growing
+    /// across runs is the pool-reuse story working.
+    pub fn registered_count(&self) -> u64 {
+        self.shared.registered.load(Ordering::SeqCst)
+    }
+
+    /// Registrations refused (bad token or protocol mismatch).
+    pub fn rejected_count(&self) -> u64 {
+        self.shared.rejected.load(Ordering::SeqCst)
+    }
+
+    /// Stops accepting registrations and drops every queued connection
+    /// (their workers observe EOF-before-`Hello` and retry or give up per
+    /// their own options). Called by `Drop`; idempotent.
+    pub fn shutdown(&self) {
+        self.stop.store(true, Ordering::SeqCst);
+        if let Some(h) = self.acceptor.lock().unwrap().take() {
+            let _ = h.join();
+        }
+        let mut state = self.shared.state.lock().unwrap();
+        state.closed = true;
+        state.queue.clear();
+        self.shared.cv.notify_all();
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+impl PoolShared {
+    fn accept_loop(
+        self: Arc<Self>,
+        listener: Box<dyn WireListener>,
+        opts: PoolOptions,
+        stop: Arc<AtomicBool>,
+    ) {
+        crate::ipc::transport::poll_accept(listener, &stop, |stream| {
+            // Handshake each connection on its own short-lived thread: the
+            // TCP listener is reachable by untrusted peers, and a silent
+            // connection gets `handshake_timeout` to produce its `Ready` —
+            // serializing that wait here would let one garbage connection
+            // stall every legitimate registration behind it.
+            let shared = Arc::clone(&self);
+            let opts = opts.clone();
+            let spawned = std::thread::Builder::new()
+                .name("memento-pool-handshake".into())
+                .spawn(move || shared.register(stream, &opts));
+            drop(spawned); // spawn failure just drops the connection
+        });
+        let mut state = self.state.lock().unwrap();
+        state.closed = true;
+        state.queue.clear();
+        self.cv.notify_all();
+    }
+
+    /// Handshakes one inbound connection: read `Ready`, verify protocol
+    /// and token, queue it — or answer `Reject` and drop it.
+    fn register(&self, stream: Box<dyn WireStream>, opts: &PoolOptions) {
+        // The handshake must arrive promptly; a silent connection is
+        // dropped rather than wedging the acceptor.
+        let _ = stream.set_stream_read_timeout(Some(opts.handshake_timeout));
+        let mut reader = stream;
+        let ready = match read_frame(&mut reader) {
+            Ok(Some(m)) => m,
+            _ => return, // silent/garbled connection: drop without ceremony
+        };
+        let Msg::Ready { worker, pid, protocol, token, .. } = ready else {
+            return;
+        };
+        let refusal = if protocol != PROTOCOL_VERSION {
+            Some(format!(
+                "protocol mismatch: pool speaks v{PROTOCOL_VERSION}, worker speaks v{protocol}"
+            ))
+        } else if let Some(required) = &opts.token {
+            if token.as_deref() == Some(required.as_str()) {
+                None
+            } else {
+                Some("auth token mismatch".to_string())
+            }
+        } else {
+            None
+        };
+        if let Some(reason) = refusal {
+            self.rejected.fetch_add(1, Ordering::SeqCst);
+            eprintln!(
+                "memento pool: rejected registration from {} (pid {pid}): {reason}",
+                reader.peer_label()
+            );
+            let _ = write_frame(&mut reader, &Msg::Reject { reason });
+            let _ = reader.shutdown_both();
+            return;
+        }
+        // Authenticated: normalize the stream (no read deadline — a
+        // queued worker may wait arbitrarily long for its lease) and park
+        // it for the next lease.
+        let _ = reader.set_stream_read_timeout(None);
+        let mut state = self.state.lock().unwrap();
+        if state.closed {
+            // The pool shut down while this handshake thread was mid
+            // flight; dropping the connection tells the worker to retry
+            // elsewhere (EOF before Hello).
+            return;
+        }
+        let member = self.registered.fetch_add(1, Ordering::SeqCst) + 1;
+        state.queue.push_back(Registration { stream: reader, member, worker, pid });
+        drop(state);
+        self.cv.notify_one();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tcp_pool(token: &str) -> Arc<WorkerPool> {
+        WorkerPool::listen(
+            &Transport::Tcp { bind: "127.0.0.1:0".to_string() },
+            PoolOptions { token: Some(token.to_string()), ..PoolOptions::default() },
+        )
+        .unwrap()
+    }
+
+    fn send_ready(endpoint: &Endpoint, protocol: u64, token: Option<&str>) -> Box<dyn WireStream> {
+        let mut stream = endpoint.connect().unwrap();
+        write_frame(
+            &mut stream,
+            &Msg::Ready {
+                worker: 9,
+                pid: 1234,
+                spawn: 0,
+                protocol,
+                token: token.map(|t| t.to_string()),
+            },
+        )
+        .unwrap();
+        stream
+    }
+
+    #[test]
+    fn tcp_pool_requires_a_token() {
+        let err = WorkerPool::listen(
+            &Transport::Tcp { bind: "127.0.0.1:0".to_string() },
+            PoolOptions::default(),
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("token"), "{err}");
+    }
+
+    #[test]
+    fn good_token_registers_and_leases() {
+        let pool = tcp_pool("s3cret");
+        let _stream = send_ready(pool.endpoint(), PROTOCOL_VERSION, Some("s3cret"));
+        let reg = pool.lease(Duration::from_secs(5)).expect("worker registers");
+        assert_eq!(reg.worker, 9);
+        assert_eq!(reg.pid, 1234);
+        assert_eq!(reg.member, 1);
+        assert_eq!(pool.registered_count(), 1);
+        assert_eq!(pool.rejected_count(), 0);
+    }
+
+    #[test]
+    fn bad_token_is_rejected_with_a_reason() {
+        let pool = tcp_pool("s3cret");
+        let mut stream = send_ready(pool.endpoint(), PROTOCOL_VERSION, Some("wrong"));
+        // The worker hears an explicit Reject, not just a closed socket.
+        let _ = stream.set_stream_read_timeout(Some(Duration::from_secs(5)));
+        let answer = read_frame(&mut stream).unwrap().unwrap();
+        let reason = match answer {
+            Msg::Reject { reason } => reason,
+            other => panic!("expected Reject, got {other:?}"),
+        };
+        assert!(reason.contains("token"), "{reason}");
+        // And the pool never offers it for lease.
+        assert!(pool.lease(Duration::from_millis(100)).is_none());
+        assert_eq!(pool.rejected_count(), 1);
+        assert_eq!(pool.registered_count(), 0);
+    }
+
+    #[test]
+    fn protocol_mismatch_is_rejected() {
+        let pool = tcp_pool("s3cret");
+        let mut stream = send_ready(pool.endpoint(), PROTOCOL_VERSION + 1, Some("s3cret"));
+        let _ = stream.set_stream_read_timeout(Some(Duration::from_secs(5)));
+        let answer = read_frame(&mut stream).unwrap().unwrap();
+        assert!(
+            matches!(answer, Msg::Reject { ref reason } if reason.contains("protocol")),
+            "{answer:?}"
+        );
+        assert_eq!(pool.rejected_count(), 1);
+    }
+
+    #[test]
+    fn lease_times_out_on_an_empty_pool() {
+        let pool = tcp_pool("s3cret");
+        let started = Instant::now();
+        assert!(pool.lease(Duration::from_millis(80)).is_none());
+        assert!(started.elapsed() >= Duration::from_millis(80));
+    }
+
+    #[test]
+    fn shutdown_fails_leases_fast() {
+        let pool = tcp_pool("s3cret");
+        pool.shutdown();
+        let started = Instant::now();
+        assert!(pool.lease(Duration::from_secs(30)).is_none());
+        assert!(
+            started.elapsed() < Duration::from_secs(5),
+            "a closed pool must not wait out the full lease deadline"
+        );
+    }
+
+    #[test]
+    fn registrations_queue_in_arrival_order() {
+        let pool = tcp_pool("s3cret");
+        let _a = send_ready(pool.endpoint(), PROTOCOL_VERSION, Some("s3cret"));
+        let first = pool.lease(Duration::from_secs(5)).unwrap();
+        let _b = send_ready(pool.endpoint(), PROTOCOL_VERSION, Some("s3cret"));
+        let second = pool.lease(Duration::from_secs(5)).unwrap();
+        assert_eq!((first.member, second.member), (1, 2));
+        assert_eq!(pool.registered_count(), 2);
+    }
+}

@@ -12,15 +12,22 @@
 //! # Message flow
 //!
 //! ```text
-//! worker                                supervisor
-//!   | -- Ready{worker,pid} --------------> |   (handshake, routes the
-//!   | <------- Hello{version,seed,...} --- |    connection to its slot)
-//!   | <------- Task{index,attempt,...} --- |
-//!   | -- Progress{index,value} ----------> |   (0..n per task)
-//!   | -- Heartbeat{busy} ----------------> |   (every heartbeat interval)
-//!   | -- Outcome{index,attempt,result} --> |
-//!   | <------- Task | Shutdown ----------- |
+//! worker                                    supervisor
+//!   | -- Ready{worker,pid,protocol,token} --> |   (handshake: routes spawned
+//!   | <------- Hello{version,seed,...} ------ |    workers to their slot;
+//!   |     (or Reject{reason} + close)         |    registers TCP workers
+//!   | <------- Task{index,attempt,...} ------ |    after token/version check)
+//!   | -- Progress{index,value} -------------> |   (0..n per task)
+//!   | -- Heartbeat{busy} -------------------> |   (every heartbeat interval)
+//!   | -- Outcome{index,attempt,result} -----> |
+//!   | <------- Task | Shutdown -------------- |
+//!   | -- Goodbye ---------------------------> |   (clean worker departure)
 //! ```
+//!
+//! The same frames flow over every transport (Unix socket or TCP — see
+//! [`crate::ipc::transport`]); only the trust model differs. Over TCP the
+//! `Ready` frame must carry the shared token and a matching protocol
+//! version, or the supervisor answers `Reject` and drops the connection.
 //!
 //! One `Task` frame is **one attempt**: the supervisor owns the retry
 //! policy (it must — a worker that dies mid-attempt cannot retry itself),
@@ -37,8 +44,12 @@ use std::collections::BTreeMap;
 use std::io::{self, Read, Write};
 
 /// Bumped on any incompatible change; the worker refuses a mismatched
-/// supervisor rather than misinterpreting frames.
-pub const PROTOCOL_VERSION: u64 = 1;
+/// supervisor rather than misinterpreting frames, and the accepting side
+/// ([`crate::ipc::pool::WorkerPool`]) rejects a mismatched worker at
+/// registration. v2 added the distributed-execution handshake: `Ready`
+/// carries the speaker's protocol version and (for TCP peers) the shared
+/// auth token, plus the `Goodbye`/`Reject` lifecycle frames.
+pub const PROTOCOL_VERSION: u64 = 2;
 
 /// Upper bound on a single frame's payload (64 MiB). Experiment results
 /// are JSON metric objects; anything larger indicates a corrupted stream.
@@ -47,9 +58,19 @@ pub const MAX_FRAME: usize = 64 << 20;
 /// Result of one task attempt, as reported by a worker.
 #[derive(Debug, Clone, PartialEq)]
 pub enum WireResult {
-    Ok { value: Json },
-    /// `panicked` distinguishes a contained panic from an `Err` return.
-    Err { message: String, panicked: bool },
+    /// The experiment function returned a value.
+    Ok {
+        /// The returned metrics object.
+        value: Json,
+    },
+    /// The attempt failed; `panicked` distinguishes a contained panic
+    /// from an `Err` return.
+    Err {
+        /// Human-readable error/panic message.
+        message: String,
+        /// True when the failure was a contained panic.
+        panicked: bool,
+    },
 }
 
 /// One protocol message (either direction).
@@ -59,44 +80,115 @@ pub enum Msg {
     /// Handshake: first frame on a fresh connection. `spawn` echoes the
     /// supervisor-assigned spawn generation so a connection from a stale
     /// (crashed and replaced) incarnation of a slot can never be mistaken
-    /// for the replacement worker.
-    Ready { worker: u64, pid: u64, spawn: u64 },
+    /// for the replacement worker. `protocol` declares the worker's wire
+    /// version and `token` carries the shared secret — TCP-registered
+    /// workers are untrusted, so the accepting side verifies both before
+    /// the connection is allowed anywhere near a run (a mismatch is
+    /// answered with [`Msg::Reject`] and a closed connection).
+    Ready {
+        /// Slot id (spawned workers) or self-chosen id (remote workers).
+        worker: u64,
+        /// The worker's OS process id, for log attribution.
+        pid: u64,
+        /// Spawn generation within the slot (spawned workers; 0 otherwise).
+        spawn: u64,
+        /// The worker's [`PROTOCOL_VERSION`].
+        protocol: u64,
+        /// Shared auth token; required by TCP pools, unused over Unix
+        /// sockets (filesystem permissions are the trust boundary there).
+        token: Option<String>,
+    },
+    /// Clean departure: the worker is about to close this connection
+    /// deliberately (rolling restart, per-connection task budget) and
+    /// guarantees it will execute nothing sent after this frame. The
+    /// supervisor re-queues any dispatch that crossed with it **without**
+    /// consuming a retry attempt or crash budget.
+    Goodbye,
     /// Liveness signal; `busy` names the task index being executed, if any.
-    Heartbeat { worker: u64, busy: Option<u64> },
+    Heartbeat {
+        /// The sending worker's id.
+        worker: u64,
+        /// Wire index of the task currently executing (`None` = idle).
+        busy: Option<u64>,
+    },
     /// In-task partial progress (`TaskContext::save_progress` relay).
-    Progress { index: u64, value: Json },
+    Progress {
+        /// Wire index of the task reporting progress.
+        index: u64,
+        /// The saved progress payload.
+        value: Json,
+    },
     /// Terminal report for one attempt.
-    Outcome { index: u64, attempt: u64, duration_secs: f64, result: WireResult },
+    Outcome {
+        /// Wire index of the finished task.
+        index: u64,
+        /// The attempt number this outcome answers.
+        attempt: u64,
+        /// Wall-clock execution time inside the worker.
+        duration_secs: f64,
+        /// The attempt's result.
+        result: WireResult,
+    },
 
     // ---- supervisor → worker -------------------------------------------
     /// Run-wide configuration; first frame after `Ready`.
     Hello {
+        /// The supervisor's [`PROTOCOL_VERSION`].
         protocol: u64,
+        /// Experiment version salt (task hashing must match).
         version: String,
+        /// Base RNG seed; per-task seeds derive from it and the task id.
         run_seed: u64,
+        /// The matrix's run-wide settings.
         settings: BTreeMap<String, Json>,
+        /// Heartbeat interval the worker must observe, in milliseconds.
         heartbeat_ms: u64,
     },
     /// One attempt assignment.
     Task {
+        /// Wire handle for this task (the supervisor's pulled-task index).
         index: u64,
+        /// 1-based attempt number.
         attempt: u64,
+        /// Parameter assignment, in matrix declaration order.
         params: Vec<(String, ParamValue)>,
         /// Progress restored from a previous attempt, if any.
         restored: Option<Json>,
     },
-    /// Orderly termination; the worker drains and exits.
+    /// Orderly termination; the worker drains and exits (standing remote
+    /// workers treat this as end-of-run and reconnect for the next one).
     Shutdown,
+    /// Registration refused (bad auth token, protocol mismatch). Terminal:
+    /// the connection is closed right after, and the worker must not
+    /// retry with the same credentials.
+    Reject {
+        /// Human-readable refusal reason, surfaced in the worker's error.
+        reason: String,
+    },
 }
 
 impl Msg {
+    /// Serializes the message to its wire JSON shape.
     pub fn to_json(&self) -> Json {
         match self {
-            Msg::Ready { worker, pid, spawn } => Json::obj(vec![
+            Msg::Ready { worker, pid, spawn, protocol, token } => Json::obj(vec![
                 ("msg", Json::str("ready")),
                 ("worker", Json::int(*worker as i64)),
                 ("pid", Json::int(*pid as i64)),
                 ("spawn", Json::int(*spawn as i64)),
+                ("protocol", Json::int(*protocol as i64)),
+                (
+                    "token",
+                    token
+                        .as_ref()
+                        .map(|t| Json::str(t.clone()))
+                        .unwrap_or(Json::Null),
+                ),
+            ]),
+            Msg::Goodbye => Json::obj(vec![("msg", Json::str("goodbye"))]),
+            Msg::Reject { reason } => Json::obj(vec![
+                ("msg", Json::str("reject")),
+                ("reason", Json::str(reason.clone())),
             ]),
             Msg::Heartbeat { worker, busy } => Json::obj(vec![
                 ("msg", Json::str("heartbeat")),
@@ -161,6 +253,8 @@ impl Msg {
         }
     }
 
+    /// Parses a wire JSON document back into a message; `None` for
+    /// unknown or malformed shapes.
     pub fn from_json(j: &Json) -> Option<Msg> {
         let u64_field = |name: &str| j.get(name).and_then(|v| v.as_i64()).map(|v| v as u64);
         match j.get("msg")?.as_str()? {
@@ -168,6 +262,21 @@ impl Msg {
                 worker: u64_field("worker")?,
                 pid: u64_field("pid")?,
                 spawn: u64_field("spawn").unwrap_or(0),
+                // Absent on pre-v2 peers: 0 never matches PROTOCOL_VERSION,
+                // so an accepting pool rejects them with a clear reason.
+                protocol: u64_field("protocol").unwrap_or(0),
+                token: j
+                    .get("token")
+                    .and_then(|t| t.as_str())
+                    .map(|t| t.to_string()),
+            }),
+            "goodbye" => Some(Msg::Goodbye),
+            "reject" => Some(Msg::Reject {
+                reason: j
+                    .get("reason")
+                    .and_then(|r| r.as_str())
+                    .unwrap_or("unspecified")
+                    .to_string(),
             }),
             "heartbeat" => Some(Msg::Heartbeat {
                 worker: u64_field("worker")?,
@@ -301,9 +410,28 @@ mod tests {
         assert!(read_frame(&mut cursor).unwrap().is_none());
     }
 
+    fn ready(worker: u64, pid: u64, spawn: u64) -> Msg {
+        Msg::Ready {
+            worker,
+            pid,
+            spawn,
+            protocol: PROTOCOL_VERSION,
+            token: None,
+        }
+    }
+
     #[test]
     fn all_messages_roundtrip() {
-        roundtrip(Msg::Ready { worker: 3, pid: 4242, spawn: 7 });
+        roundtrip(ready(3, 4242, 7));
+        roundtrip(Msg::Ready {
+            worker: 0,
+            pid: 1,
+            spawn: 0,
+            protocol: PROTOCOL_VERSION,
+            token: Some("s3cret".into()),
+        });
+        roundtrip(Msg::Goodbye);
+        roundtrip(Msg::Reject { reason: "auth token mismatch".into() });
         roundtrip(Msg::Heartbeat { worker: 0, busy: Some(17) });
         roundtrip(Msg::Heartbeat { worker: 1, busy: None });
         roundtrip(Msg::Progress { index: 9, value: Json::int(5) });
@@ -357,23 +485,33 @@ mod tests {
     }
 
     #[test]
+    fn pre_v2_ready_parses_with_zero_protocol() {
+        // A frame from an old worker (no protocol/token fields) must still
+        // parse — with protocol 0, which an accepting pool then rejects
+        // with a version message instead of a generic parse error.
+        let doc = parse(r#"{"msg":"ready","worker":1,"pid":2,"spawn":3}"#).unwrap();
+        let Some(Msg::Ready { protocol, token, .. }) = Msg::from_json(&doc) else {
+            panic!("pre-v2 ready must parse");
+        };
+        assert_eq!(protocol, 0);
+        assert_eq!(token, None);
+    }
+
+    #[test]
     fn multiple_frames_in_sequence() {
         let mut buf = Vec::new();
         write_frame(&mut buf, &Msg::Shutdown).unwrap();
-        write_frame(&mut buf, &Msg::Ready { worker: 1, pid: 2, spawn: 0 }).unwrap();
+        write_frame(&mut buf, &ready(1, 2, 0)).unwrap();
         let mut cursor = &buf[..];
         assert_eq!(read_frame(&mut cursor).unwrap(), Some(Msg::Shutdown));
-        assert_eq!(
-            read_frame(&mut cursor).unwrap(),
-            Some(Msg::Ready { worker: 1, pid: 2, spawn: 0 })
-        );
+        assert_eq!(read_frame(&mut cursor).unwrap(), Some(ready(1, 2, 0)));
         assert_eq!(read_frame(&mut cursor).unwrap(), None);
     }
 
     #[test]
     fn truncated_frame_is_an_error() {
         let mut buf = Vec::new();
-        write_frame(&mut buf, &Msg::Ready { worker: 1, pid: 2, spawn: 0 }).unwrap();
+        write_frame(&mut buf, &ready(1, 2, 0)).unwrap();
         buf.truncate(buf.len() - 3);
         let mut cursor = &buf[..];
         assert!(read_frame(&mut cursor).is_err());

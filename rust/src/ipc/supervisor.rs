@@ -1,26 +1,64 @@
-//! Supervisor side of the process-isolated backend.
+//! Supervisor side of the process-isolated and distributed backends.
 //!
-//! The supervisor owns the run: it binds a Unix domain socket, spawns `N`
-//! worker processes (re-executions of the current binary, see
-//! [`crate::ipc::worker`]), hands out **one attempt at a time** over the
-//! wire, and folds the streamed outcomes back into the same
+//! The supervisor owns the run: it obtains worker connections — either by
+//! **spawning** worker processes over a private Unix socket
+//! ([`WorkerSource::Spawn`], the `--isolation process` tier) or by
+//! **leasing** standing workers that registered with a TCP
+//! [`WorkerPool`] ([`WorkerSource::Pool`], the `--isolation remote`
+//! tier) — hands out **one attempt at a time** over the wire, and folds
+//! the streamed outcomes back into the same
 //! journal/metrics/progress/record pipeline the thread backend uses.
 //!
 //! # Crash semantics
 //!
-//! A worker that dies mid-task (segfault, abort, OOM-kill, `kill -9`) is
-//! detected by connection EOF — or, for a wedged-but-alive worker, by a
-//! heartbeat silence longer than the heartbeat timeout, in which case the
-//! supervisor kills it. Either way the in-flight attempt is journaled as
-//! `TaskFailed` (kind [`FailureKind::Crash`]) and the task is requeued
-//! under the run's [`RetryPolicy`] exactly as an in-process failure would
-//! be: a policy allowing another attempt re-dispatches it (journaled
-//! `TaskStarted` again, `tasks_retried` incremented); an exhausted policy
-//! records a final failed outcome. The dead worker's slot respawns a fresh
-//! process, up to `crash_budget` respawns per slot. A slot that exhausts
-//! its budget retires; if **every** slot retires with work still pending,
-//! the remaining tasks become failed outcomes (never silently dropped),
-//! so a run always accounts for each spec exactly once.
+//! A worker that dies mid-task (segfault, abort, OOM-kill, `kill -9`,
+//! dropped network link) is detected by connection EOF — or, for a
+//! wedged-but-alive worker, by a heartbeat silence longer than the
+//! heartbeat timeout, in which case the supervisor kills it. Either way
+//! the in-flight attempt is journaled as `TaskFailed` (kind
+//! [`FailureKind::Crash`]) and the task is requeued under the run's
+//! [`RetryPolicy`] exactly as an in-process failure would be. What
+//! replaces the worker depends on the source:
+//!
+//! - **Spawn**: the slot respawns a fresh process, up to `crash_budget`
+//!   respawns per slot over the whole run.
+//! - **Pool**: the slot leases the next registered worker. The crashed
+//!   worker itself may reconnect and re-register (standing workers retry
+//!   with backoff — see [`crate::ipc::worker::serve_remote`]), so the
+//!   budget counts **consecutive** worker losses per slot and resets on
+//!   every completed attempt: a mid-run drop that rejoins does not creep
+//!   toward retirement, while a pool supplying only instantly-dying
+//!   connections still retires the slot after `crash_budget + 1` losses
+//!   in a row. A lease that times out (no registered worker at all)
+//!   counts the same way.
+//!
+//! A slot that exhausts its budget retires; if **every** slot retires
+//! with work still pending, the remaining tasks become failed outcomes
+//! (never silently dropped), so a run always accounts for each spec
+//! exactly once.
+//!
+//! # Task timeouts (distinct from crashes)
+//!
+//! With [`SupervisorOptions::task_timeout`] set, an attempt that is still
+//! running when its wall-clock budget lapses is **stopped** — the spawned
+//! worker is killed, a leased connection is dropped — journaled as
+//! [`Event::TaskTimedOut`], and requeued under the same [`RetryPolicy`]
+//! with kind [`FailureKind::Timeout`]. A timeout is the *task's* fault,
+//! not the worker's: it never consumes crash budget, so a sweep with a
+//! few runaway configurations cannot retire its slots. (A leased remote
+//! worker keeps executing the runaway attempt until it finishes, then
+//! notices the dead connection and re-registers; a spawned worker is
+//! simply killed and respawned.)
+//!
+//! # Clean departures
+//!
+//! A worker that closes its connection deliberately announces it with a
+//! `Goodbye` frame (standing workers do this when they hit their
+//! per-connection task budget). A dispatch that crosses with a `Goodbye`
+//! is re-queued without consuming a retry attempt or crash budget — the
+//! worker guarantees it executes nothing sent after the frame. The
+//! re-dispatch repeats the attempt's `TaskStarted` journal line (the
+//! first one never ran); results stay exactly-once.
 //!
 //! # What workers never do
 //!
@@ -28,7 +66,8 @@
 //! cache, checkpoint store, journal, and notifier live exclusively in the
 //! supervisor process — which is why the process backend can open the
 //! cache in single-writer mode ([`crate::coordinator::cache::ResultCache`]
-//! `::exclusive`) and skip per-miss disk probes.
+//! `::exclusive`) and skip per-miss disk probes, and why a remote worker
+//! machine needs no shared filesystem: results travel back over the wire.
 
 use crate::coordinator::error::{FailureKind, MementoError, TaskFailure};
 use crate::coordinator::journal::{Event, Journal};
@@ -39,11 +78,12 @@ use crate::coordinator::retry::RetryPolicy;
 use crate::coordinator::run::{EventSink, RunEvent};
 use crate::coordinator::source::{DrainOnceSource, SpecFilter, SpecSource, ABORT_DRAIN_LIMIT};
 use crate::coordinator::task::{TaskId, TaskSpec};
+use crate::ipc::pool::WorkerPool;
 use crate::ipc::proto::{read_frame, write_frame, Msg, WireResult, PROTOCOL_VERSION};
+use crate::ipc::transport::{bind_unix, WireListener, WireStream};
 use crate::ipc::worker::{ENV_SOCKET, ENV_WORKER_ID, ENV_WORKER_SPAWN};
 use crate::util::json::Json;
 use std::collections::{BTreeMap, VecDeque};
-use std::os::unix::net::{UnixListener, UnixStream};
 use std::path::PathBuf;
 use std::process::{Child, Command, Stdio};
 use std::sync::atomic::{AtomicBool, AtomicU32, Ordering};
@@ -54,11 +94,16 @@ use std::time::{Duration, Instant};
 /// Supervisor configuration.
 #[derive(Debug, Clone)]
 pub struct SupervisorOptions {
-    /// Worker processes to run concurrently.
+    /// Worker processes to run concurrently (spawn mode), or concurrent
+    /// worker leases (pool mode).
     pub workers: usize,
-    /// Respawns allowed **per worker slot** before the slot retires.
+    /// Worker-loss budget **per slot** before the slot retires. Spawn
+    /// mode counts respawns over the whole run; pool mode counts
+    /// *consecutive* losses without a completed attempt (see the module
+    /// docs).
     pub crash_budget: u32,
-    /// Retry policy applied to failed attempts *and* worker crashes.
+    /// Retry policy applied to failed attempts, worker crashes, *and*
+    /// task timeouts.
     pub retry: RetryPolicy,
     /// Stop dispatching after the first failed task.
     pub fail_fast: bool,
@@ -72,15 +117,23 @@ pub struct SupervisorOptions {
     /// exceed `heartbeat`; heartbeats flow *during* task execution, so
     /// this does not bound task duration.
     pub heartbeat_timeout: Duration,
-    /// Spawn → `Ready` handshake deadline per worker.
+    /// Per-task wall-clock budget: an attempt still running after this
+    /// long is stopped, journaled as a timeout, and requeued under
+    /// `retry` — without consuming crash budget. `None` = unbounded (the
+    /// default; heartbeats already distinguish slow from hung).
+    pub task_timeout: Option<Duration>,
+    /// Spawn → `Ready` handshake deadline per worker (spawn mode), and
+    /// the per-acquisition lease deadline (pool mode).
     pub connect_timeout: Duration,
     /// Program to execute for workers. `None` = the current executable.
+    /// Spawn mode only.
     pub worker_program: Option<PathBuf>,
-    /// Argument vector for worker processes. The default re-uses the
-    /// current process's own arguments, which is correct for binaries that
-    /// reach `Memento::run` again when re-executed (the run call notices
-    /// the worker environment and serves tasks instead). Test binaries
-    /// should pass a libtest filter selecting their worker-entry `#[test]`.
+    /// Argument vector for worker processes (spawn mode only). The
+    /// default re-uses the current process's own arguments, which is
+    /// correct for binaries that reach `Memento::run` again when
+    /// re-executed (the run call notices the worker environment and
+    /// serves tasks instead). Test binaries should pass a libtest filter
+    /// selecting their worker-entry `#[test]`.
     pub worker_args: Vec<String>,
 }
 
@@ -95,6 +148,7 @@ impl Default for SupervisorOptions {
             run_seed: 0,
             heartbeat: Duration::from_millis(200),
             heartbeat_timeout: Duration::from_secs(10),
+            task_timeout: None,
             connect_timeout: Duration::from_secs(20),
             worker_program: None,
             worker_args: std::env::args().skip(1).collect(),
@@ -102,13 +156,27 @@ impl Default for SupervisorOptions {
     }
 }
 
+/// Where the supervisor gets worker connections from.
+pub enum WorkerSource {
+    /// Spawn worker processes locally, connected over a private Unix
+    /// socket in a fresh temp dir (the `--isolation process` tier).
+    Spawn,
+    /// Lease standing workers that registered with this pool (the
+    /// distributed tier). The pool may be shared across runs — see
+    /// [`crate::ipc::pool`].
+    Pool(Arc<WorkerPool>),
+}
+
 /// Callbacks wiring supervisor events into the coordinator pipeline. All
 /// optional; a bare supervisor still returns a correct report.
 #[derive(Default)]
 #[allow(clippy::type_complexity)]
 pub struct SupervisorHooks {
+    /// Append-only run journal (task lifecycle events).
     pub journal: Option<Arc<Journal>>,
+    /// Shared metrics registry (attempt counters, timers).
     pub metrics: Option<Arc<RunMetrics>>,
+    /// Live progress counters for the CLI progress line.
     pub progress: Option<Arc<ProgressState>>,
     /// Persist in-task partial progress (checkpoint `progress/` slot).
     pub save_progress: Option<Arc<dyn Fn(&TaskId, &Json) + Send + Sync>>,
@@ -122,7 +190,7 @@ pub struct SupervisorHooks {
     pub events: Option<EventSink>,
     /// Cooperative cancellation: once set, nothing new is dispatched,
     /// pending retries are skipped, busy workers are asked to shut down
-    /// and then killed (their in-flight attempt is journaled as
+    /// and then stopped (their in-flight attempt is journaled as
     /// interrupted and accounted as skipped), and the lazy source is not
     /// consumed further — cancel latency is bounded by roughly one
     /// heartbeat, not one attempt.
@@ -147,6 +215,7 @@ pub struct ProcessReport {
     pub completed: usize,
     /// Specs abandoned by a fail-fast abort or a cancel.
     pub skipped: Vec<TaskSpec>,
+    /// True when fail-fast stopped the run early.
     pub aborted: bool,
     /// True when the cancel flag stopped the run early.
     pub cancelled: bool,
@@ -154,10 +223,13 @@ pub struct ProcessReport {
     /// [`ABORT_DRAIN_LIMIT`] before exhausting the lazy source:
     /// `skipped`/failed-orphan accounting is then a lower bound.
     pub drain_truncated: bool,
-    /// Worker deaths observed (crashes + hang-kills + failed spawns).
+    /// Worker deaths observed (crashes + hang-kills + failed
+    /// spawns/leases).
     pub crashes: u32,
-    /// Replacement workers spawned after a crash.
+    /// Replacement workers spawned after a crash (spawn mode).
     pub respawns: u32,
+    /// Attempts stopped for exceeding the per-task wall-clock budget.
+    pub timeouts: u32,
 }
 
 /// One queued attempt. `index` is the task's position in the pulled-task
@@ -194,6 +266,13 @@ struct PulledTask {
     id: TaskId,
 }
 
+/// Where this run's worker connections come from, as held by the shared
+/// state (the spawn socket path, or the lease pool).
+enum Mode {
+    Spawn { socket_path: PathBuf },
+    Pool(Arc<WorkerPool>),
+}
+
 struct Shared {
     /// The lazy spec stream — pulled one task per dispatch, never
     /// materialized. The exhaustion latch, fire-once completion hook,
@@ -206,41 +285,59 @@ struct Shared {
     settings: BTreeMap<String, Json>,
     opts: SupervisorOptions,
     hooks: SupervisorHooks,
-    socket_path: PathBuf,
+    mode: Mode,
     q: Mutex<Queue>,
     cv: Condvar,
     crashes: AtomicU32,
     respawns: AtomicU32,
+    timeouts: AtomicU32,
     /// Set when a post-abort/retirement drain gave up before exhausting
     /// the source (see [`ABORT_DRAIN_LIMIT`]). The once-per-run latch for
     /// the abort drain itself lives inside [`DrainOnceSource`].
     drain_truncated: AtomicBool,
 }
 
-/// A live worker: the child process plus both halves of its connection.
+/// A live worker: the connection halves, plus the child process handle
+/// when this supervisor spawned it (`None` for leased pool workers —
+/// their process belongs to another machine or supervisor-of-one).
 struct Conn {
-    child: Child,
-    reader: UnixStream,
-    writer: UnixStream,
+    child: Option<Child>,
+    reader: Box<dyn WireStream>,
+    writer: Box<dyn WireStream>,
 }
 
 /// Runs every spec the lazy `source` yields across `opts.workers` worker
-/// processes and returns the collected report. Blocks until all pulled
-/// specs are accounted for and all children have exited. The source is
-/// consumed one task per dispatch — never materialized.
+/// connections obtained from `workers`, and returns the collected report.
+/// Blocks until all pulled specs are accounted for and (in spawn mode)
+/// all children have exited. The source is consumed one task per dispatch
+/// — never materialized.
 pub fn run(
     source: SpecSource,
     settings: BTreeMap<String, Json>,
     opts: SupervisorOptions,
     mut hooks: SupervisorHooks,
+    workers: WorkerSource,
 ) -> Result<ProcessReport, MementoError> {
-    let workers = opts.workers.max(1);
+    let slots = opts.workers.max(1);
 
-    let sock_dir = crate::util::fs::TempDir::new("ipc")
-        .map_err(|e| MementoError::ipc(format!("create socket dir: {e}")))?;
-    let socket_path = sock_dir.join("supervisor.sock");
-    let listener = UnixListener::bind(&socket_path)
-        .map_err(|e| MementoError::ipc(format!("bind {}: {e}", socket_path.display())))?;
+    // Spawn mode binds a private Unix listener and routes incoming
+    // connections to slots by worker id; pool mode needs neither (the
+    // pool owns its own acceptor).
+    let (mode, listener, sock_dir) = match workers {
+        WorkerSource::Pool(pool) => (Mode::Pool(pool), None, None),
+        WorkerSource::Spawn => {
+            let dir = crate::util::fs::TempDir::new("ipc")
+                .map_err(|e| MementoError::ipc(format!("create socket dir: {e}")))?;
+            let socket_path = dir.join("supervisor.sock");
+            let listener = bind_unix(&socket_path)
+                .map_err(|e| MementoError::ipc(format!("bind {}: {e}", socket_path.display())))?;
+            (
+                Mode::Spawn { socket_path },
+                Some(Box::new(listener) as Box<dyn WireListener>),
+                Some(dir),
+            )
+        }
+    };
 
     let drained_hook = hooks.on_source_drained.take();
     let restore_filter = hooks.restore_filter.take();
@@ -250,42 +347,50 @@ pub fn run(
         settings,
         opts,
         hooks,
-        socket_path: socket_path.clone(),
+        mode,
         q: Mutex::new(Queue {
             pending: VecDeque::new(),
             in_flight: 0,
             completed: 0,
             skipped: Vec::new(),
             abort: false,
-            live_slots: workers,
+            live_slots: slots,
         }),
         cv: Condvar::new(),
         crashes: AtomicU32::new(0),
         respawns: AtomicU32::new(0),
+        timeouts: AtomicU32::new(0),
         drain_truncated: AtomicBool::new(false),
     });
 
-    // Acceptor: routes each incoming connection to its slot by the worker
-    // id in the Ready handshake (respawns make "arrival order" unreliable),
-    // tagged with the handshake's spawn generation so a slot can discard
-    // connections from incarnations it has already given up on.
-    let mut routes: Vec<Sender<(UnixStream, u64)>> = Vec::with_capacity(workers);
-    let mut slot_rxs: Vec<Receiver<(UnixStream, u64)>> = Vec::with_capacity(workers);
-    for _ in 0..workers {
-        let (tx, rx) = mpsc::channel();
-        routes.push(tx);
-        slot_rxs.push(rx);
-    }
+    // Spawn-mode acceptor: routes each incoming connection to its slot by
+    // the worker id in the Ready handshake (respawns make "arrival order"
+    // unreliable), tagged with the handshake's spawn generation so a slot
+    // can discard connections from incarnations it has already given up
+    // on.
+    let mut slot_rxs: Vec<Option<Receiver<(Box<dyn WireStream>, u64)>>> = Vec::new();
     let accept_stop = Arc::new(AtomicBool::new(false));
-    let acceptor = {
-        let stop = Arc::clone(&accept_stop);
-        std::thread::Builder::new()
-            .name("memento-ipc-accept".into())
-            .spawn(move || accept_loop(listener, routes, stop))
-            .map_err(|e| MementoError::ipc(format!("spawn acceptor: {e}")))?
-    };
+    let mut acceptor = None;
+    match listener {
+        None => slot_rxs.resize_with(slots, || None),
+        Some(listener) => {
+            let mut routes: Vec<Sender<(Box<dyn WireStream>, u64)>> = Vec::with_capacity(slots);
+            for _ in 0..slots {
+                let (tx, rx) = mpsc::channel();
+                routes.push(tx);
+                slot_rxs.push(Some(rx));
+            }
+            let stop = Arc::clone(&accept_stop);
+            acceptor = Some(
+                std::thread::Builder::new()
+                    .name("memento-ipc-accept".into())
+                    .spawn(move || accept_loop(listener, routes, stop))
+                    .map_err(|e| MementoError::ipc(format!("spawn acceptor: {e}")))?,
+            );
+        }
+    }
 
-    let slots: Vec<_> = slot_rxs
+    let slot_handles: Vec<_> = slot_rxs
         .into_iter()
         .enumerate()
         .map(|(slot, rx)| {
@@ -296,11 +401,14 @@ pub fn run(
                 .expect("spawn supervisor slot thread")
         })
         .collect();
-    for s in slots {
+    for s in slot_handles {
         let _ = s.join();
     }
     accept_stop.store(true, Ordering::SeqCst);
-    let _ = acceptor.join();
+    if let Some(a) = acceptor {
+        let _ = a.join();
+    }
+    drop(sock_dir);
 
     // All slot threads are joined: the queue is ours, no copies needed.
     let mut q = shared.q.lock().unwrap();
@@ -312,6 +420,7 @@ pub fn run(
 
     let crashes = shared.crashes.load(Ordering::SeqCst);
     let respawns = shared.respawns.load(Ordering::SeqCst);
+    let timeouts = shared.timeouts.load(Ordering::SeqCst);
     let cancelled = shared.cancelled();
     let drain_truncated = shared.drain_truncated.load(Ordering::SeqCst);
     if let Some(m) = &shared.hooks.metrics {
@@ -332,54 +441,42 @@ pub fn run(
         drain_truncated,
         crashes,
         respawns,
+        timeouts,
     })
 }
 
-// ---- acceptor -----------------------------------------------------------
+// ---- acceptor (spawn mode) ----------------------------------------------
 
 fn accept_loop(
-    listener: UnixListener,
-    routes: Vec<Sender<(UnixStream, u64)>>,
+    listener: Box<dyn WireListener>,
+    routes: Vec<Sender<(Box<dyn WireStream>, u64)>>,
     stop: Arc<AtomicBool>,
 ) {
-    listener
-        .set_nonblocking(true)
-        .expect("nonblocking listener");
-    // Poll interval backs off while nothing is connecting (steady state
-    // for a long run: all workers connected minutes ago) and snaps back
-    // to fast polling whenever a connection arrives (spawn bursts).
-    let mut idle_sleep = Duration::from_millis(2);
-    while !stop.load(Ordering::SeqCst) {
-        match listener.accept() {
-            Ok((stream, _addr)) => {
-                idle_sleep = Duration::from_millis(2);
-                let _ = stream.set_nonblocking(false);
-                // The handshake must arrive promptly; a silent connection
-                // is dropped rather than wedging the acceptor.
-                let _ = stream.set_read_timeout(Some(Duration::from_secs(5)));
-                match read_frame(&mut &stream) {
-                    Ok(Some(Msg::Ready { worker, spawn, .. })) => {
-                        if let Some(tx) = routes.get(worker as usize) {
-                            let _ = tx.send((stream, spawn));
-                        }
-                    }
-                    _ => drop(stream),
+    crate::ipc::transport::poll_accept(listener, &stop, |stream| {
+        // The handshake must arrive promptly; a silent connection is
+        // dropped rather than wedging the acceptor. Reading it inline is
+        // fine here — only this supervisor's own spawned children can
+        // reach the private Unix socket (unlike the worker pool's TCP
+        // listener, which handshakes untrusted peers off-thread).
+        let _ = stream.set_stream_read_timeout(Some(Duration::from_secs(5)));
+        let mut reader = stream;
+        match read_frame(&mut reader) {
+            Ok(Some(Msg::Ready { worker, spawn, .. })) => {
+                if let Some(tx) = routes.get(worker as usize) {
+                    let _ = tx.send((reader, spawn));
                 }
             }
-            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
-                std::thread::sleep(idle_sleep);
-                idle_sleep = (idle_sleep * 2).min(Duration::from_millis(100));
-            }
-            Err(_) => return,
+            _ => drop(reader),
         }
-    }
+    });
 }
 
 // ---- slot state machine -------------------------------------------------
 
-fn slot_loop(sh: &Shared, slot: usize, rx: Receiver<(UnixStream, u64)>) {
+fn slot_loop(sh: &Shared, slot: usize, rx: Option<Receiver<(Box<dyn WireStream>, u64)>>) {
     let mut conn: Option<Conn> = None;
     let mut crashes_used: u32 = 0;
+    let pooled = matches!(sh.mode, Mode::Pool(_));
     // Bumped on every spawn; the worker echoes it in Ready, and
     // spawn_worker discards routed connections from older generations.
     let mut spawn_seq: u64 = 0;
@@ -399,15 +496,22 @@ fn slot_loop(sh: &Shared, slot: usize, rx: Receiver<(UnixStream, u64)>) {
                 return;
             }
             spawn_seq += 1;
-            match spawn_worker(sh, slot, &rx, spawn_seq, crashes_used > 0) {
+            let acquired = match &sh.mode {
+                Mode::Spawn { .. } => {
+                    let rx = rx.as_ref().expect("spawn mode has a route");
+                    spawn_worker(sh, slot, rx, spawn_seq, crashes_used > 0)
+                }
+                Mode::Pool(pool) => lease_worker(sh, pool),
+            };
+            match acquired {
                 Ok(c) => conn = Some(c),
                 Err(e) => {
                     crashes_used += 1;
                     sh.crashes.fetch_add(1, Ordering::SeqCst);
-                    eprintln!("memento supervisor: slot {slot} worker spawn failed: {e}");
+                    eprintln!("memento supervisor: slot {slot} worker acquisition failed: {e}");
                     sh.emit(RunEvent::WorkerCrashed {
                         slot,
-                        message: format!("worker spawn failed: {e}"),
+                        message: format!("worker acquisition failed: {e}"),
                     });
                     sh.give_back(att);
                     continue;
@@ -415,10 +519,16 @@ fn slot_loop(sh: &Shared, slot: usize, rx: Receiver<(UnixStream, u64)>) {
             }
         }
         match serve_attempt(sh, slot, conn.as_mut().unwrap(), att) {
-            Serve::Completed => {}
+            Serve::Completed => {
+                if pooled {
+                    // Pool budgets count *consecutive* losses: a completed
+                    // attempt is proof the supply works again.
+                    crashes_used = 0;
+                }
+            }
             Serve::NotDelivered => {
                 // The Task frame never left this process: the worker died
-                // while idle. Reap and respawn, but return the attempt
+                // while idle. Reap and replace, but return the attempt
                 // unconsumed — the task was never touched.
                 let mut dead = conn.take().unwrap();
                 let status = reap(&mut dead);
@@ -428,6 +538,15 @@ fn slot_loop(sh: &Shared, slot: usize, rx: Receiver<(UnixStream, u64)>) {
                     slot,
                     message: format!("worker died while idle ({status})"),
                 });
+                sh.give_back(att);
+            }
+            Serve::Departed => {
+                // Clean Goodbye: the worker left voluntarily (rolling
+                // restart / per-connection budget) and guarantees the
+                // crossed dispatch never ran. Replace the connection and
+                // re-dispatch — no crash metric, no budget, no retry
+                // attempt consumed.
+                drop(conn.take());
                 sh.give_back(att);
             }
             Serve::Crashed => {
@@ -448,12 +567,31 @@ fn slot_loop(sh: &Shared, slot: usize, rx: Receiver<(UnixStream, u64)>) {
                     0.0,
                 );
             }
+            Serve::TimedOut => {
+                // The attempt outlived its wall-clock budget. Stop the
+                // worker (kill a spawned child; drop a leased connection
+                // — its standing worker re-registers once the runaway
+                // task lets go), journal a timeout, and requeue under the
+                // retry policy. Deliberate stops are the *task's* fault:
+                // no crash budget is consumed.
+                let mut dead = conn.take().unwrap();
+                let status = reap(&mut dead);
+                sh.timeouts.fetch_add(1, Ordering::SeqCst);
+                let budget = sh.opts.task_timeout.unwrap_or_default();
+                sh.emit(RunEvent::WorkerCrashed {
+                    slot,
+                    message: format!(
+                        "task exceeded its {budget:?} wall-clock budget; worker stopped ({status})"
+                    ),
+                });
+                sh.attempt_timed_out(att, budget);
+            }
             Serve::Interrupted => {
                 // Cancel mid-attempt. The worker reads frames only between
                 // attempts, so Shutdown alone cannot interrupt it: send it
                 // anyway (a racing attempt that finishes inside the grace
                 // window lets the worker exit cleanly), give the process
-                // one heartbeat of grace, then kill it. The interruption
+                // one heartbeat of grace, then stop it. The interruption
                 // is journaled and the spec accounted as skipped — cancel
                 // latency is bounded by heartbeats, not by the attempt's
                 // duration. Deliberate stops don't consume crash budget.
@@ -461,8 +599,13 @@ fn slot_loop(sh: &Shared, slot: usize, rx: Receiver<(UnixStream, u64)>) {
                 let _ = write_frame(&mut dead.writer, &Msg::Shutdown);
                 let deadline = Instant::now() + sh.opts.heartbeat;
                 while Instant::now() < deadline {
-                    if matches!(dead.child.try_wait(), Ok(Some(_))) {
-                        break;
+                    match &mut dead.child {
+                        Some(child) => {
+                            if matches!(child.try_wait(), Ok(Some(_))) {
+                                break;
+                            }
+                        }
+                        None => break, // leased: nothing local to wait for
                     }
                     std::thread::sleep(Duration::from_millis(2));
                 }
@@ -480,9 +623,12 @@ fn slot_loop(sh: &Shared, slot: usize, rx: Receiver<(UnixStream, u64)>) {
         // writing into a full (unread) socket buffer, this fails its
         // write with EPIPE instead of letting `wait()` hang on a worker
         // that can never finish shutting down. Our buffered Shutdown
-        // frame is still delivered first.
-        let _ = c.reader.shutdown(std::net::Shutdown::Read);
-        let _ = c.child.wait();
+        // frame is still delivered first. (A leased standing worker takes
+        // the Shutdown as end-of-run and re-registers with its pool.)
+        let _ = c.reader.shutdown_read();
+        if let Some(mut child) = c.child {
+            let _ = child.wait();
+        }
     }
     sh.retire_slot(slot, crashes_used);
 }
@@ -494,8 +640,13 @@ enum Serve {
     /// The `Task` frame could not even be written: the worker was already
     /// dead and the task provably never reached it.
     NotDelivered,
+    /// The worker announced a clean departure (`Goodbye`) that crossed
+    /// with the dispatch; the task provably never ran.
+    Departed,
     /// The worker died (EOF/timeout/desync) after taking the task.
     Crashed,
+    /// The attempt exceeded [`SupervisorOptions::task_timeout`].
+    TimedOut,
     /// `Run::cancel` arrived while the attempt was executing: the slot
     /// stops the worker instead of waiting for the attempt to finish.
     Interrupted,
@@ -517,6 +668,13 @@ fn serve_attempt(sh: &Shared, slot: usize, conn: &mut Conn, att: Attempt) -> Ser
         restored,
     };
     let sent_at = Instant::now();
+    // A previous attempt's deadline handling may have shortened the read
+    // timeout; restore the heartbeat-silence baseline first.
+    if sh.opts.task_timeout.is_some() {
+        let _ = conn
+            .reader
+            .set_stream_read_timeout(Some(sh.opts.heartbeat_timeout));
+    }
     if write_frame(&mut conn.writer, &task).is_err() {
         return Serve::NotDelivered;
     }
@@ -531,6 +689,7 @@ fn serve_attempt(sh: &Shared, slot: usize, conn: &mut Conn, att: Attempt) -> Ser
         id: id.clone(),
         attempt: att.attempt,
     });
+    let task_deadline = sh.opts.task_timeout.map(|d| sent_at + d);
     // Once a cancel is noticed, the attempt gets one heartbeat of grace to
     // deliver a racing `Outcome` (a result the worker already computed
     // must not be thrown away and re-executed on resume) before the slot
@@ -538,18 +697,34 @@ fn serve_attempt(sh: &Shared, slot: usize, conn: &mut Conn, att: Attempt) -> Ser
     let mut cancel_deadline: Option<Instant> = None;
     loop {
         // Re-checked after every frame: a busy worker heartbeats at the
-        // heartbeat interval, so a cancel is noticed within roughly one
-        // heartbeat instead of after the whole attempt.
+        // heartbeat interval, so a cancel (or a lapsed task budget) is
+        // noticed within roughly one heartbeat instead of after the whole
+        // attempt.
         if cancel_deadline.is_none() && sh.cancelled() {
             cancel_deadline = Some(Instant::now() + sh.opts.heartbeat);
         }
+        let now = Instant::now();
         if let Some(deadline) = cancel_deadline {
-            let remaining = deadline.saturating_duration_since(Instant::now());
-            if remaining.is_zero() {
+            if now >= deadline {
                 return Serve::Interrupted;
             }
-            // Shorten reads to the remaining grace so the wait is bounded.
-            let _ = conn.reader.set_read_timeout(Some(remaining));
+        }
+        if let Some(deadline) = task_deadline {
+            if now >= deadline {
+                return Serve::TimedOut;
+            }
+        }
+        // Shorten reads to the nearest pending deadline so the wait is
+        // bounded (never beyond the heartbeat-silence baseline).
+        let nearest = match (cancel_deadline, task_deadline) {
+            (Some(c), Some(t)) => Some(c.min(t)),
+            (c, t) => c.or(t),
+        };
+        if let Some(deadline) = nearest {
+            let remaining = deadline.saturating_duration_since(now);
+            let _ = conn
+                .reader
+                .set_stream_read_timeout(Some(remaining.min(sh.opts.heartbeat_timeout)));
         }
         match read_frame(&mut conn.reader) {
             Ok(Some(Msg::Heartbeat { .. })) => continue,
@@ -561,6 +736,7 @@ fn serve_attempt(sh: &Shared, slot: usize, conn: &mut Conn, att: Attempt) -> Ser
                     sh.emit(RunEvent::TaskProgress { index: spec_index, id: pid, value });
                 }
             }
+            Ok(Some(Msg::Goodbye)) => return Serve::Departed,
             Ok(Some(Msg::Outcome { index, attempt, duration_secs, result })) => {
                 if index as usize != att.index || attempt != att.attempt as u64 {
                     eprintln!(
@@ -590,34 +766,90 @@ fn serve_attempt(sh: &Shared, slot: usize, conn: &mut Conn, att: Attempt) -> Ser
             // EOF, heartbeat-timeout, unexpected frame, or stream error —
             // all terminal for this worker. During a cancel grace window
             // the shortened read timing out (or the worker exiting early)
-            // is the expected interrupt path, not a crash.
+            // is the expected interrupt path, not a crash; likewise a
+            // lapsed task budget reads as a timeout, not a crash.
             Ok(Some(_)) | Ok(None) | Err(_) => {
-                return if cancel_deadline.is_some() {
-                    Serve::Interrupted
-                } else {
-                    Serve::Crashed
-                };
+                if cancel_deadline.is_some() {
+                    return Serve::Interrupted;
+                }
+                if task_deadline.is_some_and(|d| Instant::now() >= d) {
+                    return Serve::TimedOut;
+                }
+                return Serve::Crashed;
             }
         }
     }
 }
 
-/// Kills (idempotently) and reaps a dead worker, describing how it ended.
+/// Stops (idempotently) and reaps a dead worker, describing how it ended.
+/// Leased pool workers have no local child process: their connection is
+/// closed instead, and the remote process re-registers on its own.
 fn reap(conn: &mut Conn) -> String {
-    let _ = conn.child.kill();
-    match conn.child.wait() {
-        Ok(status) => status.to_string(),
-        Err(e) => format!("unwaitable: {e}"),
+    let _ = conn.reader.shutdown_both();
+    match &mut conn.child {
+        None => "remote connection closed".to_string(),
+        Some(child) => {
+            let _ = child.kill();
+            match child.wait() {
+                Ok(status) => status.to_string(),
+                Err(e) => format!("unwaitable: {e}"),
+            }
+        }
+    }
+}
+
+/// Leases the next registered pool worker and completes its run handshake
+/// (read deadline + `Hello`). Retries within the connect-timeout window:
+/// a queue can hold stale registrations whose worker died while parked,
+/// and those must not count as an acquisition failure while live ones
+/// wait behind them.
+fn lease_worker(sh: &Shared, pool: &Arc<WorkerPool>) -> Result<Conn, MementoError> {
+    let deadline = Instant::now() + sh.opts.connect_timeout;
+    loop {
+        let remaining = deadline.saturating_duration_since(Instant::now());
+        // `lease` blocks up to `remaining` itself, so a `None` here means
+        // the window elapsed (or the pool shut down) — terminal either
+        // way, never a spin.
+        let lease = if remaining.is_zero() { None } else { pool.lease(remaining) };
+        let Some(reg) = lease else {
+            return Err(MementoError::ipc(format!(
+                "no remote worker registered with the pool at {} within {:?}",
+                pool.endpoint(),
+                sh.opts.connect_timeout
+            )));
+        };
+        if reg
+            .stream
+            .set_stream_read_timeout(Some(sh.opts.heartbeat_timeout))
+            .is_err()
+        {
+            continue; // stale registration; try the next one
+        }
+        let Ok(mut writer) = reg.stream.try_clone_stream() else { continue };
+        let hello = Msg::Hello {
+            protocol: PROTOCOL_VERSION,
+            version: sh.opts.version.clone(),
+            run_seed: sh.opts.run_seed,
+            settings: sh.settings.clone(),
+            heartbeat_ms: sh.opts.heartbeat.as_millis().max(1) as u64,
+        };
+        if write_frame(&mut writer, &hello).is_err() {
+            continue; // worker died while parked in the queue
+        }
+        return Ok(Conn { child: None, reader: reg.stream, writer });
     }
 }
 
 fn spawn_worker(
     sh: &Shared,
     slot: usize,
-    rx: &Receiver<(UnixStream, u64)>,
+    rx: &Receiver<(Box<dyn WireStream>, u64)>,
     spawn_seq: u64,
     is_respawn: bool,
 ) -> Result<Conn, MementoError> {
+    let Mode::Spawn { socket_path } = &sh.mode else {
+        return Err(MementoError::ipc("spawn_worker called without spawn mode"));
+    };
     let program = match &sh.opts.worker_program {
         Some(p) => p.clone(),
         None => std::env::current_exe()
@@ -625,7 +857,7 @@ fn spawn_worker(
     };
     let mut child = Command::new(&program)
         .args(&sh.opts.worker_args)
-        .env(ENV_SOCKET, &sh.socket_path)
+        .env(ENV_SOCKET, socket_path)
         .env(ENV_WORKER_ID, slot.to_string())
         .env(ENV_WORKER_SPAWN, spawn_seq.to_string())
         .stdin(Stdio::null())
@@ -664,10 +896,10 @@ fn spawn_worker(
         }
     };
     stream
-        .set_read_timeout(Some(sh.opts.heartbeat_timeout))
+        .set_stream_read_timeout(Some(sh.opts.heartbeat_timeout))
         .map_err(|e| MementoError::ipc(format!("set read timeout: {e}")))?;
     let mut writer = stream
-        .try_clone()
+        .try_clone_stream()
         .map_err(|e| MementoError::ipc(format!("clone stream: {e}")))?;
     let hello = Msg::Hello {
         protocol: PROTOCOL_VERSION,
@@ -681,7 +913,7 @@ fn spawn_worker(
         let _ = child.wait();
         return Err(MementoError::ipc(format!("send hello: {e}")));
     }
-    Ok(Conn { child, reader: stream, writer })
+    Ok(Conn { child: Some(child), reader: stream, writer })
 }
 
 // ---- shared queue operations -------------------------------------------
@@ -838,8 +1070,9 @@ impl Shared {
         let _ = self.cv.wait_timeout(q, d).unwrap();
     }
 
-    /// Returns a popped-but-unstarted attempt to the queue (spawn failure
-    /// or slot retirement) without consuming a retry attempt.
+    /// Returns a popped-but-unstarted attempt to the queue (acquisition
+    /// failure, clean worker departure, or slot retirement) without
+    /// consuming a retry attempt.
     fn give_back(&self, att: Attempt) {
         let mut q = self.q.lock().unwrap();
         q.pending.push_front(att);
@@ -885,6 +1118,44 @@ impl Shared {
                 });
             }
         }
+        self.requeue_or_fail(att, kind, message, duration_secs);
+    }
+
+    /// One attempt exceeded the per-task wall-clock budget: journaled as
+    /// a **timeout** (not a crash, not an ordinary failure), counted on
+    /// its own metric, then requeued-or-failed under the retry policy
+    /// with kind [`FailureKind::Timeout`].
+    fn attempt_timed_out(&self, att: Attempt, budget: Duration) {
+        if let Some(j) = &self.hooks.journal {
+            if let Some((_, id)) = self.task_brief(att.index) {
+                j.record(&Event::TaskTimedOut {
+                    id,
+                    attempt: att.attempt,
+                    budget_secs: budget.as_secs_f64(),
+                });
+            }
+        }
+        if let Some(m) = &self.hooks.metrics {
+            m.tasks_timed_out.inc();
+        }
+        self.requeue_or_fail(
+            att,
+            FailureKind::Timeout,
+            format!("task exceeded its per-task wall-clock budget of {budget:?}"),
+            budget.as_secs_f64(),
+        );
+    }
+
+    /// Shared tail of every consumed-but-unsuccessful attempt: requeue
+    /// under the retry policy (with backoff), or record the final failed
+    /// outcome.
+    fn requeue_or_fail(
+        &self,
+        att: Attempt,
+        kind: FailureKind,
+        message: String,
+        duration_secs: f64,
+    ) {
         if self.opts.retry.should_retry(att.attempt) {
             if let Some(m) = &self.hooks.metrics {
                 m.tasks_retried.inc();
@@ -998,7 +1269,7 @@ impl Shared {
         if crashes_used > self.opts.crash_budget {
             eprintln!(
                 "memento supervisor: slot {slot} retired after {crashes_used} worker \
-                 crashes (budget {})",
+                 losses (budget {})",
                 self.opts.crash_budget
             );
         }

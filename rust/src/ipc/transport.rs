@@ -1,0 +1,401 @@
+//! Pluggable byte transports for the supervisor ↔ worker protocol.
+//!
+//! The wire format ([`crate::ipc::proto`]) is already transport-agnostic:
+//! a frame is a length prefix plus JSON bytes, written to anything that
+//! implements `Read`/`Write`. What *was* transport-specific before this
+//! module existed was the plumbing around it — `UnixListener::accept`,
+//! `UnixStream::try_clone`, per-stream read timeouts, half-close — all
+//! hard-wired to Unix domain sockets in the supervisor and worker.
+//!
+//! This module abstracts exactly that plumbing:
+//!
+//! - [`WireStream`] — one connected byte stream (clone for a writer half,
+//!   set read deadlines, half-close the read side);
+//! - [`WireListener`] — a non-blocking accept source of fresh streams;
+//! - [`Endpoint`] — a connectable address, printable and parseable, so a
+//!   worker can be pointed at a supervisor with one string
+//!   (`/tmp/…/supervisor.sock` or `tcp://10.0.0.7:7070`);
+//! - [`Transport`] — the bind-side configuration (`Unix` | `Tcp`).
+//!
+//! Two implementations ship: **Unix domain sockets** (the process-backend
+//! default: same host, filesystem-permission trust model, lowest latency)
+//! and **TCP** (the distributed tier: workers on other machines register
+//! with the supervisor's [`crate::ipc::pool::WorkerPool`]). TCP peers are
+//! untrusted until they present the shared token in their `Ready`
+//! handshake — authentication is enforced by the pool, not here; this
+//! module only moves bytes.
+//!
+//! # Adding a transport
+//!
+//! Implement [`WireStream`] for the connected-stream type and
+//! [`WireListener`] for the acceptor, add an [`Endpoint`] variant with
+//! `connect`/`parse`/`Display` arms, and a [`Transport`] variant with a
+//! `bind` arm. Nothing in the supervisor, pool, or worker needs to change
+//! — they speak trait objects end to end.
+
+use std::fmt;
+use std::io::{self, Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::os::unix::net::{UnixListener, UnixStream};
+use std::path::PathBuf;
+use std::time::Duration;
+
+/// One connected, frame-capable byte stream between a supervisor and a
+/// worker.
+///
+/// Both sides split a connection into an owned reader plus a cloned
+/// writer half ([`WireStream::try_clone_stream`]); the writer half may be
+/// shared behind a mutex (the worker's heartbeat thread does this).
+/// Implementations must be safe to read and write concurrently from the
+/// two halves, which both `UnixStream` and `TcpStream` guarantee.
+pub trait WireStream: Read + Write + Send {
+    /// Clones the stream handle (same underlying connection, independent
+    /// file descriptor) — used to split reader and writer halves.
+    fn try_clone_stream(&self) -> io::Result<Box<dyn WireStream>>;
+
+    /// Sets (or clears, with `None`) the read deadline. The supervisor
+    /// drives heartbeat-silence detection, cancel grace windows, and
+    /// per-task timeouts through this.
+    fn set_stream_read_timeout(&self, d: Option<Duration>) -> io::Result<()>;
+
+    /// Half-closes the read side, failing any peer blocked writing into a
+    /// full buffer (used before reaping a worker that may never drain).
+    fn shutdown_read(&self) -> io::Result<()>;
+
+    /// Closes both directions; the peer observes EOF on its next read.
+    fn shutdown_both(&self) -> io::Result<()>;
+
+    /// Human-readable peer description for log lines.
+    fn peer_label(&self) -> String;
+}
+
+impl WireStream for UnixStream {
+    fn try_clone_stream(&self) -> io::Result<Box<dyn WireStream>> {
+        Ok(Box::new(self.try_clone()?))
+    }
+
+    fn set_stream_read_timeout(&self, d: Option<Duration>) -> io::Result<()> {
+        self.set_read_timeout(d)
+    }
+
+    fn shutdown_read(&self) -> io::Result<()> {
+        self.shutdown(std::net::Shutdown::Read)
+    }
+
+    fn shutdown_both(&self) -> io::Result<()> {
+        self.shutdown(std::net::Shutdown::Both)
+    }
+
+    fn peer_label(&self) -> String {
+        "unix peer".to_string()
+    }
+}
+
+impl WireStream for TcpStream {
+    fn try_clone_stream(&self) -> io::Result<Box<dyn WireStream>> {
+        Ok(Box::new(self.try_clone()?))
+    }
+
+    fn set_stream_read_timeout(&self, d: Option<Duration>) -> io::Result<()> {
+        self.set_read_timeout(d)
+    }
+
+    fn shutdown_read(&self) -> io::Result<()> {
+        self.shutdown(std::net::Shutdown::Read)
+    }
+
+    fn shutdown_both(&self) -> io::Result<()> {
+        self.shutdown(std::net::Shutdown::Both)
+    }
+
+    fn peer_label(&self) -> String {
+        self.peer_addr()
+            .map(|a| a.to_string())
+            .unwrap_or_else(|_| "tcp peer".to_string())
+    }
+}
+
+/// A non-blocking accept source of fresh [`WireStream`]s.
+///
+/// Listeners are polled (accept returns `Ok(None)` instead of blocking on
+/// `WouldBlock`) so one acceptor thread can also watch a stop flag — the
+/// pattern both the supervisor's Unix acceptor and the worker pool's TCP
+/// acceptor use.
+pub trait WireListener: Send {
+    /// Accepts one pending connection, or `Ok(None)` if none is waiting.
+    fn accept_stream(&self) -> io::Result<Option<Box<dyn WireStream>>>;
+
+    /// The endpoint workers should connect to (for TCP with a `:0` bind
+    /// request, this carries the OS-assigned port).
+    fn endpoint(&self) -> Endpoint;
+}
+
+/// Unix-domain-socket listener (see [`bind_unix`]).
+pub struct UnixWireListener {
+    listener: UnixListener,
+    path: PathBuf,
+}
+
+impl WireListener for UnixWireListener {
+    fn accept_stream(&self) -> io::Result<Option<Box<dyn WireStream>>> {
+        match self.listener.accept() {
+            Ok((stream, _addr)) => {
+                stream.set_nonblocking(false)?;
+                Ok(Some(Box::new(stream)))
+            }
+            Err(e) if e.kind() == io::ErrorKind::WouldBlock => Ok(None),
+            Err(e) => Err(e),
+        }
+    }
+
+    fn endpoint(&self) -> Endpoint {
+        Endpoint::Unix(self.path.clone())
+    }
+}
+
+/// TCP listener (see [`bind_tcp`]).
+pub struct TcpWireListener {
+    listener: TcpListener,
+    addr: String,
+}
+
+impl WireListener for TcpWireListener {
+    fn accept_stream(&self) -> io::Result<Option<Box<dyn WireStream>>> {
+        match self.listener.accept() {
+            Ok((stream, _addr)) => {
+                stream.set_nonblocking(false)?;
+                // One frame per message and every message is
+                // latency-sensitive (handshakes, dispatches, outcomes):
+                // never trade latency for Nagle coalescing.
+                let _ = stream.set_nodelay(true);
+                Ok(Some(Box::new(stream)))
+            }
+            Err(e) if e.kind() == io::ErrorKind::WouldBlock => Ok(None),
+            Err(e) => Err(e),
+        }
+    }
+
+    fn endpoint(&self) -> Endpoint {
+        Endpoint::Tcp(self.addr.clone())
+    }
+}
+
+/// Binds a non-blocking Unix-domain-socket listener at `path`.
+pub fn bind_unix(path: impl Into<PathBuf>) -> io::Result<UnixWireListener> {
+    let path = path.into();
+    let listener = UnixListener::bind(&path)?;
+    listener.set_nonblocking(true)?;
+    Ok(UnixWireListener { listener, path })
+}
+
+/// Binds a non-blocking TCP listener at `addr` (e.g. `127.0.0.1:0` for an
+/// OS-assigned loopback port, `0.0.0.0:7070` to accept off-machine
+/// workers). The listener's [`WireListener::endpoint`] reports the actual
+/// bound address.
+pub fn bind_tcp(addr: &str) -> io::Result<TcpWireListener> {
+    let listener = TcpListener::bind(addr)?;
+    listener.set_nonblocking(true)?;
+    let actual = listener
+        .local_addr()
+        .map(|a| a.to_string())
+        .unwrap_or_else(|_| addr.to_string());
+    Ok(TcpWireListener { listener, addr: actual })
+}
+
+/// Polls `listener` until `stop` is set, invoking `on_conn` for every
+/// accepted connection — the shared acceptor loop of the supervisor
+/// (spawn mode) and the worker pool. The poll interval backs off 2ms →
+/// 100ms while idle (steady state for a long run: everything connected
+/// minutes ago) and snaps back on arrival (spawn/registration bursts).
+/// Returns on `stop` or on a listener error. `on_conn` must not block
+/// the loop for long — hand slow per-connection work (handshakes with
+/// untrusted peers) to another thread.
+pub fn poll_accept(
+    listener: Box<dyn WireListener>,
+    stop: &std::sync::atomic::AtomicBool,
+    mut on_conn: impl FnMut(Box<dyn WireStream>),
+) {
+    use std::sync::atomic::Ordering;
+    let mut idle_sleep = Duration::from_millis(2);
+    while !stop.load(Ordering::SeqCst) {
+        match listener.accept_stream() {
+            Ok(Some(stream)) => {
+                idle_sleep = Duration::from_millis(2);
+                on_conn(stream);
+            }
+            Ok(None) => {
+                std::thread::sleep(idle_sleep);
+                idle_sleep = (idle_sleep * 2).min(Duration::from_millis(100));
+            }
+            Err(_) => return,
+        }
+    }
+}
+
+/// A connectable supervisor address, printable as a single string so it
+/// can travel through an environment variable or a CLI flag.
+///
+/// Renderings: a Unix endpoint prints as its bare socket path; a TCP
+/// endpoint prints as `tcp://host:port`. [`Endpoint::parse`] inverts both.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Endpoint {
+    /// A Unix domain socket path (same-host workers).
+    Unix(PathBuf),
+    /// A TCP `host:port` address (distributed workers).
+    Tcp(String),
+}
+
+/// URI scheme prefix for TCP endpoints in their string rendering.
+const TCP_SCHEME: &str = "tcp://";
+
+impl Endpoint {
+    /// Parses the string rendering produced by `Display`: anything with a
+    /// `tcp://` scheme is TCP, everything else is a Unix socket path.
+    pub fn parse(s: &str) -> Endpoint {
+        match s.strip_prefix(TCP_SCHEME) {
+            Some(addr) => Endpoint::Tcp(addr.to_string()),
+            None => Endpoint::Unix(PathBuf::from(s)),
+        }
+    }
+
+    /// Opens a fresh connection to this endpoint.
+    pub fn connect(&self) -> io::Result<Box<dyn WireStream>> {
+        match self {
+            Endpoint::Unix(path) => {
+                let stream = UnixStream::connect(path)?;
+                Ok(Box::new(stream))
+            }
+            Endpoint::Tcp(addr) => {
+                let stream = TcpStream::connect(addr.as_str())?;
+                let _ = stream.set_nodelay(true);
+                Ok(Box::new(stream))
+            }
+        }
+    }
+}
+
+impl fmt::Display for Endpoint {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Endpoint::Unix(p) => write!(f, "{}", p.display()),
+            Endpoint::Tcp(a) => write!(f, "{TCP_SCHEME}{a}"),
+        }
+    }
+}
+
+/// Bind-side transport selection for a supervisor or worker pool.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Transport {
+    /// A private Unix domain socket in a fresh temporary directory. The
+    /// trust model is filesystem permissions; no token is required.
+    Unix,
+    /// A TCP listener at `bind` (`host:port`; port `0` = OS-assigned).
+    /// TCP peers are untrusted: the accepting side must require the
+    /// shared-token `Ready` handshake.
+    Tcp {
+        /// Address to bind, e.g. `"127.0.0.1:0"` or `"0.0.0.0:7070"`.
+        bind: String,
+    },
+}
+
+impl Transport {
+    /// Binds a listener for this transport. For [`Transport::Unix`] the
+    /// returned [`crate::util::fs::TempDir`] owns the socket's directory
+    /// and must be kept alive as long as the listener.
+    pub fn bind(
+        &self,
+    ) -> io::Result<(Box<dyn WireListener>, Option<crate::util::fs::TempDir>)> {
+        match self {
+            Transport::Unix => {
+                let dir = crate::util::fs::TempDir::new("ipc")?;
+                let listener = bind_unix(dir.join("supervisor.sock"))?;
+                Ok((Box::new(listener), Some(dir)))
+            }
+            Transport::Tcp { bind } => {
+                let listener = bind_tcp(bind)?;
+                Ok((Box::new(listener), None))
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ipc::proto::{read_frame, write_frame, Msg};
+
+    #[test]
+    fn endpoint_display_parse_roundtrip() {
+        let u = Endpoint::Unix(PathBuf::from("/tmp/x/supervisor.sock"));
+        assert_eq!(Endpoint::parse(&u.to_string()), u);
+        let t = Endpoint::Tcp("127.0.0.1:7070".to_string());
+        assert_eq!(t.to_string(), "tcp://127.0.0.1:7070");
+        assert_eq!(Endpoint::parse(&t.to_string()), t);
+    }
+
+    /// Frames must survive both transports unchanged: accept a connection,
+    /// echo one message, and compare.
+    fn roundtrip_over(listener: Box<dyn WireListener>) {
+        let endpoint = listener.endpoint();
+        let server = std::thread::spawn(move || {
+            // Poll until the client shows up (listener is non-blocking).
+            let mut stream = loop {
+                if let Some(s) = listener.accept_stream().unwrap() {
+                    break s;
+                }
+                std::thread::sleep(Duration::from_millis(2));
+            };
+            let msg = read_frame(&mut stream).unwrap().unwrap();
+            let mut writer = stream.try_clone_stream().unwrap();
+            write_frame(&mut writer, &msg).unwrap();
+        });
+        let mut client = endpoint.connect().unwrap();
+        let sent = Msg::Heartbeat { worker: 7, busy: Some(3) };
+        write_frame(&mut client, &sent).unwrap();
+        let back = read_frame(&mut client).unwrap().unwrap();
+        assert_eq!(back, sent);
+        server.join().unwrap();
+    }
+
+    #[test]
+    fn frames_roundtrip_over_unix() {
+        let (listener, _dir) = Transport::Unix.bind().unwrap();
+        roundtrip_over(listener);
+    }
+
+    #[test]
+    fn frames_roundtrip_over_tcp_loopback() {
+        let (listener, dir) = Transport::Tcp { bind: "127.0.0.1:0".to_string() }
+            .bind()
+            .unwrap();
+        assert!(dir.is_none(), "tcp needs no socket dir");
+        let Endpoint::Tcp(addr) = listener.endpoint() else {
+            panic!("tcp listener must report a tcp endpoint");
+        };
+        assert!(!addr.ends_with(":0"), "port must be resolved, got {addr}");
+        roundtrip_over(listener);
+    }
+
+    #[test]
+    fn read_timeout_applies_through_the_trait() {
+        let (listener, _dir) = Transport::Tcp { bind: "127.0.0.1:0".to_string() }
+            .bind()
+            .unwrap();
+        let endpoint = listener.endpoint();
+        let client = endpoint.connect().unwrap();
+        client
+            .set_stream_read_timeout(Some(Duration::from_millis(30)))
+            .unwrap();
+        let mut reader = client.try_clone_stream().unwrap();
+        // Nobody writes: the read must fail with a timeout, not block.
+        let err = read_frame(&mut reader).unwrap_err();
+        assert!(
+            matches!(
+                err.kind(),
+                io::ErrorKind::WouldBlock | io::ErrorKind::TimedOut
+            ),
+            "{err:?}"
+        );
+        drop(listener);
+    }
+}

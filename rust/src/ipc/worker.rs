@@ -1,39 +1,48 @@
-//! Worker-process side of the process-isolated backend.
+//! Worker side of the process-isolated and distributed backends.
 //!
-//! A worker is the *same binary* as the supervisor, re-executed with two
-//! environment variables set: [`ENV_SOCKET`] (the supervisor's Unix domain
-//! socket) and [`ENV_WORKER_ID`] (this worker's slot number). Three entry
-//! points cover the three kinds of host binary:
+//! Two kinds of worker speak the same protocol over the same code path:
 //!
-//! - the `memento` CLI dispatches its hidden `worker` subcommand here;
-//! - library binaries (examples, user programs) are intercepted inside
-//!   [`crate::coordinator::memento::Memento::run`]: when the env vars are
-//!   present, `run` serves tasks over the socket and exits instead of
-//!   starting a run of its own — so a binary that re-executes itself needs
-//!   no worker-specific code at all;
-//! - test binaries expose a dedicated libtest entry (a `#[test]` fn that
-//!   is a no-op without the env vars) and pass its name as the spawn argv.
+//! - **Spawned workers** (`--isolation process`): re-executions of the
+//!   current binary with [`ENV_SOCKET`]/[`ENV_WORKER_ID`] set, connected
+//!   to a private Unix socket, serving exactly one run and exiting. Three
+//!   entry points cover the three kinds of host binary: the `memento` CLI
+//!   dispatches its hidden `worker` subcommand here; library binaries are
+//!   intercepted inside [`crate::coordinator::memento::Memento::run`]
+//!   (when the env vars are present, `run` serves tasks and exits, so a
+//!   self-re-executing binary needs no worker code); test binaries expose
+//!   a dedicated libtest entry and pass its name as the spawn argv.
+//! - **Standing remote workers** (`memento serve`, or [`serve_remote`]
+//!   from a library): long-lived processes that *connect out* to a
+//!   supervisor's TCP [`crate::ipc::pool::WorkerPool`], authenticate with
+//!   a shared token, serve a run, and — instead of exiting at `Shutdown`
+//!   — reconnect and re-register for the next run. A dropped connection
+//!   (supervisor restart, network blip) is retried with exponential
+//!   backoff, so a worker that drops mid-run rejoins the pool instead of
+//!   staying lost.
 //!
-//! The worker executes **one attempt per `Task` frame** and reports the
-//! raw result; retries, requeues, and crash accounting belong to the
-//! supervisor. A heartbeat thread shares the write half of the socket so
-//! the supervisor can distinguish "long-running task" from "hung worker".
+//! Either way the worker executes **one attempt per `Task` frame** and
+//! reports the raw result; retries, requeues, timeouts, and crash
+//! accounting belong to the supervisor. A heartbeat thread shares the
+//! write half of the connection so the supervisor can distinguish
+//! "long-running task" from "hung worker".
 
 use crate::coordinator::error::{panic_message, MementoError};
 use crate::coordinator::memento::ExpFn;
 use crate::coordinator::task::{task_seed, TaskContext, TaskId};
 use crate::ipc::proto::{read_frame, write_frame, Msg, WireResult, PROTOCOL_VERSION};
+use crate::ipc::transport::{Endpoint, WireStream};
 use crate::util::json::Json;
 use crate::util::time::Stopwatch;
 use std::collections::BTreeMap;
-use std::os::unix::net::UnixStream;
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicBool, AtomicI64, Ordering};
 use std::sync::{Arc, Mutex};
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
-/// Socket path of the supervising process; presence of this variable is
-/// what makes a process a worker.
+/// Endpoint of the supervising process (a Unix socket path, or a
+/// `tcp://host:port` address — see
+/// [`Endpoint::parse`]); presence
+/// of this variable is what makes a process a worker.
 pub const ENV_SOCKET: &str = "MEMENTO_WORKER_SOCKET";
 /// Slot id assigned by the supervisor (`0..workers`).
 pub const ENV_WORKER_ID: &str = "MEMENTO_WORKER_ID";
@@ -41,6 +50,9 @@ pub const ENV_WORKER_ID: &str = "MEMENTO_WORKER_ID";
 /// so the supervisor can tell a fresh worker's connection from a stale
 /// (already-replaced) incarnation's.
 pub const ENV_WORKER_SPAWN: &str = "MEMENTO_WORKER_SPAWN";
+/// Shared auth token presented in the `Ready` handshake (required by TCP
+/// supervisors, unused over Unix sockets).
+pub const ENV_WORKER_TOKEN: &str = "MEMENTO_WORKER_TOKEN";
 
 /// True when this process was spawned as a worker by a supervisor.
 pub fn active() -> bool {
@@ -66,8 +78,12 @@ pub fn maybe_serve(exp_fn: Arc<ExpFn>) {
 /// Connects to the supervisor named by the environment and serves task
 /// attempts until it sends `Shutdown` (or closes the connection). Returns
 /// once the connection is drained; callers normally exit afterwards.
+///
+/// This is the **spawned-worker** entry: one connection, one run. For a
+/// standing worker that outlives runs and reconnects, use
+/// [`serve_remote`].
 pub fn serve(exp_fn: Arc<ExpFn>) -> Result<(), MementoError> {
-    let socket = std::env::var(ENV_SOCKET)
+    let endpoint_str = std::env::var(ENV_SOCKET)
         .map_err(|_| MementoError::ipc(format!("{ENV_SOCKET} not set")))?;
     let worker_id: u64 = std::env::var(ENV_WORKER_ID)
         .ok()
@@ -77,25 +93,262 @@ pub fn serve(exp_fn: Arc<ExpFn>) -> Result<(), MementoError> {
         .ok()
         .and_then(|s| s.parse().ok())
         .unwrap_or(0);
+    let token = std::env::var(ENV_WORKER_TOKEN).ok();
 
-    let stream = UnixStream::connect(&socket)
-        .map_err(|e| MementoError::ipc(format!("connect {socket}: {e}")))?;
-    let mut reader = stream
-        .try_clone()
-        .map_err(|e| MementoError::ipc(format!("clone stream: {e}")))?;
-    let writer = Arc::new(Mutex::new(stream));
+    let endpoint = Endpoint::parse(&endpoint_str);
+    let stream = endpoint
+        .connect()
+        .map_err(|e| MementoError::ipc(format!("connect {endpoint}: {e}")))?;
+    let report = serve_connection(stream, &exp_fn, worker_id, spawn, token, None)?;
+    match report.end {
+        ConnEnd::Shutdown | ConnEnd::TaskLimit => Ok(()),
+        ConnEnd::PreHelloEof => Err(MementoError::ipc("supervisor closed before hello")),
+        ConnEnd::Dropped(msg) => Err(MementoError::ipc(msg)),
+    }
+}
+
+/// Tuning for a standing remote worker (see [`serve_remote`]).
+#[derive(Debug, Clone)]
+pub struct RemoteWorkerOptions {
+    /// Shared auth token, presented in the `Ready` handshake. Required by
+    /// any TCP supervisor pool.
+    pub token: Option<String>,
+    /// Self-reported worker id (diagnostics only — the pool assigns its
+    /// own member ids).
+    pub worker_id: u64,
+    /// Stop after this many *served* connections (connections that
+    /// reached `Hello`). `None` = serve forever; this is the standing
+    /// `memento serve` default.
+    pub max_connections: Option<usize>,
+    /// Voluntarily close the connection (with a clean `Goodbye`) after
+    /// this many task attempts, then reconnect and re-register. Useful
+    /// for rolling restarts and for bounding per-connection state; `None`
+    /// = never.
+    pub tasks_per_connection: Option<usize>,
+    /// Give up after the supervisor has been unreachable for this long
+    /// (measured per outage, from the first failed connect). `None` =
+    /// retry forever.
+    pub give_up_after: Option<Duration>,
+    /// First reconnect delay of an outage; doubles per retry.
+    pub initial_backoff: Duration,
+    /// Reconnect delay ceiling.
+    pub max_backoff: Duration,
+    /// Suppress per-connection log lines on stderr.
+    pub quiet: bool,
+}
+
+impl Default for RemoteWorkerOptions {
+    fn default() -> Self {
+        RemoteWorkerOptions {
+            token: None,
+            worker_id: 0,
+            max_connections: None,
+            tasks_per_connection: None,
+            give_up_after: None,
+            initial_backoff: Duration::from_millis(50),
+            max_backoff: Duration::from_secs(2),
+            quiet: false,
+        }
+    }
+}
+
+/// What a [`serve_remote`] session accomplished before returning.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct RemoteServeReport {
+    /// Connections that reached `Hello` (≈ runs or run-shares served).
+    pub connections: usize,
+    /// Task attempts executed across all connections.
+    pub tasks: usize,
+}
+
+/// Runs a **standing remote worker**: connect to `endpoint`, register
+/// with the shared token, serve task attempts, and when the run ends
+/// (`Shutdown`) or the connection drops, reconnect and re-register for
+/// the next one — with exponential backoff while the supervisor is
+/// unreachable, so a worker that drops mid-run rejoins the pool instead
+/// of burning the run's failure budget.
+///
+/// Returns `Ok` when a configured bound is reached
+/// ([`RemoteWorkerOptions::max_connections`] /
+/// [`RemoteWorkerOptions::give_up_after`]); returns `Err` only on fatal
+/// refusals (bad auth token, protocol mismatch) that a retry cannot fix.
+/// This is the body of `memento serve`, and is equally callable on a
+/// plain thread — tests and `examples/remote_workers.rs` run "remote"
+/// workers in-process over loopback TCP this way.
+pub fn serve_remote(
+    exp_fn: Arc<ExpFn>,
+    endpoint: &Endpoint,
+    opts: RemoteWorkerOptions,
+) -> Result<RemoteServeReport, MementoError> {
+    let mut report = RemoteServeReport::default();
+    let mut backoff = opts.initial_backoff.max(Duration::from_millis(1));
+    let mut outage_start: Option<Instant> = None;
+    let mut spawn_gen: u64 = 0;
+
+    loop {
+        if let Some(max) = opts.max_connections {
+            if report.connections >= max {
+                return Ok(report);
+            }
+        }
+        // One backoff step: give up if the outage outlasted the budget.
+        let wait_or_give_up = |backoff: &mut Duration,
+                               outage_start: &mut Option<Instant>|
+         -> bool {
+            let started = *outage_start.get_or_insert_with(Instant::now);
+            if let Some(limit) = opts.give_up_after {
+                if started.elapsed() >= limit {
+                    return false;
+                }
+            }
+            std::thread::sleep(*backoff);
+            *backoff = (*backoff * 2).min(opts.max_backoff);
+            true
+        };
+
+        let stream = match endpoint.connect() {
+            Ok(s) => s,
+            Err(e) => {
+                if !opts.quiet && outage_start.is_none() {
+                    eprintln!(
+                        "memento worker: cannot reach {endpoint} ({e}); retrying with backoff"
+                    );
+                }
+                if wait_or_give_up(&mut backoff, &mut outage_start) {
+                    continue;
+                }
+                return Ok(report);
+            }
+        };
+        spawn_gen += 1;
+        let conn = serve_connection(
+            stream,
+            &exp_fn,
+            opts.worker_id,
+            spawn_gen,
+            opts.token.clone(),
+            opts.tasks_per_connection,
+        )?; // Err = fatal refusal (Reject / protocol mismatch): do not retry
+        report.tasks += conn.tasks;
+        match conn.end {
+            // The pool accepted us but closed before handing out a run
+            // (e.g. the supervisor shut down while we sat in the queue).
+            // That is an outage, not a served connection.
+            ConnEnd::PreHelloEof => {
+                if wait_or_give_up(&mut backoff, &mut outage_start) {
+                    continue;
+                }
+                return Ok(report);
+            }
+            ConnEnd::Shutdown | ConnEnd::TaskLimit => {
+                report.connections += 1;
+                outage_start = None;
+                backoff = opts.initial_backoff.max(Duration::from_millis(1));
+                if !opts.quiet {
+                    eprintln!(
+                        "memento worker: connection {} done ({} task(s) so far); re-registering",
+                        report.connections, report.tasks
+                    );
+                }
+            }
+            // Mid-run drop (supervisor died, network blip): reconnect.
+            ConnEnd::Dropped(msg) => {
+                report.connections += 1;
+                if !opts.quiet {
+                    eprintln!("memento worker: connection dropped ({msg}); re-registering");
+                }
+                outage_start = None;
+                backoff = opts.initial_backoff.max(Duration::from_millis(1));
+            }
+        }
+    }
+}
+
+/// How one served connection ended.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ConnEnd {
+    /// The supervisor sent `Shutdown` (or closed cleanly between tasks).
+    Shutdown,
+    /// The worker left voluntarily after its per-connection task budget,
+    /// announcing the departure with a `Goodbye` frame.
+    TaskLimit,
+    /// The connection closed before `Hello` ever arrived (the pool shut
+    /// down while this worker waited in the registration queue).
+    PreHelloEof,
+    /// The connection failed mid-run (I/O error or a desynced frame); the
+    /// message describes how.
+    Dropped(String),
+}
+
+/// Outcome of serving one connection (see [`serve_connection`]).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ConnReport {
+    /// Task attempts executed on this connection.
+    pub tasks: usize,
+    /// How the connection ended.
+    pub end: ConnEnd,
+}
+
+/// Serves one established connection: `Ready` handshake, `Hello` (or
+/// `Reject`), then task attempts until `Shutdown`, EOF, or the optional
+/// `tasks_limit` (announced with `Goodbye`). The shared core of both
+/// [`serve`] and [`serve_remote`].
+///
+/// `Err` is reserved for **fatal refusals** — an explicit `Reject` or a
+/// protocol-version mismatch — that reconnecting cannot fix; transport
+/// failures come back as `Ok` with [`ConnEnd::Dropped`] so standing
+/// workers can retry.
+pub fn serve_connection(
+    stream: Box<dyn WireStream>,
+    exp_fn: &Arc<ExpFn>,
+    worker_id: u64,
+    spawn: u64,
+    token: Option<String>,
+    tasks_limit: Option<usize>,
+) -> Result<ConnReport, MementoError> {
+    let mut reader = stream;
+    let writer: Arc<Mutex<Box<dyn WireStream>>> = Arc::new(Mutex::new(
+        reader
+            .try_clone_stream()
+            .map_err(|e| MementoError::ipc(format!("clone stream: {e}")))?,
+    ));
 
     send(
         &writer,
-        &Msg::Ready { worker: worker_id, pid: std::process::id() as u64, spawn },
+        &Msg::Ready {
+            worker: worker_id,
+            pid: std::process::id() as u64,
+            spawn,
+            protocol: PROTOCOL_VERSION,
+            token,
+        },
     )?;
 
-    // First frame must be the run configuration.
-    let hello = read_frame(&mut reader)
-        .map_err(|e| MementoError::ipc(format!("read hello: {e}")))?
-        .ok_or_else(|| MementoError::ipc("supervisor closed before hello"))?;
-    let Msg::Hello { protocol, version, run_seed, settings, heartbeat_ms } = hello else {
-        return Err(MementoError::ipc("expected hello as first frame"));
+    // First frame must be the run configuration (or a refusal).
+    let hello = match read_frame(&mut reader) {
+        Ok(Some(m)) => m,
+        Ok(None) => return Ok(ConnReport { tasks: 0, end: ConnEnd::PreHelloEof }),
+        Err(e) => {
+            return Ok(ConnReport {
+                tasks: 0,
+                end: ConnEnd::Dropped(format!("read hello: {e}")),
+            })
+        }
+    };
+    let (protocol, version, run_seed, settings, heartbeat_ms) = match hello {
+        Msg::Hello { protocol, version, run_seed, settings, heartbeat_ms } => {
+            (protocol, version, run_seed, settings, heartbeat_ms)
+        }
+        Msg::Reject { reason } => {
+            return Err(MementoError::ipc(format!(
+                "supervisor rejected this worker: {reason}"
+            )))
+        }
+        other => {
+            return Err(MementoError::ipc(format!(
+                "expected hello as first frame, got {other:?}"
+            )))
+        }
     };
     if protocol != PROTOCOL_VERSION {
         return Err(MementoError::ipc(format!(
@@ -110,9 +363,10 @@ pub fn serve(exp_fn: Arc<ExpFn>) -> Result<(), MementoError> {
     // supervisor reads the stream only while an attempt is in flight, so
     // idle heartbeats would accumulate unread in the socket buffer — and
     // a filled buffer would block this thread inside `write` holding the
-    // writer lock, wedging the worker (and the supervisor's final
-    // `child.wait()`) forever. Idle liveness needs no signal: a dead idle
-    // worker is detected by the next task dispatch failing.
+    // writer lock, wedging the worker (and, for spawned workers, the
+    // supervisor's final `child.wait()`) forever. Idle liveness needs no
+    // signal: a dead idle worker is detected by the next task dispatch
+    // failing.
     let busy = Arc::new(AtomicI64::new(-1));
     let stop = Arc::new(AtomicBool::new(false));
     let hb_handle = spawn_heartbeat(
@@ -123,46 +377,97 @@ pub fn serve(exp_fn: Arc<ExpFn>) -> Result<(), MementoError> {
         Duration::from_millis(heartbeat_ms.max(1)),
     );
 
-    let served = serve_loop(
-        &mut reader,
+    let report = serve_loop(
+        &mut *reader,
         &writer,
-        &exp_fn,
+        exp_fn,
         &settings,
         &version,
         run_seed,
         &busy,
+        tasks_limit,
     );
 
     stop.store(true, Ordering::SeqCst);
     let _ = hb_handle.join();
-    served
+
+    if matches!(report.end, ConnEnd::TaskLimit) {
+        // A dispatch may have crossed with our Goodbye and be sitting
+        // unread in the receive buffer. Closing now would make TCP answer
+        // the supervisor with an RST, which on common stacks *discards
+        // the supervisor's buffered-but-unread data — the Goodbye
+        // itself* — turning this clean departure into a crash charge.
+        // So the connection is never closed from this side: a detached
+        // thread drains it until the supervisor (having read the
+        // Goodbye) closes, consuming any crossed frame along the way.
+        // The worker's reconnect proceeds immediately in parallel. The
+        // generous read deadline is only a leak backstop for a wedged
+        // supervisor.
+        let _ = reader.set_stream_read_timeout(Some(Duration::from_secs(60)));
+        let _ = std::thread::Builder::new()
+            .name("memento-goodbye-drain".into())
+            .spawn(move || {
+                let mut reader = reader;
+                while let Ok(Some(_)) = read_frame(&mut reader) {}
+            });
+    }
+    Ok(report)
 }
 
+#[allow(clippy::too_many_arguments)]
 fn serve_loop(
-    reader: &mut UnixStream,
-    writer: &Arc<Mutex<UnixStream>>,
+    mut reader: &mut dyn WireStream,
+    writer: &Arc<Mutex<Box<dyn WireStream>>>,
     exp_fn: &Arc<ExpFn>,
     settings: &Arc<BTreeMap<String, Json>>,
     version: &str,
     run_seed: u64,
     busy: &Arc<AtomicI64>,
-) -> Result<(), MementoError> {
+    tasks_limit: Option<usize>,
+) -> ConnReport {
+    let mut tasks = 0usize;
     loop {
-        let msg = read_frame(reader).map_err(|e| MementoError::ipc(format!("read task: {e}")))?;
+        let msg = match read_frame(&mut reader) {
+            Ok(m) => m,
+            Err(e) => {
+                return ConnReport {
+                    tasks,
+                    end: ConnEnd::Dropped(format!("read task: {e}")),
+                }
+            }
+        };
         match msg {
-            None | Some(Msg::Shutdown) => return Ok(()),
+            None | Some(Msg::Shutdown) => return ConnReport { tasks, end: ConnEnd::Shutdown },
             Some(Msg::Task { index, attempt, params, restored }) => {
                 busy.store(index as i64, Ordering::SeqCst);
                 let outcome = run_attempt(
                     writer, exp_fn, settings, version, run_seed, index, attempt, params, restored,
                 );
                 busy.store(-1, Ordering::SeqCst);
-                send(writer, &outcome)?;
+                tasks += 1;
+                if send(writer, &outcome).is_err() {
+                    return ConnReport {
+                        tasks,
+                        end: ConnEnd::Dropped("write outcome failed".to_string()),
+                    };
+                }
+                if let Some(limit) = tasks_limit {
+                    if tasks >= limit {
+                        // Announce the voluntary departure so the
+                        // supervisor re-queues any racing dispatch without
+                        // charging a retry attempt or crash budget.
+                        let _ = send(writer, &Msg::Goodbye);
+                        return ConnReport { tasks, end: ConnEnd::TaskLimit };
+                    }
+                }
             }
             Some(other) => {
-                return Err(MementoError::ipc(format!(
-                    "unexpected frame from supervisor: {other:?}"
-                )));
+                return ConnReport {
+                    tasks,
+                    end: ConnEnd::Dropped(format!(
+                        "unexpected frame from supervisor: {other:?}"
+                    )),
+                }
             }
         }
     }
@@ -174,7 +479,7 @@ fn serve_loop(
 /// supervisor as crashes.
 #[allow(clippy::too_many_arguments)]
 fn run_attempt(
-    writer: &Arc<Mutex<UnixStream>>,
+    writer: &Arc<Mutex<Box<dyn WireStream>>>,
     exp_fn: &Arc<ExpFn>,
     settings: &Arc<BTreeMap<String, Json>>,
     version: &str,
@@ -216,13 +521,13 @@ fn run_attempt(
     Msg::Outcome { index, attempt, duration_secs: sw.elapsed_secs(), result }
 }
 
-fn send(writer: &Arc<Mutex<UnixStream>>, msg: &Msg) -> Result<(), MementoError> {
+fn send(writer: &Arc<Mutex<Box<dyn WireStream>>>, msg: &Msg) -> Result<(), MementoError> {
     let mut w = writer.lock().unwrap();
     write_frame(&mut *w, msg).map_err(|e| MementoError::ipc(format!("write frame: {e}")))
 }
 
 fn spawn_heartbeat(
-    writer: Arc<Mutex<UnixStream>>,
+    writer: Arc<Mutex<Box<dyn WireStream>>>,
     worker: u64,
     busy: Arc<AtomicI64>,
     stop: Arc<AtomicBool>,

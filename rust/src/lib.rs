@@ -2,14 +2,18 @@
 //!
 //! A Rust + JAX + Pallas reproduction of **"Memento: Facilitating
 //! Effortless, Efficient, and Reliable ML Experiments"** (Pullar-Strecker
-//! et al., ECML PKDD 2023).
+//! et al., ECML PKDD 2023), grown toward a production-scale
+//! experiment-execution system.
 //!
 //! Memento turns a *configuration matrix* — the cartesian product of
 //! parameter choices, minus exclusion rules — into a set of isolated,
-//! hashed experiment tasks that are scheduled across a worker pool,
-//! cached, checkpointed, retried, and reported on.
+//! hashed experiment tasks that are scheduled across a worker pool
+//! (threads, isolated processes, or remote machines over TCP), cached,
+//! checkpointed, retried, journaled, and reported on.
 //!
-//! ```no_run
+//! ## Quickstart
+//!
+//! ```
 //! use memento::prelude::*;
 //!
 //! let matrix = ConfigMatrix::builder()
@@ -22,10 +26,21 @@
 //!     .run(&matrix)
 //!     .unwrap();
 //! assert_eq!(results.len(), 4);
+//! assert_eq!(results.n_failed(), 0);
 //! ```
 //!
-//! Architecture (three layers, Python never on the request path):
-//! - **L3** ([`coordinator`], [`config`]) — the orchestrator: this crate.
+//! The blocking [`prelude::Memento::run`] is one of two entry points; the
+//! streaming `launch()` returns a live [`prelude::Run`] handle whose
+//! typed events arrive as tasks finish. See `docs/ARCHITECTURE.md` at the
+//! repository root for the end-to-end pipeline walkthrough (lazy
+//! expansion → restore filter → scheduler/supervisor → cache/checkpoint/
+//! journal → events) and the exactly-once accounting invariants.
+//!
+//! ## Architecture
+//!
+//! Three layers, Python never on the request path:
+//! - **L3** ([`coordinator`], [`config`], [`ipc`]) — the orchestrator:
+//!   this crate.
 //! - **L2** — a JAX MLP train/predict graph, AOT-lowered to HLO text by
 //!   `python/compile/aot.py` and executed through [`runtime`].
 //! - **L1** — a Pallas fused-dense kernel inside that graph
@@ -33,7 +48,11 @@
 //!
 //! The [`ml`] module provides the from-scratch learners/datasets used by the
 //! paper's §3 demonstration grid, and [`experiments`] wires that grid up as
-//! a reusable workload.
+//! a reusable workload. Everything is `std`-only: JSON, SHA-256, the
+//! thread pool, the CLI parser, the bench harness, and the IPC/TCP layer
+//! live under [`util`]/[`bench`] instead of external crates.
+
+#![warn(missing_docs)]
 
 pub mod bench;
 pub mod config;

@@ -4,6 +4,7 @@
 //!   expand  <config.json>              show the task expansion (E1)
 //!   run     <config.json> [opts]       run the grid experiment function
 //!   resume  <config.json> [opts]       resume a checkpointed run
+//!   serve   --connect host:port ...    standing worker for a remote run
 //!   status  --checkpoint <dir>         inspect a run manifest
 //!   report  --results <file> [opts]    pivot saved results into a table
 //!
@@ -36,6 +37,7 @@ fn main() -> ExitCode {
         "expand" => cmd_expand(rest),
         "run" => cmd_run(rest, false),
         "resume" => cmd_run(rest, true),
+        "serve" => cmd_serve(rest),
         "status" => cmd_status(rest),
         "report" => cmd_report(rest),
         // Hidden: the worker half of `--isolation process`. Spawned by the
@@ -63,7 +65,7 @@ fn main() -> ExitCode {
 fn top_help() -> String {
     "memento — effortless, efficient, and reliable ML experiments\n\
      \n\
-     USAGE: memento <expand|run|resume|status|report> [options]\n\
+     USAGE: memento <expand|run|resume|serve|status|report> [options]\n\
      \n\
      Try `memento run --help` for per-command options."
         .to_string()
@@ -171,11 +173,33 @@ fn run_spec(name: &'static str) -> CliSpec {
         .opt("rows", "dataset", "report pivot rows")
         .opt("cols", "model", "report pivot columns")
         .opt("metric", "accuracy", "report metric field")
-        .opt("isolation", "thread", "execution tier: thread | process")
+        .opt(
+            "isolation",
+            "thread",
+            "execution tier: thread | process | remote",
+        )
         .opt(
             "crash-budget",
             "3",
             "worker respawns per slot (process isolation)",
+        )
+        .opt(
+            "listen",
+            "127.0.0.1:0",
+            "worker-registration bind address (remote isolation); the \
+             resolved endpoint is printed so `memento serve --connect` \
+             invocations can be pointed at it",
+        )
+        .opt_required(
+            "token-file",
+            "file holding the shared worker auth token (remote isolation)",
+        )
+        .opt(
+            "task-timeout",
+            "0",
+            "per-task wall-clock budget in seconds (process/remote \
+             isolation): a stuck attempt is stopped, journaled as a \
+             timeout, and requeued under the retry policy (0 = unbounded)",
         )
         .opt(
             "output",
@@ -214,6 +238,10 @@ fn cmd_run(args: &[String], resuming: bool) -> Result<(), String> {
     if workers > 0 {
         m = m.workers(workers);
     }
+    let task_timeout = unwrap_cli(a.get_f64("task-timeout"))?;
+    if task_timeout > 0.0 {
+        m = m.task_timeout(Duration::from_secs_f64(task_timeout));
+    }
     match a.get("isolation").unwrap_or("thread") {
         "thread" => {}
         "process" => {
@@ -225,7 +253,14 @@ fn cmd_run(args: &[String], resuming: bool) -> Result<(), String> {
                 .isolate_processes(n, budget)
                 .worker_args(vec!["worker".to_string()]);
         }
-        other => return Err(format!("--isolation must be 'thread' or 'process', got '{other}'")),
+        "remote" => {
+            m = setup_remote(m, &a, workers)?;
+        }
+        other => {
+            return Err(format!(
+                "--isolation must be 'thread', 'process', or 'remote', got '{other}'"
+            ))
+        }
     }
     if let Some(dir) = a.get("cache") {
         m = m.with_cache_dir(dir);
@@ -307,6 +342,135 @@ fn cmd_run(args: &[String], resuming: bool) -> Result<(), String> {
         }
     }
     Ok(())
+}
+
+/// Reads the shared worker auth token from a file (trimmed; must be
+/// non-empty). Distributing the secret via a file keeps it out of argv
+/// and the process table.
+fn read_token_file(path: &str) -> Result<String, String> {
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| format!("cannot read token file {path}: {e}"))?;
+    let token = text.trim().to_string();
+    if token.is_empty() {
+        return Err(format!("token file {path} is empty"));
+    }
+    Ok(token)
+}
+
+/// `--isolation remote`: bind the worker-registration pool here in the
+/// CLI (not inside the run) so the resolved endpoint can be printed
+/// before dispatch — operators paste it into their `memento serve
+/// --connect` invocations.
+#[cfg(unix)]
+fn setup_remote(
+    m: Memento,
+    a: &memento::util::cli::CliArgs,
+    workers: usize,
+) -> Result<Memento, String> {
+    use memento::ipc::pool::{PoolOptions, WorkerPool};
+    use memento::ipc::transport::Transport;
+
+    let token_path = a
+        .get("token-file")
+        .ok_or("--isolation remote requires --token-file (the shared worker auth token)")?;
+    let token = read_token_file(token_path)?;
+    let bind = a.get("listen").unwrap_or("127.0.0.1:0").to_string();
+    let pool = WorkerPool::listen(
+        &Transport::Tcp { bind },
+        PoolOptions { token: Some(token), ..PoolOptions::default() },
+    )
+    .map_err(|e| e.to_string())?;
+    eprintln!(
+        "memento: listening for workers on {} — start them with `memento serve --connect {} --token-file {token_path}`",
+        pool.endpoint(),
+        pool.endpoint().to_string().trim_start_matches("tcp://"),
+    );
+    let n = if workers > 0 { workers } else { memento::util::pool::num_cpus() };
+    Ok(m
+        .with_worker_pool(pool)
+        // The bind address in the backend is unused once a pool is
+        // installed; the pool above owns the listener.
+        .remote_workers("", n))
+}
+
+#[cfg(not(unix))]
+fn setup_remote(
+    _m: Memento,
+    _a: &memento::util::cli::CliArgs,
+    _workers: usize,
+) -> Result<Memento, String> {
+    Err("remote isolation requires a unix platform".into())
+}
+
+/// `memento serve`: a standing worker process. Connects out to a
+/// supervisor started with `--isolation remote`, authenticates with the
+/// shared token, serves task attempts, and re-registers after every run
+/// (reconnecting with backoff if the supervisor is unreachable) until
+/// stopped — or until the optional bounds below.
+#[cfg(unix)]
+fn cmd_serve(args: &[String]) -> Result<(), String> {
+    use memento::ipc::transport::Endpoint;
+    use memento::ipc::worker::{serve_remote, RemoteWorkerOptions};
+
+    let spec = CliSpec::new(
+        "memento serve",
+        "standing worker: register with a remote supervisor and execute grid tasks",
+    )
+    .opt_required("connect", "supervisor address (host:port)")
+    .opt_required("token-file", "file holding the shared auth token")
+    .opt("worker-id", "0", "self-reported worker id (diagnostics)")
+    .opt("runs", "0", "stop after serving N runs (0 = serve forever)")
+    .opt(
+        "tasks-per-conn",
+        "0",
+        "voluntarily re-register after N task attempts per connection \
+         (0 = never); useful for rolling restarts",
+    )
+    .opt(
+        "give-up-after",
+        "0",
+        "exit once the supervisor has been unreachable for N seconds \
+         (0 = keep retrying forever)",
+    );
+    let a = unwrap_cli(spec.parse(args))?;
+    let addr = a.get("connect").ok_or("missing --connect")?;
+    let token = read_token_file(a.get("token-file").ok_or("missing --token-file")?)?;
+    let runs = unwrap_cli(a.get_usize("runs"))?;
+    let tasks_per_conn = unwrap_cli(a.get_usize("tasks-per-conn"))?;
+    let give_up = unwrap_cli(a.get_f64("give-up-after"))?;
+
+    let store = shared_store().ok();
+    if store.is_none() {
+        eprintln!("note: artifacts/ not found — the 'MLP' model family will fail; run `make artifacts`");
+    }
+    let exp_fn: std::sync::Arc<memento::coordinator::memento::ExpFn> =
+        std::sync::Arc::new(grid::grid_exp_fn(store));
+
+    let endpoint = Endpoint::Tcp(addr.to_string());
+    eprintln!("memento serve: registering with {endpoint}");
+    let report = serve_remote(
+        exp_fn,
+        &endpoint,
+        RemoteWorkerOptions {
+            token: Some(token),
+            worker_id: unwrap_cli(a.get_u64("worker-id"))?,
+            max_connections: (runs > 0).then_some(runs),
+            tasks_per_connection: (tasks_per_conn > 0).then_some(tasks_per_conn),
+            give_up_after: (give_up > 0.0).then(|| Duration::from_secs_f64(give_up)),
+            ..RemoteWorkerOptions::default()
+        },
+    )
+    .map_err(|e| e.to_string())?;
+    eprintln!(
+        "memento serve: done — {} connection(s), {} task attempt(s)",
+        report.connections, report.tasks
+    );
+    Ok(())
+}
+
+#[cfg(not(unix))]
+fn cmd_serve(_args: &[String]) -> Result<(), String> {
+    Err("memento serve requires a unix platform".into())
 }
 
 /// The hidden worker mode behind `--isolation process`: connect to the

@@ -13,6 +13,7 @@ use crate::util::rng::Rng;
 /// Boosting hyperparameters.
 #[derive(Debug, Clone)]
 pub struct AdaBoostParams {
+    /// Boosting rounds (weak learners trained).
     pub n_rounds: usize,
     /// Depth of each weak learner (1 = stumps, the classic choice).
     pub stump_depth: usize,
@@ -33,10 +34,12 @@ pub struct AdaBoost {
 }
 
 impl AdaBoost {
+    /// An unfitted ensemble with the given hyperparameters.
     pub fn new(params: AdaBoostParams) -> Self {
         AdaBoost { params, learners: Vec::new(), n_classes: 0 }
     }
 
+    /// Weak learners actually kept (early-stop may trim rounds).
     pub fn n_rounds_fitted(&self) -> usize {
         self.learners.len()
     }

@@ -7,17 +7,22 @@
 /// A dense row-major feature matrix with labels.
 #[derive(Debug, Clone)]
 pub struct Dataset {
+    /// Dataset name (labels reports and task params).
     pub name: String,
     /// Row-major features, `n_rows * n_cols`.
     pub x: Vec<f32>,
+    /// Number of rows.
     pub n_rows: usize,
+    /// Number of feature columns.
     pub n_cols: usize,
     /// Class labels in `0..n_classes`.
     pub y: Vec<usize>,
+    /// Number of distinct classes.
     pub n_classes: usize,
 }
 
 impl Dataset {
+    /// Assembles a dataset, validating buffer sizes.
     pub fn new(
         name: impl Into<String>,
         x: Vec<f32>,

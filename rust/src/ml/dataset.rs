@@ -20,9 +20,13 @@ use crate::util::rng::Rng;
 /// Parameters of the blob generator.
 #[derive(Debug, Clone)]
 pub struct SynthSpec {
+    /// Dataset name.
     pub name: &'static str,
+    /// Rows to generate.
     pub n_rows: usize,
+    /// Feature columns to generate.
     pub n_cols: usize,
+    /// Distinct classes.
     pub n_classes: usize,
     /// Class-mean spread (bigger = easier).
     pub separation: f64,
@@ -30,6 +34,7 @@ pub struct SynthSpec {
     pub sigma: f64,
     /// Fraction of cells masked to NaN.
     pub missing_rate: f64,
+    /// Generator seed (fully deterministic).
     pub seed: u64,
 }
 

@@ -8,7 +8,9 @@ use crate::util::rng::Rng;
 /// Forest hyperparameters.
 #[derive(Debug, Clone)]
 pub struct ForestParams {
+    /// Trees in the ensemble.
     pub n_trees: usize,
+    /// Maximum depth per tree.
     pub max_depth: usize,
     /// Per-split feature candidates; `None` = ⌈√d⌉.
     pub max_features: Option<usize>,
@@ -29,10 +31,12 @@ pub struct RandomForest {
 }
 
 impl RandomForest {
+    /// An unfitted forest with the given hyperparameters.
     pub fn new(params: ForestParams) -> Self {
         RandomForest { params, trees: Vec::new(), n_classes: 0 }
     }
 
+    /// Trees actually fitted.
     pub fn n_trees(&self) -> usize {
         self.trees.len()
     }

@@ -14,6 +14,7 @@ pub trait Transformer: Send + Sync {
     /// Applies the learned transformation in place.
     fn transform(&self, ds: &mut Dataset);
 
+    /// Fits on `ds` and immediately transforms it.
     fn fit_transform(&mut self, ds: &mut Dataset) {
         self.fit(ds);
         self.transform(ds);

@@ -11,6 +11,7 @@ use crate::util::rng::Rng;
 /// KNN hyperparameters.
 #[derive(Debug, Clone)]
 pub struct KnnParams {
+    /// Neighbors consulted per prediction.
     pub k: usize,
 }
 
@@ -31,6 +32,7 @@ pub struct Knn {
 }
 
 impl Knn {
+    /// An unfitted model with the given hyperparameters.
     pub fn new(params: KnnParams) -> Knn {
         Knn { params, train_x: Vec::new(), train_y: Vec::new(), n_cols: 0, n_classes: 0 }
     }

@@ -12,8 +12,11 @@ use crate::util::rng::Rng;
 /// Hyperparameters.
 #[derive(Debug, Clone)]
 pub struct LogisticParams {
+    /// Gradient-descent epochs.
     pub epochs: usize,
+    /// Learning rate.
     pub lr: f64,
+    /// L2 regularization strength.
     pub l2: f64,
 }
 
@@ -35,6 +38,7 @@ pub struct LogisticRegression {
 }
 
 impl LogisticRegression {
+    /// An unfitted model with the given hyperparameters.
     pub fn new(params: LogisticParams) -> Self {
         LogisticRegression { params, w: Vec::new(), b: Vec::new(), n_cols: 0, n_classes: 0 }
     }

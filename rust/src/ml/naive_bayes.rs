@@ -32,6 +32,7 @@ pub struct GaussianNb {
 }
 
 impl GaussianNb {
+    /// An unfitted model with the given hyperparameters.
     pub fn new(params: GnbParams) -> GaussianNb {
         GaussianNb { params, ..Default::default() }
     }

@@ -50,8 +50,11 @@ pub const MODEL_NAMES: &[&str] = &[
 /// Cross-validated pipeline scores.
 #[derive(Debug, Clone)]
 pub struct CvScores {
+    /// Per-fold accuracy.
     pub fold_accuracy: Vec<f64>,
+    /// Mean accuracy across folds.
     pub mean_accuracy: f64,
+    /// Mean macro-averaged F1 across folds.
     pub mean_macro_f1: f64,
     /// Total rows evaluated across folds.
     pub n_eval: usize,

@@ -27,7 +27,9 @@ pub fn train_test_indices(ds: &Dataset, test_frac: f64, rng: &mut Rng) -> (Vec<u
 /// One fold of a k-fold split: held-out test rows and the remaining train rows.
 #[derive(Debug, Clone)]
 pub struct Fold {
+    /// Row indices to train on.
     pub train: Vec<usize>,
+    /// Held-out row indices to evaluate on.
     pub test: Vec<usize>,
 }
 

@@ -11,6 +11,7 @@ use crate::util::rng::Rng;
 /// SVC hyperparameters.
 #[derive(Debug, Clone)]
 pub struct SvcParams {
+    /// Pegasos epochs.
     pub epochs: usize,
     /// L2 regularization strength (Pegasos lambda).
     pub lambda: f64,
@@ -32,6 +33,7 @@ pub struct LinearSvc {
 }
 
 impl LinearSvc {
+    /// An unfitted model with the given hyperparameters.
     pub fn new(params: SvcParams) -> Self {
         LinearSvc { params, models: Vec::new(), n_classes: 0 }
     }

@@ -18,7 +18,9 @@ pub trait Classifier: Send + Sync {
 /// Tree hyperparameters.
 #[derive(Debug, Clone)]
 pub struct TreeParams {
+    /// Maximum tree depth.
     pub max_depth: usize,
+    /// Minimum rows a node needs to split further.
     pub min_samples_split: usize,
     /// Features examined per split; `None` = all.
     pub max_features: Option<usize>,
@@ -52,6 +54,7 @@ pub struct DecisionTree {
 }
 
 impl DecisionTree {
+    /// An unfitted tree with the given hyperparameters.
     pub fn new(params: TreeParams) -> Self {
         DecisionTree { params, root: None, n_classes: 0 }
     }

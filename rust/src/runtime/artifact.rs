@@ -15,7 +15,9 @@ use std::sync::{Arc, Mutex, OnceLock};
 /// Shape/dtype spec of one input or output.
 #[derive(Debug, Clone, PartialEq)]
 pub struct TensorSpec {
+    /// Parameter name in the AOT signature.
     pub name: String,
+    /// Expected dimension sizes.
     pub shape: Vec<usize>,
 }
 
@@ -31,6 +33,7 @@ impl TensorSpec {
         Some(TensorSpec { name, shape })
     }
 
+    /// Total element count of the spec's shape.
     pub fn numel(&self) -> usize {
         self.shape.iter().product()
     }
@@ -39,24 +42,33 @@ impl TensorSpec {
 /// Manifest entry for one AOT function.
 #[derive(Debug, Clone)]
 pub struct ArtifactSpec {
+    /// Function name (manifest key).
     pub name: String,
+    /// HLO text file, relative to the artifact directory.
     pub file: String,
+    /// Input signatures, in call order.
     pub inputs: Vec<TensorSpec>,
+    /// Output signatures, in result-tuple order.
     pub outputs: Vec<TensorSpec>,
 }
 
 /// The model's padded dimensions (shared AOT shapes).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct ModelMeta {
+    /// Padded batch size.
     pub batch: usize,
+    /// Padded feature count.
     pub features: usize,
+    /// Hidden-layer width.
     pub hidden: usize,
+    /// Padded class count.
     pub classes: usize,
 }
 
 /// Parsed manifest + lazily compiled executables.
 pub struct ArtifactStore {
     dir: PathBuf,
+    /// The model family's padded dimensions.
     pub meta: ModelMeta,
     specs: BTreeMap<String, ArtifactSpec>,
     engine: Arc<Engine>,
@@ -160,14 +172,17 @@ impl ArtifactStore {
         PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
     }
 
+    /// The manifest's function names.
     pub fn names(&self) -> Vec<&str> {
         self.specs.keys().map(|s| s.as_str()).collect()
     }
 
+    /// The manifest entry for `name`, if any.
     pub fn spec(&self, name: &str) -> Option<&ArtifactSpec> {
         self.specs.get(name)
     }
 
+    /// The artifact directory.
     pub fn dir(&self) -> &Path {
         &self.dir
     }

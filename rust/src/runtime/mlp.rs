@@ -24,7 +24,9 @@ use std::sync::Arc;
 /// MLP training hyperparameters.
 #[derive(Debug, Clone)]
 pub struct MlpParams {
+    /// Training epochs.
     pub epochs: usize,
+    /// Learning rate.
     pub lr: f32,
 }
 
@@ -47,6 +49,7 @@ pub struct MlpModel {
 }
 
 impl MlpModel {
+    /// An unfitted model over the given artifact store.
     pub fn new(store: Arc<ArtifactStore>, params: MlpParams) -> MlpModel {
         MlpModel {
             store,

@@ -24,6 +24,7 @@ pub struct Executable {
     inner: Mutex<xla::PjRtLoadedExecutable>,
     /// Number of outputs in the result tuple (from the manifest).
     pub n_outputs: usize,
+    /// The artifact name this executable was compiled from.
     pub name: String,
 }
 
@@ -45,6 +46,7 @@ impl std::fmt::Debug for Executable {
 /// The PJRT engine: one CPU client, many compiled executables.
 pub struct Engine {
     client: Mutex<xla::PjRtClient>,
+    /// The PJRT platform name (e.g. `cpu`).
     pub platform: String,
 }
 

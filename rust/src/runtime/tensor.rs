@@ -8,11 +8,14 @@ use crate::coordinator::error::MementoError;
 /// A row-major f32 tensor.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Tensor {
+    /// Dimension sizes (empty = scalar).
     pub shape: Vec<usize>,
+    /// Elements, row-major.
     pub data: Vec<f32>,
 }
 
 impl Tensor {
+    /// A tensor from a shape and matching row-major data.
     pub fn new(shape: Vec<usize>, data: Vec<f32>) -> Tensor {
         assert_eq!(
             shape.iter().product::<usize>(),
@@ -22,19 +25,23 @@ impl Tensor {
         Tensor { shape, data }
     }
 
+    /// An all-zeros tensor of the given shape.
     pub fn zeros(shape: Vec<usize>) -> Tensor {
         let n = shape.iter().product();
         Tensor { shape, data: vec![0.0; n] }
     }
 
+    /// A rank-0 tensor holding one value.
     pub fn scalar(v: f32) -> Tensor {
         Tensor { shape: vec![], data: vec![v] }
     }
 
+    /// Total element count.
     pub fn len(&self) -> usize {
         self.data.len()
     }
 
+    /// True when the tensor has no elements.
     pub fn is_empty(&self) -> bool {
         self.data.is_empty()
     }

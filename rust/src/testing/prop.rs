@@ -21,6 +21,7 @@ pub struct Gen {
 }
 
 impl Gen {
+    /// A generator seeded deterministically.
     pub fn new(seed: u64) -> Self {
         Gen { rng: Rng::new(seed) }
     }
@@ -35,14 +36,17 @@ impl Gen {
         self.rng.range(lo, hi + 1)
     }
 
+    /// A uniform `u64`.
     pub fn u64(&mut self) -> u64 {
         self.rng.next_u64()
     }
 
+    /// A uniform `f64` in `[0, 1)`.
     pub fn f64(&mut self) -> f64 {
         self.rng.f64()
     }
 
+    /// A biased coin flip (`true` with probability `p`).
     pub fn bool(&mut self, p: f64) -> bool {
         self.rng.bool(p)
     }

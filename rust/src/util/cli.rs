@@ -10,32 +10,42 @@ use std::fmt;
 /// Specification of one option/flag.
 #[derive(Debug, Clone)]
 pub struct OptSpec {
+    /// Long option name (without the `--`).
     pub name: &'static str,
+    /// One-line help text.
     pub help: &'static str,
     /// Flags take no value; options take exactly one.
     pub is_flag: bool,
+    /// Default value for options; `None` = absent unless provided.
     pub default: Option<&'static str>,
 }
 
 /// Parser specification: a name, blurb, options, and positional names.
 #[derive(Debug, Clone, Default)]
 pub struct CliSpec {
+    /// Command name shown in usage/help.
     pub name: &'static str,
+    /// One-line description shown in help.
     pub about: &'static str,
+    /// Declared options and flags.
     pub opts: Vec<OptSpec>,
+    /// Declared positional arguments as `(name, help)` pairs.
     pub positionals: Vec<(&'static str, &'static str)>,
 }
 
 impl CliSpec {
+    /// A new empty spec for the named command.
     pub fn new(name: &'static str, about: &'static str) -> Self {
         CliSpec { name, about, opts: Vec::new(), positionals: Vec::new() }
     }
 
+    /// Declares a boolean `--flag`.
     pub fn flag(mut self, name: &'static str, help: &'static str) -> Self {
         self.opts.push(OptSpec { name, help, is_flag: true, default: None });
         self
     }
 
+    /// Declares a `--name <value>` option with a default.
     pub fn opt(mut self, name: &'static str, default: &'static str, help: &'static str) -> Self {
         self.opts.push(OptSpec { name, help, is_flag: false, default: Some(default) });
         self
@@ -47,6 +57,7 @@ impl CliSpec {
         self
     }
 
+    /// Declares the next positional argument.
     pub fn positional(mut self, name: &'static str, help: &'static str) -> Self {
         self.positionals.push((name, help));
         self
@@ -151,10 +162,12 @@ pub struct CliArgs {
 }
 
 impl CliArgs {
+    /// The option's value (provided or default); `None` when absent.
     pub fn get(&self, name: &str) -> Option<&str> {
         self.values.get(name).map(|s| s.as_str())
     }
 
+    /// The option's value parsed as `usize`.
     pub fn get_usize(&self, name: &str) -> Result<usize, CliError> {
         let s = self
             .get(name)
@@ -163,6 +176,7 @@ impl CliArgs {
             .map_err(|_| CliError::BadValue(name.to_string(), s.to_string(), "usize"))
     }
 
+    /// The option's value parsed as `f64`.
     pub fn get_f64(&self, name: &str) -> Result<f64, CliError> {
         let s = self
             .get(name)
@@ -171,6 +185,7 @@ impl CliArgs {
             .map_err(|_| CliError::BadValue(name.to_string(), s.to_string(), "f64"))
     }
 
+    /// The option's value parsed as `u64`.
     pub fn get_u64(&self, name: &str) -> Result<u64, CliError> {
         let s = self
             .get(name)
@@ -179,6 +194,7 @@ impl CliArgs {
             .map_err(|_| CliError::BadValue(name.to_string(), s.to_string(), "u64"))
     }
 
+    /// True when the flag was passed.
     pub fn flag(&self, name: &str) -> bool {
         self.flags.get(name).copied().unwrap_or(false)
     }
@@ -193,11 +209,18 @@ impl CliArgs {
 /// CLI parsing errors (`HelpRequested` carries the rendered help text).
 #[derive(Debug, Clone)]
 pub enum CliError {
+    /// `--help` was passed; carries the rendered help text.
     HelpRequested(String),
+    /// An option not declared in the spec.
     UnknownOption(String),
+    /// An option that requires a value had none.
     MissingValue(String),
+    /// A flag was given an `=value`.
     FlagWithValue(String),
+    /// A value failed to parse as the requested type (option, raw value,
+    /// type name).
     BadValue(String, String, &'static str),
+    /// More positional arguments than the spec declares (got, max).
     TooManyPositionals(usize, usize),
 }
 

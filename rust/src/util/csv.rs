@@ -10,14 +10,18 @@ use std::fmt;
 /// A parsed CSV document: optional header + rows of string fields.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct CsvTable {
+    /// Column names, when the document was parsed with a header row.
     pub header: Option<Vec<String>>,
+    /// Data records, one `Vec<String>` of fields per row.
     pub rows: Vec<Vec<String>>,
 }
 
 /// CSV parse error with 1-based record index.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct CsvError {
+    /// 1-based index of the offending record.
     pub record: usize,
+    /// What went wrong.
     pub msg: String,
 }
 

@@ -44,6 +44,7 @@ pub struct WorkQueue<T> {
 }
 
 impl<T> WorkQueue<T> {
+    /// Creates an empty queue.
     pub fn new() -> Self {
         WorkQueue { q: Mutex::new(VecDeque::new()) }
     }
@@ -70,10 +71,12 @@ impl<T> WorkQueue<T> {
         self.q.lock().unwrap().pop_back()
     }
 
+    /// Items currently queued.
     pub fn len(&self) -> usize {
         self.q.lock().unwrap().len()
     }
 
+    /// True when nothing is queued.
     pub fn is_empty(&self) -> bool {
         self.q.lock().unwrap().is_empty()
     }

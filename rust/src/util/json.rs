@@ -21,11 +21,18 @@ use std::fmt;
 /// is deterministic — a requirement for content-addressed task hashing.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Json {
+    /// The JSON `null` literal.
     Null,
+    /// A boolean.
     Bool(bool),
+    /// A number (JSON has one numeric type; integers ride in `f64`,
+    /// exact for |n| < 2⁵³).
     Num(f64),
+    /// A string.
     Str(String),
+    /// An array.
     Arr(Vec<Json>),
+    /// An object, ordered by key for deterministic serialization.
     Obj(BTreeMap<String, Json>),
 }
 
@@ -40,10 +47,12 @@ impl Json {
         Json::Arr(items)
     }
 
+    /// String constructor.
     pub fn str(s: impl Into<String>) -> Json {
         Json::Str(s.into())
     }
 
+    /// Number constructor.
     pub fn num(n: impl Into<f64>) -> Json {
         Json::Num(n.into())
     }
@@ -53,12 +62,14 @@ impl Json {
         Json::Num(n as f64)
     }
 
+    /// Boolean constructor.
     pub fn bool(b: bool) -> Json {
         Json::Bool(b)
     }
 
     // ---- accessors ------------------------------------------------------
 
+    /// The string value, if this is a `Str`.
     pub fn as_str(&self) -> Option<&str> {
         match self {
             Json::Str(s) => Some(s),
@@ -66,6 +77,7 @@ impl Json {
         }
     }
 
+    /// The numeric value, if this is a `Num`.
     pub fn as_f64(&self) -> Option<f64> {
         match self {
             Json::Num(n) => Some(*n),
@@ -73,6 +85,7 @@ impl Json {
         }
     }
 
+    /// The value as an integer, if this is a `Num` holding one exactly.
     pub fn as_i64(&self) -> Option<i64> {
         match self {
             Json::Num(n) if n.fract() == 0.0 && n.abs() < 9.0e15 => Some(*n as i64),
@@ -80,10 +93,12 @@ impl Json {
         }
     }
 
+    /// The value as a non-negative integer index.
     pub fn as_usize(&self) -> Option<usize> {
         self.as_i64().and_then(|v| if v >= 0 { Some(v as usize) } else { None })
     }
 
+    /// The boolean value, if this is a `Bool`.
     pub fn as_bool(&self) -> Option<bool> {
         match self {
             Json::Bool(b) => Some(*b),
@@ -91,6 +106,7 @@ impl Json {
         }
     }
 
+    /// The elements, if this is an `Arr`.
     pub fn as_arr(&self) -> Option<&[Json]> {
         match self {
             Json::Arr(a) => Some(a),
@@ -98,6 +114,7 @@ impl Json {
         }
     }
 
+    /// The key/value map, if this is an `Obj`.
     pub fn as_obj(&self) -> Option<&BTreeMap<String, Json>> {
         match self {
             Json::Obj(o) => Some(o),
@@ -115,6 +132,7 @@ impl Json {
         self.as_arr().and_then(|a| a.get(idx))
     }
 
+    /// True for the `Null` literal.
     pub fn is_null(&self) -> bool {
         matches!(self, Json::Null)
     }
@@ -257,8 +275,11 @@ fn write_escaped(s: &str, out: &mut String) {
 /// A parse error with 1-based line/column context.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct ParseError {
+    /// What went wrong.
     pub msg: String,
+    /// 1-based line of the offending character.
     pub line: usize,
+    /// 1-based column of the offending character.
     pub col: usize,
 }
 

@@ -49,6 +49,7 @@ impl Default for Sha256 {
 }
 
 impl Sha256 {
+    /// A fresh hasher in the initial state.
     pub fn new() -> Sha256 {
         Sha256 { state: H0, buf: [0u8; 64], buf_len: 0, total_len: 0 }
     }

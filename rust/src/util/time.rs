@@ -9,22 +9,27 @@ pub struct Stopwatch {
 }
 
 impl Stopwatch {
+    /// Starts timing from now.
     pub fn start() -> Self {
         Stopwatch { start: Instant::now() }
     }
 
+    /// Time elapsed since `start`/`restart`.
     pub fn elapsed(&self) -> Duration {
         self.start.elapsed()
     }
 
+    /// Elapsed time in (fractional) seconds.
     pub fn elapsed_secs(&self) -> f64 {
         self.elapsed().as_secs_f64()
     }
 
+    /// Elapsed time in (fractional) milliseconds.
     pub fn elapsed_ms(&self) -> f64 {
         self.elapsed().as_secs_f64() * 1e3
     }
 
+    /// Returns the elapsed time and resets the start point to now.
     pub fn restart(&mut self) -> Duration {
         let e = self.start.elapsed();
         self.start = Instant::now();

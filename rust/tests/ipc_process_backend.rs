@@ -31,6 +31,14 @@ fn exp(ctx: &TaskContext) -> Result<Json, MementoError> {
         // view this is indistinguishable from a segfault or `kill -9`.
         "crash3" if i == 3 && ctx.attempt == 1 => std::process::abort(),
         "fail2" if i == 2 => Err(MementoError::experiment("i=2 always fails")),
+        // A stuck task (heartbeats keep flowing — the worker is healthy,
+        // the *task* is not): only a per-task wall-clock budget can stop
+        // it. 60s is far beyond any test timeout, so if the budget ever
+        // fails to fire, the suite hangs loudly instead of passing.
+        "hang5" if i == 5 && ctx.attempt == 1 => {
+            std::thread::sleep(Duration::from_secs(60));
+            Ok(Json::int(-1))
+        }
         _ => Ok(Json::int(i * 10)),
     }
 }
@@ -171,6 +179,83 @@ fn process_backend_survives_killed_worker() {
     succeeded_ids.dedup();
     assert_eq!(before, 8, "8 success events, one per task");
     assert_eq!(succeeded_ids.len(), 8, "no duplicate outcomes journaled");
+}
+
+/// The per-task wall-clock budget: a sleeper task (healthy worker,
+/// heartbeats flowing, task stuck) is killed at `--task-timeout`,
+/// journaled as a **timeout** (its own journal kind, not a crash or a
+/// plain failure), and requeued exactly once under the retry policy; the
+/// second attempt succeeds. The kill must not consume worker crash
+/// budget (crash_budget is 0 here: any crash-charged kill would retire
+/// the slot and fail the run).
+#[test]
+fn hung_task_is_killed_at_timeout_and_requeued_exactly_once() {
+    let td = TempDir::new("ipc-timeout").unwrap();
+    let jpath = td.join("journal.jsonl");
+    let m = matrix(8, "hang5");
+
+    let builder = process_memento(2, 0)
+        .task_timeout(Duration::from_millis(500))
+        .with_retry(RetryPolicy::fixed(2, Duration::ZERO))
+        .with_journal(&jpath);
+    let metrics = builder.metrics();
+    let started = std::time::Instant::now();
+    let results = builder.run(&m).unwrap();
+    assert!(
+        started.elapsed() < Duration::from_secs(30),
+        "the 60s sleeper must have been stopped at its 500ms budget"
+    );
+
+    // Exactly-once: every task succeeded; the victim took two attempts.
+    assert_eq!(results.len(), 8);
+    assert_eq!(results.n_failed(), 0);
+    let victim = results.find(&[("i", pv_int(5))]).unwrap();
+    assert_eq!(victim.attempts, 2, "timed out once, requeued exactly once");
+    assert_eq!(victim.value.as_ref().and_then(|v| v.as_i64()), Some(50));
+
+    // Metrics: one timeout, one retry, no skips, everything counted.
+    assert_eq!(metrics.tasks_timed_out.get(), 1);
+    assert_eq!(metrics.tasks_retried.get(), 1);
+    assert_eq!(metrics.tasks_skipped.get(), 0);
+    assert_eq!(metrics.tasks_succeeded.get(), 8);
+
+    // Journal: started(1) → timed_out(1, budget) → started(2) →
+    // succeeded(2), and the timeout is its own kind — not a failed
+    // attempt.
+    let events = Journal::replay(&jpath).unwrap();
+    let victim_events: Vec<&Event> = events
+        .iter()
+        .map(|(_, e)| e)
+        .filter(|e| match e {
+            Event::TaskStarted { id, .. }
+            | Event::TaskSucceeded { id, .. }
+            | Event::TaskFailed { id, .. }
+            | Event::TaskTimedOut { id, .. } => *id == victim.id,
+            _ => false,
+        })
+        .collect();
+    assert_eq!(victim_events.len(), 4, "{victim_events:?}");
+    assert!(
+        matches!(victim_events[0], Event::TaskStarted { attempt: 1, .. }),
+        "{victim_events:?}"
+    );
+    match victim_events[1] {
+        Event::TaskTimedOut { attempt: 1, budget_secs, .. } => {
+            assert!((budget_secs - 0.5).abs() < 1e-9, "budget recorded: {budget_secs}");
+        }
+        other => panic!("expected TaskTimedOut, got {other:?}"),
+    }
+    assert!(
+        matches!(victim_events[2], Event::TaskStarted { attempt: 2, .. }),
+        "{victim_events:?}"
+    );
+    assert!(
+        matches!(victim_events[3], Event::TaskSucceeded { attempt: 2, .. }),
+        "{victim_events:?}"
+    );
+    let s = Journal::summarize(&jpath).unwrap();
+    assert_eq!(s.timeouts, 1);
+    assert_eq!(s.failed_attempts, 0, "a timeout is not journaled as a failure");
 }
 
 /// Fail-fast must work across the process boundary too: after the first
