@@ -87,6 +87,40 @@ fn main() {
         disk_per_get * 1e9,
     );
 
+    // Storage-codec delta on the disk tier: the default cache above wrote
+    // tagged-binary entries whose cold `get` lazily scans out just the
+    // "value" field; this one forces JSON at rest. Same files, same tier
+    // demotion — the difference is the per-entry decode.
+    let jcache = ResultCache::open(td.join("micro-json"))
+        .unwrap()
+        .storage_format(memento::util::codec::WireFormat::Json);
+    for i in 0..1000 {
+        jcache.put(&ids[i], &specs[i], &value).unwrap();
+    }
+    let json_disk = suite
+        .bench("cache.get (hit, disk tier, json store)", 1, 10, |_| {
+            jcache.drop_memory();
+            for i in 0..1000 {
+                black_box(jcache.get(&ids[i]).unwrap());
+            }
+        })
+        .clone();
+    let json_per_get = json_disk.mean / 1000.0;
+    suite.note(format!(
+        "{:.0}ns/get json store vs {:.0}ns binary ({:.2}x)",
+        json_per_get * 1e9,
+        disk_per_get * 1e9,
+        json_per_get / disk_per_get,
+    ));
+    extras.push((
+        "cache_scan_bin_1000entries".to_string(),
+        Json::obj(vec![
+            ("binary_disk_ns", Json::Num(disk_per_get * 1e9)),
+            ("json_disk_ns", Json::Num(json_per_get * 1e9)),
+            ("json_over_binary", Json::Num(json_per_get / disk_per_get)),
+        ]),
+    ));
+
     let missing = TaskSpec { params: vec![("i".into(), pv_int(-1))], index: 0 }.id("v1");
     suite.bench("cache.get (miss)", 100, 1000, |_| {
         black_box(cache.get(&missing));

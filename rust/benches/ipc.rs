@@ -20,6 +20,7 @@ use memento::config::matrix::ConfigMatrix;
 use memento::config::value::pv_int;
 use memento::coordinator::memento::Memento;
 use memento::prelude::{MementoError, TaskContext};
+use memento::util::codec::WireFormat;
 use memento::util::json::Json;
 use std::sync::Arc;
 
@@ -99,6 +100,41 @@ fn main() {
             thread.mean / n as f64 * 1e6,
             process.mean / n as f64 * 1e6,
         );
+
+        // Wire-codec delta on the same process tier: the default run above
+        // frames payloads in the tagged binary codec; this one forces the
+        // JSON fallback. Same sockets, same spawns — the difference is
+        // purely serialize + parse per round-trip.
+        let json_wire = suite
+            .bench_with_setup(
+                format!("{n} no-op tasks, {workers} processes, json wire"),
+                1,
+                3,
+                || (),
+                |_| {
+                    let r = Memento::new(exp)
+                        .isolate_processes(workers, 1)
+                        .wire_format(WireFormat::Json)
+                        .run(&matrix)
+                        .unwrap();
+                    assert_eq!(r.len(), n);
+                },
+            )
+            .clone();
+        suite.note(format!(
+            "{:.1}µs/task json wire vs {:.1}µs/task binary ({:.2}x)",
+            json_wire.mean / n as f64 * 1e6,
+            process.mean / n as f64 * 1e6,
+            json_wire.mean / process.mean,
+        ));
+        extras.push((
+            format!("ipc_dispatch_bin_{workers}w_{n}tasks"),
+            Json::obj(vec![
+                ("binary_us_per_task", Json::Num(process.mean / n as f64 * 1e6)),
+                ("json_us_per_task", Json::Num(json_wire.mean / n as f64 * 1e6)),
+                ("json_over_binary", Json::Num(json_wire.mean / process.mean)),
+            ]),
+        ));
 
         // TCP-remote tier: a standing pool with in-process worker threads
         // over loopback TCP. The pool (and its workers) persists across

@@ -47,6 +47,7 @@ fn main() {
     assert_eq!(seeded.len(), n);
 
     let mut single_worker_rate = 0.0f64;
+    let mut bin_8w_mean = 0.0f64;
     for &workers in &[1usize, 2, 4, 8] {
         let cache2 = Arc::clone(&cache);
         let stats = suite
@@ -68,6 +69,9 @@ fn main() {
         if workers == 1 {
             single_worker_rate = rate;
         }
+        if workers == 8 {
+            bin_8w_mean = stats.mean;
+        }
         let scaling = rate / single_worker_rate;
         suite.note(format!(
             "{:.2}µs/restore, {rate:.0}/s ({scaling:.2}x vs 1w)",
@@ -85,6 +89,52 @@ fn main() {
             "E8 headline ({workers}w): {rate:.0} restores/s ({scaling:.2}x vs 1 worker)"
         );
     }
+
+    // Storage-codec delta on the restore path: the cache above holds
+    // tagged-binary entries (the default) whose cold probes lazily scan
+    // out just the "value" field; this one is an all-JSON store, the
+    // shape every pre-codec cache directory has. Same 8-worker resume —
+    // the difference is per-entry decode work inside the restore filter.
+    let jcache = Arc::new(
+        ResultCache::open(td.join("cache-json"))
+            .unwrap()
+            .storage_format(memento::util::codec::WireFormat::Json),
+    );
+    let seeded_json = Memento::new(|_| Ok(Json::Null))
+        .workers(8)
+        .with_cache(Arc::clone(&jcache))
+        .run(&matrix)
+        .unwrap();
+    assert_eq!(seeded_json.len(), n);
+    let json_stats = suite
+        .bench_with_setup(
+            format!("restore {n} cached tasks, 8w, json store"),
+            1,
+            5,
+            || (),
+            |_| {
+                let m = Memento::new(|_| Ok(Json::Null))
+                    .workers(8)
+                    .with_cache(Arc::clone(&jcache));
+                let r = m.run(&matrix).unwrap();
+                assert_eq!(r.n_cached(), n, "resume must restore everything");
+            },
+        )
+        .clone();
+    suite.note(format!(
+        "{:.2}µs/restore json store vs {:.2}µs binary ({:.2}x)",
+        json_stats.mean / n as f64 * 1e6,
+        bin_8w_mean / n as f64 * 1e6,
+        json_stats.mean / bin_8w_mean,
+    ));
+    extras.push((
+        format!("restore_scan_8w_{n}tasks"),
+        Json::obj(vec![
+            ("binary_us_per_task", Json::Num(bin_8w_mean / n as f64 * 1e6)),
+            ("json_us_per_task", Json::Num(json_stats.mean / n as f64 * 1e6)),
+            ("json_over_binary", Json::Num(json_stats.mean / bin_8w_mean)),
+        ]),
+    ));
 
     suite.write_trajectory(&sched_cache_trajectory_path(), extras);
     suite.finish();

@@ -12,10 +12,17 @@
 //!   filesystem; `len`/`is_empty`/`contains` are O(1) map operations
 //!   instead of a directory scan per call. Sharding (by a hash of the id)
 //!   keeps worker threads on different locks.
-//! - **Disk** — one JSON file per entry under `<dir>/<id>.json`, written
-//!   atomically, exactly as before. `put` is write-through (disk first,
-//!   then memory), so crash behaviour is unchanged: the disk tier remains
-//!   the source of truth and the memory tier is a cache of it.
+//! - **Disk** — one file per entry under `<dir>/<id>.json`, written
+//!   atomically. Entries are tagged binary ([`crate::util::codec`]) by
+//!   default — and compact JSON under
+//!   [`ResultCache::storage_format`]`(WireFormat::Json)` — with the
+//!   format auto-detected per file on read, so directories written by
+//!   older (JSON-only) versions keep hitting. `put` is write-through
+//!   (disk first, then memory), so crash behaviour is unchanged: the
+//!   disk tier remains the source of truth and the memory tier is a
+//!   cache of it. A cold read extracts just the `value` field with the
+//!   lazy scanner ([`crate::util::scan`]) — the entry's id/params
+//!   context is skipped, never parsed.
 //!
 //! Opening a cache over a pre-existing directory scans it **once** and
 //! indexes every entry as *present-on-disk-but-not-loaded*; the first `get`
@@ -46,8 +53,10 @@
 //! recover from that crash.
 
 use crate::coordinator::task::{TaskId, TaskSpec};
+use crate::util::codec::{self, WireFormat};
 use crate::util::fs::atomic_write;
-use crate::util::json::{parse, Json};
+use crate::util::json::Json;
+use crate::util::scan::Scanner;
 use std::collections::{HashMap, VecDeque};
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
@@ -166,6 +175,8 @@ pub struct ResultCache {
     /// truth), and a single value larger than the whole shard budget is
     /// never kept resident at all.
     mem_budget_per_shard: usize,
+    /// On-disk entry encoding for *writes* (reads always auto-detect).
+    storage: WireFormat,
 }
 
 fn shard_of(key: &str) -> usize {
@@ -202,7 +213,16 @@ impl ResultCache {
             exclusive: AtomicBool::new(false),
             shards,
             mem_budget_per_shard: DEFAULT_MEM_BUDGET_PER_SHARD,
+            storage: WireFormat::default(),
         })
+    }
+
+    /// Chooses the on-disk encoding for new entries: tagged binary (the
+    /// default) or compact JSON for human-debuggable stores. Reads
+    /// auto-detect per file either way, so mixed directories are fine.
+    pub fn storage_format(mut self, format: WireFormat) -> Self {
+        self.storage = format;
+        self
     }
 
     /// Enables fsync-per-entry durability.
@@ -289,8 +309,8 @@ impl ResultCache {
         // Cold path: disk tier. Read outside the shard lock so a slow disk
         // never blocks warm hits on the same shard.
         let path = self.path_of(id);
-        let text = match std::fs::read_to_string(&path) {
-            Ok(t) => t,
+        let bytes = match std::fs::read(&path) {
+            Ok(b) => b,
             Err(_) => {
                 // Entry gone from disk: drop a stale OnDisk marker if any
                 // so len() converges (a Loaded entry re-inserted by a
@@ -303,21 +323,24 @@ impl ResultCache {
                 return None;
             }
         };
-        match parse(&text) {
-            Ok(doc) => match doc.get("value") {
-                Some(v) => {
-                    self.stats.hits.fetch_add(1, Ordering::Relaxed);
-                    self.stats.disk_hits.fetch_add(1, Ordering::Relaxed);
-                    self.promote_if_on_disk(&id.0, v.clone(), text.len());
-                    Some(v.clone())
-                }
-                None => {
-                    self.stats.corrupt.fetch_add(1, Ordering::Relaxed);
-                    self.stats.misses.fetch_add(1, Ordering::Relaxed);
-                    None
-                }
-            },
-            Err(_) => {
+        // Lazy extraction (either format): skip to the `value` field and
+        // materialize only that subtree — the id/params context around it
+        // is never parsed into a tree.
+        let value = (|| {
+            let scanner = Scanner::new(&bytes)?;
+            match scanner.field("value")? {
+                Some(v) => v.materialize().map(Some),
+                None => Ok(None),
+            }
+        })();
+        match value {
+            Ok(Some(v)) => {
+                self.stats.hits.fetch_add(1, Ordering::Relaxed);
+                self.stats.disk_hits.fetch_add(1, Ordering::Relaxed);
+                self.promote_if_on_disk(&id.0, v.clone(), bytes.len());
+                Some(v)
+            }
+            Ok(None) | Err(_) => {
                 self.stats.corrupt.fetch_add(1, Ordering::Relaxed);
                 self.stats.misses.fetch_add(1, Ordering::Relaxed);
                 None
@@ -442,11 +465,11 @@ impl ResultCache {
             ("params", spec.to_json()),
             ("value", value.clone()),
         ]);
-        let bytes = doc.to_string();
+        let bytes = codec::write_document(&doc, self.storage);
         if self.fsync {
-            atomic_write(&self.path_of(id), bytes.as_bytes())?;
+            atomic_write(&self.path_of(id), &bytes)?;
         } else {
-            crate::util::fs::atomic_write_nosync(&self.path_of(id), bytes.as_bytes())?;
+            crate::util::fs::atomic_write_nosync(&self.path_of(id), &bytes)?;
         }
         self.insert_loaded(&id.0, value.clone(), bytes.len());
         self.stats.writes.fetch_add(1, Ordering::Relaxed);
@@ -761,6 +784,62 @@ mod tests {
         .unwrap();
         assert!(cache.get(&id).is_none());
         assert_eq!(cache.stats().snapshot().3, 2);
+    }
+
+    #[test]
+    fn default_entries_are_binary_and_json_stores_still_hit() {
+        let td = TempDir::new("cache-fmt").unwrap();
+        let s = spec(1);
+        let id = s.id("v1");
+        // Default handle writes tagged binary…
+        {
+            let cache = ResultCache::open(td.path()).unwrap();
+            cache.put(&id, &s, &Json::int(5)).unwrap();
+            let bytes = std::fs::read(td.path().join(format!("{id}.json"))).unwrap();
+            assert!(crate::util::codec::is_binary(&bytes));
+        }
+        // …and a fresh handle reads it back off disk (auto-detect).
+        let cache = ResultCache::open(td.path()).unwrap();
+        assert_eq!(cache.get(&id).unwrap().as_i64(), Some(5));
+
+        // A pre-binary store: JSON text written the way older versions
+        // did. It must hit through any handle, unchanged.
+        let td2 = TempDir::new("cache-fmt-json").unwrap();
+        {
+            let writer = ResultCache::open(td2.path())
+                .unwrap()
+                .storage_format(WireFormat::Json);
+            writer.put(&id, &s, &Json::int(7)).unwrap();
+            let bytes = std::fs::read(td2.path().join(format!("{id}.json"))).unwrap();
+            assert_eq!(bytes[0], b'{', "Json storage must stay plain text");
+        }
+        let reader = ResultCache::open(td2.path()).unwrap();
+        assert_eq!(reader.get(&id).unwrap().as_i64(), Some(7));
+    }
+
+    #[test]
+    fn cold_get_materializes_only_the_value_subtree() {
+        let td = TempDir::new("cache-lazy").unwrap();
+        let s = spec(1);
+        let id = s.id("v1");
+        for format in [WireFormat::Binary, WireFormat::Json] {
+            let writer = ResultCache::open(td.path()).unwrap().storage_format(format);
+            writer.put(&id, &s, &Json::obj(vec![("acc", Json::Num(0.5))])).unwrap();
+            // Fresh handle ⇒ cold read: exactly one materialization (the
+            // `value` subtree), no matter how much context surrounds it.
+            let cache = ResultCache::open(td.path()).unwrap();
+            let before = crate::util::scan::materialized_count();
+            assert_eq!(
+                cache.get(&id).unwrap().get("acc").unwrap().as_f64(),
+                Some(0.5),
+                "{format:?}"
+            );
+            assert_eq!(
+                crate::util::scan::materialized_count() - before,
+                1,
+                "{format:?}: cold get must materialize exactly the value"
+            );
+        }
     }
 
     #[test]

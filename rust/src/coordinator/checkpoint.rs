@@ -16,11 +16,21 @@
 //! Resume refuses to run against a *different* matrix or experiment
 //! version: that mismatch is exactly the "silently mixing results from two
 //! experiment definitions" failure the fingerprint exists to prevent.
+//!
+//! Manifest and progress files are tagged binary ([`crate::util::codec`])
+//! by default, compact JSON under
+//! [`CheckpointStore::storage_format`]`(WireFormat::Json)`; readers
+//! auto-detect per file, so run directories from older (JSON-only)
+//! versions resume unchanged. The resume gate probes the fingerprint and
+//! version with the lazy scanner ([`crate::util::scan`]) — a mismatched
+//! manifest is refused without materializing its outcome map.
 
 use crate::coordinator::error::MementoError;
 use crate::coordinator::task::TaskId;
+use crate::util::codec::{self, WireFormat};
 use crate::util::fs::atomic_write;
-use crate::util::json::{parse, Json};
+use crate::util::json::Json;
+use crate::util::scan::Scanner;
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
 use std::sync::Mutex;
@@ -64,6 +74,10 @@ pub struct CheckpointStore {
     /// — which can be after the first flushes have already happened.
     total_tasks: std::sync::atomic::AtomicUsize,
     flush_every: usize,
+    /// Encoding for manifest/progress *writes*; reads always auto-detect,
+    /// so a run directory written by an older (JSON-only) version resumes
+    /// unchanged and converges to this format at the next flush.
+    storage: WireFormat,
     inner: Mutex<Inner>,
 }
 
@@ -85,10 +99,20 @@ impl CheckpointStore {
             version: version.to_string(),
             total_tasks: std::sync::atomic::AtomicUsize::new(total_tasks),
             flush_every: flush_every.max(1),
+            storage: WireFormat::default(),
             inner: Mutex::new(Inner { entries: BTreeMap::new(), dirty_since_flush: 0 }),
         };
         store.flush()?;
         Ok(store)
+    }
+
+    /// Chooses the encoding for subsequent manifest/progress writes:
+    /// tagged binary (the default) or compact JSON for human-debuggable
+    /// run directories. The manifest is rewritten whole on every flush,
+    /// so the directory converges to the chosen format immediately.
+    pub fn storage_format(mut self, format: WireFormat) -> Self {
+        self.storage = format;
+        self
     }
 
     /// Loads an existing manifest for resumption, verifying it matches the
@@ -102,26 +126,31 @@ impl CheckpointStore {
     ) -> Result<CheckpointStore, MementoError> {
         let run_dir: PathBuf = run_dir.into();
         let manifest_path = run_dir.join("manifest.json");
-        let text = std::fs::read_to_string(&manifest_path).map_err(|e| {
+        let bytes = std::fs::read(&manifest_path).map_err(|e| {
             MementoError::storage(format!(
                 "cannot read manifest '{}': {e}",
                 manifest_path.display()
             ))
         })?;
-        let doc = parse(&text)
-            .map_err(|e| MementoError::storage(format!("manifest corrupt: {e}")))?;
+        let corrupt = |e: crate::util::scan::ScanError| {
+            MementoError::storage(format!("manifest corrupt: {e}"))
+        };
+        // Lazy probe first: the fingerprint/version gate needs three
+        // scalar fields, so a mismatched (possibly huge) manifest is
+        // refused without ever materializing its `completed` map.
+        let scanner = Scanner::new(&bytes).map_err(corrupt)?;
+        let [fp, ver, total] = scanner
+            .fields(["matrix_fingerprint", "version", "total_tasks"])
+            .map_err(corrupt)?;
 
-        let stored_fp = doc
-            .get("matrix_fingerprint")
-            .and_then(|j| j.as_str())
-            .unwrap_or("");
+        let stored_fp = fp.as_ref().and_then(|v| v.as_str()).unwrap_or("");
         if stored_fp != matrix_fingerprint {
             return Err(MementoError::CheckpointMismatch(format!(
                 "manifest was written for matrix {stored_fp:.12}…, \
                  resuming with matrix {matrix_fingerprint:.12}…"
             )));
         }
-        let stored_version = doc.get("version").and_then(|j| j.as_str()).unwrap_or("");
+        let stored_version = ver.as_ref().and_then(|v| v.as_str()).unwrap_or("");
         if stored_version != version {
             return Err(MementoError::CheckpointMismatch(format!(
                 "manifest was written for experiment version '{stored_version}', \
@@ -134,14 +163,19 @@ impl CheckpointStore {
         // a crash or cancel before `set_total` fires never clobbers a
         // previously-correct count with 0.
         let total_tasks = if total_tasks == 0 {
-            doc.get("total_tasks")
-                .and_then(|j| j.as_i64())
+            total
+                .as_ref()
+                .and_then(|v| v.as_i64())
                 .map(|v| v.max(0) as usize)
                 .unwrap_or(0)
         } else {
             total_tasks
         };
 
+        // Gate passed: now materialize the whole document to rebuild the
+        // completed-entry map (either encoding; auto-detected).
+        let doc = codec::read_document(&bytes)
+            .map_err(|e| MementoError::storage(format!("manifest corrupt: {e}")))?;
         let mut entries = BTreeMap::new();
         if let Some(done) = doc.get("completed").and_then(|j| j.as_obj()) {
             for (id, entry) in done {
@@ -174,6 +208,7 @@ impl CheckpointStore {
             version: version.to_string(),
             total_tasks: std::sync::atomic::AtomicUsize::new(total_tasks),
             flush_every: flush_every.max(1),
+            storage: WireFormat::default(),
             inner: Mutex::new(Inner { entries, dirty_since_flush: 0 }),
         })
     }
@@ -309,15 +344,15 @@ impl CheckpointStore {
                 ("completed", completed),
             ])
         };
-        // Compact serialization: the manifest is rewritten on every flush,
-        // so byte count is on the hot path; `memento status` parses either
-        // form.
-        let bytes = doc.to_string();
+        // Compact serialization (tagged binary by default): the manifest
+        // is rewritten on every flush, so byte count is on the hot path;
+        // every reader (`resume`, `memento status`) auto-detects the form.
+        let bytes = codec::write_document(&doc, self.storage);
         let path = self.run_dir.join("manifest.json");
         if durable {
-            atomic_write(&path, bytes.as_bytes())
+            atomic_write(&path, &bytes)
         } else {
-            crate::util::fs::atomic_write_nosync(&path, bytes.as_bytes())
+            crate::util::fs::atomic_write_nosync(&path, &bytes)
         }
         .map_err(|e| MementoError::storage(format!("write manifest: {e}")))
     }
@@ -330,13 +365,15 @@ impl CheckpointStore {
 
     /// Persists a task's partial progress (crash-safe).
     pub fn save_progress(&self, id: &TaskId, value: &Json) {
-        let _ = atomic_write(&self.progress_path(id), value.to_string().as_bytes());
+        let bytes = codec::write_document(value, self.storage);
+        let _ = atomic_write(&self.progress_path(id), &bytes);
     }
 
-    /// Restores partial progress, if present and parsable.
+    /// Restores partial progress, if present and parsable (either
+    /// encoding, auto-detected).
     pub fn load_progress(&self, id: &TaskId) -> Option<Json> {
-        let text = std::fs::read_to_string(self.progress_path(id)).ok()?;
-        parse(&text).ok()
+        let bytes = std::fs::read(self.progress_path(id)).ok()?;
+        codec::read_document(&bytes).ok()
     }
 
     /// Drops a task's progress file (after successful completion).
@@ -392,6 +429,63 @@ mod tests {
             CheckpointStore::resume(td.join("run"), "fp-a", "v2", 1, 1).unwrap_err();
         assert!(matches!(err, MementoError::CheckpointMismatch(_)), "{err}");
         assert!(CheckpointStore::resume(td.join("run"), "fp-a", "v1", 1, 1).is_ok());
+    }
+
+    #[test]
+    fn mismatch_gate_materializes_nothing() {
+        // The lazy-probe guarantee: refusing a wrong-matrix manifest must
+        // not build any Json tree from it, however many entries it holds.
+        let td = TempDir::new("ckpt-lazy").unwrap();
+        {
+            let s = CheckpointStore::create(td.join("run"), "fp-a", "v1", 50, 1).unwrap();
+            for n in 0..50 {
+                s.record(&tid(n), Some(&Json::int(n as i64)), None, 0.1, 1).unwrap();
+            }
+        }
+        let before = crate::util::scan::materialized_count();
+        let err = CheckpointStore::resume(td.join("run"), "fp-b", "v1", 50, 1).unwrap_err();
+        assert!(matches!(err, MementoError::CheckpointMismatch(_)));
+        assert_eq!(
+            crate::util::scan::materialized_count(),
+            before,
+            "mismatch path must not materialize any manifest subtree"
+        );
+    }
+
+    #[test]
+    fn json_manifest_and_progress_from_older_stores_resume_identically() {
+        let td = TempDir::new("ckpt-json").unwrap();
+        let run = td.join("run");
+        // An "older" store: everything written as JSON text.
+        {
+            let s = CheckpointStore::create(&run, "fp", "v1", 3, 1)
+                .unwrap()
+                .storage_format(WireFormat::Json);
+            s.record(&tid(1), Some(&Json::int(10)), None, 0.5, 1).unwrap();
+            s.record(&tid(2), None, Some("boom"), 0.2, 3).unwrap();
+            s.save_progress(&tid(3), &Json::obj(vec![("fold", Json::int(2))]));
+            let bytes = std::fs::read(run.join("manifest.json")).unwrap();
+            assert_eq!(bytes[0], b'{', "Json storage must stay plain text");
+        }
+        // A current (binary-default) store resumes it with identical
+        // accounting, reads its JSON progress, and converges the manifest
+        // to binary at the next flush.
+        let s = CheckpointStore::resume(&run, "fp", "v1", 3, 1).unwrap();
+        assert_eq!(s.completed_count(), 2);
+        assert_eq!(s.completed_success_ids(), vec![tid(1)]);
+        assert_eq!(s.failed_ids(), vec![tid(2)]);
+        assert_eq!(s.entry(&tid(1)).unwrap().value, Some(Json::int(10)));
+        assert_eq!(s.entry(&tid(2)).unwrap().failed_message.as_deref(), Some("boom"));
+        assert_eq!(
+            s.load_progress(&tid(3)).unwrap().get("fold").unwrap().as_i64(),
+            Some(2)
+        );
+        s.flush().unwrap();
+        let bytes = std::fs::read(run.join("manifest.json")).unwrap();
+        assert!(crate::util::codec::is_binary(&bytes), "default flush is binary");
+        // And the binary manifest resumes in turn.
+        let again = CheckpointStore::resume(&run, "fp", "v1", 3, 1).unwrap();
+        assert_eq!(again.completed_count(), 2);
     }
 
     #[test]

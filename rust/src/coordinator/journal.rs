@@ -6,9 +6,16 @@
 //! and post-hoc debugging ("which task ran when, on which worker, and how
 //! often was it retried?") read this. One line per event, flushed on every
 //! write — the journal is an audit trail, so durability beats batching.
+//!
+//! Lines stay JSON text (an audit trail should be `grep`-able, and
+//! line-framing and binary payloads don't mix), but [`Journal::replay`]
+//! reads them with the lazy field scanner ([`crate::util::scan`]): each
+//! line's named fields are extracted in one skip-pass without building a
+//! per-line [`Json`] tree.
 
 use crate::coordinator::task::TaskId;
-use crate::util::json::{parse, Json};
+use crate::util::json::Json;
+use crate::util::scan::Scanner;
 use std::io::Write;
 use std::path::{Path, PathBuf};
 use std::sync::Mutex;
@@ -146,6 +153,53 @@ impl Event {
         };
         Some((ts, ev))
     }
+
+    /// Parses one journal line by scanning its fields in place — the
+    /// replay-path equivalent of [`Event::from_json`] that never builds a
+    /// [`Json`] tree. Best-effort like its sibling: `None` for garbage
+    /// lines and unknown kinds.
+    fn from_line(line: &str) -> Option<(f64, Event)> {
+        let scanner = Scanner::new(line.as_bytes()).ok()?;
+        let [ts, kind, task, attempt, duration, message, budget] = scanner
+            .fields([
+                "ts",
+                "event",
+                "task",
+                "attempt",
+                "duration_secs",
+                "message",
+                "budget_secs",
+            ])
+            .ok()?;
+        let ts = ts.as_ref().and_then(|v| v.as_f64())?;
+        let id = TaskId(task.as_ref().and_then(|v| v.as_str())?.to_string());
+        let attempt = attempt.as_ref().and_then(|a| a.as_i64()).unwrap_or(1) as u32;
+        let ev = match kind.as_ref().and_then(|k| k.as_str())? {
+            "started" => Event::TaskStarted { id, attempt },
+            "succeeded" => Event::TaskSucceeded {
+                id,
+                attempt,
+                duration_secs: duration.as_ref().and_then(|d| d.as_f64()).unwrap_or(0.0),
+            },
+            "failed" => Event::TaskFailed {
+                id,
+                attempt,
+                message: message
+                    .as_ref()
+                    .and_then(|m| m.as_str())
+                    .unwrap_or("")
+                    .to_string(),
+            },
+            "timed_out" => Event::TaskTimedOut {
+                id,
+                attempt,
+                budget_secs: budget.as_ref().and_then(|d| d.as_f64()).unwrap_or(0.0),
+            },
+            "restored" => Event::TaskRestored { id },
+            _ => return None,
+        };
+        Some((ts, ev))
+    }
 }
 
 /// Append-only journal writer (thread-safe).
@@ -188,14 +242,12 @@ impl Journal {
         let _ = f.flush();
     }
 
-    /// Reads every parseable event back, in order.
+    /// Reads every parseable event back, in order. Each line is
+    /// field-scanned in place — replay allocates the events, never a
+    /// per-line [`Json`] tree.
     pub fn replay(path: &Path) -> std::io::Result<Vec<(f64, Event)>> {
         let text = std::fs::read_to_string(path)?;
-        Ok(text
-            .lines()
-            .filter_map(|l| parse(l).ok())
-            .filter_map(|j| Event::from_json(&j))
-            .collect())
+        Ok(text.lines().filter_map(Event::from_line).collect())
     }
 
     /// Summarizes a journal: per-kind counts and total busy time.
@@ -323,6 +375,32 @@ mod tests {
         j.record(&Event::TaskRestored { id: tid(1) });
         let events = Journal::replay(&path).unwrap();
         assert_eq!(events.len(), 2);
+    }
+
+    #[test]
+    fn replay_scans_without_materializing_json_trees() {
+        let td = TempDir::new("journal-scan").unwrap();
+        let path = td.join("j.jsonl");
+        let j = Journal::open(&path).unwrap();
+        for i in 0..20u8 {
+            j.record(&Event::TaskStarted { id: tid(i), attempt: 1 });
+            j.record(&Event::TaskSucceeded { id: tid(i), attempt: 1, duration_secs: 0.25 });
+        }
+        j.record(&Event::TaskTimedOut { id: tid(21), attempt: 1, budget_secs: 1.5 });
+        let before = crate::util::scan::materialized_count();
+        let events = Journal::replay(&path).unwrap();
+        assert_eq!(events.len(), 41);
+        assert_eq!(
+            crate::util::scan::materialized_count(),
+            before,
+            "replay must field-scan lines, not build Json trees"
+        );
+        // The scan parser agrees with the tree parser line by line.
+        let text = std::fs::read_to_string(&path).unwrap();
+        for (line, scanned) in text.lines().zip(&events) {
+            let tree = Event::from_json(&crate::util::json::parse(line).unwrap()).unwrap();
+            assert_eq!(&tree, scanned);
+        }
     }
 
     #[test]

@@ -64,6 +64,7 @@ use crate::coordinator::scheduler::{
     ExecBackend, SchedulerOptions, SpecFilter, SpecSource, StreamHooks,
 };
 use crate::coordinator::task::{task_seed, TaskContext, TaskId, TaskSpec};
+use crate::util::codec::WireFormat;
 use crate::util::json::Json;
 use crate::util::time::Stopwatch;
 use std::panic::{catch_unwind, AssertUnwindSafe};
@@ -108,6 +109,11 @@ pub struct RunOptions {
     /// channel memory, coalescing intermediate progress events under
     /// pressure and backpressuring terminal ones.
     pub events: ChannelPolicy,
+    /// Payload encoding for IPC frames (process/remote backends) and for
+    /// documents this run writes at rest (cache entries, checkpoint
+    /// manifest/progress). Binary by default; readers always auto-detect,
+    /// and peers that only speak JSON get JSON regardless.
+    pub wire: WireFormat,
 }
 
 impl Default for RunOptions {
@@ -123,6 +129,7 @@ impl Default for RunOptions {
             progress_interval: None,
             backend: ExecBackend::Threads,
             events: ChannelPolicy::Unbounded,
+            wire: WireFormat::default(),
         }
     }
 }
@@ -286,10 +293,14 @@ impl Memento {
         self
     }
 
-    /// Enables the on-disk result cache.
+    /// Enables the on-disk result cache. New entries use the configured
+    /// [`Memento::wire_format`] (call that first if you want JSON);
+    /// existing entries are read back whatever their format.
     pub fn with_cache_dir(mut self, dir: impl Into<PathBuf>) -> Self {
         self.cache = Some(Arc::new(
-            ResultCache::open(dir.into()).expect("open cache dir"),
+            ResultCache::open(dir.into())
+                .expect("open cache dir")
+                .storage_format(self.options.wire),
         ));
         self
     }
@@ -327,6 +338,26 @@ impl Memento {
     /// Prints progress lines at this interval.
     pub fn progress_every(mut self, d: Duration) -> Self {
         self.options.progress_interval = Some(d);
+        self
+    }
+
+    /// Chooses the payload encoding for IPC frames and at-rest documents:
+    /// tagged binary (the default, compact and fast to scan) or JSON
+    /// (human-debuggable; also what pre-v3 remote workers are spoken
+    /// to automatically). Reads auto-detect per payload, so switching
+    /// formats between runs over the same directories is always safe.
+    /// On the CLI: `--wire json|binary`.
+    pub fn wire_format(mut self, format: WireFormat) -> Self {
+        self.options.wire = format;
+        if let Some(cache) = self.cache.take() {
+            // Re-apply to a cache opened by an earlier builder call so
+            // argument order doesn't matter; shared handles passed via
+            // `with_cache` keep their own configuration.
+            self.cache = Some(match Arc::try_unwrap(cache) {
+                Ok(owned) => Arc::new(owned.storage_format(format)),
+                Err(shared) => shared,
+            });
+        }
         self
     }
 
@@ -426,7 +457,7 @@ impl Memento {
                         self.options.checkpoint_flush_every,
                     )?
                 };
-                Some(Arc::new(store))
+                Some(Arc::new(store.storage_format(self.options.wire)))
             }
         };
         if resuming && checkpoint.is_none() {
@@ -930,6 +961,7 @@ impl RunWorker {
             version,
             run_seed: self.options.seed,
             task_timeout,
+            wire: self.options.wire,
             ..SupervisorOptions::default()
         };
         if let Some(args) = &self.worker_args {

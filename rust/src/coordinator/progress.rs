@@ -1,13 +1,21 @@
 //! Progress reporting: periodic `done/total (ETA …)` lines.
 //!
 //! A background thread wakes at a fixed interval and prints progress when it
-//! changed since the last tick; the ETA is a simple completed-rate
-//! extrapolation. Silent when the run finishes between ticks — the final
-//! summary comes from the notifier instead.
+//! changed since the last tick; the ETA extrapolates from the *recent*
+//! completion rate — the spacing of the last [`ETA_WINDOW`] executed
+//! completions — falling back to the whole-run rate until enough samples
+//! exist. Silent when the run finishes between ticks — the final summary
+//! comes from the notifier instead.
 
+use std::collections::VecDeque;
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
+
+/// How many recent executed-completion timestamps the ETA rate window
+/// keeps. Small enough that one lock push per completion is noise, large
+/// enough to smooth per-task variance.
+pub const ETA_WINDOW: usize = 32;
 
 /// Shared progress state updated by the scheduler.
 ///
@@ -36,6 +44,11 @@ pub struct ProgressState {
     planned: AtomicUsize,
     /// False while a streaming expansion may still grow `planned`.
     planning_done: AtomicBool,
+    /// Timestamps of the last [`ETA_WINDOW`] executed completions; the ETA
+    /// rate comes from their spacing so a run that sped up (or slowed
+    /// down) converges on the current pace instead of averaging over the
+    /// whole history. Restores never enter the window.
+    recent: Mutex<VecDeque<Instant>>,
     start: Instant,
 }
 
@@ -48,6 +61,7 @@ impl ProgressState {
             restored: AtomicUsize::new(0),
             planned: AtomicUsize::new(total),
             planning_done: AtomicBool::new(true),
+            recent: Mutex::new(VecDeque::with_capacity(ETA_WINDOW)),
             start: Instant::now(),
         })
     }
@@ -61,6 +75,7 @@ impl ProgressState {
             restored: AtomicUsize::new(0),
             planned: AtomicUsize::new(0),
             planning_done: AtomicBool::new(false),
+            recent: Mutex::new(VecDeque::with_capacity(ETA_WINDOW)),
             start: Instant::now(),
         })
     }
@@ -85,9 +100,15 @@ impl ProgressState {
         self.planned.load(Ordering::Relaxed)
     }
 
-    /// Records one executed task completion.
+    /// Records one executed task completion and its timestamp (the ETA
+    /// rate window).
     pub fn mark_done(&self) {
         self.done.fetch_add(1, Ordering::Relaxed);
+        let mut recent = self.recent.lock().unwrap_or_else(|e| e.into_inner());
+        if recent.len() == ETA_WINDOW {
+            recent.pop_front();
+        }
+        recent.push_back(Instant::now());
     }
 
     /// Records a spec the scheduler abandoned after a fail-fast abort.
@@ -129,14 +150,34 @@ impl ProgressState {
     /// cache/checkpoint restores must show no ETA instead of
     /// extrapolating `inf`/garbage from a zero observed rate — the rate
     /// is additionally guarded to be finite and positive before dividing.
+    ///
+    /// The rate is *windowed*: once two or more of the last [`ETA_WINDOW`]
+    /// completions have measurable spacing, the estimate extrapolates
+    /// from their pace, so a run whose tasks sped up (warm caches,
+    /// workers joining) or slowed down converges on the current rate
+    /// instead of averaging over the whole history. With only one
+    /// completion — or a degenerate zero-width window — it falls back to
+    /// the whole-run executed rate, preserving the "ETA appears after the
+    /// first executed completion" behavior.
     pub fn eta_secs(&self) -> Option<f64> {
         let executed = self.done.load(Ordering::Relaxed);
         let total = self.total();
         if executed == 0 || total == 0 || !self.planning_complete() {
             return None;
         }
-        let elapsed = self.start.elapsed().as_secs_f64();
-        let rate = executed as f64 / elapsed;
+        let windowed = {
+            let recent = self.recent.lock().unwrap_or_else(|e| e.into_inner());
+            match (recent.front(), recent.back()) {
+                (Some(first), Some(last)) if recent.len() >= 2 => {
+                    Some((recent.len() - 1) as f64 / (*last - *first).as_secs_f64())
+                }
+                _ => None,
+            }
+        };
+        let rate = match windowed {
+            Some(r) if r.is_finite() && r > 0.0 => r,
+            _ => executed as f64 / self.start.elapsed().as_secs_f64(),
+        };
         if !rate.is_finite() || rate <= 0.0 {
             return None;
         }
@@ -310,6 +351,42 @@ mod tests {
         p.mark_done();
         std::thread::sleep(Duration::from_millis(2));
         let eta = p.eta_secs().expect("executed completion yields an ETA");
+        assert!(eta.is_finite() && eta >= 0.0, "eta={eta}");
+    }
+
+    #[test]
+    fn eta_tracks_the_recent_rate_not_the_whole_run_average() {
+        let p = ProgressState::new(10);
+        // A long idle stretch before the first completion drags the
+        // whole-run average down; the windowed rate must ignore it.
+        std::thread::sleep(Duration::from_millis(200));
+        p.mark_done();
+        std::thread::sleep(Duration::from_millis(5));
+        p.mark_done();
+        let whole_run_eta = {
+            let elapsed = Duration::from_millis(205).as_secs_f64();
+            8.0 / (2.0 / elapsed) // ≈ 0.82 s if the old formula were used
+        };
+        let eta = p.eta_secs().expect("two completions yield an ETA");
+        assert!(
+            eta < whole_run_eta * 0.75,
+            "eta {eta} should reflect the ~5ms recent spacing, not the \
+             whole-run average (~{whole_run_eta})"
+        );
+    }
+
+    #[test]
+    fn eta_survives_many_more_completions_than_the_window() {
+        let p = ProgressState::new(200);
+        for _ in 0..ETA_WINDOW + 40 {
+            p.mark_done();
+        }
+        std::thread::sleep(Duration::from_millis(2));
+        p.mark_done();
+        // The window is capped (old samples evicted) and a degenerate
+        // zero-width window falls back to the whole-run rate rather than
+        // returning None or a non-finite value.
+        let eta = p.eta_secs().expect("ETA after window overflow");
         assert!(eta.is_finite() && eta >= 0.0, "eta={eta}");
     }
 

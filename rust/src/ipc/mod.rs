@@ -11,10 +11,13 @@
 //! (possibly on other machines) that register over TCP.
 //!
 //! - [`proto`] — the wire protocol: 4-byte big-endian length-prefixed
-//!   frames of compact JSON (via [`crate::util::json`]; no external
-//!   crates). Messages: `Ready`/`Hello` handshake (with shared-token auth
-//!   for TCP peers), `Task` (one attempt), `Progress`, `Heartbeat`,
-//!   `Outcome`, `Goodbye`, `Reject`, `Shutdown`.
+//!   frames whose payload is either the compact tagged binary codec
+//!   ([`crate::util::codec`], the v3 default) or compact JSON (via
+//!   [`crate::util::json`]; the debugging / pre-v3 fallback) — readers
+//!   auto-detect per payload, handshakes are always JSON. Messages:
+//!   `Ready`/`Hello` handshake (with shared-token auth for TCP peers and
+//!   wire-format negotiation), `Task` (one attempt), `Progress`,
+//!   `Heartbeat`, `Outcome`, `Goodbye`, `Reject`, `Shutdown`.
 //! - [`transport`] — the pluggable byte layer: `WireStream`/`WireListener`
 //!   trait pair with Unix-socket and TCP implementations, plus the
 //!   printable `Endpoint` addressing both.

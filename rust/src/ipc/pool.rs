@@ -33,7 +33,7 @@
 //! run over a trusted network or a tunnel.
 
 use crate::coordinator::error::MementoError;
-use crate::ipc::proto::{read_frame, write_frame, Msg, PROTOCOL_VERSION};
+use crate::ipc::proto::{read_frame, write_frame, Msg, MIN_PROTOCOL_VERSION, PROTOCOL_VERSION};
 use crate::ipc::transport::{Endpoint, Transport, WireListener, WireStream};
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
@@ -75,6 +75,11 @@ pub struct Registration {
     pub worker: u64,
     /// The worker's OS process id, as self-reported.
     pub pid: u64,
+    /// The protocol version the worker declared in `Ready` — within
+    /// `MIN_PROTOCOL_VERSION..=PROTOCOL_VERSION` (anything else was
+    /// rejected). The supervisor keeps post-handshake frames to JSON for
+    /// pre-v3 registrants.
+    pub protocol: u64,
 }
 
 struct PoolState {
@@ -270,9 +275,10 @@ impl PoolShared {
         let Msg::Ready { worker, pid, protocol, token, .. } = ready else {
             return;
         };
-        let refusal = if protocol != PROTOCOL_VERSION {
+        let refusal = if !(MIN_PROTOCOL_VERSION..=PROTOCOL_VERSION).contains(&protocol) {
             Some(format!(
-                "protocol mismatch: pool speaks v{PROTOCOL_VERSION}, worker speaks v{protocol}"
+                "protocol mismatch: pool speaks v{MIN_PROTOCOL_VERSION}..v{PROTOCOL_VERSION}, \
+                 worker speaks v{protocol}"
             ))
         } else if let Some(required) = &opts.token {
             if token.as_deref() == Some(required.as_str()) {
@@ -305,7 +311,7 @@ impl PoolShared {
             return;
         }
         let member = self.registered.fetch_add(1, Ordering::SeqCst) + 1;
-        state.queue.push_back(Registration { stream: reader, member, worker, pid });
+        state.queue.push_back(Registration { stream: reader, member, worker, pid, protocol });
         drop(state);
         self.cv.notify_one();
     }
@@ -357,8 +363,33 @@ mod tests {
         assert_eq!(reg.worker, 9);
         assert_eq!(reg.pid, 1234);
         assert_eq!(reg.member, 1);
+        assert_eq!(reg.protocol, PROTOCOL_VERSION);
         assert_eq!(pool.registered_count(), 1);
         assert_eq!(pool.rejected_count(), 0);
+    }
+
+    #[test]
+    fn v2_worker_still_registers() {
+        // A JSON-only v2 worker is frame-compatible; the pool admits it
+        // and records its version so the supervisor sticks to JSON.
+        let pool = tcp_pool("s3cret");
+        let _stream = send_ready(pool.endpoint(), MIN_PROTOCOL_VERSION, Some("s3cret"));
+        let reg = pool.lease(Duration::from_secs(5)).expect("v2 worker registers");
+        assert_eq!(reg.protocol, MIN_PROTOCOL_VERSION);
+        assert_eq!(pool.rejected_count(), 0);
+    }
+
+    #[test]
+    fn pre_v2_worker_is_rejected() {
+        let pool = tcp_pool("s3cret");
+        let mut stream = send_ready(pool.endpoint(), 1, Some("s3cret"));
+        let _ = stream.set_stream_read_timeout(Some(Duration::from_secs(5)));
+        let answer = read_frame(&mut stream).unwrap().unwrap();
+        assert!(
+            matches!(answer, Msg::Reject { ref reason } if reason.contains("protocol")),
+            "{answer:?}"
+        );
+        assert_eq!(pool.rejected_count(), 1);
     }
 
     #[test]

@@ -3,10 +3,17 @@
 //! # Framing
 //!
 //! Every message is one **length-prefixed frame**: a 4-byte big-endian
-//! payload length followed by that many bytes of compact JSON (serialized
-//! via [`crate::util::json`], the same std-only codec the cache and
-//! checkpoints use). Frames are small (a task assignment or an outcome);
-//! a hard [`MAX_FRAME`] cap turns a corrupted length prefix into a clean
+//! payload length followed by the payload bytes. Since v3 the payload is
+//! self-describing: a leading [`crate::util::codec::BINARY_MAGIC`] byte
+//! marks the compact tagged binary encoding (the default), anything else
+//! is compact JSON text (serialized via [`crate::util::json`]) — the
+//! debugging fallback and the only format pre-v3 peers speak. Readers
+//! auto-detect per payload ([`read_frame`]), so a connection may carry
+//! both formats. The **handshake frames** (`Ready`, `Hello`, `Reject`)
+//! are always written as JSON regardless of the negotiated format, which
+//! is what lets a v2 peer parse the negotiation itself and keep working.
+//! Frames are small (a task assignment or an outcome); a hard
+//! [`MAX_FRAME`] cap turns a corrupted length prefix into a clean
 //! protocol error instead of an attempted multi-GiB allocation.
 //!
 //! # Message flow
@@ -39,21 +46,35 @@
 
 use crate::config::value::ParamValue;
 use crate::coordinator::task::TaskSpec;
+use crate::util::codec;
 use crate::util::json::{parse, Json};
 use std::collections::BTreeMap;
 use std::io::{self, Read, Write};
 
-/// Bumped on any incompatible change; the worker refuses a mismatched
-/// supervisor rather than misinterpreting frames, and the accepting side
-/// ([`crate::ipc::pool::WorkerPool`]) rejects a mismatched worker at
-/// registration. v2 added the distributed-execution handshake: `Ready`
-/// carries the speaker's protocol version and (for TCP peers) the shared
-/// auth token, plus the `Goodbye`/`Reject` lifecycle frames.
-pub const PROTOCOL_VERSION: u64 = 2;
+/// Bumped on any incompatible change; the worker refuses a supervisor it
+/// cannot understand rather than misinterpreting frames, and the
+/// accepting side ([`crate::ipc::pool::WorkerPool`]) rejects an
+/// incompatible worker at registration. v2 added the
+/// distributed-execution handshake: `Ready` carries the speaker's
+/// protocol version and (for TCP peers) the shared auth token, plus the
+/// `Goodbye`/`Reject` lifecycle frames. v3 added binary payloads: frames
+/// default to the tagged binary encoding, negotiated at `Ready`/`Hello`,
+/// with handshake frames pinned to JSON — so v3 speakers interoperate
+/// with v2 peers (both sides fall back to all-JSON) and v2/v3 are
+/// mutually compatible rather than rejected.
+pub const PROTOCOL_VERSION: u64 = 3;
+
+/// Oldest protocol version current code interoperates with. v2 peers
+/// lack binary payload support but are frame-compatible otherwise, so
+/// accepting sides admit `MIN_PROTOCOL_VERSION..=PROTOCOL_VERSION` and
+/// simply speak JSON to the older end.
+pub const MIN_PROTOCOL_VERSION: u64 = 2;
 
 /// Upper bound on a single frame's payload (64 MiB). Experiment results
 /// are JSON metric objects; anything larger indicates a corrupted stream.
 pub const MAX_FRAME: usize = 64 << 20;
+
+pub use crate::util::codec::WireFormat;
 
 /// Result of one task attempt, as reported by a worker.
 #[derive(Debug, Clone, PartialEq)]
@@ -143,6 +164,12 @@ pub enum Msg {
         settings: BTreeMap<String, Json>,
         /// Heartbeat interval the worker must observe, in milliseconds.
         heartbeat_ms: u64,
+        /// The payload format the supervisor will use for its
+        /// post-handshake frames — and an invitation for the worker to
+        /// answer in kind when both ends are v3+. Absent in v2 Hellos
+        /// (parsed as [`WireFormat::Binary`], which is harmless: the
+        /// worker only switches to binary when `protocol >= 3` too).
+        wire: WireFormat,
     },
     /// One attempt assignment.
     Task {
@@ -223,14 +250,17 @@ impl Msg {
                 }
                 Json::obj(fields)
             }
-            Msg::Hello { protocol, version, run_seed, settings, heartbeat_ms } => Json::obj(vec![
-                ("msg", Json::str("hello")),
-                ("protocol", Json::int(*protocol as i64)),
-                ("version", Json::str(version.clone())),
-                ("run_seed", Json::str(run_seed.to_string())), // u64 > 2^53-safe
-                ("settings", Json::Obj(settings.clone())),
-                ("heartbeat_ms", Json::int(*heartbeat_ms as i64)),
-            ]),
+            Msg::Hello { protocol, version, run_seed, settings, heartbeat_ms, wire } => {
+                Json::obj(vec![
+                    ("msg", Json::str("hello")),
+                    ("protocol", Json::int(*protocol as i64)),
+                    ("version", Json::str(version.clone())),
+                    ("run_seed", Json::str(run_seed.to_string())), // u64 > 2^53-safe
+                    ("settings", Json::Obj(settings.clone())),
+                    ("heartbeat_ms", Json::int(*heartbeat_ms as i64)),
+                    ("wire", Json::str(wire.as_str())),
+                ])
+            }
             Msg::Task { index, attempt, params, restored } => Json::obj(vec![
                 ("msg", Json::str("task")),
                 ("index", Json::int(*index as i64)),
@@ -308,6 +338,13 @@ impl Msg {
                 run_seed: j.get("run_seed")?.as_str()?.parse().ok()?,
                 settings: j.get("settings")?.as_obj()?.clone(),
                 heartbeat_ms: u64_field("heartbeat_ms")?,
+                // Absent on v2 supervisors; Binary is safe because the
+                // format switch additionally requires protocol >= 3.
+                wire: j
+                    .get("wire")
+                    .and_then(|w| w.as_str())
+                    .and_then(WireFormat::parse_arg)
+                    .unwrap_or_default(),
             }),
             "task" => {
                 let mut params = Vec::new();
@@ -338,26 +375,43 @@ impl Msg {
     }
 }
 
-/// Writes one frame. The caller is responsible for serializing access to
-/// the stream (frames must not interleave).
+/// Writes one frame as JSON. The caller is responsible for serializing
+/// access to the stream (frames must not interleave). Kept as the
+/// explicit-JSON entry point: handshakes and anything that must stay
+/// readable by pre-v3 peers goes through here.
 pub fn write_frame(w: &mut impl Write, msg: &Msg) -> io::Result<()> {
-    let payload = msg.to_json().to_string();
-    let bytes = payload.as_bytes();
-    if bytes.len() > MAX_FRAME {
+    write_frame_as(w, msg, WireFormat::Json)
+}
+
+/// Writes one frame in the requested payload format. Handshake frames
+/// ([`Msg::Ready`], [`Msg::Hello`], [`Msg::Reject`]) are pinned to JSON
+/// regardless of `format` — a peer that has not finished negotiating must
+/// be able to parse them, whatever it speaks.
+pub fn write_frame_as(w: &mut impl Write, msg: &Msg, format: WireFormat) -> io::Result<()> {
+    let handshake = matches!(msg, Msg::Ready { .. } | Msg::Hello { .. } | Msg::Reject { .. });
+    let payload = if format == WireFormat::Binary && !handshake {
+        codec::encode(&msg.to_json())
+    } else {
+        msg.to_json().to_string().into_bytes()
+    };
+    if payload.len() > MAX_FRAME {
         return Err(io::Error::new(
             io::ErrorKind::InvalidData,
-            format!("frame of {} bytes exceeds MAX_FRAME", bytes.len()),
+            format!("frame of {} bytes exceeds MAX_FRAME", payload.len()),
         ));
     }
-    let len = (bytes.len() as u32).to_be_bytes();
+    let len = (payload.len() as u32).to_be_bytes();
     w.write_all(&len)?;
-    w.write_all(bytes)?;
+    w.write_all(&payload)?;
     w.flush()
 }
 
-/// Reads one frame. Returns `Ok(None)` on a clean EOF *before* the length
-/// prefix (the peer closed between messages); EOF mid-frame, an oversized
-/// length, or an unparseable payload are errors.
+/// Reads one frame, auto-detecting the payload format per frame (a
+/// leading [`codec::BINARY_MAGIC`] byte means binary, anything else is
+/// JSON — the magic can never begin JSON text). Returns `Ok(None)` on a
+/// clean EOF *before* the length prefix (the peer closed between
+/// messages); EOF mid-frame, an oversized length, or an unparseable
+/// payload are errors.
 pub fn read_frame(r: &mut impl Read) -> io::Result<Option<Msg>> {
     let mut len_buf = [0u8; 4];
     let mut filled = 0;
@@ -386,10 +440,17 @@ pub fn read_frame(r: &mut impl Read) -> io::Result<Option<Msg>> {
     }
     let mut payload = vec![0u8; len];
     r.read_exact(&mut payload)?;
-    let text = std::str::from_utf8(&payload)
-        .map_err(|e| io::Error::new(io::ErrorKind::InvalidData, format!("frame not utf-8: {e}")))?;
-    let doc = parse(text)
-        .map_err(|e| io::Error::new(io::ErrorKind::InvalidData, format!("frame not json: {e}")))?;
+    let doc = if codec::is_binary(&payload) {
+        codec::decode(&payload).map_err(|e| {
+            io::Error::new(io::ErrorKind::InvalidData, format!("frame not valid binary: {e}"))
+        })?
+    } else {
+        let text = std::str::from_utf8(&payload).map_err(|e| {
+            io::Error::new(io::ErrorKind::InvalidData, format!("frame not utf-8: {e}"))
+        })?;
+        parse(text)
+            .map_err(|e| io::Error::new(io::ErrorKind::InvalidData, format!("frame not json: {e}")))?
+    };
     Msg::from_json(&doc)
         .map(Some)
         .ok_or_else(|| io::Error::new(io::ErrorKind::InvalidData, "unknown message shape"))
@@ -400,14 +461,19 @@ mod tests {
     use super::*;
     use crate::config::value::{pv_f64, pv_int, pv_str};
 
-    fn roundtrip(msg: Msg) {
+    fn roundtrip_as(msg: &Msg, format: WireFormat) {
         let mut buf = Vec::new();
-        write_frame(&mut buf, &msg).unwrap();
+        write_frame_as(&mut buf, msg, format).unwrap();
         let mut cursor = &buf[..];
         let back = read_frame(&mut cursor).unwrap().unwrap();
-        assert_eq!(back, msg);
+        assert_eq!(&back, msg, "{format:?} roundtrip");
         // stream fully consumed
         assert!(read_frame(&mut cursor).unwrap().is_none());
+    }
+
+    fn roundtrip(msg: Msg) {
+        roundtrip_as(&msg, WireFormat::Json);
+        roundtrip_as(&msg, WireFormat::Binary);
     }
 
     fn ready(worker: u64, pid: u64, spawn: u64) -> Msg {
@@ -455,6 +521,7 @@ mod tests {
             run_seed: u64::MAX, // exercises the string encoding
             settings,
             heartbeat_ms: 500,
+            wire: WireFormat::Json,
         });
         roundtrip(Msg::Task {
             index: 7,
@@ -482,6 +549,98 @@ mod tests {
         let Msg::Task { params, .. } = back else { panic!("not a task") };
         assert_eq!(params[0].0, "z");
         assert_eq!(params[1].0, "a");
+    }
+
+    #[test]
+    fn handshake_frames_stay_json_even_in_binary_mode() {
+        let hello = Msg::Hello {
+            protocol: PROTOCOL_VERSION,
+            version: "v1".into(),
+            run_seed: 7,
+            settings: BTreeMap::new(),
+            heartbeat_ms: 100,
+            wire: WireFormat::Binary,
+        };
+        for msg in [ready(1, 2, 0), hello, Msg::Reject { reason: "nope".into() }] {
+            let mut buf = Vec::new();
+            write_frame_as(&mut buf, &msg, WireFormat::Binary).unwrap();
+            // Payload (after the 4-byte prefix) must be JSON text — a v2
+            // peer has to be able to parse the negotiation itself.
+            assert_eq!(buf[4], b'{', "handshake payload must be JSON: {msg:?}");
+            let mut cursor = &buf[..];
+            assert_eq!(read_frame(&mut cursor).unwrap(), Some(msg));
+        }
+        // A data frame in binary mode really is binary.
+        let mut buf = Vec::new();
+        write_frame_as(&mut buf, &Msg::Shutdown, WireFormat::Binary).unwrap();
+        assert_eq!(buf[4], codec::BINARY_MAGIC);
+    }
+
+    #[test]
+    fn mixed_format_frames_interleave_on_one_stream() {
+        let mut buf = Vec::new();
+        write_frame_as(&mut buf, &Msg::Heartbeat { worker: 1, busy: None }, WireFormat::Binary)
+            .unwrap();
+        write_frame(&mut buf, &Msg::Shutdown).unwrap();
+        write_frame_as(&mut buf, &Msg::Goodbye, WireFormat::Binary).unwrap();
+        let mut cursor = &buf[..];
+        assert_eq!(
+            read_frame(&mut cursor).unwrap(),
+            Some(Msg::Heartbeat { worker: 1, busy: None })
+        );
+        assert_eq!(read_frame(&mut cursor).unwrap(), Some(Msg::Shutdown));
+        assert_eq!(read_frame(&mut cursor).unwrap(), Some(Msg::Goodbye));
+        assert_eq!(read_frame(&mut cursor).unwrap(), None);
+    }
+
+    #[test]
+    fn corrupt_binary_payload_is_an_error() {
+        // Valid length prefix, magic byte, then garbage.
+        let payload = [codec::BINARY_MAGIC, 0x77, 0x01];
+        let mut buf = Vec::new();
+        buf.extend_from_slice(&(payload.len() as u32).to_be_bytes());
+        buf.extend_from_slice(&payload);
+        let mut cursor = &buf[..];
+        let err = read_frame(&mut cursor).unwrap_err();
+        assert_eq!(err.kind(), io::ErrorKind::InvalidData);
+        // Truncated binary payload (length prefix honest, document cut).
+        let mut full = Vec::new();
+        write_frame_as(&mut full, &Msg::Progress { index: 1, value: Json::int(9) }, WireFormat::Binary)
+            .unwrap();
+        let body = &full[4..full.len() - 1];
+        let mut buf = Vec::new();
+        buf.extend_from_slice(&(body.len() as u32).to_be_bytes());
+        buf.extend_from_slice(body);
+        let mut cursor = &buf[..];
+        assert!(read_frame(&mut cursor).is_err());
+    }
+
+    #[test]
+    fn v2_hello_without_wire_field_parses_as_binary_default() {
+        // A v2 supervisor's Hello has no "wire" key. It must parse, and
+        // the Binary default is inert because the worker also requires
+        // protocol >= 3 before switching formats.
+        let doc = parse(
+            r#"{"msg":"hello","protocol":2,"version":"v1","run_seed":"7","settings":{},"heartbeat_ms":100}"#,
+        )
+        .unwrap();
+        let Some(Msg::Hello { protocol, wire, run_seed, .. }) = Msg::from_json(&doc) else {
+            panic!("v2 hello must parse");
+        };
+        assert_eq!(protocol, 2);
+        assert_eq!(wire, WireFormat::Binary);
+        assert_eq!(run_seed, 7);
+    }
+
+    #[test]
+    fn wire_format_arg_spellings() {
+        assert_eq!(WireFormat::parse_arg("json"), Some(WireFormat::Json));
+        assert_eq!(WireFormat::parse_arg("binary"), Some(WireFormat::Binary));
+        assert_eq!(WireFormat::parse_arg("msgpack"), None);
+        assert_eq!(WireFormat::default(), WireFormat::Binary);
+        for f in [WireFormat::Json, WireFormat::Binary] {
+            assert_eq!(WireFormat::parse_arg(f.as_str()), Some(f));
+        }
     }
 
     #[test]

@@ -79,7 +79,9 @@ use crate::coordinator::run::{EventSink, RunEvent};
 use crate::coordinator::source::{DrainOnceSource, SpecFilter, SpecSource, ABORT_DRAIN_LIMIT};
 use crate::coordinator::task::{TaskId, TaskSpec};
 use crate::ipc::pool::WorkerPool;
-use crate::ipc::proto::{read_frame, write_frame, Msg, WireResult, PROTOCOL_VERSION};
+use crate::ipc::proto::{
+    read_frame, write_frame, write_frame_as, Msg, WireFormat, WireResult, PROTOCOL_VERSION,
+};
 use crate::ipc::transport::{bind_unix, WireListener, WireStream};
 use crate::ipc::worker::{ENV_SOCKET, ENV_WORKER_ID, ENV_WORKER_SPAWN};
 use crate::util::json::Json;
@@ -135,6 +137,11 @@ pub struct SupervisorOptions {
     /// serves tasks instead). Test binaries should pass a libtest filter
     /// selecting their worker-entry `#[test]`.
     pub worker_args: Vec<String>,
+    /// Payload encoding for post-handshake frames toward v3+ workers
+    /// (announced in `Hello`; pre-v3 registrants always get JSON
+    /// regardless). [`WireFormat::Json`] is the `--wire json` debugging
+    /// mode.
+    pub wire: WireFormat,
 }
 
 impl Default for SupervisorOptions {
@@ -152,6 +159,7 @@ impl Default for SupervisorOptions {
             connect_timeout: Duration::from_secs(20),
             worker_program: None,
             worker_args: std::env::args().skip(1).collect(),
+            wire: WireFormat::default(),
         }
     }
 }
@@ -297,6 +305,10 @@ struct Shared {
     drain_truncated: AtomicBool,
 }
 
+/// What the spawn-mode acceptor routes to a slot: the handshaken stream,
+/// the Ready frame's spawn generation, and the worker's declared protocol.
+type RoutedConn = (Box<dyn WireStream>, u64, u64);
+
 /// A live worker: the connection halves, plus the child process handle
 /// when this supervisor spawned it (`None` for leased pool workers —
 /// their process belongs to another machine or supervisor-of-one).
@@ -304,6 +316,10 @@ struct Conn {
     child: Option<Child>,
     reader: Box<dyn WireStream>,
     writer: Box<dyn WireStream>,
+    /// Negotiated payload format for frames written to this worker:
+    /// [`SupervisorOptions::wire`] when the worker declared v3+ in its
+    /// `Ready`, otherwise JSON. Reads auto-detect and need no format.
+    wire: WireFormat,
 }
 
 /// Runs every spec the lazy `source` yields across `opts.workers` worker
@@ -368,13 +384,13 @@ pub fn run(
     // unreliable), tagged with the handshake's spawn generation so a slot
     // can discard connections from incarnations it has already given up
     // on.
-    let mut slot_rxs: Vec<Option<Receiver<(Box<dyn WireStream>, u64)>>> = Vec::new();
+    let mut slot_rxs: Vec<Option<Receiver<RoutedConn>>> = Vec::new();
     let accept_stop = Arc::new(AtomicBool::new(false));
     let mut acceptor = None;
     match listener {
         None => slot_rxs.resize_with(slots, || None),
         Some(listener) => {
-            let mut routes: Vec<Sender<(Box<dyn WireStream>, u64)>> = Vec::with_capacity(slots);
+            let mut routes: Vec<Sender<RoutedConn>> = Vec::with_capacity(slots);
             for _ in 0..slots {
                 let (tx, rx) = mpsc::channel();
                 routes.push(tx);
@@ -449,7 +465,7 @@ pub fn run(
 
 fn accept_loop(
     listener: Box<dyn WireListener>,
-    routes: Vec<Sender<(Box<dyn WireStream>, u64)>>,
+    routes: Vec<Sender<RoutedConn>>,
     stop: Arc<AtomicBool>,
 ) {
     crate::ipc::transport::poll_accept(listener, &stop, |stream| {
@@ -461,9 +477,9 @@ fn accept_loop(
         let _ = stream.set_stream_read_timeout(Some(Duration::from_secs(5)));
         let mut reader = stream;
         match read_frame(&mut reader) {
-            Ok(Some(Msg::Ready { worker, spawn, .. })) => {
+            Ok(Some(Msg::Ready { worker, spawn, protocol, .. })) => {
                 if let Some(tx) = routes.get(worker as usize) {
-                    let _ = tx.send((reader, spawn));
+                    let _ = tx.send((reader, spawn, protocol));
                 }
             }
             _ => drop(reader),
@@ -473,7 +489,7 @@ fn accept_loop(
 
 // ---- slot state machine -------------------------------------------------
 
-fn slot_loop(sh: &Shared, slot: usize, rx: Option<Receiver<(Box<dyn WireStream>, u64)>>) {
+fn slot_loop(sh: &Shared, slot: usize, rx: Option<Receiver<RoutedConn>>) {
     let mut conn: Option<Conn> = None;
     let mut crashes_used: u32 = 0;
     let pooled = matches!(sh.mode, Mode::Pool(_));
@@ -596,7 +612,7 @@ fn slot_loop(sh: &Shared, slot: usize, rx: Option<Receiver<(Box<dyn WireStream>,
                 // latency is bounded by heartbeats, not by the attempt's
                 // duration. Deliberate stops don't consume crash budget.
                 let mut dead = conn.take().unwrap();
-                let _ = write_frame(&mut dead.writer, &Msg::Shutdown);
+                let _ = write_frame_as(&mut dead.writer, &Msg::Shutdown, dead.wire);
                 let deadline = Instant::now() + sh.opts.heartbeat;
                 while Instant::now() < deadline {
                     match &mut dead.child {
@@ -618,7 +634,7 @@ fn slot_loop(sh: &Shared, slot: usize, rx: Option<Receiver<(Box<dyn WireStream>,
         }
     }
     if let Some(mut c) = conn {
-        let _ = write_frame(&mut c.writer, &Msg::Shutdown);
+        let _ = write_frame_as(&mut c.writer, &Msg::Shutdown, c.wire);
         // Close our read side before reaping: if the worker is blocked
         // writing into a full (unread) socket buffer, this fails its
         // write with EPIPE instead of letting `wait()` hang on a worker
@@ -675,7 +691,7 @@ fn serve_attempt(sh: &Shared, slot: usize, conn: &mut Conn, att: Attempt) -> Ser
             .reader
             .set_stream_read_timeout(Some(sh.opts.heartbeat_timeout));
     }
-    if write_frame(&mut conn.writer, &task).is_err() {
+    if write_frame_as(&mut conn.writer, &task, conn.wire).is_err() {
         return Serve::NotDelivered;
     }
     // Journaled only after the frame was accepted for delivery: an
@@ -826,24 +842,30 @@ fn lease_worker(sh: &Shared, pool: &Arc<WorkerPool>) -> Result<Conn, MementoErro
             continue; // stale registration; try the next one
         }
         let Ok(mut writer) = reg.stream.try_clone_stream() else { continue };
+        // Binary only toward workers that declared v3+ at registration,
+        // and advertise the *negotiated* version in the Hello: a genuine
+        // v2 worker hard-rejects any Hello whose protocol isn't 2, and v3
+        // restricted to JSON is exactly v2.
+        let wire = if reg.protocol >= 3 { sh.opts.wire } else { WireFormat::Json };
         let hello = Msg::Hello {
-            protocol: PROTOCOL_VERSION,
+            protocol: reg.protocol.min(PROTOCOL_VERSION),
             version: sh.opts.version.clone(),
             run_seed: sh.opts.run_seed,
             settings: sh.settings.clone(),
             heartbeat_ms: sh.opts.heartbeat.as_millis().max(1) as u64,
+            wire,
         };
         if write_frame(&mut writer, &hello).is_err() {
             continue; // worker died while parked in the queue
         }
-        return Ok(Conn { child: None, reader: reg.stream, writer });
+        return Ok(Conn { child: None, reader: reg.stream, writer, wire });
     }
 }
 
 fn spawn_worker(
     sh: &Shared,
     slot: usize,
-    rx: &Receiver<(Box<dyn WireStream>, u64)>,
+    rx: &Receiver<RoutedConn>,
     spawn_seq: u64,
     is_respawn: bool,
 ) -> Result<Conn, MementoError> {
@@ -872,7 +894,7 @@ fn spawn_worker(
     // slot already gave up on it) is discarded here instead of being
     // mistaken for the fresh worker.
     let deadline = Instant::now() + sh.opts.connect_timeout;
-    let stream = loop {
+    let (stream, peer_protocol) = loop {
         let remaining = deadline.saturating_duration_since(Instant::now());
         if remaining.is_zero() {
             let _ = child.kill();
@@ -883,7 +905,7 @@ fn spawn_worker(
             )));
         }
         match rx.recv_timeout(remaining) {
-            Ok((s, spawn)) if spawn == spawn_seq => break s,
+            Ok((s, spawn, protocol)) if spawn == spawn_seq => break (s, protocol),
             Ok(_) => continue, // stale incarnation; drop its stream
             Err(RecvTimeoutError::Timeout) | Err(RecvTimeoutError::Disconnected) => {
                 let _ = child.kill();
@@ -901,19 +923,25 @@ fn spawn_worker(
     let mut writer = stream
         .try_clone_stream()
         .map_err(|e| MementoError::ipc(format!("clone stream: {e}")))?;
+    // Spawned workers are normally this very binary (v3), but a custom
+    // `worker_program` may be older — honor its declared version, and
+    // advertise the negotiated (minimum) version back: v2 workers
+    // hard-reject a Hello that doesn't say v2.
+    let wire = if peer_protocol >= 3 { sh.opts.wire } else { WireFormat::Json };
     let hello = Msg::Hello {
-        protocol: PROTOCOL_VERSION,
+        protocol: peer_protocol.min(PROTOCOL_VERSION),
         version: sh.opts.version.clone(),
         run_seed: sh.opts.run_seed,
         settings: sh.settings.clone(),
         heartbeat_ms: sh.opts.heartbeat.as_millis().max(1) as u64,
+        wire,
     };
     if let Err(e) = write_frame(&mut writer, &hello) {
         let _ = child.kill();
         let _ = child.wait();
         return Err(MementoError::ipc(format!("send hello: {e}")));
     }
-    Ok(Conn { child: Some(child), reader: stream, writer })
+    Ok(Conn { child: Some(child), reader: stream, writer, wire })
 }
 
 // ---- shared queue operations -------------------------------------------

@@ -1,8 +1,9 @@
 //! Pluggable byte transports for the supervisor ↔ worker protocol.
 //!
 //! The wire format ([`crate::ipc::proto`]) is already transport-agnostic:
-//! a frame is a length prefix plus JSON bytes, written to anything that
-//! implements `Read`/`Write`. What *was* transport-specific before this
+//! a frame is a length prefix plus a self-describing payload (tagged
+//! binary or JSON bytes), written to anything that implements
+//! `Read`/`Write`. What *was* transport-specific before this
 //! module existed was the plumbing around it — `UnixListener::accept`,
 //! `UnixStream::try_clone`, per-stream read timeouts, half-close — all
 //! hard-wired to Unix domain sockets in the supervisor and worker.

@@ -29,7 +29,10 @@
 use crate::coordinator::error::{panic_message, MementoError};
 use crate::coordinator::memento::ExpFn;
 use crate::coordinator::task::{task_seed, TaskContext, TaskId};
-use crate::ipc::proto::{read_frame, write_frame, Msg, WireResult, PROTOCOL_VERSION};
+use crate::ipc::proto::{
+    read_frame, write_frame_as, Msg, WireFormat, WireResult, MIN_PROTOCOL_VERSION,
+    PROTOCOL_VERSION,
+};
 use crate::ipc::transport::{Endpoint, WireStream};
 use crate::util::json::Json;
 use crate::util::time::Stopwatch;
@@ -99,7 +102,10 @@ pub fn serve(exp_fn: Arc<ExpFn>) -> Result<(), MementoError> {
     let stream = endpoint
         .connect()
         .map_err(|e| MementoError::ipc(format!("connect {endpoint}: {e}")))?;
-    let report = serve_connection(stream, &exp_fn, worker_id, spawn, token, None)?;
+    // Spawned workers follow whatever format the supervisor negotiates in
+    // its Hello — they are the same binary, so no cap is needed.
+    let report =
+        serve_connection(stream, &exp_fn, worker_id, spawn, token, None, WireFormat::Binary)?;
     match report.end {
         ConnEnd::Shutdown | ConnEnd::TaskLimit => Ok(()),
         ConnEnd::PreHelloEof => Err(MementoError::ipc("supervisor closed before hello")),
@@ -135,6 +141,12 @@ pub struct RemoteWorkerOptions {
     pub max_backoff: Duration,
     /// Suppress per-connection log lines on stderr.
     pub quiet: bool,
+    /// Ceiling on this worker's payload encoding. [`WireFormat::Json`]
+    /// forces JSON frames even toward a v3 supervisor — the debugging
+    /// mode behind `memento serve --wire json`. Readers auto-detect, so
+    /// this never breaks interop; it only trades compactness for
+    /// `tcpdump`-readability.
+    pub wire: WireFormat,
 }
 
 impl Default for RemoteWorkerOptions {
@@ -148,6 +160,7 @@ impl Default for RemoteWorkerOptions {
             initial_backoff: Duration::from_millis(50),
             max_backoff: Duration::from_secs(2),
             quiet: false,
+            wire: WireFormat::Binary,
         }
     }
 }
@@ -228,6 +241,7 @@ pub fn serve_remote(
             spawn_gen,
             opts.token.clone(),
             opts.tasks_per_connection,
+            opts.wire,
         )?; // Err = fatal refusal (Reject / protocol mismatch): do not retry
         report.tasks += conn.tasks;
         match conn.end {
@@ -298,6 +312,11 @@ pub struct ConnReport {
 /// protocol-version mismatch — that reconnecting cannot fix; transport
 /// failures come back as `Ok` with [`ConnEnd::Dropped`] so standing
 /// workers can retry.
+///
+/// `wire_cap` bounds this worker's payload encoding: the connection
+/// speaks binary only when the supervisor is v3+, its `Hello` asked for
+/// binary, **and** the cap allows it — otherwise every frame this side
+/// writes is JSON (which any peer can read).
 pub fn serve_connection(
     stream: Box<dyn WireStream>,
     exp_fn: &Arc<ExpFn>,
@@ -305,6 +324,7 @@ pub fn serve_connection(
     spawn: u64,
     token: Option<String>,
     tasks_limit: Option<usize>,
+    wire_cap: WireFormat,
 ) -> Result<ConnReport, MementoError> {
     let mut reader = stream;
     let writer: Arc<Mutex<Box<dyn WireStream>>> = Arc::new(Mutex::new(
@@ -313,6 +333,8 @@ pub fn serve_connection(
             .map_err(|e| MementoError::ipc(format!("clone stream: {e}")))?,
     ));
 
+    // Handshake frames are pinned to JSON by write_frame_as regardless of
+    // the format passed here.
     send(
         &writer,
         &Msg::Ready {
@@ -322,6 +344,7 @@ pub fn serve_connection(
             protocol: PROTOCOL_VERSION,
             token,
         },
+        WireFormat::Json,
     )?;
 
     // First frame must be the run configuration (or a refusal).
@@ -335,9 +358,9 @@ pub fn serve_connection(
             })
         }
     };
-    let (protocol, version, run_seed, settings, heartbeat_ms) = match hello {
-        Msg::Hello { protocol, version, run_seed, settings, heartbeat_ms } => {
-            (protocol, version, run_seed, settings, heartbeat_ms)
+    let (protocol, version, run_seed, settings, heartbeat_ms, hello_wire) = match hello {
+        Msg::Hello { protocol, version, run_seed, settings, heartbeat_ms, wire } => {
+            (protocol, version, run_seed, settings, heartbeat_ms, wire)
         }
         Msg::Reject { reason } => {
             return Err(MementoError::ipc(format!(
@@ -350,11 +373,20 @@ pub fn serve_connection(
             )))
         }
     };
-    if protocol != PROTOCOL_VERSION {
+    if !(MIN_PROTOCOL_VERSION..=PROTOCOL_VERSION).contains(&protocol) {
         return Err(MementoError::ipc(format!(
-            "protocol mismatch: supervisor speaks v{protocol}, worker speaks v{PROTOCOL_VERSION}"
+            "protocol mismatch: supervisor speaks v{protocol}, worker speaks \
+             v{MIN_PROTOCOL_VERSION}..v{PROTOCOL_VERSION}"
         )));
     }
+    // Negotiated payload format for everything this side writes from here
+    // on: binary only when the supervisor can parse it (v3+), asked for
+    // it, and our own cap allows it. A v2 supervisor never sees binary.
+    let wire = if protocol >= 3 && hello_wire == WireFormat::Binary {
+        wire_cap
+    } else {
+        WireFormat::Json
+    };
     let settings = Arc::new(settings);
 
     // Heartbeat thread: shares the writer; `busy` mirrors the task index
@@ -375,6 +407,7 @@ pub fn serve_connection(
         Arc::clone(&busy),
         Arc::clone(&stop),
         Duration::from_millis(heartbeat_ms.max(1)),
+        wire,
     );
 
     let report = serve_loop(
@@ -386,6 +419,7 @@ pub fn serve_connection(
         run_seed,
         &busy,
         tasks_limit,
+        wire,
     );
 
     stop.store(true, Ordering::SeqCst);
@@ -424,6 +458,7 @@ fn serve_loop(
     run_seed: u64,
     busy: &Arc<AtomicI64>,
     tasks_limit: Option<usize>,
+    wire: WireFormat,
 ) -> ConnReport {
     let mut tasks = 0usize;
     loop {
@@ -442,10 +477,11 @@ fn serve_loop(
                 busy.store(index as i64, Ordering::SeqCst);
                 let outcome = run_attempt(
                     writer, exp_fn, settings, version, run_seed, index, attempt, params, restored,
+                    wire,
                 );
                 busy.store(-1, Ordering::SeqCst);
                 tasks += 1;
-                if send(writer, &outcome).is_err() {
+                if send(writer, &outcome, wire).is_err() {
                     return ConnReport {
                         tasks,
                         end: ConnEnd::Dropped("write outcome failed".to_string()),
@@ -456,7 +492,7 @@ fn serve_loop(
                         // Announce the voluntary departure so the
                         // supervisor re-queues any racing dispatch without
                         // charging a retry attempt or crash budget.
-                        let _ = send(writer, &Msg::Goodbye);
+                        let _ = send(writer, &Msg::Goodbye, wire);
                         return ConnReport { tasks, end: ConnEnd::TaskLimit };
                     }
                 }
@@ -488,6 +524,7 @@ fn run_attempt(
     attempt: u64,
     params: Vec<(String, crate::config::value::ParamValue)>,
     restored: Option<Json>,
+    wire: WireFormat,
 ) -> Msg {
     let spec = Msg::task_spec(index, &params);
     let id = spec.id(version);
@@ -497,7 +534,7 @@ fn run_attempt(
     // the checkpoint store — the worker never touches the store directly.
     let w2 = Arc::clone(writer);
     let sink: Arc<dyn Fn(&TaskId, &Json) + Send + Sync> = Arc::new(move |_tid, value| {
-        let _ = send(&w2, &Msg::Progress { index, value: value.clone() });
+        let _ = send(&w2, &Msg::Progress { index, value: value.clone() }, wire);
     });
 
     let ctx = TaskContext::new(
@@ -521,9 +558,13 @@ fn run_attempt(
     Msg::Outcome { index, attempt, duration_secs: sw.elapsed_secs(), result }
 }
 
-fn send(writer: &Arc<Mutex<Box<dyn WireStream>>>, msg: &Msg) -> Result<(), MementoError> {
+fn send(
+    writer: &Arc<Mutex<Box<dyn WireStream>>>,
+    msg: &Msg,
+    wire: WireFormat,
+) -> Result<(), MementoError> {
     let mut w = writer.lock().unwrap();
-    write_frame(&mut *w, msg).map_err(|e| MementoError::ipc(format!("write frame: {e}")))
+    write_frame_as(&mut *w, msg, wire).map_err(|e| MementoError::ipc(format!("write frame: {e}")))
 }
 
 fn spawn_heartbeat(
@@ -532,6 +573,7 @@ fn spawn_heartbeat(
     busy: Arc<AtomicI64>,
     stop: Arc<AtomicBool>,
     interval: Duration,
+    wire: WireFormat,
 ) -> std::thread::JoinHandle<()> {
     std::thread::Builder::new()
         .name("memento-ipc-heartbeat".into())
@@ -546,7 +588,7 @@ fn spawn_heartbeat(
                     continue; // idle: nobody is reading, don't fill the pipe
                 }
                 let msg = Msg::Heartbeat { worker, busy: Some(b as u64) };
-                if send(&writer, &msg).is_err() {
+                if send(&writer, &msg, wire).is_err() {
                     // Supervisor is gone; the serve loop will notice on its
                     // next read. Nothing useful left to do here.
                     return;

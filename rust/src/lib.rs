@@ -82,5 +82,6 @@ pub mod prelude {
     pub use crate::coordinator::run::{ChannelPolicy, Run, RunEvent, RunSummary};
     pub use crate::coordinator::scheduler::ExecBackend;
     pub use crate::coordinator::task::{TaskContext, TaskId, TaskSpec};
+    pub use crate::util::codec::WireFormat;
     pub use crate::util::json::Json;
 }

@@ -202,6 +202,13 @@ fn run_spec(name: &'static str) -> CliSpec {
              timeout, and requeued under the retry policy (0 = unbounded)",
         )
         .opt(
+            "wire",
+            "binary",
+            "payload encoding on the wire and at rest: binary (compact \
+             tagged codec) | json (debugging; pre-v3 peers). Reads \
+             auto-detect, so either setting opens existing stores",
+        )
+        .opt(
             "output",
             "summary",
             "output mode: summary (table at the end) | ndjson (one JSON \
@@ -230,9 +237,13 @@ fn cmd_run(args: &[String], resuming: bool) -> Result<(), String> {
         eprintln!("note: artifacts/ not found — the 'MLP' model family will fail; run `make artifacts`");
     }
 
+    let wire_arg = a.get("wire").unwrap_or("binary");
+    let wire = memento::util::codec::WireFormat::parse_arg(wire_arg)
+        .ok_or_else(|| format!("--wire must be 'binary' or 'json', got '{wire_arg}'"))?;
     let mut m = Memento::new(grid::grid_exp_fn(store))
         .seed(unwrap_cli(a.get_u64("seed"))?)
         .version(a.get("version").unwrap_or("v1"))
+        .wire_format(wire)
         .fail_fast(a.flag("fail-fast"));
     let workers = unwrap_cli(a.get_usize("workers"))?;
     if workers > 0 {
@@ -431,6 +442,13 @@ fn cmd_serve(args: &[String]) -> Result<(), String> {
         "0",
         "exit once the supervisor has been unreachable for N seconds \
          (0 = keep retrying forever)",
+    )
+    .opt(
+        "wire",
+        "binary",
+        "highest payload encoding this worker will speak: binary | json \
+         (the supervisor's Hello picks the session format; json forces \
+         plain-JSON frames for debugging)",
     );
     let a = unwrap_cli(spec.parse(args))?;
     let addr = a.get("connect").ok_or("missing --connect")?;
@@ -438,6 +456,9 @@ fn cmd_serve(args: &[String]) -> Result<(), String> {
     let runs = unwrap_cli(a.get_usize("runs"))?;
     let tasks_per_conn = unwrap_cli(a.get_usize("tasks-per-conn"))?;
     let give_up = unwrap_cli(a.get_f64("give-up-after"))?;
+    let wire_arg = a.get("wire").unwrap_or("binary");
+    let wire = memento::util::codec::WireFormat::parse_arg(wire_arg)
+        .ok_or_else(|| format!("--wire must be 'binary' or 'json', got '{wire_arg}'"))?;
 
     let store = shared_store().ok();
     if store.is_none() {
@@ -457,6 +478,7 @@ fn cmd_serve(args: &[String]) -> Result<(), String> {
             max_connections: (runs > 0).then_some(runs),
             tasks_per_connection: (tasks_per_conn > 0).then_some(tasks_per_conn),
             give_up_after: (give_up > 0.0).then(|| Duration::from_secs_f64(give_up)),
+            wire,
             ..RemoteWorkerOptions::default()
         },
     )
@@ -501,9 +523,11 @@ fn cmd_status(args: &[String]) -> Result<(), String> {
     let a = unwrap_cli(spec.parse(args))?;
     let dir = a.get("checkpoint").ok_or("missing --checkpoint")?;
     let manifest = Path::new(dir).join("manifest.json");
-    let text = std::fs::read_to_string(&manifest)
+    // read_document auto-detects tagged-binary vs JSON content, so status
+    // inspects manifests written under either --wire setting.
+    let bytes = std::fs::read(&manifest)
         .map_err(|e| format!("cannot read {}: {e}", manifest.display()))?;
-    let doc = parse(&text).map_err(|e| e.to_string())?;
+    let doc = memento::util::codec::read_document(&bytes).map_err(|e| e.to_string())?;
     let total = doc.get("total_tasks").and_then(|j| j.as_i64()).unwrap_or(0);
     let completed = doc
         .get("completed")

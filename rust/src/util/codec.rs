@@ -1,0 +1,574 @@
+//! Compact tagged binary encoding of [`Json`] documents.
+//!
+//! Every persisted or wire-framed document in Memento used to be compact
+//! JSON text; parsing it back builds a full [`Json`] tree even when the
+//! reader wants one field. This module adds the binary half of the
+//! format story: a tagged, length-prefixed encoding that is **lossless
+//! with respect to the [`Json`] model** — `decode(encode(doc)) == doc`
+//! for every document the JSON writer can produce — so the two formats
+//! are interchangeable on every read path.
+//!
+//! # Layout
+//!
+//! A binary document is one [`BINARY_MAGIC`] byte followed by one value.
+//! The magic byte (`0xB1`) can never begin a JSON document (it is not
+//! ASCII and not a valid UTF-8 leading byte), which is what makes
+//! per-payload auto-detection ([`is_binary`], [`read_document`]) safe:
+//! readers accept both formats without negotiation.
+//!
+//! Each value is a 1-byte tag followed by its payload:
+//!
+//! | tag | value | payload |
+//! |-----|-------|---------|
+//! | `0x00` | null | — |
+//! | `0x01` | false | — |
+//! | `0x02` | true | — |
+//! | `0x03` | integer | zigzag LEB128 varint (`i64`) |
+//! | `0x04` | float | 8-byte little-endian IEEE-754 `f64` |
+//! | `0x05` | string | varint byte length + UTF-8 bytes |
+//! | `0x06` | array | varint element count + elements |
+//! | `0x07` | object | varint entry count + (varint key length + key bytes + value) per entry |
+//!
+//! Numbers mirror the JSON writer's policy exactly: a finite `f64` with
+//! no fractional part and magnitude below 9×10¹⁵ encodes as an integer
+//! (tag `0x03`), everything else as a float, and NaN/infinity as null —
+//! so a value round-tripped through *either* format compares equal.
+//! Object entries are written in [`Json::Obj`]'s sorted key order, making
+//! the encoding canonical like its JSON counterpart.
+//!
+//! The low-level varint/skip helpers are shared with the lazy field
+//! scanner ([`crate::util::scan`]), which walks this layout without
+//! materializing a tree.
+
+use crate::util::json::{parse, Json};
+use std::collections::BTreeMap;
+use std::fmt;
+
+/// First byte of every binary document. Not ASCII and not a valid UTF-8
+/// leading byte, so no JSON text (which begins with `{`, `[`, `"`, a
+/// digit, `-`, `t`, `f`, `n`, or whitespace) can collide with it.
+pub const BINARY_MAGIC: u8 = 0xB1;
+
+/// Value tag: JSON `null` (also NaN/infinity, mirroring the JSON writer).
+pub const TAG_NULL: u8 = 0x00;
+/// Value tag: boolean `false`.
+pub const TAG_FALSE: u8 = 0x01;
+/// Value tag: boolean `true`.
+pub const TAG_TRUE: u8 = 0x02;
+/// Value tag: exact integer, zigzag LEB128 varint payload.
+pub const TAG_INT: u8 = 0x03;
+/// Value tag: 8-byte little-endian `f64` payload.
+pub const TAG_F64: u8 = 0x04;
+/// Value tag: varint-length-prefixed UTF-8 string payload.
+pub const TAG_STR: u8 = 0x05;
+/// Value tag: varint-count-prefixed array payload.
+pub const TAG_ARR: u8 = 0x06;
+/// Value tag: varint-count-prefixed object payload (sorted keys).
+pub const TAG_OBJ: u8 = 0x07;
+
+/// Payload encoding for post-handshake IPC frames and for documents at
+/// rest (cache entries, checkpoint manifests and progress files). Readers
+/// always auto-detect per payload, so this only chooses what a *writer*
+/// emits. Re-exported as `ipc::proto::WireFormat`, where the
+/// supervisor/worker handshake negotiates it.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum WireFormat {
+    /// Compact JSON text — human-debuggable, and the only encoding
+    /// pre-v3 peers (or pre-v3 on-disk stores) understand.
+    Json,
+    /// Compact tagged binary (this module) — the default since protocol
+    /// v3.
+    #[default]
+    Binary,
+}
+
+impl WireFormat {
+    /// Parses the CLI spelling (`"json"` / `"binary"`).
+    pub fn parse_arg(s: &str) -> Option<WireFormat> {
+        match s {
+            "json" => Some(WireFormat::Json),
+            "binary" => Some(WireFormat::Binary),
+            _ => None,
+        }
+    }
+
+    /// The canonical spelling, matching [`WireFormat::parse_arg`].
+    pub fn as_str(self) -> &'static str {
+        match self {
+            WireFormat::Json => "json",
+            WireFormat::Binary => "binary",
+        }
+    }
+}
+
+/// Serializes a document in the requested format: [`encode`] bytes for
+/// [`WireFormat::Binary`], compact JSON text for [`WireFormat::Json`].
+/// The inverse of [`read_document`] either way.
+pub fn write_document(doc: &Json, format: WireFormat) -> Vec<u8> {
+    match format {
+        WireFormat::Binary => encode(doc),
+        WireFormat::Json => doc.to_string().into_bytes(),
+    }
+}
+
+/// Decode failure: what went wrong and at which byte offset.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct CodecError {
+    /// Human-readable description of the malformation.
+    pub msg: String,
+    /// Byte offset at which decoding failed.
+    pub at: usize,
+}
+
+impl fmt::Display for CodecError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "codec error at byte {}: {}", self.at, self.msg)
+    }
+}
+
+impl std::error::Error for CodecError {}
+
+fn err(msg: impl Into<String>, at: usize) -> CodecError {
+    CodecError { msg: msg.into(), at }
+}
+
+/// True when `bytes` starts with the binary document magic.
+pub fn is_binary(bytes: &[u8]) -> bool {
+    bytes.first() == Some(&BINARY_MAGIC)
+}
+
+/// Encodes a document: [`BINARY_MAGIC`] + one value.
+pub fn encode(doc: &Json) -> Vec<u8> {
+    let mut out = Vec::with_capacity(64);
+    out.push(BINARY_MAGIC);
+    write_value(doc, &mut out);
+    out
+}
+
+/// Decodes a binary document produced by [`encode`]. Trailing bytes after
+/// the value are an error (a truncation guard in reverse: a concatenated
+/// or corrupted buffer must not decode silently).
+pub fn decode(bytes: &[u8]) -> Result<Json, CodecError> {
+    if !is_binary(bytes) {
+        return Err(err("missing binary magic byte", 0));
+    }
+    let mut pos = 1usize;
+    let v = read_value(bytes, &mut pos, 0)?;
+    if pos != bytes.len() {
+        return Err(err(
+            format!("{} trailing byte(s) after document", bytes.len() - pos),
+            pos,
+        ));
+    }
+    Ok(v)
+}
+
+/// Reads a document in **either** format: binary (magic byte) or UTF-8
+/// JSON text. This is the storage read path's auto-detect — result
+/// caches, checkpoint manifests, and progress files written by older
+/// (JSON-only) builds stay loadable next to new binary entries.
+pub fn read_document(bytes: &[u8]) -> Result<Json, CodecError> {
+    if is_binary(bytes) {
+        return decode(bytes);
+    }
+    let text = std::str::from_utf8(bytes).map_err(|e| err(format!("not utf-8: {e}"), 0))?;
+    parse(text).map_err(|e| err(format!("not json: {e}"), 0))
+}
+
+/// Appends one encoded value (no magic byte) to `out`.
+pub fn write_value(v: &Json, out: &mut Vec<u8>) {
+    match v {
+        Json::Null => out.push(TAG_NULL),
+        Json::Bool(false) => out.push(TAG_FALSE),
+        Json::Bool(true) => out.push(TAG_TRUE),
+        Json::Num(n) => write_num(*n, out),
+        Json::Str(s) => {
+            out.push(TAG_STR);
+            write_varint(s.len() as u64, out);
+            out.extend_from_slice(s.as_bytes());
+        }
+        Json::Arr(a) => {
+            out.push(TAG_ARR);
+            write_varint(a.len() as u64, out);
+            for item in a {
+                write_value(item, out);
+            }
+        }
+        Json::Obj(o) => {
+            out.push(TAG_OBJ);
+            write_varint(o.len() as u64, out);
+            for (k, item) in o {
+                write_varint(k.len() as u64, out);
+                out.extend_from_slice(k.as_bytes());
+                write_value(item, out);
+            }
+        }
+    }
+}
+
+/// Number policy shared with the JSON writer: exact small integers get
+/// the varint encoding, NaN/infinity become null, the rest stay `f64`.
+fn write_num(n: f64, out: &mut Vec<u8>) {
+    if n.is_nan() || n.is_infinite() {
+        out.push(TAG_NULL);
+    } else if n.fract() == 0.0 && n.abs() < 9.0e15 {
+        out.push(TAG_INT);
+        write_varint(zigzag(n as i64), out);
+    } else {
+        out.push(TAG_F64);
+        out.extend_from_slice(&n.to_le_bytes());
+    }
+}
+
+/// Decodes one value starting at `*pos`, advancing it past the value.
+/// `depth` guards against adversarially nested input (same bound as the
+/// JSON parser).
+pub fn read_value(bytes: &[u8], pos: &mut usize, depth: usize) -> Result<Json, CodecError> {
+    const MAX_DEPTH: usize = 128;
+    if depth >= MAX_DEPTH {
+        return Err(err("maximum nesting depth exceeded", *pos));
+    }
+    let tag = *bytes.get(*pos).ok_or_else(|| err("truncated: missing value tag", *pos))?;
+    *pos += 1;
+    match tag {
+        TAG_NULL => Ok(Json::Null),
+        TAG_FALSE => Ok(Json::Bool(false)),
+        TAG_TRUE => Ok(Json::Bool(true)),
+        TAG_INT => {
+            let raw = read_varint(bytes, pos)?;
+            Ok(Json::Num(unzigzag(raw) as f64))
+        }
+        TAG_F64 => {
+            let end = pos.checked_add(8).filter(|&e| e <= bytes.len());
+            let end = end.ok_or_else(|| err("truncated f64", *pos))?;
+            let mut raw = [0u8; 8];
+            raw.copy_from_slice(&bytes[*pos..end]);
+            *pos = end;
+            Ok(Json::Num(f64::from_le_bytes(raw)))
+        }
+        TAG_STR => Ok(Json::Str(read_string(bytes, pos)?)),
+        TAG_ARR => {
+            let count = read_varint(bytes, pos)? as usize;
+            // Guard the pre-allocation: each element costs ≥ 1 byte, so a
+            // count beyond the remaining buffer is corrupt.
+            if count > bytes.len().saturating_sub(*pos) {
+                return Err(err(format!("array count {count} exceeds input"), *pos));
+            }
+            let mut items = Vec::with_capacity(count);
+            for _ in 0..count {
+                items.push(read_value(bytes, pos, depth + 1)?);
+            }
+            Ok(Json::Arr(items))
+        }
+        TAG_OBJ => {
+            let count = read_varint(bytes, pos)? as usize;
+            if count > bytes.len().saturating_sub(*pos) {
+                return Err(err(format!("object count {count} exceeds input"), *pos));
+            }
+            let mut map = BTreeMap::new();
+            for _ in 0..count {
+                let key = read_string(bytes, pos)?;
+                let val = read_value(bytes, pos, depth + 1)?;
+                map.insert(key, val);
+            }
+            Ok(Json::Obj(map))
+        }
+        other => Err(err(format!("unknown value tag 0x{other:02x}"), *pos - 1)),
+    }
+}
+
+fn read_string(bytes: &[u8], pos: &mut usize) -> Result<String, CodecError> {
+    let len = read_varint(bytes, pos)? as usize;
+    let end = pos
+        .checked_add(len)
+        .filter(|&e| e <= bytes.len())
+        .ok_or_else(|| err("truncated string", *pos))?;
+    let s = std::str::from_utf8(&bytes[*pos..end])
+        .map_err(|e| err(format!("string not utf-8: {e}"), *pos))?
+        .to_string();
+    *pos = end;
+    Ok(s)
+}
+
+/// Appends an unsigned LEB128 varint.
+pub fn write_varint(mut v: u64, out: &mut Vec<u8>) {
+    loop {
+        let byte = (v & 0x7f) as u8;
+        v >>= 7;
+        if v == 0 {
+            out.push(byte);
+            return;
+        }
+        out.push(byte | 0x80);
+    }
+}
+
+/// Reads an unsigned LEB128 varint at `*pos`, advancing it.
+pub fn read_varint(bytes: &[u8], pos: &mut usize) -> Result<u64, CodecError> {
+    let mut v: u64 = 0;
+    let mut shift = 0u32;
+    loop {
+        let byte = *bytes.get(*pos).ok_or_else(|| err("truncated varint", *pos))?;
+        *pos += 1;
+        if shift == 63 && byte > 1 {
+            return Err(err("varint overflows u64", *pos - 1));
+        }
+        v |= u64::from(byte & 0x7f) << shift;
+        if byte & 0x80 == 0 {
+            return Ok(v);
+        }
+        shift += 7;
+        if shift > 63 {
+            return Err(err("varint longer than 10 bytes", *pos - 1));
+        }
+    }
+}
+
+/// Zigzag-maps a signed integer to an unsigned varint payload so small
+/// negative values stay short.
+pub fn zigzag(v: i64) -> u64 {
+    ((v << 1) ^ (v >> 63)) as u64
+}
+
+/// Inverse of [`zigzag`].
+pub fn unzigzag(v: u64) -> i64 {
+    ((v >> 1) as i64) ^ -((v & 1) as i64)
+}
+
+/// Advances `*pos` past one encoded value **without** building any
+/// [`Json`] node — the skip primitive the lazy scanner is built on.
+/// Recursion depth is bounded like [`read_value`]'s, so adversarial
+/// nesting errors out instead of exhausting the stack.
+pub fn skip_value(bytes: &[u8], pos: &mut usize) -> Result<(), CodecError> {
+    skip_value_depth(bytes, pos, 0)
+}
+
+fn skip_value_depth(bytes: &[u8], pos: &mut usize, depth: usize) -> Result<(), CodecError> {
+    const MAX_DEPTH: usize = 128;
+    if depth >= MAX_DEPTH {
+        return Err(err("maximum nesting depth exceeded", *pos));
+    }
+    let tag = *bytes.get(*pos).ok_or_else(|| err("truncated: missing value tag", *pos))?;
+    *pos += 1;
+    match tag {
+        TAG_NULL | TAG_FALSE | TAG_TRUE => Ok(()),
+        TAG_INT => read_varint(bytes, pos).map(|_| ()),
+        TAG_F64 => {
+            let end = pos
+                .checked_add(8)
+                .filter(|&e| e <= bytes.len())
+                .ok_or_else(|| err("truncated f64", *pos))?;
+            *pos = end;
+            Ok(())
+        }
+        TAG_STR => skip_len_prefixed(bytes, pos),
+        TAG_ARR => {
+            let count = read_varint(bytes, pos)?;
+            for _ in 0..count {
+                skip_value_depth(bytes, pos, depth + 1)?;
+            }
+            Ok(())
+        }
+        TAG_OBJ => {
+            let count = read_varint(bytes, pos)?;
+            for _ in 0..count {
+                skip_len_prefixed(bytes, pos)?; // key
+                skip_value_depth(bytes, pos, depth + 1)?;
+            }
+            Ok(())
+        }
+        other => Err(err(format!("unknown value tag 0x{other:02x}"), *pos - 1)),
+    }
+}
+
+fn skip_len_prefixed(bytes: &[u8], pos: &mut usize) -> Result<(), CodecError> {
+    let len = read_varint(bytes, pos)? as usize;
+    let end = pos
+        .checked_add(len)
+        .filter(|&e| e <= bytes.len())
+        .ok_or_else(|| err("truncated length-prefixed payload", *pos))?;
+    *pos = end;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn roundtrip(doc: Json) {
+        let bytes = encode(&doc);
+        assert!(is_binary(&bytes));
+        assert_eq!(decode(&bytes).unwrap(), doc, "binary roundtrip of {doc}");
+        // Format parity: the JSON text path must agree value-for-value.
+        assert_eq!(parse(&doc.to_string()).unwrap(), decode(&bytes).unwrap());
+    }
+
+    #[test]
+    fn scalars_roundtrip() {
+        roundtrip(Json::Null);
+        roundtrip(Json::Bool(true));
+        roundtrip(Json::Bool(false));
+        roundtrip(Json::int(0));
+        roundtrip(Json::int(1));
+        roundtrip(Json::int(-1));
+        roundtrip(Json::int(i64::MAX / 1024));
+        roundtrip(Json::int(-(1 << 52)));
+        roundtrip(Json::Num(0.5));
+        roundtrip(Json::Num(-3.25e-9));
+        roundtrip(Json::Num(9.0e15)); // just past the integer cutoff: stays f64
+        roundtrip(Json::str(""));
+        roundtrip(Json::str("héllo wörld 😀"));
+        roundtrip(Json::str("quotes \" and \\ and \n newlines"));
+    }
+
+    #[test]
+    fn nested_roundtrip() {
+        roundtrip(Json::arr(vec![]));
+        roundtrip(Json::obj(vec![]));
+        roundtrip(Json::obj(vec![
+            ("id", Json::str("abc")),
+            (
+                "params",
+                Json::arr(vec![
+                    Json::arr(vec![Json::str("lr"), Json::Num(0.01)]),
+                    Json::arr(vec![Json::str("n"), Json::int(5)]),
+                ]),
+            ),
+            (
+                "value",
+                Json::obj(vec![("accuracy", Json::Num(0.93)), ("folds", Json::int(10))]),
+            ),
+        ]));
+    }
+
+    #[test]
+    fn nan_and_infinity_become_null_like_json() {
+        for n in [f64::NAN, f64::INFINITY, f64::NEG_INFINITY] {
+            let doc = Json::arr(vec![Json::Num(n)]);
+            assert_eq!(decode(&encode(&doc)).unwrap(), Json::arr(vec![Json::Null]));
+            assert_eq!(parse(&doc.to_string()).unwrap(), Json::arr(vec![Json::Null]));
+        }
+    }
+
+    #[test]
+    fn varint_edges() {
+        for v in [0u64, 1, 127, 128, 16_383, 16_384, u64::MAX / 7, u64::MAX] {
+            let mut out = Vec::new();
+            write_varint(v, &mut out);
+            let mut pos = 0;
+            assert_eq!(read_varint(&out, &mut pos).unwrap(), v);
+            assert_eq!(pos, out.len());
+        }
+        for v in [0i64, 1, -1, 63, -64, i64::MAX, i64::MIN] {
+            assert_eq!(unzigzag(zigzag(v)), v);
+        }
+        // 11-byte continuation run overflows.
+        let bad = [0x80u8; 11];
+        assert!(read_varint(&bad, &mut 0).is_err());
+    }
+
+    /// Randomized documents via the in-tree RNG: binary↔JSON parity on
+    /// arbitrary trees, not just hand-picked shapes.
+    fn random_json(rng: &mut Rng, depth: usize) -> Json {
+        let scalar_only = depth >= 3;
+        match rng.below(if scalar_only { 5 } else { 7 }) {
+            0 => Json::Null,
+            1 => Json::Bool(rng.bool(0.5)),
+            2 => Json::int(rng.next_u64() as i64 >> 12),
+            3 => Json::Num(rng.normal_ms(0.0, 1.0e4)),
+            4 => {
+                let len = rng.below(12);
+                Json::Str((0..len).map(|_| rng.choice(&['a', 'é', '😀', '"', '\\', '\n'])).collect())
+            }
+            5 => Json::Arr((0..rng.below(5)).map(|_| random_json(rng, depth + 1)).collect()),
+            _ => Json::Obj(
+                (0..rng.below(5))
+                    .map(|i| (format!("k{}{}", i, rng.below(100)), random_json(rng, depth + 1)))
+                    .collect(),
+            ),
+        }
+    }
+
+    #[test]
+    fn randomized_documents_roundtrip_in_both_formats() {
+        let mut rng = Rng::new(0xC0DEC);
+        for _ in 0..500 {
+            let doc = random_json(&mut rng, 0);
+            let bin = decode(&encode(&doc)).unwrap();
+            let txt = parse(&doc.to_string()).unwrap();
+            assert_eq!(bin, txt, "format divergence on {doc}");
+        }
+    }
+
+    #[test]
+    fn read_document_auto_detects() {
+        let doc = Json::obj(vec![("x", Json::int(7))]);
+        assert_eq!(read_document(&encode(&doc)).unwrap(), doc);
+        assert_eq!(read_document(doc.to_string().as_bytes()).unwrap(), doc);
+        assert!(read_document(b"{ not json").is_err());
+        assert!(read_document(&[0xFF, 0xFE]).is_err());
+    }
+
+    #[test]
+    fn truncated_and_corrupt_inputs_error() {
+        let full = encode(&Json::obj(vec![
+            ("a", Json::str("hello")),
+            ("b", Json::arr(vec![Json::int(1), Json::Num(0.5)])),
+        ]));
+        // Every prefix of a valid document must fail cleanly.
+        for cut in 1..full.len() {
+            assert!(decode(&full[..cut]).is_err(), "prefix of {cut} bytes decoded");
+        }
+        // Trailing garbage is rejected.
+        let mut extended = full.clone();
+        extended.push(0x00);
+        assert!(decode(&extended).is_err());
+        // Unknown tag.
+        assert!(decode(&[BINARY_MAGIC, 0x77]).is_err());
+        // Absurd collection count cannot pre-allocate.
+        let mut bomb = vec![BINARY_MAGIC, TAG_ARR];
+        write_varint(u32::MAX as u64, &mut bomb);
+        assert!(decode(&bomb).is_err());
+        // Missing magic.
+        assert!(decode(&full[1..]).is_err());
+    }
+
+    #[test]
+    fn deep_nesting_is_bounded() {
+        let mut bytes = vec![BINARY_MAGIC];
+        for _ in 0..200 {
+            bytes.push(TAG_ARR);
+            bytes.push(1); // one element
+        }
+        bytes.push(TAG_NULL);
+        assert!(decode(&bytes).is_err());
+        assert!(skip_value(&bytes[1..], &mut 0).is_err());
+    }
+
+    #[test]
+    fn skip_matches_read() {
+        let mut rng = Rng::new(42);
+        for _ in 0..200 {
+            let doc = random_json(&mut rng, 0);
+            let bytes = encode(&doc);
+            let mut read_pos = 1;
+            read_value(&bytes, &mut read_pos, 0).unwrap();
+            let mut skip_pos = 1;
+            skip_value(&bytes, &mut skip_pos).unwrap();
+            assert_eq!(read_pos, skip_pos, "skip length mismatch on {doc}");
+            assert_eq!(read_pos, bytes.len());
+        }
+    }
+
+    #[test]
+    fn integral_floats_collapse_to_ints_in_both_formats() {
+        // 3.0 written as f64 must decode equal to 3 written as int — the
+        // writers normalize, so equality falls out of f64 comparison.
+        let a = decode(&encode(&Json::Num(3.0))).unwrap();
+        let b = decode(&encode(&Json::int(3))).unwrap();
+        assert_eq!(a, b);
+        // And the binary encodings are byte-identical (canonical form).
+        assert_eq!(encode(&Json::Num(3.0)), encode(&Json::int(3)));
+    }
+}

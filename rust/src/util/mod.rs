@@ -3,11 +3,13 @@
 //! atomicity, and timing.
 
 pub mod cli;
+pub mod codec;
 pub mod csv;
 pub mod deque;
 pub mod fs;
 pub mod json;
 pub mod pool;
 pub mod rng;
+pub mod scan;
 pub mod sha256;
 pub mod time;

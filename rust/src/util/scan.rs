@@ -1,0 +1,770 @@
+//! Lazy field extraction from encoded documents — no tree allocation.
+//!
+//! Several hot read paths touch one or two fields of a document and
+//! throw the rest away: journal replay wants `ts`/`event`/`task` per
+//! line, the checkpoint resume probe wants `matrix_fingerprint` and
+//! `version` before deciding whether the manifest is even usable, and a
+//! cold cache hit wants only `value` out of `{id, params, value}`.
+//! Parsing the whole document builds a [`Json`] tree proportional to the
+//! *document*, not the *question*. This module answers the question
+//! directly: a [`Scanner`] walks the top-level object of a binary
+//! ([`crate::util::codec`]) **or** JSON document, skipping unrequested
+//! values byte-wise, and yields scalar fields as borrowed [`ScanValue`]s.
+//!
+//! Composite fields (arrays/objects) come back as raw byte ranges; only
+//! an explicit [`ScanValue::materialize`] builds a [`Json`] subtree, and
+//! every materialization increments a per-thread counter
+//! ([`materialized_count`]) — the test hook that *proves* the
+//! scalar-field paths allocate no tree nodes at all.
+
+use crate::util::codec::{self, CodecError};
+use crate::util::json::{parse, Json};
+use std::borrow::Cow;
+use std::cell::Cell;
+use std::fmt;
+
+thread_local! {
+    /// Per-thread count of [`ScanValue::materialize`] calls. Thread-local
+    /// rather than global so a test's before/after delta cannot be
+    /// perturbed by scanners running concurrently on other threads.
+    static MATERIALIZED: Cell<usize> = const { Cell::new(0) };
+}
+
+/// Number of [`Json`] subtree materializations performed by scanners on
+/// **this thread** since it started. Monotone; compare before/after
+/// deltas around a code path that claims to be allocation-free.
+pub fn materialized_count() -> usize {
+    MATERIALIZED.with(|c| c.get())
+}
+
+/// Scan failure: what went wrong and at which byte offset.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ScanError {
+    /// Human-readable description.
+    pub msg: String,
+    /// Byte offset in the scanned input.
+    pub at: usize,
+}
+
+impl fmt::Display for ScanError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "scan error at byte {}: {}", self.at, self.msg)
+    }
+}
+
+impl std::error::Error for ScanError {}
+
+impl From<CodecError> for ScanError {
+    fn from(e: CodecError) -> ScanError {
+        ScanError { msg: e.msg, at: e.at }
+    }
+}
+
+fn err(msg: impl Into<String>, at: usize) -> ScanError {
+    ScanError { msg: msg.into(), at }
+}
+
+/// One extracted top-level field. Scalars are decoded in place (strings
+/// borrow from the input when no unescaping is needed); composites stay
+/// as raw bytes until [`ScanValue::materialize`] is called.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ScanValue<'a> {
+    /// JSON `null`.
+    Null,
+    /// A boolean.
+    Bool(bool),
+    /// A number (integers decode to their exact `f64`, as in [`Json`]).
+    Num(f64),
+    /// A string; borrowed from the input unless JSON escapes forced a copy.
+    Str(Cow<'a, str>),
+    /// An array or object, still encoded.
+    Raw {
+        /// The value's encoded bytes (one complete value, no magic byte).
+        bytes: &'a [u8],
+        /// True when `bytes` is the binary tagged encoding, false for JSON.
+        binary: bool,
+    },
+}
+
+impl<'a> ScanValue<'a> {
+    /// The numeric value, if this is a number.
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            ScanValue::Num(n) => Some(*n),
+            _ => None,
+        }
+    }
+
+    /// The value as an exact integer (same policy as [`Json::as_i64`]).
+    pub fn as_i64(&self) -> Option<i64> {
+        match self {
+            ScanValue::Num(n) if n.fract() == 0.0 && n.abs() < 9.0e15 => Some(*n as i64),
+            _ => None,
+        }
+    }
+
+    /// The string value, if this is a string.
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            ScanValue::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    /// The boolean value, if this is a boolean.
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            ScanValue::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    /// True for `null`.
+    pub fn is_null(&self) -> bool {
+        matches!(self, ScanValue::Null)
+    }
+
+    /// Builds the full [`Json`] value. For scalars this is a single node;
+    /// for [`ScanValue::Raw`] it parses the deferred subtree. Every call
+    /// increments [`materialized_count`] — the allocation-accounting hook.
+    pub fn materialize(&self) -> Result<Json, ScanError> {
+        MATERIALIZED.with(|c| c.set(c.get() + 1));
+        match self {
+            ScanValue::Null => Ok(Json::Null),
+            ScanValue::Bool(b) => Ok(Json::Bool(*b)),
+            ScanValue::Num(n) => Ok(Json::Num(*n)),
+            ScanValue::Str(s) => Ok(Json::Str(s.clone().into_owned())),
+            ScanValue::Raw { bytes, binary: true } => {
+                let mut pos = 0;
+                let v = codec::read_value(bytes, &mut pos, 0)?;
+                if pos != bytes.len() {
+                    return Err(err("trailing bytes after raw value", pos));
+                }
+                Ok(v)
+            }
+            ScanValue::Raw { bytes, binary: false } => {
+                let text = std::str::from_utf8(bytes)
+                    .map_err(|e| err(format!("raw value not utf-8: {e}"), 0))?;
+                parse(text).map_err(|e| err(format!("raw value not json: {e}"), 0))
+            }
+        }
+    }
+}
+
+/// A lazy reader over one document whose top level is an object.
+/// Construction only sniffs the format; each [`Scanner::field`] /
+/// [`Scanner::fields`] call is a single skip-walk over the top-level
+/// entries.
+pub struct Scanner<'a> {
+    bytes: &'a [u8],
+    binary: bool,
+}
+
+impl<'a> Scanner<'a> {
+    /// Wraps `bytes`, auto-detecting binary (leading
+    /// [`codec::BINARY_MAGIC`]) vs JSON text. The document must be a
+    /// top-level object in either format.
+    pub fn new(bytes: &'a [u8]) -> Result<Scanner<'a>, ScanError> {
+        let binary = codec::is_binary(bytes);
+        if binary {
+            if bytes.get(1) != Some(&codec::TAG_OBJ) {
+                return Err(err("binary document is not an object", 1));
+            }
+        } else {
+            let start = bytes
+                .iter()
+                .position(|b| !b" \t\r\n".contains(b))
+                .ok_or_else(|| err("empty document", 0))?;
+            if bytes[start] != b'{' {
+                return Err(err("json document is not an object", start));
+            }
+        }
+        Ok(Scanner { bytes, binary })
+    }
+
+    /// Extracts one named top-level field; `Ok(None)` when absent.
+    pub fn field(&self, name: &str) -> Result<Option<ScanValue<'a>>, ScanError> {
+        let mut out = [None];
+        self.scan(&[name], &mut out)?;
+        Ok(out[0].take())
+    }
+
+    /// Extracts up to `N` named top-level fields in **one pass**; each
+    /// slot is `None` when the corresponding field is absent. Duplicate
+    /// keys keep the first occurrence.
+    pub fn fields<const N: usize>(
+        &self,
+        names: [&str; N],
+    ) -> Result<[Option<ScanValue<'a>>; N], ScanError> {
+        let mut out: [Option<ScanValue<'a>>; N] = std::array::from_fn(|_| None);
+        self.scan(&names, &mut out)?;
+        Ok(out)
+    }
+
+    fn scan(
+        &self,
+        names: &[&str],
+        out: &mut [Option<ScanValue<'a>>],
+    ) -> Result<(), ScanError> {
+        if self.binary {
+            self.scan_binary(names, out)
+        } else {
+            self.scan_json(names, out)
+        }
+    }
+
+    // ---- binary walk ----------------------------------------------------
+
+    fn scan_binary(
+        &self,
+        names: &[&str],
+        out: &mut [Option<ScanValue<'a>>],
+    ) -> Result<(), ScanError> {
+        let bytes = self.bytes;
+        let mut pos = 2; // magic + TAG_OBJ, verified in new()
+        let count = codec::read_varint(bytes, &mut pos)?;
+        let mut remaining = names.len();
+        for _ in 0..count {
+            let key_len = codec::read_varint(bytes, &mut pos)? as usize;
+            let key_end = pos
+                .checked_add(key_len)
+                .filter(|&e| e <= bytes.len())
+                .ok_or_else(|| err("truncated object key", pos))?;
+            let key = &bytes[pos..key_end];
+            pos = key_end;
+            let slot = names
+                .iter()
+                .position(|n| n.as_bytes() == key)
+                .filter(|&i| out[i].is_none());
+            match slot {
+                Some(i) if remaining > 0 => {
+                    out[i] = Some(Self::capture_binary(bytes, &mut pos)?);
+                    remaining -= 1;
+                    if remaining == 0 {
+                        return Ok(());
+                    }
+                }
+                _ => codec::skip_value(bytes, &mut pos)?,
+            }
+        }
+        Ok(())
+    }
+
+    fn capture_binary(bytes: &'a [u8], pos: &mut usize) -> Result<ScanValue<'a>, ScanError> {
+        let tag = *bytes.get(*pos).ok_or_else(|| err("truncated value tag", *pos))?;
+        match tag {
+            codec::TAG_NULL => {
+                *pos += 1;
+                Ok(ScanValue::Null)
+            }
+            codec::TAG_FALSE => {
+                *pos += 1;
+                Ok(ScanValue::Bool(false))
+            }
+            codec::TAG_TRUE => {
+                *pos += 1;
+                Ok(ScanValue::Bool(true))
+            }
+            codec::TAG_INT => {
+                *pos += 1;
+                let raw = codec::read_varint(bytes, pos)?;
+                Ok(ScanValue::Num(codec::unzigzag(raw) as f64))
+            }
+            codec::TAG_F64 => {
+                *pos += 1;
+                let end = pos
+                    .checked_add(8)
+                    .filter(|&e| e <= bytes.len())
+                    .ok_or_else(|| err("truncated f64", *pos))?;
+                let mut raw = [0u8; 8];
+                raw.copy_from_slice(&bytes[*pos..end]);
+                *pos = end;
+                Ok(ScanValue::Num(f64::from_le_bytes(raw)))
+            }
+            codec::TAG_STR => {
+                *pos += 1;
+                let len = codec::read_varint(bytes, pos)? as usize;
+                let end = pos
+                    .checked_add(len)
+                    .filter(|&e| e <= bytes.len())
+                    .ok_or_else(|| err("truncated string", *pos))?;
+                let s = std::str::from_utf8(&bytes[*pos..end])
+                    .map_err(|e| err(format!("string not utf-8: {e}"), *pos))?;
+                *pos = end;
+                Ok(ScanValue::Str(Cow::Borrowed(s)))
+            }
+            codec::TAG_ARR | codec::TAG_OBJ => {
+                let start = *pos;
+                codec::skip_value(bytes, pos)?;
+                Ok(ScanValue::Raw { bytes: &bytes[start..*pos], binary: true })
+            }
+            other => Err(err(format!("unknown value tag 0x{other:02x}"), *pos)),
+        }
+    }
+
+    // ---- json walk ------------------------------------------------------
+
+    fn scan_json(
+        &self,
+        names: &[&str],
+        out: &mut [Option<ScanValue<'a>>],
+    ) -> Result<(), ScanError> {
+        let b = self.bytes;
+        let mut pos = 0;
+        skip_ws(b, &mut pos);
+        expect(b, &mut pos, b'{')?;
+        skip_ws(b, &mut pos);
+        if peek(b, pos) == Some(b'}') {
+            return Ok(());
+        }
+        let mut remaining = names.len();
+        loop {
+            skip_ws(b, &mut pos);
+            let key = json_string(b, &mut pos)?;
+            skip_ws(b, &mut pos);
+            expect(b, &mut pos, b':')?;
+            skip_ws(b, &mut pos);
+            let slot = names
+                .iter()
+                .position(|n| key_matches(&key, n))
+                .filter(|&i| out[i].is_none());
+            match slot {
+                Some(i) if remaining > 0 => {
+                    out[i] = Some(capture_json(b, &mut pos)?);
+                    remaining -= 1;
+                }
+                _ => skip_json_value(b, &mut pos, 0)?,
+            }
+            skip_ws(b, &mut pos);
+            match bump(b, &mut pos) {
+                Some(b',') => {
+                    if remaining == 0 {
+                        return Ok(());
+                    }
+                }
+                Some(b'}') => return Ok(()),
+                _ => return Err(err("expected ',' or '}' in object", pos)),
+            }
+        }
+    }
+}
+
+/// A scanned JSON object key: raw bytes plus whether any escape was seen
+/// (escaped keys are compared after unescaping — the rare path).
+struct JsonKey<'a> {
+    raw: &'a [u8],
+    escaped: bool,
+}
+
+fn key_matches(key: &JsonKey<'_>, name: &str) -> bool {
+    if !key.escaped {
+        return key.raw == name.as_bytes();
+    }
+    match unescape(key.raw) {
+        Ok(s) => s == name,
+        Err(_) => false,
+    }
+}
+
+fn peek(b: &[u8], pos: usize) -> Option<u8> {
+    b.get(pos).copied()
+}
+
+fn bump(b: &[u8], pos: &mut usize) -> Option<u8> {
+    let v = peek(b, *pos);
+    if v.is_some() {
+        *pos += 1;
+    }
+    v
+}
+
+fn skip_ws(b: &[u8], pos: &mut usize) {
+    while matches!(peek(b, *pos), Some(b' ' | b'\t' | b'\n' | b'\r')) {
+        *pos += 1;
+    }
+}
+
+fn expect(b: &[u8], pos: &mut usize, want: u8) -> Result<(), ScanError> {
+    if peek(b, *pos) == Some(want) {
+        *pos += 1;
+        Ok(())
+    } else {
+        Err(err(format!("expected '{}'", want as char), *pos))
+    }
+}
+
+/// Scans a JSON string token (starting at `"`), returning its raw
+/// contents without unescaping. Escapes are validated just enough to find
+/// the closing quote safely.
+fn json_string<'a>(b: &'a [u8], pos: &mut usize) -> Result<JsonKey<'a>, ScanError> {
+    expect(b, pos, b'"')?;
+    let start = *pos;
+    let mut escaped = false;
+    loop {
+        match bump(b, pos) {
+            None => return Err(err("unterminated string", *pos)),
+            Some(b'"') => {
+                return Ok(JsonKey { raw: &b[start..*pos - 1], escaped });
+            }
+            Some(b'\\') => {
+                escaped = true;
+                if bump(b, pos).is_none() {
+                    return Err(err("unterminated escape", *pos));
+                }
+            }
+            Some(_) => {}
+        }
+    }
+}
+
+/// Unescapes a raw JSON string body (the bytes between the quotes).
+fn unescape(raw: &[u8]) -> Result<String, ScanError> {
+    let mut s = String::with_capacity(raw.len());
+    let mut pos = 0;
+    while let Some(c) = bump(raw, &mut pos) {
+        if c != b'\\' {
+            // Copy the longest escape-free run in one shot (multi-byte
+            // UTF-8 passes through untouched).
+            let start = pos - 1;
+            while matches!(peek(raw, pos), Some(c) if c != b'\\') {
+                pos += 1;
+            }
+            let chunk = std::str::from_utf8(&raw[start..pos])
+                .map_err(|e| err(format!("string not utf-8: {e}"), start))?;
+            s.push_str(chunk);
+            continue;
+        }
+        match bump(raw, &mut pos) {
+            Some(b'"') => s.push('"'),
+            Some(b'\\') => s.push('\\'),
+            Some(b'/') => s.push('/'),
+            Some(b'b') => s.push('\u{8}'),
+            Some(b'f') => s.push('\u{c}'),
+            Some(b'n') => s.push('\n'),
+            Some(b'r') => s.push('\r'),
+            Some(b't') => s.push('\t'),
+            Some(b'u') => {
+                let cp = hex4(raw, &mut pos)?;
+                let c = if (0xD800..0xDC00).contains(&cp) {
+                    if bump(raw, &mut pos) != Some(b'\\') || bump(raw, &mut pos) != Some(b'u') {
+                        return Err(err("expected low surrogate", pos));
+                    }
+                    let lo = hex4(raw, &mut pos)?;
+                    if !(0xDC00..0xE000).contains(&lo) {
+                        return Err(err("invalid low surrogate", pos));
+                    }
+                    char::from_u32(0x10000 + ((cp - 0xD800) << 10) + (lo - 0xDC00))
+                } else {
+                    char::from_u32(cp)
+                };
+                match c {
+                    Some(c) => s.push(c),
+                    None => return Err(err("invalid unicode escape", pos)),
+                }
+            }
+            _ => return Err(err("invalid escape sequence", pos)),
+        }
+    }
+    Ok(s)
+}
+
+fn hex4(b: &[u8], pos: &mut usize) -> Result<u32, ScanError> {
+    let mut v = 0u32;
+    for _ in 0..4 {
+        let c = bump(b, pos).ok_or_else(|| err("truncated \\u escape", *pos))?;
+        let d = (c as char)
+            .to_digit(16)
+            .ok_or_else(|| err("invalid hex digit in \\u escape", *pos))?;
+        v = v * 16 + d;
+    }
+    Ok(v)
+}
+
+/// Captures one JSON value as a [`ScanValue`], decoding scalars in place.
+fn capture_json<'a>(b: &'a [u8], pos: &mut usize) -> Result<ScanValue<'a>, ScanError> {
+    match peek(b, *pos) {
+        Some(b'n') => {
+            literal(b, pos, b"null")?;
+            Ok(ScanValue::Null)
+        }
+        Some(b't') => {
+            literal(b, pos, b"true")?;
+            Ok(ScanValue::Bool(true))
+        }
+        Some(b'f') => {
+            literal(b, pos, b"false")?;
+            Ok(ScanValue::Bool(false))
+        }
+        Some(b'"') => {
+            let key = json_string(b, pos)?;
+            if key.escaped {
+                Ok(ScanValue::Str(Cow::Owned(unescape(key.raw)?)))
+            } else {
+                let s = std::str::from_utf8(key.raw)
+                    .map_err(|e| err(format!("string not utf-8: {e}"), *pos))?;
+                Ok(ScanValue::Str(Cow::Borrowed(s)))
+            }
+        }
+        Some(c) if c == b'-' || c.is_ascii_digit() => {
+            let start = *pos;
+            skip_json_number(b, pos);
+            let text = std::str::from_utf8(&b[start..*pos])
+                .map_err(|e| err(format!("number not utf-8: {e}"), start))?;
+            text.parse::<f64>()
+                .map(ScanValue::Num)
+                .map_err(|_| err(format!("invalid number '{text}'"), start))
+        }
+        Some(b'{') | Some(b'[') => {
+            let start = *pos;
+            skip_json_value(b, pos, 0)?;
+            Ok(ScanValue::Raw { bytes: &b[start..*pos], binary: false })
+        }
+        Some(c) => Err(err(format!("unexpected character '{}'", c as char), *pos)),
+        None => Err(err("unexpected end of input", *pos)),
+    }
+}
+
+fn literal(b: &[u8], pos: &mut usize, word: &[u8]) -> Result<(), ScanError> {
+    if b[*pos..].starts_with(word) {
+        *pos += word.len();
+        Ok(())
+    } else {
+        Err(err("invalid literal", *pos))
+    }
+}
+
+fn skip_json_number(b: &[u8], pos: &mut usize) {
+    if peek(b, *pos) == Some(b'-') {
+        *pos += 1;
+    }
+    while matches!(peek(b, *pos), Some(c) if c.is_ascii_digit()) {
+        *pos += 1;
+    }
+    if peek(b, *pos) == Some(b'.') {
+        *pos += 1;
+        while matches!(peek(b, *pos), Some(c) if c.is_ascii_digit()) {
+            *pos += 1;
+        }
+    }
+    if matches!(peek(b, *pos), Some(b'e' | b'E')) {
+        *pos += 1;
+        if matches!(peek(b, *pos), Some(b'+' | b'-')) {
+            *pos += 1;
+        }
+        while matches!(peek(b, *pos), Some(c) if c.is_ascii_digit()) {
+            *pos += 1;
+        }
+    }
+}
+
+/// Advances past one JSON value without building anything. Depth-bounded
+/// like the tree parser.
+fn skip_json_value(b: &[u8], pos: &mut usize, depth: usize) -> Result<(), ScanError> {
+    const MAX_DEPTH: usize = 128;
+    if depth >= MAX_DEPTH {
+        return Err(err("maximum nesting depth exceeded", *pos));
+    }
+    skip_ws(b, pos);
+    match peek(b, *pos) {
+        Some(b'n') => literal(b, pos, b"null"),
+        Some(b't') => literal(b, pos, b"true"),
+        Some(b'f') => literal(b, pos, b"false"),
+        Some(b'"') => json_string(b, pos).map(|_| ()),
+        Some(c) if c == b'-' || c.is_ascii_digit() => {
+            skip_json_number(b, pos);
+            Ok(())
+        }
+        Some(b'[') => {
+            *pos += 1;
+            skip_ws(b, pos);
+            if peek(b, *pos) == Some(b']') {
+                *pos += 1;
+                return Ok(());
+            }
+            loop {
+                skip_json_value(b, pos, depth + 1)?;
+                skip_ws(b, pos);
+                match bump(b, pos) {
+                    Some(b',') => continue,
+                    Some(b']') => return Ok(()),
+                    _ => return Err(err("expected ',' or ']' in array", *pos)),
+                }
+            }
+        }
+        Some(b'{') => {
+            *pos += 1;
+            skip_ws(b, pos);
+            if peek(b, *pos) == Some(b'}') {
+                *pos += 1;
+                return Ok(());
+            }
+            loop {
+                skip_ws(b, pos);
+                json_string(b, pos)?;
+                skip_ws(b, pos);
+                expect(b, pos, b':')?;
+                skip_json_value(b, pos, depth + 1)?;
+                skip_ws(b, pos);
+                match bump(b, pos) {
+                    Some(b',') => continue,
+                    Some(b'}') => return Ok(()),
+                    _ => return Err(err("expected ',' or '}' in object", *pos)),
+                }
+            }
+        }
+        Some(c) => Err(err(format!("unexpected character '{}'", c as char), *pos)),
+        None => Err(err("unexpected end of input", *pos)),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::codec::encode;
+    use crate::util::json::Json;
+
+    fn sample() -> Json {
+        Json::obj(vec![
+            ("attempt", Json::int(3)),
+            ("duration_secs", Json::Num(0.125)),
+            ("event", Json::str("succeeded")),
+            ("nested", Json::obj(vec![("deep", Json::arr(vec![Json::int(1), Json::str("x")]))])),
+            ("ok", Json::Bool(true)),
+            ("task", Json::str("abc123")),
+            ("ts", Json::Num(1_700_000_000.5)),
+            ("zero", Json::Null),
+        ])
+    }
+
+    fn both_encodings(doc: &Json) -> [Vec<u8>; 2] {
+        [encode(doc), doc.to_string().into_bytes()]
+    }
+
+    #[test]
+    fn scalar_fields_extract_identically_from_both_formats() {
+        for bytes in both_encodings(&sample()) {
+            let s = Scanner::new(&bytes).unwrap();
+            assert_eq!(s.field("event").unwrap().unwrap().as_str(), Some("succeeded"));
+            assert_eq!(s.field("attempt").unwrap().unwrap().as_i64(), Some(3));
+            assert_eq!(s.field("duration_secs").unwrap().unwrap().as_f64(), Some(0.125));
+            assert_eq!(s.field("ok").unwrap().unwrap().as_bool(), Some(true));
+            assert!(s.field("zero").unwrap().unwrap().is_null());
+            assert_eq!(s.field("ts").unwrap().unwrap().as_f64(), Some(1_700_000_000.5));
+            assert!(s.field("missing").unwrap().is_none());
+        }
+    }
+
+    #[test]
+    fn multi_field_single_pass() {
+        for bytes in both_encodings(&sample()) {
+            let s = Scanner::new(&bytes).unwrap();
+            let [ev, task, attempt, nope] =
+                s.fields(["event", "task", "attempt", "nope"]).unwrap();
+            assert_eq!(ev.unwrap().as_str(), Some("succeeded"));
+            assert_eq!(task.unwrap().as_str(), Some("abc123"));
+            assert_eq!(attempt.unwrap().as_i64(), Some(3));
+            assert!(nope.is_none());
+        }
+    }
+
+    #[test]
+    fn composite_fields_materialize_correctly() {
+        let doc = sample();
+        for bytes in both_encodings(&doc) {
+            let s = Scanner::new(&bytes).unwrap();
+            let nested = s.field("nested").unwrap().unwrap();
+            assert!(matches!(nested, ScanValue::Raw { .. }));
+            assert_eq!(&nested.materialize().unwrap(), doc.get("nested").unwrap());
+        }
+    }
+
+    #[test]
+    fn single_scalar_field_path_allocates_zero_tree_nodes() {
+        // The tentpole claim: probing one scalar field must not build any
+        // Json nodes, however large the rest of the document is.
+        let mut big = vec![("needle", Json::str("found"))];
+        let filler: Vec<(String, Json)> = (0..200)
+            .map(|i| {
+                (
+                    format!("filler{i:03}"),
+                    Json::obj(vec![("xs", Json::arr((0..20).map(Json::int).collect()))]),
+                )
+            })
+            .collect();
+        for (k, v) in &filler {
+            big.push((k.as_str(), v.clone()));
+        }
+        let doc = Json::obj(big);
+        for bytes in both_encodings(&doc) {
+            let before = materialized_count();
+            let s = Scanner::new(&bytes).unwrap();
+            let v = s.field("needle").unwrap().unwrap();
+            assert_eq!(v.as_str(), Some("found"));
+            assert_eq!(
+                materialized_count(),
+                before,
+                "scalar probe must not materialize any tree"
+            );
+            // Borrowed straight from the input on both formats.
+            assert!(matches!(v, ScanValue::Str(Cow::Borrowed(_))));
+        }
+    }
+
+    #[test]
+    fn json_escapes_and_whitespace_are_handled() {
+        let text = " {\n  \"a\\nb\" : \"line\\u0031\\n\\\"q\\\"\",\n  \"plain\": 2e3 ,\n  \"s\": \"😀é\"\n} ";
+        let s = Scanner::new(text.as_bytes()).unwrap();
+        assert_eq!(s.field("a\nb").unwrap().unwrap().as_str(), Some("line1\n\"q\""));
+        assert_eq!(s.field("plain").unwrap().unwrap().as_f64(), Some(2000.0));
+        assert_eq!(s.field("s").unwrap().unwrap().as_str(), Some("😀é"));
+    }
+
+    #[test]
+    fn surrogate_pair_escapes_unescape() {
+        let text = r#"{"emoji": "😀"}"#;
+        let s = Scanner::new(text.as_bytes()).unwrap();
+        assert_eq!(s.field("emoji").unwrap().unwrap().as_str(), Some("😀"));
+    }
+
+    #[test]
+    fn non_object_documents_are_rejected() {
+        assert!(Scanner::new(b"[1,2]").is_err());
+        assert!(Scanner::new(b"42").is_err());
+        assert!(Scanner::new(b"").is_err());
+        assert!(Scanner::new(&encode(&Json::arr(vec![Json::int(1)]))).is_err());
+    }
+
+    #[test]
+    fn corrupt_documents_error_not_panic() {
+        // Truncated binary object mid-entry.
+        let full = encode(&sample());
+        for cut in 3..full.len() {
+            let s = Scanner::new(&full[..cut]).unwrap();
+            // Either the field is cleanly absent (cut before it) or the
+            // walk errors; it must never panic or fabricate a value.
+            let _ = s.field("zero");
+        }
+        // Malformed JSON bodies.
+        for bad in ["{\"a\": }", "{\"a\" 1}", "{\"a\": tru}", "{\"a\": \"x"] {
+            let s = Scanner::new(bad.as_bytes()).unwrap();
+            assert!(s.field("a").is_err(), "{bad} must error");
+        }
+    }
+
+    #[test]
+    fn duplicate_keys_keep_first() {
+        let s = Scanner::new(br#"{"k": 1, "k": 2}"#).unwrap();
+        assert_eq!(s.field("k").unwrap().unwrap().as_i64(), Some(1));
+    }
+
+    #[test]
+    fn early_exit_after_last_requested_field() {
+        // Garbage after the requested fields is never reached: the walk
+        // stops as soon as every slot fills.
+        let text = br#"{"a": 1, "b": 2, "broken": <<<}"#;
+        let s = Scanner::new(text).unwrap();
+        let [a, b] = s.fields(["a", "b"]).unwrap();
+        assert_eq!(a.unwrap().as_i64(), Some(1));
+        assert_eq!(b.unwrap().as_i64(), Some(2));
+    }
+}

@@ -236,6 +236,97 @@ fn standing_pool_serves_consecutive_runs_with_the_same_worker() {
     assert_eq!(pool.registered_count(), 2, "initial registration + one re-registration");
 }
 
+/// Reads one frame the way a genuine v2 peer would: length prefix, then
+/// a payload that must be JSON text — a v2 binary has no idea what the
+/// binary magic means, so receiving it is an instant failure here.
+/// Returns `None` on a clean close.
+fn read_v2_frame(r: &mut dyn std::io::Read) -> Option<memento::ipc::proto::Msg> {
+    let mut len = [0u8; 4];
+    if r.read_exact(&mut len).is_err() {
+        return None; // connection closed after Shutdown
+    }
+    let mut payload = vec![0u8; u32::from_be_bytes(len) as usize];
+    r.read_exact(&mut payload).unwrap();
+    assert_ne!(
+        payload[0],
+        memento::util::codec::BINARY_MAGIC,
+        "v3 supervisor sent a binary frame to a v2 peer"
+    );
+    let text = std::str::from_utf8(&payload).expect("v2 frames are UTF-8 JSON");
+    memento::ipc::proto::Msg::from_json(&memento::util::json::parse(text).unwrap())
+}
+
+/// Backward compatibility with pre-binary peers: a faithful v2 worker —
+/// registers with `protocol: 2`, writes only JSON frames, panics on any
+/// binary frame, and (like the shipped v2 code) would reject a Hello
+/// that does not say v2 — completes an entire run against a v3 pool
+/// whose supervisor defaults to binary framing.
+#[test]
+fn v2_json_only_worker_completes_a_run_against_a_v3_pool() {
+    use memento::ipc::proto::{write_frame, Msg, WireResult};
+
+    let pool = tcp_pool();
+    let endpoint = pool.endpoint().clone();
+    let worker = std::thread::spawn(move || -> usize {
+        let mut stream = endpoint.connect().unwrap();
+        let mut writer = stream.try_clone_stream().unwrap();
+        write_frame(
+            &mut writer,
+            &Msg::Ready {
+                worker: 91,
+                pid: std::process::id() as u64,
+                spawn: 0,
+                protocol: 2, // the v2 declaration under test
+                token: Some(TOKEN.to_string()),
+            },
+        )
+        .unwrap();
+        let mut tasks = 0usize;
+        loop {
+            match read_v2_frame(&mut stream) {
+                Some(Msg::Hello { protocol, .. }) => {
+                    // The shipped v2 worker errors on `protocol != 2`; the
+                    // v3 supervisor must advertise the negotiated version.
+                    assert_eq!(protocol, 2, "v2 worker would reject this Hello");
+                }
+                Some(Msg::Task { index, attempt, params, .. }) => {
+                    let i = params
+                        .iter()
+                        .find(|(k, _)| k == "i")
+                        .and_then(|(_, v)| v.to_json().as_i64())
+                        .unwrap();
+                    tasks += 1;
+                    write_frame(
+                        &mut writer,
+                        &Msg::Outcome {
+                            index,
+                            attempt,
+                            duration_secs: 0.01,
+                            result: WireResult::Ok { value: Json::int(i * 10) },
+                        },
+                    )
+                    .unwrap();
+                }
+                Some(Msg::Shutdown) | None => break,
+                other => panic!("unexpected frame at a v2 worker: {other:?}"),
+            }
+        }
+        tasks
+    });
+
+    let results = remote_memento(&pool, 1).run(&matrix(5)).unwrap();
+    pool.shutdown();
+    assert_eq!(worker.join().unwrap(), 5, "the v2 worker executed every task");
+
+    assert_eq!(results.len(), 5);
+    assert_eq!(results.n_failed(), 0);
+    for o in results.iter() {
+        let i = o.spec.get("i").and_then(|v| v.to_json().as_i64()).unwrap();
+        assert_eq!(o.value, Some(Json::int(i * 10)));
+    }
+    assert_eq!(pool.rejected_count(), 0, "v2 registration must be admitted");
+}
+
 /// A remote run with no registered workers must fail explicitly (every
 /// slot retires after its lease window) rather than hang — nothing is
 /// silently dropped.
