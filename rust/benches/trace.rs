@@ -1,0 +1,109 @@
+//! Bench E8: span-tracing overhead — the price of `--trace-dir`.
+//!
+//! Tracing records five span events per executed attempt into striped
+//! lock-free-ish buffers drained by one sink thread; the scheduler hot
+//! path only stamps a monotonic timestamp and pushes into a striped
+//! `Vec`. This bench runs the same no-op matrix (the worst case: real
+//! experiment functions bury the stamps under seconds of compute) with
+//! tracing off and on, and appends `trace_overhead_off_8w_<n>tasks` /
+//! `trace_overhead_on_8w_<n>tasks` rows to `BENCH_sched_cache.json`.
+//!
+//! Row schema (per run, under `extras`):
+//!   - `trace_overhead_off_8w_<n>tasks`: `{ us_per_task }`
+//!   - `trace_overhead_on_8w_<n>tasks`:  `{ us_per_task, overhead_us_per_task,
+//!      on_over_off, spans_written }`
+//!
+//! Run on a toolchain host from `rust/`:
+//! `cargo bench --bench trace` (the tier-1 container has no cargo).
+
+use memento::bench::{sched_cache_trajectory_path, Suite};
+use memento::config::matrix::ConfigMatrix;
+use memento::config::value::pv_int;
+use memento::coordinator::memento::Memento;
+use memento::obs::trace::{read_trace, TRACE_FILE};
+use memento::prelude::{MementoError, TaskContext};
+use memento::util::fs::TempDir;
+use memento::util::json::Json;
+
+fn exp(ctx: &TaskContext) -> Result<Json, MementoError> {
+    Ok(Json::int(ctx.param_i64("i")?))
+}
+
+fn flat_matrix(n: usize) -> ConfigMatrix {
+    ConfigMatrix::builder()
+        .param("i", (0..n as i64).map(pv_int).collect())
+        .build()
+        .unwrap()
+}
+
+fn main() {
+    let mut suite = Suite::new("E8 — span-tracing overhead");
+    let mut extras: Vec<(String, Json)> = Vec::new();
+
+    let workers = 8usize;
+    let n = 400usize;
+    let matrix = flat_matrix(n);
+
+    let off = suite
+        .bench_with_setup(
+            format!("{n} no-op tasks, {workers} threads, trace off"),
+            1,
+            5,
+            || (),
+            |_| {
+                let r = Memento::new(exp).workers(workers).run(&matrix).unwrap();
+                assert_eq!(r.len(), n);
+            },
+        )
+        .clone();
+    suite.note(format!("{:.1}µs/task baseline", off.mean / n as f64 * 1e6));
+    extras.push((
+        format!("trace_overhead_off_{workers}w_{n}tasks"),
+        Json::obj(vec![("us_per_task", Json::Num(off.mean / n as f64 * 1e6))]),
+    ));
+
+    // Each iteration traces into a fresh dir so the sink always starts
+    // from an empty file; the TempDir drop cleans up after the timing.
+    let mut spans_written = 0u64;
+    let on = suite
+        .bench_with_setup(
+            format!("{n} no-op tasks, {workers} threads, trace on"),
+            1,
+            5,
+            || TempDir::new("bench-trace").unwrap(),
+            |td| {
+                let r = Memento::new(exp)
+                    .workers(workers)
+                    .trace_to(td.path())
+                    .run(&matrix)
+                    .unwrap();
+                assert_eq!(r.len(), n);
+                let trace = read_trace(&td.path().join(TRACE_FILE)).unwrap();
+                assert_eq!(trace.dropped, Some(0), "bench run must not drop spans");
+                spans_written = trace.spans.len() as u64;
+            },
+        )
+        .clone();
+    let overhead_us = (on.mean - off.mean) / n as f64 * 1e6;
+    suite.note(format!(
+        "{:.1}µs/task, +{overhead_us:.1}µs/task over baseline ({} spans)",
+        on.mean / n as f64 * 1e6,
+        spans_written
+    ));
+    extras.push((
+        format!("trace_overhead_on_{workers}w_{n}tasks"),
+        Json::obj(vec![
+            ("us_per_task", Json::Num(on.mean / n as f64 * 1e6)),
+            ("overhead_us_per_task", Json::Num(overhead_us)),
+            ("on_over_off", Json::Num(on.mean / off.mean)),
+            ("spans_written", Json::int(spans_written as i64)),
+        ]),
+    ));
+    println!(
+        "E8 headline: tracing costs {overhead_us:.1}µs/task on no-op tasks ({:.2}x baseline)",
+        on.mean / off.mean
+    );
+
+    suite.write_trajectory(&sched_cache_trajectory_path(), extras);
+    suite.finish();
+}

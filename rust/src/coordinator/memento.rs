@@ -64,6 +64,8 @@ use crate::coordinator::scheduler::{
     ExecBackend, SchedulerOptions, SpecFilter, SpecSource, StreamHooks,
 };
 use crate::coordinator::task::{task_seed, TaskContext, TaskId, TaskSpec};
+use crate::obs::snapshot::{write_snapshot, FleetStats, MetricsSnapshot};
+use crate::obs::trace::{thread_worker_id, SpanState, Tracer};
 use crate::util::codec::WireFormat;
 use crate::util::json::Json;
 use crate::util::time::Stopwatch;
@@ -114,6 +116,20 @@ pub struct RunOptions {
     /// manifest/progress). Binary by default; readers always auto-detect,
     /// and peers that only speak JSON get JSON regardless.
     pub wire: WireFormat,
+    /// Span-trace output directory. When set, every task attempt's state
+    /// timeline (`queued → dispatched|restored → exec_start → exec_end →
+    /// recorded`) is recorded into `<dir>/trace.jsonl` in the run's
+    /// [`RunOptions::wire`] format (see [`crate::obs::trace`]). `None`
+    /// (the default) disables tracing entirely — no tracer is created
+    /// and the record paths are a skipped `Option` check.
+    pub trace_dir: Option<PathBuf>,
+    /// Live-telemetry interval. When set, a sampler thread emits a
+    /// [`crate::obs::snapshot::MetricsSnapshot`] as
+    /// [`RunEvent::Telemetry`] at this cadence. Telemetry events are
+    /// coalescable: under a bounded event channel they collapse rather
+    /// than backpressure the run. `None` (the default) disables the
+    /// sampler.
+    pub telemetry_every: Option<Duration>,
 }
 
 impl Default for RunOptions {
@@ -130,6 +146,8 @@ impl Default for RunOptions {
             backend: ExecBackend::Threads,
             events: ChannelPolicy::Unbounded,
             wire: WireFormat::default(),
+            trace_dir: None,
+            telemetry_every: None,
         }
     }
 }
@@ -361,6 +379,27 @@ impl Memento {
         self
     }
 
+    /// Enables span tracing: every task attempt's state timeline is
+    /// recorded (across all three backends — worker-side timestamps on
+    /// the process/remote tiers are clock-mapped onto one merged
+    /// timeline) and written to `<dir>/trace.jsonl` in the configured
+    /// wire format. The final [`crate::obs::snapshot::MetricsSnapshot`]
+    /// lands beside it for `memento status`. Analyze afterwards with
+    /// `memento trace summarize <dir>` or export to Perfetto with
+    /// `memento trace export <dir> --format chrome`.
+    pub fn trace_to(mut self, dir: impl Into<PathBuf>) -> Self {
+        self.options.trace_dir = Some(dir.into());
+        self
+    }
+
+    /// Emits a live [`crate::obs::snapshot::MetricsSnapshot`] as
+    /// [`RunEvent::Telemetry`] every `interval` (counters, timing
+    /// percentiles, queue depth, observed rate, per-worker fleet state).
+    pub fn telemetry_every(mut self, interval: Duration) -> Self {
+        self.options.telemetry_every = Some(interval);
+        self
+    }
+
     /// Enables the append-only JSONL event journal at `path`.
     pub fn with_journal(mut self, path: impl Into<PathBuf>) -> Self {
         self.journal = Some(Arc::new(
@@ -540,6 +579,37 @@ impl RunWorker {
         let version = self.options.version.clone();
         let settings = Arc::new(self.matrix.settings.clone());
 
+        // Observability: the tracer (when `trace_dir` is set) records every
+        // attempt's span timeline; `FleetStats` aggregates per-worker
+        // liveness and completions for telemetry snapshots. Both are `None`
+        // unless asked for — the disabled paths are a skipped Option check.
+        let tracer: Option<Arc<Tracer>> = match &self.options.trace_dir {
+            None => None,
+            Some(dir) => match Tracer::create(dir, self.options.wire) {
+                Ok(t) => Some(Arc::new(t)),
+                Err(e) => {
+                    // `RunComplete` is documented as always the terminal
+                    // event, so emit an empty summary before erroring.
+                    self.sink.emit(RunEvent::RunComplete(RunSummary {
+                        total: 0,
+                        succeeded: 0,
+                        failed: 0,
+                        from_cache: 0,
+                        skipped: 0,
+                        wall_secs: wall.elapsed_secs(),
+                        events_coalesced: self.sink.coalesced_count(),
+                        aborted: true,
+                        cancelled: false,
+                        metrics: None,
+                    }));
+                    return Err(MementoError::storage(format!("create trace dir: {e}")));
+                }
+            },
+        };
+        let fleet: Option<Arc<FleetStats>> =
+            (self.options.trace_dir.is_some() || self.options.telemetry_every.is_some())
+                .then(|| Arc::new(FleetStats::new()));
+
         // Notification ordering gate: `RunStarted` carries exact totals,
         // which a streaming run only knows once the expansion is
         // exhausted. Task-level notifications raised before that moment
@@ -554,6 +624,36 @@ impl RunWorker {
             .options
             .progress_interval
             .map(|iv| ProgressReporter::start(Arc::clone(&progress), iv, false));
+
+        // Live-telemetry sampler: a park-based loop (so the final join is
+        // prompt) that captures a MetricsSnapshot each interval and emits
+        // it as a coalescable Telemetry event.
+        let run_start = std::time::Instant::now();
+        let telemetry_stop = Arc::new(AtomicBool::new(false));
+        let telemetry = self.options.telemetry_every.and_then(|iv| {
+            let stop = Arc::clone(&telemetry_stop);
+            let sink = self.sink.clone();
+            let metrics = Arc::clone(&self.metrics);
+            let progress = Arc::clone(&progress);
+            let fleet = fleet.clone();
+            std::thread::Builder::new()
+                .name("memento-telemetry".into())
+                .spawn(move || {
+                    while !stop.load(Ordering::SeqCst) {
+                        std::thread::park_timeout(iv);
+                        if stop.load(Ordering::SeqCst) {
+                            break;
+                        }
+                        sink.emit(RunEvent::Telemetry(MetricsSnapshot::capture(
+                            &metrics,
+                            Some(&*progress),
+                            fleet.as_deref(),
+                            run_start.elapsed().as_secs_f64(),
+                        )));
+                    }
+                })
+                .ok()
+        });
 
         let outcomes: Arc<Mutex<Vec<TaskOutcome>>> = Arc::new(Mutex::new(Vec::new()));
         let restored = Arc::new(AtomicUsize::new(0));
@@ -636,13 +736,25 @@ impl RunWorker {
             let resuming = self.resuming;
             let deliver_restored = Arc::clone(&deliver_restored);
             let planner_error = Arc::clone(&planner_error);
+            let tracer = tracer.clone();
             Arc::new(move |spec: TaskSpec| {
+                // A restored task never executes; its timeline is three
+                // instantaneous states on the pulling worker's thread,
+                // with attempt 0 marking "no execution happened".
+                let trace_restored = |spec: &TaskSpec| {
+                    if let Some(t) = &tracer {
+                        t.record(spec.index, 0, SpanState::Queued, None, Some(spec.label()));
+                        t.record(spec.index, 0, SpanState::Restored, None, None);
+                        t.record(spec.index, 0, SpanState::Recorded, None, None);
+                    }
+                };
                 let id = spec.id(&version);
                 // (a) resumed manifest
                 if resuming {
                     if let Some(entry) = checkpoint.as_ref().and_then(|ck| ck.entry(&id)) {
                         if entry.succeeded() {
                             metrics.tasks_cached.inc();
+                            trace_restored(&spec);
                             deliver_restored(TaskOutcome {
                                 spec,
                                 id,
@@ -675,6 +787,7 @@ impl RunWorker {
                             j.record(&Event::TaskRestored { id: id.clone() });
                         }
                         metrics.tasks_cached.inc();
+                        trace_restored(&spec);
                         deliver_restored(TaskOutcome {
                             spec,
                             id,
@@ -733,6 +846,7 @@ impl RunWorker {
                     self.checkpoint.clone(),
                     version.clone(),
                     notifier.clone(),
+                    tracer.clone(),
                 );
                 let sched = SchedulerOptions {
                     workers: self.options.workers,
@@ -755,6 +869,7 @@ impl RunWorker {
                         progress: Some(Arc::clone(&progress)),
                         metrics: Some(Arc::clone(&self.metrics)),
                         cancel: Some(Arc::clone(&self.cancel)),
+                        fleet: fleet.clone(),
                     },
                 );
                 Ok((report.aborted, report.cancelled, report.skipped, report.drain_truncated))
@@ -770,6 +885,8 @@ impl RunWorker {
                 Arc::clone(&skipped_ctr),
                 drained_hook,
                 notifier.clone(),
+                tracer.clone(),
+                fleet.clone(),
             ),
             ExecBackend::Remote { addr, workers, task_timeout } => self.run_supervised(
                 raw_source,
@@ -782,8 +899,18 @@ impl RunWorker {
                 Arc::clone(&skipped_ctr),
                 drained_hook,
                 notifier.clone(),
+                tracer.clone(),
+                fleet.clone(),
             ),
         };
+        // Stop the telemetry sampler before any terminal event is emitted:
+        // `RunComplete` is documented as the last event on the channel.
+        telemetry_stop.store(true, Ordering::SeqCst);
+        if let Some(handle) = telemetry {
+            handle.thread().unpark();
+            let _ = handle.join();
+        }
+
         let (aborted, cancelled, skipped_count, drain_truncated) = match dispatched {
             Ok(t) => t,
             Err(e) => {
@@ -804,7 +931,11 @@ impl RunWorker {
                     events_coalesced: self.sink.coalesced_count(),
                     aborted: true,
                     cancelled: false,
+                    metrics: None,
                 }));
+                if let Some(t) = &tracer {
+                    let _ = t.finish(); // best-effort footer on the abort path
+                }
                 return Err(e);
             }
         };
@@ -818,6 +949,12 @@ impl RunWorker {
                 ck.flush()?;
                 self.metrics.checkpoint_flushes.inc();
             }
+            // Seal the trace: joins the sink thread and writes the footer
+            // (span/drop totals) readers use to verify completeness.
+            if let Some(t) = &tracer {
+                t.finish()
+                    .map_err(|e| MementoError::storage(format!("finalize trace: {e}")))?;
+            }
             match planner_error.lock().unwrap().take() {
                 Some(e) => Err(e),
                 None => Ok(()),
@@ -829,6 +966,19 @@ impl RunWorker {
         let total = progress.total() + from_cache;
         let succeeded = results.successes().count();
         let failed = results.n_failed();
+
+        // Final telemetry snapshot: carried on the terminal event (and
+        // thus the CLI's `run_complete` ndjson line) and persisted beside
+        // the trace for `memento status`.
+        let final_metrics = MetricsSnapshot::capture(
+            &self.metrics,
+            Some(&*progress),
+            fleet.as_deref(),
+            wall.elapsed_secs(),
+        );
+        if let Some(dir) = &self.options.trace_dir {
+            let _ = write_snapshot(dir, &final_metrics, self.options.wire);
+        }
         if storage_result.is_ok() {
             if let Some(g) = &gate {
                 // A run cancelled before planning finished never opened
@@ -856,6 +1006,7 @@ impl RunWorker {
             events_coalesced: self.sink.coalesced_count(),
             aborted,
             cancelled,
+            metrics: Some(final_metrics),
         }));
 
         storage_result?;
@@ -894,6 +1045,8 @@ impl RunWorker {
         skipped_ctr: Arc<AtomicUsize>,
         drained_hook: Box<dyn FnOnce() + Send + Sync>,
         notifier: Option<Arc<dyn NotificationProvider>>,
+        tracer: Option<Arc<Tracer>>,
+        fleet: Option<Arc<FleetStats>>,
     ) -> Result<(bool, bool, usize, bool), MementoError> {
         use crate::ipc::pool::{PoolOptions, WorkerPool};
         use crate::ipc::supervisor::{self, SupervisorHooks, SupervisorOptions, WorkerSource};
@@ -1034,6 +1187,8 @@ impl RunWorker {
                 cancel: Some(Arc::clone(&self.cancel)),
                 restore_filter: Some(restore_filter),
                 on_source_drained: Some(drained_hook),
+                tracer,
+                fleet,
             },
             worker_source,
         );
@@ -1066,6 +1221,8 @@ impl RunWorker {
         _skipped_ctr: Arc<AtomicUsize>,
         _drained_hook: Box<dyn FnOnce() + Send + Sync>,
         _notifier: Option<Arc<dyn NotificationProvider>>,
+        _tracer: Option<Arc<Tracer>>,
+        _fleet: Option<Arc<FleetStats>>,
     ) -> Result<(bool, bool, usize, bool), MementoError> {
         Err(MementoError::ipc(
             "ExecBackend::Processes / ExecBackend::Remote require a unix platform",
@@ -1081,6 +1238,7 @@ impl RunWorker {
         checkpoint: Option<Arc<CheckpointStore>>,
         version: String,
         notifier: Option<Arc<dyn NotificationProvider>>,
+        tracer: Option<Arc<Tracer>>,
     ) -> crate::coordinator::scheduler::Job {
         let exp_fn = Arc::clone(&self.exp_fn);
         let cache = self.cache.clone();
@@ -1094,6 +1252,7 @@ impl RunWorker {
             let id = spec.id(&version);
             let seed = task_seed(run_seed, &id);
             let sw = Stopwatch::start();
+            let worker = thread_worker_id();
             metrics.tasks_total.inc();
 
             let progress_sink: Option<Arc<dyn Fn(&TaskId, &Json) + Send + Sync>> =
@@ -1130,7 +1289,18 @@ impl RunWorker {
                     id: id.clone(),
                     attempt,
                 });
+                if let Some(t) = &tracer {
+                    // An in-process attempt has no separate dispatch hop:
+                    // Queued and Dispatched collapse onto the worker
+                    // thread's pickup, and exec brackets the closure call.
+                    t.record(spec.index, attempt, SpanState::Queued, None, Some(spec.label()));
+                    t.record(spec.index, attempt, SpanState::Dispatched, Some(worker), None);
+                    t.record(spec.index, attempt, SpanState::ExecStart, Some(worker), None);
+                }
                 let exec = catch_unwind(AssertUnwindSafe(|| exp_fn(&ctx)));
+                if let Some(t) = &tracer {
+                    t.record(spec.index, attempt, SpanState::ExecEnd, Some(worker), None);
+                }
                 match exec {
                     Ok(Ok(v)) => break Some(v),
                     Ok(Err(e)) => {
@@ -1165,7 +1335,7 @@ impl RunWorker {
             let duration = sw.elapsed_secs();
             metrics.exec_time.record(sw.elapsed());
 
-            match value {
+            let outcome = match value {
                 Some(v) => {
                     metrics.tasks_succeeded.inc();
                     if let Some(j) = &journal {
@@ -1219,7 +1389,13 @@ impl RunWorker {
                         attempts: attempt,
                     }
                 }
+            };
+            if let Some(t) = &tracer {
+                // Recorded lands after cache/checkpoint persistence, so
+                // the span covers the full record pipeline.
+                t.record(spec.index, attempt, SpanState::Recorded, None, None);
             }
+            outcome
         })
     }
 }

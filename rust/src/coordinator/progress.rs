@@ -143,6 +143,21 @@ impl ProgressState {
         )
     }
 
+    /// The *windowed* executed-completion rate (tasks/second): the pace
+    /// of the last [`ETA_WINDOW`] completions, `None` until two samples
+    /// with measurable spacing exist. This is the observed rate the ETA
+    /// extrapolates from and the one telemetry snapshots report.
+    pub fn recent_rate(&self) -> Option<f64> {
+        let recent = self.recent.lock().unwrap_or_else(|e| e.into_inner());
+        match (recent.front(), recent.back()) {
+            (Some(first), Some(last)) if recent.len() >= 2 => {
+                let rate = (recent.len() - 1) as f64 / (*last - *first).as_secs_f64();
+                (rate.is_finite() && rate > 0.0).then_some(rate)
+            }
+            _ => None,
+        }
+    }
+
     /// Estimated seconds remaining, `None` until at least one **executed**
     /// task has finished (or while the streaming total is still being
     /// discovered). Restored tasks are near-instant and carry no
@@ -165,19 +180,9 @@ impl ProgressState {
         if executed == 0 || total == 0 || !self.planning_complete() {
             return None;
         }
-        let windowed = {
-            let recent = self.recent.lock().unwrap_or_else(|e| e.into_inner());
-            match (recent.front(), recent.back()) {
-                (Some(first), Some(last)) if recent.len() >= 2 => {
-                    Some((recent.len() - 1) as f64 / (*last - *first).as_secs_f64())
-                }
-                _ => None,
-            }
-        };
-        let rate = match windowed {
-            Some(r) if r.is_finite() && r > 0.0 => r,
-            _ => executed as f64 / self.start.elapsed().as_secs_f64(),
-        };
+        let rate = self
+            .recent_rate()
+            .unwrap_or_else(|| executed as f64 / self.start.elapsed().as_secs_f64());
         if !rate.is_finite() || rate <= 0.0 {
             return None;
         }
@@ -260,6 +265,18 @@ mod tests {
         p.mark_done();
         p.mark_done();
         assert_eq!(p.snapshot(), (2, 10));
+    }
+
+    #[test]
+    fn recent_rate_needs_two_spaced_samples() {
+        let p = ProgressState::new(4);
+        assert!(p.recent_rate().is_none());
+        p.mark_done();
+        assert!(p.recent_rate().is_none(), "one sample has no spacing");
+        std::thread::sleep(Duration::from_millis(2));
+        p.mark_done();
+        let rate = p.recent_rate().expect("two spaced completions");
+        assert!(rate.is_finite() && rate > 0.0, "rate={rate}");
     }
 
     #[test]

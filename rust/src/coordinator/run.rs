@@ -42,6 +42,7 @@ use crate::coordinator::error::MementoError;
 use crate::coordinator::notify::{Notification, NotificationProvider};
 use crate::coordinator::results::{ResultSet, TaskOutcome};
 use crate::coordinator::task::TaskId;
+use crate::obs::snapshot::MetricsSnapshot;
 use crate::util::json::Json;
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::mpsc::{Receiver, Sender, SyncSender, TryRecvError, TrySendError};
@@ -119,6 +120,11 @@ pub enum RunEvent {
         /// What happened, human-readable.
         message: String,
     },
+    /// A periodic live telemetry sample (enabled via
+    /// `Memento::telemetry_every`). Coalescable under a bounded channel —
+    /// every snapshot carries cumulative counters, so a dropped sample
+    /// loses nothing the next delivered one doesn't restate.
+    Telemetry(MetricsSnapshot),
     /// Terminal event: always the last event of a run.
     RunComplete(RunSummary),
 }
@@ -146,6 +152,10 @@ pub struct RunSummary {
     pub aborted: bool,
     /// True when [`Run::cancel`] stopped the run early.
     pub cancelled: bool,
+    /// The final metrics snapshot (counters, percentiles, per-worker
+    /// rows) captured as the run finished; `None` only on early error
+    /// paths that never started executing.
+    pub metrics: Option<MetricsSnapshot>,
 }
 
 impl RunEvent {
@@ -188,18 +198,28 @@ impl RunEvent {
                 ("slot", Json::int(*slot as i64)),
                 ("message", Json::str(message.clone())),
             ]),
-            RunEvent::RunComplete(s) => Json::obj(vec![
-                ("event", Json::str("run_complete")),
-                ("total", Json::int(s.total as i64)),
-                ("succeeded", Json::int(s.succeeded as i64)),
-                ("failed", Json::int(s.failed as i64)),
-                ("from_cache", Json::int(s.from_cache as i64)),
-                ("skipped", Json::int(s.skipped as i64)),
-                ("wall_secs", Json::Num(s.wall_secs)),
-                ("events_coalesced", Json::int(s.events_coalesced as i64)),
-                ("aborted", Json::Bool(s.aborted)),
-                ("cancelled", Json::Bool(s.cancelled)),
+            RunEvent::Telemetry(snap) => Json::obj(vec![
+                ("event", Json::str("telemetry")),
+                ("metrics", snap.to_json()),
             ]),
+            RunEvent::RunComplete(s) => {
+                let mut fields = vec![
+                    ("event", Json::str("run_complete")),
+                    ("total", Json::int(s.total as i64)),
+                    ("succeeded", Json::int(s.succeeded as i64)),
+                    ("failed", Json::int(s.failed as i64)),
+                    ("from_cache", Json::int(s.from_cache as i64)),
+                    ("skipped", Json::int(s.skipped as i64)),
+                    ("wall_secs", Json::Num(s.wall_secs)),
+                    ("events_coalesced", Json::int(s.events_coalesced as i64)),
+                    ("aborted", Json::Bool(s.aborted)),
+                    ("cancelled", Json::Bool(s.cancelled)),
+                ];
+                if let Some(m) = &s.metrics {
+                    fields.push(("metrics", m.to_json()));
+                }
+                Json::obj(fields)
+            }
         }
     }
 }
@@ -244,7 +264,10 @@ impl Clone for EventSink {
 /// payloads are cumulative counters, so dropping one loses nothing the
 /// next delivered event doesn't carry.
 fn coalescable(event: &RunEvent) -> bool {
-    matches!(event, RunEvent::Progress { .. } | RunEvent::TaskProgress { .. })
+    matches!(
+        event,
+        RunEvent::Progress { .. } | RunEvent::TaskProgress { .. } | RunEvent::Telemetry(_)
+    )
 }
 
 impl EventSink {
@@ -595,5 +618,30 @@ mod tests {
 
         let c = RunEvent::WorkerCrashed { slot: 2, message: "died".into() };
         assert_eq!(c.to_json().get("slot").unwrap().as_i64(), Some(2));
+    }
+
+    #[test]
+    fn telemetry_event_is_coalescable_and_serializable() {
+        let snap = MetricsSnapshot { tasks_total: 7, ..Default::default() };
+        let e = RunEvent::Telemetry(snap);
+        assert!(coalescable(&e), "telemetry must never block terminal events");
+        let j = e.to_json();
+        assert_eq!(j.get("event").unwrap().as_str(), Some("telemetry"));
+        let m = j.get("metrics").expect("embedded snapshot");
+        assert_eq!(m.get("tasks_total").unwrap().as_i64(), Some(7));
+    }
+
+    #[test]
+    fn run_complete_json_carries_the_final_snapshot() {
+        let bare = RunEvent::RunComplete(RunSummary::default()).to_json();
+        assert!(bare.get("metrics").is_none(), "no snapshot on early-error paths");
+
+        let done = RunEvent::RunComplete(RunSummary {
+            total: 2,
+            metrics: Some(MetricsSnapshot { tasks_total: 2, ..Default::default() }),
+            ..Default::default()
+        });
+        let j = done.to_json();
+        assert_eq!(j.get("metrics").unwrap().get("tasks_total").unwrap().as_i64(), Some(2));
     }
 }

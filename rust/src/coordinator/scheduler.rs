@@ -51,6 +51,8 @@ use crate::coordinator::progress::ProgressState;
 use crate::coordinator::results::{TaskOutcome, TaskStatus};
 use crate::coordinator::source::DrainOnceSource;
 use crate::coordinator::task::TaskSpec;
+use crate::obs::snapshot::FleetStats;
+use crate::obs::trace::thread_worker_id;
 use crate::util::pool::ThreadPool;
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
@@ -193,6 +195,10 @@ pub struct StreamHooks {
     /// tasks finish, and the remaining source is *not* drained (a cancel
     /// must return promptly even on a 10¹²-combination matrix).
     pub cancel: Option<Arc<AtomicBool>>,
+    /// Live per-worker stats feeding telemetry snapshots: each pull loop
+    /// reports a liveness touch per chunk and a completion per executed
+    /// task, keyed by its [`thread_worker_id`].
+    pub fleet: Option<Arc<FleetStats>>,
 }
 
 /// What happened across one [`run_stream`] invocation.
@@ -224,6 +230,7 @@ struct StreamCtx {
     on_skip: Option<Arc<dyn Fn(TaskSpec) + Send + Sync>>,
     progress: Option<Arc<ProgressState>>,
     metrics: Option<Arc<RunMetrics>>,
+    fleet: Option<Arc<FleetStats>>,
     executed: AtomicUsize,
     skipped: AtomicUsize,
     pulls: AtomicUsize,
@@ -257,6 +264,7 @@ impl StreamCtx {
 /// One pool worker's pull loop.
 fn stream_worker(ctx: &StreamCtx) {
     let mut granule = 1usize;
+    let worker = thread_worker_id();
     loop {
         if ctx.stopped() {
             return;
@@ -265,6 +273,11 @@ fn stream_worker(ctx: &StreamCtx) {
         let chunk = ctx.source.pull(granule);
         if chunk.is_empty() {
             return;
+        }
+        if let Some(f) = &ctx.fleet {
+            // A chunk pickup is this backend's liveness signal (there is
+            // no heartbeat frame between threads in one process).
+            f.heartbeat(worker);
         }
         ctx.pulls.fetch_add(1, Ordering::SeqCst);
         ctx.max_granule.fetch_max(chunk.len(), Ordering::SeqCst);
@@ -293,6 +306,9 @@ fn stream_worker(ctx: &StreamCtx) {
                     }
                     if let Some(p) = &ctx.progress {
                         p.mark_done();
+                    }
+                    if let Some(f) = &ctx.fleet {
+                        f.task_completed(worker);
                     }
                     ctx.executed.fetch_add(1, Ordering::SeqCst);
                     if let Some(cb) = &ctx.on_outcome {
@@ -344,6 +360,7 @@ pub fn run_stream(
         on_skip: hooks.on_skip,
         progress: hooks.progress,
         metrics: hooks.metrics,
+        fleet: hooks.fleet,
         executed: AtomicUsize::new(0),
         skipped: AtomicUsize::new(0),
         pulls: AtomicUsize::new(0),

@@ -80,6 +80,12 @@ pub struct Registration {
     /// rejected). The supervisor keeps post-handshake frames to JSON for
     /// pre-v3 registrants.
     pub protocol: u64,
+    /// Estimated offset from this worker's monotonic clock to the pool
+    /// host's ([`crate::obs::trace::monotonic_us`] here minus the
+    /// worker's `clock_us`, sampled at `Ready` receipt — error bounded by
+    /// the one-way handshake latency). `None` for pre-v4 workers, whose
+    /// exec timestamps are synthesized supervisor-side instead.
+    pub clock_offset_us: Option<i64>,
 }
 
 struct PoolState {
@@ -272,9 +278,11 @@ impl PoolShared {
             Ok(Some(m)) => m,
             _ => return, // silent/garbled connection: drop without ceremony
         };
-        let Msg::Ready { worker, pid, protocol, token, .. } = ready else {
+        let Msg::Ready { worker, pid, protocol, token, clock_us, .. } = ready else {
             return;
         };
+        let clock_offset_us =
+            clock_us.map(|c| crate::obs::trace::monotonic_us() as i64 - c as i64);
         let refusal = if !(MIN_PROTOCOL_VERSION..=PROTOCOL_VERSION).contains(&protocol) {
             Some(format!(
                 "protocol mismatch: pool speaks v{MIN_PROTOCOL_VERSION}..v{PROTOCOL_VERSION}, \
@@ -311,7 +319,14 @@ impl PoolShared {
             return;
         }
         let member = self.registered.fetch_add(1, Ordering::SeqCst) + 1;
-        state.queue.push_back(Registration { stream: reader, member, worker, pid, protocol });
+        state.queue.push_back(Registration {
+            stream: reader,
+            member,
+            worker,
+            pid,
+            protocol,
+            clock_offset_us,
+        });
         drop(state);
         self.cv.notify_one();
     }
@@ -339,6 +354,7 @@ mod tests {
                 spawn: 0,
                 protocol,
                 token: token.map(|t| t.to_string()),
+                clock_us: if protocol >= 4 { Some(1) } else { None },
             },
         )
         .unwrap();
@@ -364,6 +380,7 @@ mod tests {
         assert_eq!(reg.pid, 1234);
         assert_eq!(reg.member, 1);
         assert_eq!(reg.protocol, PROTOCOL_VERSION);
+        assert!(reg.clock_offset_us.is_some(), "v4 ready carries a clock sample");
         assert_eq!(pool.registered_count(), 1);
         assert_eq!(pool.rejected_count(), 0);
     }
@@ -376,6 +393,7 @@ mod tests {
         let _stream = send_ready(pool.endpoint(), MIN_PROTOCOL_VERSION, Some("s3cret"));
         let reg = pool.lease(Duration::from_secs(5)).expect("v2 worker registers");
         assert_eq!(reg.protocol, MIN_PROTOCOL_VERSION);
+        assert_eq!(reg.clock_offset_us, None, "pre-v4 ready has no clock sample");
         assert_eq!(pool.rejected_count(), 0);
     }
 

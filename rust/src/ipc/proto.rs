@@ -61,8 +61,16 @@ use std::io::{self, Read, Write};
 /// default to the tagged binary encoding, negotiated at `Ready`/`Hello`,
 /// with handshake frames pinned to JSON — so v3 speakers interoperate
 /// with v2 peers (both sides fall back to all-JSON) and v2/v3 are
-/// mutually compatible rather than rejected.
-pub const PROTOCOL_VERSION: u64 = 3;
+/// mutually compatible rather than rejected. v4 added observability
+/// fields, all optional: `Ready` carries the worker's monotonic clock
+/// reading (`clock_us`, for per-worker clock-offset estimation) and
+/// `Outcome` carries worker-side `exec_start_us`/`exec_end_us`
+/// timestamps so merged span timelines cross process and machine
+/// boundaries. Pre-v4 readers ignore unknown JSON keys and the binary
+/// codec is self-describing, so v2/v3 peers interoperate unchanged —
+/// the supervisor synthesizes exec timestamps from `duration_secs`
+/// when a peer omits them.
+pub const PROTOCOL_VERSION: u64 = 4;
 
 /// Oldest protocol version current code interoperates with. v2 peers
 /// lack binary payload support but are frame-compatible otherwise, so
@@ -118,6 +126,13 @@ pub enum Msg {
         /// Shared auth token; required by TCP pools, unused over Unix
         /// sockets (filesystem permissions are the trust boundary there).
         token: Option<String>,
+        /// The worker's monotonic clock at send time, in microseconds
+        /// (v4+). The accepting side subtracts it from its own clock at
+        /// receipt to estimate this worker's clock offset (error bounded
+        /// by the connection's one-way latency), which is how worker-side
+        /// exec timestamps land on the coordinator's timeline. `None`
+        /// from pre-v4 peers.
+        clock_us: Option<u64>,
     },
     /// Clean departure: the worker is about to close this connection
     /// deliberately (rolling restart, per-connection task budget) and
@@ -147,6 +162,14 @@ pub enum Msg {
         attempt: u64,
         /// Wall-clock execution time inside the worker.
         duration_secs: f64,
+        /// When the experiment function started, on the *worker's*
+        /// monotonic clock in microseconds (v4+; `None` from older
+        /// peers, or when the negotiated protocol is below 4). The
+        /// supervisor maps it onto its own timeline via the clock
+        /// offset estimated at `Ready`.
+        exec_start_us: Option<u64>,
+        /// When the experiment function returned, worker clock (v4+).
+        exec_end_us: Option<u64>,
         /// The attempt's result.
         result: WireResult,
     },
@@ -198,20 +221,26 @@ impl Msg {
     /// Serializes the message to its wire JSON shape.
     pub fn to_json(&self) -> Json {
         match self {
-            Msg::Ready { worker, pid, spawn, protocol, token } => Json::obj(vec![
-                ("msg", Json::str("ready")),
-                ("worker", Json::int(*worker as i64)),
-                ("pid", Json::int(*pid as i64)),
-                ("spawn", Json::int(*spawn as i64)),
-                ("protocol", Json::int(*protocol as i64)),
-                (
-                    "token",
-                    token
-                        .as_ref()
-                        .map(|t| Json::str(t.clone()))
-                        .unwrap_or(Json::Null),
-                ),
-            ]),
+            Msg::Ready { worker, pid, spawn, protocol, token, clock_us } => {
+                let mut fields = vec![
+                    ("msg", Json::str("ready")),
+                    ("worker", Json::int(*worker as i64)),
+                    ("pid", Json::int(*pid as i64)),
+                    ("spawn", Json::int(*spawn as i64)),
+                    ("protocol", Json::int(*protocol as i64)),
+                    (
+                        "token",
+                        token
+                            .as_ref()
+                            .map(|t| Json::str(t.clone()))
+                            .unwrap_or(Json::Null),
+                    ),
+                ];
+                if let Some(clock) = clock_us {
+                    fields.push(("clock_us", Json::int(*clock as i64)));
+                }
+                Json::obj(fields)
+            }
             Msg::Goodbye => Json::obj(vec![("msg", Json::str("goodbye"))]),
             Msg::Reject { reason } => Json::obj(vec![
                 ("msg", Json::str("reject")),
@@ -230,13 +259,19 @@ impl Msg {
                 ("index", Json::int(*index as i64)),
                 ("value", value.clone()),
             ]),
-            Msg::Outcome { index, attempt, duration_secs, result } => {
+            Msg::Outcome { index, attempt, duration_secs, exec_start_us, exec_end_us, result } => {
                 let mut fields = vec![
                     ("msg", Json::str("outcome")),
                     ("index", Json::int(*index as i64)),
                     ("attempt", Json::int(*attempt as i64)),
                     ("duration_secs", Json::Num(*duration_secs)),
                 ];
+                if let Some(start) = exec_start_us {
+                    fields.push(("exec_start_us", Json::int(*start as i64)));
+                }
+                if let Some(end) = exec_end_us {
+                    fields.push(("exec_end_us", Json::int(*end as i64)));
+                }
                 match result {
                     WireResult::Ok { value } => {
                         fields.push(("ok", Json::bool(true)));
@@ -299,6 +334,7 @@ impl Msg {
                     .get("token")
                     .and_then(|t| t.as_str())
                     .map(|t| t.to_string()),
+                clock_us: u64_field("clock_us"),
             }),
             "goodbye" => Some(Msg::Goodbye),
             "reject" => Some(Msg::Reject {
@@ -329,6 +365,8 @@ impl Msg {
                     index: u64_field("index")?,
                     attempt: u64_field("attempt")?,
                     duration_secs: j.get("duration_secs")?.as_f64()?,
+                    exec_start_us: u64_field("exec_start_us"),
+                    exec_end_us: u64_field("exec_end_us"),
                     result,
                 })
             }
@@ -483,6 +521,7 @@ mod tests {
             spawn,
             protocol: PROTOCOL_VERSION,
             token: None,
+            clock_us: None,
         }
     }
 
@@ -495,6 +534,7 @@ mod tests {
             spawn: 0,
             protocol: PROTOCOL_VERSION,
             token: Some("s3cret".into()),
+            clock_us: Some(123_456_789),
         });
         roundtrip(Msg::Goodbye);
         roundtrip(Msg::Reject { reason: "auth token mismatch".into() });
@@ -505,12 +545,16 @@ mod tests {
             index: 2,
             attempt: 1,
             duration_secs: 0.25,
+            exec_start_us: Some(1_000_000),
+            exec_end_us: Some(1_250_000),
             result: WireResult::Ok { value: Json::obj(vec![("accuracy", Json::Num(0.9))]) },
         });
         roundtrip(Msg::Outcome {
             index: 2,
             attempt: 3,
             duration_secs: 0.5,
+            exec_start_us: None,
+            exec_end_us: None,
             result: WireResult::Err { message: "kaboom".into(), panicked: true },
         });
         let mut settings = BTreeMap::new();
@@ -641,6 +685,35 @@ mod tests {
         for f in [WireFormat::Json, WireFormat::Binary] {
             assert_eq!(WireFormat::parse_arg(f.as_str()), Some(f));
         }
+    }
+
+    #[test]
+    fn v3_outcome_without_exec_timestamps_parses_with_none() {
+        // A v3 worker's outcome frame has no exec timestamp fields; the
+        // supervisor must parse it and synthesize a timeline from
+        // duration_secs instead of failing the attempt.
+        let doc = parse(
+            r#"{"msg":"outcome","index":4,"attempt":1,"duration_secs":0.5,"ok":true,"value":1}"#,
+        )
+        .unwrap();
+        let Some(Msg::Outcome { exec_start_us, exec_end_us, duration_secs, .. }) =
+            Msg::from_json(&doc)
+        else {
+            panic!("v3 outcome must parse");
+        };
+        assert_eq!(exec_start_us, None);
+        assert_eq!(exec_end_us, None);
+        assert_eq!(duration_secs, 0.5);
+    }
+
+    #[test]
+    fn v3_ready_without_clock_parses_with_none() {
+        let doc = parse(r#"{"msg":"ready","worker":1,"pid":2,"spawn":0,"protocol":3}"#).unwrap();
+        let Some(Msg::Ready { protocol, clock_us, .. }) = Msg::from_json(&doc) else {
+            panic!("v3 ready must parse");
+        };
+        assert_eq!(protocol, 3);
+        assert_eq!(clock_us, None);
     }
 
     #[test]

@@ -84,6 +84,8 @@ use crate::ipc::proto::{
 };
 use crate::ipc::transport::{bind_unix, WireListener, WireStream};
 use crate::ipc::worker::{ENV_SOCKET, ENV_WORKER_ID, ENV_WORKER_SPAWN};
+use crate::obs::snapshot::FleetStats;
+use crate::obs::trace::{monotonic_us, SpanState, Tracer};
 use crate::util::json::Json;
 use std::collections::{BTreeMap, VecDeque};
 use std::path::PathBuf;
@@ -211,6 +213,14 @@ pub struct SupervisorHooks {
     /// Fires exactly once, when the lazy spec source is exhausted and all
     /// pulled specs have cleared the restore filter.
     pub on_source_drained: Option<Box<dyn FnOnce() + Send + Sync>>,
+    /// Span tracer for per-attempt timelines (`--trace-dir`). Slots record
+    /// queued/dispatched transitions; worker-side exec timestamps from v4
+    /// `Outcome` frames are mapped through the connection's clock offset
+    /// (synthesized from `duration_secs` for older peers).
+    pub tracer: Option<Arc<Tracer>>,
+    /// Live per-worker stats (completions, heartbeat age, crash budget)
+    /// feeding periodic telemetry snapshots.
+    pub fleet: Option<Arc<FleetStats>>,
 }
 
 /// What happened across the whole process-backed run. Terminal outcomes
@@ -306,8 +316,9 @@ struct Shared {
 }
 
 /// What the spawn-mode acceptor routes to a slot: the handshaken stream,
-/// the Ready frame's spawn generation, and the worker's declared protocol.
-type RoutedConn = (Box<dyn WireStream>, u64, u64);
+/// the Ready frame's spawn generation, the worker's declared protocol,
+/// and the estimated worker-clock offset (`None` for pre-v4 workers).
+type RoutedConn = (Box<dyn WireStream>, u64, u64, Option<i64>);
 
 /// A live worker: the connection halves, plus the child process handle
 /// when this supervisor spawned it (`None` for leased pool workers —
@@ -320,6 +331,11 @@ struct Conn {
     /// [`SupervisorOptions::wire`] when the worker declared v3+ in its
     /// `Ready`, otherwise JSON. Reads auto-detect and need no format.
     wire: WireFormat,
+    /// Estimated offset from the worker's monotonic clock to ours
+    /// (supervisor clock at `Ready` receipt minus the frame's `clock_us`).
+    /// `None` for pre-v4 workers — their exec spans are synthesized from
+    /// the outcome's `duration_secs` instead.
+    clock_offset_us: Option<i64>,
 }
 
 /// Runs every spec the lazy `source` yields across `opts.workers` worker
@@ -477,9 +493,12 @@ fn accept_loop(
         let _ = stream.set_stream_read_timeout(Some(Duration::from_secs(5)));
         let mut reader = stream;
         match read_frame(&mut reader) {
-            Ok(Some(Msg::Ready { worker, spawn, protocol, .. })) => {
+            Ok(Some(Msg::Ready { worker, spawn, protocol, clock_us, .. })) => {
+                // Offset sampled at receipt: error is bounded by the
+                // handshake's one-way latency (a local socket, so ~µs).
+                let offset = clock_us.map(|c| monotonic_us() as i64 - c as i64);
                 if let Some(tx) = routes.get(worker as usize) {
-                    let _ = tx.send((reader, spawn, protocol));
+                    let _ = tx.send((reader, spawn, protocol, offset));
                 }
             }
             _ => drop(reader),
@@ -496,6 +515,7 @@ fn slot_loop(sh: &Shared, slot: usize, rx: Option<Receiver<RoutedConn>>) {
     // Bumped on every spawn; the worker echoes it in Ready, and
     // spawn_worker discards routed connections from older generations.
     let mut spawn_seq: u64 = 0;
+    sh.fleet_budget(slot, crashes_used);
     loop {
         let att = match sh.next_task() {
             Next::Done => break,
@@ -505,6 +525,9 @@ fn slot_loop(sh: &Shared, slot: usize, rx: Option<Receiver<RoutedConn>>) {
             }
             Next::Run(att) => att,
         };
+        // Queued = admitted for dispatch; the gap to Dispatched is worker
+        // acquisition (spawn/lease) plus the write itself.
+        sh.trace_span(att, SpanState::Queued, None, true);
         if conn.is_none() {
             if crashes_used > sh.opts.crash_budget {
                 sh.give_back(att);
@@ -523,6 +546,7 @@ fn slot_loop(sh: &Shared, slot: usize, rx: Option<Receiver<RoutedConn>>) {
                 Ok(c) => conn = Some(c),
                 Err(e) => {
                     crashes_used += 1;
+                    sh.fleet_budget(slot, crashes_used);
                     sh.crashes.fetch_add(1, Ordering::SeqCst);
                     eprintln!("memento supervisor: slot {slot} worker acquisition failed: {e}");
                     sh.emit(RunEvent::WorkerCrashed {
@@ -540,6 +564,7 @@ fn slot_loop(sh: &Shared, slot: usize, rx: Option<Receiver<RoutedConn>>) {
                     // Pool budgets count *consecutive* losses: a completed
                     // attempt is proof the supply works again.
                     crashes_used = 0;
+                    sh.fleet_budget(slot, crashes_used);
                 }
             }
             Serve::NotDelivered => {
@@ -549,6 +574,7 @@ fn slot_loop(sh: &Shared, slot: usize, rx: Option<Receiver<RoutedConn>>) {
                 let mut dead = conn.take().unwrap();
                 let status = reap(&mut dead);
                 crashes_used += 1;
+                sh.fleet_budget(slot, crashes_used);
                 sh.crashes.fetch_add(1, Ordering::SeqCst);
                 sh.emit(RunEvent::WorkerCrashed {
                     slot,
@@ -571,6 +597,7 @@ fn slot_loop(sh: &Shared, slot: usize, rx: Option<Receiver<RoutedConn>>) {
                 let mut dead = conn.take().unwrap();
                 let status = reap(&mut dead);
                 crashes_used += 1;
+                sh.fleet_budget(slot, crashes_used);
                 sh.crashes.fetch_add(1, Ordering::SeqCst);
                 sh.emit(RunEvent::WorkerCrashed {
                     slot,
@@ -705,6 +732,7 @@ fn serve_attempt(sh: &Shared, slot: usize, conn: &mut Conn, att: Attempt) -> Ser
         id: id.clone(),
         attempt: att.attempt,
     });
+    sh.trace_span(att, SpanState::Dispatched, Some(slot as u64), false);
     let task_deadline = sh.opts.task_timeout.map(|d| sent_at + d);
     // Once a cancel is noticed, the attempt gets one heartbeat of grace to
     // deliver a racing `Outcome` (a result the worker already computed
@@ -743,7 +771,12 @@ fn serve_attempt(sh: &Shared, slot: usize, conn: &mut Conn, att: Attempt) -> Ser
                 .set_stream_read_timeout(Some(remaining.min(sh.opts.heartbeat_timeout)));
         }
         match read_frame(&mut conn.reader) {
-            Ok(Some(Msg::Heartbeat { .. })) => continue,
+            Ok(Some(Msg::Heartbeat { .. })) => {
+                if let Some(f) = &sh.hooks.fleet {
+                    f.heartbeat(slot as u64);
+                }
+                continue;
+            }
             Ok(Some(Msg::Progress { index, value })) => {
                 if let Some((spec_index, pid)) = sh.task_brief(index as usize) {
                     if let Some(save) = &sh.hooks.save_progress {
@@ -753,7 +786,14 @@ fn serve_attempt(sh: &Shared, slot: usize, conn: &mut Conn, att: Attempt) -> Ser
                 }
             }
             Ok(Some(Msg::Goodbye)) => return Serve::Departed,
-            Ok(Some(Msg::Outcome { index, attempt, duration_secs, result })) => {
+            Ok(Some(Msg::Outcome {
+                index,
+                attempt,
+                duration_secs,
+                exec_start_us,
+                exec_end_us,
+                result,
+            })) => {
                 if index as usize != att.index || attempt != att.attempt as u64 {
                     eprintln!(
                         "memento supervisor: slot {slot} answered task {index} (attempt \
@@ -767,6 +807,17 @@ fn serve_attempt(sh: &Shared, slot: usize, conn: &mut Conn, att: Attempt) -> Ser
                     let exec = Duration::from_secs_f64(duration_secs.max(0.0));
                     m.dispatch_overhead
                         .record(sent_at.elapsed().saturating_sub(exec));
+                }
+                sh.trace_exec(
+                    att,
+                    slot as u64,
+                    conn.clock_offset_us,
+                    exec_start_us,
+                    exec_end_us,
+                    duration_secs,
+                );
+                if let Some(f) = &sh.hooks.fleet {
+                    f.task_completed(slot as u64);
                 }
                 match result {
                     WireResult::Ok { value } => sh.attempt_succeeded(att, value, duration_secs),
@@ -858,7 +909,13 @@ fn lease_worker(sh: &Shared, pool: &Arc<WorkerPool>) -> Result<Conn, MementoErro
         if write_frame(&mut writer, &hello).is_err() {
             continue; // worker died while parked in the queue
         }
-        return Ok(Conn { child: None, reader: reg.stream, writer, wire });
+        return Ok(Conn {
+            child: None,
+            reader: reg.stream,
+            writer,
+            wire,
+            clock_offset_us: reg.clock_offset_us,
+        });
     }
 }
 
@@ -894,7 +951,7 @@ fn spawn_worker(
     // slot already gave up on it) is discarded here instead of being
     // mistaken for the fresh worker.
     let deadline = Instant::now() + sh.opts.connect_timeout;
-    let (stream, peer_protocol) = loop {
+    let (stream, peer_protocol, clock_offset_us) = loop {
         let remaining = deadline.saturating_duration_since(Instant::now());
         if remaining.is_zero() {
             let _ = child.kill();
@@ -905,7 +962,7 @@ fn spawn_worker(
             )));
         }
         match rx.recv_timeout(remaining) {
-            Ok((s, spawn, protocol)) if spawn == spawn_seq => break (s, protocol),
+            Ok((s, spawn, protocol, offset)) if spawn == spawn_seq => break (s, protocol, offset),
             Ok(_) => continue, // stale incarnation; drop its stream
             Err(RecvTimeoutError::Timeout) | Err(RecvTimeoutError::Disconnected) => {
                 let _ = child.kill();
@@ -941,7 +998,7 @@ fn spawn_worker(
         let _ = child.wait();
         return Err(MementoError::ipc(format!("send hello: {e}")));
     }
-    Ok(Conn { child: Some(child), reader: stream, writer, wire })
+    Ok(Conn { child: Some(child), reader: stream, writer, wire, clock_offset_us })
 }
 
 // ---- shared queue operations -------------------------------------------
@@ -958,6 +1015,58 @@ impl Shared {
     fn emit(&self, event: RunEvent) {
         if let Some(s) = &self.hooks.events {
             s.emit(event);
+        }
+    }
+
+    /// Records one span for a pulled attempt, translating the wire index
+    /// to the spec's expansion index — the stable task identity every
+    /// backend's spans share. `with_label` attaches the human-readable
+    /// `k=v` parameter label (done once per attempt, on `Queued`).
+    fn trace_span(&self, att: Attempt, state: SpanState, worker: Option<u64>, with_label: bool) {
+        let Some(tracer) = &self.hooks.tracer else { return };
+        let tasks = self.tasks.lock().unwrap();
+        let Some(t) = tasks.get(att.index) else { return };
+        let index = t.spec.index;
+        let label = with_label.then(|| t.spec.label());
+        drop(tasks);
+        tracer.record(index, att.attempt, state, worker, label);
+    }
+
+    /// Records the exec window of a completed attempt: worker-reported
+    /// timestamps mapped through the connection's clock offset when the
+    /// peer is v4+, otherwise synthesized from `duration_secs` around the
+    /// outcome's arrival — so pre-v4 workers still yield full timelines,
+    /// just with dispatch latency folded into the exec span's position.
+    fn trace_exec(
+        &self,
+        att: Attempt,
+        slot: u64,
+        clock_offset_us: Option<i64>,
+        exec_start_us: Option<u64>,
+        exec_end_us: Option<u64>,
+        duration_secs: f64,
+    ) {
+        let Some(tracer) = &self.hooks.tracer else { return };
+        let Some((spec_index, _)) = self.task_brief(att.index) else { return };
+        let (start, end) = match (clock_offset_us, exec_start_us, exec_end_us) {
+            (Some(off), Some(s), Some(e)) => {
+                ((s as i64 + off).max(0) as u64, (e as i64 + off).max(0) as u64)
+            }
+            _ => {
+                let end = monotonic_us();
+                let start = end.saturating_sub((duration_secs.max(0.0) * 1e6) as u64);
+                (start, end)
+            }
+        };
+        tracer.record_mono(spec_index, att.attempt, SpanState::ExecStart, start, Some(slot));
+        tracer.record_mono(spec_index, att.attempt, SpanState::ExecEnd, end, Some(slot));
+    }
+
+    /// Publishes a slot's remaining crash budget to the fleet stats.
+    fn fleet_budget(&self, slot: usize, crashes_used: u32) {
+        if let Some(f) = &self.hooks.fleet {
+            let remaining = self.opts.crash_budget.saturating_sub(crashes_used);
+            f.set_crash_budget_remaining(slot as u64, remaining);
         }
     }
 
@@ -1262,6 +1371,9 @@ impl Shared {
     /// never-dispatched orphans failed at retirement).
     fn finish(&self, outcome: TaskOutcome, was_in_flight: bool) {
         let failed = outcome.status == TaskStatus::Failed;
+        if let Some(t) = &self.hooks.tracer {
+            t.record(outcome.spec.index, outcome.attempts, SpanState::Recorded, None, None);
+        }
         if let Some(m) = &self.hooks.metrics {
             m.tasks_total.inc();
             if failed {

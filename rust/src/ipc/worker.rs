@@ -34,6 +34,7 @@ use crate::ipc::proto::{
     PROTOCOL_VERSION,
 };
 use crate::ipc::transport::{Endpoint, WireStream};
+use crate::obs::trace::monotonic_us;
 use crate::util::json::Json;
 use crate::util::time::Stopwatch;
 use std::collections::BTreeMap;
@@ -343,6 +344,10 @@ pub fn serve_connection(
             spawn,
             protocol: PROTOCOL_VERSION,
             token,
+            // Monotonic clock sample for the supervisor's per-worker
+            // offset estimate; worker-side exec timestamps in later
+            // Outcome frames are on this same clock.
+            clock_us: Some(monotonic_us()),
         },
         WireFormat::Json,
     )?;
@@ -420,6 +425,7 @@ pub fn serve_connection(
         &busy,
         tasks_limit,
         wire,
+        protocol,
     );
 
     stop.store(true, Ordering::SeqCst);
@@ -459,6 +465,7 @@ fn serve_loop(
     busy: &Arc<AtomicI64>,
     tasks_limit: Option<usize>,
     wire: WireFormat,
+    protocol: u64,
 ) -> ConnReport {
     let mut tasks = 0usize;
     loop {
@@ -477,7 +484,7 @@ fn serve_loop(
                 busy.store(index as i64, Ordering::SeqCst);
                 let outcome = run_attempt(
                     writer, exp_fn, settings, version, run_seed, index, attempt, params, restored,
-                    wire,
+                    wire, protocol,
                 );
                 busy.store(-1, Ordering::SeqCst);
                 tasks += 1;
@@ -525,6 +532,7 @@ fn run_attempt(
     params: Vec<(String, crate::config::value::ParamValue)>,
     restored: Option<Json>,
     wire: WireFormat,
+    protocol: u64,
 ) -> Msg {
     let spec = Msg::task_spec(index, &params);
     let id = spec.id(version);
@@ -546,6 +554,7 @@ fn run_attempt(
         restored,
         Some(sink),
     );
+    let exec_start = monotonic_us();
     let sw = Stopwatch::start();
     let result = match catch_unwind(AssertUnwindSafe(|| exp_fn(&ctx))) {
         Ok(Ok(value)) => WireResult::Ok { value },
@@ -555,7 +564,23 @@ fn run_attempt(
             panicked: true,
         },
     };
-    Msg::Outcome { index, attempt, duration_secs: sw.elapsed_secs(), result }
+    let exec_end = monotonic_us();
+    // Worker-clock exec timestamps are a v4 addition. Pre-v4 supervisors
+    // tolerate unknown JSON keys but the fields are withheld anyway so the
+    // frame matches what the negotiated protocol promises.
+    let (exec_start_us, exec_end_us) = if protocol >= 4 {
+        (Some(exec_start), Some(exec_end))
+    } else {
+        (None, None)
+    };
+    Msg::Outcome {
+        index,
+        attempt,
+        duration_secs: sw.elapsed_secs(),
+        exec_start_us,
+        exec_end_us,
+        result,
+    }
 }
 
 fn send(

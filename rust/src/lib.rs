@@ -61,6 +61,7 @@ pub mod experiments;
 #[cfg(unix)]
 pub mod ipc;
 pub mod ml;
+pub mod obs;
 pub mod runtime;
 pub mod testing;
 pub mod util;
@@ -82,6 +83,8 @@ pub mod prelude {
     pub use crate::coordinator::run::{ChannelPolicy, Run, RunEvent, RunSummary};
     pub use crate::coordinator::scheduler::ExecBackend;
     pub use crate::coordinator::task::{TaskContext, TaskId, TaskSpec};
+    pub use crate::obs::snapshot::{MetricsSnapshot, WorkerStat};
+    pub use crate::obs::trace::{SpanEvent, SpanState, TraceSummary, Tracer};
     pub use crate::util::codec::WireFormat;
     pub use crate::util::json::Json;
 }

@@ -5,8 +5,9 @@
 //!   run     <config.json> [opts]       run the grid experiment function
 //!   resume  <config.json> [opts]       resume a checkpointed run
 //!   serve   --connect host:port ...    standing worker for a remote run
-//!   status  --checkpoint <dir>         inspect a run manifest
+//!   status  --checkpoint <dir>         inspect a run manifest/telemetry
 //!   report  --results <file> [opts]    pivot saved results into a table
+//!   trace   <summarize|export> <dir>   analyze a recorded span trace
 //!
 //! The experiment function is the §3 grid (`experiments::grid`): parameters
 //! `dataset`/`feature_engineering`/`preprocessing`/`model`. The AOT MLP
@@ -40,6 +41,7 @@ fn main() -> ExitCode {
         "serve" => cmd_serve(rest),
         "status" => cmd_status(rest),
         "report" => cmd_report(rest),
+        "trace" => cmd_trace(rest),
         // Hidden: the worker half of `--isolation process`. Spawned by the
         // supervisor with MEMENTO_WORKER_SOCKET/MEMENTO_WORKER_ID set;
         // never invoked by hand (and deliberately absent from the help).
@@ -65,7 +67,7 @@ fn main() -> ExitCode {
 fn top_help() -> String {
     "memento — effortless, efficient, and reliable ML experiments\n\
      \n\
-     USAGE: memento <expand|run|resume|serve|status|report> [options]\n\
+     USAGE: memento <expand|run|resume|serve|status|report|trace> [options]\n\
      \n\
      Try `memento run --help` for per-command options."
         .to_string()
@@ -221,6 +223,18 @@ fn run_spec(name: &'static str) -> CliSpec {
              (0 = unbounded). Terminal events are never dropped; progress \
              events coalesce under pressure",
         )
+        .opt_required(
+            "trace-dir",
+            "record per-attempt span timelines into <dir>/trace.jsonl \
+             (all isolation tiers; off unless set) — analyze afterwards \
+             with `memento trace summarize <dir>`",
+        )
+        .opt(
+            "telemetry-every",
+            "0",
+            "emit a live metrics snapshot every N seconds (with --output \
+             ndjson it is printed as a `telemetry` line; 0 = off)",
+        )
         .flag("fail-fast", "abort on first failure")
         .flag("quiet", "suppress progress/notifications")
 }
@@ -288,6 +302,13 @@ fn cmd_run(args: &[String], resuming: bool) -> Result<(), String> {
     if event_cap > 0 {
         m = m.event_capacity(event_cap);
     }
+    if let Some(dir) = a.get("trace-dir") {
+        m = m.trace_to(dir);
+    }
+    let telemetry = unwrap_cli(a.get_f64("telemetry-every"))?;
+    if telemetry > 0.0 {
+        m = m.telemetry_every(Duration::from_secs_f64(telemetry));
+    }
     let ndjson = match a.get("output").unwrap_or("summary") {
         "summary" => false,
         "ndjson" => true,
@@ -316,6 +337,7 @@ fn cmd_run(args: &[String], resuming: bool) -> Result<(), String> {
             match &event {
                 RunEvent::TaskFinished(_)
                 | RunEvent::WorkerCrashed { .. }
+                | RunEvent::Telemetry(_)
                 | RunEvent::RunComplete(_) => println!("{}", event.to_json()),
                 _ => {}
             }
@@ -518,35 +540,146 @@ fn cmd_worker() -> Result<(), String> {
 }
 
 fn cmd_status(args: &[String]) -> Result<(), String> {
-    let spec = CliSpec::new("memento status", "inspect a checkpoint manifest")
-        .opt_required("checkpoint", "checkpoint run directory");
-    let a = unwrap_cli(spec.parse(args))?;
-    let dir = a.get("checkpoint").ok_or("missing --checkpoint")?;
-    let manifest = Path::new(dir).join("manifest.json");
-    // read_document auto-detects tagged-binary vs JSON content, so status
-    // inspects manifests written under either --wire setting.
-    let bytes = std::fs::read(&manifest)
-        .map_err(|e| format!("cannot read {}: {e}", manifest.display()))?;
-    let doc = memento::util::codec::read_document(&bytes).map_err(|e| e.to_string())?;
-    let total = doc.get("total_tasks").and_then(|j| j.as_i64()).unwrap_or(0);
-    let completed = doc
-        .get("completed")
-        .and_then(|j| j.as_obj())
-        .map(|o| o.len())
-        .unwrap_or(0);
-    let failed = doc
-        .get("completed")
-        .and_then(|j| j.as_obj())
-        .map(|o| o.values().filter(|e| e.get("failed").is_some()).count())
-        .unwrap_or(0);
-    println!(
-        "run dir   : {dir}\nmatrix    : {}\nversion   : {}\nprogress  : {completed}/{total} completed ({failed} failed)",
-        doc.get("matrix_fingerprint")
-            .and_then(|j| j.as_str())
-            .map(|s| &s[..12.min(s.len())])
-            .unwrap_or("?"),
-        doc.get("version").and_then(|j| j.as_str()).unwrap_or("?"),
+    let spec = CliSpec::new(
+        "memento status",
+        "inspect a run: checkpoint manifest, latest telemetry snapshot, trace summary",
+    )
+    .opt_required("checkpoint", "checkpoint run directory")
+    .opt_required(
+        "trace",
+        "trace directory written by `run --trace-dir` — prints the \
+         persisted metrics snapshot and a span-timeline summary",
     );
+    let a = unwrap_cli(spec.parse(args))?;
+    let (ck_dir, trace_dir) = (a.get("checkpoint"), a.get("trace"));
+    if ck_dir.is_none() && trace_dir.is_none() {
+        return Err("status needs --checkpoint <dir> and/or --trace <dir>".into());
+    }
+    if let Some(dir) = ck_dir {
+        let manifest = Path::new(dir).join("manifest.json");
+        // read_document auto-detects tagged-binary vs JSON content, so
+        // status inspects manifests written under either --wire setting.
+        let bytes = std::fs::read(&manifest)
+            .map_err(|e| format!("cannot read {}: {e}", manifest.display()))?;
+        let doc = memento::util::codec::read_document(&bytes).map_err(|e| e.to_string())?;
+        let total = doc.get("total_tasks").and_then(|j| j.as_i64()).unwrap_or(0);
+        let completed = doc
+            .get("completed")
+            .and_then(|j| j.as_obj())
+            .map(|o| o.len())
+            .unwrap_or(0);
+        let failed = doc
+            .get("completed")
+            .and_then(|j| j.as_obj())
+            .map(|o| o.values().filter(|e| e.get("failed").is_some()).count())
+            .unwrap_or(0);
+        println!(
+            "run dir   : {dir}\nmatrix    : {}\nversion   : {}\nprogress  : {completed}/{total} completed ({failed} failed)",
+            doc.get("matrix_fingerprint")
+                .and_then(|j| j.as_str())
+                .map(|s| &s[..12.min(s.len())])
+                .unwrap_or("?"),
+            doc.get("version").and_then(|j| j.as_str()).unwrap_or("?"),
+        );
+    }
+    if let Some(dir) = trace_dir {
+        let dir = Path::new(dir);
+        match memento::obs::snapshot::read_snapshot(dir) {
+            Some(snap) => print!("{}", snap.render()),
+            None => println!("no metrics snapshot in {}", dir.display()),
+        }
+        let trace_path = dir.join(memento::obs::trace::TRACE_FILE);
+        if trace_path.exists() {
+            let parsed =
+                memento::obs::trace::read_trace(&trace_path).map_err(|e| e.to_string())?;
+            print!("{}", memento::obs::trace::summarize(&parsed.spans, 3).render());
+        } else {
+            println!("no trace file in {}", dir.display());
+        }
+    }
+    Ok(())
+}
+
+fn cmd_trace(args: &[String]) -> Result<(), String> {
+    let usage = "USAGE: memento trace <summarize|export> <dir> [options]\n\
+                 \n\
+                 summarize  worker utilization, per-phase p50/p95, critical path, stragglers\n\
+                 export     convert the trace for external viewers (--format chrome)";
+    let Some((sub, rest)) = args.split_first() else {
+        return Err(usage.to_string());
+    };
+    match sub.as_str() {
+        "summarize" => cmd_trace_summarize(rest),
+        "export" => cmd_trace_export(rest),
+        "--help" | "-h" | "help" => {
+            println!("{usage}");
+            Ok(())
+        }
+        other => Err(format!("unknown trace subcommand '{other}'\n\n{usage}")),
+    }
+}
+
+/// Reads `<dir>/trace.jsonl` (either record encoding; see
+/// `memento::obs::trace`).
+fn read_trace_dir(dir: &str) -> Result<memento::obs::trace::TraceFile, String> {
+    let path = Path::new(dir).join(memento::obs::trace::TRACE_FILE);
+    memento::obs::trace::read_trace(&path)
+        .map_err(|e| format!("cannot read {}: {e}", path.display()))
+}
+
+fn cmd_trace_summarize(args: &[String]) -> Result<(), String> {
+    let spec = CliSpec::new("memento trace summarize", "aggregate a recorded span trace")
+        .positional("dir", "trace directory (holds trace.jsonl)")
+        .opt("top", "5", "number of straggler attempts to list");
+    let a = unwrap_cli(spec.parse(args))?;
+    let dir = a.pos("dir").ok_or("missing <dir>")?;
+    let trace = read_trace_dir(dir)?;
+    match (trace.footer_spans, trace.dropped) {
+        (Some(spans), Some(dropped)) => {
+            println!("sealed trace: footer says {spans} span(s), {dropped} dropped");
+            if trace.spans.len() as u64 != spans {
+                eprintln!(
+                    "warning: file holds {} span(s) but the footer says {spans}",
+                    trace.spans.len()
+                );
+            }
+        }
+        _ => println!(
+            "live/unsealed trace: {} span(s), no footer yet",
+            trace.spans.len()
+        ),
+    }
+    let top = unwrap_cli(a.get_usize("top"))?;
+    print!("{}", memento::obs::trace::summarize(&trace.spans, top).render());
+    Ok(())
+}
+
+fn cmd_trace_export(args: &[String]) -> Result<(), String> {
+    let spec = CliSpec::new("memento trace export", "convert a span trace for external viewers")
+        .positional("dir", "trace directory (holds trace.jsonl)")
+        .opt(
+            "format",
+            "chrome",
+            "output format: chrome (trace-event JSON — load the file in \
+             https://ui.perfetto.dev or chrome://tracing)",
+        )
+        .opt_required("out", "write to this file instead of stdout");
+    let a = unwrap_cli(spec.parse(args))?;
+    let dir = a.pos("dir").ok_or("missing <dir>")?;
+    match a.get("format").unwrap_or("chrome") {
+        "chrome" => {}
+        other => return Err(format!("--format must be 'chrome', got '{other}'")),
+    }
+    let trace = read_trace_dir(dir)?;
+    let doc = memento::obs::trace::chrome_trace(trace.header.as_ref(), &trace.spans);
+    match a.get("out") {
+        Some(path) => {
+            memento::util::fs::atomic_write(Path::new(path), doc.pretty().as_bytes())
+                .map_err(|e| e.to_string())?;
+            eprintln!("chrome trace written to {path}");
+        }
+        None => println!("{doc}"),
+    }
     Ok(())
 }
 

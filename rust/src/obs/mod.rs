@@ -1,0 +1,35 @@
+//! Observability: span tracing and live fleet telemetry.
+//!
+//! This module is the run-inspection spine of the crate. It has two
+//! halves, deliberately decoupled from the execution backends so the
+//! same types describe a thread-pool run and a multi-machine fleet:
+//!
+//! - [`trace`] — per-attempt span timelines. Every task attempt walks
+//!   the state machine `queued → restored|dispatched → exec_start →
+//!   exec_end → recorded`; each transition is a [`trace::SpanEvent`]
+//!   with a monotonic microsecond timestamp anchored to one wall-clock
+//!   epoch per run. Events are recorded into striped buffers (the same
+//!   zero-contention pattern as `metrics::Timer`) and flushed by a sink
+//!   thread to an append-only trace file in the PR 6 codec (binary by
+//!   default, auto-detected on read).
+//! - [`snapshot`] — [`snapshot::MetricsSnapshot`], a serializable
+//!   point-in-time capture of `RunMetrics` counters/percentiles plus
+//!   fleet state (queue depth, per-worker completions, heartbeat age,
+//!   crash-budget remaining, windowed observed rate). Snapshots ride in
+//!   `RunEvent::Telemetry`, in the final `RunSummary`, and on disk as
+//!   `metrics.snap` for `memento status`.
+//!
+//! On the process and TCP-remote backends, worker-side execution
+//! timestamps travel back in `Outcome` frames (protocol v4) on the
+//! worker's own monotonic clock; the supervisor maps them onto its
+//! clock using a per-worker offset estimated at the `Ready` exchange,
+//! so a single merged timeline spans process and machine boundaries.
+//!
+//! Tracing is **off by default** — a run pays nothing unless a trace
+//! directory is configured.
+
+pub mod snapshot;
+pub mod trace;
+
+pub use snapshot::{FleetStats, MetricsSnapshot, WorkerStat};
+pub use trace::{SpanEvent, SpanState, TraceSummary, Tracer};

@@ -1,0 +1,473 @@
+//! Serializable point-in-time metrics: [`MetricsSnapshot`] and the
+//! live per-worker registry ([`FleetStats`]) it samples.
+//!
+//! A snapshot freezes the run's `RunMetrics` counters and latency
+//! percentiles together with fleet state — queue depth, the windowed
+//! observed completion rate (the same window the ETA uses), and one
+//! [`WorkerStat`] row per worker (tasks completed, heartbeat age,
+//! crash-budget remaining). Snapshots are plain data: they ride in
+//! `RunEvent::Telemetry`, land in the final `RunSummary`, and persist
+//! as `metrics.snap` (storage codec, auto-detected on read) so
+//! `memento status` can show the last known state of a run directory.
+
+use crate::coordinator::metrics::RunMetrics;
+use crate::coordinator::progress::ProgressState;
+use crate::util::codec::{self, WireFormat};
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+use std::io;
+use std::path::Path;
+use std::sync::Mutex;
+use std::time::{Instant, SystemTime, UNIX_EPOCH};
+
+/// File name of the persisted final snapshot inside a run directory.
+pub const SNAPSHOT_FILE: &str = "metrics.snap";
+
+/// One worker's row in a snapshot.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct WorkerStat {
+    /// Worker id (supervisor slot, or thread-backend thread id).
+    pub worker: u64,
+    /// Tasks this worker has completed so far.
+    pub completed: u64,
+    /// Seconds since the worker was last heard from, when tracked.
+    pub heartbeat_age_secs: Option<f64>,
+    /// Crash budget remaining on this slot, when the backend has one.
+    pub crash_budget_remaining: Option<u32>,
+}
+
+impl WorkerStat {
+    fn to_json(&self) -> Json {
+        let mut fields = vec![
+            ("worker", Json::int(self.worker as i64)),
+            ("completed", Json::int(self.completed as i64)),
+        ];
+        if let Some(age) = self.heartbeat_age_secs {
+            fields.push(("heartbeat_age_secs", Json::num(age)));
+        }
+        if let Some(b) = self.crash_budget_remaining {
+            fields.push(("crash_budget_remaining", Json::int(b as i64)));
+        }
+        Json::obj(fields)
+    }
+
+    fn from_json(doc: &Json) -> Option<WorkerStat> {
+        Some(WorkerStat {
+            worker: doc.get("worker")?.as_i64()? as u64,
+            completed: doc.get("completed")?.as_i64()? as u64,
+            heartbeat_age_secs: doc.get("heartbeat_age_secs").and_then(Json::as_f64),
+            crash_budget_remaining: doc
+                .get("crash_budget_remaining")
+                .and_then(Json::as_i64)
+                .map(|b| b as u32),
+        })
+    }
+}
+
+/// A serializable point-in-time capture of run metrics plus fleet
+/// state. All counters are monotonic within a run; a sequence of
+/// snapshots is a time series.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct MetricsSnapshot {
+    /// UNIX microseconds at capture time.
+    pub unix_us: u64,
+    /// Seconds since the run started.
+    pub wall_secs: f64,
+    /// Terminal outcomes recorded so far (success + failure + cached).
+    pub tasks_total: u64,
+    /// Tasks that executed and succeeded.
+    pub tasks_succeeded: u64,
+    /// Tasks that exhausted retries and failed.
+    pub tasks_failed: u64,
+    /// Tasks satisfied from the result cache.
+    pub tasks_cached: u64,
+    /// Attempts that failed and were retried.
+    pub tasks_retried: u64,
+    /// Attempts killed by the per-task wall-clock timeout.
+    pub tasks_timed_out: u64,
+    /// Specs abandoned by a fail-fast abort.
+    pub tasks_skipped: u64,
+    /// Result-cache hits.
+    pub cache_hits: u64,
+    /// Result-cache misses.
+    pub cache_misses: u64,
+    /// Checkpoint batches flushed to disk.
+    pub checkpoint_flushes: u64,
+    /// Work-stealing dispatch chunks handed out.
+    pub dispatch_chunks: u64,
+    /// Tasks obtained by stealing from another worker's deque.
+    pub steals: u64,
+    /// Mean experiment execution time, seconds.
+    pub exec_mean_secs: f64,
+    /// Median experiment execution time, seconds.
+    pub exec_p50_secs: f64,
+    /// 95th-percentile experiment execution time, seconds.
+    pub exec_p95_secs: f64,
+    /// Median dispatch overhead (coordination cost per task), seconds.
+    pub dispatch_p50_secs: f64,
+    /// 95th-percentile dispatch overhead, seconds.
+    pub dispatch_p95_secs: f64,
+    /// Planned tasks not yet finished, restored, or skipped.
+    pub queue_depth: u64,
+    /// Windowed observed completion rate (tasks/second), `None` until
+    /// two spaced completions exist — the same window the ETA uses.
+    pub observed_rate: Option<f64>,
+    /// Per-worker rows, sorted by worker id.
+    pub workers: Vec<WorkerStat>,
+}
+
+impl MetricsSnapshot {
+    /// Captures a snapshot from the live run state. `progress` supplies
+    /// queue depth and the observed rate; `fleet` supplies per-worker
+    /// rows; both are optional so backends can report what they have.
+    pub fn capture(
+        metrics: &RunMetrics,
+        progress: Option<&ProgressState>,
+        fleet: Option<&FleetStats>,
+        wall_secs: f64,
+    ) -> MetricsSnapshot {
+        let unix_us = SystemTime::now()
+            .duration_since(UNIX_EPOCH)
+            .map(|d| d.as_micros() as u64)
+            .unwrap_or(0);
+        let (queue_depth, observed_rate) = match progress {
+            Some(p) => {
+                let (done, skipped, total) = p.snapshot_full();
+                let outstanding = total.saturating_sub(done + skipped + p.restored_count());
+                (outstanding as u64, p.recent_rate())
+            }
+            None => (0, None),
+        };
+        MetricsSnapshot {
+            unix_us,
+            wall_secs,
+            tasks_total: metrics.tasks_total.get(),
+            tasks_succeeded: metrics.tasks_succeeded.get(),
+            tasks_failed: metrics.tasks_failed.get(),
+            tasks_cached: metrics.tasks_cached.get(),
+            tasks_retried: metrics.tasks_retried.get(),
+            tasks_timed_out: metrics.tasks_timed_out.get(),
+            tasks_skipped: metrics.tasks_skipped.get(),
+            cache_hits: metrics.cache_hits.get(),
+            cache_misses: metrics.cache_misses.get(),
+            checkpoint_flushes: metrics.checkpoint_flushes.get(),
+            dispatch_chunks: metrics.dispatch_chunks.get(),
+            steals: metrics.steals.get(),
+            exec_mean_secs: metrics.exec_time.mean().as_secs_f64(),
+            exec_p50_secs: metrics.exec_time.percentile(0.50).as_secs_f64(),
+            exec_p95_secs: metrics.exec_time.percentile(0.95).as_secs_f64(),
+            dispatch_p50_secs: metrics.dispatch_overhead.percentile(0.50).as_secs_f64(),
+            dispatch_p95_secs: metrics.dispatch_overhead.percentile(0.95).as_secs_f64(),
+            queue_depth,
+            observed_rate,
+            workers: fleet.map(FleetStats::snapshot).unwrap_or_default(),
+        }
+    }
+
+    /// Serializes the snapshot as a flat JSON object (plus a `workers`
+    /// array).
+    pub fn to_json(&self) -> Json {
+        let mut fields = vec![
+            ("unix_us", Json::int(self.unix_us as i64)),
+            ("wall_secs", Json::num(self.wall_secs)),
+            ("tasks_total", Json::int(self.tasks_total as i64)),
+            ("tasks_succeeded", Json::int(self.tasks_succeeded as i64)),
+            ("tasks_failed", Json::int(self.tasks_failed as i64)),
+            ("tasks_cached", Json::int(self.tasks_cached as i64)),
+            ("tasks_retried", Json::int(self.tasks_retried as i64)),
+            ("tasks_timed_out", Json::int(self.tasks_timed_out as i64)),
+            ("tasks_skipped", Json::int(self.tasks_skipped as i64)),
+            ("cache_hits", Json::int(self.cache_hits as i64)),
+            ("cache_misses", Json::int(self.cache_misses as i64)),
+            ("checkpoint_flushes", Json::int(self.checkpoint_flushes as i64)),
+            ("dispatch_chunks", Json::int(self.dispatch_chunks as i64)),
+            ("steals", Json::int(self.steals as i64)),
+            ("exec_mean_secs", Json::num(self.exec_mean_secs)),
+            ("exec_p50_secs", Json::num(self.exec_p50_secs)),
+            ("exec_p95_secs", Json::num(self.exec_p95_secs)),
+            ("dispatch_p50_secs", Json::num(self.dispatch_p50_secs)),
+            ("dispatch_p95_secs", Json::num(self.dispatch_p95_secs)),
+            ("queue_depth", Json::int(self.queue_depth as i64)),
+            ("workers", Json::arr(self.workers.iter().map(WorkerStat::to_json).collect())),
+        ];
+        if let Some(rate) = self.observed_rate {
+            fields.push(("observed_rate", Json::num(rate)));
+        }
+        Json::obj(fields)
+    }
+
+    /// Parses a snapshot from its JSON form. Missing numeric fields
+    /// default to zero so older snapshots keep loading as the schema
+    /// grows (the same tolerant-reader pattern the wire protocol uses).
+    pub fn from_json(doc: &Json) -> Option<MetricsSnapshot> {
+        doc.as_obj()?;
+        let int = |key: &str| doc.get(key).and_then(Json::as_i64).unwrap_or(0) as u64;
+        let num = |key: &str| doc.get(key).and_then(Json::as_f64).unwrap_or(0.0);
+        let workers = match doc.get("workers") {
+            Some(Json::Arr(items)) => items.iter().filter_map(WorkerStat::from_json).collect(),
+            _ => Vec::new(),
+        };
+        Some(MetricsSnapshot {
+            unix_us: int("unix_us"),
+            wall_secs: num("wall_secs"),
+            tasks_total: int("tasks_total"),
+            tasks_succeeded: int("tasks_succeeded"),
+            tasks_failed: int("tasks_failed"),
+            tasks_cached: int("tasks_cached"),
+            tasks_retried: int("tasks_retried"),
+            tasks_timed_out: int("tasks_timed_out"),
+            tasks_skipped: int("tasks_skipped"),
+            cache_hits: int("cache_hits"),
+            cache_misses: int("cache_misses"),
+            checkpoint_flushes: int("checkpoint_flushes"),
+            dispatch_chunks: int("dispatch_chunks"),
+            steals: int("steals"),
+            exec_mean_secs: num("exec_mean_secs"),
+            exec_p50_secs: num("exec_p50_secs"),
+            exec_p95_secs: num("exec_p95_secs"),
+            dispatch_p50_secs: num("dispatch_p50_secs"),
+            dispatch_p95_secs: num("dispatch_p95_secs"),
+            queue_depth: int("queue_depth"),
+            observed_rate: doc.get("observed_rate").and_then(Json::as_f64),
+            workers,
+        })
+    }
+
+    /// Renders the snapshot as the text block `memento status` prints.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!(
+            "metrics: {} recorded ({} ok, {} failed, {} cached, {} skipped) in {:.2}s\n",
+            self.tasks_total,
+            self.tasks_succeeded,
+            self.tasks_failed,
+            self.tasks_cached,
+            self.tasks_skipped,
+            self.wall_secs
+        ));
+        out.push_str(&format!(
+            "  exec p50 {:.4}s  p95 {:.4}s  mean {:.4}s   dispatch p50 {:.6}s  p95 {:.6}s\n",
+            self.exec_p50_secs,
+            self.exec_p95_secs,
+            self.exec_mean_secs,
+            self.dispatch_p50_secs,
+            self.dispatch_p95_secs
+        ));
+        out.push_str(&format!(
+            "  queue depth {}   retries {}   timeouts {}   cache {}/{} hit\n",
+            self.queue_depth,
+            self.tasks_retried,
+            self.tasks_timed_out,
+            self.cache_hits,
+            self.cache_hits + self.cache_misses
+        ));
+        if let Some(rate) = self.observed_rate {
+            out.push_str(&format!("  observed rate {rate:.1} tasks/s\n"));
+        }
+        for w in &self.workers {
+            let hb = w
+                .heartbeat_age_secs
+                .map(|a| format!(", heard {a:.1}s ago"))
+                .unwrap_or_default();
+            let budget = w
+                .crash_budget_remaining
+                .map(|b| format!(", crash budget {b}"))
+                .unwrap_or_default();
+            out.push_str(&format!(
+                "  worker {:>3}: {} completed{hb}{budget}\n",
+                w.worker, w.completed
+            ));
+        }
+        out
+    }
+}
+
+/// Writes a snapshot to `dir/metrics.snap` atomically in the given
+/// storage format.
+pub fn write_snapshot(dir: &Path, snap: &MetricsSnapshot, format: WireFormat) -> io::Result<()> {
+    std::fs::create_dir_all(dir)?;
+    let bytes = codec::write_document(&snap.to_json(), format);
+    crate::util::fs::atomic_write(&dir.join(SNAPSHOT_FILE), &bytes)
+}
+
+/// Reads `dir/metrics.snap` back, auto-detecting the storage format.
+/// `None` when the file is absent or unreadable.
+pub fn read_snapshot(dir: &Path) -> Option<MetricsSnapshot> {
+    let bytes = std::fs::read(dir.join(SNAPSHOT_FILE)).ok()?;
+    let doc = codec::read_document(&bytes).ok()?;
+    MetricsSnapshot::from_json(&doc)
+}
+
+#[derive(Default)]
+struct WorkerEntry {
+    completed: u64,
+    last_seen: Option<Instant>,
+    budget_remaining: Option<u32>,
+}
+
+/// Live per-worker activity registry sampled by
+/// [`MetricsSnapshot::capture`]. Backends feed it what they know: the
+/// supervisor reports completions, heartbeats, and crash budgets per
+/// slot; the thread backend reports completions per pool thread.
+#[derive(Default)]
+pub struct FleetStats {
+    workers: Mutex<BTreeMap<u64, WorkerEntry>>,
+}
+
+impl FleetStats {
+    /// An empty registry.
+    pub fn new() -> FleetStats {
+        FleetStats::default()
+    }
+
+    /// Records one completed task on `worker` (also counts as hearing
+    /// from it).
+    pub fn task_completed(&self, worker: u64) {
+        let mut map = self.workers.lock().unwrap_or_else(|e| e.into_inner());
+        let entry = map.entry(worker).or_default();
+        entry.completed += 1;
+        entry.last_seen = Some(Instant::now());
+    }
+
+    /// Records a liveness signal (heartbeat frame, chunk pickup) from
+    /// `worker`.
+    pub fn heartbeat(&self, worker: u64) {
+        let mut map = self.workers.lock().unwrap_or_else(|e| e.into_inner());
+        map.entry(worker).or_default().last_seen = Some(Instant::now());
+    }
+
+    /// Updates the crash budget remaining on `worker`'s slot.
+    pub fn set_crash_budget_remaining(&self, worker: u64, remaining: u32) {
+        let mut map = self.workers.lock().unwrap_or_else(|e| e.into_inner());
+        map.entry(worker).or_default().budget_remaining = Some(remaining);
+    }
+
+    /// Freezes the registry into per-worker rows, sorted by worker id.
+    pub fn snapshot(&self) -> Vec<WorkerStat> {
+        let map = self.workers.lock().unwrap_or_else(|e| e.into_inner());
+        map.iter()
+            .map(|(worker, e)| WorkerStat {
+                worker: *worker,
+                completed: e.completed,
+                heartbeat_age_secs: e.last_seen.map(|t| t.elapsed().as_secs_f64()),
+                crash_budget_remaining: e.budget_remaining,
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> MetricsSnapshot {
+        MetricsSnapshot {
+            unix_us: 1_700_000_000_000_000,
+            wall_secs: 12.5,
+            tasks_total: 100,
+            tasks_succeeded: 90,
+            tasks_failed: 4,
+            tasks_cached: 6,
+            tasks_retried: 3,
+            tasks_timed_out: 1,
+            tasks_skipped: 0,
+            cache_hits: 6,
+            cache_misses: 94,
+            checkpoint_flushes: 10,
+            dispatch_chunks: 25,
+            steals: 7,
+            exec_mean_secs: 0.05,
+            exec_p50_secs: 0.04,
+            exec_p95_secs: 0.2,
+            dispatch_p50_secs: 0.0001,
+            dispatch_p95_secs: 0.001,
+            queue_depth: 12,
+            observed_rate: Some(8.25),
+            workers: vec![
+                WorkerStat {
+                    worker: 0,
+                    completed: 50,
+                    heartbeat_age_secs: Some(0.5),
+                    crash_budget_remaining: Some(2),
+                },
+                WorkerStat {
+                    worker: 1,
+                    completed: 44,
+                    heartbeat_age_secs: None,
+                    crash_budget_remaining: None,
+                },
+            ],
+        }
+    }
+
+    #[test]
+    fn snapshot_roundtrips_in_both_codec_formats() {
+        let original = sample();
+        for format in [WireFormat::Json, WireFormat::Binary] {
+            let bytes = codec::write_document(&original.to_json(), format);
+            let doc = codec::read_document(&bytes).expect("decode");
+            let back = MetricsSnapshot::from_json(&doc).expect("parse");
+            assert_eq!(back, original);
+        }
+    }
+
+    #[test]
+    fn snapshot_tolerates_missing_fields() {
+        let doc = crate::util::json::parse(r#"{"tasks_total":5}"#).unwrap();
+        let snap = MetricsSnapshot::from_json(&doc).expect("parse");
+        assert_eq!(snap.tasks_total, 5);
+        assert_eq!(snap.tasks_succeeded, 0);
+        assert_eq!(snap.observed_rate, None);
+        assert!(snap.workers.is_empty());
+    }
+
+    #[test]
+    fn snapshot_file_write_read_roundtrip() {
+        for format in [WireFormat::Json, WireFormat::Binary] {
+            let dir = crate::util::fs::TempDir::new("snap").expect("tempdir");
+            let original = sample();
+            write_snapshot(dir.path(), &original, format).expect("write");
+            let back = read_snapshot(dir.path()).expect("read");
+            assert_eq!(back, original);
+        }
+    }
+
+    #[test]
+    fn capture_reads_metrics_progress_and_fleet() {
+        let metrics = RunMetrics::default();
+        metrics.tasks_total.add(3);
+        metrics.tasks_succeeded.add(3);
+        metrics.exec_time.record(std::time::Duration::from_millis(10));
+
+        let progress = ProgressState::new(10);
+        progress.mark_done();
+        progress.mark_done();
+
+        let fleet = FleetStats::new();
+        fleet.task_completed(0);
+        fleet.task_completed(0);
+        fleet.task_completed(1);
+        fleet.set_crash_budget_remaining(1, 3);
+
+        let snap = MetricsSnapshot::capture(&metrics, Some(&progress), Some(&fleet), 1.0);
+        assert_eq!(snap.tasks_total, 3);
+        assert_eq!(snap.queue_depth, 8);
+        assert!(snap.exec_mean_secs > 0.0);
+        assert_eq!(snap.workers.len(), 2);
+        assert_eq!(snap.workers[0].completed, 2);
+        assert_eq!(snap.workers[1].crash_budget_remaining, Some(3));
+        assert!(snap.workers[0].heartbeat_age_secs.is_some());
+        assert!(!snap.render().is_empty());
+    }
+
+    #[test]
+    fn fleet_heartbeat_updates_age_without_completions() {
+        let fleet = FleetStats::new();
+        fleet.heartbeat(5);
+        let rows = fleet.snapshot();
+        assert_eq!(rows.len(), 1);
+        assert_eq!(rows[0].worker, 5);
+        assert_eq!(rows[0].completed, 0);
+        assert!(rows[0].heartbeat_age_secs.is_some());
+    }
+}

@@ -1,0 +1,985 @@
+//! Per-attempt span timelines: recording, persistence, and analysis.
+//!
+//! Every task attempt walks the state machine
+//!
+//! ```text
+//! queued ──→ dispatched ──→ exec_start ──→ exec_end ──→ recorded
+//!    └─────→ restored  ─────────────────────────────────→ recorded
+//! ```
+//!
+//! Each transition is one [`SpanEvent`] carrying a microsecond
+//! timestamp relative to the run's trace epoch. Recording goes through
+//! a [`Tracer`]: events land in per-thread striped buffers (the same
+//! zero-contention layout as `metrics::Timer`) and a sink thread
+//! drains them to an append-only trace file ([`TRACE_FILE`]) encoded
+//! with the storage codec — binary by default, one JSON object per
+//! line under `WireFormat::Json`, auto-detected record-by-record on
+//! read so mixed files stay readable.
+//!
+//! # Clock anchoring
+//!
+//! All timestamps come from one process-wide monotonic clock
+//! ([`monotonic_us`]). The tracer notes the wall-clock epoch
+//! (`wall_epoch_us`, UNIX microseconds) in the file header so separate
+//! runs can be placed on a calendar axis. Remote workers report
+//! `exec_start`/`exec_end` on *their* monotonic clocks; the supervisor
+//! maps those onto its own clock with a per-worker offset estimated at
+//! the `Ready` exchange before calling [`Tracer::record_mono`], so the
+//! persisted timeline is always on the coordinator's axis.
+
+use crate::util::codec::{self, WireFormat};
+use crate::util::json::{self, Json};
+use std::collections::BTreeMap;
+use std::fs::OpenOptions;
+use std::io::{self, BufWriter, Write};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant, SystemTime, UNIX_EPOCH};
+
+/// File name of the span log inside a trace directory. The name keeps
+/// the `.jsonl` suffix even for binary content (matching the cache and
+/// checkpoint stores, whose `.json` files hold tagged binary by
+/// default); readers auto-detect the encoding per record.
+pub const TRACE_FILE: &str = "trace.jsonl";
+
+/// Schema tag carried by the header record at the top of a trace file.
+pub const TRACE_SCHEMA: &str = "memento.trace/v1";
+
+/// Schema tag of the footer record appended when a tracer finishes; it
+/// carries the written-span and dropped-span counts so a reader can
+/// prove the file is complete.
+pub const TRACE_END_SCHEMA: &str = "memento.trace.end/v1";
+
+/// Number of independently locked span buffers (matches the reservoir
+/// striping in `metrics.rs`).
+const TRACE_STRIPES: usize = 16;
+
+/// How often the sink thread drains the stripes to disk.
+const FLUSH_INTERVAL: Duration = Duration::from_millis(25);
+
+/// Microseconds since the process-wide monotonic epoch (the first call
+/// in this process). Cheap, thread-safe, and never goes backwards —
+/// every local span timestamp and clock-offset estimate is derived
+/// from this single axis.
+pub fn monotonic_us() -> u64 {
+    static EPOCH: OnceLock<Instant> = OnceLock::new();
+    let epoch = *EPOCH.get_or_init(Instant::now);
+    Instant::now().duration_since(epoch).as_micros() as u64
+}
+
+/// A small stable identifier for the calling thread, assigned on first
+/// use. The thread backend uses it as the span `worker` id so per-
+/// worker utilization is meaningful without plumbing pool indices
+/// through the job closure.
+pub fn thread_worker_id() -> u64 {
+    static NEXT: AtomicU64 = AtomicU64::new(0);
+    thread_local! {
+        static ID: u64 = NEXT.fetch_add(1, Ordering::Relaxed);
+    }
+    ID.with(|id| *id)
+}
+
+/// One state in the per-attempt span timeline.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum SpanState {
+    /// The attempt is waiting for a worker (entered the dispatch queue).
+    Queued,
+    /// The attempt was handed to a worker (task frame written, or the
+    /// thread-backend job invoked).
+    Dispatched,
+    /// The attempt was satisfied from a checkpoint or cache restore and
+    /// never executed.
+    Restored,
+    /// The experiment function started executing (worker-side clock on
+    /// remote backends, mapped to the coordinator's axis).
+    ExecStart,
+    /// The experiment function returned or panicked.
+    ExecEnd,
+    /// The terminal outcome was recorded by the coordinator.
+    Recorded,
+}
+
+impl SpanState {
+    /// All states, in timeline order.
+    pub const ALL: [SpanState; 6] = [
+        SpanState::Queued,
+        SpanState::Dispatched,
+        SpanState::Restored,
+        SpanState::ExecStart,
+        SpanState::ExecEnd,
+        SpanState::Recorded,
+    ];
+
+    /// The wire/storage name of this state.
+    pub fn as_str(self) -> &'static str {
+        match self {
+            SpanState::Queued => "queued",
+            SpanState::Dispatched => "dispatched",
+            SpanState::Restored => "restored",
+            SpanState::ExecStart => "exec_start",
+            SpanState::ExecEnd => "exec_end",
+            SpanState::Recorded => "recorded",
+        }
+    }
+
+    /// Parses a wire/storage name back into a state.
+    pub fn parse(s: &str) -> Option<SpanState> {
+        SpanState::ALL.iter().copied().find(|st| st.as_str() == s)
+    }
+}
+
+/// One recorded state transition for one task attempt.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SpanEvent {
+    /// The task's position in the expansion order (`TaskSpec::index`).
+    pub index: u64,
+    /// Attempt number (1-based for executed attempts, 0 for restores).
+    pub attempt: u32,
+    /// Which transition this event records.
+    pub state: SpanState,
+    /// Microseconds since the trace epoch, on the coordinator's
+    /// monotonic axis.
+    pub t_us: u64,
+    /// Worker that owned the attempt at this transition, when known
+    /// (supervisor slot id, or [`thread_worker_id`] on threads).
+    pub worker: Option<u64>,
+    /// Optional human label (the task's `k=v` parameter string; set on
+    /// the `queued`/`restored` event only, to keep the file small).
+    pub label: Option<String>,
+}
+
+impl SpanEvent {
+    /// Serializes the event as a flat JSON object.
+    pub fn to_json(&self) -> Json {
+        let mut fields = vec![
+            ("index", Json::int(self.index as i64)),
+            ("attempt", Json::int(self.attempt as i64)),
+            ("state", Json::str(self.state.as_str())),
+            ("t_us", Json::int(self.t_us as i64)),
+        ];
+        if let Some(w) = self.worker {
+            fields.push(("worker", Json::int(w as i64)));
+        }
+        if let Some(l) = &self.label {
+            fields.push(("label", Json::str(l.clone())));
+        }
+        Json::obj(fields)
+    }
+
+    /// Parses an event from its JSON form; `None` when a required
+    /// field is missing or malformed.
+    pub fn from_json(doc: &Json) -> Option<SpanEvent> {
+        Some(SpanEvent {
+            index: doc.get("index")?.as_i64()? as u64,
+            attempt: doc.get("attempt")?.as_i64()? as u32,
+            state: SpanState::parse(doc.get("state")?.as_str()?)?,
+            t_us: doc.get("t_us")?.as_i64()? as u64,
+            worker: doc.get("worker").and_then(Json::as_i64).map(|w| w as u64),
+            label: doc.get("label").and_then(Json::as_str).map(str::to_string),
+        })
+    }
+}
+
+/// The header record at the top of a trace file.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TraceHeader {
+    /// Schema tag ([`TRACE_SCHEMA`]).
+    pub schema: String,
+    /// UNIX microseconds corresponding to trace-relative `t_us == 0`.
+    pub wall_epoch_us: u64,
+}
+
+/// Counts returned by [`Tracer::finish`].
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct TraceStats {
+    /// Span events written to the file by this tracer.
+    pub spans: u64,
+    /// Span events dropped (recorded after the sink had closed).
+    pub dropped: u64,
+}
+
+struct TraceShared {
+    stripes: Vec<Mutex<Vec<SpanEvent>>>,
+    dropped: AtomicU64,
+    closed: AtomicBool,
+}
+
+/// Records span events with near-zero contention and streams them to
+/// an append-only trace file via a background sink thread.
+///
+/// Create one per run with [`Tracer::create`]; call [`Tracer::finish`]
+/// (or drop it) to flush the stripes, append the footer record, and
+/// join the sink. Recording after `finish` increments the dropped
+/// counter instead of blocking.
+pub struct Tracer {
+    epoch_mono_us: u64,
+    shared: Arc<TraceShared>,
+    sink: Mutex<Option<JoinHandle<io::Result<u64>>>>,
+    path: PathBuf,
+}
+
+impl Tracer {
+    /// Opens (append-create) `dir/trace.jsonl`, writes a header record
+    /// anchoring the trace epoch to the wall clock, and starts the
+    /// sink thread. `format` selects the record encoding.
+    pub fn create(dir: &Path, format: WireFormat) -> io::Result<Tracer> {
+        std::fs::create_dir_all(dir)?;
+        let path = dir.join(TRACE_FILE);
+        let file = OpenOptions::new().create(true).append(true).open(&path)?;
+        let mut writer = BufWriter::new(file);
+
+        let epoch_mono_us = monotonic_us();
+        let wall_epoch_us = SystemTime::now()
+            .duration_since(UNIX_EPOCH)
+            .map(|d| d.as_micros() as u64)
+            .unwrap_or(0);
+        let header = Json::obj(vec![
+            ("schema", Json::str(TRACE_SCHEMA)),
+            ("wall_epoch_us", Json::int(wall_epoch_us as i64)),
+        ]);
+        write_record(&mut writer, &header, format)?;
+        writer.flush()?;
+
+        let shared = Arc::new(TraceShared {
+            stripes: (0..TRACE_STRIPES).map(|_| Mutex::new(Vec::new())).collect(),
+            dropped: AtomicU64::new(0),
+            closed: AtomicBool::new(false),
+        });
+        let sink_shared = Arc::clone(&shared);
+        let sink = std::thread::Builder::new()
+            .name("memento-trace-sink".into())
+            .spawn(move || sink_loop(sink_shared, writer, format))?;
+
+        Ok(Tracer {
+            epoch_mono_us,
+            shared,
+            sink: Mutex::new(Some(sink)),
+            path,
+        })
+    }
+
+    /// Path of the trace file this tracer appends to.
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    /// Microseconds since this tracer's epoch, on the local monotonic
+    /// clock.
+    pub fn now_us(&self) -> u64 {
+        monotonic_us().saturating_sub(self.epoch_mono_us)
+    }
+
+    /// Records a transition stamped with the current time.
+    pub fn record(
+        &self,
+        index: usize,
+        attempt: u32,
+        state: SpanState,
+        worker: Option<u64>,
+        label: Option<String>,
+    ) {
+        let t_us = self.now_us();
+        self.push(SpanEvent {
+            index: index as u64,
+            attempt,
+            state,
+            t_us,
+            worker,
+            label,
+        });
+    }
+
+    /// Records a transition at an explicit timestamp on the local
+    /// monotonic axis (as returned by [`monotonic_us`]). Used for
+    /// worker-reported exec timestamps after clock-offset mapping.
+    pub fn record_mono(
+        &self,
+        index: usize,
+        attempt: u32,
+        state: SpanState,
+        mono_us: u64,
+        worker: Option<u64>,
+    ) {
+        self.push(SpanEvent {
+            index: index as u64,
+            attempt,
+            state,
+            t_us: mono_us.saturating_sub(self.epoch_mono_us),
+            worker,
+            label: None,
+        });
+    }
+
+    /// Span events dropped so far (only possible after `finish`).
+    pub fn dropped(&self) -> u64 {
+        self.shared.dropped.load(Ordering::Relaxed)
+    }
+
+    /// Stops the sink thread, flushing all buffered spans and
+    /// appending the footer record. Idempotent: a second call returns
+    /// `spans: 0`.
+    pub fn finish(&self) -> io::Result<TraceStats> {
+        self.shared.closed.store(true, Ordering::SeqCst);
+        let handle = self.sink.lock().unwrap_or_else(|e| e.into_inner()).take();
+        let spans = match handle {
+            Some(h) => h.join().map_err(|_| io::Error::other("trace sink thread panicked"))??,
+            None => 0,
+        };
+        Ok(TraceStats {
+            spans,
+            dropped: self.shared.dropped.load(Ordering::Relaxed),
+        })
+    }
+
+    fn push(&self, event: SpanEvent) {
+        if self.shared.closed.load(Ordering::Relaxed) {
+            self.shared.dropped.fetch_add(1, Ordering::Relaxed);
+            return;
+        }
+        let stripe = thread_worker_id() as usize % TRACE_STRIPES;
+        let mut buf = self.shared.stripes[stripe]
+            .lock()
+            .unwrap_or_else(|e| e.into_inner());
+        buf.push(event);
+    }
+}
+
+impl Drop for Tracer {
+    fn drop(&mut self) {
+        let _ = self.finish();
+    }
+}
+
+fn write_record(
+    writer: &mut BufWriter<std::fs::File>,
+    doc: &Json,
+    format: WireFormat,
+) -> io::Result<()> {
+    match format {
+        WireFormat::Binary => writer.write_all(&codec::encode(doc)),
+        WireFormat::Json => {
+            writer.write_all(doc.to_string().as_bytes())?;
+            writer.write_all(b"\n")
+        }
+    }
+}
+
+fn sink_loop(
+    shared: Arc<TraceShared>,
+    mut writer: BufWriter<std::fs::File>,
+    format: WireFormat,
+) -> io::Result<u64> {
+    let mut written: u64 = 0;
+    loop {
+        let closing = shared.closed.load(Ordering::SeqCst);
+        for stripe in &shared.stripes {
+            let drained = {
+                let mut buf = stripe.lock().unwrap_or_else(|e| e.into_inner());
+                std::mem::take(&mut *buf)
+            };
+            for event in &drained {
+                write_record(&mut writer, &event.to_json(), format)?;
+                written += 1;
+            }
+        }
+        if closing {
+            let footer = Json::obj(vec![
+                ("schema", Json::str(TRACE_END_SCHEMA)),
+                ("spans", Json::int(written as i64)),
+                ("dropped", Json::int(shared.dropped.load(Ordering::Relaxed) as i64)),
+            ]);
+            write_record(&mut writer, &footer, format)?;
+            writer.flush()?;
+            return Ok(written);
+        }
+        std::thread::sleep(FLUSH_INTERVAL);
+    }
+}
+
+// ---- reading ------------------------------------------------------------
+
+/// A parsed trace file: header, span events in file order, and footer
+/// counts when the run finished cleanly.
+#[derive(Debug, Clone, Default)]
+pub struct TraceFile {
+    /// Header of the (first) tracer session in the file.
+    pub header: Option<TraceHeader>,
+    /// All span events, in the order the sink wrote them.
+    pub spans: Vec<SpanEvent>,
+    /// Sum of footer `spans` counts; `None` when no footer was found
+    /// (the run is still live, or died before `finish`).
+    pub footer_spans: Option<u64>,
+    /// Sum of footer `dropped` counts.
+    pub dropped: Option<u64>,
+}
+
+/// Reads and parses a trace file, auto-detecting binary vs JSON per
+/// record. Resumed runs append a fresh header/footer pair; all spans
+/// are merged and footer counts summed.
+pub fn read_trace(path: &Path) -> io::Result<TraceFile> {
+    let bytes = std::fs::read(path)?;
+    parse_trace(&bytes).map_err(io::Error::other)
+}
+
+/// Parses raw trace-file bytes; see [`read_trace`].
+pub fn parse_trace(bytes: &[u8]) -> Result<TraceFile, String> {
+    let mut out = TraceFile::default();
+    let mut pos = 0usize;
+    while pos < bytes.len() {
+        match bytes[pos] {
+            b'\n' | b'\r' | b' ' | b'\t' => {
+                pos += 1;
+                continue;
+            }
+            b if b == codec::BINARY_MAGIC => {
+                pos += 1;
+                let doc = codec::read_value(bytes, &mut pos, 0).map_err(|e| e.to_string())?;
+                classify(&doc, &mut out)?;
+            }
+            _ => {
+                let end = bytes[pos..]
+                    .iter()
+                    .position(|&c| c == b'\n')
+                    .map(|o| pos + o)
+                    .unwrap_or(bytes.len());
+                let line = std::str::from_utf8(&bytes[pos..end])
+                    .map_err(|e| format!("trace file is not UTF-8 at byte {pos}: {e}"))?;
+                pos = end;
+                let doc = json::parse(line.trim()).map_err(|e| format!("trace record: {e}"))?;
+                classify(&doc, &mut out)?;
+            }
+        }
+    }
+    Ok(out)
+}
+
+fn classify(doc: &Json, out: &mut TraceFile) -> Result<(), String> {
+    if let Some(schema) = doc.get("schema").and_then(Json::as_str) {
+        if schema == TRACE_SCHEMA {
+            let wall = doc.get("wall_epoch_us").and_then(Json::as_i64).unwrap_or(0) as u64;
+            if out.header.is_none() {
+                out.header = Some(TraceHeader {
+                    schema: schema.to_string(),
+                    wall_epoch_us: wall,
+                });
+            }
+        } else if schema == TRACE_END_SCHEMA {
+            let spans = doc.get("spans").and_then(Json::as_i64).unwrap_or(0) as u64;
+            let dropped = doc.get("dropped").and_then(Json::as_i64).unwrap_or(0) as u64;
+            out.footer_spans = Some(out.footer_spans.unwrap_or(0) + spans);
+            out.dropped = Some(out.dropped.unwrap_or(0) + dropped);
+        } else {
+            return Err(format!("unknown trace record schema: {schema}"));
+        }
+        return Ok(());
+    }
+    match SpanEvent::from_json(doc) {
+        Some(ev) => {
+            out.spans.push(ev);
+            Ok(())
+        }
+        None => Err(format!("malformed span record: {doc}")),
+    }
+}
+
+// ---- analysis -----------------------------------------------------------
+
+/// p50/p95 of one timeline phase across all attempts that have it.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct PhaseStats {
+    /// Median duration of the phase, microseconds.
+    pub p50_us: u64,
+    /// 95th-percentile duration, microseconds.
+    pub p95_us: u64,
+    /// Number of attempts contributing samples.
+    pub samples: usize,
+}
+
+/// Per-worker activity derived from exec spans.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct WorkerUtil {
+    /// Worker id (supervisor slot or thread-backend id).
+    pub worker: u64,
+    /// Attempts whose exec window ran on this worker.
+    pub completed: u64,
+    /// Total microseconds spent inside exec windows.
+    pub busy_us: u64,
+    /// `busy_us` over the whole trace span, in `[0, 1]`.
+    pub utilization: f64,
+}
+
+/// One attempt highlighted by the analysis (straggler or critical
+/// path).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Straggler {
+    /// Expansion index of the task.
+    pub index: u64,
+    /// Attempt number.
+    pub attempt: u32,
+    /// Exec-window duration, microseconds.
+    pub exec_us: u64,
+    /// The task's parameter label when the trace carried one.
+    pub label: Option<String>,
+}
+
+/// Aggregate view of a trace produced by [`summarize`].
+#[derive(Debug, Clone, Default)]
+pub struct TraceSummary {
+    /// Distinct `(index, attempt)` pairs in the trace.
+    pub attempts: usize,
+    /// Executed attempts carrying the full five-state sequence.
+    pub complete: usize,
+    /// Attempts satisfied by restore instead of execution.
+    pub restored: usize,
+    /// Whole-trace span (first to last event), microseconds.
+    pub span_us: u64,
+    /// `queued → dispatched` wait.
+    pub queue_wait: PhaseStats,
+    /// `dispatched → exec_start` latency (frame + pickup).
+    pub dispatch_lag: PhaseStats,
+    /// `exec_start → exec_end` (the experiment function itself).
+    pub exec: PhaseStats,
+    /// `exec_end → recorded` latency (result return + bookkeeping).
+    pub record_lag: PhaseStats,
+    /// Per-worker utilization, sorted by worker id.
+    pub workers: Vec<WorkerUtil>,
+    /// The attempt whose `recorded` timestamp is latest — the tail the
+    /// run waited on.
+    pub critical_path: Option<Straggler>,
+    /// Top attempts by exec duration, longest first.
+    pub stragglers: Vec<Straggler>,
+}
+
+#[derive(Default, Clone)]
+struct AttemptTimeline {
+    queued: Option<u64>,
+    dispatched: Option<u64>,
+    restored: Option<u64>,
+    exec_start: Option<u64>,
+    exec_end: Option<u64>,
+    recorded: Option<u64>,
+    worker: Option<u64>,
+    label: Option<String>,
+}
+
+fn group_timelines(spans: &[SpanEvent]) -> BTreeMap<(u64, u32), AttemptTimeline> {
+    let mut map: BTreeMap<(u64, u32), AttemptTimeline> = BTreeMap::new();
+    for ev in spans {
+        let tl = map.entry((ev.index, ev.attempt)).or_default();
+        let slot = match ev.state {
+            SpanState::Queued => &mut tl.queued,
+            SpanState::Dispatched => &mut tl.dispatched,
+            SpanState::Restored => &mut tl.restored,
+            SpanState::ExecStart => &mut tl.exec_start,
+            SpanState::ExecEnd => &mut tl.exec_end,
+            SpanState::Recorded => &mut tl.recorded,
+        };
+        if slot.is_none() {
+            *slot = Some(ev.t_us);
+        }
+        if tl.worker.is_none() {
+            tl.worker = ev.worker;
+        }
+        if tl.label.is_none() {
+            tl.label = ev.label.clone();
+        }
+    }
+    map
+}
+
+fn percentile_us(sorted: &[u64], p: f64) -> u64 {
+    if sorted.is_empty() {
+        return 0;
+    }
+    let idx = ((sorted.len() - 1) as f64 * p).round() as usize;
+    sorted[idx.min(sorted.len() - 1)]
+}
+
+fn phase_stats(mut samples: Vec<u64>) -> PhaseStats {
+    samples.sort_unstable();
+    PhaseStats {
+        p50_us: percentile_us(&samples, 0.50),
+        p95_us: percentile_us(&samples, 0.95),
+        samples: samples.len(),
+    }
+}
+
+/// Builds a [`TraceSummary`] from raw span events, keeping the
+/// `top_k` longest exec windows as stragglers.
+pub fn summarize(spans: &[SpanEvent], top_k: usize) -> TraceSummary {
+    let timelines = group_timelines(spans);
+    let mut summary = TraceSummary {
+        attempts: timelines.len(),
+        ..TraceSummary::default()
+    };
+    if spans.is_empty() {
+        return summary;
+    }
+    let t_min = spans.iter().map(|e| e.t_us).min().unwrap_or(0);
+    let t_max = spans.iter().map(|e| e.t_us).max().unwrap_or(0);
+    summary.span_us = t_max.saturating_sub(t_min);
+
+    let mut queue_wait = Vec::new();
+    let mut dispatch_lag = Vec::new();
+    let mut exec = Vec::new();
+    let mut record_lag = Vec::new();
+    let mut workers: BTreeMap<u64, (u64, u64)> = BTreeMap::new();
+    let mut execs: Vec<Straggler> = Vec::new();
+
+    for ((index, attempt), tl) in &timelines {
+        if tl.restored.is_some() {
+            summary.restored += 1;
+        }
+        if let (Some(q), Some(d)) = (tl.queued, tl.dispatched) {
+            queue_wait.push(d.saturating_sub(q));
+        }
+        if let (Some(d), Some(s)) = (tl.dispatched, tl.exec_start) {
+            dispatch_lag.push(s.saturating_sub(d));
+        }
+        if let (Some(e), Some(r)) = (tl.exec_end, tl.recorded) {
+            record_lag.push(r.saturating_sub(e));
+        }
+        if let (Some(s), Some(e)) = (tl.exec_start, tl.exec_end) {
+            let dur = e.saturating_sub(s);
+            exec.push(dur);
+            let w = workers.entry(tl.worker.unwrap_or(0)).or_insert((0, 0));
+            w.0 += 1;
+            w.1 += dur;
+            execs.push(Straggler {
+                index: *index,
+                attempt: *attempt,
+                exec_us: dur,
+                label: tl.label.clone(),
+            });
+            if tl.queued.is_some() && tl.dispatched.is_some() && tl.recorded.is_some() {
+                summary.complete += 1;
+            }
+        }
+    }
+
+    summary.queue_wait = phase_stats(queue_wait);
+    summary.dispatch_lag = phase_stats(dispatch_lag);
+    summary.exec = phase_stats(exec);
+    summary.record_lag = phase_stats(record_lag);
+
+    let span = summary.span_us.max(1) as f64;
+    summary.workers = workers
+        .into_iter()
+        .map(|(worker, (completed, busy_us))| WorkerUtil {
+            worker,
+            completed,
+            busy_us,
+            utilization: busy_us as f64 / span,
+        })
+        .collect();
+
+    summary.critical_path = timelines
+        .iter()
+        .filter_map(|((i, a), tl)| tl.recorded.map(|r| (r, *i, *a, tl)))
+        .max_by_key(|(r, ..)| *r)
+        .map(|(_, index, attempt, tl)| Straggler {
+            index,
+            attempt,
+            exec_us: match (tl.exec_start, tl.exec_end) {
+                (Some(s), Some(e)) => e.saturating_sub(s),
+                _ => 0,
+            },
+            label: tl.label.clone(),
+        });
+
+    execs.sort_by(|a, b| b.exec_us.cmp(&a.exec_us));
+    execs.truncate(top_k);
+    summary.stragglers = execs;
+    summary
+}
+
+fn fmt_us(us: u64) -> String {
+    if us < 1_000 {
+        format!("{us}us")
+    } else if us < 1_000_000 {
+        format!("{:.1}ms", us as f64 / 1_000.0)
+    } else {
+        format!("{:.3}s", us as f64 / 1_000_000.0)
+    }
+}
+
+impl TraceSummary {
+    /// Renders the summary as the multi-line text block printed by
+    /// `memento trace summarize` and `memento status`.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!(
+            "trace: {} attempts ({} complete, {} restored) over {}\n",
+            self.attempts,
+            self.complete,
+            self.restored,
+            fmt_us(self.span_us)
+        ));
+        for (name, ph) in [
+            ("queue wait  ", &self.queue_wait),
+            ("dispatch lag", &self.dispatch_lag),
+            ("exec        ", &self.exec),
+            ("record lag  ", &self.record_lag),
+        ] {
+            out.push_str(&format!(
+                "  {name}  p50 {:>8}  p95 {:>8}  ({} samples)\n",
+                fmt_us(ph.p50_us),
+                fmt_us(ph.p95_us),
+                ph.samples
+            ));
+        }
+        out.push_str(&format!("  workers: {}\n", self.workers.len()));
+        for w in &self.workers {
+            out.push_str(&format!(
+                "    worker {:>3}: {} tasks, busy {:>5.1}% ({})\n",
+                w.worker,
+                w.completed,
+                w.utilization * 100.0,
+                fmt_us(w.busy_us)
+            ));
+        }
+        if let Some(cp) = &self.critical_path {
+            out.push_str(&format!(
+                "  critical path: task {} attempt {} (exec {}{})\n",
+                cp.index,
+                cp.attempt,
+                fmt_us(cp.exec_us),
+                cp.label
+                    .as_deref()
+                    .map(|l| format!(", {l}"))
+                    .unwrap_or_default()
+            ));
+        }
+        if !self.stragglers.is_empty() {
+            out.push_str("  stragglers:\n");
+            for s in &self.stragglers {
+                out.push_str(&format!(
+                    "    task {} attempt {}: exec {}{}\n",
+                    s.index,
+                    s.attempt,
+                    fmt_us(s.exec_us),
+                    s.label
+                        .as_deref()
+                        .map(|l| format!(" [{l}]"))
+                        .unwrap_or_default()
+                ));
+            }
+        }
+        out
+    }
+}
+
+/// Converts a trace into Chrome trace-event JSON (the
+/// `{"traceEvents": [...]}` form Perfetto and `chrome://tracing`
+/// load). Each attempt contributes a `queue` slice (queued →
+/// exec start) and an `exec` slice (the experiment function), placed
+/// on the worker's track.
+pub fn chrome_trace(header: Option<&TraceHeader>, spans: &[SpanEvent]) -> Json {
+    let timelines = group_timelines(spans);
+    let mut events = Vec::new();
+    for ((index, attempt), tl) in &timelines {
+        let tid = Json::int(tl.worker.unwrap_or(0) as i64);
+        let name = tl.label.clone().unwrap_or_else(|| format!("task {index}"));
+        let args = Json::obj(vec![
+            ("index", Json::int(*index as i64)),
+            ("attempt", Json::int(*attempt as i64)),
+        ]);
+        if let (Some(q), Some(s)) = (tl.queued, tl.exec_start.or(tl.dispatched)) {
+            if s > q {
+                events.push(Json::obj(vec![
+                    ("name", Json::str(format!("{name} (wait)"))),
+                    ("cat", Json::str("queue")),
+                    ("ph", Json::str("X")),
+                    ("ts", Json::int(q as i64)),
+                    ("dur", Json::int((s - q) as i64)),
+                    ("pid", Json::int(0)),
+                    ("tid", tid.clone()),
+                    ("args", args.clone()),
+                ]));
+            }
+        }
+        if let (Some(s), Some(e)) = (tl.exec_start, tl.exec_end) {
+            events.push(Json::obj(vec![
+                ("name", Json::str(name.clone())),
+                ("cat", Json::str("exec")),
+                ("ph", Json::str("X")),
+                ("ts", Json::int(s as i64)),
+                ("dur", Json::int(e.saturating_sub(s) as i64)),
+                ("pid", Json::int(0)),
+                ("tid", tid),
+                ("args", args),
+            ]));
+        }
+    }
+    let mut fields = vec![
+        ("displayTimeUnit", Json::str("ms")),
+        ("traceEvents", Json::arr(events)),
+    ];
+    if let Some(h) = header {
+        fields.push((
+            "metadata",
+            Json::obj(vec![
+                ("schema", Json::str(h.schema.clone())),
+                ("wall_epoch_us", Json::int(h.wall_epoch_us as i64)),
+            ]),
+        ));
+    }
+    Json::obj(fields)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::fs::TempDir;
+
+    fn ev(index: u64, attempt: u32, state: SpanState, t_us: u64) -> SpanEvent {
+        SpanEvent {
+            index,
+            attempt,
+            state,
+            t_us,
+            worker: Some(index % 2),
+            label: (state == SpanState::Queued).then(|| format!("k={index}")),
+        }
+    }
+
+    #[test]
+    fn span_event_json_roundtrip_both_formats() {
+        let original = SpanEvent {
+            index: 42,
+            attempt: 3,
+            state: SpanState::ExecStart,
+            t_us: 123_456_789,
+            worker: Some(7),
+            label: Some("lr=0.1,model=svc".to_string()),
+        };
+        for format in [WireFormat::Json, WireFormat::Binary] {
+            let bytes = codec::write_document(&original.to_json(), format);
+            let doc = codec::read_document(&bytes).expect("decode");
+            let back = SpanEvent::from_json(&doc).expect("parse");
+            assert_eq!(back, original);
+        }
+    }
+
+    #[test]
+    fn span_event_json_tolerates_missing_optionals() {
+        let doc = json::parse(r#"{"index":1,"attempt":1,"state":"queued","t_us":10}"#).unwrap();
+        let ev = SpanEvent::from_json(&doc).expect("parse");
+        assert_eq!(ev.worker, None);
+        assert_eq!(ev.label, None);
+    }
+
+    #[test]
+    fn tracer_writes_readable_file_in_both_formats() {
+        for format in [WireFormat::Binary, WireFormat::Json] {
+            let dir = TempDir::new("trace").expect("tempdir");
+            let tracer = Tracer::create(dir.path(), format).expect("create");
+            for i in 0..10usize {
+                tracer.record(i, 1, SpanState::Queued, None, Some(format!("k={i}")));
+                tracer.record(i, 1, SpanState::Dispatched, Some(0), None);
+                tracer.record(i, 1, SpanState::ExecStart, Some(0), None);
+                tracer.record(i, 1, SpanState::ExecEnd, Some(0), None);
+                tracer.record(i, 1, SpanState::Recorded, None, None);
+            }
+            let stats = tracer.finish().expect("finish");
+            assert_eq!(stats.spans, 50);
+            assert_eq!(stats.dropped, 0);
+
+            let parsed = read_trace(&dir.path().join(TRACE_FILE)).expect("read");
+            assert_eq!(parsed.spans.len(), 50);
+            assert_eq!(parsed.footer_spans, Some(50));
+            assert_eq!(parsed.dropped, Some(0));
+            let header = parsed.header.expect("header");
+            assert_eq!(header.schema, TRACE_SCHEMA);
+            assert!(header.wall_epoch_us > 0);
+        }
+    }
+
+    #[test]
+    fn tracer_counts_drops_after_finish() {
+        let dir = TempDir::new("trace-drop").expect("tempdir");
+        let tracer = Tracer::create(dir.path(), WireFormat::Binary).expect("create");
+        tracer.finish().expect("finish");
+        tracer.record(0, 1, SpanState::Queued, None, None);
+        assert_eq!(tracer.dropped(), 1);
+    }
+
+    #[test]
+    fn tracer_records_across_threads_without_loss() {
+        let dir = TempDir::new("trace-mt").expect("tempdir");
+        let tracer = Arc::new(Tracer::create(dir.path(), WireFormat::Binary).expect("create"));
+        let mut handles = Vec::new();
+        for t in 0..8usize {
+            let tr = Arc::clone(&tracer);
+            handles.push(std::thread::spawn(move || {
+                for i in 0..100usize {
+                    tr.record(t * 100 + i, 1, SpanState::Recorded, None, None);
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        let stats = tracer.finish().expect("finish");
+        assert_eq!(stats.spans, 800);
+        assert_eq!(stats.dropped, 0);
+        let parsed = read_trace(&dir.path().join(TRACE_FILE)).expect("read");
+        assert_eq!(parsed.spans.len(), 800);
+    }
+
+    #[test]
+    fn summarize_reports_phases_workers_and_stragglers() {
+        let mut spans = Vec::new();
+        for i in 0..4u64 {
+            let base = i * 1_000;
+            spans.push(ev(i, 1, SpanState::Queued, base));
+            spans.push(ev(i, 1, SpanState::Dispatched, base + 100));
+            spans.push(ev(i, 1, SpanState::ExecStart, base + 150));
+            spans.push(ev(i, 1, SpanState::ExecEnd, base + 150 + (i + 1) * 200));
+            spans.push(ev(i, 1, SpanState::Recorded, base + 150 + (i + 1) * 200 + 50));
+        }
+        let s = summarize(&spans, 2);
+        assert_eq!(s.attempts, 4);
+        assert_eq!(s.complete, 4);
+        assert_eq!(s.restored, 0);
+        assert_eq!(s.queue_wait.samples, 4);
+        assert_eq!(s.queue_wait.p50_us, 100);
+        assert_eq!(s.exec.samples, 4);
+        assert_eq!(s.workers.len(), 2);
+        assert_eq!(s.stragglers.len(), 2);
+        assert_eq!(s.stragglers[0].index, 3);
+        assert_eq!(s.stragglers[0].exec_us, 800);
+        let cp = s.critical_path.expect("critical path");
+        assert_eq!(cp.index, 3);
+        assert!(!s.render().is_empty());
+    }
+
+    #[test]
+    fn chrome_export_emits_complete_events() {
+        let spans = vec![
+            ev(0, 1, SpanState::Queued, 0),
+            ev(0, 1, SpanState::Dispatched, 10),
+            ev(0, 1, SpanState::ExecStart, 20),
+            ev(0, 1, SpanState::ExecEnd, 120),
+            ev(0, 1, SpanState::Recorded, 130),
+        ];
+        let header = TraceHeader {
+            schema: TRACE_SCHEMA.to_string(),
+            wall_epoch_us: 1_700_000_000_000_000,
+        };
+        let doc = chrome_trace(Some(&header), &spans);
+        let events = doc.get("traceEvents").and_then(|j| match j {
+            Json::Arr(items) => Some(items),
+            _ => None,
+        });
+        let events = events.expect("traceEvents array");
+        assert_eq!(events.len(), 2);
+        for e in events {
+            assert_eq!(e.get("ph").and_then(Json::as_str), Some("X"));
+            assert!(e.get("dur").and_then(Json::as_i64).unwrap_or(-1) >= 0);
+        }
+        assert!(doc.get("metadata").is_some());
+    }
+}

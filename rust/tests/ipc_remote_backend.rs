@@ -278,6 +278,7 @@ fn v2_json_only_worker_completes_a_run_against_a_v3_pool() {
                 spawn: 0,
                 protocol: 2, // the v2 declaration under test
                 token: Some(TOKEN.to_string()),
+                clock_us: None, // v2 predates the observability fields
             },
         )
         .unwrap();
@@ -302,6 +303,8 @@ fn v2_json_only_worker_completes_a_run_against_a_v3_pool() {
                             index,
                             attempt,
                             duration_secs: 0.01,
+                            exec_start_us: None,
+                            exec_end_us: None,
                             result: WireResult::Ok { value: Json::int(i * 10) },
                         },
                     )

@@ -1,0 +1,357 @@
+//! Integration tests for the observability layer (`memento::obs`):
+//! backend parity of span timelines, live telemetry events, the
+//! persisted final snapshot, and graceful degradation against a pre-v4
+//! (no exec-timestamp) remote peer.
+//!
+//! The backend-parity test runs the same matrix over in-process
+//! threads, spawned worker processes, and loopback-TCP remote workers,
+//! and requires every executed attempt to carry the full
+//! `queued → dispatched → exec_start → exec_end → recorded` sequence
+//! with zero dropped spans on all three tiers.
+
+#![cfg(unix)]
+
+use memento::coordinator::memento::ExpFn;
+use memento::coordinator::run::RunEvent;
+use memento::ipc::pool::{PoolOptions, WorkerPool};
+use memento::ipc::transport::Transport;
+use memento::ipc::worker::{serve_remote, RemoteServeReport, RemoteWorkerOptions};
+use memento::obs::snapshot::read_snapshot;
+use memento::obs::trace::{read_trace, TraceFile, TRACE_FILE};
+use memento::prelude::*;
+use memento::util::codec::WireFormat;
+use memento::util::fs::TempDir;
+use std::collections::{BTreeMap, BTreeSet};
+use std::path::Path;
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+const TOKEN: &str = "obs-trace-token";
+
+fn exp(ctx: &TaskContext) -> Result<Json, MementoError> {
+    let i = ctx.param_i64("i")?;
+    Ok(Json::int(i * 10))
+}
+
+/// Worker entry for the spawned-process run: the supervisor re-executes
+/// this test binary with a libtest filter selecting this function. No-op
+/// in a normal test pass.
+#[test]
+fn obs_trace_worker_entry() {
+    if !memento::ipc::worker::active() {
+        return;
+    }
+    memento::ipc::worker::serve(Arc::new(exp)).expect("worker serve");
+    std::process::exit(0);
+}
+
+fn matrix(n: i64) -> ConfigMatrix {
+    ConfigMatrix::builder()
+        .param("i", (0..n).map(pv_int).collect())
+        .build()
+        .unwrap()
+}
+
+fn tcp_pool() -> Arc<WorkerPool> {
+    WorkerPool::listen(
+        &Transport::Tcp { bind: "127.0.0.1:0".to_string() },
+        PoolOptions { token: Some(TOKEN.to_string()), ..PoolOptions::default() },
+    )
+    .unwrap()
+}
+
+fn spawn_worker(
+    pool: &Arc<WorkerPool>,
+    max_connections: Option<usize>,
+) -> JoinHandle<Result<RemoteServeReport, MementoError>> {
+    let endpoint = pool.endpoint().clone();
+    std::thread::spawn(move || {
+        let exp_fn: Arc<ExpFn> = Arc::new(exp);
+        serve_remote(
+            exp_fn,
+            &endpoint,
+            RemoteWorkerOptions {
+                token: Some(TOKEN.to_string()),
+                max_connections,
+                give_up_after: Some(Duration::from_secs(1)),
+                quiet: true,
+                ..RemoteWorkerOptions::default()
+            },
+        )
+    })
+}
+
+/// Per-attempt view of a trace: the first timestamp seen for each state.
+type Timelines = BTreeMap<(u64, u32), BTreeMap<&'static str, u64>>;
+
+fn timelines(trace: &TraceFile) -> Timelines {
+    let mut map: Timelines = BTreeMap::new();
+    for ev in &trace.spans {
+        map.entry((ev.index, ev.attempt))
+            .or_default()
+            .entry(ev.state.as_str())
+            .or_insert(ev.t_us);
+    }
+    map
+}
+
+/// The acceptance gate shared by every backend: the trace is sealed
+/// (footer present, counts match, zero drops) and every one of the `n`
+/// tasks has an executed attempt carrying the full five-state sequence.
+fn assert_complete_trace(dir: &Path, n: usize) -> TraceFile {
+    let trace = read_trace(&dir.join(TRACE_FILE)).expect("read trace");
+    assert_eq!(trace.dropped, Some(0), "zero dropped spans");
+    assert_eq!(
+        trace.footer_spans.map(|s| s as usize),
+        Some(trace.spans.len()),
+        "footer count must match the spans on disk"
+    );
+    assert!(trace.header.is_some(), "header record present");
+
+    let tls = timelines(&trace);
+    let executed: Vec<_> = tls.iter().filter(|((_, attempt), _)| *attempt >= 1).collect();
+    assert_eq!(executed.len(), n, "one executed attempt per task");
+    let indices: BTreeSet<u64> = executed.iter().map(|((i, _), _)| *i).collect();
+    assert_eq!(indices.len(), n, "every task index appears");
+    for ((i, a), tl) in executed {
+        for need in ["queued", "dispatched", "exec_start", "exec_end", "recorded"] {
+            assert!(tl.contains_key(need), "task {i} attempt {a} missing {need}: {tl:?}");
+        }
+        assert!(
+            tl["exec_end"] >= tl["exec_start"],
+            "task {i} attempt {a}: exec window inverted ({tl:?})"
+        );
+    }
+    trace
+}
+
+/// The tentpole acceptance test: the same 20-task run on all three
+/// execution tiers produces a complete, merged span timeline — remote
+/// exec timestamps land on the coordinator's clock axis via the
+/// per-worker offset estimated at the Ready exchange.
+#[test]
+fn all_three_backends_produce_complete_span_timelines() {
+    let td = TempDir::new("obs-parity").unwrap();
+    let m = matrix(20);
+
+    let tdir = td.join("threads");
+    let results = Memento::new(exp).workers(3).trace_to(&tdir).run(&m).unwrap();
+    assert_eq!(results.n_failed(), 0);
+    assert_complete_trace(&tdir, 20);
+
+    let pdir = td.join("process");
+    let results = Memento::new(exp)
+        .isolate_processes(2, 1)
+        .worker_args(vec!["--exact".to_string(), "obs_trace_worker_entry".to_string()])
+        .trace_to(&pdir)
+        .run(&m)
+        .unwrap();
+    assert_eq!(results.n_failed(), 0);
+    assert_complete_trace(&pdir, 20);
+
+    let rdir = td.join("remote");
+    let pool = tcp_pool();
+    let worker = spawn_worker(&pool, Some(1));
+    let results = Memento::new(exp)
+        .with_worker_pool(Arc::clone(&pool))
+        .remote_workers("unused: pool owns the listener", 1)
+        .trace_to(&rdir)
+        .run(&m)
+        .unwrap();
+    pool.shutdown();
+    worker.join().unwrap().unwrap();
+    assert_eq!(results.n_failed(), 0);
+    let trace = assert_complete_trace(&rdir, 20);
+    // Remote exec spans are attributed to the worker that ran them.
+    for ev in &trace.spans {
+        if matches!(ev.state, SpanState::ExecStart | SpanState::ExecEnd) {
+            assert!(ev.worker.is_some(), "remote exec span missing worker id: {ev:?}");
+        }
+    }
+}
+
+/// Restored tasks get the short `queued → restored → recorded` timeline
+/// (attempt 0) instead of an execution window.
+#[test]
+fn restored_tasks_trace_the_restore_timeline() {
+    let td = TempDir::new("obs-restore").unwrap();
+    let cache = td.join("cache");
+    let m = matrix(6);
+    Memento::new(exp).workers(2).with_cache_dir(&cache).run(&m).unwrap();
+
+    let tdir = td.join("trace");
+    let results = Memento::new(exp)
+        .workers(2)
+        .with_cache_dir(&cache)
+        .trace_to(&tdir)
+        .run(&m)
+        .unwrap();
+    assert_eq!(results.n_cached(), 6);
+
+    let trace = read_trace(&tdir.join(TRACE_FILE)).expect("read trace");
+    assert_eq!(trace.dropped, Some(0));
+    let tls = timelines(&trace);
+    assert_eq!(tls.len(), 6, "one attempt-0 timeline per restored task");
+    for ((i, attempt), tl) in &tls {
+        assert_eq!(*attempt, 0, "restores record attempt 0");
+        for need in ["queued", "restored", "recorded"] {
+            assert!(tl.contains_key(need), "task {i} missing {need}: {tl:?}");
+        }
+        assert!(!tl.contains_key("exec_start"), "restores never execute");
+    }
+}
+
+/// Live telemetry: the sampler emits coalescable `Telemetry` events
+/// while the run is in flight, the terminal `RunSummary` carries the
+/// full final snapshot, and the snapshot is persisted beside the trace
+/// for `memento status`.
+#[test]
+fn telemetry_streams_and_final_snapshot_lands_everywhere() {
+    let td = TempDir::new("obs-telemetry").unwrap();
+    let tdir = td.join("trace");
+    let slow: fn(&TaskContext) -> Result<Json, MementoError> = |ctx| {
+        std::thread::sleep(Duration::from_millis(10));
+        Ok(Json::int(ctx.param_i64("i")?))
+    };
+    let run = Memento::new(slow)
+        .workers(4)
+        .telemetry_every(Duration::from_millis(5))
+        .trace_to(&tdir)
+        .launch(&matrix(20))
+        .unwrap();
+
+    let mut telemetry = 0usize;
+    let mut last_snapshot = None;
+    let mut final_summary = None;
+    for event in run.events() {
+        match event {
+            RunEvent::Telemetry(snap) => {
+                telemetry += 1;
+                last_snapshot = Some(snap);
+            }
+            RunEvent::RunComplete(summary) => final_summary = Some(summary),
+            _ => {}
+        }
+    }
+    run.collect().unwrap();
+
+    assert!(telemetry >= 1, "sampler fired at least once");
+    let live = last_snapshot.expect("at least one live snapshot");
+    assert!(live.tasks_total <= 20);
+
+    let summary = final_summary.expect("RunComplete observed");
+    let metrics = summary.metrics.expect("final snapshot on the summary");
+    assert_eq!(metrics.tasks_succeeded, 20);
+    assert_eq!(metrics.queue_depth, 0, "nothing outstanding at the end");
+    assert!(!metrics.workers.is_empty(), "fleet rows populated");
+    assert!(metrics.workers.iter().map(|w| w.completed).sum::<u64>() >= 20);
+
+    let persisted = read_snapshot(&tdir).expect("metrics.snap beside the trace");
+    assert_eq!(persisted.tasks_succeeded, 20);
+}
+
+/// Reads one frame the way the JSON-wire peer below does: length
+/// prefix, then a payload that must be JSON text (the run is pinned to
+/// `--wire json`, so a binary frame here is a bug).
+fn read_json_frame(r: &mut dyn std::io::Read) -> Option<memento::ipc::proto::Msg> {
+    use std::io::Read as _;
+    let mut len = [0u8; 4];
+    if r.read_exact(&mut len).is_err() {
+        return None; // connection closed after Shutdown
+    }
+    let mut payload = vec![0u8; u32::from_be_bytes(len) as usize];
+    r.read_exact(&mut payload).unwrap();
+    assert_ne!(
+        payload[0],
+        memento::util::codec::BINARY_MAGIC,
+        "supervisor sent a binary frame on a JSON-wire run"
+    );
+    let text = std::str::from_utf8(&payload).expect("JSON frames are UTF-8");
+    memento::ipc::proto::Msg::from_json(&memento::util::json::parse(text).unwrap())
+}
+
+/// Protocol degradation: a v3 peer — registers without `clock_us`,
+/// returns outcomes without exec timestamps — still completes a traced
+/// run. The supervisor synthesizes the exec window from the reported
+/// `duration_secs` on its own clock, so the timeline stays complete.
+#[test]
+fn v3_peer_without_exec_timestamps_degrades_to_synthesized_spans() {
+    use memento::ipc::proto::{write_frame, Msg, WireResult};
+
+    let td = TempDir::new("obs-v3").unwrap();
+    let pool = tcp_pool();
+    let endpoint = pool.endpoint().clone();
+    let worker = std::thread::spawn(move || -> usize {
+        let mut stream = endpoint.connect().unwrap();
+        let mut writer = stream.try_clone_stream().unwrap();
+        write_frame(
+            &mut writer,
+            &Msg::Ready {
+                worker: 77,
+                pid: std::process::id() as u64,
+                spawn: 0,
+                protocol: 3, // pre-observability peer
+                token: Some(TOKEN.to_string()),
+                clock_us: None, // v3 never reports its clock
+            },
+        )
+        .unwrap();
+        let mut tasks = 0usize;
+        loop {
+            match read_json_frame(&mut stream) {
+                Some(Msg::Hello { protocol, .. }) => {
+                    assert_eq!(protocol, 3, "negotiated down to the peer's version");
+                }
+                Some(Msg::Task { index, attempt, params, .. }) => {
+                    let i = params
+                        .iter()
+                        .find(|(k, _)| k == "i")
+                        .and_then(|(_, v)| v.to_json().as_i64())
+                        .unwrap();
+                    tasks += 1;
+                    std::thread::sleep(Duration::from_millis(5));
+                    write_frame(
+                        &mut writer,
+                        &Msg::Outcome {
+                            index,
+                            attempt,
+                            duration_secs: 0.005,
+                            exec_start_us: None, // v3 frames carry no exec window
+                            exec_end_us: None,
+                            result: WireResult::Ok { value: Json::int(i * 10) },
+                        },
+                    )
+                    .unwrap();
+                }
+                Some(Msg::Shutdown) | None => break,
+                other => panic!("unexpected frame at the v3 worker: {other:?}"),
+            }
+        }
+        tasks
+    });
+
+    let tdir = td.join("trace");
+    let results = Memento::new(exp)
+        .with_worker_pool(Arc::clone(&pool))
+        .remote_workers("unused: pool owns the listener", 1)
+        .wire_format(WireFormat::Json)
+        .trace_to(&tdir)
+        .run(&matrix(6))
+        .unwrap();
+    pool.shutdown();
+    assert_eq!(worker.join().unwrap(), 6, "the v3 worker executed every task");
+    assert_eq!(results.n_failed(), 0);
+
+    let trace = assert_complete_trace(&tdir, 6);
+    // Synthesized windows are duration_secs wide on the supervisor's
+    // clock (the reported 5ms, give or take float rounding).
+    let tls = timelines(&trace);
+    for ((i, attempt), tl) in tls.iter().filter(|((_, a), _)| *a >= 1) {
+        let width = tl["exec_end"] - tl["exec_start"];
+        assert!(
+            (4_000..=6_000).contains(&width),
+            "task {i} attempt {attempt}: synthesized exec window {width}us"
+        );
+    }
+}
