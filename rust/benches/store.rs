@@ -1,0 +1,137 @@
+//! Bench: the cross-run segment-log result store.
+//!
+//! Micro-costs for the four store operations on the hot path — append a
+//! result (`store_put_<wire>`), cold-read one back (`store_get_cold_<wire>`),
+//! answer a parameter predicate over a 10k-record store
+//! (`store_query_10k_<wire>`), and fold sealed segments
+//! (`compact_fold`) — recorded into `BENCH_sched_cache.json` alongside
+//! the scheduler/cache rows. The query rows are the evidence for the
+//! lazy-scan claim: matching never materializes non-matching records.
+
+use memento::bench::{black_box, sched_cache_trajectory_path, Suite};
+use memento::store::query::{parse_predicates, QueryOptions};
+use memento::store::ResultStore;
+use memento::util::codec::WireFormat;
+use memento::util::fs::TempDir;
+use memento::util::json::Json;
+
+const MODELS: [&str; 4] = ["svc", "tree", "forest", "mlp"];
+
+fn params_for(i: usize) -> Json {
+    Json::obj(vec![
+        ("model", Json::str(MODELS[i % MODELS.len()])),
+        ("lr", Json::Num((i % 100) as f64 / 100.0)),
+        ("fold", Json::int((i % 5) as i64)),
+    ])
+}
+
+fn value_for(i: usize) -> Json {
+    Json::obj(vec![
+        ("accuracy", Json::Num(0.5 + (i % 50) as f64 / 100.0)),
+        ("folds", Json::Arr(vec![Json::Num(0.9); 5])),
+    ])
+}
+
+fn main() {
+    let mut suite = Suite::new("store — cross-run segment log");
+    let td = TempDir::new("bench-store").unwrap();
+    let mut extras: Vec<(String, Json)> = Vec::new();
+
+    for wire in [WireFormat::Binary, WireFormat::Json] {
+        let tag = match wire {
+            WireFormat::Binary => "binary",
+            WireFormat::Json => "json",
+        };
+
+        // --- put ------------------------------------------------------------
+        let store = ResultStore::open(td.join(format!("put-{tag}"))).unwrap();
+        store.set_wire(wire);
+        store.begin_run("bench").unwrap();
+        let mut k = 0usize;
+        let put = suite
+            .bench(format!("store.put ({tag}, no fsync)"), 100, 1000, |_| {
+                // Fresh ids: every put appends (values repeat, so the
+                // content-hash table sees dedup pressure too).
+                store
+                    .put_result(&format!("task-{k}"), &params_for(k), &value_for(k))
+                    .unwrap();
+                k += 1;
+            })
+            .clone();
+        extras.push((format!("store_put_{tag}"), Json::Num(put.mean * 1e9)));
+
+        // --- cold get -------------------------------------------------------
+        // Reopen so the index is rebuilt from record headers and every get
+        // reads its frame from disk (no warm process state).
+        let dir = store.dir();
+        drop(store);
+        let cold = ResultStore::open(&dir).unwrap();
+        let get = suite
+            .bench(format!("store.get (cold, {tag})"), 100, 1000, |i| {
+                black_box(cold.get_result(&format!("task-{}", i % 1000)).unwrap());
+            })
+            .clone();
+        extras.push((format!("store_get_cold_{tag}"), Json::Num(get.mean * 1e9)));
+
+        // --- query over 10k records ----------------------------------------
+        let qstore = ResultStore::open(td.join(format!("query-{tag}"))).unwrap();
+        qstore.set_wire(wire);
+        qstore.set_auto_compact(false);
+        qstore.begin_run("bench").unwrap();
+        for i in 0..10_000 {
+            qstore
+                .put_result(&format!("q-{i}"), &params_for(i), &value_for(i))
+                .unwrap();
+        }
+        let preds = parse_predicates("model=svc, lr<=0.1").unwrap();
+        let n_match = qstore.query(&preds, &QueryOptions::default()).unwrap().len();
+        let q = suite
+            .bench(format!("store.query 10k ({tag})"), 2, 20, |_| {
+                let rows = qstore.query(&preds, &QueryOptions::default()).unwrap();
+                assert_eq!(rows.len(), n_match);
+                black_box(rows);
+            })
+            .clone();
+        suite.note(format!("{n_match} of 10000 records match"));
+        extras.push((
+            format!("store_query_10k_{tag}"),
+            Json::obj(vec![
+                ("query_s", Json::Num(q.mean)),
+                ("matches", Json::int(n_match as i64)),
+            ]),
+        ));
+    }
+
+    // --- compaction ---------------------------------------------------------
+    // Many small sealed segments full of superseded versions: each timed
+    // pass re-seeds the store, then folds it down to one segment.
+    let compact = suite
+        .bench_with_setup(
+            "store.compact (fold sealed segments)",
+            0,
+            10,
+            || {},
+            |i| {
+                let dir = td.join(format!("compact-{i}"));
+                let store = ResultStore::open(&dir).unwrap();
+                store.set_auto_compact(false);
+                store.set_segment_max(16 * 1024);
+                store.begin_run("bench").unwrap();
+                for j in 0..2000 {
+                    // 4 versions per id → 75% of records are dead.
+                    store
+                        .put_result(&format!("c-{}", j % 500), &params_for(j), &value_for(j))
+                        .unwrap();
+                }
+                store.seal_active().unwrap();
+                let report = store.compact().unwrap();
+                assert!(report.input_segments > 0, "must fold at least one segment");
+                black_box(report);
+            },
+        )
+        .clone();
+    extras.push(("compact_fold".to_string(), Json::Num(compact.mean)));
+
+    suite.write_trajectory(&sched_cache_trajectory_path(), extras);
+    suite.finish();
+}

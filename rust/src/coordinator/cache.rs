@@ -12,17 +12,27 @@
 //!   filesystem; `len`/`is_empty`/`contains` are O(1) map operations
 //!   instead of a directory scan per call. Sharding (by a hash of the id)
 //!   keeps worker threads on different locks.
-//! - **Disk** — one file per entry under `<dir>/<id>.json`, written
-//!   atomically. Entries are tagged binary ([`crate::util::codec`]) by
-//!   default — and compact JSON under
-//!   [`ResultCache::storage_format`]`(WireFormat::Json)` — with the
-//!   format auto-detected per file on read, so directories written by
-//!   older (JSON-only) versions keep hitting. `put` is write-through
-//!   (disk first, then memory), so crash behaviour is unchanged: the
-//!   disk tier remains the source of truth and the memory tier is a
-//!   cache of it. A cold read extracts just the `value` field with the
-//!   lazy scanner ([`crate::util::scan`]) — the entry's id/params
-//!   context is skipped, never parsed.
+//! - **Disk** — one of two backings, auto-detected by
+//!   [`ResultCache::open`]:
+//!   - *Per-entry directory* (the original layout): one file per entry
+//!     under `<dir>/<id>.json`, written atomically. Entries are tagged
+//!     binary ([`crate::util::codec`]) by default — and compact JSON
+//!     under [`ResultCache::storage_format`]`(WireFormat::Json)` — with
+//!     the format auto-detected per file on read, so directories written
+//!     by older (JSON-only) versions keep hitting.
+//!   - *Segment-log store* ([`crate::store::ResultStore`]): entries are
+//!     records in an append-only cross-run result database shared by
+//!     many runs ([`ResultCache::open_store`], or `open` over a
+//!     directory containing segment files). Same semantics, plus
+//!     content-hash dedup accounting and `memento query` over the
+//!     accumulated results.
+//!
+//!   Either way `put` is write-through (disk first, then memory), so
+//!   crash behaviour is unchanged: the disk tier remains the source of
+//!   truth and the memory tier is a cache of it. A cold read extracts
+//!   just the `value` field with the lazy scanner
+//!   ([`crate::util::scan`]) — the entry's id/params context is skipped,
+//!   never parsed.
 //!
 //! Opening a cache over a pre-existing directory scans it **once** and
 //! indexes every entry as *present-on-disk-but-not-loaded*; the first `get`
@@ -53,6 +63,7 @@
 //! recover from that crash.
 
 use crate::coordinator::task::{TaskId, TaskSpec};
+use crate::store::ResultStore;
 use crate::util::codec::{self, WireFormat};
 use crate::util::fs::atomic_write;
 use crate::util::json::Json;
@@ -60,7 +71,7 @@ use crate::util::scan::Scanner;
 use std::collections::{HashMap, VecDeque};
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 
 /// Number of independent memory-tier shards (power of two, small enough
 /// that an idle cache costs nothing, large enough that 8–32 workers rarely
@@ -155,9 +166,18 @@ struct Shard {
     resident_bytes: usize,
 }
 
+/// Disk tier implementation behind the memory tier.
+enum Backing {
+    /// One atomic file per entry under the cache directory.
+    Dir,
+    /// Records in a shared segment-log store ([`crate::store`]).
+    Store(Arc<ResultStore>),
+}
+
 /// Two-tier result cache. Thread-safe: all methods take `&self`.
 pub struct ResultCache {
     dir: PathBuf,
+    backing: Backing,
     stats: CacheStats,
     /// fsync entries on write. Default **false**: cache entries are
     /// recomputable, so losing one to a power cut is a miss, not
@@ -191,9 +211,15 @@ fn shard_of(key: &str) -> usize {
 impl ResultCache {
     /// Opens (creating if needed) a cache directory. Pre-existing entries
     /// are indexed (one directory scan, ever) but not loaded into memory
-    /// until first touched.
+    /// until first touched. The disk-tier layout is auto-detected: a
+    /// directory holding segment files (`seg-*.log`) opens store-backed,
+    /// anything else opens (or creates) the per-entry layout — so caches
+    /// written by either version keep working unchanged.
     pub fn open(dir: impl Into<PathBuf>) -> std::io::Result<ResultCache> {
         let dir = dir.into();
+        if ResultStore::is_store_dir(&dir) {
+            return Ok(ResultCache::open_store(ResultStore::open(&dir)?));
+        }
         std::fs::create_dir_all(&dir)?;
         let shards: Vec<Mutex<Shard>> =
             (0..SHARDS).map(|_| Mutex::new(Shard::default())).collect();
@@ -208,6 +234,7 @@ impl ResultCache {
         }
         Ok(ResultCache {
             dir,
+            backing: Backing::Dir,
             stats: CacheStats::default(),
             fsync: false,
             exclusive: AtomicBool::new(false),
@@ -217,11 +244,45 @@ impl ResultCache {
         })
     }
 
+    /// Opens a cache whose disk tier is a shared segment-log store —
+    /// results land as records in the cross-run database instead of
+    /// per-entry files. The memory-tier index is seeded from the store's
+    /// live result ids, so `len`/`contains`/exclusive-mode semantics are
+    /// identical to the directory backing.
+    pub fn open_store(store: Arc<ResultStore>) -> ResultCache {
+        let shards: Vec<Mutex<Shard>> =
+            (0..SHARDS).map(|_| Mutex::new(Shard::default())).collect();
+        for id in store.result_ids() {
+            shards[shard_of(&id)].lock().unwrap().map.insert(id, Slot::OnDisk);
+        }
+        ResultCache {
+            dir: store.dir(),
+            backing: Backing::Store(store),
+            stats: CacheStats::default(),
+            fsync: false,
+            exclusive: AtomicBool::new(false),
+            shards,
+            mem_budget_per_shard: DEFAULT_MEM_BUDGET_PER_SHARD,
+            storage: WireFormat::default(),
+        }
+    }
+
+    /// The shared store behind this cache, when store-backed.
+    pub fn store_handle(&self) -> Option<Arc<ResultStore>> {
+        match &self.backing {
+            Backing::Dir => None,
+            Backing::Store(s) => Some(Arc::clone(s)),
+        }
+    }
+
     /// Chooses the on-disk encoding for new entries: tagged binary (the
     /// default) or compact JSON for human-debuggable stores. Reads
     /// auto-detect per file either way, so mixed directories are fine.
     pub fn storage_format(mut self, format: WireFormat) -> Self {
         self.storage = format;
+        if let Backing::Store(store) = &self.backing {
+            store.set_wire(format);
+        }
         self
     }
 
@@ -307,44 +368,71 @@ impl ResultCache {
             }
         }
         // Cold path: disk tier. Read outside the shard lock so a slow disk
-        // never blocks warm hits on the same shard.
-        let path = self.path_of(id);
-        let bytes = match std::fs::read(&path) {
-            Ok(b) => b,
-            Err(_) => {
-                // Entry gone from disk: drop a stale OnDisk marker if any
-                // so len() converges (a Loaded entry re-inserted by a
-                // concurrent put stays).
-                let mut sh = shard.lock().unwrap();
-                if matches!(sh.map.get(&id.0), Some(Slot::OnDisk)) {
-                    sh.map.remove(&id.0);
+        // never blocks warm hits on the same shard. Both backings honour
+        // the same lazy-scan contract: only the `value` subtree is ever
+        // materialized; the entry's id/params context is skipped.
+        let (value, approx_bytes) = match &self.backing {
+            Backing::Dir => {
+                let bytes = match std::fs::read(self.path_of(id)) {
+                    Ok(b) => b,
+                    Err(_) => {
+                        // Entry gone from disk: drop a stale OnDisk marker
+                        // if any so len() converges (a Loaded entry
+                        // re-inserted by a concurrent put stays).
+                        self.drop_stale_marker(&id.0);
+                        self.stats.misses.fetch_add(1, Ordering::Relaxed);
+                        return None;
+                    }
+                };
+                let len = bytes.len();
+                let value = (|| {
+                    let scanner = Scanner::new(&bytes)?;
+                    match scanner.field("value")? {
+                        Some(v) => v.materialize().map(Some),
+                        None => Ok(None),
+                    }
+                })();
+                match value {
+                    Ok(Some(v)) => (v, len),
+                    Ok(None) | Err(_) => {
+                        self.stats.corrupt.fetch_add(1, Ordering::Relaxed);
+                        self.stats.misses.fetch_add(1, Ordering::Relaxed);
+                        return None;
+                    }
                 }
-                self.stats.misses.fetch_add(1, Ordering::Relaxed);
-                return None;
             }
+            Backing::Store(store) => match store.get_result(&id.0) {
+                Ok(Some(v)) => {
+                    // The store read the frame already; approximate the
+                    // residency cost by the value's serialized size.
+                    let len = v.to_string().len();
+                    (v, len)
+                }
+                Ok(None) => {
+                    self.drop_stale_marker(&id.0);
+                    self.stats.misses.fetch_add(1, Ordering::Relaxed);
+                    return None;
+                }
+                Err(_) => {
+                    self.stats.corrupt.fetch_add(1, Ordering::Relaxed);
+                    self.stats.misses.fetch_add(1, Ordering::Relaxed);
+                    return None;
+                }
+            },
         };
-        // Lazy extraction (either format): skip to the `value` field and
-        // materialize only that subtree — the id/params context around it
-        // is never parsed into a tree.
-        let value = (|| {
-            let scanner = Scanner::new(&bytes)?;
-            match scanner.field("value")? {
-                Some(v) => v.materialize().map(Some),
-                None => Ok(None),
-            }
-        })();
-        match value {
-            Ok(Some(v)) => {
-                self.stats.hits.fetch_add(1, Ordering::Relaxed);
-                self.stats.disk_hits.fetch_add(1, Ordering::Relaxed);
-                self.promote_if_on_disk(&id.0, v.clone(), bytes.len());
-                Some(v)
-            }
-            Ok(None) | Err(_) => {
-                self.stats.corrupt.fetch_add(1, Ordering::Relaxed);
-                self.stats.misses.fetch_add(1, Ordering::Relaxed);
-                None
-            }
+        self.stats.hits.fetch_add(1, Ordering::Relaxed);
+        self.stats.disk_hits.fetch_add(1, Ordering::Relaxed);
+        self.promote_if_on_disk(&id.0, value.clone(), approx_bytes);
+        Some(value)
+    }
+
+    /// Removes a stale [`Slot::OnDisk`] marker after the backing reported
+    /// the entry gone (a `Loaded` slot re-inserted by a concurrent put
+    /// stays).
+    fn drop_stale_marker(&self, key: &str) {
+        let mut sh = self.shards[shard_of(key)].lock().unwrap();
+        if matches!(sh.map.get(key), Some(Slot::OnDisk)) {
+            sh.map.remove(key);
         }
     }
 
@@ -453,25 +541,40 @@ impl ResultCache {
         if self.exclusive.load(Ordering::Relaxed) {
             return false;
         }
-        self.path_of(id).exists()
+        match &self.backing {
+            Backing::Dir => self.path_of(id).exists(),
+            Backing::Store(store) => store.contains_result(&id.0),
+        }
     }
 
     /// Stores a value with its parameter context (the context makes cache
     /// files self-describing for post-hoc inspection). Write-through: the
     /// disk entry lands first, then the memory tier picks it up.
     pub fn put(&self, id: &TaskId, spec: &TaskSpec, value: &Json) -> std::io::Result<()> {
-        let doc = Json::obj(vec![
-            ("id", Json::str(id.0.clone())),
-            ("params", spec.to_json()),
-            ("value", value.clone()),
-        ]);
-        let bytes = codec::write_document(&doc, self.storage);
-        if self.fsync {
-            atomic_write(&self.path_of(id), &bytes)?;
-        } else {
-            crate::util::fs::atomic_write_nosync(&self.path_of(id), &bytes)?;
-        }
-        self.insert_loaded(&id.0, value.clone(), bytes.len());
+        let approx_bytes = match &self.backing {
+            Backing::Dir => {
+                let doc = Json::obj(vec![
+                    ("id", Json::str(id.0.clone())),
+                    ("params", spec.to_json()),
+                    ("value", value.clone()),
+                ]);
+                let bytes = codec::write_document(&doc, self.storage);
+                if self.fsync {
+                    atomic_write(&self.path_of(id), &bytes)?;
+                } else {
+                    crate::util::fs::atomic_write_nosync(&self.path_of(id), &bytes)?;
+                }
+                bytes.len()
+            }
+            Backing::Store(store) => {
+                store.put_result(&id.0, &spec.to_json(), value)?;
+                if self.fsync {
+                    store.sync()?;
+                }
+                value.to_string().len()
+            }
+        };
+        self.insert_loaded(&id.0, value.clone(), approx_bytes);
         self.stats.writes.fetch_add(1, Ordering::Relaxed);
         Ok(())
     }
@@ -479,7 +582,14 @@ impl ResultCache {
     /// Removes a single entry from both tiers (used when a task's code
     /// version is known stale); missing entries are fine.
     pub fn invalidate(&self, id: &TaskId) {
-        let _ = std::fs::remove_file(self.path_of(id));
+        match &self.backing {
+            Backing::Dir => {
+                let _ = std::fs::remove_file(self.path_of(id));
+            }
+            Backing::Store(store) => {
+                let _ = store.invalidate_result(&id.0);
+            }
+        }
         let mut sh = self.shards[shard_of(&id.0)].lock().unwrap();
         if let Some(Slot::Loaded(_, b, _)) = sh.map.remove(&id.0) {
             sh.resident -= 1;
@@ -525,10 +635,18 @@ impl ResultCache {
         }
     }
 
-    /// Deletes every entry from both tiers.
+    /// Deletes every entry from both tiers (store backing: tombstones
+    /// every live result — the log keeps its history until compaction).
     pub fn clear(&self) -> std::io::Result<()> {
-        for f in crate::util::fs::list_files_with_ext(&self.dir, "json")? {
-            std::fs::remove_file(f)?;
+        match &self.backing {
+            Backing::Dir => {
+                for f in crate::util::fs::list_files_with_ext(&self.dir, "json")? {
+                    std::fs::remove_file(f)?;
+                }
+            }
+            Backing::Store(store) => {
+                store.clear_results()?;
+            }
         }
         for shard in &self.shards {
             let mut sh = shard.lock().unwrap();
@@ -885,5 +1003,72 @@ mod tests {
         let (mem, disk) = cache.stats().tier_snapshot();
         assert_eq!(mem, 100);
         assert_eq!(disk, 0);
+    }
+
+    #[test]
+    fn store_backed_cache_roundtrip_and_auto_detect() {
+        let td = TempDir::new("cache-store").unwrap();
+        let store = ResultStore::open(td.path()).unwrap();
+        {
+            let cache = ResultCache::open_store(std::sync::Arc::clone(&store));
+            assert!(cache.store_handle().is_some());
+            for n in 0..10 {
+                let s = spec(n);
+                cache.put(&s.id("v1"), &s, &Json::int(n)).unwrap();
+            }
+            assert_eq!(cache.len(), 10);
+            assert_eq!(store.stats().live_records, 10, "entries are store records");
+        }
+        // `open` over the same directory auto-detects the segment layout.
+        let cache = ResultCache::open(td.path()).unwrap();
+        assert!(cache.store_handle().is_some());
+        assert_eq!(cache.len(), 10, "index seeded from the store");
+        assert_eq!(cache.resident_len(), 0);
+        for n in 0..10 {
+            assert_eq!(cache.get(&spec(n).id("v1")).unwrap().as_i64(), Some(n));
+        }
+        let (mem, disk) = cache.stats().tier_snapshot();
+        assert_eq!((mem, disk), (0, 10), "cold reads come from the store");
+        // Second pass is all memory-tier.
+        for n in 0..10 {
+            assert_eq!(cache.get(&spec(n).id("v1")).unwrap().as_i64(), Some(n));
+        }
+        assert_eq!(cache.stats().tier_snapshot().0, 10);
+        // Invalidate tombstones the record for every handle.
+        let id = spec(3).id("v1");
+        cache.invalidate(&id);
+        assert!(!cache.contains(&id));
+        assert!(!store.contains_result(&id.0));
+        // Clear wipes the rest.
+        cache.clear().unwrap();
+        assert!(cache.is_empty());
+        assert_eq!(store.stats().live_records, 0);
+    }
+
+    #[test]
+    fn store_backed_cold_get_materializes_only_the_value_subtree() {
+        for format in [WireFormat::Binary, WireFormat::Json] {
+            let td = TempDir::new("cache-store-lazy").unwrap();
+            let s = spec(1);
+            let id = s.id("v1");
+            {
+                let store = ResultStore::open(td.path()).unwrap();
+                let writer =
+                    ResultCache::open_store(store).storage_format(format);
+                writer.put(&id, &s, &Json::obj(vec![("acc", Json::Num(0.5))])).unwrap();
+            }
+            let cache = ResultCache::open(td.path()).unwrap();
+            let before = crate::util::scan::materialized_count();
+            assert_eq!(
+                cache.get(&id).unwrap().get("acc").unwrap().as_f64(),
+                Some(0.5),
+                "{format:?}"
+            );
+            assert_eq!(
+                crate::util::scan::materialized_count() - before,
+                1,
+                "{format:?}: store-backed cold get must materialize exactly the value"
+            );
+        }
     }
 }

@@ -24,16 +24,32 @@
 //! versions resume unchanged. The resume gate probes the fingerprint and
 //! version with the lazy scanner ([`crate::util::scan`]) — a mismatched
 //! manifest is refused without materializing its outcome map.
+//!
+//! # Store-backed mode
+//!
+//! [`CheckpointStore::create_in_store`] / `resume_in_store` keep the
+//! manifest header and the completion entries as *records in a shared
+//! segment-log store* ([`crate::store`]) keyed by a run label, instead of
+//! rewriting `manifest.json`. Completions append one record each (no
+//! rewrite amplification as the run grows), the flush interval becomes a
+//! segment fsync cadence, and cross-run tooling (`memento query`,
+//! `memento status --store`) sees every run in one place. In-task partial
+//! progress stays as per-task scratch files under `<run_dir>/progress/`
+//! either way — it is transient and per-run by nature. Legacy per-run
+//! directories remain first-class: a `manifest.json` on disk wins over
+//! the store when both could apply (see `Memento`), and `memento
+//! migrate` folds old run dirs into store records.
 
 use crate::coordinator::error::MementoError;
 use crate::coordinator::task::TaskId;
+use crate::store::ResultStore;
 use crate::util::codec::{self, WireFormat};
 use crate::util::fs::atomic_write;
 use crate::util::json::Json;
 use crate::util::scan::Scanner;
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 
 /// A completed task as stored in the manifest.
 #[derive(Debug, Clone)]
@@ -63,10 +79,28 @@ struct Inner {
     dirty_since_flush: usize,
 }
 
+/// Where manifest + completion entries persist.
+enum Backing {
+    /// `manifest.json` rewritten atomically in the run directory.
+    Dir,
+    /// Records in a shared segment-log store, keyed by the run label.
+    Store(Arc<ResultStore>, String),
+}
+
+impl std::fmt::Debug for Backing {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Backing::Dir => write!(f, "Dir"),
+            Backing::Store(_, run) => write!(f, "Store({run})"),
+        }
+    }
+}
+
 /// The checkpoint store for one run directory.
 #[derive(Debug)]
 pub struct CheckpointStore {
     run_dir: PathBuf,
+    backing: Backing,
     matrix_fingerprint: String,
     version: String,
     /// Atomic because the streaming pipeline only learns the final total
@@ -95,6 +129,7 @@ impl CheckpointStore {
             .map_err(|e| MementoError::storage(format!("create run dir: {e}")))?;
         let store = CheckpointStore {
             run_dir,
+            backing: Backing::Dir,
             matrix_fingerprint: matrix_fingerprint.to_string(),
             version: version.to_string(),
             total_tasks: std::sync::atomic::AtomicUsize::new(total_tasks),
@@ -104,6 +139,137 @@ impl CheckpointStore {
         };
         store.flush()?;
         Ok(store)
+    }
+
+    /// Creates a fresh store-backed checkpoint for the run labelled `run`:
+    /// the manifest header and completions become records in `store`, and
+    /// `run_dir` is used only for in-task progress scratch. Any previous
+    /// checkpoint records under the same label are tombstoned first.
+    pub fn create_in_store(
+        store: Arc<ResultStore>,
+        run: &str,
+        run_dir: impl Into<PathBuf>,
+        matrix_fingerprint: &str,
+        version: &str,
+        total_tasks: usize,
+        flush_every: usize,
+    ) -> Result<CheckpointStore, MementoError> {
+        let run_dir = run_dir.into();
+        std::fs::create_dir_all(run_dir.join("progress"))
+            .map_err(|e| MementoError::storage(format!("create run dir: {e}")))?;
+        store
+            .clear_run(run)
+            .map_err(|e| MementoError::storage(format!("clear run '{run}': {e}")))?;
+        let ck = CheckpointStore {
+            run_dir,
+            backing: Backing::Store(store, run.to_string()),
+            matrix_fingerprint: matrix_fingerprint.to_string(),
+            version: version.to_string(),
+            total_tasks: std::sync::atomic::AtomicUsize::new(total_tasks),
+            flush_every: flush_every.max(1),
+            storage: WireFormat::default(),
+            inner: Mutex::new(Inner { entries: BTreeMap::new(), dirty_since_flush: 0 }),
+        };
+        ck.flush()?;
+        Ok(ck)
+    }
+
+    /// Resumes the run labelled `run` from its records in `store`,
+    /// verifying the manifest header matches the matrix/version being
+    /// resumed (same gate as [`CheckpointStore::resume`]).
+    pub fn resume_in_store(
+        store: Arc<ResultStore>,
+        run: &str,
+        run_dir: impl Into<PathBuf>,
+        matrix_fingerprint: &str,
+        version: &str,
+        total_tasks: usize,
+        flush_every: usize,
+    ) -> Result<CheckpointStore, MementoError> {
+        let run_dir = run_dir.into();
+        let manifest = store
+            .get_manifest(run)
+            .map_err(|e| MementoError::storage(format!("read store manifest '{run}': {e}")))?
+            .ok_or_else(|| {
+                MementoError::storage(format!("no checkpoint for run '{run}' in store"))
+            })?;
+        let stored_fp = manifest
+            .get("matrix_fingerprint")
+            .and_then(|j| j.as_str())
+            .unwrap_or("");
+        if stored_fp != matrix_fingerprint {
+            return Err(MementoError::CheckpointMismatch(format!(
+                "store checkpoint '{run}' was written for matrix {stored_fp:.12}…, \
+                 resuming with matrix {matrix_fingerprint:.12}…"
+            )));
+        }
+        let stored_version = manifest.get("version").and_then(|j| j.as_str()).unwrap_or("");
+        if stored_version != version {
+            return Err(MementoError::CheckpointMismatch(format!(
+                "store checkpoint '{run}' was written for experiment version \
+                 '{stored_version}', current version is '{version}'"
+            )));
+        }
+        let total_tasks = if total_tasks == 0 {
+            manifest
+                .get("total_tasks")
+                .and_then(|j| j.as_i64())
+                .map(|v| v.max(0) as usize)
+                .unwrap_or(0)
+        } else {
+            total_tasks
+        };
+        let mut entries = BTreeMap::new();
+        for doc in store
+            .ck_entries(run)
+            .map_err(|e| MementoError::storage(format!("read store entries '{run}': {e}")))?
+        {
+            let Some(id) = doc.get("id").and_then(|j| j.as_str()) else { continue };
+            let id = TaskId(id.to_string());
+            entries.insert(
+                id.clone(),
+                CheckpointEntry {
+                    id,
+                    value: doc.get("value").cloned(),
+                    failed_message: doc
+                        .get("failed")
+                        .and_then(|j| j.as_str())
+                        .map(|s| s.to_string()),
+                    duration_secs: doc
+                        .get("duration_secs")
+                        .and_then(|j| j.as_f64())
+                        .unwrap_or(0.0),
+                    attempts: doc.get("attempts").and_then(|j| j.as_i64()).unwrap_or(1)
+                        as u32,
+                },
+            );
+        }
+        std::fs::create_dir_all(run_dir.join("progress"))
+            .map_err(|e| MementoError::storage(format!("create run dir: {e}")))?;
+        Ok(CheckpointStore {
+            run_dir,
+            backing: Backing::Store(store, run.to_string()),
+            matrix_fingerprint: matrix_fingerprint.to_string(),
+            version: version.to_string(),
+            total_tasks: std::sync::atomic::AtomicUsize::new(total_tasks),
+            flush_every: flush_every.max(1),
+            storage: WireFormat::default(),
+            inner: Mutex::new(Inner { entries, dirty_since_flush: 0 }),
+        })
+    }
+
+    /// True if `store` holds a checkpoint manifest for the run labelled
+    /// `run`.
+    pub fn exists_in_store(store: &ResultStore, run: &str) -> bool {
+        matches!(store.get_manifest(run), Ok(Some(_)))
+    }
+
+    /// The run label, when store-backed.
+    pub fn run_label(&self) -> Option<&str> {
+        match &self.backing {
+            Backing::Dir => None,
+            Backing::Store(_, run) => Some(run),
+        }
     }
 
     /// Chooses the encoding for subsequent manifest/progress writes:
@@ -204,6 +370,7 @@ impl CheckpointStore {
         }
         Ok(CheckpointStore {
             run_dir,
+            backing: Backing::Dir,
             matrix_fingerprint: matrix_fingerprint.to_string(),
             version: version.to_string(),
             total_tasks: std::sync::atomic::AtomicUsize::new(total_tasks),
@@ -294,14 +461,44 @@ impl CheckpointStore {
             inner.dirty_since_flush += 1;
             inner.dirty_since_flush >= self.flush_every
         };
-        if should_flush {
-            // Interval flushes skip the fsync: losing the most recent
-            // manifest version to a power cut merely re-runs the tasks
-            // recorded since the previous version — exactly the contract
-            // `flush_every` already implies. The end-of-run [`flush`] is
-            // durable. (§Perf-L3: fsync-per-flush was 2.8ms/task at
-            // flush_every=1.)
-            self.flush_opts(false)?;
+        match &self.backing {
+            Backing::Dir => {
+                if should_flush {
+                    // Interval flushes skip the fsync: losing the most
+                    // recent manifest version to a power cut merely
+                    // re-runs the tasks recorded since the previous
+                    // version — exactly the contract `flush_every`
+                    // already implies. The end-of-run [`CheckpointStore::flush`]
+                    // is durable. (§Perf-L3: fsync-per-flush was
+                    // 2.8ms/task at flush_every=1.)
+                    self.flush_opts(false)?;
+                }
+            }
+            Backing::Store(store, run) => {
+                // Log backing: each completion is one appended record, so
+                // there is no manifest to rewrite — the flush interval
+                // degrades to an fsync cadence with the same crash
+                // contract (at most `flush_every - 1` completions re-run).
+                let mut fields: Vec<(&str, Json)> = vec![
+                    ("duration_secs", Json::Num(duration_secs)),
+                    ("attempts", Json::int(attempts as i64)),
+                ];
+                if let Some(v) = value {
+                    fields.push(("value", v.clone()));
+                }
+                if let Some(m) = failed_message {
+                    fields.push(("failed", Json::str(m)));
+                }
+                store
+                    .put_ck_entry(run, &id.0, &Json::obj(fields))
+                    .map_err(|e| MementoError::storage(format!("store checkpoint: {e}")))?;
+                if should_flush {
+                    self.inner.lock().unwrap().dirty_since_flush = 0;
+                    store
+                        .sync()
+                        .map_err(|e| MementoError::storage(format!("sync store: {e}")))?;
+                }
+            }
         }
         Ok(())
     }
@@ -312,6 +509,29 @@ impl CheckpointStore {
     }
 
     fn flush_opts(&self, durable: bool) -> Result<(), MementoError> {
+        if let Backing::Store(store, run) = &self.backing {
+            // Completions are already in the log (appended by `record`);
+            // a flush just refreshes the manifest header — whose only
+            // mutable field is the task total — and optionally fsyncs.
+            self.inner.lock().unwrap().dirty_since_flush = 0;
+            let header = Json::obj(vec![
+                ("matrix_fingerprint", Json::str(self.matrix_fingerprint.clone())),
+                ("version", Json::str(self.version.clone())),
+                (
+                    "total_tasks",
+                    Json::int(self.total_tasks.load(std::sync::atomic::Ordering::Relaxed) as i64),
+                ),
+            ]);
+            store
+                .put_manifest(run, &header)
+                .map_err(|e| MementoError::storage(format!("store manifest: {e}")))?;
+            if durable {
+                store
+                    .sync()
+                    .map_err(|e| MementoError::storage(format!("sync store: {e}")))?;
+            }
+            return Ok(());
+        }
         let doc = {
             let mut inner = self.inner.lock().unwrap();
             inner.dirty_since_flush = 0;
@@ -555,5 +775,121 @@ mod tests {
         let resumed =
             CheckpointStore::resume(s.run_dir(), "fp", "v1", 100, 10).unwrap();
         assert_eq!(resumed.completed_count(), 100);
+    }
+
+    #[test]
+    fn store_backed_record_resume_roundtrip() {
+        let td = TempDir::new("ckpt-store").unwrap();
+        let store = ResultStore::open(td.join("store")).unwrap();
+        {
+            let s = CheckpointStore::create_in_store(
+                Arc::clone(&store),
+                "exp-1",
+                td.join("run"),
+                "fp",
+                "v1",
+                3,
+                1,
+            )
+            .unwrap();
+            assert_eq!(s.run_label(), Some("exp-1"));
+            s.record(&tid(1), Some(&Json::int(10)), None, 0.5, 1).unwrap();
+            s.record(&tid(2), None, Some("boom"), 0.2, 3).unwrap();
+            s.flush().unwrap();
+            // Progress scratch still works in store mode.
+            s.save_progress(&tid(3), &Json::obj(vec![("fold", Json::int(2))]));
+            assert_eq!(
+                s.load_progress(&tid(3)).unwrap().get("fold").unwrap().as_i64(),
+                Some(2)
+            );
+        }
+        assert!(CheckpointStore::exists_in_store(&store, "exp-1"));
+        assert!(!CheckpointStore::exists_in_store(&store, "exp-2"));
+        let s = CheckpointStore::resume_in_store(
+            Arc::clone(&store),
+            "exp-1",
+            td.join("run"),
+            "fp",
+            "v1",
+            3,
+            1,
+        )
+        .unwrap();
+        assert_eq!(s.completed_count(), 2);
+        assert_eq!(s.completed_success_ids(), vec![tid(1)]);
+        assert_eq!(s.failed_ids(), vec![tid(2)]);
+        let e1 = s.entry(&tid(1)).unwrap();
+        assert_eq!(e1.value, Some(Json::int(10)));
+        let e2 = s.entry(&tid(2)).unwrap();
+        assert_eq!(e2.failed_message.as_deref(), Some("boom"));
+        assert_eq!(e2.attempts, 3);
+        // And the records survive a cold reopen of the store itself.
+        drop(s);
+        drop(store);
+        let store = ResultStore::open(td.join("store")).unwrap();
+        let s = CheckpointStore::resume_in_store(
+            store, "exp-1", td.join("run"), "fp", "v1", 3, 1,
+        )
+        .unwrap();
+        assert_eq!(s.completed_count(), 2);
+    }
+
+    #[test]
+    fn store_backed_resume_gates_on_matrix_and_version() {
+        let td = TempDir::new("ckpt-store-gate").unwrap();
+        let store = ResultStore::open(td.join("store")).unwrap();
+        CheckpointStore::create_in_store(
+            Arc::clone(&store), "exp", td.join("run"), "fp-a", "v1", 1, 1,
+        )
+        .unwrap();
+        let err = CheckpointStore::resume_in_store(
+            Arc::clone(&store), "exp", td.join("run"), "fp-b", "v1", 1, 1,
+        )
+        .unwrap_err();
+        assert!(matches!(err, MementoError::CheckpointMismatch(_)), "{err}");
+        let err = CheckpointStore::resume_in_store(
+            Arc::clone(&store), "exp", td.join("run"), "fp-a", "v2", 1, 1,
+        )
+        .unwrap_err();
+        assert!(matches!(err, MementoError::CheckpointMismatch(_)), "{err}");
+        assert!(CheckpointStore::resume_in_store(
+            Arc::clone(&store), "exp", td.join("run"), "fp-a", "v1", 1, 1,
+        )
+        .is_ok());
+        // An unknown run label is a storage error, not a mismatch.
+        let err = CheckpointStore::resume_in_store(
+            store, "other", td.join("run"), "fp-a", "v1", 1, 1,
+        )
+        .unwrap_err();
+        assert!(!matches!(err, MementoError::CheckpointMismatch(_)), "{err}");
+    }
+
+    #[test]
+    fn store_backed_create_clears_previous_label() {
+        let td = TempDir::new("ckpt-store-reuse").unwrap();
+        let store = ResultStore::open(td.join("store")).unwrap();
+        {
+            let s = CheckpointStore::create_in_store(
+                Arc::clone(&store), "exp", td.join("run"), "fp", "v1", 2, 1,
+            )
+            .unwrap();
+            s.record(&tid(1), Some(&Json::int(1)), None, 0.0, 1).unwrap();
+            s.record(&tid(2), Some(&Json::int(2)), None, 0.0, 1).unwrap();
+        }
+        // Re-creating under the same label starts from zero entries…
+        let s = CheckpointStore::create_in_store(
+            Arc::clone(&store), "exp", td.join("run"), "fp", "v2", 2, 1,
+        )
+        .unwrap();
+        assert_eq!(s.completed_count(), 0);
+        s.record(&tid(9), Some(&Json::int(9)), None, 0.0, 1).unwrap();
+        drop(s);
+        // …and a resume sees only the fresh run's records.
+        let s = CheckpointStore::resume_in_store(
+            store, "exp", td.join("run"), "fp", "v2", 2, 1,
+        )
+        .unwrap();
+        assert_eq!(s.completed_count(), 1);
+        assert_eq!(s.completed_success_ids(), vec![tid(9)]);
     }
 }

@@ -63,9 +63,10 @@ use crate::coordinator::run::{ChannelPolicy, EventSink, GatedNotifier, Run, RunE
 use crate::coordinator::scheduler::{
     ExecBackend, SchedulerOptions, SpecFilter, SpecSource, StreamHooks,
 };
-use crate::coordinator::task::{task_seed, TaskContext, TaskId, TaskSpec};
+use crate::coordinator::task::{fresh_run_id, task_seed, TaskContext, TaskId, TaskSpec};
 use crate::obs::snapshot::{write_snapshot, FleetStats, MetricsSnapshot};
 use crate::obs::trace::{thread_worker_id, SpanState, Tracer};
+use crate::store::ResultStore;
 use crate::util::codec::WireFormat;
 use crate::util::json::Json;
 use crate::util::time::Stopwatch;
@@ -158,6 +159,11 @@ pub struct Memento {
     exp_fn: Arc<ExpFn>,
     options: RunOptions,
     cache: Option<Arc<ResultCache>>,
+    /// Cross-run result database ([`crate::store`]): when set (and no
+    /// explicit cache was installed), results land as records in this
+    /// shared store, and a configured checkpoint dir keeps its manifest +
+    /// completions there too (keyed by the dir name as run label).
+    store: Option<Arc<ResultStore>>,
     checkpoint_dir: Option<PathBuf>,
     notifier: Option<Arc<dyn NotificationProvider>>,
     metrics: Arc<RunMetrics>,
@@ -182,6 +188,7 @@ impl Memento {
             exp_fn: Arc::new(exp_fn),
             options: RunOptions::default(),
             cache: None,
+            store: None,
             checkpoint_dir: None,
             notifier: None,
             metrics: Arc::new(RunMetrics::new()),
@@ -329,6 +336,27 @@ impl Memento {
         self
     }
 
+    /// Enables the **cross-run result database** at `dir` (see
+    /// [`crate::store`]): results are cached as records in one shared
+    /// segment-log store instead of per-run files, so consecutive runs of
+    /// the same grid restore each other's results, and `memento query`
+    /// answers parameter predicates across every run that used the store.
+    /// When a checkpoint dir is also configured, its manifest and
+    /// completion entries live in the store too (keyed by the dir name),
+    /// unless a legacy `manifest.json` already exists there — old run
+    /// directories keep resuming unchanged. On the CLI: `--store-dir`.
+    pub fn store_dir(mut self, dir: impl Into<PathBuf>) -> Self {
+        self.store = Some(ResultStore::open(dir.into()).expect("open result store"));
+        self
+    }
+
+    /// Enables the cross-run result database with an existing handle
+    /// (shared across runs and threads).
+    pub fn with_store(mut self, store: Arc<ResultStore>) -> Self {
+        self.store = Some(store);
+        self
+    }
+
     /// Enables run checkpointing under this directory.
     pub fn with_checkpoint_dir(mut self, dir: impl Into<PathBuf>) -> Self {
         self.checkpoint_dir = Some(dir.into());
@@ -418,6 +446,11 @@ impl Memento {
         self.cache.clone()
     }
 
+    /// The configured cross-run store handle, if any.
+    pub fn store_handle(&self) -> Option<Arc<ResultStore>> {
+        self.store.clone()
+    }
+
     // ---- execution ---------------------------------------------------------
 
     /// Expands the matrix and runs every included task, blocking until the
@@ -470,33 +503,81 @@ impl Memento {
         }
         crate::config::validate::validate(matrix)?;
 
+        // Cross-run store: register this run (label = checkpoint dir name
+        // when available — that is the name `memento query --last-runs`
+        // and store-backed resume key on) and align the record encoding
+        // with the run's wire format.
+        let run_label = self
+            .checkpoint_dir
+            .as_ref()
+            .and_then(|d| d.file_name())
+            .and_then(|n| n.to_str())
+            .map(|s| s.to_string())
+            .unwrap_or_else(fresh_run_id);
+        if let Some(store) = &self.store {
+            store.set_wire(self.options.wire);
+            store
+                .begin_run(&run_label)
+                .map_err(|e| MementoError::storage(format!("register run in store: {e}")))?;
+        }
+
         // Checkpoint setup stays synchronous so configuration errors
         // (missing dir, fingerprint/version mismatch) surface from
         // `launch` itself, not from a later `collect`. The final task
         // total is unknown until the lazy expansion is exhausted; the run
-        // thread fills it in via `CheckpointStore::set_total`.
+        // thread fills it in via `CheckpointStore::set_total`. With a
+        // store configured, checkpoint records live in the store keyed by
+        // the run label — except that a legacy `manifest.json` in the run
+        // dir wins on resume, so pre-store run directories stay readable.
         let checkpoint: Option<Arc<CheckpointStore>> = match &self.checkpoint_dir {
             None => None,
             Some(dir) => {
                 let fp = matrix.fingerprint();
-                let store = if resuming {
-                    CheckpointStore::resume(
+                let flush_every = self.options.checkpoint_flush_every;
+                let ck = match (&self.store, resuming) {
+                    (Some(store), true) if !CheckpointStore::exists(dir) => {
+                        CheckpointStore::resume_in_store(
+                            Arc::clone(store),
+                            &run_label,
+                            dir,
+                            &fp,
+                            &self.options.version,
+                            0,
+                            flush_every,
+                        )?
+                    }
+                    (Some(store), false) => {
+                        let ck = CheckpointStore::create_in_store(
+                            Arc::clone(store),
+                            &run_label,
+                            dir,
+                            &fp,
+                            &self.options.version,
+                            0,
+                            flush_every,
+                        )?;
+                        // A fresh store-backed run supersedes any legacy
+                        // manifest left in the dir — otherwise a later
+                        // resume would prefer the stale dir-mode state.
+                        let _ = std::fs::remove_file(dir.join("manifest.json"));
+                        ck
+                    }
+                    (_, true) => CheckpointStore::resume(
                         dir,
                         &fp,
                         &self.options.version,
                         0,
-                        self.options.checkpoint_flush_every,
-                    )?
-                } else {
-                    CheckpointStore::create(
+                        flush_every,
+                    )?,
+                    (_, false) => CheckpointStore::create(
                         dir,
                         &fp,
                         &self.options.version,
                         0,
-                        self.options.checkpoint_flush_every,
-                    )?
+                        flush_every,
+                    )?,
                 };
-                Some(Arc::new(store.storage_format(self.options.wire)))
+                Some(Arc::new(ck.storage_format(self.options.wire)))
             }
         };
         if resuming && checkpoint.is_none() {
@@ -505,12 +586,24 @@ impl Memento {
             ));
         }
 
+        // Effective cache: an explicit cache handle wins; otherwise a
+        // configured store backs a store-mode cache, giving every backend
+        // the cross-run restore path with no other code changes.
+        let cache = self.cache.clone().or_else(|| {
+            self.store.as_ref().map(|store| {
+                Arc::new(
+                    ResultCache::open_store(Arc::clone(store))
+                        .storage_format(self.options.wire),
+                )
+            })
+        });
+
         let (sink, rx) = Run::channel(self.options.events);
         let cancel = Arc::new(AtomicBool::new(false));
         let worker = RunWorker {
             exp_fn: Arc::clone(&self.exp_fn),
             options: self.options.clone(),
-            cache: self.cache.clone(),
+            cache,
             notifier: self.notifier.clone(),
             metrics: Arc::clone(&self.metrics),
             journal: self.journal.clone(),
@@ -1772,5 +1865,107 @@ mod tests {
         assert_eq!(results.n_failed(), 0);
         // attempt1 restored None, attempt2 saw 1, attempt3 saw 2
         assert_eq!(*observed.lock().unwrap(), vec![None, Some(1), Some(2)]);
+    }
+
+    #[test]
+    fn shared_store_restores_second_run_without_execution() {
+        // Acceptance criterion for the cross-run database: two consecutive
+        // runs of the same grid against one store — the second executes
+        // zero tasks, restoring everything from the store's records.
+        let td = TempDir::new("memento-store").unwrap();
+        let executions = Arc::new(AtomicUsize::new(0));
+        let run = |ex: Arc<AtomicUsize>| {
+            Memento::new(move |ctx| {
+                ex.fetch_add(1, Ordering::SeqCst);
+                Ok(Json::int(ctx.param_i64("a")?))
+            })
+            .workers(2)
+            .store_dir(td.join("store"))
+            .run(&small_matrix())
+            .unwrap()
+        };
+        let r1 = run(Arc::clone(&executions));
+        assert_eq!(executions.load(Ordering::SeqCst), 6);
+        assert_eq!(r1.n_cached(), 0);
+        let r2 = run(Arc::clone(&executions));
+        assert_eq!(
+            executions.load(Ordering::SeqCst),
+            6,
+            "second run must execute zero tasks"
+        );
+        assert_eq!(r2.n_cached(), 6);
+        assert_eq!(r2.n_failed(), 0);
+        // The store holds one record per task and registered both runs.
+        let store = crate::store::ResultStore::open(td.join("store")).unwrap();
+        assert_eq!(store.stats().live_records, 6);
+        assert_eq!(store.runs().len(), 2);
+    }
+
+    #[test]
+    fn store_backed_checkpoint_resumes_failed_tasks_only() {
+        let td = TempDir::new("memento-store-ck").unwrap();
+        let run_dir = td.join("run");
+        let executions = Arc::new(AtomicUsize::new(0));
+
+        let ex = Arc::clone(&executions);
+        let m = Memento::new(move |ctx| {
+            ex.fetch_add(1, Ordering::SeqCst);
+            if ctx.param_i64("a")? == 3 {
+                Err(MementoError::experiment("flaky"))
+            } else {
+                Ok(Json::int(ctx.param_i64("a")?))
+            }
+        })
+        .workers(2)
+        .store_dir(td.join("store"))
+        .with_checkpoint_dir(&run_dir);
+        let r1 = m.run(&small_matrix()).unwrap();
+        assert_eq!(r1.n_failed(), 2);
+        assert!(
+            !run_dir.join("manifest.json").exists(),
+            "store-backed checkpoint writes no manifest file"
+        );
+
+        // Resume through a fresh handle over the same store: only the two
+        // failed tasks re-run.
+        let ex = Arc::clone(&executions);
+        let m = Memento::new(move |ctx| {
+            ex.fetch_add(1, Ordering::SeqCst);
+            Ok(Json::int(ctx.param_i64("a")?))
+        })
+        .workers(2)
+        .store_dir(td.join("store"))
+        .with_checkpoint_dir(&run_dir);
+        let r2 = m.resume(&small_matrix()).unwrap();
+        assert_eq!(executions.load(Ordering::SeqCst), 8, "only failed re-ran");
+        assert_eq!(r2.len(), 6);
+        assert_eq!(r2.n_failed(), 0);
+        assert_eq!(r2.n_cached(), 4);
+    }
+
+    #[test]
+    fn legacy_manifest_wins_over_store_on_resume() {
+        // A run dir checkpointed before the store existed must keep
+        // resuming from its manifest.json even when a store is configured.
+        let td = TempDir::new("memento-legacy-ck").unwrap();
+        let run_dir = td.join("run");
+        Memento::new(|ctx| Ok(Json::int(ctx.param_i64("a")?)))
+            .with_checkpoint_dir(&run_dir)
+            .run(&small_matrix())
+            .unwrap();
+        assert!(run_dir.join("manifest.json").exists());
+
+        let executions = Arc::new(AtomicUsize::new(0));
+        let ex = Arc::clone(&executions);
+        let r = Memento::new(move |ctx| {
+            ex.fetch_add(1, Ordering::SeqCst);
+            Ok(Json::int(ctx.param_i64("a")?))
+        })
+        .store_dir(td.join("store"))
+        .with_checkpoint_dir(&run_dir)
+        .resume(&small_matrix())
+        .unwrap();
+        assert_eq!(executions.load(Ordering::SeqCst), 0, "all restored from manifest");
+        assert_eq!(r.n_cached(), 6);
     }
 }

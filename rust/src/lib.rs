@@ -39,8 +39,8 @@
 //! ## Architecture
 //!
 //! Three layers, Python never on the request path:
-//! - **L3** ([`coordinator`], [`config`], [`ipc`]) — the orchestrator:
-//!   this crate.
+//! - **L3** ([`coordinator`], [`config`], [`store`], [`ipc`]) — the
+//!   orchestrator: this crate.
 //! - **L2** — a JAX MLP train/predict graph, AOT-lowered to HLO text by
 //!   `python/compile/aot.py` and executed through [`runtime`].
 //! - **L1** — a Pallas fused-dense kernel inside that graph
@@ -63,6 +63,7 @@ pub mod ipc;
 pub mod ml;
 pub mod obs;
 pub mod runtime;
+pub mod store;
 pub mod testing;
 pub mod util;
 
@@ -85,6 +86,8 @@ pub mod prelude {
     pub use crate::coordinator::task::{TaskContext, TaskId, TaskSpec};
     pub use crate::obs::snapshot::{MetricsSnapshot, WorkerStat};
     pub use crate::obs::trace::{SpanEvent, SpanState, TraceSummary, Tracer};
+    pub use crate::store::query::{parse_predicates, Predicate, QueryOptions, QueryRow};
+    pub use crate::store::{MigrationReport, ResultStore, StoreStats};
     pub use crate::util::codec::WireFormat;
     pub use crate::util::json::Json;
 }

@@ -8,6 +8,8 @@
 //!   status  --checkpoint <dir>         inspect a run manifest/telemetry
 //!   report  --results <file> [opts]    pivot saved results into a table
 //!   trace   <summarize|export> <dir>   analyze a recorded span trace
+//!   query   <store-dir> [opts]         search results across runs in a store
+//!   migrate <legacy-dir> <store-dir>   fold per-run JSON dirs into a store
 //!
 //! The experiment function is the §3 grid (`experiments::grid`): parameters
 //! `dataset`/`feature_engineering`/`preprocessing`/`model`. The AOT MLP
@@ -42,6 +44,8 @@ fn main() -> ExitCode {
         "status" => cmd_status(rest),
         "report" => cmd_report(rest),
         "trace" => cmd_trace(rest),
+        "query" => cmd_query(rest),
+        "migrate" => cmd_migrate(rest),
         // Hidden: the worker half of `--isolation process`. Spawned by the
         // supervisor with MEMENTO_WORKER_SOCKET/MEMENTO_WORKER_ID set;
         // never invoked by hand (and deliberately absent from the help).
@@ -67,7 +71,7 @@ fn main() -> ExitCode {
 fn top_help() -> String {
     "memento — effortless, efficient, and reliable ML experiments\n\
      \n\
-     USAGE: memento <expand|run|resume|serve|status|report|trace> [options]\n\
+     USAGE: memento <expand|run|resume|serve|status|report|trace|query|migrate> [options]\n\
      \n\
      Try `memento run --help` for per-command options."
         .to_string()
@@ -169,6 +173,13 @@ fn run_spec(name: &'static str) -> CliSpec {
         .opt("seed", "0", "base RNG seed")
         .opt("version", "v1", "experiment code version (cache salt)")
         .opt_required("cache", "result cache directory")
+        .opt_required(
+            "store-dir",
+            "segment-log result database shared across runs: results are \
+             deduplicated against every prior run and queryable afterwards \
+             with `memento query <dir>` (--cache overrides it as the cache \
+             backing; checkpoints move into the store too)",
+        )
         .opt_required("checkpoint", "checkpoint run directory")
         .opt_required("out", "write results JSON here")
         .opt_required("journal", "write a JSONL event journal here")
@@ -286,6 +297,14 @@ fn cmd_run(args: &[String], resuming: bool) -> Result<(), String> {
                 "--isolation must be 'thread', 'process', or 'remote', got '{other}'"
             ))
         }
+    }
+    if let Some(dir) = a.get("store-dir") {
+        let store = memento::store::ResultStore::open(dir)
+            .map_err(|e| format!("cannot open store {dir}: {e}"))?;
+        for w in store.open_warnings() {
+            eprintln!("store warning: {w}");
+        }
+        m = m.with_store(store);
     }
     if let Some(dir) = a.get("cache") {
         m = m.with_cache_dir(dir);
@@ -549,11 +568,20 @@ fn cmd_status(args: &[String]) -> Result<(), String> {
         "trace",
         "trace directory written by `run --trace-dir` — prints the \
          persisted metrics snapshot and a span-timeline summary",
+    )
+    .opt_required(
+        "store",
+        "segment-log store directory written by `run --store-dir` — \
+         prints segment counts, live/dead record ratio, index shard \
+         occupancy, and cross-run dedup hits",
     );
     let a = unwrap_cli(spec.parse(args))?;
-    let (ck_dir, trace_dir) = (a.get("checkpoint"), a.get("trace"));
-    if ck_dir.is_none() && trace_dir.is_none() {
-        return Err("status needs --checkpoint <dir> and/or --trace <dir>".into());
+    let (ck_dir, trace_dir, store_dir) = (a.get("checkpoint"), a.get("trace"), a.get("store"));
+    if ck_dir.is_none() && trace_dir.is_none() && store_dir.is_none() {
+        return Err("status needs --checkpoint <dir>, --trace <dir>, and/or --store <dir>".into());
+    }
+    if let Some(dir) = store_dir {
+        print_store_status(dir)?;
     }
     if let Some(dir) = ck_dir {
         let manifest = Path::new(dir).join("manifest.json");
@@ -597,6 +625,175 @@ fn cmd_status(args: &[String]) -> Result<(), String> {
             println!("no trace file in {}", dir.display());
         }
     }
+    Ok(())
+}
+
+/// The `status --store` section: segment-log health at a glance.
+fn print_store_status(dir: &str) -> Result<(), String> {
+    let store = memento::store::ResultStore::open(dir)
+        .map_err(|e| format!("cannot open store {dir}: {e}"))?;
+    let stats = store.stats();
+    let dead_pct = if stats.total_records > 0 {
+        100.0 * stats.dead_records as f64 / stats.total_records as f64
+    } else {
+        0.0
+    };
+    println!(
+        "store     : {dir}\n\
+         segments  : {} ({} sealed)\n\
+         records   : {} live / {} dead of {} ({dead_pct:.1}% reclaimable)\n\
+         dedup     : {} cross-run hit(s)\n\
+         runs      : {}\n\
+         compacted : {} pass(es) since open",
+        stats.segments,
+        stats.sealed_segments,
+        stats.live_records,
+        stats.dead_records,
+        stats.total_records,
+        stats.dedup_hits,
+        stats.runs,
+        stats.compactions,
+    );
+    let occ = stats.shard_occupancy;
+    let max = occ.iter().copied().max().unwrap_or(0).max(1);
+    let bars: Vec<String> = occ
+        .iter()
+        .map(|&n| {
+            // 0–8 eighth-block glyphs per shard: a tiny occupancy sparkline.
+            const BLOCKS: [&str; 9] = [" ", "▁", "▂", "▃", "▄", "▅", "▆", "▇", "█"];
+            BLOCKS[(n * 8).div_ceil(max).min(8)].to_string()
+        })
+        .collect();
+    println!("shards    : [{}] max {max} key(s)/shard", bars.join(""));
+    for w in store.open_warnings() {
+        println!("warning   : {w}");
+    }
+    Ok(())
+}
+
+/// `memento query`: predicate search over every result the store has
+/// recorded, across all runs. Non-matching records are never decoded
+/// past their scalar fields (see `store::query`).
+fn cmd_query(args: &[String]) -> Result<(), String> {
+    use memento::store::query::{parse_predicates, QueryOptions};
+
+    let spec = CliSpec::new(
+        "memento query",
+        "search results across runs in a segment-log store",
+    )
+    .positional("store", "store directory written by `run --store-dir`")
+    .opt_required(
+        "where",
+        "comma-separated predicates over parameter fields, e.g. \
+         \"model=svc, lr<=0.1, folds!=2\" (ops: = != < <= > >=; values: \
+         numbers, true/false, strings — quote to force a string match)",
+    )
+    .opt("last-runs", "0", "restrict to the N most recent runs (0 = all)")
+    .opt("limit", "0", "stop after N matching rows (0 = unbounded)")
+    .opt(
+        "output",
+        "table",
+        "output mode: table (aligned summary columns) | ndjson (one full \
+         record document per line, machine-parseable)",
+    );
+    let a = unwrap_cli(spec.parse(args))?;
+    let dir = a.pos("store").ok_or("missing <store>")?;
+    let store = memento::store::ResultStore::open(dir)
+        .map_err(|e| format!("cannot open store {dir}: {e}"))?;
+    for w in store.open_warnings() {
+        eprintln!("store warning: {w}");
+    }
+    let preds = match a.get("where") {
+        Some(expr) => parse_predicates(expr)?,
+        None => Vec::new(),
+    };
+    let last_runs = unwrap_cli(a.get_usize("last-runs"))?;
+    let limit = unwrap_cli(a.get_usize("limit"))?;
+    let opts = QueryOptions {
+        last_runs: (last_runs > 0).then_some(last_runs),
+        limit: (limit > 0).then_some(limit),
+    };
+    let rows = store.query(&preds, &opts).map_err(|e| e.to_string())?;
+
+    match a.get("output").unwrap_or("table") {
+        "ndjson" => {
+            for row in &rows {
+                println!("{}", row.doc);
+            }
+        }
+        "table" => {
+            // Columns: short id, run, each queried field, then the value.
+            let fields: Vec<&str> = preds.iter().map(|p| p.field.as_str()).collect();
+            let mut header: Vec<String> = vec!["id".into(), "run".into()];
+            header.extend(fields.iter().map(|f| f.to_string()));
+            header.push("value".into());
+            let mut table: Vec<Vec<String>> = vec![header];
+            for row in &rows {
+                let params = row.doc.get("params");
+                let mut cells = vec![row.id[..12.min(row.id.len())].to_string(), row.run.clone()];
+                for f in &fields {
+                    let cell = params
+                        .and_then(|p| p.get(f))
+                        .map(|v| v.to_string())
+                        .unwrap_or_else(|| "-".into());
+                    cells.push(cell);
+                }
+                let value = row.doc.get("value").map(|v| v.to_string()).unwrap_or_default();
+                cells.push(if value.chars().count() > 48 {
+                    let cut: String = value.chars().take(47).collect();
+                    format!("{cut}…")
+                } else {
+                    value
+                });
+                table.push(cells);
+            }
+            let ncols = table[0].len();
+            let widths: Vec<usize> = (0..ncols)
+                .map(|c| table.iter().map(|r| r[c].chars().count()).max().unwrap_or(0))
+                .collect();
+            for row in &table {
+                let line: Vec<String> = row
+                    .iter()
+                    .zip(&widths)
+                    .map(|(cell, &w)| format!("{cell:<w$}"))
+                    .collect();
+                println!("{}", line.join("  ").trim_end());
+            }
+            println!("{} row(s)", rows.len());
+        }
+        other => return Err(format!("--output must be 'table' or 'ndjson', got '{other}'")),
+    }
+    Ok(())
+}
+
+/// `memento migrate`: fold a legacy per-run directory layout (one JSON
+/// file per cache entry / checkpoint manifest) into a segment-log store.
+/// The legacy directory is left untouched; re-running is idempotent
+/// because identical puts dedup against the store's content hashes.
+fn cmd_migrate(args: &[String]) -> Result<(), String> {
+    let spec = CliSpec::new(
+        "memento migrate",
+        "fold legacy per-run JSON directories into a segment-log store",
+    )
+    .positional("legacy", "legacy cache or checkpoint-run directory")
+    .positional("store", "target store directory (created if absent)")
+    .flag("keep-open", "skip sealing the active segment after migrating");
+    let a = unwrap_cli(spec.parse(args))?;
+    let legacy = a.pos("legacy").ok_or("missing <legacy>")?;
+    let dir = a.pos("store").ok_or("missing <store>")?;
+    let store = memento::store::ResultStore::open(dir)
+        .map_err(|e| format!("cannot open store {dir}: {e}"))?;
+    let report = store
+        .migrate_dir(Path::new(legacy))
+        .map_err(|e| format!("migrate {legacy}: {e}"))?;
+    if !a.flag("keep-open") {
+        store.seal_active().map_err(|e| e.to_string())?;
+    }
+    println!(
+        "migrated {legacy} -> {dir}: {} result(s), {} checkpoint entr(ies), \
+         {} manifest(s), {} file(s) skipped",
+        report.results, report.ck_entries, report.manifests, report.skipped
+    );
     Ok(())
 }
 

@@ -1,0 +1,387 @@
+//! Compaction: folds sealed segments down to their live records.
+//!
+//! The append-only log trades write simplicity for accumulating dead
+//! records (superseded puts, invalidated entries). Compaction reclaims
+//! them by rewriting all sealed segments into one new segment containing
+//! only what must survive:
+//!
+//! - every **live** record located in the input segments,
+//! - every **latest-action tombstone** located there (dropping a
+//!   tombstone while any older segment could still resurface its key
+//!   would un-invalidate that key on replay — see [`super::index`]),
+//! - fresh **run registration** records preserving run recency order.
+//!
+//! ## Crash-safety protocol
+//!
+//! 1. Write the survivor records to `compact.tmp` (same directory),
+//!    footer-sealed, and fsync it.
+//! 2. Atomically rename `compact.tmp` over the **highest-numbered input
+//!    segment** and fsync the directory.
+//! 3. Unlink the lower-numbered input segments, then fsync the directory.
+//!
+//! The invariant making every intermediate state safe: replay applies
+//! segments in id order and later records supersede earlier ones, so any
+//! mix of "old segments still present" and "compacted segment in place"
+//! replays to exactly the live set — leftover old records are shadowed by
+//! the compacted copies in the higher-numbered segment. A crash before
+//! step 2 leaves only ignorable `compact.tmp` debris; a crash during
+//! step 3 leaves shadowed duplicates that the *next* compaction reclaims.
+//! Zero live records are lost at any point (asserted step-by-step in the
+//! kill-during-compaction tests below).
+
+use super::index::Loc;
+use super::{scan_dir, segment, Inner, ResultStore};
+use crate::util::codec;
+use crate::util::fs as mfs;
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+use std::fs;
+use std::io::{self, Write};
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+
+/// Outcome of one [`ResultStore::compact`] pass.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct CompactReport {
+    /// Sealed segments folded (0 when there was nothing to do or a pass
+    /// was already running).
+    pub input_segments: usize,
+    /// Live records carried into the compacted segment.
+    pub live_carried: usize,
+    /// Latest-action tombstones carried forward.
+    pub tombstones_carried: usize,
+    /// Dead records dropped (reclaimed).
+    pub records_dropped: u64,
+    /// Input bytes before folding.
+    pub bytes_before: u64,
+    /// Compacted segment size.
+    pub bytes_after: u64,
+    /// True when another pass was already in flight and this one skipped.
+    pub skipped: bool,
+    /// True when a test-injected abort stopped the pass mid-protocol.
+    pub aborted: bool,
+}
+
+/// Test-injection points simulating a crash mid-compaction. After an
+/// aborted pass the in-memory store is stale by design (a real crash
+/// loses it anyway) — the store handle must be discarded and the
+/// directory reopened, which is exactly what the tests do.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub(crate) enum AbortPoint {
+    /// Crash after `compact.tmp` is written+synced, before the rename.
+    AfterTmpWrite,
+    /// Crash after the rename over the last input segment.
+    AfterRename,
+    /// Crash after unlinking `n + 1` of the lower-numbered inputs.
+    AfterUnlink(usize),
+}
+
+/// Compaction trigger: at least two sealed segments and at least half of
+/// their records dead.
+pub(crate) fn should_compact(inner: &Inner) -> bool {
+    if inner.sealed.len() < 2 {
+        return false;
+    }
+    let (mut total, mut dead) = (0u64, 0u64);
+    for id in &inner.sealed {
+        let s = inner.index.segment_stat(*id);
+        total += s.total;
+        dead += s.dead;
+    }
+    dead > 0 && dead * 2 >= total
+}
+
+impl ResultStore {
+    /// Folds all sealed segments into one, dropping superseded and
+    /// invalidated records. Safe to call at any time; a no-op when there
+    /// are no sealed segments or another pass is already running.
+    pub fn compact(&self) -> io::Result<CompactReport> {
+        self.compact_with_abort(None)
+    }
+
+    /// Kicks a compaction pass on a background thread (the auto-trigger
+    /// path). Returns `false` when a pass is already in flight or the
+    /// thread could not be spawned.
+    pub fn compact_in_background(self: &Arc<Self>) -> bool {
+        if self.compacting.load(Ordering::SeqCst) {
+            return false;
+        }
+        let me = Arc::clone(self);
+        std::thread::Builder::new()
+            .name("memento-store-compact".to_string())
+            .spawn(move || {
+                let _ = me.compact();
+            })
+            .is_ok()
+    }
+
+    pub(crate) fn compact_with_abort(&self, abort: Option<AbortPoint>) -> io::Result<CompactReport> {
+        if self.compacting.swap(true, Ordering::SeqCst) {
+            return Ok(CompactReport { skipped: true, ..CompactReport::default() });
+        }
+        let result = self.compact_inner(abort);
+        self.compacting.store(false, Ordering::SeqCst);
+        result
+    }
+
+    fn compact_inner(&self, abort: Option<AbortPoint>) -> io::Result<CompactReport> {
+        let mut inner = self.lock();
+        let mut inputs = inner.sealed.clone();
+        inputs.sort_unstable();
+        if inputs.is_empty() {
+            return Ok(CompactReport::default());
+        }
+        let mut report = CompactReport { input_segments: inputs.len(), ..CompactReport::default() };
+
+        // Survivors, grouped per input segment in (segment, offset) order
+        // so each input file is read exactly once, sequentially.
+        let live = inner.index.live_in_segments(&inputs);
+        let tombs = inner.index.tombstones_in_segments(&inputs);
+        report.live_carried = live.len();
+        report.tombstones_carried = tombs.len();
+        let mut by_seg: BTreeMap<u64, Vec<Loc>> = BTreeMap::new();
+        for (_, loc) in live.iter().chain(tombs.iter()) {
+            by_seg.entry(loc.segment).or_default().push(*loc);
+        }
+
+        // Step 1: write survivors to compact.tmp, sealed, fsynced.
+        let tmp = inner.dir.join("compact.tmp");
+        let mut out = fs::File::create(&tmp)?;
+        let mut carried = 0u64;
+        for run in &inner.runs {
+            let doc = Json::obj(vec![("kind", Json::str("run")), ("run", Json::str(run))]);
+            out.write_all(&segment::encode_frame(&codec::write_document(&doc, inner.wire)))?;
+            carried += 1;
+        }
+        for id in &inputs {
+            let path = segment::segment_path(&inner.dir, *id);
+            report.bytes_before += fs::metadata(&path)?.len();
+            let Some(locs) = by_seg.get_mut(id) else { continue };
+            locs.sort_unstable_by_key(|l| l.offset);
+            let bytes = fs::read(&path)?;
+            for loc in locs.iter() {
+                let start = loc.offset as usize;
+                let end = start + segment::FRAME_HEADER as usize + loc.body_len as usize;
+                let frame = bytes.get(start..end).ok_or_else(|| {
+                    io::Error::other(format!("segment {id:06}: index loc out of bounds"))
+                })?;
+                out.write_all(frame)?;
+                carried += 1;
+            }
+        }
+        let seal = Json::obj(vec![
+            ("kind", Json::str("seal")),
+            ("records", Json::int(carried as i64 + 1)),
+        ]);
+        out.write_all(&segment::encode_frame(&codec::write_document(&seal, inner.wire)))?;
+        out.sync_all()?;
+        report.bytes_after = out.metadata()?.len();
+        drop(out);
+        if abort == Some(AbortPoint::AfterTmpWrite) {
+            report.aborted = true;
+            return Ok(report);
+        }
+
+        // Step 2: atomic rename over the highest-numbered input, then
+        // make the rename itself durable.
+        let target = *inputs.last().unwrap();
+        fs::rename(&tmp, segment::segment_path(&inner.dir, target))?;
+        mfs::sync_dir(&inner.dir)?;
+        if abort == Some(AbortPoint::AfterRename) {
+            report.aborted = true;
+            return Ok(report);
+        }
+
+        // Step 3: unlink the shadowed lower-numbered inputs.
+        for (i, id) in inputs[..inputs.len() - 1].iter().enumerate() {
+            fs::remove_file(segment::segment_path(&inner.dir, *id))?;
+            if abort == Some(AbortPoint::AfterUnlink(i)) {
+                report.aborted = true;
+                return Ok(report);
+            }
+        }
+        mfs::sync_dir(&inner.dir)?;
+
+        // Refresh in-memory state from the folded layout (replay is the
+        // single source of truth — the same code path open() trusts).
+        let before_dead = inner.index.dead_records();
+        let st = scan_dir(&inner.dir)?;
+        report.records_dropped = before_dead.saturating_sub(st.index.dead_records());
+        inner.index = st.index;
+        inner.sealed = st.sealed;
+        inner.runs = st.runs;
+        inner.warnings.extend(st.warnings);
+        inner.compactions += 1;
+        Ok(report)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::fs::TempDir;
+    use std::collections::HashMap;
+
+    fn value(v: f64) -> Json {
+        Json::obj(vec![("score", Json::Num(v))])
+    }
+
+    /// Builds a store with several sealed segments, overwrites and
+    /// invalidations included; returns the expected live map.
+    fn build_store(td: &TempDir) -> HashMap<String, Option<Json>> {
+        let store = ResultStore::open(td.path()).unwrap();
+        store.set_auto_compact(false);
+        store.set_segment_max(400);
+        store.begin_run("first").unwrap();
+        for i in 0..24 {
+            store.put_result(&format!("id{i:02}"), &Json::Null, &value(i as f64)).unwrap();
+        }
+        store.begin_run("second").unwrap();
+        // Overwrite half (old versions become dead)…
+        for i in 0..12 {
+            store.put_result(&format!("id{i:02}"), &Json::Null, &value(100.0 + i as f64)).unwrap();
+        }
+        // …and invalidate a few (latest action = tombstone).
+        for i in 20..24 {
+            store.invalidate_result(&format!("id{i:02}")).unwrap();
+        }
+        store.seal_active().unwrap();
+        store.sync().unwrap();
+        assert!(store.stats().sealed_segments >= 3, "{:?}", store.stats());
+
+        let mut expected = HashMap::new();
+        for i in 0..24 {
+            let id = format!("id{i:02}");
+            expected.insert(
+                id,
+                if i >= 20 {
+                    None
+                } else if i < 12 {
+                    Some(value(100.0 + i as f64))
+                } else {
+                    Some(value(i as f64))
+                },
+            );
+        }
+        expected
+    }
+
+    fn assert_live_set(store: &ResultStore, expected: &HashMap<String, Option<Json>>) {
+        for (id, want) in expected {
+            assert_eq!(&store.get_result(id).unwrap(), want, "id {id}");
+        }
+    }
+
+    #[test]
+    fn full_compaction_reclaims_dead_and_preserves_live() {
+        let td = TempDir::new("compact-full").unwrap();
+        let expected = build_store(&td);
+        let store = ResultStore::open(td.path()).unwrap();
+        store.set_auto_compact(false);
+        let before = store.stats();
+        assert!(before.dead_records > 0);
+        let report = store.compact().unwrap();
+        assert!(!report.skipped && !report.aborted);
+        assert_eq!(report.input_segments, before.sealed_segments);
+        assert_eq!(report.tombstones_carried, 4);
+        assert!(report.bytes_after < report.bytes_before, "{report:?}");
+        let after = store.stats();
+        assert_eq!(after.sealed_segments, 1, "{after:?}");
+        assert_eq!(after.dead_records, 0, "{after:?}");
+        assert_eq!(after.compactions, 1);
+        assert_live_set(&store, &expected);
+        // Runs survive the fold.
+        assert_eq!(store.runs(), vec!["first".to_string(), "second".to_string()]);
+        // And the folded layout replays identically after reopen.
+        drop(store);
+        let store = ResultStore::open(td.path()).unwrap();
+        assert!(store.open_warnings().is_empty(), "{:?}", store.open_warnings());
+        assert_live_set(&store, &expected);
+        assert_eq!(store.runs(), vec!["first".to_string(), "second".to_string()]);
+    }
+
+    #[test]
+    fn kill_during_compaction_loses_zero_live_records() {
+        // Satellite: crash at every protocol step must leave the store
+        // openable with the full live set intact.
+        let aborts = [
+            AbortPoint::AfterTmpWrite,
+            AbortPoint::AfterRename,
+            AbortPoint::AfterUnlink(0),
+            AbortPoint::AfterUnlink(1),
+        ];
+        for abort in aborts {
+            let td = TempDir::new("compact-kill").unwrap();
+            let expected = build_store(&td);
+            {
+                let store = ResultStore::open(td.path()).unwrap();
+                store.set_auto_compact(false);
+                let report = store.compact_with_abort(Some(abort)).unwrap();
+                assert!(report.aborted, "{abort:?}");
+                // Simulated crash: the handle is discarded, state on disk
+                // is whatever the abort point left behind.
+            }
+            let store = ResultStore::open(td.path()).unwrap();
+            assert_live_set(&store, &expected);
+            assert_eq!(
+                store.runs(),
+                vec!["first".to_string(), "second".to_string()],
+                "{abort:?}"
+            );
+            // The interrupted pass is recoverable: a clean compaction
+            // afterwards fully reclaims.
+            store.set_auto_compact(false);
+            let report = store.compact().unwrap();
+            assert!(!report.aborted, "{abort:?}");
+            assert_eq!(store.stats().dead_records, 0, "{abort:?}");
+            assert_live_set(&store, &expected);
+            // Store stays writable after recovery.
+            store.put_result("fresh", &Json::Null, &value(7.0)).unwrap();
+            assert_eq!(store.get_result("fresh").unwrap(), Some(value(7.0)));
+        }
+    }
+
+    #[test]
+    fn compaction_trigger_thresholds() {
+        let td = TempDir::new("compact-trig").unwrap();
+        let store = ResultStore::open(td.path()).unwrap();
+        store.set_auto_compact(false);
+        store.set_segment_max(300);
+        for i in 0..8 {
+            store.put_result(&format!("k{i}"), &Json::Null, &value(i as f64)).unwrap();
+        }
+        store.seal_active().unwrap();
+        {
+            let inner = store.lock();
+            assert!(!should_compact(&inner), "no dead records yet");
+        }
+        for i in 0..8 {
+            store.put_result(&format!("k{i}"), &Json::Null, &value(50.0 + i as f64)).unwrap();
+        }
+        store.seal_active().unwrap();
+        {
+            let inner = store.lock();
+            assert!(should_compact(&inner), "half the sealed records are dead");
+        }
+    }
+
+    #[test]
+    fn concurrent_passes_skip() {
+        let td = TempDir::new("compact-skip").unwrap();
+        build_store(&td);
+        let store = ResultStore::open(td.path()).unwrap();
+        store.compacting.store(true, Ordering::SeqCst);
+        let report = store.compact().unwrap();
+        assert!(report.skipped);
+        store.compacting.store(false, Ordering::SeqCst);
+        assert!(!store.compact().unwrap().skipped);
+    }
+
+    #[test]
+    fn compacting_empty_store_is_noop() {
+        let td = TempDir::new("compact-empty").unwrap();
+        let store = ResultStore::open(td.path()).unwrap();
+        let report = store.compact().unwrap();
+        assert_eq!(report, CompactReport::default());
+    }
+}

@@ -1,0 +1,293 @@
+//! Sharded in-memory index over the segment log.
+//!
+//! Same shape as the result cache's memory tier: 16 FNV-1a shards, so the
+//! design that already serves warm cache hits generalizes directly to
+//! "where on disk does key X live". The index is *derived* state — it is
+//! rebuilt on open by replaying segment record headers in log order
+//! (later records supersede earlier ones), which is also what makes
+//! compaction crash-safe: any mix of pre- and post-compaction segment
+//! files replays to the same live set.
+//!
+//! Alongside the key → location map the index keeps:
+//! - a **content-hash table** (SHA-256 of each stored value) counting
+//!   cross-run dedup hits — two runs that produce identical values are
+//!   visible as dedup even though each record stays self-contained;
+//! - **latest-action tombstones**: an invalidated key's tombstone must
+//!   survive compaction for as long as it is the newest action for that
+//!   key, otherwise a crash that leaves an older segment behind would
+//!   resurrect the invalidated record on replay;
+//! - **per-segment live/dead counters** driving the compaction trigger
+//!   and `memento status --store`.
+
+use std::collections::{BTreeMap, HashMap};
+
+/// Number of index shards (matches the result cache's memory tier).
+pub const SHARDS: usize = 16;
+
+/// Where a record lives: which segment, at what frame offset, and how
+/// long its body is (the length is re-verified against the frame header
+/// on every read).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Loc {
+    /// Segment id (`seg-NNNNNN.log`).
+    pub segment: u64,
+    /// Frame start offset within the segment file.
+    pub offset: u64,
+    /// Record body length in bytes (excluding the 8-byte frame header).
+    pub body_len: u32,
+}
+
+/// Per-segment record accounting.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct SegmentStat {
+    /// Records appended to this segment (indexed kinds only).
+    pub total: u64,
+    /// Records in this segment that have since been superseded or
+    /// invalidated — reclaimable by compaction.
+    pub dead: u64,
+}
+
+/// FNV-1a shard selector (identical constants to the cache's memory tier).
+pub fn shard_of(key: &str) -> usize {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for b in key.as_bytes() {
+        h ^= *b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    (h % SHARDS as u64) as usize
+}
+
+/// The in-memory index: key → [`Loc`] plus the bookkeeping described in
+/// the module docs. Not internally synchronized — the store wraps it in
+/// its own mutex.
+pub struct ShardedIndex {
+    shards: Vec<HashMap<String, Loc>>,
+    tombstones: HashMap<String, Loc>,
+    hashes: HashMap<String, u64>,
+    dedup_hits: u64,
+    segments: BTreeMap<u64, SegmentStat>,
+}
+
+impl ShardedIndex {
+    /// An empty index.
+    pub fn new() -> ShardedIndex {
+        ShardedIndex {
+            shards: (0..SHARDS).map(|_| HashMap::new()).collect(),
+            tombstones: HashMap::new(),
+            hashes: HashMap::new(),
+            dedup_hits: 0,
+            segments: BTreeMap::new(),
+        }
+    }
+
+    /// Applies a put of `key` at `loc`. Any previous location (or
+    /// pending tombstone) for the key becomes dead.
+    pub fn record_put(&mut self, key: String, loc: Loc) {
+        self.segments.entry(loc.segment).or_default().total += 1;
+        if let Some(tomb) = self.tombstones.remove(&key) {
+            self.mark_dead(tomb.segment);
+        }
+        if let Some(old) = self.shards[shard_of(&key)].insert(key, loc) {
+            self.mark_dead(old.segment);
+        }
+    }
+
+    /// Applies a tombstone for `key` written at `loc`: the key leaves the
+    /// live map, its old record becomes dead, and the tombstone itself is
+    /// retained as the key's latest action (see module docs for why).
+    pub fn record_tombstone(&mut self, key: String, loc: Loc) {
+        self.segments.entry(loc.segment).or_default().total += 1;
+        if let Some(old) = self.shards[shard_of(&key)].remove(&key) {
+            self.mark_dead(old.segment);
+        }
+        if let Some(prev) = self.tombstones.insert(key, loc) {
+            self.mark_dead(prev.segment);
+        }
+    }
+
+    /// Notes a stored value's content hash; returns `true` when the same
+    /// hash was already present (a cross-run dedup hit).
+    pub fn note_hash(&mut self, hash: &str) -> bool {
+        let n = self.hashes.entry(hash.to_string()).or_insert(0);
+        *n += 1;
+        if *n > 1 {
+            self.dedup_hits += 1;
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Live location of `key`, if any.
+    pub fn get(&self, key: &str) -> Option<Loc> {
+        self.shards[shard_of(key)].get(key).copied()
+    }
+
+    /// Number of live keys.
+    pub fn len(&self) -> usize {
+        self.shards.iter().map(|s| s.len()).sum()
+    }
+
+    /// True when no key is live.
+    pub fn is_empty(&self) -> bool {
+        self.shards.iter().all(|s| s.is_empty())
+    }
+
+    /// Live keys per shard — the occupancy picture for `status --store`.
+    pub fn shard_occupancy(&self) -> [usize; SHARDS] {
+        let mut out = [0usize; SHARDS];
+        for (i, s) in self.shards.iter().enumerate() {
+            out[i] = s.len();
+        }
+        out
+    }
+
+    /// All live `(key, loc)` pairs whose key starts with `prefix`
+    /// (checkpoint resume and queries use key namespaces as prefixes).
+    pub fn entries_with_prefix(&self, prefix: &str) -> Vec<(String, Loc)> {
+        let mut out = Vec::new();
+        for shard in &self.shards {
+            for (k, loc) in shard {
+                if k.starts_with(prefix) {
+                    out.push((k.clone(), *loc));
+                }
+            }
+        }
+        out
+    }
+
+    /// Live entries located in any of `segments` — the records a
+    /// compaction of those segments must carry forward.
+    pub fn live_in_segments(&self, segments: &[u64]) -> Vec<(String, Loc)> {
+        let mut out = Vec::new();
+        for shard in &self.shards {
+            for (k, loc) in shard {
+                if segments.contains(&loc.segment) {
+                    out.push((k.clone(), *loc));
+                }
+            }
+        }
+        out
+    }
+
+    /// Latest-action tombstones located in any of `segments` — these must
+    /// also be carried forward by compaction (module docs).
+    pub fn tombstones_in_segments(&self, segments: &[u64]) -> Vec<(String, Loc)> {
+        self.tombstones
+            .iter()
+            .filter(|(_, loc)| segments.contains(&loc.segment))
+            .map(|(k, loc)| (k.clone(), *loc))
+            .collect()
+    }
+
+    /// Per-segment accounting for `segment`, zeroed if never seen.
+    pub fn segment_stat(&self, segment: u64) -> SegmentStat {
+        self.segments.get(&segment).copied().unwrap_or_default()
+    }
+
+    /// Total dead (reclaimable) records across all segments.
+    pub fn dead_records(&self) -> u64 {
+        self.segments.values().map(|s| s.dead).sum()
+    }
+
+    /// Total records replayed into the index (all segments, all kinds
+    /// that are indexed).
+    pub fn total_records(&self) -> u64 {
+        self.segments.values().map(|s| s.total).sum()
+    }
+
+    /// Cross-run dedup hits observed (puts whose value hash was already
+    /// in the store).
+    pub fn dedup_hits(&self) -> u64 {
+        self.dedup_hits
+    }
+
+    fn mark_dead(&mut self, segment: u64) {
+        self.segments.entry(segment).or_default().dead += 1;
+    }
+}
+
+impl Default for ShardedIndex {
+    fn default() -> ShardedIndex {
+        ShardedIndex::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn loc(segment: u64, offset: u64) -> Loc {
+        Loc { segment, offset, body_len: 10 }
+    }
+
+    #[test]
+    fn put_get_supersede() {
+        let mut ix = ShardedIndex::new();
+        ix.record_put("r:a".into(), loc(1, 0));
+        ix.record_put("r:b".into(), loc(1, 18));
+        assert_eq!(ix.get("r:a"), Some(loc(1, 0)));
+        assert_eq!(ix.len(), 2);
+        assert_eq!(ix.dead_records(), 0);
+        // Supersede a: its old record becomes dead.
+        ix.record_put("r:a".into(), loc(2, 0));
+        assert_eq!(ix.get("r:a"), Some(loc(2, 0)));
+        assert_eq!(ix.len(), 2);
+        assert_eq!(ix.segment_stat(1).dead, 1);
+        assert_eq!(ix.segment_stat(1).total, 2);
+        assert_eq!(ix.segment_stat(2).total, 1);
+    }
+
+    #[test]
+    fn tombstone_lifecycle() {
+        let mut ix = ShardedIndex::new();
+        ix.record_put("r:a".into(), loc(1, 0));
+        ix.record_tombstone("r:a".into(), loc(2, 0));
+        assert_eq!(ix.get("r:a"), None);
+        assert_eq!(ix.segment_stat(1).dead, 1);
+        // The tombstone is the latest action: it must be carried forward.
+        assert_eq!(ix.tombstones_in_segments(&[2]).len(), 1);
+        // A re-put supersedes the tombstone, which becomes dead.
+        ix.record_put("r:a".into(), loc(3, 0));
+        assert_eq!(ix.get("r:a"), Some(loc(3, 0)));
+        assert!(ix.tombstones_in_segments(&[2]).is_empty());
+        assert_eq!(ix.segment_stat(2).dead, 1);
+    }
+
+    #[test]
+    fn hash_table_counts_dedup() {
+        let mut ix = ShardedIndex::new();
+        assert!(!ix.note_hash("h1"));
+        assert!(ix.note_hash("h1"));
+        assert!(!ix.note_hash("h2"));
+        assert!(ix.note_hash("h1"));
+        assert_eq!(ix.dedup_hits(), 2);
+    }
+
+    #[test]
+    fn prefix_and_segment_listings() {
+        let mut ix = ShardedIndex::new();
+        ix.record_put("r:x".into(), loc(1, 0));
+        ix.record_put("c:run1:x".into(), loc(1, 30));
+        ix.record_put("c:run2:x".into(), loc(2, 0));
+        ix.record_put("m:run1".into(), loc(1, 60));
+        assert_eq!(ix.entries_with_prefix("c:run1:").len(), 1);
+        assert_eq!(ix.entries_with_prefix("r:").len(), 1);
+        let mut in_seg1 = ix.live_in_segments(&[1]);
+        in_seg1.sort_by(|a, b| a.0.cmp(&b.0));
+        let keys: Vec<&str> = in_seg1.iter().map(|(k, _)| k.as_str()).collect();
+        assert_eq!(keys, vec!["c:run1:x", "m:run1", "r:x"]);
+    }
+
+    #[test]
+    fn occupancy_spreads_across_shards() {
+        let mut ix = ShardedIndex::new();
+        for i in 0..256 {
+            ix.record_put(format!("r:{i:064x}"), loc(1, i * 20));
+        }
+        let occ = ix.shard_occupancy();
+        assert_eq!(occ.iter().sum::<usize>(), 256);
+        // FNV over distinct keys should touch every shard at this count.
+        assert!(occ.iter().all(|&n| n > 0), "{occ:?}");
+    }
+}

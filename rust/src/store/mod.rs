@@ -1,0 +1,916 @@
+//! Cross-run result database: an embedded, std-only segment-log store.
+//!
+//! The cache and checkpoint layers historically persisted one file per
+//! task id inside per-run directories — fine at 10³ results, hopeless at
+//! the 10⁷ scale the roadmap targets, and structurally unable to answer
+//! any question that spans runs. This subsystem replaces that layout (for
+//! callers that opt in) with a single shared database directory:
+//!
+//! - [`segment`] — append-only numbered segment files; every record is a
+//!   length-prefixed, CRC-framed codec document, and sealed segments end
+//!   in a `seal` footer and are immutable from then on.
+//! - [`index`] — a 16-shard in-memory map `key → (segment, offset)`
+//!   rebuilt on open by lazy-scanning record *header fields* only (no
+//!   value subtree is ever materialized during rebuild), plus a
+//!   content-hash table that counts cross-run dedup and the per-segment
+//!   live/dead accounting that drives compaction.
+//! - [`compact`] — folds sealed segments down to their live records,
+//!   crash-safe via write-new-then-atomic-rename (any interleaving of
+//!   old and new files replays to the same live set).
+//! - [`query`] — predicate evaluation over parameter fields using the
+//!   lazy [`Scanner`], so matching never materializes non-matching
+//!   records.
+//!
+//! ## Record kinds
+//!
+//! | kind       | key in index     | meaning                                |
+//! |------------|------------------|----------------------------------------|
+//! | `result`   | `r:<task-id>`    | a cached task result (`params`,`value`)|
+//! | `ck`       | `c:<run>:<id>`   | a checkpoint completion entry          |
+//! | `manifest` | `m:<run>`        | a run's checkpoint manifest            |
+//! | `run`      | —                | run registration (ordering for queries)|
+//! | `tomb`     | —                | invalidation of an earlier key         |
+//! | `seal`     | —                | segment footer; marks it immutable     |
+//!
+//! Records are self-contained (values are stored inline, never by
+//! reference), so compaction and recovery never need to chase pointers;
+//! the content-hash table exists for dedup *accounting*, while dedup
+//! *behaviour* — a repeated run executing zero tasks — falls out of task
+//! ids being content hashes: the second run's cache probe finds `r:<id>`
+//! already present.
+
+pub mod compact;
+pub mod index;
+pub mod query;
+pub mod segment;
+
+use crate::util::codec::{self, WireFormat};
+use crate::util::fs as mfs;
+use crate::util::json::Json;
+use crate::util::scan::Scanner;
+use crate::util::sha256::sha256_hex;
+use index::{Loc, ShardedIndex, SHARDS};
+use segment::{RecordScan, SegmentWriter};
+use std::fs;
+use std::io;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::AtomicBool;
+use std::sync::{Arc, Mutex, OnceLock, Weak};
+
+/// Default size at which the active segment is sealed and a new one
+/// started (small enough that compaction has units to work with, large
+/// enough that a toy grid fits in one segment).
+pub const DEFAULT_SEGMENT_MAX: u64 = 8 << 20;
+
+/// Snapshot of store health for `memento status --store` and tests.
+#[derive(Debug, Clone)]
+pub struct StoreStats {
+    /// Total segment files on disk (sealed + active).
+    pub segments: usize,
+    /// Sealed (immutable) segments.
+    pub sealed_segments: usize,
+    /// Live keys in the index.
+    pub live_records: usize,
+    /// Records superseded or invalidated — reclaimable by compaction.
+    pub dead_records: u64,
+    /// All indexed records replayed (live + dead).
+    pub total_records: u64,
+    /// Puts whose value content-hash was already present (cross-run dedup).
+    pub dedup_hits: u64,
+    /// Distinct runs registered.
+    pub runs: usize,
+    /// Completed compaction passes since open.
+    pub compactions: u64,
+    /// Live-key occupancy of each index shard.
+    pub shard_occupancy: [usize; SHARDS],
+    /// Warnings accumulated at open (tail damage, undecodable records).
+    pub warnings: usize,
+}
+
+/// What a [`ResultStore::migrate_dir`] pass folded into the store.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct MigrationReport {
+    /// Result records written (cache entries / succeeded run values).
+    pub results: usize,
+    /// Checkpoint completion entries written.
+    pub ck_entries: usize,
+    /// Run manifests written.
+    pub manifests: usize,
+    /// Files present but skipped (undecodable or not entry-shaped).
+    pub skipped: usize,
+}
+
+pub(crate) struct Inner {
+    pub(crate) dir: PathBuf,
+    pub(crate) wire: WireFormat,
+    pub(crate) writer: SegmentWriter,
+    pub(crate) sealed: Vec<u64>,
+    pub(crate) index: ShardedIndex,
+    pub(crate) runs: Vec<String>,
+    pub(crate) current_run: Option<String>,
+    pub(crate) compactions: u64,
+    pub(crate) auto_compact: bool,
+    pub(crate) segment_max: u64,
+    pub(crate) warnings: Vec<String>,
+}
+
+/// Handle to one store directory. Cheap to share (`Arc`); all operations
+/// are internally synchronized behind one mutex — the write path is a
+/// single appender by construction, and reads are index lookups plus one
+/// frame read.
+pub struct ResultStore {
+    inner: Mutex<Inner>,
+    pub(crate) compacting: AtomicBool,
+    pub(crate) me: OnceLock<Weak<ResultStore>>,
+}
+
+/// Everything `scan_dir` learns from replaying the segment files.
+struct ScanState {
+    index: ShardedIndex,
+    runs: Vec<String>,
+    sealed: Vec<u64>,
+    tail: Option<TailInfo>,
+    warnings: Vec<String>,
+}
+
+struct TailInfo {
+    id: u64,
+    sealed: bool,
+    valid_len: u64,
+    records: u64,
+}
+
+impl ResultStore {
+    /// Opens (or creates) the store at `dir`, rebuilding the index by
+    /// scanning segment record headers. Damaged tails are truncated with
+    /// a warning ([`ResultStore::open_warnings`]), never a panic.
+    pub fn open(dir: impl Into<PathBuf>) -> io::Result<Arc<ResultStore>> {
+        let dir = dir.into();
+        fs::create_dir_all(&dir)?;
+        segment::remove_temp_files(&dir)?;
+        let st = scan_dir(&dir)?;
+        let writer = match &st.tail {
+            Some(t) if !t.sealed => SegmentWriter::open_tail(&dir, t.id, t.valid_len, t.records)?,
+            Some(t) => SegmentWriter::create(&dir, t.id + 1)?,
+            None => SegmentWriter::create(&dir, 1)?,
+        };
+        let inner = Inner {
+            dir,
+            wire: WireFormat::default(),
+            writer,
+            sealed: st.sealed,
+            index: st.index,
+            runs: st.runs,
+            current_run: None,
+            compactions: 0,
+            auto_compact: true,
+            segment_max: DEFAULT_SEGMENT_MAX,
+            warnings: st.warnings,
+        };
+        let store = Arc::new(ResultStore {
+            inner: Mutex::new(inner),
+            compacting: AtomicBool::new(false),
+            me: OnceLock::new(),
+        });
+        let _ = store.me.set(Arc::downgrade(&store));
+        Ok(store)
+    }
+
+    /// True when `dir` already holds segment files — the layout
+    /// auto-detection hook used by `ResultCache::open` and the CLI.
+    pub fn is_store_dir(dir: &Path) -> bool {
+        segment::list_segments(dir).map(|s| !s.is_empty()).unwrap_or(false)
+    }
+
+    /// The store directory.
+    pub fn dir(&self) -> PathBuf {
+        self.lock().dir.clone()
+    }
+
+    /// Sets the wire format for *future* appends (existing records keep
+    /// their format; readers auto-detect per record).
+    pub fn set_wire(&self, wire: WireFormat) {
+        self.lock().wire = wire;
+    }
+
+    /// Enables/disables the automatic background compaction trigger
+    /// (on by default; tests that inspect segment layouts turn it off).
+    pub fn set_auto_compact(&self, on: bool) {
+        self.lock().auto_compact = on;
+    }
+
+    /// Overrides the active-segment roll size (tests/benches use small
+    /// values to force multi-segment layouts).
+    pub fn set_segment_max(&self, bytes: u64) {
+        self.lock().segment_max = bytes.max(1);
+    }
+
+    /// Warnings accumulated while opening (damaged tails, undecodable
+    /// records). Empty for a healthy store.
+    pub fn open_warnings(&self) -> Vec<String> {
+        self.lock().warnings.clone()
+    }
+
+    // ---- runs ------------------------------------------------------------
+
+    /// Registers `label` as the current run: appends a `run` record (so
+    /// query recency spans process restarts) and stamps subsequent result
+    /// records with the label.
+    pub fn begin_run(&self, label: &str) -> io::Result<()> {
+        let mut inner = self.lock();
+        let doc = Json::obj(vec![("kind", Json::str("run")), ("run", Json::str(label))]);
+        append_locked(&mut inner, &doc)?;
+        note_run(&mut inner.runs, label);
+        inner.current_run = Some(label.to_string());
+        self.after_append(inner)
+    }
+
+    /// Run labels in recency order (oldest first; re-registering moves a
+    /// label to the end).
+    pub fn runs(&self) -> Vec<String> {
+        self.lock().runs.clone()
+    }
+
+    /// The label set by the latest [`ResultStore::begin_run`], if any.
+    pub fn current_run(&self) -> Option<String> {
+        self.lock().current_run.clone()
+    }
+
+    // ---- results ---------------------------------------------------------
+
+    /// Appends a task result record. Returns `true` when the value's
+    /// content hash was already present in the store (a cross-run dedup
+    /// hit — counted, but the record is still written so every run's
+    /// provenance survives).
+    pub fn put_result(&self, id: &str, params: &Json, value: &Json) -> io::Result<bool> {
+        let hash = sha256_hex(value.canonical().as_bytes());
+        let mut inner = self.lock();
+        let run = inner.current_run.clone().unwrap_or_else(|| "adhoc".to_string());
+        let doc = Json::obj(vec![
+            ("kind", Json::str("result")),
+            ("id", Json::str(id)),
+            ("run", Json::str(run)),
+            ("hash", Json::str(&hash)),
+            ("params", params.clone()),
+            ("value", value.clone()),
+        ]);
+        let loc = append_locked(&mut inner, &doc)?;
+        inner.index.record_put(format!("r:{id}"), loc);
+        let dup = inner.index.note_hash(&hash);
+        self.after_append(inner)?;
+        Ok(dup)
+    }
+
+    /// Reads a result's `value` subtree, materializing exactly that one
+    /// subtree (the same lazy-scan contract as the cache's cold `get`).
+    /// `Ok(None)` for an absent or invalidated id; `Err` for a record the
+    /// index points at but the segment cannot produce (corruption).
+    pub fn get_result(&self, id: &str) -> io::Result<Option<Json>> {
+        let inner = self.lock();
+        let Some(loc) = inner.index.get(&format!("r:{id}")) else {
+            return Ok(None);
+        };
+        let body = read_loc(&inner, loc)?;
+        let value = Scanner::new(&body)
+            .and_then(|s| s.field("value"))
+            .map_err(|e| io::Error::other(format!("result record for {id}: {e}")))?
+            .ok_or_else(|| io::Error::other(format!("result record for {id} has no value")))?;
+        let json = value
+            .materialize()
+            .map_err(|e| io::Error::other(format!("result record for {id}: {e}")))?;
+        Ok(Some(json))
+    }
+
+    /// True when a live result record exists for `id`.
+    pub fn contains_result(&self, id: &str) -> bool {
+        self.lock().index.get(&format!("r:{id}")).is_some()
+    }
+
+    /// Ids of every live result record (unordered). The store-backed
+    /// cache seeds its memory-tier index from this at open.
+    pub fn result_ids(&self) -> Vec<String> {
+        self.lock()
+            .index
+            .entries_with_prefix("r:")
+            .into_iter()
+            .map(|(k, _)| k["r:".len()..].to_string())
+            .collect()
+    }
+
+    /// Tombstones the result for `id`; returns whether anything was live.
+    pub fn invalidate_result(&self, id: &str) -> io::Result<bool> {
+        self.tombstone(&format!("r:{id}"))
+    }
+
+    /// Tombstones every live result record (the store-backed analogue of
+    /// wiping a cache directory). Returns how many were invalidated.
+    pub fn clear_results(&self) -> io::Result<usize> {
+        let keys: Vec<String> = {
+            let inner = self.lock();
+            inner.index.entries_with_prefix("r:").into_iter().map(|(k, _)| k).collect()
+        };
+        for key in &keys {
+            self.tombstone(key)?;
+        }
+        Ok(keys.len())
+    }
+
+    /// Tombstones the checkpoint manifest and every checkpoint entry for
+    /// `run`, so a fresh checkpoint reusing the label starts clean.
+    /// Result records are untouched — they belong to the cross-run cache.
+    /// Returns how many records were tombstoned.
+    pub fn clear_run(&self, run: &str) -> io::Result<usize> {
+        let mut keys: Vec<String> = {
+            let inner = self.lock();
+            inner
+                .index
+                .entries_with_prefix(&format!("c:{run}:"))
+                .into_iter()
+                .map(|(k, _)| k)
+                .collect()
+        };
+        keys.push(format!("m:{run}"));
+        let mut n = 0;
+        for key in &keys {
+            if self.tombstone(key)? {
+                n += 1;
+            }
+        }
+        Ok(n)
+    }
+
+    fn tombstone(&self, key: &str) -> io::Result<bool> {
+        let mut inner = self.lock();
+        if inner.index.get(key).is_none() {
+            return Ok(false);
+        }
+        let doc = Json::obj(vec![("kind", Json::str("tomb")), ("key", Json::str(key))]);
+        let loc = append_locked(&mut inner, &doc)?;
+        inner.index.record_tombstone(key.to_string(), loc);
+        self.after_append(inner)?;
+        Ok(true)
+    }
+
+    // ---- checkpoint backing ----------------------------------------------
+
+    /// Writes (or supersedes) the checkpoint manifest record for `run`.
+    /// `fields` carries the manifest body (fingerprint, version, totals).
+    pub fn put_manifest(&self, run: &str, fields: &Json) -> io::Result<()> {
+        let doc = with_header(fields, vec![("kind", Json::str("manifest")), ("run", Json::str(run))]);
+        let mut inner = self.lock();
+        let loc = append_locked(&mut inner, &doc)?;
+        inner.index.record_put(format!("m:{run}"), loc);
+        self.after_append(inner)
+    }
+
+    /// Reads the manifest record for `run`, fully materialized.
+    pub fn get_manifest(&self, run: &str) -> io::Result<Option<Json>> {
+        let inner = self.lock();
+        let Some(loc) = inner.index.get(&format!("m:{run}")) else {
+            return Ok(None);
+        };
+        let body = read_loc(&inner, loc)?;
+        codec::read_document(&body)
+            .map(Some)
+            .map_err(|e| io::Error::other(format!("manifest record for {run}: {e}")))
+    }
+
+    /// Appends a checkpoint completion entry for (`run`, `id`). `fields`
+    /// carries the entry body (value/failure, duration, attempts).
+    pub fn put_ck_entry(&self, run: &str, id: &str, fields: &Json) -> io::Result<()> {
+        let doc = with_header(
+            fields,
+            vec![
+                ("kind", Json::str("ck")),
+                ("id", Json::str(id)),
+                ("run", Json::str(run)),
+            ],
+        );
+        let mut inner = self.lock();
+        let loc = append_locked(&mut inner, &doc)?;
+        inner.index.record_put(format!("c:{run}:{id}"), loc);
+        self.after_append(inner)
+    }
+
+    /// All live checkpoint entries for `run`, fully materialized (resume
+    /// needs every field anyway).
+    pub fn ck_entries(&self, run: &str) -> io::Result<Vec<Json>> {
+        let inner = self.lock();
+        let mut entries = inner.index.entries_with_prefix(&format!("c:{run}:"));
+        entries.sort_by_key(|(_, loc)| (loc.segment, loc.offset));
+        let mut out = Vec::with_capacity(entries.len());
+        for (key, loc) in entries {
+            let body = read_loc(&inner, loc)?;
+            let doc = codec::read_document(&body)
+                .map_err(|e| io::Error::other(format!("ck record {key}: {e}")))?;
+            out.push(doc);
+        }
+        Ok(out)
+    }
+
+    // ---- maintenance -----------------------------------------------------
+
+    /// Fsyncs the active segment (appends are not individually synced).
+    pub fn sync(&self) -> io::Result<()> {
+        self.lock().writer.sync()
+    }
+
+    /// Seals the active segment (footer + fsync) and starts a new one.
+    pub fn seal_active(&self) -> io::Result<()> {
+        let mut inner = self.lock();
+        roll_locked(&mut inner)
+    }
+
+    /// Current health snapshot.
+    pub fn stats(&self) -> StoreStats {
+        let inner = self.lock();
+        StoreStats {
+            segments: inner.sealed.len() + 1,
+            sealed_segments: inner.sealed.len(),
+            live_records: inner.index.len(),
+            dead_records: inner.index.dead_records(),
+            total_records: inner.index.total_records(),
+            dedup_hits: inner.index.dedup_hits(),
+            runs: inner.runs.len(),
+            compactions: inner.compactions,
+            shard_occupancy: inner.index.shard_occupancy(),
+            warnings: inner.warnings.len(),
+        }
+    }
+
+    // ---- migration -------------------------------------------------------
+
+    /// Folds a legacy per-run directory into the store. Auto-detects the
+    /// layout: a directory with a `manifest.json` is a checkpoint run dir
+    /// (manifest + completion entries are migrated, and succeeded values
+    /// additionally become result records); anything else is treated as a
+    /// cache directory of `<id>.json` entry files. The legacy directory
+    /// is never modified.
+    pub fn migrate_dir(&self, legacy: &Path) -> io::Result<MigrationReport> {
+        let label = legacy
+            .file_name()
+            .and_then(|n| n.to_str())
+            .unwrap_or("legacy")
+            .to_string();
+        if legacy.join("manifest.json").exists() {
+            self.migrate_run_dir(legacy, &label)
+        } else {
+            self.begin_run(&format!("migrate:{label}"))?;
+            self.migrate_cache_dir(legacy)
+        }
+    }
+
+    fn migrate_cache_dir(&self, dir: &Path) -> io::Result<MigrationReport> {
+        let mut report = MigrationReport::default();
+        for path in mfs::list_files_with_ext(dir, "json")? {
+            let bytes = fs::read(&path)?;
+            let Ok(doc) = codec::read_document(&bytes) else {
+                report.skipped += 1;
+                continue;
+            };
+            let (Some(id), Some(value)) = (doc.get("id").and_then(|j| j.as_str()), doc.get("value"))
+            else {
+                report.skipped += 1;
+                continue;
+            };
+            let params = doc.get("params").cloned().unwrap_or(Json::Null);
+            self.put_result(id, &params, value)?;
+            report.results += 1;
+        }
+        self.sync()?;
+        Ok(report)
+    }
+
+    fn migrate_run_dir(&self, dir: &Path, run: &str) -> io::Result<MigrationReport> {
+        let mut report = MigrationReport::default();
+        self.begin_run(run)?;
+        let bytes = fs::read(dir.join("manifest.json"))?;
+        let manifest = codec::read_document(&bytes)
+            .map_err(|e| io::Error::other(format!("manifest in {}: {e}", dir.display())))?;
+        let header = Json::obj(vec![
+            (
+                "matrix_fingerprint",
+                manifest.get("matrix_fingerprint").cloned().unwrap_or(Json::Null),
+            ),
+            ("version", manifest.get("version").cloned().unwrap_or(Json::Null)),
+            ("total_tasks", manifest.get("total_tasks").cloned().unwrap_or(Json::Null)),
+        ]);
+        self.put_manifest(run, &header)?;
+        report.manifests += 1;
+        if let Some(completed) = manifest.get("completed").and_then(|c| c.as_obj()) {
+            for (id, entry) in completed {
+                self.put_ck_entry(run, id, entry)?;
+                report.ck_entries += 1;
+                let failed = entry.get("failed").is_some_and(|f| !f.is_null());
+                if !failed {
+                    if let Some(value) = entry.get("value").filter(|v| !v.is_null()) {
+                        self.put_result(id, &Json::Null, value)?;
+                        report.results += 1;
+                    }
+                }
+            }
+        }
+        self.sync()?;
+        Ok(report)
+    }
+
+    // ---- internals shared with compact/query -----------------------------
+
+    pub(crate) fn lock(&self) -> std::sync::MutexGuard<'_, Inner> {
+        self.inner.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    /// Post-append bookkeeping: roll the active segment when it crossed
+    /// the size threshold, then (maybe) kick background compaction. Takes
+    /// the guard by value so the compaction spawn happens after unlock.
+    fn after_append(&self, mut inner: std::sync::MutexGuard<'_, Inner>) -> io::Result<()> {
+        let mut rolled = false;
+        if inner.writer.offset() >= inner.segment_max {
+            roll_locked(&mut inner)?;
+            rolled = true;
+        }
+        let trigger = rolled && inner.auto_compact && compact::should_compact(&inner);
+        drop(inner);
+        if trigger {
+            if let Some(me) = self.me.get().and_then(|w| w.upgrade()) {
+                me.compact_in_background();
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Appends `doc` to the active segment; returns its location.
+fn append_locked(inner: &mut Inner, doc: &Json) -> io::Result<Loc> {
+    let body = codec::write_document(doc, inner.wire);
+    let offset = inner.writer.append(&body)?;
+    Ok(Loc {
+        segment: inner.writer.id(),
+        offset,
+        body_len: body.len() as u32,
+    })
+}
+
+/// Seals the active segment and starts the next one.
+fn roll_locked(inner: &mut Inner) -> io::Result<()> {
+    let seal = Json::obj(vec![
+        ("kind", Json::str("seal")),
+        ("records", Json::int(inner.writer.records() as i64 + 1)),
+    ]);
+    let body = codec::write_document(&seal, inner.wire);
+    let next = SegmentWriter::create(&inner.dir, inner.writer.id() + 1)?;
+    let old = std::mem::replace(&mut inner.writer, next);
+    let old_id = old.id();
+    old.seal(&body)?;
+    mfs::sync_dir(&inner.dir)?;
+    inner.sealed.push(old_id);
+    Ok(())
+}
+
+/// Reads and CRC-verifies the record at `loc`.
+pub(crate) fn read_loc(inner: &Inner, loc: Loc) -> io::Result<Vec<u8>> {
+    segment::read_record(&segment::segment_path(&inner.dir, loc.segment), loc.offset, loc.body_len)
+}
+
+/// Merges record header pairs over a caller-supplied body object.
+fn with_header(fields: &Json, header: Vec<(&str, Json)>) -> Json {
+    let mut obj = match fields {
+        Json::Obj(map) => map.clone(),
+        _ => Default::default(),
+    };
+    for (k, v) in header {
+        obj.insert(k.to_string(), v);
+    }
+    Json::Obj(obj)
+}
+
+/// Appends `label` to the run list, moving it to the end if present.
+fn note_run(runs: &mut Vec<String>, label: &str) {
+    runs.retain(|r| r != label);
+    runs.push(label.to_string());
+}
+
+/// Replays every segment's record headers into a fresh [`ScanState`].
+/// Only scalar header fields are scanned — `params`/`value` subtrees are
+/// skipped byte-wise, which is what keeps open cost proportional to
+/// record count, not payload size.
+fn scan_dir(dir: &Path) -> io::Result<ScanState> {
+    let segs = segment::list_segments(dir)?;
+    let mut st = ScanState {
+        index: ShardedIndex::new(),
+        runs: Vec::new(),
+        sealed: Vec::new(),
+        tail: None,
+        warnings: Vec::new(),
+    };
+    let last = segs.len().saturating_sub(1);
+    for (i, (id, path)) in segs.iter().enumerate() {
+        let bytes = fs::read(path)?;
+        let mut scan = RecordScan::new(&bytes);
+        let mut records = 0u64;
+        let mut last_was_seal = false;
+        for (offset, body) in scan.by_ref() {
+            records += 1;
+            last_was_seal = apply_record(&mut st, *id, offset, body);
+        }
+        if let Some(d) = scan.damage() {
+            st.warnings.push(format!(
+                "segment {id:06}: {} at byte {} — kept {} valid records, tail dropped",
+                d.reason, d.at, records
+            ));
+        }
+        if last_was_seal {
+            st.sealed.push(*id);
+        } else if i != last {
+            // Protocol never leaves an unsealed non-tail segment behind,
+            // but tolerate one (e.g. hand-copied files): it is immutable
+            // from our point of view, so treat it as sealed.
+            st.warnings.push(format!("segment {id:06}: missing seal footer — treated as sealed"));
+            st.sealed.push(*id);
+        }
+        if i == last {
+            st.tail = Some(TailInfo {
+                id: *id,
+                sealed: last_was_seal,
+                valid_len: scan.valid_len(),
+                records,
+            });
+        }
+    }
+    Ok(st)
+}
+
+/// Applies one record's header fields to the scan state. Returns whether
+/// the record was a `seal` footer. Undecodable bodies (valid CRC, bad
+/// codec bytes — possible only through external tampering) produce a
+/// warning and are skipped.
+fn apply_record(st: &mut ScanState, seg: u64, offset: u64, body: &[u8]) -> bool {
+    let loc = Loc { segment: seg, offset, body_len: body.len() as u32 };
+    let scanned = Scanner::new(body).and_then(|s| s.fields(["kind", "id", "run", "hash", "key"]));
+    let [kind, id, run, hash, key] = match scanned {
+        Ok(fields) => fields,
+        Err(e) => {
+            st.warnings.push(format!("segment {seg:06} offset {offset}: undecodable record: {e}"));
+            return false;
+        }
+    };
+    let kind = kind.as_ref().and_then(|v| v.as_str()).unwrap_or("");
+    match kind {
+        "result" => {
+            if let Some(id) = id.as_ref().and_then(|v| v.as_str()) {
+                st.index.record_put(format!("r:{id}"), loc);
+                if let Some(h) = hash.as_ref().and_then(|v| v.as_str()) {
+                    st.index.note_hash(h);
+                }
+            }
+        }
+        "ck" => {
+            if let (Some(run), Some(id)) = (
+                run.as_ref().and_then(|v| v.as_str()),
+                id.as_ref().and_then(|v| v.as_str()),
+            ) {
+                st.index.record_put(format!("c:{run}:{id}"), loc);
+            }
+        }
+        "manifest" => {
+            if let Some(run) = run.as_ref().and_then(|v| v.as_str()) {
+                st.index.record_put(format!("m:{run}"), loc);
+            }
+        }
+        "run" => {
+            if let Some(run) = run.as_ref().and_then(|v| v.as_str()) {
+                note_run(&mut st.runs, run);
+            }
+        }
+        "tomb" => {
+            if let Some(key) = key.as_ref().and_then(|v| v.as_str()) {
+                st.index.record_tombstone(key.to_string(), loc);
+            }
+        }
+        "seal" => return true,
+        _ => {
+            st.warnings.push(format!("segment {seg:06} offset {offset}: unknown record kind"));
+        }
+    }
+    false
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::fs::TempDir;
+    use crate::util::scan::materialized_count;
+    use std::io::Write as _;
+
+    fn params(model: &str, lr: f64) -> Json {
+        Json::obj(vec![("model", Json::str(model)), ("lr", Json::Num(lr))])
+    }
+
+    fn value(score: f64) -> Json {
+        Json::obj(vec![("score", Json::Num(score))])
+    }
+
+    #[test]
+    fn put_get_roundtrip_and_persistence() {
+        let td = TempDir::new("store-rt").unwrap();
+        {
+            let store = ResultStore::open(td.path()).unwrap();
+            store.begin_run("run-a").unwrap();
+            assert!(!store.put_result("id1", &params("svc", 0.1), &value(0.9)).unwrap());
+            assert!(!store.put_result("id2", &params("tree", 0.2), &value(0.8)).unwrap());
+            assert_eq!(store.get_result("id1").unwrap(), Some(value(0.9)));
+            assert!(store.contains_result("id2"));
+            assert!(!store.contains_result("id3"));
+            store.sync().unwrap();
+        }
+        // Reopen: index rebuilt from disk.
+        let store = ResultStore::open(td.path()).unwrap();
+        assert!(store.open_warnings().is_empty());
+        assert_eq!(store.get_result("id2").unwrap(), Some(value(0.8)));
+        assert_eq!(store.runs(), vec!["run-a".to_string()]);
+        let stats = store.stats();
+        assert_eq!(stats.live_records, 2);
+        assert_eq!(stats.dead_records, 0);
+    }
+
+    #[test]
+    fn get_materializes_only_the_value_subtree() {
+        let td = TempDir::new("store-lazy").unwrap();
+        let store = ResultStore::open(td.path()).unwrap();
+        store.put_result("idx", &params("svc", 0.1), &value(0.5)).unwrap();
+        let before = materialized_count();
+        assert_eq!(store.get_result("idx").unwrap(), Some(value(0.5)));
+        assert_eq!(materialized_count(), before + 1, "cold get must materialize exactly once");
+    }
+
+    #[test]
+    fn overwrite_and_invalidate_track_dead_records() {
+        let td = TempDir::new("store-dead").unwrap();
+        let store = ResultStore::open(td.path()).unwrap();
+        store.put_result("a", &params("svc", 0.1), &value(1.0)).unwrap();
+        store.put_result("a", &params("svc", 0.1), &value(2.0)).unwrap();
+        assert_eq!(store.get_result("a").unwrap(), Some(value(2.0)));
+        assert!(store.invalidate_result("a").unwrap());
+        assert!(!store.invalidate_result("a").unwrap());
+        assert_eq!(store.get_result("a").unwrap(), None);
+        let stats = store.stats();
+        assert_eq!(stats.live_records, 0);
+        assert_eq!(stats.dead_records, 2);
+    }
+
+    #[test]
+    fn tombstones_survive_reopen() {
+        let td = TempDir::new("store-tomb").unwrap();
+        {
+            let store = ResultStore::open(td.path()).unwrap();
+            store.put_result("gone", &Json::Null, &value(1.0)).unwrap();
+            store.invalidate_result("gone").unwrap();
+            store.sync().unwrap();
+        }
+        let store = ResultStore::open(td.path()).unwrap();
+        assert_eq!(store.get_result("gone").unwrap(), None);
+    }
+
+    #[test]
+    fn dedup_hits_count_identical_values_across_runs() {
+        let td = TempDir::new("store-dedup").unwrap();
+        let store = ResultStore::open(td.path()).unwrap();
+        store.begin_run("one").unwrap();
+        assert!(!store.put_result("x1", &params("svc", 0.1), &value(0.7)).unwrap());
+        store.begin_run("two").unwrap();
+        assert!(store.put_result("x2", &params("svc", 0.2), &value(0.7)).unwrap());
+        assert_eq!(store.stats().dedup_hits, 1);
+        assert_eq!(store.runs(), vec!["one".to_string(), "two".to_string()]);
+    }
+
+    #[test]
+    fn segment_roll_and_seal() {
+        let td = TempDir::new("store-roll").unwrap();
+        let store = ResultStore::open(td.path()).unwrap();
+        store.set_auto_compact(false);
+        store.set_segment_max(256);
+        for i in 0..20 {
+            store.put_result(&format!("id{i}"), &params("svc", 0.1), &value(i as f64)).unwrap();
+        }
+        let stats = store.stats();
+        assert!(stats.sealed_segments >= 2, "{stats:?}");
+        // All records still reachable across segments.
+        for i in 0..20 {
+            assert_eq!(store.get_result(&format!("id{i}")).unwrap(), Some(value(i as f64)));
+        }
+        // Reopen sees the same layout.
+        drop(store);
+        let store = ResultStore::open(td.path()).unwrap();
+        assert!(store.open_warnings().is_empty());
+        assert_eq!(store.stats().sealed_segments, stats.sealed_segments);
+        assert_eq!(store.get_result("id7").unwrap(), Some(value(7.0)));
+    }
+
+    #[test]
+    fn corrupt_tail_is_skipped_with_warning_and_store_stays_writable() {
+        let td = TempDir::new("store-corrupt").unwrap();
+        {
+            let store = ResultStore::open(td.path()).unwrap();
+            store.put_result("keep", &Json::Null, &value(1.0)).unwrap();
+            store.put_result("torn", &Json::Null, &value(2.0)).unwrap();
+            store.sync().unwrap();
+        }
+        // Flip a byte in the last record's body: CRC must reject it.
+        let seg = segment::segment_path(td.path(), 1);
+        let mut bytes = fs::read(&seg).unwrap();
+        let last = bytes.len() - 1;
+        bytes[last] ^= 0xFF;
+        fs::write(&seg, &bytes).unwrap();
+
+        let store = ResultStore::open(td.path()).unwrap();
+        let warnings = store.open_warnings();
+        assert_eq!(warnings.len(), 1, "{warnings:?}");
+        assert!(warnings[0].contains("crc mismatch"), "{warnings:?}");
+        assert_eq!(store.get_result("keep").unwrap(), Some(value(1.0)));
+        assert_eq!(store.get_result("torn").unwrap(), None);
+        // The damaged tail was truncated: appends continue cleanly.
+        store.put_result("after", &Json::Null, &value(3.0)).unwrap();
+        store.sync().unwrap();
+        drop(store);
+        let store = ResultStore::open(td.path()).unwrap();
+        assert!(store.open_warnings().is_empty());
+        assert_eq!(store.get_result("after").unwrap(), Some(value(3.0)));
+    }
+
+    #[test]
+    fn truncated_tail_is_skipped_with_warning() {
+        let td = TempDir::new("store-trunc").unwrap();
+        {
+            let store = ResultStore::open(td.path()).unwrap();
+            store.put_result("keep", &Json::Null, &value(1.0)).unwrap();
+            store.sync().unwrap();
+        }
+        // Simulate a torn append: half a frame header at the tail.
+        let seg = segment::segment_path(td.path(), 1);
+        let mut f = fs::OpenOptions::new().append(true).open(&seg).unwrap();
+        f.write_all(&[42, 0, 0]).unwrap();
+        drop(f);
+        let store = ResultStore::open(td.path()).unwrap();
+        assert_eq!(store.open_warnings().len(), 1);
+        assert_eq!(store.get_result("keep").unwrap(), Some(value(1.0)));
+    }
+
+    #[test]
+    fn manifest_and_ck_entries_roundtrip() {
+        let td = TempDir::new("store-ck").unwrap();
+        let store = ResultStore::open(td.path()).unwrap();
+        let manifest = Json::obj(vec![
+            ("matrix_fingerprint", Json::str("fp")),
+            ("version", Json::str("v1")),
+            ("total_tasks", Json::int(2)),
+        ]);
+        store.put_manifest("run-z", &manifest).unwrap();
+        let entry = Json::obj(vec![
+            ("value", value(0.5)),
+            ("duration_secs", Json::Num(0.1)),
+            ("attempts", Json::int(1)),
+        ]);
+        store.put_ck_entry("run-z", "id1", &entry).unwrap();
+        store.put_ck_entry("run-z", "id2", &entry).unwrap();
+        store.sync().unwrap();
+
+        let store = ResultStore::open(td.path()).unwrap();
+        let m = store.get_manifest("run-z").unwrap().unwrap();
+        assert_eq!(m.get("matrix_fingerprint").and_then(|j| j.as_str()), Some("fp"));
+        assert_eq!(m.get("total_tasks").and_then(|j| j.as_i64()), Some(2));
+        let entries = store.ck_entries("run-z").unwrap();
+        assert_eq!(entries.len(), 2);
+        assert_eq!(entries[0].get("id").and_then(|j| j.as_str()), Some("id1"));
+        assert_eq!(entries[0].get("value"), Some(&value(0.5)));
+        assert!(store.ck_entries("run-other").unwrap().is_empty());
+        // Manifest supersedes in place.
+        store.put_manifest("run-z", &Json::obj(vec![("total_tasks", Json::int(9))])).unwrap();
+        let m = store.get_manifest("run-z").unwrap().unwrap();
+        assert_eq!(m.get("total_tasks").and_then(|j| j.as_i64()), Some(9));
+    }
+
+    #[test]
+    fn json_wire_interoperates() {
+        let td = TempDir::new("store-json").unwrap();
+        let store = ResultStore::open(td.path()).unwrap();
+        store.set_wire(WireFormat::Json);
+        store.put_result("j1", &params("svc", 0.1), &value(0.4)).unwrap();
+        store.set_wire(WireFormat::Binary);
+        store.put_result("b1", &params("svc", 0.2), &value(0.6)).unwrap();
+        store.sync().unwrap();
+        let store = ResultStore::open(td.path()).unwrap();
+        assert!(store.open_warnings().is_empty());
+        assert_eq!(store.get_result("j1").unwrap(), Some(value(0.4)));
+        assert_eq!(store.get_result("b1").unwrap(), Some(value(0.6)));
+    }
+
+    #[test]
+    fn is_store_dir_detection() {
+        let td = TempDir::new("store-detect").unwrap();
+        assert!(!ResultStore::is_store_dir(td.path()));
+        let store = ResultStore::open(td.path()).unwrap();
+        store.put_result("x", &Json::Null, &value(1.0)).unwrap();
+        drop(store);
+        assert!(ResultStore::is_store_dir(td.path()));
+    }
+}

@@ -1,0 +1,502 @@
+//! Cross-run queries: parameter predicates evaluated lazily over the log.
+//!
+//! `memento query` answers questions like *"model=svc, lr<=0.1, last 50
+//! runs"* against every result record in the store. The evaluation
+//! contract mirrors the scanner's ([`crate::util::scan`]): candidate
+//! records are probed field-by-field with byte-wise skipping — the `run`
+//! scalar for the recency filter, then individual `params` fields through
+//! [`Scanner::from_raw`] — and a full [`Json`] tree is built **only for
+//! records that match**, exactly once each. The thread-local
+//! [`crate::util::scan::materialized_count`] therefore moves by exactly
+//! the number of rows returned, which the tests assert against a
+//! 10k-record store.
+//!
+//! Candidates come from the live index (dead and invalidated records are
+//! never touched), grouped per segment so each segment file is read once,
+//! sequentially, in log order.
+
+use super::segment;
+use super::ResultStore;
+use crate::util::codec;
+use crate::util::crc32::crc32;
+use crate::util::json::Json;
+use crate::util::scan::{ScanError, ScanValue, Scanner};
+use std::cmp::Ordering;
+use std::collections::{BTreeMap, HashSet};
+use std::fs;
+use std::io;
+
+/// Comparison operator of one predicate clause.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CmpOp {
+    /// `=` — equal.
+    Eq,
+    /// `!=` — present, comparable, and different.
+    Ne,
+    /// `<` — strictly less.
+    Lt,
+    /// `<=` — less or equal.
+    Le,
+    /// `>` — strictly greater.
+    Gt,
+    /// `>=` — greater or equal.
+    Ge,
+}
+
+impl CmpOp {
+    fn accepts(self, ord: Ordering) -> bool {
+        match self {
+            CmpOp::Eq => ord == Ordering::Equal,
+            CmpOp::Ne => ord != Ordering::Equal,
+            CmpOp::Lt => ord == Ordering::Less,
+            CmpOp::Le => ord != Ordering::Greater,
+            CmpOp::Gt => ord == Ordering::Greater,
+            CmpOp::Ge => ord != Ordering::Less,
+        }
+    }
+}
+
+/// A typed comparison value, inferred from the predicate text: `true`/
+/// `false` → bool, numeric literals → number, anything else (optionally
+/// quoted) → string.
+#[derive(Debug, Clone, PartialEq)]
+pub enum PredValue {
+    /// Numeric comparison (integers and floats compare as `f64`).
+    Num(f64),
+    /// Lexicographic string comparison.
+    Str(String),
+    /// Boolean; only `=` and `!=` are meaningful.
+    Bool(bool),
+}
+
+/// One parsed clause: `field op value`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Predicate {
+    /// Parameter name the clause probes.
+    pub field: String,
+    /// Comparison operator.
+    pub op: CmpOp,
+    /// Typed right-hand side.
+    pub value: PredValue,
+}
+
+impl Predicate {
+    /// Whether a scanned parameter value satisfies this clause. A missing
+    /// field or a type mismatch never matches — including for `!=`, so
+    /// "lr!=0.1" means "has an lr, and it differs", not "lacks lr".
+    pub fn matches(&self, v: Option<&ScanValue<'_>>) -> bool {
+        let Some(v) = v else { return false };
+        match &self.value {
+            PredValue::Num(want) => match v.as_f64() {
+                Some(have) => have.partial_cmp(want).is_some_and(|ord| self.op.accepts(ord)),
+                None => false,
+            },
+            PredValue::Str(want) => match v.as_str() {
+                Some(have) => self.op.accepts(have.cmp(want.as_str())),
+                None => false,
+            },
+            PredValue::Bool(want) => match (v.as_bool(), self.op) {
+                (Some(have), CmpOp::Eq) => have == *want,
+                (Some(have), CmpOp::Ne) => have != *want,
+                _ => false,
+            },
+        }
+    }
+}
+
+/// Parses a comma-separated predicate list: `model=svc, lr<=0.1`.
+/// Operators: `=`, `!=`, `<`, `<=`, `>`, `>=`. Values may be quoted to
+/// force string comparison (`model="3"`). An empty input is no clauses
+/// (matches everything).
+pub fn parse_predicates(input: &str) -> Result<Vec<Predicate>, String> {
+    let mut out = Vec::new();
+    for clause in input.split(',') {
+        let clause = clause.trim();
+        if clause.is_empty() {
+            continue;
+        }
+        out.push(parse_clause(clause)?);
+    }
+    Ok(out)
+}
+
+fn parse_clause(clause: &str) -> Result<Predicate, String> {
+    let bytes = clause.as_bytes();
+    let mut split = None;
+    for i in 0..bytes.len() {
+        let two = bytes.get(i..i + 2);
+        if let Some(op) = two.and_then(|t| match t {
+            b"<=" => Some(CmpOp::Le),
+            b">=" => Some(CmpOp::Ge),
+            b"!=" => Some(CmpOp::Ne),
+            _ => None,
+        }) {
+            split = Some((i, 2, op));
+            break;
+        }
+        match bytes[i] {
+            b'=' => {
+                split = Some((i, 1, CmpOp::Eq));
+                break;
+            }
+            b'<' => {
+                split = Some((i, 1, CmpOp::Lt));
+                break;
+            }
+            b'>' => {
+                split = Some((i, 1, CmpOp::Gt));
+                break;
+            }
+            _ => {}
+        }
+    }
+    let Some((at, width, op)) = split else {
+        return Err(format!("clause '{clause}': no operator (=, !=, <, <=, >, >=)"));
+    };
+    let field = clause[..at].trim();
+    let value = clause[at + width..].trim();
+    if field.is_empty() {
+        return Err(format!("clause '{clause}': empty field name"));
+    }
+    if value.is_empty() {
+        return Err(format!("clause '{clause}': empty value"));
+    }
+    Ok(Predicate {
+        field: field.to_string(),
+        op,
+        value: parse_value(value),
+    })
+}
+
+fn parse_value(text: &str) -> PredValue {
+    let quoted = (text.starts_with('"') && text.ends_with('"') && text.len() >= 2)
+        || (text.starts_with('\'') && text.ends_with('\'') && text.len() >= 2);
+    if quoted {
+        return PredValue::Str(text[1..text.len() - 1].to_string());
+    }
+    match text {
+        "true" => return PredValue::Bool(true),
+        "false" => return PredValue::Bool(false),
+        _ => {}
+    }
+    if let Ok(n) = text.parse::<f64>() {
+        return PredValue::Num(n);
+    }
+    PredValue::Str(text.to_string())
+}
+
+/// Result-set shaping options.
+#[derive(Debug, Clone, Default)]
+pub struct QueryOptions {
+    /// Restrict to the N most recently registered runs (`None` = all).
+    pub last_runs: Option<usize>,
+    /// Stop after this many matching rows (`None` = unbounded).
+    pub limit: Option<usize>,
+}
+
+/// One matching result record, fully materialized.
+#[derive(Debug, Clone, PartialEq)]
+pub struct QueryRow {
+    /// Task id the result belongs to.
+    pub id: String,
+    /// Run label that produced it.
+    pub run: String,
+    /// The whole record document (`params`, `value`, `hash`, …).
+    pub doc: Json,
+}
+
+impl ResultStore {
+    /// Evaluates `preds` over every live result record, in log order.
+    /// Non-matching records are never materialized (see module docs).
+    pub fn query(&self, preds: &[Predicate], opts: &QueryOptions) -> io::Result<Vec<QueryRow>> {
+        let inner = self.lock();
+        let allowed: Option<HashSet<&str>> = opts
+            .last_runs
+            .map(|n| inner.runs.iter().rev().take(n).map(|s| s.as_str()).collect());
+        let mut by_seg: BTreeMap<u64, Vec<super::index::Loc>> = BTreeMap::new();
+        for (_, loc) in inner.index.entries_with_prefix("r:") {
+            by_seg.entry(loc.segment).or_default().push(loc);
+        }
+        let limit = opts.limit.unwrap_or(usize::MAX);
+        let mut rows = Vec::new();
+        'segments: for (seg, mut locs) in by_seg {
+            locs.sort_unstable_by_key(|l| l.offset);
+            let path = segment::segment_path(&inner.dir, seg);
+            let bytes = fs::read(&path)?;
+            for loc in locs {
+                let body = frame_body(&bytes, loc.offset, loc.body_len).ok_or_else(|| {
+                    io::Error::other(format!("segment {seg:06}: bad frame at {}", loc.offset))
+                })?;
+                let matched = record_matches(body, preds, allowed.as_ref())
+                    .map_err(|e| io::Error::other(format!("segment {seg:06}: {e}")))?;
+                if !matched {
+                    continue;
+                }
+                let doc = materialize_record(body)
+                    .map_err(|e| io::Error::other(format!("segment {seg:06}: {e}")))?;
+                rows.push(QueryRow {
+                    id: doc.get("id").and_then(|j| j.as_str()).unwrap_or_default().to_string(),
+                    run: doc.get("run").and_then(|j| j.as_str()).unwrap_or_default().to_string(),
+                    doc,
+                });
+                if rows.len() >= limit {
+                    break 'segments;
+                }
+            }
+        }
+        Ok(rows)
+    }
+}
+
+/// Extracts and CRC-verifies the body slice of the frame at `offset`.
+fn frame_body(bytes: &[u8], offset: u64, body_len: u32) -> Option<&[u8]> {
+    let start = offset as usize;
+    let header_end = start.checked_add(segment::FRAME_HEADER as usize)?;
+    let end = header_end.checked_add(body_len as usize)?;
+    if end > bytes.len() {
+        return None;
+    }
+    let len = u32::from_le_bytes(bytes[start..start + 4].try_into().unwrap());
+    let crc = u32::from_le_bytes(bytes[start + 4..header_end].try_into().unwrap());
+    let body = &bytes[header_end..end];
+    (len == body_len && crc32(body) == crc).then_some(body)
+}
+
+/// Lazy match: scalar `run` probe for the recency filter, then per-field
+/// probes of the `params` subtree. Builds no tree.
+fn record_matches(
+    body: &[u8],
+    preds: &[Predicate],
+    allowed: Option<&HashSet<&str>>,
+) -> Result<bool, ScanError> {
+    let scanner = Scanner::new(body)?;
+    if let Some(allowed) = allowed {
+        let run = scanner.field("run")?;
+        match run.as_ref().and_then(|v| v.as_str()) {
+            Some(r) if allowed.contains(r) => {}
+            _ => return Ok(false),
+        }
+    }
+    if preds.is_empty() {
+        return Ok(true);
+    }
+    let Some(params) = scanner.field("params")? else {
+        return Ok(false);
+    };
+    // Records without a params object (e.g. migrated checkpoint values)
+    // simply never match a parameter predicate.
+    let Ok(params) = Scanner::from_raw(&params) else {
+        return Ok(false);
+    };
+    for pred in preds {
+        let v = params.field(&pred.field)?;
+        if !pred.matches(v.as_ref()) {
+            return Ok(false);
+        }
+    }
+    Ok(true)
+}
+
+/// Builds the record's full [`Json`] with exactly one materialization —
+/// the accounting hook the acceptance tests assert on.
+fn materialize_record(body: &[u8]) -> Result<Json, ScanError> {
+    let raw = if codec::is_binary(body) {
+        // Past the magic byte a binary document is one complete tagged
+        // value — precisely the shape `ScanValue::Raw` wants.
+        ScanValue::Raw { bytes: &body[1..], binary: true }
+    } else {
+        ScanValue::Raw { bytes: body, binary: false }
+    };
+    raw.materialize()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::codec::WireFormat;
+    use crate::util::fs::TempDir;
+    use crate::util::scan::materialized_count;
+
+    fn preds(s: &str) -> Vec<Predicate> {
+        parse_predicates(s).unwrap()
+    }
+
+    #[test]
+    fn parse_clauses_and_types() {
+        let ps = preds("model=svc, lr<=0.1,folds>2, note!=x");
+        assert_eq!(ps.len(), 4);
+        assert_eq!(ps[0], Predicate {
+            field: "model".into(),
+            op: CmpOp::Eq,
+            value: PredValue::Str("svc".into())
+        });
+        assert_eq!(ps[1].op, CmpOp::Le);
+        assert_eq!(ps[1].value, PredValue::Num(0.1));
+        assert_eq!(ps[2].op, CmpOp::Gt);
+        let ps = preds("flag=true, ver=\"3\", n>=10");
+        assert_eq!(ps[0].value, PredValue::Bool(true));
+        assert_eq!(ps[1].value, PredValue::Str("3".into()));
+        assert_eq!(ps[2], Predicate {
+            field: "n".into(),
+            op: CmpOp::Ge,
+            value: PredValue::Num(10.0)
+        });
+        assert!(parse_predicates("no-operator-here").is_err());
+        assert!(parse_predicates("=5").is_err());
+        assert!(parse_predicates("x=").is_err());
+        assert!(parse_predicates("").unwrap().is_empty());
+    }
+
+    #[test]
+    fn predicate_semantics() {
+        let p = preds("lr<=0.1").remove(0);
+        assert!(p.matches(Some(&ScanValue::Num(0.1))));
+        assert!(p.matches(Some(&ScanValue::Num(0.05))));
+        assert!(!p.matches(Some(&ScanValue::Num(0.2))));
+        assert!(!p.matches(Some(&ScanValue::Str("0.05".into()))), "type mismatch");
+        assert!(!p.matches(None), "missing field");
+        let p = preds("model!=svc").remove(0);
+        assert!(p.matches(Some(&ScanValue::Str("tree".into()))));
+        assert!(!p.matches(Some(&ScanValue::Str("svc".into()))));
+        assert!(!p.matches(None), "!= still requires presence");
+        let p = preds("flag=true").remove(0);
+        assert!(p.matches(Some(&ScanValue::Bool(true))));
+        assert!(!p.matches(Some(&ScanValue::Bool(false))));
+        let p = preds("flag<true").remove(0);
+        assert!(!p.matches(Some(&ScanValue::Bool(false))), "bools only =/!=");
+    }
+
+    fn seed_store(td: &TempDir, wire: WireFormat) -> std::sync::Arc<ResultStore> {
+        let store = ResultStore::open(td.path()).unwrap();
+        store.set_auto_compact(false);
+        store.set_wire(wire);
+        let models = ["svc", "tree", "forest"];
+        for (r, run) in ["run-a", "run-b", "run-c"].iter().enumerate() {
+            store.begin_run(run).unwrap();
+            for i in 0..6 {
+                let id = format!("{run}-{i}");
+                let params = Json::obj(vec![
+                    ("model", Json::str(models[i % 3])),
+                    ("lr", Json::Num(i as f64 / 100.0)),
+                    ("fold", Json::int(r as i64)),
+                ]);
+                store.put_result(&id, &params, &Json::Num(i as f64)).unwrap();
+            }
+        }
+        store
+    }
+
+    #[test]
+    fn query_filters_runs_params_and_limits() {
+        for wire in [WireFormat::Binary, WireFormat::Json] {
+            let td = TempDir::new("query-basic").unwrap();
+            let store = seed_store(&td, wire);
+            // All records, no predicates.
+            let all = store.query(&[], &QueryOptions::default()).unwrap();
+            assert_eq!(all.len(), 18, "{wire:?}");
+            // Parameter predicate across runs: model=svc at i∈{0,3} → 2/run.
+            let svc = store.query(&preds("model=svc"), &QueryOptions::default()).unwrap();
+            assert_eq!(svc.len(), 6, "{wire:?}");
+            assert!(svc.iter().all(|r| {
+                r.doc.get("params").and_then(|p| p.get("model")).and_then(|m| m.as_str())
+                    == Some("svc")
+            }));
+            // Conjunction narrows: lr<=0.01 keeps i∈{0,1} → svc ∩ = i=0.
+            let both =
+                store.query(&preds("model=svc, lr<=0.01"), &QueryOptions::default()).unwrap();
+            assert_eq!(both.len(), 3, "{wire:?}");
+            // Recency: last 2 runs only.
+            let recent = store
+                .query(&preds("model=svc"), &QueryOptions {
+                    last_runs: Some(2),
+                    limit: None,
+                })
+                .unwrap();
+            assert_eq!(recent.len(), 4, "{wire:?}");
+            assert!(recent.iter().all(|r| r.run == "run-b" || r.run == "run-c"));
+            // Limit caps rows.
+            let limited = store
+                .query(&[], &QueryOptions { last_runs: None, limit: Some(5) })
+                .unwrap();
+            assert_eq!(limited.len(), 5, "{wire:?}");
+        }
+    }
+
+    #[test]
+    fn query_ignores_dead_and_invalidated_records() {
+        let td = TempDir::new("query-dead").unwrap();
+        let store = seed_store(&td, WireFormat::Binary);
+        // Overwrite one id and invalidate another.
+        store.begin_run("run-d").unwrap();
+        let params = Json::obj(vec![("model", Json::str("svc")), ("lr", Json::Num(0.5))]);
+        store.put_result("run-a-0", &params, &Json::Num(99.0)).unwrap();
+        store.invalidate_result("run-b-0").unwrap();
+        let rows = store.query(&[], &QueryOptions::default()).unwrap();
+        assert_eq!(rows.len(), 17, "18 - 1 invalidated");
+        let overwritten: Vec<_> = rows.iter().filter(|r| r.id == "run-a-0").collect();
+        assert_eq!(overwritten.len(), 1);
+        assert_eq!(overwritten[0].run, "run-d", "latest version wins");
+        assert!(!rows.iter().any(|r| r.id == "run-b-0"));
+    }
+
+    #[test]
+    fn query_10k_materializes_only_matching_records() {
+        // Acceptance criterion: a 10k-result store answers a parameter
+        // predicate with materialized_count moving by exactly the match
+        // count — non-matching records are never built into trees.
+        let td = TempDir::new("query-10k").unwrap();
+        let store = ResultStore::open(td.path()).unwrap();
+        store.set_auto_compact(false);
+        store.begin_run("bulk").unwrap();
+        let models = ["svc", "tree", "forest"];
+        let mut expected = 0usize;
+        for i in 0..10_000usize {
+            let model = models[i % 3];
+            let lr = (i % 100) as f64 / 1000.0;
+            if model == "svc" && lr <= 0.01 {
+                expected += 1;
+            }
+            let params = Json::obj(vec![
+                ("model", Json::str(model)),
+                ("lr", Json::Num(lr)),
+                ("i", Json::int(i as i64)),
+            ]);
+            store.put_result(&format!("task-{i:05}"), &params, &Json::int(i as i64)).unwrap();
+        }
+        assert!(expected > 0 && expected < 1000, "sanity: {expected}");
+        let clauses = preds("model=svc, lr<=0.01");
+        let before = materialized_count();
+        let rows = store.query(&clauses, &QueryOptions::default()).unwrap();
+        assert_eq!(rows.len(), expected);
+        assert_eq!(
+            materialized_count() - before,
+            expected,
+            "exactly one materialization per matching record, zero otherwise"
+        );
+        // And the misses really were scanned, not skipped via some cache:
+        // a no-predicate query sees the whole store.
+        assert_eq!(store.query(&[], &QueryOptions::default()).unwrap().len(), 10_000);
+    }
+
+    #[test]
+    fn query_sees_compacted_and_multi_segment_stores() {
+        let td = TempDir::new("query-compact").unwrap();
+        let store = seed_store(&td, WireFormat::Binary);
+        store.set_segment_max(256);
+        store.begin_run("run-d").unwrap();
+        for i in 0..10 {
+            let params = Json::obj(vec![("model", Json::str("svc")), ("lr", Json::Num(0.9))]);
+            store.put_result(&format!("extra-{i}"), &params, &Json::int(i)).unwrap();
+        }
+        assert!(store.stats().sealed_segments >= 2);
+        let before = store.query(&preds("model=svc"), &QueryOptions::default()).unwrap();
+        store.compact().unwrap();
+        let after = store.query(&preds("model=svc"), &QueryOptions::default()).unwrap();
+        assert_eq!(before.len(), after.len());
+        let mut b: Vec<&str> = before.iter().map(|r| r.id.as_str()).collect();
+        let mut a: Vec<&str> = after.iter().map(|r| r.id.as_str()).collect();
+        b.sort_unstable();
+        a.sort_unstable();
+        assert_eq!(a, b);
+    }
+}

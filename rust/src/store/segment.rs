@@ -1,0 +1,398 @@
+//! Segment files: the append-only on-disk unit of the result store.
+//!
+//! A store directory holds numbered segment files (`seg-000001.log`,
+//! `seg-000002.log`, …). Exactly one — the highest-numbered — is *active*
+//! and accepts appends; every lower-numbered segment is *sealed*
+//! (terminated by a `seal` footer record) and immutable, which is what
+//! makes compaction able to read them without coordination.
+//!
+//! ## Frame format
+//!
+//! Each record is one frame:
+//!
+//! ```text
+//! ┌────────────┬────────────┬───────────────────────────────┐
+//! │ len: u32LE │ crc: u32LE │ body: len bytes               │
+//! └────────────┴────────────┴───────────────────────────────┘
+//! ```
+//!
+//! `crc` is the CRC-32 ([`crate::util::crc32`]) of the body, and the body
+//! is one codec document ([`crate::util::codec::write_document`] output,
+//! binary or JSON — readers auto-detect per record). A torn append —
+//! crash mid-write — leaves a frame whose length or CRC does not check
+//! out; [`RecordScan`] stops there and reports the damage instead of
+//! decoding garbage, and the store truncates the tail and keeps going.
+
+use crate::util::crc32::crc32;
+use crate::util::fs as mfs;
+use std::fs::{self, File, OpenOptions};
+use std::io::{self, Read, Seek, SeekFrom, Write};
+use std::path::{Path, PathBuf};
+
+/// Bytes of frame header (`len` + `crc`) preceding each record body.
+pub const FRAME_HEADER: u64 = 8;
+
+/// Upper bound on a single record body. A corrupt length prefix must not
+/// make a reader attempt a multi-gigabyte allocation; anything above this
+/// is treated as tail damage.
+pub const MAX_BODY: u32 = 64 << 20;
+
+/// File name for segment `id` (`seg-000001.log` style; the fixed-width
+/// zero padding makes lexicographic directory order equal numeric order).
+pub fn segment_file_name(id: u64) -> String {
+    format!("seg-{id:06}.log")
+}
+
+/// Full path of segment `id` inside `dir`.
+pub fn segment_path(dir: &Path, id: u64) -> PathBuf {
+    dir.join(segment_file_name(id))
+}
+
+/// Parses a segment id back out of a path; `None` for non-segment files.
+pub fn parse_segment_id(path: &Path) -> Option<u64> {
+    let name = path.file_name()?.to_str()?;
+    let rest = name.strip_prefix("seg-")?.strip_suffix(".log")?;
+    rest.parse().ok()
+}
+
+/// All segment files in `dir`, as `(id, path)` sorted by id.
+pub fn list_segments(dir: &Path) -> io::Result<Vec<(u64, PathBuf)>> {
+    let mut out = Vec::new();
+    for p in mfs::list_files_with_ext(dir, "log")? {
+        if let Some(id) = parse_segment_id(&p) {
+            out.push((id, p));
+        }
+    }
+    out.sort();
+    Ok(out)
+}
+
+/// Encodes one record body as a framed byte sequence (header + body).
+pub fn encode_frame(body: &[u8]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(FRAME_HEADER as usize + body.len());
+    out.extend_from_slice(&(body.len() as u32).to_le_bytes());
+    out.extend_from_slice(&crc32(body).to_le_bytes());
+    out.extend_from_slice(body);
+    out
+}
+
+/// Reads and CRC-verifies a single record body at a known offset.
+/// `body_len` is the length the index recorded at append time; a mismatch
+/// means the file changed underneath the index and is reported as
+/// corruption, not silently accepted.
+pub fn read_record(path: &Path, offset: u64, body_len: u32) -> io::Result<Vec<u8>> {
+    let mut f = File::open(path)?;
+    f.seek(SeekFrom::Start(offset))?;
+    let mut header = [0u8; FRAME_HEADER as usize];
+    f.read_exact(&mut header)?;
+    let len = u32::from_le_bytes(header[0..4].try_into().unwrap());
+    let crc = u32::from_le_bytes(header[4..8].try_into().unwrap());
+    if len != body_len {
+        return Err(io::Error::other(format!(
+            "record at {}:{offset}: length {len} != indexed {body_len}",
+            path.display()
+        )));
+    }
+    let mut body = vec![0u8; len as usize];
+    f.read_exact(&mut body)?;
+    if crc32(&body) != crc {
+        return Err(io::Error::other(format!(
+            "record at {}:{offset}: crc mismatch",
+            path.display()
+        )));
+    }
+    Ok(body)
+}
+
+/// Why a [`RecordScan`] stopped before the end of the segment bytes.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TailDamage {
+    /// Byte offset of the first frame that failed validation.
+    pub at: u64,
+    /// Human-readable description of the failure.
+    pub reason: String,
+}
+
+/// Iterator over the valid frames of a segment's bytes, yielding
+/// `(frame_offset, body)`. Stops at the first invalid frame (truncated
+/// header/body, implausible length, CRC mismatch) and records it as
+/// [`RecordScan::damage`]; [`RecordScan::valid_len`] is then the length
+/// of the intact prefix, i.e. the safe truncation point for re-opening
+/// the segment for appends.
+pub struct RecordScan<'a> {
+    bytes: &'a [u8],
+    pos: usize,
+    damage: Option<TailDamage>,
+}
+
+impl<'a> RecordScan<'a> {
+    /// Starts a scan over a whole segment's bytes.
+    pub fn new(bytes: &'a [u8]) -> RecordScan<'a> {
+        RecordScan { bytes, pos: 0, damage: None }
+    }
+
+    /// The damage that stopped the scan, if any. Meaningful once the
+    /// iterator has returned `None`.
+    pub fn damage(&self) -> Option<&TailDamage> {
+        self.damage.as_ref()
+    }
+
+    /// Bytes covered by valid frames so far.
+    pub fn valid_len(&self) -> u64 {
+        self.pos as u64
+    }
+
+    fn fail(&mut self, at: usize, reason: impl Into<String>) -> Option<(u64, &'a [u8])> {
+        self.damage = Some(TailDamage { at: at as u64, reason: reason.into() });
+        None
+    }
+}
+
+impl<'a> Iterator for RecordScan<'a> {
+    type Item = (u64, &'a [u8]);
+
+    fn next(&mut self) -> Option<(u64, &'a [u8])> {
+        if self.damage.is_some() || self.pos == self.bytes.len() {
+            return None;
+        }
+        let start = self.pos;
+        let header_end = start + FRAME_HEADER as usize;
+        if header_end > self.bytes.len() {
+            return self.fail(start, "truncated frame header");
+        }
+        let len = u32::from_le_bytes(self.bytes[start..start + 4].try_into().unwrap());
+        let crc = u32::from_le_bytes(self.bytes[start + 4..header_end].try_into().unwrap());
+        if len > MAX_BODY {
+            return self.fail(start, format!("implausible record length {len}"));
+        }
+        let body_end = header_end + len as usize;
+        if body_end > self.bytes.len() {
+            return self.fail(start, "truncated record body");
+        }
+        let body = &self.bytes[header_end..body_end];
+        if crc32(body) != crc {
+            return self.fail(start, "record crc mismatch");
+        }
+        self.pos = body_end;
+        Some((start as u64, body))
+    }
+}
+
+/// Append handle for the active segment.
+pub struct SegmentWriter {
+    file: File,
+    id: u64,
+    offset: u64,
+    records: u64,
+}
+
+impl SegmentWriter {
+    /// Creates a fresh segment `id` in `dir` (truncating any leftover
+    /// file with the same name — callers only create ids above the
+    /// highest existing one, so a leftover can only be pre-crash junk).
+    pub fn create(dir: &Path, id: u64) -> io::Result<SegmentWriter> {
+        let file = OpenOptions::new()
+            .write(true)
+            .create(true)
+            .truncate(true)
+            .open(segment_path(dir, id))?;
+        Ok(SegmentWriter { file, id, offset: 0, records: 0 })
+    }
+
+    /// Re-opens an existing unsealed segment for further appends,
+    /// truncating it to `valid_len` first (dropping any damaged tail —
+    /// the caller has already scanned and warned).
+    pub fn open_tail(
+        dir: &Path,
+        id: u64,
+        valid_len: u64,
+        records: u64,
+    ) -> io::Result<SegmentWriter> {
+        let file = OpenOptions::new().write(true).open(segment_path(dir, id))?;
+        file.set_len(valid_len)?;
+        let mut w = SegmentWriter { file, id, offset: valid_len, records };
+        w.file.seek(SeekFrom::Start(valid_len))?;
+        Ok(w)
+    }
+
+    /// This segment's id.
+    pub fn id(&self) -> u64 {
+        self.id
+    }
+
+    /// Current end-of-file offset (where the next frame will land).
+    pub fn offset(&self) -> u64 {
+        self.offset
+    }
+
+    /// Number of records appended (including any pre-existing ones
+    /// counted at `open_tail`).
+    pub fn records(&self) -> u64 {
+        self.records
+    }
+
+    /// Appends one framed record; returns the frame's start offset.
+    pub fn append(&mut self, body: &[u8]) -> io::Result<u64> {
+        let frame = encode_frame(body);
+        self.file.write_all(&frame)?;
+        let at = self.offset;
+        self.offset += frame.len() as u64;
+        self.records += 1;
+        Ok(at)
+    }
+
+    /// Fsyncs appended data (appends themselves are not individually
+    /// synced — a lost cache entry is a miss, not corruption — but flush
+    /// points and seals want durability).
+    pub fn sync(&mut self) -> io::Result<()> {
+        self.file.sync_all()
+    }
+
+    /// Appends the seal footer record and fsyncs. After this the segment
+    /// is immutable; the caller must also [`mfs::sync_dir`] if it renamed
+    /// or created files as part of the same transition.
+    pub fn seal(mut self, footer_body: &[u8]) -> io::Result<()> {
+        self.append(footer_body)?;
+        self.sync()
+    }
+}
+
+/// Removes leftover temporary files (`*.tmp`) from a store directory —
+/// debris from a crash mid-compaction or mid-write. Called on open.
+pub fn remove_temp_files(dir: &Path) -> io::Result<()> {
+    if !dir.exists() {
+        return Ok(());
+    }
+    for entry in fs::read_dir(dir)? {
+        let p = entry?.path();
+        let is_tmp = p
+            .file_name()
+            .and_then(|n| n.to_str())
+            .is_some_and(|n| n.ends_with(".tmp") || n.contains(".tmp."));
+        if p.is_file() && is_tmp {
+            let _ = fs::remove_file(&p);
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::fs::TempDir;
+
+    #[test]
+    fn frame_roundtrip_and_point_read() {
+        let td = TempDir::new("seg").unwrap();
+        let mut w = SegmentWriter::create(td.path(), 1).unwrap();
+        let a = w.append(b"alpha").unwrap();
+        let b = w.append(b"beta-longer-body").unwrap();
+        assert_eq!(a, 0);
+        assert_eq!(b, FRAME_HEADER + 5);
+        w.sync().unwrap();
+
+        let path = segment_path(td.path(), 1);
+        assert_eq!(read_record(&path, a, 5).unwrap(), b"alpha");
+        assert_eq!(read_record(&path, b, 16).unwrap(), b"beta-longer-body");
+        // Wrong indexed length is corruption, not acceptance.
+        assert!(read_record(&path, a, 6).is_err());
+
+        let bytes = fs::read(&path).unwrap();
+        let mut scan = RecordScan::new(&bytes);
+        let got: Vec<Vec<u8>> = scan.by_ref().map(|(_, b)| b.to_vec()).collect();
+        assert_eq!(got, vec![b"alpha".to_vec(), b"beta-longer-body".to_vec()]);
+        assert!(scan.damage().is_none());
+        assert_eq!(scan.valid_len(), bytes.len() as u64);
+    }
+
+    #[test]
+    fn truncated_tail_is_damage_not_panic() {
+        let td = TempDir::new("seg-trunc").unwrap();
+        let mut w = SegmentWriter::create(td.path(), 1).unwrap();
+        w.append(b"keep-me").unwrap();
+        w.append(b"torn-record").unwrap();
+        w.sync().unwrap();
+        let path = segment_path(td.path(), 1);
+        let full = fs::read(&path).unwrap();
+        // Cut the file anywhere inside the second frame: first record must
+        // still scan, the scan must stop with damage at the second frame.
+        let second_start = (FRAME_HEADER + 7) as usize;
+        for cut in second_start + 1..full.len() {
+            let mut scan = RecordScan::new(&full[..cut]);
+            let got: Vec<_> = scan.by_ref().collect();
+            assert_eq!(got.len(), 1, "cut={cut}");
+            let damage = scan.damage().expect("damage reported");
+            assert_eq!(damage.at, second_start as u64, "cut={cut}");
+            assert_eq!(scan.valid_len(), second_start as u64);
+        }
+    }
+
+    #[test]
+    fn bitflip_is_detected_by_crc() {
+        let td = TempDir::new("seg-flip").unwrap();
+        let mut w = SegmentWriter::create(td.path(), 1).unwrap();
+        w.append(b"only-record-here").unwrap();
+        w.sync().unwrap();
+        let path = segment_path(td.path(), 1);
+        let mut bytes = fs::read(&path).unwrap();
+        let last = bytes.len() - 1;
+        bytes[last] ^= 0x40;
+        let mut scan = RecordScan::new(&bytes);
+        assert!(scan.next().is_none());
+        assert_eq!(scan.damage().unwrap().reason, "record crc mismatch");
+    }
+
+    #[test]
+    fn open_tail_truncates_damage_and_appends() {
+        let td = TempDir::new("seg-tail").unwrap();
+        let mut w = SegmentWriter::create(td.path(), 3).unwrap();
+        w.append(b"good").unwrap();
+        w.sync().unwrap();
+        let path = segment_path(td.path(), 3);
+        // Simulate a torn append: garbage half-frame at the end.
+        {
+            let mut f = OpenOptions::new().append(true).open(&path).unwrap();
+            f.write_all(&[9, 0, 0]).unwrap();
+        }
+        let bytes = fs::read(&path).unwrap();
+        let mut scan = RecordScan::new(&bytes);
+        let n = scan.by_ref().count();
+        assert_eq!(n, 1);
+        assert!(scan.damage().is_some());
+        let mut w = SegmentWriter::open_tail(td.path(), 3, scan.valid_len(), n as u64).unwrap();
+        w.append(b"after-recovery").unwrap();
+        w.sync().unwrap();
+        let bytes = fs::read(&path).unwrap();
+        let mut scan = RecordScan::new(&bytes);
+        let got: Vec<Vec<u8>> = scan.by_ref().map(|(_, b)| b.to_vec()).collect();
+        assert_eq!(got, vec![b"good".to_vec(), b"after-recovery".to_vec()]);
+        assert!(scan.damage().is_none());
+    }
+
+    #[test]
+    fn segment_names_parse_and_sort() {
+        let td = TempDir::new("seg-names").unwrap();
+        for id in [3u64, 1, 2] {
+            SegmentWriter::create(td.path(), id).unwrap();
+        }
+        std::fs::write(td.join("notes.log"), b"x").unwrap();
+        std::fs::write(td.join("seg-bad.log"), b"x").unwrap();
+        let segs = list_segments(td.path()).unwrap();
+        let ids: Vec<u64> = segs.iter().map(|(id, _)| *id).collect();
+        assert_eq!(ids, vec![1, 2, 3]);
+        assert_eq!(parse_segment_id(&segment_path(td.path(), 42)), Some(42));
+        assert_eq!(parse_segment_id(Path::new("seg-xx.log")), None);
+    }
+
+    #[test]
+    fn temp_files_are_cleaned() {
+        let td = TempDir::new("seg-tmp").unwrap();
+        std::fs::write(td.join("compact.tmp"), b"junk").unwrap();
+        std::fs::write(td.join(".seg-000001.log.tmp.123.4"), b"junk").unwrap();
+        SegmentWriter::create(td.path(), 1).unwrap();
+        remove_temp_files(td.path()).unwrap();
+        assert!(!td.join("compact.tmp").exists());
+        assert!(!td.join(".seg-000001.log.tmp.123.4").exists());
+        assert!(segment_path(td.path(), 1).exists());
+    }
+}

@@ -3,7 +3,8 @@
 //! Checkpoints and cache entries must never be observed half-written: a
 //! power cut mid-`write` would otherwise corrupt the very state Memento
 //! relies on to resume. All persistent writes go through
-//! [`atomic_write`] (write temp file in the same directory, fsync, rename).
+//! [`atomic_write`] (write temp file in the same directory, fsync, rename,
+//! fsync the directory so the rename itself survives a power cut).
 
 use std::fs;
 use std::io::{self, Write};
@@ -29,6 +30,25 @@ pub fn atomic_write_nosync(path: &Path, contents: &[u8]) -> io::Result<()> {
     atomic_write_opts(path, contents, false)
 }
 
+/// Fsyncs a directory so preceding renames/unlinks within it are durable.
+///
+/// `rename(2)` updates the *directory*, not the file: syncing only the
+/// file leaves the new name itself volatile, and a power cut can roll the
+/// directory back to the old entry. On Unix a directory can be opened and
+/// `fsync`ed like a file; elsewhere this is a no-op (no portable
+/// equivalent exists, and the platforms we ship to are Unix).
+pub fn sync_dir(dir: &Path) -> io::Result<()> {
+    #[cfg(unix)]
+    {
+        fs::File::open(dir)?.sync_all()
+    }
+    #[cfg(not(unix))]
+    {
+        let _ = dir;
+        Ok(())
+    }
+}
+
 fn atomic_write_opts(path: &Path, contents: &[u8], durable: bool) -> io::Result<()> {
     let dir = path.parent().unwrap_or_else(|| Path::new("."));
     fs::create_dir_all(dir)?;
@@ -47,7 +67,15 @@ fn atomic_write_opts(path: &Path, contents: &[u8], durable: bool) -> io::Result<
         }
     }
     match fs::rename(&tmp, path) {
-        Ok(()) => Ok(()),
+        Ok(()) => {
+            // Durability gap without this: the file's bytes are synced but
+            // the rename that *names* them lives only in the directory's
+            // in-memory state until the directory itself is fsynced.
+            if durable {
+                sync_dir(dir)?;
+            }
+            Ok(())
+        }
         Err(e) => {
             let _ = fs::remove_file(&tmp);
             Err(e)

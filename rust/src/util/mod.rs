@@ -4,6 +4,7 @@
 
 pub mod cli;
 pub mod codec;
+pub mod crc32;
 pub mod csv;
 pub mod deque;
 pub mod fs;

@@ -158,6 +158,11 @@ impl<'a> ScanValue<'a> {
 pub struct Scanner<'a> {
     bytes: &'a [u8],
     binary: bool,
+    /// Byte offset of the top-level object's tag/brace. A full binary
+    /// document starts at 2 (magic + `TAG_OBJ`); a nested raw binary
+    /// value has no magic byte and starts at 1 (`TAG_OBJ`); JSON always
+    /// re-scans from 0 (leading whitespace is skipped in the walk).
+    start: usize,
 }
 
 impl<'a> Scanner<'a> {
@@ -179,7 +184,36 @@ impl<'a> Scanner<'a> {
                 return Err(err("json document is not an object", start));
             }
         }
-        Ok(Scanner { bytes, binary })
+        Ok(Scanner { bytes, binary, start: if binary { 2 } else { 0 } })
+    }
+
+    /// Wraps an already-captured composite value ([`ScanValue::Raw`]) so
+    /// its *own* fields can be probed lazily, without materializing it.
+    /// The raw value must be an object. This is how nested subtrees —
+    /// e.g. the `params` object inside a store record — get the same
+    /// zero-allocation field access as a top-level document: raw binary
+    /// bytes are one complete tagged value (no magic byte), so the walk
+    /// starts at the `TAG_OBJ` tag instead of past a header.
+    pub fn from_raw(raw: &ScanValue<'a>) -> Result<Scanner<'a>, ScanError> {
+        match raw {
+            ScanValue::Raw { bytes, binary: true } => {
+                if bytes.first() != Some(&codec::TAG_OBJ) {
+                    return Err(err("raw binary value is not an object", 0));
+                }
+                Ok(Scanner { bytes, binary: true, start: 1 })
+            }
+            ScanValue::Raw { bytes, binary: false } => {
+                let at = bytes
+                    .iter()
+                    .position(|b| !b" \t\r\n".contains(b))
+                    .ok_or_else(|| err("empty raw value", 0))?;
+                if bytes[at] != b'{' {
+                    return Err(err("raw json value is not an object", at));
+                }
+                Ok(Scanner { bytes, binary: false, start: 0 })
+            }
+            _ => Err(err("scalar value has no fields", 0)),
+        }
     }
 
     /// Extracts one named top-level field; `Ok(None)` when absent.
@@ -221,7 +255,7 @@ impl<'a> Scanner<'a> {
         out: &mut [Option<ScanValue<'a>>],
     ) -> Result<(), ScanError> {
         let bytes = self.bytes;
-        let mut pos = 2; // magic + TAG_OBJ, verified in new()
+        let mut pos = self.start; // at TAG_OBJ+1, verified at construction
         let count = codec::read_varint(bytes, &mut pos)?;
         let mut remaining = names.len();
         for _ in 0..count {
@@ -707,6 +741,42 @@ mod tests {
             );
             // Borrowed straight from the input on both formats.
             assert!(matches!(v, ScanValue::Str(Cow::Borrowed(_))));
+        }
+    }
+
+    #[test]
+    fn nested_raw_objects_scan_without_materializing() {
+        let doc = Json::obj(vec![
+            ("id", Json::str("t1")),
+            (
+                "params",
+                Json::obj(vec![
+                    ("lr", Json::Num(0.05)),
+                    ("model", Json::str("svc")),
+                    ("folds", Json::int(5)),
+                ]),
+            ),
+            ("value", Json::arr(vec![Json::int(1), Json::int(2)])),
+        ]);
+        for bytes in both_encodings(&doc) {
+            let before = materialized_count();
+            let outer = Scanner::new(&bytes).unwrap();
+            let params = outer.field("params").unwrap().unwrap();
+            let inner = Scanner::from_raw(&params).unwrap();
+            assert_eq!(inner.field("model").unwrap().unwrap().as_str(), Some("svc"));
+            assert_eq!(inner.field("lr").unwrap().unwrap().as_f64(), Some(0.05));
+            assert_eq!(inner.field("folds").unwrap().unwrap().as_i64(), Some(5));
+            assert!(inner.field("absent").unwrap().is_none());
+            assert_eq!(
+                materialized_count(),
+                before,
+                "nested scalar probes must not materialize any tree"
+            );
+            // Scalars and arrays have no fields to scan.
+            let id = outer.field("id").unwrap().unwrap();
+            assert!(Scanner::from_raw(&id).is_err());
+            let arr = outer.field("value").unwrap().unwrap();
+            assert!(Scanner::from_raw(&arr).is_err());
         }
     }
 

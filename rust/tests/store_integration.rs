@@ -1,0 +1,182 @@
+//! Integration tests for the cross-run segment-log store
+//! ([`memento::store`]): migrating legacy per-run JSON directories into a
+//! store and restoring from it identically on every execution backend,
+//! plus cross-run query over what the runs recorded.
+//!
+//! The process-backend tests reuse the worker-entry pattern documented in
+//! `tests/ipc_process_backend.rs`: the supervisor re-executes this test
+//! binary with `--exact store_worker_entry` and the worker environment
+//! set, so the child serves task attempts with this file's experiment
+//! function.
+
+use memento::prelude::*;
+use memento::store::ResultStore;
+use memento::util::fs::TempDir;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+
+/// Experiment function shared by the supervisor and every worker tier.
+/// Task identity hashes params + version, so ids agree across backends
+/// and across the legacy-dir and store-backed runs.
+fn exp(ctx: &TaskContext) -> Result<Json, MementoError> {
+    let i = ctx.param_i64("i")?;
+    Ok(Json::obj(vec![
+        ("score", Json::Num(i as f64 / 10.0)),
+        ("doubled", Json::int(i * 2)),
+    ]))
+}
+
+/// Worker entry for the process-backend runs; no-op in a normal pass.
+#[test]
+fn store_worker_entry() {
+    #[cfg(unix)]
+    if memento::ipc::worker::active() {
+        memento::ipc::worker::serve(Arc::new(exp)).expect("worker serve");
+        std::process::exit(0);
+    }
+}
+
+fn matrix(n: i64) -> ConfigMatrix {
+    ConfigMatrix::builder()
+        .param("i", (0..n).map(pv_int).collect())
+        .build()
+        .unwrap()
+}
+
+/// Seeds a legacy per-entry-JSON cache directory by running the grid
+/// through a dir-backed `ResultCache`, then folds it into a store.
+fn migrated_store(td: &TempDir, n: i64) -> (Arc<ResultStore>, ResultSet) {
+    let legacy = td.join("legacy-cache");
+    let baseline = Memento::new(exp)
+        .workers(2)
+        .with_cache_dir(&legacy)
+        .run(&matrix(n))
+        .unwrap();
+    let store = ResultStore::open(td.join("store")).unwrap();
+    let report = store.migrate_dir(&legacy).unwrap();
+    assert_eq!(report.results as i64, n);
+    assert_eq!(report.skipped, 0);
+    (store, baseline)
+}
+
+#[test]
+fn migration_roundtrip_restores_identically_on_thread_backend() {
+    let td = TempDir::new("store-int-threads").unwrap();
+    let (store, baseline) = migrated_store(&td, 12);
+
+    let executions = Arc::new(AtomicUsize::new(0));
+    let ex = Arc::clone(&executions);
+    let restored = Memento::new(move |ctx| {
+        ex.fetch_add(1, Ordering::SeqCst);
+        exp(ctx)
+    })
+    .workers(2)
+    .with_store(Arc::clone(&store))
+    .run(&matrix(12))
+    .unwrap();
+
+    assert_eq!(executions.load(Ordering::SeqCst), 0, "all restored from store");
+    assert_eq!(restored.n_cached(), 12);
+    assert_eq!(restored.len(), baseline.len());
+    for (b, r) in baseline.iter().zip(restored.iter()) {
+        assert_eq!(b.id, r.id);
+        assert_eq!(b.value, r.value, "i={:?}", b.spec.get("i"));
+    }
+}
+
+#[cfg(unix)]
+#[test]
+fn migration_roundtrip_restores_identically_on_process_backend() {
+    let td = TempDir::new("store-int-process").unwrap();
+    let (store, baseline) = migrated_store(&td, 8);
+
+    let restored = Memento::new(exp)
+        .isolate_processes(2, 1)
+        .worker_args(vec!["--exact".to_string(), "store_worker_entry".to_string()])
+        .with_store(Arc::clone(&store))
+        .run(&matrix(8))
+        .unwrap();
+
+    assert_eq!(restored.n_cached(), 8, "nothing dispatched to workers");
+    for (b, r) in baseline.iter().zip(restored.iter()) {
+        assert_eq!(b.id, r.id);
+        assert_eq!(b.value, r.value);
+    }
+}
+
+#[cfg(unix)]
+#[test]
+fn migration_roundtrip_restores_identically_on_remote_backend() {
+    use memento::coordinator::memento::ExpFn;
+    use memento::ipc::pool::{PoolOptions, WorkerPool};
+    use memento::ipc::transport::Transport;
+    use memento::ipc::worker::{serve_remote, RemoteWorkerOptions};
+    use std::time::Duration;
+
+    let td = TempDir::new("store-int-remote").unwrap();
+    let (store, baseline) = migrated_store(&td, 8);
+
+    let token = "store-int-token";
+    let pool = WorkerPool::listen(
+        &Transport::Tcp { bind: "127.0.0.1:0".to_string() },
+        PoolOptions { token: Some(token.to_string()), ..PoolOptions::default() },
+    )
+    .unwrap();
+    let endpoint = pool.endpoint().clone();
+    let worker = std::thread::spawn(move || {
+        let exp_fn: Arc<ExpFn> = Arc::new(exp);
+        serve_remote(
+            exp_fn,
+            &endpoint,
+            RemoteWorkerOptions {
+                token: Some(token.to_string()),
+                max_connections: Some(1),
+                give_up_after: Some(Duration::from_secs(1)),
+                quiet: true,
+                ..RemoteWorkerOptions::default()
+            },
+        )
+    });
+
+    let restored = Memento::new(exp)
+        .with_worker_pool(Arc::clone(&pool))
+        .remote_workers("", 2)
+        .with_store(Arc::clone(&store))
+        .run(&matrix(8))
+        .unwrap();
+    // Nothing was dispatched, so the worker may never have been leased:
+    // drop the pool so its registration loop gives up and the thread joins.
+    drop(pool);
+    let _ = worker.join().unwrap();
+
+    assert_eq!(restored.n_cached(), 8, "nothing dispatched to workers");
+    for (b, r) in baseline.iter().zip(restored.iter()) {
+        assert_eq!(b.id, r.id);
+        assert_eq!(b.value, r.value);
+    }
+}
+
+#[test]
+fn migrated_results_answer_cross_run_queries() {
+    let td = TempDir::new("store-int-query").unwrap();
+    let (store, _) = migrated_store(&td, 12);
+
+    // Run a second grid straight into the store so the query spans a
+    // migrated run and a native one.
+    Memento::new(exp)
+        .workers(2)
+        .with_store(Arc::clone(&store))
+        .run(&matrix(16))
+        .unwrap();
+    assert_eq!(store.stats().live_records, 16, "12 restored + 4 new");
+
+    let preds = parse_predicates("i>=10").unwrap();
+    let rows = store.query(&preds, &QueryOptions::default()).unwrap();
+    assert_eq!(rows.len(), 6, "i in 10..16");
+    for row in &rows {
+        let i = row.doc.get("params").and_then(|p| p.get("i")).and_then(|v| v.as_i64());
+        assert!(i.is_some_and(|i| i >= 10), "{:?}", row.doc);
+        let doubled = row.doc.get("value").and_then(|v| v.get("doubled")).and_then(|v| v.as_i64());
+        assert_eq!(doubled, i.map(|i| i * 2));
+    }
+}
