@@ -32,6 +32,7 @@ fn main() {
         .map(|i| TaskSpec {
             params: vec![("i".into(), pv_int(i as i64))],
             index: i,
+            exp: None,
         })
         .collect();
     let ids: Vec<_> = specs.iter().map(|s| s.id("v1")).collect();
@@ -121,7 +122,8 @@ fn main() {
         ]),
     ));
 
-    let missing = TaskSpec { params: vec![("i".into(), pv_int(-1))], index: 0 }.id("v1");
+    let missing =
+        TaskSpec { params: vec![("i".into(), pv_int(-1))], index: 0, exp: None }.id("v1");
     suite.bench("cache.get (miss)", 100, 1000, |_| {
         black_box(cache.get(&missing));
     });

@@ -156,7 +156,7 @@ fn main() {
                 let endpoint = pool.endpoint().clone();
                 std::thread::spawn(move || {
                     let _ = serve_remote(
-                        Arc::new(exp),
+                        Arc::new(memento::prelude::Registry::solo(Arc::new(exp))),
                         &endpoint,
                         RemoteWorkerOptions {
                             token: Some(token.to_string()),

@@ -43,6 +43,7 @@ fn noop_specs(n: usize) -> Vec<TaskSpec> {
         .map(|i| TaskSpec {
             params: vec![("i".to_string(), pv_int(i as i64))],
             index: i,
+            exp: None,
         })
         .collect()
 }

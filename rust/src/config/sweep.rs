@@ -115,7 +115,7 @@ pub fn zip_params(
                 })
                 .collect();
             params.retain(|(n, _)| n != "__unit");
-            let spec = TaskSpec { params, index };
+            let spec = TaskSpec { params, index, exp: None };
             if !expand::is_excluded(&spec, &matrix.exclude) {
                 out.push(spec);
                 index += 1;

@@ -548,16 +548,23 @@ impl ResultCache {
     }
 
     /// Stores a value with its parameter context (the context makes cache
-    /// files self-describing for post-hoc inspection). Write-through: the
-    /// disk entry lands first, then the memory tier picks it up.
+    /// files self-describing for post-hoc inspection). A named spec
+    /// additionally stamps the entry with its experiment name + entry
+    /// version, so stores and migrated caches keep full provenance.
+    /// Write-through: the disk entry lands first, then the memory tier
+    /// picks it up.
     pub fn put(&self, id: &TaskId, spec: &TaskSpec, value: &Json) -> std::io::Result<()> {
+        let exp = spec.exp.as_ref().map(|e| (e.name.as_str(), e.version.as_str()));
         let approx_bytes = match &self.backing {
             Backing::Dir => {
-                let doc = Json::obj(vec![
-                    ("id", Json::str(id.0.clone())),
-                    ("params", spec.to_json()),
-                    ("value", value.clone()),
-                ]);
+                let mut fields = vec![("id", Json::str(id.0.clone()))];
+                if let Some((name, version)) = exp {
+                    fields.push(("exp", Json::str(name)));
+                    fields.push(("exp_version", Json::str(version)));
+                }
+                fields.push(("params", spec.to_json()));
+                fields.push(("value", value.clone()));
+                let doc = Json::obj(fields);
                 let bytes = codec::write_document(&doc, self.storage);
                 if self.fsync {
                     atomic_write(&self.path_of(id), &bytes)?;
@@ -567,7 +574,7 @@ impl ResultCache {
                 bytes.len()
             }
             Backing::Store(store) => {
-                store.put_result(&id.0, &spec.to_json(), value)?;
+                store.put_result_exp(&id.0, &spec.to_json(), value, exp)?;
                 if self.fsync {
                     store.sync()?;
                 }
@@ -669,6 +676,7 @@ mod tests {
         TaskSpec {
             params: vec![("model".into(), pv_str("SVC")), ("n".into(), pv_int(n))],
             index: 0,
+            exp: None,
         }
     }
 

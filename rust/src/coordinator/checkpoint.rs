@@ -112,6 +112,14 @@ pub struct CheckpointStore {
     /// so a run directory written by an older (JSON-only) version resumes
     /// unchanged and converges to this format at the next flush.
     storage: WireFormat,
+    /// Named experiment versions this run writes into the manifest header
+    /// (see [`CheckpointStore::with_exps`]). Empty for single-experiment
+    /// runs — the header then omits the field entirely, keeping
+    /// pre-registry manifests byte-compatible.
+    exps: BTreeMap<String, String>,
+    /// Experiment versions read back from a resumed manifest header
+    /// (empty when the manifest predates the registry or recorded none).
+    stored_exps: BTreeMap<String, String>,
     inner: Mutex<Inner>,
 }
 
@@ -135,6 +143,8 @@ impl CheckpointStore {
             total_tasks: std::sync::atomic::AtomicUsize::new(total_tasks),
             flush_every: flush_every.max(1),
             storage: WireFormat::default(),
+            exps: BTreeMap::new(),
+            stored_exps: BTreeMap::new(),
             inner: Mutex::new(Inner { entries: BTreeMap::new(), dirty_since_flush: 0 }),
         };
         store.flush()?;
@@ -168,6 +178,8 @@ impl CheckpointStore {
             total_tasks: std::sync::atomic::AtomicUsize::new(total_tasks),
             flush_every: flush_every.max(1),
             storage: WireFormat::default(),
+            exps: BTreeMap::new(),
+            stored_exps: BTreeMap::new(),
             inner: Mutex::new(Inner { entries: BTreeMap::new(), dirty_since_flush: 0 }),
         };
         ck.flush()?;
@@ -254,6 +266,8 @@ impl CheckpointStore {
             total_tasks: std::sync::atomic::AtomicUsize::new(total_tasks),
             flush_every: flush_every.max(1),
             storage: WireFormat::default(),
+            exps: BTreeMap::new(),
+            stored_exps: Self::parse_exps(manifest.get("exps")),
             inner: Mutex::new(Inner { entries, dirty_since_flush: 0 }),
         })
     }
@@ -279,6 +293,68 @@ impl CheckpointStore {
     pub fn storage_format(mut self, format: WireFormat) -> Self {
         self.storage = format;
         self
+    }
+
+    /// Records the named experiment versions
+    /// ([`crate::experiments::registry::Registry::versions`]) this run is
+    /// using; the next flush writes them into the manifest header as an
+    /// `exps` object. An empty map (single-experiment runs, and everything
+    /// built by `Memento::new`) omits the field, so those manifests stay
+    /// byte-identical to pre-registry ones.
+    pub fn with_exps(mut self, exps: BTreeMap<String, String>) -> Self {
+        self.exps = exps;
+        self
+    }
+
+    /// The experiment versions a resumed manifest recorded (empty when
+    /// the manifest predates the registry or recorded none).
+    pub fn stored_exps(&self) -> &BTreeMap<String, String> {
+        &self.stored_exps
+    }
+
+    /// The per-experiment version gate: refuses to resume when an
+    /// experiment recorded in the manifest is also registered now *with a
+    /// different version* — the per-entry analogue of the run-wide version
+    /// check. Compared on the intersection only: experiments added since
+    /// the checkpoint, dropped from the current registry, or runs whose
+    /// manifest predates the registry (no `exps` field) pass freely.
+    pub fn verify_exps(
+        &self,
+        current: &BTreeMap<String, String>,
+    ) -> Result<(), MementoError> {
+        for (name, stored) in &self.stored_exps {
+            if let Some(now) = current.get(name) {
+                if now != stored {
+                    return Err(MementoError::CheckpointMismatch(format!(
+                        "manifest recorded experiment '{name}' at version \
+                         '{stored}', the registry now has it at '{now}'"
+                    )));
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Reads an optional `exps` manifest field ({name: version}).
+    fn parse_exps(j: Option<&Json>) -> BTreeMap<String, String> {
+        j.and_then(|j| j.as_obj())
+            .map(|pairs| {
+                pairs
+                    .iter()
+                    .filter_map(|(n, v)| v.as_str().map(|s| (n.clone(), s.to_string())))
+                    .collect()
+            })
+            .unwrap_or_default()
+    }
+
+    /// The `exps` header field value for the configured map.
+    fn exps_json(&self) -> Json {
+        Json::Obj(
+            self.exps
+                .iter()
+                .map(|(n, v)| (n.clone(), Json::str(v.clone())))
+                .collect(),
+        )
     }
 
     /// Loads an existing manifest for resumption, verifying it matches the
@@ -376,6 +452,8 @@ impl CheckpointStore {
             total_tasks: std::sync::atomic::AtomicUsize::new(total_tasks),
             flush_every: flush_every.max(1),
             storage: WireFormat::default(),
+            exps: BTreeMap::new(),
+            stored_exps: Self::parse_exps(doc.get("exps")),
             inner: Mutex::new(Inner { entries, dirty_since_flush: 0 }),
         })
     }
@@ -514,14 +592,18 @@ impl CheckpointStore {
             // a flush just refreshes the manifest header — whose only
             // mutable field is the task total — and optionally fsyncs.
             self.inner.lock().unwrap().dirty_since_flush = 0;
-            let header = Json::obj(vec![
+            let mut header = vec![
                 ("matrix_fingerprint", Json::str(self.matrix_fingerprint.clone())),
                 ("version", Json::str(self.version.clone())),
                 (
                     "total_tasks",
                     Json::int(self.total_tasks.load(std::sync::atomic::Ordering::Relaxed) as i64),
                 ),
-            ]);
+            ];
+            if !self.exps.is_empty() {
+                header.push(("exps", self.exps_json()));
+            }
+            let header = Json::obj(header);
             store
                 .put_manifest(run, &header)
                 .map_err(|e| MementoError::storage(format!("store manifest: {e}")))?;
@@ -554,15 +636,19 @@ impl CheckpointStore {
                     })
                     .collect(),
             );
-            Json::obj(vec![
+            let mut fields = vec![
                 ("matrix_fingerprint", Json::str(self.matrix_fingerprint.clone())),
                 ("version", Json::str(self.version.clone())),
                 (
                     "total_tasks",
                     Json::int(self.total_tasks.load(std::sync::atomic::Ordering::Relaxed) as i64),
                 ),
-                ("completed", completed),
-            ])
+            ];
+            if !self.exps.is_empty() {
+                fields.push(("exps", self.exps_json()));
+            }
+            fields.push(("completed", completed));
+            Json::obj(fields)
         };
         // Compact serialization (tagged binary by default): the manifest
         // is rewritten on every flush, so byte count is on the hot path;
@@ -891,5 +977,72 @@ mod tests {
         .unwrap();
         assert_eq!(s.completed_count(), 1);
         assert_eq!(s.completed_success_ids(), vec![tid(9)]);
+    }
+
+    fn exps(pairs: &[(&str, &str)]) -> BTreeMap<String, String> {
+        pairs
+            .iter()
+            .map(|(n, v)| (n.to_string(), v.to_string()))
+            .collect()
+    }
+
+    #[test]
+    fn exps_header_roundtrips_and_gates_on_version_drift() {
+        let td = TempDir::new("ckpt-exps").unwrap();
+        {
+            let s = CheckpointStore::create(td.join("run"), "fp", "v1", 1, 1)
+                .unwrap()
+                .with_exps(exps(&[("echo", "v1"), ("grid", "v2")]));
+            s.flush().unwrap();
+        }
+        let s = CheckpointStore::resume(td.join("run"), "fp", "v1", 1, 1).unwrap();
+        assert_eq!(s.stored_exps(), &exps(&[("echo", "v1"), ("grid", "v2")]));
+        // Intersection semantics: identical versions pass, as do names
+        // only one side knows about.
+        s.verify_exps(&exps(&[("echo", "v1"), ("grid", "v2")])).unwrap();
+        s.verify_exps(&exps(&[("echo", "v1"), ("new", "v9")])).unwrap();
+        s.verify_exps(&BTreeMap::new()).unwrap();
+        // A shared name at a different version is refused.
+        let err = s.verify_exps(&exps(&[("grid", "v3")])).unwrap_err();
+        assert!(matches!(err, MementoError::CheckpointMismatch(_)), "{err}");
+        assert!(err.to_string().contains("'grid'"), "{err}");
+    }
+
+    #[test]
+    fn pre_registry_manifest_resumes_with_no_exps_gate() {
+        // The fingerprint-compatibility rule for run dirs: a manifest
+        // written without an `exps` header (pre-registry versions, and
+        // every single-experiment run since) resumes under any registry —
+        // the gate has nothing to compare.
+        let td = TempDir::new("ckpt-exps-legacy").unwrap();
+        {
+            let s = CheckpointStore::create(td.join("run"), "fp", "v1", 1, 1).unwrap();
+            s.record(&tid(1), Some(&Json::int(1)), None, 0.0, 1).unwrap();
+        }
+        let s = CheckpointStore::resume(td.join("run"), "fp", "v1", 1, 1).unwrap();
+        assert!(s.stored_exps().is_empty());
+        s.verify_exps(&exps(&[("anything", "v7")])).unwrap();
+        assert_eq!(s.completed_count(), 1);
+    }
+
+    #[test]
+    fn store_backed_exps_header_roundtrips() {
+        let td = TempDir::new("ckpt-exps-store").unwrap();
+        let store = ResultStore::open(td.join("store")).unwrap();
+        {
+            let s = CheckpointStore::create_in_store(
+                Arc::clone(&store), "exp", td.join("run"), "fp", "v1", 1, 1,
+            )
+            .unwrap()
+            .with_exps(exps(&[("echo", "v1")]));
+            s.flush().unwrap();
+        }
+        let s = CheckpointStore::resume_in_store(
+            store, "exp", td.join("run"), "fp", "v1", 1, 1,
+        )
+        .unwrap();
+        assert_eq!(s.stored_exps(), &exps(&[("echo", "v1")]));
+        let err = s.verify_exps(&exps(&[("echo", "v2")])).unwrap_err();
+        assert!(matches!(err, MementoError::CheckpointMismatch(_)), "{err}");
     }
 }

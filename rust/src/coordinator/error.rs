@@ -94,6 +94,11 @@ pub enum FailureKind {
     /// from [`FailureKind::Crash`]: a timeout is the task's fault, not
     /// the worker's, and never consumes the worker crash budget.
     Timeout,
+    /// The task named an experiment no available worker has registered
+    /// (see `crate::experiments::registry`). A capability mismatch is a
+    /// dispatch problem, not a worker fault: it never consumes the crash
+    /// budget, and the failure message names the missing experiment.
+    UnknownExperiment,
 }
 
 impl fmt::Display for FailureKind {
@@ -103,6 +108,7 @@ impl fmt::Display for FailureKind {
             FailureKind::Panic => write!(f, "panic"),
             FailureKind::Crash => write!(f, "crash"),
             FailureKind::Timeout => write!(f, "timeout"),
+            FailureKind::UnknownExperiment => write!(f, "unknown-experiment"),
         }
     }
 }

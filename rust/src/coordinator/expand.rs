@@ -87,7 +87,7 @@ impl<M: Borrow<ConfigMatrix>> Expansion<M> {
             .zip(counters)
             .map(|((name, domain), &i)| (name.clone(), domain[i].clone()))
             .collect();
-        TaskSpec { params, index: self.next_index }
+        TaskSpec { params, index: self.next_index, exp: None }
     }
 
     /// If the current counters match a rule, the last position that rule
@@ -484,7 +484,7 @@ mod tests {
                     k /= dlen;
                 }
                 assignment.reverse();
-                let spec = TaskSpec { params: assignment, index: 0 };
+                let spec = TaskSpec { params: assignment, index: 0, exp: None };
                 if !is_excluded(&spec, &m.exclude) {
                     included += 1;
                 }
@@ -549,7 +549,7 @@ mod tests {
                 k /= dlen;
             }
             assignment.reverse();
-            let spec = TaskSpec { params: assignment, index: included.len() };
+            let spec = TaskSpec { params: assignment, index: included.len(), exp: None };
             if is_excluded(&spec, &m.exclude) {
                 excluded += 1;
             } else {
@@ -676,7 +676,7 @@ mod tests {
         let mut hits = vec![0usize; n];
         for seed in 0..trials as u64 {
             let mut rng = crate::util::rng::Rng::new(seed);
-            let it = (0..n).map(|i| TaskSpec { params: Vec::new(), index: i });
+            let it = (0..n).map(|i| TaskSpec { params: Vec::new(), index: i, exp: None });
             let (sample, seen) = reservoir_sample(it, k, &mut rng);
             assert_eq!(seen, n);
             assert_eq!(sample.len(), k);

@@ -64,6 +64,7 @@ use crate::coordinator::scheduler::{
     ExecBackend, SchedulerOptions, SpecFilter, SpecSource, StreamHooks,
 };
 use crate::coordinator::task::{fresh_run_id, task_seed, TaskContext, TaskId, TaskSpec};
+use crate::experiments::registry::Registry;
 use crate::obs::snapshot::{write_snapshot, FleetStats, MetricsSnapshot};
 use crate::obs::trace::{thread_worker_id, SpanState, Tracer};
 use crate::store::ResultStore;
@@ -156,7 +157,13 @@ impl Default for RunOptions {
 /// The orchestrator. Construct with [`Memento::new`], configure with the
 /// builder methods, execute with [`Memento::run`] or [`Memento::resume`].
 pub struct Memento {
-    exp_fn: Arc<ExpFn>,
+    /// The experiment registry tasks resolve against. [`Memento::new`]
+    /// installs a one-fallback registry (the pre-registry single
+    /// experiment); [`Memento::with_registry`] installs a named mapping.
+    registry: Arc<Registry>,
+    /// Run-level experiment selection: every row without its own `exp`
+    /// parameter targets this named entry.
+    exp: Option<String>,
     options: RunOptions,
     cache: Option<Arc<ResultCache>>,
     /// Cross-run result database ([`crate::store`]): when set (and no
@@ -181,11 +188,25 @@ pub struct Memento {
 
 impl Memento {
     /// Wraps an experiment function.
+    ///
+    /// Equivalent to [`Memento::with_registry`] over [`Registry::solo`]:
+    /// the function becomes the registry's unnamed fallback, every task
+    /// stays unnamed, and task ids are byte-identical to pre-registry
+    /// versions — existing caches, checkpoints, and stores keep restoring.
     pub fn new(
         exp_fn: impl Fn(&TaskContext) -> Result<Json, MementoError> + Send + Sync + 'static,
     ) -> Memento {
+        Memento::with_registry(Registry::solo(Arc::new(exp_fn)))
+    }
+
+    /// Wraps a named experiment [`Registry`]: each task resolves its own
+    /// entry (a reserved `exp` row parameter, the run-level
+    /// [`Memento::exp`] selection, or the registry's default), so one run
+    /// — on any backend — can mix experiments in a single matrix.
+    pub fn with_registry(registry: Registry) -> Memento {
         Memento {
-            exp_fn: Arc::new(exp_fn),
+            registry: Arc::new(registry),
+            exp: None,
             options: RunOptions::default(),
             cache: None,
             store: None,
@@ -297,6 +318,20 @@ impl Memento {
     /// [`RunSummary::events_coalesced`].
     pub fn event_capacity(self, capacity: usize) -> Self {
         self.event_channel(ChannelPolicy::Bounded { capacity: capacity.max(1) })
+    }
+
+    /// Selects the named experiment every task targets by default (rows
+    /// can still override it with their own reserved `exp` parameter).
+    /// The name is validated against the registry at launch; an unknown
+    /// name is a configuration error. On the CLI: `--exp NAME`.
+    pub fn exp(mut self, name: impl Into<String>) -> Self {
+        self.exp = Some(name.into());
+        self
+    }
+
+    /// The experiment registry this run resolves tasks against.
+    pub fn registry(&self) -> Arc<Registry> {
+        Arc::clone(&self.registry)
     }
 
     /// Experiment-code version; changing it invalidates cached results.
@@ -497,11 +532,28 @@ impl Memento {
         #[cfg(unix)]
         {
             if crate::ipc::worker::active() {
-                crate::ipc::worker::serve(Arc::clone(&self.exp_fn))?;
+                crate::ipc::worker::serve(Arc::clone(&self.registry))?;
                 std::process::exit(0);
             }
         }
         crate::config::validate::validate(matrix)?;
+        // A run-level experiment selection must name a registered entry;
+        // surfacing this from `launch` (not per-task at dispatch) makes a
+        // typo'd `.exp(..)` a configuration error, not a thousand typed
+        // task failures.
+        if let Some(name) = &self.exp {
+            if self.registry.get(name).is_none() {
+                return Err(MementoError::config(format!(
+                    "exp(\"{name}\") names an unregistered experiment \
+                     (registered: {})",
+                    if self.registry.names().is_empty() {
+                        "none".to_string()
+                    } else {
+                        self.registry.names().join(", ")
+                    }
+                )));
+            }
+        }
 
         // Cross-run store: register this run (label = checkpoint dir name
         // when available — that is the name `memento query --last-runs`
@@ -577,7 +629,15 @@ impl Memento {
                         flush_every,
                     )?,
                 };
-                Some(Arc::new(ck.storage_format(self.options.wire)))
+                let ck = ck.storage_format(self.options.wire);
+                if resuming {
+                    // Per-experiment version gate: a manifest that recorded
+                    // entry versions refuses to resume under a registry
+                    // whose shared entries drifted (the run-wide version
+                    // check above can't see per-entry salts).
+                    ck.verify_exps(&self.registry.versions())?;
+                }
+                Some(Arc::new(ck.with_exps(self.registry.versions())))
             }
         };
         if resuming && checkpoint.is_none() {
@@ -601,7 +661,8 @@ impl Memento {
         let (sink, rx) = Run::channel(self.options.events);
         let cancel = Arc::new(AtomicBool::new(false));
         let worker = RunWorker {
-            exp_fn: Arc::clone(&self.exp_fn),
+            registry: Arc::clone(&self.registry),
+            exp: self.exp.clone(),
             options: self.options.clone(),
             cache,
             notifier: self.notifier.clone(),
@@ -632,7 +693,9 @@ impl Memento {
 /// observes flows out through the event sink (typed [`RunEvent`]s), the
 /// gated notifier, and the shared metrics registry.
 struct RunWorker {
-    exp_fn: Arc<ExpFn>,
+    registry: Arc<Registry>,
+    /// Validated run-level experiment selection (see [`Memento::exp`]).
+    exp: Option<String>,
     options: RunOptions,
     cache: Option<Arc<ResultCache>>,
     notifier: Option<Arc<dyn NotificationProvider>>,
@@ -813,7 +876,22 @@ impl RunWorker {
         //
         // A restored task becomes a TaskFinished event without ever
         // entering the execution queue.
-        let raw_source: SpecSource = Box::new(expand::Expansion::new(self.matrix.clone()));
+        // Experiment annotation: every spec leaving the expansion carries
+        // its resolved [`ExpRef`] before anything hashes it, so cache
+        // probes, checkpoint records, and dispatch all see one identity.
+        // The precedence (row `exp` param → run-level `.exp(..)` →
+        // registry default) lives in [`Registry::annotate_spec`], shared
+        // with `memento expand`.
+        let raw_source: SpecSource = {
+            let registry = Arc::clone(&self.registry);
+            let run_exp = self.exp.clone();
+            let run_version = version.clone();
+            Box::new(
+                expand::Expansion::new(self.matrix.clone()).map(move |spec| {
+                    registry.annotate_spec(spec, run_exp.as_deref(), &run_version)
+                }),
+            )
+        };
         // First storage error hit by the restore filter (it runs inside
         // the pull path and cannot propagate `?` directly); surfaced after
         // dispatch so checkpoint write failures still fail the run, as
@@ -1333,7 +1411,7 @@ impl RunWorker {
         notifier: Option<Arc<dyn NotificationProvider>>,
         tracer: Option<Arc<Tracer>>,
     ) -> crate::coordinator::scheduler::Job {
-        let exp_fn = Arc::clone(&self.exp_fn);
+        let registry = Arc::clone(&self.registry);
         let cache = self.cache.clone();
         let metrics = Arc::clone(&self.metrics);
         let journal = self.journal.clone();
@@ -1347,6 +1425,46 @@ impl RunWorker {
             let sw = Stopwatch::start();
             let worker = thread_worker_id();
             metrics.tasks_total.inc();
+
+            // Resolve the task's experiment before anything runs. An
+            // unknown name has no function to call: fail typed
+            // immediately, skipping the retry loop (retrying cannot make
+            // a registration appear).
+            let exp_fn = match registry.resolve(spec.exp.as_ref()) {
+                Ok(f) => f,
+                Err(e) => {
+                    metrics.tasks_failed.inc();
+                    let failure = TaskFailure {
+                        kind: FailureKind::UnknownExperiment,
+                        message: e.to_string(),
+                        params: spec.param_strings(),
+                        attempts: 0,
+                    };
+                    if let Some(j) = &journal {
+                        j.record(&Event::TaskFailed {
+                            id: id.clone(),
+                            attempt: 0,
+                            message: failure.message.clone(),
+                        });
+                    }
+                    if let Some(ck) = &checkpoint {
+                        let _ = ck.record(&id, None, Some(&failure.message), 0.0, 0);
+                    }
+                    if let Some(n) = &notifier {
+                        n.notify(&Notification::TaskFailed { failure: failure.clone() });
+                    }
+                    return TaskOutcome {
+                        spec: spec.clone(),
+                        id,
+                        status: TaskStatus::Failed,
+                        value: None,
+                        failure: Some(failure),
+                        duration_secs: 0.0,
+                        from_cache: false,
+                        attempts: 0,
+                    };
+                }
+            };
 
             let progress_sink: Option<Arc<dyn Fn(&TaskId, &Json) + Send + Sync>> =
                 checkpoint.as_ref().map(|ck| {
@@ -1967,5 +2085,164 @@ mod tests {
         .unwrap();
         assert_eq!(executions.load(Ordering::SeqCst), 0, "all restored from manifest");
         assert_eq!(r.n_cached(), 6);
+    }
+
+    // ---- experiment registry ----------------------------------------------
+
+    fn two_exp_registry() -> Registry {
+        Registry::new()
+            .register("ten", "v1", "x*10", |ctx| Ok(Json::int(ctx.param_i64("x")? * 10)))
+            .register("neg", "v1", "-x", |ctx| Ok(Json::int(-ctx.param_i64("x")?)))
+    }
+
+    #[test]
+    fn registry_mixes_experiments_via_row_param() {
+        let matrix = ConfigMatrix::builder()
+            .param("exp", vec![pv_str("ten"), pv_str("neg")])
+            .param("x", vec![pv_int(1), pv_int(2)])
+            .build()
+            .unwrap();
+        let results = Memento::with_registry(two_exp_registry())
+            .workers(2)
+            .run(&matrix)
+            .unwrap();
+        assert_eq!(results.len(), 4);
+        assert_eq!(results.n_failed(), 0);
+        let ten2 = results
+            .find(&[("exp", pv_str("ten")), ("x", pv_int(2))])
+            .unwrap();
+        assert_eq!(ten2.value.as_ref().unwrap().as_i64(), Some(20));
+        let neg2 = results
+            .find(&[("exp", pv_str("neg")), ("x", pv_int(2))])
+            .unwrap();
+        assert_eq!(neg2.value.as_ref().unwrap().as_i64(), Some(-2));
+        // Every outcome's spec carries the reference it resolved.
+        for o in results.iter() {
+            let named = o.spec.exp.as_ref().expect("row-named specs carry ExpRef");
+            assert_eq!(
+                Some(named.name.as_str()),
+                o.spec.get("exp").and_then(|v| v.as_str())
+            );
+            assert_eq!(named.version, "v1");
+        }
+    }
+
+    #[test]
+    fn run_level_exp_selects_entry_for_all_tasks() {
+        let matrix = ConfigMatrix::builder()
+            .param("x", vec![pv_int(1), pv_int(3)])
+            .build()
+            .unwrap();
+        let results = Memento::with_registry(two_exp_registry())
+            .exp("neg")
+            .run(&matrix)
+            .unwrap();
+        assert_eq!(results.len(), 2);
+        assert_eq!(results.n_failed(), 0);
+        let hit = results.find(&[("x", pv_int(3))]).unwrap();
+        assert_eq!(hit.value.as_ref().unwrap().as_i64(), Some(-3));
+    }
+
+    #[test]
+    fn run_level_unknown_exp_is_config_error() {
+        let err = Memento::with_registry(two_exp_registry())
+            .exp("mystery")
+            .run(&small_matrix())
+            .unwrap_err();
+        assert!(err.to_string().contains("unregistered experiment"), "{err}");
+        assert!(err.to_string().contains("neg, ten"), "{err}");
+    }
+
+    #[test]
+    fn unknown_row_exp_fails_typed_without_retry() {
+        let matrix = ConfigMatrix::builder()
+            .param("exp", vec![pv_str("ten"), pv_str("mystery")])
+            .param("x", vec![pv_int(1)])
+            .build()
+            .unwrap();
+        let results = Memento::with_registry(two_exp_registry())
+            .with_retry(RetryPolicy::fixed(3, Duration::ZERO))
+            .run(&matrix)
+            .unwrap();
+        assert_eq!(results.len(), 2);
+        assert_eq!(results.n_failed(), 1);
+        let f = results.failures().next().unwrap().failure.clone().unwrap();
+        assert_eq!(f.kind, FailureKind::UnknownExperiment);
+        assert_eq!(f.attempts, 0, "no retry loop for an unresolvable task");
+        assert!(f.message.contains("unknown experiment 'mystery'"), "{}", f.message);
+    }
+
+    #[test]
+    fn registry_fallback_restores_pre_registry_cache() {
+        // The fingerprint-compatibility rule, enforced: a cache written by
+        // the pre-registry API (`Memento::new`) restores with zero
+        // executions under a registry run, because unnamed tasks hash
+        // exactly as they always did.
+        let td = TempDir::new("memento-reg-compat").unwrap();
+        let executions = Arc::new(AtomicUsize::new(0));
+        let ex = Arc::clone(&executions);
+        Memento::new(move |ctx| {
+            ex.fetch_add(1, Ordering::SeqCst);
+            Ok(Json::int(ctx.param_i64("a")?))
+        })
+        .with_cache_dir(td.join("cache"))
+        .run(&small_matrix())
+        .unwrap();
+        assert_eq!(executions.load(Ordering::SeqCst), 6);
+
+        let ex = Arc::clone(&executions);
+        let registry = Registry::new()
+            .register("other", "v1", "unused by this matrix", |_| Ok(Json::Null))
+            .register_default(move |ctx| {
+                ex.fetch_add(1, Ordering::SeqCst);
+                Ok(Json::int(ctx.param_i64("a")?))
+            });
+        let r2 = Memento::with_registry(registry)
+            .with_cache_dir(td.join("cache"))
+            .run(&small_matrix())
+            .unwrap();
+        assert_eq!(
+            executions.load(Ordering::SeqCst),
+            6,
+            "all restored, zero executions"
+        );
+        assert_eq!(r2.n_cached(), 6);
+    }
+
+    #[test]
+    fn entry_version_bump_invalidates_only_that_experiment() {
+        let td = TempDir::new("memento-entry-version").unwrap();
+        let matrix = ConfigMatrix::builder()
+            .param("exp", vec![pv_str("ten"), pv_str("neg")])
+            .param("x", vec![pv_int(1), pv_int(2)])
+            .build()
+            .unwrap();
+        let executions = Arc::new(AtomicUsize::new(0));
+        let run = |neg_version: &str| {
+            let e1 = Arc::clone(&executions);
+            let e2 = Arc::clone(&executions);
+            Memento::with_registry(
+                Registry::new()
+                    .register("ten", "v1", "x*10", move |ctx| {
+                        e1.fetch_add(1, Ordering::SeqCst);
+                        Ok(Json::int(ctx.param_i64("x")? * 10))
+                    })
+                    .register("neg", neg_version, "-x", move |ctx| {
+                        e2.fetch_add(1, Ordering::SeqCst);
+                        Ok(Json::int(-ctx.param_i64("x")?))
+                    }),
+            )
+            .with_cache_dir(td.join("cache"))
+            .run(&matrix)
+            .unwrap()
+        };
+        let r1 = run("v1");
+        assert_eq!(executions.load(Ordering::SeqCst), 4);
+        assert_eq!(r1.n_cached(), 0);
+        // Bumping only `neg`'s version re-executes only its two tasks.
+        let r2 = run("v2");
+        assert_eq!(executions.load(Ordering::SeqCst), 6, "ten stayed cached");
+        assert_eq!(r2.n_cached(), 2);
+        assert_eq!(r2.n_failed(), 0);
     }
 }

@@ -324,6 +324,7 @@ mod tests {
                 ("model".into(), pv_str(model)),
             ],
             index,
+            exp: None,
         };
         let id = spec.id("v1");
         TaskOutcome {
@@ -345,6 +346,7 @@ mod tests {
                 ("model".into(), pv_str("SVC")),
             ],
             index,
+            exp: None,
         };
         let id = spec.id("v1");
         TaskOutcome {

@@ -625,6 +625,7 @@ mod tests {
             .map(|i| TaskSpec {
                 params: vec![("i".to_string(), pv_int(i as i64))],
                 index: i,
+                exp: None,
             })
             .collect()
     }
@@ -932,7 +933,7 @@ mod tests {
         let c2 = Arc::clone(&consumed);
         let source = (0..10_000).map(move |i| {
             c2.fetch_add(1, Ordering::SeqCst);
-            TaskSpec { params: vec![("i".to_string(), pv_int(i as i64))], index: i }
+            TaskSpec { params: vec![("i".to_string(), pv_int(i as i64))], index: i, exp: None }
         });
         let c3 = Arc::clone(&consumed);
         let cafe = Arc::clone(&consumed_at_first_exec);

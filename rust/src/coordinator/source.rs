@@ -300,6 +300,7 @@ mod tests {
         Box::new((0..n).map(|i| TaskSpec {
             params: vec![("i".to_string(), pv_int(i as i64))],
             index: i,
+            exp: None,
         }))
     }
 

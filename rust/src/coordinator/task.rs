@@ -39,6 +39,18 @@ impl fmt::Display for TaskId {
     }
 }
 
+/// A named experiment reference carried by a task: which registered
+/// experiment executes it, and that experiment's version (the hash salt
+/// replacing the run-wide version for named tasks — see [`TaskSpec::id`]).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ExpRef {
+    /// Registered experiment name (see `crate::experiments::registry`).
+    pub name: String,
+    /// The experiment entry's version; bumping it invalidates cached
+    /// results of this experiment without touching any other entry's.
+    pub version: String,
+}
+
 /// A fully-assigned parameter combination.
 #[derive(Debug, Clone, PartialEq)]
 pub struct TaskSpec {
@@ -46,22 +58,40 @@ pub struct TaskSpec {
     pub params: Vec<(String, ParamValue)>,
     /// Position in the expansion order (stable for a given matrix).
     pub index: usize,
+    /// The named experiment this task targets. `None` means the implicit
+    /// single-experiment run (the pre-registry behavior): any worker can
+    /// execute it and the id hash stays byte-identical to what older
+    /// versions computed, so pre-registry caches/checkpoints restore.
+    pub exp: Option<ExpRef>,
 }
 
 impl TaskSpec {
-    /// Computes the task id. `version` salts the hash with the experiment
-    /// function's version so stale cache entries are never reused after a
-    /// code change (the §3 "update the code and rerun" workflow).
+    /// Computes the task id. For an unnamed task, `version` (the run-wide
+    /// experiment version) salts the hash so stale cache entries are never
+    /// reused after a code change (the §3 "update the code and rerun"
+    /// workflow) — and the hashed document is byte-identical to what
+    /// pre-registry versions produced, so their caches stay valid. For a
+    /// named task the experiment's own name and version salt the hash
+    /// instead: two registry entries never collide on the same params, and
+    /// bumping one entry's version invalidates only that experiment's
+    /// cached results.
     pub fn id(&self, version: &str) -> TaskId {
         let obj: BTreeMap<String, Json> = self
             .params
             .iter()
             .map(|(k, v)| (k.clone(), v.to_json()))
             .collect();
-        let doc = Json::obj(vec![
-            ("params", Json::Obj(obj)),
-            ("version", Json::str(version)),
-        ]);
+        let doc = match &self.exp {
+            None => Json::obj(vec![
+                ("params", Json::Obj(obj)),
+                ("version", Json::str(version)),
+            ]),
+            Some(e) => Json::obj(vec![
+                ("exp", Json::str(e.name.clone())),
+                ("params", Json::Obj(obj)),
+                ("version", Json::str(e.version.clone())),
+            ]),
+        };
         TaskId(sha256_hex(doc.canonical().as_bytes()))
     }
 
@@ -90,14 +120,21 @@ impl TaskSpec {
             .collect()
     }
 
-    /// Serializes the assignment as a JSON object.
+    /// Serializes the assignment as a JSON object. A named task also
+    /// carries its experiment name under the reserved `"exp"` key, so
+    /// cache entries and store records written for one experiment are
+    /// attributable (and queryable) by name; unnamed tasks serialize
+    /// exactly as pre-registry versions did.
     pub fn to_json(&self) -> Json {
-        Json::Obj(
-            self.params
-                .iter()
-                .map(|(k, v)| (k.clone(), v.to_json()))
-                .collect(),
-        )
+        let mut obj: BTreeMap<String, Json> = self
+            .params
+            .iter()
+            .map(|(k, v)| (k.clone(), v.to_json()))
+            .collect();
+        if let Some(e) = &self.exp {
+            obj.insert("exp".to_string(), Json::str(e.name.clone()));
+        }
+        Json::Obj(obj)
     }
 }
 
@@ -265,6 +302,7 @@ mod tests {
                 ("n".into(), pv_int(5)),
             ],
             index: 3,
+            exp: None,
         }
     }
 
@@ -284,6 +322,46 @@ mod tests {
         let mut c = spec();
         c.params[2].1 = pv_int(6);
         assert_ne!(a.id("v1"), c.id("v1"));
+    }
+
+    #[test]
+    fn unnamed_id_matches_pre_registry_hash_bytes() {
+        // The fingerprint compatibility rule: an unnamed task must hash
+        // exactly the document older versions hashed, so pre-registry
+        // caches and checkpoints restore with zero executions.
+        let legacy = r#"{"params":{"dataset":"wine","model":"SVC","n":5},"version":"v1"}"#;
+        assert_eq!(spec().id("v1").0, sha256_hex(legacy.as_bytes()));
+    }
+
+    #[test]
+    fn named_id_salts_with_exp_name_and_entry_version() {
+        let mut named = spec();
+        named.exp = Some(ExpRef { name: "echo".into(), version: "e1".into() });
+        // Diverges from the unnamed id regardless of the run version…
+        assert_ne!(named.id("v1"), spec().id("v1"));
+        // …ignores the run version entirely (the entry version is the salt)…
+        assert_eq!(named.id("v1"), named.id("v2"));
+        // …and changes with either the name or the entry version.
+        let mut other_name = named.clone();
+        other_name.exp.as_mut().unwrap().name = "grid".into();
+        assert_ne!(named.id("v1"), other_name.id("v1"));
+        let mut other_ver = named.clone();
+        other_ver.exp.as_mut().unwrap().version = "e2".into();
+        assert_ne!(named.id("v1"), other_ver.id("v1"));
+        // The named document is the same canonical shape with the exp keys.
+        let doc = r#"{"exp":"echo","params":{"dataset":"wine","model":"SVC","n":5},"version":"e1"}"#;
+        assert_eq!(named.id("v1").0, sha256_hex(doc.as_bytes()));
+    }
+
+    #[test]
+    fn to_json_carries_exp_name_only_when_named() {
+        assert_eq!(spec().to_json().get("exp"), None);
+        let mut named = spec();
+        named.exp = Some(ExpRef { name: "echo".into(), version: "e1".into() });
+        assert_eq!(
+            named.to_json().get("exp").and_then(|j| j.as_str()),
+            Some("echo")
+        );
     }
 
     #[test]

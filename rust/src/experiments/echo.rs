@@ -1,0 +1,95 @@
+//! A tiny built-in experiment: parameters in, parameters + deterministic
+//! content hash out.
+//!
+//! `echo` exists so tests, CI, and capability-negotiation scenarios can
+//! exercise the full pipeline — hashing, caching, checkpointing, all three
+//! backends, and the registry's named dispatch — without touching the ML
+//! grid. It accepts **any** parameter assignment; an optional `sleep_ms`
+//! parameter (or run-wide setting) makes task durations controllable for
+//! scheduler tests.
+
+use crate::coordinator::error::MementoError;
+use crate::coordinator::task::{sha256_hex, TaskContext};
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+
+/// Version of the built-in `echo` experiment — the id-hash salt of its
+/// named tasks (see [`crate::coordinator::task::TaskSpec::id`]).
+pub const ECHO_VERSION: &str = "v1";
+
+/// The `echo` experiment function: returns `{params, hash}` where `hash`
+/// is the SHA-256 of the canonical JSON of the parameter assignment —
+/// deterministic across runs, machines, and backends.
+pub fn echo_exp_fn(
+) -> impl Fn(&TaskContext) -> Result<Json, MementoError> + Send + Sync + 'static {
+    |ctx: &TaskContext| {
+        let sleep_ms = ctx
+            .spec
+            .get("sleep_ms")
+            .and_then(|v| v.as_i64())
+            .or_else(|| ctx.setting("sleep_ms").and_then(|j| j.as_i64()))
+            .unwrap_or(0);
+        if sleep_ms > 0 {
+            std::thread::sleep(std::time::Duration::from_millis(sleep_ms as u64));
+        }
+        let params = Json::Obj(
+            ctx.spec
+                .params
+                .iter()
+                .map(|(k, v)| (k.clone(), v.to_json()))
+                .collect::<BTreeMap<_, _>>(),
+        );
+        let hash = sha256_hex(params.canonical().as_bytes());
+        Ok(Json::obj(vec![("hash", Json::str(hash)), ("params", params)]))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::value::{pv_int, pv_str};
+    use crate::coordinator::task::{TaskContext, TaskSpec};
+    use std::sync::Arc;
+
+    fn run_echo(params: Vec<(String, crate::config::value::ParamValue)>) -> Json {
+        let spec = TaskSpec { params, index: 0, exp: None };
+        let id = spec.id("v1");
+        let ctx = TaskContext::new(
+            spec,
+            Arc::new(BTreeMap::new()),
+            0,
+            1,
+            id,
+            None,
+            None,
+        );
+        echo_exp_fn()(&ctx).unwrap()
+    }
+
+    #[test]
+    fn hash_is_deterministic_and_param_sensitive() {
+        let a = run_echo(vec![("x".into(), pv_int(1)), ("y".into(), pv_str("q"))]);
+        let b = run_echo(vec![("y".into(), pv_str("q")), ("x".into(), pv_int(1))]);
+        // Canonical hashing: declaration order must not matter.
+        assert_eq!(a.get("hash"), b.get("hash"));
+        let c = run_echo(vec![("x".into(), pv_int(2)), ("y".into(), pv_str("q"))]);
+        assert_ne!(a.get("hash"), c.get("hash"));
+        assert_eq!(a.get("hash").and_then(|h| h.as_str()).unwrap().len(), 64);
+        assert_eq!(
+            a.get("params").and_then(|p| p.get("x")).and_then(|v| v.as_i64()),
+            Some(1)
+        );
+    }
+
+    #[test]
+    fn sleep_ms_param_is_honored() {
+        let t0 = std::time::Instant::now();
+        let out = run_echo(vec![("sleep_ms".into(), pv_int(20))]);
+        assert!(t0.elapsed() >= std::time::Duration::from_millis(20));
+        // sleep_ms participates in the echoed params like any other.
+        assert_eq!(
+            out.get("params").and_then(|p| p.get("sleep_ms")).and_then(|v| v.as_i64()),
+            Some(20)
+        );
+    }
+}

@@ -22,6 +22,12 @@ use crate::util::json::Json;
 use crate::util::rng::Rng;
 use std::sync::Arc;
 
+/// Version of the built-in `grid` experiment as registered under its name
+/// — the id-hash salt of tasks that *name* `grid` (unnamed CLI runs keep
+/// salting with the run-wide `--version` instead, preserving pre-registry
+/// task ids).
+pub const GRID_VERSION: &str = "v1";
+
 /// The exact §3 matrix: 3×2×3×3 = 54 raw, 45 after exclusion.
 pub fn paper_matrix() -> ConfigMatrix {
     base_builder(vec!["AdaBoost", "RandomForest", "SVC"])

@@ -1,4 +1,10 @@
-//! Reusable experiment workloads: the paper's §3 demonstration grid wired
-//! as a library so examples, tests, and benches share one definition.
+//! Reusable experiment workloads and the named experiment registry.
+//!
+//! [`grid`] is the paper's §3 demonstration grid wired as a library so
+//! examples, tests, and benches share one definition; [`echo`] is the tiny
+//! smoke workload; [`registry`] maps experiment *names* to functions so a
+//! task — not a process — decides what it runs.
 
+pub mod echo;
 pub mod grid;
+pub mod registry;

@@ -1,0 +1,399 @@
+//! The named experiment registry: decouples *which experiment runs* from
+//! *which binary runs it*.
+//!
+//! Pre-registry, a process embedded exactly one [`ExpFn`] and every task
+//! implicitly meant "that function". The registry maps experiment **names**
+//! to [`ExpEntry`]s (function + version + description), so a *task* — via
+//! [`crate::coordinator::task::TaskSpec::exp`] — decides what it runs:
+//!
+//! - A run built with [`crate::coordinator::memento::Memento::with_registry`]
+//!   can mix experiments in one matrix (a reserved `exp` row parameter or a
+//!   run-level `.exp(name)` selection picks the entry per task).
+//! - A v5 worker advertises its registered names in its `Ready` handshake,
+//!   and the supervisor dispatches a named task only to a worker that
+//!   registered that name (see [`crate::ipc::supervisor`]).
+//! - Each entry carries its **own version** used as that experiment's
+//!   id-hash salt: bumping one entry's version invalidates only its cached
+//!   results, never a co-registered experiment's.
+//!
+//! The **fallback** entry preserves the pre-registry world: an unnamed task
+//! (`exp == None`) resolves to it, hashes with the run-wide version, and
+//! produces byte-identical task ids to older versions — which is why
+//! pre-registry caches, checkpoints, and stores restore with zero
+//! executions. [`Registry::solo`] (what `Memento::new` builds) is nothing
+//! but a fallback.
+
+use crate::coordinator::error::MementoError;
+use crate::coordinator::memento::ExpFn;
+use crate::coordinator::task::ExpRef;
+use crate::experiments::echo::{echo_exp_fn, ECHO_VERSION};
+use crate::experiments::grid::{grid_exp_fn, GRID_VERSION};
+use crate::runtime::artifact::ArtifactStore;
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+/// One registered experiment: its function, version, and a one-line
+/// description for `memento exps`.
+#[derive(Clone)]
+pub struct ExpEntry {
+    /// The experiment function executed for tasks naming this entry.
+    pub exp_fn: Arc<ExpFn>,
+    /// This experiment's version — the id-hash salt of its named tasks.
+    /// Bumping it invalidates this experiment's cached results only.
+    pub version: String,
+    /// Human-readable summary shown by `memento exps`.
+    pub description: String,
+}
+
+impl std::fmt::Debug for ExpEntry {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("ExpEntry")
+            .field("version", &self.version)
+            .field("description", &self.description)
+            .finish_non_exhaustive()
+    }
+}
+
+/// A name → experiment mapping plus an optional unnamed fallback (the
+/// pre-registry implicit single experiment). See the module docs.
+#[derive(Clone, Default)]
+pub struct Registry {
+    entries: BTreeMap<String, ExpEntry>,
+    fallback: Option<Arc<ExpFn>>,
+}
+
+impl std::fmt::Debug for Registry {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Registry")
+            .field("entries", &self.entries)
+            .field("fallback", &self.fallback.is_some())
+            .finish()
+    }
+}
+
+impl Registry {
+    /// An empty registry (no entries, no fallback).
+    pub fn new() -> Registry {
+        Registry::default()
+    }
+
+    /// A registry holding nothing but the unnamed fallback — the
+    /// pre-registry single-experiment world. This is what
+    /// [`crate::coordinator::memento::Memento::new`] builds, so existing
+    /// call sites keep their exact behavior (and task ids).
+    pub fn solo(exp_fn: Arc<ExpFn>) -> Registry {
+        Registry { entries: BTreeMap::new(), fallback: Some(exp_fn) }
+    }
+
+    /// Registers a named experiment (builder-style). Re-registering a name
+    /// replaces the previous entry.
+    pub fn register(
+        mut self,
+        name: impl Into<String>,
+        version: impl Into<String>,
+        description: impl Into<String>,
+        exp_fn: impl Fn(&crate::coordinator::task::TaskContext) -> Result<crate::util::json::Json, MementoError>
+            + Send
+            + Sync
+            + 'static,
+    ) -> Self {
+        self.entries.insert(
+            name.into(),
+            ExpEntry {
+                exp_fn: Arc::new(exp_fn),
+                version: version.into(),
+                description: description.into(),
+            },
+        );
+        self
+    }
+
+    /// Sets the unnamed fallback: the function unnamed (`exp == None`)
+    /// tasks resolve to, hashing with the run-wide version exactly as
+    /// pre-registry versions did.
+    pub fn register_default(
+        mut self,
+        exp_fn: impl Fn(&crate::coordinator::task::TaskContext) -> Result<crate::util::json::Json, MementoError>
+            + Send
+            + Sync
+            + 'static,
+    ) -> Self {
+        self.fallback = Some(Arc::new(exp_fn));
+        self
+    }
+
+    /// The built-in registry backing the CLI: the §3 `grid` (also the
+    /// unnamed fallback, so `memento run` without `--exp` keeps producing
+    /// pre-registry task ids and restores existing caches) and the `echo`
+    /// smoke experiment.
+    pub fn builtin(store: Option<Arc<ArtifactStore>>) -> Registry {
+        let grid: Arc<ExpFn> = Arc::new(grid_exp_fn(store));
+        let fallback = Arc::clone(&grid);
+        let mut entries = BTreeMap::new();
+        entries.insert(
+            "grid".to_string(),
+            ExpEntry {
+                exp_fn: grid,
+                version: GRID_VERSION.to_string(),
+                description: "paper §3 ML grid: k-fold CV over dataset × imputer × \
+                              preprocessor × model"
+                    .to_string(),
+            },
+        );
+        entries.insert(
+            "echo".to_string(),
+            ExpEntry {
+                exp_fn: Arc::new(echo_exp_fn()),
+                version: ECHO_VERSION.to_string(),
+                description: "params in → params + deterministic hash out (optional \
+                              sleep_ms); the smoke/CI workload"
+                    .to_string(),
+            },
+        );
+        Registry { entries, fallback: Some(fallback) }
+    }
+
+    /// Registered experiment names, sorted (what a v5 worker advertises in
+    /// its `Ready` handshake).
+    pub fn names(&self) -> Vec<String> {
+        self.entries.keys().cloned().collect()
+    }
+
+    /// The entry registered under `name`, if any.
+    pub fn get(&self, name: &str) -> Option<&ExpEntry> {
+        self.entries.get(name)
+    }
+
+    /// Iterates registered `(name, entry)` pairs in name order.
+    pub fn iter(&self) -> impl Iterator<Item = (&String, &ExpEntry)> {
+        self.entries.iter()
+    }
+
+    /// Number of named entries (the fallback does not count).
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    /// True when nothing is registered — no names and no fallback.
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty() && self.fallback.is_none()
+    }
+
+    /// True when an unnamed fallback is installed.
+    pub fn has_fallback(&self) -> bool {
+        self.fallback.is_some()
+    }
+
+    /// Name → version of every named entry (recorded in checkpoint
+    /// manifests so a resume can detect a version drift per experiment).
+    pub fn versions(&self) -> BTreeMap<String, String> {
+        self.entries
+            .iter()
+            .map(|(n, e)| (n.clone(), e.version.clone()))
+            .collect()
+    }
+
+    /// The [`ExpRef`] for a registered name, if present.
+    pub fn ref_for(&self, name: &str) -> Option<ExpRef> {
+        self.entries
+            .get(name)
+            .map(|e| ExpRef { name: name.to_string(), version: e.version.clone() })
+    }
+
+    /// The reference unnamed specs acquire by default: `None` while a
+    /// fallback exists (they stay unnamed and keep legacy hashing); the
+    /// sole entry's reference when exactly one experiment is registered
+    /// without a fallback; otherwise `None` (resolution then fails with a
+    /// clear error at dispatch).
+    pub fn default_ref(&self) -> Option<ExpRef> {
+        if self.fallback.is_some() || self.entries.len() != 1 {
+            return None;
+        }
+        let (name, entry) = self.entries.iter().next().expect("len checked");
+        Some(ExpRef { name: name.clone(), version: entry.version.clone() })
+    }
+
+    /// Resolves a task's experiment reference to its function. `None`
+    /// resolves to the fallback (or the sole named entry); an unknown name
+    /// is an [`MementoError::Experiment`] whose message lists what *is*
+    /// registered — the message surfaced by `unknown-experiment` task
+    /// failures.
+    pub fn resolve(&self, exp: Option<&ExpRef>) -> Result<Arc<ExpFn>, MementoError> {
+        match exp {
+            Some(e) => self
+                .entries
+                .get(&e.name)
+                .map(|entry| Arc::clone(&entry.exp_fn))
+                .ok_or_else(|| {
+                    MementoError::experiment(format!(
+                        "unknown experiment '{}' (registered: {})",
+                        e.name,
+                        self.describe_names()
+                    ))
+                }),
+            None => {
+                if let Some(f) = &self.fallback {
+                    return Ok(Arc::clone(f));
+                }
+                if self.entries.len() == 1 {
+                    let entry = self.entries.values().next().expect("len checked");
+                    return Ok(Arc::clone(&entry.exp_fn));
+                }
+                Err(MementoError::experiment(format!(
+                    "task names no experiment and the registry has no fallback \
+                     (registered: {})",
+                    self.describe_names()
+                )))
+            }
+        }
+    }
+
+    /// A registry restricted to `names` (plus the fallback, which serves
+    /// only unnamed tasks) — what `memento serve --exps a,b` builds so a
+    /// standing worker advertises and serves a subset of its binary's
+    /// experiments. Unknown names are a config error.
+    pub fn subset(&self, names: &[String]) -> Result<Registry, MementoError> {
+        let mut entries = BTreeMap::new();
+        for name in names {
+            let entry = self.entries.get(name).ok_or_else(|| {
+                MementoError::config(format!(
+                    "--exps names unknown experiment '{name}' (registered: {})",
+                    self.describe_names()
+                ))
+            })?;
+            entries.insert(name.clone(), entry.clone());
+        }
+        Ok(Registry { entries, fallback: self.fallback.clone() })
+    }
+
+    /// Annotates a freshly expanded spec with its resolved [`ExpRef`] —
+    /// the one place the "which experiment is this task?" precedence
+    /// lives, shared by the run pipeline and `memento expand`:
+    ///
+    /// 1. the row's reserved `exp` parameter, else
+    /// 2. the run-level selection (`Memento::exp` / `--exp`), else
+    /// 3. [`Registry::default_ref`] (unnamed while a fallback exists — the
+    ///    pre-registry hash-compatible path).
+    ///
+    /// An unknown name is carried through salted with the run version so
+    /// dispatch can fail it as a typed unknown-experiment failure instead
+    /// of silently running other code against it.
+    pub fn annotate_spec(
+        &self,
+        mut spec: crate::coordinator::task::TaskSpec,
+        run_exp: Option<&str>,
+        run_version: &str,
+    ) -> crate::coordinator::task::TaskSpec {
+        let chosen = spec
+            .get("exp")
+            .and_then(|v| v.as_str())
+            .map(|s| s.to_string())
+            .or_else(|| run_exp.map(|s| s.to_string()));
+        spec.exp = match chosen {
+            Some(name) => Some(match self.ref_for(&name) {
+                Some(r) => r,
+                None => ExpRef { name, version: run_version.to_string() },
+            }),
+            None => self.default_ref(),
+        };
+        spec
+    }
+
+    fn describe_names(&self) -> String {
+        if self.entries.is_empty() {
+            "none".to_string()
+        } else {
+            self.names().join(", ")
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::value::pv_int;
+    use crate::coordinator::task::{TaskContext, TaskSpec};
+    use crate::util::json::Json;
+
+    fn ctx() -> TaskContext {
+        let spec = TaskSpec {
+            params: vec![("x".into(), pv_int(7))],
+            index: 0,
+            exp: None,
+        };
+        let id = spec.id("v1");
+        TaskContext::new(
+            spec,
+            Arc::new(BTreeMap::new()),
+            0,
+            1,
+            id,
+            None,
+            None,
+        )
+    }
+
+    #[test]
+    fn builtin_registers_grid_and_echo_with_fallback() {
+        let r = Registry::builtin(None);
+        assert_eq!(r.names(), vec!["echo".to_string(), "grid".to_string()]);
+        assert!(r.has_fallback());
+        assert_eq!(r.len(), 2);
+        assert!(!r.is_empty());
+        // Unnamed tasks keep resolving (to the grid fallback).
+        assert!(r.resolve(None).is_ok());
+        let echo = r.ref_for("echo").unwrap();
+        assert_eq!(echo.version, ECHO_VERSION);
+        let f = r.resolve(Some(&echo)).unwrap();
+        assert!(f(&ctx()).unwrap().get("hash").is_some());
+    }
+
+    #[test]
+    fn unknown_name_error_lists_registered() {
+        let r = Registry::builtin(None);
+        let bad = ExpRef { name: "nope".into(), version: "v1".into() };
+        let err = r.resolve(Some(&bad)).unwrap_err().to_string();
+        assert!(err.contains("unknown experiment 'nope'"), "{err}");
+        assert!(err.contains("echo, grid"), "{err}");
+    }
+
+    #[test]
+    fn solo_is_fallback_only() {
+        let r = Registry::solo(Arc::new(|_: &TaskContext| Ok(Json::int(1))));
+        assert!(r.names().is_empty());
+        assert!(r.has_fallback());
+        assert!(!r.is_empty());
+        assert!(r.resolve(None).is_ok());
+        assert!(r.default_ref().is_none(), "solo tasks stay unnamed");
+    }
+
+    #[test]
+    fn single_entry_without_fallback_auto_resolves() {
+        let r = Registry::new().register("only", "v9", "the one", |_| Ok(Json::int(2)));
+        let d = r.default_ref().unwrap();
+        assert_eq!(d.name, "only");
+        assert_eq!(d.version, "v9");
+        assert!(r.resolve(None).is_ok());
+        // Two entries and no fallback: unnamed resolution must fail.
+        let r2 = r.register("other", "v1", "another", |_| Ok(Json::int(3)));
+        assert!(r2.default_ref().is_none());
+        assert!(r2.resolve(None).is_err());
+    }
+
+    #[test]
+    fn subset_restricts_names_and_rejects_unknown() {
+        let r = Registry::builtin(None);
+        let s = r.subset(&["echo".to_string()]).unwrap();
+        assert_eq!(s.names(), vec!["echo".to_string()]);
+        assert!(s.has_fallback(), "fallback still serves unnamed tasks");
+        assert!(s.resolve(Some(&ExpRef { name: "grid".into(), version: "v1".into() })).is_err());
+        assert!(r.subset(&["mystery".to_string()]).is_err());
+    }
+
+    #[test]
+    fn versions_map_names_entry_versions() {
+        let v = Registry::builtin(None).versions();
+        assert_eq!(v.get("echo").map(String::as_str), Some(ECHO_VERSION));
+        assert_eq!(v.get("grid").map(String::as_str), Some(GRID_VERSION));
+    }
+}

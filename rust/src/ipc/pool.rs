@@ -86,6 +86,12 @@ pub struct Registration {
     /// the one-way handshake latency). `None` for pre-v4 workers, whose
     /// exec timestamps are synthesized supervisor-side instead.
     pub clock_offset_us: Option<i64>,
+    /// The named experiments this worker's registry advertised in `Ready`
+    /// (v5+). `None` for pre-v5 workers; the supervisor routes only
+    /// *unnamed* tasks to those. `Some(vec![])` is a v5 worker that
+    /// registers no names — same routing, but declared rather than
+    /// assumed.
+    pub exps: Option<Vec<String>>,
 }
 
 struct PoolState {
@@ -278,7 +284,7 @@ impl PoolShared {
             Ok(Some(m)) => m,
             _ => return, // silent/garbled connection: drop without ceremony
         };
-        let Msg::Ready { worker, pid, protocol, token, clock_us, .. } = ready else {
+        let Msg::Ready { worker, pid, protocol, token, clock_us, exps, .. } = ready else {
             return;
         };
         let clock_offset_us =
@@ -326,6 +332,7 @@ impl PoolShared {
             pid,
             protocol,
             clock_offset_us,
+            exps,
         });
         drop(state);
         self.cv.notify_one();
@@ -355,6 +362,11 @@ mod tests {
                 protocol,
                 token: token.map(|t| t.to_string()),
                 clock_us: if protocol >= 4 { Some(1) } else { None },
+                exps: if protocol >= 5 {
+                    Some(vec!["echo".to_string()])
+                } else {
+                    None
+                },
             },
         )
         .unwrap();
@@ -381,6 +393,11 @@ mod tests {
         assert_eq!(reg.member, 1);
         assert_eq!(reg.protocol, PROTOCOL_VERSION);
         assert!(reg.clock_offset_us.is_some(), "v4 ready carries a clock sample");
+        assert_eq!(
+            reg.exps.as_deref(),
+            Some(&["echo".to_string()][..]),
+            "v5 ready carries the capability list"
+        );
         assert_eq!(pool.registered_count(), 1);
         assert_eq!(pool.rejected_count(), 0);
     }
@@ -394,6 +411,7 @@ mod tests {
         let reg = pool.lease(Duration::from_secs(5)).expect("v2 worker registers");
         assert_eq!(reg.protocol, MIN_PROTOCOL_VERSION);
         assert_eq!(reg.clock_offset_us, None, "pre-v4 ready has no clock sample");
+        assert_eq!(reg.exps, None, "pre-v5 ready has no capability list");
         assert_eq!(pool.rejected_count(), 0);
     }
 

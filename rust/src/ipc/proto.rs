@@ -69,8 +69,16 @@ use std::io::{self, Read, Write};
 /// boundaries. Pre-v4 readers ignore unknown JSON keys and the binary
 /// codec is self-describing, so v2/v3 peers interoperate unchanged —
 /// the supervisor synthesizes exec timestamps from `duration_secs`
-/// when a peer omits them.
-pub const PROTOCOL_VERSION: u64 = 4;
+/// when a peer omits them. v5 added the experiment-registry fields,
+/// all optional: `Ready` carries the experiment names the worker can
+/// serve (`exps`), `Task` names the experiment it targets
+/// (`exp`/`exp_version`), and `Outcome` gained the `unsupported`
+/// result shape for a name the worker does not register. A pre-v5
+/// peer emits and parses none of these — the supervisor treats such a
+/// worker as capable only of *unnamed* (single-experiment) tasks and
+/// never routes named work to it, so v2–v4 peers interoperate
+/// unchanged.
+pub const PROTOCOL_VERSION: u64 = 5;
 
 /// Oldest protocol version current code interoperates with. v2 peers
 /// lack binary payload support but are frame-compatible otherwise, so
@@ -99,6 +107,14 @@ pub enum WireResult {
         message: String,
         /// True when the failure was a contained panic.
         panicked: bool,
+    },
+    /// The worker does not register the experiment the task names
+    /// (v5+). A capability mismatch is a *dispatch* problem, not a
+    /// worker fault: the supervisor re-routes the attempt to a capable
+    /// worker without charging this worker's crash budget.
+    Unsupported {
+        /// Human-readable reason naming the missing experiment.
+        message: String,
     },
 }
 
@@ -133,6 +149,10 @@ pub enum Msg {
         /// exec timestamps land on the coordinator's timeline. `None`
         /// from pre-v4 peers.
         clock_us: Option<u64>,
+        /// The experiment names this worker's registry can serve (v5+).
+        /// `None` from pre-v5 peers, which the accepting side treats as
+        /// "unnamed tasks only" — it never routes a named task there.
+        exps: Option<Vec<String>>,
     },
     /// Clean departure: the worker is about to close this connection
     /// deliberately (rolling restart, per-connection task budget) and
@@ -204,6 +224,14 @@ pub enum Msg {
         params: Vec<(String, ParamValue)>,
         /// Progress restored from a previous attempt, if any.
         restored: Option<Json>,
+        /// Name of the registered experiment this task targets (v5+).
+        /// `None` means the unnamed single-experiment workload — the
+        /// only shape a pre-v5 worker can be sent.
+        exp: Option<String>,
+        /// The named experiment's registered version — the id-hash salt
+        /// the worker must use for a named task (v5+; `None` iff `exp`
+        /// is `None`, in which case the run-wide version salts the id).
+        exp_version: Option<String>,
     },
     /// Orderly termination; the worker drains and exits (standing remote
     /// workers treat this as end-of-run and reconnect for the next one).
@@ -221,7 +249,7 @@ impl Msg {
     /// Serializes the message to its wire JSON shape.
     pub fn to_json(&self) -> Json {
         match self {
-            Msg::Ready { worker, pid, spawn, protocol, token, clock_us } => {
+            Msg::Ready { worker, pid, spawn, protocol, token, clock_us, exps } => {
                 let mut fields = vec![
                     ("msg", Json::str("ready")),
                     ("worker", Json::int(*worker as i64)),
@@ -238,6 +266,12 @@ impl Msg {
                 ];
                 if let Some(clock) = clock_us {
                     fields.push(("clock_us", Json::int(*clock as i64)));
+                }
+                if let Some(names) = exps {
+                    fields.push((
+                        "exps",
+                        Json::Arr(names.iter().map(|n| Json::str(n.clone())).collect()),
+                    ));
                 }
                 Json::obj(fields)
             }
@@ -282,6 +316,11 @@ impl Msg {
                         fields.push(("message", Json::str(message.clone())));
                         fields.push(("panicked", Json::bool(*panicked)));
                     }
+                    WireResult::Unsupported { message } => {
+                        fields.push(("ok", Json::bool(false)));
+                        fields.push(("unsupported", Json::bool(true)));
+                        fields.push(("message", Json::str(message.clone())));
+                    }
                 }
                 Json::obj(fields)
             }
@@ -296,24 +335,30 @@ impl Msg {
                     ("wire", Json::str(wire.as_str())),
                 ])
             }
-            Msg::Task { index, attempt, params, restored } => Json::obj(vec![
-                ("msg", Json::str("task")),
-                ("index", Json::int(*index as i64)),
-                ("attempt", Json::int(*attempt as i64)),
-                (
-                    "params",
-                    Json::Arr(
-                        params
-                            .iter()
-                            .map(|(k, v)| Json::Arr(vec![Json::str(k.clone()), v.to_json()]))
-                            .collect(),
+            Msg::Task { index, attempt, params, restored, exp, exp_version } => {
+                let mut fields = vec![
+                    ("msg", Json::str("task")),
+                    ("index", Json::int(*index as i64)),
+                    ("attempt", Json::int(*attempt as i64)),
+                    (
+                        "params",
+                        Json::Arr(
+                            params
+                                .iter()
+                                .map(|(k, v)| Json::Arr(vec![Json::str(k.clone()), v.to_json()]))
+                                .collect(),
+                        ),
                     ),
-                ),
-                (
-                    "restored",
-                    restored.clone().unwrap_or(Json::Null),
-                ),
-            ]),
+                    ("restored", restored.clone().unwrap_or(Json::Null)),
+                ];
+                if let Some(name) = exp {
+                    fields.push(("exp", Json::str(name.clone())));
+                }
+                if let Some(ver) = exp_version {
+                    fields.push(("exp_version", Json::str(ver.clone())));
+                }
+                Json::obj(fields)
+            }
             Msg::Shutdown => Json::obj(vec![("msg", Json::str("shutdown"))]),
         }
     }
@@ -335,6 +380,14 @@ impl Msg {
                     .and_then(|t| t.as_str())
                     .map(|t| t.to_string()),
                 clock_us: u64_field("clock_us"),
+                // Absent on pre-v5 peers; non-string entries are dropped
+                // rather than failing the whole handshake frame.
+                exps: j.get("exps").and_then(|e| e.as_arr()).map(|arr| {
+                    arr.iter()
+                        .filter_map(|n| n.as_str())
+                        .map(|n| n.to_string())
+                        .collect()
+                }),
             }),
             "goodbye" => Some(Msg::Goodbye),
             "reject" => Some(Msg::Reject {
@@ -355,6 +408,14 @@ impl Msg {
             "outcome" => {
                 let result = if j.get("ok")?.as_bool()? {
                     WireResult::Ok { value: j.get("value")?.clone() }
+                } else if j
+                    .get("unsupported")
+                    .and_then(|u| u.as_bool())
+                    .unwrap_or(false)
+                {
+                    WireResult::Unsupported {
+                        message: j.get("message")?.as_str()?.to_string(),
+                    }
                 } else {
                     WireResult::Err {
                         message: j.get("message")?.as_str()?.to_string(),
@@ -400,6 +461,11 @@ impl Msg {
                     attempt: u64_field("attempt")?,
                     params,
                     restored,
+                    exp: j.get("exp").and_then(|e| e.as_str()).map(|e| e.to_string()),
+                    exp_version: j
+                        .get("exp_version")
+                        .and_then(|v| v.as_str())
+                        .map(|v| v.to_string()),
                 })
             }
             "shutdown" => Some(Msg::Shutdown),
@@ -409,7 +475,7 @@ impl Msg {
 
     /// Rebuilds the [`TaskSpec`] carried by a `Task` message.
     pub fn task_spec(index: u64, params: &[(String, ParamValue)]) -> TaskSpec {
-        TaskSpec { params: params.to_vec(), index: index as usize }
+        TaskSpec { params: params.to_vec(), index: index as usize, exp: None }
     }
 }
 
@@ -522,6 +588,7 @@ mod tests {
             protocol: PROTOCOL_VERSION,
             token: None,
             clock_us: None,
+            exps: None,
         }
     }
 
@@ -535,6 +602,7 @@ mod tests {
             protocol: PROTOCOL_VERSION,
             token: Some("s3cret".into()),
             clock_us: Some(123_456_789),
+            exps: Some(vec!["echo".into(), "grid".into()]),
         });
         roundtrip(Msg::Goodbye);
         roundtrip(Msg::Reject { reason: "auth token mismatch".into() });
@@ -576,8 +644,35 @@ mod tests {
                 ("lr".into(), pv_f64(0.5)),
             ],
             restored: Some(Json::int(3)),
+            exp: None,
+            exp_version: None,
         });
-        roundtrip(Msg::Task { index: 0, attempt: 1, params: vec![], restored: None });
+        roundtrip(Msg::Task {
+            index: 8,
+            attempt: 1,
+            params: vec![("x".into(), pv_int(1))],
+            restored: None,
+            exp: Some("echo".into()),
+            exp_version: Some("v1".into()),
+        });
+        roundtrip(Msg::Task {
+            index: 0,
+            attempt: 1,
+            params: vec![],
+            restored: None,
+            exp: None,
+            exp_version: None,
+        });
+        roundtrip(Msg::Outcome {
+            index: 5,
+            attempt: 1,
+            duration_secs: 0.0,
+            exec_start_us: None,
+            exec_end_us: None,
+            result: WireResult::Unsupported {
+                message: "experiment 'echo' not registered here".into(),
+            },
+        });
         roundtrip(Msg::Shutdown);
     }
 
@@ -588,6 +683,8 @@ mod tests {
             attempt: 1,
             params: vec![("z".into(), pv_int(1)), ("a".into(), pv_int(2))],
             restored: None,
+            exp: None,
+            exp_version: None,
         };
         let back = Msg::from_json(&msg.to_json()).unwrap();
         let Msg::Task { params, .. } = back else { panic!("not a task") };
@@ -714,6 +811,54 @@ mod tests {
         };
         assert_eq!(protocol, 3);
         assert_eq!(clock_us, None);
+    }
+
+    #[test]
+    fn v4_ready_without_exps_parses_with_none() {
+        // A v4 worker advertises no capability list; the supervisor
+        // must treat it as "unnamed tasks only", not reject it.
+        let doc = parse(r#"{"msg":"ready","worker":1,"pid":2,"spawn":0,"protocol":4}"#).unwrap();
+        let Some(Msg::Ready { protocol, exps, .. }) = Msg::from_json(&doc) else {
+            panic!("v4 ready must parse");
+        };
+        assert_eq!(protocol, 4);
+        assert_eq!(exps, None);
+    }
+
+    #[test]
+    fn v4_task_without_exp_parses_with_none() {
+        let doc = parse(
+            r#"{"msg":"task","index":3,"attempt":1,"params":[["x",1]],"restored":null}"#,
+        )
+        .unwrap();
+        let Some(Msg::Task { exp, exp_version, .. }) = Msg::from_json(&doc) else {
+            panic!("v4 task must parse");
+        };
+        assert_eq!(exp, None);
+        assert_eq!(exp_version, None);
+    }
+
+    #[test]
+    fn unsupported_outcome_is_distinct_from_err() {
+        // An ok:false outcome without the unsupported marker must stay
+        // an Err (v4 workers never send the marker), and with it must
+        // parse as Unsupported.
+        let doc = parse(
+            r#"{"msg":"outcome","index":1,"attempt":1,"duration_secs":0.0,"ok":false,"message":"m","panicked":false}"#,
+        )
+        .unwrap();
+        let Some(Msg::Outcome { result, .. }) = Msg::from_json(&doc) else {
+            panic!("outcome must parse");
+        };
+        assert_eq!(result, WireResult::Err { message: "m".into(), panicked: false });
+        let doc = parse(
+            r#"{"msg":"outcome","index":1,"attempt":1,"duration_secs":0.0,"ok":false,"unsupported":true,"message":"no echo"}"#,
+        )
+        .unwrap();
+        let Some(Msg::Outcome { result, .. }) = Msg::from_json(&doc) else {
+            panic!("outcome must parse");
+        };
+        assert_eq!(result, WireResult::Unsupported { message: "no echo".into() });
     }
 
     #[test]

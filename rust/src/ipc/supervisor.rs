@@ -259,6 +259,58 @@ struct Attempt {
     attempt: u32,
     /// Retry backoff: not dispatchable before this instant.
     ready_at: Option<Instant>,
+    /// Capability re-routes so far for *this* attempt number: bumped when
+    /// a worker answers `Unsupported` and the dispatch is returned to the
+    /// queue without consuming the attempt. One re-route is allowed; a
+    /// second mismatch fails the task with
+    /// [`FailureKind::UnknownExperiment`] instead of ping-ponging.
+    deferrals: u32,
+}
+
+/// Bound on incompatible *fresh* pulls one `next_task` search parks in
+/// the pending queue before giving up and waiting: keeps a slot whose
+/// worker serves none of the upcoming specs from eagerly enumerating the
+/// whole lazy source looking for one it can run.
+const MAX_DEFERRED_PULLS: usize = 16;
+
+/// What a slot's current worker can serve, for capability-aware dispatch.
+#[derive(Clone, Copy)]
+enum SlotCaps<'a> {
+    /// No connection yet: the slot will acquire a fresh worker before
+    /// dispatching, so it is treated as able to serve anything. (Pool
+    /// leases are FIFO, so the worker that actually arrives may still
+    /// turn out incapable — the dispatch is then re-routed before the
+    /// frame is written; see `slot_loop`.)
+    Acquiring,
+    /// A held connection's advertised capability list. `None` is a
+    /// pre-v5 worker: it can be sent *unnamed* tasks only.
+    Has(Option<&'a [String]>),
+}
+
+impl SlotCaps<'_> {
+    /// Whether a task targeting `exp` (`None` = unnamed) may be
+    /// dispatched under these capabilities.
+    fn can_serve(&self, exp: Option<&str>) -> bool {
+        match exp {
+            None => true,
+            Some(name) => match self {
+                SlotCaps::Acquiring => true,
+                SlotCaps::Has(None) => false,
+                SlotCaps::Has(Some(list)) => list.iter().any(|n| n == name),
+            },
+        }
+    }
+}
+
+/// A slot's entry on the shared capability board (owned mirror of the
+/// [`SlotCaps`] the slot itself dispatches under), used by
+/// `fail_unservable` to detect tasks no live worker can run.
+#[derive(Clone)]
+enum CapEntry {
+    /// Between workers — may acquire a worker with any capabilities.
+    Acquiring,
+    /// Holding a connection that advertised this list (`None` = pre-v5).
+    Has(Option<Vec<String>>),
 }
 
 struct Queue {
@@ -306,6 +358,9 @@ struct Shared {
     mode: Mode,
     q: Mutex<Queue>,
     cv: Condvar,
+    /// Per-slot capability board (`None` = retired slot). Locked on its
+    /// own, never while holding `q` or `tasks`.
+    caps: Mutex<Vec<Option<CapEntry>>>,
     crashes: AtomicU32,
     respawns: AtomicU32,
     timeouts: AtomicU32,
@@ -317,8 +372,9 @@ struct Shared {
 
 /// What the spawn-mode acceptor routes to a slot: the handshaken stream,
 /// the Ready frame's spawn generation, the worker's declared protocol,
-/// and the estimated worker-clock offset (`None` for pre-v4 workers).
-type RoutedConn = (Box<dyn WireStream>, u64, u64, Option<i64>);
+/// the estimated worker-clock offset (`None` for pre-v4 workers), and
+/// the advertised experiment capabilities (`None` for pre-v5 workers).
+type RoutedConn = (Box<dyn WireStream>, u64, u64, Option<i64>, Option<Vec<String>>);
 
 /// A live worker: the connection halves, plus the child process handle
 /// when this supervisor spawned it (`None` for leased pool workers —
@@ -336,6 +392,10 @@ struct Conn {
     /// `None` for pre-v4 workers — their exec spans are synthesized from
     /// the outcome's `duration_secs` instead.
     clock_offset_us: Option<i64>,
+    /// Experiment names the worker's `Ready` advertised (v5+). `None` =
+    /// pre-v5 worker, which may only be sent unnamed tasks — it would
+    /// silently mis-hash (and mis-execute) a named one.
+    exps: Option<Vec<String>>,
 }
 
 /// Runs every spec the lazy `source` yields across `opts.workers` worker
@@ -389,6 +449,7 @@ pub fn run(
             live_slots: slots,
         }),
         cv: Condvar::new(),
+        caps: Mutex::new(vec![Some(CapEntry::Acquiring); slots]),
         crashes: AtomicU32::new(0),
         respawns: AtomicU32::new(0),
         timeouts: AtomicU32::new(0),
@@ -493,12 +554,12 @@ fn accept_loop(
         let _ = stream.set_stream_read_timeout(Some(Duration::from_secs(5)));
         let mut reader = stream;
         match read_frame(&mut reader) {
-            Ok(Some(Msg::Ready { worker, spawn, protocol, clock_us, .. })) => {
+            Ok(Some(Msg::Ready { worker, spawn, protocol, clock_us, exps, .. })) => {
                 // Offset sampled at receipt: error is bounded by the
                 // handshake's one-way latency (a local socket, so ~µs).
                 let offset = clock_us.map(|c| monotonic_us() as i64 - c as i64);
                 if let Some(tx) = routes.get(worker as usize) {
-                    let _ = tx.send((reader, spawn, protocol, offset));
+                    let _ = tx.send((reader, spawn, protocol, offset, exps));
                 }
             }
             _ => drop(reader),
@@ -517,7 +578,11 @@ fn slot_loop(sh: &Shared, slot: usize, rx: Option<Receiver<RoutedConn>>) {
     let mut spawn_seq: u64 = 0;
     sh.fleet_budget(slot, crashes_used);
     loop {
-        let att = match sh.next_task() {
+        let own = match &conn {
+            None => SlotCaps::Acquiring,
+            Some(c) => SlotCaps::Has(c.exps.as_deref()),
+        };
+        let att = match sh.next_task(own) {
             Next::Done => break,
             Next::Wait(d) => {
                 sh.wait_for_work(d);
@@ -543,7 +608,10 @@ fn slot_loop(sh: &Shared, slot: usize, rx: Option<Receiver<RoutedConn>>) {
                 Mode::Pool(pool) => lease_worker(sh, pool),
             };
             match acquired {
-                Ok(c) => conn = Some(c),
+                Ok(c) => {
+                    sh.set_caps(slot, CapEntry::Has(c.exps.clone()));
+                    conn = Some(c);
+                }
                 Err(e) => {
                     crashes_used += 1;
                     sh.fleet_budget(slot, crashes_used);
@@ -556,6 +624,19 @@ fn slot_loop(sh: &Shared, slot: usize, rx: Option<Receiver<RoutedConn>>) {
                     sh.give_back(att);
                     continue;
                 }
+            }
+        }
+        // The attempt may have been admitted while this slot was still
+        // acquiring (wildcard capabilities); the worker that actually
+        // arrived can be narrower — pool leases are FIFO, not matched.
+        // Return the attempt unconsumed rather than dispatch a named
+        // task the worker would refuse (or, pre-v5, silently mis-hash);
+        // the next search dispatches under the real capability list.
+        {
+            let held = SlotCaps::Has(conn.as_ref().unwrap().exps.as_deref());
+            if !held.can_serve(sh.task_exp(att.index).as_deref()) {
+                sh.give_back(att);
+                continue;
             }
         }
         match serve_attempt(sh, slot, conn.as_mut().unwrap(), att) {
@@ -572,6 +653,7 @@ fn slot_loop(sh: &Shared, slot: usize, rx: Option<Receiver<RoutedConn>>) {
                 // while idle. Reap and replace, but return the attempt
                 // unconsumed — the task was never touched.
                 let mut dead = conn.take().unwrap();
+                sh.set_caps(slot, CapEntry::Acquiring);
                 let status = reap(&mut dead);
                 crashes_used += 1;
                 sh.fleet_budget(slot, crashes_used);
@@ -589,12 +671,14 @@ fn slot_loop(sh: &Shared, slot: usize, rx: Option<Receiver<RoutedConn>>) {
                 // re-dispatch — no crash metric, no budget, no retry
                 // attempt consumed.
                 drop(conn.take());
+                sh.set_caps(slot, CapEntry::Acquiring);
                 sh.give_back(att);
             }
             Serve::Crashed => {
                 // Worker died (or desynced) after taking the task: this
                 // attempt is consumed and goes through the retry policy.
                 let mut dead = conn.take().unwrap();
+                sh.set_caps(slot, CapEntry::Acquiring);
                 let status = reap(&mut dead);
                 crashes_used += 1;
                 sh.fleet_budget(slot, crashes_used);
@@ -618,6 +702,7 @@ fn slot_loop(sh: &Shared, slot: usize, rx: Option<Receiver<RoutedConn>>) {
                 // retry policy. Deliberate stops are the *task's* fault:
                 // no crash budget is consumed.
                 let mut dead = conn.take().unwrap();
+                sh.set_caps(slot, CapEntry::Acquiring);
                 let status = reap(&mut dead);
                 sh.timeouts.fetch_add(1, Ordering::SeqCst);
                 let budget = sh.opts.task_timeout.unwrap_or_default();
@@ -639,6 +724,7 @@ fn slot_loop(sh: &Shared, slot: usize, rx: Option<Receiver<RoutedConn>>) {
                 // latency is bounded by heartbeats, not by the attempt's
                 // duration. Deliberate stops don't consume crash budget.
                 let mut dead = conn.take().unwrap();
+                sh.set_caps(slot, CapEntry::Acquiring);
                 let _ = write_frame_as(&mut dead.writer, &Msg::Shutdown, dead.wire);
                 let deadline = Instant::now() + sh.opts.heartbeat;
                 while Instant::now() < deadline {
@@ -709,6 +795,12 @@ fn serve_attempt(sh: &Shared, slot: usize, conn: &mut Conn, att: Attempt) -> Ser
         attempt: att.attempt as u64,
         params: spec.params.clone(),
         restored,
+        // Named tasks carry their target and its registered version so
+        // the worker salts the id exactly as the supervisor did.
+        // Capability routing keeps named tasks away from pre-v5 workers,
+        // which would ignore these keys.
+        exp: spec.exp.as_ref().map(|e| e.name.clone()),
+        exp_version: spec.exp.as_ref().map(|e| e.version.clone()),
     };
     let sent_at = Instant::now();
     // A previous attempt's deadline handling may have shortened the read
@@ -827,6 +919,12 @@ fn serve_attempt(sh: &Shared, slot: usize, conn: &mut Conn, att: Attempt) -> Ser
                         message,
                         duration_secs,
                     ),
+                    // Capability mismatch: the worker refused the task
+                    // without executing it. Not the worker's fault (the
+                    // connection stays; no crash budget) and not a
+                    // consumed attempt — re-route once to a capable
+                    // worker, then fail explicitly rather than ping-pong.
+                    WireResult::Unsupported { message } => sh.attempt_unsupported(att, message),
                 }
                 return Serve::Completed;
             }
@@ -915,6 +1013,7 @@ fn lease_worker(sh: &Shared, pool: &Arc<WorkerPool>) -> Result<Conn, MementoErro
             writer,
             wire,
             clock_offset_us: reg.clock_offset_us,
+            exps: reg.exps,
         });
     }
 }
@@ -951,7 +1050,7 @@ fn spawn_worker(
     // slot already gave up on it) is discarded here instead of being
     // mistaken for the fresh worker.
     let deadline = Instant::now() + sh.opts.connect_timeout;
-    let (stream, peer_protocol, clock_offset_us) = loop {
+    let (stream, peer_protocol, clock_offset_us, exps) = loop {
         let remaining = deadline.saturating_duration_since(Instant::now());
         if remaining.is_zero() {
             let _ = child.kill();
@@ -962,7 +1061,9 @@ fn spawn_worker(
             )));
         }
         match rx.recv_timeout(remaining) {
-            Ok((s, spawn, protocol, offset)) if spawn == spawn_seq => break (s, protocol, offset),
+            Ok((s, spawn, protocol, offset, exps)) if spawn == spawn_seq => {
+                break (s, protocol, offset, exps)
+            }
             Ok(_) => continue, // stale incarnation; drop its stream
             Err(RecvTimeoutError::Timeout) | Err(RecvTimeoutError::Disconnected) => {
                 let _ = child.kill();
@@ -998,7 +1099,7 @@ fn spawn_worker(
         let _ = child.wait();
         return Err(MementoError::ipc(format!("send hello: {e}")));
     }
-    Ok(Conn { child: Some(child), reader: stream, writer, wire, clock_offset_us })
+    Ok(Conn { child: Some(child), reader: stream, writer, wire, clock_offset_us, exps })
 }
 
 // ---- shared queue operations -------------------------------------------
@@ -1085,6 +1186,19 @@ impl Shared {
         tasks.get(index).map(|t| (t.spec.index, t.id.clone()))
     }
 
+    /// The experiment name a pulled task targets (`None` = unnamed).
+    fn task_exp(&self, index: usize) -> Option<String> {
+        let tasks = self.tasks.lock().unwrap();
+        tasks
+            .get(index)
+            .and_then(|t| t.spec.exp.as_ref().map(|e| e.name.clone()))
+    }
+
+    /// Publishes a slot's current worker capabilities to the board.
+    fn set_caps(&self, slot: usize, entry: CapEntry) {
+        self.caps.lock().unwrap()[slot] = Some(entry);
+    }
+
     fn pulled_count(&self) -> usize {
         self.tasks.lock().unwrap().len()
     }
@@ -1134,7 +1248,7 @@ impl Shared {
         }
     }
 
-    fn next_task(&self) -> Next {
+    fn next_task(&self, own: SlotCaps<'_>) -> Next {
         let stopping = {
             let mut q = self.q.lock().unwrap();
             let stop = q.abort || self.cancelled();
@@ -1154,12 +1268,21 @@ impl Shared {
                 self.cv.notify_all();
             }
             if !stop {
-                // Retry attempts first — they are older work.
+                // Retry attempts first — they are older work. Only
+                // attempts this slot's worker can actually serve are
+                // eligible; incompatible ones stay queued for a capable
+                // slot (`fail_unservable` catches the case where none
+                // exists).
                 let now = Instant::now();
-                let ready = q
-                    .pending
-                    .iter()
-                    .position(|a| a.ready_at.map(|t| t <= now).unwrap_or(true));
+                let ready = {
+                    let tasks = self.tasks.lock().unwrap();
+                    q.pending.iter().position(|a| {
+                        a.ready_at.map(|t| t <= now).unwrap_or(true)
+                            && own.can_serve(
+                                tasks[a.index].spec.exp.as_ref().map(|e| e.name.as_str()),
+                            )
+                    })
+                };
                 if let Some(pos) = ready {
                     let att = q.pending.remove(pos).unwrap();
                     q.in_flight += 1;
@@ -1170,16 +1293,49 @@ impl Shared {
         };
 
         if !stopping {
-            // Fresh work, pulled lazily from the expansion stream.
-            if let Some(index) = self.pull_fresh() {
+            // Fresh work, pulled lazily from the expansion stream. A pull
+            // this slot's worker cannot serve is parked in the pending
+            // queue for a capable slot — bounded per search so one narrow
+            // worker cannot eagerly enumerate the whole source.
+            let mut deferred = 0usize;
+            while deferred < MAX_DEFERRED_PULLS {
+                let Some(index) = self.pull_fresh() else { break };
+                let servable_here = {
+                    let tasks = self.tasks.lock().unwrap();
+                    own.can_serve(tasks[index].spec.exp.as_ref().map(|e| e.name.as_str()))
+                };
+                if servable_here {
+                    let mut q = self.q.lock().unwrap();
+                    q.in_flight += 1;
+                    return Next::Run(Attempt {
+                        index,
+                        attempt: 1,
+                        ready_at: None,
+                        deferrals: 0,
+                    });
+                }
+                deferred += 1;
                 let mut q = self.q.lock().unwrap();
-                q.in_flight += 1;
-                return Next::Run(Attempt { index, attempt: 1, ready_at: None });
+                q.pending.push_back(Attempt {
+                    index,
+                    attempt: 1,
+                    ready_at: None,
+                    deferrals: 0,
+                });
+                drop(q);
+                self.cv.notify_all();
             }
         } else if !self.cancelled() && self.q.lock().unwrap().abort {
             // Idempotent: DrainOnceSource latches the drain, so waiting
             // slots re-entering here cannot multiply the bound.
             self.drain_source_as_skipped();
+        }
+
+        // Before settling into a wait, fail any queued work no live
+        // worker registers — otherwise a named task whose only capable
+        // worker departed would sit in `pending` forever.
+        if !stopping {
+            self.fail_unservable();
         }
 
         let q = self.q.lock().unwrap();
@@ -1303,6 +1459,9 @@ impl Shared {
                 index: att.index,
                 attempt: att.attempt + 1,
                 ready_at: (!delay.is_zero()).then(|| Instant::now() + delay),
+                // A genuine attempt ran; the capability re-route counter
+                // starts fresh for the next one.
+                deferrals: 0,
             });
             q.in_flight -= 1;
             self.cv.notify_all();
@@ -1314,6 +1473,125 @@ impl Shared {
         let outcome = self.failed_outcome(att.index, kind, message, duration_secs, att.attempt);
         self.finish(outcome, true);
         self.release_task(att.index);
+    }
+
+    /// The worker answered `Unsupported`: it does not register the
+    /// experiment the task names and executed nothing. Not a worker
+    /// fault and not a consumed attempt — re-route once to a capable
+    /// slot (the compatible-scan in [`Shared::next_task`] steers it
+    /// there), then fail with a typed, explicit outcome instead of
+    /// ping-ponging between mismatched workers.
+    fn attempt_unsupported(&self, att: Attempt, message: String) {
+        if att.deferrals == 0 {
+            let mut q = self.q.lock().unwrap();
+            q.pending.push_front(Attempt {
+                index: att.index,
+                attempt: att.attempt,
+                ready_at: None,
+                deferrals: att.deferrals + 1,
+            });
+            q.in_flight -= 1;
+            drop(q);
+            self.cv.notify_all();
+            return;
+        }
+        let message = format!("capability mismatch persisted after a re-route: {message}");
+        if let Some(j) = &self.hooks.journal {
+            if let Some((_, id)) = self.task_brief(att.index) {
+                j.record(&Event::TaskFailed {
+                    id,
+                    attempt: att.attempt,
+                    message: message.clone(),
+                });
+            }
+        }
+        let outcome = self.failed_outcome(
+            att.index,
+            FailureKind::UnknownExperiment,
+            message,
+            0.0,
+            att.attempt,
+        );
+        self.finish(outcome, true);
+        self.release_task(att.index);
+    }
+
+    /// Fails every pending attempt that targets an experiment no live
+    /// worker registers — the explicit, journaled alternative to letting
+    /// such work wait forever once its only capable worker departed.
+    /// Conservative on purpose: while any slot is between workers
+    /// (`Acquiring`), the next acquisition could serve anything, so
+    /// nothing is failed.
+    fn fail_unservable(&self) {
+        // Snapshot the board first — `caps` is never locked while `q` or
+        // `tasks` is held (and vice versa), so the order here is free of
+        // cycles.
+        let lists: Vec<Vec<String>> = {
+            let caps = self.caps.lock().unwrap();
+            if caps
+                .iter()
+                .any(|c| matches!(c, Some(CapEntry::Acquiring)))
+            {
+                return;
+            }
+            caps.iter()
+                .filter_map(|c| match c {
+                    Some(CapEntry::Has(Some(list))) => Some(list.clone()),
+                    _ => None,
+                })
+                .collect()
+        };
+        let victims: Vec<(Attempt, String)> = {
+            let mut q = self.q.lock().unwrap();
+            if q.abort || q.pending.is_empty() {
+                return;
+            }
+            let tasks = self.tasks.lock().unwrap();
+            let mut keep = VecDeque::new();
+            let mut out = Vec::new();
+            while let Some(a) = q.pending.pop_front() {
+                let name = tasks
+                    .get(a.index)
+                    .and_then(|t| t.spec.exp.as_ref().map(|e| e.name.clone()));
+                match name {
+                    // Unnamed tasks are dispatchable to any worker.
+                    None => keep.push_back(a),
+                    Some(n) => {
+                        if lists.iter().any(|l| l.iter().any(|x| x == &n)) {
+                            keep.push_back(a);
+                        } else {
+                            out.push((a, n));
+                        }
+                    }
+                }
+            }
+            q.pending = keep;
+            out
+        };
+        for (att, name) in victims {
+            let message =
+                format!("no live worker registers experiment '{name}' (task unservable)");
+            if let Some(j) = &self.hooks.journal {
+                if let Some((_, id)) = self.task_brief(att.index) {
+                    j.record(&Event::TaskFailed {
+                        id,
+                        attempt: att.attempt,
+                        message: message.clone(),
+                    });
+                }
+            }
+            let outcome = self.failed_outcome(
+                att.index,
+                FailureKind::UnknownExperiment,
+                message,
+                0.0,
+                att.attempt.saturating_sub(1),
+            );
+            // Pending attempts are not in flight; `finish` still counts
+            // them toward completion so nothing is dropped.
+            self.finish(outcome, false);
+            self.release_task(att.index);
+        }
     }
 
     /// Cancel arrived while this attempt was executing and its worker was
@@ -1404,6 +1682,7 @@ impl Shared {
     /// slot out with work still pending fails that work explicitly —
     /// nothing is ever dropped on the floor.
     fn retire_slot(&self, slot: usize, crashes_used: u32) {
+        self.caps.lock().unwrap()[slot] = None;
         let mut q = self.q.lock().unwrap();
         q.live_slots -= 1;
         if crashes_used > self.opts.crash_budget {

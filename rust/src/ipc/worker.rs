@@ -27,8 +27,8 @@
 //! "long-running task" from "hung worker".
 
 use crate::coordinator::error::{panic_message, MementoError};
-use crate::coordinator::memento::ExpFn;
-use crate::coordinator::task::{task_seed, TaskContext, TaskId};
+use crate::coordinator::task::{task_seed, ExpRef, TaskContext, TaskId};
+use crate::experiments::registry::Registry;
 use crate::ipc::proto::{
     read_frame, write_frame_as, Msg, WireFormat, WireResult, MIN_PROTOCOL_VERSION,
     PROTOCOL_VERSION,
@@ -66,11 +66,11 @@ pub fn active() -> bool {
 /// If this process is a worker, serve tasks until shutdown and then
 /// **exit the process**; otherwise return immediately. Call this early in
 /// a binary that re-executes itself for process isolation.
-pub fn maybe_serve(exp_fn: Arc<ExpFn>) {
+pub fn maybe_serve(registry: Arc<Registry>) {
     if !active() {
         return;
     }
-    match serve(exp_fn) {
+    match serve(registry) {
         Ok(()) => std::process::exit(0),
         Err(e) => {
             eprintln!("memento worker: {e}");
@@ -86,7 +86,7 @@ pub fn maybe_serve(exp_fn: Arc<ExpFn>) {
 /// This is the **spawned-worker** entry: one connection, one run. For a
 /// standing worker that outlives runs and reconnects, use
 /// [`serve_remote`].
-pub fn serve(exp_fn: Arc<ExpFn>) -> Result<(), MementoError> {
+pub fn serve(registry: Arc<Registry>) -> Result<(), MementoError> {
     let endpoint_str = std::env::var(ENV_SOCKET)
         .map_err(|_| MementoError::ipc(format!("{ENV_SOCKET} not set")))?;
     let worker_id: u64 = std::env::var(ENV_WORKER_ID)
@@ -106,7 +106,7 @@ pub fn serve(exp_fn: Arc<ExpFn>) -> Result<(), MementoError> {
     // Spawned workers follow whatever format the supervisor negotiates in
     // its Hello — they are the same binary, so no cap is needed.
     let report =
-        serve_connection(stream, &exp_fn, worker_id, spawn, token, None, WireFormat::Binary)?;
+        serve_connection(stream, &registry, worker_id, spawn, token, None, WireFormat::Binary)?;
     match report.end {
         ConnEnd::Shutdown | ConnEnd::TaskLimit => Ok(()),
         ConnEnd::PreHelloEof => Err(MementoError::ipc("supervisor closed before hello")),
@@ -190,7 +190,7 @@ pub struct RemoteServeReport {
 /// plain thread — tests and `examples/remote_workers.rs` run "remote"
 /// workers in-process over loopback TCP this way.
 pub fn serve_remote(
-    exp_fn: Arc<ExpFn>,
+    registry: Arc<Registry>,
     endpoint: &Endpoint,
     opts: RemoteWorkerOptions,
 ) -> Result<RemoteServeReport, MementoError> {
@@ -237,7 +237,7 @@ pub fn serve_remote(
         spawn_gen += 1;
         let conn = serve_connection(
             stream,
-            &exp_fn,
+            &registry,
             opts.worker_id,
             spawn_gen,
             opts.token.clone(),
@@ -320,7 +320,7 @@ pub struct ConnReport {
 /// writes is JSON (which any peer can read).
 pub fn serve_connection(
     stream: Box<dyn WireStream>,
-    exp_fn: &Arc<ExpFn>,
+    registry: &Arc<Registry>,
     worker_id: u64,
     spawn: u64,
     token: Option<String>,
@@ -348,6 +348,11 @@ pub fn serve_connection(
             // offset estimate; worker-side exec timestamps in later
             // Outcome frames are on this same clock.
             clock_us: Some(monotonic_us()),
+            // Capability advertisement: the named experiments this
+            // registry serves. An empty list is meaningful — it says
+            // "unnamed tasks only", unlike a pre-v5 peer's absent field
+            // which the supervisor must *assume* means the same.
+            exps: Some(registry.names()),
         },
         WireFormat::Json,
     )?;
@@ -418,7 +423,7 @@ pub fn serve_connection(
     let report = serve_loop(
         &mut *reader,
         &writer,
-        exp_fn,
+        registry,
         &settings,
         &version,
         run_seed,
@@ -458,7 +463,7 @@ pub fn serve_connection(
 fn serve_loop(
     mut reader: &mut dyn WireStream,
     writer: &Arc<Mutex<Box<dyn WireStream>>>,
-    exp_fn: &Arc<ExpFn>,
+    registry: &Arc<Registry>,
     settings: &Arc<BTreeMap<String, Json>>,
     version: &str,
     run_seed: u64,
@@ -480,11 +485,11 @@ fn serve_loop(
         };
         match msg {
             None | Some(Msg::Shutdown) => return ConnReport { tasks, end: ConnEnd::Shutdown },
-            Some(Msg::Task { index, attempt, params, restored }) => {
+            Some(Msg::Task { index, attempt, params, restored, exp, exp_version }) => {
                 busy.store(index as i64, Ordering::SeqCst);
                 let outcome = run_attempt(
-                    writer, exp_fn, settings, version, run_seed, index, attempt, params, restored,
-                    wire, protocol,
+                    writer, registry, settings, version, run_seed, index, attempt, params,
+                    restored, exp, exp_version, wire, protocol,
                 );
                 busy.store(-1, Ordering::SeqCst);
                 tasks += 1;
@@ -523,7 +528,7 @@ fn serve_loop(
 #[allow(clippy::too_many_arguments)]
 fn run_attempt(
     writer: &Arc<Mutex<Box<dyn WireStream>>>,
-    exp_fn: &Arc<ExpFn>,
+    registry: &Arc<Registry>,
     settings: &Arc<BTreeMap<String, Json>>,
     version: &str,
     run_seed: u64,
@@ -531,12 +536,39 @@ fn run_attempt(
     attempt: u64,
     params: Vec<(String, crate::config::value::ParamValue)>,
     restored: Option<Json>,
+    exp: Option<String>,
+    exp_version: Option<String>,
     wire: WireFormat,
     protocol: u64,
 ) -> Msg {
-    let spec = Msg::task_spec(index, &params);
+    let mut spec = Msg::task_spec(index, &params);
+    // A named task hashes with the entry version the *supervisor*
+    // registered (carried on the frame), not whatever version this
+    // worker happens to register locally — both sides must derive the
+    // same id or caching and progress relay fall apart.
+    spec.exp = exp.map(|name| ExpRef {
+        name,
+        version: exp_version.unwrap_or_else(|| version.to_string()),
+    });
     let id = spec.id(version);
     let seed = task_seed(run_seed, &id);
+    let exp_fn = match registry.resolve(spec.exp.as_ref()) {
+        Ok(f) => f,
+        Err(e) => {
+            // Capability mismatch: report it as such (v5+) so the
+            // supervisor re-routes without charging this worker. A
+            // pre-v5 supervisor never sends named tasks, but an unnamed
+            // task can still miss a fallback-less registry — same shape.
+            return Msg::Outcome {
+                index,
+                attempt,
+                duration_secs: 0.0,
+                exec_start_us: None,
+                exec_end_us: None,
+                result: WireResult::Unsupported { message: e.to_string() },
+            };
+        }
+    };
 
     // Partial progress is relayed to the supervisor, which persists it in
     // the checkpoint store — the worker never touches the store directly.

@@ -47,8 +47,9 @@
 //!   (`python/compile/kernels/dense.py`).
 //!
 //! The [`ml`] module provides the from-scratch learners/datasets used by the
-//! paper's §3 demonstration grid, and [`experiments`] wires that grid up as
-//! a reusable workload. Everything is `std`-only: JSON, SHA-256, the
+//! paper's §3 demonstration grid, and [`experiments`] wires that grid (and
+//! the `echo` smoke workload) into a named experiment registry so a task —
+//! not a process — decides what it runs. Everything is `std`-only: JSON, SHA-256, the
 //! thread pool, the CLI parser, the bench harness, and the IPC/TCP layer
 //! live under [`util`]/[`bench`] instead of external crates.
 
@@ -83,7 +84,8 @@ pub mod prelude {
     pub use crate::coordinator::retry::RetryPolicy;
     pub use crate::coordinator::run::{ChannelPolicy, Run, RunEvent, RunSummary};
     pub use crate::coordinator::scheduler::ExecBackend;
-    pub use crate::coordinator::task::{TaskContext, TaskId, TaskSpec};
+    pub use crate::coordinator::task::{ExpRef, TaskContext, TaskId, TaskSpec};
+    pub use crate::experiments::registry::{ExpEntry, Registry};
     pub use crate::obs::snapshot::{MetricsSnapshot, WorkerStat};
     pub use crate::obs::trace::{SpanEvent, SpanState, TraceSummary, Tracer};
     pub use crate::store::query::{parse_predicates, Predicate, QueryOptions, QueryRow};

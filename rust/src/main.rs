@@ -2,8 +2,9 @@
 //!
 //! Subcommands:
 //!   expand  <config.json>              show the task expansion (E1)
-//!   run     <config.json> [opts]       run the grid experiment function
+//!   run     <config.json> [opts]       run registered experiments over a matrix
 //!   resume  <config.json> [opts]       resume a checkpointed run
+//!   exps                               list the experiments this binary registers
 //!   serve   --connect host:port ...    standing worker for a remote run
 //!   status  --checkpoint <dir>         inspect a run manifest/telemetry
 //!   report  --results <file> [opts]    pivot saved results into a table
@@ -11,9 +12,13 @@
 //!   query   <store-dir> [opts]         search results across runs in a store
 //!   migrate <legacy-dir> <store-dir>   fold per-run JSON dirs into a store
 //!
-//! The experiment function is the §3 grid (`experiments::grid`): parameters
-//! `dataset`/`feature_engineering`/`preprocessing`/`model`. The AOT MLP
-//! model family is available whenever `artifacts/` exists (`make artifacts`).
+//! Experiments come from the built-in registry (`experiments::registry`):
+//! the §3 `grid` (parameters `dataset`/`feature_engineering`/
+//! `preprocessing`/`model`; the AOT MLP model family is available whenever
+//! `artifacts/` exists — `make artifacts`) and the `echo` smoke workload.
+//! `grid` doubles as the unnamed fallback, so a plain `memento run` keeps
+//! producing pre-registry task ids; `--exp NAME` or a reserved `exp` row
+//! parameter selects other entries per run or per task.
 
 use memento::config::loader;
 use memento::coordinator::checkpoint::CheckpointStore;
@@ -22,7 +27,7 @@ use memento::coordinator::memento::Memento;
 use memento::coordinator::notify::ConsoleNotificationProvider;
 use memento::coordinator::results::ResultSet;
 use memento::coordinator::run::RunEvent;
-use memento::experiments::grid;
+use memento::experiments::registry::Registry;
 use memento::runtime::artifact::shared_store;
 use memento::util::cli::{CliError, CliSpec};
 use memento::util::json::{parse, Json};
@@ -40,6 +45,7 @@ fn main() -> ExitCode {
         "expand" => cmd_expand(rest),
         "run" => cmd_run(rest, false),
         "resume" => cmd_run(rest, true),
+        "exps" => cmd_exps(rest),
         "serve" => cmd_serve(rest),
         "status" => cmd_status(rest),
         "report" => cmd_report(rest),
@@ -71,10 +77,37 @@ fn main() -> ExitCode {
 fn top_help() -> String {
     "memento — effortless, efficient, and reliable ML experiments\n\
      \n\
-     USAGE: memento <expand|run|resume|serve|status|report|trace|query|migrate> [options]\n\
+     USAGE: memento <expand|run|resume|exps|serve|status|report|trace|query|migrate> [options]\n\
      \n\
      Try `memento run --help` for per-command options."
         .to_string()
+}
+
+/// The CLI's experiment registry: the §3 `grid` (also the unnamed
+/// fallback) plus the `echo` smoke workload. The MLP grid family needs
+/// artifacts; their absence is noted unless `quiet` (listing commands and
+/// spawned workers keep the console clean).
+fn builtin_registry(quiet: bool) -> Registry {
+    let store = shared_store().ok();
+    if store.is_none() && !quiet {
+        eprintln!("note: artifacts/ not found — the 'MLP' model family will fail; run `make artifacts`");
+    }
+    Registry::builtin(store)
+}
+
+/// `memento exps`: one line per registered experiment — name, version
+/// (its id-hash salt), description — plus the unnamed-fallback rule.
+fn cmd_exps(args: &[String]) -> Result<(), String> {
+    let spec = CliSpec::new("memento exps", "list the experiments this binary registers");
+    let _a = unwrap_cli(spec.parse(args))?;
+    let registry = builtin_registry(true);
+    for (name, entry) in registry.iter() {
+        println!("{name:<8} {:<6} {}", entry.version, entry.description);
+    }
+    if registry.has_fallback() {
+        println!("(unnamed tasks fall back to 'grid' and keep pre-registry task ids)");
+    }
+    Ok(())
 }
 
 fn unwrap_cli<T>(r: Result<T, CliError>) -> Result<T, String> {
@@ -96,6 +129,14 @@ fn cmd_expand(args: &[String]) -> Result<(), String> {
              matrix's first block (0 = off)",
         )
         .opt("seed", "0", "RNG seed for --sample (deterministic previews)")
+        .opt("version", "v1", "experiment code version (unnamed-task id salt)")
+        .opt_required(
+            "exp",
+            "annotate every task with this registered experiment (see \
+             `memento exps`); a reserved `exp` row parameter still wins \
+             per task. Printed ids then use the entry's version salt, \
+             matching what `run --exp` executes",
+        )
         .flag("ids", "also print task hashes");
     let a = unwrap_cli(spec.parse(args))?;
     let path = a.pos("config").ok_or("missing <config>")?;
@@ -103,11 +144,27 @@ fn cmd_expand(args: &[String]) -> Result<(), String> {
     let limit = unwrap_cli(a.get_usize("limit"))?;
     let sample = unwrap_cli(a.get_usize("sample"))?;
 
+    let registry = builtin_registry(true);
+    let run_exp = a.get("exp").map(str::to_string);
+    if let Some(name) = &run_exp {
+        if registry.get(name).is_none() {
+            return Err(format!(
+                "unknown experiment '{name}' — `memento exps` lists what this binary registers"
+            ));
+        }
+    }
+    let version = a.get("version").unwrap_or("v1").to_string();
+    // Same annotation the run pipeline applies, so previewed ids match
+    // executed ids exactly (named tasks salt with the entry version).
+    let annotate = |t: memento::coordinator::task::TaskSpec| {
+        registry.annotate_spec(t, run_exp.as_deref(), &version)
+    };
     let print_task = |t: &memento::coordinator::task::TaskSpec| {
+        let tag = t.exp.as_ref().map(|e| format!("{}:", e.name)).unwrap_or_default();
         if a.flag("ids") {
-            println!("  [{:>4}] {}  {}", t.index, t.id("v1").short(), t.label());
+            println!("  [{:>4}] {}  {tag}{}", t.index, t.id(&version).short(), t.label());
         } else {
-            println!("  [{:>4}] {}", t.index, t.label());
+            println!("  [{:>4}] {tag}{}", t.index, t.label());
         }
     };
 
@@ -134,8 +191,8 @@ fn cmd_expand(args: &[String]) -> Result<(), String> {
             "sampled          : {} of {seen} task(s), uniform, seed {seed}",
             tasks.len()
         );
-        for t in &tasks {
-            print_task(t);
+        for t in tasks {
+            print_task(&annotate(t));
         }
         return Ok(());
     }
@@ -146,7 +203,7 @@ fn cmd_expand(args: &[String]) -> Result<(), String> {
         println!("raw combinations : {}", matrix.raw_count());
         println!("showing first    : {limit} included task(s)");
         for t in expand::Expansion::new(&matrix).take(limit) {
-            print_task(&t);
+            print_task(&annotate(t));
         }
         return Ok(());
     }
@@ -161,17 +218,24 @@ fn cmd_expand(args: &[String]) -> Result<(), String> {
         included
     );
     for t in expand::Expansion::new(&matrix) {
-        print_task(&t);
+        print_task(&annotate(t));
     }
     Ok(())
 }
 
 fn run_spec(name: &'static str) -> CliSpec {
-    CliSpec::new(name, "run the §3 grid experiment over a config matrix")
+    CliSpec::new(name, "run registered experiments over a config matrix (default: the §3 grid)")
         .positional("config", "config matrix JSON file")
         .opt("workers", "0", "worker threads (0 = all cores)")
         .opt("seed", "0", "base RNG seed")
-        .opt("version", "v1", "experiment code version (cache salt)")
+        .opt("version", "v1", "experiment code version (unnamed-task cache salt)")
+        .opt_required(
+            "exp",
+            "run every task as this registered experiment (see `memento \
+             exps`); a reserved `exp` row parameter still wins per task. \
+             Named tasks salt their ids with the entry's version, not \
+             --version",
+        )
         .opt_required("cache", "result cache directory")
         .opt_required(
             "store-dir",
@@ -256,20 +320,21 @@ fn cmd_run(args: &[String], resuming: bool) -> Result<(), String> {
     let path = a.pos("config").ok_or("missing <config>")?;
     let matrix = loader::from_file(Path::new(path)).map_err(|e| e.to_string())?;
 
-    // The MLP family needs artifacts; make them available when present.
-    let store = shared_store().ok();
-    if store.is_none() {
-        eprintln!("note: artifacts/ not found — the 'MLP' model family will fail; run `make artifacts`");
-    }
-
     let wire_arg = a.get("wire").unwrap_or("binary");
     let wire = memento::util::codec::WireFormat::parse_arg(wire_arg)
         .ok_or_else(|| format!("--wire must be 'binary' or 'json', got '{wire_arg}'"))?;
-    let mut m = Memento::new(grid::grid_exp_fn(store))
+    // The full built-in registry: tasks pick `grid` (the fallback, so a
+    // plain run keeps its pre-registry ids and caches), `echo`, or
+    // whatever `--exp` / a row-level `exp` parameter names.
+    let mut m = Memento::with_registry(builtin_registry(false))
         .seed(unwrap_cli(a.get_u64("seed"))?)
         .version(a.get("version").unwrap_or("v1"))
         .wire_format(wire)
         .fail_fast(a.flag("fail-fast"));
+    if let Some(name) = a.get("exp") {
+        // Validated at launch: an unknown name is a config error there.
+        m = m.exp(name);
+    }
     let workers = unwrap_cli(a.get_usize("workers"))?;
     if workers > 0 {
         m = m.workers(workers);
@@ -454,19 +519,27 @@ fn setup_remote(
     Err("remote isolation requires a unix platform".into())
 }
 
-/// `memento serve`: a standing worker process. Connects out to a
-/// supervisor started with `--isolation remote`, authenticates with the
-/// shared token, serves task attempts, and re-registers after every run
-/// (reconnecting with backoff if the supervisor is unreachable) until
-/// stopped — or until the optional bounds below.
-#[cfg(unix)]
-fn cmd_serve(args: &[String]) -> Result<(), String> {
-    use memento::ipc::transport::Endpoint;
-    use memento::ipc::worker::{serve_remote, RemoteWorkerOptions};
+/// Parsed `memento serve` arguments — shared by the unix dispatch path
+/// and the non-unix stub so the flag surface (and `--help` text) can
+/// never drift between platforms. Only the dispatch itself is cfg-gated.
+#[cfg_attr(not(unix), allow(dead_code))]
+struct ServeConfig {
+    addr: String,
+    token: String,
+    worker_id: u64,
+    runs: usize,
+    tasks_per_conn: usize,
+    give_up: f64,
+    wire: memento::util::codec::WireFormat,
+    /// `--exps a,b`: serve a subset of the binary's registered
+    /// experiments (None = all of them).
+    exps: Option<Vec<String>>,
+}
 
+fn parse_serve_args(args: &[String]) -> Result<ServeConfig, String> {
     let spec = CliSpec::new(
         "memento serve",
-        "standing worker: register with a remote supervisor and execute grid tasks",
+        "standing worker: register with a remote supervisor and execute registered experiments",
     )
     .opt_required("connect", "supervisor address (host:port)")
     .opt_required("token-file", "file holding the shared auth token")
@@ -490,36 +563,68 @@ fn cmd_serve(args: &[String]) -> Result<(), String> {
         "highest payload encoding this worker will speak: binary | json \
          (the supervisor's Hello picks the session format; json forces \
          plain-JSON frames for debugging)",
+    )
+    .opt_required(
+        "exps",
+        "comma-separated subset of registered experiments to advertise \
+         and serve (default: all — see `memento exps`); the supervisor \
+         only dispatches named tasks this worker advertised",
     );
     let a = unwrap_cli(spec.parse(args))?;
-    let addr = a.get("connect").ok_or("missing --connect")?;
+    let addr = a.get("connect").ok_or("missing --connect")?.to_string();
     let token = read_token_file(a.get("token-file").ok_or("missing --token-file")?)?;
-    let runs = unwrap_cli(a.get_usize("runs"))?;
-    let tasks_per_conn = unwrap_cli(a.get_usize("tasks-per-conn"))?;
-    let give_up = unwrap_cli(a.get_f64("give-up-after"))?;
     let wire_arg = a.get("wire").unwrap_or("binary");
     let wire = memento::util::codec::WireFormat::parse_arg(wire_arg)
         .ok_or_else(|| format!("--wire must be 'binary' or 'json', got '{wire_arg}'"))?;
+    let exps = a.get("exps").map(|s| {
+        s.split(',')
+            .map(|p| p.trim().to_string())
+            .filter(|p| !p.is_empty())
+            .collect::<Vec<String>>()
+    });
+    Ok(ServeConfig {
+        addr,
+        token,
+        worker_id: unwrap_cli(a.get_u64("worker-id"))?,
+        runs: unwrap_cli(a.get_usize("runs"))?,
+        tasks_per_conn: unwrap_cli(a.get_usize("tasks-per-conn"))?,
+        give_up: unwrap_cli(a.get_f64("give-up-after"))?,
+        wire,
+        exps,
+    })
+}
 
-    let store = shared_store().ok();
-    if store.is_none() {
-        eprintln!("note: artifacts/ not found — the 'MLP' model family will fail; run `make artifacts`");
+/// `memento serve`: a standing worker process. Connects out to a
+/// supervisor started with `--isolation remote`, authenticates with the
+/// shared token, advertises its registered experiment names, serves task
+/// attempts, and re-registers after every run (reconnecting with backoff
+/// if the supervisor is unreachable) until stopped — or until the
+/// optional bounds in [`parse_serve_args`].
+#[cfg(unix)]
+fn cmd_serve(args: &[String]) -> Result<(), String> {
+    use memento::ipc::transport::Endpoint;
+    use memento::ipc::worker::{serve_remote, RemoteWorkerOptions};
+
+    let cfg = parse_serve_args(args)?;
+    let mut registry = builtin_registry(false);
+    if let Some(names) = &cfg.exps {
+        registry = registry.subset(names).map_err(|e| e.to_string())?;
     }
-    let exp_fn: std::sync::Arc<memento::coordinator::memento::ExpFn> =
-        std::sync::Arc::new(grid::grid_exp_fn(store));
-
-    let endpoint = Endpoint::Tcp(addr.to_string());
-    eprintln!("memento serve: registering with {endpoint}");
+    let endpoint = Endpoint::Tcp(cfg.addr.clone());
+    eprintln!(
+        "memento serve: registering with {endpoint} (exps: {})",
+        registry.names().join(", ")
+    );
     let report = serve_remote(
-        exp_fn,
+        std::sync::Arc::new(registry),
         &endpoint,
         RemoteWorkerOptions {
-            token: Some(token),
-            worker_id: unwrap_cli(a.get_u64("worker-id"))?,
-            max_connections: (runs > 0).then_some(runs),
-            tasks_per_connection: (tasks_per_conn > 0).then_some(tasks_per_conn),
-            give_up_after: (give_up > 0.0).then(|| Duration::from_secs_f64(give_up)),
-            wire,
+            token: Some(cfg.token),
+            worker_id: cfg.worker_id,
+            max_connections: (cfg.runs > 0).then_some(cfg.runs),
+            tasks_per_connection: (cfg.tasks_per_conn > 0).then_some(cfg.tasks_per_conn),
+            give_up_after: (cfg.give_up > 0.0).then(|| Duration::from_secs_f64(cfg.give_up)),
+            wire: cfg.wire,
             ..RemoteWorkerOptions::default()
         },
     )
@@ -532,12 +637,15 @@ fn cmd_serve(args: &[String]) -> Result<(), String> {
 }
 
 #[cfg(not(unix))]
-fn cmd_serve(_args: &[String]) -> Result<(), String> {
+fn cmd_serve(args: &[String]) -> Result<(), String> {
+    // Parse first so `--help` and flag errors behave identically to unix.
+    let _ = parse_serve_args(args)?;
     Err("memento serve requires a unix platform".into())
 }
 
 /// The hidden worker mode behind `--isolation process`: connect to the
-/// supervisor socket named by the environment, execute grid tasks, exit.
+/// supervisor socket named by the environment, execute tasks against the
+/// full built-in registry, exit.
 #[cfg(unix)]
 fn cmd_worker() -> Result<(), String> {
     if !memento::ipc::worker::active() {
@@ -547,10 +655,10 @@ fn cmd_worker() -> Result<(), String> {
                 .into(),
         );
     }
-    let store = shared_store().ok();
-    let exp_fn: std::sync::Arc<memento::coordinator::memento::ExpFn> =
-        std::sync::Arc::new(grid::grid_exp_fn(store));
-    memento::ipc::worker::serve(exp_fn).map_err(|e| e.to_string())
+    // Quiet: the supervisor owns the console; missing-artifact failures
+    // surface per task instead.
+    memento::ipc::worker::serve(std::sync::Arc::new(builtin_registry(true)))
+        .map_err(|e| e.to_string())
 }
 
 #[cfg(not(unix))]
@@ -924,7 +1032,7 @@ fn result_set_from_json(doc: &Json) -> Result<ResultSet, String> {
             .collect();
         let status_ok = entry.get("status").and_then(|j| j.as_str()) == Some("success");
         outcomes.push(TaskOutcome {
-            spec: TaskSpec { params, index: i },
+            spec: TaskSpec { params, index: i, exp: None },
             id: TaskId(
                 entry
                     .get("id")

@@ -243,17 +243,37 @@ impl ResultStore {
     /// hit — counted, but the record is still written so every run's
     /// provenance survives).
     pub fn put_result(&self, id: &str, params: &Json, value: &Json) -> io::Result<bool> {
+        self.put_result_exp(id, params, value, None)
+    }
+
+    /// Like [`ResultStore::put_result`], additionally stamping the record
+    /// with the registry entry that produced it — top-level `exp` /
+    /// `exp_version` fields — so cross-run audits can attribute every
+    /// result to an experiment and the version that computed it. `None`
+    /// writes the byte-identical pre-registry record shape.
+    pub fn put_result_exp(
+        &self,
+        id: &str,
+        params: &Json,
+        value: &Json,
+        exp: Option<(&str, &str)>,
+    ) -> io::Result<bool> {
         let hash = sha256_hex(value.canonical().as_bytes());
         let mut inner = self.lock();
         let run = inner.current_run.clone().unwrap_or_else(|| "adhoc".to_string());
-        let doc = Json::obj(vec![
+        let mut fields = vec![
             ("kind", Json::str("result")),
             ("id", Json::str(id)),
             ("run", Json::str(run)),
             ("hash", Json::str(&hash)),
-            ("params", params.clone()),
-            ("value", value.clone()),
-        ]);
+        ];
+        if let Some((name, version)) = exp {
+            fields.push(("exp", Json::str(name)));
+            fields.push(("exp_version", Json::str(version)));
+        }
+        fields.push(("params", params.clone()));
+        fields.push(("value", value.clone()));
+        let doc = Json::obj(fields);
         let loc = append_locked(&mut inner, &doc)?;
         inner.index.record_put(format!("r:{id}"), loc);
         let dup = inner.index.note_hash(&hash);
@@ -474,7 +494,16 @@ impl ResultStore {
                 continue;
             };
             let params = doc.get("params").cloned().unwrap_or(Json::Null);
-            self.put_result(id, &params, value)?;
+            // Cache entries written by a registry-aware Dir backing stamp
+            // the experiment that produced them; carry that through.
+            let exp = match (
+                doc.get("exp").and_then(|j| j.as_str()),
+                doc.get("exp_version").and_then(|j| j.as_str()),
+            ) {
+                (Some(n), Some(v)) => Some((n, v)),
+                _ => None,
+            };
+            self.put_result_exp(id, &params, value, exp)?;
             report.results += 1;
         }
         self.sync()?;
@@ -731,6 +760,34 @@ mod tests {
         let stats = store.stats();
         assert_eq!(stats.live_records, 2);
         assert_eq!(stats.dead_records, 0);
+    }
+
+    #[test]
+    fn put_result_exp_stamps_experiment_fields() {
+        use crate::store::query::QueryOptions;
+        let td = TempDir::new("store-exp").unwrap();
+        let store = ResultStore::open(td.path()).unwrap();
+        store.begin_run("run-x").unwrap();
+        store
+            .put_result_exp("named", &params("svc", 0.1), &value(0.9), Some(("echo", "v1")))
+            .unwrap();
+        store.put_result("plain", &params("svc", 0.2), &value(0.8)).unwrap();
+
+        let rows = store.query(&[], &QueryOptions::default()).unwrap();
+        let doc_of = |id: &str| rows.iter().find(|r| r.id == id).unwrap().doc.clone();
+        let named = doc_of("named");
+        assert_eq!(named.get("exp").and_then(|j| j.as_str()), Some("echo"));
+        assert_eq!(named.get("exp_version").and_then(|j| j.as_str()), Some("v1"));
+        let plain = doc_of("plain");
+        assert!(plain.get("exp").is_none(), "unnamed results keep the pre-registry shape");
+        assert!(plain.get("exp_version").is_none());
+        // The extra fields change nothing about retrieval or the index.
+        assert_eq!(store.get_result("named").unwrap(), Some(value(0.9)));
+        store.sync().unwrap();
+        drop(store);
+        let reopened = ResultStore::open(td.path()).unwrap();
+        assert!(reopened.open_warnings().is_empty());
+        assert_eq!(reopened.get_result("named").unwrap(), Some(value(0.9)));
     }
 
     #[test]

@@ -261,6 +261,7 @@ fn prop_cache_roundtrip_any_json_value() {
         let spec = memento::coordinator::task::TaskSpec {
             params: vec![("x".into(), pv_int(g.u64() as i64))],
             index: 0,
+            exp: None,
         };
         let id = spec.id("prop");
         cache.put(&id, &spec, &value).map_err(|e| e.to_string())?;

@@ -50,7 +50,7 @@ fn ipc_worker_entry() {
     if !memento::ipc::worker::active() {
         return;
     }
-    memento::ipc::worker::serve(Arc::new(exp)).expect("worker serve");
+    memento::ipc::worker::serve(Arc::new(Registry::solo(Arc::new(exp)))).expect("worker serve");
     std::process::exit(0);
 }
 
@@ -268,4 +268,90 @@ fn process_backend_fail_fast_aborts_and_skips() {
         .run(&m)
         .unwrap_err();
     assert!(matches!(err, MementoError::Aborted(_)), "{err}");
+}
+
+// ---- experiment-capability routing (protocol v5) ------------------------
+
+/// Worker entry with a *named* registry: registers `alpha` (and keeps the
+/// unnamed fallback), so its Ready frame advertises `["alpha"]`. Spawned
+/// via `--exact ipc_named_worker_entry`; no-op in a normal pass.
+#[test]
+fn ipc_named_worker_entry() {
+    if !memento::ipc::worker::active() {
+        return;
+    }
+    let registry = Registry::new()
+        .register("alpha", "a1", "process capability test", exp)
+        .register_default(exp);
+    memento::ipc::worker::serve(Arc::new(registry)).expect("worker serve");
+    std::process::exit(0);
+}
+
+/// A matrix whose every row names the `alpha` experiment via the
+/// reserved `exp` parameter.
+fn named_matrix(n: i64) -> ConfigMatrix {
+    ConfigMatrix::builder()
+        .param("exp", vec![pv_str("alpha")])
+        .param("i", (0..n).map(pv_int).collect())
+        .setting("mode", Json::str("ok"))
+        .build()
+        .unwrap()
+}
+
+fn named_registry() -> Registry {
+    Registry::new()
+        .register("alpha", "a1", "process capability test", exp)
+        .register_default(exp)
+}
+
+/// Positive path: a process worker that registered `alpha` serves the
+/// alpha-named tasks, with identity matching the thread backend.
+#[test]
+fn named_tasks_route_to_capable_process_workers() {
+    let m = named_matrix(6);
+    let threads = Memento::with_registry(named_registry()).workers(3).run(&m).unwrap();
+    let procs = Memento::with_registry(named_registry())
+        .isolate_processes(2, 1)
+        .worker_args(vec!["--exact".to_string(), "ipc_named_worker_entry".to_string()])
+        .run(&m)
+        .unwrap();
+    assert_eq!(procs.len(), 6);
+    assert_eq!(procs.n_failed(), 0);
+    for (t, p) in threads.iter().zip(procs.iter()) {
+        assert_eq!(t.id, p.id, "named-task identity must be backend-independent");
+        assert_eq!(t.value, p.value);
+    }
+}
+
+/// Capability-departure parity with the remote backend: the solo worker
+/// entry advertises an empty capability list, so alpha-named tasks have
+/// no capable worker. They fail as typed `unknown-experiment` with the
+/// reason journaled — the crash budget is never touched and the run
+/// never hangs.
+#[test]
+fn named_tasks_fail_explicitly_on_capability_less_process_worker() {
+    let td = TempDir::new("ipc-unservable").unwrap();
+    let jpath = td.join("unservable.jsonl");
+    let results = Memento::with_registry(named_registry())
+        .isolate_processes(2, 1)
+        .worker_args(vec!["--exact".to_string(), "ipc_worker_entry".to_string()])
+        .with_journal(&jpath)
+        .run(&named_matrix(4))
+        .unwrap();
+    assert_eq!(results.len(), 4);
+    assert_eq!(results.n_failed(), 4, "every named task is unservable");
+    for o in results.iter() {
+        let f = o.failure.as_ref().expect("typed failure");
+        assert_eq!(f.kind, FailureKind::UnknownExperiment);
+        assert!(
+            f.message.contains("no live worker registers experiment 'alpha'"),
+            "{}",
+            f.message
+        );
+    }
+    let text = std::fs::read_to_string(&jpath).unwrap();
+    assert!(text.contains("no live worker registers experiment 'alpha'"), "{text}");
+    let summary = Journal::summarize(&jpath).unwrap();
+    assert_eq!(summary.started, 0, "unservable tasks never start");
+    assert_eq!(summary.failed_attempts, 4, "{summary:?}");
 }

@@ -40,7 +40,7 @@ fn remote_ipc_worker_entry() {
     if !memento::ipc::worker::active() {
         return;
     }
-    memento::ipc::worker::serve(Arc::new(exp)).expect("worker serve");
+    memento::ipc::worker::serve(Arc::new(Registry::solo(Arc::new(exp)))).expect("worker serve");
     std::process::exit(0);
 }
 
@@ -73,7 +73,7 @@ fn spawn_worker(
     std::thread::spawn(move || {
         let exp_fn: Arc<ExpFn> = Arc::new(exp);
         serve_remote(
-            exp_fn,
+            Arc::new(Registry::solo(exp_fn)),
             &endpoint,
             RemoteWorkerOptions {
                 token: Some(token),
@@ -279,6 +279,7 @@ fn v2_json_only_worker_completes_a_run_against_a_v3_pool() {
                 protocol: 2, // the v2 declaration under test
                 token: Some(TOKEN.to_string()),
                 clock_us: None, // v2 predates the observability fields
+                exps: None,     // …and the experiment registry
             },
         )
         .unwrap();
@@ -375,4 +376,154 @@ fn remote_run_without_workers_fails_explicitly() {
         }),
         "leaseless slots retire and fail leftover work explicitly"
     );
+}
+
+// ---- experiment-capability routing (protocol v5) ------------------------
+
+/// A matrix mixing the built-in `echo` and §3 `grid` experiments via the
+/// reserved `exp` row parameter: 2 echo tasks + 2 grid tasks (the grid
+/// rows use the fast `toy` dataset so CV stays cheap).
+fn mixed_matrix() -> ConfigMatrix {
+    ConfigMatrix::builder()
+        .param("exp", vec![pv_str("echo"), pv_str("grid")])
+        .param("dataset", vec![pv_str("toy")])
+        .param("feature_engineering", vec![pv_str("DummyImputer")])
+        .param("preprocessing", vec![pv_str("DummyPreprocessor")])
+        .param("model", vec![pv_str("SVC"), pv_str("DecisionTree")])
+        .setting("n_fold", Json::int(2))
+        .setting("data_seed", Json::int(0))
+        .build()
+        .unwrap()
+}
+
+/// Spawns a standing worker restricted to a subset of the built-in
+/// registry's experiments — exactly what `memento serve --exps` builds.
+/// Its v5 `Ready` handshake advertises only these names.
+fn spawn_subset_worker(
+    pool: &Arc<WorkerPool>,
+    exps: &[&str],
+) -> JoinHandle<Result<RemoteServeReport, MementoError>> {
+    let endpoint = pool.endpoint().clone();
+    let names: Vec<String> = exps.iter().map(|s| s.to_string()).collect();
+    std::thread::spawn(move || {
+        let registry = Registry::builtin(None).subset(&names).expect("known names");
+        serve_remote(
+            Arc::new(registry),
+            &endpoint,
+            RemoteWorkerOptions {
+                token: Some(TOKEN.to_string()),
+                max_connections: Some(1),
+                give_up_after: Some(Duration::from_secs(1)),
+                quiet: true,
+                ..RemoteWorkerOptions::default()
+            },
+        )
+    })
+}
+
+/// The registry-refactor acceptance test: one run mixing `echo` and the
+/// §3 `grid` over TCP-remote with two single-capability workers. The
+/// supervisor dispatches each named task only to the worker that
+/// registered it (each worker's served-attempt count equals exactly its
+/// experiment's task count), accounting is exactly-once, and task
+/// identity matches the thread backend.
+#[test]
+fn mixed_experiment_run_routes_by_capability_over_tcp() {
+    let td = TempDir::new("remote-mixed").unwrap();
+    let m = mixed_matrix();
+
+    // Thread-backend reference run: named-task identity must be
+    // backend-independent.
+    let reference = Memento::with_registry(Registry::builtin(None))
+        .workers(2)
+        .run(&m)
+        .unwrap();
+
+    let pool = tcp_pool();
+    let w_echo = spawn_subset_worker(&pool, &["echo"]);
+    let w_grid = spawn_subset_worker(&pool, &["grid"]);
+    let jpath = td.join("mixed.jsonl");
+    let results = Memento::with_registry(Registry::builtin(None))
+        .with_worker_pool(Arc::clone(&pool))
+        .remote_workers("unused: pool owns the listener", 2)
+        .with_journal(&jpath)
+        .run(&m)
+        .unwrap();
+    pool.shutdown();
+    let re = w_echo.join().unwrap().unwrap();
+    let rg = w_grid.join().unwrap().unwrap();
+
+    assert_eq!(results.len(), 4);
+    assert_eq!(results.n_failed(), 0);
+    // Capable-only dispatch: a mis-routed task would bounce (Unsupported
+    // -> re-route) and inflate one of these counts.
+    assert_eq!(re.tasks, 2, "echo worker served exactly the echo tasks");
+    assert_eq!(rg.tasks, 2, "grid worker served exactly the grid tasks");
+
+    for o in results.iter() {
+        let value = o.value.as_ref().expect("all tasks succeed");
+        match o.spec.get("exp").and_then(|v| v.as_str()) {
+            Some("echo") => assert!(value.get("hash").is_some(), "echo returns params+hash"),
+            Some("grid") => assert!(value.get("accuracy").is_some(), "grid returns CV metrics"),
+            other => panic!("unexpected exp {other:?}"),
+        }
+    }
+    for (t, r) in reference.iter().zip(results.iter()) {
+        assert_eq!(t.id, r.id, "task identity must be backend-independent");
+        assert_eq!(t.value, r.value);
+    }
+    let summary = Journal::summarize(&jpath).unwrap();
+    assert_eq!(summary.started, 4, "{summary:?}");
+    assert_eq!(summary.succeeded, 4, "{summary:?}");
+    assert_eq!(summary.failed_attempts, 0, "{summary:?}");
+    assert_eq!(summary.timeouts, 0, "{summary:?}");
+    assert_eq!(summary.restored, 0, "{summary:?}");
+}
+
+/// Named tasks whose experiment no live worker registers fail explicitly
+/// — typed `unknown-experiment`, reason journaled — instead of hanging
+/// the run or burning the crash budget; tasks the worker does register
+/// still succeed, and the incapable worker never receives out-of-set
+/// tasks.
+#[test]
+fn unservable_named_tasks_fail_explicitly_with_journaled_reason() {
+    let td = TempDir::new("remote-unservable").unwrap();
+    let pool = tcp_pool();
+    let w_echo = spawn_subset_worker(&pool, &["echo"]);
+    let jpath = td.join("unservable.jsonl");
+    let results = Memento::with_registry(Registry::builtin(None))
+        .with_worker_pool(Arc::clone(&pool))
+        .remote_workers("unused: pool owns the listener", 1)
+        .with_journal(&jpath)
+        .run(&mixed_matrix())
+        .unwrap();
+    pool.shutdown();
+    let re = w_echo.join().unwrap().unwrap();
+
+    assert_eq!(results.len(), 4);
+    assert_eq!(results.n_failed(), 2, "the grid-named tasks are unservable");
+    assert_eq!(re.tasks, 2, "the subset worker only ever saw echo tasks");
+    for o in results.iter() {
+        match o.spec.get("exp").and_then(|v| v.as_str()) {
+            Some("echo") => assert!(o.failure.is_none(), "echo tasks still succeed"),
+            Some("grid") => {
+                let f = o.failure.as_ref().expect("grid tasks fail explicitly");
+                assert_eq!(f.kind, FailureKind::UnknownExperiment);
+                assert!(
+                    f.message.contains("no live worker registers experiment 'grid'"),
+                    "{}",
+                    f.message
+                );
+            }
+            other => panic!("unexpected exp {other:?}"),
+        }
+    }
+    // The reason lands in the journal; the unservable tasks fail from
+    // the queue without ever starting, so accounting stays exactly-once.
+    let text = std::fs::read_to_string(&jpath).unwrap();
+    assert!(text.contains("no live worker registers experiment 'grid'"), "{text}");
+    let summary = Journal::summarize(&jpath).unwrap();
+    assert_eq!(summary.started, 2, "{summary:?}");
+    assert_eq!(summary.succeeded, 2, "{summary:?}");
+    assert_eq!(summary.failed_attempts, 2, "{summary:?}");
 }

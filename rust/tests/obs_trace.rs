@@ -42,7 +42,7 @@ fn obs_trace_worker_entry() {
     if !memento::ipc::worker::active() {
         return;
     }
-    memento::ipc::worker::serve(Arc::new(exp)).expect("worker serve");
+    memento::ipc::worker::serve(Arc::new(Registry::solo(Arc::new(exp)))).expect("worker serve");
     std::process::exit(0);
 }
 
@@ -69,7 +69,7 @@ fn spawn_worker(
     std::thread::spawn(move || {
         let exp_fn: Arc<ExpFn> = Arc::new(exp);
         serve_remote(
-            exp_fn,
+            Arc::new(Registry::solo(exp_fn)),
             &endpoint,
             RemoteWorkerOptions {
                 token: Some(TOKEN.to_string()),
@@ -294,6 +294,7 @@ fn v3_peer_without_exec_timestamps_degrades_to_synthesized_spans() {
                 protocol: 3, // pre-observability peer
                 token: Some(TOKEN.to_string()),
                 clock_us: None, // v3 never reports its clock
+                exps: None,     // …and predates the experiment registry
             },
         )
         .unwrap();

@@ -31,7 +31,7 @@ fn exp(ctx: &TaskContext) -> Result<Json, MementoError> {
 fn store_worker_entry() {
     #[cfg(unix)]
     if memento::ipc::worker::active() {
-        memento::ipc::worker::serve(Arc::new(exp)).expect("worker serve");
+        memento::ipc::worker::serve(Arc::new(Registry::solo(Arc::new(exp)))).expect("worker serve");
         std::process::exit(0);
     }
 }
@@ -126,7 +126,7 @@ fn migration_roundtrip_restores_identically_on_remote_backend() {
     let worker = std::thread::spawn(move || {
         let exp_fn: Arc<ExpFn> = Arc::new(exp);
         serve_remote(
-            exp_fn,
+            Arc::new(Registry::solo(exp_fn)),
             &endpoint,
             RemoteWorkerOptions {
                 token: Some(token.to_string()),
@@ -153,6 +153,58 @@ fn migration_roundtrip_restores_identically_on_remote_backend() {
     for (b, r) in baseline.iter().zip(restored.iter()) {
         assert_eq!(b.id, r.id);
         assert_eq!(b.value, r.value);
+    }
+}
+
+#[test]
+fn named_run_results_carry_experiment_provenance() {
+    let td = TempDir::new("store-int-exp").unwrap();
+    let store = ResultStore::open(td.join("store")).unwrap();
+    let registry = Registry::new()
+        .register("alpha", "a1", "provenance test experiment", exp)
+        .register_default(exp);
+    Memento::with_registry(registry)
+        .workers(2)
+        .exp("alpha")
+        .with_store(Arc::clone(&store))
+        .run(&matrix(4))
+        .unwrap();
+
+    // Every record is stamped top-level with the entry that produced it…
+    let rows = store.query(&[], &QueryOptions::default()).unwrap();
+    assert_eq!(rows.len(), 4);
+    for row in &rows {
+        assert_eq!(row.doc.get("exp").and_then(|j| j.as_str()), Some("alpha"));
+        assert_eq!(row.doc.get("exp_version").and_then(|j| j.as_str()), Some("a1"));
+    }
+    // …and the annotated spec lands in params too, so predicates hit it.
+    let named =
+        store.query(&parse_predicates("exp=alpha").unwrap(), &QueryOptions::default()).unwrap();
+    assert_eq!(named.len(), 4);
+}
+
+#[test]
+fn migration_carries_experiment_stamps() {
+    let td = TempDir::new("store-int-exp-mig").unwrap();
+    let legacy = td.join("legacy");
+    let registry = Registry::new()
+        .register("alpha", "a1", "provenance test experiment", exp)
+        .register_default(exp);
+    Memento::with_registry(registry)
+        .workers(2)
+        .exp("alpha")
+        .with_cache_dir(&legacy)
+        .run(&matrix(3))
+        .unwrap();
+
+    let store = ResultStore::open(td.join("store")).unwrap();
+    let report = store.migrate_dir(&legacy).unwrap();
+    assert_eq!(report.results, 3);
+    let rows = store.query(&[], &QueryOptions::default()).unwrap();
+    assert_eq!(rows.len(), 3);
+    for row in &rows {
+        assert_eq!(row.doc.get("exp").and_then(|j| j.as_str()), Some("alpha"));
+        assert_eq!(row.doc.get("exp_version").and_then(|j| j.as_str()), Some("a1"));
     }
 }
 

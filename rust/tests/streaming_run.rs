@@ -298,7 +298,8 @@ mod process_backend {
         if !memento::ipc::worker::active() {
             return;
         }
-        memento::ipc::worker::serve(Arc::new(exp)).expect("worker serve");
+        memento::ipc::worker::serve(Arc::new(Registry::solo(Arc::new(exp))))
+            .expect("worker serve");
         std::process::exit(0);
     }
 
@@ -319,7 +320,8 @@ mod process_backend {
         if !memento::ipc::worker::active() {
             return;
         }
-        memento::ipc::worker::serve(Arc::new(exp_cancel)).expect("worker serve");
+        memento::ipc::worker::serve(Arc::new(Registry::solo(Arc::new(exp_cancel))))
+            .expect("worker serve");
         std::process::exit(0);
     }
 
