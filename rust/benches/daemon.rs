@@ -1,0 +1,157 @@
+//! Bench E12: daemon submission overhead and multi-tenant throughput.
+//!
+//! The daemon puts a framed handshake, an admission queue, and an event
+//! tee between the client and the coordinator. `daemon_submit_latency`
+//! prices the full round trip for the smallest possible run (one no-op
+//! task): connect → `Submit` → admission → scheduler launch → lease →
+//! execute → `Event` stream → `run_complete`. `daemon_2tenant_throughput`
+//! drives two tenants' disjoint grids through one daemon concurrently and
+//! reports aggregate tasks/sec through the shared pool. Both rows append
+//! to `BENCH_sched_cache.json` next to the scheduler/cache trajectory.
+//!
+//! Run on a toolchain host from `rust/`:
+//! `cargo bench --bench daemon` (the tier-1 container has no cargo).
+
+#![cfg_attr(not(unix), allow(dead_code, unused_imports))]
+
+use memento::bench::{sched_cache_trajectory_path, Suite};
+use memento::config::matrix::ConfigMatrix;
+use memento::config::value::pv_int;
+use memento::prelude::{MementoError, Registry, TaskContext};
+use memento::util::fs::TempDir;
+use memento::util::json::Json;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+const TOKEN: &str = "bench-daemon-token";
+
+fn exp(ctx: &TaskContext) -> Result<Json, MementoError> {
+    Ok(Json::int(ctx.param_i64("i")?))
+}
+
+#[cfg(not(unix))]
+fn main() {
+    eprintln!("the daemon bench needs the unix-gated daemon module; skipping on this platform");
+}
+
+#[cfg(unix)]
+fn main() {
+    use memento::daemon::{Daemon, DaemonClient, DaemonOptions, SubmitOptions};
+    use memento::ipc::transport::Transport;
+    use memento::ipc::worker::{serve_remote, RemoteWorkerOptions};
+
+    let mut suite = Suite::new("E12 — daemon submission service");
+    let mut extras: Vec<(String, Json)> = Vec::new();
+
+    let td = TempDir::new("bench-daemon").expect("bench tempdir");
+    let mut options = DaemonOptions::new(td.join("root"));
+    options.token = Some(TOKEN.to_string());
+    options.max_in_flight = 2;
+    options.workers_per_run = 2;
+    let daemon = Daemon::start(
+        Registry::solo(Arc::new(exp)),
+        options,
+        &Transport::Tcp { bind: "127.0.0.1:0".to_string() },
+        &Transport::Tcp { bind: "127.0.0.1:0".to_string() },
+    )
+    .expect("start bench daemon");
+    let workers: Vec<_> = (0..2)
+        .map(|_| {
+            let endpoint = daemon.worker_endpoint();
+            std::thread::spawn(move || {
+                let _ = serve_remote(
+                    Arc::new(Registry::solo(Arc::new(exp))),
+                    &endpoint,
+                    RemoteWorkerOptions {
+                        token: Some(TOKEN.to_string()),
+                        give_up_after: Some(std::time::Duration::from_secs(2)),
+                        quiet: true,
+                        ..RemoteWorkerOptions::default()
+                    },
+                );
+            })
+        })
+        .collect();
+
+    // A fresh stamp per submission keeps every run's cells distinct (and
+    // its label unique), so each iteration measures real execution, never
+    // a cache restore of the previous iteration.
+    let stamp = AtomicU64::new(0);
+    let client = DaemonClient::new(daemon.endpoint().clone(), Some(TOKEN.to_string()));
+
+    let lat = suite
+        .bench("daemon_submit_latency", 2, 20, |_| {
+            let s = stamp.fetch_add(1, Ordering::SeqCst) as i64;
+            let matrix = ConfigMatrix::builder()
+                .param("i", vec![pv_int(s)])
+                .build()
+                .unwrap();
+            let opts = SubmitOptions {
+                tenant: "bench".to_string(),
+                label: Some(format!("lat-{s}")),
+                ..SubmitOptions::default()
+            };
+            let mut handle = client.submit(&matrix, &opts).expect("submit");
+            while handle.next_event().expect("event stream").is_some() {}
+        })
+        .clone();
+    suite.note(format!(
+        "{:.2}ms submit→run_complete for a 1-task grid (handshake + admission + lease + event tee)",
+        lat.mean * 1e3
+    ));
+
+    let n = 50i64;
+    let thr = suite
+        .bench("daemon_2tenant_throughput", 1, 5, |_| {
+            let s = stamp.fetch_add(1, Ordering::SeqCst) as i64;
+            let handles: Vec<_> = [("alice", 0i64), ("bob", n)]
+                .map(|(tenant, offset)| {
+                    let endpoint = daemon.endpoint().clone();
+                    std::thread::spawn(move || {
+                        let c = DaemonClient::new(endpoint, Some(TOKEN.to_string()));
+                        let matrix = ConfigMatrix::builder()
+                            .param("i", (offset..offset + n).map(pv_int).collect())
+                            .param("stamp", vec![pv_int(s)])
+                            .build()
+                            .unwrap();
+                        let opts = SubmitOptions {
+                            tenant: tenant.to_string(),
+                            label: Some(format!("thr-{tenant}-{s}")),
+                            ..SubmitOptions::default()
+                        };
+                        let mut h = c.submit(&matrix, &opts).expect("submit");
+                        while h.next_event().expect("event stream").is_some() {}
+                    })
+                })
+                .into_iter()
+                .collect();
+            for h in handles {
+                h.join().expect("tenant client thread");
+            }
+        })
+        .clone();
+    let tasks_per_sec = 2.0 * n as f64 / thr.mean;
+    suite.note(format!(
+        "{tasks_per_sec:.0} no-op tasks/sec across 2 concurrent tenants ({n} cells each, shared 2-worker pool)"
+    ));
+    extras.push((
+        "daemon_service".to_string(),
+        Json::obj(vec![
+            ("submit_latency_ms", Json::Num(lat.mean * 1e3)),
+            ("two_tenant_tasks_per_sec", Json::Num(tasks_per_sec)),
+        ]),
+    ));
+    println!(
+        "E12 headline: {:.2}ms 1-task submit round trip, {tasks_per_sec:.0} tasks/sec for 2 tenants",
+        lat.mean * 1e3
+    );
+
+    daemon.shutdown();
+    daemon.wait();
+    for w in workers {
+        let _ = w.join();
+    }
+
+    suite.write_trajectory(&sched_cache_trajectory_path(), extras);
+    suite.finish();
+}

@@ -1,0 +1,201 @@
+//! Cross-run in-flight execution gate.
+//!
+//! When several concurrent runs share one result store (the daemon's
+//! steady state — see [`crate::daemon`]), the per-run restore filter is
+//! not enough to guarantee daemon-wide execute-once: two runs can probe
+//! the cache for the same task id in the same instant, both miss, and
+//! both execute the cell. The [`InflightGate`] closes that window with a
+//! process-wide claim table keyed by task id:
+//!
+//! - a run's restore filter **claims** an id after its cache probe
+//!   misses and before the spec enters the execution queue;
+//! - a second run hitting the same id parks on the gate instead of
+//!   executing, and **re-probes the cache** each time it wakes — the
+//!   owning run records its result *before* releasing, so the waiter's
+//!   next probe restores the value without executing;
+//! - the owning run **releases** the id from its record hook (terminal
+//!   outcome), and releases every claim it still holds when the run
+//!   winds down (covering aborted/cancelled runs whose claimed tasks
+//!   were skipped and therefore never reached the record hook).
+//!
+//! Claims are owned: a release only removes the entry when the caller's
+//! run label matches the claimant, so the release calls sprinkled along
+//! the outcome paths are harmless no-ops for unclaimed ids.
+//!
+//! The gate deliberately knows nothing about tasks or stores — it is a
+//! `Mutex<HashMap> + Condvar` keyed by opaque strings, installed via
+//! [`crate::coordinator::memento::Memento::with_inflight_gate`]. With a
+//! gate installed, the supervised backends also skip their
+//! exclusive-cache optimization (see
+//! [`crate::coordinator::cache::ResultCache::set_exclusive`]): the
+//! whole point of the gate is that *other* writers are active, so the
+//! cache index must keep tolerating them.
+
+use std::collections::HashMap;
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Duration;
+
+/// Outcome of [`InflightGate::try_claim`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Claim {
+    /// The id was free (or already held by this run); the caller now owns
+    /// it and must release it via [`InflightGate::release`] or
+    /// [`InflightGate::release_run`].
+    Claimed,
+    /// Another run is executing this id right now. Park on
+    /// [`InflightGate::wait_released`] and re-probe the cache.
+    InFlightElsewhere,
+}
+
+/// Process-wide claim table mapping in-flight task ids to the run label
+/// executing them. See the [module docs](self) for the protocol.
+pub struct InflightGate {
+    claims: Mutex<HashMap<String, String>>,
+    released: Condvar,
+}
+
+impl InflightGate {
+    /// Creates an empty gate, ready to share across runs.
+    pub fn new() -> Arc<InflightGate> {
+        Arc::new(InflightGate {
+            claims: Mutex::new(HashMap::new()),
+            released: Condvar::new(),
+        })
+    }
+
+    /// Attempts to claim `id` for `run`. Re-claiming an id the same run
+    /// already holds succeeds (idempotent — a retried attempt passes
+    /// through the filter only once, but defensive callers cost nothing).
+    pub fn try_claim(&self, id: &str, run: &str) -> Claim {
+        let mut claims = self.claims.lock().unwrap();
+        match claims.get(id) {
+            Some(owner) if owner != run => Claim::InFlightElsewhere,
+            Some(_) => Claim::Claimed,
+            None => {
+                claims.insert(id.to_string(), run.to_string());
+                Claim::Claimed
+            }
+        }
+    }
+
+    /// Blocks until `id` is released or `timeout` elapses; returns `true`
+    /// when the id is free at wake-up. Callers loop around this with a
+    /// fresh cache probe per wake-up — a `false` return is not an error,
+    /// just a cue to re-check cancellation before parking again.
+    pub fn wait_released(&self, id: &str, timeout: Duration) -> bool {
+        let claims = self.claims.lock().unwrap();
+        if !claims.contains_key(id) {
+            return true;
+        }
+        let (claims, _timed_out) = self
+            .released
+            .wait_timeout_while(claims, timeout, |c| c.contains_key(id))
+            .unwrap();
+        !claims.contains_key(id)
+    }
+
+    /// Releases `id` if (and only if) `run` is the claimant, waking every
+    /// parked waiter. Call *after* recording the outcome so waiters'
+    /// re-probes see the value.
+    pub fn release(&self, id: &str, run: &str) {
+        let mut claims = self.claims.lock().unwrap();
+        if claims.get(id).is_some_and(|owner| owner == run) {
+            claims.remove(id);
+            drop(claims);
+            self.released.notify_all();
+        }
+    }
+
+    /// Releases every claim still held by `run` — the wind-down sweep
+    /// covering tasks that were claimed but skipped (abort, cancel,
+    /// fail-fast) and so never reached the record hook.
+    pub fn release_run(&self, run: &str) {
+        let mut claims = self.claims.lock().unwrap();
+        let before = claims.len();
+        claims.retain(|_, owner| owner != run);
+        if claims.len() != before {
+            drop(claims);
+            self.released.notify_all();
+        }
+    }
+
+    /// Number of ids currently claimed (all runs).
+    pub fn in_flight(&self) -> usize {
+        self.claims.lock().unwrap().len()
+    }
+
+    /// RAII wind-down sweep: returns a guard whose `Drop` runs
+    /// [`InflightGate::release_run`] for `run`, so every exit path of a
+    /// run body — including panics — releases its claims.
+    pub fn run_guard(self: &Arc<Self>, run: &str) -> RunGuard {
+        RunGuard {
+            gate: Arc::clone(self),
+            run: run.to_string(),
+        }
+    }
+}
+
+/// Guard returned by [`InflightGate::run_guard`].
+pub struct RunGuard {
+    gate: Arc<InflightGate>,
+    run: String,
+}
+
+impl Drop for RunGuard {
+    fn drop(&mut self) {
+        self.gate.release_run(&self.run);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn claim_is_exclusive_across_runs_and_idempotent_within() {
+        let gate = InflightGate::new();
+        assert_eq!(gate.try_claim("t1", "a"), Claim::Claimed);
+        assert_eq!(gate.try_claim("t1", "a"), Claim::Claimed);
+        assert_eq!(gate.try_claim("t1", "b"), Claim::InFlightElsewhere);
+        assert_eq!(gate.in_flight(), 1);
+        gate.release("t1", "b"); // non-owner: no-op
+        assert_eq!(gate.try_claim("t1", "b"), Claim::InFlightElsewhere);
+        gate.release("t1", "a");
+        assert_eq!(gate.try_claim("t1", "b"), Claim::Claimed);
+    }
+
+    #[test]
+    fn wait_released_wakes_on_release() {
+        let gate = InflightGate::new();
+        assert_eq!(gate.try_claim("t1", "a"), Claim::Claimed);
+        let waiter = {
+            let gate = Arc::clone(&gate);
+            std::thread::spawn(move || gate.wait_released("t1", Duration::from_secs(10)))
+        };
+        // Give the waiter a moment to park, then release.
+        std::thread::sleep(Duration::from_millis(50));
+        gate.release("t1", "a");
+        assert!(waiter.join().unwrap(), "waiter saw the release");
+    }
+
+    #[test]
+    fn run_guard_sweeps_leftover_claims() {
+        let gate = InflightGate::new();
+        assert_eq!(gate.try_claim("t1", "a"), Claim::Claimed);
+        assert_eq!(gate.try_claim("t2", "a"), Claim::Claimed);
+        assert_eq!(gate.try_claim("t3", "b"), Claim::Claimed);
+        {
+            let _guard = gate.run_guard("a");
+        }
+        assert_eq!(gate.in_flight(), 1, "run a's claims swept, b's kept");
+        assert_eq!(gate.try_claim("t1", "b"), Claim::Claimed);
+    }
+
+    #[test]
+    fn wait_released_times_out_while_held() {
+        let gate = InflightGate::new();
+        assert_eq!(gate.try_claim("t1", "a"), Claim::Claimed);
+        assert!(!gate.wait_released("t1", Duration::from_millis(20)));
+        assert!(gate.wait_released("t2", Duration::from_millis(20)));
+    }
+}

@@ -53,6 +53,7 @@ use crate::coordinator::cache::ResultCache;
 use crate::coordinator::checkpoint::CheckpointStore;
 use crate::coordinator::error::{panic_message, FailureKind, MementoError, TaskFailure};
 use crate::coordinator::expand;
+use crate::coordinator::inflight::{Claim, InflightGate};
 use crate::coordinator::journal::{Event, Journal};
 use crate::coordinator::metrics::RunMetrics;
 use crate::coordinator::notify::{Notification, NotificationProvider};
@@ -184,6 +185,13 @@ pub struct Memento {
     /// run reuses it instead of binding a fresh listener.
     #[cfg(unix)]
     pool: Option<Arc<crate::ipc::pool::WorkerPool>>,
+    /// Cross-run execute-once gate (see [`InflightGate`]); installed by
+    /// coordinators running many concurrent runs over one shared store.
+    inflight: Option<Arc<InflightGate>>,
+    /// Explicit run label for the cross-run store, overriding the
+    /// checkpoint-dir-name default (the daemon labels runs
+    /// `tenant/run_id`).
+    run_label: Option<String>,
 }
 
 impl Memento {
@@ -218,6 +226,8 @@ impl Memento {
             auth_token: None,
             #[cfg(unix)]
             pool: None,
+            inflight: None,
+            run_label: None,
         }
     }
 
@@ -486,6 +496,28 @@ impl Memento {
         self.store.clone()
     }
 
+    /// Installs a shared [`InflightGate`] so concurrent runs over one
+    /// store execute each distinct task at most once **daemon-wide**: a
+    /// run whose cache probe misses claims the task id before executing;
+    /// a concurrent run hitting the same id parks until the claimant
+    /// records its result, then restores it from the cache instead of
+    /// executing. With a gate installed the supervised backends keep the
+    /// shared cache in multi-writer mode (no exclusive-index switch) —
+    /// the gate exists precisely because other writers are active.
+    pub fn with_inflight_gate(mut self, gate: Arc<InflightGate>) -> Self {
+        self.inflight = Some(gate);
+        self
+    }
+
+    /// Overrides the cross-run store label for this run. The default is
+    /// the checkpoint directory's name (or a fresh generated id); the
+    /// daemon labels runs `tenant/run_id` so `memento query` can group
+    /// and filter by tenant (see [`crate::store::tenant_label`]).
+    pub fn run_label(mut self, label: impl Into<String>) -> Self {
+        self.run_label = Some(label.into());
+        self
+    }
+
     // ---- execution ---------------------------------------------------------
 
     /// Expands the matrix and runs every included task, blocking until the
@@ -555,16 +587,20 @@ impl Memento {
             }
         }
 
-        // Cross-run store: register this run (label = checkpoint dir name
-        // when available — that is the name `memento query --last-runs`
-        // and store-backed resume key on) and align the record encoding
-        // with the run's wire format.
+        // Cross-run store: register this run (label = explicit override,
+        // else checkpoint dir name — that is the name `memento query
+        // --last-runs` and store-backed resume key on) and align the
+        // record encoding with the run's wire format.
         let run_label = self
-            .checkpoint_dir
-            .as_ref()
-            .and_then(|d| d.file_name())
-            .and_then(|n| n.to_str())
-            .map(|s| s.to_string())
+            .run_label
+            .clone()
+            .or_else(|| {
+                self.checkpoint_dir
+                    .as_ref()
+                    .and_then(|d| d.file_name())
+                    .and_then(|n| n.to_str())
+                    .map(|s| s.to_string())
+            })
             .unwrap_or_else(fresh_run_id);
         if let Some(store) = &self.store {
             store.set_wire(self.options.wire);
@@ -672,6 +708,8 @@ impl Memento {
             auth_token: self.auth_token.clone(),
             #[cfg(unix)]
             pool: self.pool.clone(),
+            inflight: self.inflight.clone(),
+            run_label,
             checkpoint,
             matrix: matrix.clone(),
             resuming,
@@ -705,6 +743,11 @@ struct RunWorker {
     auth_token: Option<String>,
     #[cfg(unix)]
     pool: Option<Arc<crate::ipc::pool::WorkerPool>>,
+    /// Cross-run execute-once gate (see [`InflightGate`]), when installed.
+    inflight: Option<Arc<InflightGate>>,
+    /// The store label this run registered under — also the claim owner
+    /// recorded in the in-flight gate.
+    run_label: String,
     checkpoint: Option<Arc<CheckpointStore>>,
     matrix: ConfigMatrix,
     resuming: bool,
@@ -734,6 +777,15 @@ impl RunWorker {
         let wall = Stopwatch::start();
         let version = self.options.version.clone();
         let settings = Arc::new(self.matrix.settings.clone());
+
+        // Wind-down sweep for the cross-run gate: whatever exit path this
+        // run takes (including error returns above the normal release
+        // points), claims it still holds are released so concurrent runs
+        // parked on them make progress.
+        let _gate_guard = self
+            .inflight
+            .as_ref()
+            .map(|g| g.run_guard(&self.run_label));
 
         // Observability: the tracer (when `trace_dir` is set) records every
         // attempt's span timeline; `FleetStats` aggregates per-worker
@@ -908,6 +960,9 @@ impl RunWorker {
             let deliver_restored = Arc::clone(&deliver_restored);
             let planner_error = Arc::clone(&planner_error);
             let tracer = tracer.clone();
+            let inflight = self.inflight.clone();
+            let run_label = self.run_label.clone();
+            let cancel = Arc::clone(&self.cancel);
             Arc::new(move |spec: TaskSpec| {
                 // A restored task never executes; its timeline is three
                 // instantaneous states on the pulling worker's thread,
@@ -941,37 +996,66 @@ impl RunWorker {
                         // failed previously -> re-run
                     }
                 }
-                // (b) result cache
-                if let Some(cache) = &cache {
-                    if let Some(value) = cache.get(&id) {
-                        metrics.cache_hits.inc();
-                        // Also record into the (fresh) checkpoint so a
-                        // later resume sees it without consulting the
-                        // cache.
-                        if let Some(ck) = &checkpoint {
-                            if let Err(e) = ck.record(&id, Some(&value), None, 0.0, 0) {
-                                let mut slot = planner_error.lock().unwrap();
-                                slot.get_or_insert(e);
+                // (b) result cache, interleaved with the cross-run gate.
+                // Without a gate this is one probe (the pre-daemon
+                // behavior). With a gate installed, a miss must *claim*
+                // the id before the spec may execute; finding it claimed
+                // by another run parks here and re-probes on wake-up —
+                // the claimant records its result before releasing, so
+                // the post-wake probe restores instead of re-executing.
+                let mut first_probe = true;
+                loop {
+                    if let Some(cache) = &cache {
+                        if let Some(value) = cache.get(&id) {
+                            metrics.cache_hits.inc();
+                            // Also record into the (fresh) checkpoint so a
+                            // later resume sees it without consulting the
+                            // cache.
+                            if let Some(ck) = &checkpoint {
+                                if let Err(e) = ck.record(&id, Some(&value), None, 0.0, 0) {
+                                    let mut slot = planner_error.lock().unwrap();
+                                    slot.get_or_insert(e);
+                                }
                             }
+                            if let Some(j) = &journal {
+                                j.record(&Event::TaskRestored { id: id.clone() });
+                            }
+                            metrics.tasks_cached.inc();
+                            trace_restored(&spec);
+                            deliver_restored(TaskOutcome {
+                                spec,
+                                id,
+                                status: TaskStatus::Success,
+                                value: Some(value),
+                                failure: None,
+                                duration_secs: 0.0,
+                                from_cache: true,
+                                attempts: 0,
+                            });
+                            return None;
                         }
-                        if let Some(j) = &journal {
-                            j.record(&Event::TaskRestored { id: id.clone() });
+                        if first_probe {
+                            metrics.cache_misses.inc();
+                            first_probe = false;
                         }
-                        metrics.tasks_cached.inc();
-                        trace_restored(&spec);
-                        deliver_restored(TaskOutcome {
-                            spec,
-                            id,
-                            status: TaskStatus::Success,
-                            value: Some(value),
-                            failure: None,
-                            duration_secs: 0.0,
-                            from_cache: true,
-                            attempts: 0,
-                        });
-                        return None;
                     }
-                    metrics.cache_misses.inc();
+                    match &inflight {
+                        None => break,
+                        Some(gate) => match gate.try_claim(&id.0, &run_label) {
+                            Claim::Claimed => break,
+                            Claim::InFlightElsewhere => {
+                                // A cancelled run stops parking and lets
+                                // the spec through unclaimed; dispatch
+                                // skips it on the cancel check, and the
+                                // owner-checked release keeps the other
+                                // run's claim intact either way.
+                                if cancel.load(Ordering::SeqCst) {
+                                    break;
+                                }
+                                gate.wait_released(&id.0, Duration::from_millis(200));
+                            }
+                        },
+                    }
                 }
                 progress.add_planned(1);
                 Some(spec)
@@ -1271,11 +1355,19 @@ impl RunWorker {
         // disk probe. The previous mode is restored afterwards: a shared
         // handle must not lose its documented multi-writer tolerance for
         // later runs just because one run used process isolation.
-        let prev_exclusive = self.cache.as_ref().map(|c| {
-            let prev = c.is_exclusive();
-            c.set_exclusive(true);
-            prev
-        });
+        //
+        // With a cross-run gate installed the premise is false — the
+        // daemon's other concurrent runs write the same cache handle —
+        // so the switch is suppressed entirely.
+        let prev_exclusive = if self.inflight.is_some() {
+            None
+        } else {
+            self.cache.as_ref().map(|c| {
+                let prev = c.is_exclusive();
+                c.set_exclusive(true);
+                prev
+            })
+        };
 
         let mut opts = SupervisorOptions {
             workers: workers.max(1),
@@ -1307,6 +1399,8 @@ impl RunWorker {
             let checkpoint = self.checkpoint.clone();
             let notifier = notifier.clone();
             let deliver = Arc::clone(&deliver);
+            let inflight = self.inflight.clone();
+            let run_label = self.run_label.clone();
             Arc::new(move |o: &TaskOutcome| {
                 match (&o.status, &o.value) {
                     (TaskStatus::Success, Some(v)) => {
@@ -1338,6 +1432,11 @@ impl RunWorker {
                             n.notify(&Notification::TaskFailed { failure: f.clone() });
                         }
                     }
+                }
+                // Release *after* recording: parked concurrent runs
+                // re-probe the cache on wake-up and must see the value.
+                if let Some(gate) = &inflight {
+                    gate.release(&o.id.0, &run_label);
                 }
                 deliver(o.clone());
             }) as Arc<dyn Fn(&TaskOutcome) + Send + Sync>
@@ -1418,6 +1517,8 @@ impl RunWorker {
         let retry = self.options.retry;
         let run_seed = self.options.seed;
         let sink = self.sink.clone();
+        let inflight = self.inflight.clone();
+        let run_label = self.run_label.clone();
 
         Arc::new(move |spec: &TaskSpec| {
             let id = spec.id(&version);
@@ -1452,6 +1553,9 @@ impl RunWorker {
                     }
                     if let Some(n) = &notifier {
                         n.notify(&Notification::TaskFailed { failure: failure.clone() });
+                    }
+                    if let Some(gate) = &inflight {
+                        gate.release(&id.0, &run_label);
                     }
                     return TaskOutcome {
                         spec: spec.clone(),
@@ -1601,6 +1705,12 @@ impl RunWorker {
                     }
                 }
             };
+            // Release *after* the cache/checkpoint writes above: parked
+            // concurrent runs re-probe the cache on wake-up and must see
+            // the value (owner-checked; no-op without a gate claim).
+            if let Some(gate) = &inflight {
+                gate.release(&outcome.id.0, &run_label);
+            }
             if let Some(t) = &tracer {
                 // Recorded lands after cache/checkpoint persistence, so
                 // the span covers the full record pipeline.

@@ -9,12 +9,15 @@
 //! crash-resumption; [`retry`], [`notify`], [`metrics`], [`progress`] and
 //! [`results`] round out the reliability/observability story. [`memento`]
 //! is the user-facing façade, and [`run`] is its streaming session handle
-//! (`launch → events → collect/cancel`).
+//! (`launch → events → collect/cancel`). [`inflight`] is the cross-run
+//! execute-once gate concurrent runs sharing one store install (see
+//! [`crate::daemon`]).
 
 pub mod cache;
 pub mod checkpoint;
 pub mod error;
 pub mod expand;
+pub mod inflight;
 pub mod journal;
 pub mod memento;
 pub mod metrics;

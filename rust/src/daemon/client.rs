@@ -1,0 +1,179 @@
+//! Client side of the daemon protocol: submit a grid, attach to a run,
+//! read the status document, or request a drain — all over one framed
+//! connection per operation.
+//!
+//! The daemon answers every handshake deterministically: a successful
+//! `Submit`/`Attach` gets `Accepted{run_id}` before any events flow, and
+//! every refusal is a single `Reject{reason}` frame — so client errors
+//! are typed strings, never hangs.
+
+use crate::config::matrix::ConfigMatrix;
+use crate::coordinator::error::MementoError;
+use crate::ipc::proto::{read_frame, write_frame, Msg, PROTOCOL_VERSION};
+use crate::ipc::transport::{Endpoint, WireStream};
+use crate::util::json::Json;
+
+/// Per-submission options (the knobs `memento submit` exposes).
+#[derive(Clone)]
+pub struct SubmitOptions {
+    /// Tenant to account the run under (quota + store label prefix).
+    pub tenant: String,
+    /// Experiment name to resolve against the daemon's registry.
+    pub exp: Option<String>,
+    /// Experiment version override (daemon default when `None`).
+    pub version: Option<String>,
+    /// Base seed for deterministic per-task seeding.
+    pub seed: u64,
+    /// Optional human-chosen run label (becomes the run id's suffix;
+    /// duplicates are rejected).
+    pub label: Option<String>,
+}
+
+impl Default for SubmitOptions {
+    fn default() -> SubmitOptions {
+        SubmitOptions {
+            tenant: "default".to_string(),
+            exp: None,
+            version: None,
+            seed: 0,
+            label: None,
+        }
+    }
+}
+
+/// A connection-factory handle on a daemon endpoint. Each operation
+/// opens its own connection, so one client value can be used for many
+/// submissions.
+pub struct DaemonClient {
+    endpoint: Endpoint,
+    token: Option<String>,
+}
+
+impl DaemonClient {
+    /// A client for the daemon at `endpoint`, presenting `token` on
+    /// every handshake.
+    pub fn new(endpoint: Endpoint, token: Option<String>) -> DaemonClient {
+        DaemonClient { endpoint, token }
+    }
+
+    fn connect(&self) -> Result<Box<dyn WireStream>, MementoError> {
+        self.endpoint
+            .connect()
+            .map_err(|e| MementoError::ipc(format!("connect to daemon {}: {e}", self.endpoint)))
+    }
+
+    /// Submits a grid and returns the accepted run's event stream, or
+    /// the daemon's typed rejection reason.
+    pub fn submit(
+        &self,
+        matrix: &ConfigMatrix,
+        opts: &SubmitOptions,
+    ) -> Result<RunHandle, MementoError> {
+        let mut stream = self.connect()?;
+        let frame = Msg::Submit {
+            protocol: PROTOCOL_VERSION,
+            token: self.token.clone(),
+            tenant: opts.tenant.clone(),
+            matrix: matrix.to_json(),
+            exp: opts.exp.clone(),
+            version: opts.version.clone(),
+            seed: opts.seed,
+            label: opts.label.clone(),
+        };
+        write_frame(&mut stream, &frame)
+            .map_err(|e| MementoError::ipc(format!("send submission: {e}")))?;
+        expect_accepted(stream, "submission")
+    }
+
+    /// Re-attaches to an accepted run; the handle replays the terminal
+    /// events the client missed, then streams live ones.
+    pub fn attach(&self, run_id: &str) -> Result<RunHandle, MementoError> {
+        let mut stream = self.connect()?;
+        let frame = Msg::Attach {
+            protocol: PROTOCOL_VERSION,
+            token: self.token.clone(),
+            run_id: run_id.to_string(),
+        };
+        write_frame(&mut stream, &frame)
+            .map_err(|e| MementoError::ipc(format!("send attach: {e}")))?;
+        expect_accepted(stream, "attach")
+    }
+
+    /// Fetches the daemon's status document.
+    pub fn status(&self) -> Result<Json, MementoError> {
+        let mut handle = self.attach("")?;
+        handle
+            .next_event()?
+            .ok_or_else(|| MementoError::ipc("daemon closed status channel without a document"))
+    }
+
+    /// Asks the daemon to drain: no new launches, in-flight runs
+    /// cancelled, queued submissions kept pending for the next daemon
+    /// life. Returns once the daemon has acknowledged by closing the
+    /// status channel.
+    pub fn request_shutdown(&self) -> Result<(), MementoError> {
+        let mut handle = self.attach("")?;
+        write_frame(&mut handle.stream, &Msg::Shutdown)
+            .map_err(|e| MementoError::ipc(format!("send shutdown: {e}")))?;
+        while handle.next_event()?.is_some() {}
+        Ok(())
+    }
+}
+
+/// Reads the handshake answer: `Accepted` yields a [`RunHandle`],
+/// `Reject` surfaces the daemon's reason, anything else is a protocol
+/// error.
+fn expect_accepted(
+    mut stream: Box<dyn WireStream>,
+    what: &str,
+) -> Result<RunHandle, MementoError> {
+    match read_frame(&mut stream) {
+        Ok(Some(Msg::Accepted { run_id })) => Ok(RunHandle { stream, run_id }),
+        Ok(Some(Msg::Reject { reason })) => {
+            Err(MementoError::ipc(format!("{what} rejected: {reason}")))
+        }
+        Ok(Some(_)) => Err(MementoError::ipc(format!("unexpected reply to {what}"))),
+        Ok(None) => Err(MementoError::ipc(format!("daemon closed the connection mid-{what}"))),
+        Err(e) => Err(MementoError::ipc(format!("read {what} reply: {e}"))),
+    }
+}
+
+/// An accepted run's event stream. Dropping the handle (or calling
+/// [`detach`](RunHandle::detach)) only closes this connection — the run
+/// keeps executing on the daemon.
+pub struct RunHandle {
+    stream: Box<dyn WireStream>,
+    run_id: String,
+}
+
+impl RunHandle {
+    /// The daemon-assigned run id (`tenant/...`), usable with `attach`.
+    pub fn run_id(&self) -> &str {
+        &self.run_id
+    }
+
+    /// The next event document, `Ok(None)` once the stream is complete
+    /// (the run finished and everything was delivered), or the daemon's
+    /// typed rejection as an error.
+    pub fn next_event(&mut self) -> Result<Option<Json>, MementoError> {
+        loop {
+            match read_frame(&mut self.stream) {
+                Ok(Some(Msg::Event { event, .. })) => return Ok(Some(event)),
+                Ok(Some(Msg::Reject { reason })) => {
+                    return Err(MementoError::ipc(format!("stream rejected: {reason}")))
+                }
+                Ok(Some(_)) => {}
+                Ok(None) => return Ok(None),
+                Err(e) => return Err(MementoError::ipc(format!("read event: {e}"))),
+            }
+        }
+    }
+
+    /// Politely detaches: tells the daemon this connection is done and
+    /// closes it. The run is unaffected; `attach` later replays what was
+    /// missed.
+    pub fn detach(mut self) {
+        let _ = write_frame(&mut self.stream, &Msg::Detach);
+        let _ = self.stream.shutdown_both();
+    }
+}

@@ -1,0 +1,37 @@
+//! Multi-tenant memento daemon (Layer 4): a long-running run-submission
+//! service over the framed wire transport.
+//!
+//! Where a plain [`crate::coordinator::memento::Memento`] run owns its
+//! supervisor, store, and worker fleet for the length of one grid, the
+//! daemon inverts the lifetimes: **one** process owns one
+//! [`crate::store::ResultStore`], one shared
+//! [`crate::coordinator::cache::ResultCache`], and one
+//! [`crate::ipc::pool::WorkerPool`], and many clients submit grids into
+//! it over the same token-authenticated transport workers use. Each
+//! accepted submission becomes an ordinary coordinator run — same
+//! journal, trace, retry, and checkpoint machinery — scheduled by a
+//! bounded FIFO [`queue::AdmissionQueue`] with a per-tenant in-flight
+//! quota, deduplicated across tenants by the shared cache plus the
+//! cross-run [`crate::coordinator::inflight::InflightGate`].
+//!
+//! The wire protocol (v6) adds five frames: `Submit` →
+//! `Accepted{run_id}` | `Reject{reason}`, then an `Event` stream;
+//! `Attach{run_id}` resumes a stream (the empty run id serves the status
+//! document and accepts a `Shutdown` drain request); `Detach` ends a
+//! connection without touching the run. Client disconnects never kill
+//! runs; terminal events are retained (in memory and in each run's
+//! `events.jsonl`) so a later attach replays exactly what was missed.
+//!
+//! Module map: [`service`] — daemon lifecycle, scheduler, event tee;
+//! [`queue`] — admission + quota; `session` (crate-private) —
+//! per-connection protocol handling; [`client`] — the submit / attach /
+//! status / shutdown client the CLI verbs wrap.
+
+pub mod client;
+pub mod queue;
+pub mod service;
+pub(crate) mod session;
+
+pub use client::{DaemonClient, RunHandle, SubmitOptions};
+pub use queue::{AdmissionQueue, RunPhase, RunRow};
+pub use service::{Daemon, DaemonOptions};

@@ -1,0 +1,249 @@
+//! Admission control: the daemon's bounded FIFO queue and per-tenant
+//! in-flight quota.
+//!
+//! A submission that passes authentication and validation lands here.
+//! Admission is all-or-nothing: a full queue answers `Reject{reason}`
+//! immediately (the client is never left hanging), and an admitted run
+//! sits in FIFO order until the scheduler asks for the next *eligible*
+//! run — the oldest queued run whose tenant is below its `max_in_flight`
+//! quota. A tenant at quota does not block other tenants: the scheduler
+//! skips over its queued runs and keeps serving the rest, which is what
+//! keeps one greedy tenant from starving the fleet.
+
+use std::collections::{HashMap, VecDeque};
+use std::sync::Mutex;
+
+/// Lifecycle phase of a submitted run, as tracked by the admission queue.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RunPhase {
+    /// Admitted, waiting for the scheduler (FIFO order, quota permitting).
+    Queued,
+    /// Executing on the shared worker pool.
+    Running,
+    /// Finished with zero failed tasks.
+    Done,
+    /// Finished with failures, aborted, or failed to launch.
+    Failed,
+}
+
+impl RunPhase {
+    /// Stable lowercase rendering for status documents.
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            RunPhase::Queued => "queued",
+            RunPhase::Running => "running",
+            RunPhase::Done => "done",
+            RunPhase::Failed => "failed",
+        }
+    }
+}
+
+/// One run's row in the daemon's status table.
+#[derive(Debug, Clone)]
+pub struct RunRow {
+    /// The daemon-assigned run id (`tenant/...` store label).
+    pub run_id: String,
+    /// The tenant the run is accounted under.
+    pub tenant: String,
+    /// Current lifecycle phase.
+    pub phase: RunPhase,
+}
+
+#[derive(Default)]
+struct QueueState {
+    /// Run ids in admission order; only `Queued` rows appear here.
+    fifo: VecDeque<String>,
+    /// Every admitted run, by id (including finished ones, for status).
+    rows: HashMap<String, RunRow>,
+    /// Admission order of all runs, for stable status listings.
+    order: Vec<String>,
+}
+
+/// Bounded FIFO admission queue with a per-tenant in-flight quota. All
+/// methods are internally synchronized; the handle is shared between
+/// session threads (admit) and the scheduler thread (dispatch).
+pub struct AdmissionQueue {
+    max_queue: usize,
+    max_in_flight: usize,
+    state: Mutex<QueueState>,
+}
+
+impl AdmissionQueue {
+    /// Creates a queue holding at most `max_queue` waiting runs, with at
+    /// most `max_in_flight` concurrently running runs per tenant (both
+    /// min 1).
+    pub fn new(max_queue: usize, max_in_flight: usize) -> AdmissionQueue {
+        AdmissionQueue {
+            max_queue: max_queue.max(1),
+            max_in_flight: max_in_flight.max(1),
+            state: Mutex::new(QueueState::default()),
+        }
+    }
+
+    /// The per-tenant in-flight quota this queue enforces.
+    pub fn max_in_flight(&self) -> usize {
+        self.max_in_flight
+    }
+
+    /// The maximum number of waiting runs before admission rejects.
+    pub fn max_queue(&self) -> usize {
+        self.max_queue
+    }
+
+    /// Admits `run_id` for `tenant`, or explains why not (full queue,
+    /// duplicate id). The rejection string travels verbatim in the wire
+    /// `Reject` frame.
+    pub fn admit(&self, run_id: &str, tenant: &str) -> Result<(), String> {
+        let mut st = self.state.lock().unwrap();
+        if st.rows.contains_key(run_id) {
+            return Err(format!("run id {run_id:?} already submitted"));
+        }
+        if st.fifo.len() >= self.max_queue {
+            return Err(format!(
+                "admission queue full ({} waiting, max {}); retry later",
+                st.fifo.len(),
+                self.max_queue
+            ));
+        }
+        st.fifo.push_back(run_id.to_string());
+        st.order.push(run_id.to_string());
+        st.rows.insert(
+            run_id.to_string(),
+            RunRow {
+                run_id: run_id.to_string(),
+                tenant: tenant.to_string(),
+                phase: RunPhase::Queued,
+            },
+        );
+        Ok(())
+    }
+
+    /// Pops the oldest queued run whose tenant is under quota and marks
+    /// it `Running`. Returns `None` when nothing is eligible — either the
+    /// queue is empty or every waiting tenant is at `max_in_flight`
+    /// (those runs stay queued, in order, and become eligible again as
+    /// their tenant's runs finish).
+    pub fn next_ready(&self) -> Option<String> {
+        let mut st = self.state.lock().unwrap();
+        let mut running: HashMap<String, usize> = HashMap::new();
+        for row in st.rows.values() {
+            if row.phase == RunPhase::Running {
+                *running.entry(row.tenant.clone()).or_insert(0) += 1;
+            }
+        }
+        let pos = st.fifo.iter().position(|id| {
+            let tenant = &st.rows[id].tenant;
+            running.get(tenant).copied().unwrap_or(0) < self.max_in_flight
+        })?;
+        let id = st.fifo.remove(pos).expect("position just found");
+        st.rows.get_mut(&id).expect("row exists").phase = RunPhase::Running;
+        Some(id)
+    }
+
+    /// Records a run's terminal phase, releasing its tenant's quota slot.
+    pub fn finish(&self, run_id: &str, ok: bool) {
+        let mut st = self.state.lock().unwrap();
+        if let Some(row) = st.rows.get_mut(run_id) {
+            row.phase = if ok { RunPhase::Done } else { RunPhase::Failed };
+        }
+    }
+
+    /// Waiting (queued, not yet running) runs.
+    pub fn depth(&self) -> usize {
+        self.state.lock().unwrap().fifo.len()
+    }
+
+    /// Currently running runs (all tenants).
+    pub fn running(&self) -> usize {
+        let st = self.state.lock().unwrap();
+        st.rows.values().filter(|r| r.phase == RunPhase::Running).count()
+    }
+
+    /// `(tenant, running-count)` pairs for every tenant with at least one
+    /// running run, sorted by tenant for stable status output.
+    pub fn tenants_in_flight(&self) -> Vec<(String, usize)> {
+        let st = self.state.lock().unwrap();
+        let mut counts: HashMap<String, usize> = HashMap::new();
+        for row in st.rows.values() {
+            if row.phase == RunPhase::Running {
+                *counts.entry(row.tenant.clone()).or_insert(0) += 1;
+            }
+        }
+        let mut out: Vec<(String, usize)> = counts.into_iter().collect();
+        out.sort();
+        out
+    }
+
+    /// Every admitted run's row, in admission order.
+    pub fn rows(&self) -> Vec<RunRow> {
+        let st = self.state.lock().unwrap();
+        st.order.iter().filter_map(|id| st.rows.get(id).cloned()).collect()
+    }
+
+    /// The current phase of `run_id`, if it was ever admitted.
+    pub fn phase(&self, run_id: &str) -> Option<RunPhase> {
+        self.state.lock().unwrap().rows.get(run_id).map(|r| r.phase)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fifo_order_within_quota() {
+        let q = AdmissionQueue::new(8, 2);
+        q.admit("a/1", "a").unwrap();
+        q.admit("b/1", "b").unwrap();
+        q.admit("a/2", "a").unwrap();
+        assert_eq!(q.next_ready().as_deref(), Some("a/1"));
+        assert_eq!(q.next_ready().as_deref(), Some("b/1"));
+        assert_eq!(q.next_ready().as_deref(), Some("a/2"));
+        assert_eq!(q.next_ready(), None);
+    }
+
+    #[test]
+    fn tenant_at_quota_queues_without_blocking_others() {
+        let q = AdmissionQueue::new(8, 1);
+        q.admit("a/1", "a").unwrap();
+        q.admit("a/2", "a").unwrap();
+        q.admit("b/1", "b").unwrap();
+        assert_eq!(q.next_ready().as_deref(), Some("a/1"));
+        // a is at quota: a/2 is skipped, b/1 (younger) dispatches.
+        assert_eq!(q.next_ready().as_deref(), Some("b/1"));
+        assert_eq!(q.next_ready(), None);
+        assert_eq!(q.depth(), 1);
+        // Finishing a/1 releases the slot; a/2 becomes eligible.
+        q.finish("a/1", true);
+        assert_eq!(q.next_ready().as_deref(), Some("a/2"));
+        assert_eq!(q.phase("a/1"), Some(RunPhase::Done));
+    }
+
+    #[test]
+    fn full_queue_and_duplicates_reject_with_reasons() {
+        let q = AdmissionQueue::new(2, 4);
+        q.admit("a/1", "a").unwrap();
+        q.admit("a/2", "a").unwrap();
+        let err = q.admit("a/3", "a").unwrap_err();
+        assert!(err.contains("queue full"), "got: {err}");
+        let err = q.admit("a/1", "a").unwrap_err();
+        assert!(err.contains("already submitted"), "got: {err}");
+        // Dispatching one frees a slot.
+        assert_eq!(q.next_ready().as_deref(), Some("a/1"));
+        q.admit("a/3", "a").unwrap();
+    }
+
+    #[test]
+    fn status_rows_track_phases() {
+        let q = AdmissionQueue::new(8, 2);
+        q.admit("a/1", "a").unwrap();
+        q.admit("b/1", "b").unwrap();
+        q.next_ready().unwrap();
+        q.finish("a/1", false);
+        let rows = q.rows();
+        assert_eq!(rows.len(), 2);
+        assert_eq!(rows[0].phase, RunPhase::Failed);
+        assert_eq!(rows[1].phase, RunPhase::Queued);
+        assert_eq!(q.tenants_in_flight(), Vec::<(String, usize)>::new());
+    }
+}

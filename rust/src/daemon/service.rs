@@ -1,0 +1,609 @@
+//! The daemon core: one long-running coordinator multiplexing many
+//! tenants' runs onto one shared worker pool and one shared result
+//! store.
+//!
+//! [`Daemon::start`] binds two listeners — the client endpoint (submit /
+//! attach / status, handled by [`crate::daemon::session`]) and the worker
+//! endpoint (a plain [`WorkerPool`], so `memento serve` workers connect
+//! exactly as they would to a single-run supervisor). A scheduler thread
+//! pulls eligible runs off the [`AdmissionQueue`] and launches each as an
+//! ordinary [`Memento`] run wired to the shared pool, shared
+//! [`ResultCache`], and shared [`InflightGate`]; a per-run drain thread
+//! tees its events into the run's [`RunChannel`] (live fan-out +
+//! replayable history) and `events.jsonl` on disk.
+//!
+//! Durability: every accepted submission is persisted under
+//! `root/pending/` *before* `Accepted` is written, and the pending file
+//! is deleted only when the run completes un-cancelled. A drain
+//! (`Shutdown` frame) cancels in-flight runs — finished attempts are
+//! already in the store, the rest journal as skipped — and a restarted
+//! daemon re-admits every pending file: completed cells restore from the
+//! shared cache, so nothing is lost and nothing re-executes.
+
+use crate::config::matrix::ConfigMatrix;
+use crate::coordinator::cache::ResultCache;
+use crate::coordinator::error::MementoError;
+use crate::coordinator::inflight::InflightGate;
+use crate::coordinator::memento::Memento;
+use crate::coordinator::run::RunEvent;
+use crate::coordinator::task::fresh_run_id;
+use crate::daemon::queue::AdmissionQueue;
+use crate::daemon::session::{self, RunChannel};
+use crate::experiments::registry::Registry;
+use crate::ipc::pool::{PoolOptions, WorkerPool};
+use crate::ipc::transport::{poll_accept, Endpoint, Transport};
+use crate::store::{self, ResultStore};
+use crate::util::codec::WireFormat;
+use crate::util::fs as mfs;
+use crate::util::json::{self, Json};
+use std::collections::HashMap;
+use std::io::Write;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::{self, JoinHandle};
+use std::time::{Duration, Instant};
+
+/// Scheduler poll interval between dispatch attempts.
+const SCHED_POLL: Duration = Duration::from_millis(10);
+
+/// Event-drain poll interval per running run.
+const DRAIN_POLL: Duration = Duration::from_millis(5);
+
+/// Configuration for a [`Daemon`].
+pub struct DaemonOptions {
+    /// Daemon state root; holds `store/`, `runs/`, and `pending/`.
+    pub root: PathBuf,
+    /// Shared auth token clients *and* workers must present. Required
+    /// when either endpoint is TCP.
+    pub token: Option<String>,
+    /// Maximum queued (not yet running) submissions before `Submit`
+    /// answers `Reject`.
+    pub max_queue: usize,
+    /// Maximum concurrently running runs per tenant.
+    pub max_in_flight: usize,
+    /// Remote worker slots each run schedules onto (they all share the
+    /// one pool; this caps a single run's lease appetite).
+    pub workers_per_run: usize,
+    /// Wire format for the shared store, caches, and journals.
+    pub wire: WireFormat,
+    /// Default experiment version recorded for submissions that don't
+    /// pin one.
+    pub version: String,
+    /// Optional per-task wall-clock budget applied to every run.
+    pub task_timeout: Option<Duration>,
+}
+
+impl DaemonOptions {
+    /// Defaults: queue of 64, 2 runs in flight per tenant, 2 worker
+    /// slots per run, JSON wire, version `"v1"`, no task timeout.
+    pub fn new(root: impl Into<PathBuf>) -> DaemonOptions {
+        DaemonOptions {
+            root: root.into(),
+            token: None,
+            max_queue: 64,
+            max_in_flight: 2,
+            workers_per_run: 2,
+            wire: WireFormat::Json,
+            version: "v1".to_string(),
+            task_timeout: None,
+        }
+    }
+}
+
+/// A validated submission waiting to launch.
+pub(crate) struct ParsedSubmission {
+    /// Owning tenant (validated: non-empty, no `/` or `:`).
+    pub(crate) tenant: String,
+    /// The expanded-later configuration grid.
+    pub(crate) matrix: ConfigMatrix,
+    /// Experiment selection, already resolved against the registry.
+    pub(crate) exp: Option<String>,
+    /// Experiment version override.
+    pub(crate) version: Option<String>,
+    /// Base seed for deterministic per-task seeding.
+    pub(crate) seed: u64,
+}
+
+/// State shared between the acceptor, session threads, the scheduler,
+/// and per-run drain threads.
+pub(crate) struct DaemonShared {
+    /// Daemon configuration (read-only after start).
+    pub(crate) options: DaemonOptions,
+    /// Experiment registry runs resolve `--exp` names against.
+    pub(crate) registry: Arc<Registry>,
+    /// The one shared result store.
+    pub(crate) store: Arc<ResultStore>,
+    /// The one shared cache over that store (all runs dedup through it).
+    pub(crate) cache: Arc<ResultCache>,
+    /// Cross-run execute-once gate for concurrently running grids.
+    pub(crate) gate: Arc<InflightGate>,
+    /// The one shared worker pool.
+    pub(crate) pool: Arc<WorkerPool>,
+    /// Admission queue + per-tenant quota.
+    pub(crate) queue: AdmissionQueue,
+    /// Live event hubs by run id (retained after completion for replay).
+    channels: Mutex<HashMap<String, Arc<RunChannel>>>,
+    /// Admitted-but-not-yet-launched submissions by run id.
+    submissions: Mutex<HashMap<String, ParsedSubmission>>,
+    /// Drain-thread handles, joined at shutdown.
+    run_joins: Mutex<Vec<JoinHandle<()>>>,
+    /// Hard stop: acceptor, scheduler, and session loops exit.
+    pub(crate) stop: AtomicBool,
+    /// Soft stop: no new launches; running runs are cancelled.
+    draining: AtomicBool,
+    /// Start instant, for status uptime.
+    started: Instant,
+}
+
+impl DaemonShared {
+    /// `true` once a hard stop is underway (session loops should exit).
+    pub(crate) fn stopping(&self) -> bool {
+        self.stop.load(Ordering::SeqCst)
+    }
+
+    /// `true` once a drain has been requested.
+    pub(crate) fn draining(&self) -> bool {
+        self.draining.load(Ordering::SeqCst)
+    }
+
+    /// Requests a drain: stop launching, cancel in-flight runs. The
+    /// daemon's `wait()` returns once running runs have drained.
+    pub(crate) fn begin_drain(&self) {
+        self.draining.store(true, Ordering::SeqCst);
+    }
+
+    /// Mints a store-label run id: `tenant/<label or fresh id>`.
+    pub(crate) fn new_run_id(&self, tenant: &str, label: Option<&str>) -> String {
+        match label {
+            Some(l) => store::tenant_label(tenant, l),
+            None => store::tenant_label(tenant, &fresh_run_id()),
+        }
+    }
+
+    /// Installs the event channel and parsed submission for `run_id`.
+    pub(crate) fn install_run(&self, run_id: &str, sub: ParsedSubmission) {
+        self.channels.lock().unwrap().insert(run_id.to_string(), RunChannel::new());
+        self.submissions.lock().unwrap().insert(run_id.to_string(), sub);
+    }
+
+    /// Reverts [`install_run`](Self::install_run) after a failed admit.
+    pub(crate) fn uninstall_run(&self, run_id: &str) {
+        self.channels.lock().unwrap().remove(run_id);
+        self.submissions.lock().unwrap().remove(run_id);
+    }
+
+    /// The event hub for `run_id`, if it was ever admitted this life.
+    pub(crate) fn channel(&self, run_id: &str) -> Option<Arc<RunChannel>> {
+        self.channels.lock().unwrap().get(run_id).cloned()
+    }
+
+    fn take_submission(&self, run_id: &str) -> Option<ParsedSubmission> {
+        self.submissions.lock().unwrap().remove(run_id)
+    }
+
+    /// `root/runs/<tenant>/<short>` for a `tenant/short` run id.
+    fn run_dir(&self, run_id: &str) -> PathBuf {
+        let (tenant, short) = store::split_tenant(run_id);
+        self.options.root.join("runs").join(tenant).join(short)
+    }
+
+    fn pending_path(&self, run_id: &str) -> PathBuf {
+        self.options.root.join("pending").join(format!("{}.json", run_id.replace('/', "__")))
+    }
+
+    /// Durably records an accepted submission so a restarted daemon can
+    /// re-admit it. Written *before* the client sees `Accepted`.
+    pub(crate) fn persist_pending(
+        &self,
+        run_id: &str,
+        sub: &ParsedSubmission,
+    ) -> std::io::Result<()> {
+        let doc = Json::obj(vec![
+            ("run_id", Json::str(run_id)),
+            ("tenant", Json::str(sub.tenant.clone())),
+            ("matrix", sub.matrix.to_json()),
+            (
+                "exp",
+                sub.exp.as_ref().map(|e| Json::str(e.clone())).unwrap_or(Json::Null),
+            ),
+            (
+                "version",
+                sub.version.as_ref().map(|v| Json::str(v.clone())).unwrap_or(Json::Null),
+            ),
+            ("seed", Json::str(sub.seed.to_string())),
+        ]);
+        mfs::atomic_write(&self.pending_path(run_id), doc.to_string().as_bytes())
+    }
+
+    /// Drops the pending record once the run completed un-cancelled.
+    pub(crate) fn remove_pending(&self, run_id: &str) {
+        let _ = std::fs::remove_file(self.pending_path(run_id));
+    }
+
+    /// Replays a finished run's `events.jsonl` from disk — the attach
+    /// path for runs completed in an earlier daemon life.
+    pub(crate) fn replay_events_file(&self, run_id: &str) -> Option<Vec<Json>> {
+        let path = self.run_dir(run_id).join("events.jsonl");
+        let text = mfs::read_string(&path).ok()?;
+        Some(text.lines().filter_map(|l| json::parse(l).ok()).collect())
+    }
+
+    /// The status document served on the empty-run-id attach channel.
+    pub(crate) fn status_doc(&self) -> Json {
+        let rows: Vec<Json> = self
+            .queue
+            .rows()
+            .into_iter()
+            .map(|r| {
+                Json::obj(vec![
+                    ("run_id", Json::str(r.run_id)),
+                    ("tenant", Json::str(r.tenant)),
+                    ("phase", Json::str(r.phase.as_str())),
+                ])
+            })
+            .collect();
+        let tenants: Vec<Json> = self
+            .queue
+            .tenants_in_flight()
+            .into_iter()
+            .map(|(t, n)| {
+                Json::obj(vec![("tenant", Json::str(t)), ("in_flight", Json::int(n as i64))])
+            })
+            .collect();
+        let stats = self.store.stats();
+        Json::obj(vec![
+            (
+                "daemon",
+                Json::obj(vec![
+                    ("uptime_secs", Json::num(self.started.elapsed().as_secs_f64())),
+                    ("draining", Json::bool(self.draining())),
+                    ("version", Json::str(self.options.version.clone())),
+                ]),
+            ),
+            (
+                "queue",
+                Json::obj(vec![
+                    ("depth", Json::int(self.queue.depth() as i64)),
+                    ("max", Json::int(self.queue.max_queue() as i64)),
+                    ("max_in_flight", Json::int(self.queue.max_in_flight() as i64)),
+                ]),
+            ),
+            ("runs", Json::arr(rows)),
+            ("tenants", Json::arr(tenants)),
+            (
+                "pool",
+                Json::obj(vec![
+                    ("registered", Json::int(self.pool.registered_count() as i64)),
+                    ("available", Json::int(self.pool.available() as i64)),
+                    ("leased", Json::int(self.pool.leased_count() as i64)),
+                    ("waiting", Json::int(self.pool.waiting_count() as i64)),
+                    ("rejected", Json::int(self.pool.rejected_count() as i64)),
+                ]),
+            ),
+            (
+                "store",
+                Json::obj(vec![
+                    ("segments", Json::int(stats.segments as i64)),
+                    ("live_records", Json::int(stats.live_records as i64)),
+                    ("dedup_hits", Json::int(stats.dedup_hits as i64)),
+                    ("runs", Json::int(stats.runs as i64)),
+                ]),
+            ),
+        ])
+    }
+}
+
+/// A running daemon: handle for shutdown, joining, and endpoint
+/// discovery. Dropping without [`wait`](Daemon::wait) leaves threads
+/// running detached — call `shutdown()` + `wait()` for a clean exit.
+pub struct Daemon {
+    shared: Arc<DaemonShared>,
+    endpoint: Endpoint,
+    acceptor: Option<JoinHandle<()>>,
+    scheduler: Option<JoinHandle<()>>,
+    _client_dir: Option<mfs::TempDir>,
+}
+
+impl Daemon {
+    /// Binds both endpoints, re-admits persisted pending submissions,
+    /// and starts the acceptor + scheduler threads.
+    ///
+    /// `client_transport` serves submit/attach/status; `worker_transport`
+    /// serves `memento serve` worker registrations. A TCP transport on
+    /// either side requires `options.token`.
+    pub fn start(
+        registry: Registry,
+        options: DaemonOptions,
+        client_transport: &Transport,
+        worker_transport: &Transport,
+    ) -> Result<Daemon, MementoError> {
+        if options.token.is_none() {
+            if let Transport::Tcp { bind } = client_transport {
+                return Err(MementoError::ipc(format!(
+                    "refusing to serve clients on tcp {bind} without a token"
+                )));
+            }
+        }
+        for sub in ["store", "runs", "pending"] {
+            std::fs::create_dir_all(options.root.join(sub))
+                .map_err(|e| MementoError::storage(format!("create daemon root: {e}")))?;
+        }
+        let store = ResultStore::open(options.root.join("store"))
+            .map_err(|e| MementoError::storage(format!("open daemon store: {e}")))?;
+        store.set_wire(options.wire);
+        let cache =
+            Arc::new(ResultCache::open_store(Arc::clone(&store)).storage_format(options.wire));
+        let pool = WorkerPool::listen(
+            worker_transport,
+            PoolOptions { token: options.token.clone(), ..PoolOptions::default() },
+        )?;
+        let (listener, client_dir) = client_transport
+            .bind()
+            .map_err(|e| MementoError::ipc(format!("bind client endpoint: {e}")))?;
+        let endpoint = listener.endpoint();
+        let shared = Arc::new(DaemonShared {
+            queue: AdmissionQueue::new(options.max_queue, options.max_in_flight),
+            options,
+            registry: Arc::new(registry),
+            store,
+            cache,
+            gate: InflightGate::new(),
+            pool,
+            channels: Mutex::new(HashMap::new()),
+            submissions: Mutex::new(HashMap::new()),
+            run_joins: Mutex::new(Vec::new()),
+            stop: AtomicBool::new(false),
+            draining: AtomicBool::new(false),
+            started: Instant::now(),
+        });
+        rescan_pending(&shared);
+        let acceptor = {
+            let shared = Arc::clone(&shared);
+            thread::Builder::new()
+                .name("memento-daemon-accept".to_string())
+                .spawn(move || {
+                    poll_accept(listener, &shared.stop, |stream| {
+                        let per_conn = Arc::clone(&shared);
+                        let _ = thread::Builder::new()
+                            .name("memento-daemon-session".to_string())
+                            .spawn(move || session::handle(per_conn, stream));
+                    });
+                })
+                .map_err(|e| MementoError::ipc(format!("spawn acceptor: {e}")))?
+        };
+        let scheduler = {
+            let shared = Arc::clone(&shared);
+            thread::Builder::new()
+                .name("memento-daemon-sched".to_string())
+                .spawn(move || {
+                    while !shared.stopping() {
+                        if !shared.draining() {
+                            if let Some(run_id) = shared.queue.next_ready() {
+                                launch_run(&shared, run_id);
+                                continue;
+                            }
+                        }
+                        thread::sleep(SCHED_POLL);
+                    }
+                })
+                .map_err(|e| MementoError::ipc(format!("spawn scheduler: {e}")))?
+        };
+        Ok(Daemon {
+            shared,
+            endpoint,
+            acceptor: Some(acceptor),
+            scheduler: Some(scheduler),
+            _client_dir: client_dir,
+        })
+    }
+
+    /// The client (submit/attach/status) endpoint.
+    pub fn endpoint(&self) -> &Endpoint {
+        &self.endpoint
+    }
+
+    /// The worker-registration endpoint (hand this to `memento serve`).
+    pub fn worker_endpoint(&self) -> Endpoint {
+        self.shared.pool.endpoint().clone()
+    }
+
+    /// Requests a drain, identical to receiving a wire `Shutdown` frame:
+    /// queued runs stay pending on disk, in-flight runs are cancelled
+    /// (finished attempts persist, the rest journal as skipped).
+    pub fn shutdown(&self) {
+        self.shared.begin_drain();
+    }
+
+    /// The current status document (same shape the wire status channel
+    /// serves).
+    pub fn status(&self) -> Json {
+        self.shared.status_doc()
+    }
+
+    /// Blocks until a drain has been requested *and* every running run
+    /// has finished, then stops all daemon threads, shuts the worker
+    /// pool down, and seals the store's active segment.
+    pub fn wait(mut self) {
+        loop {
+            if self.shared.draining() && self.shared.queue.running() == 0 {
+                break;
+            }
+            thread::sleep(Duration::from_millis(20));
+        }
+        self.shared.stop.store(true, Ordering::SeqCst);
+        if let Some(h) = self.acceptor.take() {
+            let _ = h.join();
+        }
+        if let Some(h) = self.scheduler.take() {
+            let _ = h.join();
+        }
+        let joins = std::mem::take(&mut *self.shared.run_joins.lock().unwrap());
+        for h in joins {
+            let _ = h.join();
+        }
+        self.shared.pool.shutdown();
+        let _ = self.shared.store.seal_active();
+    }
+}
+
+/// Re-admits every `pending/*.json` submission (sorted by filename for a
+/// deterministic post-restart order). Completed cells restore from the
+/// shared cache when these runs re-execute, so resumption neither loses
+/// nor duplicates outcomes.
+fn rescan_pending(shared: &Arc<DaemonShared>) {
+    let dir = shared.options.root.join("pending");
+    let Ok(mut files) = mfs::list_files_with_ext(&dir, "json") else {
+        return;
+    };
+    files.sort();
+    for path in files {
+        let Some((run_id, sub)) = parse_pending(&path) else {
+            continue;
+        };
+        let tenant = sub.tenant.clone();
+        shared.install_run(&run_id, sub);
+        if shared.queue.admit(&run_id, &tenant).is_err() {
+            shared.uninstall_run(&run_id);
+        }
+    }
+}
+
+/// Parses one pending file back into its run id + submission.
+fn parse_pending(path: &Path) -> Option<(String, ParsedSubmission)> {
+    let doc = json::parse(&mfs::read_string(path).ok()?).ok()?;
+    let run_id = doc.get("run_id")?.as_str()?.to_string();
+    let tenant = doc.get("tenant")?.as_str()?.to_string();
+    let matrix = crate::config::loader::from_json(doc.get("matrix")?).ok()?;
+    let exp = doc.get("exp").and_then(|e| e.as_str()).map(str::to_string);
+    let version = doc.get("version").and_then(|v| v.as_str()).map(str::to_string);
+    let seed = doc.get("seed").and_then(|s| s.as_str()).and_then(|s| s.parse().ok())?;
+    Some((run_id, ParsedSubmission { tenant, matrix, exp, version, seed }))
+}
+
+/// Terminal event kinds retained in the replay history and persisted to
+/// `events.jsonl`; everything else is live-only stream chatter.
+fn retain_kind(kind: &str) -> bool {
+    matches!(kind, "task_finished" | "worker_crashed" | "run_complete")
+}
+
+/// Launches one admitted run on the shared pool and spawns its drain
+/// thread (event tee: channel + `events.jsonl`).
+fn launch_run(shared: &Arc<DaemonShared>, run_id: String) {
+    let Some(sub) = shared.take_submission(&run_id) else {
+        // Unlaunchable (lost submission — should not happen); release
+        // the quota slot rather than leak a permanently-running row.
+        shared.queue.finish(&run_id, false);
+        return;
+    };
+    let channel = shared.channel(&run_id).unwrap_or_else(RunChannel::new);
+    let run_dir = shared.run_dir(&run_id);
+    if let Err(e) = std::fs::create_dir_all(&run_dir) {
+        fail_launch(shared, &run_id, &channel, format!("create run dir: {e}"));
+        return;
+    }
+    let mut memento = Memento::with_registry((*shared.registry).clone())
+        .with_store(Arc::clone(&shared.store))
+        .with_cache(Arc::clone(&shared.cache))
+        .with_inflight_gate(Arc::clone(&shared.gate))
+        .run_label(run_id.clone())
+        .with_journal(run_dir.join("journal.jsonl"))
+        .trace_to(run_dir.join("trace"))
+        .wire_format(shared.options.wire)
+        .seed(sub.seed)
+        .version(sub.version.clone().unwrap_or_else(|| shared.options.version.clone()))
+        .with_worker_pool(Arc::clone(&shared.pool))
+        .remote_workers(shared.pool.endpoint().to_string(), shared.options.workers_per_run);
+    if let Some(exp) = &sub.exp {
+        memento = memento.exp(exp.clone());
+    }
+    if let Some(budget) = shared.options.task_timeout {
+        memento = memento.task_timeout(budget);
+    }
+    let run = match memento.launch(&sub.matrix) {
+        Ok(run) => run,
+        Err(e) => {
+            fail_launch(shared, &run_id, &channel, format!("launch failed: {e}"));
+            return;
+        }
+    };
+    let drain_shared = Arc::clone(shared);
+    let join = thread::Builder::new().name("memento-daemon-drain".to_string()).spawn(move || {
+        let shared = drain_shared;
+        let events_path = run_dir.join("events.jsonl");
+        let mut events_file = std::fs::OpenOptions::new()
+            .create(true)
+            .append(true)
+            .open(&events_path)
+            .ok();
+        let mut cancelled = false;
+        loop {
+            if shared.draining() && !cancelled {
+                run.cancel();
+                cancelled = true;
+            }
+            while let Some(ev) = run.try_event() {
+                handle_event(&shared, &run_id, &channel, &mut events_file, ev);
+            }
+            if run.is_finished() {
+                while let Some(ev) = run.try_event() {
+                    handle_event(&shared, &run_id, &channel, &mut events_file, ev);
+                }
+                break;
+            }
+            thread::sleep(DRAIN_POLL);
+        }
+        // Belt-and-braces: if the run thread died without a RunComplete
+        // (panic), still release the quota slot and close the channel.
+        if shared.queue.phase(&run_id) == Some(crate::daemon::queue::RunPhase::Running) {
+            shared.queue.finish(&run_id, false);
+        }
+        channel.finish();
+    });
+    if let Ok(join) = join {
+        shared.run_joins.lock().unwrap().push(join);
+    }
+}
+
+/// Publishes a synthetic `run_error` terminal event and settles queue +
+/// pending-file state for a run that never launched.
+fn fail_launch(shared: &Arc<DaemonShared>, run_id: &str, channel: &Arc<RunChannel>, msg: String) {
+    channel.publish(
+        Json::obj(vec![("event", Json::str("run_error")), ("message", Json::str(msg))]),
+        true,
+    );
+    channel.finish();
+    shared.queue.finish(run_id, false);
+    shared.remove_pending(run_id);
+}
+
+/// Tees one run event into the fan-out channel and (for terminal kinds)
+/// `events.jsonl`, and settles queue/pending state on `RunComplete`.
+fn handle_event(
+    shared: &Arc<DaemonShared>,
+    run_id: &str,
+    channel: &Arc<RunChannel>,
+    events_file: &mut Option<std::fs::File>,
+    ev: RunEvent,
+) {
+    let doc = ev.to_json();
+    let kind = doc.get("event").and_then(|k| k.as_str()).unwrap_or("").to_string();
+    let retain = retain_kind(&kind);
+    if retain {
+        if let Some(f) = events_file {
+            let _ = writeln!(f, "{doc}");
+        }
+    }
+    channel.publish(doc, retain);
+    if let RunEvent::RunComplete(summary) = &ev {
+        let ok = summary.failed == 0 && !summary.aborted && !summary.cancelled;
+        shared.queue.finish(run_id, ok);
+        if !summary.cancelled {
+            // Cancelled (drained) runs keep their pending file: a
+            // restarted daemon re-admits them and the shared cache
+            // restores whatever already finished.
+            shared.remove_pending(run_id);
+        }
+        channel.finish();
+    }
+}

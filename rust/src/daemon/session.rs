@@ -1,0 +1,324 @@
+//! Per-connection protocol handling: authenticate, admit or attach, then
+//! stream run events until the client detaches or the daemon stops.
+//!
+//! Every accepted connection runs [`handle`] on its own short-lived
+//! thread. The first frame decides everything: `Submit` admits a run (or
+//! answers `Reject{reason}`), `Attach` resumes an accepted run's event
+//! stream (or, with the empty run id, answers the daemon status document
+//! and then listens for a `Shutdown` drain request). Authentication —
+//! token then protocol version — happens before *any* daemon state is
+//! revealed, the same rule the worker pool applies to registrations: a
+//! bad token learns nothing beyond "rejected".
+//!
+//! Disconnect semantics are deliberately asymmetric: a client vanishing
+//! (EOF, write error, `Detach` frame) only unsubscribes the connection —
+//! the run keeps executing and draining into the shared store, and a
+//! later `Attach` replays the terminal events it missed from the
+//! [`RunChannel`] history (or, after a daemon restart, from the run's
+//! `events.jsonl`).
+
+use crate::config::loader;
+use crate::daemon::service::{DaemonShared, ParsedSubmission};
+use crate::ipc::proto::{read_frame, write_frame, Msg, PROTOCOL_VERSION};
+use crate::ipc::transport::WireStream;
+use crate::util::json::Json;
+use std::io;
+use std::sync::mpsc::{Receiver, Sender, TryRecvError};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+/// How long a fresh connection gets to deliver its first frame.
+const HANDSHAKE_TIMEOUT: Duration = Duration::from_secs(5);
+
+/// Read-poll interval while streaming events (bounds both detach latency
+/// and daemon-stop latency for an idle attached client).
+const POLL: Duration = Duration::from_millis(50);
+
+/// Fan-out hub for one run's events: retained history (terminal events,
+/// replayed to late attachers) plus live subscriber channels. The lock
+/// makes replay-then-subscribe atomic — an event is either in the history
+/// a subscriber copies or delivered live afterwards, never both and never
+/// neither.
+pub(crate) struct RunChannel {
+    inner: Mutex<ChannelInner>,
+}
+
+struct ChannelInner {
+    history: Vec<Json>,
+    subs: Vec<Sender<Json>>,
+    done: bool,
+}
+
+impl RunChannel {
+    /// A fresh hub with no history and no subscribers.
+    pub(crate) fn new() -> Arc<RunChannel> {
+        Arc::new(RunChannel {
+            inner: Mutex::new(ChannelInner { history: Vec::new(), subs: Vec::new(), done: false }),
+        })
+    }
+
+    /// Delivers `event` to every live subscriber (dead ones are dropped)
+    /// and, when `retain` is set, appends it to the replay history.
+    pub(crate) fn publish(&self, event: Json, retain: bool) {
+        let mut inner = self.inner.lock().unwrap();
+        inner.subs.retain(|tx| tx.send(event.clone()).is_ok());
+        if retain {
+            inner.history.push(event);
+        }
+    }
+
+    /// Marks the run complete: subscribers observe their channel
+    /// disconnecting once drained, and future subscribers get history
+    /// only.
+    pub(crate) fn finish(&self) {
+        let mut inner = self.inner.lock().unwrap();
+        inner.done = true;
+        inner.subs.clear();
+    }
+
+    /// A copy of the retained history plus, while the run is still live,
+    /// a receiver for everything published after this call.
+    pub(crate) fn subscribe(&self) -> (Vec<Json>, Option<Receiver<Json>>) {
+        let mut inner = self.inner.lock().unwrap();
+        let history = inner.history.clone();
+        if inner.done {
+            (history, None)
+        } else {
+            let (tx, rx) = std::sync::mpsc::channel();
+            inner.subs.push(tx);
+            (history, Some(rx))
+        }
+    }
+}
+
+/// `true` for the error kinds a read deadline produces (the poll loops
+/// treat these as "no frame yet", anything else as a dead peer).
+fn is_timeout(e: &io::Error) -> bool {
+    matches!(e.kind(), io::ErrorKind::WouldBlock | io::ErrorKind::TimedOut)
+}
+
+/// Best-effort terminal `Reject`; the connection closes right after.
+fn reject(stream: &mut Box<dyn WireStream>, reason: String) {
+    let _ = write_frame(stream, &Msg::Reject { reason });
+}
+
+/// Token-then-version gate shared by `Submit` and `Attach`. Returns the
+/// rejection reason on failure; nothing about the daemon (registry,
+/// queue, runs) has been revealed at that point.
+fn authenticate(shared: &DaemonShared, protocol: u64, token: Option<&str>) -> Result<(), String> {
+    if let Some(expected) = &shared.options.token {
+        if token != Some(expected.as_str()) {
+            return Err("authentication failed".to_string());
+        }
+    }
+    if protocol < PROTOCOL_VERSION {
+        return Err(format!(
+            "daemon submissions require protocol v{PROTOCOL_VERSION}+ (peer sent \
+             v{protocol}); `memento serve` workers are unaffected — only the \
+             submit/attach client must upgrade"
+        ));
+    }
+    Ok(())
+}
+
+/// Entry point for one accepted client connection (runs on its own
+/// thread; never panics the daemon — all I/O errors drop the connection).
+pub(crate) fn handle(shared: Arc<DaemonShared>, mut stream: Box<dyn WireStream>) {
+    let _ = stream.set_stream_read_timeout(Some(HANDSHAKE_TIMEOUT));
+    let first = match read_frame(&mut stream) {
+        Ok(Some(msg)) => msg,
+        Ok(None) | Err(_) => return,
+    };
+    match first {
+        Msg::Submit { protocol, token, tenant, matrix, exp, version, seed, label } => {
+            if let Err(reason) = authenticate(&shared, protocol, token.as_deref()) {
+                return reject(&mut stream, reason);
+            }
+            handle_submit(shared, stream, tenant, matrix, exp, version, seed, label);
+        }
+        Msg::Attach { protocol, token, run_id } => {
+            if let Err(reason) = authenticate(&shared, protocol, token.as_deref()) {
+                return reject(&mut stream, reason);
+            }
+            if run_id.is_empty() {
+                handle_status(shared, stream);
+            } else {
+                handle_attach(shared, stream, run_id);
+            }
+        }
+        _ => reject(
+            &mut stream,
+            "expected a submit or attach frame (daemon endpoint, not a worker pool)".to_string(),
+        ),
+    }
+}
+
+/// Validates, persists, and admits one submission, then streams its
+/// events. Every refusal is a typed `Reject{reason}` answered immediately
+/// — a bad submission never occupies a queue slot, and a
+/// capability-mismatched one (unknown experiment) fails here rather than
+/// hanging as an unservable run.
+#[allow(clippy::too_many_arguments)]
+fn handle_submit(
+    shared: Arc<DaemonShared>,
+    mut stream: Box<dyn WireStream>,
+    tenant: String,
+    matrix: Json,
+    exp: Option<String>,
+    version: Option<String>,
+    seed: u64,
+    label: Option<String>,
+) {
+    if tenant.is_empty() || tenant.contains('/') || tenant.contains(':') {
+        return reject(
+            &mut stream,
+            format!("invalid tenant {tenant:?}: must be non-empty, without '/' or ':'"),
+        );
+    }
+    let matrix = match loader::from_json(&matrix) {
+        Ok(m) => m,
+        Err(e) => return reject(&mut stream, format!("invalid config matrix: {e}")),
+    };
+    if let Some(name) = &exp {
+        if shared.registry.get(name).is_none() {
+            let names = shared.registry.names();
+            return reject(
+                &mut stream,
+                format!(
+                    "unknown experiment {name:?} (registered: {})",
+                    if names.is_empty() { "none".to_string() } else { names.join(", ") }
+                ),
+            );
+        }
+    }
+    let run_id = shared.new_run_id(&tenant, label.as_deref());
+    let submission = ParsedSubmission { tenant: tenant.clone(), matrix, exp, version, seed };
+    if let Err(e) = shared.persist_pending(&run_id, &submission) {
+        return reject(&mut stream, format!("persist submission: {e}"));
+    }
+    shared.install_run(&run_id, submission);
+    if let Err(reason) = shared.queue.admit(&run_id, &tenant) {
+        shared.uninstall_run(&run_id);
+        shared.remove_pending(&run_id);
+        return reject(&mut stream, reason);
+    }
+    if write_frame(&mut stream, &Msg::Accepted { run_id: run_id.clone() }).is_err() {
+        // Client vanished between submit and accept: the run is admitted
+        // and executes anyway; a later attach picks the events up.
+        return;
+    }
+    let channel = shared.channel(&run_id).expect("channel installed above");
+    stream_events(&shared, stream, &run_id, &channel);
+}
+
+/// Answers the status channel: one `Accepted{""}` + one status `Event`,
+/// then listens for a `Shutdown` drain request until the peer leaves.
+fn handle_status(shared: Arc<DaemonShared>, mut stream: Box<dyn WireStream>) {
+    if write_frame(&mut stream, &Msg::Accepted { run_id: String::new() }).is_err() {
+        return;
+    }
+    let status = shared.status_doc();
+    if write_frame(&mut stream, &Msg::Event { run_id: String::new(), event: status }).is_err() {
+        return;
+    }
+    let _ = stream.set_stream_read_timeout(Some(POLL));
+    loop {
+        if shared.stopping() {
+            return;
+        }
+        match read_frame(&mut stream) {
+            Ok(Some(Msg::Shutdown)) => {
+                shared.begin_drain();
+                return;
+            }
+            Ok(Some(_)) => {}
+            Ok(None) => return,
+            Err(e) if is_timeout(&e) => {}
+            Err(_) => return,
+        }
+    }
+}
+
+/// Re-attaches a client to an accepted run: replays the retained terminal
+/// events, then streams live ones while the run is still executing. Runs
+/// finished in an earlier daemon life replay from their `events.jsonl`.
+fn handle_attach(shared: Arc<DaemonShared>, mut stream: Box<dyn WireStream>, run_id: String) {
+    match shared.channel(&run_id) {
+        Some(channel) => {
+            if write_frame(&mut stream, &Msg::Accepted { run_id: run_id.clone() }).is_err() {
+                return;
+            }
+            stream_events(&shared, stream, &run_id, &channel);
+        }
+        None => match shared.replay_events_file(&run_id) {
+            Some(events) => {
+                if write_frame(&mut stream, &Msg::Accepted { run_id: run_id.clone() }).is_err() {
+                    return;
+                }
+                for event in events {
+                    if write_frame(&mut stream, &Msg::Event { run_id: run_id.clone(), event })
+                        .is_err()
+                    {
+                        return;
+                    }
+                }
+                let _ = stream.shutdown_both();
+            }
+            None => reject(&mut stream, format!("unknown run id {run_id:?}")),
+        },
+    }
+}
+
+/// The shared streaming loop: replay history, then interleave live events
+/// with a polled read watching for `Detach`/EOF. Returning closes the
+/// connection; the run is never affected.
+fn stream_events(
+    shared: &DaemonShared,
+    mut stream: Box<dyn WireStream>,
+    run_id: &str,
+    channel: &RunChannel,
+) {
+    let (history, live) = channel.subscribe();
+    for event in history {
+        if write_frame(&mut stream, &Msg::Event { run_id: run_id.to_string(), event }).is_err() {
+            return;
+        }
+    }
+    let Some(live) = live else {
+        // Run already complete: the history was the full terminal set.
+        let _ = stream.shutdown_both();
+        return;
+    };
+    let _ = stream.set_stream_read_timeout(Some(POLL));
+    loop {
+        loop {
+            match live.try_recv() {
+                Ok(event) => {
+                    if write_frame(
+                        &mut stream,
+                        &Msg::Event { run_id: run_id.to_string(), event },
+                    )
+                    .is_err()
+                    {
+                        return;
+                    }
+                }
+                Err(TryRecvError::Empty) => break,
+                Err(TryRecvError::Disconnected) => {
+                    // Run complete and everything delivered.
+                    let _ = stream.shutdown_both();
+                    return;
+                }
+            }
+        }
+        if shared.stopping() {
+            return;
+        }
+        match read_frame(&mut stream) {
+            Ok(Some(Msg::Detach)) | Ok(None) => return,
+            Ok(Some(_)) => {}
+            Err(e) if is_timeout(&e) => {}
+            Err(_) => return,
+        }
+    }
+}

@@ -17,7 +17,9 @@
 //!   auto-detect per payload, handshakes are always JSON. Messages:
 //!   `Ready`/`Hello` handshake (with shared-token auth for TCP peers and
 //!   wire-format negotiation), `Task` (one attempt), `Progress`,
-//!   `Heartbeat`, `Outcome`, `Goodbye`, `Reject`, `Shutdown`.
+//!   `Heartbeat`, `Outcome`, `Goodbye`, `Reject`, `Shutdown`, plus the
+//!   v6 client-facing frames ([`crate::daemon`] submissions):
+//!   `Submit`/`Accepted`/`Event`/`Attach`/`Detach`.
 //! - [`transport`] — the pluggable byte layer: `WireStream`/`WireListener`
 //!   trait pair with Unix-socket and TCP implementations, plus the
 //!   printable `Endpoint` addressing both.
@@ -58,6 +60,11 @@
 //! wall-clock budget. On the CLI: `memento run --isolation remote
 //! --listen 0.0.0.0:7070 --token-file …`. See the README's *Distributed
 //! mode* section and `docs/ARCHITECTURE.md` for the full walkthrough.
+//!
+//! One layer further up, the [`crate::daemon`] module reuses all of this
+//! — the transport, the token handshake, and one shared standing
+//! [`pool::WorkerPool`] — to serve *many* runs from many clients out of
+//! a single long-running process (`memento daemon` / `memento submit`).
 
 pub mod pool;
 pub mod proto;

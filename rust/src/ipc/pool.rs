@@ -20,6 +20,22 @@
 //! reused — worker spawn cost is paid once, not per run, which is what
 //! makes many-small-runs workloads cheap.
 //!
+//! # Sharing one pool across concurrent runs
+//!
+//! Runs may also lease **concurrently** (the daemon multiplexes every
+//! active run onto one pool). Each run identifies itself with a *lease
+//! ticket* ([`WorkerPool::ticket`]) and waits via [`WorkerPool::lease_as`];
+//! grants are **directed**: a parked registration is handed to exactly one
+//! waiter (moved into its delivery cell under the pool mutex, so two
+//! runs can never double-lease one worker), and when several tickets are
+//! waiting the least-recently-granted ticket wins — round-robin
+//! fair-share across runs, FIFO within a run. Every granted
+//! [`Registration`] carries a [`LeaseToken`] whose drop returns the
+//! worker's capacity signal; [`Lease::TimedOut`]'s `busy` flag lets a
+//! starved run distinguish *contention* (workers exist, all leased by
+//! other runs — keep waiting, charge nobody) from *absence* (nothing
+//! registered — a real acquisition failure).
+//!
 //! # Trust model
 //!
 //! A TCP listener is reachable by anything that can route to it, so a
@@ -35,7 +51,7 @@
 use crate::coordinator::error::MementoError;
 use crate::ipc::proto::{read_frame, write_frame, Msg, MIN_PROTOCOL_VERSION, PROTOCOL_VERSION};
 use crate::ipc::transport::{Endpoint, Transport, WireListener, WireStream};
-use std::collections::VecDeque;
+use std::collections::{HashMap, VecDeque};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
@@ -92,10 +108,76 @@ pub struct Registration {
     /// registers no names — same routing, but declared rather than
     /// assumed.
     pub exps: Option<Vec<String>>,
+    /// Busy-accounting guard, set at grant time. Keep it alive for as
+    /// long as the connection is in use (move it alongside the stream);
+    /// its drop tells the pool this worker's capacity is no longer held,
+    /// which is what [`Lease::TimedOut`]'s `busy` flag reads. `None`
+    /// only before the registration has been granted.
+    pub lease: Option<LeaseToken>,
+}
+
+/// RAII guard pairing one granted [`Registration`] with the pool's busy
+/// accounting: while it lives the worker counts as leased, and dropping
+/// it (connection closed, run finished, registration discarded as stale)
+/// releases that count. Created only by the pool at grant time.
+pub struct LeaseToken {
+    shared: Arc<PoolShared>,
+}
+
+impl Drop for LeaseToken {
+    fn drop(&mut self) {
+        let mut state = self.shared.state.lock().unwrap();
+        state.leased = state.leased.saturating_sub(1);
+        drop(state);
+        self.shared.cv.notify_all();
+    }
+}
+
+impl std::fmt::Debug for LeaseToken {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("LeaseToken").finish_non_exhaustive()
+    }
+}
+
+/// Outcome of one [`WorkerPool::lease_as`] wait.
+pub enum Lease {
+    /// A registered worker was granted to this ticket.
+    Granted(Registration),
+    /// No grant arrived within the deadline.
+    TimedOut {
+        /// `true` when at least one worker was leased out (by any
+        /// ticket) at the deadline — the pool is *contended*, not empty,
+        /// and the caller should keep waiting rather than treat this as
+        /// an acquisition failure. `false` means nothing is registered
+        /// at all.
+        busy: bool,
+    },
+    /// The pool shut down; no grant will ever arrive.
+    Closed,
+}
+
+/// One parked `lease_as` call: grants are *directed* — the granting side
+/// moves a registration into exactly one waiter's delivery cell, so a
+/// registration can never be observed (let alone leased) by two waiters.
+struct Waiter {
+    id: u64,
+    ticket: u64,
+    delivery: Option<Registration>,
 }
 
 struct PoolState {
     queue: VecDeque<Registration>,
+    /// Parked `lease_as` calls, in arrival order (the round-robin
+    /// tie-break).
+    waiters: Vec<Waiter>,
+    /// Per-ticket grant recency: the `grant_counter` value of the
+    /// ticket's most recent grant. Least-recently-granted wins the next
+    /// registration.
+    last_grant: HashMap<u64, u64>,
+    grant_counter: u64,
+    /// Registrations currently granted and alive (their [`LeaseToken`]
+    /// not yet dropped).
+    leased: usize,
     /// Set once the acceptor thread exits; leases then fail fast instead
     /// of waiting out their full deadline on a dead pool.
     closed: bool,
@@ -110,6 +192,8 @@ struct PoolShared {
     cv: Condvar,
     registered: AtomicU64,
     rejected: AtomicU64,
+    waiter_seq: AtomicU64,
+    tickets: AtomicU64,
 }
 
 /// A standing, authenticated pool of registered remote workers (see the
@@ -152,10 +236,19 @@ impl WorkerPool {
             .map_err(|e| MementoError::ipc(format!("bind {transport:?}: {e}")))?;
         let endpoint = listener.endpoint();
         let shared = Arc::new(PoolShared {
-            state: Mutex::new(PoolState { queue: VecDeque::new(), closed: false }),
+            state: Mutex::new(PoolState {
+                queue: VecDeque::new(),
+                waiters: Vec::new(),
+                last_grant: HashMap::new(),
+                grant_counter: 0,
+                leased: 0,
+                closed: false,
+            }),
             cv: Condvar::new(),
             registered: AtomicU64::new(0),
             rejected: AtomicU64::new(0),
+            waiter_seq: AtomicU64::new(0),
+            tickets: AtomicU64::new(0),
         });
         let stop = Arc::new(AtomicBool::new(false));
         let handle = {
@@ -190,19 +283,54 @@ impl WorkerPool {
     /// Takes the next registered worker, waiting up to `timeout` for one
     /// to register. `None` means no worker became available (or the pool
     /// shut down) — callers treat that like a failed worker spawn.
+    /// Equivalent to [`WorkerPool::lease_as`] under the shared default
+    /// ticket, with the timeout classification collapsed away — single-run
+    /// callers don't need it.
     pub fn lease(&self, timeout: Duration) -> Option<Registration> {
+        match self.lease_as(0, timeout) {
+            Lease::Granted(reg) => Some(reg),
+            Lease::TimedOut { .. } | Lease::Closed => None,
+        }
+    }
+
+    /// Allocates a fresh lease ticket. Every concurrent run (or any
+    /// other party leasing from this pool) should hold its own ticket:
+    /// grants round-robin across tickets, so one run submitting faster
+    /// than another cannot monopolize registrations.
+    pub fn ticket(&self) -> u64 {
+        self.shared.tickets.fetch_add(1, Ordering::SeqCst) + 1
+    }
+
+    /// Waits up to `timeout` for a registered worker to be granted to
+    /// `ticket`. Grants are directed (a registration is moved to exactly
+    /// one waiter, under the pool mutex) and fair: when several tickets
+    /// wait, the least-recently-granted one receives the next
+    /// registration, with arrival order breaking ties.
+    pub fn lease_as(&self, ticket: u64, timeout: Duration) -> Lease {
         let deadline = Instant::now() + timeout;
+        let id = self.shared.waiter_seq.fetch_add(1, Ordering::SeqCst) + 1;
         let mut state = self.shared.state.lock().unwrap();
+        state.waiters.push(Waiter { id, ticket, delivery: None });
+        self.shared.grant_locked(&mut state);
         loop {
-            if let Some(reg) = state.queue.pop_front() {
-                return Some(reg);
+            let pos = state
+                .waiters
+                .iter()
+                .position(|w| w.id == id)
+                .expect("own waiter entry present until removed here");
+            if state.waiters[pos].delivery.is_some() {
+                let w = state.waiters.remove(pos);
+                return Lease::Granted(w.delivery.unwrap());
             }
             if state.closed {
-                return None;
+                state.waiters.remove(pos);
+                return Lease::Closed;
             }
             let remaining = deadline.saturating_duration_since(Instant::now());
             if remaining.is_zero() {
-                return None;
+                let busy = state.leased > 0;
+                state.waiters.remove(pos);
+                return Lease::TimedOut { busy };
             }
             let (st, _timeout) = self.shared.cv.wait_timeout(state, remaining).unwrap();
             state = st;
@@ -212,6 +340,17 @@ impl WorkerPool {
     /// Registered workers currently queued (not leased).
     pub fn available(&self) -> usize {
         self.shared.state.lock().unwrap().queue.len()
+    }
+
+    /// Granted registrations whose [`LeaseToken`] is still alive — the
+    /// workers currently held by runs.
+    pub fn leased_count(&self) -> usize {
+        self.shared.state.lock().unwrap().leased
+    }
+
+    /// `lease_as` calls currently parked waiting for a grant.
+    pub fn waiting_count(&self) -> usize {
+        self.shared.state.lock().unwrap().waiters.len()
     }
 
     /// Total successful registrations over the pool's lifetime. A
@@ -264,7 +403,7 @@ impl PoolShared {
             let opts = opts.clone();
             let spawned = std::thread::Builder::new()
                 .name("memento-pool-handshake".into())
-                .spawn(move || shared.register(stream, &opts));
+                .spawn(move || PoolShared::register(&shared, stream, &opts));
             drop(spawned); // spawn failure just drops the connection
         });
         let mut state = self.state.lock().unwrap();
@@ -273,9 +412,50 @@ impl PoolShared {
         self.cv.notify_all();
     }
 
+    /// Hands parked registrations to parked waiters, least-recently-
+    /// granted ticket first (arrival order breaks ties). The only place
+    /// a registration leaves the queue for a lease: the move into the
+    /// winning waiter's delivery cell happens under the state mutex, so
+    /// concurrent runs can never double-lease one worker.
+    fn grant_locked(self: &Arc<Self>, state: &mut PoolState) {
+        loop {
+            if state.queue.is_empty() {
+                return;
+            }
+            let mut best: Option<usize> = None;
+            for (i, w) in state.waiters.iter().enumerate() {
+                if w.delivery.is_some() {
+                    continue;
+                }
+                let key = state.last_grant.get(&w.ticket).copied().unwrap_or(0);
+                let better = match best {
+                    None => true,
+                    Some(b) => {
+                        key < state
+                            .last_grant
+                            .get(&state.waiters[b].ticket)
+                            .copied()
+                            .unwrap_or(0)
+                    }
+                };
+                if better {
+                    best = Some(i);
+                }
+            }
+            let Some(i) = best else { return };
+            let mut reg = state.queue.pop_front().unwrap();
+            reg.lease = Some(LeaseToken { shared: Arc::clone(self) });
+            state.grant_counter += 1;
+            let ticket = state.waiters[i].ticket;
+            state.last_grant.insert(ticket, state.grant_counter);
+            state.leased += 1;
+            state.waiters[i].delivery = Some(reg);
+        }
+    }
+
     /// Handshakes one inbound connection: read `Ready`, verify protocol
     /// and token, queue it — or answer `Reject` and drop it.
-    fn register(&self, stream: Box<dyn WireStream>, opts: &PoolOptions) {
+    fn register(self: &Arc<Self>, stream: Box<dyn WireStream>, opts: &PoolOptions) {
         // The handshake must arrive promptly; a silent connection is
         // dropped rather than wedging the acceptor.
         let _ = stream.set_stream_read_timeout(Some(opts.handshake_timeout));
@@ -333,9 +513,11 @@ impl PoolShared {
             protocol,
             clock_offset_us,
             exps,
+            lease: None,
         });
+        self.grant_locked(&mut state);
         drop(state);
-        self.cv.notify_one();
+        self.cv.notify_all();
     }
 }
 
@@ -488,5 +670,105 @@ mod tests {
         let second = pool.lease(Duration::from_secs(5)).unwrap();
         assert_eq!((first.member, second.member), (1, 2));
         assert_eq!(pool.registered_count(), 2);
+    }
+
+    #[test]
+    fn concurrent_lessees_never_double_lease_a_worker() {
+        // Two supervisors racing on one pool must each receive a
+        // *distinct* registration — the directed handoff moves each
+        // registration into exactly one waiter's delivery cell.
+        let pool = tcp_pool("s3cret");
+        let _a = send_ready(pool.endpoint(), PROTOCOL_VERSION, Some("s3cret"));
+        let _b = send_ready(pool.endpoint(), PROTOCOL_VERSION, Some("s3cret"));
+        let mut handles = Vec::new();
+        for _ in 0..2 {
+            let pool = Arc::clone(&pool);
+            handles.push(std::thread::spawn(move || {
+                let ticket = pool.ticket();
+                match pool.lease_as(ticket, Duration::from_secs(10)) {
+                    Lease::Granted(reg) => reg.member,
+                    _ => panic!("both lessees must be granted"),
+                }
+            }));
+        }
+        let mut members: Vec<u64> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+        members.sort_unstable();
+        assert_eq!(members, vec![1, 2], "each registration granted exactly once");
+        assert_eq!(pool.leased_count(), 2);
+    }
+
+    #[test]
+    fn grants_round_robin_across_tickets() {
+        let pool = tcp_pool("s3cret");
+        let t1 = pool.ticket();
+        let t2 = pool.ticket();
+        // Establish grant recency: t1 was granted before t2.
+        let _a = send_ready(pool.endpoint(), PROTOCOL_VERSION, Some("s3cret"));
+        let held1 = match pool.lease_as(t1, Duration::from_secs(5)) {
+            Lease::Granted(reg) => reg,
+            _ => panic!("t1 grant"),
+        };
+        let _b = send_ready(pool.endpoint(), PROTOCOL_VERSION, Some("s3cret"));
+        let held2 = match pool.lease_as(t2, Duration::from_secs(5)) {
+            Lease::Granted(reg) => reg,
+            _ => panic!("t2 grant"),
+        };
+        assert_eq!((held1.member, held2.member), (1, 2));
+        // Park both tickets, then register two more workers: the
+        // least-recently-granted ticket (t1) must win the first one.
+        let w1 = {
+            let pool = Arc::clone(&pool);
+            std::thread::spawn(move || match pool.lease_as(t1, Duration::from_secs(10)) {
+                Lease::Granted(reg) => reg.member,
+                _ => panic!("t1 regrant"),
+            })
+        };
+        let w2 = {
+            let pool = Arc::clone(&pool);
+            std::thread::spawn(move || match pool.lease_as(t2, Duration::from_secs(10)) {
+                Lease::Granted(reg) => reg.member,
+                _ => panic!("t2 regrant"),
+            })
+        };
+        let parked = Instant::now();
+        while pool.waiting_count() < 2 {
+            assert!(parked.elapsed() < Duration::from_secs(5), "waiters must park");
+            std::thread::sleep(Duration::from_millis(2));
+        }
+        let _c = send_ready(pool.endpoint(), PROTOCOL_VERSION, Some("s3cret"));
+        let granted = Instant::now();
+        while pool.leased_count() < 3 {
+            assert!(granted.elapsed() < Duration::from_secs(5), "third grant must land");
+            std::thread::sleep(Duration::from_millis(2));
+        }
+        let _d = send_ready(pool.endpoint(), PROTOCOL_VERSION, Some("s3cret"));
+        assert_eq!(w1.join().unwrap(), 3, "least-recently-granted ticket wins first");
+        assert_eq!(w2.join().unwrap(), 4);
+    }
+
+    #[test]
+    fn busy_timeout_is_distinct_from_an_empty_pool() {
+        let pool = tcp_pool("s3cret");
+        let t = pool.ticket();
+        // Nothing registered: timeout reports an *empty* pool.
+        assert!(matches!(
+            pool.lease_as(t, Duration::from_millis(50)),
+            Lease::TimedOut { busy: false }
+        ));
+        // One worker, leased out: timeout reports *contention*.
+        let _a = send_ready(pool.endpoint(), PROTOCOL_VERSION, Some("s3cret"));
+        let held = pool.lease(Duration::from_secs(5)).expect("grant");
+        assert!(held.lease.is_some(), "granted registrations carry a lease token");
+        assert!(matches!(
+            pool.lease_as(t, Duration::from_millis(50)),
+            Lease::TimedOut { busy: true }
+        ));
+        // Dropping the held registration releases the busy accounting.
+        drop(held);
+        assert_eq!(pool.leased_count(), 0);
+        assert!(matches!(
+            pool.lease_as(t, Duration::from_millis(50)),
+            Lease::TimedOut { busy: false }
+        ));
     }
 }

@@ -43,6 +43,15 @@
 //! pairs, not an object, so the matrix's declaration order survives the
 //! trip (task ids hash a sorted canonical form and are order-independent,
 //! but labels and reports are not).
+//!
+//! # Daemon flow (v6)
+//!
+//! The same framing carries the client ↔ daemon submission protocol (see
+//! [`crate::daemon`]): a client opens with `Submit` or `Attach` (both
+//! JSON-pinned handshakes carrying the token), the daemon answers
+//! `Accepted{run_id}` or `Reject{reason}`, then streams `Event` frames
+//! until the run completes or the client sends `Detach`. `serve` workers
+//! never see these frames — the daemon speaks plain v5 toward its pool.
 
 use crate::config::value::ParamValue;
 use crate::coordinator::task::TaskSpec;
@@ -77,8 +86,14 @@ use std::io::{self, Read, Write};
 /// peer emits and parses none of these — the supervisor treats such a
 /// worker as capable only of *unnamed* (single-experiment) tasks and
 /// never routes named work to it, so v2–v4 peers interoperate
-/// unchanged.
-pub const PROTOCOL_VERSION: u64 = 5;
+/// unchanged. v6 added the daemon submission frames — `Submit`,
+/// `Accepted`, `Event`, `Attach`, `Detach` — spoken only on client ↔
+/// daemon connections; the worker-facing frames are untouched, so every
+/// v2–v5 `serve` worker registers and executes exactly as before. Only
+/// a pre-v6 peer attempting `Submit`/`Attach` against a daemon is
+/// rejected (with a version message), because those frames did not
+/// exist before v6.
+pub const PROTOCOL_VERSION: u64 = 6;
 
 /// Oldest protocol version current code interoperates with. v2 peers
 /// lack binary payload support but are frame-compatible otherwise, so
@@ -243,6 +258,69 @@ pub enum Msg {
         /// Human-readable refusal reason, surfaced in the worker's error.
         reason: String,
     },
+
+    // ---- client → daemon (v6) ------------------------------------------
+    /// Run submission: first frame on a client → daemon connection.
+    /// Token-authenticated exactly like pool registration — the daemon
+    /// verifies `protocol` and `token` before revealing any state, and
+    /// answers [`Msg::Accepted`] or [`Msg::Reject`]. JSON-pinned (it is
+    /// a handshake frame): the daemon has negotiated nothing yet.
+    Submit {
+        /// The client's [`PROTOCOL_VERSION`]; must be v6+.
+        protocol: u64,
+        /// Shared auth token; required by TCP daemons, unused over Unix
+        /// sockets (filesystem permissions are the trust boundary there).
+        token: Option<String>,
+        /// Tenant name the run is accounted under (quota + store label).
+        tenant: String,
+        /// The serialized [`crate::config::matrix::ConfigMatrix`]
+        /// (`ConfigMatrix::to_json` shape, reparsed by the daemon).
+        matrix: Json,
+        /// Registered experiment to resolve against the daemon's builtin
+        /// registry (`None` = the daemon's fallback experiment).
+        exp: Option<String>,
+        /// Experiment version salt for task ids (`None` = daemon default).
+        version: Option<String>,
+        /// Base RNG seed for the run (string-encoded, like `run_seed`).
+        seed: u64,
+        /// Optional human-readable run label suffix.
+        label: Option<String>,
+    },
+    /// Resume streaming an accepted run's events: first frame on a
+    /// client → daemon connection, authenticated like [`Msg::Submit`].
+    /// The empty `run_id` addresses the daemon itself — the daemon
+    /// answers one [`Msg::Event`] carrying its status document (and the
+    /// connection may then send [`Msg::Shutdown`] to request a drain).
+    Attach {
+        /// The client's [`PROTOCOL_VERSION`]; must be v6+.
+        protocol: u64,
+        /// Shared auth token (same rule as [`Msg::Submit`]).
+        token: Option<String>,
+        /// The run to attach to, or `""` for the daemon status channel.
+        run_id: String,
+    },
+    /// Stop streaming events to this client without cancelling the run;
+    /// the daemon keeps draining into the shared store and a later
+    /// [`Msg::Attach`] replays the terminal events.
+    Detach,
+
+    // ---- daemon → client (v6) ------------------------------------------
+    /// Submission admitted: the run is queued (or already executing)
+    /// under `run_id`, the handle for [`Msg::Attach`] and the store's
+    /// per-tenant run label.
+    Accepted {
+        /// Daemon-assigned run id (`tenant/...`-prefixed store label).
+        run_id: String,
+    },
+    /// One run event, streamed to every attached client. The payload is
+    /// the [`crate::coordinator::run::RunEvent`] wire JSON (the same
+    /// shape `--output ndjson` prints).
+    Event {
+        /// The run this event belongs to (`""` = daemon status answer).
+        run_id: String,
+        /// The event document.
+        event: Json,
+    },
 }
 
 impl Msg {
@@ -360,6 +438,54 @@ impl Msg {
                 Json::obj(fields)
             }
             Msg::Shutdown => Json::obj(vec![("msg", Json::str("shutdown"))]),
+            Msg::Submit { protocol, token, tenant, matrix, exp, version, seed, label } => {
+                let mut fields = vec![
+                    ("msg", Json::str("submit")),
+                    ("protocol", Json::int(*protocol as i64)),
+                    (
+                        "token",
+                        token
+                            .as_ref()
+                            .map(|t| Json::str(t.clone()))
+                            .unwrap_or(Json::Null),
+                    ),
+                    ("tenant", Json::str(tenant.clone())),
+                    ("matrix", matrix.clone()),
+                    ("seed", Json::str(seed.to_string())), // u64 > 2^53-safe
+                ];
+                if let Some(name) = exp {
+                    fields.push(("exp", Json::str(name.clone())));
+                }
+                if let Some(ver) = version {
+                    fields.push(("version", Json::str(ver.clone())));
+                }
+                if let Some(l) = label {
+                    fields.push(("label", Json::str(l.clone())));
+                }
+                Json::obj(fields)
+            }
+            Msg::Attach { protocol, token, run_id } => Json::obj(vec![
+                ("msg", Json::str("attach")),
+                ("protocol", Json::int(*protocol as i64)),
+                (
+                    "token",
+                    token
+                        .as_ref()
+                        .map(|t| Json::str(t.clone()))
+                        .unwrap_or(Json::Null),
+                ),
+                ("run_id", Json::str(run_id.clone())),
+            ]),
+            Msg::Detach => Json::obj(vec![("msg", Json::str("detach"))]),
+            Msg::Accepted { run_id } => Json::obj(vec![
+                ("msg", Json::str("accepted")),
+                ("run_id", Json::str(run_id.clone())),
+            ]),
+            Msg::Event { run_id, event } => Json::obj(vec![
+                ("msg", Json::str("event")),
+                ("run_id", Json::str(run_id.clone())),
+                ("event", event.clone()),
+            ]),
         }
     }
 
@@ -469,6 +595,44 @@ impl Msg {
                 })
             }
             "shutdown" => Some(Msg::Shutdown),
+            "submit" => Some(Msg::Submit {
+                // Absent protocol parses as 0, which a daemon then
+                // rejects with a version message rather than a parse
+                // error — same convention as pre-v2 Ready frames.
+                protocol: u64_field("protocol").unwrap_or(0),
+                token: j
+                    .get("token")
+                    .and_then(|t| t.as_str())
+                    .map(|t| t.to_string()),
+                tenant: j.get("tenant")?.as_str()?.to_string(),
+                matrix: j.get("matrix")?.clone(),
+                exp: j.get("exp").and_then(|e| e.as_str()).map(|e| e.to_string()),
+                version: j
+                    .get("version")
+                    .and_then(|v| v.as_str())
+                    .map(|v| v.to_string()),
+                seed: j.get("seed")?.as_str()?.parse().ok()?,
+                label: j
+                    .get("label")
+                    .and_then(|l| l.as_str())
+                    .map(|l| l.to_string()),
+            }),
+            "attach" => Some(Msg::Attach {
+                protocol: u64_field("protocol").unwrap_or(0),
+                token: j
+                    .get("token")
+                    .and_then(|t| t.as_str())
+                    .map(|t| t.to_string()),
+                run_id: j.get("run_id")?.as_str()?.to_string(),
+            }),
+            "detach" => Some(Msg::Detach),
+            "accepted" => Some(Msg::Accepted {
+                run_id: j.get("run_id")?.as_str()?.to_string(),
+            }),
+            "event" => Some(Msg::Event {
+                run_id: j.get("run_id")?.as_str()?.to_string(),
+                event: j.get("event")?.clone(),
+            }),
             _ => None,
         }
     }
@@ -488,11 +652,19 @@ pub fn write_frame(w: &mut impl Write, msg: &Msg) -> io::Result<()> {
 }
 
 /// Writes one frame in the requested payload format. Handshake frames
-/// ([`Msg::Ready`], [`Msg::Hello`], [`Msg::Reject`]) are pinned to JSON
+/// ([`Msg::Ready`], [`Msg::Hello`], [`Msg::Reject`], and the daemon
+/// openers [`Msg::Submit`]/[`Msg::Attach`]) are pinned to JSON
 /// regardless of `format` — a peer that has not finished negotiating must
 /// be able to parse them, whatever it speaks.
 pub fn write_frame_as(w: &mut impl Write, msg: &Msg, format: WireFormat) -> io::Result<()> {
-    let handshake = matches!(msg, Msg::Ready { .. } | Msg::Hello { .. } | Msg::Reject { .. });
+    let handshake = matches!(
+        msg,
+        Msg::Ready { .. }
+            | Msg::Hello { .. }
+            | Msg::Reject { .. }
+            | Msg::Submit { .. }
+            | Msg::Attach { .. }
+    );
     let payload = if format == WireFormat::Binary && !handshake {
         codec::encode(&msg.to_json())
     } else {
@@ -674,6 +846,41 @@ mod tests {
             },
         });
         roundtrip(Msg::Shutdown);
+        roundtrip(Msg::Submit {
+            protocol: PROTOCOL_VERSION,
+            token: Some("s3cret".into()),
+            tenant: "alice".into(),
+            matrix: Json::obj(vec![(
+                "parameters",
+                Json::obj(vec![("x", Json::Arr(vec![Json::int(1), Json::int(2)]))]),
+            )]),
+            exp: Some("echo".into()),
+            version: Some("v1".into()),
+            seed: u64::MAX, // exercises the string encoding
+            label: Some("sweep-a".into()),
+        });
+        roundtrip(Msg::Submit {
+            protocol: PROTOCOL_VERSION,
+            token: None,
+            tenant: "bob".into(),
+            matrix: Json::obj(vec![]),
+            exp: None,
+            version: None,
+            seed: 7,
+            label: None,
+        });
+        roundtrip(Msg::Attach {
+            protocol: PROTOCOL_VERSION,
+            token: Some("s3cret".into()),
+            run_id: "alice/run-0001".into(),
+        });
+        roundtrip(Msg::Attach { protocol: PROTOCOL_VERSION, token: None, run_id: "".into() });
+        roundtrip(Msg::Detach);
+        roundtrip(Msg::Accepted { run_id: "alice/run-0001".into() });
+        roundtrip(Msg::Event {
+            run_id: "alice/run-0001".into(),
+            event: Json::obj(vec![("event", Json::str("run_complete"))]),
+        });
     }
 
     #[test]
@@ -702,7 +909,21 @@ mod tests {
             heartbeat_ms: 100,
             wire: WireFormat::Binary,
         };
-        for msg in [ready(1, 2, 0), hello, Msg::Reject { reason: "nope".into() }] {
+        let submit = Msg::Submit {
+            protocol: PROTOCOL_VERSION,
+            token: Some("t".into()),
+            tenant: "a".into(),
+            matrix: Json::obj(vec![]),
+            exp: None,
+            version: None,
+            seed: 1,
+            label: None,
+        };
+        let attach =
+            Msg::Attach { protocol: PROTOCOL_VERSION, token: Some("t".into()), run_id: "r".into() };
+        for msg in
+            [ready(1, 2, 0), hello, Msg::Reject { reason: "nope".into() }, submit, attach]
+        {
             let mut buf = Vec::new();
             write_frame_as(&mut buf, &msg, WireFormat::Binary).unwrap();
             // Payload (after the 4-byte prefix) must be JSON text — a v2
@@ -859,6 +1080,42 @@ mod tests {
             panic!("outcome must parse");
         };
         assert_eq!(result, WireResult::Unsupported { message: "no echo".into() });
+    }
+
+    #[test]
+    fn submit_without_protocol_parses_as_zero() {
+        // A submit frame from a peer too old to know it must carry a
+        // protocol still parses — with protocol 0, which the daemon then
+        // rejects with a version message, never a hang or a parse error.
+        let doc = parse(r#"{"msg":"submit","tenant":"a","matrix":{},"seed":"7"}"#).unwrap();
+        let Some(Msg::Submit { protocol, token, exp, version, label, seed, .. }) =
+            Msg::from_json(&doc)
+        else {
+            panic!("minimal submit must parse");
+        };
+        assert_eq!(protocol, 0);
+        assert_eq!(token, None);
+        assert_eq!(exp, None);
+        assert_eq!(version, None);
+        assert_eq!(label, None);
+        assert_eq!(seed, 7);
+    }
+
+    #[test]
+    fn daemon_frames_parse_from_raw_json() {
+        // The daemon frames are JSON-pinned handshakes (Submit/Attach)
+        // or stream frames whose raw shapes are part of the v6 contract;
+        // parse them from hand-written text so the wire shape can't
+        // drift silently.
+        for raw in [
+            r#"{"msg":"accepted","run_id":"r"}"#,
+            r#"{"msg":"event","run_id":"r","event":{}}"#,
+            r#"{"msg":"detach"}"#,
+            r#"{"msg":"attach","protocol":6,"run_id":""}"#,
+        ] {
+            let doc = parse(raw).unwrap();
+            assert!(Msg::from_json(&doc).is_some(), "v6 reader must parse {raw}");
+        }
     }
 
     #[test]

@@ -29,8 +29,11 @@
 //!   every completed attempt: a mid-run drop that rejoins does not creep
 //!   toward retirement, while a pool supplying only instantly-dying
 //!   connections still retires the slot after `crash_budget + 1` losses
-//!   in a row. A lease that times out (no registered worker at all)
-//!   counts the same way.
+//!   in a row. A lease that times out with **nothing registered** counts
+//!   the same way — but a timeout while every worker is *leased out*
+//!   (concurrent runs sharing the pool) is contention, not failure: the
+//!   slot returns its attempt and retries without consuming budget, so
+//!   runs can never charge each other's borrows to their crash budgets.
 //!
 //! A slot that exhausts its budget retires; if **every** slot retires
 //! with work still pending, the remaining tasks become failed outcomes
@@ -78,7 +81,7 @@ use crate::coordinator::retry::RetryPolicy;
 use crate::coordinator::run::{EventSink, RunEvent};
 use crate::coordinator::source::{DrainOnceSource, SpecFilter, SpecSource, ABORT_DRAIN_LIMIT};
 use crate::coordinator::task::{TaskId, TaskSpec};
-use crate::ipc::pool::WorkerPool;
+use crate::ipc::pool::{Lease, LeaseToken, WorkerPool};
 use crate::ipc::proto::{
     read_frame, write_frame, write_frame_as, Msg, WireFormat, WireResult, PROTOCOL_VERSION,
 };
@@ -344,6 +347,11 @@ enum Mode {
 }
 
 struct Shared {
+    /// This run's pool lease ticket (pool mode; 0 in spawn mode). One
+    /// ticket per run, shared by all its slots: the pool round-robins
+    /// grants across tickets, so concurrent runs sharing a pool divide
+    /// the worker supply fairly instead of racing FIFO.
+    ticket: u64,
     /// The lazy spec stream — pulled one task per dispatch, never
     /// materialized. The exhaustion latch, fire-once completion hook,
     /// restore filter, and bounded abort drain all live inside
@@ -396,6 +404,11 @@ struct Conn {
     /// pre-v5 worker, which may only be sent unnamed tasks — it would
     /// silently mis-hash (and mis-execute) a named one.
     exps: Option<Vec<String>>,
+    /// Pool busy-accounting guard (pool mode; `None` for spawned
+    /// workers). Held for the connection's lifetime so concurrent runs
+    /// see this worker as leased, and released on drop — whether the
+    /// connection ends cleanly, crashes, or is reaped.
+    _lease: Option<LeaseToken>,
 }
 
 /// Runs every spec the lazy `source` yields across `opts.workers` worker
@@ -433,7 +446,14 @@ pub fn run(
 
     let drained_hook = hooks.on_source_drained.take();
     let restore_filter = hooks.restore_filter.take();
+    // One lease ticket per run: the pool's round-robin grant policy keys
+    // on it, so every slot of this run leases under the same identity.
+    let ticket = match &mode {
+        Mode::Pool(pool) => pool.ticket(),
+        Mode::Spawn { .. } => 0,
+    };
     let shared = Arc::new(Shared {
+        ticket,
         source: DrainOnceSource::new(source, restore_filter, drained_hook),
         tasks: Mutex::new(Vec::new()),
         settings,
@@ -604,6 +624,7 @@ fn slot_loop(sh: &Shared, slot: usize, rx: Option<Receiver<RoutedConn>>) {
                 Mode::Spawn { .. } => {
                     let rx = rx.as_ref().expect("spawn mode has a route");
                     spawn_worker(sh, slot, rx, spawn_seq, crashes_used > 0)
+                        .map_err(AcquireFail::Failed)
                 }
                 Mode::Pool(pool) => lease_worker(sh, pool),
             };
@@ -612,7 +633,17 @@ fn slot_loop(sh: &Shared, slot: usize, rx: Option<Receiver<RoutedConn>>) {
                     sh.set_caps(slot, CapEntry::Has(c.exps.clone()));
                     conn = Some(c);
                 }
-                Err(e) => {
+                Err(AcquireFail::Contended) => {
+                    // Every registered worker is leased out right now —
+                    // by this run's other slots or by a concurrent run
+                    // sharing the pool. That is contention, not a supply
+                    // failure: return the attempt unconsumed and retry,
+                    // charging nothing to this slot's crash budget (a
+                    // neighbor's borrow must never retire our slot).
+                    sh.give_back(att);
+                    continue;
+                }
+                Err(AcquireFail::Failed(e)) => {
                     crashes_used += 1;
                     sh.fleet_budget(slot, crashes_used);
                     sh.crashes.fetch_add(1, Ordering::SeqCst);
@@ -963,25 +994,65 @@ fn reap(conn: &mut Conn) -> String {
     }
 }
 
-/// Leases the next registered pool worker and completes its run handshake
-/// (read deadline + `Hello`). Retries within the connect-timeout window:
-/// a queue can hold stale registrations whose worker died while parked,
-/// and those must not count as an acquisition failure while live ones
-/// wait behind them.
-fn lease_worker(sh: &Shared, pool: &Arc<WorkerPool>) -> Result<Conn, MementoError> {
+/// Why a slot failed to obtain a worker connection.
+enum AcquireFail {
+    /// Every registered pool worker is currently leased — by this run's
+    /// other slots or by a concurrent run sharing the pool. Not a supply
+    /// failure: the slot returns its attempt and retries without
+    /// consuming crash budget. (Also the cancel path: a cancelled run
+    /// stops waiting and lets `next_task` account the attempt.)
+    Contended,
+    /// A genuine acquisition failure: no worker registered within the
+    /// window, the pool shut down, or a spawn failed. Charged to the
+    /// slot's crash budget.
+    Failed(MementoError),
+}
+
+/// How long one `lease_as` wait slice lasts inside [`lease_worker`]: the
+/// bound on how stale the cancel check can get while a slot waits for a
+/// worker grant.
+const LEASE_SLICE: Duration = Duration::from_millis(250);
+
+/// Leases the next pool worker granted to this run's ticket and completes
+/// its run handshake (read deadline + `Hello`). Retries within the
+/// connect-timeout window: a queue can hold stale registrations whose
+/// worker died while parked, and those must not count as an acquisition
+/// failure while live ones wait behind them. Waits in short slices so a
+/// cancel (e.g. a daemon shutdown) is noticed promptly, and classifies an
+/// expired window by the pool's busy signal: *contention* (workers exist,
+/// all leased) is returned as [`AcquireFail::Contended`] so concurrent
+/// runs sharing the pool never charge each other's borrows to a crash
+/// budget.
+fn lease_worker(sh: &Shared, pool: &Arc<WorkerPool>) -> Result<Conn, AcquireFail> {
     let deadline = Instant::now() + sh.opts.connect_timeout;
+    let mut contended = false;
     loop {
+        if sh.cancelled() {
+            return Err(AcquireFail::Contended);
+        }
         let remaining = deadline.saturating_duration_since(Instant::now());
-        // `lease` blocks up to `remaining` itself, so a `None` here means
-        // the window elapsed (or the pool shut down) — terminal either
-        // way, never a spin.
-        let lease = if remaining.is_zero() { None } else { pool.lease(remaining) };
-        let Some(reg) = lease else {
-            return Err(MementoError::ipc(format!(
+        if remaining.is_zero() {
+            if contended {
+                return Err(AcquireFail::Contended);
+            }
+            return Err(AcquireFail::Failed(MementoError::ipc(format!(
                 "no remote worker registered with the pool at {} within {:?}",
                 pool.endpoint(),
                 sh.opts.connect_timeout
-            )));
+            ))));
+        }
+        let reg = match pool.lease_as(sh.ticket, remaining.min(LEASE_SLICE)) {
+            Lease::Granted(reg) => reg,
+            Lease::Closed => {
+                return Err(AcquireFail::Failed(MementoError::ipc(format!(
+                    "worker pool at {} shut down while a lease was pending",
+                    pool.endpoint()
+                ))));
+            }
+            Lease::TimedOut { busy } => {
+                contended = busy;
+                continue;
+            }
         };
         if reg
             .stream
@@ -1014,6 +1085,7 @@ fn lease_worker(sh: &Shared, pool: &Arc<WorkerPool>) -> Result<Conn, MementoErro
             wire,
             clock_offset_us: reg.clock_offset_us,
             exps: reg.exps,
+            _lease: reg.lease,
         });
     }
 }
@@ -1099,7 +1171,15 @@ fn spawn_worker(
         let _ = child.wait();
         return Err(MementoError::ipc(format!("send hello: {e}")));
     }
-    Ok(Conn { child: Some(child), reader: stream, writer, wire, clock_offset_us, exps })
+    Ok(Conn {
+        child: Some(child),
+        reader: stream,
+        writer,
+        wire,
+        clock_offset_us,
+        exps,
+        _lease: None,
+    })
 }
 
 // ---- shared queue operations -------------------------------------------

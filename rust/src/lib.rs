@@ -58,6 +58,8 @@
 pub mod bench;
 pub mod config;
 pub mod coordinator;
+#[cfg(unix)]
+pub mod daemon;
 pub mod experiments;
 #[cfg(unix)]
 pub mod ipc;

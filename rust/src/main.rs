@@ -6,7 +6,11 @@
 //!   resume  <config.json> [opts]       resume a checkpointed run
 //!   exps                               list the experiments this binary registers
 //!   serve   --connect host:port ...    standing worker for a remote run
+//!   daemon  --root <dir> [opts]        multi-tenant run-submission service
+//!   submit  <config.json> [opts]       submit a grid to a running daemon
+//!   attach  <run-id> [opts]            re-attach to a daemon run's event stream
 //!   status  --checkpoint <dir>         inspect a run manifest/telemetry
+//!           --daemon <addr>            ... or a daemon's live status document
 //!   report  --results <file> [opts]    pivot saved results into a table
 //!   trace   <summarize|export> <dir>   analyze a recorded span trace
 //!   query   <store-dir> [opts]         search results across runs in a store
@@ -47,6 +51,9 @@ fn main() -> ExitCode {
         "resume" => cmd_run(rest, true),
         "exps" => cmd_exps(rest),
         "serve" => cmd_serve(rest),
+        "daemon" => cmd_daemon(rest),
+        "submit" => cmd_submit(rest),
+        "attach" => cmd_attach(rest),
         "status" => cmd_status(rest),
         "report" => cmd_report(rest),
         "trace" => cmd_trace(rest),
@@ -77,7 +84,7 @@ fn main() -> ExitCode {
 fn top_help() -> String {
     "memento — effortless, efficient, and reliable ML experiments\n\
      \n\
-     USAGE: memento <expand|run|resume|exps|serve|status|report|trace|query|migrate> [options]\n\
+     USAGE: memento <expand|run|resume|exps|serve|daemon|submit|attach|status|report|trace|query|migrate> [options]\n\
      \n\
      Try `memento run --help` for per-command options."
         .to_string()
@@ -643,6 +650,408 @@ fn cmd_serve(args: &[String]) -> Result<(), String> {
     Err("memento serve requires a unix platform".into())
 }
 
+/// Parsed `memento daemon` arguments — like [`ServeConfig`], parsing is
+/// platform-neutral so `--help` and flag errors match on every OS.
+#[cfg_attr(not(unix), allow(dead_code))]
+struct DaemonCliConfig {
+    root: Option<String>,
+    listen: String,
+    worker_listen: String,
+    token: Option<String>,
+    max_queue: usize,
+    max_in_flight: usize,
+    workers: usize,
+    wire: memento::util::codec::WireFormat,
+    version: String,
+    task_timeout: f64,
+    stop: bool,
+    connect: Option<String>,
+}
+
+fn parse_daemon_args(args: &[String]) -> Result<DaemonCliConfig, String> {
+    let spec = CliSpec::new(
+        "memento daemon",
+        "multi-tenant run-submission service: one shared worker pool and result \
+         store, many concurrent `memento submit` clients",
+    )
+    .opt_required("root", "daemon state root (holds store/, runs/, pending/)")
+    .opt(
+        "listen",
+        "127.0.0.1:7461",
+        "client (submit/attach/status) bind address — host:port, or 'unix' \
+         for a private same-host socket",
+    )
+    .opt(
+        "worker-listen",
+        "127.0.0.1:7462",
+        "worker-registration bind address — host:port, or 'unix'; point \
+         `memento serve --connect` here",
+    )
+    .opt_required(
+        "token-file",
+        "file holding the shared auth token clients AND workers present \
+         (required when either listener is TCP)",
+    )
+    .opt("max-queue", "64", "queued submissions before Submit is rejected")
+    .opt("max-in-flight", "2", "concurrently running runs per tenant")
+    .opt("workers", "2", "remote worker slots each run schedules onto")
+    .opt("version", "v1", "default experiment version for submissions that don't pin one")
+    .opt(
+        "task-timeout",
+        "0",
+        "per-task wall-clock budget in seconds applied to every run (0 = unbounded)",
+    )
+    .opt("wire", "binary", "store/journal payload encoding: binary | json")
+    .flag("stop", "instead of serving: ask the daemon at --connect to drain and exit")
+    .opt_required("connect", "with --stop: the daemon's client address");
+    let a = unwrap_cli(spec.parse(args))?;
+    let token = match a.get("token-file") {
+        Some(path) => Some(read_token_file(path)?),
+        None => None,
+    };
+    let wire_arg = a.get("wire").unwrap_or("binary");
+    let wire = memento::util::codec::WireFormat::parse_arg(wire_arg)
+        .ok_or_else(|| format!("--wire must be 'binary' or 'json', got '{wire_arg}'"))?;
+    Ok(DaemonCliConfig {
+        root: a.get("root").map(str::to_string),
+        listen: a.get("listen").unwrap_or("127.0.0.1:7461").to_string(),
+        worker_listen: a.get("worker-listen").unwrap_or("127.0.0.1:7462").to_string(),
+        token,
+        max_queue: unwrap_cli(a.get_usize("max-queue"))?,
+        max_in_flight: unwrap_cli(a.get_usize("max-in-flight"))?,
+        workers: unwrap_cli(a.get_usize("workers"))?,
+        wire,
+        version: a.get("version").unwrap_or("v1").to_string(),
+        task_timeout: unwrap_cli(a.get_f64("task-timeout"))?,
+        stop: a.flag("stop"),
+        connect: a.get("connect").map(str::to_string),
+    })
+}
+
+/// Client-address parsing for the daemon verbs: an absolute or relative
+/// path is a Unix socket, everything else is `host:port` (an explicit
+/// `tcp://` prefix also works).
+#[cfg(unix)]
+fn parse_daemon_endpoint(addr: &str) -> memento::ipc::transport::Endpoint {
+    use memento::ipc::transport::Endpoint;
+    if let Some(rest) = addr.strip_prefix("tcp://") {
+        return Endpoint::Tcp(rest.to_string());
+    }
+    if addr.starts_with('/') || addr.starts_with("./") {
+        return Endpoint::Unix(addr.into());
+    }
+    Endpoint::Tcp(addr.to_string())
+}
+
+/// Bind-address parsing for the daemon listeners: `unix` = a private
+/// socket in a fresh temp dir, anything else = a TCP `host:port`.
+#[cfg(unix)]
+fn parse_daemon_bind(addr: &str) -> memento::ipc::transport::Transport {
+    use memento::ipc::transport::Transport;
+    if addr == "unix" {
+        Transport::Unix
+    } else {
+        Transport::Tcp { bind: addr.to_string() }
+    }
+}
+
+/// `memento daemon`: start (or, with `--stop`, drain) the multi-tenant
+/// submission service. Serves until a drain is requested over the wire,
+/// then exits once in-flight runs have drained — queued submissions stay
+/// pending on disk and resume on the next start.
+#[cfg(unix)]
+fn cmd_daemon(args: &[String]) -> Result<(), String> {
+    use memento::daemon::{Daemon, DaemonClient, DaemonOptions};
+
+    let cfg = parse_daemon_args(args)?;
+    if cfg.stop {
+        let addr = cfg.connect.as_deref().ok_or("--stop requires --connect <addr>")?;
+        let client = DaemonClient::new(parse_daemon_endpoint(addr), cfg.token);
+        client.request_shutdown().map_err(|e| e.to_string())?;
+        eprintln!("memento daemon: drain requested at {addr}");
+        return Ok(());
+    }
+    let root = cfg.root.as_deref().ok_or("missing --root <dir>")?;
+    let mut options = DaemonOptions::new(root);
+    options.token = cfg.token;
+    options.max_queue = cfg.max_queue;
+    options.max_in_flight = cfg.max_in_flight;
+    options.workers_per_run = cfg.workers;
+    options.wire = cfg.wire;
+    options.version = cfg.version.clone();
+    if cfg.task_timeout > 0.0 {
+        options.task_timeout = Some(Duration::from_secs_f64(cfg.task_timeout));
+    }
+    let daemon = Daemon::start(
+        builtin_registry(false),
+        options,
+        &parse_daemon_bind(&cfg.listen),
+        &parse_daemon_bind(&cfg.worker_listen),
+    )
+    .map_err(|e| e.to_string())?;
+    let workers = daemon.worker_endpoint();
+    eprintln!("memento daemon: clients on {}", daemon.endpoint());
+    eprintln!(
+        "memento daemon: workers on {workers} — start them with `memento serve --connect {} --token-file <file>`",
+        workers.to_string().trim_start_matches("tcp://"),
+    );
+    daemon.wait();
+    eprintln!("memento daemon: drained, exiting");
+    Ok(())
+}
+
+#[cfg(not(unix))]
+fn cmd_daemon(args: &[String]) -> Result<(), String> {
+    let _ = parse_daemon_args(args)?;
+    Err("memento daemon requires a unix platform".into())
+}
+
+/// Flags shared by `memento submit` and `memento attach`.
+#[cfg_attr(not(unix), allow(dead_code))]
+fn daemon_client_spec(spec: CliSpec) -> CliSpec {
+    spec.opt_required("connect", "daemon client address (host:port, or a unix socket path)")
+        .opt_required("token-file", "file holding the shared auth token")
+        .opt(
+            "output",
+            "summary",
+            "output mode: summary (progress lines + totals) | ndjson (one \
+             JSON event document per line, machine-parseable)",
+        )
+}
+
+/// Connection half shared by `submit`/`attach`/`status --daemon`.
+#[cfg_attr(not(unix), allow(dead_code))]
+struct DaemonConn {
+    addr: String,
+    token: Option<String>,
+    ndjson: bool,
+}
+
+#[cfg_attr(not(unix), allow(dead_code))]
+fn parse_daemon_conn(a: &memento::util::cli::CliArgs) -> Result<DaemonConn, String> {
+    let addr = a.get("connect").ok_or("missing --connect <addr>")?.to_string();
+    let token = match a.get("token-file") {
+        Some(path) => Some(read_token_file(path)?),
+        None => None,
+    };
+    let ndjson = match a.get("output").unwrap_or("summary") {
+        "summary" => false,
+        "ndjson" => true,
+        other => return Err(format!("--output must be 'summary' or 'ndjson', got '{other}'")),
+    };
+    Ok(DaemonConn { addr, token, ndjson })
+}
+
+/// Follows a daemon run's event stream to completion. Summary mode
+/// prints one line per finished task plus the totals; ndjson prints the
+/// raw event documents. The exit code reflects the run: failures, an
+/// abort, a drain-cancellation, or a launch error all return `Err`.
+#[cfg(unix)]
+fn stream_daemon_run(mut handle: memento::daemon::RunHandle, ndjson: bool) -> Result<(), String> {
+    let mut outcome: Option<String> = None;
+    while let Some(ev) = handle.next_event().map_err(|e| e.to_string())? {
+        let kind = ev.get("event").and_then(|j| j.as_str()).unwrap_or("").to_string();
+        if ndjson {
+            println!("{ev}");
+        } else {
+            match kind.as_str() {
+                "task_finished" => {
+                    let id = ev.get("id").and_then(|j| j.as_str()).unwrap_or("?");
+                    let status = ev.get("status").and_then(|j| j.as_str()).unwrap_or("?");
+                    let cached =
+                        ev.get("from_cache").and_then(|j| j.as_bool()).unwrap_or(false);
+                    println!(
+                        "task {:<12} {status}{}",
+                        &id[..12.min(id.len())],
+                        if cached { " (cached)" } else { "" }
+                    );
+                }
+                "worker_crashed" => {
+                    let msg = ev.get("message").and_then(|j| j.as_str()).unwrap_or("?");
+                    eprintln!("worker crashed: {msg}");
+                }
+                "run_complete" => {
+                    println!(
+                        "run complete: {} task(s), {} succeeded, {} failed, {} from cache, {} skipped",
+                        ev.get("total").and_then(|j| j.as_i64()).unwrap_or(0),
+                        ev.get("succeeded").and_then(|j| j.as_i64()).unwrap_or(0),
+                        ev.get("failed").and_then(|j| j.as_i64()).unwrap_or(0),
+                        ev.get("from_cache").and_then(|j| j.as_i64()).unwrap_or(0),
+                        ev.get("skipped").and_then(|j| j.as_i64()).unwrap_or(0),
+                    );
+                }
+                "run_error" => {
+                    let msg = ev.get("message").and_then(|j| j.as_str()).unwrap_or("?");
+                    eprintln!("run error: {msg}");
+                }
+                _ => {}
+            }
+        }
+        match kind.as_str() {
+            "run_complete" => {
+                let failed = ev.get("failed").and_then(|j| j.as_i64()).unwrap_or(0);
+                let aborted = ev.get("aborted").and_then(|j| j.as_bool()).unwrap_or(false);
+                let cancelled = ev.get("cancelled").and_then(|j| j.as_bool()).unwrap_or(false);
+                outcome = if aborted {
+                    Some("run aborted".to_string())
+                } else if cancelled {
+                    Some("run cancelled (daemon drain)".to_string())
+                } else if failed > 0 {
+                    Some(format!("run completed with {failed} failure(s)"))
+                } else {
+                    None
+                };
+            }
+            "run_error" => {
+                let msg = ev.get("message").and_then(|j| j.as_str()).unwrap_or("?");
+                outcome = Some(format!("run failed to launch: {msg}"));
+            }
+            _ => {}
+        }
+    }
+    match outcome {
+        Some(err) => Err(err),
+        None => Ok(()),
+    }
+}
+
+/// `memento submit`: send a config matrix to a running daemon and (unless
+/// `--detach`) follow its event stream. The printed run id re-attaches
+/// later with `memento attach`.
+#[cfg(unix)]
+fn cmd_submit(args: &[String]) -> Result<(), String> {
+    use memento::daemon::{DaemonClient, SubmitOptions};
+
+    let spec = daemon_client_spec(
+        CliSpec::new("memento submit", "submit a config matrix to a running daemon")
+            .positional("config", "config matrix JSON file"),
+    )
+    .opt("tenant", "default", "tenant to account the run under (quota + store label)")
+    .opt_required("exp", "run every task as this registered experiment (daemon-side registry)")
+    .opt_required("version", "experiment version override (daemon default if absent)")
+    .opt("seed", "0", "base RNG seed")
+    .opt_required("label", "human-chosen run label (duplicate labels are rejected)")
+    .flag("detach", "print the accepted run id and exit without following events");
+    let a = unwrap_cli(spec.parse(args))?;
+    let conn = parse_daemon_conn(&a)?;
+    let path = a.pos("config").ok_or("missing <config>")?;
+    let matrix = loader::from_file(Path::new(path)).map_err(|e| e.to_string())?;
+    let client = DaemonClient::new(parse_daemon_endpoint(&conn.addr), conn.token);
+    let handle = client
+        .submit(
+            &matrix,
+            &SubmitOptions {
+                tenant: a.get("tenant").unwrap_or("default").to_string(),
+                exp: a.get("exp").map(str::to_string),
+                version: a.get("version").map(str::to_string),
+                seed: unwrap_cli(a.get_u64("seed"))?,
+                label: a.get("label").map(str::to_string),
+            },
+        )
+        .map_err(|e| e.to_string())?;
+    eprintln!("memento submit: accepted as run {}", handle.run_id());
+    if a.flag("detach") {
+        println!("{}", handle.run_id());
+        handle.detach();
+        return Ok(());
+    }
+    stream_daemon_run(handle, conn.ndjson)
+}
+
+#[cfg(not(unix))]
+fn cmd_submit(_args: &[String]) -> Result<(), String> {
+    Err("memento submit requires a unix platform".into())
+}
+
+/// `memento attach`: resume a daemon run's event stream. Terminal events
+/// the client missed (including whole runs finished in an earlier daemon
+/// life) are replayed first.
+#[cfg(unix)]
+fn cmd_attach(args: &[String]) -> Result<(), String> {
+    use memento::daemon::DaemonClient;
+
+    let spec = daemon_client_spec(
+        CliSpec::new("memento attach", "re-attach to a daemon run's event stream")
+            .positional("run-id", "run id printed by `memento submit`"),
+    );
+    let a = unwrap_cli(spec.parse(args))?;
+    let conn = parse_daemon_conn(&a)?;
+    let run_id = a.pos("run-id").ok_or("missing <run-id>")?;
+    let client = DaemonClient::new(parse_daemon_endpoint(&conn.addr), conn.token);
+    let handle = client.attach(run_id).map_err(|e| e.to_string())?;
+    stream_daemon_run(handle, conn.ndjson)
+}
+
+#[cfg(not(unix))]
+fn cmd_attach(_args: &[String]) -> Result<(), String> {
+    Err("memento attach requires a unix platform".into())
+}
+
+/// The `status --daemon` section: fetch and render the daemon's live
+/// status document.
+#[cfg(unix)]
+fn print_daemon_status(addr: &str, token: Option<String>) -> Result<(), String> {
+    use memento::daemon::DaemonClient;
+
+    let client = DaemonClient::new(parse_daemon_endpoint(addr), token);
+    let doc = client.status().map_err(|e| e.to_string())?;
+    let daemon = doc.get("daemon");
+    println!(
+        "daemon    : {addr} — up {:.1}s{}",
+        daemon.and_then(|d| d.get("uptime_secs")).and_then(|j| j.as_f64()).unwrap_or(0.0),
+        if daemon.and_then(|d| d.get("draining")).and_then(|j| j.as_bool()).unwrap_or(false) {
+            " (draining)"
+        } else {
+            ""
+        },
+    );
+    if let Some(q) = doc.get("queue") {
+        println!(
+            "queue     : {} waiting of {} (quota {}/tenant)",
+            q.get("depth").and_then(|j| j.as_i64()).unwrap_or(0),
+            q.get("max").and_then(|j| j.as_i64()).unwrap_or(0),
+            q.get("max_in_flight").and_then(|j| j.as_i64()).unwrap_or(0),
+        );
+    }
+    if let Some(p) = doc.get("pool") {
+        println!(
+            "pool      : {} worker(s) registered, {} available, {} leased, {} run(s) waiting",
+            p.get("registered").and_then(|j| j.as_i64()).unwrap_or(0),
+            p.get("available").and_then(|j| j.as_i64()).unwrap_or(0),
+            p.get("leased").and_then(|j| j.as_i64()).unwrap_or(0),
+            p.get("waiting").and_then(|j| j.as_i64()).unwrap_or(0),
+        );
+    }
+    if let Some(s) = doc.get("store") {
+        println!(
+            "store     : {} segment(s), {} live record(s), {} dedup hit(s), {} run(s)",
+            s.get("segments").and_then(|j| j.as_i64()).unwrap_or(0),
+            s.get("live_records").and_then(|j| j.as_i64()).unwrap_or(0),
+            s.get("dedup_hits").and_then(|j| j.as_i64()).unwrap_or(0),
+            s.get("runs").and_then(|j| j.as_i64()).unwrap_or(0),
+        );
+    }
+    if let Some(runs) = doc.get("runs").and_then(|j| j.as_arr()) {
+        if !runs.is_empty() {
+            println!("runs      :");
+            for r in runs {
+                println!(
+                    "  {:<40} {:<12} {}",
+                    r.get("run_id").and_then(|j| j.as_str()).unwrap_or("?"),
+                    r.get("tenant").and_then(|j| j.as_str()).unwrap_or("?"),
+                    r.get("phase").and_then(|j| j.as_str()).unwrap_or("?"),
+                );
+            }
+        }
+    }
+    Ok(())
+}
+
+#[cfg(not(unix))]
+fn print_daemon_status(_addr: &str, _token: Option<String>) -> Result<(), String> {
+    Err("status --daemon requires a unix platform".into())
+}
+
 /// The hidden worker mode behind `--isolation process`: connect to the
 /// supervisor socket named by the environment, execute tasks against the
 /// full built-in registry, exit.
@@ -682,11 +1091,29 @@ fn cmd_status(args: &[String]) -> Result<(), String> {
         "segment-log store directory written by `run --store-dir` — \
          prints segment counts, live/dead record ratio, index shard \
          occupancy, and cross-run dedup hits",
-    );
+    )
+    .opt_required(
+        "daemon",
+        "daemon client address (host:port or unix socket path) — prints \
+         the live status document: queue depth, per-tenant in-flight \
+         runs, pool and store health",
+    )
+    .opt_required("token-file", "file holding the daemon auth token (with --daemon)");
     let a = unwrap_cli(spec.parse(args))?;
     let (ck_dir, trace_dir, store_dir) = (a.get("checkpoint"), a.get("trace"), a.get("store"));
-    if ck_dir.is_none() && trace_dir.is_none() && store_dir.is_none() {
-        return Err("status needs --checkpoint <dir>, --trace <dir>, and/or --store <dir>".into());
+    let daemon_addr = a.get("daemon");
+    if ck_dir.is_none() && trace_dir.is_none() && store_dir.is_none() && daemon_addr.is_none() {
+        return Err(
+            "status needs --checkpoint <dir>, --trace <dir>, --store <dir>, and/or --daemon <addr>"
+                .into(),
+        );
+    }
+    if let Some(addr) = daemon_addr {
+        let token = match a.get("token-file") {
+            Some(path) => Some(read_token_file(path)?),
+            None => None,
+        };
+        print_daemon_status(addr, token)?;
     }
     if let Some(dir) = store_dir {
         print_store_status(dir)?;

@@ -619,6 +619,24 @@ fn note_run(runs: &mut Vec<String>, label: &str) {
     runs.push(label.to_string());
 }
 
+/// Builds the per-tenant run label the daemon registers submissions
+/// under: `tenant/run_id`. Run labels are opaque strings to the store —
+/// the `/` is a display convention, not a path — and [`split_tenant`]
+/// is its inverse for status views and per-tenant queries.
+pub fn tenant_label(tenant: &str, run_id: &str) -> String {
+    format!("{tenant}/{run_id}")
+}
+
+/// Splits a [`tenant_label`]-shaped run label back into
+/// `(tenant, run_id)`. Labels without a `/` (every pre-daemon run)
+/// come back with an empty tenant.
+pub fn split_tenant(label: &str) -> (&str, &str) {
+    match label.split_once('/') {
+        Some((tenant, run_id)) => (tenant, run_id),
+        None => ("", label),
+    }
+}
+
 /// Replays every segment's record headers into a fresh [`ScanState`].
 /// Only scalar header fields are scanned — `params`/`value` subtrees are
 /// skipped byte-wise, which is what keeps open cost proportional to
@@ -733,6 +751,16 @@ mod tests {
 
     fn params(model: &str, lr: f64) -> Json {
         Json::obj(vec![("model", Json::str(model)), ("lr", Json::Num(lr))])
+    }
+
+    #[test]
+    fn tenant_labels_round_trip() {
+        assert_eq!(tenant_label("alice", "run-7"), "alice/run-7");
+        assert_eq!(split_tenant("alice/run-7"), ("alice", "run-7"));
+        // Pre-daemon labels have no tenant component.
+        assert_eq!(split_tenant("demo"), ("", "demo"));
+        // A run id containing '/' splits at the first separator only.
+        assert_eq!(split_tenant("a/b/c"), ("a", "b/c"));
     }
 
     fn value(score: f64) -> Json {

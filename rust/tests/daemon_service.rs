@@ -1,0 +1,547 @@
+//! Integration tests for the multi-tenant daemon
+//! ([`memento::daemon`]): concurrent run submission over loopback TCP,
+//! fair-share scheduling onto one shared worker pool, cross-run store
+//! dedup, token auth, detach/attach replay, and the deterministic
+//! drain-shutdown / restart-resume cycle.
+//!
+//! Workers are in-process threads running
+//! [`memento::ipc::worker::serve_remote`] against the daemon's worker
+//! endpoint — the exact `memento serve` code path. They re-register
+//! after every task attempt (`tasks_per_connection: 1`), so the pool's
+//! round-robin lease grants interleave concurrent runs at task
+//! granularity. Every worker is bounded by `give_up_after`, so threads
+//! always join once the daemon's pool shuts down.
+
+#![cfg(unix)]
+
+use memento::coordinator::journal::Journal;
+use memento::daemon::{Daemon, DaemonClient, DaemonOptions, RunHandle, SubmitOptions};
+use memento::ipc::transport::{Endpoint, Transport};
+use memento::ipc::worker::{serve_remote, RemoteServeReport, RemoteWorkerOptions};
+use memento::prelude::*;
+use memento::util::fs::TempDir;
+use std::collections::{BTreeMap, BTreeSet};
+use std::path::Path;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+const TOKEN: &str = "daemon-test-token";
+
+/// Gate for the quota test's deliberately-stuck task: a task with
+/// `block=1` spins until the test releases it.
+static RELEASE: AtomicBool = AtomicBool::new(false);
+
+/// The experiment function shared by the daemon (launch side) and every
+/// worker. Task identity hashes params + version, so overlapping grids
+/// submitted by different tenants produce identical task ids — the
+/// cross-run dedup under test.
+fn exp(ctx: &TaskContext) -> Result<Json, MementoError> {
+    if ctx.param_i64("block").unwrap_or(0) == 1 {
+        while !RELEASE.load(Ordering::SeqCst) {
+            std::thread::sleep(Duration::from_millis(5));
+        }
+    }
+    let ms = ctx.param_i64("ms").unwrap_or(0);
+    if ms > 0 {
+        std::thread::sleep(Duration::from_millis(ms as u64));
+    }
+    let i = ctx.param_i64("i")?;
+    Ok(Json::int(i * 10))
+}
+
+/// `i` in `lo..hi`, each task sleeping `ms` (shared across tenants so
+/// overlapping ranges share task ids).
+fn grid(lo: i64, hi: i64, ms: i64) -> ConfigMatrix {
+    ConfigMatrix::builder()
+        .param("i", (lo..hi).map(pv_int).collect())
+        .param("ms", vec![pv_int(ms)])
+        .build()
+        .unwrap()
+}
+
+fn start_daemon(root: &Path, max_in_flight: usize) -> Daemon {
+    let mut options = DaemonOptions::new(root);
+    options.token = Some(TOKEN.to_string());
+    options.max_in_flight = max_in_flight;
+    options.workers_per_run = 2;
+    Daemon::start(
+        Registry::solo(Arc::new(exp)),
+        options,
+        &Transport::Tcp { bind: "127.0.0.1:0".to_string() },
+        &Transport::Tcp { bind: "127.0.0.1:0".to_string() },
+    )
+    .unwrap()
+}
+
+/// A standing worker against the daemon's worker endpoint. One task per
+/// connection (so lease grants round-robin between runs at task
+/// granularity); exits once the pool has been gone for 2 seconds.
+fn spawn_worker(
+    endpoint: &Endpoint,
+) -> JoinHandle<Result<RemoteServeReport, MementoError>> {
+    let endpoint = endpoint.clone();
+    std::thread::spawn(move || {
+        serve_remote(
+            Arc::new(Registry::solo(Arc::new(exp))),
+            &endpoint,
+            RemoteWorkerOptions {
+                token: Some(TOKEN.to_string()),
+                tasks_per_connection: Some(1),
+                give_up_after: Some(Duration::from_secs(2)),
+                quiet: true,
+                ..RemoteWorkerOptions::default()
+            },
+        )
+    })
+}
+
+fn client(endpoint: &Endpoint) -> DaemonClient {
+    DaemonClient::new(endpoint.clone(), Some(TOKEN.to_string()))
+}
+
+fn submit_opts(tenant: &str, label: &str) -> SubmitOptions {
+    SubmitOptions {
+        tenant: tenant.to_string(),
+        label: Some(label.to_string()),
+        ..SubmitOptions::default()
+    }
+}
+
+/// Drains a run's event stream to the end.
+fn collect_events(mut handle: RunHandle) -> Vec<Json> {
+    let mut out = Vec::new();
+    while let Some(ev) = handle.next_event().unwrap() {
+        out.push(ev);
+    }
+    out
+}
+
+fn kind(ev: &Json) -> &str {
+    ev.get("event").and_then(|j| j.as_str()).unwrap_or("")
+}
+
+fn finished(events: &[Json]) -> Vec<&Json> {
+    events.iter().filter(|e| kind(e) == "task_finished").collect()
+}
+
+fn run_complete(events: &[Json]) -> &Json {
+    events
+        .iter()
+        .find(|e| kind(e) == "run_complete")
+        .expect("stream must end with run_complete")
+}
+
+fn int(ev: &Json, field: &str) -> i64 {
+    ev.get(field).and_then(|j| j.as_i64()).unwrap_or(-1)
+}
+
+/// Polls `f` for up to `secs` seconds.
+fn wait_until(secs: f64, mut f: impl FnMut() -> bool) -> bool {
+    let deadline = Instant::now() + Duration::from_secs_f64(secs);
+    while Instant::now() < deadline {
+        if f() {
+            return true;
+        }
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    false
+}
+
+/// The phase of `run_id` according to the daemon's status document.
+fn phase_of(daemon: &Daemon, run_id: &str) -> String {
+    let status = daemon.status();
+    status
+        .get("runs")
+        .and_then(Json::as_arr)
+        .unwrap_or(&[])
+        .iter()
+        .find(|r| r.get("run_id").and_then(Json::as_str) == Some(run_id))
+        .and_then(|r| r.get("phase").and_then(Json::as_str))
+        .map(str::to_string)
+        .unwrap_or_else(|| "absent".to_string())
+}
+
+/// The headline multi-client test: three tenants submit overlapping
+/// grids concurrently against one daemon backed by a two-worker TCP
+/// pool. Every run completes (no starvation under round-robin leases),
+/// per-run journal accounting is exactly-once, and across the fleet
+/// every *distinct* task executes exactly once — overlapping cells are
+/// restored from the shared store, and identical params yield identical
+/// task ids across tenants.
+#[test]
+fn multi_tenant_submissions_share_the_store_and_account_exactly_once() {
+    let td = TempDir::new("daemon-multi").unwrap();
+    let daemon = start_daemon(&td.join("root"), 1);
+    let w1 = spawn_worker(&daemon.worker_endpoint());
+    let w2 = spawn_worker(&daemon.worker_endpoint());
+    let endpoint = daemon.endpoint().clone();
+
+    // alice 0..6, bob 3..9, cara 0..4: union 0..9 = 9 distinct cells of
+    // 16 submitted.
+    let tenants: [(&str, i64, i64); 3] = [("alice", 0, 6), ("bob", 3, 9), ("cara", 0, 4)];
+    let clients: Vec<_> = tenants
+        .map(|(tenant, lo, hi)| {
+            let endpoint = endpoint.clone();
+            std::thread::spawn(move || {
+                let handle = client(&endpoint)
+                    .submit(&grid(lo, hi, 20), &submit_opts(tenant, "g1"))
+                    .unwrap();
+                let run_id = handle.run_id().to_string();
+                (run_id, collect_events(handle))
+            })
+        })
+        .into_iter()
+        .collect();
+    let runs: Vec<(String, Vec<Json>)> = clients.into_iter().map(|h| h.join().unwrap()).collect();
+
+    let mut succeeded_total = 0;
+    let mut restored_total = 0;
+    let mut ids_by_i: Vec<BTreeMap<i64, String>> = Vec::new();
+    for ((tenant, lo, hi), (run_id, events)) in tenants.iter().zip(&runs) {
+        let n = (hi - lo) as usize;
+        assert_eq!(run_id, &format!("{tenant}/g1"));
+
+        let complete = run_complete(events);
+        assert_eq!(int(complete, "total"), n as i64, "{tenant}: {complete}");
+        assert_eq!(int(complete, "failed"), 0, "{tenant}");
+        assert_eq!(complete.get("cancelled").and_then(|j| j.as_bool()), Some(false));
+
+        let done = finished(events);
+        assert_eq!(done.len(), n, "{tenant}: one terminal event per task");
+        let distinct: BTreeSet<&str> =
+            done.iter().filter_map(|e| e.get("id").and_then(|j| j.as_str())).collect();
+        assert_eq!(distinct.len(), n, "{tenant}: terminal events are per-task unique");
+        ids_by_i.push(
+            done.iter()
+                .map(|e| {
+                    let i = e
+                        .get("params")
+                        .and_then(|p| p.get("i"))
+                        .and_then(|j| j.as_i64())
+                        .unwrap();
+                    let id = e.get("id").and_then(|j| j.as_str()).unwrap().to_string();
+                    (i, id)
+                })
+                .collect(),
+        );
+
+        // Per-run exactly-once journal accounting: every cell either
+        // executed here (succeeded) or restored from the shared store.
+        let jpath = td.join("root").join("runs").join(tenant).join("g1").join("journal.jsonl");
+        let summary = Journal::summarize(&jpath).unwrap();
+        assert_eq!(summary.succeeded + summary.restored, n, "{tenant}: {summary:?}");
+        assert_eq!(summary.failed_attempts, 0, "{tenant}: {summary:?}");
+        assert_eq!(summary.timeouts, 0, "{tenant}: {summary:?}");
+        succeeded_total += summary.succeeded;
+        restored_total += summary.restored;
+    }
+
+    // Fleet-wide dedup: 9 distinct cells executed exactly once, the 7
+    // overlapping submissions restored — never re-executed.
+    assert_eq!(succeeded_total, 9, "every distinct cell executes exactly once");
+    assert_eq!(restored_total, 7, "every overlapping cell restores from the store");
+
+    // Task identity is tenant-independent: overlapping `i` values hash to
+    // the same id in every run that contains them.
+    for a in 0..ids_by_i.len() {
+        for b in a + 1..ids_by_i.len() {
+            for (i, id) in &ids_by_i[a] {
+                if let Some(other) = ids_by_i[b].get(i) {
+                    assert_eq!(id, other, "i={i} must have one identity across tenants");
+                }
+            }
+        }
+    }
+
+    // The shared store registered all three tenant-labelled runs.
+    let status = daemon.status();
+    assert_eq!(
+        status.get("store").and_then(|s| s.get("runs")).and_then(|j| j.as_i64()),
+        Some(3),
+        "{status}"
+    );
+
+    daemon.shutdown();
+    daemon.wait();
+    w1.join().unwrap().unwrap();
+    w2.join().unwrap().unwrap();
+}
+
+/// A client presenting the wrong token (or none) is refused before any
+/// daemon state is revealed: the rejection names neither runs, tenants,
+/// nor registered experiments, and attach is refused identically even
+/// for a run id that exists.
+#[test]
+fn bad_token_is_rejected_before_any_state_is_revealed() {
+    let td = TempDir::new("daemon-auth").unwrap();
+    let daemon = start_daemon(&td.join("root"), 2);
+    // Seed a real run id so a leaky attach would have something to leak.
+    // No workers: the run just sits running; auth must not depend on it.
+    let good = client(daemon.endpoint());
+    let seeded = good.submit(&grid(0, 2, 0), &submit_opts("alice", "secret-run")).unwrap();
+    let seeded_id = seeded.run_id().to_string();
+    seeded.detach();
+
+    for token in [Some("wrong-token".to_string()), None] {
+        let bad = DaemonClient::new(daemon.endpoint().clone(), token);
+        let err = bad.submit(&grid(0, 2, 0), &submit_opts("alice", "x")).unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("rejected"), "typed rejection, got: {msg}");
+        let attach_err = bad.attach(&seeded_id).unwrap_err().to_string();
+        let status_err = bad.status().unwrap_err().to_string();
+        for msg in [&msg, &attach_err, &status_err] {
+            assert!(
+                !msg.contains("secret-run") && !msg.contains("alice"),
+                "rejection must not leak daemon state: {msg}"
+            );
+        }
+    }
+    // An authenticated status still works afterwards — the refusals left
+    // the daemon healthy.
+    assert!(good.status().is_ok());
+    daemon.shutdown();
+    daemon.wait();
+}
+
+/// A capability-mismatched submission — an `--exp` name the daemon's
+/// registry does not contain — fails with a typed reason at submit time
+/// and never occupies a queue slot: a well-formed submission right after
+/// it runs to completion.
+#[test]
+fn unknown_experiment_fails_typed_without_wedging_the_queue() {
+    let td = TempDir::new("daemon-unknown-exp").unwrap();
+    let daemon = start_daemon(&td.join("root"), 2);
+    let worker = spawn_worker(&daemon.worker_endpoint());
+    let c = client(daemon.endpoint());
+
+    let mut opts = submit_opts("alice", "bad");
+    opts.exp = Some("nope".to_string());
+    let err = c.submit(&grid(0, 2, 0), &opts).unwrap_err().to_string();
+    assert!(err.contains("unknown experiment"), "typed reason, got: {err}");
+    assert!(err.contains("nope"), "{err}");
+
+    // The queue is untouched: a valid submission completes normally.
+    let events = collect_events(c.submit(&grid(0, 3, 0), &submit_opts("alice", "good")).unwrap());
+    let complete = run_complete(&events);
+    assert_eq!(int(complete, "total"), 3);
+    assert_eq!(int(complete, "failed"), 0);
+    assert_eq!(
+        daemon.status().get("queue").and_then(|q| q.get("depth")).and_then(|j| j.as_i64()),
+        Some(0)
+    );
+
+    daemon.shutdown();
+    daemon.wait();
+    worker.join().unwrap().unwrap();
+}
+
+/// Detaching mid-run must not kill the run, and a later attach replays
+/// the complete terminal event set — the events observed before the
+/// detach included, with nothing duplicated and nothing missing.
+#[test]
+fn detach_mid_run_keeps_the_run_alive_and_reattach_replays_everything() {
+    let td = TempDir::new("daemon-detach").unwrap();
+    let daemon = start_daemon(&td.join("root"), 2);
+    let w1 = spawn_worker(&daemon.worker_endpoint());
+    let w2 = spawn_worker(&daemon.worker_endpoint());
+    let c = client(daemon.endpoint());
+
+    let mut handle = c.submit(&grid(0, 6, 40), &submit_opts("alice", "d1")).unwrap();
+    let run_id = handle.run_id().to_string();
+    // Read one terminal event, then walk away mid-run.
+    loop {
+        let ev = handle.next_event().unwrap().expect("run is mid-flight");
+        if kind(&ev) == "task_finished" {
+            break;
+        }
+    }
+    handle.detach();
+
+    // The run finishes on the daemon with no client attached.
+    assert!(
+        wait_until(30.0, || phase_of(&daemon, &run_id) == "done"),
+        "run must complete while detached (phase: {})",
+        phase_of(&daemon, &run_id)
+    );
+
+    // Reattach: the full terminal set replays, exactly once per task.
+    let events = collect_events(c.attach(&run_id).unwrap());
+    let done = finished(&events);
+    assert_eq!(done.len(), 6, "replay covers every task, missed ones included");
+    let distinct: BTreeSet<&str> =
+        done.iter().filter_map(|e| e.get("id").and_then(|j| j.as_str())).collect();
+    assert_eq!(distinct.len(), 6, "no duplicates in the replay");
+    let complete = run_complete(&events);
+    assert_eq!(int(complete, "total"), 6);
+    assert_eq!(int(complete, "failed"), 0);
+
+    // Attaching to a run id that never existed is a typed error.
+    let err = c.attach("alice/never-submitted").unwrap_err().to_string();
+    assert!(err.contains("unknown run id"), "{err}");
+
+    daemon.shutdown();
+    daemon.wait();
+    w1.join().unwrap().unwrap();
+    w2.join().unwrap().unwrap();
+}
+
+/// Per-tenant quota and fair-share: with `max_in_flight = 1`, a tenant's
+/// second submission waits in the queue while their first runs — but a
+/// *different* tenant's later submission skips past it and completes.
+/// Deterministic: alice's run blocks on a test-controlled gate, so there
+/// is no timing window.
+#[test]
+fn tenant_quota_queues_second_run_while_other_tenants_proceed() {
+    let td = TempDir::new("daemon-quota").unwrap();
+    let daemon = start_daemon(&td.join("root"), 1);
+    let w1 = spawn_worker(&daemon.worker_endpoint());
+    let w2 = spawn_worker(&daemon.worker_endpoint());
+    let c = client(daemon.endpoint());
+
+    // a1: a single task that blocks until the test releases it.
+    let blocked = ConfigMatrix::builder()
+        .param("i", vec![pv_int(1000)])
+        .param("block", vec![pv_int(1)])
+        .build()
+        .unwrap();
+    let a1 = c.submit(&blocked, &submit_opts("alice", "a1")).unwrap();
+    let a1_id = a1.run_id().to_string();
+    assert!(wait_until(20.0, || phase_of(&daemon, &a1_id) == "running"));
+
+    // a2: queued behind the quota while a1 holds alice's slot.
+    let a2 = c.submit(&grid(100, 102, 0), &submit_opts("alice", "a2")).unwrap();
+    let a2_id = a2.run_id().to_string();
+
+    // b1: a later submission from another tenant completes while a2 is
+    // still queued — the scheduler skips over the at-quota tenant.
+    let b1_events =
+        collect_events(c.submit(&grid(200, 203, 5), &submit_opts("bob", "b1")).unwrap());
+    assert_eq!(int(run_complete(&b1_events), "failed"), 0);
+    assert_eq!(finished(&b1_events).len(), 3);
+
+    assert_eq!(phase_of(&daemon, &a1_id), "running", "a1 still holds the slot");
+    assert_eq!(phase_of(&daemon, &a2_id), "queued", "a2 must wait for alice's quota");
+    let status = daemon.status();
+    let tenants = status.get("tenants").and_then(Json::as_arr).unwrap_or(&[]);
+    assert!(
+        tenants.iter().any(|t| {
+            t.get("tenant").and_then(|j| j.as_str()) == Some("alice")
+                && t.get("in_flight").and_then(|j| j.as_i64()) == Some(1)
+        }),
+        "{status}"
+    );
+
+    // Release the gate: a1 completes, freeing the slot; a2 runs.
+    RELEASE.store(true, Ordering::SeqCst);
+    assert_eq!(int(run_complete(&collect_events(a1)), "failed"), 0);
+    assert_eq!(int(run_complete(&collect_events(a2)), "failed"), 0);
+
+    daemon.shutdown();
+    daemon.wait();
+    w1.join().unwrap().unwrap();
+    w2.join().unwrap().unwrap();
+}
+
+/// The deterministic drain cycle: a wire `Shutdown` with one run in
+/// flight and another queued. The in-flight run drains (completed
+/// attempts persist, the rest are accounted skipped, the trace footer is
+/// sealed), the queued run never starts, and both stay pending on disk.
+/// A restarted daemon on the same root re-admits both; completed cells
+/// restore from the shared store, the rest execute — across both daemon
+/// lives every cell runs exactly once (no lost, no duplicated outcomes).
+#[test]
+fn drain_shutdown_then_restart_resumes_pending_without_rework() {
+    let td = TempDir::new("daemon-drain").unwrap();
+    let root = td.join("root");
+
+    // ---- first daemon life: drain mid-run --------------------------------
+    let daemon = start_daemon(&root, 1);
+    let worker = spawn_worker(&daemon.worker_endpoint());
+    let c = client(daemon.endpoint());
+
+    let m = grid(0, 8, 50);
+    let mut r1 = c.submit(&m, &submit_opts("alice", "r1")).unwrap();
+    c.submit(&m, &submit_opts("alice", "r2")).unwrap().detach();
+    // Same grid twice: whatever r1 doesn't finish before the drain, the
+    // pair still covers each cell exactly once across both lives.
+    loop {
+        let ev = r1.next_event().unwrap().expect("r1 is mid-flight");
+        if kind(&ev) == "task_finished" {
+            break;
+        }
+    }
+    assert_eq!(phase_of(&daemon, "alice/r2"), "queued", "quota holds r2 back");
+
+    c.request_shutdown().unwrap();
+    // The submit stream observes the drain: r1's terminal run_complete
+    // arrives with cancelled=true and its unfinished remainder skipped.
+    let r1_events = collect_events(r1);
+    let complete1 = run_complete(&r1_events);
+    assert_eq!(complete1.get("cancelled").and_then(|j| j.as_bool()), Some(true));
+    assert_eq!(int(complete1, "failed"), 0, "drain completes in-flight attempts cleanly");
+    assert_eq!(
+        int(complete1, "total") + int(complete1, "skipped"),
+        8,
+        "every cell is accounted: finished or skipped — {complete1}"
+    );
+    assert!(int(complete1, "skipped") > 0, "the drain arrived mid-run");
+    daemon.wait();
+
+    let r1_dir = root.join("runs").join("alice").join("r1");
+    let s1 = Journal::summarize(&r1_dir.join("journal.jsonl")).unwrap().succeeded;
+    assert!(s1 >= 1, "at least the observed task completed before the drain");
+    assert!(s1 < 8, "the drain stopped the run early");
+
+    // The cancelled run sealed its trace footer on the way out.
+    let trace = memento::obs::trace::read_trace(
+        &r1_dir.join("trace").join(memento::obs::trace::TRACE_FILE),
+    )
+    .unwrap();
+    assert!(trace.footer_spans.is_some(), "drain must seal the trace footer");
+
+    // Both submissions survived as pending files.
+    let pending =
+        memento::util::fs::list_files_with_ext(&root.join("pending"), "json").unwrap();
+    assert_eq!(pending.len(), 2, "cancelled + queued runs stay pending: {pending:?}");
+    worker.join().unwrap().unwrap();
+
+    // ---- second daemon life: resume --------------------------------------
+    let daemon = start_daemon(&root, 1);
+    let worker = spawn_worker(&daemon.worker_endpoint());
+    let c = client(daemon.endpoint());
+
+    let r1_events = collect_events(c.attach("alice/r1").unwrap());
+    let r2_events = collect_events(c.attach("alice/r2").unwrap());
+    let mut fresh = 0;
+    for (label, events) in [("r1", &r1_events), ("r2", &r2_events)] {
+        let complete = run_complete(events);
+        assert_eq!(int(complete, "total"), 8, "{label}: {complete}");
+        assert_eq!(int(complete, "failed"), 0, "{label}");
+        assert_eq!(complete.get("cancelled").and_then(|j| j.as_bool()), Some(false));
+        fresh += finished(events)
+            .iter()
+            .filter(|e| e.get("from_cache").and_then(|j| j.as_bool()) == Some(false))
+            .count();
+    }
+    // No lost outcomes (the 8 - s1 unfinished cells all executed) and no
+    // duplicated outcomes (the s1 finished ones restored, on either run).
+    assert_eq!(fresh, 8 - s1, "exactly the unfinished remainder re-executes");
+
+    // r1's journal spans both lives: its cells executed exactly once in
+    // total, and the second life restored everything the first finished.
+    let summary = Journal::summarize(&r1_dir.join("journal.jsonl")).unwrap();
+    assert_eq!(summary.failed_attempts, 0, "{summary:?}");
+
+    // Pending files are consumed once their runs complete un-cancelled.
+    assert!(wait_until(10.0, || {
+        memento::util::fs::list_files_with_ext(&root.join("pending"), "json")
+            .map(|v| v.is_empty())
+            .unwrap_or(false)
+    }));
+
+    daemon.shutdown();
+    daemon.wait();
+    worker.join().unwrap().unwrap();
+}
