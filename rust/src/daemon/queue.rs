@@ -148,6 +148,43 @@ impl AdmissionQueue {
         }
     }
 
+    /// Evicts finished rows beyond the newest `keep` per tenant,
+    /// returning the evicted run ids in admission order. Queued and
+    /// running rows are never evicted. Without this a long-running
+    /// daemon's status table (and the channel map keyed off it) grows by
+    /// one row per submission forever; evicted runs stay attachable
+    /// through their on-disk `events.jsonl`.
+    pub fn evict_finished(&self, keep: usize) -> Vec<String> {
+        let mut guard = self.state.lock().unwrap();
+        let st = &mut *guard;
+        let order = st.order.clone();
+        let mut kept: HashMap<String, usize> = HashMap::new();
+        let mut evicted = Vec::new();
+        // Newest-first, so the most recent `keep` finished runs of each
+        // tenant survive.
+        for id in order.iter().rev() {
+            let Some(row) = st.rows.get(id) else {
+                continue;
+            };
+            if !matches!(row.phase, RunPhase::Done | RunPhase::Failed) {
+                continue;
+            }
+            let n = kept.entry(row.tenant.clone()).or_insert(0);
+            if *n < keep {
+                *n += 1;
+            } else {
+                st.rows.remove(id);
+                evicted.push(id.clone());
+            }
+        }
+        if !evicted.is_empty() {
+            let rows = &st.rows;
+            st.order.retain(|id| rows.contains_key(id));
+            evicted.reverse();
+        }
+        evicted
+    }
+
     /// Waiting (queued, not yet running) runs.
     pub fn depth(&self) -> usize {
         self.state.lock().unwrap().fifo.len()
@@ -231,6 +268,30 @@ mod tests {
         // Dispatching one frees a slot.
         assert_eq!(q.next_ready().as_deref(), Some("a/1"));
         q.admit("a/3", "a").unwrap();
+    }
+
+    #[test]
+    fn evict_finished_keeps_newest_per_tenant_and_all_live_rows() {
+        let q = AdmissionQueue::new(16, 4);
+        for i in 0..4 {
+            q.admit(&format!("a/{i}"), "a").unwrap();
+        }
+        q.admit("b/0", "b").unwrap();
+        // Finish a/0..a/2 in order; a/3 dispatches but stays running,
+        // b/0 stays queued.
+        for i in 0..4 {
+            assert_eq!(q.next_ready(), Some(format!("a/{i}")));
+        }
+        q.finish("a/0", true);
+        q.finish("a/1", false);
+        q.finish("a/2", true);
+
+        // keep=1: only the newest finished run per tenant survives.
+        assert_eq!(q.evict_finished(1), vec!["a/0".to_string(), "a/1".to_string()]);
+        let ids: Vec<String> = q.rows().into_iter().map(|r| r.run_id).collect();
+        assert_eq!(ids, vec!["a/2", "a/3", "b/0"], "running + queued rows never evict");
+        // Nothing further to evict at the same retention.
+        assert!(q.evict_finished(1).is_empty());
     }
 
     #[test]

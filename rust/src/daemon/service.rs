@@ -50,6 +50,12 @@ const SCHED_POLL: Duration = Duration::from_millis(10);
 /// Event-drain poll interval per running run.
 const DRAIN_POLL: Duration = Duration::from_millis(5);
 
+/// Finished runs retained in memory per tenant — status rows plus replay
+/// channels. Older finished runs evict so a long-running daemon's memory
+/// and status document stay bounded; evicted runs remain attachable
+/// through their on-disk `events.jsonl`.
+const RETAIN_FINISHED_PER_TENANT: usize = 32;
+
 /// Configuration for a [`Daemon`].
 pub struct DaemonOptions {
     /// Daemon state root; holds `store/`, `runs/`, and `pending/`.
@@ -122,7 +128,9 @@ pub(crate) struct DaemonShared {
     pub(crate) pool: Arc<WorkerPool>,
     /// Admission queue + per-tenant quota.
     pub(crate) queue: AdmissionQueue,
-    /// Live event hubs by run id (retained after completion for replay).
+    /// Live event hubs by run id. Retained after completion for replay,
+    /// bounded by [`RETAIN_FINISHED_PER_TENANT`] — older finished runs
+    /// drop their hub and replay from `events.jsonl` instead.
     channels: Mutex<HashMap<String, Arc<RunChannel>>>,
     /// Admitted-but-not-yet-launched submissions by run id.
     submissions: Mutex<HashMap<String, ParsedSubmission>>,
@@ -161,13 +169,37 @@ impl DaemonShared {
         }
     }
 
-    /// Installs the event channel and parsed submission for `run_id`.
+    /// Atomically claims `run_id` for a new submission by installing its
+    /// event channel — but only if the id is unknown: not live in this
+    /// daemon life (no channel) and without recorded events from an
+    /// earlier one (no `events.jsonl`). Returns `false`, installing
+    /// nothing, for a duplicate — the session layer must reject the
+    /// submission without touching the original run's state.
+    pub(crate) fn reserve_run(&self, run_id: &str) -> bool {
+        let mut channels = self.channels.lock().unwrap();
+        if channels.contains_key(run_id) || self.run_dir(run_id).join("events.jsonl").exists() {
+            return false;
+        }
+        channels.insert(run_id.to_string(), RunChannel::new());
+        true
+    }
+
+    /// Installs the parsed submission for a reserved run id.
+    pub(crate) fn install_submission(&self, run_id: &str, sub: ParsedSubmission) {
+        self.submissions.lock().unwrap().insert(run_id.to_string(), sub);
+    }
+
+    /// Installs the event channel and parsed submission for `run_id`
+    /// unconditionally — the restart-rescan path, which re-admits runs
+    /// that legitimately already have on-disk state (new submissions go
+    /// through [`reserve_run`](Self::reserve_run) instead).
     pub(crate) fn install_run(&self, run_id: &str, sub: ParsedSubmission) {
         self.channels.lock().unwrap().insert(run_id.to_string(), RunChannel::new());
         self.submissions.lock().unwrap().insert(run_id.to_string(), sub);
     }
 
-    /// Reverts [`install_run`](Self::install_run) after a failed admit.
+    /// Reverts [`reserve_run`](Self::reserve_run) /
+    /// [`install_run`](Self::install_run) after a failed persist or admit.
     pub(crate) fn uninstall_run(&self, run_id: &str) {
         self.channels.lock().unwrap().remove(run_id);
         self.submissions.lock().unwrap().remove(run_id);
@@ -180,6 +212,20 @@ impl DaemonShared {
 
     fn take_submission(&self, run_id: &str) -> Option<ParsedSubmission> {
         self.submissions.lock().unwrap().remove(run_id)
+    }
+
+    /// Bounds a long-running daemon's memory: drops finished runs beyond
+    /// the newest [`RETAIN_FINISHED_PER_TENANT`] per tenant from the
+    /// queue's status table and from the channel map. Called after every
+    /// run settles; queued and running runs are never touched.
+    pub(crate) fn retire_finished(&self) {
+        let evicted = self.queue.evict_finished(RETAIN_FINISHED_PER_TENANT);
+        if !evicted.is_empty() {
+            let mut channels = self.channels.lock().unwrap();
+            for run_id in &evicted {
+                channels.remove(run_id);
+            }
+        }
     }
 
     /// `root/runs/<tenant>/<short>` for a `tenant/short` run id.
@@ -559,6 +605,7 @@ fn launch_run(shared: &Arc<DaemonShared>, run_id: String) {
             shared.queue.finish(&run_id, false);
         }
         channel.finish();
+        shared.retire_finished();
     });
     if let Ok(join) = join {
         shared.run_joins.lock().unwrap().push(join);
@@ -575,6 +622,7 @@ fn fail_launch(shared: &Arc<DaemonShared>, run_id: &str, channel: &Arc<RunChanne
     channel.finish();
     shared.queue.finish(run_id, false);
     shared.remove_pending(run_id);
+    shared.retire_finished();
 }
 
 /// Tees one run event into the fan-out channel and (for terminal kinds)

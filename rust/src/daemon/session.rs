@@ -21,7 +21,9 @@ use crate::config::loader;
 use crate::daemon::service::{DaemonShared, ParsedSubmission};
 use crate::ipc::proto::{read_frame, write_frame, Msg, PROTOCOL_VERSION};
 use crate::ipc::transport::WireStream;
+use crate::store;
 use crate::util::json::Json;
+use crate::util::sha256;
 use std::io;
 use std::sync::mpsc::{Receiver, Sender, TryRecvError};
 use std::sync::{Arc, Mutex};
@@ -102,13 +104,25 @@ fn reject(stream: &mut Box<dyn WireStream>, reason: String) {
     let _ = write_frame(stream, &Msg::Reject { reason });
 }
 
+/// Validity gate for tenant names and run labels. Both become path
+/// components under the daemon root (`runs/<tenant>/<label>`) and halves
+/// of `tenant/label` run ids, so they share one allowlist: non-empty
+/// ASCII alphanumerics plus `-`, `_`, `.` — which structurally excludes
+/// path separators, `:`, and dots-only names like `..`.
+fn valid_id_component(s: &str) -> bool {
+    !s.is_empty()
+        && s.bytes().all(|b| b.is_ascii_alphanumeric() || matches!(b, b'-' | b'_' | b'.'))
+        && !s.bytes().all(|b| b == b'.')
+}
+
 /// Token-then-version gate shared by `Submit` and `Attach`. Returns the
 /// rejection reason on failure; nothing about the daemon (registry,
 /// queue, runs) has been revealed at that point.
 fn authenticate(shared: &DaemonShared, protocol: u64, token: Option<&str>) -> Result<(), String> {
     if let Some(expected) = &shared.options.token {
-        if token != Some(expected.as_str()) {
-            return Err("authentication failed".to_string());
+        match token {
+            Some(t) if sha256::constant_time_eq(t.as_bytes(), expected.as_bytes()) => {}
+            _ => return Err("authentication failed".to_string()),
         }
     }
     if protocol < PROTOCOL_VERSION {
@@ -169,11 +183,19 @@ fn handle_submit(
     seed: u64,
     label: Option<String>,
 ) {
-    if tenant.is_empty() || tenant.contains('/') || tenant.contains(':') {
+    if !valid_id_component(&tenant) {
         return reject(
             &mut stream,
-            format!("invalid tenant {tenant:?}: must be non-empty, without '/' or ':'"),
+            format!("invalid tenant {tenant:?}: use letters, digits, '-', '_', '.'"),
         );
+    }
+    if let Some(l) = &label {
+        if !valid_id_component(l) {
+            return reject(
+                &mut stream,
+                format!("invalid label {l:?}: use letters, digits, '-', '_', '.'"),
+            );
+        }
     }
     let matrix = match loader::from_json(&matrix) {
         Ok(m) => m,
@@ -192,11 +214,19 @@ fn handle_submit(
         }
     }
     let run_id = shared.new_run_id(&tenant, label.as_deref());
+    // Claim the id before writing any state: a duplicate (live in this
+    // daemon, or with recorded events from an earlier life) is rejected
+    // here, so a re-submission can never overwrite or delete the original
+    // run's pending file, event channel, or on-disk records.
+    if !shared.reserve_run(&run_id) {
+        return reject(&mut stream, format!("run id {run_id:?} already submitted"));
+    }
     let submission = ParsedSubmission { tenant: tenant.clone(), matrix, exp, version, seed };
     if let Err(e) = shared.persist_pending(&run_id, &submission) {
+        shared.uninstall_run(&run_id);
         return reject(&mut stream, format!("persist submission: {e}"));
     }
-    shared.install_run(&run_id, submission);
+    shared.install_submission(&run_id, submission);
     if let Err(reason) = shared.queue.admit(&run_id, &tenant) {
         shared.uninstall_run(&run_id);
         shared.remove_pending(&run_id);
@@ -243,6 +273,14 @@ fn handle_status(shared: Arc<DaemonShared>, mut stream: Box<dyn WireStream>) {
 /// events, then streams live ones while the run is still executing. Runs
 /// finished in an earlier daemon life replay from their `events.jsonl`.
 fn handle_attach(shared: Arc<DaemonShared>, mut stream: Box<dyn WireStream>, run_id: String) {
+    // Daemon-minted ids are always `tenant/short` with both halves
+    // allowlisted; anything else (extra separators, `..`, empty parts)
+    // never reaches the filesystem — the replay path below joins these
+    // components under the daemon root.
+    let (tenant, short) = store::split_tenant(&run_id);
+    if !valid_id_component(tenant) || !valid_id_component(short) {
+        return reject(&mut stream, format!("unknown run id {run_id:?}"));
+    }
     match shared.channel(&run_id) {
         Some(channel) => {
             if write_frame(&mut stream, &Msg::Accepted { run_id: run_id.clone() }).is_err() {

@@ -475,7 +475,10 @@ impl PoolShared {
                  worker speaks v{protocol}"
             ))
         } else if let Some(required) = &opts.token {
-            if token.as_deref() == Some(required.as_str()) {
+            let ok = token.as_deref().is_some_and(|t| {
+                crate::util::sha256::constant_time_eq(t.as_bytes(), required.as_bytes())
+            });
+            if ok {
                 None
             } else {
                 Some("auth token mismatch".to_string())

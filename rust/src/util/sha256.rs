@@ -168,6 +168,17 @@ pub fn sha256_hex(bytes: &[u8]) -> String {
 
 const HEX: &[u8; 16] = b"0123456789abcdef";
 
+/// Constant-time secret equality: both inputs are reduced to fixed-length
+/// digests and compared by XOR-folding every byte, so the comparison's
+/// timing depends on neither the length nor the content of either input
+/// (a direct `==` on the strings short-circuits at the first differing
+/// byte, leaking how much of a guessed token matched). For comparing
+/// secrets such as auth tokens — not a substitute for hashing.
+pub fn constant_time_eq(a: &[u8], b: &[u8]) -> bool {
+    let (da, db) = (sha256(a), sha256(b));
+    da.iter().zip(db.iter()).fold(0u8, |acc, (x, y)| acc | (x ^ y)) == 0
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -187,6 +198,15 @@ mod tests {
             sha256_hex(b"abc"),
             "ba7816bf8f01cfea414140de5dae2223b00361a396177a9cb410ff61f20015ad"
         );
+    }
+
+    #[test]
+    fn constant_time_eq_matches_plain_equality() {
+        assert!(constant_time_eq(b"", b""));
+        assert!(constant_time_eq(b"secret-token", b"secret-token"));
+        assert!(!constant_time_eq(b"secret-token", b"secret-tokem"));
+        assert!(!constant_time_eq(b"secret-token", b"secret-token-longer"));
+        assert!(!constant_time_eq(b"", b"x"));
     }
 
     #[test]

@@ -337,6 +337,94 @@ fn unknown_experiment_fails_typed_without_wedging_the_queue() {
     worker.join().unwrap().unwrap();
 }
 
+/// Re-submitting an already-used run id (same tenant + label) is
+/// rejected without touching the original run's state: the original
+/// keeps its pending durability record and event channel, completes
+/// normally, and replays in full — both while it is still live and
+/// after it has finished (when the id is recognized from its on-disk
+/// event record).
+#[test]
+fn duplicate_run_id_resubmission_never_clobbers_the_original() {
+    let td = TempDir::new("daemon-dup").unwrap();
+    let root = td.join("root");
+    let daemon = start_daemon(&root, 2);
+    let c = client(daemon.endpoint());
+
+    // No workers yet: the original sits deterministically mid-run (its
+    // tasks cannot execute) while the duplicate arrives.
+    let orig = c.submit(&grid(0, 4, 0), &submit_opts("alice", "dup")).unwrap();
+    let run_id = orig.run_id().to_string();
+    assert!(wait_until(20.0, || phase_of(&daemon, &run_id) == "running"));
+
+    let err = c.submit(&grid(0, 4, 0), &submit_opts("alice", "dup")).unwrap_err().to_string();
+    assert!(err.contains("already submitted"), "typed duplicate rejection, got: {err}");
+    // The rejection left the original's durability record in place.
+    let pending = memento::util::fs::list_files_with_ext(&root.join("pending"), "json").unwrap();
+    assert_eq!(pending.len(), 1, "original pending file intact: {pending:?}");
+
+    // Workers arrive; the original completes with full accounting — its
+    // channel and submission were never replaced or deleted.
+    let worker = spawn_worker(&daemon.worker_endpoint());
+    let events = collect_events(orig);
+    assert_eq!(finished(&events).len(), 4);
+    assert_eq!(int(run_complete(&events), "failed"), 0);
+
+    // Post-completion duplicate: still rejected (the id's event record
+    // exists), and attach still replays the original's terminal set.
+    let err = c.submit(&grid(0, 4, 0), &submit_opts("alice", "dup")).unwrap_err().to_string();
+    assert!(err.contains("already submitted"), "{err}");
+    let replay = collect_events(c.attach(&run_id).unwrap());
+    assert_eq!(finished(&replay).len(), 4, "replay is the original's, untouched");
+    assert_eq!(int(run_complete(&replay), "total"), 4);
+
+    daemon.shutdown();
+    daemon.wait();
+    worker.join().unwrap().unwrap();
+}
+
+/// Path-shaped tenants, labels, and attach run ids are rejected before
+/// any filesystem access: a traversal-shaped attach cannot read files
+/// outside the daemon root, and a traversal-shaped submission cannot
+/// create run state outside it.
+#[test]
+fn path_shaped_identifiers_are_rejected_before_filesystem_access() {
+    let td = TempDir::new("daemon-traverse").unwrap();
+    let root = td.join("root");
+    let daemon = start_daemon(&root, 2);
+    let c = client(daemon.endpoint());
+
+    // A file a traversal-shaped attach (`../secret` resolves run_dir to
+    // `<root>/runs/../secret`) would otherwise read and stream back.
+    let secret_dir = root.join("secret");
+    std::fs::create_dir_all(&secret_dir).unwrap();
+    std::fs::write(secret_dir.join("events.jsonl"), "{\"event\":\"leaked\"}\n").unwrap();
+
+    for tenant in ["", "a/b", "..", ".", "a:b", "a\\b"] {
+        let err = c.submit(&grid(0, 1, 0), &submit_opts(tenant, "x")).unwrap_err().to_string();
+        assert!(err.contains("invalid tenant"), "tenant {tenant:?}: {err}");
+    }
+    for label in ["", "b/c", "..", "...", "x:y"] {
+        let err = c.submit(&grid(0, 1, 0), &submit_opts("alice", label)).unwrap_err().to_string();
+        assert!(err.contains("invalid label"), "label {label:?}: {err}");
+    }
+    for run_id in ["../secret", "alice/../../secret", "alice/..", "/etc/passwd", "alice"] {
+        let err = c.attach(run_id).unwrap_err().to_string();
+        assert!(err.contains("unknown run id"), "attach {run_id:?}: {err}");
+        assert!(!err.contains("leaked"), "attach {run_id:?} must not read outside root");
+    }
+
+    // No rejected submission left any state behind.
+    let pending = memento::util::fs::list_files_with_ext(&root.join("pending"), "json").unwrap();
+    assert!(pending.is_empty(), "rejected submissions must leave no state: {pending:?}");
+    assert_eq!(
+        daemon.status().get("queue").and_then(|q| q.get("depth")).and_then(|j| j.as_i64()),
+        Some(0)
+    );
+
+    daemon.shutdown();
+    daemon.wait();
+}
+
 /// Detaching mid-run must not kill the run, and a later attach replays
 /// the complete terminal event set — the events observed before the
 /// detach included, with nothing duplicated and nothing missing.
